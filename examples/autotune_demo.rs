@@ -1,0 +1,84 @@
+//! Auto-tuning demo — the paper's §6 future-work item in action: FedGEC
+//! with fixed defaults vs the τ/β auto-tuner, on a gradient stream whose
+//! statistics shift mid-run (a new "task phase" with noisier signs). The
+//! controller re-targets the ~10% mismatch operating point with zero
+//! extra communication.
+//!
+//! ```bash
+//! cargo run --release --offline --example autotune_demo
+//! ```
+
+use fedgec::compress::pipeline::{FedgecCodec, FedgecConfig};
+use fedgec::compress::quant::ErrorBound;
+use fedgec::compress::GradientCodec;
+use fedgec::metrics::Table;
+use fedgec::tensor::model_zoo::ModelArch;
+use fedgec::train::data::DatasetSpec;
+use fedgec::train::gradgen::{GradGen, GradGenConfig};
+
+fn run(autotune: bool) -> Vec<(usize, f64, f64)> {
+    let metas = ModelArch::MicroResNet.layers(10);
+    let cfg = FedgecConfig {
+        error_bound: ErrorBound::Rel(3e-2),
+        autotune,
+        ..Default::default()
+    };
+    let mut client = FedgecCodec::new(cfg.clone());
+    let mut server = FedgecCodec::new(cfg);
+    let mut out = Vec::new();
+    // Phase 1: clean CIFAR-like statistics; phase 2: Caltech-like chaos.
+    let phases =
+        [(DatasetSpec::Cifar10, 8usize), (DatasetSpec::Caltech101, 8), (DatasetSpec::Cifar10, 8)];
+    let mut round = 0usize;
+    for (spec, rounds) in phases {
+        let mut gen = GradGen::new(metas.clone(), GradGenConfig::for_dataset(spec), 5);
+        for _ in 0..rounds {
+            let g = gen.next_round();
+            let payload = client.compress(&g).unwrap();
+            server
+                .decompress(&payload, &metas.iter().cloned().collect::<Vec<_>>())
+                .unwrap();
+            let cr = g.byte_size() as f64 / payload.len() as f64;
+            // Aggregate mismatch across conv layers.
+            let (mut mm, mut el) = (0usize, 0usize);
+            for rep in &client.last_reports {
+                mm += rep.sign_stats.sign_mismatches;
+                el += rep.sign_stats.elements_predicted;
+            }
+            let mismatch = if el > 0 { mm as f64 / el as f64 } else { 0.0 };
+            out.push((round, cr, mismatch));
+            round += 1;
+        }
+    }
+    assert_eq!(client.state.fingerprint(), server.state.fingerprint());
+    out
+}
+
+fn main() {
+    println!("Auto-tuning demo: statistics shift at rounds 8 and 16 (cifar -> caltech -> cifar)\n");
+    let fixed = run(false);
+    let tuned = run(true);
+    let mut table = Table::new(
+        "fixed (tau=0.5, beta=0.9) vs auto-tuned",
+        &["round", "CR fixed", "CR tuned", "mismatch fixed", "mismatch tuned"],
+    );
+    for ((r, cf, mf), (_, ct, mt)) in fixed.iter().zip(&tuned) {
+        table.row(vec![
+            r.to_string(),
+            format!("{cf:.2}"),
+            format!("{ct:.2}"),
+            format!("{:.1}%", mf * 100.0),
+            format!("{:.1}%", mt * 100.0),
+        ]);
+    }
+    table.print();
+    let mean = |v: &[(usize, f64, f64)]| {
+        v.iter().map(|x| x.1).sum::<f64>() / v.len() as f64
+    };
+    println!(
+        "mean CR: fixed {:.2} vs tuned {:.2} (client/server stayed synchronized — \n\
+         tau is client-local, beta derives deterministically from reconstructed history)",
+        mean(&fixed),
+        mean(&tuned)
+    );
+}

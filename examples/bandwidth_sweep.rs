@@ -1,0 +1,79 @@
+//! Bandwidth sweep (the paper's Fig. 11 scenario as a runnable example):
+//! fix the error bound at 3e-2 and sweep the uplink from 1 Mbps to
+//! 1 Gbps, reporting end-to-end communication time per codec and the
+//! break-even bandwidth where compression stops paying.
+//!
+//! ```bash
+//! cargo run --release --offline --example bandwidth_sweep
+//! ```
+
+use std::time::Duration;
+
+use fedgec::baselines::{make_codec, qsgd_bits_for_bound};
+use fedgec::compress::quant::ErrorBound;
+use fedgec::fl::transport::bandwidth::LinkSpec;
+use fedgec::metrics::{fmt_duration, Table};
+use fedgec::tensor::model_zoo::ModelArch;
+use fedgec::train::gradgen::{GradGen, GradGenConfig};
+
+fn main() -> fedgec::Result<()> {
+    let metas = ModelArch::ResNet18.layers(10);
+    let eb = 3e-2;
+    let rounds = 3;
+    println!("Bandwidth sweep: ResNet-18 gradients, REL eb = {eb}, {rounds} rounds/point\n");
+
+    // Measure codec cost + payload once per codec (bandwidth-independent).
+    struct CodecCost {
+        name: &'static str,
+        payload: usize,
+        raw: usize,
+        codec_time: Duration,
+    }
+    let mut costs = Vec::new();
+    for name in ["fedgec", "sz3"] {
+        let mut gen = GradGen::new(metas.clone(), GradGenConfig::default(), 7);
+        let mut client = make_codec(name, ErrorBound::Rel(eb), qsgd_bits_for_bound(eb)).unwrap();
+        let mut server = make_codec(name, ErrorBound::Rel(eb), qsgd_bits_for_bound(eb)).unwrap();
+        let (mut payload, mut raw) = (0usize, 0usize);
+        let mut codec_time = Duration::ZERO;
+        for _ in 0..rounds {
+            let g = gen.next_round();
+            raw += g.byte_size();
+            let t0 = std::time::Instant::now();
+            let p = client.compress(&g)?;
+            let mid = std::time::Instant::now();
+            server.decompress(&p, &metas)?;
+            codec_time += mid - t0 + mid.elapsed();
+            payload += p.len();
+        }
+        costs.push(CodecCost { name, payload, raw, codec_time });
+    }
+
+    let mbps_points = [1.0, 5.0, 10.0, 50.0, 100.0, 500.0, 1000.0];
+    let mut table = Table::new(
+        "End-to-end communication time vs bandwidth (3 rounds)",
+        &["bandwidth", "uncompressed", "fedgec", "sz3", "fedgec gain"],
+    );
+    for &mbps in &mbps_points {
+        let link = LinkSpec { bits_per_sec: mbps * 1e6, latency: Duration::ZERO };
+        let unc = link.transmit_time(costs[0].raw);
+        let times: Vec<Duration> =
+            costs.iter().map(|c| c.codec_time + link.transmit_time(c.payload)).collect();
+        table.row(vec![
+            format!("{mbps:.0} Mbps"),
+            fmt_duration(unc),
+            fmt_duration(times[0]),
+            fmt_duration(times[1]),
+            format!("{:+.1}%", 100.0 * (1.0 - times[0].as_secs_f64() / unc.as_secs_f64())),
+        ]);
+    }
+    table.print();
+
+    // Break-even: bandwidth where codec overhead equals transfer savings
+    // (paper: stars around ~620 Mbps for eb=3e-2).
+    let c = &costs[0];
+    let saved_bytes = (c.raw - c.payload) as f64 * 8.0;
+    let breakeven = saved_bytes / c.codec_time.as_secs_f64() / 1e6;
+    println!("fedgec break-even bandwidth ≈ {breakeven:.0} Mbps (compression pays below this)");
+    Ok(())
+}

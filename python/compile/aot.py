@@ -1,0 +1,140 @@
+"""AOT lowering: JAX/Pallas -> HLO *text* artifacts for the Rust runtime.
+
+HLO text (NOT serialized protos) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Emits, per model in {micro_resnet, micro_inception} x classes {10, 101}:
+    train_epoch_<model>_c<classes>.hlo.txt
+    eval_<model>_c<classes>.hlo.txt
+plus the fused Pallas kernel at two block sizes:
+    predict_quantize_4096.hlo.txt
+    predict_quantize_65536.hlo.txt
+and a manifest.json describing every artifact's shapes so the Rust side
+needs no hard-coded protocol.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# Fixed AOT shapes (documented in the manifest).
+BATCHES_PER_EPOCH = 8
+BATCH_SIZE = 32
+EVAL_N = 256
+IMG = (32, 32, 3)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_train_epoch(name, num_classes):
+    params = M.MODELS[name](jax.random.PRNGKey(0), num_classes)
+    n_params = len(params)
+    train = M.make_train_epoch(name, num_classes)
+
+    def flat(*args):
+        p = list(args[:n_params])
+        xs, ys, lr = args[n_params:]
+        return train(p, xs, ys, lr)
+
+    arg_specs = [spec(p.shape) for p in params] + [
+        spec((BATCHES_PER_EPOCH, BATCH_SIZE) + IMG),
+        spec((BATCHES_PER_EPOCH, BATCH_SIZE), jnp.int32),
+        spec(()),
+    ]
+    return jax.jit(flat).lower(*arg_specs), [list(p.shape) for p in params]
+
+
+def lower_eval(name, num_classes):
+    params = M.MODELS[name](jax.random.PRNGKey(0), num_classes)
+    n_params = len(params)
+    ev = M.make_eval(name, num_classes)
+
+    def flat(*args):
+        p = list(args[:n_params])
+        x, y = args[n_params:]
+        return ev(p, x, y)
+
+    arg_specs = [spec(p.shape) for p in params] + [
+        spec((EVAL_N,) + IMG),
+        spec((EVAL_N,), jnp.int32),
+    ]
+    return jax.jit(flat).lower(*arg_specs)
+
+
+def lower_predict_quantize(n, tile):
+    fn = M.make_predict_quantize(n, tile)
+    s = spec((n,))
+    return jax.jit(fn).lower(s, s, s, s, spec((8,)))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--skip-train", action="store_true",
+                    help="only emit the predict_quantize kernels")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "batches_per_epoch": BATCHES_PER_EPOCH,
+        "batch_size": BATCH_SIZE,
+        "eval_n": EVAL_N,
+        "img": list(IMG),
+        "models": {},
+        "kernels": {},
+    }
+
+    for n, tile in [(4096, 4096), (65536, 8192)]:
+        path = f"predict_quantize_{n}.hlo.txt"
+        text = to_hlo_text(lower_predict_quantize(n, tile))
+        with open(os.path.join(args.out_dir, path), "w") as f:
+            f.write(text)
+        manifest["kernels"][str(n)] = {"file": path, "n": n, "tile": tile}
+        print(f"wrote {path} ({len(text)} chars)")
+
+    if not args.skip_train:
+        for name in ["micro_resnet", "micro_inception"]:
+            for classes in [10, 101]:
+                lowered, shapes = lower_train_epoch(name, classes)
+                tpath = f"train_epoch_{name}_c{classes}.hlo.txt"
+                with open(os.path.join(args.out_dir, tpath), "w") as f:
+                    f.write(to_hlo_text(lowered))
+                epath = f"eval_{name}_c{classes}.hlo.txt"
+                with open(os.path.join(args.out_dir, epath), "w") as f:
+                    f.write(to_hlo_text(lower_eval(name, classes)))
+                manifest["models"][f"{name}_c{classes}"] = {
+                    "train": tpath,
+                    "eval": epath,
+                    "layer_names": M.layer_names(name),
+                    "param_shapes": shapes,
+                    "num_classes": classes,
+                }
+                print(f"wrote {tpath}, {epath}")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print("wrote manifest.json")
+
+
+if __name__ == "__main__":
+    main()

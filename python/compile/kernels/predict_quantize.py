@@ -1,0 +1,80 @@
+"""L1 Pallas kernel: the fused predict+quantize hot-spot.
+
+One elementwise pass fusing Alg. 1 magnitude prediction (normalize → EMA →
+de-normalize), sign application, residual formation and error-bounded
+quantization to bin codes. Entropy coding stays on the host (Rust), exactly
+as cuSZP keeps bit-packing CPU-assisted.
+
+TPU mapping (DESIGN.md §7): a 1-D grid of VMEM-sized tiles. With
+TILE = 64k f32 elements the six live buffers (4 inputs + 3 outputs share
+tiles) occupy ~1.75 MB of VMEM — far under the ~16 MB budget, leaving the
+grid pipeline free to double-buffer HBM↔VMEM transfers. All math is
+VPU-friendly f32 elementwise; no MXU involvement. The kernel is memory
+bound: 4 f32 reads + 3 f32 writes = 28 B/element.
+
+MUST be lowered with interpret=True here: real TPU lowering emits a Mosaic
+custom-call that the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SIGMA_EPS = 1e-12
+
+# Default tile: 64k elements = 256 KiB per f32 buffer in VMEM.
+TILE = 65536
+
+
+def _kernel(scalar_ref, prev_abs_ref, memory_ref, signs_ref, grad_ref,
+            codes_ref, ghat_ref, newmem_ref):
+    beta = scalar_ref[0]
+    mu_curr = scalar_ref[1]
+    sigma_curr = scalar_ref[2]
+    mu_prev = scalar_ref[3]
+    sigma_prev = scalar_ref[4]
+    two_delta = scalar_ref[5]
+
+    prev_abs = prev_abs_ref[...]
+    memory = memory_ref[...]
+    signs = signs_ref[...]
+    grad = grad_ref[...]
+
+    inv_sigma_prev = 1.0 / jnp.maximum(sigma_prev, SIGMA_EPS)
+    z = (prev_abs - mu_prev) * inv_sigma_prev
+    new_memory = beta * memory + (1.0 - beta) * z
+    a_hat = jnp.maximum(new_memory * sigma_curr + mu_curr, 0.0)
+    g_hat = signs * a_hat
+    inv_two_delta = 1.0 / two_delta
+    codes = jnp.floor((grad - g_hat) * inv_two_delta + 0.5)
+
+    codes_ref[...] = codes
+    ghat_ref[...] = g_hat
+    newmem_ref[...] = new_memory
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def predict_quantize(prev_abs, memory, signs, grad, scalars, *, tile=TILE):
+    """Fused predict+quantize over an n-element (n % tile == 0) buffer.
+
+    scalars: f32[8] = [beta, mu_curr, sigma_curr, mu_prev, sigma_prev,
+    two_delta, pad, pad]. Returns (codes f32[n], g_hat f32[n],
+    new_memory f32[n]).
+    """
+    n = prev_abs.shape[0]
+    assert n % tile == 0, f"n={n} not a multiple of tile={tile}"
+    grid = (n // tile,)
+    tiled = pl.BlockSpec((tile,), lambda i: (i,))
+    # Scalars are broadcast to every tile.
+    scalar_spec = pl.BlockSpec((8,), lambda i: (0,))
+    out_shape = [jax.ShapeDtypeStruct((n,), jnp.float32)] * 3
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[scalar_spec, tiled, tiled, tiled, tiled],
+        out_specs=[tiled, tiled, tiled],
+        out_shape=out_shape,
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls
+    )(scalars, prev_abs, memory, signs, grad)

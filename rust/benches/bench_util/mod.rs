@@ -1,0 +1,53 @@
+//! Shared helpers for the hand-rolled bench harness (`harness = false`;
+//! criterion is unavailable offline). Each bench binary regenerates one
+//! paper table/figure: printed as markdown + saved to `results/*.csv`.
+
+#![allow(dead_code)]
+
+use fedgec::tensor::model_zoo::ModelArch;
+use fedgec::train::data::DatasetSpec;
+
+/// `FEDGEC_FULL=1` runs the paper's full grid; default is a fast subset.
+pub fn full_mode() -> bool {
+    std::env::var("FEDGEC_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Models for the compression-grid experiments.
+pub fn grid_models() -> Vec<ModelArch> {
+    if full_mode() {
+        vec![ModelArch::ResNet18, ModelArch::ResNet34, ModelArch::InceptionV1, ModelArch::InceptionV3]
+    } else {
+        vec![ModelArch::ResNet18, ModelArch::InceptionV1]
+    }
+}
+
+/// Datasets for the compression-grid experiments.
+pub fn grid_datasets() -> Vec<DatasetSpec> {
+    if full_mode() {
+        vec![DatasetSpec::Cifar10, DatasetSpec::Caltech101, DatasetSpec::Fmnist]
+    } else {
+        vec![DatasetSpec::Cifar10, DatasetSpec::Fmnist]
+    }
+}
+
+/// The paper's REL error-bound sweep (Table 4 columns).
+pub fn grid_bounds() -> Vec<f64> {
+    vec![1e-3, 1e-2, 3e-2, 5e-2]
+}
+
+/// Number of gradient rounds averaged per grid cell.
+pub fn grid_rounds() -> usize {
+    if full_mode() {
+        5
+    } else {
+        3
+    }
+}
+
+/// Banner for a bench binary.
+pub fn banner(name: &str, paper_ref: &str) {
+    println!("━━━ {name} — reproduces {paper_ref} ━━━");
+    if !full_mode() {
+        println!("(fast subset; set FEDGEC_FULL=1 for the paper's full grid)\n");
+    }
+}

@@ -1,0 +1,134 @@
+//! Paper Fig. 11: end-to-end communication time.
+//! Upper panel: per model, total comm time across error bounds at a fixed
+//! 10 Mbps uplink (Ours vs SZ3 vs uncompressed dashed line).
+//! Lower panel: across bandwidths 1 Mbps–1 Gbps at fixed eb = 3e-2, with
+//! the break-even bandwidth (paper's stars, ~620 Mbps).
+//!
+//! Methodology as in the paper [43]: measured codec wall time + analytic
+//! transmission time S′/B over the simulated link; 100 rounds in full
+//! mode (scaled-down subset otherwise).
+
+mod bench_util;
+
+use std::time::Duration;
+
+use bench_util::*;
+use fedgec::baselines::{make_codec, qsgd_bits_for_bound};
+use fedgec::compress::quant::ErrorBound;
+use fedgec::fl::transport::bandwidth::LinkSpec;
+use fedgec::metrics::{fmt_duration, Table};
+use fedgec::train::data::DatasetSpec;
+use fedgec::train::gradgen::{GradGen, GradGenConfig};
+
+struct Measured {
+    raw: usize,
+    payload: usize,
+    codec_time: Duration,
+}
+
+fn measure(
+    arch: fedgec::tensor::model_zoo::ModelArch,
+    codec_name: &str,
+    eb: f64,
+    rounds: usize,
+) -> Measured {
+    let metas = arch.layers(10);
+    let mut gen = GradGen::new(metas.clone(), GradGenConfig::for_dataset(DatasetSpec::Cifar10), 4);
+    let mut client = make_codec(codec_name, ErrorBound::Rel(eb), qsgd_bits_for_bound(eb)).unwrap();
+    let mut server = make_codec(codec_name, ErrorBound::Rel(eb), qsgd_bits_for_bound(eb)).unwrap();
+    let mut m = Measured { raw: 0, payload: 0, codec_time: Duration::ZERO };
+    for _ in 0..rounds {
+        let g = gen.next_round();
+        m.raw += g.byte_size();
+        let t0 = std::time::Instant::now();
+        let p = client.compress(&g).unwrap();
+        server.decompress(&p, &metas).unwrap();
+        m.codec_time += t0.elapsed();
+        m.payload += p.len();
+    }
+    m
+}
+
+fn scale(m: &Measured, factor: f64) -> Measured {
+    Measured {
+        raw: (m.raw as f64 * factor) as usize,
+        payload: (m.payload as f64 * factor) as usize,
+        codec_time: Duration::from_secs_f64(m.codec_time.as_secs_f64() * factor),
+    }
+}
+
+fn main() {
+    banner("fig11_comm_time", "Fig. 11");
+    let measured_rounds = if full_mode() { 10 } else { 3 };
+    let total_rounds = 100; // the paper's round count; measured rounds are scaled up
+    let factor = total_rounds as f64 / measured_rounds as f64;
+
+    // ── Upper panel: comm time vs eb at 10 Mbps. ──
+    let link10 = LinkSpec { bits_per_sec: 10e6, latency: Duration::ZERO };
+    let mut upper = Table::new(
+        "Fig. 11 upper: total comm time, 100 rounds @ 10 Mbps",
+        &["model", "eb", "uncompressed", "sz3", "ours", "ours vs uncomp"],
+    );
+    for arch in grid_models() {
+        for &eb in &[1e-2, 3e-2, 5e-2] {
+            let ours = scale(&measure(arch, "ours", eb, measured_rounds), factor);
+            let sz3 = scale(&measure(arch, "sz3", eb, measured_rounds), factor);
+            let unc = link10.transmit_time(ours.raw);
+            let t_ours = ours.codec_time + link10.transmit_time(ours.payload);
+            let t_sz3 = sz3.codec_time + link10.transmit_time(sz3.payload);
+            upper.row(vec![
+                arch.name().into(),
+                format!("{eb}"),
+                fmt_duration(unc),
+                fmt_duration(t_sz3),
+                fmt_duration(t_ours),
+                format!("-{:.1}%", 100.0 * (1.0 - t_ours.as_secs_f64() / unc.as_secs_f64())),
+            ]);
+        }
+    }
+    upper.print();
+    upper.save_csv("fig11_upper_eb_sweep").unwrap();
+
+    // ── Lower panel: comm time vs bandwidth at eb = 3e-2. ──
+    let eb = 3e-2;
+    let arch = grid_models()[0];
+    let ours = scale(&measure(arch, "ours", eb, measured_rounds), factor);
+    let sz3 = scale(&measure(arch, "sz3", eb, measured_rounds), factor);
+    let mut lower = Table::new(
+        &format!("Fig. 11 lower: {} @ eb=3e-2 across bandwidths", arch.name()),
+        &["bandwidth (Mbps)", "uncompressed", "sz3", "ours", "ours gain"],
+    );
+    let mut breakeven_seen = false;
+    for &mbps in &[1.0, 2.0, 5.0, 10.0, 50.0, 100.0, 200.0, 500.0, 1000.0] {
+        let link = LinkSpec { bits_per_sec: mbps * 1e6, latency: Duration::ZERO };
+        let unc = link.transmit_time(ours.raw);
+        let t_ours = ours.codec_time + link.transmit_time(ours.payload);
+        let t_sz3 = sz3.codec_time + link.transmit_time(sz3.payload);
+        let gain = 1.0 - t_ours.as_secs_f64() / unc.as_secs_f64();
+        if gain < 0.0 && !breakeven_seen {
+            breakeven_seen = true;
+        }
+        lower.row(vec![
+            format!("{mbps}"),
+            fmt_duration(unc),
+            fmt_duration(t_sz3),
+            fmt_duration(t_ours),
+            format!("{:+.1}%", gain * 100.0),
+        ]);
+    }
+    lower.print();
+    lower.save_csv("fig11_lower_bandwidth_sweep").unwrap();
+
+    let saved_bits = (ours.raw - ours.payload) as f64 * 8.0;
+    let breakeven_mbps = saved_bits / ours.codec_time.as_secs_f64() / 1e6;
+    println!(
+        "break-even bandwidth ≈ {breakeven_mbps:.0} Mbps (paper: ~620 Mbps on Polaris; \
+         scales with codec throughput)"
+    );
+
+    // Shape checks: large gains at <=10 Mbps; gain shrinks with bandwidth.
+    let link1 = LinkSpec { bits_per_sec: 1e6, latency: Duration::ZERO };
+    let unc1 = link1.transmit_time(ours.raw).as_secs_f64();
+    let t1 = (ours.codec_time + link1.transmit_time(ours.payload)).as_secs_f64();
+    assert!(1.0 - t1 / unc1 > 0.7, "at 1 Mbps the reduction should exceed 70%");
+}

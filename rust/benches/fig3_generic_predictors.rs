@@ -1,0 +1,120 @@
+//! Paper Fig. 3: generic predictors (Lorenzo, interpolation) fail on real
+//! gradient data — predictions don't track the signal and the residuals
+//! are no tighter (sometimes wider) than the original values.
+//!
+//! Uses REAL gradients from the pure-Rust conv net mid-training. Prints
+//! the residual-vs-original standard deviations and entropies, and saves
+//! the distributions for plotting.
+
+mod bench_util;
+
+use bench_util::*;
+use fedgec::metrics::Table;
+use fedgec::train::data::{DatasetSpec, SynthDataset};
+use fedgec::train::native::NativeNet;
+use fedgec::util::rng::Rng;
+use fedgec::util::stats;
+
+fn lorenzo_residuals(data: &[f32]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(data.len());
+    let mut prev = 0.0f32;
+    for &x in data {
+        out.push(x - prev);
+        prev = x;
+    }
+    out
+}
+
+fn interp_residuals(data: &[f32]) -> Vec<f32> {
+    // Midpoint linear interpolation from true neighbors (the idealized
+    // generic-interpolation residual).
+    let n = data.len();
+    (0..n)
+        .map(|i| {
+            if i == 0 || i + 1 >= n {
+                data[i]
+            } else {
+                data[i] - 0.5 * (data[i - 1] + data[i + 1])
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    banner("fig3_generic_predictors", "Fig. 3");
+    // Real conv gradients from a partially-trained native net.
+    let ds = SynthDataset::new(DatasetSpec::Cifar10, 3);
+    let mut rng = Rng::new(4);
+    let batch = ds.sample(&mut rng, 64, 0.0);
+    let mut net = NativeNet::new(10, 5);
+    for _ in 0..10 {
+        let (_, _, g) = net.grad_batch(&batch);
+        net.apply(&g, 0.2);
+    }
+    let (_, _, g) = net.grad_batch(&batch);
+    let grad = &g.fc_w; // large dense gradient — spatially unstructured
+
+    let lorenzo = lorenzo_residuals(grad);
+    let interp = interp_residuals(grad);
+    let bins = 256;
+    let mut table = Table::new(
+        "Fig. 3: generic predictors on real gradient data",
+        &["series", "std", "entropy(bits, 256 bins)"],
+    );
+    for (name, series) in
+        [("original", grad.as_slice()), ("lorenzo residual", &lorenzo), ("interp residual", &interp)]
+    {
+        table.row(vec![
+            name.to_string(),
+            format!("{:.3e}", stats::std(series)),
+            format!("{:.3}", stats::value_entropy(series, bins)),
+        ]);
+    }
+    table.print();
+    let path = table.save_csv("fig3_generic_predictors").unwrap();
+    println!("saved {path:?}");
+
+    // Histogram series for plotting (original vs lorenzo residual).
+    let (lo, hi) = stats::finite_min_max(grad);
+    let w = (hi - lo).max(1e-12);
+    let mut hist = Table::new(
+        "Fig. 3 histograms (normalized bin centers)",
+        &["bin", "original", "lorenzo", "interp"],
+    );
+    let (centers, h0) = stats::histogram(grad, 64, lo - 0.2 * w, hi + 0.2 * w);
+    let (_, h1) = stats::histogram(&lorenzo, 64, lo - 0.2 * w, hi + 0.2 * w);
+    let (_, h2) = stats::histogram(&interp, 64, lo - 0.2 * w, hi + 0.2 * w);
+    for i in 0..centers.len() {
+        hist.row(vec![
+            format!("{:.4e}", centers[i]),
+            h0[i].to_string(),
+            h1[i].to_string(),
+            h2[i].to_string(),
+        ]);
+    }
+    let path = hist.save_csv("fig3_histograms").unwrap();
+    println!("saved {path:?}");
+
+    // Control: the same predictors on smooth scientific-style data, where
+    // they were designed to work — this is the paper's implicit contrast.
+    let smooth: Vec<f32> = (0..grad.len()).map(|i| (i as f32 / 200.0).sin()).collect();
+    let smooth_ratio =
+        stats::std(&lorenzo_residuals(&smooth)) as f64 / stats::std(&smooth) as f64;
+    let s0 = stats::std(grad) as f64;
+    let s1 = stats::std(&lorenzo) as f64;
+    let grad_ratio = s1 / s0;
+    println!(
+        "\nshape check (paper): Lorenzo residual/original std ratio = {grad_ratio:.2} on \
+         gradients vs {smooth_ratio:.4} on smooth data — the generic predictor removes \
+         orders of magnitude of variance on smooth data but almost none on gradients"
+    );
+    assert!(
+        grad_ratio > 0.5,
+        "lorenzo residuals should NOT be much tighter than the original on gradients"
+    );
+    assert!(smooth_ratio < 0.05, "lorenzo must crush smooth data (sanity of the control)");
+    assert!(
+        grad_ratio > smooth_ratio * 20.0,
+        "the gradient/smooth contrast should be dramatic"
+    );
+}

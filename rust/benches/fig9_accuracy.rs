@@ -1,0 +1,76 @@
+//! Paper Fig. 9: training accuracy under compression across error bounds,
+//! vs the uncompressed baseline — Ours ≈ SZ3 ≈ uncompressed for
+//! eb ≤ 3e-2 (5e-2 for easy data), QSGD degrades first.
+//!
+//! Real federated training with the native trainer (no artifacts needed;
+//! the HLO-trainer variant of this experiment runs via
+//! `examples/fl_e2e.rs`). `FEDGEC_FULL=1` adds datasets and error bounds.
+
+mod bench_util;
+
+use bench_util::*;
+use fedgec::config::RunConfig;
+use fedgec::coordinator::run_local;
+use fedgec::fl::transport::bandwidth::LinkSpec;
+use fedgec::metrics::Table;
+
+fn main() {
+    banner("fig9_accuracy", "Fig. 9");
+    // The synthetic tasks are easier than CIFAR/Caltech proper, so the
+    // degradation knee sits at larger bounds than the paper's 5e-2 — we
+    // extend the sweep so the knee is visible (same qualitative shape:
+    // flat plateau at tight bounds, cliff at loose ones).
+    let bounds = if full_mode() {
+        vec![1e-3, 1e-2, 3e-2, 1e-1, 3e-1, 6e-1]
+    } else {
+        vec![1e-2, 1e-1, 3e-1, 6e-1]
+    };
+    let datasets = vec![fedgec::train::data::DatasetSpec::Caltech101];
+    let rounds = if full_mode() { 12 } else { 8 };
+    let mut table = Table::new(
+        "Fig. 9: final accuracy vs error bound (native FL, real training)",
+        &["dataset", "codec", "eb", "final acc", "baseline acc", "gap"],
+    );
+    for dataset in datasets {
+        // Uncompressed baseline.
+        let base_cfg = RunConfig {
+            model: "native".into(),
+            dataset,
+            n_clients: 3,
+            rounds,
+            samples_per_client: 64,
+            local_lr: 0.15,
+            server_lr: 0.15,
+            codec: "none".into(),
+            link: LinkSpec::infinite(),
+            eval_every: 0,
+            seed: 7,
+            class_skew: 0.6,
+            ..Default::default()
+        };
+        let baseline = run_local(&base_cfg).unwrap().final_accuracy.unwrap();
+        for codec in ["fedgec", "sz3", "qsgd"] {
+            for &eb in &bounds {
+                let mut cfg = base_cfg.clone();
+                cfg.codec = codec.into();
+                cfg.rel_error_bound = eb;
+                let acc = run_local(&cfg).unwrap().final_accuracy.unwrap();
+                table.row(vec![
+                    dataset.name().to_string(),
+                    codec.to_string(),
+                    format!("{eb}"),
+                    format!("{acc:.3}"),
+                    format!("{baseline:.3}"),
+                    format!("{:+.3}", acc - baseline),
+                ]);
+            }
+        }
+    }
+    table.print();
+    let path = table.save_csv("fig9_accuracy").unwrap();
+    println!("saved {path:?}");
+    println!(
+        "shape check (paper): ours/sz3 within noise of the uncompressed baseline \
+         for eb <= 3e-2; degradation grows at 1e-1; qsgd degrades at coarser settings"
+    );
+}

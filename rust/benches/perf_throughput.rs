@@ -1,0 +1,135 @@
+//! §Perf: compressor throughput microbenchmarks — the L3 hot-path profile
+//! driving the optimization pass (EXPERIMENTS.md §Perf). Reports MB/s per
+//! pipeline stage and end-to-end for each codec, on a ResNet-18-scale
+//! gradient.
+
+mod bench_util;
+
+use std::time::Duration;
+
+use bench_util::*;
+use fedgec::baselines::{make_codec, qsgd_bits_for_bound};
+use fedgec::compress::huffman;
+use fedgec::compress::lossless::Backend;
+use fedgec::compress::pipeline::{FedgecCodec, FedgecConfig};
+use fedgec::compress::quant::ErrorBound;
+use fedgec::compress::GradientCodec;
+use fedgec::metrics::Table;
+use fedgec::tensor::model_zoo::ModelArch;
+use fedgec::train::gradgen::{GradGen, GradGenConfig};
+use fedgec::util::timer::bench_loop;
+
+fn main() {
+    banner("perf_throughput", "EXPERIMENTS.md §Perf");
+    let metas = ModelArch::ResNet18.layers(10);
+    let mut gen = GradGen::new(metas.clone(), GradGenConfig::default(), 2);
+    let g0 = gen.next_round();
+    let g = gen.next_round();
+    let bytes = g.byte_size();
+    println!("payload: ResNet-18 gradient, {:.1} MB\n", bytes as f64 / 1e6);
+    let iters = if full_mode() { 5 } else { 2 };
+    let min_time = Duration::from_millis(if full_mode() { 3000 } else { 800 });
+
+    let mut table = Table::new("compressor throughput", &["stage", "MB/s", "CR"]);
+
+    // End-to-end codecs.
+    for name in ["fedgec", "sz3", "qsgd", "topk"] {
+        let mut client = make_codec(name, ErrorBound::Rel(3e-2), qsgd_bits_for_bound(3e-2)).unwrap();
+        client.compress(&g0).unwrap(); // warm state
+        let mut payload_len = 0usize;
+        let stats = bench_loop(iters, min_time, || {
+            payload_len = client.compress(&g).unwrap().len();
+        });
+        table.row(vec![
+            format!("{name} compress (e2e)"),
+            format!("{:.0}", stats.mb_per_s(bytes)),
+            format!("{:.2}", bytes as f64 / payload_len as f64),
+        ]);
+    }
+    // Decompression.
+    {
+        let mut client = FedgecCodec::new(FedgecConfig {
+            error_bound: ErrorBound::Rel(3e-2),
+            ..Default::default()
+        });
+        let p0 = client.compress(&g0).unwrap();
+        let payload = client.compress(&g).unwrap();
+        // Fresh server decompressing rounds 1+2 each iteration (keeps the
+        // predictor state consistent with the payload pair).
+        let stats = bench_loop(iters, min_time, || {
+            let mut s = FedgecCodec::new(FedgecConfig {
+                error_bound: ErrorBound::Rel(3e-2),
+                ..Default::default()
+            });
+            s.decompress(&p0, &metas).unwrap();
+            s.decompress(&payload, &metas).unwrap();
+        });
+        table.row(vec![
+            "fedgec decompress (2 rounds)".into(),
+            format!("{:.0}", stats.mb_per_s(bytes * 2)),
+            "-".into(),
+        ]);
+    }
+
+    // Stage microbenches on the largest layer.
+    let largest = g.layers.iter().max_by_key(|l| l.data.len()).unwrap();
+    let lbytes = largest.data.len() * 4;
+    {
+        use fedgec::compress::fused::{fused_encode, FusedEncodeOut, FusedParams};
+        use fedgec::util::stats as st;
+        let prev_abs: Vec<f32> = g0
+            .layers
+            .iter()
+            .max_by_key(|l| l.data.len())
+            .unwrap()
+            .data
+            .iter()
+            .map(|x| x.abs())
+            .collect();
+        let signs = vec![1.0f32; largest.data.len()];
+        let abs: Vec<f32> = largest.data.iter().map(|x| x.abs()).collect();
+        let (mu_curr, sigma_curr) = st::mean_std(&abs);
+        let (mu_prev, sigma_prev) = st::mean_std(&prev_abs);
+        let p = FusedParams {
+            beta: 0.9,
+            mu_curr,
+            sigma_curr,
+            mu_prev,
+            sigma_prev,
+            two_delta: 0.001,
+            delta: 0.0005,
+        };
+        let mut mem = vec![0.0f32; largest.data.len()];
+        let mut out = FusedEncodeOut::default();
+        let stats = bench_loop(iters * 3, min_time, || {
+            fused_encode(&largest.data, &prev_abs, &mut mem, &signs, &p, &mut out);
+        });
+        table.row(vec![
+            "stage: fused predict+quantize".into(),
+            format!("{:.0}", stats.mb_per_s(lbytes)),
+            "-".into(),
+        ]);
+        let codes = out.codes.clone();
+        let stats = bench_loop(iters * 3, min_time, || {
+            let _ = huffman::encode_to_bytes(&codes);
+        });
+        table.row(vec![
+            "stage: huffman encode".into(),
+            format!("{:.0}", stats.mb_per_s(lbytes)),
+            "-".into(),
+        ]);
+        let entropy = huffman::encode_to_bytes(&codes);
+        for backend in [Backend::Zstd(3), Backend::Deflate, Backend::OwnLz] {
+            let stats = bench_loop(iters, min_time, || {
+                let _ = backend.compress(&entropy).unwrap();
+            });
+            table.row(vec![
+                format!("stage: lossless {}", backend.name()),
+                format!("{:.0}", stats.mb_per_s(entropy.len())),
+                "-".into(),
+            ]);
+        }
+    }
+    table.print();
+    table.save_csv("perf_throughput").unwrap();
+}

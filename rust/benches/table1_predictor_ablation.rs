@@ -1,0 +1,81 @@
+//! Paper Table 1: magnitude-predictor ablation — Lorenzo, MA(3), MA(5),
+//! AR(1), EMA without normalization, EMA with normalization — scored by
+//! MSE (lower better) and Pearson correlation (higher better) against the
+//! true next-round magnitudes.
+//!
+//! Expected shape: EMA(Norm) best on both metrics; EMA(NoNorm) second on
+//! MSE; Lorenzo worst tier.
+
+mod bench_util;
+
+use bench_util::*;
+use fedgec::compress::predictor::magnitude::{MagnitudeVariant, VariantRunner};
+use fedgec::metrics::Table;
+use fedgec::tensor::model_zoo::ModelArch;
+use fedgec::train::data::DatasetSpec;
+use fedgec::train::gradgen::{GradGen, GradGenConfig};
+use fedgec::util::stats;
+
+fn main() {
+    banner("table1_predictor_ablation", "Table 1");
+    let variants = [
+        MagnitudeVariant::Lorenzo,
+        MagnitudeVariant::MovingAverage(3),
+        MagnitudeVariant::MovingAverage(5),
+        MagnitudeVariant::Ar1,
+        MagnitudeVariant::EmaNoNorm,
+        MagnitudeVariant::EmaNorm,
+    ];
+    // Magnitude sequences from the calibrated gradient stream of a conv
+    // layer (ResNet-18, CIFAR-10 statistics), like the paper's setup.
+    let metas = ModelArch::ResNet18.layers(10);
+    let conv_idx = metas
+        .iter()
+        .position(|m| m.kind.kernel_size() == Some(9) && m.numel > 100_000)
+        .unwrap();
+    let rounds = if full_mode() { 60 } else { 30 };
+    let mut runners: Vec<VariantRunner> =
+        variants.iter().map(|&v| VariantRunner::new(v, 0.9)).collect();
+    let mut mse = vec![0.0f64; variants.len()];
+    let mut corr = vec![0.0f64; variants.len()];
+    let mut scored = 0usize;
+    let mut gen = GradGen::new(metas.clone(), GradGenConfig::for_dataset(DatasetSpec::Cifar10), 3);
+    for t in 0..rounds {
+        let g = gen.next_round();
+        let truth: Vec<f32> = g.layers[conv_idx].data.iter().map(|x| x.abs()).collect();
+        for (k, r) in runners.iter_mut().enumerate() {
+            let pred = r.step(&truth);
+            if t >= 3 {
+                mse[k] += stats::mse(&pred, &truth);
+                corr[k] += stats::pearson(&pred, &truth);
+            }
+        }
+        if t >= 3 {
+            scored += 1;
+        }
+    }
+    let mut table = Table::new(
+        "Table 1: gradient magnitude predictor ablation",
+        &["predictor", "MSE", "Corr"],
+    );
+    for (k, v) in variants.iter().enumerate() {
+        table.row(vec![
+            v.name(),
+            format!("{:.3e}", mse[k] / scored as f64),
+            format!("{:.4}", corr[k] / scored as f64),
+        ]);
+    }
+    table.print();
+    let path = table.save_csv("table1_predictor_ablation").unwrap();
+    println!("saved {path:?}");
+    let norm_idx = variants.len() - 1;
+    let best_mse = mse.iter().cloned().fold(f64::INFINITY, f64::min);
+    println!(
+        "shape check: EMA(Norm) MSE {:.3e} vs best-other {:.3e} (paper: EMA(Norm) best)",
+        mse[norm_idx] / scored as f64,
+        best_mse / scored as f64
+    );
+    assert!((mse[norm_idx] - best_mse).abs() < 1e-12, "EMA(Norm) should have the lowest MSE");
+    let best_corr = corr.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    assert!((corr[norm_idx] - best_corr).abs() < 1e-12, "EMA(Norm) should have the highest Corr");
+}

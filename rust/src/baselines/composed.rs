@@ -1,0 +1,322 @@
+//! Codec composition — the paper's §7.1 claim made concrete:
+//!
+//! * [`SparsifiedEblc`] — TopK sparsification upstream, the
+//!   predictor-enhanced EBLC downstream on the *selected* values ("our
+//!   predictor-enhanced EBLC can serve as a downstream quantizer applied
+//!   to the selected subset in a sparsified gradient, further reducing
+//!   transmission cost without violating error guarantees"). Indices are
+//!   delta+varint coded; the kept values keep the per-element bound.
+//!
+//! * [`ErrorFeedback`] — the standard EF wrapper (Karimireddy et al. 2019,
+//!   cited in §7.1) around any inner codec: the compression error is
+//!   accumulated and re-injected next round, stabilizing non-error-bounded
+//!   codecs like TopK/QSGD.
+
+use crate::compress::blob::{BlobReader, BlobWriter};
+use crate::compress::huffman;
+use crate::compress::lossless::{self, Backend};
+use crate::compress::quant::{ErrorBound, CODE_RADIUS, ESCAPE_CODE};
+use crate::compress::GradientCodec;
+use crate::tensor::{LayerGrad, LayerMeta, ModelGrad};
+
+/// TopK → error-bounded quantization of the kept values.
+pub struct SparsifiedEblc {
+    /// Keep fraction.
+    pub k: f64,
+    pub error_bound: ErrorBound,
+    pub backend: Backend,
+}
+
+impl SparsifiedEblc {
+    pub fn new(k: f64, error_bound: ErrorBound) -> Self {
+        assert!(k > 0.0 && k <= 1.0);
+        SparsifiedEblc { k, error_bound, backend: Backend::default() }
+    }
+
+    fn compress_layer(&self, layer: &LayerGrad) -> Vec<u8> {
+        let data = &layer.data;
+        let keep = ((data.len() as f64 * self.k).ceil() as usize).clamp(1, data.len());
+        let mut idx: Vec<u32> = (0..data.len() as u32).collect();
+        idx.select_nth_unstable_by(keep - 1, |&a, &b| {
+            data[b as usize]
+                .abs()
+                .partial_cmp(&data[a as usize].abs())
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut kept: Vec<u32> = idx[..keep].to_vec();
+        kept.sort_unstable();
+        let vals: Vec<f32> = kept.iter().map(|&i| data[i as usize]).collect();
+        // Error-bounded quantization of the kept values (pred = 0; the
+        // kept set is already sparse/unstructured).
+        let (lo, hi) = crate::util::stats::finite_min_max(&vals);
+        let delta = self.error_bound.resolve(lo, hi) as f32;
+        let two_delta = 2.0 * delta;
+        let inv = if two_delta > 0.0 { 1.0 / two_delta } else { 0.0 };
+        let mut codes = Vec::with_capacity(keep);
+        let mut escapes = Vec::new();
+        for &v in &vals {
+            let code_f = (v * inv + 0.5).floor();
+            let code = code_f as i32;
+            let r = code as f32 * two_delta;
+            if v.is_finite()
+                && two_delta > 0.0
+                && code_f.abs() <= CODE_RADIUS as f32
+                && (r - v).abs() <= delta
+            {
+                codes.push(code);
+            } else {
+                codes.push(ESCAPE_CODE);
+                escapes.push(v);
+            }
+        }
+        let mut w = BlobWriter::new();
+        w.put_u32(data.len() as u32);
+        w.put_u32(keep as u32);
+        w.put_f64(delta as f64);
+        // Delta-coded indices as varint bytes, then entropy streams.
+        let mut idx_bytes = Vec::with_capacity(keep * 2);
+        let mut prev = 0u32;
+        for &i in &kept {
+            let mut d = i - prev;
+            prev = i;
+            loop {
+                let b = (d & 0x7f) as u8;
+                d >>= 7;
+                if d == 0 {
+                    idx_bytes.push(b);
+                    break;
+                }
+                idx_bytes.push(b | 0x80);
+            }
+        }
+        w.put_bytes(&idx_bytes);
+        w.put_bytes(&huffman::encode_to_bytes(&codes));
+        w.put_f32_slice(&escapes);
+        w.into_bytes()
+    }
+
+    fn decompress_layer(&self, meta: &LayerMeta, body: &[u8]) -> crate::Result<Vec<f32>> {
+        let mut r = BlobReader::new(body);
+        let n = r.get_u32()? as usize;
+        anyhow::ensure!(n == meta.numel, "sparse-eblc layer {}: numel", meta.name);
+        let keep = r.get_u32()? as usize;
+        let delta = r.get_f64()? as f32;
+        let idx_bytes = r.get_bytes()?;
+        let (codes, _) = huffman::decode_from_bytes(r.get_bytes()?)?;
+        anyhow::ensure!(codes.len() == keep, "sparse-eblc: code count");
+        let escapes = r.get_f32_vec()?;
+        // Decode indices.
+        let mut out = vec![0.0f32; n];
+        let mut pos = 0usize;
+        let mut acc = 0u32;
+        let mut esc = escapes.iter();
+        let two_delta = 2.0 * delta;
+        for &code in &codes {
+            let mut d = 0u32;
+            let mut shift = 0;
+            loop {
+                let b = *idx_bytes.get(pos).ok_or_else(|| anyhow::anyhow!("idx underrun"))?;
+                pos += 1;
+                d |= ((b & 0x7f) as u32) << shift;
+                if b & 0x80 == 0 {
+                    break;
+                }
+                shift += 7;
+            }
+            acc += d;
+            let v = if code == ESCAPE_CODE {
+                *esc.next().ok_or_else(|| anyhow::anyhow!("escape underrun"))?
+            } else {
+                code as f32 * two_delta
+            };
+            *out.get_mut(acc as usize).ok_or_else(|| anyhow::anyhow!("index {acc} oob"))? = v;
+        }
+        Ok(out)
+    }
+}
+
+impl GradientCodec for SparsifiedEblc {
+    fn compress(&mut self, grads: &ModelGrad) -> crate::Result<Vec<u8>> {
+        let mut top = BlobWriter::new();
+        top.put_u32(grads.layers.len() as u32);
+        for layer in &grads.layers {
+            let closed = self.backend.compress(&self.compress_layer(layer))?;
+            top.put_bytes(&closed);
+        }
+        Ok(top.into_bytes())
+    }
+
+    fn decompress(&mut self, payload: &[u8], metas: &[LayerMeta]) -> crate::Result<ModelGrad> {
+        let mut r = BlobReader::new(payload);
+        let n_layers = r.get_u32()? as usize;
+        anyhow::ensure!(n_layers == metas.len(), "sparse-eblc: layer count");
+        let mut out = ModelGrad::default();
+        for meta in metas {
+            let body = lossless::decompress(r.get_bytes()?)?;
+            out.layers.push(LayerGrad::new(meta.clone(), self.decompress_layer(meta, &body)?));
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "topk+eblc"
+    }
+
+    fn reset(&mut self) {}
+}
+
+/// Error-feedback wrapper: `compress(g + residual)`, where `residual`
+/// accumulates what the inner codec lost last round. The decompressor
+/// side is pass-through (EF is a client-side mechanism).
+pub struct ErrorFeedback {
+    pub inner: Box<dyn GradientCodec>,
+    residual: Vec<Vec<f32>>,
+}
+
+impl ErrorFeedback {
+    pub fn new(inner: Box<dyn GradientCodec>) -> Self {
+        ErrorFeedback { inner, residual: Vec::new() }
+    }
+}
+
+impl GradientCodec for ErrorFeedback {
+    fn compress(&mut self, grads: &ModelGrad) -> crate::Result<Vec<u8>> {
+        // g' = g + residual
+        if self.residual.len() != grads.layers.len() {
+            self.residual = grads.layers.iter().map(|l| vec![0.0; l.data.len()]).collect();
+        }
+        let adjusted = ModelGrad {
+            layers: grads
+                .layers
+                .iter()
+                .zip(&self.residual)
+                .map(|(l, res)| {
+                    let data: Vec<f32> =
+                        l.data.iter().zip(res).map(|(g, r)| g + r).collect();
+                    LayerGrad::new(l.meta.clone(), data)
+                })
+                .collect(),
+        };
+        let payload = self.inner.compress(&adjusted)?;
+        // residual' = g' − decode(payload): reconstruct through a scratch
+        // decode on the inner codec's mirror — we approximate with a
+        // fresh inner decode only for stateless inners; stateful inners
+        // (fedgec) are already error-bounded and gain nothing from EF, so
+        // we keep EF for the stateless family (topk/qsgd).
+        let metas: Vec<LayerMeta> = grads.layers.iter().map(|l| l.meta.clone()).collect();
+        let recon = self.inner.decompress(&payload, &metas)?;
+        for ((res, adj), rec) in
+            self.residual.iter_mut().zip(&adjusted.layers).zip(&recon.layers)
+        {
+            for i in 0..res.len() {
+                res[i] = adj.data[i] - rec.data[i];
+            }
+        }
+        Ok(payload)
+    }
+
+    fn decompress(&mut self, payload: &[u8], metas: &[LayerMeta]) -> crate::Result<ModelGrad> {
+        self.inner.decompress(payload, metas)
+    }
+
+    fn name(&self) -> &'static str {
+        "error-feedback"
+    }
+
+    fn reset(&mut self) {
+        self.inner.reset();
+        self.residual.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::topk::TopKCodec;
+    use crate::util::rng::Rng;
+
+    fn grads(n: usize, seed: u64) -> (ModelGrad, Vec<LayerMeta>) {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+        let g = ModelGrad { layers: vec![LayerGrad::new(LayerMeta::other("g", n), data)] };
+        let metas = g.layers.iter().map(|l| l.meta.clone()).collect();
+        (g, metas)
+    }
+
+    #[test]
+    fn sparsified_eblc_kept_values_bounded() {
+        let (g, metas) = grads(10_000, 1);
+        let mut codec = SparsifiedEblc::new(0.1, ErrorBound::Rel(1e-2));
+        let payload = codec.compress(&g).unwrap();
+        let recon = codec.decompress(&payload, &metas).unwrap();
+        let orig = &g.layers[0].data;
+        let rec = &recon.layers[0].data;
+        let mut kept = 0;
+        for (o, r) in orig.iter().zip(rec) {
+            if *r != 0.0 {
+                kept += 1;
+                // kept values honor the bound relative to the kept range
+                assert!((o - r).abs() < 0.05 * o.abs().max(1.0), "{o} vs {r}");
+            }
+        }
+        assert!(kept >= 1000 && kept <= 1100, "kept {kept}");
+    }
+
+    #[test]
+    fn sparsified_eblc_beats_plain_topk_size() {
+        let (g, _) = grads(100_000, 2);
+        let p_plain = TopKCodec::new(0.05).compress(&g).unwrap();
+        let p_composed =
+            SparsifiedEblc::new(0.05, ErrorBound::Rel(3e-2)).compress(&g).unwrap();
+        assert!(
+            p_composed.len() < p_plain.len(),
+            "composed {} should beat plain topk {} (paper §7.1)",
+            p_composed.len(),
+            p_plain.len()
+        );
+    }
+
+    #[test]
+    fn error_feedback_recovers_dropped_mass() {
+        // With EF, a repeated constant gradient eventually transmits all
+        // coordinates (residual accumulation promotes dropped ones).
+        let n = 1000;
+        let (g, metas) = grads(n, 3);
+        let mut ef = ErrorFeedback::new(Box::new(TopKCodec::new(0.05)));
+        let mut seen = vec![false; n];
+        for _ in 0..30 {
+            let payload = ef.compress(&g).unwrap();
+            let recon = ef.decompress(&payload, &metas).unwrap();
+            for (s, v) in seen.iter_mut().zip(&recon.layers[0].data) {
+                if *v != 0.0 {
+                    *s = true;
+                }
+            }
+        }
+        let covered = seen.iter().filter(|&&s| s).count();
+        assert!(
+            covered > n / 2,
+            "EF should cycle through coordinates, covered {covered}/{n}"
+        );
+        // Without EF, TopK keeps sending the same top 5%.
+        let mut plain = TopKCodec::new(0.05);
+        let mut seen2 = vec![false; n];
+        for _ in 0..30 {
+            let payload = plain.compress(&g).unwrap();
+            let recon = plain.decompress(&payload, &metas).unwrap();
+            for (s, v) in seen2.iter_mut().zip(&recon.layers[0].data) {
+                if *v != 0.0 {
+                    *s = true;
+                }
+            }
+        }
+        let covered2 = seen2.iter().filter(|&&s| s).count();
+        assert!(covered2 < covered, "plain {covered2} vs EF {covered}");
+    }
+
+    #[test]
+    fn factory_includes_composed() {
+        assert!(crate::baselines::make_codec("topk+eblc", ErrorBound::Rel(1e-2), 5).is_some());
+        assert!(crate::baselines::make_codec("ef-topk", ErrorBound::Rel(1e-2), 5).is_some());
+    }
+}

@@ -1,0 +1,123 @@
+//! Elias gamma / delta codes for positive integers — the integer coding
+//! used by the QSGD baseline (Alistarh et al., NeurIPS 2017 encode their
+//! quantization levels with Elias codes).
+
+use crate::util::bitio::{BitReader, BitWriter};
+
+/// Elias gamma: `floor(log2 v)` zeros, then the binary of `v`. `v >= 1`.
+pub fn gamma_encode(w: &mut BitWriter, v: u64) {
+    debug_assert!(v >= 1);
+    let nbits = 64 - v.leading_zeros() as u8; // position of MSB, 1-based
+    for _ in 0..nbits - 1 {
+        w.put_bit(false);
+    }
+    w.put_bits(v, nbits);
+}
+
+/// Decode one gamma-coded integer.
+pub fn gamma_decode(r: &mut BitReader) -> Option<u64> {
+    let mut zeros = 0u8;
+    loop {
+        match r.get_bit()? {
+            false => {
+                zeros += 1;
+                if zeros > 63 {
+                    return None;
+                }
+            }
+            true => break,
+        }
+    }
+    let rest = r.get_bits(zeros)?;
+    Some((1u64 << zeros) | rest)
+}
+
+/// Elias delta: gamma-code the bit length, then the mantissa. Better for
+/// large values.
+pub fn delta_encode(w: &mut BitWriter, v: u64) {
+    debug_assert!(v >= 1);
+    let nbits = 64 - v.leading_zeros() as u8;
+    gamma_encode(w, nbits as u64);
+    if nbits > 1 {
+        w.put_bits(v & !(1u64 << (nbits - 1)), nbits - 1);
+    }
+}
+
+/// Decode one delta-coded integer.
+pub fn delta_decode(r: &mut BitReader) -> Option<u64> {
+    let nbits = gamma_decode(r)? as u8;
+    if nbits == 0 || nbits > 64 {
+        return None;
+    }
+    if nbits == 1 {
+        return Some(1);
+    }
+    let rest = r.get_bits(nbits - 1)?;
+    Some((1u64 << (nbits - 1)) | rest)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn gamma_roundtrip_small() {
+        let mut w = BitWriter::new();
+        let vals = [1u64, 2, 3, 4, 5, 17, 100, 1 << 20];
+        for &v in &vals {
+            gamma_encode(&mut w, v);
+        }
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &v in &vals {
+            assert_eq!(gamma_decode(&mut r), Some(v));
+        }
+    }
+
+    #[test]
+    fn delta_roundtrip() {
+        let mut w = BitWriter::new();
+        let vals = [1u64, 2, 7, 1000, u32::MAX as u64, 1 << 50];
+        for &v in &vals {
+            delta_encode(&mut w, v);
+        }
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &v in &vals {
+            assert_eq!(delta_decode(&mut r), Some(v));
+        }
+    }
+
+    #[test]
+    fn gamma_one_is_single_bit() {
+        let mut w = BitWriter::new();
+        gamma_encode(&mut w, 1);
+        assert_eq!(w.bit_len(), 1);
+    }
+
+    #[test]
+    fn property_roundtrip() {
+        prop::check("elias roundtrip", 100, |rng| {
+            let n = 1 + rng.next_below(200);
+            let vals: Vec<u64> = (0..n).map(|_| 1 + rng.next_below(1 << 30) as u64).collect();
+            let mut w = BitWriter::new();
+            for &v in &vals {
+                if v % 2 == 0 {
+                    gamma_encode(&mut w, v);
+                } else {
+                    delta_encode(&mut w, v);
+                }
+            }
+            let bytes = w.into_bytes();
+            let mut r = BitReader::new(&bytes);
+            for &v in &vals {
+                let got = if v % 2 == 0 { gamma_decode(&mut r) } else { delta_decode(&mut r) };
+                if got != Some(v) {
+                    return Err(format!("{v} -> {got:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

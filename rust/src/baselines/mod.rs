@@ -1,0 +1,119 @@
+//! Comparator baselines from the paper's evaluation: a faithful SZ3-style
+//! EBLC (generic Lorenzo/interpolation predictors over the same
+//! quantize→Huffman→lossless backend), QSGD (stochastic quantization with
+//! Elias coding), and TopK sparsification (the sparsification family the
+//! paper contrasts in §7.1).
+
+pub mod composed;
+pub mod elias;
+pub mod qsgd;
+pub mod sz3;
+pub mod topk;
+
+use crate::compress::blob::{bytes_to_f32s, f32s_to_bytes, BlobReader, BlobWriter};
+use crate::compress::GradientCodec;
+use crate::tensor::{LayerGrad, LayerMeta, ModelGrad};
+
+/// Identity codec (`codec = "none"`): raw f32 transmission, CR = 1. The
+/// uncompressed baseline of Fig. 9 / Fig. 11.
+#[derive(Default)]
+pub struct RawCodec;
+
+impl GradientCodec for RawCodec {
+    fn compress(&mut self, grads: &ModelGrad) -> crate::Result<Vec<u8>> {
+        let mut w = BlobWriter::new();
+        w.put_u32(grads.layers.len() as u32);
+        for l in &grads.layers {
+            w.put_bytes(&f32s_to_bytes(&l.data));
+        }
+        Ok(w.into_bytes())
+    }
+
+    fn decompress(&mut self, payload: &[u8], metas: &[LayerMeta]) -> crate::Result<ModelGrad> {
+        let mut r = BlobReader::new(payload);
+        let n = r.get_u32()? as usize;
+        anyhow::ensure!(n == metas.len(), "raw payload {} layers != {}", n, metas.len());
+        let mut out = ModelGrad::default();
+        for meta in metas {
+            let data = bytes_to_f32s(r.get_bytes()?)?;
+            anyhow::ensure!(data.len() == meta.numel, "raw layer {} size", meta.name);
+            out.layers.push(LayerGrad::new(meta.clone(), data));
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn reset(&mut self) {}
+}
+
+/// Factory over every codec in the repo (ours + baselines), keyed by the
+/// names used in configs and bench tables.
+pub fn make_codec(
+    name: &str,
+    error_bound: crate::compress::quant::ErrorBound,
+    qsgd_bits: u8,
+) -> Option<Box<dyn GradientCodec>> {
+    match name {
+        "fedgec" | "ours" => {
+            let cfg = crate::compress::pipeline::FedgecConfig { error_bound, ..Default::default() };
+            Some(Box::new(crate::compress::pipeline::FedgecCodec::new(cfg)))
+        }
+        "sz3" => Some(Box::new(sz3::Sz3Codec::new(sz3::Sz3Config {
+            error_bound,
+            ..Default::default()
+        }))),
+        "qsgd" => Some(Box::new(qsgd::QsgdCodec::new(qsgd_bits, 0))),
+        "topk" => Some(Box::new(topk::TopKCodec::new(0.05))),
+        "none" | "raw" => Some(Box::new(RawCodec)),
+        "topk+eblc" => Some(Box::new(composed::SparsifiedEblc::new(0.05, error_bound))),
+        "ef-topk" => Some(Box::new(composed::ErrorFeedback::new(Box::new(
+            topk::TopKCodec::new(0.05),
+        )))),
+        "ef-qsgd" => Some(Box::new(composed::ErrorFeedback::new(Box::new(
+            qsgd::QsgdCodec::new(qsgd_bits, 0),
+        )))),
+        _ => None,
+    }
+}
+
+/// Map a REL error bound to a comparable QSGD bit-width, following the
+/// paper's §5.3 pairing: {1e-3,1e-2,3e-2,5e-2,1e-1} ↔ {10,7,5,4,3} bits.
+pub fn qsgd_bits_for_bound(rel_eb: f64) -> u8 {
+    if rel_eb <= 1e-3 {
+        10
+    } else if rel_eb <= 1e-2 {
+        7
+    } else if rel_eb <= 3e-2 {
+        5
+    } else if rel_eb <= 5e-2 {
+        4
+    } else {
+        3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::quant::ErrorBound;
+
+    #[test]
+    fn factory_knows_all_codecs() {
+        for name in ["fedgec", "ours", "sz3", "qsgd", "topk", "none"] {
+            assert!(make_codec(name, ErrorBound::Rel(1e-2), 5).is_some(), "{name}");
+        }
+        assert!(make_codec("nope", ErrorBound::Rel(1e-2), 5).is_none());
+    }
+
+    #[test]
+    fn qsgd_bit_mapping_matches_paper() {
+        assert_eq!(qsgd_bits_for_bound(1e-3), 10);
+        assert_eq!(qsgd_bits_for_bound(1e-2), 7);
+        assert_eq!(qsgd_bits_for_bound(3e-2), 5);
+        assert_eq!(qsgd_bits_for_bound(5e-2), 4);
+        assert_eq!(qsgd_bits_for_bound(1e-1), 3);
+    }
+}

@@ -1,0 +1,197 @@
+//! QSGD baseline (Alistarh et al., NeurIPS 2017): per-layer stochastic
+//! quantization onto `s = 2^bits − 1` levels of `|g_i| / ‖g‖₂`, encoded as
+//! sign bits + Elias-gamma level codes, closed with the same lossless
+//! backend. Not error-bounded — the paper maps REL bounds to bit-widths
+//! for comparability (§5.3, reproduced in
+//! [`crate::baselines::qsgd_bits_for_bound`]).
+
+use super::elias;
+use crate::compress::blob::{BlobReader, BlobWriter};
+use crate::compress::lossless::{self, Backend};
+use crate::compress::GradientCodec;
+use crate::tensor::{LayerGrad, LayerMeta, ModelGrad};
+use crate::util::bitio::{BitReader, BitWriter};
+use crate::util::rng::Rng;
+
+/// Bucket size: norms are taken per 512-element bucket, the standard
+/// practical QSGD configuration (whole-tensor norms degenerate on
+/// multi-million-element conv layers — nearly every level rounds to 0).
+pub const BUCKET: usize = 512;
+
+/// QSGD codec. Stochastic rounding is driven by a seeded RNG so runs are
+/// reproducible; the randomness is part of the *encoder* only.
+pub struct QsgdCodec {
+    pub bits: u8,
+    pub backend: Backend,
+    rng: Rng,
+}
+
+impl QsgdCodec {
+    pub fn new(bits: u8, seed: u64) -> Self {
+        assert!((1..=16).contains(&bits));
+        QsgdCodec { bits, backend: Backend::default(), rng: Rng::new(seed ^ 0x9560d) }
+    }
+
+    fn levels(&self) -> u32 {
+        (1u32 << self.bits) - 1
+    }
+
+    fn compress_layer(&mut self, layer: &LayerGrad) -> Vec<u8> {
+        let data = &layer.data;
+        let s = self.levels() as f64;
+        let mut w = BlobWriter::new();
+        w.put_u32(data.len() as u32);
+        // Per-bucket L2 norms.
+        let n_buckets = data.len().div_ceil(BUCKET).max(1);
+        w.put_u32(n_buckets as u32);
+        let mut norms = Vec::with_capacity(n_buckets);
+        for chunk in data.chunks(BUCKET) {
+            let norm: f64 = chunk.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+            w.put_f64(norm);
+            norms.push(norm);
+        }
+        // Sign bitmap then level stream.
+        let mut signs = BitWriter::new();
+        let mut lvls = BitWriter::new();
+        for (b, chunk) in data.chunks(BUCKET).enumerate() {
+            let norm = norms[b];
+            for &x in chunk {
+                signs.put_bit(x < 0.0);
+                let r = if norm > 0.0 { (x.abs() as f64 / norm) * s } else { 0.0 };
+                let l = r.floor();
+                let frac = r - l;
+                let level = l as u64 + if self.rng.chance(frac) { 1 } else { 0 };
+                // Elias needs v >= 1: shift by one.
+                elias::gamma_encode(&mut lvls, level + 1);
+            }
+        }
+        w.put_bytes(&signs.into_bytes());
+        w.put_bytes(&lvls.into_bytes());
+        w.into_bytes()
+    }
+
+    fn decompress_layer(&self, meta: &LayerMeta, body: &[u8]) -> crate::Result<Vec<f32>> {
+        let mut r = BlobReader::new(body);
+        let n = r.get_u32()? as usize;
+        if n != meta.numel {
+            anyhow::bail!("qsgd layer {}: numel {} != {}", meta.name, n, meta.numel);
+        }
+        let n_buckets = r.get_u32()? as usize;
+        if n_buckets != n.div_ceil(BUCKET).max(1) {
+            anyhow::bail!("qsgd layer {}: bucket count {}", meta.name, n_buckets);
+        }
+        let mut norms = Vec::with_capacity(n_buckets);
+        for _ in 0..n_buckets {
+            norms.push(r.get_f64()?);
+        }
+        let sign_bytes = r.get_bytes()?;
+        let lvl_bytes = r.get_bytes()?;
+        let mut signs = BitReader::new(sign_bytes);
+        let mut lvls = BitReader::new(lvl_bytes);
+        let s = self.levels() as f64;
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let norm = norms[i / BUCKET];
+            let neg = signs.get_bit().ok_or_else(|| anyhow::anyhow!("sign underrun"))?;
+            let level =
+                elias::gamma_decode(&mut lvls).ok_or_else(|| anyhow::anyhow!("level underrun"))? - 1;
+            let mag = norm * level as f64 / s;
+            out.push(if neg { -mag as f32 } else { mag as f32 });
+        }
+        Ok(out)
+    }
+}
+
+impl GradientCodec for QsgdCodec {
+    fn compress(&mut self, grads: &ModelGrad) -> crate::Result<Vec<u8>> {
+        let mut top = BlobWriter::new();
+        top.put_u32(grads.layers.len() as u32);
+        for layer in &grads.layers {
+            let body = self.compress_layer(layer);
+            let closed = self.backend.compress(&body)?;
+            top.put_bytes(&closed);
+        }
+        Ok(top.into_bytes())
+    }
+
+    fn decompress(&mut self, payload: &[u8], metas: &[LayerMeta]) -> crate::Result<ModelGrad> {
+        let mut r = BlobReader::new(payload);
+        let n_layers = r.get_u32()? as usize;
+        if n_layers != metas.len() {
+            anyhow::bail!("qsgd payload {} layers != {}", n_layers, metas.len());
+        }
+        let mut out = ModelGrad::default();
+        for meta in metas {
+            let body = lossless::decompress(r.get_bytes()?)?;
+            out.layers.push(LayerGrad::new(meta.clone(), self.decompress_layer(meta, &body)?));
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "qsgd"
+    }
+
+    fn reset(&mut self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn grads(n: usize, seed: u64) -> (ModelGrad, Vec<LayerMeta>) {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+        let g = ModelGrad { layers: vec![LayerGrad::new(LayerMeta::other("g", n), data)] };
+        let metas = g.layers.iter().map(|l| l.meta.clone()).collect();
+        (g, metas)
+    }
+
+    #[test]
+    fn roundtrip_unbiased_and_bounded() {
+        let (g, metas) = grads(20_000, 1);
+        let mut codec = QsgdCodec::new(8, 7);
+        let payload = codec.compress(&g).unwrap();
+        let recon = codec.decompress(&payload, &metas).unwrap();
+        let orig = &g.layers[0].data;
+        let rec = &recon.layers[0].data;
+        // Per-element error bounded by its bucket's norm/s; stochastic
+        // rounding approximately unbiased overall.
+        let mut bias = 0.0f64;
+        let mut max_bin = 0.0f64;
+        for (b, chunk) in orig.chunks(BUCKET).enumerate() {
+            let norm: f64 = chunk.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+            let bin = norm / 255.0;
+            max_bin = max_bin.max(bin);
+            for (i, o) in chunk.iter().enumerate() {
+                let r = rec[b * BUCKET + i];
+                assert!((*o as f64 - r as f64).abs() <= bin + 1e-9);
+                bias += (*o - r) as f64;
+            }
+        }
+        assert!((bias / orig.len() as f64).abs() < max_bin * 0.1, "bias={bias}");
+    }
+
+    #[test]
+    fn fewer_bits_smaller_payload() {
+        let (g, _) = grads(50_000, 2);
+        let p3 = QsgdCodec::new(3, 0).compress(&g).unwrap();
+        let p10 = QsgdCodec::new(10, 0).compress(&g).unwrap();
+        assert!(p3.len() < p10.len(), "{} vs {}", p3.len(), p10.len());
+        // And both beat raw f32.
+        assert!(p10.len() < g.byte_size());
+    }
+
+    #[test]
+    fn zero_layer_roundtrip() {
+        let g = ModelGrad {
+            layers: vec![LayerGrad::new(LayerMeta::other("z", 100), vec![0.0; 100])],
+        };
+        let metas: Vec<LayerMeta> = g.layers.iter().map(|l| l.meta.clone()).collect();
+        let mut codec = QsgdCodec::new(4, 0);
+        let payload = codec.compress(&g).unwrap();
+        let recon = codec.decompress(&payload, &metas).unwrap();
+        assert!(recon.layers[0].data.iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,151 @@
+//! TopK sparsification baseline (Aji & Heafield 2017): transmit only the
+//! k-fraction largest-magnitude elements (delta-coded indices + f32
+//! values), zeroing the rest. Representative of the sparsification family
+//! the paper contrasts in §7.1 — high CR, uncontrolled per-element error.
+
+use crate::compress::blob::{BlobReader, BlobWriter};
+use crate::compress::lossless::{self, Backend};
+use crate::compress::GradientCodec;
+use crate::tensor::{LayerGrad, LayerMeta, ModelGrad};
+
+/// TopK codec with fraction `k` (e.g. 0.05 = keep 5%).
+pub struct TopKCodec {
+    pub k: f64,
+    pub backend: Backend,
+}
+
+impl TopKCodec {
+    pub fn new(k: f64) -> Self {
+        assert!(k > 0.0 && k <= 1.0);
+        TopKCodec { k, backend: Backend::default() }
+    }
+
+    fn compress_layer(&self, layer: &LayerGrad) -> Vec<u8> {
+        let data = &layer.data;
+        let keep = ((data.len() as f64 * self.k).ceil() as usize).clamp(1, data.len());
+        // Select top-k by |value| (partial sort of indices).
+        let mut idx: Vec<u32> = (0..data.len() as u32).collect();
+        idx.select_nth_unstable_by(keep - 1, |&a, &b| {
+            data[b as usize]
+                .abs()
+                .partial_cmp(&data[a as usize].abs())
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut kept: Vec<u32> = idx[..keep].to_vec();
+        kept.sort_unstable();
+        let mut w = BlobWriter::new();
+        w.put_u32(data.len() as u32);
+        w.put_u32(keep as u32);
+        // Delta-coded indices.
+        let mut prev = 0u32;
+        for &i in &kept {
+            w.put_u32(i - prev);
+            prev = i;
+        }
+        for &i in &kept {
+            w.put_f32(data[i as usize]);
+        }
+        w.into_bytes()
+    }
+
+    fn decompress_layer(&self, meta: &LayerMeta, body: &[u8]) -> crate::Result<Vec<f32>> {
+        let mut r = BlobReader::new(body);
+        let n = r.get_u32()? as usize;
+        if n != meta.numel {
+            anyhow::bail!("topk layer {}: numel {} != {}", meta.name, n, meta.numel);
+        }
+        let keep = r.get_u32()? as usize;
+        let mut indices = Vec::with_capacity(keep);
+        let mut acc = 0u32;
+        for _ in 0..keep {
+            acc += r.get_u32()?;
+            indices.push(acc);
+        }
+        let mut out = vec![0.0f32; n];
+        for &i in &indices {
+            let v = r.get_f32()?;
+            *out.get_mut(i as usize)
+                .ok_or_else(|| anyhow::anyhow!("topk index {i} out of range"))? = v;
+        }
+        Ok(out)
+    }
+}
+
+impl GradientCodec for TopKCodec {
+    fn compress(&mut self, grads: &ModelGrad) -> crate::Result<Vec<u8>> {
+        let mut top = BlobWriter::new();
+        top.put_u32(grads.layers.len() as u32);
+        for layer in &grads.layers {
+            let closed = self.backend.compress(&self.compress_layer(layer))?;
+            top.put_bytes(&closed);
+        }
+        Ok(top.into_bytes())
+    }
+
+    fn decompress(&mut self, payload: &[u8], metas: &[LayerMeta]) -> crate::Result<ModelGrad> {
+        let mut r = BlobReader::new(payload);
+        let n_layers = r.get_u32()? as usize;
+        if n_layers != metas.len() {
+            anyhow::bail!("topk payload {} layers != {}", n_layers, metas.len());
+        }
+        let mut out = ModelGrad::default();
+        for meta in metas {
+            let body = lossless::decompress(r.get_bytes()?)?;
+            out.layers.push(LayerGrad::new(meta.clone(), self.decompress_layer(meta, &body)?));
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+
+    fn reset(&mut self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn keeps_largest_elements() {
+        let data = vec![0.1f32, -5.0, 0.2, 3.0, -0.05, 0.0, 1.0, -0.3];
+        let g = ModelGrad { layers: vec![LayerGrad::new(LayerMeta::other("g", 8), data)] };
+        let metas: Vec<LayerMeta> = g.layers.iter().map(|l| l.meta.clone()).collect();
+        let mut codec = TopKCodec::new(0.25); // keep 2
+        let payload = codec.compress(&g).unwrap();
+        let recon = codec.decompress(&payload, &metas).unwrap();
+        assert_eq!(recon.layers[0].data[1], -5.0);
+        assert_eq!(recon.layers[0].data[3], 3.0);
+        let nonzero = recon.layers[0].data.iter().filter(|&&x| x != 0.0).count();
+        assert_eq!(nonzero, 2);
+    }
+
+    #[test]
+    fn ratio_scales_with_k() {
+        let mut rng = Rng::new(1);
+        let data: Vec<f32> = (0..100_000).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let g = ModelGrad { layers: vec![LayerGrad::new(LayerMeta::other("g", 100_000), data)] };
+        let p1 = TopKCodec::new(0.01).compress(&g).unwrap();
+        let p10 = TopKCodec::new(0.10).compress(&g).unwrap();
+        assert!(p1.len() < p10.len());
+        assert!(g.byte_size() as f64 / p1.len() as f64 > 10.0);
+    }
+
+    #[test]
+    fn roundtrip_preserves_kept_values_exactly() {
+        let mut rng = Rng::new(2);
+        let data: Vec<f32> = (0..1000).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let g = ModelGrad {
+            layers: vec![LayerGrad::new(LayerMeta::other("g", 1000), data.clone())],
+        };
+        let metas: Vec<LayerMeta> = g.layers.iter().map(|l| l.meta.clone()).collect();
+        let mut codec = TopKCodec::new(0.05);
+        let payload = codec.compress(&g).unwrap();
+        let recon = codec.decompress(&payload, &metas).unwrap();
+        for (r, o) in recon.layers[0].data.iter().zip(&data) {
+            assert!(*r == 0.0 || r == o);
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! Minimal CLI argument parser (no `clap` offline): subcommand + `--key
+//! value` / `--key=value` flags + bare positionals.
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positionals: Vec<String>,
+    pub flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> crate::Result<Args> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // Value is the next token unless it's another flag or
+                    // missing -> boolean true.
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.flags.insert(stripped.to_string(), v);
+                        }
+                        _ => {
+                            out.flags.insert(stripped.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positionals.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> crate::Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> crate::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key}: bad number '{v}'")),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> crate::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key}: bad integer '{v}'")),
+        }
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("run --config x.json --rounds 5 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get("config"), Some("x.json"));
+        assert_eq!(a.get_usize("rounds", 0).unwrap(), 5);
+        assert_eq!(a.get("verbose"), Some("true"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("bench --eb=0.03");
+        assert_eq!(a.get_f64("eb", 0.0).unwrap(), 0.03);
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse("compress file1 file2 --codec sz3");
+        assert_eq!(a.positionals, vec!["file1", "file2"]);
+        assert_eq!(a.get("codec"), Some("sz3"));
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse("run --rounds xyz");
+        assert!(a.get_usize("rounds", 0).is_err());
+    }
+}

@@ -1,0 +1,129 @@
+//! Auto-tuning of the compressor's hyper-parameters — the paper's §6
+//! future-work item ("develop auto-tuning mechanisms that can dynamically
+//! adapt these parameters based on the observed gradient statistics
+//! during training"), implemented here as a first-class feature.
+//!
+//! Two knobs with two different synchronization constraints:
+//!
+//! * **τ (sign-consistency threshold)** is a *client-only* decision: the
+//!   two-level bitmap already tells the server exactly which kernels were
+//!   predicted, so the client may move τ freely with zero extra
+//!   communication. We adapt it with a proportional controller targeting
+//!   the sign-mismatch rate: too many mismatches ⇒ raise τ (predict only
+//!   very consistent kernels); few mismatches and low coverage ⇒ lower τ.
+//!
+//! * **β (EMA decay)** feeds the server-side magnitude predictor, so both
+//!   sides must use the same value every round. We therefore derive β
+//!   deterministically from *reconstructed* history only (the temporal
+//!   autocorrelation of the previous reconstructed magnitudes), which
+//!   both sides hold bit-identically — no side channel needed.
+
+use crate::util::stats;
+
+/// Controller for the client-side τ.
+#[derive(Debug, Clone)]
+pub struct TauController {
+    pub tau: f64,
+    /// Target sign-mismatch rate among predicted elements (paper Table 5
+    /// reports ~10% as the healthy operating point).
+    pub target_mismatch: f64,
+    /// Proportional gain.
+    pub gain: f64,
+    pub min_tau: f64,
+    pub max_tau: f64,
+}
+
+impl Default for TauController {
+    fn default() -> Self {
+        TauController { tau: 0.5, target_mismatch: 0.10, gain: 0.5, min_tau: 0.1, max_tau: 0.95 }
+    }
+}
+
+impl TauController {
+    /// Update τ from the last round's observed mismatch rate and coverage.
+    pub fn update(&mut self, mismatch_rate: f64, prediction_ratio: f64) {
+        // Mismatch above target pushes τ up; well below target with thin
+        // coverage pulls τ down to predict more kernels.
+        let err = mismatch_rate - self.target_mismatch;
+        let mut step = self.gain * err;
+        if err < 0.0 && prediction_ratio > 0.9 {
+            // Already predicting nearly everything cleanly: hold.
+            step = 0.0;
+        }
+        self.tau = (self.tau + step).clamp(self.min_tau, self.max_tau);
+    }
+}
+
+/// Deterministic β schedule from reconstructed magnitude history.
+///
+/// Given the previous two reconstructed |g| tensors (available on both
+/// sides), β tracks their correlation: strongly persistent magnitudes ⇒
+/// long memory (β→0.95); decorrelated ⇒ short memory (β→0.3).
+pub fn beta_from_history(prev_abs: &[f32], prev_prev_abs: &[f32]) -> f32 {
+    if prev_abs.is_empty() || prev_abs.len() != prev_prev_abs.len() {
+        return 0.9;
+    }
+    let corr = stats::pearson(prev_abs, prev_prev_abs).clamp(0.0, 1.0);
+    // Map corr in [0,1] -> beta in [0.3, 0.95].
+    (0.3 + 0.65 * corr) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tau_rises_on_high_mismatch() {
+        let mut c = TauController::default();
+        let t0 = c.tau;
+        c.update(0.4, 0.6);
+        assert!(c.tau > t0);
+    }
+
+    #[test]
+    fn tau_falls_on_clean_thin_coverage() {
+        let mut c = TauController::default();
+        let t0 = c.tau;
+        c.update(0.0, 0.2);
+        assert!(c.tau < t0);
+    }
+
+    #[test]
+    fn tau_holds_when_saturated() {
+        let mut c = TauController::default();
+        let t0 = c.tau;
+        c.update(0.01, 0.95);
+        assert_eq!(c.tau, t0);
+    }
+
+    #[test]
+    fn tau_stays_in_bounds() {
+        let mut c = TauController::default();
+        for _ in 0..100 {
+            c.update(1.0, 0.5);
+        }
+        assert!(c.tau <= c.max_tau);
+        for _ in 0..100 {
+            c.update(0.0, 0.0);
+        }
+        assert!(c.tau >= c.min_tau);
+    }
+
+    #[test]
+    fn beta_tracks_correlation() {
+        let a: Vec<f32> = (0..100).map(|i| (i as f32 / 10.0).sin().abs()).collect();
+        let high = beta_from_history(&a, &a);
+        assert!(high > 0.9);
+        let b: Vec<f32> = (0..100).map(|i| ((i * 7919) % 100) as f32 / 100.0).collect();
+        let low = beta_from_history(&a, &b);
+        assert!(low < high);
+        assert_eq!(beta_from_history(&[], &[]), 0.9);
+    }
+
+    #[test]
+    fn beta_is_deterministic_pure_function() {
+        let a: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..64).map(|i| (i * 2) as f32).collect();
+        assert_eq!(beta_from_history(&a, &b), beta_from_history(&a, &b));
+    }
+}

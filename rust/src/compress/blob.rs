@@ -1,0 +1,162 @@
+//! Binary wire helpers for payload headers: a tiny, dependency-free
+//! writer/reader over little-endian primitives and length-prefixed byte
+//! sections. All compressed-round payloads are built from these.
+
+/// Append-only binary writer.
+#[derive(Default)]
+pub struct BlobWriter {
+    buf: Vec<u8>,
+}
+
+impl BlobWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    /// Length-prefixed byte section.
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.put_u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+    }
+    /// Raw f32 slice (length-prefixed, little-endian).
+    pub fn put_f32_slice(&mut self, v: &[f32]) {
+        self.put_u32(v.len() as u32);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Sequential binary reader with bounds checking.
+pub struct BlobReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BlobReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        BlobReader { buf, pos: 0 }
+    }
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            anyhow::bail!("blob underrun: want {n} at {} of {}", self.pos, self.buf.len());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    pub fn get_u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    pub fn get_u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    pub fn get_u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    pub fn get_f32(&mut self) -> anyhow::Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    pub fn get_f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    pub fn get_bytes(&mut self) -> anyhow::Result<&'a [u8]> {
+        let n = self.get_u32()? as usize;
+        self.take(n)
+    }
+    pub fn get_f32_vec(&mut self) -> anyhow::Result<Vec<f32>> {
+        let n = self.get_u32()? as usize;
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+}
+
+/// Encode an f32 slice as raw little-endian bytes (no prefix).
+pub fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 4);
+    for &x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Decode raw little-endian bytes into f32s.
+pub fn bytes_to_f32s(buf: &[u8]) -> anyhow::Result<Vec<f32>> {
+    if buf.len() % 4 != 0 {
+        anyhow::bail!("byte length {} not divisible by 4", buf.len());
+    }
+    Ok(buf.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writer_reader_roundtrip() {
+        let mut w = BlobWriter::new();
+        w.put_u8(7);
+        w.put_u32(0xDEADBEEF);
+        w.put_u64(u64::MAX);
+        w.put_f32(1.5);
+        w.put_f64(-2.25);
+        w.put_bytes(b"hello");
+        w.put_f32_slice(&[1.0, -2.0]);
+        let bytes = w.into_bytes();
+        let mut r = BlobReader::new(&bytes);
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert_eq!(r.get_u32().unwrap(), 0xDEADBEEF);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX);
+        assert_eq!(r.get_f32().unwrap(), 1.5);
+        assert_eq!(r.get_f64().unwrap(), -2.25);
+        assert_eq!(r.get_bytes().unwrap(), b"hello");
+        assert_eq!(r.get_f32_vec().unwrap(), vec![1.0, -2.0]);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn underrun_errors() {
+        let mut r = BlobReader::new(&[1, 2]);
+        assert!(r.get_u32().is_err());
+    }
+
+    #[test]
+    fn f32_bytes_roundtrip() {
+        let v = vec![0.0f32, -1.5, f32::NAN, 3.25e10];
+        let b = f32s_to_bytes(&v);
+        let got = bytes_to_f32s(&b).unwrap();
+        assert_eq!(got.len(), v.len());
+        assert!(got[2].is_nan());
+        assert_eq!(got[3], v[3]);
+        assert!(bytes_to_f32s(&[1, 2, 3]).is_err());
+    }
+}

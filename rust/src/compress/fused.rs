@@ -1,0 +1,296 @@
+//! The fused predict+quantize hot path — one elementwise pass combining
+//! magnitude prediction (Alg. 1), sign application, residual formation and
+//! error-bounded quantization. This is the L1 compute hot-spot: the same
+//! math is implemented by the Pallas kernel
+//! (`python/compile/kernels/predict_quantize.py`), and the
+//! `hlo_runtime` integration test asserts the two produce identical codes.
+//!
+//! All reductions (μ/σ of previous and current magnitudes) happen *before*
+//! this pass and are passed in as scalars, so the pass is purely
+//! elementwise — that is what makes the native and PJRT engines agree
+//! bit-for-bit (DESIGN.md §1).
+
+use super::quant::{CODE_RADIUS, ESCAPE_CODE};
+
+/// Scalar parameters of one fused pass.
+#[derive(Debug, Clone, Copy)]
+pub struct FusedParams {
+    /// EMA decay β.
+    pub beta: f32,
+    /// Stats of the *current* absolute gradient (transmitted).
+    pub mu_curr: f32,
+    pub sigma_curr: f32,
+    /// Stats of the *previous reconstructed* absolute gradient (recomputed
+    /// identically on both sides).
+    pub mu_prev: f32,
+    pub sigma_prev: f32,
+    /// Quantization bin width 2Δ and bound Δ.
+    pub two_delta: f32,
+    pub delta: f32,
+}
+
+/// Output of the encoder-side fused pass.
+#[derive(Debug, Default)]
+pub struct FusedEncodeOut {
+    pub codes: Vec<i32>,
+    pub escapes: Vec<f32>,
+    pub recon: Vec<f32>,
+}
+
+/// Numerical floor for σ (shared with the Pallas kernel).
+pub const SIGMA_EPS: f32 = 1e-12;
+
+#[inline]
+fn predict_mag(prev_abs: f32, m: &mut f32, p: &FusedParams, inv_sigma_prev: f32) -> f32 {
+    let z = (prev_abs - p.mu_prev) * inv_sigma_prev;
+    let mi = p.beta * *m + (1.0 - p.beta) * z;
+    *m = mi;
+    (mi * p.sigma_curr + p.mu_curr).max(0.0)
+}
+
+/// Encoder-side fused pass.
+///
+/// `prev_abs` is `|g̃^(t-1)|` (empty slice on round 1 ⇒ no prediction,
+/// memory untouched), `memory` is the EMA state (resized lazily), `signs`
+/// the sign tensor from Alg. 2. Produces codes/escapes/reconstruction;
+/// the caller owns entropy coding.
+pub fn fused_encode(
+    grad: &[f32],
+    prev_abs: &[f32],
+    memory: &mut Vec<f32>,
+    signs: &[f32],
+    p: &FusedParams,
+    out: &mut FusedEncodeOut,
+) {
+    let n = grad.len();
+    assert_eq!(signs.len(), n);
+    let have_prev = !prev_abs.is_empty();
+    if have_prev {
+        assert_eq!(prev_abs.len(), n);
+        if memory.len() != n {
+            memory.clear();
+            memory.resize(n, 0.0);
+        }
+    }
+    out.codes.clear();
+    out.codes.reserve(n);
+    out.escapes.clear();
+    out.recon.clear();
+    out.recon.reserve(n);
+    let inv_sigma_prev = 1.0 / p.sigma_prev.max(SIGMA_EPS);
+    let inv_two_delta = if p.two_delta > 0.0 { 1.0 / p.two_delta } else { 0.0 };
+    // Tight inner loop: one slice-zipped pass with no bounds checks; the
+    // escape path is cold (outlined) to keep the common path branch-light.
+    #[cold]
+    fn escape(out: &mut FusedEncodeOut, x: f32) {
+        out.codes.push(ESCAPE_CODE);
+        out.escapes.push(x);
+        out.recon.push(x);
+    }
+    if have_prev {
+        let beta = p.beta;
+        let one_m_beta = 1.0 - beta;
+        for (((&x, &pa), m), &s) in
+            grad.iter().zip(prev_abs.iter()).zip(memory.iter_mut()).zip(signs.iter())
+        {
+            let z = (pa - p.mu_prev) * inv_sigma_prev;
+            let mi = beta * *m + one_m_beta * z;
+            *m = mi;
+            let a_hat = (mi * p.sigma_curr + p.mu_curr).max(0.0);
+            let g_hat = s * a_hat;
+            // floor(x + 0.5) (round-half-up) — matches the Pallas kernel
+            // exactly; jnp.round would be half-to-even and f32::round
+            // half-away-from-zero, which disagree at bin boundaries.
+            let code_f = ((x - g_hat) * inv_two_delta + 0.5).floor();
+            let code = code_f as i32;
+            let r = g_hat + code as f32 * p.two_delta;
+            if x.is_finite()
+                && p.two_delta > 0.0
+                && code_f.abs() <= CODE_RADIUS as f32
+                && (r - x).abs() <= p.delta
+                && r.is_finite()
+            {
+                out.codes.push(code);
+                out.recon.push(r);
+            } else {
+                escape(out, x);
+            }
+        }
+    } else {
+        for &x in grad {
+            let code_f = (x * inv_two_delta + 0.5).floor();
+            let code = code_f as i32;
+            let r = code as f32 * p.two_delta;
+            if x.is_finite()
+                && p.two_delta > 0.0
+                && code_f.abs() <= CODE_RADIUS as f32
+                && (r - x).abs() <= p.delta
+                && r.is_finite()
+            {
+                out.codes.push(code);
+                out.recon.push(r);
+            } else {
+                escape(out, x);
+            }
+        }
+    }
+}
+
+/// Decoder-side fused pass: identical prediction + memory update, then
+/// reconstruction from codes/escapes. Must mirror `fused_encode` exactly.
+pub fn fused_decode(
+    codes: &[i32],
+    escapes: &[f32],
+    prev_abs: &[f32],
+    memory: &mut Vec<f32>,
+    signs: &[f32],
+    p: &FusedParams,
+    recon: &mut Vec<f32>,
+) -> anyhow::Result<()> {
+    let n = codes.len();
+    if signs.len() != n {
+        anyhow::bail!("sign length {} != codes {}", signs.len(), n);
+    }
+    let have_prev = !prev_abs.is_empty();
+    if have_prev {
+        if prev_abs.len() != n {
+            anyhow::bail!("prev length {} != codes {}", prev_abs.len(), n);
+        }
+        if memory.len() != n {
+            memory.clear();
+            memory.resize(n, 0.0);
+        }
+    }
+    recon.clear();
+    recon.reserve(n);
+    let inv_sigma_prev = 1.0 / p.sigma_prev.max(SIGMA_EPS);
+    let mut esc = escapes.iter();
+    for i in 0..n {
+        let g_hat = if have_prev {
+            let a_hat = predict_mag(prev_abs[i], &mut memory[i], p, inv_sigma_prev);
+            signs[i] * a_hat
+        } else {
+            0.0
+        };
+        if codes[i] == ESCAPE_CODE {
+            recon.push(*esc.next().ok_or_else(|| anyhow::anyhow!("escape stream exhausted"))?);
+        } else {
+            recon.push(g_hat + codes[i] as f32 * p.two_delta);
+        }
+    }
+    if esc.next().is_some() {
+        anyhow::bail!("unconsumed escapes");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::stats;
+
+    fn params(grad: &[f32], prev_abs: &[f32], delta: f32, beta: f32) -> FusedParams {
+        let abs: Vec<f32> = grad.iter().map(|x| x.abs()).collect();
+        let (mu_curr, sigma_curr) = stats::mean_std(&abs);
+        let (mu_prev, sigma_prev) = stats::mean_std(prev_abs);
+        FusedParams { beta, mu_curr, sigma_curr, mu_prev, sigma_prev, two_delta: 2.0 * delta, delta }
+    }
+
+    #[test]
+    fn encode_decode_agree() {
+        let grad = vec![0.5f32, -0.3, 0.8, -0.2, 0.05, -0.9];
+        let prev_abs = vec![0.4f32, 0.2, 0.7, 0.3, 0.1, 0.8];
+        let signs = vec![1.0f32, -1.0, 1.0, -1.0, 0.0, -1.0];
+        let p = params(&grad, &prev_abs, 0.01, 0.9);
+        let mut mem_e = Vec::new();
+        let mut out = FusedEncodeOut::default();
+        fused_encode(&grad, &prev_abs, &mut mem_e, &signs, &p, &mut out);
+        let mut mem_d = Vec::new();
+        let mut recon = Vec::new();
+        fused_decode(&out.codes, &out.escapes, &prev_abs, &mut mem_d, &signs, &p, &mut recon)
+            .unwrap();
+        assert_eq!(out.recon, recon);
+        assert_eq!(mem_e, mem_d);
+        for (r, g) in recon.iter().zip(&grad) {
+            assert!((r - g).abs() <= 0.01 + 1e-7);
+        }
+    }
+
+    #[test]
+    fn round_one_no_prediction() {
+        let grad = vec![0.55f32, -0.3];
+        let signs = vec![0.0f32, 0.0];
+        let p = params(&grad, &[], 0.1, 0.9);
+        let mut mem = Vec::new();
+        let mut out = FusedEncodeOut::default();
+        fused_encode(&grad, &[], &mut mem, &signs, &p, &mut out);
+        assert!(mem.is_empty()); // memory untouched on round 1
+        // codes quantize g directly (pred = 0)
+        assert_eq!(out.codes[0], (0.55f32 / 0.2 + 0.5).floor() as i32);
+    }
+
+    #[test]
+    fn good_prediction_yields_small_codes() {
+        // When sign & magnitude predictions are accurate, codes concentrate
+        // near zero even with tiny delta.
+        let n = 512;
+        let prev_abs: Vec<f32> = (0..n).map(|i| 0.5 + 0.3 * ((i as f32) / 64.0).sin()).collect();
+        // current = prev pattern (stationary), same signs
+        let grad: Vec<f32> = prev_abs.iter().map(|&a| a).collect();
+        let signs = vec![1.0f32; n];
+        let mut mem = vec![0.0f32; n];
+        // Warm the memory with several identical rounds.
+        let p = params(&grad, &prev_abs, 0.05, 0.5);
+        let mut out = FusedEncodeOut::default();
+        for _ in 0..20 {
+            let mut m2 = mem.clone();
+            fused_encode(&grad, &prev_abs, &mut m2, &signs, &p, &mut out);
+            mem = m2;
+        }
+        let zero_frac =
+            out.codes.iter().filter(|&&c| c == 0).count() as f64 / out.codes.len() as f64;
+        assert!(zero_frac > 0.9, "zero_frac={zero_frac}");
+    }
+
+    #[test]
+    fn property_bound_and_mirror() {
+        prop::check("fused bound+mirror", 120, |rng| {
+            let n = prop::arb_len(rng, 3000);
+            let grad = prop::arb_gradient(rng, n);
+            let prev: Vec<f32> = prop::arb_gradient(rng, n).iter().map(|x| x.abs()).collect();
+            let signs: Vec<f32> = (0..n)
+                .map(|_| match rng.next_below(3) {
+                    0 => -1.0,
+                    1 => 0.0,
+                    _ => 1.0,
+                })
+                .collect();
+            let delta = prop::arb_error_bound(rng) as f32;
+            let p = params(&grad, &prev, delta, 0.9);
+            let mut mem_e = Vec::new();
+            let mut out = FusedEncodeOut::default();
+            fused_encode(&grad, &prev, &mut mem_e, &signs, &p, &mut out);
+            for i in 0..n {
+                if grad[i].is_finite() && (out.recon[i] - grad[i]).abs() > delta * 1.0001 {
+                    return Err(format!("bound violated at {i}"));
+                }
+            }
+            let mut mem_d = Vec::new();
+            let mut recon = Vec::new();
+            fused_decode(&out.codes, &out.escapes, &prev, &mut mem_d, &signs, &p, &mut recon)
+                .map_err(|e| e.to_string())?;
+            if recon
+                .iter()
+                .zip(&out.recon)
+                .any(|(a, b)| !(a == b || (a.is_nan() && b.is_nan())))
+            {
+                return Err("decoder recon mismatch".into());
+            }
+            if mem_e != mem_d {
+                return Err("memory divergence".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,487 @@
+//! Stage 3: canonical Huffman entropy coding over quantization codes.
+//!
+//! The alphabet is the set of distinct i32 codes observed in the layer
+//! (bounded by [`crate::compress::quant::CODE_RADIUS`] plus the escape
+//! marker). The table is serialized as `(symbol, code_length)` pairs and
+//! rebuilt canonically on the decode side, so encoder and decoder agree
+//! without transmitting the codes themselves.
+//!
+//! Falls back to a raw 32-bit store when Huffman would not help (tiny
+//! inputs, pathological depth) — the blob records which mode was used.
+
+use crate::util::bitio::{BitReader, BitWriter};
+use std::collections::HashMap;
+
+/// Maximum canonical code length we allow. Depths beyond this trigger the
+/// raw fallback (never observed for gradient residuals; pure safety).
+const MAX_LEN: u8 = 56;
+
+/// Encoded entropy stream.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Encoded {
+    Huffman {
+        /// (symbol, canonical length) table, sorted by (length, symbol).
+        table: Vec<(i32, u8)>,
+        /// Number of encoded symbols.
+        count: u32,
+        /// MSB-first bitstream.
+        bits: Vec<u8>,
+    },
+    /// Raw little-endian i32 store.
+    Raw(Vec<i32>),
+}
+
+impl Encoded {
+    /// Serialized payload size in bytes (table + stream), as written by
+    /// `write_to`.
+    pub fn byte_size(&self) -> usize {
+        match self {
+            Encoded::Huffman { table, bits, .. } => 1 + 4 + 4 + table.len() * 5 + 4 + bits.len(),
+            Encoded::Raw(v) => 1 + 4 + v.len() * 4,
+        }
+    }
+
+    /// Append the serialized form to `out`.
+    pub fn write_to(&self, out: &mut Vec<u8>) {
+        match self {
+            Encoded::Huffman { table, count, bits } => {
+                out.push(1u8);
+                out.extend_from_slice(&(table.len() as u32).to_le_bytes());
+                out.extend_from_slice(&count.to_le_bytes());
+                for &(sym, len) in table {
+                    out.extend_from_slice(&sym.to_le_bytes());
+                    out.push(len);
+                }
+                out.extend_from_slice(&(bits.len() as u32).to_le_bytes());
+                out.extend_from_slice(bits);
+            }
+            Encoded::Raw(v) => {
+                out.push(0u8);
+                out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+                for &x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+
+    /// Parse a serialized stream, returning (encoded, bytes_consumed).
+    pub fn read_from(buf: &[u8]) -> anyhow::Result<(Encoded, usize)> {
+        use anyhow::bail;
+        if buf.is_empty() {
+            bail!("empty entropy stream");
+        }
+        let mode = buf[0];
+        let mut pos = 1usize;
+        let rd_u32 = |buf: &[u8], pos: &mut usize| -> anyhow::Result<u32> {
+            if *pos + 4 > buf.len() {
+                anyhow::bail!("truncated entropy stream");
+            }
+            let v = u32::from_le_bytes(buf[*pos..*pos + 4].try_into().unwrap());
+            *pos += 4;
+            Ok(v)
+        };
+        match mode {
+            0 => {
+                let n = rd_u32(buf, &mut pos)? as usize;
+                if pos + n * 4 > buf.len() {
+                    bail!("truncated raw stream");
+                }
+                let mut v = Vec::with_capacity(n);
+                for i in 0..n {
+                    v.push(i32::from_le_bytes(buf[pos + i * 4..pos + i * 4 + 4].try_into().unwrap()));
+                }
+                pos += n * 4;
+                Ok((Encoded::Raw(v), pos))
+            }
+            1 => {
+                let tn = rd_u32(buf, &mut pos)? as usize;
+                let count = rd_u32(buf, &mut pos)?;
+                if pos + tn * 5 > buf.len() {
+                    bail!("truncated huffman table");
+                }
+                let mut table = Vec::with_capacity(tn);
+                for _ in 0..tn {
+                    let sym = i32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap());
+                    let len = buf[pos + 4];
+                    pos += 5;
+                    table.push((sym, len));
+                }
+                let bn = rd_u32(buf, &mut pos)? as usize;
+                if pos + bn > buf.len() {
+                    bail!("truncated huffman bits");
+                }
+                let bits = buf[pos..pos + bn].to_vec();
+                pos += bn;
+                Ok((Encoded::Huffman { table, count, bits }, pos))
+            }
+            m => bail!("unknown entropy mode {m}"),
+        }
+    }
+}
+
+/// Compute Huffman code lengths from frequencies (standard two-queue /
+/// heap algorithm over a flat node arena).
+fn code_lengths(freqs: &[(i32, u64)]) -> Vec<(i32, u8)> {
+    let n = freqs.len();
+    if n == 1 {
+        return vec![(freqs[0].0, 1)];
+    }
+    // Node arena: (freq, parent). Leaves first.
+    let mut freq: Vec<u64> = freqs.iter().map(|&(_, f)| f).collect();
+    let mut parent = vec![usize::MAX; n];
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> =
+        freq.iter().enumerate().map(|(i, &f)| Reverse((f, i))).collect();
+    while heap.len() > 1 {
+        let Reverse((fa, a)) = heap.pop().unwrap();
+        let Reverse((fb, b)) = heap.pop().unwrap();
+        let id = freq.len();
+        freq.push(fa + fb);
+        parent.push(usize::MAX);
+        parent[a] = id;
+        parent[b] = id;
+        heap.push(Reverse((fa + fb, id)));
+    }
+    let mut out = Vec::with_capacity(n);
+    for (i, &(sym, _)) in freqs.iter().enumerate() {
+        let mut len = 0u32;
+        let mut node = i;
+        while parent[node] != usize::MAX {
+            node = parent[node];
+            len += 1;
+        }
+        out.push((sym, len.min(255) as u8));
+    }
+    out
+}
+
+/// Build canonical codes from (symbol, length) pairs sorted by
+/// (length, symbol). Returns map symbol -> (code, length).
+fn canonical_codes(table: &[(i32, u8)]) -> HashMap<i32, (u64, u8)> {
+    let mut map = HashMap::with_capacity(table.len());
+    let mut code = 0u64;
+    let mut prev_len = 0u8;
+    for &(sym, len) in table {
+        if prev_len != 0 {
+            code = (code + 1) << (len - prev_len);
+        } else {
+            code <<= len - prev_len;
+        }
+        map.insert(sym, (code, len));
+        prev_len = len;
+    }
+    map
+}
+
+/// Flat fast-table radius: symbols in [-FAST_RADIUS, FAST_RADIUS] use
+/// array-indexed counting/lookup (the overwhelming majority of gradient
+/// residual codes concentrate near 0 — §Perf), the rest fall back to a
+/// HashMap.
+const FAST_RADIUS: i32 = 4096;
+
+/// Encode a code stream. Chooses Huffman vs raw by serialized size.
+pub fn encode(codes: &[i32]) -> Encoded {
+    if codes.is_empty() {
+        return Encoded::Raw(Vec::new());
+    }
+    // Frequency table: flat array fast path + HashMap overflow.
+    let flat_len = (2 * FAST_RADIUS + 1) as usize;
+    let mut flat = vec![0u64; flat_len];
+    let mut overflow: HashMap<i32, u64> = HashMap::new();
+    for &c in codes {
+        if (-FAST_RADIUS..=FAST_RADIUS).contains(&c) {
+            flat[(c + FAST_RADIUS) as usize] += 1;
+        } else {
+            *overflow.entry(c).or_insert(0) += 1;
+        }
+    }
+    let mut freqs: Vec<(i32, u64)> = flat
+        .iter()
+        .enumerate()
+        .filter(|(_, &f)| f > 0)
+        .map(|(i, &f)| (i as i32 - FAST_RADIUS, f))
+        .collect();
+    let mut extra: Vec<(i32, u64)> = overflow.into_iter().collect();
+    extra.sort_unstable_by_key(|&(s, _)| s);
+    freqs.extend(extra);
+    freqs.sort_unstable_by_key(|&(s, _)| s);
+    let mut table = code_lengths(&freqs);
+    table.sort_unstable_by_key(|&(s, l)| (l, s));
+    if table.last().map(|&(_, l)| l).unwrap_or(0) > MAX_LEN {
+        return Encoded::Raw(codes.to_vec());
+    }
+    let codes_map = canonical_codes(&table);
+    // Emission lookup: flat array for the fast range, HashMap otherwise.
+    let mut flat_codes: Vec<(u64, u8)> = vec![(0, 0); flat_len];
+    for (&sym, &cl) in &codes_map {
+        if (-FAST_RADIUS..=FAST_RADIUS).contains(&sym) {
+            flat_codes[(sym + FAST_RADIUS) as usize] = cl;
+        }
+    }
+    let mut w = BitWriter::new();
+    for &c in codes {
+        let (code, len) = if (-FAST_RADIUS..=FAST_RADIUS).contains(&c) {
+            flat_codes[(c + FAST_RADIUS) as usize]
+        } else {
+            *codes_map.get(&c).expect("symbol in table")
+        };
+        w.put_bits(code, len);
+    }
+    let enc = Encoded::Huffman { table, count: codes.len() as u32, bits: w.into_bytes() };
+    let raw_size = 1 + 4 + codes.len() * 4;
+    if enc.byte_size() >= raw_size {
+        Encoded::Raw(codes.to_vec())
+    } else {
+        enc
+    }
+}
+
+/// Windowed MSB-first bit source for the fast decoder: a 64-bit look-ahead
+/// window refilled bytewise; reads past the end see zero bits (the encoder
+/// zero-pads the final byte and `count` bounds the symbols).
+struct FastBits<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    acc: u64,
+    n: u8,
+}
+
+impl<'a> FastBits<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        FastBits { buf, pos: 0, acc: 0, n: 0 }
+    }
+    #[inline]
+    fn refill(&mut self) {
+        while self.n <= 56 {
+            let byte = if self.pos < self.buf.len() {
+                let b = self.buf[self.pos];
+                self.pos += 1;
+                b
+            } else {
+                0
+            };
+            self.acc |= (byte as u64) << (56 - self.n);
+            self.n += 8;
+            if self.pos >= self.buf.len() && self.n > 56 {
+                break;
+            }
+        }
+    }
+    #[inline]
+    fn peek(&self, k: u8) -> u64 {
+        debug_assert!(k <= 56);
+        if k == 0 {
+            0
+        } else {
+            self.acc >> (64 - k)
+        }
+    }
+    #[inline]
+    fn consume(&mut self, k: u8) {
+        self.acc <<= k;
+        self.n = self.n.saturating_sub(k);
+    }
+    #[inline]
+    fn take1(&mut self) -> u64 {
+        self.refill();
+        let b = self.peek(1);
+        self.consume(1);
+        b
+    }
+}
+
+/// First-level LUT width for the fast decoder.
+const LUT_BITS: usize = 12;
+
+/// Decode back to the code stream.
+pub fn decode(enc: &Encoded) -> anyhow::Result<Vec<i32>> {
+    match enc {
+        Encoded::Raw(v) => Ok(v.clone()),
+        Encoded::Huffman { table, count, bits } => {
+            // Canonical decode: per-length first-code and symbol offsets.
+            if table.is_empty() {
+                anyhow::bail!("empty huffman table");
+            }
+            let max_len = table.last().unwrap().1 as usize;
+            if max_len == 0 || max_len > MAX_LEN as usize {
+                anyhow::bail!("corrupt huffman table (max len {max_len})");
+            }
+            let mut first_code = vec![0u64; max_len + 2];
+            let mut first_idx = vec![0usize; max_len + 2];
+            let mut counts = vec![0usize; max_len + 2];
+            for &(_, l) in table {
+                if l as usize > max_len {
+                    anyhow::bail!("unsorted huffman table");
+                }
+                counts[l as usize] += 1;
+            }
+            let mut code = 0u64;
+            let mut idx = 0usize;
+            for len in 1..=max_len {
+                code <<= 1;
+                first_code[len] = code;
+                first_idx[len] = idx;
+                code += counts[len] as u64;
+                idx += counts[len];
+            }
+            // First-level LUT: prefix -> (symbol index, code length) for
+            // codes at most LUT_BITS long (§Perf: ~3x decode speedup).
+            let lut_bits = max_len.min(LUT_BITS);
+            let mut lut: Vec<(u32, u8)> = vec![(u32::MAX, 0); 1 << lut_bits];
+            {
+                let mut code = 0u64;
+                let mut prev_len = 0u8;
+                for (i, &(_, len)) in table.iter().enumerate() {
+                    if len < prev_len || len == 0 {
+                        anyhow::bail!("unsorted or zero-length huffman table entry");
+                    }
+                    if prev_len != 0 {
+                        code = (code + 1) << (len - prev_len);
+                    } else {
+                        code <<= len - prev_len;
+                    }
+                    prev_len = len;
+                    if (len as usize) <= lut_bits {
+                        let shift = lut_bits - len as usize;
+                        let base = (code << shift) as usize;
+                        for e in lut.iter_mut().skip(base).take(1 << shift) {
+                            *e = (i as u32, len);
+                        }
+                    }
+                }
+            }
+            let mut fb = FastBits::new(bits);
+            let mut out = Vec::with_capacity(*count as usize);
+            for _ in 0..*count {
+                fb.refill();
+                let (sym_idx, len) = lut[fb.peek(lut_bits as u8) as usize];
+                if len != 0 {
+                    fb.consume(len);
+                    out.push(table[sym_idx as usize].0);
+                    continue;
+                }
+                // Long-code fallback (> lut_bits bits): per-bit canonical.
+                let mut code = 0u64;
+                let mut l = 0usize;
+                loop {
+                    code = (code << 1) | fb.take1();
+                    l += 1;
+                    if l > max_len {
+                        anyhow::bail!("invalid huffman code");
+                    }
+                    if counts[l] > 0
+                        && code >= first_code[l]
+                        && code < first_code[l] + counts[l] as u64
+                    {
+                        let sym_idx = first_idx[l] + (code - first_code[l]) as usize;
+                        out.push(table[sym_idx].0);
+                        break;
+                    }
+                }
+            }
+            Ok(out)
+        }
+    }
+}
+
+/// Convenience: serialized-encode straight to bytes.
+pub fn encode_to_bytes(codes: &[i32]) -> Vec<u8> {
+    let enc = encode(codes);
+    let mut out = Vec::with_capacity(enc.byte_size());
+    enc.write_to(&mut out);
+    out
+}
+
+/// Convenience: decode from bytes, returning (codes, bytes consumed).
+pub fn decode_from_bytes(buf: &[u8]) -> anyhow::Result<(Vec<i32>, usize)> {
+    let (enc, used) = Encoded::read_from(buf)?;
+    Ok((decode(&enc)?, used))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_simple() {
+        let codes = vec![0, 0, 0, 1, -1, 0, 2, 0, 0, -1];
+        let enc = encode(&codes);
+        assert_eq!(decode(&enc).unwrap(), codes);
+    }
+
+    #[test]
+    fn roundtrip_single_symbol() {
+        let codes = vec![5; 1000];
+        let enc = encode(&codes);
+        assert_eq!(decode(&enc).unwrap(), codes);
+        // 1000 identical symbols should compress massively.
+        assert!(enc.byte_size() < 200, "size={}", enc.byte_size());
+    }
+
+    #[test]
+    fn roundtrip_empty() {
+        let enc = encode(&[]);
+        assert_eq!(decode(&enc).unwrap(), Vec::<i32>::new());
+    }
+
+    #[test]
+    fn skewed_stream_beats_raw() {
+        let mut rng = Rng::new(3);
+        let codes: Vec<i32> = (0..100_000)
+            .map(|_| {
+                let g = rng.gauss() * 1.5;
+                g.round() as i32
+            })
+            .collect();
+        let enc = encode(&codes);
+        let raw = codes.len() * 4;
+        assert!(enc.byte_size() < raw / 4, "huffman {} vs raw {}", enc.byte_size(), raw);
+        assert_eq!(decode(&enc).unwrap(), codes);
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let codes = vec![3, -7, 3, 3, 0, 0, 12345, -1];
+        let bytes = encode_to_bytes(&codes);
+        let (got, used) = decode_from_bytes(&bytes).unwrap();
+        assert_eq!(got, codes);
+        assert_eq!(used, bytes.len());
+    }
+
+    #[test]
+    fn truncated_stream_errors() {
+        let codes = vec![1, 2, 3, 1, 2, 3, 1, 1, 1];
+        let bytes = encode_to_bytes(&codes);
+        assert!(decode_from_bytes(&bytes[..bytes.len() / 2]).is_err() || bytes.len() < 2);
+    }
+
+    #[test]
+    fn property_roundtrip_random_streams() {
+        prop::check("huffman roundtrip", 100, |rng| {
+            let n = prop::arb_len(rng, 5000);
+            let spread = 1 + rng.next_below(1000) as i32;
+            let codes: Vec<i32> =
+                (0..n).map(|_| rng.next_below(spread as usize * 2) as i32 - spread).collect();
+            let bytes = encode_to_bytes(&codes);
+            let (got, used) = decode_from_bytes(&bytes).map_err(|e| e.to_string())?;
+            if got != codes {
+                return Err("mismatch".into());
+            }
+            if used != bytes.len() {
+                return Err(format!("used {used} != len {}", bytes.len()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn includes_escape_marker_symbol() {
+        let codes = vec![i32::MIN, 0, 0, i32::MIN, 7];
+        let enc = encode(&codes);
+        assert_eq!(decode(&enc).unwrap(), codes);
+    }
+}

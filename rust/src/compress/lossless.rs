@@ -1,0 +1,151 @@
+//! Stage 4: the lossless backend applied to the entropy-coded stream.
+//! The paper uses "Zstd or Blosc"; we default to real Zstd (vendored
+//! `zstd` crate), with Deflate (`flate2`) and the from-scratch LZ77
+//! ([`super::lz`]) available for the backend ablation, plus `None` for
+//! measuring the entropy stage in isolation.
+
+use std::io::{Read, Write};
+
+/// Which general-purpose compressor closes the pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Zstandard at the given level (paper default; level 3 ≈ zstd CLI default).
+    Zstd(i32),
+    /// DEFLATE via flate2.
+    Deflate,
+    /// The from-scratch LZ77 in `compress::lz`.
+    OwnLz,
+    /// Identity (ablation / debugging).
+    None,
+}
+
+impl Default for Backend {
+    fn default() -> Self {
+        Backend::Zstd(3)
+    }
+}
+
+impl Backend {
+    pub fn from_name(s: &str) -> Option<Backend> {
+        Some(match s {
+            "zstd" => Backend::Zstd(3),
+            "deflate" => Backend::Deflate,
+            "ownlz" | "lz" => Backend::OwnLz,
+            "none" => Backend::None,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Zstd(_) => "zstd",
+            Backend::Deflate => "deflate",
+            Backend::OwnLz => "ownlz",
+            Backend::None => "none",
+        }
+    }
+
+    fn tag(&self) -> u8 {
+        match self {
+            Backend::Zstd(_) => 1,
+            Backend::Deflate => 2,
+            Backend::OwnLz => 3,
+            Backend::None => 0,
+        }
+    }
+
+    /// Compress `data`, prefixing a 1-byte backend tag so decompression is
+    /// self-describing.
+    pub fn compress(&self, data: &[u8]) -> anyhow::Result<Vec<u8>> {
+        let mut out = vec![self.tag()];
+        match self {
+            Backend::Zstd(level) => {
+                let body = zstd::stream::encode_all(data, *level)?;
+                out.extend_from_slice(&body);
+            }
+            Backend::Deflate => {
+                let mut enc =
+                    flate2::write::DeflateEncoder::new(&mut out, flate2::Compression::default());
+                enc.write_all(data)?;
+                enc.finish()?;
+            }
+            Backend::OwnLz => {
+                out.extend_from_slice(&super::lz::compress(data));
+            }
+            Backend::None => {
+                out.extend_from_slice(data);
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Decompress a tagged stream produced by [`Backend::compress`].
+pub fn decompress(data: &[u8]) -> anyhow::Result<Vec<u8>> {
+    let (tag, body) = data.split_first().ok_or_else(|| anyhow::anyhow!("empty lossless blob"))?;
+    match tag {
+        0 => Ok(body.to_vec()),
+        1 => Ok(zstd::stream::decode_all(body)?),
+        2 => {
+            let mut dec = flate2::read::DeflateDecoder::new(body);
+            let mut out = Vec::new();
+            dec.read_to_end(&mut out)?;
+            Ok(out)
+        }
+        3 => super::lz::decompress(body),
+        t => anyhow::bail!("unknown lossless backend tag {t}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<u8> {
+        let mut v = Vec::new();
+        for i in 0..10_000u32 {
+            v.extend_from_slice(&(i % 100).to_le_bytes());
+        }
+        v
+    }
+
+    #[test]
+    fn all_backends_roundtrip() {
+        let data = sample();
+        for b in [Backend::Zstd(3), Backend::Deflate, Backend::OwnLz, Backend::None] {
+            let c = b.compress(&data).unwrap();
+            let d = decompress(&c).unwrap();
+            assert_eq!(d, data, "backend {}", b.name());
+        }
+    }
+
+    #[test]
+    fn compressing_backends_shrink_redundant_data() {
+        let data = sample();
+        for b in [Backend::Zstd(3), Backend::Deflate, Backend::OwnLz] {
+            let c = b.compress(&data).unwrap();
+            assert!(c.len() < data.len() / 2, "backend {} got {}", b.name(), c.len());
+        }
+    }
+
+    #[test]
+    fn empty_roundtrip() {
+        for b in [Backend::Zstd(3), Backend::Deflate, Backend::OwnLz, Backend::None] {
+            let c = b.compress(&[]).unwrap();
+            assert_eq!(decompress(&c).unwrap(), Vec::<u8>::new());
+        }
+    }
+
+    #[test]
+    fn name_parse_roundtrip() {
+        for b in [Backend::Zstd(3), Backend::Deflate, Backend::OwnLz, Backend::None] {
+            assert_eq!(Backend::from_name(b.name()).unwrap().name(), b.name());
+        }
+    }
+
+    #[test]
+    fn unknown_tag_errors() {
+        assert!(decompress(&[9, 1, 2, 3]).is_err());
+        assert!(decompress(&[]).is_err());
+    }
+}

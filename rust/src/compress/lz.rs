@@ -1,0 +1,236 @@
+//! A from-scratch LZ77 (LZSS-style) byte compressor with a hash-chain
+//! match finder — the "own" lossless backend used for ablating the Zstd
+//! stage (DESIGN.md §3). Token format:
+//!
+//! ```text
+//! token   := literal_run | match
+//! literal := 0x00 varint(len) bytes[len]
+//! match   := 0x01 varint(len) varint(dist)      (len >= MIN_MATCH)
+//! ```
+
+const MIN_MATCH: usize = 4;
+const MAX_MATCH: usize = 255 + MIN_MATCH;
+const WINDOW: usize = 1 << 16;
+const HASH_BITS: usize = 15;
+const MAX_CHAIN: usize = 32;
+
+fn write_varint(out: &mut Vec<u8>, mut v: usize) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            break;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+fn read_varint(buf: &[u8], pos: &mut usize) -> anyhow::Result<usize> {
+    let mut v = 0usize;
+    let mut shift = 0;
+    loop {
+        let b = *buf.get(*pos).ok_or_else(|| anyhow::anyhow!("varint underrun"))?;
+        *pos += 1;
+        v |= ((b & 0x7f) as usize) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+        if shift > 56 {
+            anyhow::bail!("varint too long");
+        }
+    }
+}
+
+#[inline]
+fn hash4(buf: &[u8], i: usize) -> usize {
+    let v = u32::from_le_bytes([buf[i], buf[i + 1], buf[i + 2], buf[i + 3]]);
+    (v.wrapping_mul(2654435761) >> (32 - HASH_BITS)) as usize
+}
+
+/// Compress `input` with LZ77. Always succeeds; incompressible data grows
+/// by ~1/128 from literal-run headers.
+pub fn compress(input: &[u8]) -> Vec<u8> {
+    let n = input.len();
+    let mut out = Vec::with_capacity(n / 2 + 16);
+    write_varint(&mut out, n);
+    if n == 0 {
+        return out;
+    }
+    let mut head = vec![usize::MAX; 1 << HASH_BITS];
+    let mut prev = vec![usize::MAX; n];
+    let mut i = 0usize;
+    let mut lit_start = 0usize;
+
+    let flush_literals = |out: &mut Vec<u8>, from: usize, to: usize| {
+        let mut s = from;
+        while s < to {
+            let run = (to - s).min(1 << 20);
+            out.push(0x00);
+            write_varint(out, run);
+            out.extend_from_slice(&input[s..s + run]);
+            s += run;
+        }
+    };
+
+    while i < n {
+        let mut best_len = 0usize;
+        let mut best_dist = 0usize;
+        if i + MIN_MATCH <= n {
+            let h = hash4(input, i);
+            let old_head = head[h];
+            let mut cand = old_head;
+            let mut chain = 0;
+            while cand != usize::MAX && chain < MAX_CHAIN && i - cand <= WINDOW {
+                // Extend match.
+                let max_len = (n - i).min(MAX_MATCH);
+                let mut l = 0usize;
+                while l < max_len && input[cand + l] == input[i + l] {
+                    l += 1;
+                }
+                if l > best_len {
+                    best_len = l;
+                    best_dist = i - cand;
+                    if l >= MAX_MATCH {
+                        break;
+                    }
+                }
+                cand = prev[cand];
+                chain += 1;
+            }
+            prev[i] = old_head;
+            head[h] = i;
+        }
+        if best_len >= MIN_MATCH {
+            flush_literals(&mut out, lit_start, i);
+            out.push(0x01);
+            write_varint(&mut out, best_len);
+            write_varint(&mut out, best_dist);
+            // Insert hash entries inside the match (sparse, every pos).
+            let end = (i + best_len).min(n.saturating_sub(MIN_MATCH));
+            let mut j = i + 1;
+            while j < end {
+                let h = hash4(input, j);
+                prev[j] = head[h];
+                head[h] = j;
+                j += 1;
+            }
+            i += best_len;
+            lit_start = i;
+        } else {
+            i += 1;
+        }
+    }
+    flush_literals(&mut out, lit_start, n);
+    out
+}
+
+/// Decompress an LZ77 stream produced by [`compress`].
+pub fn decompress(buf: &[u8]) -> anyhow::Result<Vec<u8>> {
+    let mut pos = 0usize;
+    let n = read_varint(buf, &mut pos)?;
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        let tag = *buf.get(pos).ok_or_else(|| anyhow::anyhow!("token underrun"))?;
+        pos += 1;
+        match tag {
+            0x00 => {
+                let len = read_varint(buf, &mut pos)?;
+                if pos + len > buf.len() || out.len() + len > n {
+                    anyhow::bail!("literal overrun");
+                }
+                out.extend_from_slice(&buf[pos..pos + len]);
+                pos += len;
+            }
+            0x01 => {
+                let len = read_varint(buf, &mut pos)?;
+                let dist = read_varint(buf, &mut pos)?;
+                if dist == 0 || dist > out.len() || out.len() + len > n {
+                    anyhow::bail!("bad match dist={dist} len={len} at {}", out.len());
+                }
+                let start = out.len() - dist;
+                for k in 0..len {
+                    let b = out[start + k];
+                    out.push(b);
+                }
+            }
+            t => anyhow::bail!("bad token {t}"),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn roundtrip_text() {
+        let data = b"the quick brown fox jumps over the lazy dog the quick brown fox".to_vec();
+        let c = compress(&data);
+        assert_eq!(decompress(&c).unwrap(), data);
+        assert!(c.len() < data.len());
+    }
+
+    #[test]
+    fn roundtrip_empty_and_tiny() {
+        for data in [vec![], vec![42u8], vec![1, 2, 3]] {
+            let c = compress(&data);
+            assert_eq!(decompress(&c).unwrap(), data);
+        }
+    }
+
+    #[test]
+    fn repetitive_compresses_well() {
+        let data = vec![7u8; 100_000];
+        let c = compress(&data);
+        assert!(c.len() < 2000, "len={}", c.len());
+        assert_eq!(decompress(&c).unwrap(), data);
+    }
+
+    #[test]
+    fn overlapping_match() {
+        // "abcabcabc..." forces dist < len copies.
+        let data: Vec<u8> = (0..1000).map(|i| b"abc"[i % 3]).collect();
+        let c = compress(&data);
+        assert_eq!(decompress(&c).unwrap(), data);
+    }
+
+    #[test]
+    fn property_roundtrip_random() {
+        prop::check("lz roundtrip", 60, |rng| {
+            let n = prop::arb_len(rng, 20_000);
+            // Mix of random and repetitive segments.
+            let mut data = Vec::with_capacity(n);
+            while data.len() < n {
+                if rng.chance(0.5) {
+                    let b = rng.next_below(256) as u8;
+                    let run = 1 + rng.next_below(100);
+                    data.extend(std::iter::repeat(b).take(run.min(n - data.len())));
+                } else {
+                    data.push(rng.next_below(256) as u8);
+                }
+            }
+            let c = compress(&data);
+            let d = decompress(&c).map_err(|e| e.to_string())?;
+            if d != data {
+                return Err("mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn corrupt_stream_errors_not_panics() {
+        let data = b"hello world hello world hello world".to_vec();
+        let mut c = compress(&data);
+        if c.len() > 4 {
+            let idx = c.len() - 2;
+            c[idx] = 0xFF;
+            let _ = decompress(&c); // must not panic
+        }
+        let _ = decompress(&[0x80, 0x80, 0x80]); // bad varint
+    }
+}

@@ -1,0 +1,73 @@
+//! The paper's contribution: a gradient-aware error-bounded lossy
+//! compressor (EBLC) following the standard four-stage pipeline
+//! (prediction → quantization → entropy coding → lossless), with the
+//! prediction stage replaced by the cross-round magnitude predictor
+//! (Alg. 1) and the oscillation / kernel-consistency sign predictor
+//! (Alg. 2 + the Fig. 8 two-level bitmap).
+
+pub mod autotune;
+pub mod blob;
+pub mod fused;
+pub mod huffman;
+pub mod lossless;
+pub mod lz;
+pub mod pipeline;
+pub mod predictor;
+pub mod quant;
+pub mod state;
+
+use crate::tensor::{LayerMeta, ModelGrad};
+
+/// A round-stateful gradient codec. The compressor side lives on the
+/// client, the decompressor side on the server; both mutate internal
+/// predictor state every round and must stay synchronized through the
+/// payload alone (paper §4.1).
+pub trait GradientCodec: Send {
+    /// Compress one round's gradients, updating internal state to the
+    /// reconstructed values.
+    fn compress(&mut self, grads: &ModelGrad) -> crate::Result<Vec<u8>>;
+
+    /// Decompress one round's payload, updating internal state.
+    fn decompress(&mut self, payload: &[u8], metas: &[LayerMeta]) -> crate::Result<ModelGrad>;
+
+    /// Human-readable codec name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Reset all cross-round state (new training run).
+    fn reset(&mut self);
+}
+
+/// Compression-ratio bookkeeping shared by benches and the FL metrics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CompressionStats {
+    pub raw_bytes: usize,
+    pub compressed_bytes: usize,
+}
+
+impl CompressionStats {
+    pub fn ratio(&self) -> f64 {
+        if self.compressed_bytes == 0 {
+            0.0
+        } else {
+            self.raw_bytes as f64 / self.compressed_bytes as f64
+        }
+    }
+    pub fn add(&mut self, raw: usize, compressed: usize) {
+        self.raw_bytes += raw;
+        self.compressed_bytes += compressed;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ratio() {
+        let mut s = CompressionStats::default();
+        s.add(100, 10);
+        s.add(100, 10);
+        assert!((s.ratio() - 10.0).abs() < 1e-12);
+        assert_eq!(CompressionStats::default().ratio(), 0.0);
+    }
+}

@@ -1,0 +1,530 @@
+//! The complete FedGEC codec — paper Algorithms 3 (client) and 4 (server).
+//!
+//! Per layer: small tensors (`numel ≤ T_LOSSY`) are stored losslessly;
+//! large tensors run the four-stage lossy pipeline with the gradient-aware
+//! predictor. The per-layer payload bundles `(μ_curr, σ_curr)`, the sign
+//! side-info (flip bit or two-level bitmap), the Huffman-coded residual
+//! codes and the escape values, and is closed by the lossless backend —
+//! exactly the structure of Alg. 3 lines 6-16.
+//!
+//! The predict stage can run on the native fused path
+//! ([`crate::compress::fused`]) or through a pluggable
+//! [`PredictBackend`] (the PJRT/HLO engine in `crate::runtime` that
+//! executes the Pallas kernel's lowering).
+
+use super::blob::{f32s_to_bytes, bytes_to_f32s, BlobReader, BlobWriter};
+use super::fused::{fused_decode, fused_encode, FusedEncodeOut, FusedParams};
+use super::huffman;
+use super::lossless::{self, Backend};
+use super::predictor::sign::{predict_signs, reconstruct_signs, SignMeta, SignMode, SignStats};
+use super::quant::{self, ErrorBound, Quantized};
+use super::state::CodecState;
+use super::GradientCodec;
+use crate::tensor::{LayerGrad, LayerMeta, ModelGrad};
+use crate::util::stats;
+
+/// Tunable knobs of the codec (paper Alg. 3 parameter list).
+#[derive(Debug, Clone)]
+pub struct FedgecConfig {
+    /// EMA decay factor β (paper α in Alg. 3; default 0.9).
+    pub beta: f32,
+    /// Kernel sign-consistency threshold τ (default 0.5, §5.4).
+    pub tau: f64,
+    /// Full-batch GD flag: oscillation sign mode instead of kernel mode.
+    pub full_batch: bool,
+    /// Error bound (ABS or REL).
+    pub error_bound: ErrorBound,
+    /// Layers with `numel ≤ t_lossy` are stored losslessly (Alg. 3 line 3).
+    pub t_lossy: usize,
+    /// Stage-4 lossless backend.
+    pub backend: Backend,
+    /// Auto-tune τ (client-side controller) and β (deterministic
+    /// history-derived schedule) — the paper's §6 extension. See
+    /// [`super::autotune`].
+    pub autotune: bool,
+}
+
+impl Default for FedgecConfig {
+    fn default() -> Self {
+        FedgecConfig {
+            beta: 0.9,
+            tau: 0.5,
+            full_batch: false,
+            error_bound: ErrorBound::Rel(1e-2),
+            t_lossy: 1024,
+            backend: Backend::default(),
+            autotune: false,
+        }
+    }
+}
+
+/// Pluggable predict-stage engine (see module docs). `memory` is updated
+/// in place; returns `ĝ = S ⊙ â`.
+pub trait PredictBackend: Send {
+    fn predict(
+        &mut self,
+        prev_abs: &[f32],
+        memory: &mut [f32],
+        signs: &[f32],
+        p: &FusedParams,
+    ) -> anyhow::Result<Vec<f32>>;
+}
+
+/// Per-layer report from the last compressed/decompressed round.
+#[derive(Debug, Clone, Default)]
+pub struct LayerReport {
+    pub name: String,
+    pub raw_bytes: usize,
+    pub compressed_bytes: usize,
+    pub lossy: bool,
+    pub sign_stats: SignStats,
+    pub sign_meta_bytes: usize,
+    pub entropy_bytes: usize,
+    pub escape_count: usize,
+}
+
+/// The FedGEC codec: symmetric client/server object implementing
+/// [`GradientCodec`].
+pub struct FedgecCodec {
+    pub cfg: FedgecConfig,
+    pub state: CodecState,
+    /// Optional PJRT/HLO predict engine; `None` ⇒ native fused path.
+    pub engine: Option<Box<dyn PredictBackend>>,
+    /// Reports from the most recent round.
+    pub last_reports: Vec<LayerReport>,
+    /// Per-layer τ controllers (client side, active when cfg.autotune).
+    pub tau_ctrl: Vec<super::autotune::TauController>,
+}
+
+impl FedgecCodec {
+    pub fn new(cfg: FedgecConfig) -> Self {
+        FedgecCodec {
+            cfg,
+            state: CodecState::default(),
+            engine: None,
+            last_reports: Vec::new(),
+            tau_ctrl: Vec::new(),
+        }
+    }
+
+    pub fn with_engine(cfg: FedgecConfig, engine: Box<dyn PredictBackend>) -> Self {
+        FedgecCodec {
+            cfg,
+            state: CodecState::default(),
+            engine: Some(engine),
+            last_reports: Vec::new(),
+            tau_ctrl: Vec::new(),
+        }
+    }
+
+    fn sign_mode(&mut self, idx: usize) -> SignMode {
+        if self.cfg.full_batch {
+            SignMode::FullBatch
+        } else if self.cfg.autotune {
+            while self.tau_ctrl.len() <= idx {
+                let mut c = super::autotune::TauController::default();
+                c.tau = self.cfg.tau;
+                self.tau_ctrl.push(c);
+            }
+            SignMode::MiniBatch { tau: self.tau_ctrl[idx].tau }
+        } else {
+            SignMode::MiniBatch { tau: self.cfg.tau }
+        }
+    }
+
+    /// The effective β for layer `idx` this round: config value, or the
+    /// deterministic history-derived schedule when auto-tuning (identical
+    /// on both sides — derived from reconstructed data only).
+    fn effective_beta(&self, idx: usize) -> f32 {
+        if !self.cfg.autotune {
+            return self.cfg.beta;
+        }
+        let st = &self.state.layers[idx];
+        match (&st.prev_abs, &st.prev_prev_abs) {
+            (Some(a), Some(b)) => super::autotune::beta_from_history(a, b),
+            _ => self.cfg.beta,
+        }
+    }
+
+    /// Compress one layer, returning the pre-lossless section bytes.
+    fn compress_layer(&mut self, idx: usize, layer: &LayerGrad) -> crate::Result<(Vec<u8>, LayerReport)> {
+        let grad = &layer.data;
+        let n = grad.len();
+        let mut report = LayerReport {
+            name: layer.meta.name.clone(),
+            raw_bytes: n * 4,
+            ..Default::default()
+        };
+        let mut w = BlobWriter::new();
+
+        if n <= self.cfg.t_lossy {
+            // Alg. 3 line 3-4: lossless-only small layer.
+            w.put_u8(0);
+            w.put_bytes(&f32s_to_bytes(grad));
+            // Small layers bypass predictor state entirely.
+            return Ok((w.into_bytes(), report));
+        }
+        report.lossy = true;
+
+        // --- Stage 1a: sign prediction (Alg. 3 line 10). ---
+        let mode = self.sign_mode(idx);
+        let beta = self.effective_beta(idx);
+        let st = &mut self.state.layers[idx];
+        let (signs, sign_meta, sign_stats) = predict_signs(
+            grad,
+            &layer.meta.kind,
+            mode,
+            st.prev_recon.as_deref(),
+            st.prev_sign.as_deref(),
+        );
+        report.sign_stats = sign_stats;
+        if self.cfg.autotune && !self.cfg.full_batch && sign_stats.kernels_total > 0 {
+            self.tau_ctrl[idx]
+                .update(sign_stats.mismatch_rate(), sign_stats.prediction_ratio());
+        }
+        let st = &mut self.state.layers[idx];
+
+        // --- Stage 1b+2: magnitude prediction + quantization. ---
+        let (mu_curr, sigma_curr) = stats::mean_std_abs(grad);
+        let (lo, hi) = stats::finite_min_max(grad);
+        let delta = self.cfg.error_bound.resolve(lo, hi);
+        let empty: [f32; 0] = [];
+        let prev_abs: &[f32] = st.prev_abs.as_deref().unwrap_or(&empty);
+        let (mu_prev, sigma_prev) = stats::mean_std(prev_abs);
+        let p = FusedParams {
+            beta,
+            mu_curr,
+            sigma_curr,
+            mu_prev,
+            sigma_prev,
+            two_delta: (2.0 * delta) as f32,
+            delta: delta as f32,
+        };
+
+        let mut out = FusedEncodeOut::default();
+        match &mut self.engine {
+            None => {
+                fused_encode(grad, prev_abs, &mut st.memory, &signs, &p, &mut out);
+            }
+            Some(engine) => {
+                if !prev_abs.is_empty() && st.memory.len() != n {
+                    st.memory.clear();
+                    st.memory.resize(n, 0.0);
+                }
+                let ghat = if prev_abs.is_empty() {
+                    vec![0.0; n]
+                } else {
+                    engine.predict(prev_abs, &mut st.memory, &signs, &p)?
+                };
+                let mut q = Quantized::default();
+                quant::quantize(grad, &ghat, delta, &mut q, &mut out.recon);
+                out.codes = q.codes;
+                out.escapes = q.escapes;
+            }
+        }
+        report.escape_count = out.escapes.len();
+
+        // --- Stage 3: entropy coding. ---
+        let entropy = huffman::encode_to_bytes(&out.codes);
+        report.entropy_bytes = entropy.len();
+        let sign_bytes = sign_meta.encode();
+        report.sign_meta_bytes = sign_bytes.len();
+
+        // --- Layer section (Alg. 3 line 15). ---
+        w.put_u8(1);
+        w.put_u32(n as u32);
+        w.put_f32(mu_curr);
+        w.put_f32(sigma_curr);
+        w.put_f64(delta);
+        w.put_bytes(&sign_bytes);
+        w.put_bytes(&entropy);
+        w.put_f32_slice(&out.escapes);
+
+        // Update local state with the reconstruction (client mirror).
+        st.absorb(&out.recon);
+        Ok((w.into_bytes(), report))
+    }
+
+    /// Decompress one layer section (post-lossless bytes).
+    fn decompress_layer(
+        &mut self,
+        idx: usize,
+        meta: &LayerMeta,
+        section: &[u8],
+    ) -> crate::Result<(Vec<f32>, LayerReport)> {
+        let mut r = BlobReader::new(section);
+        let tag = r.get_u8()?;
+        let mut report = LayerReport { name: meta.name.clone(), ..Default::default() };
+        if tag == 0 {
+            let data = bytes_to_f32s(r.get_bytes()?)?;
+            report.raw_bytes = data.len() * 4;
+            return Ok((data, report));
+        }
+        report.lossy = true;
+        let n = r.get_u32()? as usize;
+        if n != meta.numel {
+            anyhow::bail!("layer {}: payload numel {} != meta {}", meta.name, n, meta.numel);
+        }
+        report.raw_bytes = n * 4;
+        let mu_curr = r.get_f32()?;
+        let sigma_curr = r.get_f32()?;
+        let delta = r.get_f64()?;
+        let sign_meta = SignMeta::decode(r.get_bytes()?)?;
+        let (codes, _) = huffman::decode_from_bytes(r.get_bytes()?)?;
+        if codes.len() != n {
+            anyhow::bail!("layer {}: {} codes for {} elements", meta.name, codes.len(), n);
+        }
+        let escapes = r.get_f32_vec()?;
+
+        let beta = self.effective_beta(idx);
+        let st = &mut self.state.layers[idx];
+        let signs = reconstruct_signs(&sign_meta, n, &meta.kind, st.prev_sign.as_deref())?;
+        let empty: [f32; 0] = [];
+        let prev_abs: &[f32] = st.prev_abs.as_deref().unwrap_or(&empty);
+        let (mu_prev, sigma_prev) = stats::mean_std(prev_abs);
+        let p = FusedParams {
+            beta,
+            mu_curr,
+            sigma_curr,
+            mu_prev,
+            sigma_prev,
+            two_delta: (2.0 * delta) as f32,
+            delta: delta as f32,
+        };
+        let mut recon = Vec::new();
+        match &mut self.engine {
+            None => {
+                fused_decode(&codes, &escapes, prev_abs, &mut st.memory, &signs, &p, &mut recon)?;
+            }
+            Some(engine) => {
+                if !prev_abs.is_empty() && st.memory.len() != n {
+                    st.memory.clear();
+                    st.memory.resize(n, 0.0);
+                }
+                let ghat = if prev_abs.is_empty() {
+                    vec![0.0; n]
+                } else {
+                    engine.predict(prev_abs, &mut st.memory, &signs, &p)?
+                };
+                let q = Quantized { codes, escapes };
+                quant::dequantize(&q, &ghat, delta, &mut recon);
+            }
+        }
+        st.absorb(&recon);
+        Ok((recon, report))
+    }
+}
+
+impl GradientCodec for FedgecCodec {
+    fn compress(&mut self, grads: &ModelGrad) -> crate::Result<Vec<u8>> {
+        self.state.ensure(grads.layers.len());
+        let mut top = BlobWriter::new();
+        top.put_u32(grads.layers.len() as u32);
+        let mut reports = Vec::with_capacity(grads.layers.len());
+        for (idx, layer) in grads.layers.iter().enumerate() {
+            let (section, mut report) = self.compress_layer(idx, layer)?;
+            let closed = self.cfg.backend.compress(&section)?;
+            report.compressed_bytes = closed.len();
+            reports.push(report);
+            top.put_bytes(&closed);
+        }
+        self.last_reports = reports;
+        Ok(top.into_bytes())
+    }
+
+    fn decompress(&mut self, payload: &[u8], metas: &[LayerMeta]) -> crate::Result<ModelGrad> {
+        let mut r = BlobReader::new(payload);
+        let n_layers = r.get_u32()? as usize;
+        if n_layers != metas.len() {
+            anyhow::bail!("payload has {} layers, expected {}", n_layers, metas.len());
+        }
+        self.state.ensure(n_layers);
+        let mut out = ModelGrad::default();
+        let mut reports = Vec::with_capacity(n_layers);
+        for (idx, meta) in metas.iter().enumerate() {
+            let closed = r.get_bytes()?;
+            let section = lossless::decompress(closed)?;
+            let (data, mut report) = self.decompress_layer(idx, meta, &section)?;
+            report.compressed_bytes = closed.len() + 4;
+            reports.push(report);
+            out.layers.push(LayerGrad::new(meta.clone(), data));
+        }
+        self.last_reports = reports;
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "fedgec"
+    }
+
+    fn reset(&mut self) {
+        self.state.reset();
+        self.last_reports.clear();
+        self.tau_ctrl.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::LayerMeta;
+    use crate::util::rng::Rng;
+
+    fn make_grads(rng: &mut Rng, scale: f32) -> ModelGrad {
+        // One conv layer with dominant-sign kernels + one dense + one bias.
+        let t = 9;
+        let n_kernels = 128;
+        let mut conv = Vec::with_capacity(n_kernels * t);
+        for _ in 0..n_kernels {
+            let dom: f32 = if rng.chance(0.5) { 1.0 } else { -1.0 };
+            for _ in 0..t {
+                let flip = rng.chance(0.12);
+                conv.push(dom * if flip { -1.0 } else { 1.0 } * (0.2 + rng.next_f32()) * scale);
+            }
+        }
+        let dense: Vec<f32> = (0..2048).map(|_| rng.normal_f32(0.0, scale)).collect();
+        let bias: Vec<f32> = (0..16).map(|_| rng.normal_f32(0.0, scale)).collect();
+        ModelGrad {
+            layers: vec![
+                LayerGrad::new(LayerMeta::conv("conv", n_kernels, 1, 3, 3), conv),
+                LayerGrad::new(LayerMeta::dense("dense", 32, 64), dense),
+                LayerGrad::new(LayerMeta::other("bias", 16), bias),
+            ],
+        }
+    }
+
+    fn metas(g: &ModelGrad) -> Vec<LayerMeta> {
+        g.layers.iter().map(|l| l.meta.clone()).collect()
+    }
+
+    #[test]
+    fn roundtrip_respects_error_bound_over_rounds() {
+        let mut rng = Rng::new(1);
+        let mut client = FedgecCodec::new(FedgecConfig::default());
+        let mut server = FedgecCodec::new(FedgecConfig::default());
+        for round in 0..5 {
+            let scale = 1.0 / (1.0 + round as f32 * 0.3);
+            let grads = make_grads(&mut rng, scale);
+            let payload = client.compress(&grads).unwrap();
+            let recon = server.decompress(&payload, &metas(&grads)).unwrap();
+            // Bias layer (small) must be exact.
+            assert_eq!(recon.layers[2].data, grads.layers[2].data);
+            // Lossy layers within REL bound.
+            for li in 0..2 {
+                let (lo, hi) = stats::finite_min_max(&grads.layers[li].data);
+                let delta = FedgecConfig::default().error_bound.resolve(lo, hi) as f32;
+                for (r, g) in recon.layers[li].data.iter().zip(&grads.layers[li].data) {
+                    assert!((r - g).abs() <= delta * 1.0001, "round {round} layer {li}");
+                }
+            }
+            // Client/server states stay synchronized.
+            assert_eq!(client.state.fingerprint(), server.state.fingerprint());
+        }
+    }
+
+    #[test]
+    fn compresses_structured_gradients_well() {
+        let mut rng = Rng::new(2);
+        let mut client = FedgecCodec::new(FedgecConfig {
+            error_bound: ErrorBound::Rel(3e-2),
+            ..Default::default()
+        });
+        // Warm up two rounds so the predictor has history.
+        let mut ratio = 0.0;
+        for _ in 0..4 {
+            let grads = make_grads(&mut rng, 1.0);
+            let payload = client.compress(&grads).unwrap();
+            ratio = grads.byte_size() as f64 / payload.len() as f64;
+        }
+        assert!(ratio > 4.0, "expected CR > 4, got {ratio:.2}");
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut rng = Rng::new(3);
+        let mut c = FedgecCodec::new(FedgecConfig::default());
+        let g = make_grads(&mut rng, 1.0);
+        c.compress(&g).unwrap();
+        assert!(c.state.layers.iter().any(|l| l.prev_recon.is_some()));
+        c.reset();
+        assert!(c.state.layers.iter().all(|l| l.prev_recon.is_none()));
+    }
+
+    #[test]
+    fn wrong_meta_count_errors() {
+        let mut rng = Rng::new(4);
+        let mut c = FedgecCodec::new(FedgecConfig::default());
+        let g = make_grads(&mut rng, 1.0);
+        let payload = c.compress(&g).unwrap();
+        let mut s = FedgecCodec::new(FedgecConfig::default());
+        let bad_metas = &metas(&g)[..2];
+        assert!(s.decompress(&payload, bad_metas).is_err());
+    }
+
+    #[test]
+    fn full_batch_mode_roundtrips() {
+        let mut rng = Rng::new(5);
+        let cfg = FedgecConfig { full_batch: true, ..Default::default() };
+        let mut client = FedgecCodec::new(cfg.clone());
+        let mut server = FedgecCodec::new(cfg);
+        let base = make_grads(&mut rng, 1.0);
+        for round in 0..4 {
+            // Oscillating gradients: alternate global sign.
+            let mut g = base.clone();
+            let flip = if round % 2 == 0 { 1.0f32 } else { -1.0 };
+            for l in &mut g.layers {
+                for v in &mut l.data {
+                    *v *= flip * (1.0 + 0.05 * rng.gauss() as f32);
+                }
+            }
+            let payload = client.compress(&g).unwrap();
+            let recon = server.decompress(&payload, &metas(&g)).unwrap();
+            assert_eq!(client.state.fingerprint(), server.state.fingerprint());
+            let _ = recon;
+        }
+    }
+
+    #[test]
+    fn autotune_stays_synchronized_and_bounded() {
+        let mut rng = Rng::new(21);
+        let cfg = FedgecConfig { autotune: true, ..Default::default() };
+        let mut client = FedgecCodec::new(cfg.clone());
+        let mut server = FedgecCodec::new(cfg);
+        for round in 0..6 {
+            let grads = make_grads(&mut rng, 1.0 / (1.0 + round as f32 * 0.2));
+            let payload = client.compress(&grads).unwrap();
+            let recon = server.decompress(&payload, &metas(&grads)).unwrap();
+            // Error bound still holds under auto-tuned parameters.
+            for li in 0..2 {
+                let (lo, hi) = stats::finite_min_max(&grads.layers[li].data);
+                let delta = FedgecConfig::default().error_bound.resolve(lo, hi) as f32;
+                for (r, g) in recon.layers[li].data.iter().zip(&grads.layers[li].data) {
+                    assert!((r - g).abs() <= delta * 1.0001, "round {round}");
+                }
+            }
+            assert_eq!(
+                client.state.fingerprint(),
+                server.state.fingerprint(),
+                "autotune broke sync at round {round}"
+            );
+        }
+        // The controller actually moved (or at least exists) per layer.
+        assert!(!client.tau_ctrl.is_empty());
+        for c in &client.tau_ctrl {
+            assert!((c.min_tau..=c.max_tau).contains(&c.tau));
+        }
+    }
+
+    #[test]
+    fn corrupted_payload_errors_not_panics() {
+        let mut rng = Rng::new(6);
+        let mut c = FedgecCodec::new(FedgecConfig::default());
+        let g = make_grads(&mut rng, 1.0);
+        let mut payload = c.compress(&g).unwrap();
+        let mid = payload.len() / 2;
+        payload[mid] ^= 0xFF;
+        let mut s = FedgecCodec::new(FedgecConfig::default());
+        let _ = s.decompress(&payload, &metas(&g)); // any Err is fine; must not panic
+        let _ = s.decompress(&payload[..10], &metas(&g));
+    }
+}

@@ -1,0 +1,160 @@
+//! The two-level bitmap side channel (paper §4.4, Fig. 8).
+//!
+//! Level 1: one bit per kernel — is this kernel sign-predicted?
+//! Level 2: one bit per *predicted* kernel — dominant sign (1 = positive,
+//! 0 = negative). Level 2 is only as long as the popcount of level 1.
+//!
+//! The serialized bitmap is later swept into the lossless backend together
+//! with the entropy-coded residuals, exactly as the paper bundles it.
+
+use crate::util::bitio::{BitReader, BitWriter};
+
+/// Decoded two-level bitmap.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KernelBitmap {
+    /// Per-kernel: predicted?
+    pub predicted: Vec<bool>,
+    /// Per-predicted-kernel dominant sign: `true` = positive.
+    pub signs: Vec<bool>,
+}
+
+impl KernelBitmap {
+    /// Build from per-kernel decisions: `None` = unpredicted,
+    /// `Some(positive)` = predicted with that dominant sign.
+    pub fn from_decisions(decisions: &[Option<bool>]) -> Self {
+        let predicted: Vec<bool> = decisions.iter().map(|d| d.is_some()).collect();
+        let signs: Vec<bool> = decisions.iter().filter_map(|d| *d).collect();
+        KernelBitmap { predicted, signs }
+    }
+
+    /// Number of predicted kernels.
+    pub fn predicted_count(&self) -> usize {
+        self.signs.len()
+    }
+
+    /// Fraction of kernels predicted (the paper's "prediction ratio" P).
+    pub fn prediction_ratio(&self) -> f64 {
+        if self.predicted.is_empty() {
+            0.0
+        } else {
+            self.signs.len() as f64 / self.predicted.len() as f64
+        }
+    }
+
+    /// Serialize: `u32 n_kernels` + level-1 bits + level-2 bits.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&(self.predicted.len() as u32).to_le_bytes());
+        let mut w = BitWriter::new();
+        for &p in &self.predicted {
+            w.put_bit(p);
+        }
+        for &s in &self.signs {
+            w.put_bit(s);
+        }
+        out.extend_from_slice(&w.into_bytes());
+        out
+    }
+
+    /// Deserialize from the byte layout of [`encode`].
+    pub fn decode(buf: &[u8]) -> anyhow::Result<KernelBitmap> {
+        if buf.len() < 4 {
+            anyhow::bail!("bitmap too short");
+        }
+        let n = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+        let mut r = BitReader::new(&buf[4..]);
+        let mut predicted = Vec::with_capacity(n);
+        for _ in 0..n {
+            predicted.push(r.get_bit().ok_or_else(|| anyhow::anyhow!("level-1 underrun"))?);
+        }
+        let n_pred = predicted.iter().filter(|&&p| p).count();
+        let mut signs = Vec::with_capacity(n_pred);
+        for _ in 0..n_pred {
+            signs.push(r.get_bit().ok_or_else(|| anyhow::anyhow!("level-2 underrun"))?);
+        }
+        Ok(KernelBitmap { predicted, signs })
+    }
+
+    /// Expand to per-kernel decisions (inverse of `from_decisions`).
+    pub fn decisions(&self) -> Vec<Option<bool>> {
+        let mut signs = self.signs.iter();
+        self.predicted
+            .iter()
+            .map(|&p| if p { Some(*signs.next().expect("sign bit")) } else { None })
+            .collect()
+    }
+
+    /// Serialized size in bytes.
+    pub fn byte_size(&self) -> usize {
+        4 + (self.predicted.len() + self.signs.len()).div_ceil(8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn roundtrip_basic() {
+        let decisions = vec![Some(true), None, Some(false), Some(true), None];
+        let bm = KernelBitmap::from_decisions(&decisions);
+        assert_eq!(bm.predicted_count(), 3);
+        let bytes = bm.encode();
+        let got = KernelBitmap::decode(&bytes).unwrap();
+        assert_eq!(got, bm);
+        assert_eq!(got.decisions(), decisions);
+    }
+
+    #[test]
+    fn empty_bitmap() {
+        let bm = KernelBitmap::from_decisions(&[]);
+        let got = KernelBitmap::decode(&bm.encode()).unwrap();
+        assert_eq!(got.predicted_count(), 0);
+        assert_eq!(bm.prediction_ratio(), 0.0);
+    }
+
+    #[test]
+    fn overhead_formula_matches_paper_example() {
+        // Paper §4.4: fp32, K=3x3, P=0.6 -> bitmap ≈ (1+P)/(b·K) of raw
+        // before lossless. For 10_000 kernels of 9 elements:
+        let n_kernels = 10_000usize;
+        let decisions: Vec<Option<bool>> =
+            (0..n_kernels).map(|i| if i % 5 < 3 { Some(i % 2 == 0) } else { None }).collect();
+        let bm = KernelBitmap::from_decisions(&decisions);
+        let raw_bytes = n_kernels * 9 * 4;
+        let frac = bm.byte_size() as f64 / raw_bytes as f64;
+        let expect = (1.0 + 0.6) / (32.0 * 9.0); // ≈ 0.56%
+        assert!((frac - expect).abs() < 0.002, "frac={frac} expect={expect}");
+    }
+
+    #[test]
+    fn property_roundtrip_random() {
+        prop::check("bitmap roundtrip", 100, |rng| {
+            let n = prop::arb_len(rng, 3000);
+            let decisions: Vec<Option<bool>> = (0..n)
+                .map(|_| {
+                    if rng.chance(0.5) {
+                        Some(rng.chance(0.5))
+                    } else {
+                        None
+                    }
+                })
+                .collect();
+            let bm = KernelBitmap::from_decisions(&decisions);
+            let got = KernelBitmap::decode(&bm.encode()).map_err(|e| e.to_string())?;
+            if got.decisions() != decisions {
+                return Err("decision mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn truncated_decode_errors() {
+        let decisions = vec![Some(true); 100];
+        let bytes = KernelBitmap::from_decisions(&decisions).encode();
+        assert!(KernelBitmap::decode(&bytes[..5]).is_err());
+        assert!(KernelBitmap::decode(&[]).is_err());
+    }
+}

@@ -1,0 +1,299 @@
+//! Gradient **magnitude** predictor (paper Alg. 1).
+//!
+//! At epoch *t* the predictor sees only the *reconstructed* absolute
+//! gradient of the previous round `ã^(t-1)` (so client and server stay in
+//! lock-step) plus the current round's scalar statistics
+//! `(μ_curr, σ_curr)`, which travel in the payload:
+//!
+//! ```text
+//! z       = (ã^(t-1) − mean(ã^(t-1))) / std(ã^(t-1))     per-epoch normalize
+//! m'      = β·m + (1−β)·z                                EMA in normalized space
+//! â^(t)   = max(0, m'·σ_curr + μ_curr)                   de-normalize
+//! ```
+//!
+//! Normalization is what lets a single EMA track non-stationary gradient
+//! scales across epochs and layers (paper §4.2). The same math is
+//! implemented by the L1 Pallas kernel; [`crate::compress::fused`] keeps
+//! the two bit-identical by sharing scalar pre-computation.
+//!
+//! This module also implements the Table-1 ablation variants (Lorenzo,
+//! MA(3)/MA(5), AR(1), EMA without normalization).
+
+use crate::util::stats;
+
+/// Numerical floor for σ to avoid division blow-ups on constant tensors.
+pub const SIGMA_EPS: f32 = 1e-12;
+
+/// The production predictor: normalized EMA with per-layer memory.
+#[derive(Debug, Clone)]
+pub struct EmaNormPredictor {
+    /// Decay factor β in `m' = β·m + (1−β)·z`.
+    pub beta: f32,
+    /// Memory tensor `m`, same shape as the layer. `None` until round 2.
+    pub memory: Option<Vec<f32>>,
+}
+
+impl EmaNormPredictor {
+    pub fn new(beta: f32) -> Self {
+        EmaNormPredictor { beta, memory: None }
+    }
+
+    /// Predict the current magnitude tensor and update the memory.
+    ///
+    /// `prev_abs` is `|g̃^(t-1)|`; `mu_curr`/`sigma_curr` are the scalar
+    /// stats of the *current* absolute gradient (transmitted in the
+    /// payload). Returns zeros on the first round (no history yet — the
+    /// pipeline treats â=0 as "no prediction").
+    pub fn predict(&mut self, prev_abs: Option<&[f32]>, mu_curr: f32, sigma_curr: f32) -> Vec<f32> {
+        let prev_abs = match prev_abs {
+            Some(p) => p,
+            None => return Vec::new(), // round 1: no prediction
+        };
+        let n = prev_abs.len();
+        let (mu_prev, sigma_prev) = stats::mean_std(prev_abs);
+        let inv_sigma_prev = 1.0 / sigma_prev.max(SIGMA_EPS);
+        if self.memory.is_none() {
+            self.memory = Some(vec![0.0; n]);
+        }
+        let m = self.memory.as_mut().unwrap();
+        assert_eq!(m.len(), n, "layer size changed between rounds");
+        let mut out = Vec::with_capacity(n);
+        let beta = self.beta;
+        for i in 0..n {
+            let z = (prev_abs[i] - mu_prev) * inv_sigma_prev;
+            let mi = beta * m[i] + (1.0 - beta) * z;
+            m[i] = mi;
+            out.push((mi * sigma_curr + mu_curr).max(0.0));
+        }
+        out
+    }
+
+    pub fn reset(&mut self) {
+        self.memory = None;
+    }
+}
+
+/// Ablation variants of Table 1. All predict the current magnitude tensor
+/// from history of (reconstructed) magnitude tensors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MagnitudeVariant {
+    /// Lorenzo in time: â^(t) = ã^(t-1).
+    Lorenzo,
+    /// Moving average over a sliding window of w rounds.
+    MovingAverage(usize),
+    /// First-order autoregressive model with online-estimated φ.
+    Ar1,
+    /// EMA directly on raw magnitudes (no normalization).
+    EmaNoNorm,
+    /// The production predictor (Alg. 1).
+    EmaNorm,
+}
+
+impl MagnitudeVariant {
+    pub fn name(&self) -> String {
+        match self {
+            MagnitudeVariant::Lorenzo => "Lorenzo".into(),
+            MagnitudeVariant::MovingAverage(w) => format!("MA (w={w})"),
+            MagnitudeVariant::Ar1 => "AR(1)".into(),
+            MagnitudeVariant::EmaNoNorm => "EMA (No Norm)".into(),
+            MagnitudeVariant::EmaNorm => "EMA (Norm)".into(),
+        }
+    }
+}
+
+/// Stateful runner for any [`MagnitudeVariant`] — used by the Table-1
+/// ablation bench. Feed the *true* magnitude tensors round by round;
+/// `step` returns the prediction made *before* seeing the new tensor.
+pub struct VariantRunner {
+    variant: MagnitudeVariant,
+    beta: f32,
+    history: Vec<Vec<f32>>,
+    ema_norm: EmaNormPredictor,
+    ema_raw: Option<Vec<f32>>,
+    /// Online AR(1) sufficient statistics (lag-1 cross/auto products).
+    ar_num: f64,
+    ar_den: f64,
+}
+
+impl VariantRunner {
+    pub fn new(variant: MagnitudeVariant, beta: f32) -> Self {
+        VariantRunner {
+            variant,
+            beta,
+            history: Vec::new(),
+            ema_norm: EmaNormPredictor::new(beta),
+            ema_raw: None,
+            ar_num: 0.0,
+            ar_den: 0.0,
+        }
+    }
+
+    /// Predict the magnitude tensor for this round, then absorb the truth.
+    pub fn step(&mut self, truth_abs: &[f32]) -> Vec<f32> {
+        let n = truth_abs.len();
+        let pred = match self.variant {
+            MagnitudeVariant::Lorenzo => {
+                self.history.last().cloned().unwrap_or_else(|| vec![0.0; n])
+            }
+            MagnitudeVariant::MovingAverage(w) => {
+                if self.history.is_empty() {
+                    vec![0.0; n]
+                } else {
+                    let take = self.history.len().min(w);
+                    let slice = &self.history[self.history.len() - take..];
+                    let mut out = vec![0.0f32; n];
+                    for h in slice {
+                        for i in 0..n {
+                            out[i] += h[i];
+                        }
+                    }
+                    for v in &mut out {
+                        *v /= take as f32;
+                    }
+                    out
+                }
+            }
+            MagnitudeVariant::Ar1 => {
+                let phi = if self.ar_den > 0.0 {
+                    (self.ar_num / self.ar_den).clamp(-1.0, 1.0) as f32
+                } else {
+                    1.0
+                };
+                match self.history.last() {
+                    Some(prev) => prev.iter().map(|&x| phi * x).collect(),
+                    None => vec![0.0; n],
+                }
+            }
+            MagnitudeVariant::EmaNoNorm => match &self.ema_raw {
+                Some(m) => m.clone(),
+                None => vec![0.0; n],
+            },
+            MagnitudeVariant::EmaNorm => {
+                let (mu, sigma) = stats::mean_std(truth_abs);
+                let prev = self.history.last().map(|v| v.as_slice());
+                let p = self.ema_norm.predict(prev, mu, sigma);
+                if p.is_empty() {
+                    vec![0.0; n]
+                } else {
+                    p
+                }
+            }
+        };
+        // Absorb truth into state.
+        if let Some(prev) = self.history.last() {
+            for i in 0..n {
+                self.ar_num += (prev[i] as f64) * (truth_abs[i] as f64);
+                self.ar_den += (prev[i] as f64) * (prev[i] as f64);
+            }
+        }
+        match &mut self.ema_raw {
+            Some(m) => {
+                for i in 0..n {
+                    m[i] = self.beta * m[i] + (1.0 - self.beta) * truth_abs[i];
+                }
+            }
+            None => self.ema_raw = Some(truth_abs.to_vec()),
+        }
+        self.history.push(truth_abs.to_vec());
+        if self.history.len() > 8 {
+            self.history.remove(0);
+        }
+        pred
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn first_round_no_prediction() {
+        let mut p = EmaNormPredictor::new(0.9);
+        assert!(p.predict(None, 1.0, 0.5).is_empty());
+    }
+
+    #[test]
+    fn prediction_is_nonnegative() {
+        let mut p = EmaNormPredictor::new(0.5);
+        let prev = vec![0.1f32, 0.9, 0.0, 0.4];
+        let out = p.predict(Some(&prev), 0.01, 0.5);
+        assert!(out.iter().all(|&x| x >= 0.0));
+        assert_eq!(out.len(), prev.len());
+    }
+
+    #[test]
+    fn memory_update_matches_formula() {
+        let mut p = EmaNormPredictor::new(0.8);
+        let prev = vec![1.0f32, 2.0, 3.0, 4.0];
+        let (mu_p, sg_p) = stats::mean_std(&prev);
+        let out = p.predict(Some(&prev), 10.0, 2.0);
+        for i in 0..prev.len() {
+            let z = (prev[i] - mu_p) / sg_p.max(SIGMA_EPS);
+            let m = 0.2 * z; // memory starts at 0
+            let want = (m * 2.0 + 10.0).max(0.0);
+            assert!((out[i] - want).abs() < 1e-6, "i={i} out={} want={want}", out[i]);
+        }
+    }
+
+    #[test]
+    fn stationary_signal_converges() {
+        // For a constant normalized pattern, prediction should converge to it.
+        let mut p = EmaNormPredictor::new(0.5);
+        let pattern = vec![0.1f32, 0.2, 0.3, 0.8];
+        let (mu, sg) = stats::mean_std(&pattern);
+        let mut pred = Vec::new();
+        for _ in 0..30 {
+            pred = p.predict(Some(&pattern), mu, sg);
+        }
+        for (a, b) in pred.iter().zip(&pattern) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn constant_tensor_does_not_nan() {
+        let mut p = EmaNormPredictor::new(0.9);
+        let prev = vec![0.5f32; 16];
+        let out = p.predict(Some(&prev), 0.5, 0.0);
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+
+    /// The Table-1 ordering: on synthetic magnitude sequences with
+    /// non-stationary scale + stable normalized pattern, EMA(Norm) must
+    /// beat Lorenzo and EMA(NoNorm) on MSE — the paper's qualitative
+    /// claim.
+    #[test]
+    fn ema_norm_wins_on_nonstationary_sequences() {
+        let mut rng = Rng::new(42);
+        let n = 256;
+        let pattern: Vec<f32> = (0..n).map(|_| rng.uniform(0.2, 1.0) as f32).collect();
+        let rounds = 60;
+        let mut runners = [
+            VariantRunner::new(MagnitudeVariant::Lorenzo, 0.9),
+            VariantRunner::new(MagnitudeVariant::EmaNoNorm, 0.9),
+            VariantRunner::new(MagnitudeVariant::EmaNorm, 0.9),
+        ];
+        let mut errs = [0.0f64; 3];
+        for t in 0..rounds {
+            // Scale decays like real training, with strong round-to-round
+            // jitter — the non-stationarity that per-epoch normalization
+            // corrects (the EMA tracks a stationary pattern in z-space,
+            // while Lorenzo/EMA-raw absorb the full scale error).
+            let jitter = (0.35 * rng.gauss()).exp();
+            let scale = (jitter / (1.0 + 0.2 * t as f64)) as f32;
+            let truth: Vec<f32> = pattern
+                .iter()
+                .map(|&p| (p * scale * (1.0 + 0.1 * rng.gauss() as f32)).abs())
+                .collect();
+            for (k, r) in runners.iter_mut().enumerate() {
+                let pred = r.step(&truth);
+                if t > 3 {
+                    errs[k] += stats::mse(&pred, &truth);
+                }
+            }
+        }
+        assert!(errs[2] < errs[0], "EMA(Norm) {} vs Lorenzo {}", errs[2], errs[0]);
+        assert!(errs[2] < errs[1], "EMA(Norm) {} vs EMA(NoNorm) {}", errs[2], errs[1]);
+    }
+}

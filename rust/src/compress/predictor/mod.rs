@@ -1,0 +1,12 @@
+//! Stage 1: the gradient-aware predictor — the paper's core innovation.
+//!
+//! * [`magnitude`] — cross-round magnitude prediction: per-epoch
+//!   normalization + exponential moving average (Alg. 1), plus the
+//!   ablation variants of Table 1.
+//! * [`sign`] — sign prediction: full-batch oscillation flip (Fig. 5) or
+//!   mini-batch kernel-level dominant sign via Eq. 5 consistency (Fig. 7).
+//! * [`bitmap`] — the two-level bitmap side channel (Fig. 8).
+
+pub mod bitmap;
+pub mod magnitude;
+pub mod sign;

@@ -1,0 +1,326 @@
+//! Gradient **sign** predictor (paper Alg. 2).
+//!
+//! Two regimes:
+//!
+//! * **Full-batch GD** — gradients oscillate with strong (anti-)correlation
+//!   between consecutive rounds (paper Fig. 5, Eq. 4). The client computes
+//!   the scalar gradient correlation `c` between `g̃^(t-1)` and `g^(t)`;
+//!   if `c < 0` the previous sign tensor is globally flipped. Only the
+//!   flip **bit** travels to the server.
+//!
+//! * **Mini-batch** — per-element signs are too noisy; instead each
+//!   convolutional kernel `K_{o,i}` is tested for sign consistency
+//!   (Eq. 5). Kernels at or above threshold τ get their dominant sign
+//!   assigned to **all** their elements; others are left unpredicted
+//!   (sign 0 ⇒ ĝ = 0 for those elements, i.e. plain SZ-style residual).
+//!   The kernel decisions travel in the two-level bitmap (Fig. 8).
+//!
+//! Non-conv layers have no kernel structure and are left unpredicted in
+//! mini-batch mode, exactly like sub-threshold kernels.
+
+use super::bitmap::KernelBitmap;
+use crate::tensor::LayerKind;
+use crate::util::stats;
+
+/// Training-regime switch (paper Alg. 2 `FullBatchGD` flag + τ).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SignMode {
+    /// Full-batch gradient descent: oscillation flip.
+    FullBatch,
+    /// Mini-batch: kernel consistency threshold τ ∈ [0,1].
+    MiniBatch { tau: f64 },
+}
+
+/// Side information produced by the client-side predictor; travels in the
+/// payload so the server reproduces the same sign tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SignMeta {
+    /// No sign prediction for this layer.
+    None,
+    /// Full-batch: whether to flip the previous sign tensor.
+    Flip(bool),
+    /// Mini-batch conv layer: the two-level kernel bitmap.
+    Bitmap(KernelBitmap),
+}
+
+impl SignMeta {
+    /// Serialize with a 1-byte tag.
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            SignMeta::None => vec![0],
+            SignMeta::Flip(f) => vec![1, *f as u8],
+            SignMeta::Bitmap(bm) => {
+                let mut out = vec![2];
+                out.extend_from_slice(&bm.encode());
+                out
+            }
+        }
+    }
+
+    pub fn decode(buf: &[u8]) -> anyhow::Result<SignMeta> {
+        match buf.first() {
+            Some(0) => Ok(SignMeta::None),
+            Some(1) => Ok(SignMeta::Flip(*buf.get(1).ok_or_else(|| anyhow::anyhow!("flip underrun"))? != 0)),
+            Some(2) => Ok(SignMeta::Bitmap(KernelBitmap::decode(&buf[1..])?)),
+            _ => anyhow::bail!("bad sign meta"),
+        }
+    }
+}
+
+/// Statistics from one layer's sign prediction (for Table 5 / Fig. 7).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SignStats {
+    pub kernels_total: usize,
+    pub kernels_predicted: usize,
+    /// Elements whose predicted sign disagreed with the true gradient sign
+    /// (zeros in either excluded).
+    pub sign_mismatches: usize,
+    /// Elements carrying a predicted (nonzero) sign.
+    pub elements_predicted: usize,
+}
+
+impl SignStats {
+    pub fn prediction_ratio(&self) -> f64 {
+        if self.kernels_total == 0 {
+            0.0
+        } else {
+            self.kernels_predicted as f64 / self.kernels_total as f64
+        }
+    }
+    pub fn mismatch_rate(&self) -> f64 {
+        if self.elements_predicted == 0 {
+            0.0
+        } else {
+            self.sign_mismatches as f64 / self.elements_predicted as f64
+        }
+    }
+}
+
+/// Client-side sign prediction (Alg. 2). Returns the elementwise sign
+/// tensor `S ∈ {-1,0,+1}`, the side info for the server, and stats.
+///
+/// `prev_recon`/`prev_sign` are the previous round's reconstructed
+/// gradient and sign tensor (None on round 1).
+pub fn predict_signs(
+    grad: &[f32],
+    kind: &LayerKind,
+    mode: SignMode,
+    prev_recon: Option<&[f32]>,
+    prev_sign: Option<&[f32]>,
+) -> (Vec<f32>, SignMeta, SignStats) {
+    match mode {
+        SignMode::FullBatch => {
+            let (Some(prev), Some(psign)) = (prev_recon, prev_sign) else {
+                return (vec![0.0; grad.len()], SignMeta::Flip(false), SignStats::default());
+            };
+            let c = stats::gradient_correlation(prev, grad);
+            let flip = c < 0.0;
+            let f = if flip { -1.0 } else { 1.0 };
+            let signs: Vec<f32> = psign.iter().map(|&s| f * s).collect();
+            let stats = mismatch_stats(&signs, grad, 0, 0);
+            (signs, SignMeta::Flip(flip), stats)
+        }
+        SignMode::MiniBatch { tau } => {
+            let Some(t) = kind.kernel_size() else {
+                // Non-conv layer: no structural sign prediction.
+                return (vec![0.0; grad.len()], SignMeta::None, SignStats::default());
+            };
+            let n_kernels = grad.len() / t;
+            let mut signs = vec![0.0f32; grad.len()];
+            let mut decisions = Vec::with_capacity(n_kernels);
+            let mut predicted = 0usize;
+            // Single pass per kernel: P/N/Z counts give both the Eq. 5
+            // consistency and the dominant sign (hot path, §Perf).
+            let half = t.div_ceil(2);
+            let den = (t - half).max(1) as f64;
+            for k in 0..n_kernels {
+                let kernel = &grad[k * t..(k + 1) * t];
+                let (mut p, mut n) = (0usize, 0usize);
+                for &x in kernel {
+                    p += (x > 0.0) as usize;
+                    n += (x < 0.0) as usize;
+                }
+                let z = t - p - n;
+                let consistency = (((p.max(n) + z) as f64 - half as f64) / den).clamp(0.0, 1.0);
+                let ok = if t <= 1 { true } else { consistency >= tau };
+                if ok {
+                    let s = if p > n { 1.0f32 } else { -1.0 };
+                    decisions.push(Some(s > 0.0));
+                    signs[k * t..(k + 1) * t].fill(s);
+                    predicted += 1;
+                } else {
+                    decisions.push(None);
+                }
+            }
+            let meta = SignMeta::Bitmap(KernelBitmap::from_decisions(&decisions));
+            let stats = mismatch_stats(&signs, grad, n_kernels, predicted);
+            (signs, meta, stats)
+        }
+    }
+}
+
+/// Server-side sign reconstruction (Alg. 4 line 11): rebuild the exact
+/// same sign tensor from the side info + mirrored state.
+pub fn reconstruct_signs(
+    meta: &SignMeta,
+    numel: usize,
+    kind: &LayerKind,
+    prev_sign: Option<&[f32]>,
+) -> anyhow::Result<Vec<f32>> {
+    match meta {
+        SignMeta::None => Ok(vec![0.0; numel]),
+        SignMeta::Flip(flip) => {
+            let Some(psign) = prev_sign else {
+                return Ok(vec![0.0; numel]);
+            };
+            let f = if *flip { -1.0 } else { 1.0 };
+            Ok(psign.iter().map(|&s| f * s).collect())
+        }
+        SignMeta::Bitmap(bm) => {
+            let t = kind
+                .kernel_size()
+                .ok_or_else(|| anyhow::anyhow!("bitmap sign meta on non-conv layer"))?;
+            if bm.predicted.len() * t != numel {
+                anyhow::bail!(
+                    "bitmap kernel count {} x {} != numel {}",
+                    bm.predicted.len(),
+                    t,
+                    numel
+                );
+            }
+            let mut signs = vec![0.0f32; numel];
+            let mut sign_bits = bm.signs.iter();
+            for (k, &p) in bm.predicted.iter().enumerate() {
+                if p {
+                    let s = if *sign_bits.next().expect("sign bit") { 1.0 } else { -1.0 };
+                    signs[k * t..(k + 1) * t].fill(s);
+                }
+            }
+            Ok(signs)
+        }
+    }
+}
+
+fn mismatch_stats(signs: &[f32], grad: &[f32], kernels_total: usize, kernels_predicted: usize) -> SignStats {
+    let mut st = SignStats { kernels_total, kernels_predicted, ..Default::default() };
+    for (&s, &g) in signs.iter().zip(grad) {
+        if s != 0.0 {
+            st.elements_predicted += 1;
+            if g != 0.0 && (s > 0.0) != (g > 0.0) {
+                st.sign_mismatches += 1;
+            }
+        }
+    }
+    st
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::LayerKind;
+    use crate::util::rng::Rng;
+
+    fn conv(kernels: usize, t: usize) -> LayerKind {
+        LayerKind::Conv { out_ch: kernels, in_ch: 1, kh: 1, kw: t }
+    }
+
+    #[test]
+    fn minibatch_consistent_kernel_predicted() {
+        // One fully-positive kernel, one mixed kernel (consistency 0).
+        let grad = vec![1.0f32, 2.0, 3.0, 1.0, -1.0, 1.0, -1.0, 1.0];
+        let kind = LayerKind::Conv { out_ch: 2, in_ch: 1, kh: 2, kw: 2 };
+        let (signs, meta, st) = predict_signs(&grad, &kind, SignMode::MiniBatch { tau: 0.9 }, None, None);
+        assert_eq!(&signs[..4], &[1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(&signs[4..], &[0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(st.kernels_predicted, 1);
+        assert_eq!(st.kernels_total, 2);
+        match meta {
+            SignMeta::Bitmap(bm) => assert_eq!(bm.decisions(), vec![Some(true), None]),
+            _ => panic!("expected bitmap"),
+        }
+    }
+
+    #[test]
+    fn minibatch_non_conv_no_prediction() {
+        let grad = vec![1.0f32; 10];
+        let (signs, meta, _) =
+            predict_signs(&grad, &LayerKind::Other, SignMode::MiniBatch { tau: 0.5 }, None, None);
+        assert!(signs.iter().all(|&s| s == 0.0));
+        assert_eq!(meta, SignMeta::None);
+    }
+
+    #[test]
+    fn fullbatch_flip_on_anticorrelation() {
+        let prev = vec![1.0f32, -2.0, 3.0];
+        let psign = vec![1.0f32, -1.0, 1.0];
+        let grad = vec![-1.0f32, 2.0, -3.0]; // perfectly anti-correlated
+        let (signs, meta, _) =
+            predict_signs(&grad, &LayerKind::Other, SignMode::FullBatch, Some(&prev), Some(&psign));
+        assert_eq!(meta, SignMeta::Flip(true));
+        assert_eq!(signs, vec![-1.0, 1.0, -1.0]);
+    }
+
+    #[test]
+    fn fullbatch_keep_on_correlation() {
+        let prev = vec![1.0f32, -2.0, 3.0];
+        let psign = vec![1.0f32, -1.0, 1.0];
+        let (signs, meta, _) =
+            predict_signs(&prev.clone(), &LayerKind::Other, SignMode::FullBatch, Some(&prev), Some(&psign));
+        assert_eq!(meta, SignMeta::Flip(false));
+        assert_eq!(signs, psign);
+    }
+
+    #[test]
+    fn server_reconstruction_matches_client() {
+        let mut rng = Rng::new(17);
+        let t = 9;
+        let n_kernels = 64;
+        // Kernels with strong dominant-sign structure.
+        let mut grad = Vec::with_capacity(n_kernels * t);
+        for _ in 0..n_kernels {
+            let dom: f32 = if rng.chance(0.5) { 1.0 } else { -1.0 };
+            for _ in 0..t {
+                let flip = rng.chance(0.15);
+                grad.push(dom * if flip { -1.0 } else { 1.0 } * (0.1 + rng.next_f32()));
+            }
+        }
+        let kind = conv(n_kernels, t);
+        let (signs, meta, _) =
+            predict_signs(&grad, &kind, SignMode::MiniBatch { tau: 0.5 }, None, None);
+        // Roundtrip meta through bytes like the payload does.
+        let decoded = SignMeta::decode(&meta.encode()).unwrap();
+        let recon = reconstruct_signs(&decoded, grad.len(), &kind, None).unwrap();
+        assert_eq!(signs, recon);
+    }
+
+    #[test]
+    fn sign_meta_encode_roundtrip() {
+        for meta in [
+            SignMeta::None,
+            SignMeta::Flip(true),
+            SignMeta::Flip(false),
+            SignMeta::Bitmap(KernelBitmap::from_decisions(&[Some(true), None, Some(false)])),
+        ] {
+            assert_eq!(SignMeta::decode(&meta.encode()).unwrap(), meta);
+        }
+    }
+
+    #[test]
+    fn bitmap_size_mismatch_errors() {
+        let bm = KernelBitmap::from_decisions(&[Some(true); 4]);
+        let err = reconstruct_signs(&SignMeta::Bitmap(bm), 100, &conv(4, 9), None);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn tau_one_only_perfect_kernels() {
+        let grad = vec![1.0f32, 1.0, 1.0, 1.0, 1.0, -1.0];
+        let kind = LayerKind::Conv { out_ch: 2, in_ch: 1, kh: 1, kw: 3 };
+        let (_, meta, st) = predict_signs(&grad, &kind, SignMode::MiniBatch { tau: 1.0 }, None, None);
+        assert_eq!(st.kernels_predicted, 1);
+        match meta {
+            SignMeta::Bitmap(bm) => assert_eq!(bm.decisions(), vec![Some(true), None]),
+            _ => panic!(),
+        }
+    }
+}

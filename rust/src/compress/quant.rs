@@ -1,0 +1,212 @@
+//! Stage 2: the error-bounded quantizer.
+//!
+//! SZ-style linear quantization: residual `e` maps to integer code
+//! `round(e / 2Δ)`; reconstruction is `code · 2Δ`, so the pointwise error
+//! is at most Δ. Values whose reconstruction would violate the bound in
+//! f32 arithmetic (or whose code exceeds the alphabet radius) are
+//! **escaped** to exact f32 — the bound therefore holds unconditionally,
+//! which the property tests assert for arbitrary inputs including
+//! NaN/Inf (non-finite values are always escaped verbatim).
+
+/// Error-bound mode, mirroring SZ's ABS / REL conventions (paper Alg. 3
+/// `ErrMode`, Δ).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ErrorBound {
+    /// Absolute bound: |x̃ − x| ≤ Δ.
+    Abs(f64),
+    /// Range-relative bound: Δ = eb · (max − min) of the layer.
+    Rel(f64),
+}
+
+impl ErrorBound {
+    /// Resolve to an absolute Δ for data with the given finite range.
+    pub fn resolve(&self, lo: f32, hi: f32) -> f64 {
+        match *self {
+            ErrorBound::Abs(d) => d,
+            ErrorBound::Rel(eb) => {
+                let range = (hi - lo) as f64;
+                if range > 0.0 {
+                    eb * range
+                } else {
+                    // Degenerate (constant) data: any positive delta works.
+                    eb * lo.abs().max(1e-30) as f64
+                }
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ErrorBound::Abs(_) => "ABS",
+            ErrorBound::Rel(_) => "REL",
+        }
+    }
+}
+
+/// Codes with |code| above this are escaped. Keeps the Huffman alphabet
+/// bounded and i32 arithmetic overflow-free.
+pub const CODE_RADIUS: i32 = 1 << 24;
+
+/// Output of quantizing one layer.
+#[derive(Debug, Clone, Default)]
+pub struct Quantized {
+    /// Per-element codes; escaped elements carry code = i32::MIN marker.
+    pub codes: Vec<i32>,
+    /// Exact values for escaped positions, in element order.
+    pub escapes: Vec<f32>,
+}
+
+/// Marker stored in `codes` for escaped elements.
+pub const ESCAPE_CODE: i32 = i32::MIN;
+
+/// Quantize residuals `e = data − pred` under absolute bound `delta`,
+/// producing codes + escapes and writing reconstructions to `recon`
+/// (`recon[i] = pred[i] + 2Δ·code` or the exact value when escaped).
+pub fn quantize(
+    data: &[f32],
+    pred: &[f32],
+    delta: f64,
+    out: &mut Quantized,
+    recon: &mut Vec<f32>,
+) {
+    assert_eq!(data.len(), pred.len());
+    let two_delta = (2.0 * delta) as f32;
+    let inv_two_delta = if two_delta > 0.0 { 1.0 / two_delta } else { 0.0 };
+    out.codes.clear();
+    out.codes.reserve(data.len());
+    out.escapes.clear();
+    recon.clear();
+    recon.reserve(data.len());
+    let delta_f = delta as f32;
+    for i in 0..data.len() {
+        let x = data[i];
+        let p = pred[i];
+        if !x.is_finite() || two_delta <= 0.0 {
+            out.codes.push(ESCAPE_CODE);
+            out.escapes.push(x);
+            recon.push(x);
+            continue;
+        }
+        let e = x - p;
+        // round-half-up to match the Pallas kernel (see compress::fused).
+        let code_f = (e * inv_two_delta + 0.5).floor();
+        if code_f.abs() > CODE_RADIUS as f32 {
+            out.codes.push(ESCAPE_CODE);
+            out.escapes.push(x);
+            recon.push(x);
+            continue;
+        }
+        let code = code_f as i32;
+        let r = p + code as f32 * two_delta;
+        // Guard against f32 rounding breaking the bound.
+        if (r - x).abs() > delta_f || !r.is_finite() {
+            out.codes.push(ESCAPE_CODE);
+            out.escapes.push(x);
+            recon.push(x);
+        } else {
+            out.codes.push(code);
+            recon.push(r);
+        }
+    }
+}
+
+/// Reconstruct from codes + escapes given the same predictions and Δ.
+pub fn dequantize(q: &Quantized, pred: &[f32], delta: f64, recon: &mut Vec<f32>) {
+    assert_eq!(q.codes.len(), pred.len());
+    let two_delta = (2.0 * delta) as f32;
+    recon.clear();
+    recon.reserve(pred.len());
+    let mut esc = q.escapes.iter();
+    for (i, &code) in q.codes.iter().enumerate() {
+        if code == ESCAPE_CODE {
+            recon.push(*esc.next().expect("escape stream exhausted"));
+        } else {
+            recon.push(pred[i] + code as f32 * two_delta);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn rel_bound_resolution() {
+        let eb = ErrorBound::Rel(0.01);
+        assert!((eb.resolve(-1.0, 1.0) - 0.02).abs() < 1e-12);
+        assert!(eb.resolve(3.0, 3.0) > 0.0); // degenerate range
+        assert_eq!(ErrorBound::Abs(0.5).resolve(0.0, 100.0), 0.5);
+    }
+
+    #[test]
+    fn quantize_respects_bound() {
+        let data = vec![0.5f32, -0.3, 1.7, 0.0, -2.2];
+        let pred = vec![0.4f32, -0.1, 1.0, 0.1, -2.0];
+        let delta = 0.05;
+        let mut q = Quantized::default();
+        let mut recon = Vec::new();
+        quantize(&data, &pred, delta, &mut q, &mut recon);
+        for (r, x) in recon.iter().zip(&data) {
+            assert!((r - x).abs() <= delta as f32 + 1e-9, "r={r} x={x}");
+        }
+    }
+
+    #[test]
+    fn dequantize_matches_encoder_recon() {
+        let data = vec![0.5f32, -0.3, 1.7, f32::NAN, -2.2];
+        let pred = vec![0.0f32; 5];
+        let mut q = Quantized::default();
+        let mut recon = Vec::new();
+        quantize(&data, &pred, 0.01, &mut q, &mut recon);
+        let mut recon2 = Vec::new();
+        dequantize(&q, &pred, 0.01, &mut recon2);
+        for (a, b) in recon.iter().zip(&recon2) {
+            assert!(a == b || (a.is_nan() && b.is_nan()));
+        }
+    }
+
+    #[test]
+    fn nan_and_inf_escape_verbatim() {
+        let data = vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 1.0];
+        let pred = vec![0.0f32; 4];
+        let mut q = Quantized::default();
+        let mut recon = Vec::new();
+        quantize(&data, &pred, 0.1, &mut q, &mut recon);
+        assert!(recon[0].is_nan());
+        assert_eq!(recon[1], f32::INFINITY);
+        assert_eq!(recon[2], f32::NEG_INFINITY);
+        assert_eq!(q.escapes.len(), 3);
+    }
+
+    #[test]
+    fn huge_residual_escapes() {
+        let data = vec![1e30f32];
+        let pred = vec![0.0f32];
+        let mut q = Quantized::default();
+        let mut recon = Vec::new();
+        quantize(&data, &pred, 1e-6, &mut q, &mut recon);
+        assert_eq!(q.codes[0], ESCAPE_CODE);
+        assert_eq!(recon[0], 1e30);
+    }
+
+    #[test]
+    fn property_bound_never_violated() {
+        prop::check("quantize bound", 200, |rng| {
+            let n = prop::arb_len(rng, 2000);
+            let data = prop::arb_gradient(rng, n);
+            let pred = prop::arb_gradient(rng, n);
+            let delta = prop::arb_error_bound(rng);
+            let mut q = Quantized::default();
+            let mut recon = Vec::new();
+            quantize(&data, &pred, delta, &mut q, &mut recon);
+            for i in 0..n {
+                let err = (recon[i] - data[i]).abs();
+                if data[i].is_finite() && err > delta as f32 * 1.0001 {
+                    return Err(format!("i={i} err={err} delta={delta}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,140 @@
+//! Per-layer cross-round predictor state, mirrored on client and server.
+//!
+//! Both sides update their state **only** from data derivable from the
+//! payload (reconstructed gradients), so after every round the two copies
+//! are bit-identical — asserted by the `state_sync` integration test.
+
+/// State for one layer.
+#[derive(Debug, Clone, Default)]
+pub struct LayerState {
+    /// EMA memory `m` of Alg. 1 (empty until round 2).
+    pub memory: Vec<f32>,
+    /// Previous reconstructed gradient `g̃^(t-1)`.
+    pub prev_recon: Option<Vec<f32>>,
+    /// Previous sign tensor (sign of `g̃^(t-1)`), used by full-batch mode.
+    pub prev_sign: Option<Vec<f32>>,
+    /// Previous absolute reconstruction `|g̃^(t-1)|` (cached for Alg. 1).
+    pub prev_abs: Option<Vec<f32>>,
+    /// `|g̃^(t-2)|` — feeds the deterministic β auto-tuner (both sides
+    /// hold identical copies; see `compress::autotune`).
+    pub prev_prev_abs: Option<Vec<f32>>,
+}
+
+impl LayerState {
+    /// Absorb this round's reconstruction, reusing existing buffer
+    /// capacity (this runs once per layer per round on both sides).
+    pub fn absorb(&mut self, recon: &[f32]) {
+        fn refill(slot: &mut Option<Vec<f32>>, src: impl Iterator<Item = f32>, n: usize) {
+            let buf = slot.get_or_insert_with(|| Vec::with_capacity(n));
+            buf.clear();
+            buf.extend(src);
+        }
+        let n = recon.len();
+        // Shift the |g̃| history (swap keeps the old buffer's capacity).
+        std::mem::swap(&mut self.prev_prev_abs, &mut self.prev_abs);
+        refill(&mut self.prev_sign, recon.iter().map(|&x| {
+            if x > 0.0 {
+                1.0
+            } else if x < 0.0 {
+                -1.0
+            } else {
+                0.0
+            }
+        }), n);
+        refill(&mut self.prev_abs, recon.iter().map(|x| x.abs()), n);
+        refill(&mut self.prev_recon, recon.iter().copied(), n);
+    }
+
+    pub fn reset(&mut self) {
+        self.memory.clear();
+        self.prev_recon = None;
+        self.prev_sign = None;
+        self.prev_abs = None;
+        self.prev_prev_abs = None;
+    }
+
+    /// Digest of the state for sync checks (cheap structural fingerprint).
+    pub fn fingerprint(&self) -> u64 {
+        fn mix(h: u64, bits: u32) -> u64 {
+            (h ^ bits as u64).wrapping_mul(0x100000001b3)
+        }
+        let mut h = 0xcbf29ce484222325u64;
+        for v in &self.memory {
+            h = mix(h, v.to_bits());
+        }
+        if let Some(r) = &self.prev_recon {
+            for v in r {
+                h = mix(h, v.to_bits());
+            }
+        }
+        h
+    }
+}
+
+/// All layers of one peer's codec state.
+#[derive(Debug, Clone, Default)]
+pub struct CodecState {
+    pub layers: Vec<LayerState>,
+}
+
+impl CodecState {
+    /// Ensure `n` layer slots exist.
+    pub fn ensure(&mut self, n: usize) {
+        while self.layers.len() < n {
+            self.layers.push(LayerState::default());
+        }
+    }
+    pub fn reset(&mut self) {
+        for l in &mut self.layers {
+            l.reset();
+        }
+    }
+    pub fn fingerprint(&self) -> u64 {
+        self.layers
+            .iter()
+            .fold(0xcbf29ce484222325u64, |h, l| h.wrapping_mul(31).wrapping_add(l.fingerprint()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn absorb_populates_all_views() {
+        let mut st = LayerState::default();
+        st.absorb(&[1.5, -2.0, 0.0]);
+        assert_eq!(st.prev_recon.as_deref(), Some(&[1.5, -2.0, 0.0][..]));
+        assert_eq!(st.prev_sign.as_deref(), Some(&[1.0, -1.0, 0.0][..]));
+        assert_eq!(st.prev_abs.as_deref(), Some(&[1.5, 2.0, 0.0][..]));
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_states() {
+        let mut a = LayerState::default();
+        let mut b = LayerState::default();
+        a.absorb(&[1.0, 2.0]);
+        b.absorb(&[1.0, 2.0]);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        b.absorb(&[1.0, 2.5]);
+        assert_ne!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut st = LayerState::default();
+        st.memory = vec![1.0];
+        st.absorb(&[1.0]);
+        st.reset();
+        assert!(st.memory.is_empty() && st.prev_recon.is_none());
+    }
+
+    #[test]
+    fn codec_state_ensure() {
+        let mut cs = CodecState::default();
+        cs.ensure(3);
+        assert_eq!(cs.layers.len(), 3);
+        cs.ensure(2);
+        assert_eq!(cs.layers.len(), 3);
+    }
+}

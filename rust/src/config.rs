@@ -1,0 +1,192 @@
+//! The run-configuration system: a typed config loadable from JSON files
+//! (`configs/*.json`) with CLI overrides — the launcher contract of the
+//! framework.
+
+use crate::compress::quant::ErrorBound;
+use crate::fl::transport::bandwidth::LinkSpec;
+use crate::train::data::DatasetSpec;
+use crate::util::json::Json;
+use std::time::Duration;
+
+/// Which engine runs the codec's predict stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Native fused Rust path (production default).
+    Native,
+    /// PJRT execution of the Pallas kernel's lowering.
+    Hlo,
+}
+
+/// Full configuration of one FL simulation run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Model key: `micro_resnet` / `micro_inception` (HLO) or `native`.
+    pub model: String,
+    pub dataset: DatasetSpec,
+    pub n_clients: usize,
+    pub rounds: usize,
+    pub samples_per_client: usize,
+    /// Local SGD learning rate.
+    pub local_lr: f32,
+    /// Server-side learning rate on the aggregated gradient.
+    pub server_lr: f32,
+    /// Codec: `fedgec` | `sz3` | `qsgd` | `topk` | `none`.
+    pub codec: String,
+    /// Relative error bound (paper's REL mode).
+    pub rel_error_bound: f64,
+    /// Simulated uplink.
+    pub link: LinkSpec,
+    pub engine: EngineKind,
+    /// Evaluate every k rounds (0 = only at end).
+    pub eval_every: usize,
+    pub seed: u64,
+    /// Non-IID label skew in [0,1].
+    pub class_skew: f64,
+    /// FedGEC knobs.
+    pub beta: f32,
+    pub tau: f64,
+    pub full_batch: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: "micro_resnet".into(),
+            dataset: DatasetSpec::Cifar10,
+            n_clients: 4,
+            rounds: 20,
+            samples_per_client: 256,
+            // NOTE: gradients travel as (θ_global − θ_local)/local_lr, so
+            // server_lr == local_lr makes the aggregation exact FedAvg
+            // (the update equals the weighted mean of client parameters).
+            local_lr: 0.05,
+            server_lr: 0.05,
+            codec: "fedgec".into(),
+            rel_error_bound: 1e-2,
+            link: LinkSpec::mbps(10.0),
+            engine: EngineKind::Native,
+            eval_every: 5,
+            seed: 42,
+            class_skew: 0.5,
+            beta: 0.9,
+            tau: 0.5,
+            full_batch: false,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse from a JSON document; unknown keys are ignored, missing keys
+    /// keep defaults.
+    pub fn from_json(src: &str) -> crate::Result<RunConfig> {
+        let v = Json::parse(src)?;
+        let mut cfg = RunConfig::default();
+        cfg.apply_json(&v)?;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &str) -> crate::Result<RunConfig> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read config {path}: {e}"))?;
+        Self::from_json(&src)
+    }
+
+    fn apply_json(&mut self, v: &Json) -> crate::Result<()> {
+        self.model = v.str_or("model", &self.model).to_string();
+        if let Some(d) = v.get("dataset").and_then(Json::as_str) {
+            self.dataset = DatasetSpec::from_name(d)
+                .ok_or_else(|| anyhow::anyhow!("unknown dataset {d}"))?;
+        }
+        self.n_clients = v.usize_or("n_clients", self.n_clients);
+        self.rounds = v.usize_or("rounds", self.rounds);
+        self.samples_per_client = v.usize_or("samples_per_client", self.samples_per_client);
+        self.local_lr = v.f64_or("local_lr", self.local_lr as f64) as f32;
+        self.server_lr = v.f64_or("server_lr", self.server_lr as f64) as f32;
+        self.codec = v.str_or("codec", &self.codec).to_string();
+        self.rel_error_bound = v.f64_or("rel_error_bound", self.rel_error_bound);
+        let mbps = v.f64_or("bandwidth_mbps", self.link.bits_per_sec / 1e6);
+        let latency_ms = v.f64_or("latency_ms", self.link.latency.as_secs_f64() * 1e3);
+        self.link = LinkSpec {
+            bits_per_sec: mbps * 1e6,
+            latency: Duration::from_secs_f64(latency_ms / 1e3),
+        };
+        if let Some(e) = v.get("engine").and_then(Json::as_str) {
+            self.engine = match e {
+                "native" => EngineKind::Native,
+                "hlo" => EngineKind::Hlo,
+                _ => anyhow::bail!("unknown engine {e}"),
+            };
+        }
+        self.eval_every = v.usize_or("eval_every", self.eval_every);
+        self.seed = v.f64_or("seed", self.seed as f64) as u64;
+        self.class_skew = v.f64_or("class_skew", self.class_skew);
+        self.beta = v.f64_or("beta", self.beta as f64) as f32;
+        self.tau = v.f64_or("tau", self.tau);
+        self.full_batch = v.bool_or("full_batch", self.full_batch);
+        Ok(())
+    }
+
+    /// Apply `key=value` CLI overrides (same keys as the JSON form).
+    pub fn apply_override(&mut self, key: &str, value: &str) -> crate::Result<()> {
+        let quoted = matches!(
+            key,
+            "model" | "dataset" | "codec" | "engine"
+        );
+        let json_val = if quoted { format!("\"{value}\"") } else { value.to_string() };
+        let doc = format!("{{\"{key}\": {json_val}}}");
+        let v = Json::parse(&doc).map_err(|e| anyhow::anyhow!("override {key}={value}: {e}"))?;
+        self.apply_json(&v)
+    }
+
+    /// The error bound as the codec type.
+    pub fn error_bound(&self) -> ErrorBound {
+        ErrorBound::Rel(self.rel_error_bound)
+    }
+
+    /// Manifest key of the model artifact for the chosen dataset.
+    pub fn model_key(&self) -> String {
+        format!("{}_{}", self.model, self.dataset.class_suffix())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = RunConfig::default();
+        assert_eq!(c.model_key(), "micro_resnet_c10");
+        assert!(c.rel_error_bound > 0.0);
+    }
+
+    #[test]
+    fn json_overrides() {
+        let c = RunConfig::from_json(
+            r#"{"model": "micro_inception", "dataset": "caltech101",
+                "rounds": 3, "bandwidth_mbps": 1.5, "engine": "hlo",
+                "codec": "sz3", "rel_error_bound": 0.03}"#,
+        )
+        .unwrap();
+        assert_eq!(c.model_key(), "micro_inception_c101");
+        assert_eq!(c.rounds, 3);
+        assert_eq!(c.engine, EngineKind::Hlo);
+        assert!((c.link.bits_per_sec - 1.5e6).abs() < 1.0);
+        assert_eq!(c.codec, "sz3");
+    }
+
+    #[test]
+    fn cli_override() {
+        let mut c = RunConfig::default();
+        c.apply_override("rounds", "7").unwrap();
+        c.apply_override("dataset", "fmnist").unwrap();
+        assert_eq!(c.rounds, 7);
+        assert_eq!(c.dataset, DatasetSpec::Fmnist);
+        assert!(c.apply_override("dataset", "nope").is_err());
+    }
+
+    #[test]
+    fn bad_engine_errors() {
+        assert!(RunConfig::from_json(r#"{"engine": "gpu"}"#).is_err());
+    }
+}

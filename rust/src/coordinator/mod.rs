@@ -1,0 +1,321 @@
+//! The coordinator ties everything together: config → dataset + trainer +
+//! codecs + link model → synchronous FedAvg rounds → metrics.
+//!
+//! Two execution modes:
+//!
+//! * [`run_local`] — single-threaded simulation with virtual-time link
+//!   accounting (the paper's Fig. 11 methodology). Supports the HLO
+//!   trainer (PJRT micro-CNNs, real gradients) and the native trainer.
+//! * [`run_threaded`] — real client threads over in-process channels with
+//!   live bandwidth throttling (native trainer; also exercised over TCP by
+//!   the `serve`/`client` CLI subcommands and the transport tests).
+
+pub mod native_trainer;
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::baselines::{make_codec, qsgd_bits_for_bound};
+use crate::compress::pipeline::{FedgecCodec, FedgecConfig};
+use crate::compress::GradientCodec;
+use crate::config::{EngineKind, RunConfig};
+use crate::fl::aggregate::FedAvg;
+use crate::fl::client::{Client, LocalTrainer};
+use crate::fl::round::{RoundStats, RunSummary};
+use crate::fl::server::Server;
+use crate::fl::transport::bandwidth::VirtualLink;
+use crate::fl::transport::{inproc, Channel};
+use crate::runtime::engine::HloPredictEngine;
+use crate::runtime::manifest::Manifest;
+use crate::runtime::trainer::{HloTrainer, Params};
+use crate::tensor::{LayerGrad, ModelGrad};
+use crate::train::data::SynthDataset;
+use native_trainer::NativeTrainer;
+
+/// Build the codec named in the config (client or server side — they are
+/// symmetric objects).
+pub fn build_codec(cfg: &RunConfig) -> crate::Result<Box<dyn GradientCodec>> {
+    if cfg.codec == "fedgec" || cfg.codec == "ours" {
+        let fc = FedgecConfig {
+            beta: cfg.beta,
+            tau: cfg.tau,
+            full_batch: cfg.full_batch,
+            error_bound: cfg.error_bound(),
+            ..Default::default()
+        };
+        return Ok(Box::new(FedgecCodec::new(fc)));
+    }
+    make_codec(&cfg.codec, cfg.error_bound(), qsgd_bits_for_bound(cfg.rel_error_bound))
+        .ok_or_else(|| anyhow::anyhow!("unknown codec {}", cfg.codec))
+}
+
+/// Build a FedGEC codec with the HLO predict engine attached.
+fn build_codec_hlo(cfg: &RunConfig, rt: Rc<RefCell<crate::runtime::Runtime>>) -> crate::Result<Box<dyn GradientCodec>> {
+    anyhow::ensure!(cfg.codec == "fedgec" || cfg.codec == "ours", "HLO engine requires fedgec codec");
+    let fc = FedgecConfig {
+        beta: cfg.beta,
+        tau: cfg.tau,
+        full_batch: cfg.full_batch,
+        error_bound: cfg.error_bound(),
+        ..Default::default()
+    };
+    let engine = HloPredictEngine::new(rt, 4096)?;
+    Ok(Box::new(FedgecCodec::with_engine(fc, Box::new(engine))))
+}
+
+/// One simulated client in `run_local` (HLO path).
+struct HloClientSim {
+    data_xs: Vec<f32>,
+    data_ys: Vec<i32>,
+    codec: Box<dyn GradientCodec>,
+    n_samples: usize,
+}
+
+/// Single-threaded FL simulation — the main experiment driver.
+pub fn run_local(cfg: &RunConfig) -> crate::Result<RunSummary> {
+    match cfg.model.as_str() {
+        "native" => run_local_native(cfg),
+        _ => run_local_hlo(cfg),
+    }
+}
+
+fn run_local_hlo(cfg: &RunConfig) -> crate::Result<RunSummary> {
+    let art_dir = crate::runtime::Runtime::default_dir();
+    let manifest = Manifest::load(&art_dir)?;
+    let rt = Rc::new(RefCell::new(crate::runtime::Runtime::new(&art_dir)?));
+    let trainer = HloTrainer::new(rt.clone(), &manifest, &cfg.model_key())?;
+    let metas = trainer.layer_metas();
+
+    // Data: one slice per client (shaped for the AOT epoch), one eval set.
+    let ds = SynthDataset::new(cfg.dataset, cfg.seed);
+    let per_epoch = manifest.batches_per_epoch * manifest.batch_size;
+    let mut data_rng = crate::util::rng::Rng::new(cfg.seed ^ 0xDA);
+    let mut clients: Vec<HloClientSim> = (0..cfg.n_clients)
+        .map(|i| {
+            let mut rng = data_rng.fork(i as u64);
+            let slice = ds.sample(&mut rng, per_epoch, cfg.class_skew);
+            let codec = if cfg.engine == EngineKind::Hlo {
+                build_codec_hlo(cfg, rt.clone())
+            } else {
+                build_codec(cfg)
+            };
+            codec.map(|codec| HloClientSim {
+                data_xs: slice.xs,
+                data_ys: slice.ys,
+                codec,
+                n_samples: per_epoch,
+            })
+        })
+        .collect::<crate::Result<_>>()?;
+    let eval_slice = {
+        let mut rng = data_rng.fork(0xE7A1);
+        ds.sample(&mut rng, manifest.eval_n, 0.0)
+    };
+
+    // Server: global params + one mirrored codec per client.
+    let init = trainer.init_params(cfg.seed);
+    let server_codecs: crate::Result<Vec<_>> = (0..cfg.n_clients)
+        .map(|_| {
+            if cfg.engine == EngineKind::Hlo {
+                build_codec_hlo(cfg, rt.clone())
+            } else {
+                build_codec(cfg)
+            }
+        })
+        .collect();
+    let mut server = Server::new(init.tensors, metas.clone(), cfg.server_lr, server_codecs?);
+
+    let mut summary = RunSummary::default();
+    for round in 0..cfg.rounds {
+        let mut stats = RoundStats { round: round as u32, ..Default::default() };
+        let mut agg = FedAvg::new();
+        let global = server.params.clone();
+        for (ci, client) in clients.iter_mut().enumerate() {
+            // Local epoch via PJRT.
+            let params = Params { tensors: global.clone() };
+            let (new_params, loss) =
+                trainer.train_epoch(&params, &client.data_xs, &client.data_ys, cfg.local_lr)?;
+            stats.mean_loss += loss as f64;
+            // Gradient = (θ_global − θ_local)/lr, per layer.
+            let grads = ModelGrad {
+                layers: metas
+                    .iter()
+                    .zip(global.iter().zip(&new_params.tensors))
+                    .map(|(meta, (old, new))| {
+                        let inv_lr = 1.0 / cfg.local_lr;
+                        let data: Vec<f32> =
+                            old.iter().zip(new).map(|(o, n)| (o - n) * inv_lr).collect();
+                        LayerGrad::new(meta.clone(), data)
+                    })
+                    .collect(),
+            };
+            stats.raw_bytes += grads.byte_size();
+            let t0 = Instant::now();
+            let payload = client.codec.compress(&grads)?;
+            stats.comp_time += t0.elapsed();
+            stats.payload_bytes += payload.len();
+            let mut link = VirtualLink::new(cfg.link);
+            stats.transmit_time += link.send(payload.len());
+            let dt = server.absorb_payload(ci, &payload, client.n_samples as f64, &mut agg)?;
+            stats.decomp_time += dt;
+        }
+        stats.mean_loss /= cfg.n_clients.max(1) as f64;
+        server.finish_round(agg);
+        let do_eval = (cfg.eval_every > 0 && (round + 1) % cfg.eval_every == 0)
+            || round + 1 == cfg.rounds;
+        if do_eval {
+            let params = Params { tensors: server.params.clone() };
+            let (eloss, eacc) = trainer.eval(&params, &eval_slice.xs, &eval_slice.ys)?;
+            stats.eval = Some((eloss, eacc));
+            summary.final_accuracy = Some(eacc);
+        }
+        summary.rounds.push(stats);
+    }
+    Ok(summary)
+}
+
+fn run_local_native(cfg: &RunConfig) -> crate::Result<RunSummary> {
+    let ds = SynthDataset::new(cfg.dataset, cfg.seed);
+    let mut data_rng = crate::util::rng::Rng::new(cfg.seed ^ 0xDA);
+    let mut trainers: Vec<NativeTrainer> = (0..cfg.n_clients)
+        .map(|i| {
+            let mut rng = data_rng.fork(i as u64);
+            let slice = ds.sample(&mut rng, cfg.samples_per_client, cfg.class_skew);
+            NativeTrainer::new(cfg.dataset.classes(), slice, cfg.local_lr, cfg.seed)
+        })
+        .collect();
+    let eval_slice = {
+        let mut rng = data_rng.fork(0xE7A1);
+        ds.sample(&mut rng, 256, 0.0)
+    };
+    let proto = crate::train::native::NativeNet::new(cfg.dataset.classes(), cfg.seed);
+    let metas = proto.layer_metas();
+    let init: Vec<Vec<f32>> =
+        vec![proto.conv_w.clone(), proto.conv_b.clone(), proto.fc_w.clone(), proto.fc_b.clone()];
+    let server_codecs: crate::Result<Vec<_>> =
+        (0..cfg.n_clients).map(|_| build_codec(cfg)).collect();
+    let mut server = Server::new(init, metas.clone(), cfg.server_lr, server_codecs?);
+    let mut client_codecs: Vec<Box<dyn GradientCodec>> =
+        (0..cfg.n_clients).map(|_| build_codec(cfg)).collect::<crate::Result<_>>()?;
+
+    let mut summary = RunSummary::default();
+    for round in 0..cfg.rounds {
+        let mut stats = RoundStats { round: round as u32, ..Default::default() };
+        let mut agg = FedAvg::new();
+        let global = server.params.clone();
+        for ci in 0..cfg.n_clients {
+            let (grads, loss) = trainers[ci].train_round(&global)?;
+            stats.mean_loss += loss as f64;
+            stats.raw_bytes += grads.byte_size();
+            let t0 = Instant::now();
+            let payload = client_codecs[ci].compress(&grads)?;
+            stats.comp_time += t0.elapsed();
+            stats.payload_bytes += payload.len();
+            let mut link = VirtualLink::new(cfg.link);
+            stats.transmit_time += link.send(payload.len());
+            let dt = server.absorb_payload(
+                ci,
+                &payload,
+                trainers[ci].n_samples() as f64,
+                &mut agg,
+            )?;
+            stats.decomp_time += dt;
+        }
+        stats.mean_loss /= cfg.n_clients.max(1) as f64;
+        server.finish_round(agg);
+        let do_eval = (cfg.eval_every > 0 && (round + 1) % cfg.eval_every == 0)
+            || round + 1 == cfg.rounds;
+        if do_eval {
+            let (eloss, eacc) = NativeTrainer::eval_params(
+                cfg.dataset.classes(),
+                &server.params,
+                &eval_slice,
+            );
+            stats.eval = Some((eloss, eacc));
+            summary.final_accuracy = Some(eacc);
+        }
+        summary.rounds.push(stats);
+    }
+    Ok(summary)
+}
+
+/// Threaded mode: clients on real threads, in-process channels, live
+/// throttling. Native trainer only (PJRT handles are not Send).
+pub fn run_threaded(cfg: &RunConfig) -> crate::Result<RunSummary> {
+    anyhow::ensure!(cfg.model == "native", "threaded mode requires model=native");
+    let ds = SynthDataset::new(cfg.dataset, cfg.seed);
+    let mut data_rng = crate::util::rng::Rng::new(cfg.seed ^ 0xDA);
+    let proto = crate::train::native::NativeNet::new(cfg.dataset.classes(), cfg.seed);
+    let metas = proto.layer_metas();
+    let init: Vec<Vec<f32>> =
+        vec![proto.conv_w.clone(), proto.conv_b.clone(), proto.fc_w.clone(), proto.fc_b.clone()];
+
+    let mut server_channels: Vec<Box<dyn Channel>> = Vec::new();
+    let mut handles = Vec::new();
+    for i in 0..cfg.n_clients {
+        let (srv_end, cli_end) = inproc::pair(Some(cfg.link));
+        server_channels.push(Box::new(srv_end));
+        let mut rng = data_rng.fork(i as u64);
+        let slice = ds.sample(&mut rng, cfg.samples_per_client, cfg.class_skew);
+        let trainer = NativeTrainer::new(cfg.dataset.classes(), slice, cfg.local_lr, cfg.seed);
+        let codec = build_codec(cfg)?;
+        let mut client = Client::new(i as u32, Box::new(trainer), codec);
+        let mut ch = cli_end;
+        handles.push(std::thread::spawn(move || client.run(&mut ch)));
+    }
+    let server_codecs: crate::Result<Vec<_>> =
+        (0..cfg.n_clients).map(|_| build_codec(cfg)).collect();
+    let mut server = Server::new(init, metas, cfg.server_lr, server_codecs?);
+    server.wait_hellos(&mut server_channels)?;
+    let mut summary = RunSummary::default();
+    for _ in 0..cfg.rounds {
+        let stats = server.run_round(&mut server_channels)?;
+        summary.rounds.push(stats);
+    }
+    server.shutdown(&mut server_channels)?;
+    for h in handles {
+        h.join().map_err(|_| anyhow::anyhow!("client thread panicked"))??;
+    }
+    // Final eval on the aggregated model.
+    let eval_slice = {
+        let mut rng = data_rng.fork(0xE7A1);
+        ds.sample(&mut rng, 256, 0.0)
+    };
+    let (_, acc) =
+        NativeTrainer::eval_params(cfg.dataset.classes(), &server.params, &eval_slice);
+    summary.final_accuracy = Some(acc);
+    Ok(summary)
+}
+
+/// Print a run summary as a table.
+pub fn print_summary(cfg: &RunConfig, summary: &RunSummary) {
+    let mut t = crate::metrics::Table::new(
+        &format!(
+            "FL run: model={} dataset={} codec={} eb={} link={:.0}Mbps",
+            cfg.model,
+            cfg.dataset.name(),
+            cfg.codec,
+            cfg.rel_error_bound,
+            cfg.link.bits_per_sec / 1e6
+        ),
+        &["round", "loss", "CR", "payload(KB)", "comm time", "eval acc"],
+    );
+    for r in &summary.rounds {
+        t.row(vec![
+            r.round.to_string(),
+            format!("{:.4}", r.mean_loss),
+            format!("{:.2}", r.ratio()),
+            format!("{:.1}", r.payload_bytes as f64 / 1e3),
+            crate::metrics::fmt_duration(r.comm_time()),
+            r.eval.map(|(_, a)| format!("{:.3}", a)).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t.print();
+    println!(
+        "mean CR {:.2} | total comm {} | final acc {}",
+        summary.mean_ratio(),
+        crate::metrics::fmt_duration(summary.total_comm_time()),
+        summary.final_accuracy.map(|a| format!("{a:.3}")).unwrap_or_else(|| "-".into()),
+    );
+}

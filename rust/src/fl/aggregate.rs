@@ -1,0 +1,94 @@
+//! FedAvg aggregation (McMahan et al. 2017): weighted averaging of client
+//! gradients by sample count, then a global SGD step.
+
+use crate::tensor::ModelGrad;
+
+/// Weighted-average accumulator over reconstructed client gradients.
+#[derive(Default)]
+pub struct FedAvg {
+    sum: Vec<Vec<f32>>,
+    total_weight: f64,
+}
+
+impl FedAvg {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add one client's gradient with the given weight (its sample count).
+    pub fn add(&mut self, grad: &ModelGrad, weight: f64) {
+        if self.sum.is_empty() {
+            self.sum = grad.layers.iter().map(|l| vec![0.0f32; l.data.len()]).collect();
+        }
+        assert_eq!(self.sum.len(), grad.layers.len(), "layer count changed");
+        for (acc, layer) in self.sum.iter_mut().zip(&grad.layers) {
+            assert_eq!(acc.len(), layer.data.len());
+            let w = weight as f32;
+            for (a, &g) in acc.iter_mut().zip(&layer.data) {
+                *a += w * g;
+            }
+        }
+        self.total_weight += weight;
+    }
+
+    /// Number of contributions so far (weight mass).
+    pub fn weight(&self) -> f64 {
+        self.total_weight
+    }
+
+    /// Finish: produce the weighted mean gradient per layer.
+    pub fn mean(mut self) -> Vec<Vec<f32>> {
+        let inv = if self.total_weight > 0.0 { 1.0 / self.total_weight as f32 } else { 0.0 };
+        for t in &mut self.sum {
+            for v in t.iter_mut() {
+                *v *= inv;
+            }
+        }
+        self.sum
+    }
+}
+
+/// Apply the aggregated gradient: `θ ← θ − lr·ḡ` per layer.
+pub fn apply_update(params: &mut [Vec<f32>], mean_grad: &[Vec<f32>], lr: f32) {
+    assert_eq!(params.len(), mean_grad.len());
+    for (p, g) in params.iter_mut().zip(mean_grad) {
+        assert_eq!(p.len(), g.len());
+        for (w, &d) in p.iter_mut().zip(g) {
+            *w -= lr * d;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{LayerGrad, LayerMeta};
+
+    fn grad(vals: &[f32]) -> ModelGrad {
+        ModelGrad {
+            layers: vec![LayerGrad::new(LayerMeta::other("x", vals.len()), vals.to_vec())],
+        }
+    }
+
+    #[test]
+    fn weighted_mean() {
+        let mut agg = FedAvg::new();
+        agg.add(&grad(&[1.0, 0.0]), 1.0);
+        agg.add(&grad(&[4.0, 3.0]), 3.0);
+        let m = agg.mean();
+        assert_eq!(m[0], vec![3.25, 2.25]);
+    }
+
+    #[test]
+    fn apply_update_sgd() {
+        let mut params = vec![vec![1.0f32, 2.0]];
+        apply_update(&mut params, &[vec![10.0, -10.0]], 0.1);
+        assert_eq!(params[0], vec![0.0, 3.0]);
+    }
+
+    #[test]
+    fn empty_aggregator_mean_is_empty() {
+        let agg = FedAvg::new();
+        assert!(agg.mean().is_empty());
+    }
+}

@@ -1,0 +1,63 @@
+//! The FL client: local training + gradient compression (paper Fig. 1
+//! workflow, client side of Alg. 3).
+
+use crate::compress::GradientCodec;
+use crate::fl::protocol::Msg;
+use crate::fl::transport::Channel;
+use crate::tensor::{LayerMeta, ModelGrad};
+
+/// Local-training backend owned by one client.
+pub trait LocalTrainer: Send {
+    /// Run one local round from the given global parameters; return the
+    /// round gradient (accumulated update direction) and the training
+    /// loss. `(θ_global − θ_local)/lr` for SGD trainers.
+    fn train_round(&mut self, params: &[Vec<f32>]) -> crate::Result<(ModelGrad, f32)>;
+
+    /// Layer metadata describing the gradient tensors.
+    fn layer_metas(&self) -> Vec<LayerMeta>;
+
+    /// Number of local samples (FedAvg weight).
+    fn n_samples(&self) -> usize;
+}
+
+/// A federated client: trainer + codec + identity.
+pub struct Client {
+    pub id: u32,
+    pub trainer: Box<dyn LocalTrainer>,
+    pub codec: Box<dyn GradientCodec>,
+}
+
+impl Client {
+    pub fn new(id: u32, trainer: Box<dyn LocalTrainer>, codec: Box<dyn GradientCodec>) -> Self {
+        Client { id, trainer, codec }
+    }
+
+    /// One local round: train, compress, report (payload, loss, raw bytes).
+    pub fn local_round(&mut self, params: &[Vec<f32>]) -> crate::Result<(Vec<u8>, f32, usize)> {
+        let (grads, loss) = self.trainer.train_round(params)?;
+        let raw = grads.byte_size();
+        let payload = self.codec.compress(&grads)?;
+        Ok((payload, loss, raw))
+    }
+
+    /// Blocking message loop against a server channel (threaded/TCP mode).
+    pub fn run(&mut self, channel: &mut dyn Channel) -> crate::Result<()> {
+        channel.send(&Msg::Hello { client_id: self.id })?;
+        loop {
+            match channel.recv()? {
+                Msg::GlobalParams { round, tensors } => {
+                    let (payload, train_loss, _) = self.local_round(&tensors)?;
+                    channel.send(&Msg::Update {
+                        client_id: self.id,
+                        round,
+                        payload,
+                        train_loss,
+                        n_samples: self.trainer.n_samples() as u32,
+                    })?;
+                }
+                Msg::Shutdown => return Ok(()),
+                other => anyhow::bail!("client {}: unexpected {other:?}", self.id),
+            }
+        }
+    }
+}

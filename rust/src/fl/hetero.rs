@@ -1,0 +1,159 @@
+//! Heterogeneous-client round-time model — the paper's introduction
+//! motivation: a 4G client (20–40 Mbps), Wi-Fi clients (100–200 Mbps) and
+//! fiber clients (1 Gbps) can differ 50× in upload latency, and the
+//! synchronous round is gated by the **slowest** participant. Compression
+//! shrinks exactly that critical path.
+
+use std::time::Duration;
+
+use crate::fl::transport::bandwidth::LinkSpec;
+
+/// Typical client connectivity classes (paper §1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkClass {
+    /// 4G-LTE uplink: 20–40 Mbps.
+    Cellular,
+    /// Wi-Fi: 100–200 Mbps.
+    Wifi,
+    /// Fiber broadband: ~1 Gbps.
+    Fiber,
+}
+
+impl LinkClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LinkClass::Cellular => "4G",
+            LinkClass::Wifi => "wifi",
+            LinkClass::Fiber => "fiber",
+        }
+    }
+
+    /// Sample a link for this class (deterministic via the given RNG).
+    pub fn sample(&self, rng: &mut crate::util::rng::Rng) -> LinkSpec {
+        let mbps = match self {
+            LinkClass::Cellular => rng.uniform(20.0, 40.0),
+            LinkClass::Wifi => rng.uniform(100.0, 200.0),
+            LinkClass::Fiber => rng.uniform(800.0, 1000.0),
+        };
+        let latency_ms = match self {
+            LinkClass::Cellular => rng.uniform(30.0, 60.0),
+            LinkClass::Wifi => rng.uniform(5.0, 15.0),
+            LinkClass::Fiber => rng.uniform(1.0, 5.0),
+        };
+        LinkSpec {
+            bits_per_sec: mbps * 1e6,
+            latency: Duration::from_secs_f64(latency_ms / 1e3),
+        }
+    }
+}
+
+/// A federation's connectivity mix.
+#[derive(Debug, Clone)]
+pub struct HeteroFleet {
+    pub links: Vec<LinkSpec>,
+}
+
+impl HeteroFleet {
+    /// Build a mixed fleet: `fractions` of (cellular, wifi, fiber).
+    pub fn mixed(n: usize, fractions: (f64, f64, f64), seed: u64) -> Self {
+        let mut rng = crate::util::rng::Rng::new(seed ^ 0x4E7);
+        let (fc, fw, _) = fractions;
+        let links = (0..n)
+            .map(|_| {
+                let u = rng.next_f64();
+                let class = if u < fc {
+                    LinkClass::Cellular
+                } else if u < fc + fw {
+                    LinkClass::Wifi
+                } else {
+                    LinkClass::Fiber
+                };
+                class.sample(&mut rng)
+            })
+            .collect();
+        HeteroFleet { links }
+    }
+
+    /// Synchronous-round upload time for per-client payload sizes plus
+    /// per-client codec time: the round is gated by the slowest client.
+    pub fn round_time(&self, payload_bytes: &[usize], codec_time: &[Duration]) -> Duration {
+        assert_eq!(payload_bytes.len(), self.links.len());
+        assert_eq!(codec_time.len(), self.links.len());
+        self.links
+            .iter()
+            .zip(payload_bytes)
+            .zip(codec_time)
+            .map(|((link, &b), &c)| link.transmit_time(b) + c)
+            .max()
+            .unwrap_or(Duration::ZERO)
+    }
+
+    /// Straggler gap: slowest / fastest upload for a uniform payload.
+    pub fn disparity(&self, payload_bytes: usize) -> f64 {
+        let times: Vec<f64> =
+            self.links.iter().map(|l| l.transmit_time(payload_bytes).as_secs_f64()).collect();
+        let max = times.iter().cloned().fold(0.0, f64::max);
+        let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+        if min > 0.0 {
+            max / min
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn classes_have_expected_order() {
+        let mut rng = Rng::new(1);
+        let c = LinkClass::Cellular.sample(&mut rng);
+        let w = LinkClass::Wifi.sample(&mut rng);
+        let f = LinkClass::Fiber.sample(&mut rng);
+        assert!(c.bits_per_sec < w.bits_per_sec);
+        assert!(w.bits_per_sec < f.bits_per_sec);
+    }
+
+    #[test]
+    fn disparity_matches_paper_scale() {
+        // All-cellular vs fiber can reach tens of x (paper: "up to 50x").
+        let fleet = HeteroFleet::mixed(50, (0.4, 0.4, 0.2), 7);
+        let d = fleet.disparity(10_000_000);
+        assert!(d > 10.0, "disparity {d}");
+        assert!(d < 100.0, "disparity {d}");
+    }
+
+    #[test]
+    fn round_gated_by_slowest() {
+        let fleet = HeteroFleet {
+            links: vec![
+                LinkSpec { bits_per_sec: 1e6, latency: Duration::ZERO },
+                LinkSpec { bits_per_sec: 1e9, latency: Duration::ZERO },
+            ],
+        };
+        let t = fleet.round_time(&[1_000_000, 1_000_000], &[Duration::ZERO; 2]);
+        assert!((t.as_secs_f64() - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compression_shrinks_critical_path_proportionally() {
+        let fleet = HeteroFleet::mixed(16, (0.5, 0.3, 0.2), 3);
+        let raw = vec![40_000_000usize; 16];
+        let compressed = vec![2_500_000usize; 16]; // 16x CR
+        let zero = vec![Duration::ZERO; 16];
+        let t_raw = fleet.round_time(&raw, &zero);
+        let t_cmp = fleet.round_time(&compressed, &zero);
+        let speedup = t_raw.as_secs_f64() / t_cmp.as_secs_f64();
+        assert!(speedup > 10.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn deterministic_fleet() {
+        let a = HeteroFleet::mixed(8, (0.3, 0.4, 0.3), 5);
+        let b = HeteroFleet::mixed(8, (0.3, 0.4, 0.3), 5);
+        assert_eq!(a.links, b.links);
+    }
+}

@@ -1,0 +1,13 @@
+//! The federated-learning runtime: a FedAvg parameter server, clients,
+//! pluggable transports (in-process channels and real TCP) and a
+//! token-bucket bandwidth simulator — the Rust equivalent of the APPFL
+//! stack the paper integrates into (§5.1), with the compressor as a
+//! first-class feature of the wire path.
+
+pub mod aggregate;
+pub mod client;
+pub mod hetero;
+pub mod protocol;
+pub mod round;
+pub mod server;
+pub mod transport;

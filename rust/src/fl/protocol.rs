@@ -1,0 +1,106 @@
+//! Wire messages between clients and the parameter server, with a
+//! dependency-free binary framing (length-prefixed, tagged). Carried by
+//! any [`super::transport`] implementation.
+
+use crate::compress::blob::{BlobReader, BlobWriter};
+
+/// Client → server and server → client messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Client joins the federation.
+    Hello { client_id: u32 },
+    /// Server broadcasts global parameters (raw f32 tensors, flattened
+    /// per layer) for a round.
+    GlobalParams { round: u32, tensors: Vec<Vec<f32>> },
+    /// Client uploads its compressed gradient payload for a round.
+    Update { client_id: u32, round: u32, payload: Vec<u8>, train_loss: f32, n_samples: u32 },
+    /// Server ends the session.
+    Shutdown,
+}
+
+impl Msg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = BlobWriter::new();
+        match self {
+            Msg::Hello { client_id } => {
+                w.put_u8(0);
+                w.put_u32(*client_id);
+            }
+            Msg::GlobalParams { round, tensors } => {
+                w.put_u8(1);
+                w.put_u32(*round);
+                w.put_u32(tensors.len() as u32);
+                for t in tensors {
+                    w.put_f32_slice(t);
+                }
+            }
+            Msg::Update { client_id, round, payload, train_loss, n_samples } => {
+                w.put_u8(2);
+                w.put_u32(*client_id);
+                w.put_u32(*round);
+                w.put_f32(*train_loss);
+                w.put_u32(*n_samples);
+                w.put_bytes(payload);
+            }
+            Msg::Shutdown => w.put_u8(3),
+        }
+        w.into_bytes()
+    }
+
+    pub fn decode(buf: &[u8]) -> crate::Result<Msg> {
+        let mut r = BlobReader::new(buf);
+        Ok(match r.get_u8()? {
+            0 => Msg::Hello { client_id: r.get_u32()? },
+            1 => {
+                let round = r.get_u32()?;
+                let n = r.get_u32()? as usize;
+                let mut tensors = Vec::with_capacity(n);
+                for _ in 0..n {
+                    tensors.push(r.get_f32_vec()?);
+                }
+                Msg::GlobalParams { round, tensors }
+            }
+            2 => {
+                let client_id = r.get_u32()?;
+                let round = r.get_u32()?;
+                let train_loss = r.get_f32()?;
+                let n_samples = r.get_u32()?;
+                let payload = r.get_bytes()?.to_vec();
+                Msg::Update { client_id, round, payload, train_loss, n_samples }
+            }
+            3 => Msg::Shutdown,
+            t => anyhow::bail!("unknown message tag {t}"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_variants() {
+        let msgs = [
+            Msg::Hello { client_id: 3 },
+            Msg::GlobalParams { round: 7, tensors: vec![vec![1.0, -2.0], vec![0.5]] },
+            Msg::Update {
+                client_id: 1,
+                round: 7,
+                payload: vec![1, 2, 3, 255],
+                train_loss: 0.25,
+                n_samples: 512,
+            },
+            Msg::Shutdown,
+        ];
+        for m in msgs {
+            assert_eq!(Msg::decode(&m.encode()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn garbage_errors() {
+        assert!(Msg::decode(&[9]).is_err());
+        assert!(Msg::decode(&[]).is_err());
+        assert!(Msg::decode(&[1, 0]).is_err());
+    }
+}

@@ -1,0 +1,107 @@
+//! Round bookkeeping: per-round statistics and the round-time model of
+//! paper §2.1 (`T_comm = T_comp + S′/B + T_decomp`).
+
+use std::time::Duration;
+
+use crate::fl::transport::bandwidth::LinkSpec;
+
+/// Statistics of one synchronous FedAvg round.
+#[derive(Debug, Clone, Default)]
+pub struct RoundStats {
+    pub round: u32,
+    /// Mean client training loss.
+    pub mean_loss: f64,
+    /// Sum of compressed payload bytes across clients.
+    pub payload_bytes: usize,
+    /// Sum of uncompressed gradient bytes across clients.
+    pub raw_bytes: usize,
+    /// Total client-side compression time.
+    pub comp_time: Duration,
+    /// Total server-side decompression time.
+    pub decomp_time: Duration,
+    /// Total (virtual or real) transmission time.
+    pub transmit_time: Duration,
+    /// Evaluation results if this round evaluated.
+    pub eval: Option<(f32, f32)>,
+}
+
+impl RoundStats {
+    /// Compression ratio achieved this round.
+    pub fn ratio(&self) -> f64 {
+        if self.payload_bytes == 0 {
+            0.0
+        } else {
+            self.raw_bytes as f64 / self.payload_bytes as f64
+        }
+    }
+
+    /// End-to-end communication time (paper Eq. 1):
+    /// `T_comp + S'/B + T_decomp` (per-round totals).
+    pub fn comm_time(&self) -> Duration {
+        self.comp_time + self.transmit_time + self.decomp_time
+    }
+
+    /// What the same round would have cost uncompressed: `S/B`.
+    pub fn uncompressed_time(&self, link: &LinkSpec) -> Duration {
+        link.transmit_time(self.raw_bytes)
+    }
+}
+
+/// Aggregated run summary across rounds.
+#[derive(Debug, Clone, Default)]
+pub struct RunSummary {
+    pub rounds: Vec<RoundStats>,
+    pub final_accuracy: Option<f32>,
+}
+
+impl RunSummary {
+    pub fn total_payload(&self) -> usize {
+        self.rounds.iter().map(|r| r.payload_bytes).sum()
+    }
+    pub fn total_raw(&self) -> usize {
+        self.rounds.iter().map(|r| r.raw_bytes).sum()
+    }
+    pub fn mean_ratio(&self) -> f64 {
+        let p = self.total_payload();
+        if p == 0 {
+            0.0
+        } else {
+            self.total_raw() as f64 / p as f64
+        }
+    }
+    pub fn total_comm_time(&self) -> Duration {
+        self.rounds.iter().map(|r| r.comm_time()).sum()
+    }
+    pub fn loss_curve(&self) -> Vec<f64> {
+        self.rounds.iter().map(|r| r.mean_loss).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_time_model() {
+        let st = RoundStats {
+            comp_time: Duration::from_millis(10),
+            decomp_time: Duration::from_millis(5),
+            transmit_time: Duration::from_millis(100),
+            payload_bytes: 100,
+            raw_bytes: 1000,
+            ..Default::default()
+        };
+        assert_eq!(st.comm_time(), Duration::from_millis(115));
+        assert!((st.ratio() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_aggregates() {
+        let mut s = RunSummary::default();
+        for _ in 0..3 {
+            s.rounds.push(RoundStats { payload_bytes: 10, raw_bytes: 100, ..Default::default() });
+        }
+        assert_eq!(s.total_payload(), 30);
+        assert!((s.mean_ratio() - 10.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,127 @@
+//! The FL parameter server: broadcasts global parameters, decompresses
+//! client payloads (Alg. 4) with one mirrored codec per client, and
+//! aggregates via FedAvg. Tracks the per-round communication statistics
+//! that drive the Fig. 11 experiments.
+
+use std::time::{Duration, Instant};
+
+use crate::compress::GradientCodec;
+use crate::fl::aggregate::{apply_update, FedAvg};
+use crate::fl::protocol::Msg;
+use crate::fl::round::RoundStats;
+use crate::fl::transport::Channel;
+use crate::tensor::{LayerGrad, LayerMeta, ModelGrad};
+
+/// Parameter-server state.
+pub struct Server {
+    /// Global model parameters (flat per layer, matching `metas`).
+    pub params: Vec<Vec<f32>>,
+    pub metas: Vec<LayerMeta>,
+    /// Server-side learning rate applied to the aggregated gradient.
+    pub lr: f32,
+    /// One decompressor per client (their predictor states are mirrors of
+    /// the corresponding client-side compressors).
+    pub codecs: Vec<Box<dyn GradientCodec>>,
+    round: u32,
+}
+
+impl Server {
+    pub fn new(
+        params: Vec<Vec<f32>>,
+        metas: Vec<LayerMeta>,
+        lr: f32,
+        codecs: Vec<Box<dyn GradientCodec>>,
+    ) -> Self {
+        Server { params, metas, lr, codecs, round: 0 }
+    }
+
+    pub fn round(&self) -> u32 {
+        self.round
+    }
+
+    /// Process one already-received client payload: decompress + absorb
+    /// into the aggregator. Returns decompression time. (Exposed for the
+    /// single-threaded simulation path.)
+    pub fn absorb_payload(
+        &mut self,
+        client_idx: usize,
+        payload: &[u8],
+        weight: f64,
+        agg: &mut FedAvg,
+    ) -> crate::Result<Duration> {
+        let t0 = Instant::now();
+        let grads = self.codecs[client_idx].decompress(payload, &self.metas)?;
+        let dt = t0.elapsed();
+        agg.add(&grads, weight);
+        Ok(dt)
+    }
+
+    /// Apply the aggregated mean gradient to the global parameters.
+    pub fn finish_round(&mut self, agg: FedAvg) {
+        let mean = agg.mean();
+        if !mean.is_empty() {
+            apply_update(&mut self.params, &mean, self.lr);
+        }
+        self.round += 1;
+    }
+
+    /// Full synchronous round over live channels (threaded/TCP mode):
+    /// broadcast params, collect updates, aggregate, step.
+    pub fn run_round(&mut self, channels: &mut [Box<dyn Channel>]) -> crate::Result<RoundStats> {
+        let round = self.round;
+        let bcast = Msg::GlobalParams { round, tensors: self.params.clone() };
+        for ch in channels.iter_mut() {
+            ch.send(&bcast)?;
+        }
+        let mut agg = FedAvg::new();
+        let mut stats = RoundStats { round, ..Default::default() };
+        for idx in 0..channels.len() {
+            match channels[idx].recv()? {
+                Msg::Update { client_id, round: r, payload, train_loss, n_samples } => {
+                    anyhow::ensure!(r == round, "client {client_id} answered round {r}");
+                    stats.payload_bytes += payload.len();
+                    stats.raw_bytes += self.metas.iter().map(|m| m.numel * 4).sum::<usize>();
+                    stats.mean_loss += train_loss as f64;
+                    let dt = self.absorb_payload(idx, &payload, n_samples as f64, &mut agg)?;
+                    stats.decomp_time += dt;
+                }
+                other => anyhow::bail!("server: unexpected {other:?}"),
+            }
+        }
+        stats.mean_loss /= channels.len().max(1) as f64;
+        self.finish_round(agg);
+        Ok(stats)
+    }
+
+    /// Send shutdown to all clients.
+    pub fn shutdown(&self, channels: &mut [Box<dyn Channel>]) -> crate::Result<()> {
+        for ch in channels.iter_mut() {
+            ch.send(&Msg::Shutdown)?;
+        }
+        Ok(())
+    }
+
+    /// Wait for the Hello of every client (threaded/TCP mode).
+    pub fn wait_hellos(&self, channels: &mut [Box<dyn Channel>]) -> crate::Result<()> {
+        for ch in channels.iter_mut() {
+            match ch.recv()? {
+                Msg::Hello { .. } => {}
+                other => anyhow::bail!("expected Hello, got {other:?}"),
+            }
+        }
+        Ok(())
+    }
+
+    /// View the current global parameters as a ModelGrad-shaped object
+    /// (for checkpoint compression examples).
+    pub fn params_as_model(&self) -> ModelGrad {
+        ModelGrad {
+            layers: self
+                .metas
+                .iter()
+                .zip(&self.params)
+                .map(|(m, p)| LayerGrad::new(m.clone(), p.clone()))
+                .collect(),
+        }
+    }
+}

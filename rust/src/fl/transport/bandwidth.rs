@@ -1,0 +1,129 @@
+//! The bandwidth-constrained link model (paper §2.1, §5.5): transmission
+//! time = S′/B plus a fixed latency, optionally enforced in real time
+//! (token bucket sleeping) or accounted analytically (fast simulation —
+//! what the paper does by "calculating the expected transmission time
+//! under limited bandwidth and introducing artificial latency" [43]).
+
+use std::time::{Duration, Instant};
+
+/// Link parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkSpec {
+    /// Bandwidth in bits per second (e.g. `10e6` = 10 Mbps).
+    pub bits_per_sec: f64,
+    /// One-way latency.
+    pub latency: Duration,
+}
+
+impl LinkSpec {
+    pub fn mbps(mbps: f64) -> Self {
+        LinkSpec { bits_per_sec: mbps * 1e6, latency: Duration::from_millis(20) }
+    }
+    /// Unthrottled link.
+    pub fn infinite() -> Self {
+        LinkSpec { bits_per_sec: f64::INFINITY, latency: Duration::ZERO }
+    }
+    /// Time to transmit `bytes` over this link.
+    pub fn transmit_time(&self, bytes: usize) -> Duration {
+        if !self.bits_per_sec.is_finite() {
+            return self.latency;
+        }
+        let secs = (bytes as f64 * 8.0) / self.bits_per_sec;
+        self.latency + Duration::from_secs_f64(secs)
+    }
+}
+
+/// Accounting-only link simulator: tracks virtual transmission time
+/// without sleeping — used by the Fig. 11 bench to sweep 1 Mbps–1 Gbps in
+/// reasonable wall-clock time.
+#[derive(Debug, Clone)]
+pub struct VirtualLink {
+    pub spec: LinkSpec,
+    pub bytes_sent: usize,
+    pub virtual_time: Duration,
+}
+
+impl VirtualLink {
+    pub fn new(spec: LinkSpec) -> Self {
+        VirtualLink { spec, bytes_sent: 0, virtual_time: Duration::ZERO }
+    }
+    /// Account one transfer; returns its transmission time.
+    pub fn send(&mut self, bytes: usize) -> Duration {
+        let t = self.spec.transmit_time(bytes);
+        self.bytes_sent += bytes;
+        self.virtual_time += t;
+        t
+    }
+}
+
+/// Real-time throttler (token bucket): sleeps so the observed throughput
+/// matches the link spec. Used by the TCP transport for live runs.
+pub struct Throttler {
+    spec: LinkSpec,
+    /// Time before which the link is busy.
+    busy_until: Instant,
+}
+
+impl Throttler {
+    pub fn new(spec: LinkSpec) -> Self {
+        Throttler { spec, busy_until: Instant::now() }
+    }
+
+    /// Block until `bytes` may be considered transmitted.
+    pub fn consume(&mut self, bytes: usize) {
+        let dur = self.spec.transmit_time(bytes);
+        let now = Instant::now();
+        let start = self.busy_until.max(now);
+        self.busy_until = start + dur;
+        let wait = self.busy_until.saturating_duration_since(now);
+        if !wait.is_zero() {
+            std::thread::sleep(wait);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transmit_time_formula() {
+        let link = LinkSpec { bits_per_sec: 8e6, latency: Duration::ZERO };
+        // 1 MB over 8 Mbps = 1 s.
+        assert!((link.transmit_time(1_000_000).as_secs_f64() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_added() {
+        let link = LinkSpec { bits_per_sec: 8e6, latency: Duration::from_millis(50) };
+        assert!((link.transmit_time(0).as_secs_f64() - 0.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn infinite_link_costs_nothing() {
+        let link = LinkSpec::infinite();
+        assert_eq!(link.transmit_time(1 << 30), Duration::ZERO);
+    }
+
+    #[test]
+    fn virtual_link_accumulates() {
+        let mut v = VirtualLink::new(LinkSpec { bits_per_sec: 8e6, latency: Duration::ZERO });
+        v.send(500_000);
+        v.send(500_000);
+        assert_eq!(v.bytes_sent, 1_000_000);
+        assert!((v.virtual_time.as_secs_f64() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throttler_enforces_rate() {
+        // 80 kbit/s -> 10 KB takes ~1s; use smaller scale to keep test fast:
+        // 8 Mbit/s -> 100 KB takes ~0.1 s.
+        let mut t = Throttler::new(LinkSpec { bits_per_sec: 8e6, latency: Duration::ZERO });
+        let t0 = Instant::now();
+        t.consume(50_000);
+        t.consume(50_000);
+        let elapsed = t0.elapsed().as_secs_f64();
+        assert!(elapsed >= 0.09, "elapsed {elapsed}");
+        assert!(elapsed < 0.5, "elapsed {elapsed}");
+    }
+}

@@ -1,0 +1,74 @@
+//! In-process transport: paired mpsc channels with optional bandwidth
+//! throttling. The default for single-process FL simulation.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use super::bandwidth::{LinkSpec, Throttler};
+use super::Channel;
+use crate::fl::protocol::Msg;
+
+/// One endpoint of an in-process duplex channel.
+pub struct InProcChannel {
+    tx: Sender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+    throttle: Option<Throttler>,
+}
+
+/// Create a connected (server_end, client_end) pair. `link` throttles
+/// sends on **both** ends in real time when set.
+pub fn pair(link: Option<LinkSpec>) -> (InProcChannel, InProcChannel) {
+    let (tx_a, rx_b) = channel();
+    let (tx_b, rx_a) = channel();
+    (
+        InProcChannel { tx: tx_a, rx: rx_a, throttle: link.map(Throttler::new) },
+        InProcChannel { tx: tx_b, rx: rx_b, throttle: link.map(Throttler::new) },
+    )
+}
+
+impl Channel for InProcChannel {
+    fn send(&mut self, msg: &Msg) -> crate::Result<()> {
+        let bytes = msg.encode();
+        if let Some(t) = &mut self.throttle {
+            t.consume(bytes.len());
+        }
+        self.tx.send(bytes).map_err(|_| anyhow::anyhow!("peer hung up"))
+    }
+
+    fn recv(&mut self) -> crate::Result<Msg> {
+        let bytes = self.rx.recv().map_err(|_| anyhow::anyhow!("peer hung up"))?;
+        Msg::decode(&bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ping_pong() {
+        let (mut a, mut b) = pair(None);
+        a.send(&Msg::Hello { client_id: 1 }).unwrap();
+        assert_eq!(b.recv().unwrap(), Msg::Hello { client_id: 1 });
+        b.send(&Msg::Shutdown).unwrap();
+        assert_eq!(a.recv().unwrap(), Msg::Shutdown);
+    }
+
+    #[test]
+    fn across_threads() {
+        let (mut a, mut b) = pair(None);
+        let h = std::thread::spawn(move || {
+            let m = b.recv().unwrap();
+            b.send(&m).unwrap();
+        });
+        a.send(&Msg::Hello { client_id: 42 }).unwrap();
+        assert_eq!(a.recv().unwrap(), Msg::Hello { client_id: 42 });
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn hung_up_errors() {
+        let (mut a, b) = pair(None);
+        drop(b);
+        assert!(a.send(&Msg::Shutdown).is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! Transports carrying [`crate::fl::protocol::Msg`] frames, plus the
+//! bandwidth-constrained link model used for the paper's Fig. 11
+//! end-to-end communication-time experiments.
+
+pub mod bandwidth;
+pub mod inproc;
+pub mod tcp;
+
+use crate::fl::protocol::Msg;
+
+/// A bidirectional, blocking message channel endpoint.
+pub trait Channel: Send {
+    fn send(&mut self, msg: &Msg) -> crate::Result<()>;
+    fn recv(&mut self) -> crate::Result<Msg>;
+}

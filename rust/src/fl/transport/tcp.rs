@@ -1,0 +1,72 @@
+//! TCP transport: length-prefixed frames over `std::net`, with optional
+//! real-time bandwidth throttling on send. Lets the FL runtime span real
+//! processes/machines (blocking sockets + threads; no async runtime is
+//! available offline, and the message pattern is strictly
+//! request/response per round).
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+
+use super::bandwidth::{LinkSpec, Throttler};
+use super::Channel;
+use crate::fl::protocol::Msg;
+
+/// Maximum accepted frame (guards against corrupt length prefixes).
+const MAX_FRAME: usize = 1 << 30;
+
+/// A framed TCP endpoint.
+pub struct TcpChannel {
+    stream: TcpStream,
+    throttle: Option<Throttler>,
+}
+
+impl TcpChannel {
+    pub fn new(stream: TcpStream, link: Option<LinkSpec>) -> crate::Result<Self> {
+        stream.set_nodelay(true)?;
+        Ok(TcpChannel { stream, throttle: link.map(Throttler::new) })
+    }
+
+    /// Connect to a server.
+    pub fn connect(addr: &str, link: Option<LinkSpec>) -> crate::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        Self::new(stream, link)
+    }
+}
+
+/// Listen and accept `n` client channels (in accept order).
+pub fn accept_n(
+    listener: &TcpListener,
+    n: usize,
+    link: Option<LinkSpec>,
+) -> crate::Result<Vec<TcpChannel>> {
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (stream, _) = listener.accept()?;
+        out.push(TcpChannel::new(stream, link)?);
+    }
+    Ok(out)
+}
+
+impl Channel for TcpChannel {
+    fn send(&mut self, msg: &Msg) -> crate::Result<()> {
+        let bytes = msg.encode();
+        if let Some(t) = &mut self.throttle {
+            t.consume(bytes.len() + 4);
+        }
+        self.stream.write_all(&(bytes.len() as u32).to_le_bytes())?;
+        self.stream.write_all(&bytes)?;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> crate::Result<Msg> {
+        let mut len_buf = [0u8; 4];
+        self.stream.read_exact(&mut len_buf)?;
+        let len = u32::from_le_bytes(len_buf) as usize;
+        if len > MAX_FRAME {
+            anyhow::bail!("frame length {len} exceeds cap");
+        }
+        let mut buf = vec![0u8; len];
+        self.stream.read_exact(&mut buf)?;
+        Msg::decode(&buf)
+    }
+}

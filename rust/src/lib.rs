@@ -1,0 +1,32 @@
+//! # FedGEC — gradient-aware error-bounded lossy compression for federated learning
+//!
+//! Reproduction of *"An Efficient Gradient-Aware Error-Bounded Lossy
+//! Compressor for Federated Learning"* (CS.LG 2025) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the production compression pipeline
+//!   ([`compress`]), comparator baselines ([`baselines`]), and a complete
+//!   federated-learning runtime ([`fl`], [`coordinator`]) with simulated
+//!   bandwidth links.
+//! * **L2/L1 (python/, build time only)** — a JAX micro-CNN whose
+//!   `train_epoch`/`eval` graphs and a fused Pallas `predict_quantize`
+//!   kernel are AOT-lowered to HLO text and executed from Rust through
+//!   PJRT ([`runtime`]).
+//!
+//! See `DESIGN.md` for the paper-to-module map and `EXPERIMENTS.md` for
+//! the reproduced tables/figures.
+
+pub mod util;
+pub mod tensor;
+pub mod compress;
+pub mod baselines;
+pub mod fl;
+pub mod train;
+pub mod runtime;
+pub mod metrics;
+pub mod coordinator;
+pub mod config;
+pub mod cli;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,197 @@
+//! `fedgec` — the FL + gradient-compression launcher.
+//!
+//! Subcommands:
+//!   run            single-process FL simulation (HLO or native trainer)
+//!   serve          TCP parameter server (native trainer clients connect)
+//!   client         TCP client joining a `serve` federation
+//!   compress-file  run any codec over a raw f32 file, report CR + bound
+//!   info           environment / artifact status
+
+use fedgec::cli::Args;
+
+use fedgec::config::RunConfig;
+use fedgec::fl::transport::bandwidth::LinkSpec;
+use fedgec::tensor::{LayerGrad, LayerMeta, ModelGrad};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("client") => cmd_client(&args),
+        Some("compress-file") => cmd_compress_file(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    println!(
+        "fedgec — gradient-aware error-bounded lossy compression for FL\n\
+         \n\
+         USAGE:\n\
+         fedgec run [--config FILE] [--model M] [--dataset D] [--codec C]\n\
+         \u{20}          [--rounds N] [--rel_error_bound EB] [--bandwidth_mbps B]\n\
+         \u{20}          [--engine native|hlo] ... (any RunConfig key)\n\
+         fedgec serve --addr 127.0.0.1:7070 [--config FILE] [...]\n\
+         fedgec client --addr 127.0.0.1:7070 --id K [--config FILE] [...]\n\
+         fedgec compress-file --in FILE [--codec fedgec] [--eb 1e-2]\n\
+         fedgec info"
+    );
+}
+
+fn load_config(args: &Args) -> fedgec::Result<RunConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::from_file(path)?,
+        None => RunConfig::default(),
+    };
+    for (k, v) in &args.flags {
+        if k == "config" || k == "addr" || k == "id" || k == "threaded" || k == "in" || k == "out" {
+            continue;
+        }
+        cfg.apply_override(k, v)?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> fedgec::Result<()> {
+    let cfg = load_config(args)?;
+    let summary = if args.has("threaded") {
+        fedgec::coordinator::run_threaded(&cfg)?
+    } else {
+        fedgec::coordinator::run_local(&cfg)?
+    };
+    fedgec::coordinator::print_summary(&cfg, &summary);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> fedgec::Result<()> {
+    let cfg = load_config(args)?;
+    anyhow::ensure!(cfg.model == "native", "TCP mode uses the native trainer (model=native)");
+    let addr = args.get_or("addr", "127.0.0.1:7070");
+    let listener = std::net::TcpListener::bind(addr)?;
+    println!("server listening on {addr}, waiting for {} clients…", cfg.n_clients);
+    let chans = fedgec::fl::transport::tcp::accept_n(&listener, cfg.n_clients, None)?;
+    let mut channels: Vec<Box<dyn fedgec::fl::transport::Channel>> =
+        chans.into_iter().map(|c| Box::new(c) as _).collect();
+    let proto = fedgec::train::native::NativeNet::new(cfg.dataset.classes(), cfg.seed);
+    let metas = proto.layer_metas();
+    let init =
+        vec![proto.conv_w.clone(), proto.conv_b.clone(), proto.fc_w.clone(), proto.fc_b.clone()];
+    let codecs: fedgec::Result<Vec<_>> =
+        (0..cfg.n_clients).map(|_| fedgec::coordinator::build_codec(&cfg)).collect();
+    let mut server = fedgec::fl::server::Server::new(init, metas, cfg.server_lr, codecs?);
+    server.wait_hellos(&mut channels)?;
+    for r in 0..cfg.rounds {
+        let stats = server.run_round(&mut channels)?;
+        println!(
+            "round {r}: loss {:.4} CR {:.2} payload {:.1} KB",
+            stats.mean_loss,
+            stats.ratio(),
+            stats.payload_bytes as f64 / 1e3
+        );
+    }
+    server.shutdown(&mut channels)?;
+    println!("done.");
+    Ok(())
+}
+
+fn cmd_client(args: &Args) -> fedgec::Result<()> {
+    let cfg = load_config(args)?;
+    let addr = args.get_or("addr", "127.0.0.1:7070");
+    let id = args.get_usize("id", 0)? as u32;
+    let link = if cfg.link.bits_per_sec.is_finite() { Some(cfg.link) } else { None };
+    let mut channel = fedgec::fl::transport::tcp::TcpChannel::connect(addr, link)?;
+    let ds = fedgec::train::data::SynthDataset::new(cfg.dataset, cfg.seed);
+    let mut rng = fedgec::util::rng::Rng::new(cfg.seed ^ 0xDA);
+    let mut rng = rng.fork(id as u64);
+    let slice = ds.sample(&mut rng, cfg.samples_per_client, cfg.class_skew);
+    let trainer = fedgec::coordinator::native_trainer::NativeTrainer::new(
+        cfg.dataset.classes(),
+        slice,
+        cfg.local_lr,
+        cfg.seed,
+    );
+    let codec = fedgec::coordinator::build_codec(&cfg)?;
+    let mut client = fedgec::fl::client::Client::new(id, Box::new(trainer), codec);
+    println!("client {id} connected to {addr}");
+    client.run(&mut channel)
+}
+
+fn cmd_compress_file(args: &Args) -> fedgec::Result<()> {
+    let path = args
+        .get("in")
+        .ok_or_else(|| anyhow::anyhow!("--in FILE required (raw little-endian f32s)"))?;
+    let bytes = std::fs::read(path)?;
+    let data = fedgec::compress::blob::bytes_to_f32s(&bytes)?;
+    let eb = args.get_f64("eb", 1e-2)?;
+    let codec_name = args.get_or("codec", "fedgec");
+    let mut codec = fedgec::baselines::make_codec(
+        codec_name,
+        fedgec::compress::quant::ErrorBound::Rel(eb),
+        fedgec::baselines::qsgd_bits_for_bound(eb),
+    )
+    .ok_or_else(|| anyhow::anyhow!("unknown codec {codec_name}"))?;
+    let meta = LayerMeta::other("file", data.len());
+    let grads = ModelGrad { layers: vec![LayerGrad::new(meta.clone(), data)] };
+    let t0 = std::time::Instant::now();
+    let payload = codec.compress(&grads)?;
+    let ct = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let recon = codec.decompress(&payload, &[meta])?;
+    let dt = t1.elapsed();
+    let max_err = grads.layers[0]
+        .data
+        .iter()
+        .zip(&recon.layers[0].data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!(
+        "{}: {} -> {} bytes (CR {:.2}) | compress {} decompress {} | max err {:.3e}",
+        codec_name,
+        grads.byte_size(),
+        payload.len(),
+        grads.byte_size() as f64 / payload.len() as f64,
+        fedgec::metrics::fmt_duration(ct),
+        fedgec::metrics::fmt_duration(dt),
+        max_err
+    );
+    Ok(())
+}
+
+fn cmd_info() -> fedgec::Result<()> {
+    println!("fedgec {}", env!("CARGO_PKG_VERSION"));
+    let dir = fedgec::runtime::Runtime::default_dir();
+    println!("artifacts dir: {dir:?}");
+    match fedgec::runtime::manifest::Manifest::load(&dir) {
+        Ok(m) => {
+            println!(
+                "manifest: {} models, {} kernels (epoch = {}x{} batches)",
+                m.models.len(),
+                m.kernels.len(),
+                m.batches_per_epoch,
+                m.batch_size
+            );
+            match fedgec::runtime::Runtime::new(&dir) {
+                Ok(rt) => println!("PJRT platform: {}", rt.platform()),
+                Err(e) => println!("PJRT unavailable: {e}"),
+            }
+        }
+        Err(e) => println!("no artifacts ({e}); run `make artifacts`"),
+    }
+    let _ = LinkSpec::mbps(10.0);
+    Ok(())
+}

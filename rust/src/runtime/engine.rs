@@ -1,0 +1,129 @@
+//! The HLO predict engine: runs the Pallas `predict_quantize` kernel's
+//! lowering through PJRT as the codec's predict stage
+//! ([`crate::compress::pipeline::PredictBackend`]).
+//!
+//! Layers are processed in fixed-size blocks matching the AOT kernel
+//! shape; the tail block is zero-padded and the pad lanes discarded.
+//! σ_prev is floored to `SIGMA_EPS` on the Rust side exactly as the kernel
+//! does internally, so padding cannot produce NaNs.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::compress::fused::FusedParams;
+use crate::compress::pipeline::PredictBackend;
+use crate::runtime::{literal_f32, to_f32s, Runtime};
+
+/// Predict-stage engine backed by a PJRT-compiled Pallas kernel.
+pub struct HloPredictEngine {
+    rt: Rc<RefCell<Runtime>>,
+    file: String,
+    block: usize,
+}
+
+impl HloPredictEngine {
+    /// Load the kernel artifact for block size `block` (e.g. 4096/65536).
+    pub fn new(rt: Rc<RefCell<Runtime>>, block: usize) -> crate::Result<Self> {
+        let file = format!("predict_quantize_{block}.hlo.txt");
+        rt.borrow_mut().load(&file)?;
+        Ok(HloPredictEngine { rt, file, block })
+    }
+
+    fn run_block(
+        &self,
+        prev_abs: &[f32],
+        memory: &[f32],
+        signs: &[f32],
+        grad_zeros: &[f32],
+        p: &FusedParams,
+    ) -> crate::Result<(Vec<f32>, Vec<f32>)> {
+        let scalars = [
+            p.beta,
+            p.mu_curr,
+            p.sigma_curr,
+            p.mu_prev,
+            p.sigma_prev,
+            // The kernel divides by two_delta; it is never called with 0
+            // (the pipeline escapes whole layers with degenerate deltas),
+            // but guard anyway so padding paths stay finite.
+            if p.two_delta > 0.0 { p.two_delta } else { 1.0 },
+            0.0,
+            0.0,
+        ];
+        let n = self.block as i64;
+        let inputs = [
+            literal_f32(prev_abs, &[n])?,
+            literal_f32(memory, &[n])?,
+            literal_f32(signs, &[n])?,
+            literal_f32(grad_zeros, &[n])?,
+            literal_f32(&scalars, &[8])?,
+        ];
+        let rt = self.rt.borrow();
+        let out = rt.exec(&self.file, &inputs)?;
+        if out.len() != 3 {
+            anyhow::bail!("kernel returned {} outputs, expected 3", out.len());
+        }
+        // outputs: (codes, ghat, new_memory); codes unused here — the
+        // pipeline quantizes against ghat so escape handling is shared
+        // with the native path.
+        let ghat = to_f32s(&out[1])?;
+        let new_mem = to_f32s(&out[2])?;
+        Ok((ghat, new_mem))
+    }
+}
+
+// `Rc<RefCell<Runtime>>` is not Send; the engine is only used from the
+// thread that owns the runtime. The PredictBackend trait requires Send for
+// the multi-threaded native pipelines, so we assert single-thread use here.
+// Safety: HloPredictEngine instances are created, used and dropped on one
+// thread (the coordinator's); the FL runtime never moves codecs with HLO
+// engines across threads (enforced by `Coordinator::new_hlo`).
+unsafe impl Send for HloPredictEngine {}
+
+impl PredictBackend for HloPredictEngine {
+    fn predict(
+        &mut self,
+        prev_abs: &[f32],
+        memory: &mut [f32],
+        signs: &[f32],
+        p: &FusedParams,
+    ) -> anyhow::Result<Vec<f32>> {
+        let n = prev_abs.len();
+        if memory.len() != n || signs.len() != n {
+            anyhow::bail!("engine: length mismatch");
+        }
+        let b = self.block;
+        let zeros = vec![0.0f32; b];
+        let mut ghat = Vec::with_capacity(n);
+        let mut start = 0usize;
+        let mut pa = vec![0.0f32; b];
+        let mut me = vec![0.0f32; b];
+        let mut sg = vec![0.0f32; b];
+        while start < n {
+            let len = (n - start).min(b);
+            if len == b {
+                let (g, m) = self.run_block(
+                    &prev_abs[start..start + b],
+                    &memory[start..start + b],
+                    &signs[start..start + b],
+                    &zeros,
+                    p,
+                )?;
+                memory[start..start + b].copy_from_slice(&m);
+                ghat.extend_from_slice(&g);
+            } else {
+                pa[..len].copy_from_slice(&prev_abs[start..start + len]);
+                pa[len..].fill(0.0);
+                me[..len].copy_from_slice(&memory[start..start + len]);
+                me[len..].fill(0.0);
+                sg[..len].copy_from_slice(&signs[start..start + len]);
+                sg[len..].fill(0.0);
+                let (g, m) = self.run_block(&pa, &me, &sg, &zeros, p)?;
+                memory[start..start + len].copy_from_slice(&m[..len]);
+                ghat.extend_from_slice(&g[..len]);
+            }
+            start += len;
+        }
+        Ok(ghat)
+    }
+}

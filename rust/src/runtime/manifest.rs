@@ -1,0 +1,166 @@
+//! Reader for `artifacts/manifest.json` — the shape contract emitted by
+//! `python/compile/aot.py` so the Rust side hard-codes no protocol.
+
+use crate::util::json::Json;
+use std::path::Path;
+
+/// One trainable model's artifacts.
+#[derive(Debug, Clone)]
+pub struct ModelArtifacts {
+    pub key: String,
+    pub train_file: String,
+    pub eval_file: String,
+    pub layer_names: Vec<String>,
+    pub param_shapes: Vec<Vec<usize>>,
+    pub num_classes: usize,
+}
+
+/// One predict_quantize kernel artifact.
+#[derive(Debug, Clone)]
+pub struct KernelArtifact {
+    pub file: String,
+    pub n: usize,
+    pub tile: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub batches_per_epoch: usize,
+    pub batch_size: usize,
+    pub eval_n: usize,
+    pub img: [usize; 3],
+    pub models: Vec<ModelArtifacts>,
+    pub kernels: Vec<KernelArtifact>,
+}
+
+impl Manifest {
+    pub fn load(art_dir: impl AsRef<Path>) -> crate::Result<Manifest> {
+        let path = art_dir.as_ref().join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("read {path:?}: {e} (run `make artifacts`)"))?;
+        Self::parse(&src)
+    }
+
+    pub fn parse(src: &str) -> crate::Result<Manifest> {
+        let v = Json::parse(src)?;
+        let img_arr = v.get("img").and_then(Json::as_arr).unwrap_or(&[]);
+        let mut img = [32usize, 32, 3];
+        for (i, x) in img_arr.iter().take(3).enumerate() {
+            img[i] = x.as_usize().unwrap_or(img[i]);
+        }
+        let mut models = Vec::new();
+        if let Some(obj) = v.get("models").and_then(Json::as_obj) {
+            for (key, m) in obj {
+                let layer_names = m
+                    .get("layer_names")
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().filter_map(|s| s.as_str().map(String::from)).collect())
+                    .unwrap_or_default();
+                let param_shapes = m
+                    .get("param_shapes")
+                    .and_then(Json::as_arr)
+                    .map(|a| {
+                        a.iter()
+                            .map(|shape| {
+                                shape
+                                    .as_arr()
+                                    .map(|dims| {
+                                        dims.iter().filter_map(Json::as_usize).collect::<Vec<_>>()
+                                    })
+                                    .unwrap_or_default()
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                models.push(ModelArtifacts {
+                    key: key.clone(),
+                    train_file: m.str_or("train", "").to_string(),
+                    eval_file: m.str_or("eval", "").to_string(),
+                    layer_names,
+                    param_shapes,
+                    num_classes: m.usize_or("num_classes", 10),
+                });
+            }
+        }
+        let mut kernels = Vec::new();
+        if let Some(obj) = v.get("kernels").and_then(Json::as_obj) {
+            for (_, k) in obj {
+                kernels.push(KernelArtifact {
+                    file: k.str_or("file", "").to_string(),
+                    n: k.usize_or("n", 0),
+                    tile: k.usize_or("tile", 0),
+                });
+            }
+        }
+        kernels.sort_by_key(|k| k.n);
+        Ok(Manifest {
+            batches_per_epoch: v.usize_or("batches_per_epoch", 8),
+            batch_size: v.usize_or("batch_size", 32),
+            eval_n: v.usize_or("eval_n", 256),
+            img,
+            models,
+            kernels,
+        })
+    }
+
+    /// Find a model's artifacts by key (`micro_resnet_c10`…).
+    pub fn model(&self, key: &str) -> Option<&ModelArtifacts> {
+        self.models.iter().find(|m| m.key == key)
+    }
+
+    /// Largest kernel with `n <= cap`, or the smallest one.
+    pub fn kernel_for(&self, numel: usize) -> Option<&KernelArtifact> {
+        self.kernels.iter().rev().find(|k| k.n <= numel.max(1)).or_else(|| self.kernels.first())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "batch_size": 32, "batches_per_epoch": 8, "eval_n": 256,
+        "img": [32, 32, 3],
+        "kernels": {"4096": {"file": "pq4096.hlo.txt", "n": 4096, "tile": 4096}},
+        "models": {"micro_resnet_c10": {
+            "train": "t.hlo.txt", "eval": "e.hlo.txt",
+            "layer_names": ["stem.conv", "stem.bias"],
+            "param_shapes": [[16, 3, 3, 3], [16]],
+            "num_classes": 10}}
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.batch_size, 32);
+        assert_eq!(m.img, [32, 32, 3]);
+        let model = m.model("micro_resnet_c10").unwrap();
+        assert_eq!(model.layer_names.len(), 2);
+        assert_eq!(model.param_shapes[0], vec![16, 3, 3, 3]);
+        assert_eq!(m.kernels.len(), 1);
+        assert_eq!(m.kernel_for(100_000).unwrap().n, 4096);
+    }
+
+    #[test]
+    fn missing_model_is_none() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.model("nope").is_none());
+    }
+
+    /// The real manifest (when artifacts exist) parses and is coherent
+    /// with the Rust model zoo.
+    #[test]
+    fn real_manifest_if_present() {
+        let dir = crate::runtime::Runtime::default_dir();
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this environment
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(!m.kernels.is_empty());
+        for model in &m.models {
+            assert!(!model.layer_names.is_empty());
+            assert_eq!(model.layer_names.len(), model.param_shapes.len());
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client via
+//! the `xla` crate. This is the only place Python-born code runs — and it
+//! runs as compiled XLA, never as Python (DESIGN.md §1).
+//!
+//! Pattern from /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile` → `execute`.
+
+pub mod engine;
+pub mod manifest;
+pub mod trainer;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+/// A PJRT CPU client plus a cache of compiled executables keyed by
+/// artifact name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    art_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU runtime rooted at an artifacts directory.
+    pub fn new(art_dir: impl AsRef<Path>) -> crate::Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime { client, exes: HashMap::new(), art_dir: art_dir.as_ref().to_path_buf() })
+    }
+
+    /// Default artifacts directory: `$FEDGEC_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("FEDGEC_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| "artifacts".into())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact (cached by file name).
+    pub fn load(&mut self, file: &str) -> crate::Result<()> {
+        if self.exes.contains_key(file) {
+            return Ok(());
+        }
+        let path = self.art_dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parse HLO text {path:?} (run `make artifacts`?)"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compile {file}"))?;
+        self.exes.insert(file.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute a loaded artifact. The AOT side lowers with
+    /// `return_tuple=True`, so the single output literal is decomposed
+    /// into the tuple elements.
+    pub fn exec(&self, file: &str, inputs: &[xla::Literal]) -> crate::Result<Vec<xla::Literal>> {
+        let exe = self
+            .exes
+            .get(file)
+            .ok_or_else(|| anyhow::anyhow!("artifact {file} not loaded"))?;
+        let result =
+            exe.execute::<xla::Literal>(inputs).with_context(|| format!("execute {file}"))?;
+        let out = result[0][0].to_literal_sync()?;
+        Ok(out.to_tuple()?)
+    }
+
+    /// Is an artifact file present on disk (without loading it)?
+    pub fn has_artifact(&self, file: &str) -> bool {
+        self.art_dir.join(file).exists()
+    }
+
+    pub fn art_dir(&self) -> &Path {
+        &self.art_dir
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> crate::Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    if dims.len() == 1 && dims[0] as usize == data.len() {
+        return Ok(lit);
+    }
+    Ok(lit.reshape(dims)?)
+}
+
+/// Build an i32 literal of the given shape.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> crate::Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    if dims.len() == 1 && dims[0] as usize == data.len() {
+        return Ok(lit);
+    }
+    Ok(lit.reshape(dims)?)
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_f32s(lit: &xla::Literal) -> crate::Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract a scalar f32.
+pub fn to_f32_scalar(lit: &xla::Literal) -> crate::Result<f32> {
+    let v = lit.to_vec::<f32>()?;
+    v.first().copied().ok_or_else(|| anyhow::anyhow!("empty literal"))
+}

@@ -1,0 +1,142 @@
+//! The HLO trainer: runs the JAX micro-CNN `train_epoch` / `eval` graphs
+//! from Rust. Parameters live in Rust as flat f32 vectors (ordered per the
+//! manifest's `layer_names`); every round the coordinator feeds them
+//! through PJRT and receives the updated parameters + loss back.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use super::manifest::{Manifest, ModelArtifacts};
+use super::{literal_f32, literal_i32, to_f32_scalar, to_f32s, Runtime};
+
+/// Model parameters as flat vectors, ordered per manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Params {
+    pub tensors: Vec<Vec<f32>>,
+}
+
+impl Params {
+    pub fn numel(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+}
+
+/// PJRT-backed trainer for one model artifact.
+pub struct HloTrainer {
+    rt: Rc<RefCell<Runtime>>,
+    pub model: ModelArtifacts,
+    pub manifest: Manifest,
+}
+
+impl HloTrainer {
+    pub fn new(rt: Rc<RefCell<Runtime>>, manifest: &Manifest, key: &str) -> crate::Result<Self> {
+        let model = manifest
+            .model(key)
+            .ok_or_else(|| anyhow::anyhow!("model {key} not in manifest"))?
+            .clone();
+        {
+            let mut r = rt.borrow_mut();
+            r.load(&model.train_file)?;
+            r.load(&model.eval_file)?;
+        }
+        Ok(HloTrainer { rt, model, manifest: manifest.clone() })
+    }
+
+    /// Deterministic He-style initialization matching model.py's scheme
+    /// (same structure; exact values come from the Rust RNG so the whole
+    /// FL run is reproducible from one seed without Python).
+    pub fn init_params(&self, seed: u64) -> Params {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let tensors = self
+            .model
+            .param_shapes
+            .iter()
+            .map(|shape| {
+                let numel: usize = shape.iter().product();
+                if shape.len() == 1 {
+                    vec![0.0; numel] // biases start at zero
+                } else {
+                    let fan_in: usize =
+                        if shape.len() == 4 { shape[1] * shape[2] * shape[3] } else { shape[1] };
+                    let std = (2.0 / fan_in as f64).sqrt() as f32;
+                    (0..numel).map(|_| rng.normal_f32(0.0, std)).collect()
+                }
+            })
+            .collect();
+        Params { tensors }
+    }
+
+    fn param_literals(&self, params: &Params) -> crate::Result<Vec<xla::Literal>> {
+        params
+            .tensors
+            .iter()
+            .zip(&self.model.param_shapes)
+            .map(|(t, shape)| {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                literal_f32(t, &dims)
+            })
+            .collect()
+    }
+
+    /// One local epoch of minibatch SGD inside XLA.
+    ///
+    /// `xs`: flat `[nb*bs*H*W*C]` images, `ys`: `[nb*bs]` labels.
+    /// Returns (new params, mean loss).
+    pub fn train_epoch(
+        &self,
+        params: &Params,
+        xs: &[f32],
+        ys: &[i32],
+        lr: f32,
+    ) -> crate::Result<(Params, f32)> {
+        let m = &self.manifest;
+        let (nb, bs) = (m.batches_per_epoch, m.batch_size);
+        let [h, w, c] = m.img;
+        anyhow::ensure!(xs.len() == nb * bs * h * w * c, "xs len {}", xs.len());
+        anyhow::ensure!(ys.len() == nb * bs, "ys len {}", ys.len());
+        let mut inputs = self.param_literals(params)?;
+        inputs.push(literal_f32(xs, &[nb as i64, bs as i64, h as i64, w as i64, c as i64])?);
+        inputs.push(literal_i32(ys, &[nb as i64, bs as i64])?);
+        inputs.push(xla::Literal::scalar(lr));
+        let out = self.rt.borrow().exec(&self.model.train_file, &inputs)?;
+        let n_params = self.model.param_shapes.len();
+        anyhow::ensure!(out.len() == n_params + 1, "train returned {} outputs", out.len());
+        let mut tensors = Vec::with_capacity(n_params);
+        for lit in &out[..n_params] {
+            tensors.push(to_f32s(lit)?);
+        }
+        let loss = to_f32_scalar(&out[n_params])?;
+        Ok((Params { tensors }, loss))
+    }
+
+    /// Evaluate on a fixed-size batch; returns (mean loss, accuracy).
+    pub fn eval(&self, params: &Params, xs: &[f32], ys: &[i32]) -> crate::Result<(f32, f32)> {
+        let m = &self.manifest;
+        let [h, w, c] = m.img;
+        let n = m.eval_n;
+        anyhow::ensure!(xs.len() == n * h * w * c && ys.len() == n, "eval shapes");
+        let mut inputs = self.param_literals(params)?;
+        inputs.push(literal_f32(xs, &[n as i64, h as i64, w as i64, c as i64])?);
+        inputs.push(literal_i32(ys, &[n as i64])?);
+        let out = self.rt.borrow().exec(&self.model.eval_file, &inputs)?;
+        anyhow::ensure!(out.len() == 2, "eval returned {} outputs", out.len());
+        let loss = to_f32_scalar(&out[0])?;
+        let correct = to_f32_scalar(&out[1])?;
+        Ok((loss, correct / n as f32))
+    }
+
+    /// Layer metadata for the compressor, derived from manifest names +
+    /// shapes (conv = rank 4, dense = rank 2, else other).
+    pub fn layer_metas(&self) -> Vec<crate::tensor::LayerMeta> {
+        self.model
+            .layer_names
+            .iter()
+            .zip(&self.model.param_shapes)
+            .map(|(name, shape)| match shape.len() {
+                4 => crate::tensor::LayerMeta::conv(name, shape[0], shape[1], shape[2], shape[3]),
+                2 => crate::tensor::LayerMeta::dense(name, shape[0], shape[1]),
+                _ => crate::tensor::LayerMeta::other(name, shape.iter().product()),
+            })
+            .collect()
+    }
+}

@@ -1,0 +1,216 @@
+//! Gradient tensors and layer metadata.
+//!
+//! The compressor treats a model update as an ordered list of
+//! [`LayerGrad`]s. Convolutional layers carry their kernel geometry so the
+//! sign predictor (paper §4.3) can iterate kernels `K_{o,i}` of size
+//! `kh × kw`.
+
+pub mod model_zoo;
+
+/// What kind of parameter tensor a layer is — drives the sign predictor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Convolution weight with shape `[out_ch, in_ch, kh, kw]`.
+    Conv { out_ch: usize, in_ch: usize, kh: usize, kw: usize },
+    /// Dense / fully-connected weight `[out, in]`.
+    Dense { out: usize, inp: usize },
+    /// Anything else (bias, batch-norm scale/shift, embeddings…).
+    Other,
+}
+
+impl LayerKind {
+    /// Kernel element count `T = kh*kw` for conv layers.
+    pub fn kernel_size(&self) -> Option<usize> {
+        match self {
+            LayerKind::Conv { kh, kw, .. } => Some(kh * kw),
+            _ => None,
+        }
+    }
+    /// Number of kernels `out_ch * in_ch` for conv layers.
+    pub fn kernel_count(&self) -> Option<usize> {
+        match self {
+            LayerKind::Conv { out_ch, in_ch, .. } => Some(out_ch * in_ch),
+            _ => None,
+        }
+    }
+    /// Total element count implied by the kind (conv/dense only).
+    pub fn numel(&self) -> Option<usize> {
+        match self {
+            LayerKind::Conv { out_ch, in_ch, kh, kw } => Some(out_ch * in_ch * kh * kw),
+            LayerKind::Dense { out, inp } => Some(out * inp),
+            LayerKind::Other => None,
+        }
+    }
+}
+
+/// Metadata for one layer of a model.
+#[derive(Debug, Clone)]
+pub struct LayerMeta {
+    pub name: String,
+    pub kind: LayerKind,
+    pub numel: usize,
+}
+
+impl LayerMeta {
+    pub fn conv(name: &str, out_ch: usize, in_ch: usize, kh: usize, kw: usize) -> Self {
+        LayerMeta {
+            name: name.to_string(),
+            kind: LayerKind::Conv { out_ch, in_ch, kh, kw },
+            numel: out_ch * in_ch * kh * kw,
+        }
+    }
+    pub fn dense(name: &str, out: usize, inp: usize) -> Self {
+        LayerMeta { name: name.to_string(), kind: LayerKind::Dense { out, inp }, numel: out * inp }
+    }
+    pub fn other(name: &str, numel: usize) -> Self {
+        LayerMeta { name: name.to_string(), kind: LayerKind::Other, numel }
+    }
+}
+
+/// One layer's gradient: metadata + flat row-major values.
+///
+/// For conv layers the flat layout is `[o][i][kh][kw]`, so kernel `(o,i)`
+/// occupies the contiguous range `[(o*in_ch+i)*T, (o*in_ch+i+1)*T)`.
+#[derive(Debug, Clone)]
+pub struct LayerGrad {
+    pub meta: LayerMeta,
+    pub data: Vec<f32>,
+}
+
+impl LayerGrad {
+    pub fn new(meta: LayerMeta, data: Vec<f32>) -> Self {
+        debug_assert_eq!(meta.numel, data.len(), "layer {}: meta/data mismatch", meta.name);
+        LayerGrad { meta, data }
+    }
+
+    /// Iterate contiguous kernel slices for conv layers.
+    pub fn kernels(&self) -> Option<impl Iterator<Item = &[f32]>> {
+        let t = self.meta.kind.kernel_size()?;
+        Some(self.data.chunks_exact(t))
+    }
+}
+
+/// A full model update: ordered layers. Total bytes = 4 * total numel.
+#[derive(Debug, Clone, Default)]
+pub struct ModelGrad {
+    pub layers: Vec<LayerGrad>,
+}
+
+impl ModelGrad {
+    pub fn numel(&self) -> usize {
+        self.layers.iter().map(|l| l.data.len()).sum()
+    }
+    pub fn byte_size(&self) -> usize {
+        self.numel() * 4
+    }
+    /// Flatten all layers into one vector (for correlation computations).
+    pub fn flat(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.numel());
+        for l in &self.layers {
+            out.extend_from_slice(&l.data);
+        }
+        out
+    }
+}
+
+/// Compute the paper's kernel sign-consistency (Eq. 5) for a kernel slice:
+/// `(max(P,N) + Z - ceil(T/2)) / (T - ceil(T/2))`, clamped to [0,1].
+pub fn sign_consistency(kernel: &[f32]) -> f64 {
+    let t = kernel.len();
+    if t <= 1 {
+        return 1.0;
+    }
+    let (mut p, mut n, mut z) = (0usize, 0usize, 0usize);
+    for &x in kernel {
+        if x > 0.0 {
+            p += 1;
+        } else if x < 0.0 {
+            n += 1;
+        } else {
+            z += 1;
+        }
+    }
+    let half = t.div_ceil(2);
+    let num = (p.max(n) + z) as f64 - half as f64;
+    let den = (t - half) as f64;
+    (num / den).clamp(0.0, 1.0)
+}
+
+/// Dominant sign of a kernel: +1.0 if positives outnumber negatives,
+/// -1.0 otherwise (ties break negative, matching the bitmap convention
+/// where bit 1 = positive).
+pub fn dominant_sign(kernel: &[f32]) -> f32 {
+    let (mut p, mut n) = (0usize, 0usize);
+    for &x in kernel {
+        if x > 0.0 {
+            p += 1;
+        } else if x < 0.0 {
+            n += 1;
+        }
+    }
+    if p > n {
+        1.0
+    } else {
+        -1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_meta_numel() {
+        let m = LayerMeta::conv("c", 4, 3, 3, 3);
+        assert_eq!(m.numel, 108);
+        assert_eq!(m.kind.kernel_size(), Some(9));
+        assert_eq!(m.kind.kernel_count(), Some(12));
+        let d = LayerMeta::dense("d", 10, 20);
+        assert_eq!(d.numel, 200);
+        assert_eq!(d.kind.kernel_size(), None);
+    }
+
+    #[test]
+    fn kernels_iterate_contiguously() {
+        let meta = LayerMeta::conv("c", 2, 1, 1, 2); // 2 kernels of size 2
+        let g = LayerGrad::new(meta, vec![1.0, 2.0, 3.0, 4.0]);
+        let ks: Vec<&[f32]> = g.kernels().unwrap().collect();
+        assert_eq!(ks, vec![&[1.0, 2.0][..], &[3.0, 4.0][..]]);
+    }
+
+    #[test]
+    fn sign_consistency_extremes() {
+        // All same sign -> 1.0
+        assert_eq!(sign_consistency(&[1.0f32; 9]), 1.0);
+        assert_eq!(sign_consistency(&[-1.0f32; 9]), 1.0);
+        // Max disagreement for T=9: P=5,N=4 -> (5-5)/4 = 0
+        let mixed = [1.0f32, 1.0, 1.0, 1.0, 1.0, -1.0, -1.0, -1.0, -1.0];
+        assert_eq!(sign_consistency(&mixed), 0.0);
+        // Zeros count as neutral: 9 zeros -> (0+9-5)/4 = 1.0
+        assert_eq!(sign_consistency(&[0.0f32; 9]), 1.0);
+    }
+
+    #[test]
+    fn sign_consistency_mid() {
+        // T=9, P=7, N=2 -> (7-5)/4 = 0.5
+        let k = [1.0f32, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, -1.0, -1.0];
+        assert!((sign_consistency(&k) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dominant_sign_majority() {
+        assert_eq!(dominant_sign(&[1.0, 1.0, -1.0]), 1.0);
+        assert_eq!(dominant_sign(&[-1.0, -1.0, 1.0]), -1.0);
+        assert_eq!(dominant_sign(&[0.0, 0.0]), -1.0); // tie -> negative
+    }
+
+    #[test]
+    fn model_grad_sizes() {
+        let mut mg = ModelGrad::default();
+        mg.layers.push(LayerGrad::new(LayerMeta::other("b", 3), vec![1.0, 2.0, 3.0]));
+        mg.layers.push(LayerGrad::new(LayerMeta::other("c", 2), vec![4.0, 5.0]));
+        assert_eq!(mg.numel(), 5);
+        assert_eq!(mg.byte_size(), 20);
+        assert_eq!(mg.flat(), vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+}

@@ -1,0 +1,328 @@
+//! Layer-shape tables for the paper's evaluation models (Table 2):
+//! ResNet-18 / ResNet-34 (He et al. 2016) and Inception V1 / V3
+//! (Szegedy et al. 2015/2016). These drive the full-scale synthetic
+//! gradient generator (`train/gradgen.rs`) used by Table 4 / Table 5 /
+//! Fig. 10 / Fig. 11 — the *shapes* are the real architectures; only the
+//! gradient values are synthesized (DESIGN.md §5).
+
+use super::LayerMeta;
+
+/// The four evaluation models of the paper plus micro models for real
+/// CPU training.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelArch {
+    ResNet18,
+    ResNet34,
+    InceptionV1,
+    InceptionV3,
+    /// Tiny residual CNN actually trained via JAX/HLO in this repo.
+    MicroResNet,
+    /// Tiny multi-branch CNN actually trained via JAX/HLO in this repo.
+    MicroInception,
+}
+
+impl ModelArch {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelArch::ResNet18 => "resnet18",
+            ModelArch::ResNet34 => "resnet34",
+            ModelArch::InceptionV1 => "inception_v1",
+            ModelArch::InceptionV3 => "inception_v3",
+            ModelArch::MicroResNet => "micro_resnet",
+            ModelArch::MicroInception => "micro_inception",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        Some(match s {
+            "resnet18" => ModelArch::ResNet18,
+            "resnet34" => ModelArch::ResNet34,
+            "inception_v1" | "inceptionv1" => ModelArch::InceptionV1,
+            "inception_v3" | "inceptionv3" => ModelArch::InceptionV3,
+            "micro_resnet" => ModelArch::MicroResNet,
+            "micro_inception" => ModelArch::MicroInception,
+            _ => return None,
+        })
+    }
+
+    /// Layer table for `num_classes` output classes.
+    pub fn layers(&self, num_classes: usize) -> Vec<LayerMeta> {
+        match self {
+            ModelArch::ResNet18 => resnet(&[2, 2, 2, 2], false, num_classes),
+            ModelArch::ResNet34 => resnet(&[3, 4, 6, 3], false, num_classes),
+            ModelArch::InceptionV1 => inception_v1(num_classes),
+            ModelArch::InceptionV3 => inception_v3(num_classes),
+            ModelArch::MicroResNet => micro_resnet(num_classes),
+            ModelArch::MicroInception => micro_inception(num_classes),
+        }
+    }
+
+    /// Total parameter count for `num_classes`.
+    pub fn param_count(&self, num_classes: usize) -> usize {
+        self.layers(num_classes).iter().map(|l| l.numel).sum()
+    }
+}
+
+fn bn(name: &str, ch: usize, out: &mut Vec<LayerMeta>) {
+    out.push(LayerMeta::other(&format!("{name}.bn.weight"), ch));
+    out.push(LayerMeta::other(&format!("{name}.bn.bias"), ch));
+}
+
+fn conv_bn(name: &str, out_ch: usize, in_ch: usize, k: usize, out: &mut Vec<LayerMeta>) {
+    out.push(LayerMeta::conv(&format!("{name}.conv"), out_ch, in_ch, k, k));
+    bn(name, out_ch, out);
+}
+
+/// Basic-block ResNet (18/34 use BasicBlock; 50+ would use Bottleneck).
+fn resnet(blocks: &[usize; 4], _bottleneck: bool, num_classes: usize) -> Vec<LayerMeta> {
+    let mut l = Vec::new();
+    conv_bn("stem", 64, 3, 7, &mut l);
+    let widths = [64usize, 128, 256, 512];
+    let mut in_ch = 64;
+    for (stage, (&n_blocks, &w)) in blocks.iter().zip(widths.iter()).enumerate() {
+        for b in 0..n_blocks {
+            let name = format!("layer{}.{}", stage + 1, b);
+            conv_bn(&format!("{name}.a"), w, in_ch, 3, &mut l);
+            conv_bn(&format!("{name}.b"), w, w, 3, &mut l);
+            if in_ch != w {
+                // 1x1 downsample projection on the first block of a stage.
+                conv_bn(&format!("{name}.down"), w, in_ch, 1, &mut l);
+            }
+            in_ch = w;
+        }
+    }
+    l.push(LayerMeta::dense("fc", num_classes, 512));
+    l.push(LayerMeta::other("fc.bias", num_classes));
+    l
+}
+
+/// One GoogLeNet inception block: 1x1, 3x3 (with reduce), 5x5 (with
+/// reduce), pool-proj branches.
+#[allow(clippy::too_many_arguments)]
+fn inception_block(
+    name: &str,
+    in_ch: usize,
+    c1: usize,
+    c3r: usize,
+    c3: usize,
+    c5r: usize,
+    c5: usize,
+    pp: usize,
+    l: &mut Vec<LayerMeta>,
+) -> usize {
+    conv_bn(&format!("{name}.b1"), c1, in_ch, 1, l);
+    conv_bn(&format!("{name}.b3r"), c3r, in_ch, 1, l);
+    conv_bn(&format!("{name}.b3"), c3, c3r, 3, l);
+    conv_bn(&format!("{name}.b5r"), c5r, in_ch, 1, l);
+    conv_bn(&format!("{name}.b5"), c5, c5r, 5, l);
+    conv_bn(&format!("{name}.pp"), pp, in_ch, 1, l);
+    c1 + c3 + c5 + pp
+}
+
+/// GoogLeNet / Inception V1 (Szegedy 2015, Table 1 of that paper).
+fn inception_v1(num_classes: usize) -> Vec<LayerMeta> {
+    let mut l = Vec::new();
+    conv_bn("stem.1", 64, 3, 7, &mut l);
+    conv_bn("stem.2r", 64, 64, 1, &mut l);
+    conv_bn("stem.2", 192, 64, 3, &mut l);
+    let mut ch = 192;
+    let blocks: &[(&str, [usize; 6])] = &[
+        ("3a", [64, 96, 128, 16, 32, 32]),
+        ("3b", [128, 128, 192, 32, 96, 64]),
+        ("4a", [192, 96, 208, 16, 48, 64]),
+        ("4b", [160, 112, 224, 24, 64, 64]),
+        ("4c", [128, 128, 256, 24, 64, 64]),
+        ("4d", [112, 144, 288, 32, 64, 64]),
+        ("4e", [256, 160, 320, 32, 128, 128]),
+        ("5a", [256, 160, 320, 32, 128, 128]),
+        ("5b", [384, 192, 384, 48, 128, 128]),
+    ];
+    for (name, p) in blocks {
+        ch = inception_block(name, ch, p[0], p[1], p[2], p[3], p[4], p[5], &mut l);
+    }
+    l.push(LayerMeta::dense("fc", num_classes, ch));
+    l.push(LayerMeta::other("fc.bias", num_classes));
+    l
+}
+
+/// Inception V3 (Szegedy 2016) — simplified but faithful layer inventory:
+/// factorized stem, 3× InceptionA, grid reduction, 4× InceptionB with 7×1/
+/// 1×7 factorizations, reduction, 2× InceptionC.
+fn inception_v3(num_classes: usize) -> Vec<LayerMeta> {
+    let mut l = Vec::new();
+    conv_bn("stem.1", 32, 3, 3, &mut l);
+    conv_bn("stem.2", 32, 32, 3, &mut l);
+    conv_bn("stem.3", 64, 32, 3, &mut l);
+    conv_bn("stem.4", 80, 64, 1, &mut l);
+    conv_bn("stem.5", 192, 80, 3, &mut l);
+    // InceptionA x3 (in 192 -> 256 -> 288 -> 288)
+    let mut ch = 192;
+    for (i, pool_ch) in [32usize, 64, 64].iter().enumerate() {
+        let name = format!("mixed_a{i}");
+        conv_bn(&format!("{name}.b1"), 64, ch, 1, &mut l);
+        conv_bn(&format!("{name}.b5r"), 48, ch, 1, &mut l);
+        conv_bn(&format!("{name}.b5"), 64, 48, 5, &mut l);
+        conv_bn(&format!("{name}.b3r"), 64, ch, 1, &mut l);
+        conv_bn(&format!("{name}.b3a"), 96, 64, 3, &mut l);
+        conv_bn(&format!("{name}.b3b"), 96, 96, 3, &mut l);
+        conv_bn(&format!("{name}.pp"), *pool_ch, ch, 1, &mut l);
+        ch = 64 + 64 + 96 + pool_ch;
+    }
+    // Reduction A
+    conv_bn("red_a.b3", 384, ch, 3, &mut l);
+    conv_bn("red_a.b3r", 64, ch, 1, &mut l);
+    conv_bn("red_a.b3a", 96, 64, 3, &mut l);
+    conv_bn("red_a.b3b", 96, 96, 3, &mut l);
+    ch = 384 + 96 + ch;
+    // InceptionB x4 with 1x7/7x1 factorized convs
+    for (i, c7) in [128usize, 160, 160, 192].iter().enumerate() {
+        let name = format!("mixed_b{i}");
+        conv_bn(&format!("{name}.b1"), 192, ch, 1, &mut l);
+        l.push(LayerMeta::conv(&format!("{name}.b7r.conv"), *c7, ch, 1, 1));
+        bn(&format!("{name}.b7r"), *c7, &mut l);
+        l.push(LayerMeta::conv(&format!("{name}.b7a.conv"), *c7, *c7, 1, 7));
+        bn(&format!("{name}.b7a"), *c7, &mut l);
+        l.push(LayerMeta::conv(&format!("{name}.b7b.conv"), 192, *c7, 7, 1));
+        bn(&format!("{name}.b7b"), 192, &mut l);
+        l.push(LayerMeta::conv(&format!("{name}.b7x2a.conv"), *c7, ch, 1, 1));
+        bn(&format!("{name}.b7x2a"), *c7, &mut l);
+        l.push(LayerMeta::conv(&format!("{name}.b7x2b.conv"), *c7, *c7, 7, 1));
+        bn(&format!("{name}.b7x2b"), *c7, &mut l);
+        l.push(LayerMeta::conv(&format!("{name}.b7x2c.conv"), 192, *c7, 1, 7));
+        bn(&format!("{name}.b7x2c"), 192, &mut l);
+        conv_bn(&format!("{name}.pp"), 192, ch, 1, &mut l);
+        ch = 192 * 4;
+    }
+    // Reduction B
+    conv_bn("red_b.b3r", 192, ch, 1, &mut l);
+    conv_bn("red_b.b3", 320, 192, 3, &mut l);
+    conv_bn("red_b.b7r", 192, ch, 1, &mut l);
+    conv_bn("red_b.b7a", 192, 192, 7, &mut l); // stand-in for 1x7+7x1 pair
+    conv_bn("red_b.b7b", 192, 192, 3, &mut l);
+    ch = 320 + 192 + ch;
+    // InceptionC x2
+    for i in 0..2 {
+        let name = format!("mixed_c{i}");
+        conv_bn(&format!("{name}.b1"), 320, ch, 1, &mut l);
+        conv_bn(&format!("{name}.b3r"), 384, ch, 1, &mut l);
+        l.push(LayerMeta::conv(&format!("{name}.b3a.conv"), 384, 384, 1, 3));
+        bn(&format!("{name}.b3a"), 384, &mut l);
+        l.push(LayerMeta::conv(&format!("{name}.b3b.conv"), 384, 384, 3, 1));
+        bn(&format!("{name}.b3b"), 384, &mut l);
+        conv_bn(&format!("{name}.b3x2r"), 448, ch, 1, &mut l);
+        conv_bn(&format!("{name}.b3x2"), 384, 448, 3, &mut l);
+        l.push(LayerMeta::conv(&format!("{name}.b3x2a.conv"), 384, 384, 1, 3));
+        bn(&format!("{name}.b3x2a"), 384, &mut l);
+        l.push(LayerMeta::conv(&format!("{name}.b3x2b.conv"), 384, 384, 3, 1));
+        bn(&format!("{name}.b3x2b"), 384, &mut l);
+        conv_bn(&format!("{name}.pp"), 192, ch, 1, &mut l);
+        ch = 320 + 384 * 2 + 384 * 2 + 192;
+    }
+    l.push(LayerMeta::dense("fc", num_classes, ch));
+    l.push(LayerMeta::other("fc.bias", num_classes));
+    l
+}
+
+/// Micro residual CNN matching python/compile/model.py (really trained).
+fn micro_resnet(num_classes: usize) -> Vec<LayerMeta> {
+    let mut l = Vec::new();
+    l.push(LayerMeta::conv("stem.conv", 16, 3, 3, 3));
+    l.push(LayerMeta::other("stem.bias", 16));
+    for (i, (w_in, w_out)) in [(16usize, 16usize), (16, 32)].iter().enumerate() {
+        l.push(LayerMeta::conv(&format!("block{i}.a.conv"), *w_out, *w_in, 3, 3));
+        l.push(LayerMeta::other(&format!("block{i}.a.bias"), *w_out));
+        l.push(LayerMeta::conv(&format!("block{i}.b.conv"), *w_out, *w_out, 3, 3));
+        l.push(LayerMeta::other(&format!("block{i}.b.bias"), *w_out));
+        if w_in != w_out {
+            l.push(LayerMeta::conv(&format!("block{i}.down.conv"), *w_out, *w_in, 1, 1));
+            l.push(LayerMeta::other(&format!("block{i}.down.bias"), *w_out));
+        }
+    }
+    l.push(LayerMeta::dense("fc", num_classes, 32 * 8 * 8));
+    l.push(LayerMeta::other("fc.bias", num_classes));
+    l
+}
+
+/// Micro inception CNN matching python/compile/model.py.
+fn micro_inception(num_classes: usize) -> Vec<LayerMeta> {
+    let mut l = Vec::new();
+    l.push(LayerMeta::conv("stem.conv", 16, 3, 3, 3));
+    l.push(LayerMeta::other("stem.bias", 16));
+    for (i, in_ch) in [16usize, 32].iter().enumerate() {
+        let name = format!("mix{i}");
+        l.push(LayerMeta::conv(&format!("{name}.b1.conv"), 8, *in_ch, 1, 1));
+        l.push(LayerMeta::other(&format!("{name}.b1.bias"), 8));
+        l.push(LayerMeta::conv(&format!("{name}.b3.conv"), 16, *in_ch, 3, 3));
+        l.push(LayerMeta::other(&format!("{name}.b3.bias"), 16));
+        l.push(LayerMeta::conv(&format!("{name}.b5.conv"), 8, *in_ch, 5, 5));
+        l.push(LayerMeta::other(&format!("{name}.b5.bias"), 8));
+    }
+    l.push(LayerMeta::dense("fc", num_classes, 32 * 8 * 8));
+    l.push(LayerMeta::other("fc.bias", num_classes));
+    l
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Paper Table 2 gives 11.7M / 21.8M / 6.6M / 23.9M params. Our layer
+    /// inventories should land in the same ballpark (±15% — BN bookkeeping
+    /// and aux heads differ between implementations).
+    #[test]
+    fn param_counts_match_paper_scale() {
+        let cases = [
+            (ModelArch::ResNet18, 11.7e6),
+            (ModelArch::ResNet34, 21.8e6),
+            (ModelArch::InceptionV1, 6.6e6),
+            (ModelArch::InceptionV3, 23.9e6),
+        ];
+        for (arch, want) in cases {
+            let got = arch.param_count(1000) as f64;
+            let ratio = got / want;
+            assert!(
+                (0.8..1.25).contains(&ratio),
+                "{}: got {got:.3e}, paper {want:.3e} (ratio {ratio:.2})",
+                arch.name()
+            );
+        }
+    }
+
+    #[test]
+    fn micro_models_are_small() {
+        assert!(ModelArch::MicroResNet.param_count(10) < 300_000);
+        assert!(ModelArch::MicroInception.param_count(10) < 300_000);
+    }
+
+    #[test]
+    fn resnet18_has_3x3_convs() {
+        let layers = ModelArch::ResNet18.layers(10);
+        let n3x3 = layers
+            .iter()
+            .filter(|l| matches!(l.kind, super::super::LayerKind::Conv { kh: 3, kw: 3, .. }))
+            .count();
+        assert!(n3x3 >= 16, "resnet18 should have >=16 3x3 convs, got {n3x3}");
+    }
+
+    #[test]
+    fn largest_resnet18_conv_is_512x512x3x3() {
+        let layers = ModelArch::ResNet18.layers(10);
+        let max = layers.iter().max_by_key(|l| l.numel).unwrap();
+        // Paper §5.4: largest conv layer in ResNet-18 is 512x512 kernels of 3x3.
+        assert_eq!(max.numel, 512 * 512 * 3 * 3);
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for a in [
+            ModelArch::ResNet18,
+            ModelArch::ResNet34,
+            ModelArch::InceptionV1,
+            ModelArch::InceptionV3,
+            ModelArch::MicroResNet,
+            ModelArch::MicroInception,
+        ] {
+            assert_eq!(ModelArch::from_name(a.name()), Some(a));
+        }
+    }
+}

@@ -1,0 +1,311 @@
+//! Calibrated synthetic gradient-sequence generator for full-scale models.
+//!
+//! Training ResNet-18/34 / Inception V1/V3 on A100s (the paper's Polaris
+//! testbed) is not possible here, so Table 4 / Table 5 / Fig. 10 / Fig. 11
+//! run the codecs on synthetic per-layer gradient *sequences* whose
+//! statistics reproduce everything the predictors exploit:
+//!
+//! * **temporal magnitude structure** — a persistent per-element magnitude
+//!   pattern under a decaying, jittered global scale (paper Fig. 4: the
+//!   low-frequency trend the normalized EMA tracks);
+//! * **kernel-level dominant-sign structure** — per-kernel persistent
+//!   dominant signs with per-element agreement probability `q`, calibrated
+//!   so ~60% of 3×3 kernels clear τ = 0.5 (paper Fig. 7 / Table 5);
+//! * **cross-round oscillation** — optional full-batch mode where the
+//!   global gradient direction anti-correlates between rounds (Fig. 5);
+//! * **dataset-complexity knob** — noisier magnitudes for harder datasets
+//!   (the paper's Caltech101-vs-Fashion-MNIST compressibility gap).
+//!
+//! The `gradgen_stats` integration test validates the generator against
+//! *real* gradients from the micro models (same statistics, DESIGN.md §5).
+
+use crate::tensor::{LayerGrad, LayerKind, LayerMeta, ModelGrad};
+use crate::train::data::DatasetSpec;
+use crate::util::rng::Rng;
+
+/// Generator configuration.
+#[derive(Debug, Clone)]
+pub struct GradGenConfig {
+    /// Per-element dominant-sign agreement probability (calibrates kernel
+    /// sign consistency; 0.78 ⇒ ~60% of 3×3 kernels ≥ τ=0.5).
+    pub sign_agreement: f64,
+    /// Fraction of kernels whose dominant sign flips between rounds.
+    pub kernel_flip_rate: f64,
+    /// Multiplicative round-to-round scale jitter (log-normal σ).
+    pub scale_jitter: f64,
+    /// Scale decay rate per round (1/(1+decay·t)).
+    pub decay: f64,
+    /// Element-wise relative magnitude noise.
+    pub mag_noise: f64,
+    /// Per-round drift of the persistent magnitude pattern in [0,1] —
+    /// the "dataset complexity" knob: more drift ⇒ the cross-round
+    /// structure the EMA exploits decays faster (harder datasets).
+    pub pattern_drift: f64,
+    /// Full-batch oscillation mode (global sign alternation).
+    pub full_batch: bool,
+}
+
+impl Default for GradGenConfig {
+    fn default() -> Self {
+        GradGenConfig {
+            sign_agreement: 0.78,
+            kernel_flip_rate: 0.05,
+            scale_jitter: 0.15,
+            decay: 0.08,
+            mag_noise: 0.45,
+            pattern_drift: 0.10,
+            full_batch: false,
+        }
+    }
+}
+
+impl GradGenConfig {
+    /// Complexity knob per dataset (harder ⇒ noisier, less predictable —
+    /// the paper's observed compressibility ordering).
+    pub fn for_dataset(spec: DatasetSpec) -> Self {
+        let mut cfg = GradGenConfig::default();
+        match spec {
+            DatasetSpec::Fmnist => {
+                cfg.sign_agreement = 0.82;
+                cfg.pattern_drift = 0.05;
+            }
+            DatasetSpec::Cifar10 => {
+                cfg.sign_agreement = 0.78;
+                cfg.pattern_drift = 0.12;
+            }
+            DatasetSpec::Caltech101 => {
+                cfg.sign_agreement = 0.70;
+                cfg.pattern_drift = 0.30;
+                cfg.kernel_flip_rate = 0.12;
+            }
+        }
+        cfg
+    }
+}
+
+struct LayerGen {
+    meta: LayerMeta,
+    /// Persistent per-element magnitude pattern (positive).
+    pattern: Vec<f32>,
+    /// Persistent per-kernel dominant signs (conv) or per-element signs.
+    signs: Vec<f32>,
+    /// Persistent per-kernel sign coherence (conv): probability that an
+    /// element carries the dominant sign. Real models are a *mixture* —
+    /// most kernels are highly coherent, a minority are incoherent —
+    /// which is what yields the paper's joint (60% predictable, ~10%
+    /// mismatch) statistics; an iid agreement cannot produce both.
+    coherence: Vec<f64>,
+    /// Layer-specific base scale.
+    scale0: f32,
+}
+
+/// Round-by-round gradient generator for one model.
+pub struct GradGen {
+    cfg: GradGenConfig,
+    layers: Vec<LayerGen>,
+    rng: Rng,
+    round: usize,
+}
+
+impl GradGen {
+    pub fn new(metas: Vec<LayerMeta>, cfg: GradGenConfig, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x6AD6E4);
+        let layers = metas
+            .into_iter()
+            .map(|meta| {
+                let n = meta.numel;
+                // Layer scale varies by depth-ish position (hash of name).
+                let scale0 = 10f64.powf(rng.uniform(-2.6, -1.6)) as f32;
+                let pattern: Vec<f32> =
+                    (0..n).map(|_| (0.3 + rng.laplace().abs() * 0.7) as f32).collect();
+                let (signs, coherence) = match meta.kind {
+                    LayerKind::Conv { .. } => {
+                        let t = meta.kind.kernel_size().unwrap();
+                        let k = n / t;
+                        let mut s = Vec::with_capacity(k);
+                        let mut c = Vec::with_capacity(k);
+                        // Coherent-majority mixture (see field docs). The
+                        // coherent fraction is tied to cfg.sign_agreement
+                        // so the dataset-complexity knob still works.
+                        let coherent_frac = (cfg.sign_agreement - 0.15).clamp(0.3, 0.9);
+                        for _ in 0..k {
+                            s.push(if rng.chance(0.5) { 1.0f32 } else { -1.0 });
+                            c.push(if rng.chance(coherent_frac) {
+                                rng.uniform(0.84, 0.98)
+                            } else {
+                                rng.uniform(0.50, 0.72)
+                            });
+                        }
+                        (s, c)
+                    }
+                    _ => (
+                        (0..n).map(|_| if rng.chance(0.5) { 1.0f32 } else { -1.0 }).collect(),
+                        Vec::new(),
+                    ),
+                };
+                LayerGen { meta, pattern, signs, coherence, scale0 }
+            })
+            .collect();
+        GradGen { cfg, layers, rng, round: 0 }
+    }
+
+    /// Current round index (0-based; increments on each `next_round`).
+    pub fn round(&self) -> usize {
+        self.round
+    }
+
+    /// Generate the next round's gradient tensors.
+    pub fn next_round(&mut self) -> ModelGrad {
+        let t = self.round;
+        self.round += 1;
+        let mut cfg = self.cfg.clone();
+        if cfg.full_batch {
+            // Full-batch gradients carry no sampling noise: signs are far
+            // more stable and magnitudes far less jittery (Fig. 5 regime).
+            cfg.sign_agreement = cfg.sign_agreement.max(0.96);
+            cfg.mag_noise *= 0.4;
+            cfg.kernel_flip_rate = 0.0;
+        }
+        let global_flip = if cfg.full_batch && t % 2 == 1 { -1.0f32 } else { 1.0 };
+        let mut out = ModelGrad::default();
+        for lg in &mut self.layers {
+            // Pattern drift: the persistent structure slowly re-randomizes.
+            if cfg.pattern_drift > 0.0 && t > 0 {
+                let d = cfg.pattern_drift as f32;
+                for p in &mut lg.pattern {
+                    let fresh = (0.3 + self.rng.laplace().abs() * 0.7) as f32;
+                    *p = (1.0 - d) * *p + d * fresh;
+                }
+            }
+            let jitter = (cfg.scale_jitter * self.rng.gauss()).exp();
+            let scale = lg.scale0 * (jitter / (1.0 + cfg.decay * t as f64)) as f32;
+            let n = lg.meta.numel;
+            let mut data = Vec::with_capacity(n);
+            match lg.meta.kind {
+                LayerKind::Conv { .. } => {
+                    let ks = lg.meta.kind.kernel_size().unwrap();
+                    // Larger kernels are less sign-coherent in real models
+                    // (paper Table 5: predictable fraction collapses at
+                    // 7x7): shrink each kernel's coherence toward 0.5.
+                    let size_shrink = (0.03 * (ks as f64 - 9.0).max(0.0) / 8.0).min(0.25);
+                    // Kernel dominant signs persist, occasionally flipping.
+                    for s in lg.signs.iter_mut() {
+                        if self.rng.chance(cfg.kernel_flip_rate) {
+                            *s = -*s;
+                        }
+                    }
+                    for (k, &dom) in lg.signs.iter().enumerate() {
+                        let q = if cfg.full_batch {
+                            lg.coherence[k].max(0.96)
+                        } else {
+                            (lg.coherence[k] - size_shrink).max(0.5)
+                        };
+                        for e in 0..ks {
+                            let i = k * ks + e;
+                            let mag = (lg.pattern[i]
+                                * (1.0 + cfg.mag_noise as f32 * self.rng.gauss() as f32))
+                                .abs()
+                                * scale;
+                            let sign = if self.rng.chance(q) { dom } else { -dom };
+                            data.push(global_flip * sign * mag);
+                        }
+                    }
+                }
+                _ => {
+                    for i in 0..n {
+                        let mag = (lg.pattern[i]
+                            * (1.0 + cfg.mag_noise as f32 * self.rng.gauss() as f32))
+                            .abs()
+                            * scale;
+                        // Non-conv signs: noisy under mini-batch, stable
+                        // under full-batch GD.
+                        let keep = if cfg.full_batch { 0.96 } else { 0.55 };
+                        let sign = if self.rng.chance(keep) { lg.signs[i] } else { -lg.signs[i] };
+                        data.push(global_flip * sign * mag);
+                    }
+                }
+            }
+            out.layers.push(LayerGrad::new(lg.meta.clone(), data));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::model_zoo::ModelArch;
+    use crate::tensor::sign_consistency;
+    use crate::util::stats;
+
+    fn small_conv_metas() -> Vec<LayerMeta> {
+        vec![LayerMeta::conv("c", 64, 16, 3, 3), LayerMeta::dense("d", 64, 256)]
+    }
+
+    #[test]
+    fn kernel_consistency_calibrated_to_fig7() {
+        let mut gen = GradGen::new(small_conv_metas(), GradGenConfig::default(), 1);
+        let g = gen.next_round();
+        let layer = &g.layers[0];
+        let tau = 0.5;
+        let total = layer.meta.kind.kernel_count().unwrap();
+        let predicted = layer
+            .kernels()
+            .unwrap()
+            .filter(|k| sign_consistency(k) >= tau)
+            .count();
+        let ratio = predicted as f64 / total as f64;
+        // Paper Table 5: 60.6% for 3x3 at tau=0.5. Accept a band.
+        assert!((0.40..0.80).contains(&ratio), "predict ratio {ratio}");
+    }
+
+    #[test]
+    fn magnitudes_decay_over_rounds() {
+        let mut gen = GradGen::new(small_conv_metas(), GradGenConfig::default(), 2);
+        let early: f32 = stats::mean(
+            &gen.next_round().layers[0].data.iter().map(|x| x.abs()).collect::<Vec<_>>(),
+        );
+        let mut late = 0.0;
+        for _ in 0..30 {
+            let g = gen.next_round();
+            late = stats::mean(&g.layers[0].data.iter().map(|x| x.abs()).collect::<Vec<_>>());
+        }
+        assert!(late < early, "early {early} late {late}");
+    }
+
+    #[test]
+    fn temporal_magnitude_correlation_present() {
+        // Consecutive rounds' |g| must correlate (what the EMA exploits).
+        let mut gen = GradGen::new(small_conv_metas(), GradGenConfig::default(), 3);
+        let a: Vec<f32> = gen.next_round().layers[0].data.iter().map(|x| x.abs()).collect();
+        let b: Vec<f32> = gen.next_round().layers[0].data.iter().map(|x| x.abs()).collect();
+        let corr = stats::pearson(&a, &b);
+        assert!(corr > 0.3, "temporal |g| correlation {corr}");
+    }
+
+    #[test]
+    fn full_batch_mode_anticorrelates() {
+        let cfg = GradGenConfig { full_batch: true, ..Default::default() };
+        let mut gen = GradGen::new(small_conv_metas(), cfg, 4);
+        let a = gen.next_round().flat();
+        let b = gen.next_round().flat();
+        let c = stats::gradient_correlation(&a, &b);
+        assert!(c < -0.2, "oscillation corr {c}");
+    }
+
+    #[test]
+    fn full_model_shapes() {
+        let metas = ModelArch::ResNet18.layers(10);
+        let mut gen = GradGen::new(metas.clone(), GradGenConfig::default(), 5);
+        let g = gen.next_round();
+        assert_eq!(g.layers.len(), metas.len());
+        assert_eq!(g.numel(), metas.iter().map(|m| m.numel).sum::<usize>());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = GradGen::new(small_conv_metas(), GradGenConfig::default(), 7);
+        let mut b = GradGen::new(small_conv_metas(), GradGenConfig::default(), 7);
+        assert_eq!(a.next_round().flat(), b.next_round().flat());
+    }
+}

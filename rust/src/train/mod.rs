@@ -1,0 +1,9 @@
+//! Training substrates: synthetic datasets shaped like the paper's
+//! (Fashion-MNIST / CIFAR-10 / Caltech101), a pure-Rust reference trainer
+//! (real gradients with no PJRT dependency), and the calibrated
+//! full-scale gradient-sequence generator used where CPU training of
+//! ResNet-18/34-scale models is infeasible (DESIGN.md §5).
+
+pub mod data;
+pub mod gradgen;
+pub mod native;

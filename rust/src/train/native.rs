@@ -1,0 +1,329 @@
+//! Pure-Rust reference trainer: a small conv net with hand-written
+//! backprop. Produces *real* gradients with zero PJRT/artifact
+//! dependencies — used by the motivation benches (Fig. 3/4/5: gradient
+//! temporal structure under SGD and full-batch GD), by tests, and as a
+//! fallback trainer when artifacts are absent.
+//!
+//! Architecture (for 32×32×3 inputs, C classes):
+//!   conv3×3(3→8, SAME) → relu → avgpool4 (8×8×8) → dense(512→C) → softmax
+//!
+//! Deliberately compact: this is a substrate for generating authentic
+//! gradient statistics, not a performance model. The HLO trainer
+//! (`runtime::trainer`) is the production path.
+
+use crate::tensor::{LayerGrad, LayerMeta, ModelGrad};
+use crate::train::data::{DataSlice, IMG};
+use crate::util::rng::Rng;
+
+const C_IN: usize = 3;
+const C_OUT: usize = 8;
+const K: usize = 3;
+const H: usize = 32;
+const W: usize = 32;
+const POOL: usize = 4;
+const PH: usize = H / POOL;
+const PW: usize = W / POOL;
+const FEAT: usize = PH * PW * C_OUT;
+
+/// Model parameters.
+#[derive(Debug, Clone)]
+pub struct NativeNet {
+    pub classes: usize,
+    /// Conv weight `[C_OUT, C_IN, K, K]`.
+    pub conv_w: Vec<f32>,
+    pub conv_b: Vec<f32>,
+    /// Dense `[classes, FEAT]`.
+    pub fc_w: Vec<f32>,
+    pub fc_b: Vec<f32>,
+}
+
+/// Gradients in the same layout.
+pub struct NativeGrads {
+    pub conv_w: Vec<f32>,
+    pub conv_b: Vec<f32>,
+    pub fc_w: Vec<f32>,
+    pub fc_b: Vec<f32>,
+}
+
+impl NativeNet {
+    pub fn new(classes: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x4A71E);
+        let conv_std = (2.0 / (C_IN * K * K) as f64).sqrt() as f32;
+        let fc_std = (1.0 / FEAT as f64).sqrt() as f32;
+        NativeNet {
+            classes,
+            conv_w: (0..C_OUT * C_IN * K * K).map(|_| rng.normal_f32(0.0, conv_std)).collect(),
+            conv_b: vec![0.0; C_OUT],
+            fc_w: (0..classes * FEAT).map(|_| rng.normal_f32(0.0, fc_std)).collect(),
+            fc_b: vec![0.0; classes],
+        }
+    }
+
+    /// Layer metadata for the compressor.
+    pub fn layer_metas(&self) -> Vec<LayerMeta> {
+        vec![
+            LayerMeta::conv("conv", C_OUT, C_IN, K, K),
+            LayerMeta::other("conv.bias", C_OUT),
+            LayerMeta::dense("fc", self.classes, FEAT),
+            LayerMeta::other("fc.bias", self.classes),
+        ]
+    }
+
+    /// Forward + backward over a batch; returns (mean loss, accuracy,
+    /// gradients).
+    pub fn grad_batch(&self, batch: &DataSlice) -> (f32, f32, NativeGrads) {
+        let n = batch.n;
+        let img_len = IMG.iter().product::<usize>();
+        let mut g = NativeGrads {
+            conv_w: vec![0.0; self.conv_w.len()],
+            conv_b: vec![0.0; self.conv_b.len()],
+            fc_w: vec![0.0; self.fc_w.len()],
+            fc_b: vec![0.0; self.fc_b.len()],
+        };
+        let mut total_loss = 0.0f64;
+        let mut correct = 0usize;
+        // Per-sample buffers reused across the batch.
+        let mut conv_out = vec![0.0f32; C_OUT * H * W];
+        let mut pooled = vec![0.0f32; FEAT];
+        let mut logits = vec![0.0f32; self.classes];
+        let mut dpool = vec![0.0f32; FEAT];
+        let mut dconv = vec![0.0f32; C_OUT * H * W];
+        for s in 0..n {
+            let x = &batch.xs[s * img_len..(s + 1) * img_len]; // [H,W,C_IN]
+            let y = batch.ys[s] as usize;
+            // --- conv3x3 SAME + relu ---
+            for co in 0..C_OUT {
+                for i in 0..H {
+                    for j in 0..W {
+                        let mut acc = self.conv_b[co];
+                        for ci in 0..C_IN {
+                            for di in 0..K {
+                                for dj in 0..K {
+                                    let ii = i + di;
+                                    let jj = j + dj;
+                                    if ii >= 1 && jj >= 1 && ii - 1 < H && jj - 1 < W {
+                                        let px = x[((ii - 1) * W + (jj - 1)) * C_IN + ci];
+                                        acc += px
+                                            * self.conv_w[((co * C_IN + ci) * K + di) * K + dj];
+                                    }
+                                }
+                            }
+                        }
+                        conv_out[(co * H + i) * W + j] = acc.max(0.0);
+                    }
+                }
+            }
+            // --- avg pool 4x4 ---
+            for co in 0..C_OUT {
+                for pi in 0..PH {
+                    for pj in 0..PW {
+                        let mut acc = 0.0f32;
+                        for di in 0..POOL {
+                            for dj in 0..POOL {
+                                acc += conv_out[(co * H + pi * POOL + di) * W + pj * POOL + dj];
+                            }
+                        }
+                        pooled[(pi * PW + pj) * C_OUT + co] = acc / (POOL * POOL) as f32;
+                    }
+                }
+            }
+            // --- dense + softmax CE ---
+            for c in 0..self.classes {
+                let row = &self.fc_w[c * FEAT..(c + 1) * FEAT];
+                let mut acc = self.fc_b[c];
+                for (f, &p) in row.iter().zip(&pooled) {
+                    acc += f * p;
+                }
+                logits[c] = acc;
+            }
+            let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut denom = 0.0f32;
+            for l in logits.iter() {
+                denom += (l - max).exp();
+            }
+            let logz = max + denom.ln();
+            total_loss += (logz - logits[y]) as f64;
+            let argmax =
+                logits.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+            if argmax == y {
+                correct += 1;
+            }
+            // dlogits = softmax - onehot
+            for c in 0..self.classes {
+                let p = (logits[c] - logz).exp();
+                let d = (p - if c == y { 1.0 } else { 0.0 }) / n as f32;
+                g.fc_b[c] += d;
+                let grow = &mut g.fc_w[c * FEAT..(c + 1) * FEAT];
+                for (gw, &pv) in grow.iter_mut().zip(&pooled) {
+                    *gw += d * pv;
+                }
+                logits[c] = d; // reuse as dlogits
+            }
+            // dpooled = fc_w^T dlogits
+            dpool.fill(0.0);
+            for c in 0..self.classes {
+                let d = logits[c];
+                let row = &self.fc_w[c * FEAT..(c + 1) * FEAT];
+                for (dp, &f) in dpool.iter_mut().zip(row) {
+                    *dp += d * f;
+                }
+            }
+            // back through avg pool + relu
+            dconv.fill(0.0);
+            let inv = 1.0 / (POOL * POOL) as f32;
+            for co in 0..C_OUT {
+                for pi in 0..PH {
+                    for pj in 0..PW {
+                        let d = dpool[(pi * PW + pj) * C_OUT + co] * inv;
+                        for di in 0..POOL {
+                            for dj in 0..POOL {
+                                let idx = (co * H + pi * POOL + di) * W + pj * POOL + dj;
+                                if conv_out[idx] > 0.0 {
+                                    dconv[idx] = d;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            // conv weight grads
+            for co in 0..C_OUT {
+                let mut db = 0.0f32;
+                for i in 0..H {
+                    for j in 0..W {
+                        let d = dconv[(co * H + i) * W + j];
+                        if d == 0.0 {
+                            continue;
+                        }
+                        db += d;
+                        for ci in 0..C_IN {
+                            for di in 0..K {
+                                for dj in 0..K {
+                                    let ii = i + di;
+                                    let jj = j + dj;
+                                    if ii >= 1 && jj >= 1 && ii - 1 < H && jj - 1 < W {
+                                        let px = x[((ii - 1) * W + (jj - 1)) * C_IN + ci];
+                                        g.conv_w[((co * C_IN + ci) * K + di) * K + dj] += d * px;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                g.conv_b[co] += db;
+            }
+        }
+        (total_loss as f32 / n as f32, correct as f32 / n as f32, g)
+    }
+
+    /// Apply an SGD step.
+    pub fn apply(&mut self, g: &NativeGrads, lr: f32) {
+        for (w, d) in self.conv_w.iter_mut().zip(&g.conv_w) {
+            *w -= lr * d;
+        }
+        for (w, d) in self.conv_b.iter_mut().zip(&g.conv_b) {
+            *w -= lr * d;
+        }
+        for (w, d) in self.fc_w.iter_mut().zip(&g.fc_w) {
+            *w -= lr * d;
+        }
+        for (w, d) in self.fc_b.iter_mut().zip(&g.fc_b) {
+            *w -= lr * d;
+        }
+    }
+
+    /// Package gradients as a ModelGrad for the compressor.
+    pub fn grads_to_model(&self, g: &NativeGrads) -> ModelGrad {
+        let metas = self.layer_metas();
+        ModelGrad {
+            layers: vec![
+                LayerGrad::new(metas[0].clone(), g.conv_w.clone()),
+                LayerGrad::new(metas[1].clone(), g.conv_b.clone()),
+                LayerGrad::new(metas[2].clone(), g.fc_w.clone()),
+                LayerGrad::new(metas[3].clone(), g.fc_b.clone()),
+            ],
+        }
+    }
+
+    /// Overwrite parameters from a (reconstructed) ModelGrad-shaped delta:
+    /// `θ ← θ − lr·g` per layer.
+    pub fn apply_model_grad(&mut self, g: &ModelGrad, lr: f32) {
+        let parts: [&mut Vec<f32>; 4] =
+            [&mut self.conv_w, &mut self.conv_b, &mut self.fc_w, &mut self.fc_b];
+        for (dst, layer) in parts.into_iter().zip(&g.layers) {
+            for (w, d) in dst.iter_mut().zip(&layer.data) {
+                *w -= lr * d;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::train::data::{DatasetSpec, SynthDataset};
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let mut rng = Rng::new(1);
+        let ds = SynthDataset::new(DatasetSpec::Cifar10, 1);
+        let batch = ds.sample(&mut rng, 2, 0.0);
+        let net = NativeNet::new(10, 2);
+        let (_, _, g) = net.grad_batch(&batch);
+        // Check a few weights in each tensor with central differences.
+        let eps = 1e-3f32;
+        let mut check = |get: &dyn Fn(&NativeNet) -> &Vec<f32>,
+                         set: &dyn Fn(&mut NativeNet, usize, f32),
+                         grad: &Vec<f32>,
+                         idx: usize| {
+            let mut p = net.clone();
+            let w0 = get(&p)[idx];
+            set(&mut p, idx, w0 + eps);
+            let (lp, _, _) = p.grad_batch(&batch);
+            set(&mut p, idx, w0 - eps);
+            let (lm, _, _) = p.grad_batch(&batch);
+            let fd = (lp - lm) / (2.0 * eps);
+            let an = grad[idx];
+            assert!(
+                (fd - an).abs() < 2e-2 * (1.0 + an.abs()),
+                "idx {idx}: fd {fd} vs analytic {an}"
+            );
+        };
+        for idx in [0usize, 17, 100] {
+            check(&|n| &n.conv_w, &|n, i, v| n.conv_w[i] = v, &g.conv_w, idx);
+        }
+        for idx in [0usize, 333] {
+            check(&|n| &n.fc_w, &|n, i, v| n.fc_w[i] = v, &g.fc_w, idx);
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss_and_beats_chance() {
+        let mut rng = Rng::new(3);
+        let ds = SynthDataset::new(DatasetSpec::Cifar10, 7);
+        let train = ds.sample(&mut rng, 64, 0.0);
+        let mut net = NativeNet::new(10, 4);
+        let (first_loss, _, _) = net.grad_batch(&train);
+        let mut last = (0.0, 0.0);
+        for _ in 0..30 {
+            let (loss, acc, g) = net.grad_batch(&train);
+            net.apply(&g, 0.5);
+            last = (loss, acc);
+        }
+        assert!(last.0 < first_loss * 0.8, "loss {first_loss} -> {}", last.0);
+        assert!(last.1 > 0.3, "acc {}", last.1);
+    }
+
+    #[test]
+    fn grads_to_model_layout() {
+        let mut rng = Rng::new(5);
+        let ds = SynthDataset::new(DatasetSpec::Fmnist, 1);
+        let batch = ds.sample(&mut rng, 4, 0.0);
+        let net = NativeNet::new(10, 6);
+        let (_, _, g) = net.grad_batch(&batch);
+        let mg = net.grads_to_model(&g);
+        assert_eq!(mg.layers.len(), 4);
+        assert_eq!(mg.layers[0].data.len(), C_OUT * C_IN * K * K);
+        assert!(mg.layers[0].kernels().is_some());
+    }
+}

@@ -1,0 +1,174 @@
+//! MSB-first bit-level I/O used by the Huffman coder, the two-level sign
+//! bitmaps (paper Fig. 8) and the Elias integer codes of the QSGD baseline.
+
+/// Append-only MSB-first bit writer with a 64-bit accumulator (bits are
+/// kept left-aligned in `acc`; whole bytes are flushed eagerly). The
+/// accumulator makes `put_bits` ~8× faster than per-bit writes — this is
+/// on the compressor's hot path (§Perf).
+#[derive(Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Left-aligned pending bits.
+    acc: u64,
+    /// Number of pending bits in `acc` (< 8 after each call).
+    nbits: u8,
+    total_bits: usize,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of bits written so far.
+    #[inline]
+    pub fn bit_len(&self) -> usize {
+        self.total_bits
+    }
+
+    /// Write a single bit.
+    #[inline]
+    pub fn put_bit(&mut self, bit: bool) {
+        self.put_bits(bit as u64, 1);
+    }
+
+    #[inline]
+    fn flush_bytes(&mut self) {
+        while self.nbits >= 8 {
+            self.buf.push((self.acc >> 56) as u8);
+            self.acc <<= 8;
+            self.nbits -= 8;
+        }
+    }
+
+    /// Write the low `n` bits of `value`, MSB first. `n <= 64`.
+    #[inline]
+    pub fn put_bits(&mut self, value: u64, n: u8) {
+        debug_assert!(n <= 64);
+        if n == 0 {
+            return;
+        }
+        self.total_bits += n as usize;
+        let masked = if n == 64 { value } else { value & ((1u64 << n) - 1) };
+        let free = 64 - self.nbits;
+        if n <= free {
+            self.acc |= if n == 64 { masked } else { masked << (free - n) };
+            self.nbits += n;
+            self.flush_bytes();
+        } else {
+            // Split: high `free` bits now, rest after the flush.
+            let hi = masked >> (n - free);
+            self.acc |= hi;
+            self.nbits = 64;
+            self.flush_bytes();
+            let rest = n - free;
+            let lo = masked & ((1u64 << rest) - 1);
+            self.acc |= lo << (64 - self.nbits - rest);
+            self.nbits += rest;
+            self.flush_bytes();
+        }
+    }
+
+    /// Finish and return the byte buffer (final byte zero-padded).
+    pub fn into_bytes(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.buf.push((self.acc >> 56) as u8);
+        }
+        self.buf
+    }
+}
+
+/// MSB-first bit reader over a byte slice.
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: usize, // bit position
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader { buf, pos: 0 }
+    }
+
+    /// Bits remaining.
+    #[inline]
+    pub fn remaining(&self) -> usize {
+        self.buf.len() * 8 - self.pos
+    }
+
+    /// Read one bit; `None` at end of stream.
+    #[inline]
+    pub fn get_bit(&mut self) -> Option<bool> {
+        if self.pos >= self.buf.len() * 8 {
+            return None;
+        }
+        let byte = self.buf[self.pos / 8];
+        let bit = (byte >> (7 - (self.pos % 8))) & 1 == 1;
+        self.pos += 1;
+        Some(bit)
+    }
+
+    /// Read `n` bits MSB-first into the low bits of a u64.
+    pub fn get_bits(&mut self, n: u8) -> Option<u64> {
+        debug_assert!(n <= 64);
+        let mut v = 0u64;
+        for _ in 0..n {
+            v = (v << 1) | self.get_bit()? as u64;
+        }
+        Some(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_bits() {
+        let mut w = BitWriter::new();
+        let pattern = [true, false, true, true, false, false, true, false, true];
+        for &b in &pattern {
+            w.put_bit(b);
+        }
+        assert_eq!(w.bit_len(), pattern.len());
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &b in &pattern {
+            assert_eq!(r.get_bit(), Some(b));
+        }
+    }
+
+    #[test]
+    fn roundtrip_multi_bit_values() {
+        let mut w = BitWriter::new();
+        let vals: [(u64, u8); 5] = [(0b101, 3), (0xFF, 8), (0, 1), (0x1234, 16), (u64::MAX, 64)];
+        for &(v, n) in &vals {
+            w.put_bits(v, n);
+        }
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &(v, n) in &vals {
+            let mask = if n == 64 { u64::MAX } else { (1u64 << n) - 1 };
+            assert_eq!(r.get_bits(n), Some(v & mask));
+        }
+    }
+
+    #[test]
+    fn reader_end_of_stream() {
+        let mut w = BitWriter::new();
+        w.put_bits(0b11, 2);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        // one padded byte -> 8 bits available, then None
+        for _ in 0..8 {
+            assert!(r.get_bit().is_some());
+        }
+        assert_eq!(r.get_bit(), None);
+    }
+
+    #[test]
+    fn empty_writer() {
+        let w = BitWriter::new();
+        assert_eq!(w.bit_len(), 0);
+        assert!(w.into_bytes().is_empty());
+    }
+}

@@ -1,0 +1,143 @@
+//! Radix-2 iterative FFT — substrate for the Fig. 4 magnitude-spectrum
+//! experiment (the paper shows gradient-magnitude dynamics are dominated
+//! by low-frequency components).
+
+use std::f64::consts::PI;
+
+/// Complex number as (re, im) — kept bare to avoid any dependency.
+pub type C = (f64, f64);
+
+#[inline]
+fn c_add(a: C, b: C) -> C {
+    (a.0 + b.0, a.1 + b.1)
+}
+#[inline]
+fn c_sub(a: C, b: C) -> C {
+    (a.0 - b.0, a.1 - b.1)
+}
+#[inline]
+fn c_mul(a: C, b: C) -> C {
+    (a.0 * b.0 - a.1 * b.1, a.0 * b.1 + a.1 * b.0)
+}
+
+/// In-place radix-2 decimation-in-time FFT. `xs.len()` must be a power of
+/// two. `inverse` computes the unscaled inverse transform (caller divides
+/// by n).
+pub fn fft_in_place(xs: &mut [C], inverse: bool) {
+    let n = xs.len();
+    assert!(n.is_power_of_two(), "fft length must be a power of two, got {n}");
+    // Bit-reversal permutation.
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            xs.swap(i, j);
+        }
+    }
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * PI / len as f64;
+        let wlen = (ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let mut w = (1.0, 0.0);
+            for k in 0..len / 2 {
+                let u = xs[i + k];
+                let v = c_mul(xs[i + k + len / 2], w);
+                xs[i + k] = c_add(u, v);
+                xs[i + k + len / 2] = c_sub(u, v);
+                w = c_mul(w, wlen);
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+}
+
+/// Magnitude spectrum of a real signal, zero-padded to the next power of
+/// two. Returns the first n/2+1 magnitudes (one-sided spectrum).
+pub fn magnitude_spectrum(signal: &[f64]) -> Vec<f64> {
+    if signal.is_empty() {
+        return vec![];
+    }
+    let n = signal.len().next_power_of_two();
+    let mut xs: Vec<C> = signal.iter().map(|&x| (x, 0.0)).collect();
+    xs.resize(n, (0.0, 0.0));
+    fft_in_place(&mut xs, false);
+    xs[..n / 2 + 1]
+        .iter()
+        .map(|&(re, im)| (re * re + im * im).sqrt())
+        .collect()
+}
+
+/// Naive O(n^2) DFT used only as a test oracle.
+#[cfg(test)]
+pub fn dft_naive(xs: &[C]) -> Vec<C> {
+    let n = xs.len();
+    (0..n)
+        .map(|k| {
+            let mut acc = (0.0, 0.0);
+            for (t, &x) in xs.iter().enumerate() {
+                let ang = -2.0 * PI * (k * t) as f64 / n as f64;
+                acc = c_add(acc, c_mul(x, (ang.cos(), ang.sin())));
+            }
+            acc
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fft_matches_naive_dft() {
+        let mut rng = Rng::new(1);
+        let n = 64;
+        let xs: Vec<C> = (0..n).map(|_| (rng.gauss(), rng.gauss())).collect();
+        let want = dft_naive(&xs);
+        let mut got = xs.clone();
+        fft_in_place(&mut got, false);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g.0 - w.0).abs() < 1e-9 && (g.1 - w.1).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn fft_inverse_roundtrip() {
+        let mut rng = Rng::new(2);
+        let n = 128;
+        let xs: Vec<C> = (0..n).map(|_| (rng.gauss(), 0.0)).collect();
+        let mut y = xs.clone();
+        fft_in_place(&mut y, false);
+        fft_in_place(&mut y, true);
+        for (a, b) in xs.iter().zip(&y) {
+            assert!((a.0 - b.0 / n as f64).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn spectrum_peaks_at_tone_frequency() {
+        let n = 256;
+        let freq = 16;
+        let signal: Vec<f64> =
+            (0..n).map(|t| (2.0 * PI * freq as f64 * t as f64 / n as f64).sin()).collect();
+        let spec = magnitude_spectrum(&signal);
+        let argmax = spec.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        assert_eq!(argmax, freq);
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_power_of_two_panics() {
+        let mut xs = vec![(0.0, 0.0); 3];
+        fft_in_place(&mut xs, false);
+    }
+}

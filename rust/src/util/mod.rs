@@ -1,0 +1,13 @@
+//! Substrates built from scratch for the offline environment: PRNG, JSON,
+//! statistics, FFT, bit I/O, a thread pool, and a mini property-testing
+//! harness. These stand in for `rand`, `serde`, `criterion`, `proptest`
+//! and `tokio`, none of which are available offline (see DESIGN.md §3).
+
+pub mod rng;
+pub mod json;
+pub mod stats;
+pub mod fft;
+pub mod bitio;
+pub mod threadpool;
+pub mod prop;
+pub mod timer;

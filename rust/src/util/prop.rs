@@ -1,0 +1,94 @@
+//! Mini property-testing harness (offline substitute for `proptest`,
+//! see DESIGN.md §3). Runs a property over many randomized cases from a
+//! seeded [`Rng`]; on failure it reports the case index and seed so the
+//! exact counterexample is reproducible.
+
+use crate::util::rng::Rng;
+
+/// Run `cases` randomized checks of `prop`. Each case gets a forked RNG.
+/// Panics with the failing case/seed on the first violation.
+pub fn check(name: &str, cases: usize, mut prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    let base_seed = std::env::var("FEDGEC_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0xFED6EC);
+    let mut root = Rng::new(base_seed);
+    for case in 0..cases {
+        let mut rng = root.fork(case as u64);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at case {case} (seed {base_seed}): {msg}");
+        }
+    }
+}
+
+/// Generate a random gradient-like tensor: mixture of Gaussian bulk and
+/// occasional heavy-tailed outliers, with a random scale — the shapes the
+/// compressor must always survive.
+pub fn arb_gradient(rng: &mut Rng, n: usize) -> Vec<f32> {
+    let scale = 10f64.powf(rng.uniform(-6.0, 1.0)) as f32;
+    (0..n)
+        .map(|_| {
+            if rng.chance(0.02) {
+                (rng.laplace() * 20.0) as f32 * scale
+            } else {
+                rng.normal_f32(0.0, scale)
+            }
+        })
+        .collect()
+}
+
+/// Random tensor length, biased toward interesting small sizes and block
+/// boundaries.
+pub fn arb_len(rng: &mut Rng, max: usize) -> usize {
+    match rng.next_below(6) {
+        0 => 1 + rng.next_below(4),
+        1 => 63 + rng.next_below(4),
+        2 => 255 + rng.next_below(4),
+        _ => 1 + rng.next_below(max.max(2) - 1),
+    }
+}
+
+/// Random relative error bound in the paper's range [1e-4, 1e-1].
+pub fn arb_error_bound(rng: &mut Rng) -> f64 {
+    10f64.powf(rng.uniform(-4.0, -1.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("trivial", 50, |rng| {
+            let x = rng.next_f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("x={x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn check_reports_failure() {
+        check("fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn arb_gradient_is_finite_sized() {
+        let mut rng = Rng::new(1);
+        let g = arb_gradient(&mut rng, 1000);
+        assert_eq!(g.len(), 1000);
+        assert!(g.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn arb_len_in_bounds() {
+        let mut rng = Rng::new(2);
+        for _ in 0..1000 {
+            let n = arb_len(&mut rng, 500);
+            assert!(n >= 1);
+        }
+    }
+}

@@ -1,0 +1,288 @@
+//! Statistical helpers used across the compressor and the experiment
+//! harnesses: moments, Pearson correlation, Shannon entropy, histograms.
+//!
+//! All reductions are **sequential in index order** — this is load-bearing:
+//! the client and server must compute bit-identical `mean`/`std` scalars so
+//! their predictor states stay synchronized (DESIGN.md §1).
+
+/// Sequential mean of an `f32` slice (f64 accumulator, deterministic order).
+pub fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = xs.iter().map(|&x| x as f64).sum();
+    (s / xs.len() as f64) as f32
+}
+
+/// Population standard deviation (deterministic order).
+pub fn std(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs) as f64;
+    let s: f64 = xs.iter().map(|&x| (x as f64 - m) * (x as f64 - m)).sum();
+    ((s / xs.len() as f64).sqrt()) as f32
+}
+
+/// Mean and population std in a single deterministic pass (f64 sum and
+/// sum-of-squares; Var = E[x²] − E[x]², clamped at 0). Both FL sides use
+/// exactly this function so predictor states stay synchronized.
+pub fn mean_std(xs: &[f32]) -> (f32, f32) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let (mut s, mut s2) = (0.0f64, 0.0f64);
+    for &x in xs {
+        let xd = x as f64;
+        s += xd;
+        s2 += xd * xd;
+    }
+    let n = xs.len() as f64;
+    let m = s / n;
+    ((m as f32), ((s2 / n - m * m).max(0.0).sqrt() as f32))
+}
+
+/// Mean and population std of `|x|` in one pass without materializing the
+/// absolute tensor (hot path of Alg. 3 line 8).
+pub fn mean_std_abs(xs: &[f32]) -> (f32, f32) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let (mut s, mut s2) = (0.0f64, 0.0f64);
+    for &x in xs {
+        let a = x.abs() as f64;
+        s += a;
+        s2 += a * a;
+    }
+    let n = xs.len() as f64;
+    let m = s / n;
+    ((m as f32), ((s2 / n - m * m).max(0.0).sqrt() as f32))
+}
+
+/// Pearson correlation coefficient between two equal-length slices.
+/// Returns 0.0 for degenerate inputs (empty, zero variance).
+pub fn pearson(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let ma = mean(a) as f64;
+    let mb = mean(b) as f64;
+    let (mut sab, mut saa, mut sbb) = (0.0f64, 0.0f64, 0.0f64);
+    for i in 0..n {
+        let da = a[i] as f64 - ma;
+        let db = b[i] as f64 - mb;
+        sab += da * db;
+        saa += da * da;
+        sbb += db * db;
+    }
+    if saa <= 0.0 || sbb <= 0.0 {
+        return 0.0;
+    }
+    sab / (saa.sqrt() * sbb.sqrt())
+}
+
+/// Cosine similarity ⟨a,b⟩ / (‖a‖‖b‖) — the paper's "gradient correlation"
+/// (Eq. 4). Returns 0.0 for zero vectors.
+pub fn gradient_correlation(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+    for i in 0..a.len() {
+        let x = a[i] as f64;
+        let y = b[i] as f64;
+        dot += x * y;
+        na += x * x;
+        nb += y * y;
+    }
+    if na <= 0.0 || nb <= 0.0 {
+        return 0.0;
+    }
+    dot / (na.sqrt() * nb.sqrt())
+}
+
+/// Mean squared error between prediction and truth.
+pub fn mse(pred: &[f32], truth: &[f32]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = pred
+        .iter()
+        .zip(truth)
+        .map(|(&p, &t)| {
+            let d = p as f64 - t as f64;
+            d * d
+        })
+        .sum();
+    s / pred.len() as f64
+}
+
+/// Shannon entropy (bits/symbol) of a symbol stream given as i64 symbols.
+pub fn shannon_entropy(symbols: impl IntoIterator<Item = i64>) -> f64 {
+    use std::collections::HashMap;
+    let mut counts: HashMap<i64, u64> = HashMap::new();
+    let mut n = 0u64;
+    for s in symbols {
+        *counts.entry(s).or_insert(0) += 1;
+        n += 1;
+    }
+    if n == 0 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    counts
+        .values()
+        .map(|&c| {
+            let p = c as f64 / nf;
+            -p * p.log2()
+        })
+        .sum()
+}
+
+/// Shannon entropy of quantized f32 data (quantize into `bins` over
+/// [min,max] first). Used by the motivation benches (Fig. 3).
+pub fn value_entropy(xs: &[f32], bins: usize) -> f64 {
+    if xs.is_empty() || bins == 0 {
+        return 0.0;
+    }
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &x in xs {
+        if x < lo {
+            lo = x;
+        }
+        if x > hi {
+            hi = x;
+        }
+    }
+    if !lo.is_finite() || !hi.is_finite() || hi <= lo {
+        return 0.0;
+    }
+    let w = (hi - lo) / bins as f32;
+    shannon_entropy(xs.iter().map(|&x| (((x - lo) / w) as i64).min(bins as i64 - 1)))
+}
+
+/// Fixed-width histogram: returns (bin_centers, counts).
+pub fn histogram(xs: &[f32], bins: usize, lo: f32, hi: f32) -> (Vec<f32>, Vec<u64>) {
+    let mut counts = vec![0u64; bins];
+    let w = (hi - lo) / bins as f32;
+    for &x in xs {
+        if x.is_finite() && x >= lo && x < hi {
+            let b = ((x - lo) / w) as usize;
+            counts[b.min(bins - 1)] += 1;
+        }
+    }
+    let centers = (0..bins).map(|i| lo + w * (i as f32 + 0.5)).collect();
+    (centers, counts)
+}
+
+/// Min and max ignoring non-finite values; returns (0,0) if none finite.
+pub fn finite_min_max(xs: &[f32]) -> (f32, f32) {
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &x in xs {
+        if x.is_finite() {
+            if x < lo {
+                lo = x;
+            }
+            if x > hi {
+                hi = x;
+            }
+        }
+    }
+    if lo > hi {
+        (0.0, 0.0)
+    } else {
+        (lo, hi)
+    }
+}
+
+/// Simple single-pole low-pass filter (for Fig. 4's magnitude trend).
+pub fn low_pass(xs: &[f64], alpha: f64) -> Vec<f64> {
+    let mut out = Vec::with_capacity(xs.len());
+    let mut y = match xs.first() {
+        Some(&x) => x,
+        None => return out,
+    };
+    for &x in xs {
+        y = alpha * x + (1.0 - alpha) * y;
+        out.push(y);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basic() {
+        let xs = [1.0f32, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-6);
+        assert!((std(&xs) - 1.118034).abs() < 1e-5);
+    }
+
+    #[test]
+    fn mean_std_empty() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std(&[]), 0.0);
+    }
+
+    #[test]
+    fn pearson_perfect() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [2.0f32, 4.0, 6.0];
+        assert!((pearson(&a, &b) - 1.0).abs() < 1e-12);
+        let c = [-2.0f32, -4.0, -6.0];
+        assert!((pearson(&a, &c) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_degenerate() {
+        assert_eq!(pearson(&[1.0, 1.0], &[2.0, 3.0]), 0.0);
+        assert_eq!(pearson(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn gradient_correlation_matches_cosine() {
+        let a = [1.0f32, 0.0];
+        let b = [0.0f32, 1.0];
+        assert!(gradient_correlation(&a, &b).abs() < 1e-12);
+        let c = [-1.0f32, 0.0];
+        assert!((gradient_correlation(&a, &c) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn entropy_uniform_vs_constant() {
+        let e_const = shannon_entropy(std::iter::repeat(3i64).take(100));
+        assert!(e_const.abs() < 1e-12);
+        let e_uni = shannon_entropy((0..256).map(|i| i as i64));
+        assert!((e_uni - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let xs = [0.1f32, 0.2, 0.9];
+        let (_, counts) = histogram(&xs, 2, 0.0, 1.0);
+        assert_eq!(counts, vec![2, 1]);
+    }
+
+    #[test]
+    fn mse_zero_for_identical() {
+        let xs = [1.0f32, -2.0, 3.0];
+        assert_eq!(mse(&xs, &xs), 0.0);
+    }
+
+    #[test]
+    fn finite_min_max_skips_nan() {
+        let xs = [f32::NAN, 1.0, -2.0, f32::INFINITY];
+        assert_eq!(finite_min_max(&xs), (-2.0, 1.0));
+    }
+
+    #[test]
+    fn low_pass_smooths() {
+        let xs: Vec<f64> = (0..100).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let y = low_pass(&xs, 0.1);
+        let late = y[90].abs();
+        assert!(late < 0.5, "late={late}");
+    }
+}

@@ -1,0 +1,70 @@
+//! Tiny timing helpers for the hand-rolled bench harness (criterion is not
+//! available offline).
+
+use std::time::{Duration, Instant};
+
+/// Time a closure, returning (result, elapsed).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Run `f` repeatedly for at least `min_iters` iterations and `min_time`,
+/// returning per-iteration stats in seconds: (mean, min, max, iters).
+pub fn bench_loop(min_iters: usize, min_time: Duration, mut f: impl FnMut()) -> BenchStats {
+    // Warmup.
+    f();
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    let mut iters = 0usize;
+    while iters < min_iters || start.elapsed() < min_time {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        iters += 1;
+        if iters > 10_000 {
+            break;
+        }
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = samples.iter().cloned().fold(0.0f64, f64::max);
+    BenchStats { mean_s: mean, min_s: min, max_s: max, iters }
+}
+
+/// Result of [`bench_loop`].
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub iters: usize,
+}
+
+impl BenchStats {
+    /// Throughput in MB/s for a payload of `bytes` processed per iteration.
+    pub fn mb_per_s(&self, bytes: usize) -> f64 {
+        bytes as f64 / 1e6 / self.mean_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timed_returns_result() {
+        let (v, d) = timed(|| 40 + 2);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() > 0 || d.as_nanos() == 0); // just runs
+    }
+
+    #[test]
+    fn bench_loop_runs_min_iters() {
+        let mut n = 0;
+        let stats = bench_loop(5, Duration::from_millis(0), || n += 1);
+        assert!(stats.iters >= 5);
+        assert!(stats.min_s <= stats.mean_s && stats.mean_s <= stats.max_s + 1e-12);
+    }
+}

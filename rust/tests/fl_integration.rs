@@ -1,0 +1,99 @@
+//! End-to-end FL runtime integration (native trainer, no artifacts
+//! needed): single-threaded simulation and the threaded in-proc runtime,
+//! across codecs — training must converge and compression must not hurt
+//! accuracy at a moderate bound.
+
+use fedgec::config::RunConfig;
+use fedgec::coordinator::{run_local, run_threaded};
+use fedgec::fl::transport::bandwidth::LinkSpec;
+use fedgec::train::data::DatasetSpec;
+
+fn base_cfg() -> RunConfig {
+    RunConfig {
+        model: "native".into(),
+        dataset: DatasetSpec::Cifar10,
+        n_clients: 3,
+        rounds: 6,
+        samples_per_client: 64,
+        local_lr: 0.2,
+        server_lr: 0.2,
+        codec: "fedgec".into(),
+        rel_error_bound: 1e-2,
+        link: LinkSpec::infinite(),
+        eval_every: 0,
+        seed: 11,
+        class_skew: 0.3,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn local_sim_converges_with_fedgec() {
+    let cfg = base_cfg();
+    let summary = run_local(&cfg).expect("run");
+    assert_eq!(summary.rounds.len(), cfg.rounds);
+    let losses = summary.loss_curve();
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "loss should drop: {losses:?}"
+    );
+    assert!(summary.mean_ratio() > 2.0, "CR {}", summary.mean_ratio());
+    let acc = summary.final_accuracy.unwrap();
+    assert!(acc > 0.15, "acc {acc}");
+}
+
+#[test]
+fn compression_tracks_uncompressed_training() {
+    // At eb=1e-2 the compressed run should match the uncompressed loss
+    // trajectory closely (the paper's Fig. 9 claim).
+    let mut cfg = base_cfg();
+    cfg.codec = "none".into();
+    let clean = run_local(&cfg).unwrap();
+    cfg.codec = "fedgec".into();
+    let ours = run_local(&cfg).unwrap();
+    let lc = clean.loss_curve();
+    let lo = ours.loss_curve();
+    let final_gap = (lc.last().unwrap() - lo.last().unwrap()).abs();
+    assert!(final_gap < 0.35, "loss gap {final_gap}: clean {lc:?} vs ours {lo:?}");
+}
+
+#[test]
+fn all_codecs_run_the_fl_loop() {
+    for codec in ["fedgec", "sz3", "qsgd", "topk", "none"] {
+        let mut cfg = base_cfg();
+        cfg.codec = codec.into();
+        cfg.rounds = 3;
+        let summary = run_local(&cfg).unwrap_or_else(|e| panic!("{codec}: {e}"));
+        assert_eq!(summary.rounds.len(), 3, "{codec}");
+        assert!(summary.rounds.iter().all(|r| r.payload_bytes > 0), "{codec}");
+    }
+}
+
+#[test]
+fn threaded_runtime_matches_protocol() {
+    let mut cfg = base_cfg();
+    cfg.rounds = 3;
+    cfg.n_clients = 4;
+    let summary = run_threaded(&cfg).expect("threaded run");
+    assert_eq!(summary.rounds.len(), 3);
+    assert!(summary.mean_ratio() > 1.5);
+    assert!(summary.final_accuracy.is_some());
+}
+
+#[test]
+fn virtual_link_accounting_scales_with_bandwidth() {
+    // Zero latency so only the bandwidth term is compared.
+    let mut slow = base_cfg();
+    slow.rounds = 2;
+    slow.link = LinkSpec { bits_per_sec: 1e6, latency: std::time::Duration::ZERO };
+    let mut fast = slow.clone();
+    fast.link = LinkSpec { bits_per_sec: 100e6, latency: std::time::Duration::ZERO };
+    let s = run_local(&slow).unwrap();
+    let f = run_local(&fast).unwrap();
+    let ts = s.rounds.iter().map(|r| r.transmit_time).sum::<std::time::Duration>();
+    let tf = f.rounds.iter().map(|r| r.transmit_time).sum::<std::time::Duration>();
+    assert!(
+        ts.as_secs_f64() > tf.as_secs_f64() * 20.0,
+        "slow {ts:?} vs fast {tf:?}"
+    );
+}

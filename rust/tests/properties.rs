@@ -1,0 +1,197 @@
+//! Cross-module property tests (via the util::prop mini-harness):
+//! codec-level invariants over randomized gradient tensors, bounds,
+//! layer mixes, and adversarial payload corruption.
+
+use fedgec::baselines::{make_codec, qsgd_bits_for_bound};
+use fedgec::compress::pipeline::{FedgecCodec, FedgecConfig};
+use fedgec::compress::quant::ErrorBound;
+use fedgec::compress::GradientCodec;
+use fedgec::tensor::{LayerGrad, LayerMeta, ModelGrad};
+use fedgec::util::prop;
+use fedgec::util::rng::Rng;
+use fedgec::util::stats;
+
+/// Build a random model-update with a mix of conv/dense/bias layers.
+fn arb_model(rng: &mut Rng) -> ModelGrad {
+    let n_layers = 1 + rng.next_below(4);
+    let mut layers = Vec::new();
+    for li in 0..n_layers {
+        match rng.next_below(3) {
+            0 => {
+                let t = [1usize, 4, 9, 25][rng.next_below(4)];
+                let k = 4 + rng.next_below(300);
+                let (kh, kw) = match t {
+                    1 => (1, 1),
+                    4 => (2, 2),
+                    9 => (3, 3),
+                    _ => (5, 5),
+                };
+                let data = prop::arb_gradient(rng, k * t);
+                layers.push(LayerGrad::new(
+                    LayerMeta::conv(&format!("conv{li}"), k, 1, kh, kw),
+                    data,
+                ));
+            }
+            1 => {
+                let n = 8 + rng.next_below(4000);
+                let data = prop::arb_gradient(rng, n);
+                layers.push(LayerGrad::new(LayerMeta::dense(&format!("fc{li}"), n, 1), data));
+            }
+            _ => {
+                let n = 1 + rng.next_below(64);
+                let data = prop::arb_gradient(rng, n);
+                layers.push(LayerGrad::new(LayerMeta::other(&format!("b{li}"), n), data));
+            }
+        }
+    }
+    ModelGrad { layers }
+}
+
+fn metas(g: &ModelGrad) -> Vec<LayerMeta> {
+    g.layers.iter().map(|l| l.meta.clone()).collect()
+}
+
+#[test]
+fn prop_fedgec_error_bound_holds_over_rounds() {
+    prop::check("fedgec bound over rounds", 40, |rng| {
+        let eb = prop::arb_error_bound(rng);
+        let cfg = FedgecConfig {
+            error_bound: ErrorBound::Rel(eb),
+            full_batch: rng.chance(0.3),
+            tau: rng.uniform(0.2, 0.9),
+            beta: rng.uniform(0.3, 0.99) as f32,
+            ..Default::default()
+        };
+        let mut client = FedgecCodec::new(cfg.clone());
+        let mut server = FedgecCodec::new(cfg);
+        let base = arb_model(rng);
+        let ms = metas(&base);
+        for round in 0..3 {
+            // Evolve the tensors a bit each round (temporal correlation).
+            let mut g = base.clone();
+            for l in &mut g.layers {
+                for v in &mut l.data {
+                    *v *= 1.0 + 0.1 * rng.gauss() as f32 * round as f32;
+                }
+            }
+            let payload = client.compress(&g).map_err(|e| e.to_string())?;
+            let recon = server.decompress(&payload, &ms).map_err(|e| e.to_string())?;
+            for (r, o) in recon.layers.iter().zip(&g.layers) {
+                let (lo, hi) = stats::finite_min_max(&o.data);
+                let delta = ErrorBound::Rel(eb).resolve(lo, hi) as f32;
+                for (a, b) in r.data.iter().zip(&o.data) {
+                    if b.is_finite() && (a - b).abs() > delta * 1.001 {
+                        return Err(format!(
+                            "round {round} layer {}: |{a}-{b}| > {delta}",
+                            o.meta.name
+                        ));
+                    }
+                    if !b.is_finite() && a.to_bits() != b.to_bits() {
+                        return Err("non-finite not preserved".into());
+                    }
+                }
+            }
+            if client.state.fingerprint() != server.state.fingerprint() {
+                return Err(format!("state divergence at round {round}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_all_codecs_total_on_random_input() {
+    // No codec may panic or corrupt shapes on arbitrary (finite or not)
+    // input.
+    prop::check("codecs total", 30, |rng| {
+        let g = arb_model(rng);
+        let ms = metas(&g);
+        for name in ["fedgec", "sz3", "qsgd", "topk", "none"] {
+            let eb = prop::arb_error_bound(rng);
+            let mut codec = make_codec(name, ErrorBound::Rel(eb), qsgd_bits_for_bound(eb))
+                .ok_or("codec")?;
+            let payload = codec.compress(&g).map_err(|e| format!("{name}: {e}"))?;
+            let recon = codec.decompress(&payload, &ms).map_err(|e| format!("{name}: {e}"))?;
+            if recon.numel() != g.numel() {
+                return Err(format!("{name}: numel changed"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_corrupted_payloads_never_panic() {
+    prop::check("corruption safety", 40, |rng| {
+        let g = arb_model(rng);
+        let ms = metas(&g);
+        let mut codec = FedgecCodec::new(FedgecConfig::default());
+        let mut payload = codec.compress(&g).map_err(|e| e.to_string())?;
+        // Flip a few random bytes / truncate.
+        match rng.next_below(3) {
+            0 => {
+                for _ in 0..3 {
+                    let i = rng.next_below(payload.len());
+                    payload[i] ^= 1 << rng.next_below(8);
+                }
+            }
+            1 => {
+                let keep = rng.next_below(payload.len());
+                payload.truncate(keep);
+            }
+            _ => {
+                payload.extend_from_slice(&[0xAB; 7]);
+            }
+        }
+        let mut server = FedgecCodec::new(FedgecConfig::default());
+        let _ = server.decompress(&payload, &ms); // Err is fine, panic is not
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_compression_deterministic() {
+    // Same state + same input => identical payload (required for
+    // client/server mirroring and for reproducible experiments).
+    prop::check("determinism", 20, |rng| {
+        let g = arb_model(rng);
+        let mut a = FedgecCodec::new(FedgecConfig::default());
+        let mut b = FedgecCodec::new(FedgecConfig::default());
+        let pa = a.compress(&g).map_err(|e| e.to_string())?;
+        let pb = b.compress(&g).map_err(|e| e.to_string())?;
+        if pa != pb {
+            return Err("nondeterministic payload".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_zero_and_constant_layers_roundtrip() {
+    prop::check("degenerate layers", 30, |rng| {
+        let n = 1025 + rng.next_below(2000);
+        let c = rng.normal_f32(0.0, 1.0);
+        let g = ModelGrad {
+            layers: vec![
+                LayerGrad::new(LayerMeta::other("zeros", n), vec![0.0; n]),
+                LayerGrad::new(LayerMeta::other("const", n), vec![c; n]),
+            ],
+        };
+        let ms = metas(&g);
+        let mut codec = FedgecCodec::new(FedgecConfig::default());
+        let payload = codec.compress(&g).map_err(|e| e.to_string())?;
+        let recon = codec.decompress(&payload, &ms).map_err(|e| e.to_string())?;
+        // Degenerate layers must reconstruct near-exactly and compress well.
+        for (r, o) in recon.layers.iter().zip(&g.layers) {
+            for (a, b) in r.data.iter().zip(&o.data) {
+                if (a - b).abs() > 1e-6 * (1.0 + b.abs()) {
+                    return Err(format!("{}: {a} vs {b}", o.meta.name));
+                }
+            }
+        }
+        if payload.len() * 10 > g.byte_size() {
+            return Err(format!("constant data compressed poorly: {}", payload.len()));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,91 @@
+//! Real-TCP FL integration: a server and several client threads speak the
+//! full protocol over loopback sockets, with live bandwidth throttling.
+
+use std::net::TcpListener;
+
+use fedgec::baselines::make_codec;
+use fedgec::compress::quant::ErrorBound;
+use fedgec::coordinator::native_trainer::NativeTrainer;
+use fedgec::fl::client::Client;
+use fedgec::fl::server::Server;
+use fedgec::fl::transport::bandwidth::LinkSpec;
+use fedgec::fl::transport::tcp::{accept_n, TcpChannel};
+use fedgec::fl::transport::Channel;
+use fedgec::train::data::{DatasetSpec, SynthDataset};
+use fedgec::train::native::NativeNet;
+use fedgec::util::rng::Rng;
+
+fn spawn_client(addr: String, id: u32, link: Option<LinkSpec>) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let mut ch = TcpChannel::connect(&addr, link).expect("connect");
+        let ds = SynthDataset::new(DatasetSpec::Cifar10, 9);
+        let mut rng = Rng::new(100 + id as u64);
+        let slice = ds.sample(&mut rng, 48, 0.0);
+        let trainer = NativeTrainer::new(10, slice, 0.2, 5);
+        let codec = make_codec("fedgec", ErrorBound::Rel(1e-2), 5).unwrap();
+        let mut client = Client::new(id, Box::new(trainer), codec);
+        client.run(&mut ch).expect("client loop");
+    })
+}
+
+#[test]
+fn tcp_federation_trains() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let n_clients = 3;
+    let handles: Vec<_> =
+        (0..n_clients).map(|i| spawn_client(addr.clone(), i as u32, None)).collect();
+    let chans = accept_n(&listener, n_clients, None).unwrap();
+    let mut channels: Vec<Box<dyn Channel>> =
+        chans.into_iter().map(|c| Box::new(c) as _).collect();
+    let proto = NativeNet::new(10, 5);
+    let init =
+        vec![proto.conv_w.clone(), proto.conv_b.clone(), proto.fc_w.clone(), proto.fc_b.clone()];
+    let codecs: Vec<_> =
+        (0..n_clients).map(|_| make_codec("fedgec", ErrorBound::Rel(1e-2), 5).unwrap()).collect();
+    let mut server = Server::new(init, proto.layer_metas(), 0.2, codecs);
+    server.wait_hellos(&mut channels).unwrap();
+    let mut losses = Vec::new();
+    for _ in 0..4 {
+        let stats = server.run_round(&mut channels).unwrap();
+        assert!(stats.ratio() > 1.5, "CR {}", stats.ratio());
+        losses.push(stats.mean_loss);
+    }
+    server.shutdown(&mut channels).unwrap();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "tcp training should reduce loss: {losses:?}"
+    );
+}
+
+#[test]
+fn tcp_throttled_link_slows_uploads() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    // Throttle the client's uplink to ~4 Mbps with zero latency.
+    let link = LinkSpec { bits_per_sec: 4e6, latency: std::time::Duration::ZERO };
+    let handle = spawn_client(addr.clone(), 0, Some(link));
+    let chans = accept_n(&listener, 1, None).unwrap();
+    let mut channels: Vec<Box<dyn Channel>> =
+        chans.into_iter().map(|c| Box::new(c) as _).collect();
+    let proto = NativeNet::new(10, 5);
+    let init =
+        vec![proto.conv_w.clone(), proto.conv_b.clone(), proto.fc_w.clone(), proto.fc_b.clone()];
+    let codecs = vec![make_codec("fedgec", ErrorBound::Rel(1e-2), 5).unwrap()];
+    let mut server = Server::new(init, proto.layer_metas(), 0.2, codecs);
+    server.wait_hellos(&mut channels).unwrap();
+    let t0 = std::time::Instant::now();
+    let stats = server.run_round(&mut channels).unwrap();
+    let elapsed = t0.elapsed();
+    server.shutdown(&mut channels).unwrap();
+    handle.join().unwrap();
+    // payload ~tens of KB at 4 Mbps -> at least payload*8/4e6 seconds.
+    let floor = stats.payload_bytes as f64 * 8.0 / 4e6;
+    assert!(
+        elapsed.as_secs_f64() >= floor * 0.8,
+        "elapsed {elapsed:?} vs floor {floor}"
+    );
+}
