@@ -34,14 +34,14 @@ fn run(autotune: bool) -> Vec<(usize, f64, f64)> {
         let mut gen = GradGen::new(metas.clone(), GradGenConfig::for_dataset(spec), 5);
         for _ in 0..rounds {
             let g = gen.next_round();
-            let payload = client.compress(&g).unwrap();
+            let (payload, report) = client.compress_with_report(&g).unwrap();
             server
                 .decompress(&payload, &metas.iter().cloned().collect::<Vec<_>>())
                 .unwrap();
             let cr = g.byte_size() as f64 / payload.len() as f64;
-            // Aggregate mismatch across conv layers.
+            // Aggregate mismatch across conv layers (unified report).
             let (mut mm, mut el) = (0usize, 0usize);
-            for rep in &client.last_reports {
+            for rep in &report.layers {
                 mm += rep.sign_stats.sign_mismatches;
                 el += rep.sign_stats.elements_predicted;
             }

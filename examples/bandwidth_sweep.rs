@@ -9,8 +9,7 @@
 
 use std::time::Duration;
 
-use fedgec::baselines::{make_codec, qsgd_bits_for_bound};
-use fedgec::compress::quant::ErrorBound;
+use fedgec::compress::spec::{CodecSpec, SpecDefaults};
 use fedgec::fl::transport::bandwidth::LinkSpec;
 use fedgec::metrics::{fmt_duration, Table};
 use fedgec::tensor::model_zoo::ModelArch;
@@ -32,8 +31,9 @@ fn main() -> fedgec::Result<()> {
     let mut costs = Vec::new();
     for name in ["fedgec", "sz3"] {
         let mut gen = GradGen::new(metas.clone(), GradGenConfig::default(), 7);
-        let mut client = make_codec(name, ErrorBound::Rel(eb), qsgd_bits_for_bound(eb)).unwrap();
-        let mut server = make_codec(name, ErrorBound::Rel(eb), qsgd_bits_for_bound(eb)).unwrap();
+        let spec = CodecSpec::parse_with(name, &SpecDefaults::with_rel_eb(eb))?;
+        let mut client = spec.build();
+        let mut server = spec.build();
         let (mut payload, mut raw) = (0usize, 0usize);
         let mut codec_time = Duration::ZERO;
         for _ in 0..rounds {

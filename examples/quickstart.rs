@@ -5,8 +5,7 @@
 //! cargo run --release --offline --example quickstart
 //! ```
 
-use fedgec::baselines::{make_codec, qsgd_bits_for_bound};
-use fedgec::compress::quant::ErrorBound;
+use fedgec::compress::spec::{CodecSpec, SpecDefaults};
 use fedgec::metrics::Table;
 use fedgec::tensor::model_zoo::ModelArch;
 use fedgec::train::gradgen::{GradGen, GradGenConfig};
@@ -28,8 +27,10 @@ fn main() -> fedgec::Result<()> {
     );
     for name in ["fedgec", "sz3", "qsgd", "topk"] {
         let mut gen = GradGen::new(metas.clone(), GradGenConfig::default(), 1);
-        let mut client = make_codec(name, ErrorBound::Rel(eb), qsgd_bits_for_bound(eb)).unwrap();
-        let mut server = make_codec(name, ErrorBound::Rel(eb), qsgd_bits_for_bound(eb)).unwrap();
+        let spec = CodecSpec::parse_with(name, &SpecDefaults::with_rel_eb(eb))?;
+        println!("  {name} -> spec '{spec}'");
+        let mut client = spec.build();
+        let mut server = spec.build();
         let (mut raw, mut comp) = (0usize, 0usize);
         let mut worst_rel_err = 0.0f64;
         let mut secs = 0.0f64;

@@ -10,8 +10,7 @@
 
 use std::net::TcpListener;
 
-use fedgec::baselines::make_codec;
-use fedgec::compress::quant::ErrorBound;
+use fedgec::compress::spec::{CodecSpec, SpecDefaults};
 use fedgec::coordinator::native_trainer::NativeTrainer;
 use fedgec::fl::client::Client;
 use fedgec::fl::server::Server;
@@ -40,7 +39,10 @@ fn main() -> fedgec::Result<()> {
                 let mut rng = Rng::new(1000 + id as u64);
                 let slice = ds.sample(&mut rng, 96, 0.4);
                 let trainer = NativeTrainer::new(10, slice, 0.2, 3);
-                let codec = make_codec("fedgec", ErrorBound::Rel(eb), 5).unwrap();
+                let codec =
+                    CodecSpec::parse_with("fedgec", &SpecDefaults::with_rel_eb(eb))?.build();
+                // Clients stream per-layer frames by default, so each
+                // throttled send overlaps with the next layer's encode.
                 Client::new(id as u32, Box::new(trainer), codec).run(&mut ch)
             })
         })
@@ -52,8 +54,8 @@ fn main() -> fedgec::Result<()> {
     let proto = NativeNet::new(10, 3);
     let init =
         vec![proto.conv_w.clone(), proto.conv_b.clone(), proto.fc_w.clone(), proto.fc_b.clone()];
-    let codecs: Vec<_> =
-        (0..n_clients).map(|_| make_codec("fedgec", ErrorBound::Rel(eb), 5).unwrap()).collect();
+    let spec = CodecSpec::parse_with("fedgec", &SpecDefaults::with_rel_eb(eb))?;
+    let codecs: Vec<_> = (0..n_clients).map(|_| spec.build()).collect();
     let mut server = Server::new(init, proto.layer_metas(), 0.2, codecs);
     server.wait_hellos(&mut channels)?;
     for r in 0..rounds {

@@ -4,7 +4,12 @@
 
 #![allow(dead_code)]
 
+use std::time::Duration;
+
+use fedgec::compress::GradientCodec;
+use fedgec::fl::transport::bandwidth::LinkSpec;
 use fedgec::tensor::model_zoo::ModelArch;
+use fedgec::tensor::ModelGrad;
 use fedgec::train::data::DatasetSpec;
 
 /// `FEDGEC_FULL=1` runs the paper's full grid; default is a fast subset.
@@ -42,6 +47,39 @@ pub fn grid_rounds() -> usize {
     } else {
         3
     }
+}
+
+/// Time each layer's frame encode through the session API, returning the
+/// per-layer (encode time, wire size) pairs that feed [`pipelined_time`].
+/// Callers warm the codec's predictor state first.
+pub fn time_layer_frames(
+    codec: &mut dyn GradientCodec,
+    g: &ModelGrad,
+) -> (Vec<Duration>, Vec<usize>) {
+    codec.begin(g.layers.len()).unwrap();
+    let mut comp = Vec::with_capacity(g.layers.len());
+    let mut wire = Vec::with_capacity(g.layers.len());
+    for (idx, layer) in g.layers.iter().enumerate() {
+        let t0 = std::time::Instant::now();
+        let frame = codec.encode_layer(idx, layer).unwrap();
+        comp.push(t0.elapsed());
+        wire.push(frame.wire_size());
+    }
+    (comp, wire)
+}
+
+/// Simulated completion time of a frame-streamed upload on one link:
+/// layer `i`'s frame starts transmitting once it is encoded AND the link
+/// is free — the pipeline schedule behind the streaming benches.
+pub fn pipelined_time(layer_comp: &[Duration], layer_wire: &[usize], link: &LinkSpec) -> Duration {
+    let mut comp_done = 0.0f64;
+    let mut send_done = 0.0f64;
+    for (dt, &bytes) in layer_comp.iter().zip(layer_wire) {
+        comp_done += dt.as_secs_f64();
+        let start = comp_done.max(send_done);
+        send_done = start + link.transmit_time(bytes).as_secs_f64();
+    }
+    Duration::from_secs_f64(send_done)
 }
 
 /// Banner for a bench binary.

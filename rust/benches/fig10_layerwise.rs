@@ -9,9 +9,9 @@
 mod bench_util;
 
 use bench_util::*;
-use fedgec::baselines::make_codec;
 use fedgec::compress::pipeline::{FedgecCodec, FedgecConfig};
 use fedgec::compress::quant::ErrorBound;
+use fedgec::compress::spec::{CodecSpec, SpecDefaults};
 use fedgec::compress::GradientCodec;
 use fedgec::metrics::Table;
 use fedgec::tensor::LayerMeta;
@@ -36,9 +36,9 @@ fn main() {
     let g0 = gen.next_round();
     server.decompress(&client.compress(&g0).unwrap(), &metas).unwrap();
     let g = gen.next_round();
-    let payload = client.compress(&g).unwrap();
+    let (payload, round_report) = client.compress_with_report(&g).unwrap();
     let recon = server.decompress(&payload, &metas).unwrap();
-    let report = &client.last_reports[0];
+    let report = &round_report.layers[0];
 
     // Partition elements using the sign tensor implied by reconstruction:
     // recompute decisions like the codec did.
@@ -99,7 +99,8 @@ fn main() {
                 vals.to_vec(),
             )],
         };
-        let mut sz3 = make_codec("sz3", ErrorBound::Rel(eb), 5).unwrap();
+        let mut sz3 =
+            CodecSpec::parse_with("sz3", &SpecDefaults::with_rel_eb(eb)).unwrap().build();
         gg.byte_size() as f64 / sz3.compress(&gg).unwrap().len() as f64
     };
     let all_sz3 = mk_cr(data);

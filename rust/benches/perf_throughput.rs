@@ -8,8 +8,8 @@ mod bench_util;
 use std::time::Duration;
 
 use bench_util::*;
-use fedgec::baselines::{make_codec, qsgd_bits_for_bound};
 use fedgec::compress::huffman;
+use fedgec::compress::spec::{CodecSpec, SpecDefaults};
 use fedgec::compress::lossless::Backend;
 use fedgec::compress::pipeline::{FedgecCodec, FedgecConfig};
 use fedgec::compress::quant::ErrorBound;
@@ -34,7 +34,8 @@ fn main() {
 
     // End-to-end codecs.
     for name in ["fedgec", "sz3", "qsgd", "topk"] {
-        let mut client = make_codec(name, ErrorBound::Rel(3e-2), qsgd_bits_for_bound(3e-2)).unwrap();
+        let mut client =
+            CodecSpec::parse_with(name, &SpecDefaults::with_rel_eb(3e-2)).unwrap().build();
         client.compress(&g0).unwrap(); // warm state
         let mut payload_len = 0usize;
         let stats = bench_loop(iters, min_time, || {

@@ -8,8 +8,7 @@
 mod bench_util;
 
 use bench_util::*;
-use fedgec::baselines::{make_codec, qsgd_bits_for_bound};
-use fedgec::compress::quant::ErrorBound;
+use fedgec::compress::spec::{CodecSpec, SpecDefaults};
 use fedgec::metrics::Table;
 use fedgec::train::gradgen::{GradGen, GradGenConfig};
 
@@ -23,7 +22,7 @@ fn cell_ratio(
     let metas = arch.layers(spec.classes());
     let mut gen = GradGen::new(metas, GradGenConfig::for_dataset(spec), 0xF0 + eb.to_bits() % 97);
     let mut codec =
-        make_codec(codec_name, ErrorBound::Rel(eb), qsgd_bits_for_bound(eb)).unwrap();
+        CodecSpec::parse_with(codec_name, &SpecDefaults::with_rel_eb(eb)).unwrap().build();
     let (mut raw, mut comp) = (0usize, 0usize);
     for _ in 0..rounds {
         let g = gen.next_round();

@@ -10,8 +10,8 @@
 mod bench_util;
 
 use bench_util::*;
-use fedgec::baselines::make_codec;
 use fedgec::compress::huffman;
+use fedgec::compress::spec::{CodecSpec, SpecDefaults};
 use fedgec::compress::lossless::Backend;
 use fedgec::compress::pipeline::{FedgecCodec, FedgecConfig};
 use fedgec::compress::predictor::sign::{predict_signs, SignMeta, SignMode};
@@ -31,7 +31,8 @@ fn sz3_cr(data: &[f32], eb: f64) -> f64 {
     let g = ModelGrad {
         layers: vec![LayerGrad::new(LayerMeta::other("part", data.len()), data.to_vec())],
     };
-    let mut codec = make_codec("sz3", ErrorBound::Rel(eb), 5).unwrap();
+    let mut codec =
+        CodecSpec::parse_with("sz3", &SpecDefaults::with_rel_eb(eb)).unwrap().build();
     let payload = codec.compress(&g).unwrap();
     g.byte_size() as f64 / payload.len() as f64
 }

@@ -13,11 +13,12 @@
 //!   codecs like TopK/QSGD.
 
 use crate::compress::blob::{BlobReader, BlobWriter};
+use crate::compress::frame::{Frame, LayerReport};
 use crate::compress::huffman;
 use crate::compress::lossless::{self, Backend};
 use crate::compress::quant::{ErrorBound, CODE_RADIUS, ESCAPE_CODE};
 use crate::compress::GradientCodec;
-use crate::tensor::{LayerGrad, LayerMeta, ModelGrad};
+use crate::tensor::{LayerGrad, LayerMeta};
 
 /// TopK → error-bounded quantization of the kept values.
 pub struct SparsifiedEblc {
@@ -33,7 +34,7 @@ impl SparsifiedEblc {
         SparsifiedEblc { k, error_bound, backend: Backend::default() }
     }
 
-    fn compress_layer(&self, layer: &LayerGrad) -> Vec<u8> {
+    fn compress_layer(&self, layer: &LayerGrad) -> (Vec<u8>, LayerReport) {
         let data = &layer.data;
         let keep = ((data.len() as f64 * self.k).ceil() as usize).clamp(1, data.len());
         let mut idx: Vec<u32> = (0..data.len() as u32).collect();
@@ -89,22 +90,46 @@ impl SparsifiedEblc {
                 idx_bytes.push(b | 0x80);
             }
         }
+        let entropy = huffman::encode_to_bytes(&codes);
+        let report = LayerReport {
+            name: layer.meta.name.clone(),
+            raw_bytes: data.len() * 4,
+            side_info_bytes: idx_bytes.len() + escapes.len() * 4,
+            entropy_bytes: entropy.len(),
+            escape_count: escapes.len(),
+            lossy: true,
+            ..Default::default()
+        };
         w.put_bytes(&idx_bytes);
-        w.put_bytes(&huffman::encode_to_bytes(&codes));
+        w.put_bytes(&entropy);
         w.put_f32_slice(&escapes);
-        w.into_bytes()
+        (w.into_bytes(), report)
     }
 
-    fn decompress_layer(&self, meta: &LayerMeta, body: &[u8]) -> crate::Result<Vec<f32>> {
+    fn decompress_layer(
+        &self,
+        meta: &LayerMeta,
+        body: &[u8],
+    ) -> crate::Result<(Vec<f32>, LayerReport)> {
         let mut r = BlobReader::new(body);
         let n = r.get_u32()? as usize;
         anyhow::ensure!(n == meta.numel, "sparse-eblc layer {}: numel", meta.name);
         let keep = r.get_u32()? as usize;
         let delta = r.get_f64()? as f32;
         let idx_bytes = r.get_bytes()?;
-        let (codes, _) = huffman::decode_from_bytes(r.get_bytes()?)?;
+        let entropy = r.get_bytes()?;
+        let (codes, _) = huffman::decode_from_bytes(entropy)?;
         anyhow::ensure!(codes.len() == keep, "sparse-eblc: code count");
         let escapes = r.get_f32_vec()?;
+        let report = LayerReport {
+            name: meta.name.clone(),
+            raw_bytes: n * 4,
+            side_info_bytes: idx_bytes.len() + escapes.len() * 4,
+            entropy_bytes: entropy.len(),
+            escape_count: escapes.len(),
+            lossy: true,
+            ..Default::default()
+        };
         // Decode indices.
         let mut out = vec![0.0f32; n];
         let mut pos = 0usize;
@@ -131,31 +156,26 @@ impl SparsifiedEblc {
             };
             *out.get_mut(acc as usize).ok_or_else(|| anyhow::anyhow!("index {acc} oob"))? = v;
         }
-        Ok(out)
+        Ok((out, report))
     }
 }
 
 impl GradientCodec for SparsifiedEblc {
-    fn compress(&mut self, grads: &ModelGrad) -> crate::Result<Vec<u8>> {
-        let mut top = BlobWriter::new();
-        top.put_u32(grads.layers.len() as u32);
-        for layer in &grads.layers {
-            let closed = self.backend.compress(&self.compress_layer(layer))?;
-            top.put_bytes(&closed);
-        }
-        Ok(top.into_bytes())
+    fn encode_layer(&mut self, idx: usize, layer: &LayerGrad) -> crate::Result<Frame> {
+        let (body, report) = self.compress_layer(layer);
+        let closed = self.backend.compress(&body)?;
+        Ok(Frame::new(idx, closed, report))
     }
 
-    fn decompress(&mut self, payload: &[u8], metas: &[LayerMeta]) -> crate::Result<ModelGrad> {
-        let mut r = BlobReader::new(payload);
-        let n_layers = r.get_u32()? as usize;
-        anyhow::ensure!(n_layers == metas.len(), "sparse-eblc: layer count");
-        let mut out = ModelGrad::default();
-        for meta in metas {
-            let body = lossless::decompress(r.get_bytes()?)?;
-            out.layers.push(LayerGrad::new(meta.clone(), self.decompress_layer(meta, &body)?));
-        }
-        Ok(out)
+    fn decode_frame(
+        &mut self,
+        frame: &Frame,
+        meta: &LayerMeta,
+    ) -> crate::Result<(LayerGrad, LayerReport)> {
+        let body = lossless::decompress(&frame.payload)?;
+        let (data, mut report) = self.decompress_layer(meta, &body)?;
+        report.compressed_bytes = frame.wire_size();
+        Ok((LayerGrad::new(meta.clone(), data), report))
     }
 
     fn name(&self) -> &'static str {
@@ -180,43 +200,52 @@ impl ErrorFeedback {
 }
 
 impl GradientCodec for ErrorFeedback {
-    fn compress(&mut self, grads: &ModelGrad) -> crate::Result<Vec<u8>> {
-        // g' = g + residual
-        if self.residual.len() != grads.layers.len() {
-            self.residual = grads.layers.iter().map(|l| vec![0.0; l.data.len()]).collect();
+    fn begin(&mut self, n_layers: usize) -> crate::Result<()> {
+        if self.residual.len() != n_layers {
+            self.residual = vec![Vec::new(); n_layers];
         }
-        let adjusted = ModelGrad {
-            layers: grads
-                .layers
-                .iter()
-                .zip(&self.residual)
-                .map(|(l, res)| {
-                    let data: Vec<f32> =
-                        l.data.iter().zip(res).map(|(g, r)| g + r).collect();
-                    LayerGrad::new(l.meta.clone(), data)
-                })
-                .collect(),
-        };
-        let payload = self.inner.compress(&adjusted)?;
-        // residual' = g' − decode(payload): reconstruct through a scratch
-        // decode on the inner codec's mirror — we approximate with a
-        // fresh inner decode only for stateless inners; stateful inners
-        // (fedgec) are already error-bounded and gain nothing from EF, so
-        // we keep EF for the stateless family (topk/qsgd).
-        let metas: Vec<LayerMeta> = grads.layers.iter().map(|l| l.meta.clone()).collect();
-        let recon = self.inner.decompress(&payload, &metas)?;
-        for ((res, adj), rec) in
-            self.residual.iter_mut().zip(&adjusted.layers).zip(&recon.layers)
-        {
-            for i in 0..res.len() {
-                res[i] = adj.data[i] - rec.data[i];
-            }
-        }
-        Ok(payload)
+        self.inner.begin(n_layers)
     }
 
-    fn decompress(&mut self, payload: &[u8], metas: &[LayerMeta]) -> crate::Result<ModelGrad> {
-        self.inner.decompress(payload, metas)
+    fn encode_layer(&mut self, idx: usize, layer: &LayerGrad) -> crate::Result<Frame> {
+        // g' = g + residual (lazily sized on first sight of the layer).
+        if self.residual.len() <= idx {
+            self.residual.resize(idx + 1, Vec::new());
+        }
+        if self.residual[idx].len() != layer.data.len() {
+            self.residual[idx] = vec![0.0; layer.data.len()];
+        }
+        let adjusted = LayerGrad::new(
+            layer.meta.clone(),
+            layer
+                .data
+                .iter()
+                .zip(&self.residual[idx])
+                .map(|(g, r)| g + r)
+                .collect(),
+        );
+        let frame = self.inner.encode_layer(idx, &adjusted)?;
+        // residual' = g' − decode(frame): reconstruct through a scratch
+        // decode on the inner codec — valid for the stateless family
+        // (topk/qsgd) that EF is meant for; stateful inners (fedgec) are
+        // already error-bounded and gain nothing from EF.
+        let (recon, _) = self.inner.decode_frame(&frame, &layer.meta)?;
+        for ((res, adj), rec) in
+            self.residual[idx].iter_mut().zip(&adjusted.data).zip(&recon.data)
+        {
+            *res = adj - rec;
+        }
+        Ok(frame)
+    }
+
+    fn decode_frame(
+        &mut self,
+        frame: &Frame,
+        meta: &LayerMeta,
+    ) -> crate::Result<(LayerGrad, LayerReport)> {
+        // EF is a client-side mechanism: the decompressor side is
+        // pass-through.
+        self.inner.decode_frame(frame, meta)
     }
 
     fn name(&self) -> &'static str {
@@ -233,6 +262,7 @@ impl GradientCodec for ErrorFeedback {
 mod tests {
     use super::*;
     use crate::baselines::topk::TopKCodec;
+    use crate::tensor::ModelGrad;
     use crate::util::rng::Rng;
 
     fn grads(n: usize, seed: u64) -> (ModelGrad, Vec<LayerMeta>) {
@@ -315,8 +345,9 @@ mod tests {
     }
 
     #[test]
-    fn factory_includes_composed() {
-        assert!(crate::baselines::make_codec("topk+eblc", ErrorBound::Rel(1e-2), 5).is_some());
-        assert!(crate::baselines::make_codec("ef-topk", ErrorBound::Rel(1e-2), 5).is_some());
+    fn spec_registry_includes_composed() {
+        use crate::compress::spec::CodecSpec;
+        assert_eq!(CodecSpec::parse("topk+eblc:k=0.05,eb=rel1e-2").unwrap().build().name(), "topk+eblc");
+        assert_eq!(CodecSpec::parse("ef(topk:k=0.05)").unwrap().build().name(), "error-feedback");
     }
 }

@@ -3,6 +3,10 @@
 //! quantize→Huffman→lossless backend), QSGD (stochastic quantization with
 //! Elias coding), and TopK sparsification (the sparsification family the
 //! paper contrasts in §7.1).
+//!
+//! All baselines speak the session/frame API of
+//! [`crate::compress::GradientCodec`] and are constructed through
+//! [`crate::compress::spec::CodecSpec`].
 
 pub mod composed;
 pub mod elias;
@@ -10,36 +14,47 @@ pub mod qsgd;
 pub mod sz3;
 pub mod topk;
 
-use crate::compress::blob::{bytes_to_f32s, f32s_to_bytes, BlobReader, BlobWriter};
+use crate::compress::blob::{bytes_to_f32s, f32s_to_bytes};
+use crate::compress::frame::{Frame, LayerReport};
+use crate::compress::spec::{CodecSpec, SpecDefaults};
 use crate::compress::GradientCodec;
-use crate::tensor::{LayerGrad, LayerMeta, ModelGrad};
+use crate::tensor::{LayerGrad, LayerMeta};
 
-/// Identity codec (`codec = "none"`): raw f32 transmission, CR = 1. The
-/// uncompressed baseline of Fig. 9 / Fig. 11.
+/// Identity codec (`codec = "raw"` / `"none"`): raw f32 transmission,
+/// CR ≈ 1. The uncompressed baseline of Fig. 9 / Fig. 11.
 #[derive(Default)]
 pub struct RawCodec;
 
 impl GradientCodec for RawCodec {
-    fn compress(&mut self, grads: &ModelGrad) -> crate::Result<Vec<u8>> {
-        let mut w = BlobWriter::new();
-        w.put_u32(grads.layers.len() as u32);
-        for l in &grads.layers {
-            w.put_bytes(&f32s_to_bytes(&l.data));
-        }
-        Ok(w.into_bytes())
+    fn encode_layer(&mut self, idx: usize, layer: &LayerGrad) -> crate::Result<Frame> {
+        let report = LayerReport {
+            name: layer.meta.name.clone(),
+            raw_bytes: layer.data.len() * 4,
+            ..Default::default()
+        };
+        Ok(Frame::new(idx, f32s_to_bytes(&layer.data), report))
     }
 
-    fn decompress(&mut self, payload: &[u8], metas: &[LayerMeta]) -> crate::Result<ModelGrad> {
-        let mut r = BlobReader::new(payload);
-        let n = r.get_u32()? as usize;
-        anyhow::ensure!(n == metas.len(), "raw payload {} layers != {}", n, metas.len());
-        let mut out = ModelGrad::default();
-        for meta in metas {
-            let data = bytes_to_f32s(r.get_bytes()?)?;
-            anyhow::ensure!(data.len() == meta.numel, "raw layer {} size", meta.name);
-            out.layers.push(LayerGrad::new(meta.clone(), data));
-        }
-        Ok(out)
+    fn decode_frame(
+        &mut self,
+        frame: &Frame,
+        meta: &LayerMeta,
+    ) -> crate::Result<(LayerGrad, LayerReport)> {
+        let data = bytes_to_f32s(&frame.payload)?;
+        anyhow::ensure!(
+            data.len() == meta.numel,
+            "raw layer {}: {} values != {}",
+            meta.name,
+            data.len(),
+            meta.numel
+        );
+        let report = LayerReport {
+            name: meta.name.clone(),
+            raw_bytes: data.len() * 4,
+            compressed_bytes: frame.wire_size(),
+            ..Default::default()
+        };
+        Ok((LayerGrad::new(meta.clone(), data), report))
     }
 
     fn name(&self) -> &'static str {
@@ -49,34 +64,19 @@ impl GradientCodec for RawCodec {
     fn reset(&mut self) {}
 }
 
-/// Factory over every codec in the repo (ours + baselines), keyed by the
-/// names used in configs and bench tables.
+/// Deprecated positional factory over every codec in the repo, kept as a
+/// shim for legacy call sites. Forwards the name to
+/// [`CodecSpec::parse_with`] with the positional knobs as defaults, so
+/// every legacy name (`fedgec`, `ours`, `sz3`, `qsgd`, `topk`, `none`,
+/// `raw`, `topk+eblc`, `ef-topk`, `ef-qsgd`) still resolves.
+#[deprecated(note = "construct codecs via compress::spec::CodecSpec::parse / ::build")]
 pub fn make_codec(
     name: &str,
     error_bound: crate::compress::quant::ErrorBound,
     qsgd_bits: u8,
 ) -> Option<Box<dyn GradientCodec>> {
-    match name {
-        "fedgec" | "ours" => {
-            let cfg = crate::compress::pipeline::FedgecConfig { error_bound, ..Default::default() };
-            Some(Box::new(crate::compress::pipeline::FedgecCodec::new(cfg)))
-        }
-        "sz3" => Some(Box::new(sz3::Sz3Codec::new(sz3::Sz3Config {
-            error_bound,
-            ..Default::default()
-        }))),
-        "qsgd" => Some(Box::new(qsgd::QsgdCodec::new(qsgd_bits, 0))),
-        "topk" => Some(Box::new(topk::TopKCodec::new(0.05))),
-        "none" | "raw" => Some(Box::new(RawCodec)),
-        "topk+eblc" => Some(Box::new(composed::SparsifiedEblc::new(0.05, error_bound))),
-        "ef-topk" => Some(Box::new(composed::ErrorFeedback::new(Box::new(
-            topk::TopKCodec::new(0.05),
-        )))),
-        "ef-qsgd" => Some(Box::new(composed::ErrorFeedback::new(Box::new(
-            qsgd::QsgdCodec::new(qsgd_bits, 0),
-        )))),
-        _ => None,
-    }
+    let d = SpecDefaults { error_bound, qsgd_bits, ..Default::default() };
+    CodecSpec::parse_with(name, &d).ok().map(|s| s.build())
 }
 
 /// Map a REL error bound to a comparable QSGD bit-width, following the
@@ -101,11 +101,39 @@ mod tests {
     use crate::compress::quant::ErrorBound;
 
     #[test]
-    fn factory_knows_all_codecs() {
-        for name in ["fedgec", "ours", "sz3", "qsgd", "topk", "none"] {
+    #[allow(deprecated)]
+    fn legacy_factory_names_still_resolve() {
+        // The deprecated shim must keep resolving every name the old
+        // positional factory knew.
+        for name in [
+            "fedgec",
+            "ours",
+            "sz3",
+            "qsgd",
+            "topk",
+            "none",
+            "raw",
+            "topk+eblc",
+            "ef-topk",
+            "ef-qsgd",
+        ] {
             assert!(make_codec(name, ErrorBound::Rel(1e-2), 5).is_some(), "{name}");
         }
         assert!(make_codec("nope", ErrorBound::Rel(1e-2), 5).is_none());
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn shim_forwards_positional_knobs() {
+        // Positional eb/bits become the spec defaults.
+        let q = make_codec("qsgd", ErrorBound::Rel(1e-2), 9).unwrap();
+        assert_eq!(q.name(), "qsgd");
+        let spec = CodecSpec::parse_with(
+            "qsgd",
+            &SpecDefaults { qsgd_bits: 9, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(spec, CodecSpec::Qsgd { bits: 9, seed: 0 });
     }
 
     #[test]

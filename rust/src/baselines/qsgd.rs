@@ -7,6 +7,7 @@
 
 use super::elias;
 use crate::compress::blob::{BlobReader, BlobWriter};
+use crate::compress::frame::{Frame, LayerReport};
 use crate::compress::lossless::{self, Backend};
 use crate::compress::GradientCodec;
 use crate::tensor::{LayerGrad, LayerMeta, ModelGrad};
@@ -18,25 +19,38 @@ use crate::util::rng::Rng;
 /// multi-million-element conv layers — nearly every level rounds to 0).
 pub const BUCKET: usize = 512;
 
-/// QSGD codec. Stochastic rounding is driven by a seeded RNG so runs are
-/// reproducible; the randomness is part of the *encoder* only.
+/// QSGD codec. Stochastic rounding is driven by a per-(round, layer) RNG
+/// derived from the seed, so runs are reproducible AND layers encode in
+/// parallel; the randomness is part of the *encoder* only.
 pub struct QsgdCodec {
     pub bits: u8,
     pub backend: Backend,
-    rng: Rng,
+    seed: u64,
+    /// Round counter feeding the per-layer RNG derivation (bumped by
+    /// `begin` so repeated rounds draw fresh randomness).
+    round: u64,
 }
 
 impl QsgdCodec {
     pub fn new(bits: u8, seed: u64) -> Self {
         assert!((1..=16).contains(&bits));
-        QsgdCodec { bits, backend: Backend::default(), rng: Rng::new(seed ^ 0x9560d) }
+        QsgdCodec { bits, backend: Backend::default(), seed: seed ^ 0x9560d, round: 0 }
     }
 
     fn levels(&self) -> u32 {
         (1u32 << self.bits) - 1
     }
 
-    fn compress_layer(&mut self, layer: &LayerGrad) -> Vec<u8> {
+    /// Independent stochastic-rounding stream for one layer of one round.
+    fn layer_rng(&self, idx: usize) -> Rng {
+        Rng::new(
+            self.seed
+                ^ self.round.wrapping_mul(0x9E3779B97F4A7C15)
+                ^ (idx as u64).wrapping_mul(0xD1B54A32D192ED03),
+        )
+    }
+
+    fn compress_layer(&self, layer: &LayerGrad, rng: &mut Rng) -> (Vec<u8>, LayerReport) {
         let data = &layer.data;
         let s = self.levels() as f64;
         let mut w = BlobWriter::new();
@@ -60,17 +74,29 @@ impl QsgdCodec {
                 let r = if norm > 0.0 { (x.abs() as f64 / norm) * s } else { 0.0 };
                 let l = r.floor();
                 let frac = r - l;
-                let level = l as u64 + if self.rng.chance(frac) { 1 } else { 0 };
+                let level = l as u64 + if rng.chance(frac) { 1 } else { 0 };
                 // Elias needs v >= 1: shift by one.
                 elias::gamma_encode(&mut lvls, level + 1);
             }
         }
-        w.put_bytes(&signs.into_bytes());
-        w.put_bytes(&lvls.into_bytes());
-        w.into_bytes()
+        let sign_bytes = signs.into_bytes();
+        let lvl_bytes = lvls.into_bytes();
+        // Norms + sign bitmap are side info; the Elias level stream is
+        // the entropy part — mirrored by the decoder's report.
+        let report = LayerReport {
+            name: layer.meta.name.clone(),
+            raw_bytes: data.len() * 4,
+            side_info_bytes: 8 * n_buckets + sign_bytes.len(),
+            entropy_bytes: lvl_bytes.len(),
+            lossy: true,
+            ..Default::default()
+        };
+        w.put_bytes(&sign_bytes);
+        w.put_bytes(&lvl_bytes);
+        (w.into_bytes(), report)
     }
 
-    fn decompress_layer(&self, meta: &LayerMeta, body: &[u8]) -> crate::Result<Vec<f32>> {
+    fn decompress_layer(&self, meta: &LayerMeta, body: &[u8]) -> crate::Result<(Vec<f32>, LayerReport)> {
         let mut r = BlobReader::new(body);
         let n = r.get_u32()? as usize;
         if n != meta.numel {
@@ -86,6 +112,7 @@ impl QsgdCodec {
         }
         let sign_bytes = r.get_bytes()?;
         let lvl_bytes = r.get_bytes()?;
+        let side_info = 8 * n_buckets + sign_bytes.len();
         let mut signs = BitReader::new(sign_bytes);
         let mut lvls = BitReader::new(lvl_bytes);
         let s = self.levels() as f64;
@@ -98,41 +125,62 @@ impl QsgdCodec {
             let mag = norm * level as f64 / s;
             out.push(if neg { -mag as f32 } else { mag as f32 });
         }
-        Ok(out)
+        let report = LayerReport {
+            name: meta.name.clone(),
+            raw_bytes: n * 4,
+            side_info_bytes: side_info,
+            entropy_bytes: lvl_bytes.len(),
+            lossy: true,
+            ..Default::default()
+        };
+        Ok((out, report))
     }
+
 }
 
 impl GradientCodec for QsgdCodec {
-    fn compress(&mut self, grads: &ModelGrad) -> crate::Result<Vec<u8>> {
-        let mut top = BlobWriter::new();
-        top.put_u32(grads.layers.len() as u32);
-        for layer in &grads.layers {
-            let body = self.compress_layer(layer);
-            let closed = self.backend.compress(&body)?;
-            top.put_bytes(&closed);
-        }
-        Ok(top.into_bytes())
+    fn begin(&mut self, n_layers: usize) -> crate::Result<()> {
+        let _ = n_layers;
+        self.round = self.round.wrapping_add(1);
+        Ok(())
     }
 
-    fn decompress(&mut self, payload: &[u8], metas: &[LayerMeta]) -> crate::Result<ModelGrad> {
-        let mut r = BlobReader::new(payload);
-        let n_layers = r.get_u32()? as usize;
-        if n_layers != metas.len() {
-            anyhow::bail!("qsgd payload {} layers != {}", n_layers, metas.len());
-        }
-        let mut out = ModelGrad::default();
-        for meta in metas {
-            let body = lossless::decompress(r.get_bytes()?)?;
-            out.layers.push(LayerGrad::new(meta.clone(), self.decompress_layer(meta, &body)?));
-        }
-        Ok(out)
+    fn encode_layer(&mut self, idx: usize, layer: &LayerGrad) -> crate::Result<Frame> {
+        let mut rng = self.layer_rng(idx);
+        let (body, report) = self.compress_layer(layer, &mut rng);
+        let closed = self.backend.compress(&body)?;
+        Ok(Frame::new(idx, closed, report))
+    }
+
+    fn decode_frame(
+        &mut self,
+        frame: &Frame,
+        meta: &LayerMeta,
+    ) -> crate::Result<(LayerGrad, LayerReport)> {
+        let body = lossless::decompress(&frame.payload)?;
+        let (data, mut report) = self.decompress_layer(meta, &body)?;
+        report.compressed_bytes = frame.wire_size();
+        Ok((LayerGrad::new(meta.clone(), data), report))
+    }
+
+    /// Per-layer RNG streams are independent ⇒ parallel encode.
+    fn encode_model(&mut self, grads: &ModelGrad) -> crate::Result<Vec<Frame>> {
+        self.begin(grads.layers.len())?;
+        let this = &*self;
+        crate::compress::session::encode_model_parallel(grads, |idx, layer| {
+            let mut rng = this.layer_rng(idx);
+            let (body, report) = this.compress_layer(layer, &mut rng);
+            Ok((this.backend.compress(&body)?, report))
+        })
     }
 
     fn name(&self) -> &'static str {
         "qsgd"
     }
 
-    fn reset(&mut self) {}
+    fn reset(&mut self) {
+        self.round = 0;
+    }
 }
 
 #[cfg(test)]

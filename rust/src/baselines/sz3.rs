@@ -16,6 +16,7 @@
 //!   sampled residual magnitude, mirroring SZ3's auto-tuning.
 
 use crate::compress::blob::{bytes_to_f32s, f32s_to_bytes, BlobReader, BlobWriter};
+use crate::compress::frame::{Frame, LayerReport};
 use crate::compress::huffman;
 use crate::compress::lossless::{self, Backend};
 use crate::compress::quant::{ErrorBound, CODE_RADIUS, ESCAPE_CODE};
@@ -271,27 +272,32 @@ fn select_predictor(data: &[f32]) -> Predictor {
 }
 
 /// The SZ3-style codec. Stateless across rounds (generic EBLCs have no
-/// cross-round memory — that is the paper's point).
+/// cross-round memory — that is the paper's point), so layers encode in
+/// parallel trivially.
 pub struct Sz3Codec {
     pub cfg: Sz3Config,
-    /// Per-layer reports mirroring `FedgecCodec::last_reports`.
-    pub last_ratios: Vec<(String, usize, usize)>,
 }
 
 impl Sz3Codec {
     pub fn new(cfg: Sz3Config) -> Self {
-        Sz3Codec { cfg, last_ratios: Vec::new() }
+        Sz3Codec { cfg }
     }
 
-    /// Compress a single layer body (pre-lossless).
-    fn compress_layer(&self, layer: &LayerGrad) -> crate::Result<Vec<u8>> {
+    /// Compress a single layer into its closed frame payload.
+    fn compress_layer(&self, layer: &LayerGrad) -> crate::Result<(Vec<u8>, LayerReport)> {
         let data = &layer.data;
+        let mut report = LayerReport {
+            name: layer.meta.name.clone(),
+            raw_bytes: data.len() * 4,
+            ..Default::default()
+        };
         let mut w = BlobWriter::new();
         if data.len() <= self.cfg.t_lossy {
             w.put_u8(0);
             w.put_bytes(&f32s_to_bytes(data));
-            return Ok(w.into_bytes());
+            return Ok((self.cfg.backend.compress(&w.into_bytes())?, report));
         }
+        report.lossy = true;
         let (lo, hi) = stats::finite_min_max(data);
         let delta = self.cfg.error_bound.resolve(lo, hi) as f32;
         let pred = self.cfg.force_predictor.unwrap_or_else(|| select_predictor(data));
@@ -299,63 +305,77 @@ impl Sz3Codec {
             Predictor::Lorenzo => lorenzo_encode(data, delta),
             Predictor::Interpolation => interp_encode(data, delta),
         };
+        let entropy = huffman::encode_to_bytes(&codes);
+        report.entropy_bytes = entropy.len();
+        report.escape_count = escapes.len();
+        report.side_info_bytes = escapes.len() * 4;
         w.put_u8(1);
         w.put_u8(pred.tag());
         w.put_u32(data.len() as u32);
         w.put_f64(delta as f64);
-        w.put_bytes(&huffman::encode_to_bytes(&codes));
+        w.put_bytes(&entropy);
         w.put_f32_slice(&escapes);
-        Ok(w.into_bytes())
+        Ok((self.cfg.backend.compress(&w.into_bytes())?, report))
     }
 
-    fn decompress_layer(&self, meta: &LayerMeta, section: &[u8]) -> crate::Result<Vec<f32>> {
+    fn decompress_layer(
+        &self,
+        meta: &LayerMeta,
+        section: &[u8],
+    ) -> crate::Result<(Vec<f32>, LayerReport)> {
         let mut r = BlobReader::new(section);
+        let mut report = LayerReport { name: meta.name.clone(), ..Default::default() };
         if r.get_u8()? == 0 {
-            return bytes_to_f32s(r.get_bytes()?);
+            let data = bytes_to_f32s(r.get_bytes()?)?;
+            anyhow::ensure!(data.len() == meta.numel, "sz3 layer {}: lossless numel", meta.name);
+            report.raw_bytes = data.len() * 4;
+            return Ok((data, report));
         }
+        report.lossy = true;
         let pred = Predictor::from_tag(r.get_u8()?)?;
         let n = r.get_u32()? as usize;
         if n != meta.numel {
             anyhow::bail!("sz3 layer {}: numel {} != {}", meta.name, n, meta.numel);
         }
+        report.raw_bytes = n * 4;
         let delta = r.get_f64()? as f32;
-        let (codes, _) = huffman::decode_from_bytes(r.get_bytes()?)?;
+        let entropy = r.get_bytes()?;
+        report.entropy_bytes = entropy.len();
+        let (codes, _) = huffman::decode_from_bytes(entropy)?;
         let escapes = r.get_f32_vec()?;
-        match pred {
+        report.escape_count = escapes.len();
+        report.side_info_bytes = escapes.len() * 4;
+        let data = match pred {
             Predictor::Lorenzo => lorenzo_decode(&codes, &escapes, delta),
             Predictor::Interpolation => interp_decode(&codes, &escapes, n, delta),
-        }
+        }?;
+        Ok((data, report))
     }
 }
 
 impl GradientCodec for Sz3Codec {
-    fn compress(&mut self, grads: &ModelGrad) -> crate::Result<Vec<u8>> {
-        let mut top = BlobWriter::new();
-        top.put_u32(grads.layers.len() as u32);
-        let mut ratios = Vec::new();
-        for layer in &grads.layers {
-            let body = self.compress_layer(layer)?;
-            let closed = self.cfg.backend.compress(&body)?;
-            ratios.push((layer.meta.name.clone(), layer.data.len() * 4, closed.len()));
-            top.put_bytes(&closed);
-        }
-        self.last_ratios = ratios;
-        Ok(top.into_bytes())
+    fn encode_layer(&mut self, idx: usize, layer: &LayerGrad) -> crate::Result<Frame> {
+        let (payload, report) = self.compress_layer(layer)?;
+        Ok(Frame::new(idx, payload, report))
     }
 
-    fn decompress(&mut self, payload: &[u8], metas: &[LayerMeta]) -> crate::Result<ModelGrad> {
-        let mut r = BlobReader::new(payload);
-        let n_layers = r.get_u32()? as usize;
-        if n_layers != metas.len() {
-            anyhow::bail!("sz3 payload {} layers != {}", n_layers, metas.len());
-        }
-        let mut out = ModelGrad::default();
-        for meta in metas {
-            let section = lossless::decompress(r.get_bytes()?)?;
-            let data = self.decompress_layer(meta, &section)?;
-            out.layers.push(LayerGrad::new(meta.clone(), data));
-        }
-        Ok(out)
+    fn decode_frame(
+        &mut self,
+        frame: &Frame,
+        meta: &LayerMeta,
+    ) -> crate::Result<(LayerGrad, LayerReport)> {
+        let section = lossless::decompress(&frame.payload)?;
+        let (data, mut report) = self.decompress_layer(meta, &section)?;
+        report.compressed_bytes = frame.wire_size();
+        Ok((LayerGrad::new(meta.clone(), data), report))
+    }
+
+    /// Stateless per layer ⇒ embarrassingly parallel whole-model encode.
+    fn encode_model(&mut self, grads: &ModelGrad) -> crate::Result<Vec<Frame>> {
+        let this = &*self;
+        crate::compress::session::encode_model_parallel(grads, |_, layer| {
+            this.compress_layer(layer)
+        })
     }
 
     fn name(&self) -> &'static str {

@@ -4,6 +4,7 @@
 //! the paper contrasts in §7.1 — high CR, uncontrolled per-element error.
 
 use crate::compress::blob::{BlobReader, BlobWriter};
+use crate::compress::frame::{Frame, LayerReport};
 use crate::compress::lossless::{self, Backend};
 use crate::compress::GradientCodec;
 use crate::tensor::{LayerGrad, LayerMeta, ModelGrad};
@@ -22,7 +23,7 @@ impl TopKCodec {
 
     fn compress_layer(&self, layer: &LayerGrad) -> Vec<u8> {
         let data = &layer.data;
-        let keep = ((data.len() as f64 * self.k).ceil() as usize).clamp(1, data.len());
+        let keep = self.keep_count(data.len());
         // Select top-k by |value| (partial sort of indices).
         let mut idx: Vec<u32> = (0..data.len() as u32).collect();
         idx.select_nth_unstable_by(keep - 1, |&a, &b| {
@@ -48,7 +49,11 @@ impl TopKCodec {
         w.into_bytes()
     }
 
-    fn decompress_layer(&self, meta: &LayerMeta, body: &[u8]) -> crate::Result<Vec<f32>> {
+    fn decompress_layer(
+        &self,
+        meta: &LayerMeta,
+        body: &[u8],
+    ) -> crate::Result<(Vec<f32>, LayerReport)> {
         let mut r = BlobReader::new(body);
         let n = r.get_u32()? as usize;
         if n != meta.numel {
@@ -67,33 +72,53 @@ impl TopKCodec {
             *out.get_mut(i as usize)
                 .ok_or_else(|| anyhow::anyhow!("topk index {i} out of range"))? = v;
         }
-        Ok(out)
+        Ok((out, Self::layer_report(meta.name.clone(), n, keep)))
+    }
+
+    /// The delta-coded index stream is the side info; kept values travel
+    /// as exact f32s (no entropy stage).
+    fn layer_report(name: String, n: usize, keep: usize) -> LayerReport {
+        LayerReport {
+            name,
+            raw_bytes: n * 4,
+            side_info_bytes: keep * 4,
+            lossy: true,
+            ..Default::default()
+        }
+    }
+
+    fn keep_count(&self, n: usize) -> usize {
+        ((n as f64 * self.k).ceil() as usize).clamp(1, n)
     }
 }
 
 impl GradientCodec for TopKCodec {
-    fn compress(&mut self, grads: &ModelGrad) -> crate::Result<Vec<u8>> {
-        let mut top = BlobWriter::new();
-        top.put_u32(grads.layers.len() as u32);
-        for layer in &grads.layers {
-            let closed = self.backend.compress(&self.compress_layer(layer))?;
-            top.put_bytes(&closed);
-        }
-        Ok(top.into_bytes())
+    fn encode_layer(&mut self, idx: usize, layer: &LayerGrad) -> crate::Result<Frame> {
+        let closed = self.backend.compress(&self.compress_layer(layer))?;
+        let n = layer.data.len();
+        let report = Self::layer_report(layer.meta.name.clone(), n, self.keep_count(n));
+        Ok(Frame::new(idx, closed, report))
     }
 
-    fn decompress(&mut self, payload: &[u8], metas: &[LayerMeta]) -> crate::Result<ModelGrad> {
-        let mut r = BlobReader::new(payload);
-        let n_layers = r.get_u32()? as usize;
-        if n_layers != metas.len() {
-            anyhow::bail!("topk payload {} layers != {}", n_layers, metas.len());
-        }
-        let mut out = ModelGrad::default();
-        for meta in metas {
-            let body = lossless::decompress(r.get_bytes()?)?;
-            out.layers.push(LayerGrad::new(meta.clone(), self.decompress_layer(meta, &body)?));
-        }
-        Ok(out)
+    fn decode_frame(
+        &mut self,
+        frame: &Frame,
+        meta: &LayerMeta,
+    ) -> crate::Result<(LayerGrad, LayerReport)> {
+        let body = lossless::decompress(&frame.payload)?;
+        let (data, mut report) = self.decompress_layer(meta, &body)?;
+        report.compressed_bytes = frame.wire_size();
+        Ok((LayerGrad::new(meta.clone(), data), report))
+    }
+
+    /// Stateless per layer ⇒ parallel whole-model encode.
+    fn encode_model(&mut self, grads: &ModelGrad) -> crate::Result<Vec<Frame>> {
+        let this = &*self;
+        crate::compress::session::encode_model_parallel(grads, |_, layer| {
+            let closed = this.backend.compress(&this.compress_layer(layer))?;
+            let n = layer.data.len();
+            Ok((closed, Self::layer_report(layer.meta.name.clone(), n, this.keep_count(n))))
+        })
     }
 
     fn name(&self) -> &'static str {

@@ -1,0 +1,240 @@
+//! Self-delimiting per-layer frames and the unified per-layer byte
+//! accounting shared by every codec.
+//!
+//! A [`Frame`] is the unit of the session API ([`super::GradientCodec`]):
+//! the encoder emits one frame per layer, the decoder consumes them in
+//! order. Frames are self-delimiting on the wire (`u32` layer index +
+//! `u32` payload length + payload), so they can be streamed one at a time
+//! through [`crate::fl::protocol::Msg::UpdateFrame`] and the transport can
+//! overlap layer `i`'s transmission with layer `i+1`'s compression.
+//!
+//! Every codec reports its per-layer raw/compressed/side-info byte split
+//! through [`LayerReport`] — the single accounting type that replaced the
+//! old `FedgecCodec::last_reports` / `Sz3Codec::last_ratios` duality — and
+//! a whole-round session aggregates them into a [`CodecReport`].
+
+use super::blob::{BlobReader, BlobWriter};
+use super::predictor::sign::SignStats;
+use super::CompressionStats;
+
+/// Bytes of framing overhead per frame on the wire (index + length).
+pub const FRAME_HEADER_BYTES: usize = 8;
+
+/// One layer's encoded section: layer index + opaque codec payload, plus
+/// the encoder-side accounting (not serialized).
+#[derive(Debug, Clone, Default)]
+pub struct Frame {
+    /// Layer index within the model (drives per-layer codec state).
+    pub index: u32,
+    /// Codec-specific payload (already closed by the lossless backend).
+    pub payload: Vec<u8>,
+    /// Encoder-side accounting for this layer. Frames parsed back from
+    /// wire bytes carry only the byte counts.
+    pub report: LayerReport,
+}
+
+impl Frame {
+    /// Build a frame, filling the report's `compressed_bytes` with the
+    /// on-wire size (payload + framing header).
+    pub fn new(index: usize, payload: Vec<u8>, mut report: LayerReport) -> Frame {
+        report.compressed_bytes = payload.len() + FRAME_HEADER_BYTES;
+        Frame { index: index as u32, payload, report }
+    }
+
+    /// On-wire size of this frame.
+    pub fn wire_size(&self) -> usize {
+        self.payload.len() + FRAME_HEADER_BYTES
+    }
+
+    /// Serialize to the self-delimiting wire form.
+    pub fn to_wire(&self) -> Vec<u8> {
+        let mut w = BlobWriter::new();
+        self.write(&mut w);
+        w.into_bytes()
+    }
+
+    /// Append the wire form to an open writer.
+    pub fn write(&self, w: &mut BlobWriter) {
+        w.put_u32(self.index);
+        w.put_bytes(&self.payload);
+    }
+
+    /// Parse one frame from a reader positioned at a frame boundary.
+    pub fn read(r: &mut BlobReader) -> crate::Result<Frame> {
+        let index = r.get_u32()?;
+        let payload = r.get_bytes()?.to_vec();
+        let report = LayerReport {
+            compressed_bytes: payload.len() + FRAME_HEADER_BYTES,
+            ..Default::default()
+        };
+        Ok(Frame { index, payload, report })
+    }
+
+    /// Parse a frame from standalone wire bytes (e.g. an `UpdateFrame`
+    /// message body).
+    pub fn from_wire(buf: &[u8]) -> crate::Result<Frame> {
+        let mut r = BlobReader::new(buf);
+        let f = Self::read(&mut r)?;
+        anyhow::ensure!(r.remaining() == 0, "trailing bytes after frame");
+        Ok(f)
+    }
+}
+
+/// Bundle an ordered frame sequence into one whole-model payload — the
+/// blanket adapter's wire format (`u32` frame count + frames).
+pub fn frames_to_payload(frames: &[Frame]) -> Vec<u8> {
+    let mut w = BlobWriter::new();
+    w.put_u32(frames.len() as u32);
+    for f in frames {
+        f.write(&mut w);
+    }
+    w.into_bytes()
+}
+
+/// Split a whole-model payload back into frames.
+pub fn payload_to_frames(payload: &[u8]) -> crate::Result<Vec<Frame>> {
+    let mut r = BlobReader::new(payload);
+    let n = r.get_u32()? as usize;
+    anyhow::ensure!(
+        n.saturating_mul(FRAME_HEADER_BYTES) <= r.remaining(),
+        "implausible frame count {n}"
+    );
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(Frame::read(&mut r)?);
+    }
+    anyhow::ensure!(r.remaining() == 0, "trailing bytes after {n} frames");
+    Ok(out)
+}
+
+/// Per-layer byte accounting, identical across all codec families.
+#[derive(Debug, Clone, Default)]
+pub struct LayerReport {
+    pub name: String,
+    /// Uncompressed layer bytes (`numel * 4`).
+    pub raw_bytes: usize,
+    /// On-wire bytes of this layer's frame (payload + framing header).
+    pub compressed_bytes: usize,
+    /// Side-information bytes: sign bitmaps, sparse indices, bucket
+    /// norms, escape values — everything that is not the residual stream.
+    pub side_info_bytes: usize,
+    /// Entropy-coded residual stream bytes (0 for non-entropy codecs).
+    pub entropy_bytes: usize,
+    /// Whether the lossy pipeline ran (small layers are stored lossless).
+    pub lossy: bool,
+    /// Escaped (stored-exact) element count for EBLC codecs.
+    pub escape_count: usize,
+    /// Sign-predictor statistics (FedGEC only; zeros elsewhere).
+    pub sign_stats: SignStats,
+}
+
+impl LayerReport {
+    /// Compression ratio of this layer alone.
+    pub fn ratio(&self) -> f64 {
+        CompressionStats { raw_bytes: self.raw_bytes, compressed_bytes: self.compressed_bytes }
+            .ratio()
+    }
+}
+
+/// A whole round's unified report: one [`LayerReport`] per layer, in
+/// model order — what every codec returns through the session API.
+#[derive(Debug, Clone, Default)]
+pub struct CodecReport {
+    /// Codec name (as reported by `GradientCodec::name`).
+    pub codec: String,
+    pub layers: Vec<LayerReport>,
+}
+
+impl CodecReport {
+    pub fn new(codec: &str) -> Self {
+        CodecReport { codec: codec.to_string(), layers: Vec::new() }
+    }
+
+    /// Collect the encoder-side reports carried by a frame sequence.
+    pub fn from_frames(codec: &str, frames: &[Frame]) -> Self {
+        CodecReport {
+            codec: codec.to_string(),
+            layers: frames.iter().map(|f| f.report.clone()).collect(),
+        }
+    }
+
+    pub fn push(&mut self, r: LayerReport) {
+        self.layers.push(r);
+    }
+
+    /// Aggregate byte totals across layers.
+    pub fn totals(&self) -> CompressionStats {
+        let mut s = CompressionStats::default();
+        for l in &self.layers {
+            s.add(l.raw_bytes, l.compressed_bytes);
+        }
+        s
+    }
+
+    pub fn total_raw(&self) -> usize {
+        self.totals().raw_bytes
+    }
+
+    pub fn total_compressed(&self) -> usize {
+        self.totals().compressed_bytes
+    }
+
+    /// Whole-round compression ratio.
+    pub fn ratio(&self) -> f64 {
+        self.totals().ratio()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_wire_roundtrip() {
+        let f = Frame::new(3, vec![1, 2, 3, 4, 5], LayerReport::default());
+        assert_eq!(f.wire_size(), 5 + FRAME_HEADER_BYTES);
+        let back = Frame::from_wire(&f.to_wire()).unwrap();
+        assert_eq!(back.index, 3);
+        assert_eq!(back.payload, vec![1, 2, 3, 4, 5]);
+        assert_eq!(back.report.compressed_bytes, f.wire_size());
+    }
+
+    #[test]
+    fn payload_roundtrip_preserves_order() {
+        let frames: Vec<Frame> = (0..4)
+            .map(|i| Frame::new(i, vec![i as u8; i + 1], LayerReport::default()))
+            .collect();
+        let payload = frames_to_payload(&frames);
+        let back = payload_to_frames(&payload).unwrap();
+        assert_eq!(back.len(), 4);
+        for (i, f) in back.iter().enumerate() {
+            assert_eq!(f.index as usize, i);
+            assert_eq!(f.payload.len(), i + 1);
+        }
+    }
+
+    #[test]
+    fn corrupt_payload_errors() {
+        assert!(payload_to_frames(&[1, 2]).is_err());
+        let frames = vec![Frame::new(0, vec![9; 10], LayerReport::default())];
+        let mut payload = frames_to_payload(&frames);
+        payload.truncate(payload.len() - 3);
+        assert!(payload_to_frames(&payload).is_err());
+        // Trailing garbage is rejected too.
+        let mut payload = frames_to_payload(&frames);
+        payload.push(0xAB);
+        assert!(payload_to_frames(&payload).is_err());
+    }
+
+    #[test]
+    fn report_totals_and_ratio() {
+        let mut rep = CodecReport::new("demo");
+        rep.push(LayerReport { raw_bytes: 100, compressed_bytes: 10, ..Default::default() });
+        rep.push(LayerReport { raw_bytes: 100, compressed_bytes: 10, ..Default::default() });
+        assert_eq!(rep.total_raw(), 200);
+        assert_eq!(rep.total_compressed(), 20);
+        assert!((rep.ratio() - 10.0).abs() < 1e-12);
+        // Empty reports read as "nothing happened", ratio 1.
+        assert_eq!(CodecReport::new("empty").ratio(), 1.0);
+    }
+}

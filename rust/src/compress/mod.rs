@@ -4,9 +4,19 @@
 //! prediction stage replaced by the cross-round magnitude predictor
 //! (Alg. 1) and the oscillation / kernel-consistency sign predictor
 //! (Alg. 2 + the Fig. 8 two-level bitmap).
+//!
+//! Codecs speak the **session/frame API**: one self-delimiting
+//! [`Frame`] per layer ([`GradientCodec::encode_layer`] /
+//! [`GradientCodec::decode_frame`]), so large models can compress layers
+//! in parallel and the FL transport can stream frames while later layers
+//! are still encoding. The whole-model `compress`/`decompress` entry
+//! points are provided blanket adapters over the same frames. Codecs are
+//! constructed from a [`spec::CodecSpec`] descriptor (see that module for
+//! the grammar and registry).
 
 pub mod autotune;
 pub mod blob;
+pub mod frame;
 pub mod fused;
 pub mod huffman;
 pub mod lossless;
@@ -14,27 +24,106 @@ pub mod lz;
 pub mod pipeline;
 pub mod predictor;
 pub mod quant;
+pub mod session;
+pub mod spec;
 pub mod state;
 
-use crate::tensor::{LayerMeta, ModelGrad};
+pub use frame::{CodecReport, Frame, LayerReport};
+
+use crate::tensor::{LayerGrad, LayerMeta, ModelGrad};
 
 /// A round-stateful gradient codec. The compressor side lives on the
 /// client, the decompressor side on the server; both mutate internal
 /// predictor state every round and must stay synchronized through the
 /// payload alone (paper §4.1).
+///
+/// Implementors provide the per-layer frame primitives; the whole-model
+/// `compress`/`decompress`/`*_with_report` methods are blanket adapters
+/// that every call site may keep using.
 pub trait GradientCodec: Send {
-    /// Compress one round's gradients, updating internal state to the
-    /// reconstructed values.
-    fn compress(&mut self, grads: &ModelGrad) -> crate::Result<Vec<u8>>;
+    /// Start a round session for an `n_layers` model (both sides call
+    /// this before the first `encode_layer`/`decode_frame` of a round;
+    /// allocates per-layer state where the codec keeps any).
+    fn begin(&mut self, n_layers: usize) -> crate::Result<()> {
+        let _ = n_layers;
+        Ok(())
+    }
 
-    /// Decompress one round's payload, updating internal state.
-    fn decompress(&mut self, payload: &[u8], metas: &[LayerMeta]) -> crate::Result<ModelGrad>;
+    /// Encode layer `idx` into a self-delimiting frame.
+    fn encode_layer(&mut self, idx: usize, layer: &LayerGrad) -> crate::Result<Frame>;
+
+    /// Decode one frame (the frame's `index` selects per-layer state).
+    fn decode_frame(
+        &mut self,
+        frame: &Frame,
+        meta: &LayerMeta,
+    ) -> crate::Result<(LayerGrad, LayerReport)>;
+
+    /// Encode a whole model to frames. The default encodes sequentially;
+    /// codecs with independent per-layer state override this to encode
+    /// layers in parallel on [`crate::util::threadpool`].
+    fn encode_model(&mut self, grads: &ModelGrad) -> crate::Result<Vec<Frame>> {
+        self.begin(grads.layers.len())?;
+        grads
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(idx, layer)| self.encode_layer(idx, layer))
+            .collect()
+    }
 
     /// Human-readable codec name for reports.
     fn name(&self) -> &'static str;
 
     /// Reset all cross-round state (new training run).
     fn reset(&mut self);
+
+    // ── Blanket whole-model adapters. ──
+
+    /// Compress one round's gradients into a single payload.
+    fn compress(&mut self, grads: &ModelGrad) -> crate::Result<Vec<u8>> {
+        Ok(self.compress_with_report(grads)?.0)
+    }
+
+    /// Compress and return the unified per-layer report alongside.
+    fn compress_with_report(
+        &mut self,
+        grads: &ModelGrad,
+    ) -> crate::Result<(Vec<u8>, CodecReport)> {
+        let frames = self.encode_model(grads)?;
+        let report = CodecReport::from_frames(self.name(), &frames);
+        Ok((frame::frames_to_payload(&frames), report))
+    }
+
+    /// Decompress one round's payload.
+    fn decompress(&mut self, payload: &[u8], metas: &[LayerMeta]) -> crate::Result<ModelGrad> {
+        Ok(self.decompress_with_report(payload, metas)?.0)
+    }
+
+    /// Decompress and return the unified per-layer report alongside.
+    fn decompress_with_report(
+        &mut self,
+        payload: &[u8],
+        metas: &[LayerMeta],
+    ) -> crate::Result<(ModelGrad, CodecReport)> {
+        let frames = frame::payload_to_frames(payload)?;
+        anyhow::ensure!(
+            frames.len() == metas.len(),
+            "payload has {} layers, expected {}",
+            frames.len(),
+            metas.len()
+        );
+        let mut report = CodecReport::new(self.name());
+        self.begin(metas.len())?;
+        let mut decoded = Vec::with_capacity(frames.len());
+        for (i, (f, meta)) in frames.iter().zip(metas).enumerate() {
+            anyhow::ensure!(f.index as usize == i, "frame {} out of order ({})", i, f.index);
+            let (layer, rep) = self.decode_frame(f, meta)?;
+            report.push(rep);
+            decoded.push(layer);
+        }
+        Ok((ModelGrad { layers: decoded }, report))
+    }
 }
 
 /// Compression-ratio bookkeeping shared by benches and the FL metrics.
@@ -45,9 +134,15 @@ pub struct CompressionStats {
 }
 
 impl CompressionStats {
+    /// Raw/compressed ratio. An empty round (nothing sent, nothing to
+    /// send) is a neutral 1.0, not a nonsensical 0.0.
     pub fn ratio(&self) -> f64 {
         if self.compressed_bytes == 0 {
-            0.0
+            if self.raw_bytes == 0 {
+                1.0
+            } else {
+                0.0
+            }
         } else {
             self.raw_bytes as f64 / self.compressed_bytes as f64
         }
@@ -68,6 +163,10 @@ mod tests {
         s.add(100, 10);
         s.add(100, 10);
         assert!((s.ratio() - 10.0).abs() < 1e-12);
-        assert_eq!(CompressionStats::default().ratio(), 0.0);
+        // Empty accounting is neutral (CR 1), not 0.
+        assert_eq!(CompressionStats::default().ratio(), 1.0);
+        // Degenerate "raw but nothing compressed" stays 0.
+        let s = CompressionStats { raw_bytes: 10, compressed_bytes: 0 };
+        assert_eq!(s.ratio(), 0.0);
     }
 }

@@ -2,26 +2,35 @@
 //!
 //! Per layer: small tensors (`numel ≤ T_LOSSY`) are stored losslessly;
 //! large tensors run the four-stage lossy pipeline with the gradient-aware
-//! predictor. The per-layer payload bundles `(μ_curr, σ_curr)`, the sign
+//! predictor. The per-layer frame bundles `(μ_curr, σ_curr)`, the sign
 //! side-info (flip bit or two-level bitmap), the Huffman-coded residual
 //! codes and the escape values, and is closed by the lossless backend —
 //! exactly the structure of Alg. 3 lines 6-16.
+//!
+//! The codec speaks the session/frame API: each layer's state is
+//! independent, so [`FedgecCodec::encode_model`] compresses layers in
+//! parallel on [`crate::util::threadpool`] for large models (the layer
+//! pipeline the paper's deployment story needs).
 //!
 //! The predict stage can run on the native fused path
 //! ([`crate::compress::fused`]) or through a pluggable
 //! [`PredictBackend`] (the PJRT/HLO engine in `crate::runtime` that
 //! executes the Pallas kernel's lowering).
 
-use super::blob::{f32s_to_bytes, bytes_to_f32s, BlobReader, BlobWriter};
+use super::autotune::TauController;
+use super::blob::{bytes_to_f32s, f32s_to_bytes, BlobReader, BlobWriter};
+use super::frame::Frame;
 use super::fused::{fused_decode, fused_encode, FusedEncodeOut, FusedParams};
 use super::huffman;
 use super::lossless::{self, Backend};
-use super::predictor::sign::{predict_signs, reconstruct_signs, SignMeta, SignMode, SignStats};
+use super::predictor::sign::{predict_signs, reconstruct_signs, SignMeta, SignMode};
 use super::quant::{self, ErrorBound, Quantized};
-use super::state::CodecState;
+use super::state::{CodecState, LayerState};
 use super::GradientCodec;
 use crate::tensor::{LayerGrad, LayerMeta, ModelGrad};
 use crate::util::stats;
+
+pub use super::frame::LayerReport;
 
 /// Tunable knobs of the codec (paper Alg. 3 parameter list).
 #[derive(Debug, Clone)]
@@ -70,19 +79,6 @@ pub trait PredictBackend: Send {
     ) -> anyhow::Result<Vec<f32>>;
 }
 
-/// Per-layer report from the last compressed/decompressed round.
-#[derive(Debug, Clone, Default)]
-pub struct LayerReport {
-    pub name: String,
-    pub raw_bytes: usize,
-    pub compressed_bytes: usize,
-    pub lossy: bool,
-    pub sign_stats: SignStats,
-    pub sign_meta_bytes: usize,
-    pub entropy_bytes: usize,
-    pub escape_count: usize,
-}
-
 /// The FedGEC codec: symmetric client/server object implementing
 /// [`GradientCodec`].
 pub struct FedgecCodec {
@@ -90,21 +86,13 @@ pub struct FedgecCodec {
     pub state: CodecState,
     /// Optional PJRT/HLO predict engine; `None` ⇒ native fused path.
     pub engine: Option<Box<dyn PredictBackend>>,
-    /// Reports from the most recent round.
-    pub last_reports: Vec<LayerReport>,
     /// Per-layer τ controllers (client side, active when cfg.autotune).
-    pub tau_ctrl: Vec<super::autotune::TauController>,
+    pub tau_ctrl: Vec<TauController>,
 }
 
 impl FedgecCodec {
     pub fn new(cfg: FedgecConfig) -> Self {
-        FedgecCodec {
-            cfg,
-            state: CodecState::default(),
-            engine: None,
-            last_reports: Vec::new(),
-            tau_ctrl: Vec::new(),
-        }
+        FedgecCodec { cfg, state: CodecState::default(), engine: None, tau_ctrl: Vec::new() }
     }
 
     pub fn with_engine(cfg: FedgecConfig, engine: Box<dyn PredictBackend>) -> Self {
@@ -112,245 +100,304 @@ impl FedgecCodec {
             cfg,
             state: CodecState::default(),
             engine: Some(engine),
-            last_reports: Vec::new(),
             tau_ctrl: Vec::new(),
         }
     }
 
-    fn sign_mode(&mut self, idx: usize) -> SignMode {
-        if self.cfg.full_batch {
-            SignMode::FullBatch
-        } else if self.cfg.autotune {
-            while self.tau_ctrl.len() <= idx {
-                let mut c = super::autotune::TauController::default();
+    fn ensure_ctrl(&mut self, n: usize) {
+        if self.cfg.autotune && !self.cfg.full_batch {
+            while self.tau_ctrl.len() < n {
+                let mut c = TauController::default();
                 c.tau = self.cfg.tau;
                 self.tau_ctrl.push(c);
             }
-            SignMode::MiniBatch { tau: self.tau_ctrl[idx].tau }
-        } else {
-            SignMode::MiniBatch { tau: self.cfg.tau }
         }
     }
 
-    /// The effective β for layer `idx` this round: config value, or the
-    /// deterministic history-derived schedule when auto-tuning (identical
-    /// on both sides — derived from reconstructed data only).
-    fn effective_beta(&self, idx: usize) -> f32 {
-        if !self.cfg.autotune {
-            return self.cfg.beta;
+    /// Worker count for layer-parallel encoding (1 = stay sequential; the
+    /// HLO engine path is inherently sequential).
+    fn encode_threads(&self, grads: &ModelGrad) -> usize {
+        if self.engine.is_some() {
+            return 1;
         }
-        let st = &self.state.layers[idx];
-        match (&st.prev_abs, &st.prev_prev_abs) {
-            (Some(a), Some(b)) => super::autotune::beta_from_history(a, b),
-            _ => self.cfg.beta,
-        }
-    }
-
-    /// Compress one layer, returning the pre-lossless section bytes.
-    fn compress_layer(&mut self, idx: usize, layer: &LayerGrad) -> crate::Result<(Vec<u8>, LayerReport)> {
-        let grad = &layer.data;
-        let n = grad.len();
-        let mut report = LayerReport {
-            name: layer.meta.name.clone(),
-            raw_bytes: n * 4,
-            ..Default::default()
-        };
-        let mut w = BlobWriter::new();
-
-        if n <= self.cfg.t_lossy {
-            // Alg. 3 line 3-4: lossless-only small layer.
-            w.put_u8(0);
-            w.put_bytes(&f32s_to_bytes(grad));
-            // Small layers bypass predictor state entirely.
-            return Ok((w.into_bytes(), report));
-        }
-        report.lossy = true;
-
-        // --- Stage 1a: sign prediction (Alg. 3 line 10). ---
-        let mode = self.sign_mode(idx);
-        let beta = self.effective_beta(idx);
-        let st = &mut self.state.layers[idx];
-        let (signs, sign_meta, sign_stats) = predict_signs(
-            grad,
-            &layer.meta.kind,
-            mode,
-            st.prev_recon.as_deref(),
-            st.prev_sign.as_deref(),
-        );
-        report.sign_stats = sign_stats;
-        if self.cfg.autotune && !self.cfg.full_batch && sign_stats.kernels_total > 0 {
-            self.tau_ctrl[idx]
-                .update(sign_stats.mismatch_rate(), sign_stats.prediction_ratio());
-        }
-        let st = &mut self.state.layers[idx];
-
-        // --- Stage 1b+2: magnitude prediction + quantization. ---
-        let (mu_curr, sigma_curr) = stats::mean_std_abs(grad);
-        let (lo, hi) = stats::finite_min_max(grad);
-        let delta = self.cfg.error_bound.resolve(lo, hi);
-        let empty: [f32; 0] = [];
-        let prev_abs: &[f32] = st.prev_abs.as_deref().unwrap_or(&empty);
-        let (mu_prev, sigma_prev) = stats::mean_std(prev_abs);
-        let p = FusedParams {
-            beta,
-            mu_curr,
-            sigma_curr,
-            mu_prev,
-            sigma_prev,
-            two_delta: (2.0 * delta) as f32,
-            delta: delta as f32,
-        };
-
-        let mut out = FusedEncodeOut::default();
-        match &mut self.engine {
-            None => {
-                fused_encode(grad, prev_abs, &mut st.memory, &signs, &p, &mut out);
-            }
-            Some(engine) => {
-                if !prev_abs.is_empty() && st.memory.len() != n {
-                    st.memory.clear();
-                    st.memory.resize(n, 0.0);
-                }
-                let ghat = if prev_abs.is_empty() {
-                    vec![0.0; n]
-                } else {
-                    engine.predict(prev_abs, &mut st.memory, &signs, &p)?
-                };
-                let mut q = Quantized::default();
-                quant::quantize(grad, &ghat, delta, &mut q, &mut out.recon);
-                out.codes = q.codes;
-                out.escapes = q.escapes;
-            }
-        }
-        report.escape_count = out.escapes.len();
-
-        // --- Stage 3: entropy coding. ---
-        let entropy = huffman::encode_to_bytes(&out.codes);
-        report.entropy_bytes = entropy.len();
-        let sign_bytes = sign_meta.encode();
-        report.sign_meta_bytes = sign_bytes.len();
-
-        // --- Layer section (Alg. 3 line 15). ---
-        w.put_u8(1);
-        w.put_u32(n as u32);
-        w.put_f32(mu_curr);
-        w.put_f32(sigma_curr);
-        w.put_f64(delta);
-        w.put_bytes(&sign_bytes);
-        w.put_bytes(&entropy);
-        w.put_f32_slice(&out.escapes);
-
-        // Update local state with the reconstruction (client mirror).
-        st.absorb(&out.recon);
-        Ok((w.into_bytes(), report))
-    }
-
-    /// Decompress one layer section (post-lossless bytes).
-    fn decompress_layer(
-        &mut self,
-        idx: usize,
-        meta: &LayerMeta,
-        section: &[u8],
-    ) -> crate::Result<(Vec<f32>, LayerReport)> {
-        let mut r = BlobReader::new(section);
-        let tag = r.get_u8()?;
-        let mut report = LayerReport { name: meta.name.clone(), ..Default::default() };
-        if tag == 0 {
-            let data = bytes_to_f32s(r.get_bytes()?)?;
-            report.raw_bytes = data.len() * 4;
-            return Ok((data, report));
-        }
-        report.lossy = true;
-        let n = r.get_u32()? as usize;
-        if n != meta.numel {
-            anyhow::bail!("layer {}: payload numel {} != meta {}", meta.name, n, meta.numel);
-        }
-        report.raw_bytes = n * 4;
-        let mu_curr = r.get_f32()?;
-        let sigma_curr = r.get_f32()?;
-        let delta = r.get_f64()?;
-        let sign_meta = SignMeta::decode(r.get_bytes()?)?;
-        let (codes, _) = huffman::decode_from_bytes(r.get_bytes()?)?;
-        if codes.len() != n {
-            anyhow::bail!("layer {}: {} codes for {} elements", meta.name, codes.len(), n);
-        }
-        let escapes = r.get_f32_vec()?;
-
-        let beta = self.effective_beta(idx);
-        let st = &mut self.state.layers[idx];
-        let signs = reconstruct_signs(&sign_meta, n, &meta.kind, st.prev_sign.as_deref())?;
-        let empty: [f32; 0] = [];
-        let prev_abs: &[f32] = st.prev_abs.as_deref().unwrap_or(&empty);
-        let (mu_prev, sigma_prev) = stats::mean_std(prev_abs);
-        let p = FusedParams {
-            beta,
-            mu_curr,
-            sigma_curr,
-            mu_prev,
-            sigma_prev,
-            two_delta: (2.0 * delta) as f32,
-            delta: delta as f32,
-        };
-        let mut recon = Vec::new();
-        match &mut self.engine {
-            None => {
-                fused_decode(&codes, &escapes, prev_abs, &mut st.memory, &signs, &p, &mut recon)?;
-            }
-            Some(engine) => {
-                if !prev_abs.is_empty() && st.memory.len() != n {
-                    st.memory.clear();
-                    st.memory.resize(n, 0.0);
-                }
-                let ghat = if prev_abs.is_empty() {
-                    vec![0.0; n]
-                } else {
-                    engine.predict(prev_abs, &mut st.memory, &signs, &p)?
-                };
-                let q = Quantized { codes, escapes };
-                quant::dequantize(&q, &ghat, delta, &mut recon);
-            }
-        }
-        st.absorb(&recon);
-        Ok((recon, report))
+        crate::util::threadpool::layer_parallelism(grads.layers.len(), grads.numel())
     }
 }
 
-impl GradientCodec for FedgecCodec {
-    fn compress(&mut self, grads: &ModelGrad) -> crate::Result<Vec<u8>> {
-        self.state.ensure(grads.layers.len());
-        let mut top = BlobWriter::new();
-        top.put_u32(grads.layers.len() as u32);
-        let mut reports = Vec::with_capacity(grads.layers.len());
-        for (idx, layer) in grads.layers.iter().enumerate() {
-            let (section, mut report) = self.compress_layer(idx, layer)?;
-            let closed = self.cfg.backend.compress(&section)?;
-            report.compressed_bytes = closed.len();
-            reports.push(report);
-            top.put_bytes(&closed);
+/// The effective β for a layer this round: config value, or the
+/// deterministic history-derived schedule when auto-tuning (identical on
+/// both sides — derived from reconstructed data only).
+fn effective_beta(cfg: &FedgecConfig, st: &LayerState) -> f32 {
+    if !cfg.autotune {
+        return cfg.beta;
+    }
+    match (&st.prev_abs, &st.prev_prev_abs) {
+        (Some(a), Some(b)) => super::autotune::beta_from_history(a, b),
+        _ => cfg.beta,
+    }
+}
+
+/// Compress one layer into its closed (post-lossless) frame payload.
+/// Free-standing over the layer's own state so layers encode in parallel.
+fn compress_layer_impl(
+    cfg: &FedgecConfig,
+    layer: &LayerGrad,
+    st: &mut LayerState,
+    ctrl: Option<&mut TauController>,
+    engine: Option<&mut dyn PredictBackend>,
+) -> crate::Result<(Vec<u8>, LayerReport)> {
+    let grad = &layer.data;
+    let n = grad.len();
+    let mut report = LayerReport {
+        name: layer.meta.name.clone(),
+        raw_bytes: n * 4,
+        ..Default::default()
+    };
+    let mut w = BlobWriter::new();
+
+    if n <= cfg.t_lossy {
+        // Alg. 3 line 3-4: lossless-only small layer (bypasses predictor
+        // state entirely).
+        w.put_u8(0);
+        w.put_bytes(&f32s_to_bytes(grad));
+        let closed = cfg.backend.compress(&w.into_bytes())?;
+        return Ok((closed, report));
+    }
+    report.lossy = true;
+
+    // --- Stage 1a: sign prediction (Alg. 3 line 10). ---
+    let mode = if cfg.full_batch {
+        SignMode::FullBatch
+    } else {
+        SignMode::MiniBatch { tau: ctrl.as_ref().map(|c| c.tau).unwrap_or(cfg.tau) }
+    };
+    let beta = effective_beta(cfg, st);
+    let (signs, sign_meta, sign_stats) = predict_signs(
+        grad,
+        &layer.meta.kind,
+        mode,
+        st.prev_recon.as_deref(),
+        st.prev_sign.as_deref(),
+    );
+    report.sign_stats = sign_stats;
+    if let Some(ctrl) = ctrl {
+        if !cfg.full_batch && sign_stats.kernels_total > 0 {
+            ctrl.update(sign_stats.mismatch_rate(), sign_stats.prediction_ratio());
         }
-        self.last_reports = reports;
-        Ok(top.into_bytes())
     }
 
-    fn decompress(&mut self, payload: &[u8], metas: &[LayerMeta]) -> crate::Result<ModelGrad> {
-        let mut r = BlobReader::new(payload);
-        let n_layers = r.get_u32()? as usize;
-        if n_layers != metas.len() {
-            anyhow::bail!("payload has {} layers, expected {}", n_layers, metas.len());
+    // --- Stage 1b+2: magnitude prediction + quantization. ---
+    let (mu_curr, sigma_curr) = stats::mean_std_abs(grad);
+    let (lo, hi) = stats::finite_min_max(grad);
+    let delta = cfg.error_bound.resolve(lo, hi);
+    let empty: [f32; 0] = [];
+    let prev_abs: &[f32] = st.prev_abs.as_deref().unwrap_or(&empty);
+    let (mu_prev, sigma_prev) = stats::mean_std(prev_abs);
+    let p = FusedParams {
+        beta,
+        mu_curr,
+        sigma_curr,
+        mu_prev,
+        sigma_prev,
+        two_delta: (2.0 * delta) as f32,
+        delta: delta as f32,
+    };
+
+    let mut out = FusedEncodeOut::default();
+    match engine {
+        None => {
+            fused_encode(grad, prev_abs, &mut st.memory, &signs, &p, &mut out);
         }
+        Some(engine) => {
+            if !prev_abs.is_empty() && st.memory.len() != n {
+                st.memory.clear();
+                st.memory.resize(n, 0.0);
+            }
+            let ghat = if prev_abs.is_empty() {
+                vec![0.0; n]
+            } else {
+                engine.predict(prev_abs, &mut st.memory, &signs, &p)?
+            };
+            let mut q = Quantized::default();
+            quant::quantize(grad, &ghat, delta, &mut q, &mut out.recon);
+            out.codes = q.codes;
+            out.escapes = q.escapes;
+        }
+    }
+    report.escape_count = out.escapes.len();
+
+    // --- Stage 3: entropy coding. ---
+    let entropy = huffman::encode_to_bytes(&out.codes);
+    report.entropy_bytes = entropy.len();
+    let sign_bytes = sign_meta.encode();
+    report.side_info_bytes = sign_bytes.len() + out.escapes.len() * 4;
+
+    // --- Layer section (Alg. 3 line 15). ---
+    w.put_u8(1);
+    w.put_u32(n as u32);
+    w.put_f32(mu_curr);
+    w.put_f32(sigma_curr);
+    w.put_f64(delta);
+    w.put_bytes(&sign_bytes);
+    w.put_bytes(&entropy);
+    w.put_f32_slice(&out.escapes);
+
+    // Update local state with the reconstruction (client mirror).
+    st.absorb(&out.recon);
+    let closed = cfg.backend.compress(&w.into_bytes())?;
+    Ok((closed, report))
+}
+
+/// Decode one layer's frame section (post-lossless bytes).
+fn decompress_layer_impl(
+    cfg: &FedgecConfig,
+    meta: &LayerMeta,
+    section: &[u8],
+    st: &mut LayerState,
+    engine: Option<&mut dyn PredictBackend>,
+) -> crate::Result<(Vec<f32>, LayerReport)> {
+    let mut r = BlobReader::new(section);
+    let tag = r.get_u8()?;
+    let mut report = LayerReport { name: meta.name.clone(), ..Default::default() };
+    if tag == 0 {
+        let data = bytes_to_f32s(r.get_bytes()?)?;
+        anyhow::ensure!(data.len() == meta.numel, "layer {}: lossless numel", meta.name);
+        report.raw_bytes = data.len() * 4;
+        return Ok((data, report));
+    }
+    report.lossy = true;
+    let n = r.get_u32()? as usize;
+    if n != meta.numel {
+        anyhow::bail!("layer {}: payload numel {} != meta {}", meta.name, n, meta.numel);
+    }
+    report.raw_bytes = n * 4;
+    let mu_curr = r.get_f32()?;
+    let sigma_curr = r.get_f32()?;
+    let delta = r.get_f64()?;
+    let sign_bytes = r.get_bytes()?;
+    let sign_meta = SignMeta::decode(sign_bytes)?;
+    let entropy = r.get_bytes()?;
+    report.entropy_bytes = entropy.len();
+    let (codes, _) = huffman::decode_from_bytes(entropy)?;
+    if codes.len() != n {
+        anyhow::bail!("layer {}: {} codes for {} elements", meta.name, codes.len(), n);
+    }
+    let escapes = r.get_f32_vec()?;
+    report.side_info_bytes = sign_bytes.len() + escapes.len() * 4;
+    report.escape_count = escapes.len();
+
+    let beta = effective_beta(cfg, st);
+    let signs = reconstruct_signs(&sign_meta, n, &meta.kind, st.prev_sign.as_deref())?;
+    let empty: [f32; 0] = [];
+    let prev_abs: &[f32] = st.prev_abs.as_deref().unwrap_or(&empty);
+    let (mu_prev, sigma_prev) = stats::mean_std(prev_abs);
+    let p = FusedParams {
+        beta,
+        mu_curr,
+        sigma_curr,
+        mu_prev,
+        sigma_prev,
+        two_delta: (2.0 * delta) as f32,
+        delta: delta as f32,
+    };
+    let mut recon = Vec::new();
+    match engine {
+        None => {
+            fused_decode(&codes, &escapes, prev_abs, &mut st.memory, &signs, &p, &mut recon)?;
+        }
+        Some(engine) => {
+            if !prev_abs.is_empty() && st.memory.len() != n {
+                st.memory.clear();
+                st.memory.resize(n, 0.0);
+            }
+            let ghat = if prev_abs.is_empty() {
+                vec![0.0; n]
+            } else {
+                engine.predict(prev_abs, &mut st.memory, &signs, &p)?
+            };
+            let q = Quantized { codes, escapes };
+            quant::dequantize(&q, &ghat, delta, &mut recon);
+        }
+    }
+    st.absorb(&recon);
+    Ok((recon, report))
+}
+
+impl GradientCodec for FedgecCodec {
+    fn begin(&mut self, n_layers: usize) -> crate::Result<()> {
         self.state.ensure(n_layers);
-        let mut out = ModelGrad::default();
-        let mut reports = Vec::with_capacity(n_layers);
-        for (idx, meta) in metas.iter().enumerate() {
-            let closed = r.get_bytes()?;
-            let section = lossless::decompress(closed)?;
-            let (data, mut report) = self.decompress_layer(idx, meta, &section)?;
-            report.compressed_bytes = closed.len() + 4;
-            reports.push(report);
-            out.layers.push(LayerGrad::new(meta.clone(), data));
+        self.ensure_ctrl(n_layers);
+        Ok(())
+    }
+
+    fn encode_layer(&mut self, idx: usize, layer: &LayerGrad) -> crate::Result<Frame> {
+        self.state.ensure(idx + 1);
+        self.ensure_ctrl(idx + 1);
+        let use_ctrl = self.cfg.autotune && !self.cfg.full_batch;
+        let ctrl = if use_ctrl { Some(&mut self.tau_ctrl[idx]) } else { None };
+        let (payload, report) = compress_layer_impl(
+            &self.cfg,
+            layer,
+            &mut self.state.layers[idx],
+            ctrl,
+            self.engine.as_deref_mut(),
+        )?;
+        Ok(Frame::new(idx, payload, report))
+    }
+
+    fn decode_frame(
+        &mut self,
+        frame: &Frame,
+        meta: &LayerMeta,
+    ) -> crate::Result<(LayerGrad, LayerReport)> {
+        let idx = frame.index as usize;
+        self.state.ensure(idx + 1);
+        let section = lossless::decompress(&frame.payload)?;
+        let (data, mut report) = decompress_layer_impl(
+            &self.cfg,
+            meta,
+            &section,
+            &mut self.state.layers[idx],
+            self.engine.as_deref_mut(),
+        )?;
+        report.compressed_bytes = frame.wire_size();
+        Ok((LayerGrad::new(meta.clone(), data), report))
+    }
+
+    /// Layer-parallel whole-model encode: each layer's predictor state is
+    /// independent, so large models fan out across worker threads.
+    fn encode_model(&mut self, grads: &ModelGrad) -> crate::Result<Vec<Frame>> {
+        let n = grads.layers.len();
+        self.begin(n)?;
+        let threads = self.encode_threads(grads);
+        if threads <= 1 {
+            let mut frames = Vec::with_capacity(n);
+            for (idx, layer) in grads.layers.iter().enumerate() {
+                frames.push(self.encode_layer(idx, layer)?);
+            }
+            return Ok(frames);
         }
-        self.last_reports = reports;
-        Ok(out)
+        let use_ctrl = self.cfg.autotune && !self.cfg.full_batch;
+        let cfg = &self.cfg;
+        let mut ctrl_iter = if use_ctrl { Some(self.tau_ctrl.iter_mut()) } else { None };
+        let items: Vec<(&LayerGrad, &mut LayerState, Option<&mut TauController>)> = grads
+            .layers
+            .iter()
+            .zip(self.state.layers.iter_mut())
+            .map(|(layer, st)| {
+                let ctrl = ctrl_iter.as_mut().and_then(|it| it.next());
+                (layer, st, ctrl)
+            })
+            .collect();
+        let results = crate::util::threadpool::parallel_map(items, threads, |(layer, st, ctrl)| {
+            compress_layer_impl(cfg, layer, st, ctrl, None)
+        });
+        let mut frames = Vec::with_capacity(n);
+        for (idx, res) in results.into_iter().enumerate() {
+            let (payload, report) = res?;
+            frames.push(Frame::new(idx, payload, report));
+        }
+        Ok(frames)
     }
 
     fn name(&self) -> &'static str {
@@ -359,7 +406,6 @@ impl GradientCodec for FedgecCodec {
 
     fn reset(&mut self) {
         self.state.reset();
-        self.last_reports.clear();
         self.tau_ctrl.clear();
     }
 }
@@ -437,6 +483,73 @@ mod tests {
             ratio = grads.byte_size() as f64 / payload.len() as f64;
         }
         assert!(ratio > 4.0, "expected CR > 4, got {ratio:.2}");
+    }
+
+    #[test]
+    fn frame_api_matches_whole_model_adapter() {
+        // Session encoding must produce byte-identical frames to the
+        // blanket adapter (same per-layer state evolution).
+        let mut rng = Rng::new(11);
+        let g = make_grads(&mut rng, 1.0);
+        let mut a = FedgecCodec::new(FedgecConfig::default());
+        let mut b = FedgecCodec::new(FedgecConfig::default());
+        let payload = a.compress(&g).unwrap();
+        b.begin(g.layers.len()).unwrap();
+        let mut frames = Vec::new();
+        for (idx, layer) in g.layers.iter().enumerate() {
+            frames.push(b.encode_layer(idx, layer).unwrap());
+        }
+        assert_eq!(payload, crate::compress::frame::frames_to_payload(&frames));
+    }
+
+    #[test]
+    fn parallel_encode_matches_sequential() {
+        // A model large enough to trip the parallel path must produce the
+        // exact payload of per-layer sequential encoding.
+        let mut rng = Rng::new(12);
+        let n = 40_000; // 4 layers x 40k elements > PARALLEL_MIN_NUMEL
+        let layers: Vec<LayerGrad> = (0..4)
+            .map(|i| {
+                let data: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+                LayerGrad::new(LayerMeta::dense(&format!("fc{i}"), n, 1), data)
+            })
+            .collect();
+        let g = ModelGrad { layers };
+        let mut par = FedgecCodec::new(FedgecConfig::default());
+        let mut seq = FedgecCodec::new(FedgecConfig::default());
+        for _ in 0..3 {
+            let frames_par = par.encode_model(&g).unwrap();
+            seq.begin(g.layers.len()).unwrap();
+            let frames_seq: Vec<_> = g
+                .layers
+                .iter()
+                .enumerate()
+                .map(|(i, l)| seq.encode_layer(i, l).unwrap())
+                .collect();
+            assert_eq!(frames_par.len(), frames_seq.len());
+            for (a, b) in frames_par.iter().zip(&frames_seq) {
+                assert_eq!(a.index, b.index);
+                assert_eq!(a.payload, b.payload);
+            }
+            assert_eq!(par.state.fingerprint(), seq.state.fingerprint());
+        }
+    }
+
+    #[test]
+    fn reports_flow_through_trait() {
+        let mut rng = Rng::new(13);
+        let g = make_grads(&mut rng, 1.0);
+        let mut client = FedgecCodec::new(FedgecConfig::default());
+        let mut server = FedgecCodec::new(FedgecConfig::default());
+        let (payload, creport) = client.compress_with_report(&g).unwrap();
+        assert_eq!(creport.layers.len(), 3);
+        assert_eq!(creport.total_raw(), g.byte_size());
+        assert!(creport.layers[0].lossy && !creport.layers[2].lossy);
+        // Wire accounting matches the actual payload (count header + frames).
+        assert_eq!(creport.total_compressed() + 4, payload.len());
+        let (_, sreport) = server.decompress_with_report(&payload, &metas(&g)).unwrap();
+        assert_eq!(sreport.total_raw(), creport.total_raw());
+        assert_eq!(sreport.total_compressed(), creport.total_compressed());
     }
 
     #[test]

@@ -1,0 +1,216 @@
+//! Encode/decode sessions: the streaming view of a [`GradientCodec`].
+//!
+//! A session wraps one round of a codec's frame API, tracking the layer
+//! cursor and accumulating the unified [`CodecReport`]. The FL client
+//! drives an [`EncodeSession`] to emit frames into the transport as they
+//! are produced (pipelining compression with transmission); the server
+//! drives a [`DecodeSession`] as frames arrive.
+//!
+//! The whole-model entry points (`GradientCodec::compress` /
+//! `::decompress`) are blanket adapters over the same machinery.
+
+use super::frame::{CodecReport, Frame, LayerReport};
+use super::GradientCodec;
+use crate::tensor::{LayerGrad, LayerMeta, ModelGrad};
+use crate::util::threadpool;
+
+/// One round's encoder session over a codec.
+pub struct EncodeSession<'c> {
+    codec: &'c mut dyn GradientCodec,
+    report: CodecReport,
+    n_layers: usize,
+    next: usize,
+}
+
+impl<'c> EncodeSession<'c> {
+    /// Begin an encode session for an `n_layers` model.
+    pub fn new(codec: &'c mut dyn GradientCodec, n_layers: usize) -> crate::Result<Self> {
+        codec.begin(n_layers)?;
+        let report = CodecReport::new(codec.name());
+        Ok(EncodeSession { codec, report, n_layers, next: 0 })
+    }
+
+    /// Encode the next layer (layers must arrive in model order).
+    pub fn encode_layer(&mut self, layer: &LayerGrad) -> crate::Result<Frame> {
+        anyhow::ensure!(
+            self.next < self.n_layers,
+            "encode session: layer {} past declared {}",
+            self.next,
+            self.n_layers
+        );
+        let frame = self.codec.encode_layer(self.next, layer)?;
+        self.report.push(frame.report.clone());
+        self.next += 1;
+        Ok(frame)
+    }
+
+    /// Layers encoded so far.
+    pub fn encoded(&self) -> usize {
+        self.next
+    }
+
+    /// Close the session, returning the accumulated report.
+    pub fn finish(self) -> crate::Result<CodecReport> {
+        anyhow::ensure!(
+            self.next == self.n_layers,
+            "encode session closed after {} of {} layers",
+            self.next,
+            self.n_layers
+        );
+        Ok(self.report)
+    }
+}
+
+/// One round's decoder session over a codec (the server-side mirror).
+pub struct DecodeSession<'c> {
+    codec: &'c mut dyn GradientCodec,
+    report: CodecReport,
+    n_layers: usize,
+    next: usize,
+}
+
+impl<'c> DecodeSession<'c> {
+    pub fn new(codec: &'c mut dyn GradientCodec, n_layers: usize) -> crate::Result<Self> {
+        codec.begin(n_layers)?;
+        let report = CodecReport::new(codec.name());
+        Ok(DecodeSession { codec, report, n_layers, next: 0 })
+    }
+
+    /// Decode the next frame; frames must arrive in model order and carry
+    /// the matching layer index.
+    pub fn decode_frame(&mut self, frame: &Frame, meta: &LayerMeta) -> crate::Result<LayerGrad> {
+        anyhow::ensure!(
+            self.next < self.n_layers,
+            "decode session: frame {} past declared {}",
+            self.next,
+            self.n_layers
+        );
+        anyhow::ensure!(
+            frame.index as usize == self.next,
+            "decode session: frame index {} != expected {}",
+            frame.index,
+            self.next
+        );
+        let (layer, report) = self.codec.decode_frame(frame, meta)?;
+        self.report.push(report);
+        self.next += 1;
+        Ok(layer)
+    }
+
+    pub fn decoded(&self) -> usize {
+        self.next
+    }
+
+    pub fn finish(self) -> crate::Result<CodecReport> {
+        anyhow::ensure!(
+            self.next == self.n_layers,
+            "decode session closed after {} of {} frames",
+            self.next,
+            self.n_layers
+        );
+        Ok(self.report)
+    }
+}
+
+/// Shared scaffolding for layer-parallel whole-model encoding: codecs
+/// whose per-layer encode is a pure function of the layer (stateless, or
+/// with independently derived randomness) implement `encode_model` as a
+/// call to this with a per-layer closure. Falls back to a sequential
+/// loop below the [`threadpool::layer_parallelism`] threshold; output is
+/// identical either way.
+pub fn encode_model_parallel<F>(grads: &ModelGrad, f: F) -> crate::Result<Vec<Frame>>
+where
+    F: Fn(usize, &LayerGrad) -> crate::Result<(Vec<u8>, LayerReport)> + Sync,
+{
+    let threads = threadpool::layer_parallelism(grads.layers.len(), grads.numel());
+    let results: Vec<crate::Result<(Vec<u8>, LayerReport)>> = if threads <= 1 {
+        grads.layers.iter().enumerate().map(|(idx, layer)| f(idx, layer)).collect()
+    } else {
+        let items: Vec<(usize, &LayerGrad)> = grads.layers.iter().enumerate().collect();
+        threadpool::parallel_map(items, threads, |(idx, layer)| f(idx, layer))
+    };
+    let mut frames = Vec::with_capacity(results.len());
+    for (idx, res) in results.into_iter().enumerate() {
+        let (payload, report) = res?;
+        frames.push(Frame::new(idx, payload, report));
+    }
+    Ok(frames)
+}
+
+/// Decode an ordered frame sequence into a whole model (shared by the
+/// blanket `decompress` adapter and the streamed server path).
+pub fn decode_frames(
+    codec: &mut dyn GradientCodec,
+    frames: &[Frame],
+    metas: &[LayerMeta],
+) -> crate::Result<(ModelGrad, CodecReport)> {
+    anyhow::ensure!(
+        frames.len() == metas.len(),
+        "{} frames for {} layers",
+        frames.len(),
+        metas.len()
+    );
+    let mut session = DecodeSession::new(codec, metas.len())?;
+    let mut out = ModelGrad::default();
+    for (frame, meta) in frames.iter().zip(metas) {
+        out.layers.push(session.decode_frame(frame, meta)?);
+    }
+    Ok((out, session.finish()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::RawCodec;
+    use crate::tensor::LayerMeta;
+
+    fn model() -> ModelGrad {
+        ModelGrad {
+            layers: vec![
+                LayerGrad::new(LayerMeta::other("a", 3), vec![1.0, -2.0, 3.0]),
+                LayerGrad::new(LayerMeta::other("b", 2), vec![0.5, 0.25]),
+            ],
+        }
+    }
+
+    #[test]
+    fn sessions_roundtrip_and_report() {
+        let g = model();
+        let metas: Vec<LayerMeta> = g.layers.iter().map(|l| l.meta.clone()).collect();
+        let mut enc = RawCodec;
+        let mut session = EncodeSession::new(&mut enc, 2).unwrap();
+        let frames: Vec<Frame> =
+            g.layers.iter().map(|l| session.encode_layer(l).unwrap()).collect();
+        let report = session.finish().unwrap();
+        assert_eq!(report.layers.len(), 2);
+        assert_eq!(report.total_raw(), g.byte_size());
+
+        let mut dec = RawCodec;
+        let (back, dreport) = decode_frames(&mut dec, &frames, &metas).unwrap();
+        assert_eq!(back.layers[0].data, g.layers[0].data);
+        assert_eq!(back.layers[1].data, g.layers[1].data);
+        assert_eq!(dreport.total_raw(), report.total_raw());
+    }
+
+    #[test]
+    fn out_of_order_frame_rejected() {
+        let g = model();
+        let metas: Vec<LayerMeta> = g.layers.iter().map(|l| l.meta.clone()).collect();
+        let mut enc = RawCodec;
+        let mut session = EncodeSession::new(&mut enc, 2).unwrap();
+        let mut frames: Vec<Frame> =
+            g.layers.iter().map(|l| session.encode_layer(l).unwrap()).collect();
+        frames.swap(0, 1);
+        let mut dec = RawCodec;
+        assert!(decode_frames(&mut dec, &frames, &metas).is_err());
+    }
+
+    #[test]
+    fn unfinished_session_errors() {
+        let g = model();
+        let mut enc = RawCodec;
+        let mut session = EncodeSession::new(&mut enc, 2).unwrap();
+        session.encode_layer(&g.layers[0]).unwrap();
+        assert!(session.finish().is_err());
+    }
+}

@@ -1,0 +1,603 @@
+//! `CodecSpec` — the string-parsable, serializable codec descriptor and
+//! registry that replaced the positional `make_codec(name, eb, bits)`
+//! factory.
+//!
+//! # Grammar
+//!
+//! ```text
+//! spec    := "ef" "(" spec ")" | family [ ":" kv ("," kv)* ]
+//! kv      := key "=" value
+//! eb      := "rel"<f64> | "abs"<f64> | <f64>        (bare value = REL)
+//! ```
+//!
+//! Families and their keys:
+//!
+//! | family                    | keys                                      |
+//! |---------------------------|-------------------------------------------|
+//! | `fedgec` (alias `ours`)   | `eb`, `beta`, `tau`, `full_batch`, `autotune` |
+//! | `sz3`                     | `eb`                                      |
+//! | `qsgd`                    | `bits`, `seed`                            |
+//! | `topk`                    | `k`                                       |
+//! | `raw` (alias `none`)      | —                                         |
+//! | `topk+eblc`               | `k`, `eb`                                 |
+//! | `ef(<spec>)` (aliases `ef-topk`, `ef-qsgd`) | wraps any inner spec    |
+//!
+//! Examples: `fedgec:eb=rel1e-2,beta=0.9`, `qsgd:bits=5`, `topk:k=0.05`,
+//! `ef(qsgd:bits=5)`.
+//!
+//! `Display` renders the canonical form and `parse` accepts it back
+//! (`parse(spec.to_string()) == spec`), which is the serialized
+//! representation stored in JSON configs and CLI flags. Unspecified keys
+//! fall back to [`SpecDefaults`], so legacy bare names (`"sz3"`,
+//! `"qsgd"`, …) still resolve with contextual defaults — the deprecated
+//! [`crate::baselines::make_codec`] shim forwards here.
+
+use std::fmt;
+
+use super::pipeline::{FedgecCodec, FedgecConfig};
+use super::quant::ErrorBound;
+use super::GradientCodec;
+use crate::baselines::composed::{ErrorFeedback, SparsifiedEblc};
+use crate::baselines::qsgd::QsgdCodec;
+use crate::baselines::sz3::{Sz3Codec, Sz3Config};
+use crate::baselines::topk::TopKCodec;
+use crate::baselines::RawCodec;
+
+/// Contextual defaults for keys a spec string leaves out.
+#[derive(Debug, Clone)]
+pub struct SpecDefaults {
+    pub error_bound: ErrorBound,
+    pub qsgd_bits: u8,
+    pub qsgd_seed: u64,
+    pub beta: f32,
+    pub tau: f64,
+    pub full_batch: bool,
+    pub autotune: bool,
+    pub topk: f64,
+}
+
+impl Default for SpecDefaults {
+    fn default() -> Self {
+        SpecDefaults {
+            error_bound: ErrorBound::Rel(1e-2),
+            qsgd_bits: 5,
+            qsgd_seed: 0,
+            beta: 0.9,
+            tau: 0.5,
+            full_batch: false,
+            autotune: false,
+            topk: 0.05,
+        }
+    }
+}
+
+impl SpecDefaults {
+    /// Defaults for a REL error bound, with the paper's §5.3 QSGD
+    /// bit-width pairing.
+    pub fn with_rel_eb(eb: f64) -> Self {
+        SpecDefaults {
+            error_bound: ErrorBound::Rel(eb),
+            qsgd_bits: crate::baselines::qsgd_bits_for_bound(eb),
+            ..Default::default()
+        }
+    }
+}
+
+/// A fully-resolved codec descriptor: everything needed to build one
+/// side of the codec pipe.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CodecSpec {
+    /// The paper's gradient-aware EBLC.
+    Fedgec { eb: ErrorBound, beta: f32, tau: f64, full_batch: bool, autotune: bool },
+    /// Generic Lorenzo/interpolation EBLC (Table 4 comparator).
+    Sz3 { eb: ErrorBound },
+    /// Stochastic quantization (not error-bounded).
+    Qsgd { bits: u8, seed: u64 },
+    /// TopK sparsification.
+    TopK { k: f64 },
+    /// Identity / uncompressed.
+    Raw,
+    /// TopK upstream, EBLC quantization of kept values (§7.1).
+    SparseEblc { k: f64, eb: ErrorBound },
+    /// Error-feedback wrapper around any inner codec.
+    ErrorFeedback(Box<CodecSpec>),
+}
+
+/// One registry entry: a codec family the parser knows how to build.
+#[derive(Debug, Clone, Copy)]
+pub struct CodecFamily {
+    /// Canonical family name (the spec grammar's `family` token).
+    pub family: &'static str,
+    /// Accepted aliases (legacy `make_codec` names included).
+    pub aliases: &'static [&'static str],
+    /// Example spec string.
+    pub example: &'static str,
+    /// One-line description.
+    pub about: &'static str,
+}
+
+/// Every codec family in the repo (ours + baselines + compositions).
+pub const REGISTRY: &[CodecFamily] = &[
+    CodecFamily {
+        family: "fedgec",
+        aliases: &["ours"],
+        example: "fedgec:eb=rel1e-2,beta=0.9,tau=0.5",
+        about: "gradient-aware EBLC (the paper's codec)",
+    },
+    CodecFamily {
+        family: "sz3",
+        aliases: &[],
+        example: "sz3:eb=rel1e-2",
+        about: "generic Lorenzo/interpolation EBLC baseline",
+    },
+    CodecFamily {
+        family: "qsgd",
+        aliases: &[],
+        example: "qsgd:bits=5",
+        about: "stochastic quantization (QSGD)",
+    },
+    CodecFamily {
+        family: "topk",
+        aliases: &[],
+        example: "topk:k=0.05",
+        about: "TopK sparsification",
+    },
+    CodecFamily {
+        family: "raw",
+        aliases: &["none"],
+        example: "raw",
+        about: "identity (uncompressed) codec",
+    },
+    CodecFamily {
+        family: "topk+eblc",
+        aliases: &["sparse-eblc"],
+        example: "topk+eblc:k=0.05,eb=rel1e-2",
+        about: "TopK upstream + error-bounded quantization of kept values",
+    },
+    CodecFamily {
+        family: "ef",
+        aliases: &["ef-topk", "ef-qsgd"],
+        example: "ef(qsgd:bits=5)",
+        about: "error-feedback wrapper around any inner codec",
+    },
+];
+
+fn parse_f64(key: &str, v: &str) -> crate::Result<f64> {
+    v.parse::<f64>().map_err(|_| anyhow::anyhow!("codec spec: bad number for {key}: '{v}'"))
+}
+
+fn parse_bool(key: &str, v: &str) -> crate::Result<bool> {
+    match v {
+        "true" | "1" | "yes" => Ok(true),
+        "false" | "0" | "no" => Ok(false),
+        _ => anyhow::bail!("codec spec: bad bool for {key}: '{v}'"),
+    }
+}
+
+fn parse_eb(v: &str) -> crate::Result<ErrorBound> {
+    if let Some(rest) = v.strip_prefix("rel") {
+        Ok(ErrorBound::Rel(parse_f64("eb", rest)?))
+    } else if let Some(rest) = v.strip_prefix("abs") {
+        Ok(ErrorBound::Abs(parse_f64("eb", rest)?))
+    } else {
+        Ok(ErrorBound::Rel(parse_f64("eb", v)?))
+    }
+}
+
+fn fmt_eb(eb: &ErrorBound) -> String {
+    match eb {
+        ErrorBound::Rel(v) => format!("rel{v}"),
+        ErrorBound::Abs(v) => format!("abs{v}"),
+    }
+}
+
+/// Split `key=value` pairs out of the params section.
+fn parse_params(params: &str) -> crate::Result<Vec<(&str, &str)>> {
+    if params.is_empty() {
+        return Ok(Vec::new());
+    }
+    params
+        .split(',')
+        .map(|kv| {
+            kv.split_once('=')
+                .map(|(k, v)| (k.trim(), v.trim()))
+                .ok_or_else(|| anyhow::anyhow!("codec spec: expected key=value, got '{kv}'"))
+        })
+        .collect()
+}
+
+impl CodecSpec {
+    /// Parse a spec string with the stock defaults.
+    pub fn parse(s: &str) -> crate::Result<CodecSpec> {
+        Self::parse_with(s, &SpecDefaults::default())
+    }
+
+    /// Parse a spec string, resolving omitted keys from `d`.
+    pub fn parse_with(s: &str, d: &SpecDefaults) -> crate::Result<CodecSpec> {
+        let s = s.trim();
+        anyhow::ensure!(!s.is_empty(), "empty codec spec");
+        // Wrapper form: ef(<inner spec>).
+        if let Some(inner) = s.strip_prefix("ef(") {
+            let inner = inner
+                .strip_suffix(')')
+                .ok_or_else(|| anyhow::anyhow!("codec spec: unclosed ef( in '{s}'"))?;
+            let inner = Self::parse_with(inner, d)?;
+            anyhow::ensure!(
+                inner.stateless(),
+                "codec spec: ef(...) requires a stateless inner codec, got '{inner}' \
+                 (error feedback scratch-decodes on the encoder side, which would \
+                 desynchronize a cross-round-stateful inner's client/server mirror)"
+            );
+            return Ok(CodecSpec::ErrorFeedback(Box::new(inner)));
+        }
+        let (family, params) = match s.split_once(':') {
+            Some((f, p)) => (f.trim(), p),
+            None => (s, ""),
+        };
+        let kvs = parse_params(params)?;
+        let unknown = |key: &str| anyhow::anyhow!("codec spec: unknown key '{key}' for {family}");
+        match family {
+            "fedgec" | "ours" => {
+                let mut eb = d.error_bound;
+                let mut beta = d.beta;
+                let mut tau = d.tau;
+                let mut full_batch = d.full_batch;
+                let mut autotune = d.autotune;
+                for (k, v) in kvs {
+                    match k {
+                        "eb" => eb = parse_eb(v)?,
+                        "beta" => beta = parse_f64(k, v)? as f32,
+                        "tau" => tau = parse_f64(k, v)?,
+                        "full_batch" => full_batch = parse_bool(k, v)?,
+                        "autotune" => autotune = parse_bool(k, v)?,
+                        _ => return Err(unknown(k)),
+                    }
+                }
+                Ok(CodecSpec::Fedgec { eb, beta, tau, full_batch, autotune })
+            }
+            "sz3" => {
+                let mut eb = d.error_bound;
+                for (k, v) in kvs {
+                    match k {
+                        "eb" => eb = parse_eb(v)?,
+                        _ => return Err(unknown(k)),
+                    }
+                }
+                Ok(CodecSpec::Sz3 { eb })
+            }
+            "qsgd" => {
+                let mut bits = d.qsgd_bits;
+                let mut seed = d.qsgd_seed;
+                for (k, v) in kvs {
+                    match k {
+                        "bits" => {
+                            bits = v.parse::<u8>().map_err(|_| {
+                                anyhow::anyhow!("codec spec: bad integer for bits: '{v}'")
+                            })?
+                        }
+                        "seed" => {
+                            seed = v.parse::<u64>().map_err(|_| {
+                                anyhow::anyhow!("codec spec: bad integer for seed: '{v}'")
+                            })?
+                        }
+                        _ => return Err(unknown(k)),
+                    }
+                }
+                anyhow::ensure!((1..=16).contains(&bits), "qsgd bits {bits} outside 1..=16");
+                Ok(CodecSpec::Qsgd { bits, seed })
+            }
+            "topk" => {
+                let mut k_frac = d.topk;
+                for (k, v) in kvs {
+                    match k {
+                        "k" => k_frac = parse_f64(k, v)?,
+                        _ => return Err(unknown(k)),
+                    }
+                }
+                anyhow::ensure!(k_frac > 0.0 && k_frac <= 1.0, "topk k {k_frac} outside (0,1]");
+                Ok(CodecSpec::TopK { k: k_frac })
+            }
+            "raw" | "none" => {
+                anyhow::ensure!(kvs.is_empty(), "codec spec: raw takes no params");
+                Ok(CodecSpec::Raw)
+            }
+            "topk+eblc" | "sparse-eblc" => {
+                let mut k_frac = d.topk;
+                let mut eb = d.error_bound;
+                for (k, v) in kvs {
+                    match k {
+                        "k" => k_frac = parse_f64(k, v)?,
+                        "eb" => eb = parse_eb(v)?,
+                        _ => return Err(unknown(k)),
+                    }
+                }
+                anyhow::ensure!(k_frac > 0.0 && k_frac <= 1.0, "topk k {k_frac} outside (0,1]");
+                Ok(CodecSpec::SparseEblc { k: k_frac, eb })
+            }
+            // Legacy composed names from the old factory (no params — the
+            // parameterized form is ef(<inner spec>)).
+            "ef-topk" => {
+                anyhow::ensure!(
+                    kvs.is_empty(),
+                    "codec spec: 'ef-topk' takes no params; use ef(topk:k=...)"
+                );
+                Ok(CodecSpec::ErrorFeedback(Box::new(CodecSpec::TopK { k: d.topk })))
+            }
+            "ef-qsgd" => {
+                anyhow::ensure!(
+                    kvs.is_empty(),
+                    "codec spec: 'ef-qsgd' takes no params; use ef(qsgd:bits=...)"
+                );
+                Ok(CodecSpec::ErrorFeedback(Box::new(CodecSpec::Qsgd {
+                    bits: d.qsgd_bits,
+                    seed: d.qsgd_seed,
+                })))
+            }
+            "ef" => anyhow::bail!(
+                "codec spec: 'ef' is a wrapper — use the form ef(<inner spec>), \
+                 e.g. ef(qsgd:bits=5)"
+            ),
+            _ => anyhow::bail!(
+                "unknown codec family '{family}' (known: {})",
+                REGISTRY
+                    .iter()
+                    .map(|f| f.family)
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ),
+        }
+    }
+
+    /// Canonical family name of this spec.
+    pub fn family(&self) -> &'static str {
+        match self {
+            CodecSpec::Fedgec { .. } => "fedgec",
+            CodecSpec::Sz3 { .. } => "sz3",
+            CodecSpec::Qsgd { .. } => "qsgd",
+            CodecSpec::TopK { .. } => "topk",
+            CodecSpec::Raw => "raw",
+            CodecSpec::SparseEblc { .. } => "topk+eblc",
+            CodecSpec::ErrorFeedback(_) => "ef",
+        }
+    }
+
+    /// Build one side of the codec pipe (client compressor or its server
+    /// mirror — they are symmetric objects).
+    pub fn build(&self) -> Box<dyn GradientCodec> {
+        match self {
+            CodecSpec::Fedgec { eb, beta, tau, full_batch, autotune } => {
+                Box::new(FedgecCodec::new(FedgecConfig {
+                    error_bound: *eb,
+                    beta: *beta,
+                    tau: *tau,
+                    full_batch: *full_batch,
+                    autotune: *autotune,
+                    ..Default::default()
+                }))
+            }
+            CodecSpec::Sz3 { eb } => Box::new(Sz3Codec::new(Sz3Config {
+                error_bound: *eb,
+                ..Default::default()
+            })),
+            CodecSpec::Qsgd { bits, seed } => Box::new(QsgdCodec::new(*bits, *seed)),
+            CodecSpec::TopK { k } => Box::new(TopKCodec::new(*k)),
+            CodecSpec::Raw => Box::new(RawCodec),
+            CodecSpec::SparseEblc { k, eb } => Box::new(SparsifiedEblc::new(*k, *eb)),
+            CodecSpec::ErrorFeedback(inner) => Box::new(ErrorFeedback::new(inner.build())),
+        }
+    }
+
+    /// One default spec per registry family (used by the exhaustive
+    /// round-trip property tests). Error-feedback appears with both inner
+    /// codecs the old factory shipped.
+    pub fn registry_specs(d: &SpecDefaults) -> Vec<CodecSpec> {
+        vec![
+            CodecSpec::Fedgec {
+                eb: d.error_bound,
+                beta: d.beta,
+                tau: d.tau,
+                full_batch: d.full_batch,
+                autotune: d.autotune,
+            },
+            CodecSpec::Sz3 { eb: d.error_bound },
+            CodecSpec::Qsgd { bits: d.qsgd_bits, seed: d.qsgd_seed },
+            CodecSpec::TopK { k: d.topk },
+            CodecSpec::Raw,
+            CodecSpec::SparseEblc { k: d.topk, eb: d.error_bound },
+            CodecSpec::ErrorFeedback(Box::new(CodecSpec::TopK { k: d.topk })),
+            CodecSpec::ErrorFeedback(Box::new(CodecSpec::Qsgd {
+                bits: d.qsgd_bits,
+                seed: d.qsgd_seed,
+            })),
+        ]
+    }
+
+    /// Whether reconstructions carry a per-element error bound.
+    pub fn error_bounded(&self) -> bool {
+        matches!(
+            self,
+            CodecSpec::Fedgec { .. } | CodecSpec::Sz3 { .. } | CodecSpec::Raw
+        )
+    }
+
+    /// Whether the codec carries no cross-round predictor state (a
+    /// requirement for the `ef(...)` wrapper, whose encoder-side scratch
+    /// decode would desynchronize a stateful inner's server mirror).
+    pub fn stateless(&self) -> bool {
+        match self {
+            CodecSpec::Fedgec { .. } | CodecSpec::ErrorFeedback(_) => false,
+            CodecSpec::Sz3 { .. }
+            | CodecSpec::Qsgd { .. }
+            | CodecSpec::TopK { .. }
+            | CodecSpec::Raw
+            | CodecSpec::SparseEblc { .. } => true,
+        }
+    }
+}
+
+impl fmt::Display for CodecSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CodecSpec::Fedgec { eb, beta, tau, full_batch, autotune } => {
+                write!(f, "fedgec:eb={},beta={beta},tau={tau}", fmt_eb(eb))?;
+                if *full_batch {
+                    write!(f, ",full_batch=true")?;
+                }
+                if *autotune {
+                    write!(f, ",autotune=true")?;
+                }
+                Ok(())
+            }
+            CodecSpec::Sz3 { eb } => write!(f, "sz3:eb={}", fmt_eb(eb)),
+            CodecSpec::Qsgd { bits, seed } => {
+                write!(f, "qsgd:bits={bits}")?;
+                if *seed != 0 {
+                    write!(f, ",seed={seed}")?;
+                }
+                Ok(())
+            }
+            CodecSpec::TopK { k } => write!(f, "topk:k={k}"),
+            CodecSpec::Raw => write!(f, "raw"),
+            CodecSpec::SparseEblc { k, eb } => {
+                write!(f, "topk+eblc:k={k},eb={}", fmt_eb(eb))
+            }
+            CodecSpec::ErrorFeedback(inner) => write!(f, "ef({inner})"),
+        }
+    }
+}
+
+impl std::str::FromStr for CodecSpec {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        CodecSpec::parse(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_forms() {
+        let s = CodecSpec::parse("fedgec:eb=rel1e-2,beta=0.8,tau=0.6,autotune=true").unwrap();
+        match s {
+            CodecSpec::Fedgec { eb, beta, tau, full_batch, autotune } => {
+                assert_eq!(eb, ErrorBound::Rel(1e-2));
+                assert!((beta - 0.8).abs() < 1e-6);
+                assert!((tau - 0.6).abs() < 1e-12);
+                assert!(!full_batch);
+                assert!(autotune);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(
+            CodecSpec::parse("sz3:eb=abs0.001").unwrap(),
+            CodecSpec::Sz3 { eb: ErrorBound::Abs(0.001) }
+        );
+        assert_eq!(
+            CodecSpec::parse("qsgd:bits=8,seed=7").unwrap(),
+            CodecSpec::Qsgd { bits: 8, seed: 7 }
+        );
+        assert_eq!(CodecSpec::parse("topk:k=0.1").unwrap(), CodecSpec::TopK { k: 0.1 });
+        assert_eq!(
+            CodecSpec::parse("ef(qsgd:bits=5)").unwrap(),
+            CodecSpec::ErrorFeedback(Box::new(CodecSpec::Qsgd { bits: 5, seed: 0 }))
+        );
+    }
+
+    #[test]
+    fn bare_eb_is_rel() {
+        assert_eq!(
+            CodecSpec::parse("sz3:eb=0.03").unwrap(),
+            CodecSpec::Sz3 { eb: ErrorBound::Rel(0.03) }
+        );
+    }
+
+    #[test]
+    fn defaults_fill_missing_keys() {
+        let d = SpecDefaults::with_rel_eb(3e-2);
+        let s = CodecSpec::parse_with("fedgec", &d).unwrap();
+        assert_eq!(
+            s,
+            CodecSpec::Fedgec {
+                eb: ErrorBound::Rel(3e-2),
+                beta: 0.9,
+                tau: 0.5,
+                full_batch: false,
+                autotune: false
+            }
+        );
+        // §5.3 pairing: eb 3e-2 ↔ 5 bits.
+        assert_eq!(CodecSpec::parse_with("qsgd", &d).unwrap(), CodecSpec::Qsgd {
+            bits: 5,
+            seed: 0
+        });
+    }
+
+    #[test]
+    fn display_parse_roundtrip() {
+        let d = SpecDefaults::default();
+        for spec in CodecSpec::registry_specs(&d) {
+            let text = spec.to_string();
+            let back = CodecSpec::parse(&text)
+                .unwrap_or_else(|e| panic!("reparse '{text}': {e}"));
+            assert_eq!(back, spec, "canonical form '{text}' must reparse");
+        }
+    }
+
+    #[test]
+    fn builds_every_registry_spec() {
+        let d = SpecDefaults::default();
+        for spec in CodecSpec::registry_specs(&d) {
+            let codec = spec.build();
+            assert!(!codec.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(CodecSpec::parse("").is_err());
+        assert!(CodecSpec::parse("nope").is_err());
+        assert!(CodecSpec::parse("fedgec:wat=1").is_err());
+        assert!(CodecSpec::parse("qsgd:bits=40").is_err());
+        assert!(CodecSpec::parse("qsgd:bits=5.7").is_err());
+        assert!(CodecSpec::parse("qsgd:seed=-1").is_err());
+        assert!(CodecSpec::parse("topk:k=0").is_err());
+        assert!(CodecSpec::parse("ef(topk").is_err());
+        assert!(CodecSpec::parse("raw:k=1").is_err());
+        assert!(CodecSpec::parse("sz3:eb=xyz").is_err());
+        // Bare 'ef' needs the wrapper form.
+        assert!(CodecSpec::parse("ef").is_err());
+        assert!(CodecSpec::parse("ef:bits=5").is_err());
+        // Legacy ef-* names take no params (the ef(...) form does).
+        assert!(CodecSpec::parse("ef-qsgd:bits=8").is_err());
+    }
+
+    #[test]
+    fn ef_rejects_stateful_inners() {
+        // Error feedback's encoder-side scratch decode would desync a
+        // cross-round-stateful inner — the parser refuses the composition.
+        assert!(CodecSpec::parse("ef(fedgec)").is_err());
+        assert!(CodecSpec::parse("ef(ef(topk:k=0.05))").is_err());
+        // Stateless inners stay accepted.
+        assert!(CodecSpec::parse("ef(topk:k=0.05)").is_ok());
+        assert!(CodecSpec::parse("ef(qsgd:bits=5)").is_ok());
+        assert!(CodecSpec::parse("ef(topk+eblc:k=0.05,eb=rel1e-2)").is_ok());
+    }
+
+    #[test]
+    fn registry_covers_all_families() {
+        let names: Vec<&str> = REGISTRY.iter().map(|f| f.family).collect();
+        for spec in CodecSpec::registry_specs(&SpecDefaults::default()) {
+            assert!(names.contains(&spec.family()), "{} missing", spec.family());
+        }
+        // Every registry example parses.
+        for fam in REGISTRY {
+            assert!(
+                CodecSpec::parse(fam.example).is_ok(),
+                "example '{}' must parse",
+                fam.example
+            );
+        }
+    }
+}

@@ -3,6 +3,7 @@
 //! framework.
 
 use crate::compress::quant::ErrorBound;
+use crate::compress::spec::{CodecSpec, SpecDefaults};
 use crate::fl::transport::bandwidth::LinkSpec;
 use crate::train::data::DatasetSpec;
 use crate::util::json::Json;
@@ -30,7 +31,9 @@ pub struct RunConfig {
     pub local_lr: f32,
     /// Server-side learning rate on the aggregated gradient.
     pub server_lr: f32,
-    /// Codec: `fedgec` | `sz3` | `qsgd` | `topk` | `none`.
+    /// Codec spec string — any [`CodecSpec`] form, e.g. `fedgec`,
+    /// `fedgec:eb=rel1e-2,beta=0.9`, `qsgd:bits=5`, `ef(topk:k=0.05)`.
+    /// Bare legacy names resolve with defaults from the other knobs.
     pub codec: String,
     /// Relative error bound (paper's REL mode).
     pub rel_error_bound: f64,
@@ -46,6 +49,9 @@ pub struct RunConfig {
     pub beta: f32,
     pub tau: f64,
     pub full_batch: bool,
+    /// Frame-stream client updates (overlapping compression with
+    /// transmission) instead of monolithic blobs, in threaded/TCP mode.
+    pub stream_updates: bool,
 }
 
 impl Default for RunConfig {
@@ -71,6 +77,7 @@ impl Default for RunConfig {
             beta: 0.9,
             tau: 0.5,
             full_batch: false,
+            stream_updates: true,
         }
     }
 }
@@ -123,6 +130,9 @@ impl RunConfig {
         self.beta = v.f64_or("beta", self.beta as f64) as f32;
         self.tau = v.f64_or("tau", self.tau);
         self.full_batch = v.bool_or("full_batch", self.full_batch);
+        self.stream_updates = v.bool_or("stream", self.stream_updates);
+        // Fail fast on unparseable codec specs.
+        self.codec_spec().map_err(|e| anyhow::anyhow!("codec '{}': {e}", self.codec))?;
         Ok(())
     }
 
@@ -141,6 +151,21 @@ impl RunConfig {
     /// The error bound as the codec type.
     pub fn error_bound(&self) -> ErrorBound {
         ErrorBound::Rel(self.rel_error_bound)
+    }
+
+    /// Resolve the codec spec string, with the config's scalar knobs
+    /// (`rel_error_bound`, `beta`, `tau`, `full_batch`) as defaults for
+    /// keys the spec leaves out. Explicit spec keys win.
+    pub fn codec_spec(&self) -> crate::Result<CodecSpec> {
+        let d = SpecDefaults {
+            error_bound: self.error_bound(),
+            qsgd_bits: crate::baselines::qsgd_bits_for_bound(self.rel_error_bound),
+            beta: self.beta,
+            tau: self.tau,
+            full_batch: self.full_batch,
+            ..Default::default()
+        };
+        CodecSpec::parse_with(&self.codec, &d)
     }
 
     /// Manifest key of the model artifact for the chosen dataset.
@@ -188,5 +213,33 @@ mod tests {
     #[test]
     fn bad_engine_errors() {
         assert!(RunConfig::from_json(r#"{"engine": "gpu"}"#).is_err());
+    }
+
+    #[test]
+    fn codec_spec_strings_accepted() {
+        let c = RunConfig::from_json(r#"{"codec": "qsgd:bits=6"}"#).unwrap();
+        assert_eq!(c.codec_spec().unwrap(), CodecSpec::Qsgd { bits: 6, seed: 0 });
+        // Legacy bare names resolve with the config's scalar knobs.
+        let c2 = RunConfig::from_json(
+            r#"{"codec": "fedgec", "rel_error_bound": 0.03, "beta": 0.8}"#,
+        )
+        .unwrap();
+        match c2.codec_spec().unwrap() {
+            CodecSpec::Fedgec { eb, beta, .. } => {
+                assert_eq!(eb, ErrorBound::Rel(0.03));
+                assert!((beta - 0.8).abs() < 1e-6);
+            }
+            other => panic!("{other:?}"),
+        }
+        // Unparseable specs are rejected at config load.
+        assert!(RunConfig::from_json(r#"{"codec": "bogus"}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"codec": "qsgd:bits=99"}"#).is_err());
+    }
+
+    #[test]
+    fn stream_toggle_parses() {
+        assert!(RunConfig::default().stream_updates);
+        let c = RunConfig::from_json(r#"{"stream": false}"#).unwrap();
+        assert!(!c.stream_updates);
     }
 }

@@ -16,8 +16,8 @@ use std::cell::RefCell;
 use std::rc::Rc;
 use std::time::Instant;
 
-use crate::baselines::{make_codec, qsgd_bits_for_bound};
 use crate::compress::pipeline::{FedgecCodec, FedgecConfig};
+use crate::compress::spec::CodecSpec;
 use crate::compress::GradientCodec;
 use crate::config::{EngineKind, RunConfig};
 use crate::fl::aggregate::FedAvg;
@@ -33,32 +33,25 @@ use crate::tensor::{LayerGrad, ModelGrad};
 use crate::train::data::SynthDataset;
 use native_trainer::NativeTrainer;
 
-/// Build the codec named in the config (client or server side — they are
-/// symmetric objects).
+/// Build the codec described by the config's spec string (client or
+/// server side — they are symmetric objects).
 pub fn build_codec(cfg: &RunConfig) -> crate::Result<Box<dyn GradientCodec>> {
-    if cfg.codec == "fedgec" || cfg.codec == "ours" {
-        let fc = FedgecConfig {
-            beta: cfg.beta,
-            tau: cfg.tau,
-            full_batch: cfg.full_batch,
-            error_bound: cfg.error_bound(),
-            ..Default::default()
-        };
-        return Ok(Box::new(FedgecCodec::new(fc)));
-    }
-    make_codec(&cfg.codec, cfg.error_bound(), qsgd_bits_for_bound(cfg.rel_error_bound))
-        .ok_or_else(|| anyhow::anyhow!("unknown codec {}", cfg.codec))
+    Ok(cfg.codec_spec()?.build())
 }
 
 /// Build a FedGEC codec with the HLO predict engine attached.
 fn build_codec_hlo(cfg: &RunConfig, rt: Rc<RefCell<crate::runtime::Runtime>>) -> crate::Result<Box<dyn GradientCodec>> {
-    anyhow::ensure!(cfg.codec == "fedgec" || cfg.codec == "ours", "HLO engine requires fedgec codec");
-    let fc = FedgecConfig {
-        beta: cfg.beta,
-        tau: cfg.tau,
-        full_batch: cfg.full_batch,
-        error_bound: cfg.error_bound(),
-        ..Default::default()
+    let spec = cfg.codec_spec()?;
+    let fc = match spec {
+        CodecSpec::Fedgec { eb, beta, tau, full_batch, autotune } => FedgecConfig {
+            error_bound: eb,
+            beta,
+            tau,
+            full_batch,
+            autotune,
+            ..Default::default()
+        },
+        other => anyhow::bail!("HLO engine requires the fedgec codec, got {other}"),
     };
     let engine = HloPredictEngine::new(rt, 4096)?;
     Ok(Box::new(FedgecCodec::with_engine(fc, Box::new(engine))))
@@ -260,7 +253,8 @@ pub fn run_threaded(cfg: &RunConfig) -> crate::Result<RunSummary> {
         let slice = ds.sample(&mut rng, cfg.samples_per_client, cfg.class_skew);
         let trainer = NativeTrainer::new(cfg.dataset.classes(), slice, cfg.local_lr, cfg.seed);
         let codec = build_codec(cfg)?;
-        let mut client = Client::new(i as u32, Box::new(trainer), codec);
+        let mut client =
+            Client::new(i as u32, Box::new(trainer), codec).with_streaming(cfg.stream_updates);
         let mut ch = cli_end;
         handles.push(std::thread::spawn(move || client.run(&mut ch)));
     }

@@ -1,6 +1,17 @@
 //! The FL client: local training + gradient compression (paper Fig. 1
 //! workflow, client side of Alg. 3).
+//!
+//! By default the client **streams** its update as per-layer frames: a
+//! worker thread runs the encoder session while this thread pushes
+//! finished frames into the (possibly bandwidth-throttled) channel, so
+//! layer `i+1` compresses while layer `i` transmits — the comm/comp
+//! overlap behind the paper's end-to-end win. Set `stream = false` to
+//! fall back to the monolithic `Msg::Update` blob.
 
+use std::sync::mpsc;
+
+use crate::compress::frame::Frame;
+use crate::compress::session::EncodeSession;
 use crate::compress::GradientCodec;
 use crate::fl::protocol::Msg;
 use crate::fl::transport::Channel;
@@ -25,11 +36,19 @@ pub struct Client {
     pub id: u32,
     pub trainer: Box<dyn LocalTrainer>,
     pub codec: Box<dyn GradientCodec>,
+    /// Stream per-layer frames (default) instead of one monolithic blob.
+    pub stream: bool,
 }
 
 impl Client {
     pub fn new(id: u32, trainer: Box<dyn LocalTrainer>, codec: Box<dyn GradientCodec>) -> Self {
-        Client { id, trainer, codec }
+        Client { id, trainer, codec, stream: true }
+    }
+
+    /// Select monolithic vs frame-streamed uploads.
+    pub fn with_streaming(mut self, stream: bool) -> Self {
+        self.stream = stream;
+        self
     }
 
     /// One local round: train, compress, report (payload, loss, raw bytes).
@@ -40,20 +59,70 @@ impl Client {
         Ok((payload, loss, raw))
     }
 
+    /// One streamed round: train, then pipeline per-layer encoding with
+    /// sending. The encoder runs on a scoped worker thread; this thread
+    /// drains finished frames into the channel, so a throttled `send`
+    /// overlaps with the next layer's compression.
+    fn streamed_round(
+        &mut self,
+        round: u32,
+        params: &[Vec<f32>],
+        channel: &mut dyn Channel,
+    ) -> crate::Result<()> {
+        let (grads, train_loss) = self.trainer.train_round(params)?;
+        let n_layers = grads.layers.len();
+        channel.send(&Msg::UpdateBegin {
+            client_id: self.id,
+            round,
+            n_layers: n_layers as u32,
+            train_loss,
+            n_samples: self.trainer.n_samples() as u32,
+        })?;
+        let client_id = self.id;
+        let mut session = EncodeSession::new(self.codec.as_mut(), n_layers)?;
+        // Small buffer: keeps at most a couple of encoded frames in
+        // flight, so compression stays just ahead of the link.
+        let (tx, rx) = mpsc::sync_channel::<crate::Result<Frame>>(2);
+        std::thread::scope(|scope| -> crate::Result<()> {
+            scope.spawn(move || {
+                for layer in &grads.layers {
+                    let frame = session.encode_layer(layer);
+                    let stop = frame.is_err();
+                    if tx.send(frame).is_err() || stop {
+                        break;
+                    }
+                }
+            });
+            for frame in rx {
+                let frame = frame?;
+                channel.send(&Msg::UpdateFrame {
+                    client_id,
+                    round,
+                    frame: frame.to_wire(),
+                })?;
+            }
+            Ok(())
+        })
+    }
+
     /// Blocking message loop against a server channel (threaded/TCP mode).
     pub fn run(&mut self, channel: &mut dyn Channel) -> crate::Result<()> {
         channel.send(&Msg::Hello { client_id: self.id })?;
         loop {
             match channel.recv()? {
                 Msg::GlobalParams { round, tensors } => {
-                    let (payload, train_loss, _) = self.local_round(&tensors)?;
-                    channel.send(&Msg::Update {
-                        client_id: self.id,
-                        round,
-                        payload,
-                        train_loss,
-                        n_samples: self.trainer.n_samples() as u32,
-                    })?;
+                    if self.stream {
+                        self.streamed_round(round, &tensors, channel)?;
+                    } else {
+                        let (payload, train_loss, _) = self.local_round(&tensors)?;
+                        channel.send(&Msg::Update {
+                            client_id: self.id,
+                            round,
+                            payload,
+                            train_loss,
+                            n_samples: self.trainer.n_samples() as u32,
+                        })?;
+                    }
                 }
                 Msg::Shutdown => return Ok(()),
                 other => anyhow::bail!("client {}: unexpected {other:?}", self.id),

@@ -12,8 +12,17 @@ pub enum Msg {
     /// Server broadcasts global parameters (raw f32 tensors, flattened
     /// per layer) for a round.
     GlobalParams { round: u32, tensors: Vec<Vec<f32>> },
-    /// Client uploads its compressed gradient payload for a round.
+    /// Client uploads its compressed gradient payload for a round as one
+    /// monolithic blob (the legacy whole-model path).
     Update { client_id: u32, round: u32, payload: Vec<u8>, train_loss: f32, n_samples: u32 },
+    /// Client opens a frame-streamed update: exactly `n_layers`
+    /// [`Msg::UpdateFrame`] messages follow on the same channel. Streaming
+    /// lets the transport transmit layer `i` while layer `i+1` is still
+    /// compressing (the paper's comm/comp overlap).
+    UpdateBegin { client_id: u32, round: u32, n_layers: u32, train_loss: f32, n_samples: u32 },
+    /// One self-delimiting per-layer frame
+    /// ([`crate::compress::Frame::to_wire`] bytes) of a streamed update.
+    UpdateFrame { client_id: u32, round: u32, frame: Vec<u8> },
     /// Server ends the session.
     Shutdown,
 }
@@ -43,6 +52,20 @@ impl Msg {
                 w.put_bytes(payload);
             }
             Msg::Shutdown => w.put_u8(3),
+            Msg::UpdateBegin { client_id, round, n_layers, train_loss, n_samples } => {
+                w.put_u8(4);
+                w.put_u32(*client_id);
+                w.put_u32(*round);
+                w.put_u32(*n_layers);
+                w.put_f32(*train_loss);
+                w.put_u32(*n_samples);
+            }
+            Msg::UpdateFrame { client_id, round, frame } => {
+                w.put_u8(5);
+                w.put_u32(*client_id);
+                w.put_u32(*round);
+                w.put_bytes(frame);
+            }
         }
         w.into_bytes()
     }
@@ -69,6 +92,20 @@ impl Msg {
                 Msg::Update { client_id, round, payload, train_loss, n_samples }
             }
             3 => Msg::Shutdown,
+            4 => {
+                let client_id = r.get_u32()?;
+                let round = r.get_u32()?;
+                let n_layers = r.get_u32()?;
+                let train_loss = r.get_f32()?;
+                let n_samples = r.get_u32()?;
+                Msg::UpdateBegin { client_id, round, n_layers, train_loss, n_samples }
+            }
+            5 => {
+                let client_id = r.get_u32()?;
+                let round = r.get_u32()?;
+                let frame = r.get_bytes()?.to_vec();
+                Msg::UpdateFrame { client_id, round, frame }
+            }
             t => anyhow::bail!("unknown message tag {t}"),
         })
     }
@@ -90,6 +127,14 @@ mod tests {
                 train_loss: 0.25,
                 n_samples: 512,
             },
+            Msg::UpdateBegin {
+                client_id: 2,
+                round: 9,
+                n_layers: 4,
+                train_loss: 1.5,
+                n_samples: 64,
+            },
+            Msg::UpdateFrame { client_id: 2, round: 9, frame: vec![0, 0, 0, 0, 1, 0, 0, 0, 42] },
             Msg::Shutdown,
         ];
         for m in msgs {

@@ -26,13 +26,14 @@ pub struct RoundStats {
 }
 
 impl RoundStats {
-    /// Compression ratio achieved this round.
+    /// Compression ratio achieved this round (an empty round is a
+    /// neutral 1.0, matching `CompressionStats::ratio`).
     pub fn ratio(&self) -> f64 {
-        if self.payload_bytes == 0 {
-            0.0
-        } else {
-            self.raw_bytes as f64 / self.payload_bytes as f64
+        crate::compress::CompressionStats {
+            raw_bytes: self.raw_bytes,
+            compressed_bytes: self.payload_bytes,
         }
+        .ratio()
     }
 
     /// End-to-end communication time (paper Eq. 1):
@@ -62,12 +63,11 @@ impl RunSummary {
         self.rounds.iter().map(|r| r.raw_bytes).sum()
     }
     pub fn mean_ratio(&self) -> f64 {
-        let p = self.total_payload();
-        if p == 0 {
-            0.0
-        } else {
-            self.total_raw() as f64 / p as f64
+        crate::compress::CompressionStats {
+            raw_bytes: self.total_raw(),
+            compressed_bytes: self.total_payload(),
         }
+        .ratio()
     }
     pub fn total_comm_time(&self) -> Duration {
         self.rounds.iter().map(|r| r.comm_time()).sum()

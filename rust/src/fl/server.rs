@@ -1,10 +1,14 @@
 //! The FL parameter server: broadcasts global parameters, decompresses
 //! client payloads (Alg. 4) with one mirrored codec per client, and
-//! aggregates via FedAvg. Tracks the per-round communication statistics
-//! that drive the Fig. 11 experiments.
+//! aggregates via FedAvg. Accepts both monolithic `Update` blobs and
+//! frame-streamed updates (`UpdateBegin` + per-layer `UpdateFrame`s),
+//! decoding each frame as it arrives. Tracks the per-round communication
+//! statistics that drive the Fig. 11 experiments.
 
 use std::time::{Duration, Instant};
 
+use crate::compress::frame::Frame;
+use crate::compress::session::DecodeSession;
 use crate::compress::GradientCodec;
 use crate::fl::aggregate::{apply_update, FedAvg};
 use crate::fl::protocol::Msg;
@@ -56,6 +60,46 @@ impl Server {
         Ok(dt)
     }
 
+    /// Receive one frame-streamed update that was opened by an
+    /// `UpdateBegin` declaring `n_layers` frames, decoding each frame as
+    /// it lands. Returns the decoded gradients, total frame wire bytes,
+    /// and decode time.
+    fn recv_streamed_update(
+        &mut self,
+        client_idx: usize,
+        channel: &mut dyn Channel,
+        round: u32,
+        n_layers: usize,
+    ) -> crate::Result<(ModelGrad, usize, Duration)> {
+        anyhow::ensure!(
+            n_layers == self.metas.len(),
+            "client streamed {} layers, model has {}",
+            n_layers,
+            self.metas.len()
+        );
+        let mut session = DecodeSession::new(self.codecs[client_idx].as_mut(), n_layers)?;
+        let mut grads = ModelGrad::default();
+        let mut wire_bytes = 0usize;
+        let mut decode_time = Duration::ZERO;
+        for li in 0..n_layers {
+            match channel.recv()? {
+                Msg::UpdateFrame { round: r, frame, .. } => {
+                    anyhow::ensure!(r == round, "frame for round {r} during round {round}");
+                    wire_bytes += frame.len();
+                    let frame = Frame::from_wire(&frame)?;
+                    let t0 = Instant::now();
+                    // The session enforces frame ordering/indexing.
+                    let layer = session.decode_frame(&frame, &self.metas[li])?;
+                    decode_time += t0.elapsed();
+                    grads.layers.push(layer);
+                }
+                other => anyhow::bail!("expected UpdateFrame, got {other:?}"),
+            }
+        }
+        session.finish()?;
+        Ok((grads, wire_bytes, decode_time))
+    }
+
     /// Apply the aggregated mean gradient to the global parameters.
     pub fn finish_round(&mut self, agg: FedAvg) {
         let mean = agg.mean();
@@ -66,13 +110,15 @@ impl Server {
     }
 
     /// Full synchronous round over live channels (threaded/TCP mode):
-    /// broadcast params, collect updates, aggregate, step.
+    /// broadcast params, collect updates (monolithic or frame-streamed),
+    /// aggregate, step.
     pub fn run_round(&mut self, channels: &mut [Box<dyn Channel>]) -> crate::Result<RoundStats> {
         let round = self.round;
         let bcast = Msg::GlobalParams { round, tensors: self.params.clone() };
         for ch in channels.iter_mut() {
             ch.send(&bcast)?;
         }
+        let raw_model_bytes: usize = self.metas.iter().map(|m| m.numel * 4).sum();
         let mut agg = FedAvg::new();
         let mut stats = RoundStats { round, ..Default::default() };
         for idx in 0..channels.len() {
@@ -80,10 +126,24 @@ impl Server {
                 Msg::Update { client_id, round: r, payload, train_loss, n_samples } => {
                     anyhow::ensure!(r == round, "client {client_id} answered round {r}");
                     stats.payload_bytes += payload.len();
-                    stats.raw_bytes += self.metas.iter().map(|m| m.numel * 4).sum::<usize>();
+                    stats.raw_bytes += raw_model_bytes;
                     stats.mean_loss += train_loss as f64;
                     let dt = self.absorb_payload(idx, &payload, n_samples as f64, &mut agg)?;
                     stats.decomp_time += dt;
+                }
+                Msg::UpdateBegin { client_id, round: r, n_layers, train_loss, n_samples } => {
+                    anyhow::ensure!(r == round, "client {client_id} answered round {r}");
+                    stats.raw_bytes += raw_model_bytes;
+                    stats.mean_loss += train_loss as f64;
+                    let (grads, wire_bytes, dt) = self.recv_streamed_update(
+                        idx,
+                        channels[idx].as_mut(),
+                        round,
+                        n_layers as usize,
+                    )?;
+                    stats.payload_bytes += wire_bytes;
+                    stats.decomp_time += dt;
+                    agg.add(&grads, n_samples as f64);
                 }
                 other => anyhow::bail!("server: unexpected {other:?}"),
             }

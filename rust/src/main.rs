@@ -5,6 +5,7 @@
 //!   serve          TCP parameter server (native trainer clients connect)
 //!   client         TCP client joining a `serve` federation
 //!   compress-file  run any codec over a raw f32 file, report CR + bound
+//!   codecs         list the codec registry and spec grammar
 //!   info           environment / artifact status
 
 use fedgec::cli::Args;
@@ -26,6 +27,7 @@ fn main() {
         Some("serve") => cmd_serve(&args),
         Some("client") => cmd_client(&args),
         Some("compress-file") => cmd_compress_file(&args),
+        Some("codecs") => cmd_codecs(),
         Some("info") => cmd_info(),
         _ => {
             print_usage();
@@ -49,8 +51,30 @@ fn print_usage() {
          fedgec serve --addr 127.0.0.1:7070 [--config FILE] [...]\n\
          fedgec client --addr 127.0.0.1:7070 --id K [--config FILE] [...]\n\
          fedgec compress-file --in FILE [--codec fedgec] [--eb 1e-2]\n\
-         fedgec info"
+         fedgec codecs\n\
+         fedgec info\n\
+         \n\
+         --codec accepts any CodecSpec string, e.g. 'fedgec:eb=rel1e-2,beta=0.9',\n\
+         'qsgd:bits=5', 'topk:k=0.05', 'ef(qsgd:bits=5)'. See `fedgec codecs`."
     );
+}
+
+fn cmd_codecs() -> fedgec::Result<()> {
+    use fedgec::compress::spec::REGISTRY;
+    let mut t = fedgec::metrics::Table::new(
+        "codec registry (spec grammar: family[:key=value,...] | ef(<spec>))",
+        &["family", "aliases", "example", "about"],
+    );
+    for fam in REGISTRY {
+        t.row(vec![
+            fam.family.to_string(),
+            fam.aliases.join(", "),
+            fam.example.to_string(),
+            fam.about.to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
 }
 
 fn load_config(args: &Args) -> fedgec::Result<RunConfig> {
@@ -126,7 +150,8 @@ fn cmd_client(args: &Args) -> fedgec::Result<()> {
         cfg.seed,
     );
     let codec = fedgec::coordinator::build_codec(&cfg)?;
-    let mut client = fedgec::fl::client::Client::new(id, Box::new(trainer), codec);
+    let mut client = fedgec::fl::client::Client::new(id, Box::new(trainer), codec)
+        .with_streaming(cfg.stream_updates);
     println!("client {id} connected to {addr}");
     client.run(&mut channel)
 }
@@ -139,12 +164,11 @@ fn cmd_compress_file(args: &Args) -> fedgec::Result<()> {
     let data = fedgec::compress::blob::bytes_to_f32s(&bytes)?;
     let eb = args.get_f64("eb", 1e-2)?;
     let codec_name = args.get_or("codec", "fedgec");
-    let mut codec = fedgec::baselines::make_codec(
+    let spec = fedgec::compress::spec::CodecSpec::parse_with(
         codec_name,
-        fedgec::compress::quant::ErrorBound::Rel(eb),
-        fedgec::baselines::qsgd_bits_for_bound(eb),
-    )
-    .ok_or_else(|| anyhow::anyhow!("unknown codec {codec_name}"))?;
+        &fedgec::compress::spec::SpecDefaults::with_rel_eb(eb),
+    )?;
+    let mut codec = spec.build();
     let meta = LayerMeta::other("file", data.len());
     let grads = ModelGrad { layers: vec![LayerGrad::new(meta.clone(), data)] };
     let t0 = std::time::Instant::now();

@@ -90,6 +90,39 @@ impl Table {
     }
 }
 
+/// Render a unified per-layer [`crate::compress::CodecReport`] as a
+/// table — the one report format every codec and bench shares.
+pub fn report_table(report: &crate::compress::CodecReport) -> Table {
+    let mut t = Table::new(
+        &format!("per-layer compression ({})", report.codec),
+        &["layer", "raw KB", "wire KB", "CR", "side-info B", "entropy B", "escapes", "mode"],
+    );
+    for l in &report.layers {
+        t.row(vec![
+            l.name.clone(),
+            format!("{:.1}", l.raw_bytes as f64 / 1e3),
+            format!("{:.1}", l.compressed_bytes as f64 / 1e3),
+            format!("{:.2}", l.ratio()),
+            l.side_info_bytes.to_string(),
+            l.entropy_bytes.to_string(),
+            l.escape_count.to_string(),
+            if l.lossy { "lossy".into() } else { "lossless".into() },
+        ]);
+    }
+    let totals = report.totals();
+    t.row(vec![
+        "TOTAL".into(),
+        format!("{:.1}", totals.raw_bytes as f64 / 1e3),
+        format!("{:.1}", totals.compressed_bytes as f64 / 1e3),
+        format!("{:.2}", totals.ratio()),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+    ]);
+    t
+}
+
 /// Results directory: `$FEDGEC_RESULTS` or `./results`.
 pub fn results_dir() -> PathBuf {
     std::env::var("FEDGEC_RESULTS").map(PathBuf::from).unwrap_or_else(|_| "results".into())
@@ -139,6 +172,24 @@ mod tests {
         let content = std::fs::read_to_string(p).unwrap();
         assert!(content.contains("\"x,y\""));
         std::env::remove_var("FEDGEC_RESULTS");
+    }
+
+    #[test]
+    fn report_table_renders_layers_and_total() {
+        use crate::compress::{CodecReport, LayerReport};
+        let mut rep = CodecReport::new("demo");
+        rep.push(LayerReport {
+            name: "conv".into(),
+            raw_bytes: 4000,
+            compressed_bytes: 400,
+            lossy: true,
+            ..Default::default()
+        });
+        let t = report_table(&rep);
+        let md = t.markdown();
+        assert!(md.contains("conv"));
+        assert!(md.contains("TOTAL"));
+        assert_eq!(t.rows.len(), 2);
     }
 
     #[test]

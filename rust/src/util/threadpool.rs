@@ -58,6 +58,21 @@ impl Drop for ThreadPool {
     }
 }
 
+/// Heuristic worker count for layer-parallel gradient encoding:
+/// sequential for small models (thread fan-out costs more than it saves),
+/// otherwise up to 8 workers bounded by layer count and hardware.
+pub fn layer_parallelism(n_layers: usize, total_numel: usize) -> usize {
+    const MIN_NUMEL: usize = 1 << 16;
+    if n_layers < 2 || total_numel < MIN_NUMEL {
+        return 1;
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(n_layers)
+        .min(8)
+}
+
 /// Map `f` over `items` in parallel preserving order, using `n_threads`
 /// scoped threads (no pool needed; good for per-layer compression).
 pub fn parallel_map<T, U, F>(items: Vec<T>, n_threads: usize, f: F) -> Vec<U>

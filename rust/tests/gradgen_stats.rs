@@ -93,13 +93,13 @@ fn dataset_complexity_ordering_preserved() {
     // Harder datasets => lower compressibility. Check via residual-entropy
     // proxy: FedGEC CR ordering fmnist >= cifar >= caltech on generator
     // output (the paper's observed trend).
-    use fedgec::baselines::make_codec;
-    use fedgec::compress::quant::ErrorBound;
+    use fedgec::compress::spec::{CodecSpec, SpecDefaults};
     let metas = fedgec::tensor::model_zoo::ModelArch::MicroResNet.layers(10);
     let mut ratios = Vec::new();
     for spec in [DatasetSpec::Fmnist, DatasetSpec::Cifar10, DatasetSpec::Caltech101] {
         let mut gen = GradGen::new(metas.clone(), GradGenConfig::for_dataset(spec), 12);
-        let mut codec = make_codec("fedgec", ErrorBound::Rel(3e-2), 5).unwrap();
+        let mut codec =
+            CodecSpec::parse_with("fedgec", &SpecDefaults::with_rel_eb(3e-2)).unwrap().build();
         let mut raw = 0;
         let mut comp = 0;
         for _ in 0..3 {

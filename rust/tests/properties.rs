@@ -2,9 +2,11 @@
 //! codec-level invariants over randomized gradient tensors, bounds,
 //! layer mixes, and adversarial payload corruption.
 
-use fedgec::baselines::{make_codec, qsgd_bits_for_bound};
+use fedgec::compress::frame::Frame;
 use fedgec::compress::pipeline::{FedgecCodec, FedgecConfig};
 use fedgec::compress::quant::ErrorBound;
+use fedgec::compress::session::{DecodeSession, EncodeSession};
+use fedgec::compress::spec::{CodecSpec, SpecDefaults};
 use fedgec::compress::GradientCodec;
 use fedgec::tensor::{LayerGrad, LayerMeta, ModelGrad};
 use fedgec::util::prop;
@@ -108,12 +110,102 @@ fn prop_all_codecs_total_on_random_input() {
         let ms = metas(&g);
         for name in ["fedgec", "sz3", "qsgd", "topk", "none"] {
             let eb = prop::arb_error_bound(rng);
-            let mut codec = make_codec(name, ErrorBound::Rel(eb), qsgd_bits_for_bound(eb))
-                .ok_or("codec")?;
+            let mut codec = CodecSpec::parse_with(name, &SpecDefaults::with_rel_eb(eb))
+                .map_err(|e| e.to_string())?
+                .build();
             let payload = codec.compress(&g).map_err(|e| format!("{name}: {e}"))?;
             let recon = codec.decompress(&payload, &ms).map_err(|e| format!("{name}: {e}"))?;
             if recon.numel() != g.numel() {
                 return Err(format!("{name}: numel changed"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_every_registry_spec_roundtrips_through_frames() {
+    // Drive every registered CodecSpec family through the per-layer frame
+    // API (encode session -> wire -> decode session) on randomized
+    // multi-layer models: EBLC codecs must respect their bound, raw must
+    // reconstruct exactly, and every codec must preserve shapes.
+    prop::check("registry frame roundtrip", 25, |rng| {
+        let eb = prop::arb_error_bound(rng);
+        let d = SpecDefaults::with_rel_eb(eb);
+        let base = arb_model(rng);
+        let ms = metas(&base);
+        for spec in CodecSpec::registry_specs(&d) {
+            let mut client = spec.build();
+            let mut server = spec.build();
+            for round in 0..2 {
+                // Evolve tensors across rounds (stateful codecs need it).
+                let mut g = base.clone();
+                for l in &mut g.layers {
+                    for v in &mut l.data {
+                        *v *= 1.0 + 0.05 * round as f32;
+                    }
+                }
+                let mut enc = EncodeSession::new(client.as_mut(), g.layers.len())
+                    .map_err(|e| format!("{spec}: {e}"))?;
+                let mut dec = DecodeSession::new(server.as_mut(), g.layers.len())
+                    .map_err(|e| format!("{spec}: {e}"))?;
+                for (layer, meta) in g.layers.iter().zip(&ms) {
+                    let frame = enc.encode_layer(layer).map_err(|e| format!("{spec}: {e}"))?;
+                    // Frames survive the wire form (self-delimiting).
+                    let frame = Frame::from_wire(&frame.to_wire())
+                        .map_err(|e| format!("{spec}: {e}"))?;
+                    let back =
+                        dec.decode_frame(&frame, meta).map_err(|e| format!("{spec}: {e}"))?;
+                    if back.data.len() != layer.data.len() {
+                        return Err(format!("{spec}: layer {} shape", meta.name));
+                    }
+                    if spec == CodecSpec::Raw {
+                        for (a, b) in back.data.iter().zip(&layer.data) {
+                            if a.to_bits() != b.to_bits() {
+                                return Err(format!("raw not exact: {a} vs {b}"));
+                            }
+                        }
+                    } else if spec.error_bounded() {
+                        let (lo, hi) = stats::finite_min_max(&layer.data);
+                        let delta = ErrorBound::Rel(eb).resolve(lo, hi) as f32;
+                        for (a, b) in back.data.iter().zip(&layer.data) {
+                            if b.is_finite() && (a - b).abs() > delta * 1.001 {
+                                return Err(format!(
+                                    "{spec} layer {}: |{a}-{b}| > {delta}",
+                                    meta.name
+                                ));
+                            }
+                        }
+                    }
+                }
+                let creport = enc.finish().map_err(|e| e.to_string())?;
+                let sreport = dec.finish().map_err(|e| e.to_string())?;
+                // Unified reports agree layer-by-layer on both sides of
+                // the pipe (byte accounting is part of the codec contract).
+                if creport.layers.len() != g.layers.len() {
+                    return Err(format!("{spec}: report layer count"));
+                }
+                for (cl, sl) in creport.layers.iter().zip(&sreport.layers) {
+                    if cl.raw_bytes != sl.raw_bytes
+                        || cl.compressed_bytes != sl.compressed_bytes
+                        || cl.side_info_bytes != sl.side_info_bytes
+                        || cl.entropy_bytes != sl.entropy_bytes
+                    {
+                        return Err(format!(
+                            "{spec} layer {}: encode report {:?}/{:?}/{:?}/{:?} \
+                             != decode {:?}/{:?}/{:?}/{:?}",
+                            cl.name,
+                            cl.raw_bytes,
+                            cl.compressed_bytes,
+                            cl.side_info_bytes,
+                            cl.entropy_bytes,
+                            sl.raw_bytes,
+                            sl.compressed_bytes,
+                            sl.side_info_bytes,
+                            sl.entropy_bytes
+                        ));
+                    }
+                }
             }
         }
         Ok(())

@@ -2,8 +2,9 @@
 //! with its promised guarantees (error bound for EBLCs, exactness of kept
 //! values for TopK, sign preservation for QSGD).
 
-use fedgec::baselines::{make_codec, qsgd_bits_for_bound};
 use fedgec::compress::quant::ErrorBound;
+use fedgec::compress::spec::{CodecSpec, SpecDefaults};
+use fedgec::compress::GradientCodec;
 use fedgec::tensor::model_zoo::ModelArch;
 use fedgec::tensor::LayerMeta;
 use fedgec::train::gradgen::{GradGen, GradGenConfig};
@@ -13,16 +14,18 @@ fn micro_model_metas() -> Vec<LayerMeta> {
     ModelArch::MicroResNet.layers(10)
 }
 
+fn build(name: &str, eb: f64) -> Box<dyn GradientCodec> {
+    CodecSpec::parse_with(name, &SpecDefaults::with_rel_eb(eb)).unwrap().build()
+}
+
 #[test]
 fn all_codecs_roundtrip_micro_model_gradients() {
     let metas = micro_model_metas();
     for codec_name in ["fedgec", "sz3", "qsgd", "topk", "none"] {
         let mut gen = GradGen::new(metas.clone(), GradGenConfig::default(), 1);
         let eb = 1e-2;
-        let mut client =
-            make_codec(codec_name, ErrorBound::Rel(eb), qsgd_bits_for_bound(eb)).unwrap();
-        let mut server =
-            make_codec(codec_name, ErrorBound::Rel(eb), qsgd_bits_for_bound(eb)).unwrap();
+        let mut client = build(codec_name, eb);
+        let mut server = build(codec_name, eb);
         for round in 0..4 {
             let grads = gen.next_round();
             let payload = client.compress(&grads).unwrap_or_else(|e| {
@@ -47,8 +50,8 @@ fn eblc_codecs_respect_rel_bound_on_every_layer() {
             let mut gen = GradGen::new(metas.clone(), GradGenConfig::default(), 2);
             // NOTE: a codec instance is ONE side of the pipe — compressing
             // and decompressing must use separate (mirrored) instances.
-            let mut client = make_codec(codec_name, ErrorBound::Rel(eb), 5).unwrap();
-            let mut server = make_codec(codec_name, ErrorBound::Rel(eb), 5).unwrap();
+            let mut client = build(codec_name, eb);
+            let mut server = build(codec_name, eb);
             for _ in 0..3 {
                 let grads = gen.next_round();
                 let payload = client.compress(&grads).unwrap();
@@ -79,8 +82,7 @@ fn fedgec_beats_sz3_on_structured_gradients() {
     let mut ratios = std::collections::HashMap::new();
     for codec_name in ["fedgec", "sz3", "qsgd"] {
         let mut gen = GradGen::new(metas.clone(), GradGenConfig::default(), 3);
-        let mut codec =
-            make_codec(codec_name, ErrorBound::Rel(eb), qsgd_bits_for_bound(eb)).unwrap();
+        let mut codec = build(codec_name, eb);
         let mut raw = 0usize;
         let mut comp = 0usize;
         for _ in 0..3 {
@@ -105,7 +107,7 @@ fn payload_smaller_at_larger_bounds() {
     let mut sizes = Vec::new();
     for eb in [1e-3, 1e-2, 5e-2] {
         let mut gen = GradGen::new(metas.clone(), GradGenConfig::default(), 4);
-        let mut codec = make_codec("fedgec", ErrorBound::Rel(eb), 5).unwrap();
+        let mut codec = build("fedgec", eb);
         let mut total = 0usize;
         for _ in 0..3 {
             total += codec.compress(&gen.next_round()).unwrap().len();

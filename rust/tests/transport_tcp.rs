@@ -3,8 +3,7 @@
 
 use std::net::TcpListener;
 
-use fedgec::baselines::make_codec;
-use fedgec::compress::quant::ErrorBound;
+use fedgec::compress::spec::{CodecSpec, SpecDefaults};
 use fedgec::coordinator::native_trainer::NativeTrainer;
 use fedgec::fl::client::Client;
 use fedgec::fl::server::Server;
@@ -15,15 +14,24 @@ use fedgec::train::data::{DatasetSpec, SynthDataset};
 use fedgec::train::native::NativeNet;
 use fedgec::util::rng::Rng;
 
-fn spawn_client(addr: String, id: u32, link: Option<LinkSpec>) -> std::thread::JoinHandle<()> {
+fn fedgec_codec() -> Box<dyn fedgec::compress::GradientCodec> {
+    CodecSpec::parse_with("fedgec", &SpecDefaults::with_rel_eb(1e-2)).unwrap().build()
+}
+
+fn spawn_client(
+    addr: String,
+    id: u32,
+    link: Option<LinkSpec>,
+    stream: bool,
+) -> std::thread::JoinHandle<()> {
     std::thread::spawn(move || {
         let mut ch = TcpChannel::connect(&addr, link).expect("connect");
         let ds = SynthDataset::new(DatasetSpec::Cifar10, 9);
         let mut rng = Rng::new(100 + id as u64);
         let slice = ds.sample(&mut rng, 48, 0.0);
         let trainer = NativeTrainer::new(10, slice, 0.2, 5);
-        let codec = make_codec("fedgec", ErrorBound::Rel(1e-2), 5).unwrap();
-        let mut client = Client::new(id, Box::new(trainer), codec);
+        let codec = fedgec_codec();
+        let mut client = Client::new(id, Box::new(trainer), codec).with_streaming(stream);
         client.run(&mut ch).expect("client loop");
     })
 }
@@ -33,16 +41,16 @@ fn tcp_federation_trains() {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
     let n_clients = 3;
+    // Mix streamed and monolithic clients: the server must handle both.
     let handles: Vec<_> =
-        (0..n_clients).map(|i| spawn_client(addr.clone(), i as u32, None)).collect();
+        (0..n_clients).map(|i| spawn_client(addr.clone(), i as u32, None, i % 2 == 0)).collect();
     let chans = accept_n(&listener, n_clients, None).unwrap();
     let mut channels: Vec<Box<dyn Channel>> =
         chans.into_iter().map(|c| Box::new(c) as _).collect();
     let proto = NativeNet::new(10, 5);
     let init =
         vec![proto.conv_w.clone(), proto.conv_b.clone(), proto.fc_w.clone(), proto.fc_b.clone()];
-    let codecs: Vec<_> =
-        (0..n_clients).map(|_| make_codec("fedgec", ErrorBound::Rel(1e-2), 5).unwrap()).collect();
+    let codecs: Vec<_> = (0..n_clients).map(|_| fedgec_codec()).collect();
     let mut server = Server::new(init, proto.layer_metas(), 0.2, codecs);
     server.wait_hellos(&mut channels).unwrap();
     let mut losses = Vec::new();
@@ -67,14 +75,14 @@ fn tcp_throttled_link_slows_uploads() {
     let addr = listener.local_addr().unwrap().to_string();
     // Throttle the client's uplink to ~4 Mbps with zero latency.
     let link = LinkSpec { bits_per_sec: 4e6, latency: std::time::Duration::ZERO };
-    let handle = spawn_client(addr.clone(), 0, Some(link));
+    let handle = spawn_client(addr.clone(), 0, Some(link), true);
     let chans = accept_n(&listener, 1, None).unwrap();
     let mut channels: Vec<Box<dyn Channel>> =
         chans.into_iter().map(|c| Box::new(c) as _).collect();
     let proto = NativeNet::new(10, 5);
     let init =
         vec![proto.conv_w.clone(), proto.conv_b.clone(), proto.fc_w.clone(), proto.fc_b.clone()];
-    let codecs = vec![make_codec("fedgec", ErrorBound::Rel(1e-2), 5).unwrap()];
+    let codecs = vec![fedgec_codec()];
     let mut server = Server::new(init, proto.layer_metas(), 0.2, codecs);
     server.wait_hellos(&mut channels).unwrap();
     let t0 = std::time::Instant::now();
