@@ -17,10 +17,25 @@ pub fn full_mode() -> bool {
     std::env::var("FEDGEC_FULL").map(|v| v == "1").unwrap_or(false)
 }
 
+/// `BENCH_QUICK=1` shrinks every grid to a CI smoke test: small tensor
+/// sizes, few rounds, minimal timing loops. The emitted `BENCH_*.json`
+/// artifacts keep the same shape, so the per-PR trajectory stays
+/// comparable run-over-run. `FEDGEC_FULL` wins if both are set.
+pub fn quick_mode() -> bool {
+    !full_mode() && std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
 /// Models for the compression-grid experiments.
 pub fn grid_models() -> Vec<ModelArch> {
     if full_mode() {
-        vec![ModelArch::ResNet18, ModelArch::ResNet34, ModelArch::InceptionV1, ModelArch::InceptionV3]
+        vec![
+            ModelArch::ResNet18,
+            ModelArch::ResNet34,
+            ModelArch::InceptionV1,
+            ModelArch::InceptionV3,
+        ]
+    } else if quick_mode() {
+        vec![ModelArch::MicroResNet]
     } else {
         vec![ModelArch::ResNet18, ModelArch::InceptionV1]
     }
@@ -30,6 +45,8 @@ pub fn grid_models() -> Vec<ModelArch> {
 pub fn grid_datasets() -> Vec<DatasetSpec> {
     if full_mode() {
         vec![DatasetSpec::Cifar10, DatasetSpec::Caltech101, DatasetSpec::Fmnist]
+    } else if quick_mode() {
+        vec![DatasetSpec::Cifar10]
     } else {
         vec![DatasetSpec::Cifar10, DatasetSpec::Fmnist]
     }
@@ -37,13 +54,19 @@ pub fn grid_datasets() -> Vec<DatasetSpec> {
 
 /// The paper's REL error-bound sweep (Table 4 columns).
 pub fn grid_bounds() -> Vec<f64> {
-    vec![1e-3, 1e-2, 3e-2, 5e-2]
+    if quick_mode() {
+        vec![1e-2, 3e-2]
+    } else {
+        vec![1e-3, 1e-2, 3e-2, 5e-2]
+    }
 }
 
 /// Number of gradient rounds averaged per grid cell.
 pub fn grid_rounds() -> usize {
     if full_mode() {
         5
+    } else if quick_mode() {
+        2
     } else {
         3
     }

@@ -1,18 +1,18 @@
 //! §Perf: compressor throughput microbenchmarks — the L3 hot-path profile
 //! driving the optimization pass (EXPERIMENTS.md §Perf). Reports MB/s per
 //! pipeline stage and end-to-end for each codec, on a ResNet-18-scale
-//! gradient.
+//! gradient (MicroResNet under `BENCH_QUICK=1`), including the
+//! huff-vs-rANS entropy-stage panel.
 
 mod bench_util;
 
 use std::time::Duration;
 
 use bench_util::*;
+use fedgec::compress::entropy::EntropyCoder;
 use fedgec::compress::huffman;
-use fedgec::compress::spec::{CodecSpec, SpecDefaults};
 use fedgec::compress::lossless::Backend;
-use fedgec::compress::pipeline::{FedgecCodec, FedgecConfig};
-use fedgec::compress::quant::ErrorBound;
+use fedgec::compress::spec::{CodecSpec, SpecDefaults};
 use fedgec::compress::GradientCodec;
 use fedgec::metrics::Table;
 use fedgec::tensor::model_zoo::ModelArch;
@@ -21,19 +21,32 @@ use fedgec::util::timer::bench_loop;
 
 fn main() {
     banner("perf_throughput", "EXPERIMENTS.md §Perf");
-    let metas = ModelArch::ResNet18.layers(10);
+    let arch = if quick_mode() { ModelArch::MicroResNet } else { ModelArch::ResNet18 };
+    let metas = arch.layers(10);
     let mut gen = GradGen::new(metas.clone(), GradGenConfig::default(), 2);
     let g0 = gen.next_round();
     let g = gen.next_round();
     let bytes = g.byte_size();
-    println!("payload: ResNet-18 gradient, {:.1} MB\n", bytes as f64 / 1e6);
-    let iters = if full_mode() { 5 } else { 2 };
-    let min_time = Duration::from_millis(if full_mode() { 3000 } else { 800 });
+    println!("payload: {} gradient, {:.1} MB\n", arch.name(), bytes as f64 / 1e6);
+    let iters = if full_mode() {
+        5
+    } else if quick_mode() {
+        1
+    } else {
+        2
+    };
+    let min_time = Duration::from_millis(if full_mode() {
+        3000
+    } else if quick_mode() {
+        50
+    } else {
+        800
+    });
 
     let mut table = Table::new("compressor throughput", &["stage", "MB/s", "CR"]);
 
-    // End-to-end codecs.
-    for name in ["fedgec", "sz3", "qsgd", "topk"] {
+    // End-to-end codecs, including the rANS entropy-stage variant.
+    for name in ["fedgec", "fedgec:ec=rans", "sz3", "qsgd", "topk"] {
         let mut client =
             CodecSpec::parse_with(name, &SpecDefaults::with_rel_eb(3e-2)).unwrap().build();
         client.compress(&g0).unwrap(); // warm state
@@ -47,26 +60,21 @@ fn main() {
             format!("{:.2}", bytes as f64 / payload_len as f64),
         ]);
     }
-    // Decompression.
-    {
-        let mut client = FedgecCodec::new(FedgecConfig {
-            error_bound: ErrorBound::Rel(3e-2),
-            ..Default::default()
-        });
+    // Decompression, both entropy coders.
+    for spec_str in ["fedgec", "fedgec:ec=rans"] {
+        let d = SpecDefaults::with_rel_eb(3e-2);
+        let mut client = CodecSpec::parse_with(spec_str, &d).unwrap().build();
         let p0 = client.compress(&g0).unwrap();
         let payload = client.compress(&g).unwrap();
         // Fresh server decompressing rounds 1+2 each iteration (keeps the
         // predictor state consistent with the payload pair).
         let stats = bench_loop(iters, min_time, || {
-            let mut s = FedgecCodec::new(FedgecConfig {
-                error_bound: ErrorBound::Rel(3e-2),
-                ..Default::default()
-            });
+            let mut s = CodecSpec::parse_with(spec_str, &d).unwrap().build();
             s.decompress(&p0, &metas).unwrap();
             s.decompress(&payload, &metas).unwrap();
         });
         table.row(vec![
-            "fedgec decompress (2 rounds)".into(),
+            format!("{spec_str} decompress (2 rounds)"),
             format!("{:.0}", stats.mb_per_s(bytes * 2)),
             "-".into(),
         ]);
@@ -110,15 +118,28 @@ fn main() {
             format!("{:.0}", stats.mb_per_s(lbytes)),
             "-".into(),
         ]);
+        // Entropy-stage panel: Huffman vs 2-way interleaved rANS, encode
+        // and decode, on the same code stream.
         let codes = out.codes.clone();
-        let stats = bench_loop(iters * 3, min_time, || {
-            let _ = huffman::encode_to_bytes(&codes);
-        });
-        table.row(vec![
-            "stage: huffman encode".into(),
-            format!("{:.0}", stats.mb_per_s(lbytes)),
-            "-".into(),
-        ]);
+        for coder in [EntropyCoder::Huffman, EntropyCoder::Rans] {
+            let mut stream = Vec::new();
+            let stats = bench_loop(iters * 3, min_time, || {
+                stream = coder.encode_to_bytes(&codes);
+            });
+            table.row(vec![
+                format!("stage: {} encode", coder.name()),
+                format!("{:.0}", stats.mb_per_s(lbytes)),
+                format!("{:.2}", lbytes as f64 / stream.len() as f64),
+            ]);
+            let stats = bench_loop(iters * 3, min_time, || {
+                let _ = coder.decode_from_bytes(&stream).unwrap();
+            });
+            table.row(vec![
+                format!("stage: {} decode", coder.name()),
+                format!("{:.0}", stats.mb_per_s(lbytes)),
+                "-".into(),
+            ]);
+        }
         let entropy = huffman::encode_to_bytes(&codes);
         for backend in [Backend::Zstd(3), Backend::Deflate, Backend::OwnLz] {
             let stats = bench_loop(iters, min_time, || {
@@ -133,4 +154,6 @@ fn main() {
     }
     table.print();
     table.save_csv("perf_throughput").unwrap();
+    let json = table.save_json("perf_throughput").unwrap();
+    println!("saved {json:?}");
 }

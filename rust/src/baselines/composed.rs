@@ -115,10 +115,14 @@ impl SparsifiedEblc {
         let n = r.get_u32()? as usize;
         anyhow::ensure!(n == meta.numel, "sparse-eblc layer {}: numel", meta.name);
         let keep = r.get_u32()? as usize;
+        anyhow::ensure!(keep <= n, "sparse-eblc layer {}: keep {} > numel", meta.name, keep);
         let delta = r.get_f64()? as f32;
         let idx_bytes = r.get_bytes()?;
         let entropy = r.get_bytes()?;
-        let (codes, _) = huffman::decode_from_bytes(entropy)?;
+        // `keep` is bounded by the trusted numel above, so it caps the
+        // decode against corrupt streams declaring inflated counts.
+        let (codes, _) =
+            crate::compress::entropy::EntropyCoder::Huffman.decode_bounded(entropy, keep)?;
         anyhow::ensure!(codes.len() == keep, "sparse-eblc: code count");
         let escapes = r.get_f32_vec()?;
         let report = LayerReport {

@@ -15,9 +15,12 @@
 //! * per-layer predictor selection between Lorenzo and interpolation by
 //!   sampled residual magnitude, mirroring SZ3's auto-tuning.
 
-use crate::compress::blob::{bytes_to_f32s, f32s_to_bytes, BlobReader, BlobWriter};
+use crate::compress::blob::{
+    bytes_to_f32s, f32s_to_bytes, put_coder_suffix, read_section_coder, section_tag_for,
+    BlobReader, BlobWriter, SECTION_LOSSLESS,
+};
+use crate::compress::entropy::EntropyCoder;
 use crate::compress::frame::{Frame, LayerReport};
-use crate::compress::huffman;
 use crate::compress::lossless::{self, Backend};
 use crate::compress::quant::{ErrorBound, CODE_RADIUS, ESCAPE_CODE};
 use crate::compress::GradientCodec;
@@ -30,6 +33,8 @@ pub struct Sz3Config {
     pub error_bound: ErrorBound,
     /// Small-layer lossless threshold (same convention as FedGEC).
     pub t_lossy: usize,
+    /// Stage-3 entropy coder (same registry as FedGEC; spec key `ec`).
+    pub entropy: EntropyCoder,
     pub backend: Backend,
     /// Force a predictor instead of auto-selecting.
     pub force_predictor: Option<Predictor>,
@@ -40,6 +45,7 @@ impl Default for Sz3Config {
         Sz3Config {
             error_bound: ErrorBound::Rel(1e-2),
             t_lossy: 1024,
+            entropy: EntropyCoder::Huffman,
             backend: Backend::default(),
             force_predictor: None,
         }
@@ -205,12 +211,8 @@ fn interp_encode(data: &[f32], delta: f32) -> (Vec<i32>, Vec<f32>, Vec<f32>) {
     let mut filled = vec![false; n];
     let mut prev_anchor = 0.0f32;
     for &(i, s) in &order {
-        let pred = if s == 0 {
-            let p = prev_anchor;
-            p
-        } else {
-            interp_predict(&recon, &filled, i, s, n)
-        };
+        let pred =
+            if s == 0 { prev_anchor } else { interp_predict(&recon, &filled, i, s, n) };
         let r = quantize_one(data[i], pred, delta, two_delta, inv, &mut codes, &mut escapes);
         recon[i] = r;
         filled[i] = true;
@@ -293,7 +295,7 @@ impl Sz3Codec {
         };
         let mut w = BlobWriter::new();
         if data.len() <= self.cfg.t_lossy {
-            w.put_u8(0);
+            w.put_u8(SECTION_LOSSLESS);
             w.put_bytes(&f32s_to_bytes(data));
             return Ok((self.cfg.backend.compress(&w.into_bytes())?, report));
         }
@@ -305,12 +307,16 @@ impl Sz3Codec {
             Predictor::Lorenzo => lorenzo_encode(data, delta),
             Predictor::Interpolation => interp_encode(data, delta),
         };
-        let entropy = huffman::encode_to_bytes(&codes);
+        let coder = self.cfg.entropy;
+        let entropy = coder.encode_to_bytes(&codes);
         report.entropy_bytes = entropy.len();
+        report.entropy_coder = coder.name().to_string();
         report.escape_count = escapes.len();
         report.side_info_bytes = escapes.len() * 4;
-        w.put_u8(1);
+        // Huffman keeps seed-compatible v1 bytes; other coders bump to v2.
+        w.put_u8(section_tag_for(coder));
         w.put_u8(pred.tag());
+        put_coder_suffix(&mut w, coder);
         w.put_u32(data.len() as u32);
         w.put_f64(delta as f64);
         w.put_bytes(&entropy);
@@ -325,7 +331,8 @@ impl Sz3Codec {
     ) -> crate::Result<(Vec<f32>, LayerReport)> {
         let mut r = BlobReader::new(section);
         let mut report = LayerReport { name: meta.name.clone(), ..Default::default() };
-        if r.get_u8()? == 0 {
+        let tag = r.get_u8()?;
+        if tag == SECTION_LOSSLESS {
             let data = bytes_to_f32s(r.get_bytes()?)?;
             anyhow::ensure!(data.len() == meta.numel, "sz3 layer {}: lossless numel", meta.name);
             report.raw_bytes = data.len() * 4;
@@ -333,6 +340,9 @@ impl Sz3Codec {
         }
         report.lossy = true;
         let pred = Predictor::from_tag(r.get_u8()?)?;
+        let coder = read_section_coder(&mut r, tag)
+            .map_err(|e| anyhow::anyhow!("sz3 layer {}: {e}", meta.name))?;
+        report.entropy_coder = coder.name().to_string();
         let n = r.get_u32()? as usize;
         if n != meta.numel {
             anyhow::bail!("sz3 layer {}: numel {} != {}", meta.name, n, meta.numel);
@@ -341,7 +351,12 @@ impl Sz3Codec {
         let delta = r.get_f64()? as f32;
         let entropy = r.get_bytes()?;
         report.entropy_bytes = entropy.len();
-        let (codes, _) = huffman::decode_from_bytes(entropy)?;
+        // `n` matches the trusted meta, so it bounds the decode against
+        // corrupt streams declaring inflated symbol counts.
+        let (codes, _) = coder.decode_bounded(entropy, n)?;
+        if codes.len() != n {
+            anyhow::bail!("sz3 layer {}: {} codes for {} elements", meta.name, codes.len(), n);
+        }
         let escapes = r.get_f32_vec()?;
         report.escape_count = escapes.len();
         report.side_info_bytes = escapes.len() * 4;
@@ -469,6 +484,26 @@ mod tests {
             for (r, x) in recon.layers[0].data.iter().zip(&g.layers[0].data) {
                 assert!((r - x).abs() <= delta * 1.0001);
             }
+        }
+    }
+
+    #[test]
+    fn rans_entropy_stage_roundtrips_identically() {
+        let mut rng = Rng::new(10);
+        let data: Vec<f32> = (0..20_000).map(|_| rng.normal_f32(0.0, 0.2)).collect();
+        let g = ModelGrad { layers: vec![LayerGrad::new(LayerMeta::other("g", 20_000), data)] };
+        let metas: Vec<LayerMeta> = g.layers.iter().map(|l| l.meta.clone()).collect();
+        let mut outs = Vec::new();
+        for ec in [EntropyCoder::Huffman, EntropyCoder::Rans] {
+            let mut codec = Sz3Codec::new(Sz3Config { entropy: ec, ..Default::default() });
+            let payload = codec.compress(&g).unwrap();
+            let (recon, report) = codec.decompress_with_report(&payload, &metas).unwrap();
+            assert_eq!(report.layers[0].entropy_coder, ec.name());
+            outs.push(recon.layers[0].data.clone());
+        }
+        // The entropy stage is lossless: identical reconstructions.
+        for (a, b) in outs[0].iter().zip(&outs[1]) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 

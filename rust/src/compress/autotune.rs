@@ -18,7 +18,60 @@
 //!   autocorrelation of the previous reconstructed magnitudes), which
 //!   both sides hold bit-identically — no side channel needed.
 
+use super::entropy::{rans, EntropyCoder};
+use super::huffman;
+use crate::compress::quant::code_histogram;
 use crate::util::stats;
+
+/// Choose the cheaper stage-3 coder for one layer's code stream — the
+/// third client-only knob (like τ, the choice is recorded in the layer
+/// blob, so the server follows with zero extra communication).
+///
+/// The decision arbitrates only between Huffman and rANS by comparing
+/// the **exact** Huffman serialized size (derived from the histogram
+/// without emitting bits) against the rANS size estimate (Shannon
+/// payload bound + table + state flush). Tiny streams keep `default`
+/// (the table overhead dominates and the coders' own raw fallback
+/// already guards the floor), and `ec=raw` is an explicit ablation
+/// choice the autotuner never overrides.
+pub fn pick_entropy_coder(codes: &[i32], default: EntropyCoder) -> EntropyCoder {
+    if default == EntropyCoder::Raw || codes.len() < 256 {
+        return default;
+    }
+    pick_entropy_coder_from_hist(&code_histogram(codes), codes.len(), default)
+}
+
+/// [`pick_entropy_coder`] against a precomputed histogram of the same
+/// `n_codes`-long stream (the pipeline shares one histogram between the
+/// choice and the chosen encoder).
+pub fn pick_entropy_coder_from_hist(
+    hist: &[(i32, u64)],
+    n_codes: usize,
+    default: EntropyCoder,
+) -> EntropyCoder {
+    if default == EntropyCoder::Raw || n_codes < 256 {
+        return default;
+    }
+    if hist.len() > rans::MAX_SYMS {
+        return EntropyCoder::Huffman;
+    }
+    let n = n_codes as f64;
+    let mut shannon_bits = 0.0f64;
+    for &(_, c) in hist {
+        let p = c as f64 / n;
+        shannon_bits -= c as f64 * p.log2();
+    }
+    let huff_bytes = match huffman::serialized_size_from_hist(hist) {
+        Some(s) => s as f64,
+        None => return EntropyCoder::Rans,
+    };
+    let rans_bytes = shannon_bits / 8.0 + (6 * hist.len() + 8 + 13) as f64;
+    if rans_bytes < huff_bytes {
+        EntropyCoder::Rans
+    } else {
+        EntropyCoder::Huffman
+    }
+}
 
 /// Controller for the client-side τ.
 #[derive(Debug, Clone)]
@@ -118,6 +171,37 @@ mod tests {
         let low = beta_from_history(&a, &b);
         assert!(low < high);
         assert_eq!(beta_from_history(&[], &[]), 0.9);
+    }
+
+    #[test]
+    fn coder_choice_tracks_distribution_shape() {
+        use crate::util::rng::Rng;
+        // Tiny streams keep the configured default.
+        assert_eq!(
+            pick_entropy_coder(&[1, 2, 3], EntropyCoder::Raw),
+            EntropyCoder::Raw
+        );
+        // Heavily skewed stream: sub-bit symbols favor rANS.
+        let mut rng = Rng::new(4);
+        let skewed: Vec<i32> =
+            (0..20_000).map(|_| if rng.chance(0.97) { 0 } else { 1 }).collect();
+        assert_eq!(
+            pick_entropy_coder(&skewed, EntropyCoder::Huffman),
+            EntropyCoder::Rans
+        );
+        // The choice is deterministic (client/server report symmetry).
+        assert_eq!(
+            pick_entropy_coder(&skewed, EntropyCoder::Huffman),
+            pick_entropy_coder(&skewed, EntropyCoder::Huffman)
+        );
+        // ec=raw is an explicit ablation choice: never overridden.
+        assert_eq!(pick_entropy_coder(&skewed, EntropyCoder::Raw), EntropyCoder::Raw);
+        // Hist-threaded form agrees with the convenience wrapper.
+        let hist = crate::compress::quant::code_histogram(&skewed);
+        assert_eq!(
+            pick_entropy_coder_from_hist(&hist, skewed.len(), EntropyCoder::Huffman),
+            pick_entropy_coder(&skewed, EntropyCoder::Huffman)
+        );
     }
 
     #[test]

@@ -1,6 +1,65 @@
 //! Binary wire helpers for payload headers: a tiny, dependency-free
 //! writer/reader over little-endian primitives and length-prefixed byte
 //! sections. All compressed-round payloads are built from these.
+//!
+//! # Layer-section format versions
+//!
+//! Every codec's per-layer section (the bytes closed by the lossless
+//! backend) opens with one of these tags:
+//!
+//! | tag | meaning                                                        |
+//! |-----|----------------------------------------------------------------|
+//! | 0   | lossless small-layer store (raw f32s)                          |
+//! | 1   | lossy v1: implicit Huffman entropy stage (seed format)         |
+//! | 2   | lossy v2: explicit entropy-coder tag byte follows the header   |
+//!
+//! v1 is still written whenever the Huffman coder is selected, keeping
+//! the default pipeline byte-compatible with the seed; any other coder
+//! bumps the section to v2 and records its
+//! [`crate::compress::EntropyCoder::tag`] so the decoder dispatches on
+//! the recorded tag rather than sniffing the stream.
+
+use crate::compress::entropy::EntropyCoder;
+
+/// Layer-section tag: lossless small-layer store.
+pub const SECTION_LOSSLESS: u8 = 0;
+/// Layer-section tag: lossy, v1 (implicit Huffman entropy stage).
+pub const SECTION_LOSSY_V1: u8 = 1;
+/// Layer-section tag: lossy, v2 (explicit entropy-coder tag).
+pub const SECTION_LOSSY_V2: u8 = 2;
+/// Current layer-section format version (the highest tag we emit).
+pub const BLOB_VERSION: u8 = SECTION_LOSSY_V2;
+
+/// Section tag for a lossy layer closed by `coder`: Huffman keeps the
+/// seed-compatible v1 tag, anything else bumps to [`BLOB_VERSION`].
+pub fn section_tag_for(coder: EntropyCoder) -> u8 {
+    if coder == EntropyCoder::Huffman {
+        SECTION_LOSSY_V1
+    } else {
+        BLOB_VERSION
+    }
+}
+
+/// Write the coder byte a v2 section records (nothing for v1 — Huffman
+/// is implicit there). Pairs with [`read_section_coder`]; every codec's
+/// writer goes through this so a future version bump happens here, not
+/// per codec.
+pub fn put_coder_suffix(w: &mut BlobWriter, coder: EntropyCoder) {
+    if section_tag_for(coder) == SECTION_LOSSY_V2 {
+        w.put_u8(coder.tag());
+    }
+}
+
+/// Resolve the entropy coder a lossy section tag records — the decoder
+/// dispatch point shared by every codec: v1 is implicitly Huffman, v2
+/// reads the recorded coder byte, anything else is rejected.
+pub fn read_section_coder(r: &mut BlobReader, tag: u8) -> anyhow::Result<EntropyCoder> {
+    match tag {
+        SECTION_LOSSY_V1 => Ok(EntropyCoder::Huffman),
+        SECTION_LOSSY_V2 => EntropyCoder::from_tag(r.get_u8()?),
+        t => anyhow::bail!("unknown layer-section tag {t}"),
+    }
+}
 
 /// Append-only binary writer.
 #[derive(Default)]
@@ -147,6 +206,26 @@ mod tests {
     fn underrun_errors() {
         let mut r = BlobReader::new(&[1, 2]);
         assert!(r.get_u32().is_err());
+    }
+
+    #[test]
+    fn section_helpers_roundtrip_every_coder() {
+        for coder in EntropyCoder::ALL {
+            let tag = section_tag_for(coder);
+            let mut w = BlobWriter::new();
+            put_coder_suffix(&mut w, coder);
+            let bytes = w.into_bytes();
+            // v1 (Huffman) writes no suffix byte — seed byte-compat.
+            assert_eq!(bytes.is_empty(), coder == EntropyCoder::Huffman);
+            let mut r = BlobReader::new(&bytes);
+            assert_eq!(read_section_coder(&mut r, tag).unwrap(), coder);
+            assert_eq!(r.remaining(), 0);
+        }
+        let mut r = BlobReader::new(&[]);
+        assert!(read_section_coder(&mut r, 9).is_err());
+        // A v2 tag with the suffix missing is a truncation error.
+        let mut r = BlobReader::new(&[]);
+        assert!(read_section_coder(&mut r, SECTION_LOSSY_V2).is_err());
     }
 
     #[test]

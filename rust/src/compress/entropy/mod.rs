@@ -1,0 +1,274 @@
+//! Stage 3 front door: the **entropy-coder registry** closing the
+//! pipeline after quantization. One enum selects between the canonical
+//! Huffman coder ([`super::huffman`]), the 2-way interleaved rANS coder
+//! ([`rans`]) and a raw i32 store, per codec via the `CodecSpec` grammar
+//! (`ec=huff|rans|raw`, Huffman the byte-compatible default).
+//!
+//! Every serialized entropy stream is self-describing through its
+//! leading mode byte (0 = raw, 1 = huffman, 2 = rans), and the layer
+//! blob additionally records the *selected* coder tag (see
+//! [`super::blob`]) so the decoder dispatches without sniffing. The rANS
+//! path is chosen **by measured size**: it computes the exact Huffman
+//! and raw alternatives from the shared histogram and only emits the
+//! rANS stream when it is no larger — so `ec=rans` never loses a byte
+//! to `ec=huff` on any layer (the Table 4b panel asserts this).
+
+pub mod rans;
+
+use super::huffman;
+use crate::compress::quant::code_histogram;
+
+/// Which stage-3 coder closes a layer's residual stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EntropyCoder {
+    /// Canonical Huffman (the seed coder; byte-compatible default).
+    #[default]
+    Huffman,
+    /// 2-way interleaved rANS with size-based Huffman/raw fallback.
+    Rans,
+    /// Raw little-endian i32 store (ablation / debugging).
+    Raw,
+}
+
+impl EntropyCoder {
+    /// All coders, for registry-style sweeps.
+    pub const ALL: [EntropyCoder; 3] =
+        [EntropyCoder::Huffman, EntropyCoder::Rans, EntropyCoder::Raw];
+
+    /// Spec-grammar name (`ec=<name>`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            EntropyCoder::Huffman => "huff",
+            EntropyCoder::Rans => "rans",
+            EntropyCoder::Raw => "raw",
+        }
+    }
+
+    /// Parse a spec-grammar name.
+    pub fn from_name(s: &str) -> Option<EntropyCoder> {
+        match s {
+            "huff" | "huffman" => Some(EntropyCoder::Huffman),
+            "rans" => Some(EntropyCoder::Rans),
+            "raw" => Some(EntropyCoder::Raw),
+            _ => None,
+        }
+    }
+
+    /// Coder tag recorded in v2 layer blobs ([`super::blob`]).
+    pub fn tag(&self) -> u8 {
+        match self {
+            EntropyCoder::Huffman => 0,
+            EntropyCoder::Rans => 1,
+            EntropyCoder::Raw => 2,
+        }
+    }
+
+    /// Inverse of [`Self::tag`].
+    pub fn from_tag(t: u8) -> anyhow::Result<EntropyCoder> {
+        match t {
+            0 => Ok(EntropyCoder::Huffman),
+            1 => Ok(EntropyCoder::Rans),
+            2 => Ok(EntropyCoder::Raw),
+            _ => anyhow::bail!("unknown entropy-coder tag {t}"),
+        }
+    }
+
+    /// Encode a code stream to its serialized, self-describing form.
+    pub fn encode_to_bytes(&self, codes: &[i32]) -> Vec<u8> {
+        match self {
+            // Raw never looks at frequencies; skip the histogram pass.
+            EntropyCoder::Raw => self.encode_to_bytes_with_hist(codes, &[]),
+            _ => self.encode_to_bytes_with_hist(codes, &code_histogram(codes)),
+        }
+    }
+
+    /// [`Self::encode_to_bytes`] against a precomputed histogram of these
+    /// same codes — the pipeline histograms each layer once and shares it
+    /// between the autotuner's coder choice and the chosen encoder.
+    /// Crate-internal: a histogram not derived from `codes` panics.
+    pub(crate) fn encode_to_bytes_with_hist(
+        &self,
+        codes: &[i32],
+        hist: &[(i32, u64)],
+    ) -> Vec<u8> {
+        let raw = |codes: &[i32]| {
+            let mut out = Vec::with_capacity(5 + codes.len() * 4);
+            huffman::Encoded::Raw(codes.to_vec()).write_to(&mut out);
+            out
+        };
+        if codes.is_empty() {
+            return raw(codes);
+        }
+        let huffman_bytes = |codes: &[i32], hist: &[(i32, u64)]| {
+            let enc = huffman::encode_with_hist(codes, hist);
+            let mut out = Vec::with_capacity(enc.byte_size());
+            enc.write_to(&mut out);
+            out
+        };
+        match self {
+            EntropyCoder::Huffman => huffman_bytes(codes, hist),
+            EntropyCoder::Raw => raw(codes),
+            EntropyCoder::Rans => {
+                let raw_size = 1 + 4 + codes.len() * 4;
+                let huff_size = huffman::serialized_size_from_hist(hist).unwrap_or(usize::MAX);
+                match rans::encode_with_hist(codes, hist) {
+                    Some(r) if r.len() <= huff_size && r.len() < raw_size => r,
+                    // Huffman (or its own raw fallback) measured smaller.
+                    _ => huffman_bytes(codes, hist),
+                }
+            }
+        }
+    }
+
+    /// Decode a stream this coder produced, returning (codes, bytes
+    /// consumed). Unbounded form for callers decoding their own
+    /// encodings; untrusted streams go through [`Self::decode_bounded`].
+    pub fn decode_from_bytes(&self, buf: &[u8]) -> anyhow::Result<(Vec<i32>, usize)> {
+        self.decode_bounded(buf, u32::MAX as usize)
+    }
+
+    /// [`Self::decode_from_bytes`] with a caller-known cap on the symbol
+    /// count (the layer's `numel`, parsed from the blob header before the
+    /// entropy bytes). Both the rANS and Huffman stream formats can
+    /// declare far more symbols than they carry bits for (symbols can
+    /// cost < 1 bit / 0 bits), so the declared count is validated before
+    /// any decode work — the decompressors' untrusted-payload guard.
+    /// The dispatch is driven by the coder recorded in the layer blob;
+    /// each coder accepts only the modes it can emit.
+    pub fn decode_bounded(
+        &self,
+        buf: &[u8],
+        max_count: usize,
+    ) -> anyhow::Result<(Vec<i32>, usize)> {
+        let mode = *buf
+            .first()
+            .ok_or_else(|| anyhow::anyhow!("empty entropy stream"))?;
+        let bounded_huffman = |buf: &[u8]| -> anyhow::Result<(Vec<i32>, usize)> {
+            let declared = huffman::Encoded::declared_count(buf)? as usize;
+            anyhow::ensure!(
+                declared <= max_count,
+                "entropy stream declares {declared} symbols, expected at most {max_count}"
+            );
+            huffman::decode_from_bytes(buf)
+        };
+        match (self, mode) {
+            (EntropyCoder::Rans, rans::MODE_RANS) => rans::decode_bounded(buf, max_count),
+            // The rANS selector may have fallen back to huffman/raw.
+            (EntropyCoder::Rans, 0 | 1) | (EntropyCoder::Huffman, 0 | 1) => bounded_huffman(buf),
+            (EntropyCoder::Raw, 0) => bounded_huffman(buf),
+            (c, m) => {
+                anyhow::bail!("entropy stream mode {m} inconsistent with coder '{}'", c.name())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::quant::ESCAPE_CODE;
+    use crate::util::rng::Rng;
+
+    /// The adversarial alphabet shapes every coder must survive, and on
+    /// which rANS must never emit more bytes than Huffman.
+    fn adversarial_streams() -> Vec<(&'static str, Vec<i32>)> {
+        let mut rng = Rng::new(0xEC);
+        let geometric: Vec<i32> = (0..30_000)
+            .map(|_| {
+                let mut v = 0i32;
+                while rng.chance(0.7) {
+                    v += 1;
+                }
+                if rng.chance(0.5) {
+                    -v
+                } else {
+                    v
+                }
+            })
+            .collect();
+        let escape_heavy: Vec<i32> = (0..8000)
+            .map(|i| if i % 2 == 0 { ESCAPE_CODE } else { (i % 5) as i32 })
+            .collect();
+        vec![
+            ("single", vec![42; 10_000]),
+            ("uniform-pow2", (0..16_384).map(|i| i % 32).collect()),
+            ("geometric", geometric),
+            ("escape-heavy", escape_heavy),
+            ("tiny", vec![1, -1, 0]),
+            ("empty", Vec::new()),
+        ]
+    }
+
+    #[test]
+    fn all_coders_roundtrip_adversarial_streams() {
+        for (name, codes) in adversarial_streams() {
+            for coder in EntropyCoder::ALL {
+                let bytes = coder.encode_to_bytes(&codes);
+                let (got, used) = coder
+                    .decode_from_bytes(&bytes)
+                    .unwrap_or_else(|e| panic!("{name}/{}: {e}", coder.name()));
+                assert_eq!(got, codes, "{name}/{}", coder.name());
+                assert_eq!(used, bytes.len(), "{name}/{}", coder.name());
+            }
+        }
+    }
+
+    #[test]
+    fn rans_and_huffman_decode_identical_codes() {
+        // The tentpole invariant: the two entropy stages are drop-in
+        // interchangeable — identical decoded codes on every shape.
+        for (name, codes) in adversarial_streams() {
+            let h = EntropyCoder::Huffman.encode_to_bytes(&codes);
+            let r = EntropyCoder::Rans.encode_to_bytes(&codes);
+            let (hd, _) = EntropyCoder::Huffman.decode_from_bytes(&h).unwrap();
+            let (rd, _) = EntropyCoder::Rans.decode_from_bytes(&r).unwrap();
+            assert_eq!(hd, rd, "{name}");
+            assert!(
+                r.len() <= h.len(),
+                "{name}: rans {} bytes > huffman {} bytes",
+                r.len(),
+                h.len()
+            );
+        }
+    }
+
+    #[test]
+    fn rans_beats_huffman_on_skewed_streams() {
+        // Heavily skewed two-symbol stream: entropy ≈ 0.29 bit/sym while
+        // Huffman is stuck at 1 bit/sym — rANS must win outright.
+        let mut rng = Rng::new(3);
+        let codes: Vec<i32> =
+            (0..50_000).map(|_| if rng.chance(0.95) { 0 } else { 1 }).collect();
+        let h = EntropyCoder::Huffman.encode_to_bytes(&codes);
+        let r = EntropyCoder::Rans.encode_to_bytes(&codes);
+        assert_eq!(r[0], rans::MODE_RANS, "selector must pick the rANS stream");
+        assert!(
+            (r.len() as f64) < 0.6 * h.len() as f64,
+            "rans {} vs huffman {}",
+            r.len(),
+            h.len()
+        );
+    }
+
+    #[test]
+    fn coder_tags_and_names_roundtrip() {
+        for c in EntropyCoder::ALL {
+            assert_eq!(EntropyCoder::from_tag(c.tag()).unwrap(), c);
+            assert_eq!(EntropyCoder::from_name(c.name()), Some(c));
+        }
+        assert!(EntropyCoder::from_tag(9).is_err());
+        assert_eq!(EntropyCoder::from_name("bogus"), None);
+        assert_eq!(EntropyCoder::default(), EntropyCoder::Huffman);
+    }
+
+    #[test]
+    fn mode_mismatch_is_rejected() {
+        let codes = vec![1, 2, 3, 1, 2, 1];
+        let r = rans::encode_to_bytes(&codes).unwrap();
+        // A legacy-huffman layer must not carry a rANS stream.
+        assert!(EntropyCoder::Huffman.decode_from_bytes(&r).is_err());
+        let repeated = vec![5; 100];
+        let h = EntropyCoder::Huffman.encode_to_bytes(&repeated);
+        assert!(EntropyCoder::Raw.decode_from_bytes(&h).is_err());
+    }
+}

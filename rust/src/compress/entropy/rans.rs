@@ -1,0 +1,404 @@
+//! From-scratch **2-way interleaved rANS** coder over quantization codes
+//! — the asymmetric-numeral-system sibling of the canonical Huffman stage
+//! (in the spirit of orz's entropy backend), built for the skewed,
+//! near-geometric code distributions the gradient-aware predictor emits.
+//!
+//! Invariants (see DESIGN.md §7):
+//!
+//! * **Static table**: per-stream symbol frequencies normalized to sum
+//!   exactly [`SCALE`] (= 1 << 12), every present symbol keeping
+//!   frequency ≥ 1, so sub-bit code lengths are representable where
+//!   Huffman must spend a whole bit.
+//! * **32-bit state, byte renormalization**: each lane's state `x` stays
+//!   in `[RANS_L, 256 · RANS_L)`; the encoder emits low bytes while
+//!   `x ≥ ((RANS_L >> SCALE_BITS) << 8) · freq`, the decoder refills
+//!   while `x < RANS_L`. All arithmetic fits u32 (checked in tests).
+//! * **2-way interleave**: symbol `i` goes to lane `i & 1`. The encoder
+//!   walks the stream backwards pushing bytes into a scratch buffer that
+//!   is reversed once at the end; the decoder walks forwards, so its
+//!   byte reads replay the encoder's pushes in exact reverse order and
+//!   the two lanes can share one byte stream. Lane 1 is flushed before
+//!   lane 0 (LSB-first), so after the reversal the stream opens with
+//!   lane 0's state big-endian, then lane 1's.
+//! * Decoding must return both lanes to exactly [`RANS_L`] — a free
+//!   integrity check on the whole stream.
+//!
+//! Serialized form (mode byte [`MODE_RANS`] keeps it distinguishable
+//! from the Huffman stream's 0 = raw / 1 = huffman modes):
+//!
+//! ```text
+//! u8 mode=2 | u32 count | u32 n_syms | n_syms × (i32 sym, u16 freq)
+//!           | u32 stream_len | stream
+//! ```
+
+use crate::compress::quant::{code_histogram, FAST_RADIUS};
+use std::collections::HashMap;
+
+/// log2 of the frequency-normalization total.
+pub const SCALE_BITS: u32 = 12;
+/// Normalized frequencies sum to exactly this.
+pub const SCALE: u32 = 1 << SCALE_BITS;
+/// Lower bound of the normalized state interval.
+pub const RANS_L: u32 = 1 << 23;
+/// Alphabets larger than this cannot be normalized (each symbol needs
+/// frequency ≥ 1); the caller falls back to Huffman/raw.
+pub const MAX_SYMS: usize = SCALE as usize;
+/// Leading mode byte of a serialized rANS stream.
+pub const MODE_RANS: u8 = 2;
+
+/// Normalize histogram counts to sum exactly [`SCALE`], each ≥ 1.
+/// Requires `hist.len() <= MAX_SYMS` and a nonzero total.
+fn normalize_freqs(hist: &[(i32, u64)], total: u64) -> Vec<u32> {
+    let k = hist.len();
+    debug_assert!(k >= 1 && k <= MAX_SYMS && total > 0);
+    let mut freqs: Vec<u32> = hist
+        .iter()
+        .map(|&(_, c)| ((c as u128 * SCALE as u128 / total as u128) as u32).max(1))
+        .collect();
+    let mut sum: i64 = freqs.iter().map(|&f| f as i64).sum();
+    if sum != SCALE as i64 {
+        // Settle the rounding drift on the most frequent symbols, where a
+        // ±1 slot costs the least precision. Cycling the index list
+        // terminates: while sum > SCALE (≥ k), some frequency exceeds 1.
+        let mut idx: Vec<usize> = (0..k).collect();
+        idx.sort_by(|&a, &b| hist[b].1.cmp(&hist[a].1).then(a.cmp(&b)));
+        let mut i = 0usize;
+        while sum > SCALE as i64 {
+            let j = idx[i % k];
+            if freqs[j] > 1 {
+                freqs[j] -= 1;
+                sum -= 1;
+            }
+            i += 1;
+        }
+        let mut i = 0usize;
+        while sum < SCALE as i64 {
+            freqs[idx[i % k]] += 1;
+            sum += 1;
+            i += 1;
+        }
+    }
+    freqs
+}
+
+/// Encode a code stream against its own histogram (as produced by
+/// [`code_histogram`] **from these same codes** — a mismatched histogram
+/// panics, which is why this stays crate-internal). Returns `None` when
+/// rANS cannot apply (empty stream or alphabet too large for the
+/// normalization).
+pub(crate) fn encode_with_hist(codes: &[i32], hist: &[(i32, u64)]) -> Option<Vec<u8>> {
+    let n_syms = hist.len();
+    if codes.is_empty() || n_syms == 0 || n_syms > MAX_SYMS {
+        return None;
+    }
+    let total: u64 = hist.iter().map(|&(_, c)| c).sum();
+    let freqs = normalize_freqs(hist, total);
+    let mut starts = vec![0u32; n_syms];
+    let mut acc = 0u32;
+    for (i, &f) in freqs.iter().enumerate() {
+        starts[i] = acc;
+        acc += f;
+    }
+    // Symbol -> table-index lookup: flat array fast path + HashMap overflow.
+    let flat_len = (2 * FAST_RADIUS + 1) as usize;
+    let mut flat_idx = vec![u32::MAX; flat_len];
+    let mut overflow: HashMap<i32, u32> = HashMap::new();
+    for (i, &(sym, _)) in hist.iter().enumerate() {
+        if (-FAST_RADIUS..=FAST_RADIUS).contains(&sym) {
+            flat_idx[(sym + FAST_RADIUS) as usize] = i as u32;
+        } else {
+            overflow.insert(sym, i as u32);
+        }
+    }
+    // Backward pass: lane i&1, bytes pushed LSB-first then globally
+    // reversed (see module docs).
+    let mut x0: u32 = RANS_L;
+    let mut x1: u32 = RANS_L;
+    let mut rev: Vec<u8> = Vec::with_capacity(codes.len() / 2 + 16);
+    for i in (0..codes.len()).rev() {
+        let c = codes[i];
+        let si = if (-FAST_RADIUS..=FAST_RADIUS).contains(&c) {
+            flat_idx[(c + FAST_RADIUS) as usize] as usize
+        } else {
+            overflow[&c] as usize
+        };
+        let f = freqs[si];
+        let x = if i & 1 == 0 { &mut x0 } else { &mut x1 };
+        let x_max = ((RANS_L >> SCALE_BITS) << 8) * f;
+        while *x >= x_max {
+            rev.push(*x as u8);
+            *x >>= 8;
+        }
+        *x = ((*x / f) << SCALE_BITS) + (*x % f) + starts[si];
+    }
+    for x in [x1, x0] {
+        rev.push(x as u8);
+        rev.push((x >> 8) as u8);
+        rev.push((x >> 16) as u8);
+        rev.push((x >> 24) as u8);
+    }
+    rev.reverse();
+    let mut out = Vec::with_capacity(1 + 12 + n_syms * 6 + rev.len());
+    out.push(MODE_RANS);
+    out.extend_from_slice(&(codes.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(n_syms as u32).to_le_bytes());
+    for (i, &(sym, _)) in hist.iter().enumerate() {
+        out.extend_from_slice(&sym.to_le_bytes());
+        out.extend_from_slice(&(freqs[i] as u16).to_le_bytes());
+    }
+    out.extend_from_slice(&(rev.len() as u32).to_le_bytes());
+    out.extend_from_slice(&rev);
+    Some(out)
+}
+
+/// Encode straight from codes (histogram computed internally).
+pub fn encode_to_bytes(codes: &[i32]) -> Option<Vec<u8>> {
+    encode_with_hist(codes, &code_histogram(codes))
+}
+
+/// Decode a serialized rANS stream, returning (codes, bytes consumed).
+///
+/// Unbounded form for callers decoding their own encodings; untrusted
+/// streams should go through [`decode_bounded`] — a full-`SCALE`
+/// single-symbol table decodes symbols without consuming stream bytes,
+/// so `count` alone must not size the output.
+pub fn decode_from_bytes(buf: &[u8]) -> anyhow::Result<(Vec<i32>, usize)> {
+    decode_bounded(buf, u32::MAX as usize)
+}
+
+/// [`decode_from_bytes`] with a caller-known cap on the symbol count
+/// (e.g. the layer's `numel` from the already-parsed blob header).
+/// Streams declaring more symbols are rejected before any work.
+pub fn decode_bounded(buf: &[u8], max_count: usize) -> anyhow::Result<(Vec<i32>, usize)> {
+    use anyhow::bail;
+    if buf.first() != Some(&MODE_RANS) {
+        bail!("not a rANS stream");
+    }
+    let mut pos = 1usize;
+    let rd_u32 = |buf: &[u8], pos: &mut usize| -> anyhow::Result<u32> {
+        if *pos + 4 > buf.len() {
+            anyhow::bail!("truncated rANS stream");
+        }
+        let v = u32::from_le_bytes(buf[*pos..*pos + 4].try_into().unwrap());
+        *pos += 4;
+        Ok(v)
+    };
+    let count = rd_u32(buf, &mut pos)? as usize;
+    if count > max_count {
+        bail!("rANS stream declares {count} symbols, expected at most {max_count}");
+    }
+    let n_syms = rd_u32(buf, &mut pos)? as usize;
+    if n_syms == 0 || n_syms > MAX_SYMS {
+        bail!("rANS alphabet size {n_syms} out of range");
+    }
+    if pos + n_syms * 6 > buf.len() {
+        bail!("truncated rANS table");
+    }
+    let mut syms = Vec::with_capacity(n_syms);
+    let mut freqs = Vec::with_capacity(n_syms);
+    let mut sum = 0u32;
+    for _ in 0..n_syms {
+        let sym = i32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap());
+        let f = u16::from_le_bytes(buf[pos + 4..pos + 6].try_into().unwrap()) as u32;
+        pos += 6;
+        if f == 0 {
+            bail!("rANS table has zero frequency");
+        }
+        syms.push(sym);
+        freqs.push(f);
+        sum += f;
+    }
+    if sum != SCALE {
+        bail!("rANS frequencies sum to {sum}, expected {SCALE}");
+    }
+    let stream_len = rd_u32(buf, &mut pos)? as usize;
+    if pos + stream_len > buf.len() {
+        bail!("truncated rANS payload");
+    }
+    let stream = &buf[pos..pos + stream_len];
+    pos += stream_len;
+    if count == 0 {
+        return Ok((Vec::new(), pos));
+    }
+    if stream_len < 8 {
+        bail!("rANS payload shorter than the state flush");
+    }
+    // slot -> table index, plus per-symbol interval starts.
+    let mut starts = vec![0u32; n_syms];
+    let mut slot_sym = vec![0u16; SCALE as usize];
+    let mut acc = 0u32;
+    for (i, &f) in freqs.iter().enumerate() {
+        starts[i] = acc;
+        for s in slot_sym.iter_mut().skip(acc as usize).take(f as usize) {
+            *s = i as u16;
+        }
+        acc += f;
+    }
+    let mut x0 = u32::from_be_bytes(stream[0..4].try_into().unwrap());
+    let mut x1 = u32::from_be_bytes(stream[4..8].try_into().unwrap());
+    let mut sp = 8usize;
+    let mut out = Vec::with_capacity(count.min(1 << 22));
+    for i in 0..count {
+        let x = if i & 1 == 0 { &mut x0 } else { &mut x1 };
+        let slot = *x & (SCALE - 1);
+        let si = slot_sym[slot as usize] as usize;
+        out.push(syms[si]);
+        // u64 intermediate: corrupt initial states could otherwise
+        // overflow the u32 multiply; valid states never do.
+        let nx = freqs[si] as u64 * (*x >> SCALE_BITS) as u64 + (slot - starts[si]) as u64;
+        *x = nx as u32;
+        while *x < RANS_L {
+            if sp >= stream.len() {
+                bail!("rANS stream underrun at symbol {i}");
+            }
+            *x = (*x << 8) | stream[sp] as u32;
+            sp += 1;
+        }
+    }
+    if x0 != RANS_L || x1 != RANS_L {
+        bail!("rANS final-state mismatch (corrupt stream)");
+    }
+    Ok((out, pos))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::quant::ESCAPE_CODE;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(codes: &[i32]) -> Vec<u8> {
+        let bytes = encode_to_bytes(codes).expect("encodable");
+        let (got, used) = decode_from_bytes(&bytes).expect("decodable");
+        assert_eq!(got, codes);
+        assert_eq!(used, bytes.len());
+        bytes
+    }
+
+    #[test]
+    fn golden_single_symbol_stream_is_frozen() {
+        // [7, 7, 7, 7]: one symbol at frequency SCALE, both lanes park at
+        // RANS_L untouched — the stream is exactly the two flushed states.
+        let bytes = encode_to_bytes(&[7, 7, 7, 7]).unwrap();
+        #[rustfmt::skip]
+        let expect: Vec<u8> = vec![
+            2,              // MODE_RANS
+            4, 0, 0, 0,     // count
+            1, 0, 0, 0,     // n_syms
+            7, 0, 0, 0,     // symbol 7
+            0, 16,          // freq 4096
+            8, 0, 0, 0,     // stream length
+            0, 128, 0, 0,   // lane 0 state, big-endian RANS_L
+            0, 128, 0, 0,   // lane 1 state
+        ];
+        assert_eq!(bytes, expect);
+        let (got, used) = decode_from_bytes(&bytes).unwrap();
+        assert_eq!(got, vec![7, 7, 7, 7]);
+        assert_eq!(used, bytes.len());
+    }
+
+    #[test]
+    fn roundtrip_adversarial_distributions() {
+        let mut rng = Rng::new(7);
+        // Single symbol.
+        let single = vec![-3; 4097];
+        roundtrip(&single);
+        // Uniform over a power-of-two alphabet (Huffman's best case).
+        let uniform: Vec<i32> = (0..8192).map(|i| i % 16).collect();
+        roundtrip(&uniform);
+        // Geometric (the predictor's typical residual shape).
+        let geo: Vec<i32> = (0..20_000)
+            .map(|_| {
+                let mut v = 0i32;
+                while rng.chance(0.6) {
+                    v += 1;
+                }
+                if rng.chance(0.5) {
+                    -v
+                } else {
+                    v
+                }
+            })
+            .collect();
+        let enc = roundtrip(&geo);
+        assert!(enc.len() < geo.len(), "geometric should beat 1 byte/sym");
+        // Escape-heavy: the ESCAPE_CODE marker mixed through.
+        let esc: Vec<i32> = (0..5000)
+            .map(|i| if i % 3 == 0 { ESCAPE_CODE } else { (i % 7) as i32 - 3 })
+            .collect();
+        roundtrip(&esc);
+        // Odd lengths exercise the interleave parity.
+        roundtrip(&[5]);
+        roundtrip(&[5, -5, 5]);
+    }
+
+    #[test]
+    fn empty_and_oversized_alphabets_decline() {
+        assert!(encode_to_bytes(&[]).is_none());
+        let wide: Vec<i32> = (0..(MAX_SYMS as i32 + 1)).collect();
+        assert!(encode_to_bytes(&wide).is_none());
+        let exactly: Vec<i32> = (0..(MAX_SYMS as i32)).collect();
+        roundtrip(&exactly);
+    }
+
+    #[test]
+    fn normalization_sums_to_scale() {
+        let mut rng = Rng::new(11);
+        for _ in 0..200 {
+            let k = 1 + rng.next_below(300);
+            let hist: Vec<(i32, u64)> =
+                (0..k).map(|i| (i as i32, 1 + rng.next_below(100_000) as u64)).collect();
+            let total: u64 = hist.iter().map(|&(_, c)| c).sum();
+            let freqs = normalize_freqs(&hist, total);
+            assert_eq!(freqs.iter().map(|&f| f as u64).sum::<u64>(), SCALE as u64);
+            assert!(freqs.iter().all(|&f| f >= 1));
+        }
+    }
+
+    #[test]
+    fn bounded_decode_rejects_inflated_count() {
+        // A flipped count high byte on a single-symbol stream would
+        // otherwise decode ~4e9 symbols without consuming a byte (the
+        // lanes never renorm at freq == SCALE) — the bound must catch it.
+        let mut bytes = encode_to_bytes(&[7, 7, 7, 7]).unwrap();
+        assert!(decode_bounded(&bytes, 4).is_ok());
+        assert!(decode_bounded(&bytes, 3).is_err());
+        bytes[4] = 0xFF; // count = 4 | 0xFF000000
+        assert!(decode_bounded(&bytes, 1 << 20).is_err());
+    }
+
+    #[test]
+    fn corrupt_streams_error_not_panic() {
+        let bytes = encode_to_bytes(&[1, 2, 3, 1, 2, 1, 1, 1, 0, 0, 0]).unwrap();
+        assert!(decode_from_bytes(&bytes[..bytes.len() - 3]).is_err());
+        assert!(decode_from_bytes(&[]).is_err());
+        assert!(decode_from_bytes(&[MODE_RANS]).is_err());
+        for i in 1..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0xFF;
+            // Any outcome but a panic is acceptable; most flips are caught
+            // by the table checks or the final-state invariant.
+            let _ = decode_from_bytes(&bad);
+        }
+    }
+
+    #[test]
+    fn property_roundtrip_random_streams() {
+        prop::check("rans roundtrip", 100, |rng| {
+            let n = prop::arb_len(rng, 5000);
+            let spread = 1 + rng.next_below(1000) as i32;
+            let codes: Vec<i32> =
+                (0..n).map(|_| rng.next_below(spread as usize * 2) as i32 - spread).collect();
+            let bytes = encode_to_bytes(&codes).ok_or("declined")?;
+            let (got, used) = decode_from_bytes(&bytes).map_err(|e| e.to_string())?;
+            if got != codes {
+                return Err("mismatch".into());
+            }
+            if used != bytes.len() {
+                return Err(format!("used {used} != len {}", bytes.len()));
+            }
+            Ok(())
+        });
+    }
+}

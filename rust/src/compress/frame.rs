@@ -120,6 +120,9 @@ pub struct LayerReport {
     pub side_info_bytes: usize,
     /// Entropy-coded residual stream bytes (0 for non-entropy codecs).
     pub entropy_bytes: usize,
+    /// Stage-3 coder that produced `entropy_bytes` (`"huff"`/`"rans"`/
+    /// `"raw"`; empty for non-entropy codecs and lossless layers).
+    pub entropy_coder: String,
     /// Whether the lossy pipeline ran (small layers are stored lossless).
     pub lossy: bool,
     /// Escaped (stored-exact) element count for EBLC codecs.

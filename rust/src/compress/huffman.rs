@@ -9,6 +9,7 @@
 //! Falls back to a raw 32-bit store when Huffman would not help (tiny
 //! inputs, pathological depth) — the blob records which mode was used.
 
+use crate::compress::quant::{code_histogram, FAST_RADIUS};
 use crate::util::bitio::{BitReader, BitWriter};
 use std::collections::HashMap;
 
@@ -63,6 +64,22 @@ impl Encoded {
                 }
             }
         }
+    }
+
+    /// Symbol count a serialized stream declares, without decoding it —
+    /// the layout twin of `write_to` (raw: count at offset 1; huffman:
+    /// count at offset 5, after the table length). Untrusted-stream
+    /// guards bound this against the expected element count before any
+    /// decode work.
+    pub(crate) fn declared_count(buf: &[u8]) -> anyhow::Result<u32> {
+        let at = match buf.first().copied() {
+            Some(0) => 1,
+            Some(1) => 5,
+            _ => anyhow::bail!("not a huffman/raw entropy stream"),
+        };
+        buf.get(at..at + 4)
+            .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+            .ok_or_else(|| anyhow::anyhow!("truncated entropy stream header"))
     }
 
     /// Parse a serialized stream, returning (encoded, bytes_consumed).
@@ -175,45 +192,51 @@ fn canonical_codes(table: &[(i32, u8)]) -> HashMap<i32, (u64, u8)> {
     map
 }
 
-/// Flat fast-table radius: symbols in [-FAST_RADIUS, FAST_RADIUS] use
-/// array-indexed counting/lookup (the overwhelming majority of gradient
-/// residual codes concentrate near 0 — §Perf), the rest fall back to a
-/// HashMap.
-const FAST_RADIUS: i32 = 4096;
+/// Exact serialized size of the Huffman encoding for a code stream with
+/// this histogram (as produced by
+/// [`crate::compress::quant::code_histogram`]), without emitting a
+/// single bit — the rANS selector and the autotuner compare against it.
+/// `None` when a depth overflow would force the raw fallback.
+pub(crate) fn serialized_size_from_hist(hist: &[(i32, u64)]) -> Option<usize> {
+    if hist.is_empty() {
+        return None;
+    }
+    let lengths = code_lengths(hist);
+    let mut total_bits = 0u64;
+    let mut max_len = 0u8;
+    for (&(_, count), &(_, len)) in hist.iter().zip(&lengths) {
+        total_bits += count * len as u64;
+        max_len = max_len.max(len);
+    }
+    if max_len > MAX_LEN {
+        return None;
+    }
+    Some(1 + 4 + 4 + lengths.len() * 5 + 4 + ((total_bits + 7) / 8) as usize)
+}
 
 /// Encode a code stream. Chooses Huffman vs raw by serialized size.
 pub fn encode(codes: &[i32]) -> Encoded {
     if codes.is_empty() {
         return Encoded::Raw(Vec::new());
     }
-    // Frequency table: flat array fast path + HashMap overflow.
-    let flat_len = (2 * FAST_RADIUS + 1) as usize;
-    let mut flat = vec![0u64; flat_len];
-    let mut overflow: HashMap<i32, u64> = HashMap::new();
-    for &c in codes {
-        if (-FAST_RADIUS..=FAST_RADIUS).contains(&c) {
-            flat[(c + FAST_RADIUS) as usize] += 1;
-        } else {
-            *overflow.entry(c).or_insert(0) += 1;
-        }
+    encode_with_hist(codes, &code_histogram(codes))
+}
+
+/// [`encode`] against a precomputed histogram (as produced by
+/// [`code_histogram`] from these same codes) — lets the entropy-stage
+/// selector histogram a layer once, not once per candidate coder.
+pub(crate) fn encode_with_hist(codes: &[i32], freqs: &[(i32, u64)]) -> Encoded {
+    if codes.is_empty() {
+        return Encoded::Raw(Vec::new());
     }
-    let mut freqs: Vec<(i32, u64)> = flat
-        .iter()
-        .enumerate()
-        .filter(|(_, &f)| f > 0)
-        .map(|(i, &f)| (i as i32 - FAST_RADIUS, f))
-        .collect();
-    let mut extra: Vec<(i32, u64)> = overflow.into_iter().collect();
-    extra.sort_unstable_by_key(|&(s, _)| s);
-    freqs.extend(extra);
-    freqs.sort_unstable_by_key(|&(s, _)| s);
-    let mut table = code_lengths(&freqs);
+    let mut table = code_lengths(freqs);
     table.sort_unstable_by_key(|&(s, l)| (l, s));
     if table.last().map(|&(_, l)| l).unwrap_or(0) > MAX_LEN {
         return Encoded::Raw(codes.to_vec());
     }
     let codes_map = canonical_codes(&table);
     // Emission lookup: flat array for the fast range, HashMap otherwise.
+    let flat_len = (2 * FAST_RADIUS + 1) as usize;
     let mut flat_codes: Vec<(u64, u8)> = vec![(0, 0); flat_len];
     for (&sym, &cl) in &codes_map {
         if (-FAST_RADIUS..=FAST_RADIUS).contains(&sym) {
@@ -476,6 +499,29 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn size_estimate_is_exact() {
+        // The rANS selector trusts this estimate to the byte: whenever the
+        // encoder picks Huffman, the estimate must equal the real size.
+        let mut rng = Rng::new(5);
+        for _ in 0..50 {
+            let n = 1 + rng.next_below(3000);
+            let spread = 1 + rng.next_below(200) as i32;
+            let codes: Vec<i32> =
+                (0..n).map(|_| rng.next_below(spread as usize * 2) as i32 - spread).collect();
+            let est = serialized_size_from_hist(&crate::compress::quant::code_histogram(&codes));
+            let raw_size = 1 + 4 + codes.len() * 4;
+            match encode(&codes) {
+                enc @ Encoded::Huffman { .. } => assert_eq!(est.unwrap(), enc.byte_size()),
+                Encoded::Raw(_) => {
+                    if let Some(e) = est {
+                        assert!(e >= raw_size);
+                    }
+                }
+            }
+        }
     }
 
     #[test]

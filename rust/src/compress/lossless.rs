@@ -26,13 +26,31 @@ impl Default for Backend {
 }
 
 impl Backend {
-    pub fn from_name(s: &str) -> Option<Backend> {
-        Some(match s {
+    /// Zstd levels we accept (`zstd::compression_level_range()` without
+    /// the 0 = "library default" alias, which would hide typos).
+    pub const ZSTD_LEVELS: std::ops::RangeInclusive<i32> = 1..=22;
+
+    /// Parse a backend name: `zstd` (level 3), `zstd:<level>`, `deflate`,
+    /// `ownlz`/`lz`, `none`. Malformed names and out-of-range zstd levels
+    /// are parse errors, never silent defaults.
+    pub fn from_name(s: &str) -> anyhow::Result<Backend> {
+        if let Some(rest) = s.strip_prefix("zstd:") {
+            let level: i32 = rest
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad zstd level '{rest}' (want an integer)"))?;
+            anyhow::ensure!(
+                Self::ZSTD_LEVELS.contains(&level),
+                "zstd level {level} outside {:?}",
+                Self::ZSTD_LEVELS
+            );
+            return Ok(Backend::Zstd(level));
+        }
+        Ok(match s {
             "zstd" => Backend::Zstd(3),
             "deflate" => Backend::Deflate,
             "ownlz" | "lz" => Backend::OwnLz,
             "none" => Backend::None,
-            _ => return None,
+            _ => anyhow::bail!("unknown lossless backend '{s}' (zstd[:level]|deflate|ownlz|none)"),
         })
     }
 
@@ -42,6 +60,16 @@ impl Backend {
             Backend::Deflate => "deflate",
             Backend::OwnLz => "ownlz",
             Backend::None => "none",
+        }
+    }
+
+    /// Canonical spec-grammar form, the inverse of [`Self::from_name`]:
+    /// keeps the zstd level when it differs from the default 3.
+    pub fn spec_name(&self) -> String {
+        match self {
+            Backend::Zstd(3) => "zstd".to_string(),
+            Backend::Zstd(level) => format!("zstd:{level}"),
+            b => b.name().to_string(),
         }
     }
 
@@ -140,6 +168,31 @@ mod tests {
     fn name_parse_roundtrip() {
         for b in [Backend::Zstd(3), Backend::Deflate, Backend::OwnLz, Backend::None] {
             assert_eq!(Backend::from_name(b.name()).unwrap().name(), b.name());
+        }
+    }
+
+    #[test]
+    fn zstd_level_parses_and_validates() {
+        assert_eq!(Backend::from_name("zstd").unwrap(), Backend::Zstd(3));
+        assert_eq!(Backend::from_name("zstd:1").unwrap(), Backend::Zstd(1));
+        assert_eq!(Backend::from_name("zstd:19").unwrap(), Backend::Zstd(19));
+        assert_eq!(Backend::from_name("zstd:22").unwrap(), Backend::Zstd(22));
+        // Out-of-range and malformed levels are errors, not defaults.
+        assert!(Backend::from_name("zstd:0").is_err());
+        assert!(Backend::from_name("zstd:23").is_err());
+        assert!(Backend::from_name("zstd:-5").is_err());
+        assert!(Backend::from_name("zstd:fast").is_err());
+        assert!(Backend::from_name("zstd:").is_err());
+        assert!(Backend::from_name("bzip2").is_err());
+        // A parsed non-default level really compresses/decompresses.
+        let data = sample();
+        let c = Backend::from_name("zstd:7").unwrap().compress(&data).unwrap();
+        assert_eq!(decompress(&c).unwrap(), data);
+        // spec_name is the parse inverse, level included.
+        for s in ["zstd", "zstd:7", "zstd:22", "deflate", "ownlz", "none"] {
+            let b = Backend::from_name(s).unwrap();
+            assert_eq!(b.spec_name(), s);
+            assert_eq!(Backend::from_name(&b.spec_name()).unwrap(), b);
         }
     }
 

@@ -16,6 +16,7 @@
 
 pub mod autotune;
 pub mod blob;
+pub mod entropy;
 pub mod frame;
 pub mod fused;
 pub mod huffman;
@@ -28,6 +29,7 @@ pub mod session;
 pub mod spec;
 pub mod state;
 
+pub use entropy::EntropyCoder;
 pub use frame::{CodecReport, Frame, LayerReport};
 
 use crate::tensor::{LayerGrad, LayerMeta, ModelGrad};

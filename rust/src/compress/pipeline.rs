@@ -18,10 +18,13 @@
 //! executes the Pallas kernel's lowering).
 
 use super::autotune::TauController;
-use super::blob::{bytes_to_f32s, f32s_to_bytes, BlobReader, BlobWriter};
+use super::blob::{
+    bytes_to_f32s, f32s_to_bytes, put_coder_suffix, read_section_coder, section_tag_for,
+    BlobReader, BlobWriter, SECTION_LOSSLESS,
+};
+use super::entropy::EntropyCoder;
 use super::frame::Frame;
 use super::fused::{fused_decode, fused_encode, FusedEncodeOut, FusedParams};
-use super::huffman;
 use super::lossless::{self, Backend};
 use super::predictor::sign::{predict_signs, reconstruct_signs, SignMeta, SignMode};
 use super::quant::{self, ErrorBound, Quantized};
@@ -45,6 +48,9 @@ pub struct FedgecConfig {
     pub error_bound: ErrorBound,
     /// Layers with `numel ≤ t_lossy` are stored losslessly (Alg. 3 line 3).
     pub t_lossy: usize,
+    /// Stage-3 entropy coder (spec key `ec`; Huffman keeps the seed's
+    /// byte-compatible v1 sections, anything else writes v2).
+    pub entropy: EntropyCoder,
     /// Stage-4 lossless backend.
     pub backend: Backend,
     /// Auto-tune τ (client-side controller) and β (deterministic
@@ -61,6 +67,7 @@ impl Default for FedgecConfig {
             full_batch: false,
             error_bound: ErrorBound::Rel(1e-2),
             t_lossy: 1024,
+            entropy: EntropyCoder::Huffman,
             backend: Backend::default(),
             autotune: false,
         }
@@ -107,9 +114,7 @@ impl FedgecCodec {
     fn ensure_ctrl(&mut self, n: usize) {
         if self.cfg.autotune && !self.cfg.full_batch {
             while self.tau_ctrl.len() < n {
-                let mut c = TauController::default();
-                c.tau = self.cfg.tau;
-                self.tau_ctrl.push(c);
+                self.tau_ctrl.push(TauController { tau: self.cfg.tau, ..Default::default() });
             }
         }
     }
@@ -158,7 +163,7 @@ fn compress_layer_impl(
     if n <= cfg.t_lossy {
         // Alg. 3 line 3-4: lossless-only small layer (bypasses predictor
         // state entirely).
-        w.put_u8(0);
+        w.put_u8(SECTION_LOSSLESS);
         w.put_bytes(&f32s_to_bytes(grad));
         let closed = cfg.backend.compress(&w.into_bytes())?;
         return Ok((closed, report));
@@ -227,13 +232,28 @@ fn compress_layer_impl(
     report.escape_count = out.escapes.len();
 
     // --- Stage 3: entropy coding. ---
-    let entropy = huffman::encode_to_bytes(&out.codes);
+    // The coder is a client-only decision (recorded in the section
+    // header), so autotune may pick the cheaper one per layer with zero
+    // synchronization cost. One histogram pass feeds both the choice and
+    // the chosen encoder (§Perf: the code stream is layer-sized).
+    let (coder, entropy) = if cfg.autotune && cfg.entropy != EntropyCoder::Raw {
+        let hist = quant::code_histogram(&out.codes);
+        let coder =
+            super::autotune::pick_entropy_coder_from_hist(&hist, out.codes.len(), cfg.entropy);
+        let entropy = coder.encode_to_bytes_with_hist(&out.codes, &hist);
+        (coder, entropy)
+    } else {
+        let coder = cfg.entropy;
+        (coder, coder.encode_to_bytes(&out.codes))
+    };
     report.entropy_bytes = entropy.len();
+    report.entropy_coder = coder.name().to_string();
     let sign_bytes = sign_meta.encode();
     report.side_info_bytes = sign_bytes.len() + out.escapes.len() * 4;
 
-    // --- Layer section (Alg. 3 line 15). ---
-    w.put_u8(1);
+    // --- Layer section (Alg. 3 line 15; Huffman keeps v1 bytes). ---
+    w.put_u8(section_tag_for(coder));
+    put_coder_suffix(&mut w, coder);
     w.put_u32(n as u32);
     w.put_f32(mu_curr);
     w.put_f32(sigma_curr);
@@ -259,13 +279,18 @@ fn decompress_layer_impl(
     let mut r = BlobReader::new(section);
     let tag = r.get_u8()?;
     let mut report = LayerReport { name: meta.name.clone(), ..Default::default() };
-    if tag == 0 {
+    if tag == SECTION_LOSSLESS {
         let data = bytes_to_f32s(r.get_bytes()?)?;
         anyhow::ensure!(data.len() == meta.numel, "layer {}: lossless numel", meta.name);
         report.raw_bytes = data.len() * 4;
         return Ok((data, report));
     }
+    // Dispatch on the recorded coder: v1 sections are implicitly Huffman,
+    // v2 sections carry the coder tag.
+    let coder = read_section_coder(&mut r, tag)
+        .map_err(|e| anyhow::anyhow!("layer {}: {e}", meta.name))?;
     report.lossy = true;
+    report.entropy_coder = coder.name().to_string();
     let n = r.get_u32()? as usize;
     if n != meta.numel {
         anyhow::bail!("layer {}: payload numel {} != meta {}", meta.name, n, meta.numel);
@@ -278,7 +303,9 @@ fn decompress_layer_impl(
     let sign_meta = SignMeta::decode(sign_bytes)?;
     let entropy = r.get_bytes()?;
     report.entropy_bytes = entropy.len();
-    let (codes, _) = huffman::decode_from_bytes(entropy)?;
+    // `n` is already validated against the trusted meta, so it bounds the
+    // decode (a corrupt stream cannot declare an inflated symbol count).
+    let (codes, _) = coder.decode_bounded(entropy, n)?;
     if codes.len() != n {
         anyhow::bail!("layer {}: {} codes for {} elements", meta.name, codes.len(), n);
     }
@@ -625,6 +652,67 @@ mod tests {
         assert!(!client.tau_ctrl.is_empty());
         for c in &client.tau_ctrl {
             assert!((c.min_tau..=c.max_tau).contains(&c.tau));
+        }
+    }
+
+    #[test]
+    fn rans_pipeline_roundtrips_and_pins_v2_header() {
+        let mut rng = Rng::new(31);
+        let cfg = FedgecConfig {
+            entropy: EntropyCoder::Rans,
+            backend: Backend::None,
+            ..Default::default()
+        };
+        let mut client = FedgecCodec::new(cfg.clone());
+        let mut server = FedgecCodec::new(cfg);
+        for round in 0..3 {
+            let grads = make_grads(&mut rng, 1.0);
+            let payload = client.compress(&grads).unwrap();
+            // Golden blob header: lossy sections open with the v2 tag and
+            // the recorded rANS coder tag.
+            let frames = crate::compress::frame::payload_to_frames(&payload).unwrap();
+            let section = lossless::decompress(&frames[0].payload).unwrap();
+            assert_eq!(section[0], crate::compress::blob::SECTION_LOSSY_V2, "round {round}");
+            assert_eq!(section[1], EntropyCoder::Rans.tag(), "round {round}");
+            let recon = server.decompress(&payload, &metas(&grads)).unwrap();
+            for li in 0..2 {
+                let (lo, hi) = stats::finite_min_max(&grads.layers[li].data);
+                let delta = FedgecConfig::default().error_bound.resolve(lo, hi) as f32;
+                for (r, g) in recon.layers[li].data.iter().zip(&grads.layers[li].data) {
+                    assert!((r - g).abs() <= delta * 1.0001, "round {round} layer {li}");
+                }
+            }
+            assert_eq!(client.state.fingerprint(), server.state.fingerprint());
+        }
+    }
+
+    #[test]
+    fn rans_and_huffman_pipelines_reconstruct_identically() {
+        // The entropy stage is lossless, so the two coders must yield
+        // bit-identical reconstructions and predictor states.
+        let mut rng = Rng::new(32);
+        let mut huff = FedgecCodec::new(FedgecConfig::default());
+        let mut rans = FedgecCodec::new(FedgecConfig {
+            entropy: EntropyCoder::Rans,
+            ..Default::default()
+        });
+        let mut huff_srv = FedgecCodec::new(FedgecConfig::default());
+        let mut rans_srv = FedgecCodec::new(FedgecConfig {
+            entropy: EntropyCoder::Rans,
+            ..Default::default()
+        });
+        for _ in 0..3 {
+            let grads = make_grads(&mut rng, 1.0);
+            let ph = huff.compress(&grads).unwrap();
+            let pr = rans.compress(&grads).unwrap();
+            let rh = huff_srv.decompress(&ph, &metas(&grads)).unwrap();
+            let rr = rans_srv.decompress(&pr, &metas(&grads)).unwrap();
+            for (a, b) in rh.layers.iter().zip(&rr.layers) {
+                for (x, y) in a.data.iter().zip(&b.data) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+            }
+            assert_eq!(huff.state.fingerprint(), rans.state.fingerprint());
         }
     }
 

@@ -59,6 +59,42 @@ pub struct Quantized {
 /// Marker stored in `codes` for escaped elements.
 pub const ESCAPE_CODE: i32 = i32::MIN;
 
+/// Radius of the flat-array fast path used when histogramming codes or
+/// building symbol lookup tables: gradient residual codes concentrate
+/// near 0 (§Perf), so symbols in `[-FAST_RADIUS, FAST_RADIUS]` are
+/// counted with array indexing and only the rare outliers go through a
+/// `HashMap`.
+pub const FAST_RADIUS: i32 = 4096;
+
+/// Per-symbol frequency histogram of a quantization-code stream, sorted
+/// by symbol. This is the shared front door of the entropy stage: the
+/// Huffman table build, the rANS frequency normalization and the
+/// autotuner's coder chooser all consume it.
+pub fn code_histogram(codes: &[i32]) -> Vec<(i32, u64)> {
+    if codes.is_empty() {
+        return Vec::new();
+    }
+    let flat_len = (2 * FAST_RADIUS + 1) as usize;
+    let mut flat = vec![0u64; flat_len];
+    let mut overflow: std::collections::HashMap<i32, u64> = std::collections::HashMap::new();
+    for &c in codes {
+        if (-FAST_RADIUS..=FAST_RADIUS).contains(&c) {
+            flat[(c + FAST_RADIUS) as usize] += 1;
+        } else {
+            *overflow.entry(c).or_insert(0) += 1;
+        }
+    }
+    let mut freqs: Vec<(i32, u64)> = flat
+        .iter()
+        .enumerate()
+        .filter(|(_, &f)| f > 0)
+        .map(|(i, &f)| (i as i32 - FAST_RADIUS, f))
+        .collect();
+    freqs.extend(overflow);
+    freqs.sort_unstable_by_key(|&(s, _)| s);
+    freqs
+}
+
 /// Quantize residuals `e = data − pred` under absolute bound `delta`,
 /// producing codes + escapes and writing reconstructions to `recon`
 /// (`recon[i] = pred[i] + 2Δ·code` or the exact value when escaped).
@@ -188,6 +224,18 @@ mod tests {
         quantize(&data, &pred, 1e-6, &mut q, &mut recon);
         assert_eq!(q.codes[0], ESCAPE_CODE);
         assert_eq!(recon[0], 1e30);
+    }
+
+    #[test]
+    fn code_histogram_counts_and_sorts() {
+        assert!(code_histogram(&[]).is_empty());
+        let h = code_histogram(&[3, -1, 3, ESCAPE_CODE, 3, -1, 1 << 20]);
+        assert_eq!(
+            h,
+            vec![(ESCAPE_CODE, 1), (-1, 2), (3, 3), (1 << 20, 1)]
+        );
+        let total: u64 = h.iter().map(|&(_, c)| c).sum();
+        assert_eq!(total, 7);
     }
 
     #[test]

@@ -14,16 +14,24 @@
 //!
 //! | family                    | keys                                      |
 //! |---------------------------|-------------------------------------------|
-//! | `fedgec` (alias `ours`)   | `eb`, `beta`, `tau`, `full_batch`, `autotune` |
-//! | `sz3`                     | `eb`                                      |
+//! | `fedgec` (alias `ours`)   | `eb`, `beta`, `tau`, `full_batch`, `autotune`, `ec`, `backend` |
+//! | `sz3`                     | `eb`, `ec`, `backend`                     |
 //! | `qsgd`                    | `bits`, `seed`                            |
 //! | `topk`                    | `k`                                       |
 //! | `raw` (alias `none`)      | —                                         |
 //! | `topk+eblc`               | `k`, `eb`                                 |
 //! | `ef(<spec>)` (aliases `ef-topk`, `ef-qsgd`) | wraps any inner spec    |
 //!
-//! Examples: `fedgec:eb=rel1e-2,beta=0.9`, `qsgd:bits=5`, `topk:k=0.05`,
-//! `ef(qsgd:bits=5)`.
+//! Examples: `fedgec:eb=rel1e-2,beta=0.9`, `fedgec:eb=rel1e-2,ec=rans`,
+//! `qsgd:bits=5`, `topk:k=0.05`, `ef(qsgd:bits=5)`.
+//!
+//! The `ec` key selects the stage-3 entropy coder for the entropy-coded
+//! families (`huff` | `rans` | `raw`, see [`super::entropy`]); `huff` is
+//! the byte-compatible default and is omitted from the canonical form.
+//! The `backend` key selects the stage-4 lossless backend
+//! (`zstd[:level]` | `deflate` | `ownlz` | `none`, see
+//! [`super::lossless::Backend::from_name`]); `zstd` (level 3) is the
+//! default and is likewise omitted.
 //!
 //! `Display` renders the canonical form and `parse` accepts it back
 //! (`parse(spec.to_string()) == spec`), which is the serialized
@@ -34,6 +42,8 @@
 
 use std::fmt;
 
+use super::entropy::EntropyCoder;
+use super::lossless::Backend;
 use super::pipeline::{FedgecCodec, FedgecConfig};
 use super::quant::ErrorBound;
 use super::GradientCodec;
@@ -54,6 +64,8 @@ pub struct SpecDefaults {
     pub full_batch: bool,
     pub autotune: bool,
     pub topk: f64,
+    pub entropy: EntropyCoder,
+    pub backend: Backend,
 }
 
 impl Default for SpecDefaults {
@@ -67,6 +79,8 @@ impl Default for SpecDefaults {
             full_batch: false,
             autotune: false,
             topk: 0.05,
+            entropy: EntropyCoder::Huffman,
+            backend: Backend::default(),
         }
     }
 }
@@ -88,9 +102,17 @@ impl SpecDefaults {
 #[derive(Debug, Clone, PartialEq)]
 pub enum CodecSpec {
     /// The paper's gradient-aware EBLC.
-    Fedgec { eb: ErrorBound, beta: f32, tau: f64, full_batch: bool, autotune: bool },
+    Fedgec {
+        eb: ErrorBound,
+        beta: f32,
+        tau: f64,
+        full_batch: bool,
+        autotune: bool,
+        ec: EntropyCoder,
+        backend: Backend,
+    },
     /// Generic Lorenzo/interpolation EBLC (Table 4 comparator).
-    Sz3 { eb: ErrorBound },
+    Sz3 { eb: ErrorBound, ec: EntropyCoder, backend: Backend },
     /// Stochastic quantization (not error-bounded).
     Qsgd { bits: u8, seed: u64 },
     /// TopK sparsification.
@@ -121,13 +143,13 @@ pub const REGISTRY: &[CodecFamily] = &[
     CodecFamily {
         family: "fedgec",
         aliases: &["ours"],
-        example: "fedgec:eb=rel1e-2,beta=0.9,tau=0.5",
-        about: "gradient-aware EBLC (the paper's codec)",
+        example: "fedgec:eb=rel1e-2,beta=0.9,tau=0.5,ec=rans",
+        about: "gradient-aware EBLC (the paper's codec); ec=huff|rans|raw",
     },
     CodecFamily {
         family: "sz3",
         aliases: &[],
-        example: "sz3:eb=rel1e-2",
+        example: "sz3:eb=rel1e-2,ec=huff",
         about: "generic Lorenzo/interpolation EBLC baseline",
     },
     CodecFamily {
@@ -182,6 +204,15 @@ fn parse_eb(v: &str) -> crate::Result<ErrorBound> {
     } else {
         Ok(ErrorBound::Rel(parse_f64("eb", v)?))
     }
+}
+
+fn parse_ec(v: &str) -> crate::Result<EntropyCoder> {
+    EntropyCoder::from_name(v)
+        .ok_or_else(|| anyhow::anyhow!("codec spec: unknown entropy coder '{v}' (huff|rans|raw)"))
+}
+
+fn parse_backend(v: &str) -> crate::Result<Backend> {
+    Backend::from_name(v).map_err(|e| anyhow::anyhow!("codec spec: {e}"))
 }
 
 fn fmt_eb(eb: &ErrorBound) -> String {
@@ -243,6 +274,8 @@ impl CodecSpec {
                 let mut tau = d.tau;
                 let mut full_batch = d.full_batch;
                 let mut autotune = d.autotune;
+                let mut ec = d.entropy;
+                let mut backend = d.backend;
                 for (k, v) in kvs {
                     match k {
                         "eb" => eb = parse_eb(v)?,
@@ -250,20 +283,26 @@ impl CodecSpec {
                         "tau" => tau = parse_f64(k, v)?,
                         "full_batch" => full_batch = parse_bool(k, v)?,
                         "autotune" => autotune = parse_bool(k, v)?,
+                        "ec" => ec = parse_ec(v)?,
+                        "backend" => backend = parse_backend(v)?,
                         _ => return Err(unknown(k)),
                     }
                 }
-                Ok(CodecSpec::Fedgec { eb, beta, tau, full_batch, autotune })
+                Ok(CodecSpec::Fedgec { eb, beta, tau, full_batch, autotune, ec, backend })
             }
             "sz3" => {
                 let mut eb = d.error_bound;
+                let mut ec = d.entropy;
+                let mut backend = d.backend;
                 for (k, v) in kvs {
                     match k {
                         "eb" => eb = parse_eb(v)?,
+                        "ec" => ec = parse_ec(v)?,
+                        "backend" => backend = parse_backend(v)?,
                         _ => return Err(unknown(k)),
                     }
                 }
-                Ok(CodecSpec::Sz3 { eb })
+                Ok(CodecSpec::Sz3 { eb, ec, backend })
             }
             "qsgd" => {
                 let mut bits = d.qsgd_bits;
@@ -365,18 +404,22 @@ impl CodecSpec {
     /// mirror — they are symmetric objects).
     pub fn build(&self) -> Box<dyn GradientCodec> {
         match self {
-            CodecSpec::Fedgec { eb, beta, tau, full_batch, autotune } => {
+            CodecSpec::Fedgec { eb, beta, tau, full_batch, autotune, ec, backend } => {
                 Box::new(FedgecCodec::new(FedgecConfig {
                     error_bound: *eb,
                     beta: *beta,
                     tau: *tau,
                     full_batch: *full_batch,
                     autotune: *autotune,
+                    entropy: *ec,
+                    backend: *backend,
                     ..Default::default()
                 }))
             }
-            CodecSpec::Sz3 { eb } => Box::new(Sz3Codec::new(Sz3Config {
+            CodecSpec::Sz3 { eb, ec, backend } => Box::new(Sz3Codec::new(Sz3Config {
                 error_bound: *eb,
+                entropy: *ec,
+                backend: *backend,
                 ..Default::default()
             })),
             CodecSpec::Qsgd { bits, seed } => Box::new(QsgdCodec::new(*bits, *seed)),
@@ -398,8 +441,10 @@ impl CodecSpec {
                 tau: d.tau,
                 full_batch: d.full_batch,
                 autotune: d.autotune,
+                ec: d.entropy,
+                backend: d.backend,
             },
-            CodecSpec::Sz3 { eb: d.error_bound },
+            CodecSpec::Sz3 { eb: d.error_bound, ec: d.entropy, backend: d.backend },
             CodecSpec::Qsgd { bits: d.qsgd_bits, seed: d.qsgd_seed },
             CodecSpec::TopK { k: d.topk },
             CodecSpec::Raw,
@@ -409,6 +454,19 @@ impl CodecSpec {
                 bits: d.qsgd_bits,
                 seed: d.qsgd_seed,
             })),
+            // rANS twins of the entropy-coded families (same predictor
+            // path, different stage-3 coder) — so the registry-wide
+            // property suites exercise `ec=rans` end to end.
+            CodecSpec::Fedgec {
+                eb: d.error_bound,
+                beta: d.beta,
+                tau: d.tau,
+                full_batch: d.full_batch,
+                autotune: d.autotune,
+                ec: EntropyCoder::Rans,
+                backend: d.backend,
+            },
+            CodecSpec::Sz3 { eb: d.error_bound, ec: EntropyCoder::Rans, backend: d.backend },
         ]
     }
 
@@ -438,7 +496,7 @@ impl CodecSpec {
 impl fmt::Display for CodecSpec {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
-            CodecSpec::Fedgec { eb, beta, tau, full_batch, autotune } => {
+            CodecSpec::Fedgec { eb, beta, tau, full_batch, autotune, ec, backend } => {
                 write!(f, "fedgec:eb={},beta={beta},tau={tau}", fmt_eb(eb))?;
                 if *full_batch {
                     write!(f, ",full_batch=true")?;
@@ -446,9 +504,24 @@ impl fmt::Display for CodecSpec {
                 if *autotune {
                     write!(f, ",autotune=true")?;
                 }
+                if *ec != EntropyCoder::Huffman {
+                    write!(f, ",ec={}", ec.name())?;
+                }
+                if *backend != Backend::default() {
+                    write!(f, ",backend={}", backend.spec_name())?;
+                }
                 Ok(())
             }
-            CodecSpec::Sz3 { eb } => write!(f, "sz3:eb={}", fmt_eb(eb)),
+            CodecSpec::Sz3 { eb, ec, backend } => {
+                write!(f, "sz3:eb={}", fmt_eb(eb))?;
+                if *ec != EntropyCoder::Huffman {
+                    write!(f, ",ec={}", ec.name())?;
+                }
+                if *backend != Backend::default() {
+                    write!(f, ",backend={}", backend.spec_name())?;
+                }
+                Ok(())
+            }
             CodecSpec::Qsgd { bits, seed } => {
                 write!(f, "qsgd:bits={bits}")?;
                 if *seed != 0 {
@@ -481,18 +554,24 @@ mod tests {
     fn parses_full_forms() {
         let s = CodecSpec::parse("fedgec:eb=rel1e-2,beta=0.8,tau=0.6,autotune=true").unwrap();
         match s {
-            CodecSpec::Fedgec { eb, beta, tau, full_batch, autotune } => {
+            CodecSpec::Fedgec { eb, beta, tau, full_batch, autotune, ec, backend } => {
                 assert_eq!(eb, ErrorBound::Rel(1e-2));
                 assert!((beta - 0.8).abs() < 1e-6);
                 assert!((tau - 0.6).abs() < 1e-12);
                 assert!(!full_batch);
                 assert!(autotune);
+                assert_eq!(ec, EntropyCoder::Huffman);
+                assert_eq!(backend, Backend::default());
             }
             other => panic!("{other:?}"),
         }
         assert_eq!(
             CodecSpec::parse("sz3:eb=abs0.001").unwrap(),
-            CodecSpec::Sz3 { eb: ErrorBound::Abs(0.001) }
+            CodecSpec::Sz3 {
+                eb: ErrorBound::Abs(0.001),
+                ec: EntropyCoder::Huffman,
+                backend: Backend::default()
+            }
         );
         assert_eq!(
             CodecSpec::parse("qsgd:bits=8,seed=7").unwrap(),
@@ -509,8 +588,61 @@ mod tests {
     fn bare_eb_is_rel() {
         assert_eq!(
             CodecSpec::parse("sz3:eb=0.03").unwrap(),
-            CodecSpec::Sz3 { eb: ErrorBound::Rel(0.03) }
+            CodecSpec::Sz3 {
+                eb: ErrorBound::Rel(0.03),
+                ec: EntropyCoder::Huffman,
+                backend: Backend::default()
+            }
         );
+    }
+
+    #[test]
+    fn backend_key_parses_and_roundtrips() {
+        // backend=zstd:<level> threads Backend::from_name's validation
+        // into the user-facing grammar (value keeps its colon: the kv
+        // split is on the first '=').
+        match CodecSpec::parse("fedgec:backend=zstd:19").unwrap() {
+            CodecSpec::Fedgec { backend, .. } => assert_eq!(backend, Backend::Zstd(19)),
+            other => panic!("{other:?}"),
+        }
+        match CodecSpec::parse("sz3:backend=none").unwrap() {
+            CodecSpec::Sz3 { backend, .. } => assert_eq!(backend, Backend::None),
+            other => panic!("{other:?}"),
+        }
+        // Canonical form keeps non-default backends and reparses.
+        let s = CodecSpec::parse("fedgec:backend=zstd:19,ec=rans").unwrap();
+        assert!(s.to_string().contains("backend=zstd:19"));
+        assert_eq!(CodecSpec::parse(&s.to_string()).unwrap(), s);
+        // Default backend is omitted; bad levels and names are rejected.
+        assert!(!CodecSpec::parse("fedgec:backend=zstd").unwrap().to_string().contains("backend"));
+        assert!(CodecSpec::parse("fedgec:backend=zstd:99").is_err());
+        assert!(CodecSpec::parse("fedgec:backend=zstd:0").is_err());
+        assert!(CodecSpec::parse("sz3:backend=bzip2").is_err());
+        assert!(CodecSpec::parse("qsgd:backend=zstd").is_err(), "qsgd has no lossless stage");
+    }
+
+    #[test]
+    fn entropy_coder_key_parses_and_roundtrips() {
+        let s = CodecSpec::parse("fedgec:eb=rel1e-2,ec=rans").unwrap();
+        match &s {
+            CodecSpec::Fedgec { ec, .. } => assert_eq!(*ec, EntropyCoder::Rans),
+            other => panic!("{other:?}"),
+        }
+        // Canonical form keeps the non-default coder and reparses.
+        assert!(s.to_string().contains("ec=rans"));
+        assert_eq!(CodecSpec::parse(&s.to_string()).unwrap(), s);
+        assert_eq!(
+            CodecSpec::parse("sz3:ec=raw").unwrap(),
+            CodecSpec::Sz3 {
+                eb: ErrorBound::Rel(1e-2),
+                ec: EntropyCoder::Raw,
+                backend: Backend::default()
+            }
+        );
+        // The default coder is omitted from the canonical form.
+        assert!(!CodecSpec::parse("fedgec:ec=huff").unwrap().to_string().contains("ec="));
+        assert!(CodecSpec::parse("fedgec:ec=bogus").is_err());
+        assert!(CodecSpec::parse("qsgd:ec=rans").is_err(), "qsgd has no entropy stage");
     }
 
     #[test]
@@ -524,7 +656,9 @@ mod tests {
                 beta: 0.9,
                 tau: 0.5,
                 full_batch: false,
-                autotune: false
+                autotune: false,
+                ec: EntropyCoder::Huffman,
+                backend: Backend::default()
             }
         );
         // §5.3 pairing: eb 3e-2 ↔ 5 bits.

@@ -43,12 +43,14 @@ pub fn build_codec(cfg: &RunConfig) -> crate::Result<Box<dyn GradientCodec>> {
 fn build_codec_hlo(cfg: &RunConfig, rt: Rc<RefCell<crate::runtime::Runtime>>) -> crate::Result<Box<dyn GradientCodec>> {
     let spec = cfg.codec_spec()?;
     let fc = match spec {
-        CodecSpec::Fedgec { eb, beta, tau, full_batch, autotune } => FedgecConfig {
+        CodecSpec::Fedgec { eb, beta, tau, full_batch, autotune, ec, backend } => FedgecConfig {
             error_bound: eb,
             beta,
             tau,
             full_batch,
             autotune,
+            entropy: ec,
+            backend,
             ..Default::default()
         },
         other => anyhow::bail!("HLO engine requires the fedgec codec, got {other}"),

@@ -88,6 +88,34 @@ impl Table {
         std::fs::write(&path, out)?;
         Ok(path)
     }
+
+    /// Save as `results/BENCH_<name>.json` — the machine-readable twin of
+    /// the CSV that CI's bench-smoke job uploads as a workflow artifact,
+    /// so the perf/ratio trajectory is tracked per-PR.
+    pub fn save_json(&self, name: &str) -> crate::Result<PathBuf> {
+        use crate::util::json::Json;
+        use std::collections::BTreeMap;
+        let dir = results_dir();
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("BENCH_{name}.json"));
+        let mut obj = BTreeMap::new();
+        obj.insert("title".to_string(), Json::Str(self.title.clone()));
+        obj.insert(
+            "headers".to_string(),
+            Json::Arr(self.headers.iter().map(|h| Json::Str(h.clone())).collect()),
+        );
+        obj.insert(
+            "rows".to_string(),
+            Json::Arr(
+                self.rows
+                    .iter()
+                    .map(|r| Json::Arr(r.iter().map(|c| Json::Str(c.clone())).collect()))
+                    .collect(),
+            ),
+        );
+        std::fs::write(&path, Json::Obj(obj).to_string())?;
+        Ok(path)
+    }
 }
 
 /// Render a unified per-layer [`crate::compress::CodecReport`] as a
@@ -146,6 +174,10 @@ pub fn fmt_duration(d: std::time::Duration) -> String {
 mod tests {
     use super::*;
 
+    /// Serializes the tests that mutate the process-global
+    /// `FEDGEC_RESULTS` env var (test threads run concurrently).
+    static ENV_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
     #[test]
     fn markdown_shape() {
         let mut t = Table::new("demo", &["a", "bb"]);
@@ -165,13 +197,31 @@ mod tests {
 
     #[test]
     fn csv_escaping() {
+        let _guard = ENV_LOCK.lock().unwrap();
         let mut t = Table::new("demo", &["a"]);
         t.row(vec!["x,y".into()]);
         std::env::set_var("FEDGEC_RESULTS", std::env::temp_dir().join("fedgec_test_results"));
         let p = t.save_csv("escape_test").unwrap();
+        std::env::remove_var("FEDGEC_RESULTS");
         let content = std::fs::read_to_string(p).unwrap();
         assert!(content.contains("\"x,y\""));
+    }
+
+    #[test]
+    fn save_json_emits_parseable_bench_artifact() {
+        let _guard = ENV_LOCK.lock().unwrap();
+        let mut t = Table::new("json demo", &["a", "b"]);
+        t.row(vec!["x \"q\"".into(), "2".into()]);
+        std::env::set_var("FEDGEC_RESULTS", std::env::temp_dir().join("fedgec_test_results"));
+        let p = t.save_json("json_demo").unwrap();
         std::env::remove_var("FEDGEC_RESULTS");
+        assert!(p.file_name().unwrap().to_str().unwrap().starts_with("BENCH_"));
+        let content = std::fs::read_to_string(p).unwrap();
+        let parsed = crate::util::json::Json::parse(&content).unwrap();
+        assert_eq!(parsed.get("title").and_then(|j| j.as_str()), Some("json demo"));
+        assert_eq!(parsed.get("headers").and_then(|j| j.as_arr()).unwrap().len(), 2);
+        let rows = parsed.get("rows").and_then(|j| j.as_arr()).unwrap();
+        assert_eq!(rows[0].as_arr().unwrap()[0].as_str(), Some("x \"q\""));
     }
 
     #[test]

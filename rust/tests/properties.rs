@@ -213,6 +213,71 @@ fn prop_every_registry_spec_roundtrips_through_frames() {
 }
 
 #[test]
+fn prop_rans_and_huffman_specs_decode_identically() {
+    // Registry-wide rANS↔Huffman agreement: for every entropy-coded
+    // family, the `ec=rans` twin must reconstruct bit-identically to the
+    // `ec=huff` twin — the entropy stage is lossless, so any divergence
+    // is a coder bug. Adversarial shapes (constant layers → single-symbol
+    // streams, huge outliers → escape-heavy streams) ride in through
+    // arb_model/arb_gradient.
+    prop::check("rans/huff spec agreement", 25, |rng| {
+        let eb = prop::arb_error_bound(rng);
+        let d = SpecDefaults::with_rel_eb(eb);
+        let base = arb_model(rng);
+        let ms = metas(&base);
+        for family in ["fedgec", "sz3"] {
+            let mut c_h = CodecSpec::parse_with(&format!("{family}:ec=huff"), &d)
+                .map_err(|e| e.to_string())?
+                .build();
+            let mut c_r = CodecSpec::parse_with(&format!("{family}:ec=rans"), &d)
+                .map_err(|e| e.to_string())?
+                .build();
+            let mut s_h = CodecSpec::parse_with(&format!("{family}:ec=huff"), &d)
+                .map_err(|e| e.to_string())?
+                .build();
+            let mut s_r = CodecSpec::parse_with(&format!("{family}:ec=rans"), &d)
+                .map_err(|e| e.to_string())?
+                .build();
+            for round in 0..2 {
+                let mut g = base.clone();
+                for l in &mut g.layers {
+                    for v in &mut l.data {
+                        *v *= 1.0 + 0.05 * round as f32;
+                    }
+                }
+                let (ph, rep_h) =
+                    c_h.compress_with_report(&g).map_err(|e| format!("{family} huff: {e}"))?;
+                let (pr, rep_r) =
+                    c_r.compress_with_report(&g).map_err(|e| format!("{family} rans: {e}"))?;
+                let rh = s_h.decompress(&ph, &ms).map_err(|e| format!("{family} huff: {e}"))?;
+                let rr = s_r.decompress(&pr, &ms).map_err(|e| format!("{family} rans: {e}"))?;
+                for (a, b) in rh.layers.iter().zip(&rr.layers) {
+                    for (x, y) in a.data.iter().zip(&b.data) {
+                        if x.to_bits() != y.to_bits() {
+                            return Err(format!(
+                                "{family} round {round} layer {}: {x} != {y}",
+                                a.meta.name
+                            ));
+                        }
+                    }
+                }
+                // The size-checked rANS selector never loses a byte to
+                // Huffman at the entropy stage, on any layer.
+                for (h, r) in rep_h.layers.iter().zip(&rep_r.layers) {
+                    if r.entropy_bytes > h.entropy_bytes {
+                        return Err(format!(
+                            "{family} layer {}: rans {} B > huff {} B",
+                            h.name, r.entropy_bytes, h.entropy_bytes
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_corrupted_payloads_never_panic() {
     prop::check("corruption safety", 40, |rng| {
         let g = arb_model(rng);
