@@ -1,14 +1,21 @@
 //! End-to-end FL driver — the full three-layer system on a real workload:
-//! a micro-CNN (JAX → HLO → PJRT, real gradients) trained by federated
-//! averaging over synthetic CIFAR-10-shaped clients, with every upload
-//! compressed by FedGEC, logging the loss curve, accuracy, compression
-//! ratio, and the simulated communication time vs the uncompressed and
-//! SZ3 baselines at 10 Mbps.
+//! a micro-CNN (JAX → HLO → PJRT, real gradients — or the native trainer
+//! when no artifacts are built) trained by federated averaging over
+//! synthetic CIFAR-10-shaped clients under **partial participation**
+//! (half the fleet per round by default), with every upload compressed
+//! by FedGEC, logging the loss curve, accuracy, compression ratio, the
+//! server state-store occupancy trajectory, and the simulated
+//! communication time vs the uncompressed baseline at 10 Mbps.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --offline --example fl_e2e
-//! # knobs: FEDGEC_ROUNDS, FEDGEC_CODEC, FEDGEC_EB, FEDGEC_ENGINE=hlo
+//! # knobs: FEDGEC_ROUNDS, FEDGEC_CODEC, FEDGEC_EB, FEDGEC_ENGINE=hlo,
+//! #        FEDGEC_MODEL, FEDGEC_CLIENTS, FEDGEC_PARTICIPATION,
+//! #        FEDGEC_STORE_BUDGET_MB
 //! ```
+//!
+//! Emits `results/BENCH_fl_e2e_state_memory.json` — the per-round
+//! state-memory trajectory captured by the CI bench-smoke job.
 //!
 //! The run is recorded in EXPERIMENTS.md §E2E.
 
@@ -29,10 +36,16 @@ fn main() -> fedgec::Result<()> {
         Ok("hlo") => EngineKind::Hlo,
         _ => EngineKind::Native,
     };
+    // HLO artifacts are a build step; fall back to the native trainer
+    // when they are absent (e.g. the CI bench-smoke job).
+    let have_artifacts =
+        fedgec::runtime::Runtime::default_dir().join("manifest.json").exists();
+    let default_model = if have_artifacts { "micro_resnet" } else { "native" };
+    let model: String = env_or("FEDGEC_MODEL", default_model.to_string());
     let cfg = RunConfig {
-        model: "micro_resnet".into(),
+        model: model.clone(),
         dataset: DatasetSpec::Cifar10,
-        n_clients: 4,
+        n_clients: env_or("FEDGEC_CLIENTS", 8),
         rounds,
         local_lr: 0.05,
         server_lr: 0.05, // == local_lr ⇒ exact FedAvg (see config.rs)
@@ -43,15 +56,62 @@ fn main() -> fedgec::Result<()> {
         eval_every: 5,
         seed: 42,
         class_skew: 0.5,
+        // Partial participation: half the clients train per round; the
+        // rest keep their mirror state parked in the server's store.
+        participation: env_or("FEDGEC_PARTICIPATION", 0.5),
+        store_budget_mb: env_or("FEDGEC_STORE_BUDGET_MB", 0.0),
         ..Default::default()
     };
     println!(
-        "FL E2E: micro_resnet on synthetic CIFAR-10, {} clients x {} rounds, codec={} eb={} engine={:?}",
-        cfg.n_clients, cfg.rounds, cfg.codec, eb, engine
+        "FL E2E: {} on synthetic CIFAR-10, {} clients x {} rounds ({}% participating), \
+         codec={} eb={} engine={:?}",
+        cfg.model,
+        cfg.n_clients,
+        cfg.rounds,
+        (cfg.participation * 100.0) as u32,
+        cfg.codec,
+        eb,
+        engine
     );
-    println!("(gradients are REAL: JAX train_epoch lowered to HLO, executed via PJRT from Rust)\n");
+    if model != "native" {
+        println!(
+            "(gradients are REAL: JAX train_epoch lowered to HLO, executed via PJRT from Rust)"
+        );
+    }
+    println!();
     let summary = run_local(&cfg)?;
     print_summary(&cfg, &summary);
+
+    // State-memory trajectory: how many mirror states the server store
+    // holds (and their bytes) as partial participation churns through
+    // the fleet — saved as a BENCH_*.json artifact for CI.
+    let mut mem = fedgec::metrics::Table::new(
+        "server state-store occupancy per round (partial participation)",
+        &["round", "participants", "resyncs", "store clients", "store KB", "CR"],
+    );
+    for r in &summary.rounds {
+        mem.row(vec![
+            r.round.to_string(),
+            r.participants.to_string(),
+            r.resyncs.to_string(),
+            r.store_clients.to_string(),
+            format!("{:.1}", r.store_bytes as f64 / 1e3),
+            format!("{:.2}", r.ratio()),
+        ]);
+    }
+    mem.print();
+    mem.save_json("fl_e2e_state_memory")?;
+    let peak = summary.rounds.iter().map(|r| r.store_bytes).max().unwrap_or(0);
+    println!(
+        "peak store occupancy {:.1} KB across {} clients (budget: {})",
+        peak as f64 / 1e3,
+        cfg.n_clients,
+        if cfg.store_budget_mb > 0.0 {
+            format!("{} MB", cfg.store_budget_mb)
+        } else {
+            "unbounded".into()
+        }
+    );
 
     // Communication-time comparison vs uncompressed at the same link.
     let total_raw = summary.total_raw();

@@ -54,18 +54,21 @@ fn main() -> fedgec::Result<()> {
     let proto = NativeNet::new(10, 3);
     let init =
         vec![proto.conv_w.clone(), proto.conv_b.clone(), proto.fc_w.clone(), proto.fc_b.clone()];
+    // One stateless decode engine for the whole federation; per-client
+    // predictor state lives in the server's keyed state store.
     let spec = CodecSpec::parse_with("fedgec", &SpecDefaults::with_rel_eb(eb))?;
-    let codecs: Vec<_> = (0..n_clients).map(|_| spec.build()).collect();
-    let mut server = Server::new(init, proto.layer_metas(), 0.2, codecs);
+    let mut server = Server::with_engine(init, proto.layer_metas(), 0.2, spec.build_engine());
     server.wait_hellos(&mut channels)?;
     for r in 0..rounds {
         let t0 = std::time::Instant::now();
         let stats = server.run_round(&mut channels)?;
         println!(
-            "round {r}: loss {:.4} | CR {:.2} | payload {:>6.1} KB | wall {}",
+            "round {r}: loss {:.4} | CR {:.2} | payload {:>6.1} KB | states {} ({:.0} KB) | wall {}",
             stats.mean_loss,
             stats.ratio(),
             stats.payload_bytes as f64 / 1e3,
+            stats.store_clients,
+            stats.store_bytes as f64 / 1e3,
             fedgec::metrics::fmt_duration(t0.elapsed()),
         );
     }

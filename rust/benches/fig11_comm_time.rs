@@ -39,17 +39,24 @@ fn measure(
     eb: f64,
     rounds: usize,
 ) -> Measured {
+    use fedgec::compress::state::CodecState;
+    use fedgec::compress::CodecEngine;
     let metas = arch.layers(10);
     let mut gen = GradGen::new(metas.clone(), GradGenConfig::for_dataset(DatasetSpec::Cifar10), 4);
     let mut client = build(codec_name, eb);
-    let mut server = build(codec_name, eb);
+    // Server side: the production shape — one stateless engine plus an
+    // explicit per-client state handle.
+    let mut engine = CodecSpec::parse_with(codec_name, &SpecDefaults::with_rel_eb(eb))
+        .unwrap()
+        .build_engine();
+    let mut state = CodecState::default();
     let mut m = Measured { raw: 0, payload: 0, codec_time: Duration::ZERO };
     for _ in 0..rounds {
         let g = gen.next_round();
         m.raw += g.byte_size();
         let t0 = std::time::Instant::now();
         let p = client.compress(&g).unwrap();
-        server.decompress(&p, &metas).unwrap();
+        engine.decode_payload(&p, &metas, &mut state).unwrap();
         m.codec_time += t0.elapsed();
         m.payload += p.len();
     }

@@ -400,6 +400,26 @@ impl GradientCodec for Sz3Codec {
     fn reset(&mut self) {}
 }
 
+/// SZ3 has no cross-round state to externalize — the engine form *is*
+/// the codec (that statelessness is exactly what the paper's Fig. 3
+/// shows costing ratio on gradients). The explicit state handle is
+/// accepted and ignored so the server can swap codec families without
+/// changing its store plumbing.
+impl crate::compress::engine::CodecEngine for Sz3Codec {
+    fn name(&self) -> &'static str {
+        "sz3"
+    }
+
+    fn decode_frame(
+        &mut self,
+        frame: &Frame,
+        meta: &LayerMeta,
+        _state: &mut crate::compress::state::CodecState,
+    ) -> crate::Result<(LayerGrad, LayerReport)> {
+        GradientCodec::decode_frame(self, frame, meta)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -74,6 +74,15 @@ pub fn pick_entropy_coder_from_hist(
 }
 
 /// Controller for the client-side τ.
+///
+/// Ownership note for the externalized-state world: τ controllers are
+/// **client-local** state, deliberately *not* part of the mirrored
+/// [`super::state::CodecState`] (the bitmap already tells the server
+/// which kernels were predicted), so they never enter the server's
+/// `StateStore`, never count against its budget, and never appear in a
+/// state fingerprint. A `StateResync` cold-start clears them with the
+/// rest of `GradientCodec::reset`. β auto-tuning by contrast derives
+/// deterministically from the mirrored `|g̃|` history on both sides.
 #[derive(Debug, Clone)]
 pub struct TauController {
     pub tau: f64,

@@ -1,0 +1,136 @@
+//! Stateless codec engines: the decode half of a [`GradientCodec`] with
+//! the cross-round predictor state **externalized**.
+//!
+//! A [`CodecEngine`] owns configuration and scratch only — never
+//! per-client mirror state. Every decode call takes an explicit
+//! [`CodecState`] handle, so one engine instance serves any number of
+//! clients: the parameter server holds *one* engine plus a bounded
+//! [`crate::compress::store::StateStore`] instead of one mirrored codec
+//! object per client.
+//!
+//! Client-side compressors keep the convenient stateful
+//! [`GradientCodec`] shape (one client owns exactly one state); the
+//! engine split matters where states fan out — the server.
+
+use super::frame::{self, CodecReport, Frame, LayerReport};
+use super::state::CodecState;
+use super::GradientCodec;
+use crate::tensor::{LayerGrad, LayerMeta, ModelGrad};
+
+/// A stateless decode engine. `&mut self` covers scratch buffers and
+/// attached predict backends (e.g. the PJRT/HLO engine), not client
+/// state — that arrives through the `state` parameter of every call.
+pub trait CodecEngine: Send {
+    /// Codec family name (matches the paired `GradientCodec::name`).
+    fn name(&self) -> &'static str;
+
+    /// Whether decoding reads/writes cross-round state at all. Stateless
+    /// families (sz3, qsgd, topk, raw) return `false`; the server then
+    /// skips the store and the epoch handshake entirely.
+    fn stateful(&self) -> bool {
+        false
+    }
+
+    /// Decode one frame against the given client's state (the frame's
+    /// `index` selects the per-layer slot).
+    fn decode_frame(
+        &mut self,
+        frame: &Frame,
+        meta: &LayerMeta,
+        state: &mut CodecState,
+    ) -> crate::Result<(LayerGrad, LayerReport)>;
+
+    /// Decode a whole monolithic payload against one client's state.
+    fn decode_payload(
+        &mut self,
+        payload: &[u8],
+        metas: &[LayerMeta],
+        state: &mut CodecState,
+    ) -> crate::Result<(ModelGrad, CodecReport)> {
+        let frames = frame::payload_to_frames(payload)?;
+        anyhow::ensure!(
+            frames.len() == metas.len(),
+            "payload has {} layers, expected {}",
+            frames.len(),
+            metas.len()
+        );
+        let mut report = CodecReport::new(self.name());
+        let mut decoded = Vec::with_capacity(frames.len());
+        for (i, (f, meta)) in frames.iter().zip(metas).enumerate() {
+            anyhow::ensure!(f.index as usize == i, "frame {} out of order ({})", i, f.index);
+            let (layer, rep) = self.decode_frame(f, meta, state)?;
+            report.push(rep);
+            decoded.push(layer);
+        }
+        Ok((ModelGrad { layers: decoded }, report))
+    }
+}
+
+/// Blanket engine over any codec whose decode path carries no
+/// cross-round state (sz3, qsgd, topk, raw, topk+eblc, and the server
+/// side of `ef(...)`): the explicit state handle is ignored.
+pub struct StatelessEngine {
+    inner: Box<dyn GradientCodec>,
+}
+
+impl StatelessEngine {
+    pub fn new(inner: Box<dyn GradientCodec>) -> Self {
+        StatelessEngine { inner }
+    }
+}
+
+impl CodecEngine for StatelessEngine {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn decode_frame(
+        &mut self,
+        frame: &Frame,
+        meta: &LayerMeta,
+        _state: &mut CodecState,
+    ) -> crate::Result<(LayerGrad, LayerReport)> {
+        self.inner.decode_frame(frame, meta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::RawCodec;
+    use crate::compress::GradientCodec;
+    use crate::tensor::LayerMeta;
+
+    #[test]
+    fn stateless_engine_matches_codec_decode() {
+        let g = ModelGrad {
+            layers: vec![
+                LayerGrad::new(LayerMeta::other("a", 3), vec![1.0, -2.0, 3.0]),
+                LayerGrad::new(LayerMeta::other("b", 2), vec![0.5, 0.25]),
+            ],
+        };
+        let metas: Vec<LayerMeta> = g.layers.iter().map(|l| l.meta.clone()).collect();
+        let payload = RawCodec.compress(&g).unwrap();
+        let mut engine = StatelessEngine::new(Box::new(RawCodec));
+        let mut state = CodecState::default();
+        let (back, report) = engine.decode_payload(&payload, &metas, &mut state).unwrap();
+        assert_eq!(back.layers[0].data, g.layers[0].data);
+        assert_eq!(back.layers[1].data, g.layers[1].data);
+        assert_eq!(report.layers.len(), 2);
+        assert!(!engine.stateful());
+        // The untouched state stays cold.
+        assert!(state.layers.is_empty());
+    }
+
+    #[test]
+    fn engine_payload_layer_count_checked() {
+        let g = ModelGrad {
+            layers: vec![LayerGrad::new(LayerMeta::other("a", 2), vec![1.0, 2.0])],
+        };
+        let metas: Vec<LayerMeta> = g.layers.iter().map(|l| l.meta.clone()).collect();
+        let payload = RawCodec.compress(&g).unwrap();
+        let mut engine = StatelessEngine::new(Box::new(RawCodec));
+        let mut state = CodecState::default();
+        assert!(engine.decode_payload(&payload, &metas[..0], &mut state).is_err());
+    }
+}

@@ -16,6 +16,7 @@
 
 pub mod autotune;
 pub mod blob;
+pub mod engine;
 pub mod entropy;
 pub mod frame;
 pub mod fused;
@@ -28,9 +29,13 @@ pub mod quant;
 pub mod session;
 pub mod spec;
 pub mod state;
+pub mod store;
 
+pub use engine::CodecEngine;
 pub use entropy::EntropyCoder;
 pub use frame::{CodecReport, Frame, LayerReport};
+pub use state::{ClientState, StateEpoch};
+pub use store::{ClientId, StateStore};
 
 use crate::tensor::{LayerGrad, LayerMeta, ModelGrad};
 
@@ -77,8 +82,17 @@ pub trait GradientCodec: Send {
     /// Human-readable codec name for reports.
     fn name(&self) -> &'static str;
 
-    /// Reset all cross-round state (new training run).
+    /// Reset all cross-round state (new training run, or a
+    /// `StateResync` cold-start ordered by the server).
     fn reset(&mut self);
+
+    /// Fingerprint of the *mirrored* cross-round state — what the
+    /// `StateCheck` handshake compares against the server's stored copy.
+    /// Stateless codecs (and codecs whose only state is client-local,
+    /// like error feedback's residual) report the cold fingerprint.
+    fn state_fingerprint(&self) -> u64 {
+        state::CodecState::default().fingerprint()
+    }
 
     // ── Blanket whole-model adapters. ──
 

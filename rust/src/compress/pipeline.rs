@@ -350,6 +350,57 @@ fn decompress_layer_impl(
     Ok((recon, report))
 }
 
+/// The stateless decode engine of the FedGEC codec: configuration (plus
+/// an optional PJRT/HLO predict backend) only — per-client predictor
+/// state arrives explicitly with every call, so one engine serves an
+/// entire federation (the server pairs it with a
+/// [`crate::compress::store::StateStore`]).
+pub struct FedgecEngine {
+    pub cfg: FedgecConfig,
+    /// Optional PJRT/HLO predict engine; `None` ⇒ native fused path.
+    pub engine: Option<Box<dyn PredictBackend>>,
+}
+
+impl FedgecEngine {
+    pub fn new(cfg: FedgecConfig) -> Self {
+        FedgecEngine { cfg, engine: None }
+    }
+
+    pub fn with_engine(cfg: FedgecConfig, engine: Box<dyn PredictBackend>) -> Self {
+        FedgecEngine { cfg, engine: Some(engine) }
+    }
+}
+
+impl crate::compress::engine::CodecEngine for FedgecEngine {
+    fn name(&self) -> &'static str {
+        "fedgec"
+    }
+
+    fn stateful(&self) -> bool {
+        true
+    }
+
+    fn decode_frame(
+        &mut self,
+        frame: &Frame,
+        meta: &LayerMeta,
+        state: &mut CodecState,
+    ) -> crate::Result<(LayerGrad, LayerReport)> {
+        let idx = frame.index as usize;
+        state.ensure(idx + 1);
+        let section = lossless::decompress(&frame.payload)?;
+        let (data, mut report) = decompress_layer_impl(
+            &self.cfg,
+            meta,
+            &section,
+            &mut state.layers[idx],
+            self.engine.as_deref_mut(),
+        )?;
+        report.compressed_bytes = frame.wire_size();
+        Ok((LayerGrad::new(meta.clone(), data), report))
+    }
+}
+
 impl GradientCodec for FedgecCodec {
     fn begin(&mut self, n_layers: usize) -> crate::Result<()> {
         self.state.ensure(n_layers);
@@ -434,6 +485,10 @@ impl GradientCodec for FedgecCodec {
     fn reset(&mut self) {
         self.state.reset();
         self.tau_ctrl.clear();
+    }
+
+    fn state_fingerprint(&self) -> u64 {
+        self.state.fingerprint()
     }
 }
 
@@ -713,6 +768,35 @@ mod tests {
                 }
             }
             assert_eq!(huff.state.fingerprint(), rans.state.fingerprint());
+        }
+    }
+
+    #[test]
+    fn engine_decode_matches_mirrored_codec() {
+        // The stateless engine + external state must reproduce the old
+        // one-mirror-per-client decode bit for bit, including the state
+        // evolution across rounds.
+        use crate::compress::engine::CodecEngine;
+        let mut rng = Rng::new(41);
+        let mut client = FedgecCodec::new(FedgecConfig::default());
+        let mut mirror = FedgecCodec::new(FedgecConfig::default());
+        let mut engine = FedgecEngine::new(FedgecConfig::default());
+        let mut state = CodecState::default();
+        assert!(engine.stateful());
+        for round in 0..4 {
+            let grads = make_grads(&mut rng, 1.0 / (1.0 + round as f32 * 0.25));
+            let payload = client.compress(&grads).unwrap();
+            let via_mirror = mirror.decompress(&payload, &metas(&grads)).unwrap();
+            let (via_engine, report) =
+                engine.decode_payload(&payload, &metas(&grads), &mut state).unwrap();
+            for (a, b) in via_mirror.layers.iter().zip(&via_engine.layers) {
+                for (x, y) in a.data.iter().zip(&b.data) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "round {round}");
+                }
+            }
+            assert_eq!(report.layers.len(), grads.layers.len());
+            assert_eq!(state.fingerprint(), mirror.state.fingerprint(), "round {round}");
+            assert_eq!(state.fingerprint(), client.state_fingerprint(), "round {round}");
         }
     }
 

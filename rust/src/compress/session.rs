@@ -9,7 +9,9 @@
 //! The whole-model entry points (`GradientCodec::compress` /
 //! `::decompress`) are blanket adapters over the same machinery.
 
+use super::engine::CodecEngine;
 use super::frame::{CodecReport, Frame, LayerReport};
+use super::state::CodecState;
 use super::GradientCodec;
 use crate::tensor::{LayerGrad, LayerMeta, ModelGrad};
 use crate::util::threadpool;
@@ -92,6 +94,64 @@ impl<'c> DecodeSession<'c> {
             self.next
         );
         let (layer, report) = self.codec.decode_frame(frame, meta)?;
+        self.report.push(report);
+        self.next += 1;
+        Ok(layer)
+    }
+
+    pub fn decoded(&self) -> usize {
+        self.next
+    }
+
+    pub fn finish(self) -> crate::Result<CodecReport> {
+        anyhow::ensure!(
+            self.next == self.n_layers,
+            "decode session closed after {} of {} frames",
+            self.next,
+            self.n_layers
+        );
+        Ok(self.report)
+    }
+}
+
+/// One round's decoder session over a stateless [`CodecEngine`] and an
+/// explicitly checked-out client state — the server-side mirror in the
+/// externalized-state world. Same ordering/report discipline as
+/// [`DecodeSession`], different state ownership.
+pub struct EngineDecodeSession<'e> {
+    engine: &'e mut dyn CodecEngine,
+    state: &'e mut CodecState,
+    report: CodecReport,
+    n_layers: usize,
+    next: usize,
+}
+
+impl<'e> EngineDecodeSession<'e> {
+    pub fn new(
+        engine: &'e mut dyn CodecEngine,
+        state: &'e mut CodecState,
+        n_layers: usize,
+    ) -> Self {
+        let report = CodecReport::new(engine.name());
+        EngineDecodeSession { engine, state, report, n_layers, next: 0 }
+    }
+
+    /// Decode the next frame; frames must arrive in model order and carry
+    /// the matching layer index.
+    pub fn decode_frame(&mut self, frame: &Frame, meta: &LayerMeta) -> crate::Result<LayerGrad> {
+        anyhow::ensure!(
+            self.next < self.n_layers,
+            "decode session: frame {} past declared {}",
+            self.next,
+            self.n_layers
+        );
+        anyhow::ensure!(
+            frame.index as usize == self.next,
+            "decode session: frame index {} != expected {}",
+            frame.index,
+            self.next
+        );
+        let (layer, report) = self.engine.decode_frame(frame, meta, self.state)?;
         self.report.push(report);
         self.next += 1;
         Ok(layer)
@@ -203,6 +263,32 @@ mod tests {
         frames.swap(0, 1);
         let mut dec = RawCodec;
         assert!(decode_frames(&mut dec, &frames, &metas).is_err());
+    }
+
+    #[test]
+    fn engine_session_roundtrips_with_external_state() {
+        use crate::compress::engine::StatelessEngine;
+        let g = model();
+        let metas: Vec<LayerMeta> = g.layers.iter().map(|l| l.meta.clone()).collect();
+        let mut enc = RawCodec;
+        let mut session = EncodeSession::new(&mut enc, 2).unwrap();
+        let frames: Vec<Frame> =
+            g.layers.iter().map(|l| session.encode_layer(l).unwrap()).collect();
+        let mut engine = StatelessEngine::new(Box::new(RawCodec));
+        let mut state = CodecState::default();
+        let mut dec = EngineDecodeSession::new(&mut engine, &mut state, 2);
+        for (f, m) in frames.iter().zip(&metas) {
+            dec.decode_frame(f, m).unwrap();
+        }
+        assert_eq!(dec.decoded(), 2);
+        let report = dec.finish().unwrap();
+        assert_eq!(report.total_raw(), g.byte_size());
+        // Out-of-order frames rejected, unfinished sessions error.
+        let mut dec = EngineDecodeSession::new(&mut engine, &mut state, 2);
+        assert!(dec.decode_frame(&frames[1], &metas[1]).is_err());
+        let mut dec = EngineDecodeSession::new(&mut engine, &mut state, 2);
+        dec.decode_frame(&frames[0], &metas[0]).unwrap();
+        assert!(dec.finish().is_err());
     }
 
     #[test]

@@ -430,6 +430,39 @@ impl CodecSpec {
         }
     }
 
+    /// Build the server-side **stateless decode engine** for this spec.
+    /// Unlike [`CodecSpec::build`] (one stateful object per peer), one
+    /// engine serves every client: per-client predictor state is fetched
+    /// from a [`crate::compress::store::StateStore`] and passed into each
+    /// decode call. Error feedback is a client-side mechanism, so its
+    /// engine is simply the inner codec's engine.
+    pub fn build_engine(&self) -> Box<dyn crate::compress::engine::CodecEngine> {
+        use crate::compress::engine::StatelessEngine;
+        use crate::compress::pipeline::FedgecEngine;
+        match self {
+            CodecSpec::Fedgec { eb, beta, tau, full_batch, autotune, ec, backend } => {
+                Box::new(FedgecEngine::new(FedgecConfig {
+                    error_bound: *eb,
+                    beta: *beta,
+                    tau: *tau,
+                    full_batch: *full_batch,
+                    autotune: *autotune,
+                    entropy: *ec,
+                    backend: *backend,
+                    ..Default::default()
+                }))
+            }
+            CodecSpec::Sz3 { eb, ec, backend } => Box::new(Sz3Codec::new(Sz3Config {
+                error_bound: *eb,
+                entropy: *ec,
+                backend: *backend,
+                ..Default::default()
+            })),
+            CodecSpec::ErrorFeedback(inner) => inner.build_engine(),
+            other => Box::new(StatelessEngine::new(other.build())),
+        }
+    }
+
     /// One default spec per registry family (used by the exhaustive
     /// round-trip property tests). Error-feedback appears with both inner
     /// codecs the old factory shipped.
@@ -685,6 +718,20 @@ mod tests {
         for spec in CodecSpec::registry_specs(&d) {
             let codec = spec.build();
             assert!(!codec.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn builds_engine_for_every_registry_spec() {
+        // build_engine: statefulness matches the spec's stateless()
+        // classification (EF's server side is pass-through, hence
+        // stateless even though the spec as a whole is not).
+        let d = SpecDefaults::default();
+        for spec in CodecSpec::registry_specs(&d) {
+            let engine = spec.build_engine();
+            assert!(!engine.name().is_empty(), "{spec}");
+            let expect_stateful = matches!(spec, CodecSpec::Fedgec { .. });
+            assert_eq!(engine.stateful(), expect_stateful, "{spec}");
         }
     }
 

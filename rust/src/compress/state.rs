@@ -3,6 +3,16 @@
 //! Both sides update their state **only** from data derivable from the
 //! payload (reconstructed gradients), so after every round the two copies
 //! are bit-identical — asserted by the `state_sync` integration test.
+//!
+//! Ownership: the *client* keeps its state inside its codec object (one
+//! client, one state). The *server* no longer mirrors one codec per
+//! client; it runs a stateless [`crate::compress::engine::CodecEngine`]
+//! and fetches each client's [`ClientState`] per round from a
+//! [`crate::compress::store::StateStore`] keyed by stable client id.
+//! Every state carries a [`StateEpoch`] `(rounds, fingerprint)` so the
+//! two sides can detect divergence (eviction, dropout, cold rejoin) and
+//! deterministically reset to the codec's round-1 path instead of
+//! silently drifting apart.
 
 /// State for one layer.
 #[derive(Debug, Clone, Default)]
@@ -53,7 +63,66 @@ impl LayerState {
         self.prev_prev_abs = None;
     }
 
-    /// Digest of the state for sync checks (cheap structural fingerprint).
+    /// A layer that has never absorbed a round (or was reset). Empty
+    /// layers contribute nothing to the state fingerprint, so a reset
+    /// state and a freshly allocated one are indistinguishable — the
+    /// property the cold-start resync check relies on.
+    pub fn is_empty(&self) -> bool {
+        self.memory.is_empty()
+            && self.prev_recon.is_none()
+            && self.prev_sign.is_none()
+            && self.prev_abs.is_none()
+            && self.prev_prev_abs.is_none()
+    }
+
+    /// Resident bytes of this layer's buffers (store budget accounting).
+    pub fn byte_size(&self) -> usize {
+        let opt = |v: &Option<Vec<f32>>| v.as_ref().map_or(0, |v| v.len() * 4);
+        self.memory.len() * 4
+            + opt(&self.prev_recon)
+            + opt(&self.prev_sign)
+            + opt(&self.prev_abs)
+            + opt(&self.prev_prev_abs)
+    }
+
+    /// Recompute the views that are pure functions of `prev_recon`
+    /// (`prev_sign`, `prev_abs`) — exactly what [`Self::absorb`] fills.
+    /// The spill-to-disk store elides them from the serialized record and
+    /// calls this on load; the recomputation is bit-exact because `|x|`
+    /// and `sign(x)` are deterministic f32 → f32 maps.
+    pub fn rebuild_derived(&mut self) {
+        match &self.prev_recon {
+            Some(r) => {
+                self.prev_sign = Some(
+                    r.iter()
+                        .map(|&x| {
+                            if x > 0.0 {
+                                1.0
+                            } else if x < 0.0 {
+                                -1.0
+                            } else {
+                                0.0
+                            }
+                        })
+                        .collect(),
+                );
+                self.prev_abs = Some(r.iter().map(|x| x.abs()).collect());
+            }
+            None => {
+                self.prev_sign = None;
+                self.prev_abs = None;
+            }
+        }
+    }
+
+    /// Digest of the state for sync checks (cheap structural
+    /// fingerprint). Covers every mirrored buffer that influences future
+    /// decodes: `memory`, `prev_recon`, and `prev_prev_abs` (the β
+    /// auto-tuner input — mirrored, and *not* derivable from the current
+    /// `prev_recon`). `prev_sign`/`prev_abs` are pure functions of
+    /// `prev_recon`, so hashing them would add cost without coverage.
+    /// Domain tags separate the sections so content cannot alias across
+    /// field boundaries.
     pub fn fingerprint(&self) -> u64 {
         fn mix(h: u64, bits: u32) -> u64 {
             (h ^ bits as u64).wrapping_mul(0x100000001b3)
@@ -63,7 +132,14 @@ impl LayerState {
             h = mix(h, v.to_bits());
         }
         if let Some(r) = &self.prev_recon {
+            h = mix(h, 0x5EED_0001);
             for v in r {
+                h = mix(h, v.to_bits());
+            }
+        }
+        if let Some(p) = &self.prev_prev_abs {
+            h = mix(h, 0x5EED_0002);
+            for v in p {
                 h = mix(h, v.to_bits());
             }
         }
@@ -89,10 +165,84 @@ impl CodecState {
             l.reset();
         }
     }
+
+    /// Resident bytes across all layers (store budget accounting).
+    pub fn byte_size(&self) -> usize {
+        self.layers.iter().map(|l| l.byte_size()).sum()
+    }
+
+    /// Content-based digest: empty layer slots are skipped, so a state
+    /// that was merely `ensure`d (or reset) fingerprints identically to
+    /// [`CodecState::default`] — i.e. "cold" is a fingerprint, not a
+    /// structural accident. Non-empty layers are mixed with their index
+    /// so swapped layer contents still diverge.
     pub fn fingerprint(&self) -> u64 {
-        self.layers
-            .iter()
-            .fold(0xcbf29ce484222325u64, |h, l| h.wrapping_mul(31).wrapping_add(l.fingerprint()))
+        let mut h = 0xcbf29ce484222325u64;
+        for (idx, l) in self.layers.iter().enumerate() {
+            if l.is_empty() {
+                continue;
+            }
+            h = h.wrapping_mul(31).wrapping_add(idx as u64 ^ l.fingerprint());
+        }
+        h
+    }
+}
+
+/// The epoch of one client's mirrored predictor state: how many rounds
+/// it has absorbed, and the content fingerprint after the last absorb.
+/// Client and server each track their own copy; the
+/// `StateCheck`/`StateResync` handshake compares them and resets both
+/// sides to cold start on any mismatch (paper §4.1's synchronization
+/// invariant, restated as: the two mirrors agree iff their epochs agree).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StateEpoch {
+    /// Number of rounds this state has absorbed (0 = cold).
+    pub rounds: u32,
+    /// [`CodecState::fingerprint`] after the last absorb.
+    pub fingerprint: u64,
+}
+
+impl StateEpoch {
+    /// The epoch of a state that has never absorbed a round.
+    pub fn cold() -> StateEpoch {
+        StateEpoch { rounds: 0, fingerprint: CodecState::default().fingerprint() }
+    }
+
+    pub fn is_cold(&self) -> bool {
+        *self == StateEpoch::cold()
+    }
+
+    /// Record one absorbed round.
+    pub fn advance(&mut self, state_fingerprint: u64) {
+        self.rounds += 1;
+        self.fingerprint = state_fingerprint;
+    }
+}
+
+impl Default for StateEpoch {
+    fn default() -> Self {
+        StateEpoch::cold()
+    }
+}
+
+/// One client's externally owned mirror state: the codec state plus its
+/// epoch — the unit a [`crate::compress::store::StateStore`] checks in
+/// and out per round.
+#[derive(Debug, Clone, Default)]
+pub struct ClientState {
+    pub codec: CodecState,
+    pub epoch: StateEpoch,
+}
+
+impl ClientState {
+    /// A cold-start state (the codec's round-1 path).
+    pub fn cold() -> ClientState {
+        ClientState::default()
+    }
+
+    /// Resident bytes (store budget accounting; the epoch is free).
+    pub fn byte_size(&self) -> usize {
+        self.codec.byte_size()
     }
 }
 
@@ -121,12 +271,30 @@ mod tests {
     }
 
     #[test]
+    fn fingerprint_covers_prev_prev_abs() {
+        // prev_prev_abs feeds the β auto-tuner and is serialized in
+        // spill records; divergence confined to it must be visible to
+        // the epoch handshake and the record integrity check.
+        let mut a = LayerState::default();
+        let mut b = LayerState::default();
+        a.absorb(&[1.0, -2.0]);
+        a.absorb(&[1.5, -1.0]);
+        b.absorb(&[1.0, -2.0]);
+        b.absorb(&[1.5, -1.0]);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        b.prev_prev_abs.as_mut().unwrap()[0] = 9.0;
+        assert_ne!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
     fn reset_clears() {
         let mut st = LayerState::default();
         st.memory = vec![1.0];
         st.absorb(&[1.0]);
+        assert!(!st.is_empty());
         st.reset();
         assert!(st.memory.is_empty() && st.prev_recon.is_none());
+        assert!(st.is_empty());
     }
 
     #[test]
@@ -136,5 +304,75 @@ mod tests {
         assert_eq!(cs.layers.len(), 3);
         cs.ensure(2);
         assert_eq!(cs.layers.len(), 3);
+    }
+
+    #[test]
+    fn cold_fingerprint_is_structural_not_positional() {
+        // ensure() and reset() leave the fingerprint at the cold value:
+        // the resync handshake treats "fresh", "ensured" and "reset"
+        // states as the same cold epoch.
+        let cold = CodecState::default().fingerprint();
+        let mut cs = CodecState::default();
+        cs.ensure(5);
+        assert_eq!(cs.fingerprint(), cold);
+        cs.layers[2].absorb(&[1.0, -1.0]);
+        assert_ne!(cs.fingerprint(), cold);
+        cs.reset();
+        assert_eq!(cs.fingerprint(), cold);
+    }
+
+    #[test]
+    fn fingerprint_mixes_layer_position() {
+        let mut a = CodecState::default();
+        a.ensure(2);
+        a.layers[0].absorb(&[3.0]);
+        let mut b = CodecState::default();
+        b.ensure(2);
+        b.layers[1].absorb(&[3.0]);
+        assert_ne!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn epoch_cold_and_advance() {
+        let mut e = StateEpoch::cold();
+        assert!(e.is_cold());
+        assert_eq!(e, StateEpoch::default());
+        let mut cs = CodecState::default();
+        cs.ensure(1);
+        cs.layers[0].absorb(&[1.0]);
+        e.advance(cs.fingerprint());
+        assert!(!e.is_cold());
+        assert_eq!(e.rounds, 1);
+        assert_eq!(e.fingerprint, cs.fingerprint());
+    }
+
+    #[test]
+    fn byte_size_counts_buffers() {
+        let mut st = LayerState::default();
+        assert_eq!(st.byte_size(), 0);
+        st.absorb(&[1.0, 2.0, 3.0]);
+        // prev_recon + prev_sign + prev_abs, 3 f32 each.
+        assert_eq!(st.byte_size(), 3 * 3 * 4);
+        st.memory = vec![0.0; 3];
+        st.absorb(&[1.0, 2.0, 3.0]); // shifts prev_abs into prev_prev_abs
+        assert_eq!(st.byte_size(), 3 * 4 + 4 * 3 * 4);
+        let cs = ClientState { codec: CodecState { layers: vec![st] }, epoch: StateEpoch::cold() };
+        assert_eq!(cs.byte_size(), 3 * 4 + 4 * 3 * 4);
+    }
+
+    #[test]
+    fn rebuild_derived_matches_absorb() {
+        let mut a = LayerState::default();
+        a.absorb(&[0.5, -0.25, 0.0, -3.75]);
+        let mut b = LayerState {
+            memory: a.memory.clone(),
+            prev_recon: a.prev_recon.clone(),
+            prev_prev_abs: a.prev_prev_abs.clone(),
+            ..Default::default()
+        };
+        b.rebuild_derived();
+        assert_eq!(a.prev_sign, b.prev_sign);
+        assert_eq!(a.prev_abs, b.prev_abs);
+        assert_eq!(a.fingerprint(), b.fingerprint());
     }
 }

@@ -1,0 +1,607 @@
+//! Keyed storage for cross-round predictor state — the server side of
+//! the externalized-state redesign.
+//!
+//! The parameter server used to mirror **one codec object per client**
+//! in a positionally indexed `Vec<Box<dyn GradientCodec>>`: O(clients ×
+//! model) resident memory, no dropout/rejoin, no eviction. Now the
+//! server runs a single stateless [`crate::compress::engine::CodecEngine`]
+//! and checks each participant's [`ClientState`] in and out of a
+//! [`StateStore`] keyed by stable [`ClientId`]:
+//!
+//! * [`ShardedMemStore`] — sharded in-memory map (per-shard `Mutex`, so
+//!   concurrent decode workers on `util::threadpool` contend per shard,
+//!   not globally), LRU eviction under a byte budget.
+//! * [`DiskSpillStore`] — the same hot tier, but eviction serializes the
+//!   cold state to disk via a compact **exact** record encoding and
+//!   reloads it transparently on the client's next round.
+//!
+//! Eviction is *safe*, not silent: the stored [`StateEpoch`] disappears
+//! with the state, so the next `StateCheck` handshake from that client
+//! mismatches and both sides deterministically reset to the codec's
+//! round-1 path (see `fl::server`).
+//!
+//! # Spill record format (`FGS1`)
+//!
+//! ```text
+//! magic  u32  "FGS1" (0x31534746 LE)
+//! rounds u32  ┐ StateEpoch — uncompressed, so `epoch()` peeks the
+//! fprint u64  ┘ header without decoding the body
+//! body   bytes (lossless-backend container, zstd by default):
+//!   n_layers u32, then per layer:
+//!     flags  u8   bit0 = prev_recon present, bit1 = prev_prev_abs present
+//!     memory byte-planed f32s (length-prefixed)
+//!     [prev_recon  byte-planed f32s]
+//!     [prev_prev_abs byte-planed f32s]
+//! ```
+//!
+//! Two compaction levers, both bit-exact (the evict→reload property test
+//! demands fingerprint-identical round-trips, which rules out lossy
+//! fixed-point re-quantization of the state):
+//!
+//! 1. **Derived-view elision** — `prev_abs` and `prev_sign` are pure
+//!    functions of `prev_recon` (`|x|`, `sign(x)`), so they are never
+//!    written; [`LayerState::rebuild_derived`] recomputes them on load.
+//!    That alone drops 2 of the 5 per-layer buffers.
+//! 2. **Byte-plane transposition** — f32 words are split into four byte
+//!    planes (sign/exponent bytes land together), which the lossless
+//!    backend compresses far better than interleaved words.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::blob::{BlobReader, BlobWriter};
+use super::lossless::{self, Backend};
+use super::state::{ClientState, LayerState, StateEpoch};
+
+/// Stable client identity — the store key that replaced vector position.
+/// Matches the `client_id` carried by every protocol message.
+pub type ClientId = u32;
+
+/// Occupancy snapshot of a store (benchmarked as the "state-memory
+/// trajectory" of a run).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StoreStats {
+    /// States resident in memory.
+    pub resident_clients: usize,
+    /// Bytes of resident state buffers.
+    pub resident_bytes: usize,
+    /// States currently spilled to disk (0 for memory-only stores).
+    pub spilled_clients: usize,
+    /// Bytes of spill records on disk.
+    pub spilled_bytes: usize,
+    /// Lifetime evictions from the hot tier (drops or spills).
+    pub evictions: u64,
+    /// Lifetime reloads from the spill tier.
+    pub spill_loads: u64,
+    /// Configured hot-tier byte budget (None = unbounded).
+    pub budget_bytes: Option<usize>,
+}
+
+/// Keyed ownership of per-client mirror state. All methods take `&self`
+/// (interior per-shard locking) so one store instance can serve
+/// concurrent decode workers.
+///
+/// The access pattern is check-out/check-in: [`StateStore::take`]
+/// removes the state for the duration of a round's decode,
+/// [`StateStore::put`] returns it (possibly evicting others to fit the
+/// budget). `take` of an absent/evicted client returns `Ok(None)` — the
+/// caller cold-starts, which the epoch handshake makes safe.
+pub trait StateStore: Send + Sync {
+    /// Check out a client's state (removes it from the store).
+    fn take(&self, client: ClientId) -> crate::Result<Option<ClientState>>;
+
+    /// Check a client's state back in after a round's decode.
+    fn put(&self, client: ClientId, state: ClientState) -> crate::Result<()>;
+
+    /// Drop a client's state entirely (resync reset / permanent leave).
+    fn remove(&self, client: ClientId) -> crate::Result<()>;
+
+    /// Peek the stored epoch without materializing the full state.
+    fn epoch(&self, client: ClientId) -> crate::Result<Option<StateEpoch>>;
+
+    /// Current occupancy.
+    fn stats(&self) -> StoreStats;
+}
+
+// ───────────────────────── spill record codec ─────────────────────────
+
+const SPILL_MAGIC: u32 = u32::from_le_bytes(*b"FGS1");
+const FLAG_RECON: u8 = 1;
+const FLAG_PPREV: u8 = 2;
+
+/// Split f32 words into four byte planes (all byte-0s, then byte-1s, …).
+fn split_planes(v: &[f32]) -> Vec<u8> {
+    let n = v.len();
+    let mut out = vec![0u8; n * 4];
+    for (i, x) in v.iter().enumerate() {
+        let b = x.to_le_bytes();
+        out[i] = b[0];
+        out[n + i] = b[1];
+        out[2 * n + i] = b[2];
+        out[3 * n + i] = b[3];
+    }
+    out
+}
+
+/// Inverse of [`split_planes`].
+fn join_planes(buf: &[u8]) -> anyhow::Result<Vec<f32>> {
+    anyhow::ensure!(buf.len() % 4 == 0, "plane buffer length {} not /4", buf.len());
+    let n = buf.len() / 4;
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        out.push(f32::from_le_bytes([buf[i], buf[n + i], buf[2 * n + i], buf[3 * n + i]]));
+    }
+    Ok(out)
+}
+
+/// Serialize a [`ClientState`] to the compact exact spill record.
+pub fn encode_client_state(cs: &ClientState, backend: Backend) -> crate::Result<Vec<u8>> {
+    let mut body = BlobWriter::new();
+    body.put_u32(cs.codec.layers.len() as u32);
+    for l in &cs.codec.layers {
+        let mut flags = 0u8;
+        if l.prev_recon.is_some() {
+            flags |= FLAG_RECON;
+        }
+        if l.prev_prev_abs.is_some() {
+            flags |= FLAG_PPREV;
+        }
+        body.put_u8(flags);
+        body.put_bytes(&split_planes(&l.memory));
+        if let Some(r) = &l.prev_recon {
+            body.put_bytes(&split_planes(r));
+        }
+        if let Some(p) = &l.prev_prev_abs {
+            body.put_bytes(&split_planes(p));
+        }
+    }
+    let mut w = BlobWriter::new();
+    w.put_u32(SPILL_MAGIC);
+    w.put_u32(cs.epoch.rounds);
+    w.put_u64(cs.epoch.fingerprint);
+    w.put_bytes(&backend.compress(&body.into_bytes())?);
+    Ok(w.into_bytes())
+}
+
+/// Deserialize a spill record back into a [`ClientState`] (bit-exact:
+/// the decoded state fingerprints identically to the encoded one).
+pub fn decode_client_state(buf: &[u8]) -> crate::Result<ClientState> {
+    let mut r = BlobReader::new(buf);
+    anyhow::ensure!(r.get_u32()? == SPILL_MAGIC, "bad spill record magic");
+    let rounds = r.get_u32()?;
+    let fingerprint = r.get_u64()?;
+    let body = lossless::decompress(r.get_bytes()?)?;
+    let mut b = BlobReader::new(&body);
+    let n_layers = b.get_u32()? as usize;
+    let mut layers = Vec::with_capacity(n_layers);
+    for _ in 0..n_layers {
+        let flags = b.get_u8()?;
+        let mut l = LayerState { memory: join_planes(b.get_bytes()?)?, ..Default::default() };
+        if flags & FLAG_RECON != 0 {
+            l.prev_recon = Some(join_planes(b.get_bytes()?)?);
+        }
+        if flags & FLAG_PPREV != 0 {
+            l.prev_prev_abs = Some(join_planes(b.get_bytes()?)?);
+        }
+        l.rebuild_derived();
+        layers.push(l);
+    }
+    let cs = ClientState {
+        codec: super::state::CodecState { layers },
+        epoch: StateEpoch { rounds, fingerprint },
+    };
+    anyhow::ensure!(
+        cs.codec.fingerprint() == fingerprint,
+        "spill record fingerprint mismatch (corrupt or stale record)"
+    );
+    Ok(cs)
+}
+
+/// Peek the epoch of a spill record without decompressing the body.
+pub fn peek_spill_epoch(buf: &[u8]) -> crate::Result<StateEpoch> {
+    let mut r = BlobReader::new(buf);
+    anyhow::ensure!(r.get_u32()? == SPILL_MAGIC, "bad spill record magic");
+    Ok(StateEpoch { rounds: r.get_u32()?, fingerprint: r.get_u64()? })
+}
+
+// ───────────────────────── sharded memory store ─────────────────────────
+
+struct Entry {
+    state: ClientState,
+    bytes: usize,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct Shard {
+    entries: HashMap<ClientId, Entry>,
+    bytes: usize,
+}
+
+type EvictHook = Box<dyn Fn(ClientId, &ClientState) -> crate::Result<()> + Send + Sync>;
+
+/// Sharded in-memory [`StateStore`] with LRU eviction under a byte
+/// budget. Shard = `client_id % n_shards`, each behind its own `Mutex`,
+/// so concurrent per-client decodes contend only within a shard. The
+/// budget is split evenly across shards; each shard always admits at
+/// least one resident state (a single state larger than the whole budget
+/// is kept rather than thrashed).
+pub struct ShardedMemStore {
+    shards: Vec<Mutex<Shard>>,
+    /// Per-shard byte budget (None = unbounded).
+    shard_budget: Option<usize>,
+    total_budget: Option<usize>,
+    clock: AtomicU64,
+    evictions: AtomicU64,
+    /// Called with each evicted state *before* it is dropped (the spill
+    /// store's hook persists it to disk).
+    on_evict: Option<EvictHook>,
+}
+
+impl ShardedMemStore {
+    /// `budget_bytes` caps resident state bytes across all shards
+    /// (None = unbounded — the old one-mirror-per-client behavior, minus
+    /// the per-client codec objects).
+    pub fn new(n_shards: usize, budget_bytes: Option<usize>) -> Self {
+        let n = n_shards.max(1);
+        ShardedMemStore {
+            shards: (0..n).map(|_| Mutex::new(Shard::default())).collect(),
+            shard_budget: budget_bytes.map(|b| b.div_euclid(n).max(1)),
+            total_budget: budget_bytes,
+            clock: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            on_evict: None,
+        }
+    }
+
+    /// Unbounded single-shard store (tests / small federations).
+    pub fn unbounded() -> Self {
+        Self::new(1, None)
+    }
+
+    fn with_evict_hook(mut self, hook: EvictHook) -> Self {
+        self.on_evict = Some(hook);
+        self
+    }
+
+    fn shard(&self, client: ClientId) -> &Mutex<Shard> {
+        &self.shards[client as usize % self.shards.len()]
+    }
+
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Evict LRU entries until the shard fits its budget (keeping at
+    /// least one), spilling through the hook when configured.
+    fn enforce_budget(&self, shard: &mut Shard) -> crate::Result<()> {
+        let budget = match self.shard_budget {
+            Some(b) => b,
+            None => return Ok(()),
+        };
+        while shard.bytes > budget && shard.entries.len() > 1 {
+            let victim = shard
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(&id, _)| id)
+                .expect("non-empty shard");
+            let entry = shard.entries.remove(&victim).expect("victim present");
+            shard.bytes -= entry.bytes;
+            if let Some(hook) = &self.on_evict {
+                hook(victim, &entry.state)?;
+            }
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+}
+
+impl StateStore for ShardedMemStore {
+    fn take(&self, client: ClientId) -> crate::Result<Option<ClientState>> {
+        let mut shard = self.shard(client).lock().unwrap();
+        Ok(shard.entries.remove(&client).map(|e| {
+            shard.bytes -= e.bytes;
+            e.state
+        }))
+    }
+
+    fn put(&self, client: ClientId, state: ClientState) -> crate::Result<()> {
+        let bytes = state.byte_size();
+        let last_used = self.tick();
+        let mut shard = self.shard(client).lock().unwrap();
+        if let Some(old) = shard.entries.insert(client, Entry { state, bytes, last_used }) {
+            shard.bytes -= old.bytes;
+        }
+        shard.bytes += bytes;
+        self.enforce_budget(&mut shard)
+    }
+
+    fn remove(&self, client: ClientId) -> crate::Result<()> {
+        let mut shard = self.shard(client).lock().unwrap();
+        if let Some(e) = shard.entries.remove(&client) {
+            shard.bytes -= e.bytes;
+        }
+        Ok(())
+    }
+
+    fn epoch(&self, client: ClientId) -> crate::Result<Option<StateEpoch>> {
+        let shard = self.shard(client).lock().unwrap();
+        Ok(shard.entries.get(&client).map(|e| e.state.epoch))
+    }
+
+    fn stats(&self) -> StoreStats {
+        let mut s = StoreStats {
+            budget_bytes: self.total_budget,
+            evictions: self.evictions.load(Ordering::Relaxed),
+            ..Default::default()
+        };
+        for shard in &self.shards {
+            let shard = shard.lock().unwrap();
+            s.resident_clients += shard.entries.len();
+            s.resident_bytes += shard.bytes;
+        }
+        s
+    }
+}
+
+// ───────────────────────── disk-spill store ─────────────────────────
+
+#[derive(Clone, Copy)]
+struct SpillMeta {
+    epoch: StateEpoch,
+    bytes: usize,
+}
+
+struct SpillTier {
+    dir: PathBuf,
+    index: Mutex<HashMap<ClientId, SpillMeta>>,
+    spill_loads: AtomicU64,
+}
+
+impl SpillTier {
+    fn path(&self, client: ClientId) -> PathBuf {
+        self.dir.join(format!("client_{client}.fgs"))
+    }
+
+    fn write(&self, client: ClientId, state: &ClientState) -> crate::Result<()> {
+        let record = encode_client_state(state, Backend::default())?;
+        let meta = SpillMeta { epoch: state.epoch, bytes: record.len() };
+        std::fs::write(self.path(client), &record)
+            .map_err(|e| anyhow::anyhow!("spill write {}: {e}", self.path(client).display()))?;
+        self.index.lock().unwrap().insert(client, meta);
+        Ok(())
+    }
+
+    fn load(&self, client: ClientId) -> crate::Result<Option<ClientState>> {
+        if self.index.lock().unwrap().remove(&client).is_none() {
+            return Ok(None);
+        }
+        let path = self.path(client);
+        let buf = std::fs::read(&path)
+            .map_err(|e| anyhow::anyhow!("spill read {}: {e}", path.display()))?;
+        let _ = std::fs::remove_file(&path);
+        self.spill_loads.fetch_add(1, Ordering::Relaxed);
+        Ok(Some(decode_client_state(&buf)?))
+    }
+
+    fn remove(&self, client: ClientId) {
+        if self.index.lock().unwrap().remove(&client).is_some() {
+            let _ = std::fs::remove_file(self.path(client));
+        }
+    }
+}
+
+/// Two-tier [`StateStore`]: a budgeted [`ShardedMemStore`] hot tier whose
+/// evictions serialize cold states to disk (`FGS1` records) instead of
+/// dropping them. A spilled client's next round transparently reloads —
+/// no resync reset, just disk latency.
+pub struct DiskSpillStore {
+    hot: ShardedMemStore,
+    tier: Arc<SpillTier>,
+}
+
+impl DiskSpillStore {
+    /// `dir` is created if missing; existing `*.fgs` files in it are
+    /// ignored (records do not outlive the run that wrote them).
+    pub fn new(
+        dir: impl AsRef<Path>,
+        n_shards: usize,
+        hot_budget_bytes: usize,
+    ) -> crate::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| anyhow::anyhow!("create spill dir {}: {e}", dir.display()))?;
+        let tier = Arc::new(SpillTier {
+            dir,
+            index: Mutex::new(HashMap::new()),
+            spill_loads: AtomicU64::new(0),
+        });
+        let hook_tier = Arc::clone(&tier);
+        let hot = ShardedMemStore::new(n_shards, Some(hot_budget_bytes))
+            .with_evict_hook(Box::new(move |client, state| hook_tier.write(client, state)));
+        Ok(DiskSpillStore { hot, tier })
+    }
+}
+
+impl StateStore for DiskSpillStore {
+    fn take(&self, client: ClientId) -> crate::Result<Option<ClientState>> {
+        if let Some(state) = self.hot.take(client)? {
+            return Ok(Some(state));
+        }
+        self.tier.load(client)
+    }
+
+    fn put(&self, client: ClientId, state: ClientState) -> crate::Result<()> {
+        // A fresh hot copy supersedes any stale spill record.
+        self.tier.remove(client);
+        self.hot.put(client, state)
+    }
+
+    fn remove(&self, client: ClientId) -> crate::Result<()> {
+        self.hot.remove(client)?;
+        self.tier.remove(client);
+        Ok(())
+    }
+
+    fn epoch(&self, client: ClientId) -> crate::Result<Option<StateEpoch>> {
+        if let Some(e) = self.hot.epoch(client)? {
+            return Ok(Some(e));
+        }
+        Ok(self.tier.index.lock().unwrap().get(&client).map(|m| m.epoch))
+    }
+
+    fn stats(&self) -> StoreStats {
+        let mut s = self.hot.stats();
+        let index = self.tier.index.lock().unwrap();
+        s.spilled_clients = index.len();
+        s.spilled_bytes = index.values().map(|m| m.bytes).sum();
+        s.spill_loads = self.tier.spill_loads.load(Ordering::Relaxed);
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::state::CodecState;
+
+    fn warm_state(seed: u32, n: usize, rounds: u32) -> ClientState {
+        let mut cs = ClientState::cold();
+        cs.codec.ensure(2);
+        for r in 0..rounds {
+            let recon: Vec<f32> =
+                (0..n).map(|i| ((seed + r) as f32 * 0.1) + i as f32 * 0.01 - 1.0).collect();
+            cs.codec.layers[0].absorb(&recon);
+            cs.codec.layers[0].memory = recon.iter().map(|x| x.abs() * 0.5).collect();
+            cs.codec.layers[1].absorb(&recon[..n / 2]);
+            cs.epoch.advance(cs.codec.fingerprint());
+        }
+        cs
+    }
+
+    #[test]
+    fn planes_roundtrip() {
+        let v = vec![0.0f32, -1.5, f32::MIN_POSITIVE, 3.25e10, -0.0];
+        assert_eq!(join_planes(&split_planes(&v)).unwrap().len(), v.len());
+        for (a, b) in v.iter().zip(join_planes(&split_planes(&v)).unwrap()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(join_planes(&[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn spill_record_roundtrips_exactly() {
+        let cs = warm_state(7, 200, 3);
+        let rec = encode_client_state(&cs, Backend::default()).unwrap();
+        assert_eq!(peek_spill_epoch(&rec).unwrap(), cs.epoch);
+        let back = decode_client_state(&rec).unwrap();
+        assert_eq!(back.epoch, cs.epoch);
+        assert_eq!(back.codec.fingerprint(), cs.codec.fingerprint());
+        // Derived views were elided yet recomputed bit-exactly.
+        for (a, b) in cs.codec.layers.iter().zip(&back.codec.layers) {
+            assert_eq!(a.prev_sign, b.prev_sign);
+            assert_eq!(a.prev_abs, b.prev_abs);
+            assert_eq!(a.prev_prev_abs, b.prev_prev_abs);
+        }
+    }
+
+    #[test]
+    fn spill_record_is_compact() {
+        // Elision + planes + zstd must beat naive raw f32 dumping of all
+        // five views.
+        let cs = warm_state(3, 4000, 2);
+        let naive = cs.byte_size();
+        let rec = encode_client_state(&cs, Backend::default()).unwrap();
+        assert!(rec.len() < naive, "record {} vs naive {naive}", rec.len());
+    }
+
+    #[test]
+    fn corrupt_spill_record_errors() {
+        let cs = warm_state(1, 64, 1);
+        let mut rec = encode_client_state(&cs, Backend::default()).unwrap();
+        let last = rec.len() - 1;
+        rec[last] ^= 0xFF;
+        assert!(decode_client_state(&rec).is_err());
+        assert!(decode_client_state(&[1, 2, 3]).is_err());
+        assert!(peek_spill_epoch(&[9; 16]).is_err());
+    }
+
+    #[test]
+    fn mem_store_take_put_epoch() {
+        let store = ShardedMemStore::new(4, None);
+        assert!(store.take(5).unwrap().is_none());
+        let cs = warm_state(5, 100, 2);
+        let fp = cs.epoch;
+        store.put(5, cs).unwrap();
+        assert_eq!(store.epoch(5).unwrap(), Some(fp));
+        assert_eq!(store.stats().resident_clients, 1);
+        let got = store.take(5).unwrap().unwrap();
+        assert_eq!(got.epoch, fp);
+        assert_eq!(store.stats().resident_clients, 0);
+        assert_eq!(store.stats().resident_bytes, 0);
+    }
+
+    #[test]
+    fn mem_store_evicts_lru_under_budget() {
+        let one = warm_state(0, 100, 1).byte_size();
+        // Room for ~3 states in one shard.
+        let store = ShardedMemStore::new(1, Some(one * 3 + one / 2));
+        for id in 0..5u32 {
+            store.put(id, warm_state(id, 100, 1)).unwrap();
+        }
+        let s = store.stats();
+        assert!(s.resident_clients <= 3, "{} resident", s.resident_clients);
+        assert!(s.resident_bytes <= one * 3 + one / 2);
+        assert!(s.evictions >= 2);
+        // LRU: the oldest puts (0, 1) are gone, the newest survive.
+        assert!(store.epoch(0).unwrap().is_none());
+        assert!(store.epoch(4).unwrap().is_some());
+        // Touching an old survivor by re-putting protects it.
+        let touched = store.take(2).unwrap().unwrap();
+        store.put(2, touched).unwrap();
+        store.put(9, warm_state(9, 100, 1)).unwrap();
+        assert!(store.epoch(2).unwrap().is_some());
+    }
+
+    #[test]
+    fn mem_store_keeps_oversized_single_state() {
+        let store = ShardedMemStore::new(1, Some(8));
+        store.put(1, warm_state(1, 100, 1)).unwrap();
+        assert_eq!(store.stats().resident_clients, 1, "sole state must not thrash");
+    }
+
+    #[test]
+    fn disk_store_spills_and_reloads_exactly() {
+        let dir = std::env::temp_dir().join(format!("fedgec_spill_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let one = warm_state(0, 100, 2).byte_size();
+        let store = DiskSpillStore::new(&dir, 1, one * 2).unwrap();
+        let fps: Vec<StateEpoch> =
+            (0..6u32).map(|id| warm_state(id, 100, 2).epoch).collect();
+        for id in 0..6u32 {
+            store.put(id, warm_state(id, 100, 2)).unwrap();
+        }
+        let s = store.stats();
+        assert!(s.spilled_clients >= 3, "spilled {}", s.spilled_clients);
+        assert!(s.resident_bytes <= one * 2 + one / 2);
+        // Epoch peeks work from both tiers; reload is exact.
+        for id in 0..6u32 {
+            assert_eq!(store.epoch(id).unwrap(), Some(fps[id as usize]), "client {id}");
+            let back = store.take(id).unwrap().unwrap_or_else(|| panic!("client {id}"));
+            assert_eq!(back.epoch, fps[id as usize]);
+            assert_eq!(back.codec.fingerprint(), fps[id as usize].fingerprint);
+            store.put(id, back).unwrap();
+        }
+        assert!(store.stats().spill_loads >= 3);
+        // remove() clears both tiers.
+        for id in 0..6u32 {
+            store.remove(id).unwrap();
+        }
+        let s = store.stats();
+        assert_eq!(s.resident_clients + s.spilled_clients, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

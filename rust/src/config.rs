@@ -52,6 +52,18 @@ pub struct RunConfig {
     /// Frame-stream client updates (overlapping compression with
     /// transmission) instead of monolithic blobs, in threaded/TCP mode.
     pub stream_updates: bool,
+    /// Fraction of clients participating per round, in (0, 1]. Below 1
+    /// the `run_local` coordinator samples a deterministic subset each
+    /// round ([`crate::fl::hetero::sample_participants`]); threaded/TCP
+    /// mode rejects partial participation rather than ignoring it.
+    pub participation: f64,
+    /// Server state-store budget in MB (0 = unbounded). Under a budget
+    /// the store evicts LRU client states; evicted clients cold-start on
+    /// their next round via the StateCheck/StateResync handshake.
+    pub store_budget_mb: f64,
+    /// Server state-store backend: `mem` (sharded in-memory) or `disk`
+    /// (same hot tier, evictions spill to a temp directory).
+    pub store: String,
 }
 
 impl Default for RunConfig {
@@ -78,6 +90,9 @@ impl Default for RunConfig {
             tau: 0.5,
             full_batch: false,
             stream_updates: true,
+            participation: 1.0,
+            store_budget_mb: 0.0,
+            store: "mem".into(),
         }
     }
 }
@@ -131,6 +146,20 @@ impl RunConfig {
         self.tau = v.f64_or("tau", self.tau);
         self.full_batch = v.bool_or("full_batch", self.full_batch);
         self.stream_updates = v.bool_or("stream", self.stream_updates);
+        self.participation = v.f64_or("participation", self.participation);
+        anyhow::ensure!(
+            self.participation > 0.0 && self.participation <= 1.0,
+            "participation {} outside (0, 1]",
+            self.participation
+        );
+        self.store_budget_mb = v.f64_or("store_budget_mb", self.store_budget_mb);
+        anyhow::ensure!(self.store_budget_mb >= 0.0, "store_budget_mb must be >= 0");
+        self.store = v.str_or("store", &self.store).to_string();
+        anyhow::ensure!(
+            matches!(self.store.as_str(), "mem" | "disk"),
+            "unknown store backend '{}' (mem|disk)",
+            self.store
+        );
         // Fail fast on unparseable codec specs.
         self.codec_spec().map_err(|e| anyhow::anyhow!("codec '{}': {e}", self.codec))?;
         Ok(())
@@ -166,6 +195,30 @@ impl RunConfig {
             ..Default::default()
         };
         CodecSpec::parse_with(&self.codec, &d)
+    }
+
+    /// Build the server-side state store this config describes.
+    pub fn build_state_store(
+        &self,
+    ) -> crate::Result<Box<dyn crate::compress::store::StateStore>> {
+        use crate::compress::store::{DiskSpillStore, ShardedMemStore};
+        let budget = if self.store_budget_mb > 0.0 {
+            Some((self.store_budget_mb * 1e6) as usize)
+        } else {
+            None
+        };
+        match self.store.as_str() {
+            "mem" => Ok(Box::new(ShardedMemStore::new(8, budget))),
+            "disk" => {
+                let dir = std::env::temp_dir()
+                    .join(format!("fedgec_spill_{}_{}", std::process::id(), self.seed));
+                // Disk spill needs a finite hot tier; default to 64 MB
+                // when the budget is left unbounded.
+                let hot = budget.unwrap_or(64 << 20);
+                Ok(Box::new(DiskSpillStore::new(dir, 8, hot)?))
+            }
+            other => anyhow::bail!("unknown store backend '{other}'"),
+        }
     }
 
     /// Manifest key of the model artifact for the chosen dataset.
@@ -241,5 +294,26 @@ mod tests {
         assert!(RunConfig::default().stream_updates);
         let c = RunConfig::from_json(r#"{"stream": false}"#).unwrap();
         assert!(!c.stream_updates);
+    }
+
+    #[test]
+    fn participation_and_store_keys_parse() {
+        use crate::compress::store::StateStore as _;
+        let c = RunConfig::from_json(
+            r#"{"participation": 0.5, "store_budget_mb": 2.5, "store": "mem"}"#,
+        )
+        .unwrap();
+        assert!((c.participation - 0.5).abs() < 1e-12);
+        assert!((c.store_budget_mb - 2.5).abs() < 1e-12);
+        assert!(c.build_state_store().is_ok());
+        // Defaults: full participation, unbounded mem store.
+        let d = RunConfig::default();
+        assert_eq!(d.participation, 1.0);
+        assert_eq!(d.store, "mem");
+        assert!(d.build_state_store().unwrap().stats().budget_bytes.is_none());
+        // Invalid values rejected at load.
+        assert!(RunConfig::from_json(r#"{"participation": 0.0}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"participation": 1.5}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"store": "s3"}"#).is_err());
     }
 }

@@ -9,6 +9,12 @@
 //! * [`run_threaded`] — real client threads over in-process channels with
 //!   live bandwidth throttling (native trainer; also exercised over TCP by
 //!   the `serve`/`client` CLI subcommands and the transport tests).
+//!
+//! Scale model: each client owns its stateful compressor, but the server
+//! holds **one** stateless decode engine plus a bounded `StateStore` —
+//! with `cfg.participation < 1` only a sampled subset trains per round
+//! (`run_local`; threaded mode rejects partial participation), and the
+//! per-round `RoundStats` record the store's state-memory trajectory.
 
 pub mod native_trainer;
 
@@ -16,12 +22,15 @@ use std::cell::RefCell;
 use std::rc::Rc;
 use std::time::Instant;
 
-use crate::compress::pipeline::{FedgecCodec, FedgecConfig};
+use crate::compress::engine::CodecEngine;
+use crate::compress::pipeline::{FedgecCodec, FedgecConfig, FedgecEngine};
 use crate::compress::spec::CodecSpec;
+use crate::compress::state::StateEpoch;
 use crate::compress::GradientCodec;
 use crate::config::{EngineKind, RunConfig};
 use crate::fl::aggregate::FedAvg;
 use crate::fl::client::{Client, LocalTrainer};
+use crate::fl::hetero::sample_participants;
 use crate::fl::round::{RoundStats, RunSummary};
 use crate::fl::server::Server;
 use crate::fl::transport::bandwidth::VirtualLink;
@@ -33,30 +42,56 @@ use crate::tensor::{LayerGrad, ModelGrad};
 use crate::train::data::SynthDataset;
 use native_trainer::NativeTrainer;
 
-/// Build the codec described by the config's spec string (client or
-/// server side — they are symmetric objects).
+/// Build the codec described by the config's spec string (the client
+/// side — one stateful compressor per client).
 pub fn build_codec(cfg: &RunConfig) -> crate::Result<Box<dyn GradientCodec>> {
     Ok(cfg.codec_spec()?.build())
 }
 
-/// Build a FedGEC codec with the HLO predict engine attached.
-fn build_codec_hlo(cfg: &RunConfig, rt: Rc<RefCell<crate::runtime::Runtime>>) -> crate::Result<Box<dyn GradientCodec>> {
-    let spec = cfg.codec_spec()?;
-    let fc = match spec {
-        CodecSpec::Fedgec { eb, beta, tau, full_batch, autotune, ec, backend } => FedgecConfig {
-            error_bound: eb,
-            beta,
-            tau,
-            full_batch,
-            autotune,
-            entropy: ec,
-            backend,
-            ..Default::default()
-        },
+/// Build the server-side stateless decode engine for the config's spec.
+pub fn build_engine(cfg: &RunConfig) -> crate::Result<Box<dyn CodecEngine>> {
+    Ok(cfg.codec_spec()?.build_engine())
+}
+
+/// Resolve a spec into the FedGEC config (HLO paths require fedgec).
+fn fedgec_config(cfg: &RunConfig) -> crate::Result<FedgecConfig> {
+    match cfg.codec_spec()? {
+        CodecSpec::Fedgec { eb, beta, tau, full_batch, autotune, ec, backend } => {
+            Ok(FedgecConfig {
+                error_bound: eb,
+                beta,
+                tau,
+                full_batch,
+                autotune,
+                entropy: ec,
+                backend,
+                ..Default::default()
+            })
+        }
         other => anyhow::bail!("HLO engine requires the fedgec codec, got {other}"),
-    };
+    }
+}
+
+/// Build a FedGEC codec with the HLO predict engine attached (client).
+fn build_codec_hlo(
+    cfg: &RunConfig,
+    rt: Rc<RefCell<crate::runtime::Runtime>>,
+) -> crate::Result<Box<dyn GradientCodec>> {
+    let fc = fedgec_config(cfg)?;
     let engine = HloPredictEngine::new(rt, 4096)?;
     Ok(Box::new(FedgecCodec::with_engine(fc, Box::new(engine))))
+}
+
+/// Build the FedGEC decode engine with the HLO predict backend (server —
+/// note: one engine for the whole federation, where the old design
+/// instantiated one PJRT-backed codec per client).
+fn build_engine_hlo(
+    cfg: &RunConfig,
+    rt: Rc<RefCell<crate::runtime::Runtime>>,
+) -> crate::Result<Box<dyn CodecEngine>> {
+    let fc = fedgec_config(cfg)?;
+    let engine = HloPredictEngine::new(rt, 4096)?;
+    Ok(Box::new(FedgecEngine::with_engine(fc, Box::new(engine))))
 }
 
 /// One simulated client in `run_local` (HLO path).
@@ -64,6 +99,7 @@ struct HloClientSim {
     data_xs: Vec<f32>,
     data_ys: Vec<i32>,
     codec: Box<dyn GradientCodec>,
+    epoch: StateEpoch,
     n_samples: usize,
 }
 
@@ -73,6 +109,23 @@ pub fn run_local(cfg: &RunConfig) -> crate::Result<RunSummary> {
         "native" => run_local_native(cfg),
         _ => run_local_hlo(cfg),
     }
+}
+
+/// The in-process equivalent of the wire `StateCheck`/`StateResync`
+/// handshake: ask the server to compare epochs; on mismatch reset the
+/// client codec to cold start. Returns whether a reset happened.
+fn sim_state_handshake(
+    server: &mut Server,
+    client_id: u32,
+    codec: &mut dyn GradientCodec,
+    epoch: &mut StateEpoch,
+) -> crate::Result<bool> {
+    let reset = server.check_state(client_id, *epoch)?;
+    if reset {
+        codec.reset();
+        *epoch = StateEpoch::cold();
+    }
+    Ok(reset)
 }
 
 fn run_local_hlo(cfg: &RunConfig) -> crate::Result<RunSummary> {
@@ -99,6 +152,7 @@ fn run_local_hlo(cfg: &RunConfig) -> crate::Result<RunSummary> {
                 data_xs: slice.xs,
                 data_ys: slice.ys,
                 codec,
+                epoch: StateEpoch::cold(),
                 n_samples: per_epoch,
             })
         })
@@ -108,25 +162,45 @@ fn run_local_hlo(cfg: &RunConfig) -> crate::Result<RunSummary> {
         ds.sample(&mut rng, manifest.eval_n, 0.0)
     };
 
-    // Server: global params + one mirrored codec per client.
+    // Server: global params + ONE decode engine + a keyed state store.
     let init = trainer.init_params(cfg.seed);
-    let server_codecs: crate::Result<Vec<_>> = (0..cfg.n_clients)
-        .map(|_| {
-            if cfg.engine == EngineKind::Hlo {
-                build_codec_hlo(cfg, rt.clone())
-            } else {
-                build_codec(cfg)
-            }
-        })
-        .collect();
-    let mut server = Server::new(init.tensors, metas.clone(), cfg.server_lr, server_codecs?);
+    let server_engine = if cfg.engine == EngineKind::Hlo {
+        build_engine_hlo(cfg, rt.clone())?
+    } else {
+        build_engine(cfg)?
+    };
+    let mut server = Server::new(
+        init.tensors,
+        metas.clone(),
+        cfg.server_lr,
+        server_engine,
+        cfg.build_state_store()?,
+    );
+    for ci in 0..cfg.n_clients {
+        server.admit(ci as u32);
+    }
 
+    let mut part_rng = crate::util::rng::Rng::new(cfg.seed ^ 0x9A57);
     let mut summary = RunSummary::default();
     for round in 0..cfg.rounds {
-        let mut stats = RoundStats { round: round as u32, ..Default::default() };
+        let participants = sample_participants(cfg.n_clients, cfg.participation, &mut part_rng);
+        let mut stats = RoundStats {
+            round: round as u32,
+            participants: participants.len(),
+            ..Default::default()
+        };
         let mut agg = FedAvg::new();
         let global = server.params.clone();
-        for (ci, client) in clients.iter_mut().enumerate() {
+        for &ci in &participants {
+            let client = &mut clients[ci];
+            if sim_state_handshake(
+                &mut server,
+                ci as u32,
+                client.codec.as_mut(),
+                &mut client.epoch,
+            )? {
+                stats.resyncs += 1;
+            }
             // Local epoch via PJRT.
             let params = Params { tensors: global.clone() };
             let (new_params, loss) =
@@ -152,10 +226,13 @@ fn run_local_hlo(cfg: &RunConfig) -> crate::Result<RunSummary> {
             stats.payload_bytes += payload.len();
             let mut link = VirtualLink::new(cfg.link);
             stats.transmit_time += link.send(payload.len());
-            let dt = server.absorb_payload(ci, &payload, client.n_samples as f64, &mut agg)?;
+            let dt =
+                server.absorb_payload(ci as u32, &payload, client.n_samples as f64, &mut agg)?;
             stats.decomp_time += dt;
+            client.epoch.advance(client.codec.state_fingerprint());
         }
-        stats.mean_loss /= cfg.n_clients.max(1) as f64;
+        stats.mean_loss /= participants.len().max(1) as f64;
+        server.record_store_occupancy(&mut stats);
         server.finish_round(agg);
         let do_eval = (cfg.eval_every > 0 && (round + 1) % cfg.eval_every == 0)
             || round + 1 == cfg.rounds;
@@ -188,18 +265,40 @@ fn run_local_native(cfg: &RunConfig) -> crate::Result<RunSummary> {
     let metas = proto.layer_metas();
     let init: Vec<Vec<f32>> =
         vec![proto.conv_w.clone(), proto.conv_b.clone(), proto.fc_w.clone(), proto.fc_b.clone()];
-    let server_codecs: crate::Result<Vec<_>> =
-        (0..cfg.n_clients).map(|_| build_codec(cfg)).collect();
-    let mut server = Server::new(init, metas.clone(), cfg.server_lr, server_codecs?);
+    let mut server = Server::new(
+        init,
+        metas.clone(),
+        cfg.server_lr,
+        build_engine(cfg)?,
+        cfg.build_state_store()?,
+    );
+    for ci in 0..cfg.n_clients {
+        server.admit(ci as u32);
+    }
     let mut client_codecs: Vec<Box<dyn GradientCodec>> =
         (0..cfg.n_clients).map(|_| build_codec(cfg)).collect::<crate::Result<_>>()?;
+    let mut epochs = vec![StateEpoch::cold(); cfg.n_clients];
 
+    let mut part_rng = crate::util::rng::Rng::new(cfg.seed ^ 0x9A57);
     let mut summary = RunSummary::default();
     for round in 0..cfg.rounds {
-        let mut stats = RoundStats { round: round as u32, ..Default::default() };
+        let participants = sample_participants(cfg.n_clients, cfg.participation, &mut part_rng);
+        let mut stats = RoundStats {
+            round: round as u32,
+            participants: participants.len(),
+            ..Default::default()
+        };
         let mut agg = FedAvg::new();
         let global = server.params.clone();
-        for ci in 0..cfg.n_clients {
+        for &ci in &participants {
+            if sim_state_handshake(
+                &mut server,
+                ci as u32,
+                client_codecs[ci].as_mut(),
+                &mut epochs[ci],
+            )? {
+                stats.resyncs += 1;
+            }
             let (grads, loss) = trainers[ci].train_round(&global)?;
             stats.mean_loss += loss as f64;
             stats.raw_bytes += grads.byte_size();
@@ -210,14 +309,16 @@ fn run_local_native(cfg: &RunConfig) -> crate::Result<RunSummary> {
             let mut link = VirtualLink::new(cfg.link);
             stats.transmit_time += link.send(payload.len());
             let dt = server.absorb_payload(
-                ci,
+                ci as u32,
                 &payload,
                 trainers[ci].n_samples() as f64,
                 &mut agg,
             )?;
             stats.decomp_time += dt;
+            epochs[ci].advance(client_codecs[ci].state_fingerprint());
         }
-        stats.mean_loss /= cfg.n_clients.max(1) as f64;
+        stats.mean_loss /= participants.len().max(1) as f64;
+        server.record_store_occupancy(&mut stats);
         server.finish_round(agg);
         let do_eval = (cfg.eval_every > 0 && (round + 1) % cfg.eval_every == 0)
             || round + 1 == cfg.rounds;
@@ -239,6 +340,14 @@ fn run_local_native(cfg: &RunConfig) -> crate::Result<RunSummary> {
 /// throttling. Native trainer only (PJRT handles are not Send).
 pub fn run_threaded(cfg: &RunConfig) -> crate::Result<RunSummary> {
     anyhow::ensure!(cfg.model == "native", "threaded mode requires model=native");
+    // Threaded rounds drive every connected channel; sampling a subset
+    // is a run_local feature. Fail loudly rather than silently running
+    // full participation under a partial-participation config.
+    anyhow::ensure!(
+        cfg.participation >= 1.0,
+        "threaded mode runs the full fleet; participation={} requires run_local",
+        cfg.participation
+    );
     let ds = SynthDataset::new(cfg.dataset, cfg.seed);
     let mut data_rng = crate::util::rng::Rng::new(cfg.seed ^ 0xDA);
     let proto = crate::train::native::NativeNet::new(cfg.dataset.classes(), cfg.seed);
@@ -260,9 +369,13 @@ pub fn run_threaded(cfg: &RunConfig) -> crate::Result<RunSummary> {
         let mut ch = cli_end;
         handles.push(std::thread::spawn(move || client.run(&mut ch)));
     }
-    let server_codecs: crate::Result<Vec<_>> =
-        (0..cfg.n_clients).map(|_| build_codec(cfg)).collect();
-    let mut server = Server::new(init, metas, cfg.server_lr, server_codecs?);
+    let mut server = Server::new(
+        init,
+        metas,
+        cfg.server_lr,
+        build_engine(cfg)?,
+        cfg.build_state_store()?,
+    );
     server.wait_hellos(&mut server_channels)?;
     let mut summary = RunSummary::default();
     for _ in 0..cfg.rounds {
@@ -288,14 +401,15 @@ pub fn run_threaded(cfg: &RunConfig) -> crate::Result<RunSummary> {
 pub fn print_summary(cfg: &RunConfig, summary: &RunSummary) {
     let mut t = crate::metrics::Table::new(
         &format!(
-            "FL run: model={} dataset={} codec={} eb={} link={:.0}Mbps",
+            "FL run: model={} dataset={} codec={} eb={} link={:.0}Mbps participation={}",
             cfg.model,
             cfg.dataset.name(),
             cfg.codec,
             cfg.rel_error_bound,
-            cfg.link.bits_per_sec / 1e6
+            cfg.link.bits_per_sec / 1e6,
+            cfg.participation,
         ),
-        &["round", "loss", "CR", "payload(KB)", "comm time", "eval acc"],
+        &["round", "loss", "CR", "payload(KB)", "comm time", "part", "store(KB)", "eval acc"],
     );
     for r in &summary.rounds {
         t.row(vec![
@@ -304,6 +418,8 @@ pub fn print_summary(cfg: &RunConfig, summary: &RunSummary) {
             format!("{:.2}", r.ratio()),
             format!("{:.1}", r.payload_bytes as f64 / 1e3),
             crate::metrics::fmt_duration(r.comm_time()),
+            r.participants.to_string(),
+            format!("{:.1}", r.store_bytes as f64 / 1e3),
             r.eval.map(|(_, a)| format!("{:.3}", a)).unwrap_or_else(|| "-".into()),
         ]);
     }

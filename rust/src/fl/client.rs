@@ -12,6 +12,7 @@ use std::sync::mpsc;
 
 use crate::compress::frame::Frame;
 use crate::compress::session::EncodeSession;
+use crate::compress::state::StateEpoch;
 use crate::compress::GradientCodec;
 use crate::fl::protocol::Msg;
 use crate::fl::transport::Channel;
@@ -38,11 +39,16 @@ pub struct Client {
     pub codec: Box<dyn GradientCodec>,
     /// Stream per-layer frames (default) instead of one monolithic blob.
     pub stream: bool,
+    /// Epoch of the codec's mirrored predictor state: advanced after
+    /// every uploaded round, announced to the server in `StateCheck`
+    /// before the next one. Survives dropout (the client just rejoins
+    /// with its last epoch); reset to cold on a `StateResync`.
+    pub epoch: StateEpoch,
 }
 
 impl Client {
     pub fn new(id: u32, trainer: Box<dyn LocalTrainer>, codec: Box<dyn GradientCodec>) -> Self {
-        Client { id, trainer, codec, stream: true }
+        Client { id, trainer, codec, stream: true, epoch: StateEpoch::cold() }
     }
 
     /// Select monolithic vs frame-streamed uploads.
@@ -105,12 +111,34 @@ impl Client {
         })
     }
 
+    /// Announce the state epoch and obey the server's resync verdict
+    /// (runs once per round, before training). On reset both sides have
+    /// agreed to the codec's round-1 cold-start path.
+    fn state_handshake(&mut self, channel: &mut dyn Channel) -> crate::Result<()> {
+        channel.send(&Msg::StateCheck {
+            client_id: self.id,
+            rounds: self.epoch.rounds,
+            fingerprint: self.codec.state_fingerprint(),
+        })?;
+        match channel.recv()? {
+            Msg::StateResync { reset, .. } => {
+                if reset {
+                    self.codec.reset();
+                    self.epoch = StateEpoch::cold();
+                }
+                Ok(())
+            }
+            other => anyhow::bail!("client {}: expected StateResync, got {other:?}", self.id),
+        }
+    }
+
     /// Blocking message loop against a server channel (threaded/TCP mode).
     pub fn run(&mut self, channel: &mut dyn Channel) -> crate::Result<()> {
         channel.send(&Msg::Hello { client_id: self.id })?;
         loop {
             match channel.recv()? {
                 Msg::GlobalParams { round, tensors } => {
+                    self.state_handshake(channel)?;
                     if self.stream {
                         self.streamed_round(round, &tensors, channel)?;
                     } else {
@@ -123,6 +151,7 @@ impl Client {
                             n_samples: self.trainer.n_samples() as u32,
                         })?;
                     }
+                    self.epoch.advance(self.codec.state_fingerprint());
                 }
                 Msg::Shutdown => return Ok(()),
                 other => anyhow::bail!("client {}: unexpected {other:?}", self.id),

@@ -47,6 +47,30 @@ impl LinkClass {
     }
 }
 
+/// Deterministically sample this round's participating client subset:
+/// each client joins with probability `fraction` (at least one always
+/// participates so a synchronous round can complete). Shared by the
+/// coordinator's partial-participation loop, the scale tests, and the
+/// straggler bench so "half the fleet" means the same thing everywhere.
+pub fn sample_participants(
+    n_clients: usize,
+    fraction: f64,
+    rng: &mut crate::util::rng::Rng,
+) -> Vec<usize> {
+    if n_clients == 0 {
+        return Vec::new();
+    }
+    if fraction >= 1.0 {
+        return (0..n_clients).collect();
+    }
+    let picked: Vec<usize> = (0..n_clients).filter(|_| rng.chance(fraction.max(0.0))).collect();
+    if picked.is_empty() {
+        vec![rng.next_below(n_clients)]
+    } else {
+        picked
+    }
+}
+
 /// A federation's connectivity mix.
 #[derive(Debug, Clone)]
 pub struct HeteroFleet {
@@ -86,6 +110,13 @@ impl HeteroFleet {
             .map(|((link, &b), &c)| link.transmit_time(b) + c)
             .max()
             .unwrap_or(Duration::ZERO)
+    }
+
+    /// The fleet restricted to a participating subset (partial
+    /// participation: the synchronous round is gated by the slowest
+    /// *participant*, not the slowest client overall).
+    pub fn subset(&self, ids: &[usize]) -> HeteroFleet {
+        HeteroFleet { links: ids.iter().map(|&i| self.links[i]).collect() }
     }
 
     /// Straggler gap: slowest / fastest upload for a uniform payload.
@@ -148,6 +179,34 @@ mod tests {
         let t_cmp = fleet.round_time(&compressed, &zero);
         let speedup = t_raw.as_secs_f64() / t_cmp.as_secs_f64();
         assert!(speedup > 10.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn participant_sampling_is_deterministic_and_nonempty() {
+        let mut a = Rng::new(4);
+        let mut b = Rng::new(4);
+        let pa = sample_participants(100, 0.5, &mut a);
+        let pb = sample_participants(100, 0.5, &mut b);
+        assert_eq!(pa, pb);
+        assert!(pa.len() > 20 && pa.len() < 80, "{}", pa.len());
+        // Degenerate fractions still yield a runnable round.
+        assert_eq!(sample_participants(10, 1.0, &mut a), (0..10).collect::<Vec<_>>());
+        assert_eq!(sample_participants(10, 0.0, &mut a).len(), 1);
+        assert!(sample_participants(0, 0.5, &mut a).is_empty());
+    }
+
+    #[test]
+    fn subset_round_gated_by_slowest_participant() {
+        let fleet = HeteroFleet {
+            links: vec![
+                LinkSpec { bits_per_sec: 1e6, latency: Duration::ZERO },
+                LinkSpec { bits_per_sec: 1e9, latency: Duration::ZERO },
+            ],
+        };
+        // Leaving the 1 Mbps straggler out shrinks the round 1000x.
+        let full = fleet.round_time(&[1_000_000; 2], &[Duration::ZERO; 2]);
+        let fast_only = fleet.subset(&[1]).round_time(&[1_000_000], &[Duration::ZERO]);
+        assert!(full.as_secs_f64() > fast_only.as_secs_f64() * 100.0);
     }
 
     #[test]

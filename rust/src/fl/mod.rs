@@ -3,6 +3,12 @@
 //! token-bucket bandwidth simulator — the Rust equivalent of the APPFL
 //! stack the paper integrates into (§5.1), with the compressor as a
 //! first-class feature of the wire path.
+//!
+//! The server scales by *not* mirroring one codec per client: it pairs
+//! one stateless [`crate::compress::engine::CodecEngine`] with a keyed
+//! [`crate::compress::store::StateStore`] of per-client predictor
+//! states, and the `StateCheck`/`StateResync` protocol handshake keeps
+//! dropout, rejoin and eviction deterministic (see `DESIGN.md` §8).
 
 pub mod aggregate;
 pub mod client;
@@ -11,3 +17,5 @@ pub mod protocol;
 pub mod round;
 pub mod server;
 pub mod transport;
+
+pub use crate::compress::store::ClientId;

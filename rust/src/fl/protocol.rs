@@ -23,6 +23,16 @@ pub enum Msg {
     /// One self-delimiting per-layer frame
     /// ([`crate::compress::Frame::to_wire`] bytes) of a streamed update.
     UpdateFrame { client_id: u32, round: u32, frame: Vec<u8> },
+    /// Client announces its predictor-state epoch before uploading:
+    /// `rounds` absorbed so far and the state fingerprint (see
+    /// [`crate::compress::StateEpoch`]). Sent after every
+    /// `GlobalParams`; the server answers with [`Msg::StateResync`].
+    StateCheck { client_id: u32, rounds: u32, fingerprint: u64 },
+    /// Server's verdict on a [`Msg::StateCheck`]: `reset = true` means
+    /// the epochs disagree (evicted state, dropout with lost state, cold
+    /// rejoin) — **both** sides deterministically reset to the codec's
+    /// round-1 path before the client compresses this round's update.
+    StateResync { client_id: u32, reset: bool },
     /// Server ends the session.
     Shutdown,
 }
@@ -66,6 +76,17 @@ impl Msg {
                 w.put_u32(*round);
                 w.put_bytes(frame);
             }
+            Msg::StateCheck { client_id, rounds, fingerprint } => {
+                w.put_u8(6);
+                w.put_u32(*client_id);
+                w.put_u32(*rounds);
+                w.put_u64(*fingerprint);
+            }
+            Msg::StateResync { client_id, reset } => {
+                w.put_u8(7);
+                w.put_u32(*client_id);
+                w.put_u8(u8::from(*reset));
+            }
         }
         w.into_bytes()
     }
@@ -106,6 +127,21 @@ impl Msg {
                 let frame = r.get_bytes()?.to_vec();
                 Msg::UpdateFrame { client_id, round, frame }
             }
+            6 => {
+                let client_id = r.get_u32()?;
+                let rounds = r.get_u32()?;
+                let fingerprint = r.get_u64()?;
+                Msg::StateCheck { client_id, rounds, fingerprint }
+            }
+            7 => {
+                let client_id = r.get_u32()?;
+                let reset = match r.get_u8()? {
+                    0 => false,
+                    1 => true,
+                    b => anyhow::bail!("bad StateResync flag {b}"),
+                };
+                Msg::StateResync { client_id, reset }
+            }
             t => anyhow::bail!("unknown message tag {t}"),
         })
     }
@@ -135,6 +171,9 @@ mod tests {
                 n_samples: 64,
             },
             Msg::UpdateFrame { client_id: 2, round: 9, frame: vec![0, 0, 0, 0, 1, 0, 0, 0, 42] },
+            Msg::StateCheck { client_id: 4, rounds: 12, fingerprint: 0xDEAD_BEEF_CAFE_F00D },
+            Msg::StateResync { client_id: 4, reset: true },
+            Msg::StateResync { client_id: 5, reset: false },
             Msg::Shutdown,
         ];
         for m in msgs {

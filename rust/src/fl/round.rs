@@ -23,6 +23,17 @@ pub struct RoundStats {
     pub transmit_time: Duration,
     /// Evaluation results if this round evaluated.
     pub eval: Option<(f32, f32)>,
+    /// Clients that participated this round (partial participation:
+    /// < total fleet size).
+    pub participants: usize,
+    /// State resets ordered by the epoch handshake this round (evicted /
+    /// dropped-out / cold-rejoined clients).
+    pub resyncs: usize,
+    /// Server state-store occupancy after the round: mirror states held
+    /// across both tiers (resident + spilled to disk) and their bytes —
+    /// the "state-memory trajectory".
+    pub store_clients: usize,
+    pub store_bytes: usize,
 }
 
 impl RoundStats {

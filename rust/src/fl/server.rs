@@ -1,15 +1,29 @@
 //! The FL parameter server: broadcasts global parameters, decompresses
-//! client payloads (Alg. 4) with one mirrored codec per client, and
-//! aggregates via FedAvg. Accepts both monolithic `Update` blobs and
-//! frame-streamed updates (`UpdateBegin` + per-layer `UpdateFrame`s),
-//! decoding each frame as it arrives. Tracks the per-round communication
-//! statistics that drive the Fig. 11 experiments.
+//! client payloads (Alg. 4) and aggregates via FedAvg.
+//!
+//! Scale model: the server owns **one** stateless
+//! [`CodecEngine`](crate::compress::engine::CodecEngine) plus a bounded
+//! [`StateStore`] keyed by stable [`ClientId`] — not one mirrored codec
+//! per client. Each participant's predictor state is checked out of the
+//! store for the duration of its decode and checked back in with an
+//! advanced [`StateEpoch`]; eviction, dropout and cold rejoin are
+//! detected by the `StateCheck`/`StateResync` handshake and resolved by
+//! a deterministic cold-start reset on both sides (never by silent
+//! divergence).
+//!
+//! Accepts both monolithic `Update` blobs and frame-streamed updates
+//! (`UpdateBegin` + per-layer `UpdateFrame`s), decoding each frame as it
+//! arrives. Tracks the per-round communication statistics that drive the
+//! Fig. 11 experiments.
 
+use std::collections::HashSet;
 use std::time::{Duration, Instant};
 
+use crate::compress::engine::CodecEngine;
 use crate::compress::frame::Frame;
-use crate::compress::session::DecodeSession;
-use crate::compress::GradientCodec;
+use crate::compress::session::EngineDecodeSession;
+use crate::compress::state::{ClientState, StateEpoch};
+use crate::compress::store::{ClientId, ShardedMemStore, StateStore, StoreStats};
 use crate::fl::aggregate::{apply_update, FedAvg};
 use crate::fl::protocol::Msg;
 use crate::fl::round::RoundStats;
@@ -23,41 +37,149 @@ pub struct Server {
     pub metas: Vec<LayerMeta>,
     /// Server-side learning rate applied to the aggregated gradient.
     pub lr: f32,
-    /// One decompressor per client (their predictor states are mirrors of
-    /// the corresponding client-side compressors).
-    pub codecs: Vec<Box<dyn GradientCodec>>,
+    /// The single stateless decompressor shared by all clients.
+    engine: Box<dyn CodecEngine>,
+    /// Per-client predictor-state ownership (bounded, evictable).
+    store: Box<dyn StateStore>,
+    /// Clients admitted to the federation (via `Hello` or `admit`).
+    /// Payloads and state checks from unknown ids are rejected with a
+    /// proper `Err`, never an index panic.
+    admitted: HashSet<ClientId>,
     round: u32,
 }
 
 impl Server {
+    /// Full constructor: engine + explicit store backend.
     pub fn new(
         params: Vec<Vec<f32>>,
         metas: Vec<LayerMeta>,
         lr: f32,
-        codecs: Vec<Box<dyn GradientCodec>>,
+        engine: Box<dyn CodecEngine>,
+        store: Box<dyn StateStore>,
     ) -> Self {
-        Server { params, metas, lr, codecs, round: 0 }
+        Server { params, metas, lr, engine, store, admitted: HashSet::new(), round: 0 }
+    }
+
+    /// Convenience: engine over an unbounded sharded in-memory store.
+    pub fn with_engine(
+        params: Vec<Vec<f32>>,
+        metas: Vec<LayerMeta>,
+        lr: f32,
+        engine: Box<dyn CodecEngine>,
+    ) -> Self {
+        Self::new(params, metas, lr, engine, Box::new(ShardedMemStore::new(8, None)))
     }
 
     pub fn round(&self) -> u32 {
         self.round
     }
 
+    /// Admit a client id (the transportless simulation path's `Hello`).
+    pub fn admit(&mut self, client: ClientId) {
+        self.admitted.insert(client);
+    }
+
+    pub fn is_admitted(&self, client: ClientId) -> bool {
+        self.admitted.contains(&client)
+    }
+
+    /// Current state-store occupancy.
+    pub fn store_stats(&self) -> StoreStats {
+        self.store.stats()
+    }
+
+    /// Peek a client's stored state epoch (observability; `None` when no
+    /// state is held — never seen, reset, or evicted).
+    pub fn state_epoch(&self, client: ClientId) -> crate::Result<Option<StateEpoch>> {
+        self.store.epoch(client)
+    }
+
+    /// Fill a round's store-occupancy fields: held mirror states and
+    /// their bytes across *both* tiers (resident + spilled), so the
+    /// state-memory trajectory is honest for disk-backed stores too.
+    pub fn record_store_occupancy(&self, stats: &mut RoundStats) {
+        let occ = self.store.stats();
+        stats.store_clients = occ.resident_clients + occ.spilled_clients;
+        stats.store_bytes = occ.resident_bytes + occ.spilled_bytes;
+    }
+
+    fn ensure_admitted(&self, client: ClientId) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.admitted.contains(&client),
+            "unknown client {client}: not admitted to this federation"
+        );
+        Ok(())
+    }
+
+    /// Compare a client's reported state epoch against the stored one
+    /// and decide whether both sides must cold-start (`true` = reset).
+    ///
+    /// Decision table (`None` = no stored state — never seen or
+    /// evicted): equal epochs ⇒ in sync, keep going; anything else ⇒
+    /// drop the server copy and order a reset. A cold client against no
+    /// stored state is the ordinary round-1 path, not a mismatch.
+    pub fn check_state(
+        &mut self,
+        client: ClientId,
+        client_epoch: StateEpoch,
+    ) -> crate::Result<bool> {
+        self.ensure_admitted(client)?;
+        if !self.engine.stateful() {
+            return Ok(false);
+        }
+        let in_sync = match self.store.epoch(client)? {
+            None => client_epoch.is_cold(),
+            Some(server_epoch) => server_epoch == client_epoch,
+        };
+        if !in_sync {
+            self.store.remove(client)?;
+        }
+        Ok(!in_sync)
+    }
+
+    /// Check a client's state out of the store (cold default if absent).
+    fn checkout(&mut self, client: ClientId) -> crate::Result<ClientState> {
+        Ok(self.store.take(client)?.unwrap_or_else(ClientState::cold))
+    }
+
+    /// Check a state back in with its epoch advanced by one round.
+    fn checkin(&mut self, client: ClientId, mut cs: ClientState) -> crate::Result<()> {
+        if !self.engine.stateful() {
+            return Ok(());
+        }
+        cs.epoch.advance(cs.codec.fingerprint());
+        self.store.put(client, cs)
+    }
+
     /// Process one already-received client payload: decompress + absorb
     /// into the aggregator. Returns decompression time. (Exposed for the
-    /// single-threaded simulation path.)
+    /// single-threaded simulation path.) Unknown `client` ids are a
+    /// proper `Err`.
     pub fn absorb_payload(
         &mut self,
-        client_idx: usize,
+        client: ClientId,
         payload: &[u8],
         weight: f64,
         agg: &mut FedAvg,
     ) -> crate::Result<Duration> {
+        self.ensure_admitted(client)?;
+        let mut cs = self.checkout(client)?;
         let t0 = Instant::now();
-        let grads = self.codecs[client_idx].decompress(payload, &self.metas)?;
+        let decoded = self.engine.decode_payload(payload, &self.metas, &mut cs.codec);
         let dt = t0.elapsed();
-        agg.add(&grads, weight);
-        Ok(dt)
+        match decoded {
+            Ok((grads, _report)) => {
+                self.checkin(client, cs)?;
+                agg.add(&grads, weight);
+                Ok(dt)
+            }
+            Err(e) => {
+                // A failed decode may have half-updated the state: drop
+                // it so the next handshake forces a clean cold start.
+                self.store.remove(client)?;
+                Err(e)
+            }
+        }
     }
 
     /// Receive one frame-streamed update that was opened by an
@@ -66,7 +188,7 @@ impl Server {
     /// and decode time.
     fn recv_streamed_update(
         &mut self,
-        client_idx: usize,
+        client: ClientId,
         channel: &mut dyn Channel,
         round: u32,
         n_layers: usize,
@@ -77,27 +199,41 @@ impl Server {
             n_layers,
             self.metas.len()
         );
-        let mut session = DecodeSession::new(self.codecs[client_idx].as_mut(), n_layers)?;
-        let mut grads = ModelGrad::default();
-        let mut wire_bytes = 0usize;
-        let mut decode_time = Duration::ZERO;
-        for li in 0..n_layers {
-            match channel.recv()? {
-                Msg::UpdateFrame { round: r, frame, .. } => {
-                    anyhow::ensure!(r == round, "frame for round {r} during round {round}");
-                    wire_bytes += frame.len();
-                    let frame = Frame::from_wire(&frame)?;
-                    let t0 = Instant::now();
-                    // The session enforces frame ordering/indexing.
-                    let layer = session.decode_frame(&frame, &self.metas[li])?;
-                    decode_time += t0.elapsed();
-                    grads.layers.push(layer);
+        let mut cs = self.checkout(client)?;
+        let mut decode = || -> crate::Result<(ModelGrad, usize, Duration)> {
+            let mut session =
+                EngineDecodeSession::new(self.engine.as_mut(), &mut cs.codec, n_layers);
+            let mut grads = ModelGrad::default();
+            let mut wire_bytes = 0usize;
+            let mut decode_time = Duration::ZERO;
+            for li in 0..n_layers {
+                match channel.recv()? {
+                    Msg::UpdateFrame { round: r, frame, .. } => {
+                        anyhow::ensure!(r == round, "frame for round {r} during round {round}");
+                        wire_bytes += frame.len();
+                        let frame = Frame::from_wire(&frame)?;
+                        let t0 = Instant::now();
+                        // The session enforces frame ordering/indexing.
+                        let layer = session.decode_frame(&frame, &self.metas[li])?;
+                        decode_time += t0.elapsed();
+                        grads.layers.push(layer);
+                    }
+                    other => anyhow::bail!("expected UpdateFrame, got {other:?}"),
                 }
-                other => anyhow::bail!("expected UpdateFrame, got {other:?}"),
+            }
+            session.finish()?;
+            Ok((grads, wire_bytes, decode_time))
+        };
+        match decode() {
+            Ok(out) => {
+                self.checkin(client, cs)?;
+                Ok(out)
+            }
+            Err(e) => {
+                self.store.remove(client)?;
+                Err(e)
             }
         }
-        session.finish()?;
-        Ok((grads, wire_bytes, decode_time))
     }
 
     /// Apply the aggregated mean gradient to the global parameters.
@@ -110,17 +246,32 @@ impl Server {
     }
 
     /// Full synchronous round over live channels (threaded/TCP mode):
-    /// broadcast params, collect updates (monolithic or frame-streamed),
-    /// aggregate, step.
+    /// broadcast params, run the state handshake, collect updates
+    /// (monolithic or frame-streamed), aggregate, step.
     pub fn run_round(&mut self, channels: &mut [Box<dyn Channel>]) -> crate::Result<RoundStats> {
         let round = self.round;
         let bcast = Msg::GlobalParams { round, tensors: self.params.clone() };
         for ch in channels.iter_mut() {
             ch.send(&bcast)?;
         }
+        let mut stats = RoundStats { round, participants: channels.len(), ..Default::default() };
+        // ── Pass 1: state epoch handshake (before any client trains). ──
+        for ch in channels.iter_mut() {
+            match ch.recv()? {
+                Msg::StateCheck { client_id, rounds, fingerprint } => {
+                    let reset =
+                        self.check_state(client_id, StateEpoch { rounds, fingerprint })?;
+                    if reset {
+                        stats.resyncs += 1;
+                    }
+                    ch.send(&Msg::StateResync { client_id, reset })?;
+                }
+                other => anyhow::bail!("expected StateCheck, got {other:?}"),
+            }
+        }
+        // ── Pass 2: updates. ──
         let raw_model_bytes: usize = self.metas.iter().map(|m| m.numel * 4).sum();
         let mut agg = FedAvg::new();
-        let mut stats = RoundStats { round, ..Default::default() };
         for idx in 0..channels.len() {
             match channels[idx].recv()? {
                 Msg::Update { client_id, round: r, payload, train_loss, n_samples } => {
@@ -128,15 +279,17 @@ impl Server {
                     stats.payload_bytes += payload.len();
                     stats.raw_bytes += raw_model_bytes;
                     stats.mean_loss += train_loss as f64;
-                    let dt = self.absorb_payload(idx, &payload, n_samples as f64, &mut agg)?;
+                    let dt =
+                        self.absorb_payload(client_id, &payload, n_samples as f64, &mut agg)?;
                     stats.decomp_time += dt;
                 }
                 Msg::UpdateBegin { client_id, round: r, n_layers, train_loss, n_samples } => {
                     anyhow::ensure!(r == round, "client {client_id} answered round {r}");
+                    self.ensure_admitted(client_id)?;
                     stats.raw_bytes += raw_model_bytes;
                     stats.mean_loss += train_loss as f64;
                     let (grads, wire_bytes, dt) = self.recv_streamed_update(
-                        idx,
+                        client_id,
                         channels[idx].as_mut(),
                         round,
                         n_layers as usize,
@@ -149,6 +302,7 @@ impl Server {
             }
         }
         stats.mean_loss /= channels.len().max(1) as f64;
+        self.record_store_occupancy(&mut stats);
         self.finish_round(agg);
         Ok(stats)
     }
@@ -161,11 +315,14 @@ impl Server {
         Ok(())
     }
 
-    /// Wait for the Hello of every client (threaded/TCP mode).
-    pub fn wait_hellos(&self, channels: &mut [Box<dyn Channel>]) -> crate::Result<()> {
+    /// Wait for the Hello of every client (threaded/TCP mode), admitting
+    /// each announced id.
+    pub fn wait_hellos(&mut self, channels: &mut [Box<dyn Channel>]) -> crate::Result<()> {
         for ch in channels.iter_mut() {
             match ch.recv()? {
-                Msg::Hello { .. } => {}
+                Msg::Hello { client_id } => {
+                    self.admitted.insert(client_id);
+                }
                 other => anyhow::bail!("expected Hello, got {other:?}"),
             }
         }
@@ -183,5 +340,102 @@ impl Server {
                 .map(|(m, p)| LayerGrad::new(m.clone(), p.clone()))
                 .collect(),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::pipeline::{FedgecCodec, FedgecConfig, FedgecEngine};
+    use crate::compress::GradientCodec;
+    use crate::tensor::LayerMeta;
+    use crate::util::rng::Rng;
+
+    fn small_model() -> (Vec<Vec<f32>>, Vec<LayerMeta>) {
+        let metas = vec![LayerMeta::dense("fc", 1500, 1), LayerMeta::other("b", 8)];
+        let params = vec![vec![0.0; 1500], vec![0.0; 8]];
+        (params, metas)
+    }
+
+    fn server() -> Server {
+        let (params, metas) = small_model();
+        Server::with_engine(
+            params,
+            metas,
+            0.1,
+            Box::new(FedgecEngine::new(FedgecConfig::default())),
+        )
+    }
+
+    fn grads(metas: &[LayerMeta], rng: &mut Rng) -> ModelGrad {
+        ModelGrad {
+            layers: metas
+                .iter()
+                .map(|m| {
+                    let data: Vec<f32> =
+                        (0..m.numel).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+                    LayerGrad::new(m.clone(), data)
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn unknown_client_is_err_not_panic() {
+        let mut srv = server();
+        let mut agg = FedAvg::new();
+        // Out-of-range / never-admitted ids used to panic on
+        // `self.codecs[client_idx]`; now they are a proper Err.
+        let err = srv.absorb_payload(99, &[1, 2, 3], 1.0, &mut agg).unwrap_err();
+        assert!(err.to_string().contains("unknown client 99"), "{err}");
+        assert!(srv.check_state(99, StateEpoch::cold()).is_err());
+        srv.admit(7);
+        assert!(srv.is_admitted(7) && !srv.is_admitted(99));
+    }
+
+    #[test]
+    fn state_handshake_warm_and_cold_paths() {
+        let mut srv = server();
+        srv.admit(0);
+        let metas = srv.metas.clone();
+        let mut rng = Rng::new(3);
+        let mut client = FedgecCodec::new(FedgecConfig::default());
+        let mut epoch = StateEpoch::cold();
+        // Round 1: both cold — no reset.
+        assert!(!srv.check_state(0, epoch).unwrap());
+        let mut agg = FedAvg::new();
+        let p = client.compress(&grads(&metas, &mut rng)).unwrap();
+        srv.absorb_payload(0, &p, 1.0, &mut agg).unwrap();
+        epoch.advance(client.state_fingerprint());
+        // Round 2: warm on both sides — still no reset, epochs agree.
+        assert!(!srv.check_state(0, epoch).unwrap());
+        // Client loses its state (simulated device churn): mismatch ⇒
+        // reset ordered, server copy dropped.
+        let fresh = FedgecCodec::new(FedgecConfig::default());
+        assert!(srv.check_state(0, StateEpoch::cold()).unwrap());
+        assert_eq!(srv.store_stats().resident_clients, 0);
+        // Cold restart re-converges.
+        let mut client = fresh;
+        let p = client.compress(&grads(&metas, &mut rng)).unwrap();
+        srv.absorb_payload(0, &p, 1.0, &mut agg).unwrap();
+        let mut epoch = StateEpoch::cold();
+        epoch.advance(client.state_fingerprint());
+        assert!(!srv.check_state(0, epoch).unwrap());
+    }
+
+    #[test]
+    fn failed_decode_drops_server_state() {
+        let mut srv = server();
+        srv.admit(1);
+        let metas = srv.metas.clone();
+        let mut rng = Rng::new(9);
+        let mut client = FedgecCodec::new(FedgecConfig::default());
+        let mut agg = FedAvg::new();
+        let p = client.compress(&grads(&metas, &mut rng)).unwrap();
+        srv.absorb_payload(1, &p, 1.0, &mut agg).unwrap();
+        assert_eq!(srv.store_stats().resident_clients, 1);
+        assert!(srv.absorb_payload(1, &[0xFF; 16], 1.0, &mut agg).is_err());
+        // Corrupt payload must not leave a half-updated mirror behind.
+        assert_eq!(srv.store_stats().resident_clients, 0);
     }
 }

@@ -115,17 +115,23 @@ fn cmd_serve(args: &Args) -> fedgec::Result<()> {
     let metas = proto.layer_metas();
     let init =
         vec![proto.conv_w.clone(), proto.conv_b.clone(), proto.fc_w.clone(), proto.fc_b.clone()];
-    let codecs: fedgec::Result<Vec<_>> =
-        (0..cfg.n_clients).map(|_| fedgec::coordinator::build_codec(&cfg)).collect();
-    let mut server = fedgec::fl::server::Server::new(init, metas, cfg.server_lr, codecs?);
+    let mut server = fedgec::fl::server::Server::new(
+        init,
+        metas,
+        cfg.server_lr,
+        fedgec::coordinator::build_engine(&cfg)?,
+        cfg.build_state_store()?,
+    );
     server.wait_hellos(&mut channels)?;
     for r in 0..cfg.rounds {
         let stats = server.run_round(&mut channels)?;
         println!(
-            "round {r}: loss {:.4} CR {:.2} payload {:.1} KB",
+            "round {r}: loss {:.4} CR {:.2} payload {:.1} KB | {} states ({:.0} KB)",
             stats.mean_loss,
             stats.ratio(),
-            stats.payload_bytes as f64 / 1e3
+            stats.payload_bytes as f64 / 1e3,
+            stats.store_clients,
+            stats.store_bytes as f64 / 1e3,
         );
     }
     server.shutdown(&mut channels)?;

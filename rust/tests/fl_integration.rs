@@ -81,6 +81,62 @@ fn threaded_runtime_matches_protocol() {
 }
 
 #[test]
+fn partial_participation_trains_and_tracks_store() {
+    let mut cfg = base_cfg();
+    cfg.n_clients = 8;
+    cfg.rounds = 8;
+    cfg.participation = 0.5;
+    let summary = run_local(&cfg).expect("partial run");
+    assert_eq!(summary.rounds.len(), 8);
+    // Participation actually varies below the full fleet.
+    assert!(summary.rounds.iter().all(|r| r.participants >= 1 && r.participants <= 8));
+    assert!(
+        summary.rounds.iter().any(|r| r.participants < 8),
+        "participation=0.5 should skip clients some rounds"
+    );
+    // Store occupancy only grows as new clients first participate, and
+    // never exceeds the fleet; no resyncs happen without eviction/churn.
+    let mut seen = 0usize;
+    for r in &summary.rounds {
+        assert!(r.store_clients <= 8);
+        assert!(r.store_clients >= seen.min(8));
+        seen = seen.max(r.store_clients);
+        assert_eq!(r.resyncs, 0);
+        assert!(r.store_bytes > 0);
+    }
+    // Training still converges on the participating subsets.
+    let losses = summary.loss_curve();
+    assert!(losses.last().unwrap() < losses.first().unwrap(), "{losses:?}");
+}
+
+#[test]
+fn budgeted_store_evicts_and_recovers_mid_training() {
+    // A store budget far below 16 full states: eviction + resync runs
+    // inside a real training loop and the run still completes/learns.
+    // (One native-model mirror state is ~100 KB — only the 5120-element
+    // fc layer is lossy; 0.2 MB across 8 shards keeps roughly one state
+    // per shard resident.)
+    let mut cfg = base_cfg();
+    cfg.n_clients = 16;
+    cfg.rounds = 4;
+    cfg.samples_per_client = 32;
+    cfg.store_budget_mb = 0.2;
+    let summary = run_local(&cfg).expect("budgeted run");
+    assert_eq!(summary.rounds.len(), 4);
+    let total_resyncs: usize = summary.rounds.iter().map(|r| r.resyncs).sum();
+    assert!(total_resyncs > 0, "budget should force evictions + resyncs");
+    // Far fewer resident states than clients (each of the 8 shards keeps
+    // at least one, evicting the rest).
+    assert!(
+        summary.rounds.iter().all(|r| r.store_clients <= 8),
+        "store must stay well under 16 states: {:?}",
+        summary.rounds.iter().map(|r| r.store_clients).collect::<Vec<_>>()
+    );
+    let losses = summary.loss_curve();
+    assert!(losses.last().unwrap() < losses.first().unwrap(), "{losses:?}");
+}
+
+#[test]
 fn virtual_link_accounting_scales_with_bandwidth() {
     // Zero latency so only the bandwidth term is compared.
     let mut slow = base_cfg();

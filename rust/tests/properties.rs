@@ -352,3 +352,80 @@ fn prop_zero_and_constant_layers_roundtrip() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_state_store_evict_reload_roundtrips_exactly() {
+    // The satellite invariant of the externalized-state redesign: a
+    // LayerState that leaves the hot tier and comes back — through the
+    // spill record codec, the disk store's evict→reload path, or the
+    // memory store's take→put cycle — must be *fingerprint-identical*,
+    // or the client/server mirrors would silently diverge.
+    use fedgec::compress::state::{ClientState, StateEpoch};
+    use fedgec::compress::store::{
+        decode_client_state, encode_client_state, DiskSpillStore, ShardedMemStore, StateStore,
+    };
+
+    let dir = std::env::temp_dir().join(format!("fedgec_prop_spill_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    prop::check("state store evict→reload", 30, |rng| {
+        // A random warm state: 1..4 layers, each having absorbed 1..3
+        // rounds of adversarial gradients (arb_gradient mixes scales,
+        // zeros, and non-finite escapes), some with EMA memory.
+        let mut cs = ClientState::cold();
+        let n_layers = 1 + rng.next_below(4);
+        cs.codec.ensure(n_layers);
+        for li in 0..n_layers {
+            if li > 0 && rng.chance(0.2) {
+                continue; // leave some layers cold (never absorbed)
+            }
+            let n = 8 + prop::arb_len(rng, 1500);
+            for _ in 0..1 + rng.next_below(3) {
+                let recon: Vec<f32> = prop::arb_gradient(rng, n)
+                    .into_iter()
+                    .map(|x| if x.is_finite() { x } else { 0.0 })
+                    .collect();
+                cs.codec.layers[li].absorb(&recon);
+            }
+            if rng.chance(0.7) {
+                cs.codec.layers[li].memory = prop::arb_gradient(rng, n);
+            }
+        }
+        cs.epoch = StateEpoch {
+            rounds: 1 + rng.next_below(50) as u32,
+            fingerprint: cs.codec.fingerprint(),
+        };
+        let want = cs.codec.fingerprint();
+
+        // 1. The spill record codec alone.
+        let rec = encode_client_state(&cs, Default::default()).map_err(|e| e.to_string())?;
+        let back = decode_client_state(&rec).map_err(|e| e.to_string())?;
+        if back.codec.fingerprint() != want || back.epoch != cs.epoch {
+            return Err("spill record codec not exact".into());
+        }
+
+        // 2. Memory backend: take→put cycle.
+        let mem = ShardedMemStore::new(2, None);
+        mem.put(11, cs.clone()).map_err(|e| e.to_string())?;
+        let got = mem.take(11).map_err(|e| e.to_string())?.ok_or("mem take lost state")?;
+        if got.codec.fingerprint() != want {
+            return Err("mem store round-trip not exact".into());
+        }
+
+        // 3. Disk backend: a 1-byte hot budget forces every second put to
+        // evict-to-disk; the reload must be exact.
+        let disk = DiskSpillStore::new(&dir, 1, 1).map_err(|e| e.to_string())?;
+        disk.put(1, cs.clone()).map_err(|e| e.to_string())?;
+        disk.put(2, ClientState::cold()).map_err(|e| e.to_string())?; // evicts client 1
+        if disk.stats().spilled_clients == 0 {
+            return Err("expected a spill".into());
+        }
+        let got = disk.take(1).map_err(|e| e.to_string())?.ok_or("disk take lost state")?;
+        if got.codec.fingerprint() != want || got.epoch != cs.epoch {
+            return Err("disk evict→reload not exact".into());
+        }
+        disk.remove(2).map_err(|e| e.to_string())?;
+        Ok(())
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}

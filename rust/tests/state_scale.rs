@@ -1,0 +1,166 @@
+//! Scale test for the externalized-state server (run in release by CI):
+//! 10 000 distinct clients churn through a parameter server whose state
+//! store is budgeted far below 10 000 full mirror states. The run must
+//! complete, stay inside the budget, keep every participating client's
+//! state fingerprint equal to the server's copy, and finish fast enough
+//! that the eviction path is clearly not quadratic (wall-clock guard).
+
+use std::time::Instant;
+
+use fedgec::compress::pipeline::{FedgecCodec, FedgecConfig, FedgecEngine};
+use fedgec::compress::state::StateEpoch;
+use fedgec::compress::store::ShardedMemStore;
+use fedgec::compress::GradientCodec;
+use fedgec::fl::aggregate::FedAvg;
+use fedgec::fl::server::Server;
+use fedgec::tensor::{LayerGrad, LayerMeta, ModelGrad};
+use fedgec::util::rng::Rng;
+
+const N_CLIENTS: u32 = 10_000;
+const WAVES: usize = 4;
+const STICKY: u32 = 64;
+
+fn metas() -> Vec<LayerMeta> {
+    // One lossy layer (numel > t_lossy=1024 ⇒ carries predictor state)
+    // plus a small lossless one.
+    vec![LayerMeta::dense("fc", 1280, 1), LayerMeta::other("bias", 64)]
+}
+
+fn grads(metas: &[LayerMeta], rng: &mut Rng) -> ModelGrad {
+    ModelGrad {
+        layers: metas
+            .iter()
+            .map(|m| {
+                let data: Vec<f32> = (0..m.numel).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+                LayerGrad::new(m.clone(), data)
+            })
+            .collect(),
+    }
+}
+
+/// One participated round for a client codec; asserts the mirror
+/// invariant (client fingerprint == server-held fingerprint) afterwards.
+fn participate(
+    id: u32,
+    codec: &mut FedgecCodec,
+    epoch: &mut StateEpoch,
+    server: &mut Server,
+    agg: &mut FedAvg,
+    rng: &mut Rng,
+    metas: &[LayerMeta],
+) -> bool {
+    let reset = server.check_state(id, *epoch).unwrap();
+    if reset {
+        codec.reset();
+        *epoch = StateEpoch::cold();
+    }
+    let payload = codec.compress(&grads(metas, rng)).unwrap();
+    server.absorb_payload(id, &payload, 1.0, agg).unwrap();
+    epoch.advance(codec.state_fingerprint());
+    assert_eq!(
+        server.state_epoch(id).unwrap(),
+        Some(*epoch),
+        "client {id}: mirror fingerprints diverged"
+    );
+    reset
+}
+
+#[test]
+fn ten_thousand_clients_under_small_store_budget() {
+    let t0 = Instant::now();
+    let metas = metas();
+    // One warm state ≈ 1280 elements × 4 B × 5 buffers ≈ 26 KB. Budget
+    // ~256 states ≈ 6.5 MB — 40× smaller than 10k full states.
+    let one_state_bytes = 1280 * 4 * 5;
+    let budget = 256 * one_state_bytes;
+    let params: Vec<Vec<f32>> = metas.iter().map(|m| vec![0.0; m.numel]).collect();
+    let mut server = Server::new(
+        params,
+        metas.clone(),
+        0.1,
+        Box::new(FedgecEngine::new(FedgecConfig::default())),
+        Box::new(ShardedMemStore::new(8, Some(budget))),
+    );
+    for id in 0..N_CLIENTS {
+        server.admit(id);
+    }
+
+    // Sticky clients persist across waves (their codecs live on); the
+    // rest of the fleet churns through once each — the device-churn
+    // regime where eviction + the resync handshake carry the load.
+    let mut sticky: Vec<(FedgecCodec, StateEpoch)> = (0..STICKY)
+        .map(|_| (FedgecCodec::new(FedgecConfig::default()), StateEpoch::cold()))
+        .collect();
+    let mut rng = Rng::new(0x5CA1E);
+    let per_wave = (N_CLIENTS - STICKY) as usize / WAVES;
+    let mut sticky_resets = 0usize;
+    for wave in 0..WAVES {
+        let mut agg = FedAvg::new();
+        let lo = STICKY + (wave * per_wave) as u32;
+        for id in lo..lo + per_wave as u32 {
+            // Transient client: fresh (cold) codec, participates once.
+            let mut codec = FedgecCodec::new(FedgecConfig::default());
+            let mut epoch = StateEpoch::cold();
+            let reset =
+                participate(id, &mut codec, &mut epoch, &mut server, &mut agg, &mut rng, &metas);
+            assert!(!reset, "first-contact client {id} must not need a reset");
+        }
+        for (i, (codec, epoch)) in sticky.iter_mut().enumerate() {
+            if participate(i as u32, codec, epoch, &mut server, &mut agg, &mut rng, &metas) {
+                sticky_resets += 1;
+            }
+        }
+        server.finish_round(agg);
+        let occ = server.store_stats();
+        assert!(
+            occ.resident_bytes <= budget,
+            "wave {wave}: resident {} over budget {budget}",
+            occ.resident_bytes
+        );
+    }
+    let occ = server.store_stats();
+    assert!(
+        occ.resident_clients < N_CLIENTS as usize / 10,
+        "store must hold a small fraction of the fleet, got {}",
+        occ.resident_clients
+    );
+    assert!(occ.evictions > 1000, "churn at this scale must evict, got {}", occ.evictions);
+    assert!(
+        sticky_resets > 0,
+        "sticky clients drowned by churn must have been evicted + resynced"
+    );
+
+    // Quiet phase: only the sticky clients participate. The first quiet
+    // round re-seats any evicted state; from then on the fleet-of-64
+    // fits the budget, so the second quiet round must be reset-free.
+    for quiet in 0..2 {
+        let mut agg = FedAvg::new();
+        let mut resets = 0usize;
+        for (i, (codec, epoch)) in sticky.iter_mut().enumerate() {
+            if participate(i as u32, codec, epoch, &mut server, &mut agg, &mut rng, &metas) {
+                resets += 1;
+            }
+        }
+        server.finish_round(agg);
+        if quiet == 1 {
+            assert_eq!(resets, 0, "warm sticky fleet must stay warm");
+        }
+    }
+
+    // Wall-clock guard: ~10k cold-start decodes plus eviction churn must
+    // stay comfortably sub-linear-ish; a quadratic eviction scan or a
+    // store lock convoy blows straight past this.
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed.as_secs_f64() < 90.0,
+        "10k-client run took {elapsed:?} — eviction path too slow"
+    );
+    println!(
+        "10k clients, {WAVES} waves: {:?} wall, {} evictions, {} resident ({} KB) under {} KB budget",
+        elapsed,
+        occ.evictions,
+        occ.resident_clients,
+        occ.resident_bytes / 1000,
+        budget / 1000
+    );
+}

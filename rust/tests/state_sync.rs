@@ -3,9 +3,13 @@
 //! only the transmitted payload — including under full-batch mode, codec
 //! resets, and mixed layer types.
 
-use fedgec::compress::pipeline::{FedgecCodec, FedgecConfig};
+use fedgec::compress::pipeline::{FedgecCodec, FedgecConfig, FedgecEngine};
 use fedgec::compress::quant::ErrorBound;
+use fedgec::compress::state::StateEpoch;
+use fedgec::compress::store::ShardedMemStore;
 use fedgec::compress::GradientCodec;
+use fedgec::fl::aggregate::FedAvg;
+use fedgec::fl::server::Server;
 use fedgec::tensor::model_zoo::ModelArch;
 use fedgec::tensor::LayerMeta;
 use fedgec::train::gradgen::{GradGen, GradGenConfig};
@@ -68,7 +72,8 @@ fn sync_across_error_bounds() {
 
 #[test]
 fn reset_resynchronizes_both_sides() {
-    let (mut client, mut server) = run_rounds(FedgecConfig::default(), GradGenConfig::default(), 4, 4);
+    let (mut client, mut server) =
+        run_rounds(FedgecConfig::default(), GradGenConfig::default(), 4, 4);
     client.reset();
     server.reset();
     assert_eq!(client.state.fingerprint(), server.state.fingerprint());
@@ -79,6 +84,142 @@ fn reset_resynchronizes_both_sides() {
     let payload = client.compress(&grads).unwrap();
     server.decompress(&payload, &metas).unwrap();
     assert_eq!(client.state.fingerprint(), server.state.fingerprint());
+}
+
+/// One simulated federated client against the engine+store server.
+struct SimClient {
+    codec: FedgecCodec,
+    gen: GradGen,
+    epoch: StateEpoch,
+}
+
+impl SimClient {
+    fn new(metas: Vec<LayerMeta>, seed: u64) -> SimClient {
+        SimClient {
+            codec: FedgecCodec::new(FedgecConfig::default()),
+            gen: GradGen::new(metas, GradGenConfig::default(), seed),
+            epoch: StateEpoch::cold(),
+        }
+    }
+
+    /// One participated round: handshake, compress, upload. Returns
+    /// whether the server ordered a cold-start reset.
+    fn round(&mut self, id: u32, server: &mut Server, agg: &mut FedAvg) -> bool {
+        let reset = server.check_state(id, self.epoch).unwrap();
+        if reset {
+            self.codec.reset();
+            self.epoch = StateEpoch::cold();
+        }
+        let grads = self.gen.next_round();
+        let payload = self.codec.compress(&grads).unwrap();
+        server.absorb_payload(id, &payload, 1.0, agg).unwrap();
+        self.epoch.advance(self.codec.state_fingerprint());
+        // The synchronization invariant, restated in epoch terms: after
+        // every participated round the server-held epoch (rounds AND
+        // state fingerprint) is bit-identical to the client's.
+        assert_eq!(server.state_epoch(id).unwrap(), Some(self.epoch), "client {id}");
+        reset
+    }
+}
+
+fn engine_server(metas: &[LayerMeta]) -> Server {
+    let params: Vec<Vec<f32>> = metas.iter().map(|m| vec![0.0; m.numel]).collect();
+    Server::with_engine(
+        params,
+        metas.to_vec(),
+        0.1,
+        Box::new(FedgecEngine::new(FedgecConfig::default())),
+    )
+}
+
+#[test]
+fn dropout_rejoin_resyncs_via_state_check() {
+    // Three clients against one engine + store:
+    //   0 — participates every round (control: never reset);
+    //   1 — drops out rounds 2..=4 with its state INTACT, rejoins at 5:
+    //       the epoch handshake recognizes it and keeps it warm;
+    //   2 — drops at round 3 and LOSES its local state (device churn),
+    //       rejoins at 4: the handshake mismatches, both sides cold-start,
+    //       and the fingerprints re-converge bit-identically.
+    let metas = metas();
+    let mut server = engine_server(&metas);
+    for id in 0..3 {
+        server.admit(id);
+    }
+    let mut clients: Vec<SimClient> =
+        (0..3).map(|i| SimClient::new(metas.clone(), 50 + i)).collect();
+    for round in 0..8usize {
+        let mut agg = FedAvg::new();
+        let reset0 = clients[0].round(0, &mut server, &mut agg);
+        assert!(!reset0, "persistent client reset at round {round}");
+        if !(2..=4).contains(&round) {
+            let reset1 = clients[1].round(1, &mut server, &mut agg);
+            assert!(!reset1, "intact-state rejoin must stay warm (round {round})");
+        }
+        if round == 3 {
+            // Device churn: client 2 loses everything it knew.
+            clients[2] = SimClient::new(metas.clone(), 999);
+        } else {
+            let reset2 = clients[2].round(2, &mut server, &mut agg);
+            // The one cold rejoin is detected; every other round is warm.
+            assert_eq!(reset2, round == 4, "client 2 round {round}");
+        }
+        server.finish_round(agg);
+    }
+    // All three mirrors ended in sync and resident.
+    assert_eq!(server.store_stats().resident_clients, 3);
+    for (id, c) in clients.iter().enumerate() {
+        assert_eq!(server.state_epoch(id as u32).unwrap(), Some(c.epoch));
+    }
+}
+
+#[test]
+fn eviction_detected_and_recovered_by_resync() {
+    // A store budgeted for ~2 states serving 4 clients: whoever is
+    // evicted gets a cold-start order on its next round instead of a
+    // silent divergence, and re-converges immediately.
+    let metas = metas();
+    let params: Vec<Vec<f32>> = metas.iter().map(|m| vec![0.0; m.numel]).collect();
+    let mut probe = SimClient::new(metas.clone(), 7);
+    let mut probe_agg = FedAvg::new();
+    let mut sizing_server = engine_server(&metas);
+    sizing_server.admit(0);
+    probe.round(0, &mut sizing_server, &mut probe_agg);
+    let one_state = sizing_server.store_stats().resident_bytes;
+    assert!(one_state > 0);
+
+    let mut server = Server::new(
+        params,
+        metas.clone(),
+        0.1,
+        Box::new(FedgecEngine::new(FedgecConfig::default())),
+        Box::new(ShardedMemStore::new(1, Some(one_state * 2 + one_state / 2))),
+    );
+    let n = 4u32;
+    let mut clients: Vec<SimClient> =
+        (0..n).map(|i| SimClient::new(metas.clone(), 100 + i as u64)).collect();
+    for id in 0..n {
+        server.admit(id);
+    }
+    let mut resets = 0;
+    for _round in 0..3 {
+        let mut agg = FedAvg::new();
+        for id in 0..n {
+            if clients[id as usize].round(id, &mut server, &mut agg) {
+                resets += 1;
+            }
+        }
+        server.finish_round(agg);
+    }
+    let stats = server.store_stats();
+    assert!(stats.evictions > 0, "budget must have forced evictions");
+    assert!(resets > 0, "evicted clients must have been reset via the handshake");
+    assert!(
+        stats.resident_bytes <= one_state * 3,
+        "resident {} vs budget {}",
+        stats.resident_bytes,
+        one_state * 2 + one_state / 2
+    );
 }
 
 #[test]

@@ -18,6 +18,10 @@ fn fedgec_codec() -> Box<dyn fedgec::compress::GradientCodec> {
     CodecSpec::parse_with("fedgec", &SpecDefaults::with_rel_eb(1e-2)).unwrap().build()
 }
 
+fn fedgec_engine() -> Box<dyn fedgec::compress::CodecEngine> {
+    CodecSpec::parse_with("fedgec", &SpecDefaults::with_rel_eb(1e-2)).unwrap().build_engine()
+}
+
 fn spawn_client(
     addr: String,
     id: u32,
@@ -50,13 +54,16 @@ fn tcp_federation_trains() {
     let proto = NativeNet::new(10, 5);
     let init =
         vec![proto.conv_w.clone(), proto.conv_b.clone(), proto.fc_w.clone(), proto.fc_b.clone()];
-    let codecs: Vec<_> = (0..n_clients).map(|_| fedgec_codec()).collect();
-    let mut server = Server::new(init, proto.layer_metas(), 0.2, codecs);
+    let mut server = Server::with_engine(init, proto.layer_metas(), 0.2, fedgec_engine());
     server.wait_hellos(&mut channels).unwrap();
     let mut losses = Vec::new();
-    for _ in 0..4 {
+    for round in 0..4 {
         let stats = server.run_round(&mut channels).unwrap();
         assert!(stats.ratio() > 1.5, "CR {}", stats.ratio());
+        // The handshake never resets in a stable federation, and the
+        // store holds exactly one mirror state per client.
+        assert_eq!(stats.resyncs, 0, "round {round}");
+        assert_eq!(stats.store_clients, n_clients);
         losses.push(stats.mean_loss);
     }
     server.shutdown(&mut channels).unwrap();
@@ -82,8 +89,7 @@ fn tcp_throttled_link_slows_uploads() {
     let proto = NativeNet::new(10, 5);
     let init =
         vec![proto.conv_w.clone(), proto.conv_b.clone(), proto.fc_w.clone(), proto.fc_b.clone()];
-    let codecs = vec![fedgec_codec()];
-    let mut server = Server::new(init, proto.layer_metas(), 0.2, codecs);
+    let mut server = Server::with_engine(init, proto.layer_metas(), 0.2, fedgec_engine());
     server.wait_hellos(&mut channels).unwrap();
     let t0 = std::time::Instant::now();
     let stats = server.run_round(&mut channels).unwrap();
