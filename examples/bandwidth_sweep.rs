@@ -55,7 +55,7 @@ fn main() -> fedgec::Result<()> {
         &["bandwidth", "uncompressed", "fedgec", "sz3", "fedgec gain"],
     );
     for &mbps in &mbps_points {
-        let link = LinkSpec { bits_per_sec: mbps * 1e6, latency: Duration::ZERO };
+        let link = LinkSpec::sym(mbps * 1e6, Duration::ZERO);
         let unc = link.transmit_time(costs[0].raw);
         let times: Vec<Duration> =
             costs.iter().map(|c| c.codec_time + link.transmit_time(c.payload)).collect();
@@ -75,5 +75,45 @@ fn main() -> fedgec::Result<()> {
     let saved_bytes = (c.raw - c.payload) as f64 * 8.0;
     let breakeven = saved_bytes / c.codec_time.as_secs_f64() / 1e6;
     println!("fedgec break-even bandwidth ≈ {breakeven:.0} Mbps (compression pays below this)");
+
+    // ── Round-trip sweep over an asymmetric link (down = 4x up, the
+    // typical access-network shape): the broadcast pull now counts too.
+    // The downlink ships the global-model delta, encoded once on the
+    // server and fanned out to every client. ──
+    let fan_out = 8usize;
+    let (raw_down, delta_bytes, enc_time) = fedgec::train::gradgen::measure_downlink_delta(
+        &metas,
+        GradGenConfig::default(),
+        11,
+        1e-3,
+        fan_out,
+        rounds,
+    )?;
+    let up = &costs[0]; // fedgec uplink measured above
+    let mut rt = Table::new(
+        &format!(
+            "Round trip on an asymmetric link (down = 4x up, {rounds} rounds, \
+             downlink delta CR {:.2})",
+            (raw_down * rounds) as f64 / delta_bytes as f64
+        ),
+        &["up bandwidth", "raw both ways", "up-only compressed", "both compressed"],
+    );
+    for &mbps in &mbps_points {
+        let link = LinkSpec::asym_mbps(mbps, 4.0 * mbps);
+        let raw_rt = link.transmit_time(up.raw) + link.downlink_time(raw_down * rounds);
+        let up_only =
+            up.codec_time + link.transmit_time(up.payload) + link.downlink_time(raw_down * rounds);
+        let both = up.codec_time
+            + link.transmit_time(up.payload)
+            + link.downlink_time(delta_bytes)
+            + enc_time / fan_out as u32; // encode once, amortized over the fan-out
+        rt.row(vec![
+            format!("{mbps:.0} Mbps"),
+            fmt_duration(raw_rt),
+            fmt_duration(up_only),
+            fmt_duration(both),
+        ]);
+    }
+    rt.print();
     Ok(())
 }

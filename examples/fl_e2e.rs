@@ -11,11 +11,14 @@
 //! make artifacts && cargo run --release --offline --example fl_e2e
 //! # knobs: FEDGEC_ROUNDS, FEDGEC_CODEC, FEDGEC_EB, FEDGEC_ENGINE=hlo,
 //! #        FEDGEC_MODEL, FEDGEC_CLIENTS, FEDGEC_PARTICIPATION,
-//! #        FEDGEC_STORE_BUDGET_MB
+//! #        FEDGEC_STORE_BUDGET_MB, FEDGEC_DOWN, FEDGEC_DOWN_EB
 //! ```
 //!
 //! Emits `results/BENCH_fl_e2e_state_memory.json` — the per-round
-//! state-memory trajectory captured by the CI bench-smoke job.
+//! state-memory trajectory — and `results/BENCH_fl_e2e_downlink.json` —
+//! the per-round up/down byte and comm-time split — both captured by
+//! the CI bench-smoke job. Set `FEDGEC_DOWN=fedgec` to compress the
+//! broadcast as a global-model delta (encode-once fan-out).
 //!
 //! The run is recorded in EXPERIMENTS.md §E2E.
 
@@ -51,7 +54,6 @@ fn main() -> fedgec::Result<()> {
         server_lr: 0.05, // == local_lr ⇒ exact FedAvg (see config.rs)
         codec: codec.clone(),
         rel_error_bound: eb,
-        link: LinkSpec::mbps(10.0),
         engine,
         eval_every: 5,
         seed: 42,
@@ -60,6 +62,13 @@ fn main() -> fedgec::Result<()> {
         // rest keep their mirror state parked in the server's store.
         participation: env_or("FEDGEC_PARTICIPATION", 0.5),
         store_budget_mb: env_or("FEDGEC_STORE_BUDGET_MB", 0.0),
+        // Downlink broadcast codec: `raw` keeps the f32 fan-out,
+        // `fedgec` streams the global delta (tight bound — the delta
+        // lands in every client's model).
+        down: env_or("FEDGEC_DOWN", "raw".to_string()),
+        down_eb: env_or("FEDGEC_DOWN_EB", 1e-3),
+        // Asymmetric access link: broadcasts ride a faster downlink.
+        link: LinkSpec::asym_mbps(10.0, 40.0),
         ..Default::default()
     };
     println!(
@@ -113,15 +122,52 @@ fn main() -> fedgec::Result<()> {
         }
     );
 
-    // Communication-time comparison vs uncompressed at the same link.
-    let total_raw = summary.total_raw();
-    let uncompressed = cfg.link.transmit_time(total_raw);
+    // Downlink panel: per-round up/down bytes and the comm-time split
+    // (Eq. 1 over both directions) — saved as a BENCH_*.json artifact.
+    let mut dl = fedgec::metrics::Table::new(
+        &format!(
+            "downlink broadcast (down={}, {:.0} Mbps down / {:.0} Mbps up)",
+            cfg.down,
+            cfg.link.down_bits_per_sec / 1e6,
+            cfg.link.bits_per_sec / 1e6
+        ),
+        &[
+            "round", "up KB", "up raw KB", "down KB", "down raw KB", "down CR", "full syncs",
+            "comp", "tx up", "decomp", "down codec", "tx down",
+        ],
+    );
+    for r in &summary.rounds {
+        dl.row(vec![
+            r.round.to_string(),
+            format!("{:.1}", r.payload_bytes as f64 / 1e3),
+            format!("{:.1}", r.raw_bytes as f64 / 1e3),
+            format!("{:.1}", r.downlink_bytes as f64 / 1e3),
+            format!("{:.1}", r.downlink_raw_bytes as f64 / 1e3),
+            format!("{:.2}", r.down_ratio()),
+            r.full_syncs.to_string(),
+            fedgec::metrics::fmt_duration(r.comp_time),
+            fedgec::metrics::fmt_duration(r.transmit_time),
+            fedgec::metrics::fmt_duration(r.decomp_time),
+            fedgec::metrics::fmt_duration(r.down_codec_time),
+            fedgec::metrics::fmt_duration(r.down_transmit_time),
+        ]);
+    }
+    dl.print();
+    dl.save_json("fl_e2e_downlink")?;
+
+    // Communication-time comparison vs uncompressed at the same link —
+    // both directions (Eq. 1: the broadcast pull + the update push).
+    let uncompressed: std::time::Duration =
+        summary.rounds.iter().map(|r| r.uncompressed_time(&cfg.link)).sum();
     let ours = summary.total_comm_time();
     println!(
-        "\nuplink 10 Mbps: uncompressed transfer {} vs {} with {} (−{:.1}%)",
+        "\nround-trip at {:.0}/{:.0} Mbps: uncompressed {} vs {} with codec={} down={} (−{:.1}%)",
+        cfg.link.bits_per_sec / 1e6,
+        cfg.link.down_bits_per_sec / 1e6,
         fedgec::metrics::fmt_duration(uncompressed),
         fedgec::metrics::fmt_duration(ours),
         cfg.codec,
+        cfg.down,
         100.0 * (1.0 - ours.as_secs_f64() / uncompressed.as_secs_f64())
     );
     // Loss curve for EXPERIMENTS.md.

@@ -29,7 +29,11 @@ fn main() -> fedgec::Result<()> {
     let addr = listener.local_addr()?.to_string();
     println!("server on {addr}; {n_clients} clients over throttled 20 Mbps TCP uplinks\n");
 
-    let link = LinkSpec { bits_per_sec: 20e6, latency: std::time::Duration::from_millis(5) };
+    let link = LinkSpec {
+        bits_per_sec: 20e6,
+        down_bits_per_sec: 80e6,
+        latency: std::time::Duration::from_millis(5),
+    };
     let handles: Vec<_> = (0..n_clients)
         .map(|id| {
             let addr = addr.clone();

@@ -78,7 +78,7 @@ fn main() {
     let factor = total_rounds as f64 / measured_rounds as f64;
 
     // ── Upper panel: comm time vs eb at 10 Mbps. ──
-    let link10 = LinkSpec { bits_per_sec: 10e6, latency: Duration::ZERO };
+    let link10 = LinkSpec::sym(10e6, Duration::ZERO);
     let mut upper = Table::new(
         "Fig. 11 upper: total comm time, 100 rounds @ 10 Mbps",
         &["model", "eb", "uncompressed", "sz3", "ours", "ours vs uncomp"],
@@ -114,7 +114,7 @@ fn main() {
     );
     let mut breakeven_seen = false;
     for &mbps in &[1.0, 2.0, 5.0, 10.0, 50.0, 100.0, 200.0, 500.0, 1000.0] {
-        let link = LinkSpec { bits_per_sec: mbps * 1e6, latency: Duration::ZERO };
+        let link = LinkSpec::sym(mbps * 1e6, Duration::ZERO);
         let unc = link.transmit_time(ours.raw);
         let t_ours = ours.codec_time + link.transmit_time(ours.payload);
         let t_sz3 = sz3.codec_time + link.transmit_time(sz3.payload);
@@ -165,7 +165,7 @@ fn main() {
     );
     let mut best_win = 0.0f64;
     for &mbps in &[1.0, 10.0, 50.0, 100.0, 500.0] {
-        let link = LinkSpec { bits_per_sec: mbps * 1e6, latency: Duration::ZERO };
+        let link = LinkSpec::sym(mbps * 1e6, Duration::ZERO);
         let mono = total_comp + link.transmit_time(total_wire);
         let streamed = pipelined_time(&layer_comp, &layer_wire, &link);
         let win = 1.0 - streamed.as_secs_f64() / mono.as_secs_f64();
@@ -199,8 +199,65 @@ fn main() {
     );
 
     // Shape checks: large gains at <=10 Mbps; gain shrinks with bandwidth.
-    let link1 = LinkSpec { bits_per_sec: 1e6, latency: Duration::ZERO };
+    let link1 = LinkSpec::sym(1e6, Duration::ZERO);
     let unc1 = link1.transmit_time(ours.raw).as_secs_f64();
     let t1 = (ours.codec_time + link1.transmit_time(ours.payload)).as_secs_f64();
     assert!(1.0 - t1 / unc1 > 0.7, "at 1 Mbps the reduction should exceed 70%");
+
+    // ── Downlink panel: encode-once global-delta broadcast vs the raw
+    // f32 fan-out. The server compresses θ_t − θ_ref once per round
+    // (one cross-round predictor state for the whole federation) and
+    // every client pulls the same encoded frames, so the codec cost
+    // amortizes over the fan-out while the transfer shrinks by the
+    // delta's compression ratio. ──
+    {
+        let fan_out = 16usize;
+        let metas = arch.layers(10);
+        let dl_rounds = if full_mode() { 6 } else { 3 };
+        // The global model walks one aggregated-SGD step per round; the
+        // delta is the cross-round-smooth signal the predictor feeds on.
+        let (raw_bytes, delta_bytes, enc_time) =
+            fedgec::train::gradgen::measure_downlink_delta(
+                &metas,
+                GradGenConfig::for_dataset(DatasetSpec::Cifar10),
+                21,
+                1e-3,
+                fan_out,
+                dl_rounds,
+            )
+            .unwrap();
+        let per_round = delta_bytes / dl_rounds;
+        let enc_per_round = enc_time / dl_rounds as u32;
+        let mut dl = Table::new(
+            &format!(
+                "Fig. 11 downlink: {} global-delta broadcast @ eb=1e-3, {fan_out}-client fan-out",
+                arch.name()
+            ),
+            &["down bandwidth (Mbps)", "raw broadcast", "delta broadcast", "win"],
+        );
+        for &mbps in &[10.0, 50.0, 100.0, 500.0] {
+            // Zero latency like every other fig11 panel: only the
+            // bandwidth term is compared (down = 4x the uplink rate).
+            let link = LinkSpec {
+                bits_per_sec: mbps / 4.0 * 1e6,
+                down_bits_per_sec: mbps * 1e6,
+                latency: Duration::ZERO,
+            };
+            let t_raw = link.downlink_time(raw_bytes);
+            // Encode once → each client pays transfer + its 1/fan_out
+            // share of the codec pass.
+            let t_delta = link.downlink_time(per_round) + enc_per_round / fan_out as u32;
+            dl.row(vec![
+                format!("{mbps}"),
+                fmt_duration(t_raw),
+                fmt_duration(t_delta),
+                format!("-{:.1}%", 100.0 * (1.0 - t_delta.as_secs_f64() / t_raw.as_secs_f64())),
+            ]);
+        }
+        dl.print();
+        dl.save_csv("fig11_downlink_broadcast").unwrap();
+        let down_cr = raw_bytes as f64 / per_round as f64;
+        println!("downlink delta CR {down_cr:.2} at eb=1e-3 (one encode fanned out x{fan_out})");
+        assert!(down_cr > 1.5, "warm global-delta broadcast should compress: {down_cr:.2}");
+    }
 }

@@ -1,0 +1,552 @@
+//! Downlink broadcast compression: encode-once / fan-out-many
+//! compression of the **global-model delta** with drift-free reference
+//! sync (the FedSZ observation that EBLC applies to both directions of
+//! FL communication, and the spatio-temporal-correlation observation
+//! that the global delta is smoother across rounds than any single
+//! client gradient).
+//!
+//! # Model
+//!
+//! The server tracks a **reference model** — the lossy view every synced
+//! client holds. Each round it compresses `Δ = θ_global − θ_ref` *once*
+//! with an ordinary [`GradientCodec`] (one server-side cross-round
+//! predictor state for the whole federation, not one per client), runs
+//! the encoded frames back through its own mirror decoder, and applies
+//! the **lossy reconstruction** to the reference. Every client applies
+//! the same frames through the same decode path, so all views stay
+//! bit-identical — and because the next round's delta is computed
+//! against the *lossy* reference, quantization error is re-measured and
+//! re-compressed every round instead of accumulating as drift (the same
+//! closed loop that makes error-bounded quantizers stable).
+//!
+//! # Cold clients and stream resets
+//!
+//! The delta stream only decodes correctly for a client that has (a) the
+//! current reference bytes and (b) the current downlink predictor state.
+//! A cold client (first round, rejoin after a missed round, resync)
+//! bootstraps (a) via a `FullSync` of the reference — but it cannot be
+//! handed (b), so the round *after* any cold join the server resets its
+//! encoder state and orders every synced client to do the same
+//! (`reset = true` on the next delta broadcast). Both sides land on the
+//! codec's deterministic round-1 path — the same philosophy as the
+//! uplink `StateCheck`/`StateResync` handshake: divergence is resolved
+//! by a deterministic cold start, never by silent drift.
+//!
+//! The server half ([`DownlinkCodec`]) plans the round; the client half
+//! ([`DownlinkMirror`]) is also embedded in the server as its reference
+//! tracker, so the invariant "server view == client view" holds by
+//! construction: both run literally the same decode code.
+
+use std::collections::HashSet;
+use std::time::{Duration, Instant};
+
+use super::frame::Frame;
+use super::spec::CodecSpec;
+use super::store::ClientId;
+use super::GradientCodec;
+use crate::tensor::{LayerGrad, LayerMeta, ModelGrad};
+
+/// The client half (and the server's reference tracker): a downlink
+/// codec mirror plus the reference model it keeps in sync.
+pub struct DownlinkMirror {
+    codec: Box<dyn GradientCodec>,
+    metas: Vec<LayerMeta>,
+    /// The tracked lossy model view; `None` until the first `FullSync`
+    /// (or after a failed decode poisoned the view).
+    reference: Option<Vec<Vec<f32>>>,
+}
+
+impl DownlinkMirror {
+    pub fn new(spec: &CodecSpec, metas: Vec<LayerMeta>) -> Self {
+        DownlinkMirror { codec: spec.build(), metas, reference: None }
+    }
+
+    pub fn metas(&self) -> &[LayerMeta] {
+        &self.metas
+    }
+
+    /// The current model view (`None` before the first `FullSync`).
+    pub fn params(&self) -> Option<&[Vec<f32>]> {
+        self.reference.as_deref()
+    }
+
+    pub fn is_synced(&self) -> bool {
+        self.reference.is_some()
+    }
+
+    /// Bootstrap (or re-bootstrap) from full reference bytes. Resets the
+    /// delta-codec state: the stream restarts cold for this client, and
+    /// the server orders everyone else to reset on its next broadcast.
+    pub fn full_sync(&mut self, tensors: Vec<Vec<f32>>) -> crate::Result<()> {
+        anyhow::ensure!(
+            tensors.len() == self.metas.len()
+                && tensors.iter().zip(&self.metas).all(|(t, m)| t.len() == m.numel),
+            "full sync carries {} layers, model has {}",
+            tensors.len(),
+            self.metas.len()
+        );
+        self.codec.reset();
+        self.reference = Some(tensors);
+        Ok(())
+    }
+
+    /// Decode one round's delta frames and fold the reconstruction into
+    /// the reference. A failed decode poisons the view (the client must
+    /// re-bootstrap via `FullSync`) — a half-applied delta is divergence.
+    pub fn apply_delta(&mut self, reset: bool, frames: &[Frame]) -> crate::Result<&[Vec<f32>]> {
+        anyhow::ensure!(
+            self.reference.is_some(),
+            "delta broadcast before any full sync (cold client missed its bootstrap)"
+        );
+        if reset {
+            self.codec.reset();
+        }
+        // Every failure past this point poisons the view: the server's
+        // reference has already advanced, so a mirror that skipped this
+        // delta (wrong shape, corrupt frame, mid-decode error) is one
+        // round stale and must re-bootstrap, never claim sync.
+        let mut decode = || -> crate::Result<()> {
+            anyhow::ensure!(
+                frames.len() == self.metas.len(),
+                "delta has {} frames, model has {} layers",
+                frames.len(),
+                self.metas.len()
+            );
+            self.codec.begin(self.metas.len())?;
+            let reference = self.reference.as_mut().expect("checked above");
+            for (i, (frame, (meta, slot))) in
+                frames.iter().zip(self.metas.iter().zip(reference.iter_mut())).enumerate()
+            {
+                anyhow::ensure!(
+                    frame.index as usize == i,
+                    "delta frame {} out of order ({})",
+                    i,
+                    frame.index
+                );
+                let (layer, _report) = self.codec.decode_frame(frame, meta)?;
+                for (w, d) in slot.iter_mut().zip(&layer.data) {
+                    *w += d;
+                }
+            }
+            Ok(())
+        };
+        match decode() {
+            Ok(()) => Ok(self.reference.as_deref().expect("checked above")),
+            Err(e) => {
+                self.reference = None;
+                Err(e)
+            }
+        }
+    }
+}
+
+/// One round's delta broadcast: encoded **once**, fanned out to every
+/// warm participant.
+pub struct DeltaBroadcast {
+    /// Every synced client must cold-reset its decoder before decoding
+    /// (the encoder restarted because a cold client joined last round).
+    pub reset: bool,
+    /// One frame per layer, in model order.
+    pub frames: Vec<Frame>,
+}
+
+impl DeltaBroadcast {
+    /// Total frame wire bytes (the shared payload each recipient pulls).
+    pub fn wire_bytes(&self) -> usize {
+        self.frames.iter().map(|f| f.wire_size()).sum()
+    }
+}
+
+/// Accounting for one round of downlink compression.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DownlinkStats {
+    /// Raw f32 model bytes (one copy, not multiplied by fan-out).
+    pub raw_bytes: usize,
+    /// Delta frame wire bytes (one copy; 0 on an all-cold round).
+    pub delta_bytes: usize,
+    /// Encode + reference-mirror decode time (paid once per round,
+    /// amortized over the whole fan-out).
+    pub encode_time: Duration,
+    /// Whether the delta stream restarted cold this round.
+    pub reset: bool,
+}
+
+/// The plan for one round's broadcast: who gets the shared delta frames
+/// and who must bootstrap via `FullSync`.
+pub struct RoundBroadcast {
+    /// The shared encoded delta (`None` when no participant is synced —
+    /// the stream restarts and everyone bootstraps).
+    pub delta: Option<DeltaBroadcast>,
+    /// Participants that must receive a `FullSync` of the post-round
+    /// reference this round.
+    pub cold: Vec<ClientId>,
+    pub stats: DownlinkStats,
+}
+
+/// The server half: plans each round, encodes the delta once, and tracks
+/// the reference through its own [`DownlinkMirror`] — the same decode
+/// path every client runs.
+pub struct DownlinkCodec {
+    enc: Box<dyn GradientCodec>,
+    mirror: DownlinkMirror,
+    /// Clients holding the current reference + decoder state (receiving
+    /// every broadcast since their last `FullSync`). A client that
+    /// misses one delta round falls out and re-bootstraps.
+    synced: HashSet<ClientId>,
+    /// A cold client joined the warm stream last round: reset the
+    /// encoder (and order every decoder to reset) on the next delta.
+    pending_reset: bool,
+}
+
+impl DownlinkCodec {
+    pub fn new(spec: &CodecSpec, metas: Vec<LayerMeta>) -> Self {
+        DownlinkCodec {
+            enc: spec.build(),
+            mirror: DownlinkMirror::new(spec, metas),
+            synced: HashSet::new(),
+            pending_reset: false,
+        }
+    }
+
+    /// The tracked reference model — bit-identical to every synced
+    /// client's view (`None` before the first round).
+    pub fn reference(&self) -> Option<&[Vec<f32>]> {
+        self.mirror.params()
+    }
+
+    pub fn metas(&self) -> &[LayerMeta] {
+        self.mirror.metas()
+    }
+
+    pub fn is_synced(&self, client: ClientId) -> bool {
+        self.synced.contains(&client)
+    }
+
+    pub fn synced_count(&self) -> usize {
+        self.synced.len()
+    }
+
+    /// Plan and encode one round's broadcast for `participants`: encode
+    /// the delta once for the warm subset, advance the reference through
+    /// the mirror decode, and list the cold subset that needs `FullSync`
+    /// (built from [`Self::reference`] *after* this call, so full-sync
+    /// recipients land on exactly the post-round view).
+    pub fn encode_round(
+        &mut self,
+        params: &[Vec<f32>],
+        participants: &[ClientId],
+    ) -> crate::Result<RoundBroadcast> {
+        anyhow::ensure!(
+            params.len() == self.mirror.metas.len()
+                && params.iter().zip(&self.mirror.metas).all(|(t, m)| t.len() == m.numel),
+            "params shape does not match the downlink model ({} layers expected)",
+            self.mirror.metas.len()
+        );
+        let cold: Vec<ClientId> =
+            participants.iter().copied().filter(|id| !self.synced.contains(id)).collect();
+        let warm_any = participants.iter().any(|id| self.synced.contains(id));
+        let mut stats = DownlinkStats {
+            raw_bytes: self.mirror.metas.iter().map(|m| m.numel * 4).sum(),
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let delta = if warm_any {
+            let reset = self.pending_reset;
+            if reset {
+                self.enc.reset();
+            }
+            // Δ = θ_global − θ_ref, shaped as a gradient so the kernel
+            // sign predictor sees the model's layer structure.
+            let grads = {
+                let reference = self.mirror.params().expect("warm stream has a reference");
+                ModelGrad {
+                    layers: self
+                        .mirror
+                        .metas
+                        .iter()
+                        .zip(params.iter().zip(reference))
+                        .map(|(meta, (p, r))| {
+                            let data: Vec<f32> = p.iter().zip(r).map(|(p, r)| p - r).collect();
+                            LayerGrad::new(meta.clone(), data)
+                        })
+                        .collect(),
+                }
+            };
+            match self.enc.encode_model(&grads).and_then(|frames| {
+                // Advance the reference through the SAME decode path
+                // every client runs — the invariant by construction.
+                self.mirror.apply_delta(reset, &frames)?;
+                Ok(frames)
+            }) {
+                Ok(frames) => {
+                    let delta = DeltaBroadcast { reset, frames };
+                    stats.delta_bytes = delta.wire_bytes();
+                    stats.reset = reset;
+                    Some(delta)
+                }
+                Err(e) => {
+                    // A failed encode/mirror-decode leaves no trustworthy
+                    // stream: drop every subscription so the next round
+                    // restarts from exact bytes.
+                    self.enc.reset();
+                    self.synced.clear();
+                    self.pending_reset = false;
+                    return Err(e);
+                }
+            }
+        } else {
+            // Nobody holds the reference: restart the stream exactly.
+            // The reference becomes the *exact* current model and both
+            // codec states go cold.
+            self.enc.reset();
+            self.mirror.full_sync(params.to_vec())?;
+            stats.reset = true;
+            None
+        };
+        stats.encode_time = t0.elapsed();
+        // A cold join into a warm stream forces next round's reset; an
+        // all-cold restart already happened.
+        self.pending_reset = warm_any && !cold.is_empty();
+        self.synced = participants.iter().copied().collect();
+        Ok(RoundBroadcast { delta, cold, stats })
+    }
+}
+
+/// Measurement harness shared by the downlink bench panels and tests:
+/// bootstrap `down` over `participants` (round 0 `FullSync`), then run
+/// `rounds` delta rounds, calling `advance` to move the global model
+/// before each encode. Returns total (delta frame bytes, encode time)
+/// across the delta rounds.
+pub fn measure_delta_stream(
+    down: &mut DownlinkCodec,
+    params: &mut [Vec<f32>],
+    participants: &[ClientId],
+    rounds: usize,
+    mut advance: impl FnMut(&mut [Vec<f32>]),
+) -> crate::Result<(usize, Duration)> {
+    down.encode_round(params, participants)?; // bootstrap round
+    let (mut delta_bytes, mut encode_time) = (0usize, Duration::ZERO);
+    for _ in 0..rounds {
+        advance(params);
+        let bc = down.encode_round(params, participants)?;
+        anyhow::ensure!(bc.cold.is_empty(), "persistent fan-out re-bootstrapped mid-stream");
+        delta_bytes += bc.stats.delta_bytes;
+        encode_time += bc.stats.encode_time;
+    }
+    Ok((delta_bytes, encode_time))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::spec::SpecDefaults;
+    use crate::util::rng::Rng;
+
+    fn spec(eb: f64) -> CodecSpec {
+        CodecSpec::parse_with("fedgec", &SpecDefaults::with_rel_eb(eb)).unwrap()
+    }
+
+    fn metas() -> Vec<LayerMeta> {
+        vec![
+            LayerMeta::conv("conv", 32, 8, 3, 3), // 2304 > t_lossy
+            LayerMeta::dense("fc", 64, 32),       // 2048 > t_lossy
+            LayerMeta::other("bias", 16),         // lossless
+        ]
+    }
+
+    fn init_params(rng: &mut Rng, metas: &[LayerMeta]) -> Vec<Vec<f32>> {
+        metas
+            .iter()
+            .map(|m| (0..m.numel).map(|_| rng.normal_f32(0.0, 0.5)).collect())
+            .collect()
+    }
+
+    fn step(params: &mut [Vec<f32>], rng: &mut Rng, scale: f32) {
+        for t in params.iter_mut() {
+            for v in t.iter_mut() {
+                *v -= scale * rng.normal_f32(0.0, 0.02);
+            }
+        }
+    }
+
+    fn bits_eq(a: &[Vec<f32>], b: &[Vec<f32>]) -> bool {
+        a.len() == b.len()
+            && a.iter().zip(b).all(|(x, y)| {
+                x.len() == y.len() && x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+            })
+    }
+
+    #[test]
+    fn first_round_bootstraps_everyone_exactly() {
+        let metas = metas();
+        let mut rng = Rng::new(1);
+        let params = init_params(&mut rng, &metas);
+        let mut down = DownlinkCodec::new(&spec(1e-3), metas.clone());
+        let bc = down.encode_round(&params, &[0, 1, 2]).unwrap();
+        assert!(bc.delta.is_none());
+        assert_eq!(bc.cold, vec![0, 1, 2]);
+        // All-cold restart: the reference is the exact model bytes.
+        assert!(bits_eq(down.reference().unwrap(), &params));
+        assert!(down.is_synced(1) && down.synced_count() == 3);
+    }
+
+    #[test]
+    fn persistent_clients_stay_bit_identical() {
+        let metas = metas();
+        let mut rng = Rng::new(2);
+        let mut params = init_params(&mut rng, &metas);
+        let sp = spec(1e-3);
+        let mut down = DownlinkCodec::new(&sp, metas.clone());
+        let mut a = DownlinkMirror::new(&sp, metas.clone());
+        let mut b = DownlinkMirror::new(&sp, metas.clone());
+        for round in 0..6 {
+            let bc = down.encode_round(&params, &[0, 1]).unwrap();
+            for m in [&mut a, &mut b] {
+                if bc.delta.is_none() || bc.cold.contains(&0) {
+                    m.full_sync(down.reference().unwrap().to_vec()).unwrap();
+                } else {
+                    let d = bc.delta.as_ref().unwrap();
+                    m.apply_delta(d.reset, &d.frames).unwrap();
+                }
+            }
+            assert!(
+                bits_eq(a.params().unwrap(), down.reference().unwrap()),
+                "round {round}: client A diverged from the server reference"
+            );
+            assert!(bits_eq(a.params().unwrap(), b.params().unwrap()));
+            if round > 0 {
+                assert!(bc.delta.is_some(), "warm round {round} must stream a delta");
+            }
+            step(&mut params, &mut rng, 1.0);
+        }
+    }
+
+    #[test]
+    fn reference_error_stays_bounded_no_drift() {
+        // Quantization error must not accumulate: after many rounds the
+        // reference stays within one round's error bound of the true
+        // model (the closed loop re-measures the residual every round).
+        let metas = metas();
+        let mut rng = Rng::new(3);
+        let mut params = init_params(&mut rng, &metas);
+        let mut down = DownlinkCodec::new(&spec(1e-3), metas.clone());
+        down.encode_round(&params, &[0]).unwrap();
+        for _ in 0..12 {
+            step(&mut params, &mut rng, 1.0);
+            down.encode_round(&params, &[0]).unwrap();
+        }
+        let reference = down.reference().unwrap();
+        for (li, (p, r)) in params.iter().zip(reference).enumerate() {
+            let (lo, hi) = crate::util::stats::finite_min_max(
+                &p.iter().zip(r).map(|(a, b)| a - b).collect::<Vec<f32>>(),
+            );
+            // The *delta* being within the bound each round means the
+            // views track: |θ − ref| equals the last round's residual,
+            // which was quantized under its own bound. Just assert the
+            // gap is small and finite, far from a 12-round accumulation.
+            let worst = lo.abs().max(hi.abs());
+            assert!(worst.is_finite() && worst < 0.05, "layer {li}: gap {worst}");
+        }
+    }
+
+    #[test]
+    fn cold_join_full_syncs_then_reset_realigns() {
+        let metas = metas();
+        let mut rng = Rng::new(4);
+        let mut params = init_params(&mut rng, &metas);
+        let sp = spec(1e-3);
+        let mut down = DownlinkCodec::new(&sp, metas.clone());
+        let mut a = DownlinkMirror::new(&sp, metas.clone());
+        let mut c = DownlinkMirror::new(&sp, metas.clone());
+        // Rounds 0..3: only client 0.
+        for _ in 0..3 {
+            let bc = down.encode_round(&params, &[0]).unwrap();
+            match &bc.delta {
+                None => a.full_sync(down.reference().unwrap().to_vec()).unwrap(),
+                Some(d) => {
+                    a.apply_delta(d.reset, &d.frames).unwrap();
+                }
+            }
+            step(&mut params, &mut rng, 1.0);
+        }
+        // Round 3: client 2 cold-joins — it gets FullSync, A gets the
+        // warm delta, and the stream schedules a reset.
+        let bc = down.encode_round(&params, &[0, 2]).unwrap();
+        assert_eq!(bc.cold, vec![2]);
+        let d = bc.delta.as_ref().expect("warm client keeps the delta stream");
+        assert!(!d.reset);
+        a.apply_delta(d.reset, &d.frames).unwrap();
+        c.full_sync(down.reference().unwrap().to_vec()).unwrap();
+        assert!(bits_eq(c.params().unwrap(), a.params().unwrap()));
+        // Round 4: the delta arrives with reset = true and BOTH mirrors
+        // decode it to the same bytes.
+        step(&mut params, &mut rng, 1.0);
+        let bc = down.encode_round(&params, &[0, 2]).unwrap();
+        assert!(bc.cold.is_empty());
+        let d = bc.delta.as_ref().unwrap();
+        assert!(d.reset, "the round after a cold join must reset the stream");
+        a.apply_delta(d.reset, &d.frames).unwrap();
+        c.apply_delta(d.reset, &d.frames).unwrap();
+        assert!(bits_eq(a.params().unwrap(), down.reference().unwrap()));
+        assert!(bits_eq(c.params().unwrap(), down.reference().unwrap()));
+    }
+
+    #[test]
+    fn missed_round_drops_subscription() {
+        let metas = metas();
+        let mut rng = Rng::new(5);
+        let mut params = init_params(&mut rng, &metas);
+        let mut down = DownlinkCodec::new(&spec(1e-3), metas.clone());
+        down.encode_round(&params, &[0, 1]).unwrap();
+        step(&mut params, &mut rng, 1.0);
+        // Client 1 misses this round…
+        down.encode_round(&params, &[0]).unwrap();
+        assert!(!down.is_synced(1));
+        step(&mut params, &mut rng, 1.0);
+        // …so its return is a cold join.
+        let bc = down.encode_round(&params, &[0, 1]).unwrap();
+        assert_eq!(bc.cold, vec![1]);
+    }
+
+    #[test]
+    fn delta_before_full_sync_errors_and_bad_frames_poison() {
+        let metas = metas();
+        let sp = spec(1e-3);
+        let mut m = DownlinkMirror::new(&sp, metas.clone());
+        assert!(m.apply_delta(false, &[]).is_err());
+        let mut rng = Rng::new(6);
+        let params = init_params(&mut rng, &metas);
+        m.full_sync(params.clone()).unwrap();
+        assert!(m.is_synced());
+        // Wrong frame count poisons the view → re-bootstrap required.
+        assert!(m.apply_delta(false, &[]).is_err());
+        assert!(!m.is_synced());
+        m.full_sync(params).unwrap();
+        // Shape mismatch on full sync is rejected up front.
+        assert!(m.full_sync(vec![vec![0.0; 3]]).is_err());
+    }
+
+    #[test]
+    fn raw_spec_downlink_is_exact() {
+        // down=… accepts any registry spec; with `qsgd`/`topk` the delta
+        // is not error-bounded but the mirror discipline still holds.
+        // With `sz3` (stateless, error-bounded) everything works too.
+        let metas = metas();
+        let mut rng = Rng::new(7);
+        let mut params = init_params(&mut rng, &metas);
+        let sp = CodecSpec::parse_with("sz3", &SpecDefaults::with_rel_eb(1e-3)).unwrap();
+        let mut down = DownlinkCodec::new(&sp, metas.clone());
+        let mut a = DownlinkMirror::new(&sp, metas.clone());
+        for _ in 0..4 {
+            let bc = down.encode_round(&params, &[0]).unwrap();
+            match &bc.delta {
+                None => a.full_sync(down.reference().unwrap().to_vec()).unwrap(),
+                Some(d) => {
+                    a.apply_delta(d.reset, &d.frames).unwrap();
+                }
+            }
+            assert!(bits_eq(a.params().unwrap(), down.reference().unwrap()));
+            step(&mut params, &mut rng, 1.0);
+        }
+    }
+}

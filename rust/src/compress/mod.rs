@@ -16,6 +16,7 @@
 
 pub mod autotune;
 pub mod blob;
+pub mod downlink;
 pub mod engine;
 pub mod entropy;
 pub mod frame;
@@ -31,6 +32,7 @@ pub mod spec;
 pub mod state;
 pub mod store;
 
+pub use downlink::{DownlinkCodec, DownlinkMirror};
 pub use engine::CodecEngine;
 pub use entropy::EntropyCoder;
 pub use frame::{CodecReport, Frame, LayerReport};

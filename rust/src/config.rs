@@ -64,6 +64,17 @@ pub struct RunConfig {
     /// Server state-store backend: `mem` (sharded in-memory) or `disk`
     /// (same hot tier, evictions spill to a temp directory).
     pub store: String,
+    /// Downlink broadcast codec spec: any [`CodecSpec`] string to
+    /// compress the per-round global-model **delta** (encoded once on
+    /// the server and fanned out to every participant), or `raw` for
+    /// the uncompressed f32 broadcast. See
+    /// [`crate::compress::downlink`].
+    pub down: String,
+    /// Relative error bound for the downlink codec — the default for
+    /// `eb` when the `down` spec string leaves it out. The global delta
+    /// feeds directly into every client's model, so the default is an
+    /// order tighter than the uplink bound.
+    pub down_eb: f64,
 }
 
 impl Default for RunConfig {
@@ -93,6 +104,8 @@ impl Default for RunConfig {
             participation: 1.0,
             store_budget_mb: 0.0,
             store: "mem".into(),
+            down: "raw".into(),
+            down_eb: 1e-3,
         }
     }
 }
@@ -127,9 +140,21 @@ impl RunConfig {
         self.codec = v.str_or("codec", &self.codec).to_string();
         self.rel_error_bound = v.f64_or("rel_error_bound", self.rel_error_bound);
         let mbps = v.f64_or("bandwidth_mbps", self.link.bits_per_sec / 1e6);
+        // Downlink bandwidth: explicit key wins; setting only the uplink
+        // on a *symmetric* link keeps it symmetric, but never erases an
+        // explicitly asymmetric downlink (CLI overrides arrive one key
+        // per apply_json call, in flag order — the outcome must not
+        // depend on that order).
+        let was_symmetric = self.link.down_bits_per_sec == self.link.bits_per_sec;
+        let down_mbps = match (v.get("down_bandwidth_mbps"), v.get("bandwidth_mbps")) {
+            (Some(_), _) => v.f64_or("down_bandwidth_mbps", mbps),
+            (None, Some(_)) if was_symmetric => mbps,
+            _ => self.link.down_bits_per_sec / 1e6,
+        };
         let latency_ms = v.f64_or("latency_ms", self.link.latency.as_secs_f64() * 1e3);
         self.link = LinkSpec {
             bits_per_sec: mbps * 1e6,
+            down_bits_per_sec: down_mbps * 1e6,
             latency: Duration::from_secs_f64(latency_ms / 1e3),
         };
         if let Some(e) = v.get("engine").and_then(Json::as_str) {
@@ -160,8 +185,12 @@ impl RunConfig {
             "unknown store backend '{}' (mem|disk)",
             self.store
         );
-        // Fail fast on unparseable codec specs.
+        self.down = v.str_or("down", &self.down).to_string();
+        self.down_eb = v.f64_or("down_eb", self.down_eb);
+        anyhow::ensure!(self.down_eb > 0.0, "down_eb must be > 0");
+        // Fail fast on unparseable codec specs (both directions).
         self.codec_spec().map_err(|e| anyhow::anyhow!("codec '{}': {e}", self.codec))?;
+        self.down_spec().map_err(|e| anyhow::anyhow!("down '{}': {e}", self.down))?;
         Ok(())
     }
 
@@ -169,7 +198,7 @@ impl RunConfig {
     pub fn apply_override(&mut self, key: &str, value: &str) -> crate::Result<()> {
         let quoted = matches!(
             key,
-            "model" | "dataset" | "codec" | "engine"
+            "model" | "dataset" | "codec" | "engine" | "store" | "down"
         );
         let json_val = if quoted { format!("\"{value}\"") } else { value.to_string() };
         let doc = format!("{{\"{key}\": {json_val}}}");
@@ -195,6 +224,19 @@ impl RunConfig {
             ..Default::default()
         };
         CodecSpec::parse_with(&self.codec, &d)
+    }
+
+    /// Resolve the downlink codec spec: `None` when the broadcast stays
+    /// raw (`down = "raw"`/`"none"`), otherwise the spec the server's
+    /// [`crate::compress::downlink::DownlinkCodec`] and every client's
+    /// mirror are built from. `down_eb` fills an omitted `eb` key.
+    pub fn down_spec(&self) -> crate::Result<Option<CodecSpec>> {
+        let d = SpecDefaults::with_rel_eb(self.down_eb);
+        let spec = CodecSpec::parse_with(&self.down, &d)?;
+        Ok(match spec {
+            CodecSpec::Raw => None,
+            other => Some(other),
+        })
     }
 
     /// Build the server-side state store this config describes.
@@ -287,6 +329,69 @@ mod tests {
         // Unparseable specs are rejected at config load.
         assert!(RunConfig::from_json(r#"{"codec": "bogus"}"#).is_err());
         assert!(RunConfig::from_json(r#"{"codec": "qsgd:bits=99"}"#).is_err());
+    }
+
+    #[test]
+    fn down_keys_parse_and_validate() {
+        // Default: raw broadcast, no downlink codec.
+        let d = RunConfig::default();
+        assert_eq!(d.down, "raw");
+        assert!(d.down_spec().unwrap().is_none());
+        // A spec string builds the downlink codec with down_eb defaults.
+        let c = RunConfig::from_json(r#"{"down": "fedgec", "down_eb": 1e-3}"#).unwrap();
+        match c.down_spec().unwrap() {
+            Some(CodecSpec::Fedgec { eb, .. }) => assert_eq!(eb, ErrorBound::Rel(1e-3)),
+            other => panic!("{other:?}"),
+        }
+        // Explicit spec keys win over down_eb.
+        let c = RunConfig::from_json(r#"{"down": "fedgec:eb=rel5e-4,ec=rans"}"#).unwrap();
+        match c.down_spec().unwrap() {
+            Some(CodecSpec::Fedgec { eb, .. }) => assert_eq!(eb, ErrorBound::Rel(5e-4)),
+            other => panic!("{other:?}"),
+        }
+        // `none` is an alias for the raw broadcast.
+        assert!(RunConfig::from_json(r#"{"down": "none"}"#)
+            .unwrap()
+            .down_spec()
+            .unwrap()
+            .is_none());
+        // Garbage is rejected at config load.
+        assert!(RunConfig::from_json(r#"{"down": "bogus"}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"down_eb": 0.0}"#).is_err());
+        // CLI override path quotes the spec string.
+        let mut c = RunConfig::default();
+        c.apply_override("down", "sz3:eb=rel1e-3").unwrap();
+        assert!(matches!(c.down_spec().unwrap(), Some(CodecSpec::Sz3 { .. })));
+    }
+
+    #[test]
+    fn asymmetric_bandwidth_keys() {
+        // Only the uplink set: the link stays symmetric.
+        let c = RunConfig::from_json(r#"{"bandwidth_mbps": 10}"#).unwrap();
+        assert!((c.link.down_bits_per_sec - 10e6).abs() < 1.0);
+        // Both directions set: down ≫ up.
+        let c =
+            RunConfig::from_json(r#"{"bandwidth_mbps": 10, "down_bandwidth_mbps": 80}"#).unwrap();
+        assert!((c.link.bits_per_sec - 10e6).abs() < 1.0);
+        assert!((c.link.down_bits_per_sec - 80e6).abs() < 1.0);
+        // Downlink alone leaves the uplink at its default.
+        let mut c = RunConfig::default();
+        let up = c.link.bits_per_sec;
+        c.apply_override("down_bandwidth_mbps", "200").unwrap();
+        assert_eq!(c.link.bits_per_sec, up);
+        assert!((c.link.down_bits_per_sec - 200e6).abs() < 1.0);
+        // CLI overrides arrive one key at a time: either flag order
+        // must yield the same asymmetric link.
+        let mut a = RunConfig::default();
+        a.apply_override("down_bandwidth_mbps", "80").unwrap();
+        a.apply_override("bandwidth_mbps", "10").unwrap();
+        let mut b = RunConfig::default();
+        b.apply_override("bandwidth_mbps", "10").unwrap();
+        b.apply_override("down_bandwidth_mbps", "80").unwrap();
+        for c in [&a, &b] {
+            assert!((c.link.bits_per_sec - 10e6).abs() < 1.0);
+            assert!((c.link.down_bits_per_sec - 80e6).abs() < 1.0);
+        }
     }
 
     #[test]

@@ -15,6 +15,10 @@
 //! with `cfg.participation < 1` only a sampled subset trains per round
 //! (`run_local`; threaded mode rejects partial participation), and the
 //! per-round `RoundStats` record the store's state-memory trajectory.
+//! With `cfg.down` set, the broadcast compresses too: the global-model
+//! delta is encoded once per round and every participant trains on the
+//! server's tracked lossy reference (`run_local`) or decodes the
+//! fanned-out frames itself (`run_threaded`).
 
 pub mod native_trainer;
 
@@ -22,10 +26,12 @@ use std::cell::RefCell;
 use std::rc::Rc;
 use std::time::Instant;
 
+use crate::compress::downlink::{DownlinkCodec, DownlinkMirror};
 use crate::compress::engine::CodecEngine;
 use crate::compress::pipeline::{FedgecCodec, FedgecConfig, FedgecEngine};
 use crate::compress::spec::CodecSpec;
 use crate::compress::state::StateEpoch;
+use crate::compress::store::ClientId;
 use crate::compress::GradientCodec;
 use crate::config::{EngineKind, RunConfig};
 use crate::fl::aggregate::FedAvg;
@@ -33,12 +39,12 @@ use crate::fl::client::{Client, LocalTrainer};
 use crate::fl::hetero::sample_participants;
 use crate::fl::round::{RoundStats, RunSummary};
 use crate::fl::server::Server;
-use crate::fl::transport::bandwidth::VirtualLink;
+use crate::fl::transport::bandwidth::{LinkSpec, VirtualLink};
 use crate::fl::transport::{inproc, Channel};
 use crate::runtime::engine::HloPredictEngine;
 use crate::runtime::manifest::Manifest;
 use crate::runtime::trainer::{HloTrainer, Params};
-use crate::tensor::{LayerGrad, ModelGrad};
+use crate::tensor::{LayerGrad, LayerMeta, ModelGrad};
 use crate::train::data::SynthDataset;
 use native_trainer::NativeTrainer;
 
@@ -51,6 +57,61 @@ pub fn build_codec(cfg: &RunConfig) -> crate::Result<Box<dyn GradientCodec>> {
 /// Build the server-side stateless decode engine for the config's spec.
 pub fn build_engine(cfg: &RunConfig) -> crate::Result<Box<dyn CodecEngine>> {
     Ok(cfg.codec_spec()?.build_engine())
+}
+
+/// Build the server-side downlink broadcaster (`None` = raw broadcast).
+pub fn build_downlink(
+    cfg: &RunConfig,
+    metas: &[LayerMeta],
+) -> crate::Result<Option<DownlinkCodec>> {
+    Ok(cfg.down_spec()?.map(|spec| DownlinkCodec::new(&spec, metas.to_vec())))
+}
+
+/// Simulation-side downlink broadcast for one round: plan + encode once,
+/// account per-participant bytes and virtual downlink time, and return
+/// the params view every participant trains on. With a downlink codec
+/// attached the view is the server's tracked lossy reference — exactly
+/// the bytes the wire protocol would deliver (delta recipients decode to
+/// it, full-sync recipients receive it verbatim).
+fn sim_downlink_round(
+    down: &mut Option<DownlinkCodec>,
+    server_params: &[Vec<f32>],
+    participants: &[usize],
+    link: &LinkSpec,
+    stats: &mut RoundStats,
+) -> crate::Result<Vec<Vec<f32>>> {
+    match down {
+        None => {
+            let raw: usize = server_params.iter().map(|t| t.len() * 4).sum();
+            stats.downlink_bytes += raw * participants.len();
+            stats.downlink_raw_bytes += raw * participants.len();
+            stats.down_transmit_time += link.downlink_time(raw) * participants.len() as u32;
+            Ok(server_params.to_vec())
+        }
+        Some(down) => {
+            let ids: Vec<ClientId> = participants.iter().map(|&i| i as u32).collect();
+            let bc = down.encode_round(server_params, &ids)?;
+            stats.down_codec_time += bc.stats.encode_time;
+            stats.downlink_raw_bytes += bc.stats.raw_bytes * participants.len();
+            let cold: std::collections::HashSet<ClientId> = bc.cold.into_iter().collect();
+            for id in &ids {
+                // Cold clients pull the full reference; warm ones pull
+                // the shared delta frames (encoded once for everyone).
+                let bytes = if cold.contains(id) {
+                    stats.full_syncs += 1;
+                    bc.stats.raw_bytes
+                } else {
+                    bc.stats.delta_bytes
+                };
+                stats.downlink_bytes += bytes;
+                stats.down_transmit_time += link.downlink_time(bytes);
+            }
+            Ok(down
+                .reference()
+                .ok_or_else(|| anyhow::anyhow!("downlink reference missing after encode"))?
+                .to_vec())
+        }
+    }
 }
 
 /// Resolve a spec into the FedGEC config (HLO paths require fedgec).
@@ -180,6 +241,7 @@ fn run_local_hlo(cfg: &RunConfig) -> crate::Result<RunSummary> {
         server.admit(ci as u32);
     }
 
+    let mut downlink = build_downlink(cfg, &metas)?;
     let mut part_rng = crate::util::rng::Rng::new(cfg.seed ^ 0x9A57);
     let mut summary = RunSummary::default();
     for round in 0..cfg.rounds {
@@ -190,7 +252,13 @@ fn run_local_hlo(cfg: &RunConfig) -> crate::Result<RunSummary> {
             ..Default::default()
         };
         let mut agg = FedAvg::new();
-        let global = server.params.clone();
+        let global = sim_downlink_round(
+            &mut downlink,
+            &server.params,
+            &participants,
+            &cfg.link,
+            &mut stats,
+        )?;
         for &ci in &participants {
             let client = &mut clients[ci];
             if sim_state_handshake(
@@ -279,6 +347,7 @@ fn run_local_native(cfg: &RunConfig) -> crate::Result<RunSummary> {
         (0..cfg.n_clients).map(|_| build_codec(cfg)).collect::<crate::Result<_>>()?;
     let mut epochs = vec![StateEpoch::cold(); cfg.n_clients];
 
+    let mut downlink = build_downlink(cfg, &metas)?;
     let mut part_rng = crate::util::rng::Rng::new(cfg.seed ^ 0x9A57);
     let mut summary = RunSummary::default();
     for round in 0..cfg.rounds {
@@ -289,7 +358,13 @@ fn run_local_native(cfg: &RunConfig) -> crate::Result<RunSummary> {
             ..Default::default()
         };
         let mut agg = FedAvg::new();
-        let global = server.params.clone();
+        let global = sim_downlink_round(
+            &mut downlink,
+            &server.params,
+            &participants,
+            &cfg.link,
+            &mut stats,
+        )?;
         for &ci in &participants {
             if sim_state_handshake(
                 &mut server,
@@ -355,6 +430,7 @@ pub fn run_threaded(cfg: &RunConfig) -> crate::Result<RunSummary> {
     let init: Vec<Vec<f32>> =
         vec![proto.conv_w.clone(), proto.conv_b.clone(), proto.fc_w.clone(), proto.fc_b.clone()];
 
+    let down_spec = cfg.down_spec()?;
     let mut server_channels: Vec<Box<dyn Channel>> = Vec::new();
     let mut handles = Vec::new();
     for i in 0..cfg.n_clients {
@@ -366,16 +442,22 @@ pub fn run_threaded(cfg: &RunConfig) -> crate::Result<RunSummary> {
         let codec = build_codec(cfg)?;
         let mut client =
             Client::new(i as u32, Box::new(trainer), codec).with_streaming(cfg.stream_updates);
+        if let Some(spec) = &down_spec {
+            client = client.with_downlink(DownlinkMirror::new(spec, metas.clone()));
+        }
         let mut ch = cli_end;
         handles.push(std::thread::spawn(move || client.run(&mut ch)));
     }
     let mut server = Server::new(
         init,
-        metas,
+        metas.clone(),
         cfg.server_lr,
         build_engine(cfg)?,
         cfg.build_state_store()?,
     );
+    if let Some(spec) = &down_spec {
+        server = server.with_downlink(DownlinkCodec::new(spec, metas));
+    }
     server.wait_hellos(&mut server_channels)?;
     let mut summary = RunSummary::default();
     for _ in 0..cfg.rounds {
@@ -401,15 +483,21 @@ pub fn run_threaded(cfg: &RunConfig) -> crate::Result<RunSummary> {
 pub fn print_summary(cfg: &RunConfig, summary: &RunSummary) {
     let mut t = crate::metrics::Table::new(
         &format!(
-            "FL run: model={} dataset={} codec={} eb={} link={:.0}Mbps participation={}",
+            "FL run: model={} dataset={} codec={} eb={} down={} link={:.0}/{:.0}Mbps \
+             participation={}",
             cfg.model,
             cfg.dataset.name(),
             cfg.codec,
             cfg.rel_error_bound,
+            cfg.down,
             cfg.link.bits_per_sec / 1e6,
+            cfg.link.down_bits_per_sec / 1e6,
             cfg.participation,
         ),
-        &["round", "loss", "CR", "payload(KB)", "comm time", "part", "store(KB)", "eval acc"],
+        &[
+            "round", "loss", "CR", "payload(KB)", "down(KB)", "downCR", "syncs", "comm time",
+            "part", "store(KB)", "eval acc",
+        ],
     );
     for r in &summary.rounds {
         t.row(vec![
@@ -417,6 +505,9 @@ pub fn print_summary(cfg: &RunConfig, summary: &RunSummary) {
             format!("{:.4}", r.mean_loss),
             format!("{:.2}", r.ratio()),
             format!("{:.1}", r.payload_bytes as f64 / 1e3),
+            format!("{:.1}", r.downlink_bytes as f64 / 1e3),
+            format!("{:.2}", r.down_ratio()),
+            r.full_syncs.to_string(),
             crate::metrics::fmt_duration(r.comm_time()),
             r.participants.to_string(),
             format!("{:.1}", r.store_bytes as f64 / 1e3),
@@ -425,8 +516,9 @@ pub fn print_summary(cfg: &RunConfig, summary: &RunSummary) {
     }
     t.print();
     println!(
-        "mean CR {:.2} | total comm {} | final acc {}",
+        "mean CR {:.2} | down CR {:.2} | total comm {} | final acc {}",
         summary.mean_ratio(),
+        summary.mean_down_ratio(),
         crate::metrics::fmt_duration(summary.total_comm_time()),
         summary.final_accuracy.map(|a| format!("{a:.3}")).unwrap_or_else(|| "-".into()),
     );

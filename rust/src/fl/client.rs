@@ -10,6 +10,7 @@
 
 use std::sync::mpsc;
 
+use crate::compress::downlink::DownlinkMirror;
 use crate::compress::frame::Frame;
 use crate::compress::session::EncodeSession;
 use crate::compress::state::StateEpoch;
@@ -44,16 +45,27 @@ pub struct Client {
     /// before the next one. Survives dropout (the client just rejoins
     /// with its last epoch); reset to cold on a `StateResync`.
     pub epoch: StateEpoch,
+    /// Downlink delta mirror (`None` = the server broadcasts raw
+    /// `GlobalParams`). Must match the server's `down` codec spec.
+    pub downlink: Option<DownlinkMirror>,
 }
 
 impl Client {
     pub fn new(id: u32, trainer: Box<dyn LocalTrainer>, codec: Box<dyn GradientCodec>) -> Self {
-        Client { id, trainer, codec, stream: true, epoch: StateEpoch::cold() }
+        Client { id, trainer, codec, stream: true, epoch: StateEpoch::cold(), downlink: None }
     }
 
     /// Select monolithic vs frame-streamed uploads.
     pub fn with_streaming(mut self, stream: bool) -> Self {
         self.stream = stream;
+        self
+    }
+
+    /// Attach the downlink delta mirror (required when the server runs a
+    /// downlink codec: the broadcast arrives as `FullSync`/`DeltaBegin`
+    /// instead of `GlobalParams`).
+    pub fn with_downlink(mut self, mirror: DownlinkMirror) -> Self {
+        self.downlink = Some(mirror);
         self
     }
 
@@ -132,26 +144,82 @@ impl Client {
         }
     }
 
+    /// One full round against resolved global parameters: handshake,
+    /// train, upload (streamed or monolithic), advance the state epoch.
+    fn round_body(
+        &mut self,
+        round: u32,
+        params: &[Vec<f32>],
+        channel: &mut dyn Channel,
+    ) -> crate::Result<()> {
+        self.state_handshake(channel)?;
+        if self.stream {
+            self.streamed_round(round, params, channel)?;
+        } else {
+            let (payload, train_loss, _) = self.local_round(params)?;
+            channel.send(&Msg::Update {
+                client_id: self.id,
+                round,
+                payload,
+                train_loss,
+                n_samples: self.trainer.n_samples() as u32,
+            })?;
+        }
+        self.epoch.advance(self.codec.state_fingerprint());
+        Ok(())
+    }
+
+    fn downlink_mirror(&mut self, what: &str) -> crate::Result<&mut DownlinkMirror> {
+        let id = self.id;
+        self.downlink
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("client {id}: {what} without a downlink codec"))
+    }
+
     /// Blocking message loop against a server channel (threaded/TCP mode).
     pub fn run(&mut self, channel: &mut dyn Channel) -> crate::Result<()> {
         channel.send(&Msg::Hello { client_id: self.id })?;
         loop {
             match channel.recv()? {
                 Msg::GlobalParams { round, tensors } => {
-                    self.state_handshake(channel)?;
-                    if self.stream {
-                        self.streamed_round(round, &tensors, channel)?;
-                    } else {
-                        let (payload, train_loss, _) = self.local_round(&tensors)?;
-                        channel.send(&Msg::Update {
-                            client_id: self.id,
-                            round,
-                            payload,
-                            train_loss,
-                            n_samples: self.trainer.n_samples() as u32,
-                        })?;
+                    self.round_body(round, &tensors, channel)?;
+                }
+                Msg::FullSync { round, tensors } => {
+                    let mirror = self.downlink_mirror("FullSync")?;
+                    mirror.full_sync(tensors)?;
+                    let params = mirror.params().expect("full_sync leaves a reference").to_vec();
+                    self.round_body(round, &params, channel)?;
+                }
+                Msg::DeltaBegin { round, n_layers, reset } => {
+                    // Bound the wire-declared count by the model before
+                    // allocating or blocking on frames (corrupt-stream
+                    // OOM guard, same discipline as decode_bounded).
+                    let expected = self.downlink_mirror("DeltaBegin")?.metas().len();
+                    anyhow::ensure!(
+                        n_layers as usize == expected,
+                        "client {}: delta declares {n_layers} layers, model has {expected}",
+                        self.id
+                    );
+                    let mut frames = Vec::with_capacity(expected);
+                    for _ in 0..n_layers {
+                        match channel.recv()? {
+                            Msg::DeltaFrame { round: r, frame } => {
+                                anyhow::ensure!(
+                                    r == round,
+                                    "client {}: delta frame for round {r} during round {round}",
+                                    self.id
+                                );
+                                frames.push(Frame::from_wire(&frame)?);
+                            }
+                            other => anyhow::bail!(
+                                "client {}: expected DeltaFrame, got {other:?}",
+                                self.id
+                            ),
+                        }
                     }
-                    self.epoch.advance(self.codec.state_fingerprint());
+                    let mirror = self.downlink_mirror("DeltaBegin")?;
+                    let params = mirror.apply_delta(reset, &frames)?.to_vec();
+                    self.round_body(round, &params, channel)?;
                 }
                 Msg::Shutdown => return Ok(()),
                 other => anyhow::bail!("client {}: unexpected {other:?}", self.id),

@@ -29,11 +29,21 @@ impl LinkClass {
     }
 
     /// Sample a link for this class (deterministic via the given RNG).
+    /// Access links are asymmetric: LTE and Wi-Fi downlinks run several
+    /// times faster than their uplinks; fiber is symmetric.
     pub fn sample(&self, rng: &mut crate::util::rng::Rng) -> LinkSpec {
         let mbps = match self {
             LinkClass::Cellular => rng.uniform(20.0, 40.0),
             LinkClass::Wifi => rng.uniform(100.0, 200.0),
             LinkClass::Fiber => rng.uniform(800.0, 1000.0),
+        };
+        let down_mbps = match self {
+            // LTE advertises ~3-4x the uplink on the shared downlink.
+            LinkClass::Cellular => rng.uniform(80.0, 150.0),
+            // Consumer Wi-Fi backhaul: down ≫ up.
+            LinkClass::Wifi => rng.uniform(300.0, 600.0),
+            // Fiber is symmetric.
+            LinkClass::Fiber => mbps,
         };
         let latency_ms = match self {
             LinkClass::Cellular => rng.uniform(30.0, 60.0),
@@ -42,6 +52,7 @@ impl LinkClass {
         };
         LinkSpec {
             bits_per_sec: mbps * 1e6,
+            down_bits_per_sec: down_mbps * 1e6,
             latency: Duration::from_secs_f64(latency_ms / 1e3),
         }
     }
@@ -112,6 +123,29 @@ impl HeteroFleet {
             .unwrap_or(Duration::ZERO)
     }
 
+    /// Full synchronous round including the downlink broadcast: each
+    /// client first pulls `down_bytes` over its downlink, then computes
+    /// for `codec_time` and pushes its payload over its uplink — the
+    /// slowest end-to-end client gates the round. `down_bytes` is one
+    /// value because the broadcast is the same encoded bytes for every
+    /// client (encode-once fan-out); only the link under it differs.
+    pub fn round_time_bidirectional(
+        &self,
+        down_bytes: usize,
+        payload_bytes: &[usize],
+        codec_time: &[Duration],
+    ) -> Duration {
+        assert_eq!(payload_bytes.len(), self.links.len());
+        assert_eq!(codec_time.len(), self.links.len());
+        self.links
+            .iter()
+            .zip(payload_bytes)
+            .zip(codec_time)
+            .map(|((link, &b), &c)| link.downlink_time(down_bytes) + c + link.transmit_time(b))
+            .max()
+            .unwrap_or(Duration::ZERO)
+    }
+
     /// The fleet restricted to a participating subset (partial
     /// participation: the synchronous round is gated by the slowest
     /// *participant*, not the slowest client overall).
@@ -146,6 +180,31 @@ mod tests {
         let f = LinkClass::Fiber.sample(&mut rng);
         assert!(c.bits_per_sec < w.bits_per_sec);
         assert!(w.bits_per_sec < f.bits_per_sec);
+        // Access networks are down ≫ up; fiber is symmetric.
+        assert!(c.down_bits_per_sec > 2.0 * c.bits_per_sec);
+        assert!(w.down_bits_per_sec > 1.5 * w.bits_per_sec);
+        assert_eq!(f.down_bits_per_sec, f.bits_per_sec);
+    }
+
+    #[test]
+    fn bidirectional_round_adds_broadcast_pull() {
+        let fleet = HeteroFleet {
+            links: vec![LinkSpec {
+                bits_per_sec: 1e6,
+                down_bits_per_sec: 4e6,
+                latency: Duration::ZERO,
+            }],
+        };
+        // 1 MB down at 4 Mbps (2 s) + 1 MB up at 1 Mbps (8 s) = 10 s.
+        let t = fleet.round_time_bidirectional(
+            1_000_000,
+            &[1_000_000],
+            &[Duration::ZERO],
+        );
+        assert!((t.as_secs_f64() - 10.0).abs() < 1e-9, "{t:?}");
+        // Uplink-only model is unchanged.
+        let up = fleet.round_time(&[1_000_000], &[Duration::ZERO]);
+        assert!((up.as_secs_f64() - 8.0).abs() < 1e-9);
     }
 
     #[test]
@@ -161,8 +220,8 @@ mod tests {
     fn round_gated_by_slowest() {
         let fleet = HeteroFleet {
             links: vec![
-                LinkSpec { bits_per_sec: 1e6, latency: Duration::ZERO },
-                LinkSpec { bits_per_sec: 1e9, latency: Duration::ZERO },
+                LinkSpec::sym(1e6, Duration::ZERO),
+                LinkSpec::sym(1e9, Duration::ZERO),
             ],
         };
         let t = fleet.round_time(&[1_000_000, 1_000_000], &[Duration::ZERO; 2]);
@@ -199,8 +258,8 @@ mod tests {
     fn subset_round_gated_by_slowest_participant() {
         let fleet = HeteroFleet {
             links: vec![
-                LinkSpec { bits_per_sec: 1e6, latency: Duration::ZERO },
-                LinkSpec { bits_per_sec: 1e9, latency: Duration::ZERO },
+                LinkSpec::sym(1e6, Duration::ZERO),
+                LinkSpec::sym(1e9, Duration::ZERO),
             ],
         };
         // Leaving the 1 Mbps straggler out shrinks the round 1000x.

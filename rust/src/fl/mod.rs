@@ -9,6 +9,12 @@
 //! [`crate::compress::store::StateStore`] of per-client predictor
 //! states, and the `StateCheck`/`StateResync` protocol handshake keeps
 //! dropout, rejoin and eviction deterministic (see `DESIGN.md` §8).
+//!
+//! Both traffic directions compress: uploads as per-client gradient
+//! payloads, and the broadcast as a **global-model delta** encoded once
+//! and fanned out to every participant as shared bytes, with cold
+//! clients bootstrapped by `FullSync` (see
+//! [`crate::compress::downlink`] and `DESIGN.md` §9).
 
 pub mod aggregate;
 pub mod client;

@@ -33,11 +33,54 @@ pub enum Msg {
     /// rejoin) — **both** sides deterministically reset to the codec's
     /// round-1 path before the client compresses this round's update.
     StateResync { client_id: u32, reset: bool },
+    /// Server opens a compressed downlink broadcast: exactly `n_layers`
+    /// [`Msg::DeltaFrame`]s of the global-model **delta** vs the tracked
+    /// reference follow. `reset = true` orders every synced client to
+    /// cold-reset its downlink decoder first (a cold client joined the
+    /// stream, so the encoder restarted — see
+    /// [`crate::compress::downlink`]).
+    DeltaBegin { round: u32, n_layers: u32, reset: bool },
+    /// One self-delimiting per-layer frame of the round's global delta —
+    /// encoded **once** on the server and fanned out to every
+    /// participant as the same shared bytes.
+    DeltaFrame { round: u32, frame: Vec<u8> },
+    /// Downlink bootstrap for cold clients (first round, rejoin after a
+    /// missed broadcast, poisoned view): the full reference model,
+    /// bit-exact as the server tracks it.
+    FullSync { round: u32, tensors: Vec<Vec<f32>> },
     /// Server ends the session.
     Shutdown,
 }
 
+/// Write a `tag + round + tensors` message body (shared by
+/// `GlobalParams` and `FullSync`).
+fn write_tensors_msg(w: &mut BlobWriter, tag: u8, round: u32, tensors: &[Vec<f32>]) {
+    w.put_u8(tag);
+    w.put_u32(round);
+    w.put_u32(tensors.len() as u32);
+    for t in tensors {
+        w.put_f32_slice(t);
+    }
+}
+
 impl Msg {
+    /// Encode a `GlobalParams` broadcast without owning the tensors: the
+    /// raw broadcast path serializes **once** and fans the same bytes
+    /// out to every channel (see [`super::transport::Channel::send_encoded`]).
+    pub fn encode_global_params(round: u32, tensors: &[Vec<f32>]) -> Vec<u8> {
+        let mut w = BlobWriter::new();
+        write_tensors_msg(&mut w, 1, round, tensors);
+        w.into_bytes()
+    }
+
+    /// Encode a `FullSync` bootstrap without owning the tensors
+    /// (encode-once for every cold client of the round).
+    pub fn encode_full_sync(round: u32, tensors: &[Vec<f32>]) -> Vec<u8> {
+        let mut w = BlobWriter::new();
+        write_tensors_msg(&mut w, 10, round, tensors);
+        w.into_bytes()
+    }
+
     pub fn encode(&self) -> Vec<u8> {
         let mut w = BlobWriter::new();
         match self {
@@ -46,12 +89,7 @@ impl Msg {
                 w.put_u32(*client_id);
             }
             Msg::GlobalParams { round, tensors } => {
-                w.put_u8(1);
-                w.put_u32(*round);
-                w.put_u32(tensors.len() as u32);
-                for t in tensors {
-                    w.put_f32_slice(t);
-                }
+                write_tensors_msg(&mut w, 1, *round, tensors);
             }
             Msg::Update { client_id, round, payload, train_loss, n_samples } => {
                 w.put_u8(2);
@@ -86,6 +124,20 @@ impl Msg {
                 w.put_u8(7);
                 w.put_u32(*client_id);
                 w.put_u8(u8::from(*reset));
+            }
+            Msg::DeltaBegin { round, n_layers, reset } => {
+                w.put_u8(8);
+                w.put_u32(*round);
+                w.put_u32(*n_layers);
+                w.put_u8(u8::from(*reset));
+            }
+            Msg::DeltaFrame { round, frame } => {
+                w.put_u8(9);
+                w.put_u32(*round);
+                w.put_bytes(frame);
+            }
+            Msg::FullSync { round, tensors } => {
+                write_tensors_msg(&mut w, 10, *round, tensors);
             }
         }
         w.into_bytes()
@@ -142,6 +194,30 @@ impl Msg {
                 };
                 Msg::StateResync { client_id, reset }
             }
+            8 => {
+                let round = r.get_u32()?;
+                let n_layers = r.get_u32()?;
+                let reset = match r.get_u8()? {
+                    0 => false,
+                    1 => true,
+                    b => anyhow::bail!("bad DeltaBegin reset flag {b}"),
+                };
+                Msg::DeltaBegin { round, n_layers, reset }
+            }
+            9 => {
+                let round = r.get_u32()?;
+                let frame = r.get_bytes()?.to_vec();
+                Msg::DeltaFrame { round, frame }
+            }
+            10 => {
+                let round = r.get_u32()?;
+                let n = r.get_u32()? as usize;
+                let mut tensors = Vec::with_capacity(n);
+                for _ in 0..n {
+                    tensors.push(r.get_f32_vec()?);
+                }
+                Msg::FullSync { round, tensors }
+            }
             t => anyhow::bail!("unknown message tag {t}"),
         })
     }
@@ -151,9 +227,28 @@ impl Msg {
 mod tests {
     use super::*;
 
-    #[test]
-    fn roundtrip_all_variants() {
-        let msgs = [
+    /// The wire tag of every variant. The exhaustive `match` is the
+    /// point: adding a `Msg` variant fails compilation here until the
+    /// sample list below (and therefore the roundtrip suite) grows too.
+    fn wire_tag(m: &Msg) -> u8 {
+        match m {
+            Msg::Hello { .. } => 0,
+            Msg::GlobalParams { .. } => 1,
+            Msg::Update { .. } => 2,
+            Msg::Shutdown => 3,
+            Msg::UpdateBegin { .. } => 4,
+            Msg::UpdateFrame { .. } => 5,
+            Msg::StateCheck { .. } => 6,
+            Msg::StateResync { .. } => 7,
+            Msg::DeltaBegin { .. } => 8,
+            Msg::DeltaFrame { .. } => 9,
+            Msg::FullSync { .. } => 10,
+        }
+    }
+    const N_VARIANTS: usize = 11;
+
+    fn sample_of_every_variant() -> Vec<Msg> {
+        vec![
             Msg::Hello { client_id: 3 },
             Msg::GlobalParams { round: 7, tensors: vec![vec![1.0, -2.0], vec![0.5]] },
             Msg::Update {
@@ -174,17 +269,60 @@ mod tests {
             Msg::StateCheck { client_id: 4, rounds: 12, fingerprint: 0xDEAD_BEEF_CAFE_F00D },
             Msg::StateResync { client_id: 4, reset: true },
             Msg::StateResync { client_id: 5, reset: false },
+            Msg::DeltaBegin { round: 3, n_layers: 9, reset: true },
+            Msg::DeltaBegin { round: 4, n_layers: 1, reset: false },
+            Msg::DeltaFrame { round: 3, frame: vec![2, 0, 0, 0, 1, 0, 0, 0, 7] },
+            Msg::FullSync { round: 5, tensors: vec![vec![0.5, -0.25], vec![], vec![3.0]] },
             Msg::Shutdown,
-        ];
-        for m in msgs {
-            assert_eq!(Msg::decode(&m.encode()).unwrap(), m);
-        }
+        ]
     }
 
     #[test]
-    fn garbage_errors() {
-        assert!(Msg::decode(&[9]).is_err());
+    fn roundtrip_is_exhaustive_over_variants() {
+        let msgs = sample_of_every_variant();
+        let mut seen = std::collections::HashSet::new();
+        for m in msgs {
+            seen.insert(wire_tag(&m));
+            assert_eq!(Msg::decode(&m.encode()).unwrap(), m);
+        }
+        // Every variant (every wire tag) appears in the sample list.
+        assert_eq!(seen.len(), N_VARIANTS, "sample list missing a variant");
+        assert_eq!(seen, (0..N_VARIANTS as u8).collect::<std::collections::HashSet<u8>>());
+    }
+
+    #[test]
+    fn encode_once_helpers_match_owned_encode() {
+        let tensors = vec![vec![1.0f32, -2.0], vec![0.5]];
+        assert_eq!(
+            Msg::encode_global_params(7, &tensors),
+            Msg::GlobalParams { round: 7, tensors: tensors.clone() }.encode()
+        );
+        assert_eq!(
+            Msg::encode_full_sync(9, &tensors),
+            Msg::FullSync { round: 9, tensors }.encode()
+        );
+    }
+
+    #[test]
+    fn garbage_errors_never_panics() {
+        // Unknown tag: the first byte past the last known variant.
+        assert!(Msg::decode(&[N_VARIANTS as u8]).is_err());
+        assert!(Msg::decode(&[0xFF]).is_err());
         assert!(Msg::decode(&[]).is_err());
-        assert!(Msg::decode(&[1, 0]).is_err());
+        // Truncated bodies for every known tag.
+        for tag in 0..N_VARIANTS as u8 {
+            if tag == 3 {
+                continue; // Shutdown has no body
+            }
+            assert!(Msg::decode(&[tag]).is_err(), "tag {tag} with empty body");
+            assert!(Msg::decode(&[tag, 0]).is_err(), "tag {tag} truncated");
+        }
+        // Bad boolean flags are rejected, not coerced.
+        let mut resync = Msg::StateResync { client_id: 1, reset: true }.encode();
+        *resync.last_mut().unwrap() = 2;
+        assert!(Msg::decode(&resync).is_err());
+        let mut begin = Msg::DeltaBegin { round: 1, n_layers: 2, reset: true }.encode();
+        *begin.last_mut().unwrap() = 7;
+        assert!(Msg::decode(&begin).is_err());
     }
 }

@@ -21,6 +21,21 @@ pub struct RoundStats {
     pub decomp_time: Duration,
     /// Total (virtual or real) transmission time.
     pub transmit_time: Duration,
+    /// Downlink broadcast bytes actually sent, summed over recipients
+    /// (delta frames for synced clients, full-sync bootstraps for cold
+    /// ones; the raw f32 broadcast when no downlink codec runs).
+    pub downlink_bytes: usize,
+    /// What the raw f32 broadcast would have cost, summed over
+    /// recipients (the downlink analogue of `raw_bytes`).
+    pub downlink_raw_bytes: usize,
+    /// Total (virtual) downlink transmission time across recipients.
+    pub down_transmit_time: Duration,
+    /// Downlink codec time: the server's encode-once pass plus its
+    /// reference-mirror decode (paid once per round, amortized over the
+    /// whole fan-out).
+    pub down_codec_time: Duration,
+    /// Cold clients bootstrapped via `FullSync` this round.
+    pub full_syncs: usize,
     /// Evaluation results if this round evaluated.
     pub eval: Option<(f32, f32)>,
     /// Clients that participated this round (partial participation:
@@ -47,15 +62,31 @@ impl RoundStats {
         .ratio()
     }
 
-    /// End-to-end communication time (paper Eq. 1):
-    /// `T_comp + S'/B + T_decomp` (per-round totals).
-    pub fn comm_time(&self) -> Duration {
-        self.comp_time + self.transmit_time + self.decomp_time
+    /// Downlink compression ratio (raw broadcast / actual broadcast; a
+    /// round with no broadcast accounting is a neutral 1.0).
+    pub fn down_ratio(&self) -> f64 {
+        crate::compress::CompressionStats {
+            raw_bytes: self.downlink_raw_bytes,
+            compressed_bytes: self.downlink_bytes,
+        }
+        .ratio()
     }
 
-    /// What the same round would have cost uncompressed: `S/B`.
+    /// End-to-end communication time (paper Eq. 1, both directions):
+    /// `T_comp + S'/B_up + T_decomp` for the uplink plus the downlink
+    /// broadcast's codec and transmit terms.
+    pub fn comm_time(&self) -> Duration {
+        self.comp_time
+            + self.transmit_time
+            + self.decomp_time
+            + self.down_codec_time
+            + self.down_transmit_time
+    }
+
+    /// What the same round would have cost uncompressed in **both**
+    /// directions: `S/B_up + S_down/B_down`.
     pub fn uncompressed_time(&self, link: &LinkSpec) -> Duration {
-        link.transmit_time(self.raw_bytes)
+        link.transmit_time(self.raw_bytes) + link.downlink_time(self.downlink_raw_bytes)
     }
 }
 
@@ -83,6 +114,20 @@ impl RunSummary {
     pub fn total_comm_time(&self) -> Duration {
         self.rounds.iter().map(|r| r.comm_time()).sum()
     }
+    pub fn total_downlink(&self) -> usize {
+        self.rounds.iter().map(|r| r.downlink_bytes).sum()
+    }
+    pub fn total_downlink_raw(&self) -> usize {
+        self.rounds.iter().map(|r| r.downlink_raw_bytes).sum()
+    }
+    /// Run-wide downlink compression ratio.
+    pub fn mean_down_ratio(&self) -> f64 {
+        crate::compress::CompressionStats {
+            raw_bytes: self.total_downlink_raw(),
+            compressed_bytes: self.total_downlink(),
+        }
+        .ratio()
+    }
     pub fn loss_curve(&self) -> Vec<f64> {
         self.rounds.iter().map(|r| r.mean_loss).collect()
     }
@@ -94,25 +139,57 @@ mod tests {
 
     #[test]
     fn round_time_model() {
+        // Eq. 1 with both directions: uplink comp/transmit/decomp plus
+        // the downlink broadcast's codec and transmit terms.
         let st = RoundStats {
             comp_time: Duration::from_millis(10),
             decomp_time: Duration::from_millis(5),
             transmit_time: Duration::from_millis(100),
+            down_codec_time: Duration::from_millis(3),
+            down_transmit_time: Duration::from_millis(40),
             payload_bytes: 100,
             raw_bytes: 1000,
+            downlink_bytes: 200,
+            downlink_raw_bytes: 1000,
             ..Default::default()
         };
-        assert_eq!(st.comm_time(), Duration::from_millis(115));
+        assert_eq!(st.comm_time(), Duration::from_millis(158));
         assert!((st.ratio() - 10.0).abs() < 1e-12);
+        assert!((st.down_ratio() - 5.0).abs() < 1e-12);
+        // Uncompressed cost covers both directions of an asymmetric link.
+        let link = LinkSpec {
+            bits_per_sec: 8e3, // 1000 raw bytes up -> 1 s
+            down_bits_per_sec: 16e3, // 1000 raw bytes down -> 0.5 s
+            latency: Duration::ZERO,
+        };
+        assert!((st.uncompressed_time(&link).as_secs_f64() - 1.5).abs() < 1e-9);
+        // A round with no downlink accounting reduces to the old model.
+        let up_only = RoundStats {
+            comp_time: Duration::from_millis(10),
+            decomp_time: Duration::from_millis(5),
+            transmit_time: Duration::from_millis(100),
+            ..Default::default()
+        };
+        assert_eq!(up_only.comm_time(), Duration::from_millis(115));
+        assert_eq!(up_only.down_ratio(), 1.0);
     }
 
     #[test]
     fn summary_aggregates() {
         let mut s = RunSummary::default();
         for _ in 0..3 {
-            s.rounds.push(RoundStats { payload_bytes: 10, raw_bytes: 100, ..Default::default() });
+            s.rounds.push(RoundStats {
+                payload_bytes: 10,
+                raw_bytes: 100,
+                downlink_bytes: 25,
+                downlink_raw_bytes: 100,
+                ..Default::default()
+            });
         }
         assert_eq!(s.total_payload(), 30);
         assert!((s.mean_ratio() - 10.0).abs() < 1e-12);
+        assert_eq!(s.total_downlink(), 75);
+        assert_eq!(s.total_downlink_raw(), 300);
+        assert!((s.mean_down_ratio() - 4.0).abs() < 1e-12);
     }
 }

@@ -17,8 +17,10 @@
 //! Fig. 11 experiments.
 
 use std::collections::HashSet;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::compress::downlink::DownlinkCodec;
 use crate::compress::engine::CodecEngine;
 use crate::compress::frame::Frame;
 use crate::compress::session::EngineDecodeSession;
@@ -45,6 +47,12 @@ pub struct Server {
     /// Payloads and state checks from unknown ids are rejected with a
     /// proper `Err`, never an index panic.
     admitted: HashSet<ClientId>,
+    /// Downlink broadcast compressor (`None` = raw f32 broadcast; even
+    /// then the broadcast message is encoded once and fanned out).
+    downlink: Option<DownlinkCodec>,
+    /// Client id behind each channel index (recorded by `wait_hellos`;
+    /// the downlink codec keys its synced-set on these).
+    channel_ids: Vec<ClientId>,
     round: u32,
 }
 
@@ -57,7 +65,32 @@ impl Server {
         engine: Box<dyn CodecEngine>,
         store: Box<dyn StateStore>,
     ) -> Self {
-        Server { params, metas, lr, engine, store, admitted: HashSet::new(), round: 0 }
+        Server {
+            params,
+            metas,
+            lr,
+            engine,
+            store,
+            admitted: HashSet::new(),
+            downlink: None,
+            channel_ids: Vec::new(),
+            round: 0,
+        }
+    }
+
+    /// Attach a downlink broadcast compressor: the per-round global
+    /// delta is encoded once and fanned out to every participant (see
+    /// [`crate::compress::downlink`]).
+    pub fn with_downlink(mut self, downlink: DownlinkCodec) -> Self {
+        self.downlink = Some(downlink);
+        self
+    }
+
+    /// The downlink reference model — bit-identical to every synced
+    /// client's view (`None` without a downlink codec or before the
+    /// first broadcast).
+    pub fn downlink_reference(&self) -> Option<&[Vec<f32>]> {
+        self.downlink.as_ref().and_then(|d| d.reference())
     }
 
     /// Convenience: engine over an unbounded sharded in-memory store.
@@ -245,16 +278,98 @@ impl Server {
         self.round += 1;
     }
 
+    /// Broadcast this round's model to every channel. The message bytes
+    /// are encoded **once** and fanned out as the same shared buffer —
+    /// for both the raw `GlobalParams` path and the compressed
+    /// delta/full-sync path.
+    fn broadcast(
+        &mut self,
+        channels: &mut [Box<dyn Channel>],
+        round: u32,
+        stats: &mut RoundStats,
+    ) -> crate::Result<()> {
+        let raw_model_bytes: usize = self.metas.iter().map(|m| m.numel * 4).sum();
+        stats.downlink_raw_bytes = raw_model_bytes * channels.len();
+        // Byte accounting convention (matches the uplink and the
+        // run_local simulation): frame/tensor payload bytes only, no
+        // `Msg` envelope — so threaded and simulated runs of the same
+        // config report the same down CR, and the raw path reads 1.0.
+        match &mut self.downlink {
+            None => {
+                let bytes: Arc<[u8]> = Msg::encode_global_params(round, &self.params).into();
+                stats.downlink_bytes = raw_model_bytes * channels.len();
+                for ch in channels.iter_mut() {
+                    ch.send_encoded(&bytes)?;
+                }
+            }
+            Some(down) => {
+                anyhow::ensure!(
+                    self.channel_ids.len() == channels.len(),
+                    "downlink broadcast needs the Hello id behind every channel \
+                     (run wait_hellos first)"
+                );
+                let bc = down.encode_round(&self.params, &self.channel_ids)?;
+                stats.down_codec_time += bc.stats.encode_time;
+                let delta_payload = bc.stats.delta_bytes;
+                // Encode each message once; every recipient gets the
+                // same buffers.
+                let delta_msgs: Option<(Arc<[u8]>, Vec<Arc<[u8]>>)> = bc.delta.map(|d| {
+                    let begin: Arc<[u8]> = Msg::DeltaBegin {
+                        round,
+                        n_layers: d.frames.len() as u32,
+                        reset: d.reset,
+                    }
+                    .encode()
+                    .into();
+                    let frames = d
+                        .frames
+                        .iter()
+                        .map(|f| Msg::DeltaFrame { round, frame: f.to_wire() }.encode())
+                        .map(Arc::from)
+                        .collect();
+                    (begin, frames)
+                });
+                let full_sync: Option<Arc<[u8]>> = if bc.cold.is_empty() {
+                    None
+                } else {
+                    let reference = down
+                        .reference()
+                        .ok_or_else(|| anyhow::anyhow!("downlink reference missing"))?;
+                    Some(Msg::encode_full_sync(round, reference).into())
+                };
+                let cold: HashSet<ClientId> = bc.cold.into_iter().collect();
+                for (idx, ch) in channels.iter_mut().enumerate() {
+                    if cold.contains(&self.channel_ids[idx]) {
+                        let bytes = full_sync
+                            .as_ref()
+                            .ok_or_else(|| anyhow::anyhow!("cold client without full sync"))?;
+                        stats.full_syncs += 1;
+                        stats.downlink_bytes += raw_model_bytes;
+                        ch.send_encoded(bytes)?;
+                    } else {
+                        let (begin, frames) = delta_msgs
+                            .as_ref()
+                            .ok_or_else(|| anyhow::anyhow!("warm client without a delta"))?;
+                        stats.downlink_bytes += delta_payload;
+                        ch.send_encoded(begin)?;
+                        for f in frames {
+                            ch.send_encoded(f)?;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Full synchronous round over live channels (threaded/TCP mode):
-    /// broadcast params, run the state handshake, collect updates
-    /// (monolithic or frame-streamed), aggregate, step.
+    /// broadcast params (encode-once fan-out; compressed delta when a
+    /// downlink codec is attached), run the state handshake, collect
+    /// updates (monolithic or frame-streamed), aggregate, step.
     pub fn run_round(&mut self, channels: &mut [Box<dyn Channel>]) -> crate::Result<RoundStats> {
         let round = self.round;
-        let bcast = Msg::GlobalParams { round, tensors: self.params.clone() };
-        for ch in channels.iter_mut() {
-            ch.send(&bcast)?;
-        }
         let mut stats = RoundStats { round, participants: channels.len(), ..Default::default() };
+        self.broadcast(channels, round, &mut stats)?;
         // ── Pass 1: state epoch handshake (before any client trains). ──
         for ch in channels.iter_mut() {
             match ch.recv()? {
@@ -316,12 +431,15 @@ impl Server {
     }
 
     /// Wait for the Hello of every client (threaded/TCP mode), admitting
-    /// each announced id.
+    /// each announced id and recording which id sits behind each channel
+    /// (the downlink broadcast plans its fan-out against these).
     pub fn wait_hellos(&mut self, channels: &mut [Box<dyn Channel>]) -> crate::Result<()> {
+        self.channel_ids.clear();
         for ch in channels.iter_mut() {
             match ch.recv()? {
                 Msg::Hello { client_id } => {
                     self.admitted.insert(client_id);
+                    self.channel_ids.push(client_id);
                 }
                 other => anyhow::bail!("expected Hello, got {other:?}"),
             }

@@ -6,30 +6,64 @@
 
 use std::time::{Duration, Instant};
 
-/// Link parameters.
+/// Link parameters. Real client links are asymmetric — 4G and Wi-Fi
+/// downlinks run several times faster than their uplinks — so the spec
+/// carries both directions; symmetric constructors set them equal.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LinkSpec {
-    /// Bandwidth in bits per second (e.g. `10e6` = 10 Mbps).
+    /// Uplink bandwidth in bits per second (e.g. `10e6` = 10 Mbps).
     pub bits_per_sec: f64,
+    /// Downlink (server → client) bandwidth in bits per second.
+    pub down_bits_per_sec: f64,
     /// One-way latency.
     pub latency: Duration,
 }
 
 impl LinkSpec {
+    /// Symmetric link (uplink == downlink).
+    pub fn sym(bits_per_sec: f64, latency: Duration) -> Self {
+        LinkSpec { bits_per_sec, down_bits_per_sec: bits_per_sec, latency }
+    }
+    /// Symmetric link in Mbps with the stock 20 ms latency.
     pub fn mbps(mbps: f64) -> Self {
-        LinkSpec { bits_per_sec: mbps * 1e6, latency: Duration::from_millis(20) }
+        Self::sym(mbps * 1e6, Duration::from_millis(20))
+    }
+    /// Asymmetric link in Mbps (down ≫ up on most access networks).
+    pub fn asym_mbps(up_mbps: f64, down_mbps: f64) -> Self {
+        LinkSpec {
+            bits_per_sec: up_mbps * 1e6,
+            down_bits_per_sec: down_mbps * 1e6,
+            latency: Duration::from_millis(20),
+        }
     }
     /// Unthrottled link.
     pub fn infinite() -> Self {
-        LinkSpec { bits_per_sec: f64::INFINITY, latency: Duration::ZERO }
+        Self::sym(f64::INFINITY, Duration::ZERO)
     }
-    /// Time to transmit `bytes` over this link.
-    pub fn transmit_time(&self, bytes: usize) -> Duration {
-        if !self.bits_per_sec.is_finite() {
+    /// The same link seen from the other end: up and down swapped — the
+    /// spec governing the *peer's* sends (the server transmits on the
+    /// client's downlink).
+    pub fn flipped(&self) -> LinkSpec {
+        LinkSpec {
+            bits_per_sec: self.down_bits_per_sec,
+            down_bits_per_sec: self.bits_per_sec,
+            latency: self.latency,
+        }
+    }
+    fn time_at(&self, bytes: usize, bits_per_sec: f64) -> Duration {
+        if !bits_per_sec.is_finite() {
             return self.latency;
         }
-        let secs = (bytes as f64 * 8.0) / self.bits_per_sec;
+        let secs = (bytes as f64 * 8.0) / bits_per_sec;
         self.latency + Duration::from_secs_f64(secs)
+    }
+    /// Time to transmit `bytes` over the uplink.
+    pub fn transmit_time(&self, bytes: usize) -> Duration {
+        self.time_at(bytes, self.bits_per_sec)
+    }
+    /// Time to receive `bytes` over the downlink.
+    pub fn downlink_time(&self, bytes: usize) -> Duration {
+        self.time_at(bytes, self.down_bits_per_sec)
     }
 }
 
@@ -88,14 +122,14 @@ mod tests {
 
     #[test]
     fn transmit_time_formula() {
-        let link = LinkSpec { bits_per_sec: 8e6, latency: Duration::ZERO };
+        let link = LinkSpec::sym(8e6, Duration::ZERO);
         // 1 MB over 8 Mbps = 1 s.
         assert!((link.transmit_time(1_000_000).as_secs_f64() - 1.0).abs() < 1e-9);
     }
 
     #[test]
     fn latency_added() {
-        let link = LinkSpec { bits_per_sec: 8e6, latency: Duration::from_millis(50) };
+        let link = LinkSpec::sym(8e6, Duration::from_millis(50));
         assert!((link.transmit_time(0).as_secs_f64() - 0.05).abs() < 1e-9);
     }
 
@@ -107,7 +141,7 @@ mod tests {
 
     #[test]
     fn virtual_link_accumulates() {
-        let mut v = VirtualLink::new(LinkSpec { bits_per_sec: 8e6, latency: Duration::ZERO });
+        let mut v = VirtualLink::new(LinkSpec::sym(8e6, Duration::ZERO));
         v.send(500_000);
         v.send(500_000);
         assert_eq!(v.bytes_sent, 1_000_000);
@@ -115,10 +149,28 @@ mod tests {
     }
 
     #[test]
+    fn asymmetric_directions_and_flip() {
+        let link = LinkSpec::asym_mbps(10.0, 80.0);
+        // 1 MB: 0.8 s up, 0.1 s down (plus the stock 20 ms latency).
+        let up = link.transmit_time(1_000_000).as_secs_f64();
+        let down = link.downlink_time(1_000_000).as_secs_f64();
+        assert!((up - 0.82).abs() < 1e-9, "up {up}");
+        assert!((down - 0.12).abs() < 1e-9, "down {down}");
+        // The peer's view swaps the directions.
+        let peer = link.flipped();
+        assert_eq!(peer.transmit_time(1_000_000), link.downlink_time(1_000_000));
+        assert_eq!(peer.downlink_time(1_000_000), link.transmit_time(1_000_000));
+        // Symmetric constructors keep both directions equal.
+        let sym = LinkSpec::mbps(10.0);
+        assert_eq!(sym.transmit_time(12345), sym.downlink_time(12345));
+        assert_eq!(LinkSpec::infinite().downlink_time(1 << 30), Duration::ZERO);
+    }
+
+    #[test]
     fn throttler_enforces_rate() {
         // 80 kbit/s -> 10 KB takes ~1s; use smaller scale to keep test fast:
         // 8 Mbit/s -> 100 KB takes ~0.1 s.
-        let mut t = Throttler::new(LinkSpec { bits_per_sec: 8e6, latency: Duration::ZERO });
+        let mut t = Throttler::new(LinkSpec::sym(8e6, Duration::ZERO));
         let t0 = Instant::now();
         t.consume(50_000);
         t.consume(50_000);

@@ -1,7 +1,13 @@
 //! In-process transport: paired mpsc channels with optional bandwidth
 //! throttling. The default for single-process FL simulation.
+//!
+//! Messages travel as shared `Arc<[u8]>` buffers, so the server's
+//! encode-once broadcast path ([`Channel::send_encoded`]) fans the same
+//! allocation out to every client without copying, let alone
+//! re-encoding.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 
 use super::bandwidth::{LinkSpec, Throttler};
 use super::Channel;
@@ -9,29 +15,46 @@ use crate::fl::protocol::Msg;
 
 /// One endpoint of an in-process duplex channel.
 pub struct InProcChannel {
-    tx: Sender<Vec<u8>>,
-    rx: Receiver<Vec<u8>>,
+    tx: Sender<Arc<[u8]>>,
+    rx: Receiver<Arc<[u8]>>,
     throttle: Option<Throttler>,
 }
 
-/// Create a connected (server_end, client_end) pair. `link` throttles
-/// sends on **both** ends in real time when set.
+/// Create a connected (server_end, client_end) pair. When `link` is set,
+/// sends are throttled in real time **per direction**: the client end
+/// transmits at the uplink rate, the server end at the (often much
+/// larger) downlink rate.
 pub fn pair(link: Option<LinkSpec>) -> (InProcChannel, InProcChannel) {
     let (tx_a, rx_b) = channel();
     let (tx_b, rx_a) = channel();
     (
-        InProcChannel { tx: tx_a, rx: rx_a, throttle: link.map(Throttler::new) },
+        // Server end: its sends ride the downlink.
+        InProcChannel {
+            tx: tx_a,
+            rx: rx_a,
+            throttle: link.map(|l| Throttler::new(l.flipped())),
+        },
+        // Client end: its sends ride the uplink.
         InProcChannel { tx: tx_b, rx: rx_b, throttle: link.map(Throttler::new) },
     )
 }
 
-impl Channel for InProcChannel {
-    fn send(&mut self, msg: &Msg) -> crate::Result<()> {
-        let bytes = msg.encode();
+impl InProcChannel {
+    fn push(&mut self, bytes: Arc<[u8]>) -> crate::Result<()> {
         if let Some(t) = &mut self.throttle {
             t.consume(bytes.len());
         }
         self.tx.send(bytes).map_err(|_| anyhow::anyhow!("peer hung up"))
+    }
+}
+
+impl Channel for InProcChannel {
+    fn send(&mut self, msg: &Msg) -> crate::Result<()> {
+        self.push(msg.encode().into())
+    }
+
+    fn send_encoded(&mut self, bytes: &Arc<[u8]>) -> crate::Result<()> {
+        self.push(bytes.clone())
     }
 
     fn recv(&mut self) -> crate::Result<Msg> {
@@ -70,5 +93,16 @@ mod tests {
         let (mut a, b) = pair(None);
         drop(b);
         assert!(a.send(&Msg::Shutdown).is_err());
+    }
+
+    #[test]
+    fn send_encoded_forwards_shared_bytes() {
+        let (mut a, mut b) = pair(None);
+        let msg = Msg::GlobalParams { round: 2, tensors: vec![vec![1.0, -1.0]] };
+        let bytes: Arc<[u8]> = msg.encode().into();
+        a.send_encoded(&bytes).unwrap();
+        a.send_encoded(&bytes).unwrap(); // same allocation, fanned out twice
+        assert_eq!(b.recv().unwrap(), msg);
+        assert_eq!(b.recv().unwrap(), msg);
     }
 }

@@ -6,10 +6,22 @@ pub mod bandwidth;
 pub mod inproc;
 pub mod tcp;
 
+use std::sync::Arc;
+
 use crate::fl::protocol::Msg;
 
 /// A bidirectional, blocking message channel endpoint.
 pub trait Channel: Send {
     fn send(&mut self, msg: &Msg) -> crate::Result<()>;
+
+    /// Send pre-encoded message bytes — the encode-once fan-out path:
+    /// the server serializes a broadcast message **once** and hands
+    /// every channel the same shared buffer. Transports that carry raw
+    /// bytes forward the buffer without re-encoding; this default
+    /// decodes and re-sends for transports that only know `Msg`.
+    fn send_encoded(&mut self, bytes: &Arc<[u8]>) -> crate::Result<()> {
+        self.send(&Msg::decode(bytes)?)
+    }
+
     fn recv(&mut self) -> crate::Result<Msg>;
 }

@@ -21,19 +21,25 @@ pub struct TcpChannel {
 }
 
 impl TcpChannel {
+    /// Wrap a stream. `link` is this endpoint's view of the connection:
+    /// sends are throttled at its **uplink** rate (`bits_per_sec`).
     pub fn new(stream: TcpStream, link: Option<LinkSpec>) -> crate::Result<Self> {
         stream.set_nodelay(true)?;
         Ok(TcpChannel { stream, throttle: link.map(Throttler::new) })
     }
 
-    /// Connect to a server.
+    /// Connect to a server (client side: sends ride the uplink).
     pub fn connect(addr: &str, link: Option<LinkSpec>) -> crate::Result<Self> {
         let stream = TcpStream::connect(addr)?;
         Self::new(stream, link)
     }
 }
 
-/// Listen and accept `n` client channels (in accept order).
+/// Listen and accept `n` client channels (in accept order). `link` is
+/// the *client's* view of each connection; the server's sends ride the
+/// client's **downlink**, so the accepted endpoints throttle at the
+/// flipped rate — the same per-direction discipline as
+/// [`super::inproc::pair`].
 pub fn accept_n(
     listener: &TcpListener,
     n: usize,
@@ -42,20 +48,31 @@ pub fn accept_n(
     let mut out = Vec::with_capacity(n);
     for _ in 0..n {
         let (stream, _) = listener.accept()?;
-        out.push(TcpChannel::new(stream, link)?);
+        out.push(TcpChannel::new(stream, link.map(|l| l.flipped()))?);
     }
     Ok(out)
 }
 
-impl Channel for TcpChannel {
-    fn send(&mut self, msg: &Msg) -> crate::Result<()> {
-        let bytes = msg.encode();
+impl TcpChannel {
+    fn write_frame(&mut self, bytes: &[u8]) -> crate::Result<()> {
         if let Some(t) = &mut self.throttle {
             t.consume(bytes.len() + 4);
         }
         self.stream.write_all(&(bytes.len() as u32).to_le_bytes())?;
-        self.stream.write_all(&bytes)?;
+        self.stream.write_all(bytes)?;
         Ok(())
+    }
+}
+
+impl Channel for TcpChannel {
+    fn send(&mut self, msg: &Msg) -> crate::Result<()> {
+        self.write_frame(&msg.encode())
+    }
+
+    /// Encode-once fan-out: forward pre-encoded message bytes straight
+    /// to the socket without a decode/re-encode round trip.
+    fn send_encoded(&mut self, bytes: &std::sync::Arc<[u8]>) -> crate::Result<()> {
+        self.write_frame(bytes)
     }
 
     fn recv(&mut self) -> crate::Result<Msg> {

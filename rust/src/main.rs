@@ -55,7 +55,11 @@ fn print_usage() {
          fedgec info\n\
          \n\
          --codec accepts any CodecSpec string, e.g. 'fedgec:eb=rel1e-2,beta=0.9',\n\
-         'qsgd:bits=5', 'topk:k=0.05', 'ef(qsgd:bits=5)'. See `fedgec codecs`."
+         'qsgd:bits=5', 'topk:k=0.05', 'ef(qsgd:bits=5)'. See `fedgec codecs`.\n\
+         --down compresses the server broadcast the same way (global-delta\n\
+         codec, encode-once fan-out): --down fedgec --down_eb 1e-3; 'raw'\n\
+         keeps the uncompressed broadcast. --down_bandwidth_mbps sets an\n\
+         asymmetric downlink rate."
     );
 }
 
@@ -117,19 +121,26 @@ fn cmd_serve(args: &Args) -> fedgec::Result<()> {
         vec![proto.conv_w.clone(), proto.conv_b.clone(), proto.fc_w.clone(), proto.fc_b.clone()];
     let mut server = fedgec::fl::server::Server::new(
         init,
-        metas,
+        metas.clone(),
         cfg.server_lr,
         fedgec::coordinator::build_engine(&cfg)?,
         cfg.build_state_store()?,
     );
+    if let Some(spec) = cfg.down_spec()? {
+        server = server
+            .with_downlink(fedgec::compress::downlink::DownlinkCodec::new(&spec, metas));
+    }
     server.wait_hellos(&mut channels)?;
     for r in 0..cfg.rounds {
         let stats = server.run_round(&mut channels)?;
         println!(
-            "round {r}: loss {:.4} CR {:.2} payload {:.1} KB | {} states ({:.0} KB)",
+            "round {r}: loss {:.4} CR {:.2} payload {:.1} KB | down {:.1} KB ({} syncs) | \
+             {} states ({:.0} KB)",
             stats.mean_loss,
             stats.ratio(),
             stats.payload_bytes as f64 / 1e3,
+            stats.downlink_bytes as f64 / 1e3,
+            stats.full_syncs,
             stats.store_clients,
             stats.store_bytes as f64 / 1e3,
         );
@@ -158,6 +169,12 @@ fn cmd_client(args: &Args) -> fedgec::Result<()> {
     let codec = fedgec::coordinator::build_codec(&cfg)?;
     let mut client = fedgec::fl::client::Client::new(id, Box::new(trainer), codec)
         .with_streaming(cfg.stream_updates);
+    if let Some(spec) = cfg.down_spec()? {
+        let metas = fedgec::train::native::NativeNet::new(cfg.dataset.classes(), cfg.seed)
+            .layer_metas();
+        client = client
+            .with_downlink(fedgec::compress::downlink::DownlinkMirror::new(&spec, metas));
+    }
     println!("client {id} connected to {addr}");
     client.run(&mut channel)
 }

@@ -154,6 +154,47 @@ impl GradGen {
         self.round
     }
 
+    /// Advance `params` by one aggregated-SGD step over the next round's
+    /// gradients (`θ ← θ − lr·g`): the synthetic global-model trajectory
+    /// whose per-round delta the downlink broadcast codec compresses.
+    pub fn sgd_step(&mut self, params: &mut [Vec<f32>], lr: f32) {
+        let g = self.next_round();
+        for (p, l) in params.iter_mut().zip(&g.layers) {
+            for (w, d) in p.iter_mut().zip(&l.data) {
+                *w -= lr * d;
+            }
+        }
+    }
+}
+
+/// Shared measurement harness for the downlink bench panels: run a
+/// fedgec global-delta broadcast stream at REL `eb` over `rounds` rounds
+/// of a synthetic SGD trajectory (zero-initialized params, lr 0.05)
+/// with a persistent `fan_out`-client subscription. Returns `(raw model
+/// bytes, total delta frame bytes, total encode time)` — one definition
+/// of the measurement convention instead of one per bench.
+pub fn measure_downlink_delta(
+    metas: &[crate::tensor::LayerMeta],
+    cfg: GradGenConfig,
+    seed: u64,
+    eb: f64,
+    fan_out: usize,
+    rounds: usize,
+) -> crate::Result<(usize, usize, std::time::Duration)> {
+    use crate::compress::downlink::{measure_delta_stream, DownlinkCodec};
+    use crate::compress::spec::{CodecSpec, SpecDefaults};
+    let spec = CodecSpec::parse_with("fedgec", &SpecDefaults::with_rel_eb(eb))?;
+    let mut down = DownlinkCodec::new(&spec, metas.to_vec());
+    let mut gen = GradGen::new(metas.to_vec(), cfg, seed);
+    let mut params: Vec<Vec<f32>> = metas.iter().map(|m| vec![0.0f32; m.numel]).collect();
+    let ids: Vec<u32> = (0..fan_out as u32).collect();
+    let (delta_bytes, encode_time) =
+        measure_delta_stream(&mut down, &mut params, &ids, rounds, |p| gen.sgd_step(p, 0.05))?;
+    let raw_bytes = metas.iter().map(|m| m.numel * 4).sum();
+    Ok((raw_bytes, delta_bytes, encode_time))
+}
+
+impl GradGen {
     /// Generate the next round's gradient tensors.
     pub fn next_round(&mut self) -> ModelGrad {
         let t = self.round;

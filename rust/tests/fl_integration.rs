@@ -141,9 +141,9 @@ fn virtual_link_accounting_scales_with_bandwidth() {
     // Zero latency so only the bandwidth term is compared.
     let mut slow = base_cfg();
     slow.rounds = 2;
-    slow.link = LinkSpec { bits_per_sec: 1e6, latency: std::time::Duration::ZERO };
+    slow.link = LinkSpec::sym(1e6, std::time::Duration::ZERO);
     let mut fast = slow.clone();
-    fast.link = LinkSpec { bits_per_sec: 100e6, latency: std::time::Duration::ZERO };
+    fast.link = LinkSpec::sym(100e6, std::time::Duration::ZERO);
     let s = run_local(&slow).unwrap();
     let f = run_local(&fast).unwrap();
     let ts = s.rounds.iter().map(|r| r.transmit_time).sum::<std::time::Duration>();

@@ -81,7 +81,7 @@ fn tcp_throttled_link_slows_uploads() {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
     // Throttle the client's uplink to ~4 Mbps with zero latency.
-    let link = LinkSpec { bits_per_sec: 4e6, latency: std::time::Duration::ZERO };
+    let link = LinkSpec::sym(4e6, std::time::Duration::ZERO);
     let handle = spawn_client(addr.clone(), 0, Some(link), true);
     let chans = accept_n(&listener, 1, None).unwrap();
     let mut channels: Vec<Box<dyn Channel>> =
