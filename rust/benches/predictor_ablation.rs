@@ -1,0 +1,139 @@
+//! Predictor-API ablation: per-layer compression for the fixed magnitude
+//! predictors (`pred=ema|last|zero`) vs the per-layer race (`pred=auto`)
+//! on the model-zoo CNN's calibrated gradient stream.
+//!
+//! Two assertions ride along:
+//!  * **race exactness** — every `pred=auto` frame's recorded winner is
+//!    the argmin of its measured candidate costs (zero slack);
+//!  * **auto never loses** — per layer, `pred=auto`'s total bytes stay
+//!    within the v3 self-description header overhead (plus a ≤1% state-
+//!    drift allowance) of the best fixed predictor's total. `backend=none`
+//!    keeps the byte accounting exact.
+//!
+//! Emits `results/predictor_ablation.csv` + `BENCH_predictor_ablation.json`
+//! (uploaded by CI's bench-smoke job).
+
+mod bench_util;
+
+use bench_util::*;
+use fedgec::compress::lossless::Backend;
+use fedgec::compress::pipeline::{FedgecCodec, FedgecConfig};
+use fedgec::compress::predictor::{MagnitudeSel, PredictorSpec, SignSel};
+use fedgec::compress::GradientCodec;
+use fedgec::metrics::Table;
+use fedgec::tensor::model_zoo::ModelArch;
+use fedgec::train::data::DatasetSpec;
+use fedgec::train::gradgen::{GradGen, GradGenConfig};
+
+const PREDS: [MagnitudeSel; 4] =
+    [MagnitudeSel::Ema, MagnitudeSel::Last, MagnitudeSel::Zero, MagnitudeSel::Auto];
+
+fn codec_for(mag: MagnitudeSel) -> FedgecCodec {
+    FedgecCodec::new(FedgecConfig {
+        backend: Backend::None,
+        predictor: PredictorSpec { mag, sign: SignSel::Auto },
+        ..Default::default()
+    })
+}
+
+fn main() {
+    banner("predictor_ablation", "per-layer predictor racing (pred=auto)");
+    let arch = if quick_mode() { ModelArch::MicroResNet } else { ModelArch::ResNet18 };
+    let metas = arch.layers(10);
+    let rounds = if full_mode() {
+        12
+    } else if quick_mode() {
+        4
+    } else {
+        8
+    };
+    let mut codecs: Vec<FedgecCodec> = PREDS.iter().map(|&m| codec_for(m)).collect();
+    // Per predictor, per layer: summed compressed bytes + raw bytes.
+    let mut bytes = vec![vec![0usize; metas.len()]; PREDS.len()];
+    let mut raw = vec![0usize; metas.len()];
+    // Per layer: how often each candidate won the auto race.
+    let mut wins: Vec<std::collections::BTreeMap<String, usize>> =
+        vec![Default::default(); metas.len()];
+
+    let mut gen = GradGen::new(metas.clone(), GradGenConfig::for_dataset(DatasetSpec::Cifar10), 5);
+    for _round in 0..rounds {
+        let g = gen.next_round();
+        for (li, l) in g.layers.iter().enumerate() {
+            raw[li] += l.data.len() * 4;
+        }
+        for (pi, codec) in codecs.iter_mut().enumerate() {
+            let (_, report) = codec.compress_with_report(&g).unwrap();
+            for (li, lr) in report.layers.iter().enumerate() {
+                bytes[pi][li] += lr.compressed_bytes;
+                if PREDS[pi] == MagnitudeSel::Auto && lr.lossy {
+                    // Race exactness: recorded winner == measured argmin.
+                    assert_eq!(lr.pred_race.len(), 3, "layer {}", lr.name);
+                    let min = lr.pred_race.iter().map(|&(_, c)| c).min().unwrap();
+                    let winner = lr
+                        .pred_race
+                        .iter()
+                        .find(|(name, _)| *name == lr.pred_tag)
+                        .expect("winner in race log");
+                    assert_eq!(winner.1, min, "layer {}: winner is not argmin", lr.name);
+                    *wins[li].entry(lr.pred_tag.clone()).or_insert(0) += 1;
+                }
+            }
+        }
+    }
+
+    let mut table = Table::new(
+        "Predictor ablation: per-layer CR for pred=ema/last/zero/auto",
+        &["layer", "raw KB", "ema", "last", "zero", "auto", "auto wins", "auto/best"],
+    );
+    let auto_idx = PREDS.len() - 1;
+    for (li, meta) in metas.iter().enumerate() {
+        let cr = |pi: usize| raw[li] as f64 / bytes[pi][li].max(1) as f64;
+        let best_fixed = (0..auto_idx).map(|pi| bytes[pi][li]).min().unwrap();
+        let auto = bytes[auto_idx][li];
+        let wins_str = wins[li]
+            .iter()
+            .map(|(k, v)| format!("{k}:{v}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        table.row(vec![
+            meta.name.clone(),
+            format!("{:.1}", raw[li] as f64 / 1024.0),
+            format!("{:.2}", cr(0)),
+            format!("{:.2}", cr(1)),
+            format!("{:.2}", cr(2)),
+            format!("{:.2}", cr(3)),
+            if wins_str.is_empty() { "-".into() } else { wins_str },
+            format!("{:.4}", auto as f64 / best_fixed as f64),
+        ]);
+        // "Never loses": auto tracks the best fixed predictor per layer
+        // to within the v3 header it pays for self-description (≤ 16 B
+        // per round per layer) plus a 1% allowance for the ≤2δ recon
+        // drift between the runs' mirrored states.
+        let slack = rounds * 16 + best_fixed / 100;
+        assert!(
+            auto <= best_fixed + slack,
+            "layer {}: auto {} B vs best fixed {} B (+{} slack)",
+            meta.name,
+            auto,
+            best_fixed,
+            slack
+        );
+    }
+    table.print();
+    let csv = table.save_csv("predictor_ablation").unwrap();
+    let json = table.save_json("predictor_ablation").unwrap();
+    println!("saved {csv:?} and {json:?}");
+
+    // Whole-model summary: the race never loses in aggregate either.
+    let total = |pi: usize| bytes[pi].iter().sum::<usize>();
+    let best_total = (0..auto_idx).map(total).min().unwrap();
+    println!(
+        "whole-model bytes: ema {} | last {} | zero {} | auto {} (best fixed {})",
+        total(0),
+        total(1),
+        total(2),
+        total(3),
+        best_total
+    );
+    assert!(total(auto_idx) <= best_total + metas.len() * rounds * 16 + best_total / 100);
+}

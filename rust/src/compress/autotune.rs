@@ -73,6 +73,24 @@ pub fn pick_entropy_coder_from_hist(
     }
 }
 
+/// Exact size in bytes of the Huffman-coder stage-3 stream for a code
+/// stream with this histogram (the coder's own raw fallback included) —
+/// the `pred=auto` race metric, extending the same exact-size machinery
+/// the entropy-coder chooser uses. Like τ and the coder choice, the
+/// race is a **client-only** decision: the winner's tag is recorded in
+/// the layer blob, so the server follows with zero synchronization
+/// cost. Exact for `ec=huff` without autotune; for `ec=rans` (whose
+/// size-checked selector never emits more than this) it is a
+/// size-faithful upper bound, so a race winner under this metric never
+/// loses actual bytes.
+pub fn entropy_stage_cost(hist: &[(i32, u64)], n_codes: usize) -> usize {
+    let raw = 1 + 4 + n_codes * 4;
+    match huffman::serialized_size_from_hist(hist) {
+        Some(s) => s.min(raw),
+        None => raw,
+    }
+}
+
 /// Controller for the client-side τ.
 ///
 /// Ownership note for the externalized-state world: τ controllers are
@@ -211,6 +229,27 @@ mod tests {
             pick_entropy_coder_from_hist(&hist, skewed.len(), EntropyCoder::Huffman),
             pick_entropy_coder(&skewed, EntropyCoder::Huffman)
         );
+    }
+
+    #[test]
+    fn entropy_stage_cost_matches_emitted_bytes() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xAB);
+        // Skewed and near-uniform streams: the metric must equal the
+        // Huffman coder's actual serialized size (raw fallback included).
+        for p0 in [0.99, 0.6, 0.03] {
+            let codes: Vec<i32> = (0..10_000)
+                .map(|_| if rng.chance(p0) { 0 } else { (rng.next_below(40) as i32) - 20 })
+                .collect();
+            let hist = code_histogram(&codes);
+            let emitted = EntropyCoder::Huffman.encode_to_bytes(&codes);
+            assert_eq!(entropy_stage_cost(&hist, codes.len()), emitted.len(), "p0={p0}");
+        }
+        // The rANS selector never exceeds the metric.
+        let codes: Vec<i32> = (0..20_000).map(|_| (rng.next_below(7) as i32) - 3).collect();
+        let hist = code_histogram(&codes);
+        let rans = EntropyCoder::Rans.encode_to_bytes(&codes);
+        assert!(rans.len() <= entropy_stage_cost(&hist, codes.len()));
     }
 
     #[test]

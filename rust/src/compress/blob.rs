@@ -12,14 +12,21 @@
 //! | 0   | lossless small-layer store (raw f32s)                          |
 //! | 1   | lossy v1: implicit Huffman entropy stage (seed format)         |
 //! | 2   | lossy v2: explicit entropy-coder tag byte follows the header   |
+//! | 3   | lossy v3: coder tag + magnitude-predictor tag (+ EMA β)        |
 //!
-//! v1 is still written whenever the Huffman coder is selected, keeping
-//! the default pipeline byte-compatible with the seed; any other coder
+//! v1 is still written whenever the Huffman coder is selected *and* the
+//! magnitude predictor is the implicit config-driven EMA, keeping the
+//! default pipeline byte-compatible with the seed; a non-Huffman coder
 //! bumps the section to v2 and records its
-//! [`crate::compress::EntropyCoder::tag`] so the decoder dispatches on
-//! the recorded tag rather than sniffing the stream.
+//! [`crate::compress::EntropyCoder::tag`]; a non-implicit magnitude
+//! predictor (`pred=last|zero|auto`) bumps to v3, which always records
+//! the coder tag plus the
+//! [`crate::compress::predictor::magnitude::PredTag`] actually used
+//! (and, for EMA, the effective β as an exact f32) — the decoder then
+//! reconstructs the layer with zero out-of-band configuration.
 
 use crate::compress::entropy::EntropyCoder;
+use crate::compress::predictor::magnitude::PredTag;
 
 /// Layer-section tag: lossless small-layer store.
 pub const SECTION_LOSSLESS: u8 = 0;
@@ -27,17 +34,46 @@ pub const SECTION_LOSSLESS: u8 = 0;
 pub const SECTION_LOSSY_V1: u8 = 1;
 /// Layer-section tag: lossy, v2 (explicit entropy-coder tag).
 pub const SECTION_LOSSY_V2: u8 = 2;
+/// Layer-section tag: lossy, v3 (self-describing predictor frames:
+/// explicit coder tag + magnitude-predictor tag, + EMA β when used).
+pub const SECTION_LOSSY_V3: u8 = 3;
 /// Current layer-section format version (the highest tag we emit).
-pub const BLOB_VERSION: u8 = SECTION_LOSSY_V2;
+pub const BLOB_VERSION: u8 = SECTION_LOSSY_V3;
 
-/// Section tag for a lossy layer closed by `coder`: Huffman keeps the
-/// seed-compatible v1 tag, anything else bumps to [`BLOB_VERSION`].
+/// Section tag for a lossy layer closed by `coder` under the implicit
+/// (config-driven EMA) predictor: Huffman keeps the seed-compatible v1
+/// tag, anything else bumps to v2. Self-describing predictor sections
+/// open with [`put_pred_header`] instead.
 pub fn section_tag_for(coder: EntropyCoder) -> u8 {
     if coder == EntropyCoder::Huffman {
         SECTION_LOSSY_V1
     } else {
-        BLOB_VERSION
+        SECTION_LOSSY_V2
     }
+}
+
+/// Open a v3 (self-describing predictor) lossy section: section tag,
+/// coder tag, predictor wire tag, and — for the EMA predictor — the
+/// effective β as an exact f32 so the decoder's memory update is
+/// bit-identical with zero out-of-band configuration. Pairs with
+/// [`read_pred_suffix`] after [`read_section_coder`] consumed the coder
+/// byte.
+pub fn put_pred_header(w: &mut BlobWriter, coder: EntropyCoder, pred: PredTag, beta: f32) {
+    w.put_u8(SECTION_LOSSY_V3);
+    w.put_u8(coder.tag());
+    w.put_u8(pred.tag());
+    if pred == PredTag::Ema {
+        w.put_f32(beta);
+    }
+}
+
+/// Read the predictor half of a v3 header (the coder byte was already
+/// consumed by [`read_section_coder`]): returns the wire tag and the
+/// recorded β (0 for non-EMA predictors, which carry none).
+pub fn read_pred_suffix(r: &mut BlobReader) -> anyhow::Result<(PredTag, f32)> {
+    let tag = PredTag::from_tag(r.get_u8()?)?;
+    let beta = if tag == PredTag::Ema { r.get_f32()? } else { 0.0 };
+    Ok((tag, beta))
 }
 
 /// Write the coder byte a v2 section records (nothing for v1 — Huffman
@@ -56,7 +92,7 @@ pub fn put_coder_suffix(w: &mut BlobWriter, coder: EntropyCoder) {
 pub fn read_section_coder(r: &mut BlobReader, tag: u8) -> anyhow::Result<EntropyCoder> {
     match tag {
         SECTION_LOSSY_V1 => Ok(EntropyCoder::Huffman),
-        SECTION_LOSSY_V2 => EntropyCoder::from_tag(r.get_u8()?),
+        SECTION_LOSSY_V2 | SECTION_LOSSY_V3 => EntropyCoder::from_tag(r.get_u8()?),
         t => anyhow::bail!("unknown layer-section tag {t}"),
     }
 }
@@ -226,6 +262,36 @@ mod tests {
         // A v2 tag with the suffix missing is a truncation error.
         let mut r = BlobReader::new(&[]);
         assert!(read_section_coder(&mut r, SECTION_LOSSY_V2).is_err());
+    }
+
+    #[test]
+    fn pred_header_roundtrips_every_coder_and_tag() {
+        for coder in EntropyCoder::ALL {
+            for pred in PredTag::ALL {
+                let mut w = BlobWriter::new();
+                put_pred_header(&mut w, coder, pred, 0.875);
+                let bytes = w.into_bytes();
+                // EMA sections carry the 4-byte β; others stay lean.
+                assert_eq!(bytes.len(), if pred == PredTag::Ema { 7 } else { 3 });
+                let mut r = BlobReader::new(&bytes);
+                let tag = r.get_u8().unwrap();
+                assert_eq!(tag, SECTION_LOSSY_V3);
+                assert_eq!(read_section_coder(&mut r, tag).unwrap(), coder);
+                let (got_pred, got_beta) = read_pred_suffix(&mut r).unwrap();
+                assert_eq!(got_pred, pred);
+                assert_eq!(got_beta, if pred == PredTag::Ema { 0.875 } else { 0.0 });
+                assert_eq!(r.remaining(), 0);
+            }
+        }
+        // Truncated v3 headers error at every stage.
+        let mut r = BlobReader::new(&[]);
+        assert!(read_section_coder(&mut r, SECTION_LOSSY_V3).is_err());
+        let mut r = BlobReader::new(&[]);
+        assert!(read_pred_suffix(&mut r).is_err());
+        let mut r = BlobReader::new(&[PredTag::Ema.tag()]);
+        assert!(read_pred_suffix(&mut r).is_err(), "ema suffix without β is truncation");
+        let mut r = BlobReader::new(&[9]);
+        assert!(read_pred_suffix(&mut r).is_err(), "unknown predictor tag");
     }
 
     #[test]

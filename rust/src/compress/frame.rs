@@ -123,6 +123,15 @@ pub struct LayerReport {
     /// Stage-3 coder that produced `entropy_bytes` (`"huff"`/`"rans"`/
     /// `"raw"`; empty for non-entropy codecs and lossless layers).
     pub entropy_coder: String,
+    /// Magnitude predictor that produced this layer's frame (`"ema"`/
+    /// `"last"`/`"zero"` — the frame's wire tag, set identically by the
+    /// fedgec encode and decode paths; empty for other codecs and for
+    /// lossless layers).
+    pub pred_tag: String,
+    /// `pred=auto` race log: candidate name → exact residual-stage cost
+    /// in bytes (entropy stream + escapes + predictor header). Encoder
+    /// side only; empty unless the race ran.
+    pub pred_race: Vec<(String, usize)>,
     /// Whether the lossy pipeline ran (small layers are stored lossless).
     pub lossy: bool,
     /// Escaped (stored-exact) element count for EBLC codecs.

@@ -10,6 +10,7 @@
 //! elementwise — that is what makes the native and PJRT engines agree
 //! bit-for-bit (DESIGN.md §1).
 
+use super::predictor::magnitude::ema_norm_step;
 use super::quant::{CODE_RADIUS, ESCAPE_CODE};
 
 /// Scalar parameters of one fused pass.
@@ -37,15 +38,15 @@ pub struct FusedEncodeOut {
     pub recon: Vec<f32>,
 }
 
-/// Numerical floor for σ (shared with the Pallas kernel).
-pub const SIGMA_EPS: f32 = 1e-12;
+/// Numerical floor for σ (shared with the Pallas kernel and the
+/// predictor trait impls — one constant, one value).
+pub use super::predictor::magnitude::SIGMA_EPS;
 
 #[inline]
 fn predict_mag(prev_abs: f32, m: &mut f32, p: &FusedParams, inv_sigma_prev: f32) -> f32 {
-    let z = (prev_abs - p.mu_prev) * inv_sigma_prev;
-    let mi = p.beta * *m + (1.0 - p.beta) * z;
-    *m = mi;
-    (mi * p.sigma_curr + p.mu_curr).max(0.0)
+    // Delegates to the shared scalar EMA step so the fused kernel and
+    // the `MagnitudePredictor` trait impls cannot drift apart.
+    ema_norm_step(p.beta, m, prev_abs, p.mu_prev, inv_sigma_prev, p.mu_curr, p.sigma_curr)
 }
 
 /// Encoder-side fused pass.
@@ -88,15 +89,10 @@ pub fn fused_encode(
         out.recon.push(x);
     }
     if have_prev {
-        let beta = p.beta;
-        let one_m_beta = 1.0 - beta;
         for (((&x, &pa), m), &s) in
             grad.iter().zip(prev_abs.iter()).zip(memory.iter_mut()).zip(signs.iter())
         {
-            let z = (pa - p.mu_prev) * inv_sigma_prev;
-            let mi = beta * *m + one_m_beta * z;
-            *m = mi;
-            let a_hat = (mi * p.sigma_curr + p.mu_curr).max(0.0);
+            let a_hat = predict_mag(pa, m, p, inv_sigma_prev);
             let g_hat = s * a_hat;
             // floor(x + 0.5) (round-half-up) — matches the Pallas kernel
             // exactly; jnp.round would be half-to-even and f32::round

@@ -12,21 +12,37 @@
 //! parallel on [`crate::util::threadpool`] for large models (the layer
 //! pipeline the paper's deployment story needs).
 //!
-//! The predict stage can run on the native fused path
-//! ([`crate::compress::fused`]) or through a pluggable
-//! [`PredictBackend`] (the PJRT/HLO engine in `crate::runtime` that
-//! executes the Pallas kernel's lowering).
+//! The predict stage is pluggable twice over:
+//!
+//! * **Which predictor runs** is selected by
+//!   [`FedgecConfig::predictor`] (spec keys `pred=`/`sign=`, see
+//!   [`crate::compress::predictor`]): the implicit config-driven EMA
+//!   keeps the seed-byte-compatible v1/v2 frames, while
+//!   `pred=last|zero|auto` writes self-describing v3 sections that
+//!   record the predictor tag actually used — `pred=auto` races the
+//!   fixed predictors per layer each round by exact measured bytes.
+//! * **Where the EMA math executes**: the native fused path
+//!   ([`crate::compress::fused`]) or a pluggable [`PredictBackend`]
+//!   (the PJRT/HLO engine in `crate::runtime` that executes the Pallas
+//!   kernel's lowering — EMA only).
 
 use super::autotune::TauController;
 use super::blob::{
-    bytes_to_f32s, f32s_to_bytes, put_coder_suffix, read_section_coder, section_tag_for,
-    BlobReader, BlobWriter, SECTION_LOSSLESS,
+    bytes_to_f32s, f32s_to_bytes, put_coder_suffix, put_pred_header, read_pred_suffix,
+    read_section_coder, section_tag_for, BlobReader, BlobWriter, SECTION_LOSSLESS,
+    SECTION_LOSSY_V3,
 };
 use super::entropy::EntropyCoder;
 use super::frame::Frame;
 use super::fused::{fused_decode, fused_encode, FusedEncodeOut, FusedParams};
 use super::lossless::{self, Backend};
-use super::predictor::sign::{predict_signs, reconstruct_signs, SignMeta, SignMode};
+use super::predictor::magnitude::{
+    absorb_with_tag, predict_with_tag, MagnitudeSel, PredTag, DEFAULT_BETA,
+};
+use super::predictor::sign::{
+    reconstruct_signs, KernelSign, NoSign, OscSign, SignMeta, SignPredictor, SignSel,
+};
+use super::predictor::PredictorSpec;
 use super::quant::{self, ErrorBound, Quantized};
 use super::state::{CodecState, LayerState};
 use super::GradientCodec;
@@ -57,12 +73,18 @@ pub struct FedgecConfig {
     /// history-derived schedule) — the paper's §6 extension. See
     /// [`super::autotune`].
     pub autotune: bool,
+    /// Predict-stage selection (spec keys `pred=` / `sign=`): which
+    /// magnitude predictor and which sign policy run. `pred=ema` keeps
+    /// the seed-byte-compatible implicit frames; `last`/`zero`/`auto`
+    /// write self-describing v3 layer sections that record the predictor
+    /// tag actually used (the `auto` race records its per-round winner).
+    pub predictor: PredictorSpec,
 }
 
 impl Default for FedgecConfig {
     fn default() -> Self {
         FedgecConfig {
-            beta: 0.9,
+            beta: DEFAULT_BETA,
             tau: 0.5,
             full_batch: false,
             error_bound: ErrorBound::Rel(1e-2),
@@ -70,8 +92,31 @@ impl Default for FedgecConfig {
             entropy: EntropyCoder::Huffman,
             backend: Backend::default(),
             autotune: false,
+            predictor: PredictorSpec::default(),
         }
     }
+}
+
+/// Whether the client-side τ controllers are live: they exist for the
+/// kernel sign policy only (the oscillation flip and the off policy
+/// have no τ).
+fn use_tau_ctrl(cfg: &FedgecConfig) -> bool {
+    cfg.autotune && cfg.predictor.sign.effective(cfg.full_batch) == SignSel::Kernel
+}
+
+/// Reusable per-layer-slot scratch: sign/prediction buffers, quantizer
+/// outputs and the `pred=auto` race double-buffers all survive across
+/// rounds, so the per-round hot path stops allocating after warm-up
+/// (the predictor-API satellite of the encode/decode rewrite).
+#[derive(Default)]
+pub struct LayerScratch {
+    signs: Vec<f32>,
+    out: FusedEncodeOut,
+    ghat: Vec<f32>,
+    cand_q: Quantized,
+    cand_recon: Vec<f32>,
+    cand_mem: Vec<f32>,
+    best_mem: Vec<f32>,
 }
 
 /// Pluggable predict-stage engine (see module docs). `memory` is updated
@@ -95,11 +140,20 @@ pub struct FedgecCodec {
     pub engine: Option<Box<dyn PredictBackend>>,
     /// Per-layer τ controllers (client side, active when cfg.autotune).
     pub tau_ctrl: Vec<TauController>,
+    /// Per-layer-slot reusable scratch (not state: never fingerprinted,
+    /// never mirrored, never stored).
+    scratch: Vec<LayerScratch>,
 }
 
 impl FedgecCodec {
     pub fn new(cfg: FedgecConfig) -> Self {
-        FedgecCodec { cfg, state: CodecState::default(), engine: None, tau_ctrl: Vec::new() }
+        FedgecCodec {
+            cfg,
+            state: CodecState::default(),
+            engine: None,
+            tau_ctrl: Vec::new(),
+            scratch: Vec::new(),
+        }
     }
 
     pub fn with_engine(cfg: FedgecConfig, engine: Box<dyn PredictBackend>) -> Self {
@@ -108,14 +162,21 @@ impl FedgecCodec {
             state: CodecState::default(),
             engine: Some(engine),
             tau_ctrl: Vec::new(),
+            scratch: Vec::new(),
         }
     }
 
     fn ensure_ctrl(&mut self, n: usize) {
-        if self.cfg.autotune && !self.cfg.full_batch {
+        if use_tau_ctrl(&self.cfg) {
             while self.tau_ctrl.len() < n {
                 self.tau_ctrl.push(TauController { tau: self.cfg.tau, ..Default::default() });
             }
+        }
+    }
+
+    fn ensure_scratch(&mut self, n: usize) {
+        while self.scratch.len() < n {
+            self.scratch.push(LayerScratch::default());
         }
     }
 
@@ -142,6 +203,74 @@ fn effective_beta(cfg: &FedgecConfig, st: &LayerState) -> f32 {
     }
 }
 
+/// The extra v3 header bytes a race candidate pays on the wire: one
+/// predictor tag byte (shared by all candidates, so excluded) plus the
+/// 4-byte β only the EMA winner records.
+fn pred_header_extra(tag: PredTag) -> usize {
+    if tag == PredTag::Ema {
+        4
+    } else {
+        0
+    }
+}
+
+/// Race the fixed magnitude predictors for one layer from the **same**
+/// state and pick the cheapest by exact measured bytes (entropy stream
+/// via [`super::autotune::entropy_stage_cost`] + escaped values + the
+/// predictor-header differential). The winner's codes/escapes/recon end
+/// up in `scratch.out` (and its updated EMA memory in
+/// `scratch.best_mem`, committed by the caller only when EMA wins — the
+/// frame-driven memory-update rule the decoder mirrors). Ties keep the
+/// earlier candidate of the fixed `[zero, last, ema]` order, so the
+/// choice is deterministic.
+fn race_predictors(
+    grad: &[f32],
+    beta: f32,
+    st: &LayerState,
+    mu_curr: f32,
+    sigma_curr: f32,
+    delta: f64,
+    scratch: &mut LayerScratch,
+) -> crate::Result<(PredTag, Vec<(String, usize)>)> {
+    let n = grad.len();
+    let prev_abs = st.prev_abs.as_deref();
+    let mut log = Vec::with_capacity(3);
+    let mut best: Option<(PredTag, usize)> = None;
+    for tag in [PredTag::Zero, PredTag::Last, PredTag::Ema] {
+        scratch.cand_mem.clear();
+        if tag == PredTag::Ema {
+            scratch.cand_mem.extend_from_slice(&st.memory);
+        }
+        predict_with_tag(
+            tag,
+            beta,
+            prev_abs,
+            &mut scratch.cand_mem,
+            mu_curr,
+            sigma_curr,
+            n,
+            &mut scratch.ghat,
+        )?;
+        for (g, &s) in scratch.ghat.iter_mut().zip(scratch.signs.iter()) {
+            *g *= s;
+        }
+        quant::quantize(grad, &scratch.ghat, delta, &mut scratch.cand_q, &mut scratch.cand_recon);
+        let hist = quant::code_histogram(&scratch.cand_q.codes);
+        let cost = super::autotune::entropy_stage_cost(&hist, scratch.cand_q.codes.len())
+            + 4 * scratch.cand_q.escapes.len()
+            + pred_header_extra(tag);
+        log.push((tag.name().to_string(), cost));
+        if best.map_or(true, |(_, c)| cost < c) {
+            best = Some((tag, cost));
+            std::mem::swap(&mut scratch.out.codes, &mut scratch.cand_q.codes);
+            std::mem::swap(&mut scratch.out.escapes, &mut scratch.cand_q.escapes);
+            std::mem::swap(&mut scratch.out.recon, &mut scratch.cand_recon);
+            std::mem::swap(&mut scratch.best_mem, &mut scratch.cand_mem);
+        }
+    }
+    Ok((best.expect("three candidates raced").0, log))
+}
+
 /// Compress one layer into its closed (post-lossless) frame payload.
 /// Free-standing over the layer's own state so layers encode in parallel.
 fn compress_layer_impl(
@@ -149,6 +278,7 @@ fn compress_layer_impl(
     layer: &LayerGrad,
     st: &mut LayerState,
     ctrl: Option<&mut TauController>,
+    scratch: &mut LayerScratch,
     engine: Option<&mut dyn PredictBackend>,
 ) -> crate::Result<(Vec<u8>, LayerReport)> {
     let grad = &layer.data;
@@ -170,65 +300,117 @@ fn compress_layer_impl(
     }
     report.lossy = true;
 
-    // --- Stage 1a: sign prediction (Alg. 3 line 10). ---
-    let mode = if cfg.full_batch {
-        SignMode::FullBatch
-    } else {
-        SignMode::MiniBatch { tau: ctrl.as_ref().map(|c| c.tau).unwrap_or(cfg.tau) }
+    // --- Stage 1a: sign prediction (Alg. 3 line 10), behind the
+    // SignPredictor API. The side info self-describes, so the policy
+    // needs no frame-header support of its own. ---
+    let tau = ctrl.as_ref().map(|c| c.tau).unwrap_or(cfg.tau);
+    let kernel;
+    let sign_pred: &dyn SignPredictor = match cfg.predictor.sign.effective(cfg.full_batch) {
+        SignSel::Osc => &OscSign,
+        SignSel::None => &NoSign,
+        SignSel::Kernel | SignSel::Auto => {
+            kernel = KernelSign { tau };
+            &kernel
+        }
     };
     let beta = effective_beta(cfg, st);
-    let (signs, sign_meta, sign_stats) = predict_signs(
-        grad,
-        &layer.meta.kind,
-        mode,
-        st.prev_recon.as_deref(),
-        st.prev_sign.as_deref(),
-    );
+    let (sign_meta, sign_stats) =
+        sign_pred.predict_into(grad, &layer.meta.kind, st, &mut scratch.signs);
     report.sign_stats = sign_stats;
     if let Some(ctrl) = ctrl {
-        if !cfg.full_batch && sign_stats.kernels_total > 0 {
+        if sign_stats.kernels_total > 0 {
             ctrl.update(sign_stats.mismatch_rate(), sign_stats.prediction_ratio());
         }
     }
+    let signs = &scratch.signs;
 
     // --- Stage 1b+2: magnitude prediction + quantization. ---
     let (mu_curr, sigma_curr) = stats::mean_std_abs(grad);
     let (lo, hi) = stats::finite_min_max(grad);
     let delta = cfg.error_bound.resolve(lo, hi);
-    let empty: [f32; 0] = [];
-    let prev_abs: &[f32] = st.prev_abs.as_deref().unwrap_or(&empty);
-    let (mu_prev, sigma_prev) = stats::mean_std(prev_abs);
-    let p = FusedParams {
-        beta,
-        mu_curr,
-        sigma_curr,
-        mu_prev,
-        sigma_prev,
-        two_delta: (2.0 * delta) as f32,
-        delta: delta as f32,
-    };
 
-    let mut out = FusedEncodeOut::default();
-    match engine {
-        None => {
-            fused_encode(grad, prev_abs, &mut st.memory, &signs, &p, &mut out);
-        }
-        Some(engine) => {
-            if !prev_abs.is_empty() && st.memory.len() != n {
-                st.memory.clear();
-                st.memory.resize(n, 0.0);
-            }
-            let ghat = if prev_abs.is_empty() {
-                vec![0.0; n]
-            } else {
-                engine.predict(prev_abs, &mut st.memory, &signs, &p)?
+    // `None` ⇒ the implicit config-driven EMA (seed-byte-compatible
+    // v1/v2 sections); `Some(tag)` ⇒ a self-describing v3 section
+    // recording the predictor actually used.
+    let wire_pred: Option<PredTag>;
+    let mut race_log = Vec::new();
+    match cfg.predictor.mag {
+        MagnitudeSel::Ema => {
+            wire_pred = None;
+            let empty: [f32; 0] = [];
+            let prev_abs: &[f32] = st.prev_abs.as_deref().unwrap_or(&empty);
+            let (mu_prev, sigma_prev) = stats::mean_std(prev_abs);
+            let p = FusedParams {
+                beta,
+                mu_curr,
+                sigma_curr,
+                mu_prev,
+                sigma_prev,
+                two_delta: (2.0 * delta) as f32,
+                delta: delta as f32,
             };
-            let mut q = Quantized::default();
-            quant::quantize(grad, &ghat, delta, &mut q, &mut out.recon);
-            out.codes = q.codes;
-            out.escapes = q.escapes;
+            match engine {
+                None => {
+                    fused_encode(grad, prev_abs, &mut st.memory, signs, &p, &mut scratch.out);
+                }
+                Some(engine) => {
+                    if !prev_abs.is_empty() && st.memory.len() != n {
+                        st.memory.clear();
+                        st.memory.resize(n, 0.0);
+                    }
+                    let ghat = if prev_abs.is_empty() {
+                        vec![0.0; n]
+                    } else {
+                        engine.predict(prev_abs, &mut st.memory, signs, &p)?
+                    };
+                    quant::quantize(grad, &ghat, delta, &mut scratch.cand_q, &mut scratch.out.recon);
+                    std::mem::swap(&mut scratch.out.codes, &mut scratch.cand_q.codes);
+                    std::mem::swap(&mut scratch.out.escapes, &mut scratch.cand_q.escapes);
+                }
+            }
+        }
+        MagnitudeSel::Last | MagnitudeSel::Zero => {
+            // Fixed non-EMA predictor through the MagnitudePredictor API
+            // (the PJRT/HLO backend implements the EMA kernel only, so
+            // this path is always native).
+            let tag = if cfg.predictor.mag == MagnitudeSel::Last {
+                PredTag::Last
+            } else {
+                PredTag::Zero
+            };
+            let prev_abs = st.prev_abs.as_deref();
+            predict_with_tag(
+                tag,
+                beta,
+                prev_abs,
+                &mut st.memory,
+                mu_curr,
+                sigma_curr,
+                n,
+                &mut scratch.ghat,
+            )?;
+            for (g, &s) in scratch.ghat.iter_mut().zip(signs) {
+                *g *= s;
+            }
+            quant::quantize(grad, &scratch.ghat, delta, &mut scratch.cand_q, &mut scratch.out.recon);
+            std::mem::swap(&mut scratch.out.codes, &mut scratch.cand_q.codes);
+            std::mem::swap(&mut scratch.out.escapes, &mut scratch.cand_q.escapes);
+            wire_pred = Some(tag);
+        }
+        MagnitudeSel::Auto => {
+            // The race reads the sign buffer out of the same scratch.
+            let (tag, log) =
+                race_predictors(grad, beta, st, mu_curr, sigma_curr, delta, scratch)?;
+            race_log = log;
+            if tag == PredTag::Ema {
+                // Frame-driven memory rule: EMA memory advances exactly
+                // on the rounds whose frame records the EMA tag.
+                std::mem::swap(&mut st.memory, &mut scratch.best_mem);
+            }
+            wire_pred = Some(tag);
         }
     }
+    let out = &mut scratch.out;
     report.escape_count = out.escapes.len();
 
     // --- Stage 3: entropy coding. ---
@@ -251,9 +433,20 @@ fn compress_layer_impl(
     let sign_bytes = sign_meta.encode();
     report.side_info_bytes = sign_bytes.len() + out.escapes.len() * 4;
 
-    // --- Layer section (Alg. 3 line 15; Huffman keeps v1 bytes). ---
-    w.put_u8(section_tag_for(coder));
-    put_coder_suffix(&mut w, coder);
+    // --- Layer section (Alg. 3 line 15; Huffman + implicit EMA keeps
+    // the seed's v1 bytes; explicit predictors self-describe in v3). ---
+    match wire_pred {
+        None => {
+            w.put_u8(section_tag_for(coder));
+            put_coder_suffix(&mut w, coder);
+            report.pred_tag = PredTag::Ema.name().to_string();
+        }
+        Some(tag) => {
+            put_pred_header(&mut w, coder, tag, beta);
+            report.pred_tag = tag.name().to_string();
+        }
+    }
+    report.pred_race = race_log;
     w.put_u32(n as u32);
     w.put_f32(mu_curr);
     w.put_f32(sigma_curr);
@@ -262,8 +455,15 @@ fn compress_layer_impl(
     w.put_bytes(&entropy);
     w.put_f32_slice(&out.escapes);
 
-    // Update local state with the reconstruction (client mirror).
-    st.absorb(&out.recon);
+    // Update local state with the reconstruction (client mirror); the
+    // selector tag rides along into the fingerprint. Explicit
+    // predictors absorb through their trait impl; the implicit path is
+    // the hand-fused EMA specialization of the same shared absorb.
+    st.pred = cfg.predictor.mag.state_tag();
+    match wire_pred {
+        None => st.absorb(&out.recon),
+        Some(tag) => absorb_with_tag(tag, beta, st, &out.recon),
+    }
     let closed = cfg.backend.compress(&w.into_bytes())?;
     Ok((closed, report))
 }
@@ -274,6 +474,7 @@ fn decompress_layer_impl(
     meta: &LayerMeta,
     section: &[u8],
     st: &mut LayerState,
+    scratch: &mut LayerScratch,
     engine: Option<&mut dyn PredictBackend>,
 ) -> crate::Result<(Vec<f32>, LayerReport)> {
     let mut r = BlobReader::new(section);
@@ -286,9 +487,16 @@ fn decompress_layer_impl(
         return Ok((data, report));
     }
     // Dispatch on the recorded coder: v1 sections are implicitly Huffman,
-    // v2 sections carry the coder tag.
+    // v2/v3 sections carry the coder tag; v3 additionally records the
+    // magnitude predictor that produced the frame (+ the EMA β), so the
+    // reconstruction needs zero out-of-band predictor configuration.
     let coder = read_section_coder(&mut r, tag)
         .map_err(|e| anyhow::anyhow!("layer {}: {e}", meta.name))?;
+    let wire_pred = if tag == SECTION_LOSSY_V3 {
+        Some(read_pred_suffix(&mut r).map_err(|e| anyhow::anyhow!("layer {}: {e}", meta.name))?)
+    } else {
+        None
+    };
     report.lossy = true;
     report.entropy_coder = coder.name().to_string();
     let n = r.get_u32()? as usize;
@@ -300,11 +508,12 @@ fn decompress_layer_impl(
     let sigma_curr = r.get_f32()?;
     let delta = r.get_f64()?;
     let sign_bytes = r.get_bytes()?;
-    let sign_meta = SignMeta::decode(sign_bytes)?;
+    // `n` is validated against the trusted meta, so it bounds both the
+    // sign side info and the entropy decode (a corrupt stream cannot
+    // declare inflated bitmap/symbol counts).
+    let sign_meta = SignMeta::decode_bounded(sign_bytes, n)?;
     let entropy = r.get_bytes()?;
     report.entropy_bytes = entropy.len();
-    // `n` is already validated against the trusted meta, so it bounds the
-    // decode (a corrupt stream cannot declare an inflated symbol count).
     let (codes, _) = coder.decode_bounded(entropy, n)?;
     if codes.len() != n {
         anyhow::bail!("layer {}: {} codes for {} elements", meta.name, codes.len(), n);
@@ -313,40 +522,82 @@ fn decompress_layer_impl(
     report.side_info_bytes = sign_bytes.len() + escapes.len() * 4;
     report.escape_count = escapes.len();
 
-    let beta = effective_beta(cfg, st);
     let signs = reconstruct_signs(&sign_meta, n, &meta.kind, st.prev_sign.as_deref())?;
-    let empty: [f32; 0] = [];
-    let prev_abs: &[f32] = st.prev_abs.as_deref().unwrap_or(&empty);
-    let (mu_prev, sigma_prev) = stats::mean_std(prev_abs);
-    let p = FusedParams {
-        beta,
-        mu_curr,
-        sigma_curr,
-        mu_prev,
-        sigma_prev,
-        two_delta: (2.0 * delta) as f32,
-        delta: delta as f32,
-    };
     let mut recon = Vec::new();
-    match engine {
+    match wire_pred {
         None => {
-            fused_decode(&codes, &escapes, prev_abs, &mut st.memory, &signs, &p, &mut recon)?;
-        }
-        Some(engine) => {
-            if !prev_abs.is_empty() && st.memory.len() != n {
-                st.memory.clear();
-                st.memory.resize(n, 0.0);
-            }
-            let ghat = if prev_abs.is_empty() {
-                vec![0.0; n]
-            } else {
-                engine.predict(prev_abs, &mut st.memory, &signs, &p)?
+            // Implicit config-driven EMA (v1/v2): the classic fused path.
+            let beta = effective_beta(cfg, st);
+            let empty: [f32; 0] = [];
+            let prev_abs: &[f32] = st.prev_abs.as_deref().unwrap_or(&empty);
+            let (mu_prev, sigma_prev) = stats::mean_std(prev_abs);
+            let p = FusedParams {
+                beta,
+                mu_curr,
+                sigma_curr,
+                mu_prev,
+                sigma_prev,
+                two_delta: (2.0 * delta) as f32,
+                delta: delta as f32,
             };
+            match engine {
+                None => {
+                    fused_decode(
+                        &codes,
+                        &escapes,
+                        prev_abs,
+                        &mut st.memory,
+                        &signs,
+                        &p,
+                        &mut recon,
+                    )?;
+                }
+                Some(engine) => {
+                    if !prev_abs.is_empty() && st.memory.len() != n {
+                        st.memory.clear();
+                        st.memory.resize(n, 0.0);
+                    }
+                    let ghat = if prev_abs.is_empty() {
+                        vec![0.0; n]
+                    } else {
+                        engine.predict(prev_abs, &mut st.memory, &signs, &p)?
+                    };
+                    let q = Quantized { codes, escapes };
+                    quant::dequantize_checked(&q, &ghat, delta, &mut recon)?;
+                }
+            }
+            report.pred_tag = PredTag::Ema.name().to_string();
+        }
+        Some((ptag, wire_beta)) => {
+            // Self-describing frame: reconstruct with the recorded
+            // predictor + β. The EMA memory advances exactly on the
+            // rounds whose frame carries the EMA tag, mirroring the
+            // encoder's frame-driven rule (under `pred=auto` both sides
+            // therefore stay bit-identical without knowing the race).
+            let prev_abs = st.prev_abs.as_deref();
+            predict_with_tag(
+                ptag,
+                wire_beta,
+                prev_abs,
+                &mut st.memory,
+                mu_curr,
+                sigma_curr,
+                n,
+                &mut scratch.ghat,
+            )?;
+            for (g, &s) in scratch.ghat.iter_mut().zip(&signs) {
+                *g *= s;
+            }
             let q = Quantized { codes, escapes };
-            quant::dequantize(&q, &ghat, delta, &mut recon);
+            quant::dequantize_checked(&q, &scratch.ghat, delta, &mut recon)?;
+            report.pred_tag = ptag.name().to_string();
         }
     }
-    st.absorb(&recon);
+    st.pred = cfg.predictor.mag.state_tag();
+    match wire_pred {
+        None => st.absorb(&recon),
+        Some((ptag, wire_beta)) => absorb_with_tag(ptag, wire_beta, st, &recon),
+    }
     Ok((recon, report))
 }
 
@@ -359,15 +610,18 @@ pub struct FedgecEngine {
     pub cfg: FedgecConfig,
     /// Optional PJRT/HLO predict engine; `None` ⇒ native fused path.
     pub engine: Option<Box<dyn PredictBackend>>,
+    /// Reusable decode scratch (frames decode sequentially per call, so
+    /// one slot serves every layer and every client).
+    scratch: LayerScratch,
 }
 
 impl FedgecEngine {
     pub fn new(cfg: FedgecConfig) -> Self {
-        FedgecEngine { cfg, engine: None }
+        FedgecEngine { cfg, engine: None, scratch: LayerScratch::default() }
     }
 
     pub fn with_engine(cfg: FedgecConfig, engine: Box<dyn PredictBackend>) -> Self {
-        FedgecEngine { cfg, engine: Some(engine) }
+        FedgecEngine { cfg, engine: Some(engine), scratch: LayerScratch::default() }
     }
 }
 
@@ -394,6 +648,7 @@ impl crate::compress::engine::CodecEngine for FedgecEngine {
             meta,
             &section,
             &mut state.layers[idx],
+            &mut self.scratch,
             self.engine.as_deref_mut(),
         )?;
         report.compressed_bytes = frame.wire_size();
@@ -405,19 +660,21 @@ impl GradientCodec for FedgecCodec {
     fn begin(&mut self, n_layers: usize) -> crate::Result<()> {
         self.state.ensure(n_layers);
         self.ensure_ctrl(n_layers);
+        self.ensure_scratch(n_layers);
         Ok(())
     }
 
     fn encode_layer(&mut self, idx: usize, layer: &LayerGrad) -> crate::Result<Frame> {
         self.state.ensure(idx + 1);
         self.ensure_ctrl(idx + 1);
-        let use_ctrl = self.cfg.autotune && !self.cfg.full_batch;
-        let ctrl = if use_ctrl { Some(&mut self.tau_ctrl[idx]) } else { None };
+        self.ensure_scratch(idx + 1);
+        let ctrl = if use_tau_ctrl(&self.cfg) { Some(&mut self.tau_ctrl[idx]) } else { None };
         let (payload, report) = compress_layer_impl(
             &self.cfg,
             layer,
             &mut self.state.layers[idx],
             ctrl,
+            &mut self.scratch[idx],
             self.engine.as_deref_mut(),
         )?;
         Ok(Frame::new(idx, payload, report))
@@ -430,12 +687,14 @@ impl GradientCodec for FedgecCodec {
     ) -> crate::Result<(LayerGrad, LayerReport)> {
         let idx = frame.index as usize;
         self.state.ensure(idx + 1);
+        self.ensure_scratch(idx + 1);
         let section = lossless::decompress(&frame.payload)?;
         let (data, mut report) = decompress_layer_impl(
             &self.cfg,
             meta,
             &section,
             &mut self.state.layers[idx],
+            &mut self.scratch[idx],
             self.engine.as_deref_mut(),
         )?;
         report.compressed_bytes = frame.wire_size();
@@ -455,21 +714,25 @@ impl GradientCodec for FedgecCodec {
             }
             return Ok(frames);
         }
-        let use_ctrl = self.cfg.autotune && !self.cfg.full_batch;
+        let use_ctrl = use_tau_ctrl(&self.cfg);
         let cfg = &self.cfg;
         let mut ctrl_iter = if use_ctrl { Some(self.tau_ctrl.iter_mut()) } else { None };
-        let items: Vec<(&LayerGrad, &mut LayerState, Option<&mut TauController>)> = grads
+        type Item<'a> =
+            (&'a LayerGrad, &'a mut LayerState, Option<&'a mut TauController>, &'a mut LayerScratch);
+        let items: Vec<Item> = grads
             .layers
             .iter()
             .zip(self.state.layers.iter_mut())
-            .map(|(layer, st)| {
+            .zip(self.scratch.iter_mut())
+            .map(|((layer, st), scratch)| {
                 let ctrl = ctrl_iter.as_mut().and_then(|it| it.next());
-                (layer, st, ctrl)
+                (layer, st, ctrl, scratch)
             })
             .collect();
-        let results = crate::util::threadpool::parallel_map(items, threads, |(layer, st, ctrl)| {
-            compress_layer_impl(cfg, layer, st, ctrl, None)
-        });
+        let results =
+            crate::util::threadpool::parallel_map(items, threads, |(layer, st, ctrl, scratch)| {
+                compress_layer_impl(cfg, layer, st, ctrl, scratch, None)
+            });
         let mut frames = Vec::with_capacity(n);
         for (idx, res) in results.into_iter().enumerate() {
             let (payload, report) = res?;
@@ -798,6 +1061,182 @@ mod tests {
             assert_eq!(state.fingerprint(), mirror.state.fingerprint(), "round {round}");
             assert_eq!(state.fingerprint(), client.state_fingerprint(), "round {round}");
         }
+    }
+
+    fn cfg_with(mag: MagnitudeSel, sign: SignSel) -> FedgecConfig {
+        FedgecConfig { predictor: PredictorSpec { mag, sign }, ..Default::default() }
+    }
+
+    fn assert_bound_and_sync(
+        cfg: FedgecConfig,
+        rounds: usize,
+        seed: u64,
+    ) -> (Vec<crate::compress::frame::CodecReport>, Vec<crate::compress::frame::CodecReport>) {
+        let mut rng = Rng::new(seed);
+        let mut client = FedgecCodec::new(cfg.clone());
+        let mut server = FedgecCodec::new(cfg);
+        let mut creports = Vec::new();
+        let mut sreports = Vec::new();
+        for round in 0..rounds {
+            let grads = make_grads(&mut rng, 1.0 / (1.0 + round as f32 * 0.3));
+            let (payload, cr) = client.compress_with_report(&grads).unwrap();
+            let (recon, sr) = server.decompress_with_report(&payload, &metas(&grads)).unwrap();
+            for li in 0..2 {
+                let (lo, hi) = stats::finite_min_max(&grads.layers[li].data);
+                let delta = FedgecConfig::default().error_bound.resolve(lo, hi) as f32;
+                for (r, g) in recon.layers[li].data.iter().zip(&grads.layers[li].data) {
+                    assert!((r - g).abs() <= delta * 1.0001, "round {round} layer {li}");
+                }
+            }
+            assert_eq!(
+                client.state.fingerprint(),
+                server.state.fingerprint(),
+                "round {round}"
+            );
+            creports.push(cr);
+            sreports.push(sr);
+        }
+        (creports, sreports)
+    }
+
+    #[test]
+    fn fixed_predictors_roundtrip_with_self_describing_frames() {
+        // pred=last / pred=zero: bound + mirror sync hold, frames open
+        // with the v3 section recording the predictor tag, and encoder/
+        // decoder report the same tag per layer.
+        for (mag, want) in [(MagnitudeSel::Last, "last"), (MagnitudeSel::Zero, "zero")] {
+            let cfg = FedgecConfig {
+                backend: Backend::None,
+                ..cfg_with(mag, SignSel::Auto)
+            };
+            let mut rng = Rng::new(51);
+            let g = make_grads(&mut rng, 1.0);
+            let mut probe = FedgecCodec::new(cfg.clone());
+            let frames = probe.encode_model(&g).unwrap();
+            let section = lossless::decompress(&frames[0].payload).unwrap();
+            assert_eq!(section[0], SECTION_LOSSY_V3, "{want}");
+            assert_eq!(section[1], EntropyCoder::Huffman.tag(), "{want}");
+            assert_eq!(section[2], if want == "last" { 1 } else { 2 }, "{want} wire tag");
+            let (creports, sreports) = assert_bound_and_sync(cfg, 4, 52);
+            for (cr, sr) in creports.iter().zip(&sreports) {
+                for (cl, sl) in cr.layers.iter().zip(&sr.layers) {
+                    assert_eq!(cl.pred_tag, sl.pred_tag, "{want} layer {}", cl.name);
+                    if cl.lossy {
+                        assert_eq!(cl.pred_tag, want);
+                        assert!(cl.pred_race.is_empty(), "fixed predictors don't race");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Near-stationary stream builder: stable dominant-sign conv pattern
+    /// (few flips) + a dense layer, mild decay and small jitter — the
+    /// regime where cross-round predictors demonstrably beat `zero` on
+    /// the conv layer from round 2, while round 1 (no history) and the
+    /// sign-less dense layer (ĝ = S⊙â = 0 for every candidate) tie and
+    /// deterministically fall to `zero`.
+    fn correlated_base(rng: &mut Rng) -> ModelGrad {
+        let t = 9;
+        let n_kernels = 128;
+        let mut conv = Vec::with_capacity(n_kernels * t);
+        for _ in 0..n_kernels {
+            let dom: f32 = if rng.chance(0.5) { 1.0 } else { -1.0 };
+            for _ in 0..t {
+                let flip = rng.chance(0.05);
+                conv.push(dom * if flip { -1.0 } else { 1.0 } * (0.2 + rng.next_f32()));
+            }
+        }
+        let dense: Vec<f32> = (0..2048).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let bias: Vec<f32> = (0..16).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        ModelGrad {
+            layers: vec![
+                LayerGrad::new(LayerMeta::conv("conv", n_kernels, 1, 3, 3), conv),
+                LayerGrad::new(LayerMeta::dense("dense", 32, 64), dense),
+                LayerGrad::new(LayerMeta::other("bias", 16), bias),
+            ],
+        }
+    }
+
+    #[test]
+    fn pred_auto_races_and_roundtrips() {
+        let cfg = cfg_with(MagnitudeSel::Auto, SignSel::Auto);
+        let mut rng = Rng::new(53);
+        let base = correlated_base(&mut rng);
+        let mut client = FedgecCodec::new(cfg.clone());
+        let mut server = FedgecCodec::new(cfg);
+        let mut seen = std::collections::BTreeSet::new();
+        for round in 0..5 {
+            let mut g = base.clone();
+            let scale = 1.0 / (1.0 + round as f32 * 0.05);
+            for l in &mut g.layers {
+                for v in &mut l.data {
+                    *v *= scale * (1.0 + 0.02 * rng.gauss() as f32);
+                }
+            }
+            let (payload, cr) = client.compress_with_report(&g).unwrap();
+            let (recon, sr) = server.decompress_with_report(&payload, &metas(&g)).unwrap();
+            for li in 0..2 {
+                let (lo, hi) = stats::finite_min_max(&g.layers[li].data);
+                let delta = FedgecConfig::default().error_bound.resolve(lo, hi) as f32;
+                for (r, x) in recon.layers[li].data.iter().zip(&g.layers[li].data) {
+                    assert!((r - x).abs() <= delta * 1.0001, "round {round} layer {li}");
+                }
+            }
+            assert_eq!(client.state.fingerprint(), server.state.fingerprint(), "round {round}");
+            for (cl, sl) in cr.layers.iter().zip(&sr.layers) {
+                assert_eq!(cl.pred_tag, sl.pred_tag, "layer {}", cl.name);
+                if !cl.lossy {
+                    continue;
+                }
+                seen.insert(cl.pred_tag.clone());
+                // The race log covers all three candidates and the
+                // recorded winner is its exact argmin.
+                assert_eq!(cl.pred_race.len(), 3, "layer {}", cl.name);
+                let min = cl.pred_race.iter().map(|&(_, c)| c).min().unwrap();
+                let winner = cl
+                    .pred_race
+                    .iter()
+                    .find(|(name, _)| *name == cl.pred_tag)
+                    .unwrap_or_else(|| panic!("winner {} not in race log", cl.pred_tag));
+                assert_eq!(winner.1, min, "layer {}: winner must be the argmin", cl.name);
+                if round == 0 {
+                    assert_eq!(cl.pred_tag, "zero", "cold round ties fall to zero");
+                }
+            }
+        }
+        assert!(seen.len() >= 2, "expected mixed winners, saw {seen:?}");
+    }
+
+    #[test]
+    fn sign_none_sends_no_side_info() {
+        let cfg = cfg_with(MagnitudeSel::Ema, SignSel::None);
+        let mut rng = Rng::new(54);
+        let mut client = FedgecCodec::new(cfg.clone());
+        let mut server = FedgecCodec::new(cfg);
+        for _ in 0..3 {
+            let grads = make_grads(&mut rng, 1.0);
+            let (payload, cr) = client.compress_with_report(&grads).unwrap();
+            server.decompress(&payload, &metas(&grads)).unwrap();
+            assert_eq!(client.state.fingerprint(), server.state.fingerprint());
+            for l in cr.layers.iter().filter(|l| l.lossy) {
+                assert_eq!(l.sign_stats.elements_predicted, 0);
+                // SignMeta::None is a single tag byte.
+                assert_eq!(l.side_info_bytes, 1 + l.escape_count * 4, "layer {}", l.name);
+            }
+        }
+    }
+
+    #[test]
+    fn pred_auto_with_rans_and_autotune_stays_synchronized() {
+        // The race composes with the other client-only decisions (per-
+        // layer coder choice, β schedule) without breaking the mirror.
+        let cfg = FedgecConfig {
+            entropy: EntropyCoder::Rans,
+            autotune: true,
+            ..cfg_with(MagnitudeSel::Auto, SignSel::Auto)
+        };
+        assert_bound_and_sync(cfg, 4, 55);
     }
 
     #[test]

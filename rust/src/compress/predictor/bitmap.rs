@@ -58,10 +58,31 @@ impl KernelBitmap {
 
     /// Deserialize from the byte layout of [`encode`].
     pub fn decode(buf: &[u8]) -> anyhow::Result<KernelBitmap> {
+        Self::decode_bounded(buf, u32::MAX as usize)
+    }
+
+    /// [`Self::decode`] with a caller-known cap on the kernel count (the
+    /// layer's numel — every kernel carries at least one element). The
+    /// declared count is validated against both the cap and the bits the
+    /// buffer actually holds **before** any allocation, so a corrupt
+    /// stream cannot force a multi-GB `Vec` reservation — the same
+    /// untrusted-payload pattern as `EntropyCoder::decode_bounded`.
+    pub fn decode_bounded(buf: &[u8], max_kernels: usize) -> anyhow::Result<KernelBitmap> {
         if buf.len() < 4 {
             anyhow::bail!("bitmap too short");
         }
         let n = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+        anyhow::ensure!(
+            n <= max_kernels,
+            "bitmap declares {n} kernels, expected at most {max_kernels}"
+        );
+        // Level 1 alone needs ⌈n/8⌉ payload bytes; reject impossible
+        // headers before reserving level-1/level-2 capacity.
+        anyhow::ensure!(
+            n.div_ceil(8) <= buf.len() - 4,
+            "bitmap declares {n} kernels but carries only {} payload bytes",
+            buf.len() - 4
+        );
         let mut r = BitReader::new(&buf[4..]);
         let mut predicted = Vec::with_capacity(n);
         for _ in 0..n {
@@ -156,5 +177,20 @@ mod tests {
         let bytes = KernelBitmap::from_decisions(&decisions).encode();
         assert!(KernelBitmap::decode(&bytes[..5]).is_err());
         assert!(KernelBitmap::decode(&[]).is_err());
+    }
+
+    #[test]
+    fn bounded_decode_guards_declared_count() {
+        let decisions = vec![Some(true), None, Some(false)];
+        let bytes = KernelBitmap::from_decisions(&decisions).encode();
+        assert_eq!(KernelBitmap::decode_bounded(&bytes, 3).unwrap().decisions(), decisions);
+        // Cap below the declared count is an error, not an allocation.
+        assert!(KernelBitmap::decode_bounded(&bytes, 2).is_err());
+        // An adversarial header declaring u32::MAX kernels over a tiny
+        // buffer dies on the plausibility check even unbounded.
+        let mut evil = u32::MAX.to_le_bytes().to_vec();
+        evil.extend_from_slice(&[0xAA; 8]);
+        assert!(KernelBitmap::decode_bounded(&evil, usize::MAX).is_err());
+        assert!(KernelBitmap::decode(&evil).is_err());
     }
 }

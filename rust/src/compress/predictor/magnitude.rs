@@ -19,10 +19,381 @@
 //! This module also implements the Table-1 ablation variants (Lorenzo,
 //! MA(3)/MA(5), AR(1), EMA without normalization).
 
+use crate::compress::state::LayerState;
 use crate::util::stats;
 
 /// Numerical floor for σ to avoid division blow-ups on constant tensors.
 pub const SIGMA_EPS: f32 = 1e-12;
+
+/// Default EMA decay β — the single source of truth shared by
+/// [`crate::compress::pipeline::FedgecConfig::default`],
+/// [`crate::compress::spec::SpecDefaults::default`] and the `pred=ema`
+/// grammar default, so the struct and grammar defaults can never drift
+/// apart (asserted by the spec tests).
+pub const DEFAULT_BETA: f32 = 0.9;
+
+/// One scalar step of the normalized-EMA predictor (Alg. 1): updates the
+/// memory cell in place and returns â. This is the single implementation
+/// shared by [`EmaNormPredictor`], [`EmaPredictor`] and the fused kernel
+/// ([`crate::compress::fused`]) — identical f32 operation order is what
+/// keeps the three bit-identical.
+#[inline]
+pub fn ema_norm_step(
+    beta: f32,
+    m: &mut f32,
+    prev_abs: f32,
+    mu_prev: f32,
+    inv_sigma_prev: f32,
+    mu_curr: f32,
+    sigma_curr: f32,
+) -> f32 {
+    let z = (prev_abs - mu_prev) * inv_sigma_prev;
+    let mi = beta * *m + (1.0 - beta) * z;
+    *m = mi;
+    (mi * sigma_curr + mu_curr).max(0.0)
+}
+
+/// In-place raw EMA update `m ← β·m + (1−β)·x` (the no-normalization
+/// ablation's memory rule — shared so the math exists once).
+pub fn ema_update(m: &mut [f32], x: &[f32], beta: f32) {
+    for (mi, &xi) in m.iter_mut().zip(x) {
+        *mi = beta * *mi + (1.0 - beta) * xi;
+    }
+}
+
+// ───────────────────── pluggable predictor API ─────────────────────
+
+/// Magnitude-predictor selector — the `pred=` key of the `CodecSpec`
+/// grammar. The first three name fixed predictors; `Auto` is a racing
+/// policy that picks one of them per layer per round by measured bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MagnitudeSel {
+    /// Normalized cross-round EMA (Alg. 1); β from `beta=`/`pred=ema:<β>`.
+    #[default]
+    Ema,
+    /// Lorenzo-in-time: â = |g̃^(t-1)|.
+    Last,
+    /// No magnitude prediction (plain SZ-style residual against 0).
+    Zero,
+    /// Race ema/last/zero per layer each round, keep the cheapest.
+    Auto,
+}
+
+impl MagnitudeSel {
+    /// All selectors, for registry-style sweeps.
+    pub const ALL: [MagnitudeSel; 4] =
+        [MagnitudeSel::Ema, MagnitudeSel::Last, MagnitudeSel::Zero, MagnitudeSel::Auto];
+
+    /// Spec-grammar name (`pred=<name>`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            MagnitudeSel::Ema => "ema",
+            MagnitudeSel::Last => "last",
+            MagnitudeSel::Zero => "zero",
+            MagnitudeSel::Auto => "auto",
+        }
+    }
+
+    /// Parse a spec-grammar name (the `ema:<beta>` form is handled by
+    /// the spec parser, which strips the suffix first).
+    pub fn from_name(s: &str) -> Option<MagnitudeSel> {
+        match s {
+            "ema" => Some(MagnitudeSel::Ema),
+            "last" | "lorenzo" => Some(MagnitudeSel::Last),
+            "zero" | "none" => Some(MagnitudeSel::Zero),
+            "auto" => Some(MagnitudeSel::Auto),
+            _ => None,
+        }
+    }
+
+    /// Tag folded into [`LayerState`] fingerprints and `FGS2` spill
+    /// records, so state written under one predictor config can never be
+    /// mistaken for another's across evict→reload or the `StateCheck`
+    /// handshake.
+    pub fn state_tag(&self) -> u8 {
+        match self {
+            MagnitudeSel::Ema => 0,
+            MagnitudeSel::Last => 1,
+            MagnitudeSel::Zero => 2,
+            MagnitudeSel::Auto => 3,
+        }
+    }
+}
+
+/// Wire tag of the magnitude predictor that actually produced one layer
+/// frame, recorded in self-describing (v3) layer sections so the decoder
+/// reconstructs with zero out-of-band config. `auto` is a racing policy,
+/// not a wire tag — its frames record the per-round winner.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PredTag {
+    Ema,
+    Last,
+    Zero,
+}
+
+impl PredTag {
+    /// All wire tags, for registry-style sweeps.
+    pub const ALL: [PredTag; 3] = [PredTag::Ema, PredTag::Last, PredTag::Zero];
+
+    /// Byte recorded in v3 layer sections ([`crate::compress::blob`]).
+    pub fn tag(&self) -> u8 {
+        match self {
+            PredTag::Ema => 0,
+            PredTag::Last => 1,
+            PredTag::Zero => 2,
+        }
+    }
+
+    /// Inverse of [`Self::tag`].
+    pub fn from_tag(t: u8) -> anyhow::Result<PredTag> {
+        match t {
+            0 => Ok(PredTag::Ema),
+            1 => Ok(PredTag::Last),
+            2 => Ok(PredTag::Zero),
+            _ => anyhow::bail!("unknown predictor tag {t}"),
+        }
+    }
+
+    /// Report/diagnostic name (matches the fixed selector names).
+    pub fn name(&self) -> &'static str {
+        match self {
+            PredTag::Ema => "ema",
+            PredTag::Last => "last",
+            PredTag::Zero => "zero",
+        }
+    }
+}
+
+/// One registry row per magnitude predictor (mirrors
+/// [`crate::compress::spec::REGISTRY`] / `EntropyCoder::ALL`).
+#[derive(Debug, Clone, Copy)]
+pub struct MagFamily {
+    pub name: &'static str,
+    pub about: &'static str,
+}
+
+/// Every magnitude predictor the `pred=` grammar accepts.
+pub const MAG_REGISTRY: &[MagFamily] = &[
+    MagFamily { name: "ema", about: "normalized cross-round EMA (Alg. 1); β via beta=/pred=ema:<β>" },
+    MagFamily { name: "last", about: "Lorenzo-in-time: â = |g̃^(t-1)|" },
+    MagFamily { name: "zero", about: "no magnitude prediction (plain SZ-style residual)" },
+    MagFamily { name: "auto", about: "race ema/last/zero per layer per round, keep the cheapest" },
+];
+
+/// Scalar plan of one magnitude-prediction round: the stats of the
+/// previous reconstructed magnitudes. Both sides recompute identical
+/// values from the mirrored state — nothing is transmitted.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MagPlan {
+    pub mu_prev: f32,
+    pub sigma_prev: f32,
+}
+
+impl MagPlan {
+    /// Plan from `|g̃^(t-1)|` (`None` on round 1 ⇒ zeros).
+    pub fn of(prev_abs: Option<&[f32]>) -> MagPlan {
+        match prev_abs {
+            Some(p) => {
+                let (mu_prev, sigma_prev) = stats::mean_std(p);
+                MagPlan { mu_prev, sigma_prev }
+            }
+            None => MagPlan::default(),
+        }
+    }
+}
+
+/// A pluggable magnitude predictor: **plan** (scalar stats from the
+/// mirrored history) → **predict** (elementwise â, updating the
+/// predictor-owned per-layer memory) → **absorb** (fold this round's
+/// reconstruction back into the state views it reads next round).
+///
+/// Implementations own which [`LayerState`] views they touch: EMA owns
+/// the `memory` tensor; every predictor consumes the `|g̃^(t-1)|`
+/// history that the shared [`LayerState::absorb`] maintains.
+pub trait MagnitudePredictor: Send + Sync {
+    /// Wire tag recorded in self-describing (v3) layer frames.
+    fn tag(&self) -> PredTag;
+
+    /// Plan: scalar statistics derived from the previous reconstructed
+    /// magnitudes (identical on both sides by the mirror invariant).
+    fn plan(&self, prev_abs: Option<&[f32]>) -> MagPlan {
+        MagPlan::of(prev_abs)
+    }
+
+    /// Predict â^(t) into `out` (cleared and filled to `n`). `memory` is
+    /// the predictor-owned per-layer memory: EMA updates it in place
+    /// (resizing to `n` zeros on first use or shape change, exactly like
+    /// the fused kernel); the other predictors leave it untouched. Round
+    /// 1 (`prev_abs == None`) predicts all-zero without touching memory.
+    fn predict_into(
+        &self,
+        plan: &MagPlan,
+        prev_abs: Option<&[f32]>,
+        memory: &mut Vec<f32>,
+        mu_curr: f32,
+        sigma_curr: f32,
+        n: usize,
+        out: &mut Vec<f32>,
+    ) -> anyhow::Result<()>;
+
+    /// Absorb this round's reconstruction into the cross-round views.
+    fn absorb(&self, st: &mut LayerState, recon: &[f32]) {
+        st.absorb(recon);
+    }
+}
+
+/// The production predictor behind `pred=ema`: normalized cross-round
+/// EMA (Alg. 1), memory-owning.
+#[derive(Debug, Clone, Copy)]
+pub struct EmaPredictor {
+    pub beta: f32,
+}
+
+impl MagnitudePredictor for EmaPredictor {
+    fn tag(&self) -> PredTag {
+        PredTag::Ema
+    }
+
+    fn predict_into(
+        &self,
+        plan: &MagPlan,
+        prev_abs: Option<&[f32]>,
+        memory: &mut Vec<f32>,
+        mu_curr: f32,
+        sigma_curr: f32,
+        n: usize,
+        out: &mut Vec<f32>,
+    ) -> anyhow::Result<()> {
+        out.clear();
+        let Some(prev) = prev_abs else {
+            out.resize(n, 0.0);
+            return Ok(());
+        };
+        anyhow::ensure!(prev.len() == n, "ema predictor: prev len {} != {n}", prev.len());
+        if memory.len() != n {
+            memory.clear();
+            memory.resize(n, 0.0);
+        }
+        let inv_sigma_prev = 1.0 / plan.sigma_prev.max(SIGMA_EPS);
+        out.reserve(n);
+        for (&pa, m) in prev.iter().zip(memory.iter_mut()) {
+            out.push(ema_norm_step(
+                self.beta,
+                m,
+                pa,
+                plan.mu_prev,
+                inv_sigma_prev,
+                mu_curr,
+                sigma_curr,
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// `pred=last`: Lorenzo in time — â^(t) = |g̃^(t-1)|, no memory.
+#[derive(Debug, Clone, Copy)]
+pub struct LastPredictor;
+
+impl MagnitudePredictor for LastPredictor {
+    fn tag(&self) -> PredTag {
+        PredTag::Last
+    }
+
+    /// Lorenzo needs no scalar stats — skip the O(n) plan pass.
+    fn plan(&self, _prev_abs: Option<&[f32]>) -> MagPlan {
+        MagPlan::default()
+    }
+
+    fn predict_into(
+        &self,
+        _plan: &MagPlan,
+        prev_abs: Option<&[f32]>,
+        _memory: &mut Vec<f32>,
+        _mu_curr: f32,
+        _sigma_curr: f32,
+        n: usize,
+        out: &mut Vec<f32>,
+    ) -> anyhow::Result<()> {
+        out.clear();
+        match prev_abs {
+            None => out.resize(n, 0.0),
+            Some(p) => {
+                anyhow::ensure!(p.len() == n, "last predictor: prev len {} != {n}", p.len());
+                out.extend_from_slice(p);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// `pred=zero`: no magnitude prediction — the plain SZ-style residual.
+#[derive(Debug, Clone, Copy)]
+pub struct ZeroPredictor;
+
+impl MagnitudePredictor for ZeroPredictor {
+    fn tag(&self) -> PredTag {
+        PredTag::Zero
+    }
+
+    /// No prediction ⇒ no plan — skip the O(n) stats pass.
+    fn plan(&self, _prev_abs: Option<&[f32]>) -> MagPlan {
+        MagPlan::default()
+    }
+
+    fn predict_into(
+        &self,
+        _plan: &MagPlan,
+        _prev_abs: Option<&[f32]>,
+        _memory: &mut Vec<f32>,
+        _mu_curr: f32,
+        _sigma_curr: f32,
+        n: usize,
+        out: &mut Vec<f32>,
+    ) -> anyhow::Result<()> {
+        out.clear();
+        out.resize(n, 0.0);
+        Ok(())
+    }
+}
+
+/// Run `f` against the [`MagnitudePredictor`] implementation a wire tag
+/// names (`beta` feeds the EMA instance only) — the registry dispatch
+/// point the pipeline goes through, so the trait methods are the
+/// production code path, not parallel API surface.
+pub fn with_tag_impl<R>(tag: PredTag, beta: f32, f: impl FnOnce(&dyn MagnitudePredictor) -> R) -> R {
+    match tag {
+        PredTag::Ema => f(&EmaPredictor { beta }),
+        PredTag::Last => f(&LastPredictor),
+        PredTag::Zero => f(&ZeroPredictor),
+    }
+}
+
+/// Plan + predict with the implementation a wire tag names — the decode
+/// half of self-describing frames, and the race's candidate evaluator.
+pub fn predict_with_tag(
+    tag: PredTag,
+    beta: f32,
+    prev_abs: Option<&[f32]>,
+    memory: &mut Vec<f32>,
+    mu_curr: f32,
+    sigma_curr: f32,
+    n: usize,
+    out: &mut Vec<f32>,
+) -> anyhow::Result<()> {
+    with_tag_impl(tag, beta, |p| {
+        let plan = p.plan(prev_abs);
+        p.predict_into(&plan, prev_abs, memory, mu_curr, sigma_curr, n, out)
+    })
+}
+
+/// Absorb a round's reconstruction through the tagged implementation
+/// (the trait's third stage; every stock predictor shares
+/// [`LayerState::absorb`], but the dispatch keeps a specialized
+/// implementation honest).
+pub fn absorb_with_tag(tag: PredTag, beta: f32, st: &mut LayerState, recon: &[f32]) {
+    with_tag_impl(tag, beta, |p| p.absorb(st, recon));
+}
 
 /// The production predictor: normalized EMA with per-layer memory.
 #[derive(Debug, Clone)]
@@ -45,27 +416,32 @@ impl EmaNormPredictor {
     /// payload). Returns zeros on the first round (no history yet — the
     /// pipeline treats â=0 as "no prediction").
     pub fn predict(&mut self, prev_abs: Option<&[f32]>, mu_curr: f32, sigma_curr: f32) -> Vec<f32> {
-        let prev_abs = match prev_abs {
-            Some(p) => p,
-            None => return Vec::new(), // round 1: no prediction
-        };
-        let n = prev_abs.len();
-        let (mu_prev, sigma_prev) = stats::mean_std(prev_abs);
-        let inv_sigma_prev = 1.0 / sigma_prev.max(SIGMA_EPS);
-        if self.memory.is_none() {
-            self.memory = Some(vec![0.0; n]);
-        }
-        let m = self.memory.as_mut().unwrap();
-        assert_eq!(m.len(), n, "layer size changed between rounds");
-        let mut out = Vec::with_capacity(n);
-        let beta = self.beta;
-        for i in 0..n {
-            let z = (prev_abs[i] - mu_prev) * inv_sigma_prev;
-            let mi = beta * m[i] + (1.0 - beta) * z;
-            m[i] = mi;
-            out.push((mi * sigma_curr + mu_curr).max(0.0));
-        }
+        let mut out = Vec::new();
+        self.predict_into(prev_abs, mu_curr, sigma_curr, &mut out);
         out
+    }
+
+    /// [`Self::predict`] into a caller-owned buffer (hoists the per-call
+    /// output allocation into a reusable scratch). Delegates to the
+    /// [`EmaPredictor`] trait impl, so the EMA math exists once.
+    pub fn predict_into(
+        &mut self,
+        prev_abs: Option<&[f32]>,
+        mu_curr: f32,
+        sigma_curr: f32,
+        out: &mut Vec<f32>,
+    ) {
+        out.clear();
+        let Some(prev) = prev_abs else {
+            return; // round 1: no prediction
+        };
+        let n = prev.len();
+        let mem = self.memory.get_or_insert_with(Vec::new);
+        assert!(mem.is_empty() || mem.len() == n, "layer size changed between rounds");
+        let plan = MagPlan::of(Some(prev));
+        EmaPredictor { beta: self.beta }
+            .predict_into(&plan, Some(prev), mem, mu_curr, sigma_curr, n, out)
+            .expect("lengths checked above");
     }
 
     pub fn reset(&mut self) {
@@ -113,6 +489,8 @@ pub struct VariantRunner {
     /// Online AR(1) sufficient statistics (lag-1 cross/auto products).
     ar_num: f64,
     ar_den: f64,
+    /// Reusable prediction buffer (hoisted out of the per-round loop).
+    scratch: Vec<f32>,
 }
 
 impl VariantRunner {
@@ -125,6 +503,7 @@ impl VariantRunner {
             ema_raw: None,
             ar_num: 0.0,
             ar_den: 0.0,
+            scratch: Vec::new(),
         }
     }
 
@@ -171,11 +550,13 @@ impl VariantRunner {
             MagnitudeVariant::EmaNorm => {
                 let (mu, sigma) = stats::mean_std(truth_abs);
                 let prev = self.history.last().map(|v| v.as_slice());
-                let p = self.ema_norm.predict(prev, mu, sigma);
-                if p.is_empty() {
+                self.ema_norm.predict_into(prev, mu, sigma, &mut self.scratch);
+                if self.scratch.is_empty() {
                     vec![0.0; n]
                 } else {
-                    p
+                    // Hand the buffer out instead of copying it; the next
+                    // predict_into refills a fresh one.
+                    std::mem::take(&mut self.scratch)
                 }
             }
         };
@@ -187,11 +568,7 @@ impl VariantRunner {
             }
         }
         match &mut self.ema_raw {
-            Some(m) => {
-                for i in 0..n {
-                    m[i] = self.beta * m[i] + (1.0 - self.beta) * truth_abs[i];
-                }
-            }
+            Some(m) => ema_update(m, truth_abs, self.beta),
             None => self.ema_raw = Some(truth_abs.to_vec()),
         }
         self.history.push(truth_abs.to_vec());
@@ -295,5 +672,92 @@ mod tests {
         }
         assert!(errs[2] < errs[0], "EMA(Norm) {} vs Lorenzo {}", errs[2], errs[0]);
         assert!(errs[2] < errs[1], "EMA(Norm) {} vs EMA(NoNorm) {}", errs[2], errs[1]);
+    }
+
+    #[test]
+    fn selector_and_tag_names_roundtrip() {
+        for sel in MagnitudeSel::ALL {
+            assert_eq!(MagnitudeSel::from_name(sel.name()), Some(sel));
+        }
+        assert_eq!(MagnitudeSel::from_name("bogus"), None);
+        assert_eq!(MagnitudeSel::default(), MagnitudeSel::Ema);
+        for tag in PredTag::ALL {
+            assert_eq!(PredTag::from_tag(tag.tag()).unwrap(), tag);
+            assert_eq!(MagnitudeSel::from_name(tag.name()).unwrap().name(), tag.name());
+        }
+        assert!(PredTag::from_tag(9).is_err());
+        // Every registry row names a parseable selector.
+        for fam in MAG_REGISTRY {
+            assert!(MagnitudeSel::from_name(fam.name).is_some(), "{}", fam.name);
+        }
+        // Selector state tags are distinct (fingerprint discrimination).
+        let mut tags: Vec<u8> = MagnitudeSel::ALL.iter().map(|s| s.state_tag()).collect();
+        tags.sort_unstable();
+        tags.dedup();
+        assert_eq!(tags.len(), MagnitudeSel::ALL.len());
+    }
+
+    #[test]
+    fn trait_impls_match_reference_predictors() {
+        // EmaPredictor (the trait impl) must agree bit-for-bit with
+        // EmaNormPredictor (the Alg. 1 reference) — they share
+        // ema_norm_step, and this pins the delegation.
+        let mut rng = Rng::new(9);
+        let n = 257;
+        let prev: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+        let (mu, sigma) = (0.4f32, 0.2f32);
+        let mut reference = EmaNormPredictor::new(0.85);
+        let mut r1 = Vec::new();
+        let mut r2 = Vec::new();
+        let mut mem = Vec::new();
+        let ema = EmaPredictor { beta: 0.85 };
+        for _ in 0..3 {
+            reference.predict_into(Some(&prev), mu, sigma, &mut r1);
+            let plan = ema.plan(Some(&prev));
+            ema.predict_into(&plan, Some(&prev), &mut mem, mu, sigma, n, &mut r2).unwrap();
+            assert_eq!(r1, r2);
+        }
+        assert_eq!(reference.memory.as_deref(), Some(mem.as_slice()));
+
+        // Last = previous magnitudes verbatim; Zero = zeros; both leave
+        // memory untouched and predict zeros on round 1.
+        let plan = MagPlan::of(Some(&prev));
+        let mut out = Vec::new();
+        let mut untouched = vec![7.0f32; 3];
+        LastPredictor
+            .predict_into(&plan, Some(&prev), &mut untouched, mu, sigma, n, &mut out)
+            .unwrap();
+        assert_eq!(out, prev);
+        ZeroPredictor
+            .predict_into(&plan, Some(&prev), &mut untouched, mu, sigma, n, &mut out)
+            .unwrap();
+        assert!(out.iter().all(|&x| x == 0.0) && out.len() == n);
+        assert_eq!(untouched, vec![7.0f32; 3]);
+        for tag in PredTag::ALL {
+            predict_with_tag(tag, 0.9, None, &mut untouched, mu, sigma, 5, &mut out).unwrap();
+            assert_eq!(out, vec![0.0; 5], "{tag:?} round 1");
+        }
+        // absorb dispatches through the trait (shared LayerState::absorb
+        // for every stock predictor).
+        let mut st = LayerState::default();
+        absorb_with_tag(PredTag::Last, 0.9, &mut st, &[1.0, -2.0]);
+        assert_eq!(st.prev_abs.as_deref(), Some(&[1.0, 2.0][..]));
+        // Shape mismatches surface as Err, not UB.
+        assert!(LastPredictor
+            .predict_into(&plan, Some(&prev), &mut untouched, mu, sigma, n + 1, &mut out)
+            .is_err());
+        assert!(EmaPredictor { beta: 0.9 }
+            .predict_into(&plan, Some(&prev), &mut untouched, mu, sigma, n + 1, &mut out)
+            .is_err());
+    }
+
+    #[test]
+    fn ema_update_matches_inline_formula() {
+        let mut m = vec![1.0f32, -2.0, 0.5];
+        let x = vec![0.0f32, 4.0, 0.5];
+        ema_update(&mut m, &x, 0.75);
+        for (got, (m0, x0)) in m.iter().zip([(1.0f32, 0.0f32), (-2.0, 4.0), (0.5, 0.5)]) {
+            assert_eq!(*got, 0.75 * m0 + 0.25 * x0);
+        }
     }
 }

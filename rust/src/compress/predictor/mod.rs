@@ -1,12 +1,58 @@
-//! Stage 1: the gradient-aware predictor — the paper's core innovation.
+//! Stage 1: the gradient-aware predictor — the paper's core innovation,
+//! behind a **pluggable per-layer predictor API**.
 //!
-//! * [`magnitude`] — cross-round magnitude prediction: per-epoch
-//!   normalization + exponential moving average (Alg. 1), plus the
-//!   ablation variants of Table 1.
-//! * [`sign`] — sign prediction: full-batch oscillation flip (Fig. 5) or
-//!   mini-batch kernel-level dominant sign via Eq. 5 consistency (Fig. 7).
+//! * [`magnitude`] — cross-round magnitude prediction: the
+//!   [`MagnitudePredictor`] trait (plan → predict → absorb) with the
+//!   normalized-EMA production predictor (Alg. 1), the Lorenzo-in-time
+//!   and zero predictors, the `pred=` selector registry, plus the
+//!   Table-1 ablation variants.
+//! * [`sign`] — sign prediction: the [`SignPredictor`] trait with the
+//!   full-batch oscillation flip (Fig. 5), the mini-batch kernel-level
+//!   dominant sign via Eq. 5 consistency (Fig. 7), and the off policy;
+//!   the `sign=` selector registry.
 //! * [`bitmap`] — the two-level bitmap side channel (Fig. 8).
+//!
+//! Selection is carried by [`PredictorSpec`] (the `pred=`/`sign=` keys
+//! of the `CodecSpec` grammar). Frames are self-describing: every lossy
+//! layer section produced under a non-default magnitude predictor
+//! records the [`magnitude::PredTag`] actually used (and the EMA β), so
+//! the decoder reconstructs with zero out-of-band configuration —
+//! `pred=auto` races the fixed predictors per layer each round and
+//! records the per-round winner.
 
 pub mod bitmap;
 pub mod magnitude;
 pub mod sign;
+
+pub use magnitude::{MagnitudePredictor, MagnitudeSel, PredTag, DEFAULT_BETA};
+pub use sign::{SignPredictor, SignSel};
+
+/// The predict-stage selection of one codec — which magnitude predictor
+/// and which sign policy run (CodecSpec keys `pred=` / `sign=`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PredictorSpec {
+    pub mag: MagnitudeSel,
+    pub sign: SignSel,
+}
+
+impl PredictorSpec {
+    /// The classic pipeline: implicit EMA magnitude + regime-driven sign
+    /// (what `fedgec` means when both keys are omitted).
+    pub fn is_default(&self) -> bool {
+        *self == PredictorSpec::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_classic_pipeline() {
+        let d = PredictorSpec::default();
+        assert_eq!(d.mag, MagnitudeSel::Ema);
+        assert_eq!(d.sign, SignSel::Auto);
+        assert!(d.is_default());
+        assert!(!PredictorSpec { mag: MagnitudeSel::Auto, sign: SignSel::Auto }.is_default());
+    }
+}

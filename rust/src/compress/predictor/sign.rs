@@ -19,6 +19,7 @@
 //! mini-batch mode, exactly like sub-threshold kernels.
 
 use super::bitmap::KernelBitmap;
+use crate::compress::state::LayerState;
 use crate::tensor::LayerKind;
 use crate::util::stats;
 
@@ -29,6 +30,191 @@ pub enum SignMode {
     FullBatch,
     /// Mini-batch: kernel consistency threshold τ ∈ [0,1].
     MiniBatch { tau: f64 },
+}
+
+/// Sign-policy selector — the `sign=` key of the `CodecSpec` grammar.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SignSel {
+    /// Regime-driven (the classic behavior): `full_batch` picks the
+    /// oscillation flip, otherwise the kernel-consistency policy.
+    #[default]
+    Auto,
+    /// Always the full-batch oscillation flip (Fig. 5).
+    Osc,
+    /// Always the kernel dominant-sign policy (Eq. 5 + Fig. 8 bitmap).
+    Kernel,
+    /// Sign prediction off (S = 0 everywhere, plain residual coding).
+    None,
+}
+
+impl SignSel {
+    /// All selectors, for registry-style sweeps.
+    pub const ALL: [SignSel; 4] = [SignSel::Auto, SignSel::Osc, SignSel::Kernel, SignSel::None];
+
+    /// Spec-grammar name (`sign=<name>`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SignSel::Auto => "auto",
+            SignSel::Osc => "osc",
+            SignSel::Kernel => "kernel",
+            SignSel::None => "none",
+        }
+    }
+
+    /// Parse a spec-grammar name.
+    pub fn from_name(s: &str) -> Option<SignSel> {
+        match s {
+            "auto" => Some(SignSel::Auto),
+            "osc" => Some(SignSel::Osc),
+            "kernel" => Some(SignSel::Kernel),
+            "none" | "off" => Some(SignSel::None),
+            _ => None,
+        }
+    }
+
+    /// Resolve `Auto` against the training regime; fixed selectors pass
+    /// through. Never returns `Auto`.
+    pub fn effective(&self, full_batch: bool) -> SignSel {
+        match self {
+            SignSel::Auto => {
+                if full_batch {
+                    SignSel::Osc
+                } else {
+                    SignSel::Kernel
+                }
+            }
+            s => *s,
+        }
+    }
+}
+
+/// One registry row per sign policy (mirrors the magnitude registry).
+#[derive(Debug, Clone, Copy)]
+pub struct SignFamily {
+    pub name: &'static str,
+    pub about: &'static str,
+}
+
+/// Every sign policy the `sign=` grammar accepts.
+pub const SIGN_REGISTRY: &[SignFamily] = &[
+    SignFamily { name: "auto", about: "full_batch → osc, otherwise kernel (the classic behavior)" },
+    SignFamily { name: "osc", about: "oscillation flip (Fig. 5; 1 bit of side info per layer)" },
+    SignFamily { name: "kernel", about: "kernel dominant sign via Eq. 5 + two-level bitmap" },
+    SignFamily { name: "none", about: "sign prediction off (plain residual coding)" },
+];
+
+/// A pluggable sign policy. The client half fills the elementwise sign
+/// tensor and produces the self-describing [`SignMeta`] side info; the
+/// server half is meta-driven (identical across policies by design, so
+/// the decoder needs zero out-of-band config) and therefore provided.
+///
+/// Implementations own which [`LayerState`] views they read: the
+/// oscillation policy reads `prev_recon`/`prev_sign`, the kernel policy
+/// reads nothing (current-round structure only).
+pub trait SignPredictor: Send + Sync {
+    /// Registry name (matches [`SignSel::name`] of the fixed selectors).
+    fn name(&self) -> &'static str;
+
+    /// Client side: fill `signs` (∈ {-1, 0, +1}, cleared and resized to
+    /// the layer) and return the side info + stats.
+    fn predict_into(
+        &self,
+        grad: &[f32],
+        kind: &LayerKind,
+        st: &LayerState,
+        signs: &mut Vec<f32>,
+    ) -> (SignMeta, SignStats);
+
+    /// Server side: rebuild the exact sign tensor from side info +
+    /// mirrored state. Meta-driven — the default is correct for every
+    /// policy because [`SignMeta`] self-describes.
+    fn reconstruct(
+        &self,
+        meta: &SignMeta,
+        numel: usize,
+        kind: &LayerKind,
+        st: &LayerState,
+    ) -> anyhow::Result<Vec<f32>> {
+        reconstruct_signs(meta, numel, kind, st.prev_sign.as_deref())
+    }
+}
+
+/// `sign=osc`: the full-batch oscillation flip.
+#[derive(Debug, Clone, Copy)]
+pub struct OscSign;
+
+impl SignPredictor for OscSign {
+    fn name(&self) -> &'static str {
+        "osc"
+    }
+
+    fn predict_into(
+        &self,
+        grad: &[f32],
+        kind: &LayerKind,
+        st: &LayerState,
+        signs: &mut Vec<f32>,
+    ) -> (SignMeta, SignStats) {
+        predict_signs_into(
+            grad,
+            kind,
+            SignMode::FullBatch,
+            st.prev_recon.as_deref(),
+            st.prev_sign.as_deref(),
+            signs,
+        )
+    }
+}
+
+/// `sign=kernel`: the mini-batch kernel dominant-sign policy.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelSign {
+    pub tau: f64,
+}
+
+impl SignPredictor for KernelSign {
+    fn name(&self) -> &'static str {
+        "kernel"
+    }
+
+    fn predict_into(
+        &self,
+        grad: &[f32],
+        kind: &LayerKind,
+        st: &LayerState,
+        signs: &mut Vec<f32>,
+    ) -> (SignMeta, SignStats) {
+        predict_signs_into(
+            grad,
+            kind,
+            SignMode::MiniBatch { tau: self.tau },
+            st.prev_recon.as_deref(),
+            st.prev_sign.as_deref(),
+            signs,
+        )
+    }
+}
+
+/// `sign=none`: sign prediction off.
+#[derive(Debug, Clone, Copy)]
+pub struct NoSign;
+
+impl SignPredictor for NoSign {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn predict_into(
+        &self,
+        grad: &[f32],
+        _kind: &LayerKind,
+        _st: &LayerState,
+        signs: &mut Vec<f32>,
+    ) -> (SignMeta, SignStats) {
+        signs.clear();
+        signs.resize(grad.len(), 0.0);
+        (SignMeta::None, SignStats::default())
+    }
 }
 
 /// Side information produced by the client-side predictor; travels in the
@@ -58,10 +244,22 @@ impl SignMeta {
     }
 
     pub fn decode(buf: &[u8]) -> anyhow::Result<SignMeta> {
+        Self::decode_bounded(buf, u32::MAX as usize)
+    }
+
+    /// [`Self::decode`] with a caller-known cap on the layer's element
+    /// count. A kernel carries at least one element, so a bitmap's
+    /// declared kernel count is bounded by `max_numel`; a corrupt stream
+    /// declaring an inflated count is rejected **before** any allocation
+    /// — the same untrusted-payload OOM guard as
+    /// [`crate::compress::entropy::EntropyCoder::decode_bounded`].
+    pub fn decode_bounded(buf: &[u8], max_numel: usize) -> anyhow::Result<SignMeta> {
         match buf.first() {
             Some(0) => Ok(SignMeta::None),
-            Some(1) => Ok(SignMeta::Flip(*buf.get(1).ok_or_else(|| anyhow::anyhow!("flip underrun"))? != 0)),
-            Some(2) => Ok(SignMeta::Bitmap(KernelBitmap::decode(&buf[1..])?)),
+            Some(1) => Ok(SignMeta::Flip(
+                *buf.get(1).ok_or_else(|| anyhow::anyhow!("flip underrun"))? != 0,
+            )),
+            Some(2) => Ok(SignMeta::Bitmap(KernelBitmap::decode_bounded(&buf[1..], max_numel)?)),
             _ => anyhow::bail!("bad sign meta"),
         }
     }
@@ -108,25 +306,43 @@ pub fn predict_signs(
     prev_recon: Option<&[f32]>,
     prev_sign: Option<&[f32]>,
 ) -> (Vec<f32>, SignMeta, SignStats) {
+    let mut signs = Vec::new();
+    let (meta, stats) = predict_signs_into(grad, kind, mode, prev_recon, prev_sign, &mut signs);
+    (signs, meta, stats)
+}
+
+/// [`predict_signs`] into a caller-owned sign buffer (cleared and
+/// resized to the layer) — the pipeline reuses one buffer per layer
+/// slot across rounds instead of allocating per call.
+pub fn predict_signs_into(
+    grad: &[f32],
+    kind: &LayerKind,
+    mode: SignMode,
+    prev_recon: Option<&[f32]>,
+    prev_sign: Option<&[f32]>,
+    signs: &mut Vec<f32>,
+) -> (SignMeta, SignStats) {
+    signs.clear();
     match mode {
         SignMode::FullBatch => {
             let (Some(prev), Some(psign)) = (prev_recon, prev_sign) else {
-                return (vec![0.0; grad.len()], SignMeta::Flip(false), SignStats::default());
+                signs.resize(grad.len(), 0.0);
+                return (SignMeta::Flip(false), SignStats::default());
             };
             let c = stats::gradient_correlation(prev, grad);
             let flip = c < 0.0;
             let f = if flip { -1.0 } else { 1.0 };
-            let signs: Vec<f32> = psign.iter().map(|&s| f * s).collect();
-            let stats = mismatch_stats(&signs, grad, 0, 0);
-            (signs, SignMeta::Flip(flip), stats)
+            signs.extend(psign.iter().map(|&s| f * s));
+            let stats = mismatch_stats(signs, grad, 0, 0);
+            (SignMeta::Flip(flip), stats)
         }
         SignMode::MiniBatch { tau } => {
+            signs.resize(grad.len(), 0.0);
             let Some(t) = kind.kernel_size() else {
                 // Non-conv layer: no structural sign prediction.
-                return (vec![0.0; grad.len()], SignMeta::None, SignStats::default());
+                return (SignMeta::None, SignStats::default());
             };
             let n_kernels = grad.len() / t;
-            let mut signs = vec![0.0f32; grad.len()];
             let mut decisions = Vec::with_capacity(n_kernels);
             let mut predicted = 0usize;
             // Single pass per kernel: P/N/Z counts give both the Eq. 5
@@ -153,8 +369,8 @@ pub fn predict_signs(
                 }
             }
             let meta = SignMeta::Bitmap(KernelBitmap::from_decisions(&decisions));
-            let stats = mismatch_stats(&signs, grad, n_kernels, predicted);
-            (signs, meta, stats)
+            let stats = mismatch_stats(signs, grad, n_kernels, predicted);
+            (meta, stats)
         }
     }
 }
@@ -310,6 +526,85 @@ mod tests {
         let bm = KernelBitmap::from_decisions(&[Some(true); 4]);
         let err = reconstruct_signs(&SignMeta::Bitmap(bm), 100, &conv(4, 9), None);
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn decode_bounded_rejects_oversize_and_truncation() {
+        // A corrupt bitmap stream declaring more kernels than the layer
+        // has elements must error before allocating (OOM guard) — both
+        // via an inflated header and via a header larger than the bits
+        // actually present.
+        let bm = KernelBitmap::from_decisions(&[Some(true), None, Some(false), None]);
+        let encoded = SignMeta::Bitmap(bm.clone()).encode();
+        // Well-formed stream decodes under a matching bound...
+        assert_eq!(SignMeta::decode_bounded(&encoded, 4).unwrap(), SignMeta::Bitmap(bm));
+        // ...but an undersized numel bound rejects it.
+        assert!(SignMeta::decode_bounded(&encoded, 3).is_err());
+        // Adversarial header: 2^31 declared kernels in a 6-byte buffer.
+        let mut evil = vec![2u8];
+        evil.extend_from_slice(&(1u32 << 31).to_le_bytes());
+        evil.push(0xFF);
+        assert!(SignMeta::decode_bounded(&evil, 1 << 20).is_err());
+        assert!(SignMeta::decode(&evil).is_err(), "plausibility guard covers unbounded decode");
+        // Truncations at every prefix error, never panic.
+        for cut in 0..encoded.len() {
+            let _ = SignMeta::decode_bounded(&encoded[..cut], 4);
+        }
+        assert!(SignMeta::decode_bounded(&encoded[..1], 4).is_err());
+    }
+
+    #[test]
+    fn sign_selector_names_roundtrip_and_resolve() {
+        for sel in SignSel::ALL {
+            assert_eq!(SignSel::from_name(sel.name()), Some(sel));
+        }
+        assert_eq!(SignSel::from_name("bogus"), None);
+        assert_eq!(SignSel::default(), SignSel::Auto);
+        assert_eq!(SignSel::Auto.effective(true), SignSel::Osc);
+        assert_eq!(SignSel::Auto.effective(false), SignSel::Kernel);
+        for sel in [SignSel::Osc, SignSel::Kernel, SignSel::None] {
+            assert_eq!(sel.effective(true), sel);
+            assert_eq!(sel.effective(false), sel);
+            assert_ne!(sel.effective(false), SignSel::Auto);
+        }
+        for fam in SIGN_REGISTRY {
+            assert!(SignSel::from_name(fam.name).is_some(), "{}", fam.name);
+        }
+    }
+
+    #[test]
+    fn trait_impls_match_free_functions() {
+        use crate::compress::state::LayerState;
+        let mut rng = Rng::new(23);
+        let t = 9;
+        let grad: Vec<f32> = (0..t * 8).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let kind = conv(8, t);
+        let mut st = LayerState::default();
+        st.absorb(&grad.iter().map(|x| -x).collect::<Vec<_>>());
+        let mut signs = Vec::new();
+
+        let (meta, _) = KernelSign { tau: 0.5 }.predict_into(&grad, &kind, &st, &mut signs);
+        let (want_signs, want_meta, _) = predict_signs(
+            &grad,
+            &kind,
+            SignMode::MiniBatch { tau: 0.5 },
+            st.prev_recon.as_deref(),
+            st.prev_sign.as_deref(),
+        );
+        assert_eq!(signs, want_signs);
+        assert_eq!(meta, want_meta);
+        // Trait-provided reconstruct == free function (meta-driven).
+        let via_trait = KernelSign { tau: 0.5 }.reconstruct(&meta, grad.len(), &kind, &st).unwrap();
+        assert_eq!(via_trait, signs);
+
+        let (meta, _) = OscSign.predict_into(&grad, &kind, &st, &mut signs);
+        assert_eq!(meta, SignMeta::Flip(true), "anti-correlated history flips");
+        assert_eq!(OscSign.reconstruct(&meta, grad.len(), &kind, &st).unwrap(), signs);
+
+        let (meta, stats) = NoSign.predict_into(&grad, &kind, &st, &mut signs);
+        assert_eq!(meta, SignMeta::None);
+        assert_eq!(stats.elements_predicted, 0);
+        assert!(signs.iter().all(|&s| s == 0.0) && signs.len() == grad.len());
     }
 
     #[test]

@@ -147,19 +147,40 @@ pub fn quantize(
 }
 
 /// Reconstruct from codes + escapes given the same predictions and Δ.
+/// Trusted-caller form (panics on an inconsistent escape stream);
+/// untrusted payloads go through [`dequantize_checked`].
 pub fn dequantize(q: &Quantized, pred: &[f32], delta: f64, recon: &mut Vec<f32>) {
-    assert_eq!(q.codes.len(), pred.len());
+    dequantize_checked(q, pred, delta, recon).expect("dequantize: inconsistent stream");
+}
+
+/// [`dequantize`] for untrusted streams: a corrupt payload whose escape
+/// stream is shorter or longer than its escape codes claim surfaces as
+/// `Err`, not a panic.
+pub fn dequantize_checked(
+    q: &Quantized,
+    pred: &[f32],
+    delta: f64,
+    recon: &mut Vec<f32>,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        q.codes.len() == pred.len(),
+        "dequantize: {} codes for {} predictions",
+        q.codes.len(),
+        pred.len()
+    );
     let two_delta = (2.0 * delta) as f32;
     recon.clear();
     recon.reserve(pred.len());
     let mut esc = q.escapes.iter();
     for (i, &code) in q.codes.iter().enumerate() {
         if code == ESCAPE_CODE {
-            recon.push(*esc.next().expect("escape stream exhausted"));
+            recon.push(*esc.next().ok_or_else(|| anyhow::anyhow!("escape stream exhausted"))?);
         } else {
             recon.push(pred[i] + code as f32 * two_delta);
         }
     }
+    anyhow::ensure!(esc.next().is_none(), "unconsumed escapes");
+    Ok(())
 }
 
 #[cfg(test)]
@@ -200,6 +221,19 @@ mod tests {
         for (a, b) in recon.iter().zip(&recon2) {
             assert!(a == b || (a.is_nan() && b.is_nan()));
         }
+    }
+
+    #[test]
+    fn dequantize_checked_rejects_inconsistent_escape_streams() {
+        let q = Quantized { codes: vec![0, ESCAPE_CODE, 1], escapes: vec![] };
+        let mut recon = Vec::new();
+        assert!(dequantize_checked(&q, &[0.0; 3], 0.1, &mut recon).is_err());
+        let q = Quantized { codes: vec![0, 1], escapes: vec![9.0] };
+        assert!(dequantize_checked(&q, &[0.0; 2], 0.1, &mut recon).is_err());
+        assert!(dequantize_checked(&q, &[0.0; 3], 0.1, &mut recon).is_err(), "len mismatch");
+        let q = Quantized { codes: vec![ESCAPE_CODE, 2], escapes: vec![7.5] };
+        dequantize_checked(&q, &[0.0, 1.0], 0.05, &mut recon).unwrap();
+        assert_eq!(recon, vec![7.5, 1.0 + 2.0 * 0.1]);
     }
 
     #[test]

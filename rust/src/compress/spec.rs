@@ -14,7 +14,7 @@
 //!
 //! | family                    | keys                                      |
 //! |---------------------------|-------------------------------------------|
-//! | `fedgec` (alias `ours`)   | `eb`, `beta`, `tau`, `full_batch`, `autotune`, `ec`, `backend` |
+//! | `fedgec` (alias `ours`)   | `eb`, `beta`, `tau`, `full_batch`, `autotune`, `ec`, `backend`, `pred`, `sign` |
 //! | `sz3`                     | `eb`, `ec`, `backend`                     |
 //! | `qsgd`                    | `bits`, `seed`                            |
 //! | `topk`                    | `k`                                       |
@@ -23,7 +23,19 @@
 //! | `ef(<spec>)` (aliases `ef-topk`, `ef-qsgd`) | wraps any inner spec    |
 //!
 //! Examples: `fedgec:eb=rel1e-2,beta=0.9`, `fedgec:eb=rel1e-2,ec=rans`,
-//! `qsgd:bits=5`, `topk:k=0.05`, `ef(qsgd:bits=5)`.
+//! `fedgec:pred=auto,sign=none`, `qsgd:bits=5`, `topk:k=0.05`,
+//! `ef(qsgd:bits=5)`.
+//!
+//! The `pred` key selects the magnitude predictor
+//! (`ema[:<beta>] | last | zero | auto`, see
+//! [`super::predictor::magnitude::MAG_REGISTRY`]): `ema` is the
+//! implicit default (its `:<beta>` suffix sets β, and a bare `pred=ema`
+//! keeps the one struct-level default β so grammar and
+//! `FedgecConfig::default` can never drift); `auto` races the fixed
+//! predictors per layer each round. The `sign` key selects the sign
+//! policy (`auto | osc | kernel | none`); `auto` (the default) resolves
+//! through the `full_batch` regime flag. Defaults are omitted from the
+//! canonical form.
 //!
 //! The `ec` key selects the stage-3 entropy coder for the entropy-coded
 //! families (`huff` | `rans` | `raw`, see [`super::entropy`]); `huff` is
@@ -45,6 +57,9 @@ use std::fmt;
 use super::entropy::EntropyCoder;
 use super::lossless::Backend;
 use super::pipeline::{FedgecCodec, FedgecConfig};
+use super::predictor::magnitude::{MagnitudeSel, DEFAULT_BETA};
+use super::predictor::sign::SignSel;
+use super::predictor::PredictorSpec;
 use super::quant::ErrorBound;
 use super::GradientCodec;
 use crate::baselines::composed::{ErrorFeedback, SparsifiedEblc};
@@ -66,6 +81,8 @@ pub struct SpecDefaults {
     pub topk: f64,
     pub entropy: EntropyCoder,
     pub backend: Backend,
+    pub pred: MagnitudeSel,
+    pub sign: SignSel,
 }
 
 impl Default for SpecDefaults {
@@ -74,13 +91,15 @@ impl Default for SpecDefaults {
             error_bound: ErrorBound::Rel(1e-2),
             qsgd_bits: 5,
             qsgd_seed: 0,
-            beta: 0.9,
+            beta: DEFAULT_BETA,
             tau: 0.5,
             full_batch: false,
             autotune: false,
             topk: 0.05,
             entropy: EntropyCoder::Huffman,
             backend: Backend::default(),
+            pred: MagnitudeSel::Ema,
+            sign: SignSel::Auto,
         }
     }
 }
@@ -110,6 +129,11 @@ pub enum CodecSpec {
         autotune: bool,
         ec: EntropyCoder,
         backend: Backend,
+        /// Magnitude predictor (key `pred`): `ema` (implicit default,
+        /// seed-byte-compatible frames) | `last` | `zero` | `auto`.
+        pred: MagnitudeSel,
+        /// Sign policy (key `sign`): `auto` | `osc` | `kernel` | `none`.
+        sign: SignSel,
     },
     /// Generic Lorenzo/interpolation EBLC (Table 4 comparator).
     Sz3 { eb: ErrorBound, ec: EntropyCoder, backend: Backend },
@@ -143,8 +167,9 @@ pub const REGISTRY: &[CodecFamily] = &[
     CodecFamily {
         family: "fedgec",
         aliases: &["ours"],
-        example: "fedgec:eb=rel1e-2,beta=0.9,tau=0.5,ec=rans",
-        about: "gradient-aware EBLC (the paper's codec); ec=huff|rans|raw",
+        example: "fedgec:eb=rel1e-2,beta=0.9,tau=0.5,pred=auto,sign=kernel,ec=rans",
+        about: "gradient-aware EBLC (the paper's codec); pred=ema|last|zero|auto, \
+                sign=auto|osc|kernel|none, ec=huff|rans|raw",
     },
     CodecFamily {
         family: "sz3",
@@ -276,6 +301,8 @@ impl CodecSpec {
                 let mut autotune = d.autotune;
                 let mut ec = d.entropy;
                 let mut backend = d.backend;
+                let mut pred = d.pred;
+                let mut sign = d.sign;
                 for (k, v) in kvs {
                     match k {
                         "eb" => eb = parse_eb(v)?,
@@ -285,10 +312,46 @@ impl CodecSpec {
                         "autotune" => autotune = parse_bool(k, v)?,
                         "ec" => ec = parse_ec(v)?,
                         "backend" => backend = parse_backend(v)?,
+                        // `pred=ema:<beta>` doubles as a β setter (last
+                        // of it and `beta=` wins); a bare `pred=ema`
+                        // keeps the shared struct-level default, so the
+                        // grammar can never drift from
+                        // `FedgecConfig::default().beta`.
+                        "pred" => {
+                            if let Some(rest) = v.strip_prefix("ema:") {
+                                pred = MagnitudeSel::Ema;
+                                beta = parse_f64("pred", rest)? as f32;
+                            } else {
+                                pred = MagnitudeSel::from_name(v).ok_or_else(|| {
+                                    anyhow::anyhow!(
+                                        "codec spec: unknown predictor '{v}' \
+                                         (ema[:<beta>]|last|zero|auto)"
+                                    )
+                                })?;
+                            }
+                        }
+                        "sign" => {
+                            sign = SignSel::from_name(v).ok_or_else(|| {
+                                anyhow::anyhow!(
+                                    "codec spec: unknown sign policy '{v}' \
+                                     (auto|osc|kernel|none)"
+                                )
+                            })?;
+                        }
                         _ => return Err(unknown(k)),
                     }
                 }
-                Ok(CodecSpec::Fedgec { eb, beta, tau, full_batch, autotune, ec, backend })
+                Ok(CodecSpec::Fedgec {
+                    eb,
+                    beta,
+                    tau,
+                    full_batch,
+                    autotune,
+                    ec,
+                    backend,
+                    pred,
+                    sign,
+                })
             }
             "sz3" => {
                 let mut eb = d.error_bound;
@@ -404,7 +467,7 @@ impl CodecSpec {
     /// mirror — they are symmetric objects).
     pub fn build(&self) -> Box<dyn GradientCodec> {
         match self {
-            CodecSpec::Fedgec { eb, beta, tau, full_batch, autotune, ec, backend } => {
+            CodecSpec::Fedgec { eb, beta, tau, full_batch, autotune, ec, backend, pred, sign } => {
                 Box::new(FedgecCodec::new(FedgecConfig {
                     error_bound: *eb,
                     beta: *beta,
@@ -413,6 +476,7 @@ impl CodecSpec {
                     autotune: *autotune,
                     entropy: *ec,
                     backend: *backend,
+                    predictor: PredictorSpec { mag: *pred, sign: *sign },
                     ..Default::default()
                 }))
             }
@@ -440,7 +504,7 @@ impl CodecSpec {
         use crate::compress::engine::StatelessEngine;
         use crate::compress::pipeline::FedgecEngine;
         match self {
-            CodecSpec::Fedgec { eb, beta, tau, full_batch, autotune, ec, backend } => {
+            CodecSpec::Fedgec { eb, beta, tau, full_batch, autotune, ec, backend, pred, sign } => {
                 Box::new(FedgecEngine::new(FedgecConfig {
                     error_bound: *eb,
                     beta: *beta,
@@ -449,6 +513,7 @@ impl CodecSpec {
                     autotune: *autotune,
                     entropy: *ec,
                     backend: *backend,
+                    predictor: PredictorSpec { mag: *pred, sign: *sign },
                     ..Default::default()
                 }))
             }
@@ -476,6 +541,8 @@ impl CodecSpec {
                 autotune: d.autotune,
                 ec: d.entropy,
                 backend: d.backend,
+                pred: d.pred,
+                sign: d.sign,
             },
             CodecSpec::Sz3 { eb: d.error_bound, ec: d.entropy, backend: d.backend },
             CodecSpec::Qsgd { bits: d.qsgd_bits, seed: d.qsgd_seed },
@@ -498,8 +565,36 @@ impl CodecSpec {
                 autotune: d.autotune,
                 ec: EntropyCoder::Rans,
                 backend: d.backend,
+                pred: d.pred,
+                sign: d.sign,
             },
             CodecSpec::Sz3 { eb: d.error_bound, ec: EntropyCoder::Rans, backend: d.backend },
+            // Predictor-API twins: the per-layer race and a fixed
+            // non-EMA predictor with the sign stage off — so the
+            // registry-wide suites drive self-describing (v3) frames
+            // end to end.
+            CodecSpec::Fedgec {
+                eb: d.error_bound,
+                beta: d.beta,
+                tau: d.tau,
+                full_batch: d.full_batch,
+                autotune: d.autotune,
+                ec: d.entropy,
+                backend: d.backend,
+                pred: MagnitudeSel::Auto,
+                sign: d.sign,
+            },
+            CodecSpec::Fedgec {
+                eb: d.error_bound,
+                beta: d.beta,
+                tau: d.tau,
+                full_batch: d.full_batch,
+                autotune: d.autotune,
+                ec: d.entropy,
+                backend: d.backend,
+                pred: MagnitudeSel::Last,
+                sign: SignSel::None,
+            },
         ]
     }
 
@@ -529,8 +624,14 @@ impl CodecSpec {
 impl fmt::Display for CodecSpec {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
-            CodecSpec::Fedgec { eb, beta, tau, full_batch, autotune, ec, backend } => {
+            CodecSpec::Fedgec { eb, beta, tau, full_batch, autotune, ec, backend, pred, sign } => {
                 write!(f, "fedgec:eb={},beta={beta},tau={tau}", fmt_eb(eb))?;
+                if *pred != MagnitudeSel::Ema {
+                    write!(f, ",pred={}", pred.name())?;
+                }
+                if *sign != SignSel::Auto {
+                    write!(f, ",sign={}", sign.name())?;
+                }
                 if *full_batch {
                     write!(f, ",full_batch=true")?;
                 }
@@ -587,7 +688,7 @@ mod tests {
     fn parses_full_forms() {
         let s = CodecSpec::parse("fedgec:eb=rel1e-2,beta=0.8,tau=0.6,autotune=true").unwrap();
         match s {
-            CodecSpec::Fedgec { eb, beta, tau, full_batch, autotune, ec, backend } => {
+            CodecSpec::Fedgec { eb, beta, tau, full_batch, autotune, ec, backend, pred, sign } => {
                 assert_eq!(eb, ErrorBound::Rel(1e-2));
                 assert!((beta - 0.8).abs() < 1e-6);
                 assert!((tau - 0.6).abs() < 1e-12);
@@ -595,6 +696,8 @@ mod tests {
                 assert!(autotune);
                 assert_eq!(ec, EntropyCoder::Huffman);
                 assert_eq!(backend, Backend::default());
+                assert_eq!(pred, MagnitudeSel::Ema);
+                assert_eq!(sign, SignSel::Auto);
             }
             other => panic!("{other:?}"),
         }
@@ -691,7 +794,9 @@ mod tests {
                 full_batch: false,
                 autotune: false,
                 ec: EntropyCoder::Huffman,
-                backend: Backend::default()
+                backend: Backend::default(),
+                pred: MagnitudeSel::Ema,
+                sign: SignSel::Auto
             }
         );
         // §5.3 pairing: eb 3e-2 ↔ 5 bits.
@@ -699,6 +804,64 @@ mod tests {
             bits: 5,
             seed: 0
         });
+    }
+
+    #[test]
+    fn pred_and_sign_keys_parse_and_roundtrip() {
+        let s = CodecSpec::parse("fedgec:pred=auto,sign=none").unwrap();
+        match &s {
+            CodecSpec::Fedgec { pred, sign, .. } => {
+                assert_eq!(*pred, MagnitudeSel::Auto);
+                assert_eq!(*sign, SignSel::None);
+            }
+            other => panic!("{other:?}"),
+        }
+        // Canonical form keeps non-default selectors and reparses.
+        let text = s.to_string();
+        assert!(text.contains("pred=auto") && text.contains("sign=none"), "{text}");
+        assert_eq!(CodecSpec::parse(&text).unwrap(), s);
+        // Defaults are omitted from the canonical form.
+        let text = CodecSpec::parse("fedgec:pred=ema,sign=auto").unwrap().to_string();
+        assert!(!text.contains("pred=") && !text.contains("sign="), "{text}");
+        // `pred=ema:<beta>` doubles as a β setter.
+        match CodecSpec::parse("fedgec:pred=ema:0.75").unwrap() {
+            CodecSpec::Fedgec { pred, beta, .. } => {
+                assert_eq!(pred, MagnitudeSel::Ema);
+                assert!((beta - 0.75).abs() < 1e-6);
+            }
+            other => panic!("{other:?}"),
+        }
+        // Garbage values and misplaced keys are rejected.
+        assert!(CodecSpec::parse("fedgec:pred=bogus").is_err());
+        assert!(CodecSpec::parse("fedgec:pred=ema:xyz").is_err());
+        assert!(CodecSpec::parse("fedgec:sign=bogus").is_err());
+        assert!(CodecSpec::parse("sz3:pred=last").is_err(), "sz3 has no predictor stage");
+        assert!(CodecSpec::parse("qsgd:sign=none").is_err());
+        // Every selector name round-trips through the grammar.
+        for pred in MagnitudeSel::ALL {
+            for sign in SignSel::ALL {
+                let text = format!("fedgec:eb=rel1e-2,pred={},sign={}", pred.name(), sign.name());
+                let spec = CodecSpec::parse(&text).unwrap();
+                assert_eq!(CodecSpec::parse(&spec.to_string()).unwrap(), spec, "{text}");
+            }
+        }
+    }
+
+    #[test]
+    fn pred_ema_grammar_default_equals_struct_default() {
+        // The EntropyCoder-style default-drift guard: a bare `pred=ema`
+        // must resolve to exactly FedgecConfig::default().beta — all
+        // three definitions share the DEFAULT_BETA constant.
+        use crate::compress::predictor::magnitude::DEFAULT_BETA;
+        assert_eq!(FedgecConfig::default().beta, DEFAULT_BETA);
+        assert_eq!(SpecDefaults::default().beta, DEFAULT_BETA);
+        match CodecSpec::parse("fedgec:pred=ema").unwrap() {
+            CodecSpec::Fedgec { beta, pred, .. } => {
+                assert_eq!(pred, MagnitudeSel::Ema);
+                assert_eq!(beta, FedgecConfig::default().beta);
+            }
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

@@ -17,6 +17,15 @@
 /// State for one layer.
 #[derive(Debug, Clone, Default)]
 pub struct LayerState {
+    /// Magnitude-predictor selector tag that produced this state
+    /// ([`crate::compress::predictor::magnitude::MagnitudeSel::state_tag`]).
+    /// Folded into the fingerprint and the `FGS2` spill record, so state
+    /// written under one predictor configuration can never be mistaken
+    /// for another's across evict→reload or the `StateCheck` handshake.
+    /// Stays 0 (the `ema` default) on layers that never ran the lossy
+    /// pipeline; deliberately **not** part of [`Self::is_empty`] — it is
+    /// config-derived, and an empty layer is cold regardless of config.
+    pub pred: u8,
     /// EMA memory `m` of Alg. 1 (empty until round 2).
     pub memory: Vec<f32>,
     /// Previous reconstructed gradient `g̃^(t-1)`.
@@ -56,6 +65,7 @@ impl LayerState {
     }
 
     pub fn reset(&mut self) {
+        self.pred = 0;
         self.memory.clear();
         self.prev_recon = None;
         self.prev_sign = None;
@@ -117,17 +127,19 @@ impl LayerState {
 
     /// Digest of the state for sync checks (cheap structural
     /// fingerprint). Covers every mirrored buffer that influences future
-    /// decodes: `memory`, `prev_recon`, and `prev_prev_abs` (the β
-    /// auto-tuner input — mirrored, and *not* derivable from the current
-    /// `prev_recon`). `prev_sign`/`prev_abs` are pure functions of
-    /// `prev_recon`, so hashing them would add cost without coverage.
-    /// Domain tags separate the sections so content cannot alias across
-    /// field boundaries.
+    /// decodes: the predictor selector tag (state shaped by one
+    /// predictor must never check as another's), `memory`, `prev_recon`,
+    /// and `prev_prev_abs` (the β auto-tuner input — mirrored, and *not*
+    /// derivable from the current `prev_recon`). `prev_sign`/`prev_abs`
+    /// are pure functions of `prev_recon`, so hashing them would add
+    /// cost without coverage. Domain tags separate the sections so
+    /// content cannot alias across field boundaries.
     pub fn fingerprint(&self) -> u64 {
         fn mix(h: u64, bits: u32) -> u64 {
             (h ^ bits as u64).wrapping_mul(0x100000001b3)
         }
         let mut h = 0xcbf29ce484222325u64;
+        h = mix(h, 0x5EED_0100 | self.pred as u32);
         for v in &self.memory {
             h = mix(h, v.to_bits());
         }
@@ -290,11 +302,33 @@ mod tests {
     fn reset_clears() {
         let mut st = LayerState::default();
         st.memory = vec![1.0];
+        st.pred = 3;
         st.absorb(&[1.0]);
         assert!(!st.is_empty());
         st.reset();
         assert!(st.memory.is_empty() && st.prev_recon.is_none());
+        assert_eq!(st.pred, 0);
         assert!(st.is_empty());
+    }
+
+    #[test]
+    fn fingerprint_covers_pred_tag() {
+        // Identical buffers under different predictor selectors must not
+        // check as the same state — the evict→reload / StateCheck
+        // discriminator the self-describing-frame redesign relies on.
+        let mut a = LayerState::default();
+        let mut b = LayerState::default();
+        a.absorb(&[1.0, -2.0]);
+        b.absorb(&[1.0, -2.0]);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        b.pred = 3;
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        // The tag alone does not make a state warm: an empty layer is
+        // cold regardless of configuration.
+        let mut cs = CodecState::default();
+        cs.ensure(2);
+        cs.layers[1].pred = 3;
+        assert_eq!(cs.fingerprint(), CodecState::default().fingerprint());
     }
 
     #[test]

@@ -20,15 +20,22 @@
 //! mismatches and both sides deterministically reset to the codec's
 //! round-1 path (see `fl::server`).
 //!
-//! # Spill record format (`FGS1`)
+//! # Spill record format (`FGS2`)
+//!
+//! v2 of the record: the per-layer predictor tag was added alongside
+//! the flags byte, and the magic bumped with it so a v1 (`FGS1`)
+//! record fails the magic check outright instead of misparsing.
 //!
 //! ```text
-//! magic  u32  "FGS1" (0x31534746 LE)
+//! magic  u32  "FGS2" (0x32534746 LE)
 //! rounds u32  ┐ StateEpoch — uncompressed, so `epoch()` peeks the
 //! fprint u64  ┘ header without decoding the body
 //! body   bytes (lossless-backend container, zstd by default):
 //!   n_layers u32, then per layer:
 //!     flags  u8   bit0 = prev_recon present, bit1 = prev_prev_abs present
+//!     pred   u8   magnitude-predictor selector tag (a fingerprint input,
+//!                 so evict→reload under a different predictor config can
+//!                 never alias; see `LayerState::pred`)
 //!     memory byte-planed f32s (length-prefixed)
 //!     [prev_recon  byte-planed f32s]
 //!     [prev_prev_abs byte-planed f32s]
@@ -107,7 +114,7 @@ pub trait StateStore: Send + Sync {
 
 // ───────────────────────── spill record codec ─────────────────────────
 
-const SPILL_MAGIC: u32 = u32::from_le_bytes(*b"FGS1");
+const SPILL_MAGIC: u32 = u32::from_le_bytes(*b"FGS2");
 const FLAG_RECON: u8 = 1;
 const FLAG_PPREV: u8 = 2;
 
@@ -149,6 +156,7 @@ pub fn encode_client_state(cs: &ClientState, backend: Backend) -> crate::Result<
             flags |= FLAG_PPREV;
         }
         body.put_u8(flags);
+        body.put_u8(l.pred);
         body.put_bytes(&split_planes(&l.memory));
         if let Some(r) = &l.prev_recon {
             body.put_bytes(&split_planes(r));
@@ -178,7 +186,9 @@ pub fn decode_client_state(buf: &[u8]) -> crate::Result<ClientState> {
     let mut layers = Vec::with_capacity(n_layers);
     for _ in 0..n_layers {
         let flags = b.get_u8()?;
-        let mut l = LayerState { memory: join_planes(b.get_bytes()?)?, ..Default::default() };
+        let pred = b.get_u8()?;
+        let mut l =
+            LayerState { pred, memory: join_planes(b.get_bytes()?)?, ..Default::default() };
         if flags & FLAG_RECON != 0 {
             l.prev_recon = Some(join_planes(b.get_bytes()?)?);
         }
@@ -395,7 +405,7 @@ impl SpillTier {
 }
 
 /// Two-tier [`StateStore`]: a budgeted [`ShardedMemStore`] hot tier whose
-/// evictions serialize cold states to disk (`FGS1` records) instead of
+/// evictions serialize cold states to disk (`FGS2` records) instead of
 /// dropping them. A spilled client's next round transparently reloads —
 /// no resync reset, just disk latency.
 pub struct DiskSpillStore {
@@ -476,6 +486,7 @@ mod tests {
                 (0..n).map(|i| ((seed + r) as f32 * 0.1) + i as f32 * 0.01 - 1.0).collect();
             cs.codec.layers[0].absorb(&recon);
             cs.codec.layers[0].memory = recon.iter().map(|x| x.abs() * 0.5).collect();
+            cs.codec.layers[0].pred = 3; // pred=auto shaped this layer
             cs.codec.layers[1].absorb(&recon[..n / 2]);
             cs.epoch.advance(cs.codec.fingerprint());
         }
@@ -500,12 +511,15 @@ mod tests {
         let back = decode_client_state(&rec).unwrap();
         assert_eq!(back.epoch, cs.epoch);
         assert_eq!(back.codec.fingerprint(), cs.codec.fingerprint());
-        // Derived views were elided yet recomputed bit-exactly.
+        // Derived views were elided yet recomputed bit-exactly; the
+        // predictor tag travels in the record.
         for (a, b) in cs.codec.layers.iter().zip(&back.codec.layers) {
             assert_eq!(a.prev_sign, b.prev_sign);
             assert_eq!(a.prev_abs, b.prev_abs);
             assert_eq!(a.prev_prev_abs, b.prev_prev_abs);
+            assert_eq!(a.pred, b.pred);
         }
+        assert_eq!(back.codec.layers[0].pred, 3);
     }
 
     #[test]
@@ -527,6 +541,12 @@ mod tests {
         assert!(decode_client_state(&rec).is_err());
         assert!(decode_client_state(&[1, 2, 3]).is_err());
         assert!(peek_spill_epoch(&[9; 16]).is_err());
+        // A v1 record (old "FGS1" magic, pre-predictor-tag layout) fails
+        // the magic check outright instead of misparsing field offsets.
+        let mut v1 = encode_client_state(&cs, Backend::default()).unwrap();
+        v1[..4].copy_from_slice(b"FGS1");
+        assert!(decode_client_state(&v1).is_err());
+        assert!(peek_spill_epoch(&v1).is_err());
     }
 
     #[test]

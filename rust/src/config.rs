@@ -2,6 +2,8 @@
 //! (`configs/*.json`) with CLI overrides — the launcher contract of the
 //! framework.
 
+use crate::compress::predictor::magnitude::{MagnitudeSel, DEFAULT_BETA};
+use crate::compress::predictor::sign::SignSel;
 use crate::compress::quant::ErrorBound;
 use crate::compress::spec::{CodecSpec, SpecDefaults};
 use crate::fl::transport::bandwidth::LinkSpec;
@@ -49,6 +51,13 @@ pub struct RunConfig {
     pub beta: f32,
     pub tau: f64,
     pub full_batch: bool,
+    /// Magnitude-predictor selector fed to the codec spec as the `pred`
+    /// default: `ema` | `last` | `zero` | `auto` (the spec string's own
+    /// `pred=` key — including the `ema:<beta>` form — wins).
+    pub pred: String,
+    /// Sign-policy selector (`sign` default): `auto` | `osc` | `kernel`
+    /// | `none`.
+    pub sign: String,
     /// Frame-stream client updates (overlapping compression with
     /// transmission) instead of monolithic blobs, in threaded/TCP mode.
     pub stream_updates: bool,
@@ -97,9 +106,11 @@ impl Default for RunConfig {
             eval_every: 5,
             seed: 42,
             class_skew: 0.5,
-            beta: 0.9,
+            beta: DEFAULT_BETA,
             tau: 0.5,
             full_batch: false,
+            pred: "ema".into(),
+            sign: "auto".into(),
             stream_updates: true,
             participation: 1.0,
             store_budget_mb: 0.0,
@@ -170,6 +181,18 @@ impl RunConfig {
         self.beta = v.f64_or("beta", self.beta as f64) as f32;
         self.tau = v.f64_or("tau", self.tau);
         self.full_batch = v.bool_or("full_batch", self.full_batch);
+        self.pred = v.str_or("pred", &self.pred).to_string();
+        anyhow::ensure!(
+            MagnitudeSel::from_name(&self.pred).is_some(),
+            "unknown pred '{}' (ema|last|zero|auto)",
+            self.pred
+        );
+        self.sign = v.str_or("sign", &self.sign).to_string();
+        anyhow::ensure!(
+            SignSel::from_name(&self.sign).is_some(),
+            "unknown sign '{}' (auto|osc|kernel|none)",
+            self.sign
+        );
         self.stream_updates = v.bool_or("stream", self.stream_updates);
         self.participation = v.f64_or("participation", self.participation);
         anyhow::ensure!(
@@ -198,7 +221,7 @@ impl RunConfig {
     pub fn apply_override(&mut self, key: &str, value: &str) -> crate::Result<()> {
         let quoted = matches!(
             key,
-            "model" | "dataset" | "codec" | "engine" | "store" | "down"
+            "model" | "dataset" | "codec" | "engine" | "store" | "down" | "pred" | "sign"
         );
         let json_val = if quoted { format!("\"{value}\"") } else { value.to_string() };
         let doc = format!("{{\"{key}\": {json_val}}}");
@@ -221,6 +244,10 @@ impl RunConfig {
             beta: self.beta,
             tau: self.tau,
             full_batch: self.full_batch,
+            pred: MagnitudeSel::from_name(&self.pred)
+                .ok_or_else(|| anyhow::anyhow!("unknown pred '{}'", self.pred))?,
+            sign: SignSel::from_name(&self.sign)
+                .ok_or_else(|| anyhow::anyhow!("unknown sign '{}'", self.sign))?,
             ..Default::default()
         };
         CodecSpec::parse_with(&self.codec, &d)
@@ -329,6 +356,40 @@ mod tests {
         // Unparseable specs are rejected at config load.
         assert!(RunConfig::from_json(r#"{"codec": "bogus"}"#).is_err());
         assert!(RunConfig::from_json(r#"{"codec": "qsgd:bits=99"}"#).is_err());
+    }
+
+    #[test]
+    fn pred_and_sign_keys_parse_and_feed_spec_defaults() {
+        // Config-level selectors become the spec defaults…
+        let c = RunConfig::from_json(r#"{"pred": "auto", "sign": "none"}"#).unwrap();
+        match c.codec_spec().unwrap() {
+            CodecSpec::Fedgec { pred, sign, .. } => {
+                assert_eq!(pred, MagnitudeSel::Auto);
+                assert_eq!(sign, SignSel::None);
+            }
+            other => panic!("{other:?}"),
+        }
+        // …and explicit spec keys win over them.
+        let c =
+            RunConfig::from_json(r#"{"codec": "fedgec:pred=last", "pred": "auto"}"#).unwrap();
+        match c.codec_spec().unwrap() {
+            CodecSpec::Fedgec { pred, .. } => assert_eq!(pred, MagnitudeSel::Last),
+            other => panic!("{other:?}"),
+        }
+        // Garbage is rejected at config load, CLI overrides quote.
+        assert!(RunConfig::from_json(r#"{"pred": "bogus"}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"sign": "bogus"}"#).is_err());
+        let mut c = RunConfig::default();
+        c.apply_override("pred", "zero").unwrap();
+        c.apply_override("sign", "kernel").unwrap();
+        assert!(matches!(
+            c.codec_spec().unwrap(),
+            CodecSpec::Fedgec { pred: MagnitudeSel::Zero, sign: SignSel::Kernel, .. }
+        ));
+        // Defaults stay the classic pipeline.
+        let d = RunConfig::default();
+        assert_eq!(d.pred, "ema");
+        assert_eq!(d.sign, "auto");
     }
 
     #[test]

@@ -117,7 +117,15 @@ fn sim_downlink_round(
 /// Resolve a spec into the FedGEC config (HLO paths require fedgec).
 fn fedgec_config(cfg: &RunConfig) -> crate::Result<FedgecConfig> {
     match cfg.codec_spec()? {
-        CodecSpec::Fedgec { eb, beta, tau, full_batch, autotune, ec, backend } => {
+        CodecSpec::Fedgec { eb, beta, tau, full_batch, autotune, ec, backend, pred, sign } => {
+            // The PJRT/HLO backend executes the Pallas lowering of the
+            // EMA predict kernel — the other magnitude predictors run
+            // native only.
+            anyhow::ensure!(
+                pred == crate::compress::predictor::magnitude::MagnitudeSel::Ema,
+                "HLO engine implements the EMA magnitude predictor; pred={} needs engine=native",
+                pred.name()
+            );
             Ok(FedgecConfig {
                 error_bound: eb,
                 beta,
@@ -126,6 +134,7 @@ fn fedgec_config(cfg: &RunConfig) -> crate::Result<FedgecConfig> {
                 autotune,
                 entropy: ec,
                 backend,
+                predictor: crate::compress::predictor::PredictorSpec { mag: pred, sign },
                 ..Default::default()
             })
         }

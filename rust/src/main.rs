@@ -55,7 +55,10 @@ fn print_usage() {
          fedgec info\n\
          \n\
          --codec accepts any CodecSpec string, e.g. 'fedgec:eb=rel1e-2,beta=0.9',\n\
-         'qsgd:bits=5', 'topk:k=0.05', 'ef(qsgd:bits=5)'. See `fedgec codecs`.\n\
+         'fedgec:pred=auto,sign=kernel', 'qsgd:bits=5', 'topk:k=0.05',\n\
+         'ef(qsgd:bits=5)'. See `fedgec codecs`. --pred / --sign set the\n\
+         fedgec predictor defaults (pred=ema|last|zero|auto,\n\
+         sign=auto|osc|kernel|none); explicit spec keys win.\n\
          --down compresses the server broadcast the same way (global-delta\n\
          codec, encode-once fan-out): --down fedgec --down_eb 1e-3; 'raw'\n\
          keeps the uncompressed broadcast. --down_bandwidth_mbps sets an\n\
@@ -78,6 +81,17 @@ fn cmd_codecs() -> fedgec::Result<()> {
         ]);
     }
     t.print();
+    let mut p = fedgec::metrics::Table::new(
+        "fedgec predictor registry (keys pred= / sign=)",
+        &["key", "value", "about"],
+    );
+    for fam in fedgec::compress::predictor::magnitude::MAG_REGISTRY {
+        p.row(vec!["pred".into(), fam.name.to_string(), fam.about.to_string()]);
+    }
+    for fam in fedgec::compress::predictor::sign::SIGN_REGISTRY {
+        p.row(vec!["sign".into(), fam.name.to_string(), fam.about.to_string()]);
+    }
+    p.print();
     Ok(())
 }
 

@@ -4,6 +4,8 @@
 
 use fedgec::compress::frame::Frame;
 use fedgec::compress::pipeline::{FedgecCodec, FedgecConfig};
+use fedgec::compress::predictor::magnitude::MagnitudeSel;
+use fedgec::compress::predictor::sign::SignSel;
 use fedgec::compress::quant::ErrorBound;
 use fedgec::compress::session::{DecodeSession, EncodeSession};
 use fedgec::compress::spec::{CodecSpec, SpecDefaults};
@@ -204,6 +206,118 @@ fn prop_every_registry_spec_roundtrips_through_frames() {
                             sl.side_info_bytes,
                             sl.entropy_bytes
                         ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pred_sign_grammar_roundtrips_registry_wide() {
+    // Every CodecSpec carrying pred=/sign= keys — the full selector grid
+    // crossed with the entropy coders, plus randomized β/τ/eb — must
+    // survive parse → Display → parse exactly, and so must every spec
+    // the registry enumerates.
+    prop::check("pred/sign grammar roundtrip", 20, |rng| {
+        let eb = prop::arb_error_bound(rng);
+        let beta = rng.uniform(0.05, 0.99);
+        let tau = rng.uniform(0.1, 0.95);
+        for pred in MagnitudeSel::ALL {
+            for sign in SignSel::ALL {
+                for ec in ["huff", "rans"] {
+                    let text = format!(
+                        "fedgec:eb=rel{eb},beta={beta},tau={tau},pred={},sign={},ec={ec}",
+                        pred.name(),
+                        sign.name()
+                    );
+                    let spec = CodecSpec::parse(&text).map_err(|e| format!("{text}: {e}"))?;
+                    let back = CodecSpec::parse(&spec.to_string())
+                        .map_err(|e| format!("reparse {spec}: {e}"))?;
+                    if back != spec {
+                        return Err(format!("'{text}' -> '{spec}' -> '{back}'"));
+                    }
+                    match &spec {
+                        CodecSpec::Fedgec { pred: p, sign: s, .. } => {
+                            if *p != pred || *s != sign {
+                                return Err(format!("{text}: selector lost"));
+                            }
+                        }
+                        other => return Err(format!("{other}: wrong family")),
+                    }
+                }
+            }
+        }
+        for spec in CodecSpec::registry_specs(&SpecDefaults::with_rel_eb(eb)) {
+            let back = CodecSpec::parse(&spec.to_string()).map_err(|e| e.to_string())?;
+            if back != spec {
+                return Err(format!("registry spec '{spec}' did not roundtrip"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_frame_pred_tag_matches_decode_registry_wide() {
+    // Self-describing frames: for every magnitude selector, the
+    // predictor tag the encoder stamps on each lossy frame is exactly
+    // the tag the decoder reports back — and for the fixed selectors it
+    // is the selector itself. Randomized multi-layer models, two rounds
+    // (cold + warm) per case.
+    prop::check("frame pred-tag agreement", 15, |rng| {
+        let eb = prop::arb_error_bound(rng);
+        let d = SpecDefaults::with_rel_eb(eb);
+        let base = arb_model(rng);
+        let ms = metas(&base);
+        for pred in MagnitudeSel::ALL {
+            let spec = CodecSpec::parse_with(&format!("fedgec:pred={}", pred.name()), &d)
+                .map_err(|e| e.to_string())?;
+            let mut client = spec.build();
+            let mut server = spec.build();
+            for round in 0..2 {
+                let mut g = base.clone();
+                for l in &mut g.layers {
+                    for v in &mut l.data {
+                        *v *= 1.0 + 0.05 * round as f32;
+                    }
+                }
+                let (payload, cr) =
+                    client.compress_with_report(&g).map_err(|e| format!("{spec}: {e}"))?;
+                let (_, sr) = server
+                    .decompress_with_report(&payload, &ms)
+                    .map_err(|e| format!("{spec}: {e}"))?;
+                for (cl, sl) in cr.layers.iter().zip(&sr.layers) {
+                    if cl.pred_tag != sl.pred_tag {
+                        return Err(format!(
+                            "{spec} layer {}: encode tag '{}' != decode tag '{}'",
+                            cl.name, cl.pred_tag, sl.pred_tag
+                        ));
+                    }
+                    if !cl.lossy {
+                        if !cl.pred_tag.is_empty() {
+                            return Err(format!("{spec}: lossless layer carries a tag"));
+                        }
+                        continue;
+                    }
+                    match pred {
+                        MagnitudeSel::Ema | MagnitudeSel::Last | MagnitudeSel::Zero => {
+                            if cl.pred_tag != pred.name() {
+                                return Err(format!(
+                                    "{spec} layer {}: tag '{}' != selector",
+                                    cl.name, cl.pred_tag
+                                ));
+                            }
+                        }
+                        MagnitudeSel::Auto => {
+                            if MagnitudeSel::from_name(&cl.pred_tag).is_none() {
+                                return Err(format!(
+                                    "{spec}: race winner '{}' unknown",
+                                    cl.pred_tag
+                                ));
+                            }
+                        }
                     }
                 }
             }
