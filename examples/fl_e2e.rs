@@ -11,14 +11,19 @@
 //! make artifacts && cargo run --release --offline --example fl_e2e
 //! # knobs: FEDGEC_ROUNDS, FEDGEC_CODEC, FEDGEC_EB, FEDGEC_ENGINE=hlo,
 //! #        FEDGEC_MODEL, FEDGEC_CLIENTS, FEDGEC_PARTICIPATION,
-//! #        FEDGEC_STORE_BUDGET_MB, FEDGEC_DOWN, FEDGEC_DOWN_EB
+//! #        FEDGEC_STORE_BUDGET_MB, FEDGEC_DOWN, FEDGEC_DOWN_EB,
+//! #        FEDGEC_AGG=binsum
 //! ```
 //!
 //! Emits `results/BENCH_fl_e2e_state_memory.json` — the per-round
-//! state-memory trajectory — and `results/BENCH_fl_e2e_downlink.json` —
-//! the per-round up/down byte and comm-time split — both captured by
-//! the CI bench-smoke job. Set `FEDGEC_DOWN=fedgec` to compress the
-//! broadcast as a global-model delta (encode-once fan-out).
+//! state-memory trajectory — `results/BENCH_fl_e2e_downlink.json` —
+//! the per-round up/down byte and comm-time split — and
+//! `results/BENCH_fl_e2e_agg.json` — the server decode/aggregation CPU
+//! and binsum-vs-exact route counts — all captured by the CI
+//! bench-smoke job. Set `FEDGEC_DOWN=fedgec` to compress the broadcast
+//! as a global-model delta (encode-once fan-out); set
+//! `FEDGEC_AGG=binsum` (with a state-free abs-eb codec spec) for
+//! compressed-domain aggregation that dequantizes once per round.
 //!
 //! The run is recorded in EXPERIMENTS.md §E2E.
 
@@ -67,6 +72,10 @@ fn main() -> fedgec::Result<()> {
         // lands in every client's model).
         down: env_or("FEDGEC_DOWN", "raw".to_string()),
         down_eb: env_or("FEDGEC_DOWN_EB", 1e-3),
+        // Aggregation route: `exact` decodes everything to f32;
+        // `binsum` aggregates eligible layers in the integer-code
+        // domain and dequantizes once per round.
+        agg: env_or("FEDGEC_AGG", "exact".to_string()),
         // Asymmetric access link: broadcasts ride a faster downlink.
         link: LinkSpec::asym_mbps(10.0, 40.0),
         ..Default::default()
@@ -154,6 +163,32 @@ fn main() -> fedgec::Result<()> {
     }
     dl.print();
     dl.save_json("fl_e2e_downlink")?;
+
+    // Aggregation panel: server decode CPU per round plus the
+    // binsum/exact route split — the `agg=binsum` headline numbers,
+    // saved as a BENCH_*.json artifact.
+    let mut ag = fedgec::metrics::Table::new(
+        &format!("server aggregation (agg={})", cfg.agg),
+        &["round", "decode ms", "agg ms", "binsum layers", "exact layers", "dequant passes"],
+    );
+    for r in &summary.rounds {
+        ag.row(vec![
+            r.round.to_string(),
+            format!("{:.2}", r.server_decode_time.as_secs_f64() * 1e3),
+            format!("{:.2}", r.agg_time.as_secs_f64() * 1e3),
+            r.binsum_layers.to_string(),
+            r.exact_layers.to_string(),
+            r.dequant_passes.to_string(),
+        ]);
+    }
+    ag.print();
+    ag.save_json("fl_e2e_agg")?;
+    println!(
+        "server decode CPU {} | aggregation CPU {} (agg={})",
+        fedgec::metrics::fmt_duration(summary.total_server_decode_time()),
+        fedgec::metrics::fmt_duration(summary.total_agg_time()),
+        cfg.agg
+    );
 
     // Communication-time comparison vs uncompressed at the same link —
     // both directions (Eq. 1: the broadcast pull + the update push).

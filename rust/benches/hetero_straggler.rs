@@ -127,6 +127,88 @@ fn main() {
     // byte budget evicts them, trading compression ratio (cold restarts
     // predict worse) for bounded server memory. ──
     state_store_panel();
+
+    // ── Aggregation panel: server decode CPU under `agg=exact` vs
+    // `agg=binsum` on a state-free fedgec fleet — the compressed-domain
+    // route stops before dequantization and pays one dequantize pass
+    // per layer per round instead of one per client. ──
+    agg_panel();
+}
+
+fn agg_panel() {
+    use fedgec::compress::pipeline::{FedgecCodec, FedgecConfig, FedgecEngine};
+    use fedgec::compress::predictor::magnitude::MagnitudeSel;
+    use fedgec::compress::predictor::sign::SignSel;
+    use fedgec::compress::predictor::PredictorSpec;
+    use fedgec::compress::quant::ErrorBound;
+    use fedgec::fl::aggregate::AggMode;
+    use fedgec::fl::server::Server;
+
+    let n_clients = 8usize;
+    let rounds = if full_mode() { 8 } else { 3 };
+    let metas = ModelArch::MicroInception.layers(10);
+    let params: Vec<Vec<f32>> = metas.iter().map(|m| vec![0.0; m.numel]).collect();
+    let cfg = FedgecConfig {
+        error_bound: ErrorBound::Abs(2e-3),
+        predictor: PredictorSpec { mag: MagnitudeSel::Zero, sign: SignSel::None },
+        ..Default::default()
+    };
+
+    let mut panel = Table::new(
+        &format!(
+            "compressed-domain aggregation: {n_clients} clients x {rounds} rounds \
+             (state-free fedgec, abs eb)"
+        ),
+        &["agg", "decode CPU", "agg CPU", "binsum/exact layers", "dequant passes"],
+    );
+    for mode in AggMode::ALL {
+        let mut server = Server::with_engine(
+            params.clone(),
+            metas.clone(),
+            0.1,
+            Box::new(FedgecEngine::new(cfg.clone())),
+        )
+        .with_agg_mode(mode);
+        let mut codecs: Vec<FedgecCodec> = (0..n_clients)
+            .map(|i| {
+                server.admit(i as u32);
+                FedgecCodec::new(cfg.clone())
+            })
+            .collect();
+        let mut gens: Vec<GradGen> = (0..n_clients)
+            .map(|i| GradGen::new(metas.clone(), GradGenConfig::default(), 900 + i as u64))
+            .collect();
+        let mut decode = Duration::ZERO;
+        let mut agg_cpu = Duration::ZERO;
+        let (mut binsum, mut exact, mut passes) = (0usize, 0usize, 0usize);
+        for _round in 0..rounds {
+            let mut agg = server.new_round_agg();
+            for ci in 0..n_clients {
+                let p = codecs[ci].compress(&gens[ci].next_round()).unwrap();
+                let times = server.absorb_payload(ci as u32, &p, 1.0, &mut agg).unwrap();
+                decode += times.decode;
+                agg_cpu += times.agg;
+            }
+            let rep = server.finish_round(agg);
+            agg_cpu += rep.finish_time;
+            binsum += rep.binsum_layers;
+            exact += rep.exact_layers + rep.mixed_layers;
+            passes += rep.dequant_passes;
+        }
+        panel.row(vec![
+            mode.name().into(),
+            fmt_duration(decode),
+            fmt_duration(agg_cpu),
+            format!("{binsum}/{exact}"),
+            passes.to_string(),
+        ]);
+    }
+    panel.print();
+    panel.save_csv("hetero_agg").unwrap();
+    println!(
+        "binsum dequantizes once per layer per round (vs once per client), \
+         so its dequant-pass count stays flat as the fleet grows"
+    );
 }
 
 fn downlink_panel(fleet: &HeteroFleet, n_clients: usize) {
@@ -181,7 +263,6 @@ fn state_store_panel() {
     use fedgec::compress::state::StateEpoch;
     use fedgec::compress::store::ShardedMemStore;
     use fedgec::compress::GradientCodec;
-    use fedgec::fl::aggregate::FedAvg;
     use fedgec::fl::hetero::sample_participants;
     use fedgec::fl::server::Server;
     use fedgec::util::rng::Rng;
@@ -202,7 +283,7 @@ fn state_store_panel() {
         srv.admit(0);
         let mut codec = FedgecCodec::new(FedgecConfig::default());
         let mut gen = GradGen::new(metas.clone(), GradGenConfig::default(), 1);
-        let mut agg = FedAvg::new();
+        let mut agg = srv.new_round_agg();
         let p = codec.compress(&gen.next_round()).unwrap();
         srv.absorb_payload(0, &p, 1.0, &mut agg).unwrap();
         srv.store_stats().resident_bytes
@@ -245,7 +326,7 @@ fn state_store_panel() {
             let mut resyncs = 0usize;
             let mut peak_bytes = 0usize;
             for _round in 0..rounds {
-                let mut agg = FedAvg::new();
+                let mut agg = server.new_round_agg();
                 for ci in sample_participants(n_clients, fraction, &mut part_rng) {
                     let (codec, gen, epoch) = &mut clients[ci];
                     if server.check_state(ci as u32, *epoch).unwrap() {

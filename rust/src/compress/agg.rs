@@ -1,0 +1,767 @@
+//! Compressed-domain aggregation: weighted FedAvg over **integer
+//! quantizer bins**, dequantizing once per layer per round.
+//!
+//! The quantizer is a uniform linear binner (`recon = pred + 2Δ·code`,
+//! exact-f32 escapes — see [`super::quant`]), so a weighted sum of
+//! reconstructions distributes over the bins:
+//!
+//! ```text
+//! Σ_c w_c·recon_c[i] = Σ_c w_c·pred_c[i]            (prediction sums)
+//!                    + 2Δ·Σ_c w_c·code_c[i]         (integer bin sums)
+//!                    + Σ_c w_c·x_c[i]               (escape side-channel)
+//! ```
+//!
+//! exactly when every participating frame for a layer shares the same Δ
+//! — the abs-eb regime with one quantizer config fleet-wide. The server
+//! then accumulates `Σ w_c·code_c` in i64 (f64 for non-integral weights
+//! or past the overflow guard), the rare escapes and any dense
+//! contributions in an f64 side accumulator, and performs a **single**
+//! dequantize-and-divide at `finish` instead of one per client.
+//!
+//! Validity is decided per layer, never globally: frames a codec cannot
+//! express as bins arrive as [`BinFrame::Dense`] and take the exact-f32
+//! route; a mid-round Δ mismatch demotes the layer's integer sums into
+//! the dense accumulator and the layer finishes on the mixed route. The
+//! chosen route is recorded per layer (see [`AggRoute`]) and surfaced
+//! through [`AggReport`] into `RoundStats`. DESIGN.md §11 has the full
+//! fallback matrix.
+//!
+//! [`LayerBinSum`] is the per-shard partial-sum type: two shards that
+//! aggregated disjoint client subsets [`merge`](LayerBinSum::merge)
+//! commutatively, which is the exchange unit for the ROADMAP's sharded
+//! server.
+
+use crate::compress::quant::{count_escapes, ESCAPE_CODE};
+use crate::tensor::LayerGrad;
+
+/// One decoded layer frame in the form the aggregator consumes: either
+/// the compressed-domain triple (integer codes + escape stream +
+/// prediction, sharing one Δ) or a dense f32 fallback for layers the
+/// bin route cannot cover.
+#[derive(Debug, Clone)]
+pub enum BinFrame {
+    /// `recon = pred + 2Δ·code`, escapes stored exact. An empty `pred`
+    /// means the all-zero prediction (the state-free `pred=zero` mode —
+    /// nothing to sum).
+    Bins {
+        codes: Vec<i32>,
+        escapes: Vec<f32>,
+        pred: Vec<f32>,
+        delta: f64,
+    },
+    /// Fully reconstructed layer (the exact-f32 route).
+    Dense(LayerGrad),
+}
+
+impl BinFrame {
+    /// Element count of the layer this frame encodes.
+    pub fn numel(&self) -> usize {
+        match self {
+            BinFrame::Bins { codes, .. } => codes.len(),
+            BinFrame::Dense(layer) => layer.data.len(),
+        }
+    }
+}
+
+/// The aggregation route a layer ended on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AggRoute {
+    /// Every contribution arrived as bins under one Δ.
+    Binsum,
+    /// Every contribution took the dense f32 path.
+    Exact,
+    /// Bins and dense contributions met (or a Δ mismatch demoted the
+    /// integer sums mid-round).
+    Mixed,
+}
+
+impl AggRoute {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AggRoute::Binsum => "binsum",
+            AggRoute::Exact => "exact",
+            AggRoute::Mixed => "mixed",
+        }
+    }
+}
+
+/// Conservative per-element magnitude bound on a single frame's
+/// weight-scaled code (codes are escape-clamped to ±2^24): demote the
+/// i64 bins to f64 before `Σ w·code` can overflow.
+const BIN_OVERFLOW_GUARD: i64 = i64::MAX / 2;
+const CODE_BOUND: i64 = 1 << 24;
+
+/// Per-layer weighted partial sums — the shard exchange unit.
+///
+/// `total[i] = 2Δ·(bins[i] + bins_f[i]) + pred[i] + dense[i]`, where
+/// `dense` also carries escapes, demoted integer sums, and whole dense
+/// contributions. Empty vectors mean "all zero" (lazily allocated).
+#[derive(Debug, Clone, Default)]
+pub struct LayerBinSum {
+    numel: usize,
+    /// Δ shared by the integer bins; 0.0 until the first bins frame.
+    delta: f64,
+    /// Integer bin sums `Σ w·code` (integral weights inside the
+    /// overflow guard).
+    bins: Vec<i64>,
+    /// f64 bin sums (non-integral weights, or overflow-demoted).
+    bins_f: Vec<f64>,
+    /// Weighted prediction sums `Σ w·pred`.
+    pred: Vec<f64>,
+    /// Exact f32 side: escapes, dense contributions, Δ-mismatch folds.
+    dense: Vec<f64>,
+    bin_frames: usize,
+    dense_frames: usize,
+    /// Once a Δ mismatch folded the bins, stay dense for the round.
+    demoted: bool,
+    /// Running bound on `max_i |bins[i]|` (overflow sentinel).
+    bin_bound: i64,
+    /// Dequantize passes charged to this layer (demotion folds; the
+    /// final fold is charged by `finish`).
+    dequant_passes: usize,
+}
+
+impl LayerBinSum {
+    pub fn new(numel: usize) -> Self {
+        LayerBinSum { numel, ..Default::default() }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.numel
+    }
+
+    /// Route this layer would report if the round finished now.
+    pub fn route(&self) -> AggRoute {
+        let has_bins = self.bin_frames > 0;
+        let has_dense = self.dense_frames > 0 || self.demoted;
+        match (has_bins, has_dense) {
+            (true, false) => AggRoute::Binsum,
+            (true, true) => AggRoute::Mixed,
+            _ => AggRoute::Exact,
+        }
+    }
+
+    fn ensure_dense(&mut self) -> &mut Vec<f64> {
+        if self.dense.is_empty() {
+            self.dense = vec![0.0; self.numel];
+        }
+        &mut self.dense
+    }
+
+    /// Fold the integer/f64 bin sums into the dense accumulator under
+    /// the currently pinned Δ (a dequantize pass), leaving the bins
+    /// empty. Called on Δ mismatch and by `merge`.
+    fn demote(&mut self) {
+        if self.bins.is_empty() && self.bins_f.is_empty() {
+            self.demoted = true;
+            return;
+        }
+        let two_delta = 2.0 * self.delta;
+        let n = self.numel;
+        if self.dense.is_empty() {
+            self.dense = vec![0.0; n];
+        }
+        for i in 0..n {
+            let b = self.bins.get(i).copied().unwrap_or(0) as f64
+                + self.bins_f.get(i).copied().unwrap_or(0.0);
+            self.dense[i] += two_delta * b;
+        }
+        self.bins = Vec::new();
+        self.bins_f = Vec::new();
+        self.bin_bound = 0;
+        self.delta = 0.0;
+        self.demoted = true;
+        self.dequant_passes += 1;
+    }
+
+    /// Accumulate one bins contribution. Caller has already validated
+    /// lengths and the escape stream (see [`BinAggregator::add`]).
+    fn add_bins(&mut self, codes: &[i32], escapes: &[f32], pred: &[f32], delta: f64, weight: f64) {
+        // Δ mismatch against the pinned bins: fold and go dense.
+        if self.bin_frames > 0 && !self.demoted && delta != self.delta {
+            self.demote();
+        }
+        self.bin_frames += 1;
+        if self.demoted {
+            // Dense route for this frame: one weighted dequantize.
+            let two_wd = 2.0 * delta * weight;
+            let dense = self.ensure_dense();
+            let mut esc = escapes.iter();
+            for (i, &c) in codes.iter().enumerate() {
+                if c == ESCAPE_CODE {
+                    dense[i] += weight * (*esc.next().expect("validated escape stream")) as f64;
+                } else {
+                    dense[i] += two_wd * c as f64;
+                }
+            }
+            self.dequant_passes += 1;
+        } else {
+            self.delta = delta;
+            // Integral weights inside the guard stay in exact i64;
+            // anything else accumulates in the f64 bins.
+            let w_int = (weight.fract() == 0.0 && weight.abs() < (1i64 << 32) as f64)
+                .then(|| weight as i64)
+                .filter(|w| {
+                    self.bin_bound.saturating_add(w.abs().saturating_mul(CODE_BOUND))
+                        < BIN_OVERFLOW_GUARD
+                });
+            match w_int {
+                Some(w) => {
+                    self.bin_bound += w.abs() * CODE_BOUND;
+                    if self.bins.is_empty() {
+                        self.bins = vec![0; self.numel];
+                    }
+                    let mut esc = escapes.iter();
+                    for (i, &c) in codes.iter().enumerate() {
+                        if c == ESCAPE_CODE {
+                            let x = *esc.next().expect("validated escape stream");
+                            self.ensure_dense_at(i, weight * x as f64);
+                        } else {
+                            self.bins[i] += w * c as i64;
+                        }
+                    }
+                }
+                None => {
+                    if self.bins_f.is_empty() {
+                        self.bins_f = vec![0.0; self.numel];
+                    }
+                    let mut esc = escapes.iter();
+                    for (i, &c) in codes.iter().enumerate() {
+                        if c == ESCAPE_CODE {
+                            let x = *esc.next().expect("validated escape stream");
+                            self.ensure_dense_at(i, weight * x as f64);
+                        } else {
+                            self.bins_f[i] += weight * c as f64;
+                        }
+                    }
+                }
+            }
+        }
+        if !pred.is_empty() {
+            if self.pred.is_empty() {
+                self.pred = vec![0.0; self.numel];
+            }
+            // Escaped elements reconstruct to their exact stored value;
+            // the prediction does not participate there.
+            for ((p, &v), &c) in self.pred.iter_mut().zip(pred).zip(codes) {
+                if c != ESCAPE_CODE {
+                    *p += weight * v as f64;
+                }
+            }
+        }
+    }
+
+    /// Sparse add into the dense accumulator (escape hits are rare —
+    /// avoid allocating it until one lands).
+    fn ensure_dense_at(&mut self, i: usize, v: f64) {
+        if self.dense.is_empty() {
+            self.dense = vec![0.0; self.numel];
+        }
+        self.dense[i] += v;
+    }
+
+    /// Accumulate one dense contribution (the exact route).
+    fn add_dense(&mut self, data: &[f32], weight: f64) {
+        self.dense_frames += 1;
+        let dense = self.ensure_dense();
+        for (a, &g) in dense.iter_mut().zip(data) {
+            *a += weight * g as f64;
+        }
+    }
+
+    /// Merge another shard's partial sums for the same layer into this
+    /// one. Bins merge exactly under a shared Δ; a Δ mismatch folds the
+    /// incoming shard dense (one dequantize pass), so the result is
+    /// always well-defined.
+    pub fn merge(&mut self, mut other: LayerBinSum) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.numel == other.numel,
+            "bin-sum merge: layer size {} != {}",
+            self.numel,
+            other.numel
+        );
+        let deltas_clash = self.bin_frames > 0
+            && other.bin_frames > 0
+            && !self.demoted
+            && !other.demoted
+            && self.delta != other.delta;
+        if deltas_clash || self.demoted {
+            other.demote();
+        } else if other.demoted {
+            self.demote();
+        }
+        if other.bin_frames > 0 && !other.demoted {
+            self.delta = other.delta;
+        }
+        if !other.bins.is_empty() {
+            if self.bins.is_empty() {
+                self.bins = vec![0; self.numel];
+            }
+            for (a, b) in self.bins.iter_mut().zip(&other.bins) {
+                *a += b;
+            }
+            self.bin_bound = self.bin_bound.saturating_add(other.bin_bound);
+            if self.bin_bound >= BIN_OVERFLOW_GUARD {
+                // Past the guard: carry the merged sums in f64 from now
+                // on (the sums themselves are still exact here).
+                if self.bins_f.is_empty() {
+                    self.bins_f = vec![0.0; self.numel];
+                }
+                for (a, b) in self.bins_f.iter_mut().zip(&self.bins) {
+                    *a += *b as f64;
+                }
+                self.bins = Vec::new();
+                self.bin_bound = 0;
+            }
+        }
+        if !other.bins_f.is_empty() {
+            if self.bins_f.is_empty() {
+                self.bins_f = vec![0.0; self.numel];
+            }
+            for (a, b) in self.bins_f.iter_mut().zip(&other.bins_f) {
+                *a += b;
+            }
+        }
+        if !other.pred.is_empty() {
+            if self.pred.is_empty() {
+                self.pred = vec![0.0; self.numel];
+            }
+            for (a, b) in self.pred.iter_mut().zip(&other.pred) {
+                *a += b;
+            }
+        }
+        if !other.dense.is_empty() {
+            let dense = self.ensure_dense();
+            for (a, b) in dense.iter_mut().zip(&other.dense) {
+                *a += b;
+            }
+        }
+        self.bin_frames += other.bin_frames;
+        self.dense_frames += other.dense_frames;
+        self.demoted |= other.demoted;
+        self.dequant_passes += other.dequant_passes;
+        Ok(())
+    }
+
+    /// The single dequantize-and-divide: fold bins, predictions and the
+    /// dense side together and scale by `inv_w`. Consumes the layer and
+    /// reports (total, dequantize passes incl. the final fold).
+    fn finish(self, inv_w: f64) -> (Vec<f32>, usize) {
+        let mut passes = self.dequant_passes;
+        let two_delta = 2.0 * self.delta;
+        let has_bins = !self.bins.is_empty() || !self.bins_f.is_empty();
+        if has_bins {
+            passes += 1;
+        }
+        let n = self.numel;
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let b = self.bins.get(i).copied().unwrap_or(0) as f64
+                + self.bins_f.get(i).copied().unwrap_or(0.0);
+            let total = two_delta * b
+                + self.pred.get(i).copied().unwrap_or(0.0)
+                + self.dense.get(i).copied().unwrap_or(0.0);
+            out.push((total * inv_w) as f32);
+        }
+        (out, passes)
+    }
+}
+
+/// What one aggregation round did, per layer route (feeds
+/// `RoundStats`/BENCH reporting).
+#[derive(Debug, Clone, Default)]
+pub struct AggReport {
+    /// Layers finished entirely on the integer-bin route.
+    pub binsum_layers: usize,
+    /// Layers finished entirely on the dense f32 route.
+    pub exact_layers: usize,
+    /// Layers that saw both (incl. Δ-mismatch demotions).
+    pub mixed_layers: usize,
+    /// Total dequantize passes performed (the binsum invariant is one
+    /// per bin-routed layer per round; demotions add theirs honestly).
+    pub dequant_passes: usize,
+    /// Wall-clock of the `finish` fold (filled by the server).
+    pub finish_time: std::time::Duration,
+}
+
+impl AggReport {
+    /// Report for a round aggregated wholly on the classic dense path.
+    pub fn all_exact(layers: usize) -> Self {
+        AggReport { exact_layers: layers, ..Default::default() }
+    }
+}
+
+/// Streaming integer-bin FedAvg: the compressed-domain twin of
+/// [`crate::fl::aggregate::FedAvg`]. Contributions are all-or-nothing —
+/// a malformed frame set returns `Err` and leaves the sums untouched.
+#[derive(Default)]
+pub struct BinAggregator {
+    layers: Vec<LayerBinSum>,
+    total_weight: f64,
+}
+
+impl BinAggregator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Weight mass absorbed so far.
+    pub fn weight(&self) -> f64 {
+        self.total_weight
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// Validate one client's frame set against the accumulated shape:
+    /// layer count, element counts, escape-stream consistency and Δ
+    /// sanity — all *before* any mutation, so a rejected contribution
+    /// is dropped whole (mirroring `FedAvg::add`).
+    fn validate(&self, frames: &[BinFrame], weight: f64) -> crate::Result<()> {
+        anyhow::ensure!(
+            weight.is_finite() && weight >= 0.0,
+            "bin aggregation: bad weight {weight}"
+        );
+        if !self.layers.is_empty() {
+            anyhow::ensure!(
+                frames.len() == self.layers.len(),
+                "bin aggregation: {} layers, expected {}",
+                frames.len(),
+                self.layers.len()
+            );
+        }
+        for (i, f) in frames.iter().enumerate() {
+            if let Some(acc) = self.layers.get(i) {
+                anyhow::ensure!(
+                    f.numel() == acc.numel(),
+                    "bin aggregation: layer {i} has {} elements, expected {}",
+                    f.numel(),
+                    acc.numel()
+                );
+            }
+            if let BinFrame::Bins { codes, escapes, pred, delta } = f {
+                anyhow::ensure!(
+                    delta.is_finite() && *delta > 0.0,
+                    "bin aggregation: layer {i} Δ {delta} not positive-finite"
+                );
+                anyhow::ensure!(
+                    pred.is_empty() || pred.len() == codes.len(),
+                    "bin aggregation: layer {i} pred len {} != {}",
+                    pred.len(),
+                    codes.len()
+                );
+                let escaped = count_escapes(codes);
+                anyhow::ensure!(
+                    escaped == escapes.len(),
+                    "bin aggregation: layer {i} has {escaped} escape codes, {} values",
+                    escapes.len()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Absorb one client's decoded frame set with the given weight.
+    pub fn add(&mut self, frames: &[BinFrame], weight: f64) -> crate::Result<()> {
+        self.validate(frames, weight)?;
+        if self.layers.is_empty() {
+            self.layers = frames.iter().map(|f| LayerBinSum::new(f.numel())).collect();
+        }
+        for (acc, f) in self.layers.iter_mut().zip(frames) {
+            match f {
+                BinFrame::Bins { codes, escapes, pred, delta } => {
+                    acc.add_bins(codes, escapes, pred, *delta, weight)
+                }
+                BinFrame::Dense(layer) => acc.add_dense(&layer.data, weight),
+            }
+        }
+        self.total_weight += weight;
+        Ok(())
+    }
+
+    /// Merge another aggregator's partial sums (shard exchange). Both
+    /// sides must have seen the same model shape (or be empty).
+    pub fn merge(&mut self, other: BinAggregator) -> crate::Result<()> {
+        if other.layers.is_empty() {
+            return Ok(());
+        }
+        if self.layers.is_empty() {
+            self.layers = other.layers;
+            self.total_weight = other.total_weight;
+            return Ok(());
+        }
+        anyhow::ensure!(
+            self.layers.len() == other.layers.len(),
+            "bin-sum merge: {} layers vs {}",
+            self.layers.len(),
+            other.layers.len()
+        );
+        for (acc, o) in self.layers.iter_mut().zip(other.layers) {
+            acc.merge(o)?;
+        }
+        self.total_weight += other.total_weight;
+        Ok(())
+    }
+
+    /// Finish the round: one dequantize-and-divide per layer. Returns
+    /// the weighted mean per layer (empty if nothing was absorbed, like
+    /// `FedAvg::mean`) and the route report.
+    pub fn finish(self) -> (Vec<Vec<f32>>, AggReport) {
+        let inv_w = if self.total_weight > 0.0 { 1.0 / self.total_weight } else { 0.0 };
+        let mut report = AggReport::default();
+        let mut mean = Vec::with_capacity(self.layers.len());
+        for layer in self.layers {
+            match layer.route() {
+                AggRoute::Binsum => report.binsum_layers += 1,
+                AggRoute::Exact => report.exact_layers += 1,
+                AggRoute::Mixed => report.mixed_layers += 1,
+            }
+            let (out, passes) = layer.finish(inv_w);
+            report.dequant_passes += passes;
+            mean.push(out);
+        }
+        (mean, report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::aggregate::FedAvg;
+    use crate::tensor::{LayerMeta, ModelGrad};
+
+    fn dequant(codes: &[i32], escapes: &[f32], pred: &[f32], delta: f64) -> Vec<f32> {
+        let mut esc = escapes.iter();
+        codes
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| {
+                if c == ESCAPE_CODE {
+                    *esc.next().unwrap()
+                } else {
+                    let p = pred.get(i).copied().unwrap_or(0.0);
+                    p + (2.0 * delta * c as f64) as f32
+                }
+            })
+            .collect()
+    }
+
+    fn dense_model(vals: &[f32]) -> ModelGrad {
+        ModelGrad {
+            layers: vec![LayerGrad::new(LayerMeta::other("x", vals.len()), vals.to_vec())],
+        }
+    }
+
+    #[test]
+    fn binsum_matches_dense_reference() {
+        let delta = 1e-3f64;
+        let clients: Vec<(Vec<i32>, Vec<f32>, f64)> = vec![
+            (vec![3, -7, 0, ESCAPE_CODE, 12], vec![0.777], 2.0),
+            (vec![-1, 4, 9, 2, -6], vec![], 5.0),
+            (vec![0, 0, ESCAPE_CODE, ESCAPE_CODE, 1], vec![-0.25, 1.5], 1.0),
+        ];
+        let mut agg = BinAggregator::new();
+        let mut reference = FedAvg::new();
+        for (codes, escapes, w) in &clients {
+            let frame = BinFrame::Bins {
+                codes: codes.clone(),
+                escapes: escapes.clone(),
+                pred: Vec::new(),
+                delta,
+            };
+            agg.add(std::slice::from_ref(&frame), *w).unwrap();
+            reference.add(&dense_model(&dequant(codes, escapes, &[], delta)), *w).unwrap();
+        }
+        let (mean, report) = agg.finish();
+        let want = reference.mean();
+        assert_eq!(report.binsum_layers, 1);
+        assert_eq!(report.exact_layers + report.mixed_layers, 0);
+        assert_eq!(report.dequant_passes, 1);
+        for (a, b) in mean[0].iter().zip(&want[0]) {
+            assert!((a - b).abs() <= 1e-6 * b.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn prediction_sums_participate() {
+        let delta = 5e-4f64;
+        // Nonzero prediction under the escape slot (index 2 of codes_a):
+        // escapes reconstruct exactly, so that prediction must NOT land
+        // in the sums.
+        let pred_a = vec![0.5f32, -0.25, 0.7];
+        let pred_b = vec![0.1f32, 0.1, 0.1];
+        let codes_a = vec![2, -3, ESCAPE_CODE];
+        let codes_b = vec![0, 8, -8];
+        let mut agg = BinAggregator::new();
+        let mut reference = FedAvg::new();
+        for (codes, escapes, pred, w) in [
+            (&codes_a, vec![1.25f32], &pred_a, 3.0),
+            (&codes_b, vec![], &pred_b, 2.0),
+        ] {
+            let frame = BinFrame::Bins {
+                codes: codes.clone(),
+                escapes: escapes.clone(),
+                pred: pred.clone(),
+                delta,
+            };
+            agg.add(std::slice::from_ref(&frame), w).unwrap();
+            reference.add(&dense_model(&dequant(codes, &escapes, pred, delta)), w).unwrap();
+        }
+        let (mean, _) = agg.finish();
+        let want = reference.mean();
+        for (a, b) in mean[0].iter().zip(&want[0]) {
+            assert!((a - b).abs() <= 1e-6 * b.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn delta_mismatch_demotes_to_mixed_route() {
+        let codes = vec![10, -10, 5];
+        let f1 = BinFrame::Bins { codes: codes.clone(), escapes: vec![], pred: vec![], delta: 1e-3 };
+        let f2 = BinFrame::Bins { codes: codes.clone(), escapes: vec![], pred: vec![], delta: 2e-3 };
+        let mut agg = BinAggregator::new();
+        agg.add(std::slice::from_ref(&f1), 1.0).unwrap();
+        agg.add(std::slice::from_ref(&f2), 3.0).unwrap();
+        let mut reference = FedAvg::new();
+        reference.add(&dense_model(&dequant(&codes, &[], &[], 1e-3)), 1.0).unwrap();
+        reference.add(&dense_model(&dequant(&codes, &[], &[], 2e-3)), 3.0).unwrap();
+        let (mean, report) = agg.finish();
+        let want = reference.mean();
+        assert_eq!(report.mixed_layers, 1);
+        assert_eq!(report.binsum_layers, 0);
+        // Demotion fold + the incoming frame's dense dequantize; no
+        // final fold (bins are empty after the demotion).
+        assert_eq!(report.dequant_passes, 2);
+        for (a, b) in mean[0].iter().zip(&want[0]) {
+            assert!((a - b).abs() <= 1e-6 * b.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn dense_and_bins_mix_per_layer() {
+        // Layer 0 gets bins from one client and dense from another;
+        // layer 1 is dense from both.
+        let delta = 1e-3;
+        let c0 = vec![
+            BinFrame::Bins { codes: vec![4, -4], escapes: vec![], pred: vec![], delta },
+            BinFrame::Dense(LayerGrad::new(LayerMeta::other("b", 2), vec![1.0, 2.0])),
+        ];
+        let c1 = vec![
+            BinFrame::Dense(LayerGrad::new(LayerMeta::other("a", 2), vec![0.5, 0.5])),
+            BinFrame::Dense(LayerGrad::new(LayerMeta::other("b", 2), vec![-1.0, 0.0])),
+        ];
+        let mut agg = BinAggregator::new();
+        agg.add(&c0, 1.0).unwrap();
+        agg.add(&c1, 1.0).unwrap();
+        let (mean, report) = agg.finish();
+        assert_eq!(report.mixed_layers, 1);
+        assert_eq!(report.exact_layers, 1);
+        let d = (2.0 * delta) as f32;
+        assert!((mean[0][0] - (4.0 * d + 0.5) / 2.0).abs() < 1e-6);
+        assert!((mean[1][0] - 0.0).abs() < 1e-6);
+        assert!((mean[1][1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn non_integral_weights_use_f64_bins_exactly() {
+        let delta = 1e-2;
+        let codes = vec![100, -100, 7];
+        let mut agg = BinAggregator::new();
+        let mut reference = FedAvg::new();
+        for w in [0.5, 1.75, 2.0] {
+            let f = BinFrame::Bins { codes: codes.clone(), escapes: vec![], pred: vec![], delta };
+            agg.add(std::slice::from_ref(&f), w).unwrap();
+            reference.add(&dense_model(&dequant(&codes, &[], &[], delta)), w).unwrap();
+        }
+        let (mean, report) = agg.finish();
+        assert_eq!(report.binsum_layers, 1);
+        let want = reference.mean();
+        for (a, b) in mean[0].iter().zip(&want[0]) {
+            assert!((a - b).abs() <= 1e-6 * b.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn malformed_contributions_are_dropped_whole() {
+        let delta = 1e-3;
+        let good = BinFrame::Bins { codes: vec![1, 2], escapes: vec![], pred: vec![], delta };
+        let mut agg = BinAggregator::new();
+        agg.add(std::slice::from_ref(&good), 1.0).unwrap();
+        // Wrong layer count.
+        assert!(agg.add(&[], 1.0).is_err());
+        // Wrong element count.
+        let short = BinFrame::Bins { codes: vec![1], escapes: vec![], pred: vec![], delta };
+        assert!(agg.add(std::slice::from_ref(&short), 1.0).is_err());
+        // Escape stream inconsistent with the codes.
+        let bad_esc =
+            BinFrame::Bins { codes: vec![ESCAPE_CODE, 2], escapes: vec![], pred: vec![], delta };
+        assert!(agg.add(std::slice::from_ref(&bad_esc), 1.0).is_err());
+        // Bad Δ and bad weight.
+        let bad_delta = BinFrame::Bins { codes: vec![1, 2], escapes: vec![], pred: vec![], delta: 0.0 };
+        assert!(agg.add(std::slice::from_ref(&bad_delta), 1.0).is_err());
+        assert!(agg.add(std::slice::from_ref(&good), f64::NAN).is_err());
+        // The one good contribution is all that survived: with total
+        // weight 1 the mean equals that contribution exactly.
+        assert_eq!(agg.weight(), 1.0);
+        let (mean, _) = agg.finish();
+        assert_eq!(mean.len(), 1);
+        assert!((mean[0][0] - (2.0 * delta) as f32).abs() < 1e-9);
+        assert!((mean[0][1] - (4.0 * delta) as f32).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shard_merge_matches_single_aggregator() {
+        let delta = 1e-3;
+        let mk = |codes: Vec<i32>, escapes: Vec<f32>| BinFrame::Bins {
+            codes,
+            escapes,
+            pred: vec![],
+            delta,
+        };
+        let a1 = vec![mk(vec![5, ESCAPE_CODE, -2], vec![0.9])];
+        let a2 = vec![mk(vec![1, 1, 1], vec![])];
+        let b1 = vec![mk(vec![-4, 0, 8], vec![])];
+        // One aggregator over all three...
+        let mut whole = BinAggregator::new();
+        whole.add(&a1, 2.0).unwrap();
+        whole.add(&a2, 1.0).unwrap();
+        whole.add(&b1, 3.0).unwrap();
+        // ...vs two shards merged.
+        let mut shard_a = BinAggregator::new();
+        shard_a.add(&a1, 2.0).unwrap();
+        shard_a.add(&a2, 1.0).unwrap();
+        let mut shard_b = BinAggregator::new();
+        shard_b.add(&b1, 3.0).unwrap();
+        shard_a.merge(shard_b).unwrap();
+        let (want, wrep) = whole.finish();
+        let (got, grep) = shard_a.finish();
+        assert_eq!(want, got, "shard merge must be exact (integer bins)");
+        assert_eq!(wrep.binsum_layers, grep.binsum_layers);
+    }
+
+    #[test]
+    fn empty_aggregator_finishes_empty() {
+        let (mean, report) = BinAggregator::new().finish();
+        assert!(mean.is_empty());
+        assert_eq!(report.dequant_passes, 0);
+    }
+
+    #[test]
+    fn overflow_guard_demotes_to_f64_bins() {
+        // A weight big enough that a second frame would cross the i64
+        // guard: the aggregator must keep accepting frames and stay
+        // correct (f64 carries the sums).
+        let huge_w = (1u64 << 31) as f64 - 1.0;
+        let codes = vec![3, -3];
+        let f = BinFrame::Bins { codes: codes.clone(), escapes: vec![], pred: vec![], delta: 1e-3 };
+        let mut agg = BinAggregator::new();
+        for _ in 0..4 {
+            agg.add(std::slice::from_ref(&f), huge_w).unwrap();
+        }
+        let (mean, report) = agg.finish();
+        assert_eq!(report.binsum_layers, 1);
+        // Mean of identical contributions is the contribution itself.
+        assert!((mean[0][0] - (2.0 * 1e-3 * 3.0) as f32).abs() < 1e-7);
+    }
+}

@@ -12,6 +12,7 @@
 //! [`GradientCodec`] shape (one client owns exactly one state); the
 //! engine split matters where states fan out — the server.
 
+use super::agg::BinFrame;
 use super::frame::{self, CodecReport, Frame, LayerReport};
 use super::state::CodecState;
 use super::GradientCodec;
@@ -63,6 +64,49 @@ pub trait CodecEngine: Send {
             decoded.push(layer);
         }
         Ok((ModelGrad { layers: decoded }, report))
+    }
+
+    /// Decode one frame *for aggregation*: engines whose quantized codes
+    /// can be summed in the integer domain (see [`crate::compress::agg`])
+    /// return [`BinFrame::Bins`] and stop before dequantization; everyone
+    /// else — and any frame that fails the bins-route validity conditions
+    /// — falls back to the full decode and returns [`BinFrame::Dense`].
+    /// The chosen route is recorded in `LayerReport::agg_route`.
+    fn decode_frame_to_bins(
+        &mut self,
+        frame: &Frame,
+        meta: &LayerMeta,
+        state: &mut CodecState,
+    ) -> crate::Result<(BinFrame, LayerReport)> {
+        let (layer, mut rep) = self.decode_frame(frame, meta, state)?;
+        rep.agg_route = "exact".into();
+        Ok((BinFrame::Dense(layer), rep))
+    }
+
+    /// Whole-payload counterpart of `decode_frame_to_bins`, with the same
+    /// frame-count and ordering checks as `decode_payload`.
+    fn decode_payload_to_bins(
+        &mut self,
+        payload: &[u8],
+        metas: &[LayerMeta],
+        state: &mut CodecState,
+    ) -> crate::Result<(Vec<BinFrame>, CodecReport)> {
+        let frames = frame::payload_to_frames(payload)?;
+        anyhow::ensure!(
+            frames.len() == metas.len(),
+            "payload has {} layers, expected {}",
+            frames.len(),
+            metas.len()
+        );
+        let mut report = CodecReport::new(self.name());
+        let mut decoded = Vec::with_capacity(frames.len());
+        for (i, (f, meta)) in frames.iter().zip(metas).enumerate() {
+            anyhow::ensure!(f.index as usize == i, "frame {} out of order ({})", i, f.index);
+            let (bf, rep) = self.decode_frame_to_bins(f, meta, state)?;
+            report.push(rep);
+            decoded.push(bf);
+        }
+        Ok((decoded, report))
     }
 }
 
@@ -120,6 +164,24 @@ mod tests {
         assert!(!engine.stateful());
         // The untouched state stays cold.
         assert!(state.layers.is_empty());
+    }
+
+    #[test]
+    fn default_bins_path_is_dense_exact() {
+        let g = ModelGrad {
+            layers: vec![LayerGrad::new(LayerMeta::other("a", 3), vec![1.0, -2.0, 3.0])],
+        };
+        let metas: Vec<LayerMeta> = g.layers.iter().map(|l| l.meta.clone()).collect();
+        let payload = RawCodec.compress(&g).unwrap();
+        let mut engine = StatelessEngine::new(Box::new(RawCodec));
+        let mut state = CodecState::default();
+        let (bins, report) = engine.decode_payload_to_bins(&payload, &metas, &mut state).unwrap();
+        assert_eq!(bins.len(), 1);
+        match &bins[0] {
+            BinFrame::Dense(layer) => assert_eq!(layer.data, g.layers[0].data),
+            other => panic!("expected dense fallback, got {:?} elements", other.numel()),
+        }
+        assert_eq!(report.layers[0].agg_route, "exact");
     }
 
     #[test]

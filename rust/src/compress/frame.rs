@@ -138,6 +138,10 @@ pub struct LayerReport {
     pub escape_count: usize,
     /// Sign-predictor statistics (FedGEC only; zeros elsewhere).
     pub sign_stats: SignStats,
+    /// Server aggregation route this layer decoded onto (`"binsum"` /
+    /// `"exact"`; empty outside the `decode_*_to_bins` path). See
+    /// [`crate::compress::agg`].
+    pub agg_route: String,
 }
 
 impl LayerReport {

@@ -14,6 +14,7 @@
 //! constructed from a [`spec::CodecSpec`] descriptor (see that module for
 //! the grammar and registry).
 
+pub mod agg;
 pub mod autotune;
 pub mod blob;
 pub mod downlink;
@@ -32,6 +33,7 @@ pub mod spec;
 pub mod state;
 pub mod store;
 
+pub use agg::{AggReport, AggRoute, BinAggregator, BinFrame, LayerBinSum};
 pub use downlink::{DownlinkCodec, DownlinkMirror};
 pub use engine::CodecEngine;
 pub use entropy::EntropyCoder;

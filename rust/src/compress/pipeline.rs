@@ -104,6 +104,21 @@ fn use_tau_ctrl(cfg: &FedgecConfig) -> bool {
     cfg.autotune && cfg.predictor.sign.effective(cfg.full_batch) == SignSel::Kernel
 }
 
+/// Whether this configuration never reads or writes cross-round
+/// predictor state: `pred=zero` predicts all-zero without history, an
+/// effective `sign=none` reconstructs zero signs without history (so
+/// ĝ = S ⊙ â ≡ 0 on every path), and `autotune` is off (its β schedule
+/// is history-derived). Under this mode both sides skip the state
+/// absorb entirely — mirrors stay cold and bit-identical by
+/// construction — and the server can aggregate frames in the integer
+/// bin domain (see [`crate::compress::agg`]): `recon = 2Δ·code` plus
+/// exact escapes, with no per-client reconstruction pass.
+pub fn state_free_mode(cfg: &FedgecConfig) -> bool {
+    cfg.predictor.mag == MagnitudeSel::Zero
+        && cfg.predictor.sign.effective(cfg.full_batch) == SignSel::None
+        && !cfg.autotune
+}
+
 /// Reusable per-layer-slot scratch: sign/prediction buffers, quantizer
 /// outputs and the `pred=auto` race double-buffers all survive across
 /// rounds, so the per-round hot path stops allocating after warm-up
@@ -459,10 +474,14 @@ fn compress_layer_impl(
     // selector tag rides along into the fingerprint. Explicit
     // predictors absorb through their trait impl; the implicit path is
     // the hand-fused EMA specialization of the same shared absorb.
-    st.pred = cfg.predictor.mag.state_tag();
-    match wire_pred {
-        None => st.absorb(&out.recon),
-        Some(tag) => absorb_with_tag(tag, beta, st, &out.recon),
+    // State-free configurations never read the mirror back, so both
+    // sides skip the absorb and stay cold (fingerprint-identical).
+    if !state_free_mode(cfg) {
+        st.pred = cfg.predictor.mag.state_tag();
+        match wire_pred {
+            None => st.absorb(&out.recon),
+            Some(tag) => absorb_with_tag(tag, beta, st, &out.recon),
+        }
     }
     let closed = cfg.backend.compress(&w.into_bytes())?;
     Ok((closed, report))
@@ -593,12 +612,87 @@ fn decompress_layer_impl(
             report.pred_tag = ptag.name().to_string();
         }
     }
-    st.pred = cfg.predictor.mag.state_tag();
-    match wire_pred {
-        None => st.absorb(&recon),
-        Some((ptag, wire_beta)) => absorb_with_tag(ptag, wire_beta, st, &recon),
+    // Mirror update — skipped in state-free mode (see
+    // `compress_layer_impl`: neither side will ever read it back).
+    if !state_free_mode(cfg) {
+        st.pred = cfg.predictor.mag.state_tag();
+        match wire_pred {
+            None => st.absorb(&recon),
+            Some((ptag, wire_beta)) => absorb_with_tag(ptag, wire_beta, st, &recon),
+        }
     }
     Ok((recon, report))
+}
+
+/// Parse one post-lossless layer section *as integer bins*, stopping
+/// before dequantization — the server-side fast path for
+/// [`crate::compress::agg`]. Returns `Ok(None)` when the section fails
+/// the frame-level validity conditions (lossless small layer, v1/v2
+/// implicit-EMA section, a predictor tag other than `zero`, or sign
+/// side-info present), in which case the caller falls back to the dense
+/// decode. With `pred=zero` and `sign=none` the prediction is
+/// identically zero, so `recon = 2Δ·code` (escapes exact) and the
+/// returned `(codes, escapes, Δ)` triple fully determines the layer.
+fn decode_layer_bins_impl(
+    meta: &LayerMeta,
+    section: &[u8],
+) -> crate::Result<Option<(Vec<i32>, Vec<f32>, f64, LayerReport)>> {
+    let mut r = BlobReader::new(section);
+    let tag = r.get_u8()?;
+    if tag != SECTION_LOSSY_V3 {
+        // Lossless small layers and implicit-EMA (v1/v2) sections carry
+        // no predictor tag to validate against — dense fallback.
+        return Ok(None);
+    }
+    let coder = read_section_coder(&mut r, tag)
+        .map_err(|e| anyhow::anyhow!("layer {}: {e}", meta.name))?;
+    let (ptag, _beta) =
+        read_pred_suffix(&mut r).map_err(|e| anyhow::anyhow!("layer {}: {e}", meta.name))?;
+    if ptag != PredTag::Zero {
+        return Ok(None);
+    }
+    let n = r.get_u32()? as usize;
+    if n != meta.numel {
+        anyhow::bail!("layer {}: payload numel {} != meta {}", meta.name, n, meta.numel);
+    }
+    let _mu_curr = r.get_f32()?;
+    let _sigma_curr = r.get_f32()?;
+    let delta = r.get_f64()?;
+    anyhow::ensure!(
+        delta.is_finite() && delta > 0.0,
+        "layer {}: bad delta {delta}",
+        meta.name
+    );
+    let sign_bytes = r.get_bytes()?;
+    if !matches!(SignMeta::decode_bounded(sign_bytes, n)?, SignMeta::None) {
+        // Sign side-info implies a non-zero prediction — dense fallback.
+        return Ok(None);
+    }
+    let entropy = r.get_bytes()?;
+    let (codes, _) = coder.decode_bounded(entropy, n)?;
+    if codes.len() != n {
+        anyhow::bail!("layer {}: {} codes for {} elements", meta.name, codes.len(), n);
+    }
+    let escapes = r.get_f32_vec()?;
+    anyhow::ensure!(
+        quant::count_escapes(&codes) == escapes.len(),
+        "layer {}: {} escape markers for {} escape values",
+        meta.name,
+        quant::count_escapes(&codes),
+        escapes.len()
+    );
+    let report = LayerReport {
+        name: meta.name.clone(),
+        raw_bytes: n * 4,
+        entropy_bytes: entropy.len(),
+        entropy_coder: coder.name().to_string(),
+        pred_tag: PredTag::Zero.name().to_string(),
+        lossy: true,
+        escape_count: escapes.len(),
+        side_info_bytes: sign_bytes.len() + escapes.len() * 4,
+        ..Default::default()
+    };
+    Ok(Some((codes, escapes, delta, report)))
 }
 
 /// The stateless decode engine of the FedGEC codec: configuration (plus
@@ -631,7 +725,10 @@ impl crate::compress::engine::CodecEngine for FedgecEngine {
     }
 
     fn stateful(&self) -> bool {
-        true
+        // State-free configurations (pred=zero + sign=none, no autotune)
+        // decode without ever touching the mirror, so the server skips
+        // the store and the epoch handshake like any stateless family.
+        !state_free_mode(&self.cfg)
     }
 
     fn decode_frame(
@@ -653,6 +750,38 @@ impl crate::compress::engine::CodecEngine for FedgecEngine {
         )?;
         report.compressed_bytes = frame.wire_size();
         Ok((LayerGrad::new(meta.clone(), data), report))
+    }
+
+    /// Bins fast path: eligible only in state-free mode under an
+    /// absolute error bound (every client then shares one Δ per layer,
+    /// the validity condition for integer bin summation — rel-eb Δ is
+    /// data-dependent per client, so it deterministically routes dense).
+    /// Frame-level conditions are re-checked against the wire bytes;
+    /// any miss falls back to the full dense decode.
+    fn decode_frame_to_bins(
+        &mut self,
+        frame: &Frame,
+        meta: &LayerMeta,
+        state: &mut CodecState,
+    ) -> crate::Result<(super::agg::BinFrame, LayerReport)> {
+        use crate::compress::engine::CodecEngine as _;
+        let eligible =
+            state_free_mode(&self.cfg) && matches!(self.cfg.error_bound, ErrorBound::Abs(_));
+        if eligible {
+            let section = lossless::decompress(&frame.payload)?;
+            if let Some((codes, escapes, delta, mut report)) =
+                decode_layer_bins_impl(meta, &section)?
+            {
+                report.compressed_bytes = frame.wire_size();
+                report.agg_route = "binsum".into();
+                let bf =
+                    super::agg::BinFrame::Bins { codes, escapes, pred: Vec::new(), delta };
+                return Ok((bf, report));
+            }
+        }
+        let (layer, mut report) = self.decode_frame(frame, meta, state)?;
+        report.agg_route = "exact".into();
+        Ok((super::agg::BinFrame::Dense(layer), report))
     }
 }
 
@@ -1237,6 +1366,120 @@ mod tests {
             ..cfg_with(MagnitudeSel::Auto, SignSel::Auto)
         };
         assert_bound_and_sync(cfg, 4, 55);
+    }
+
+    #[test]
+    fn state_free_mode_keeps_mirrors_cold() {
+        // pred=zero + sign=none + abs-eb: decode never touches state, so
+        // client and server fingerprints stay at the cold default across
+        // rounds and the engine declares itself stateless.
+        use crate::compress::engine::CodecEngine;
+        let cfg = FedgecConfig {
+            error_bound: ErrorBound::Abs(5e-3),
+            ..cfg_with(MagnitudeSel::Zero, SignSel::None)
+        };
+        assert!(state_free_mode(&cfg));
+        assert!(!FedgecEngine::new(cfg.clone()).stateful());
+        let cold = CodecState::default().fingerprint();
+        let mut rng = Rng::new(61);
+        let mut client = FedgecCodec::new(cfg.clone());
+        let mut server = FedgecCodec::new(cfg.clone());
+        for round in 0..4 {
+            let grads = make_grads(&mut rng, 1.0);
+            let payload = client.compress(&grads).unwrap();
+            let recon = server.decompress(&payload, &metas(&grads)).unwrap();
+            for li in 0..2 {
+                for (r, g) in recon.layers[li].data.iter().zip(&grads.layers[li].data) {
+                    assert!((r - g).abs() <= 5e-3 * 1.0001, "round {round} layer {li}");
+                }
+            }
+            assert_eq!(client.state.fingerprint(), cold, "round {round}: client warmed");
+            assert_eq!(server.state.fingerprint(), cold, "round {round}: server warmed");
+        }
+        // Autotune re-enables state (history-derived β schedule).
+        let tuned = FedgecConfig { autotune: true, ..client.cfg.clone() };
+        assert!(!state_free_mode(&tuned));
+        assert!(FedgecEngine::new(tuned).stateful());
+    }
+
+    #[test]
+    fn bins_decode_matches_dense_decode() {
+        use crate::compress::agg::BinFrame;
+        use crate::compress::engine::CodecEngine;
+        let cfg = FedgecConfig {
+            error_bound: ErrorBound::Abs(4e-3),
+            ..cfg_with(MagnitudeSel::Zero, SignSel::None)
+        };
+        let mut rng = Rng::new(62);
+        let mut client = FedgecCodec::new(cfg.clone());
+        let mut engine = FedgecEngine::new(cfg.clone());
+        let mut g = make_grads(&mut rng, 1.0);
+        // Force some escapes into the dense layer.
+        g.layers[1].data[7] = f32::NAN;
+        g.layers[1].data[100] = 1e30;
+        let frames = client.encode_model(&g).unwrap();
+        let ms = metas(&g);
+        for (frame, meta) in frames.iter().zip(&ms) {
+            let mut st = CodecState::default();
+            let (bf, rep) = engine.decode_frame_to_bins(frame, meta, &mut st).unwrap();
+            let mut st2 = CodecState::default();
+            let (dense, _) = engine.decode_frame(frame, meta, &mut st2).unwrap();
+            match bf {
+                BinFrame::Bins { codes, escapes, pred, delta } => {
+                    assert_eq!(rep.agg_route, "binsum");
+                    assert!(pred.is_empty());
+                    // Reconstructing the bins through the quantizer must
+                    // reproduce the dense decode bit for bit.
+                    let q = Quantized { codes, escapes };
+                    let zeros = vec![0.0f32; meta.numel];
+                    let mut recon = Vec::new();
+                    quant::dequantize_checked(&q, &zeros, delta, &mut recon).unwrap();
+                    for (a, b) in recon.iter().zip(&dense.data) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "layer {}", meta.name);
+                    }
+                }
+                BinFrame::Dense(layer) => {
+                    // Small layers are stored lossless and route dense.
+                    assert_eq!(rep.agg_route, "exact");
+                    assert!(meta.numel <= cfg.t_lossy, "layer {}", meta.name);
+                    assert_eq!(layer.data, dense.data);
+                }
+            }
+        }
+        // Escape accounting flowed through the bins report.
+        let mut st = CodecState::default();
+        let (_, rep) = engine.decode_frame_to_bins(&frames[1], &ms[1], &mut st).unwrap();
+        assert!(rep.escape_count >= 2);
+    }
+
+    #[test]
+    fn rel_eb_and_stateful_predictors_route_dense() {
+        use crate::compress::agg::BinFrame;
+        use crate::compress::engine::CodecEngine;
+        // rel-eb: Δ is data-dependent per client, so even zero/none
+        // frames must route dense for determinism.
+        let rel = cfg_with(MagnitudeSel::Zero, SignSel::None);
+        assert!(state_free_mode(&rel));
+        let mut rng = Rng::new(63);
+        let g = make_grads(&mut rng, 1.0);
+        let frames = FedgecCodec::new(rel.clone()).encode_model(&g).unwrap();
+        let mut engine = FedgecEngine::new(rel);
+        let mut st = CodecState::default();
+        let (bf, rep) = engine.decode_frame_to_bins(&frames[0], &metas(&g)[0], &mut st).unwrap();
+        assert!(matches!(bf, BinFrame::Dense(_)));
+        assert_eq!(rep.agg_route, "exact");
+        // Stateful predictor (default EMA), abs-eb: engine is stateful,
+        // frames are implicit-EMA — dense route, mirror must advance.
+        let ema = FedgecConfig { error_bound: ErrorBound::Abs(5e-3), ..Default::default() };
+        assert!(!state_free_mode(&ema));
+        let frames = FedgecCodec::new(ema.clone()).encode_model(&g).unwrap();
+        let mut engine = FedgecEngine::new(ema);
+        assert!(engine.stateful());
+        let mut st = CodecState::default();
+        let (bf, rep) = engine.decode_frame_to_bins(&frames[0], &metas(&g)[0], &mut st).unwrap();
+        assert!(matches!(bf, BinFrame::Dense(_)));
+        assert_eq!(rep.agg_route, "exact");
+        assert_ne!(st.fingerprint(), CodecState::default().fingerprint());
     }
 
     #[test]

@@ -146,6 +146,14 @@ pub fn quantize(
     }
 }
 
+/// Number of escaped elements in a code stream — the consistency check
+/// shared by [`dequantize_checked`] and the compressed-domain
+/// aggregator ([`crate::compress::agg`]), which must validate an
+/// untrusted escape stream *without* reconstructing the layer.
+pub fn count_escapes(codes: &[i32]) -> usize {
+    codes.iter().filter(|&&c| c == ESCAPE_CODE).count()
+}
+
 /// Reconstruct from codes + escapes given the same predictions and Δ.
 /// Trusted-caller form (panics on an inconsistent escape stream);
 /// untrusted payloads go through [`dequantize_checked`].
@@ -258,6 +266,17 @@ mod tests {
         quantize(&data, &pred, 1e-6, &mut q, &mut recon);
         assert_eq!(q.codes[0], ESCAPE_CODE);
         assert_eq!(recon[0], 1e30);
+    }
+
+    #[test]
+    fn count_escapes_matches_stream() {
+        assert_eq!(count_escapes(&[]), 0);
+        assert_eq!(count_escapes(&[1, ESCAPE_CODE, -2, ESCAPE_CODE, 0]), 2);
+        let data = vec![f32::NAN, 1.0, f32::INFINITY];
+        let mut q = Quantized::default();
+        let mut recon = Vec::new();
+        quantize(&data, &[0.0; 3], 0.1, &mut q, &mut recon);
+        assert_eq!(count_escapes(&q.codes), q.escapes.len());
     }
 
     #[test]

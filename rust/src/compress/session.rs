@@ -157,6 +157,33 @@ impl<'e> EngineDecodeSession<'e> {
         Ok(layer)
     }
 
+    /// Decode the next frame for compressed-domain aggregation (see
+    /// [`crate::compress::agg`]): eligible frames stop before
+    /// dequantization, everything else arrives as a dense fallback.
+    /// Same ordering/report discipline as [`Self::decode_frame`].
+    pub fn decode_frame_to_bins(
+        &mut self,
+        frame: &Frame,
+        meta: &LayerMeta,
+    ) -> crate::Result<crate::compress::agg::BinFrame> {
+        anyhow::ensure!(
+            self.next < self.n_layers,
+            "decode session: frame {} past declared {}",
+            self.next,
+            self.n_layers
+        );
+        anyhow::ensure!(
+            frame.index as usize == self.next,
+            "decode session: frame index {} != expected {}",
+            frame.index,
+            self.next
+        );
+        let (bf, report) = self.engine.decode_frame_to_bins(frame, meta, self.state)?;
+        self.report.push(report);
+        self.next += 1;
+        Ok(bf)
+    }
+
     pub fn decoded(&self) -> usize {
         self.next
     }

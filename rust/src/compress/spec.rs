@@ -896,6 +896,11 @@ mod tests {
             let expect_stateful = matches!(spec, CodecSpec::Fedgec { .. });
             assert_eq!(engine.stateful(), expect_stateful, "{spec}");
         }
+        // The state-free fedgec mode (pred=zero + sign=none, no
+        // autotune) builds a stateless engine — the bins-aggregation
+        // eligible configuration (see compress::agg).
+        let spec = CodecSpec::parse("fedgec:eb=abs1e-3,pred=zero,sign=none").unwrap();
+        assert!(!spec.build_engine().stateful(), "{spec}");
     }
 
     #[test]

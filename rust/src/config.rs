@@ -84,6 +84,12 @@ pub struct RunConfig {
     /// feeds directly into every client's model, so the default is an
     /// order tighter than the uplink bound.
     pub down_eb: f64,
+    /// Server aggregation mode: `exact` (decode every contribution to
+    /// dense f32, then FedAvg) or `binsum` (compressed-domain
+    /// aggregation — eligible layers accumulate integer quantizer bins
+    /// and dequantize once per round; ineligible layers fall back to the
+    /// exact path per layer). See [`crate::compress::agg`].
+    pub agg: String,
 }
 
 impl Default for RunConfig {
@@ -117,6 +123,7 @@ impl Default for RunConfig {
             store: "mem".into(),
             down: "raw".into(),
             down_eb: 1e-3,
+            agg: "exact".into(),
         }
     }
 }
@@ -211,6 +218,12 @@ impl RunConfig {
         self.down = v.str_or("down", &self.down).to_string();
         self.down_eb = v.f64_or("down_eb", self.down_eb);
         anyhow::ensure!(self.down_eb > 0.0, "down_eb must be > 0");
+        self.agg = v.str_or("agg", &self.agg).to_string();
+        anyhow::ensure!(
+            crate::fl::aggregate::AggMode::from_name(&self.agg).is_some(),
+            "unknown agg mode '{}' (exact|binsum)",
+            self.agg
+        );
         // Fail fast on unparseable codec specs (both directions).
         self.codec_spec().map_err(|e| anyhow::anyhow!("codec '{}': {e}", self.codec))?;
         self.down_spec().map_err(|e| anyhow::anyhow!("down '{}': {e}", self.down))?;
@@ -221,7 +234,7 @@ impl RunConfig {
     pub fn apply_override(&mut self, key: &str, value: &str) -> crate::Result<()> {
         let quoted = matches!(
             key,
-            "model" | "dataset" | "codec" | "engine" | "store" | "down" | "pred" | "sign"
+            "model" | "dataset" | "codec" | "engine" | "store" | "down" | "pred" | "sign" | "agg"
         );
         let json_val = if quoted { format!("\"{value}\"") } else { value.to_string() };
         let doc = format!("{{\"{key}\": {json_val}}}");
@@ -264,6 +277,13 @@ impl RunConfig {
             CodecSpec::Raw => None,
             other => Some(other),
         })
+    }
+
+    /// The aggregation mode as the typed enum (validated at load, so
+    /// this never fails after `from_json` / `apply_override`).
+    pub fn agg_mode(&self) -> crate::fl::aggregate::AggMode {
+        crate::fl::aggregate::AggMode::from_name(&self.agg)
+            .unwrap_or(crate::fl::aggregate::AggMode::Exact)
     }
 
     /// Build the server-side state store this config describes.
@@ -453,6 +473,24 @@ mod tests {
             assert!((c.link.bits_per_sec - 10e6).abs() < 1.0);
             assert!((c.link.down_bits_per_sec - 80e6).abs() < 1.0);
         }
+    }
+
+    #[test]
+    fn agg_key_parses_and_validates() {
+        use crate::fl::aggregate::AggMode;
+        // Default: exact dense aggregation.
+        let d = RunConfig::default();
+        assert_eq!(d.agg, "exact");
+        assert_eq!(d.agg_mode(), AggMode::Exact);
+        // JSON and CLI forms both select binsum.
+        let c = RunConfig::from_json(r#"{"agg": "binsum"}"#).unwrap();
+        assert_eq!(c.agg_mode(), AggMode::Binsum);
+        let mut c = RunConfig::default();
+        c.apply_override("agg", "binsum").unwrap();
+        assert_eq!(c.agg_mode(), AggMode::Binsum);
+        // Garbage is rejected at config load.
+        assert!(RunConfig::from_json(r#"{"agg": "bogus"}"#).is_err());
+        assert!(c.apply_override("agg", "nope").is_err());
     }
 
     #[test]

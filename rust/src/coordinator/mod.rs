@@ -34,7 +34,6 @@ use crate::compress::state::StateEpoch;
 use crate::compress::store::ClientId;
 use crate::compress::GradientCodec;
 use crate::config::{EngineKind, RunConfig};
-use crate::fl::aggregate::FedAvg;
 use crate::fl::client::{Client, LocalTrainer};
 use crate::fl::hetero::sample_participants;
 use crate::fl::round::{RoundStats, RunSummary};
@@ -245,7 +244,8 @@ fn run_local_hlo(cfg: &RunConfig) -> crate::Result<RunSummary> {
         cfg.server_lr,
         server_engine,
         cfg.build_state_store()?,
-    );
+    )
+    .with_agg_mode(cfg.agg_mode());
     for ci in 0..cfg.n_clients {
         server.admit(ci as u32);
     }
@@ -260,7 +260,7 @@ fn run_local_hlo(cfg: &RunConfig) -> crate::Result<RunSummary> {
             participants: participants.len(),
             ..Default::default()
         };
-        let mut agg = FedAvg::new();
+        let mut agg = server.new_round_agg();
         let global = sim_downlink_round(
             &mut downlink,
             &server.params,
@@ -303,14 +303,20 @@ fn run_local_hlo(cfg: &RunConfig) -> crate::Result<RunSummary> {
             stats.payload_bytes += payload.len();
             let mut link = VirtualLink::new(cfg.link);
             stats.transmit_time += link.send(payload.len());
-            let dt =
+            let times =
                 server.absorb_payload(ci as u32, &payload, client.n_samples as f64, &mut agg)?;
-            stats.decomp_time += dt;
+            stats.decomp_time += times.decode;
+            stats.server_decode_time += times.decode;
+            stats.agg_time += times.agg;
             client.epoch.advance(client.codec.state_fingerprint());
         }
         stats.mean_loss /= participants.len().max(1) as f64;
         server.record_store_occupancy(&mut stats);
-        server.finish_round(agg);
+        let rep = server.finish_round(agg);
+        stats.agg_time += rep.finish_time;
+        stats.binsum_layers = rep.binsum_layers;
+        stats.exact_layers = rep.exact_layers + rep.mixed_layers;
+        stats.dequant_passes = rep.dequant_passes;
         let do_eval = (cfg.eval_every > 0 && (round + 1) % cfg.eval_every == 0)
             || round + 1 == cfg.rounds;
         if do_eval {
@@ -348,7 +354,8 @@ fn run_local_native(cfg: &RunConfig) -> crate::Result<RunSummary> {
         cfg.server_lr,
         build_engine(cfg)?,
         cfg.build_state_store()?,
-    );
+    )
+    .with_agg_mode(cfg.agg_mode());
     for ci in 0..cfg.n_clients {
         server.admit(ci as u32);
     }
@@ -366,7 +373,7 @@ fn run_local_native(cfg: &RunConfig) -> crate::Result<RunSummary> {
             participants: participants.len(),
             ..Default::default()
         };
-        let mut agg = FedAvg::new();
+        let mut agg = server.new_round_agg();
         let global = sim_downlink_round(
             &mut downlink,
             &server.params,
@@ -392,18 +399,24 @@ fn run_local_native(cfg: &RunConfig) -> crate::Result<RunSummary> {
             stats.payload_bytes += payload.len();
             let mut link = VirtualLink::new(cfg.link);
             stats.transmit_time += link.send(payload.len());
-            let dt = server.absorb_payload(
+            let times = server.absorb_payload(
                 ci as u32,
                 &payload,
                 trainers[ci].n_samples() as f64,
                 &mut agg,
             )?;
-            stats.decomp_time += dt;
+            stats.decomp_time += times.decode;
+            stats.server_decode_time += times.decode;
+            stats.agg_time += times.agg;
             epochs[ci].advance(client_codecs[ci].state_fingerprint());
         }
         stats.mean_loss /= participants.len().max(1) as f64;
         server.record_store_occupancy(&mut stats);
-        server.finish_round(agg);
+        let rep = server.finish_round(agg);
+        stats.agg_time += rep.finish_time;
+        stats.binsum_layers = rep.binsum_layers;
+        stats.exact_layers = rep.exact_layers + rep.mixed_layers;
+        stats.dequant_passes = rep.dequant_passes;
         let do_eval = (cfg.eval_every > 0 && (round + 1) % cfg.eval_every == 0)
             || round + 1 == cfg.rounds;
         if do_eval {
@@ -463,7 +476,8 @@ pub fn run_threaded(cfg: &RunConfig) -> crate::Result<RunSummary> {
         cfg.server_lr,
         build_engine(cfg)?,
         cfg.build_state_store()?,
-    );
+    )
+    .with_agg_mode(cfg.agg_mode());
     if let Some(spec) = &down_spec {
         server = server.with_downlink(DownlinkCodec::new(spec, metas));
     }
@@ -530,5 +544,15 @@ pub fn print_summary(cfg: &RunConfig, summary: &RunSummary) {
         summary.mean_down_ratio(),
         crate::metrics::fmt_duration(summary.total_comm_time()),
         summary.final_accuracy.map(|a| format!("{a:.3}")).unwrap_or_else(|| "-".into()),
+    );
+    let binsum: usize = summary.rounds.iter().map(|r| r.binsum_layers).sum();
+    let exact: usize = summary.rounds.iter().map(|r| r.exact_layers).sum();
+    println!(
+        "agg={} | server decode {} | agg time {} | layers binsum/exact {}/{}",
+        cfg.agg,
+        crate::metrics::fmt_duration(summary.total_server_decode_time()),
+        crate::metrics::fmt_duration(summary.total_agg_time()),
+        binsum,
+        exact,
     );
 }

@@ -1,12 +1,21 @@
 //! FedAvg aggregation (McMahan et al. 2017): weighted averaging of client
 //! gradients by sample count, then a global SGD step.
+//!
+//! Two interchangeable accumulators sit behind [`RoundAgg`]: the classic
+//! dense [`FedAvg`] (`agg=exact`) and the compressed-domain
+//! [`BinAggregator`] (`agg=binsum`, see [`crate::compress::agg`]). Both
+//! accumulate in f64 — f32 running sums lose ulps per contribution and
+//! visibly drift at 10k-client scale (see the precision test below) —
+//! and both *drop* malformed contributions with an `Err` instead of
+//! panicking, so a corrupt or misbehaving client cannot kill the server.
 
+use crate::compress::agg::{AggReport, BinAggregator};
 use crate::tensor::ModelGrad;
 
 /// Weighted-average accumulator over reconstructed client gradients.
 #[derive(Default)]
 pub struct FedAvg {
-    sum: Vec<Vec<f32>>,
+    sum: Vec<Vec<f64>>,
     total_weight: f64,
 }
 
@@ -15,20 +24,37 @@ impl FedAvg {
         Self::default()
     }
 
-    /// Add one client's gradient with the given weight (its sample count).
-    pub fn add(&mut self, grad: &ModelGrad, weight: f64) {
-        if self.sum.is_empty() {
-            self.sum = grad.layers.iter().map(|l| vec![0.0f32; l.data.len()]).collect();
+    /// Add one client's gradient with the given weight (its sample
+    /// count). A shape mismatch against the accumulated model is an
+    /// `Err` with the sums untouched — the contribution is dropped
+    /// whole, like `absorb_payload` drops failed decodes.
+    pub fn add(&mut self, grad: &ModelGrad, weight: f64) -> crate::Result<()> {
+        anyhow::ensure!(weight.is_finite() && weight >= 0.0, "fedavg: bad weight {weight}");
+        if !self.sum.is_empty() {
+            anyhow::ensure!(
+                self.sum.len() == grad.layers.len(),
+                "fedavg: {} layers, expected {}",
+                grad.layers.len(),
+                self.sum.len()
+            );
+            for (i, (acc, layer)) in self.sum.iter().zip(&grad.layers).enumerate() {
+                anyhow::ensure!(
+                    acc.len() == layer.data.len(),
+                    "fedavg: layer {i} has {} elements, expected {}",
+                    layer.data.len(),
+                    acc.len()
+                );
+            }
+        } else {
+            self.sum = grad.layers.iter().map(|l| vec![0.0f64; l.data.len()]).collect();
         }
-        assert_eq!(self.sum.len(), grad.layers.len(), "layer count changed");
         for (acc, layer) in self.sum.iter_mut().zip(&grad.layers) {
-            assert_eq!(acc.len(), layer.data.len());
-            let w = weight as f32;
             for (a, &g) in acc.iter_mut().zip(&layer.data) {
-                *a += w * g;
+                *a += weight * g as f64;
             }
         }
         self.total_weight += weight;
+        Ok(())
     }
 
     /// Number of contributions so far (weight mass).
@@ -37,14 +63,80 @@ impl FedAvg {
     }
 
     /// Finish: produce the weighted mean gradient per layer.
-    pub fn mean(mut self) -> Vec<Vec<f32>> {
-        let inv = if self.total_weight > 0.0 { 1.0 / self.total_weight as f32 } else { 0.0 };
-        for t in &mut self.sum {
-            for v in t.iter_mut() {
-                *v *= inv;
-            }
-        }
+    pub fn mean(self) -> Vec<Vec<f32>> {
+        let inv = if self.total_weight > 0.0 { 1.0 / self.total_weight } else { 0.0 };
         self.sum
+            .into_iter()
+            .map(|t| t.into_iter().map(|v| (v * inv) as f32).collect())
+            .collect()
+    }
+}
+
+/// Which aggregation route a run uses (`RunConfig.agg`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AggMode {
+    /// Decode every payload to f32 and run dense FedAvg.
+    #[default]
+    Exact,
+    /// Aggregate fedgec frames in the integer-bin domain, dequantizing
+    /// once per layer per round; ineligible layers fall back per layer.
+    Binsum,
+}
+
+impl AggMode {
+    pub const ALL: [AggMode; 2] = [AggMode::Exact, AggMode::Binsum];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AggMode::Exact => "exact",
+            AggMode::Binsum => "binsum",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<AggMode> {
+        match s {
+            "exact" => Some(AggMode::Exact),
+            "binsum" => Some(AggMode::Binsum),
+            _ => None,
+        }
+    }
+}
+
+/// One round's aggregator, either route. The server constructs it
+/// (`Server::new_round_agg`), `absorb_payload` feeds it, and
+/// `finish_round` consumes it.
+pub enum RoundAgg {
+    Exact(FedAvg),
+    Bin(BinAggregator),
+}
+
+impl RoundAgg {
+    pub fn for_mode(mode: AggMode) -> RoundAgg {
+        match mode {
+            AggMode::Exact => RoundAgg::Exact(FedAvg::new()),
+            AggMode::Binsum => RoundAgg::Bin(BinAggregator::new()),
+        }
+    }
+
+    /// Weight mass absorbed so far.
+    pub fn weight(&self) -> f64 {
+        match self {
+            RoundAgg::Exact(fa) => fa.weight(),
+            RoundAgg::Bin(ba) => ba.weight(),
+        }
+    }
+
+    /// Finish the round: weighted mean per layer plus the route report
+    /// (a wholly-exact round reports every layer on the exact route).
+    pub fn finish(self) -> (Vec<Vec<f32>>, AggReport) {
+        match self {
+            RoundAgg::Exact(fa) => {
+                let mean = fa.mean();
+                let report = AggReport::all_exact(mean.len());
+                (mean, report)
+            }
+            RoundAgg::Bin(ba) => ba.finish(),
+        }
     }
 }
 
@@ -73,8 +165,8 @@ mod tests {
     #[test]
     fn weighted_mean() {
         let mut agg = FedAvg::new();
-        agg.add(&grad(&[1.0, 0.0]), 1.0);
-        agg.add(&grad(&[4.0, 3.0]), 3.0);
+        agg.add(&grad(&[1.0, 0.0]), 1.0).unwrap();
+        agg.add(&grad(&[4.0, 3.0]), 3.0).unwrap();
         let m = agg.mean();
         assert_eq!(m[0], vec![3.25, 2.25]);
     }
@@ -90,5 +182,75 @@ mod tests {
     fn empty_aggregator_mean_is_empty() {
         let agg = FedAvg::new();
         assert!(agg.mean().is_empty());
+    }
+
+    #[test]
+    fn mismatched_contribution_is_err_and_dropped() {
+        let mut agg = FedAvg::new();
+        agg.add(&grad(&[1.0, 1.0]), 1.0).unwrap();
+        // Layer-count mismatch.
+        let empty = ModelGrad::default();
+        assert!(agg.add(&empty, 1.0).is_err());
+        // Element-count mismatch.
+        assert!(agg.add(&grad(&[1.0, 1.0, 1.0]), 1.0).is_err());
+        // Garbage weight.
+        assert!(agg.add(&grad(&[1.0, 1.0]), f64::NAN).is_err());
+        // Sums untouched by the rejected contributions.
+        assert_eq!(agg.weight(), 1.0);
+        assert_eq!(agg.mean()[0], vec![1.0, 1.0]);
+    }
+
+    /// The satellite's 10k-contribution precision gate: f64 accumulators
+    /// must track an explicit f64 reference exactly, where the old f32
+    /// running sums drift by many ulps (adding 1e-4-scale contributions
+    /// onto a sum of ~1e4 loses low bits every add).
+    #[test]
+    fn ten_thousand_contributions_match_f64_reference() {
+        let n = 64;
+        let mut agg = FedAvg::new();
+        let mut ref_sum = vec![0.0f64; n];
+        let mut ref_w = 0.0f64;
+        for k in 0..10_000u32 {
+            // Deterministic, sign-varied, scale-varied contributions.
+            let vals: Vec<f32> = (0..n)
+                .map(|i| {
+                    let s = if (k + i as u32) % 2 == 0 { 1.0 } else { -1.0 };
+                    s * (1.0 + (k % 97) as f32 * 1e-4) * (0.1 + i as f32 * 1e-3)
+                })
+                .collect();
+            let w = 1.0 + (k % 7) as f64;
+            for (r, &v) in ref_sum.iter_mut().zip(&vals) {
+                *r += w * v as f64;
+            }
+            ref_w += w;
+            agg.add(&grad(&vals), w).unwrap();
+        }
+        let mean = agg.mean();
+        for (got, r) in mean[0].iter().zip(&ref_sum) {
+            let want = (r / ref_w) as f32;
+            assert_eq!(*got, want, "f64 accumulation must match the reference bit-for-bit");
+        }
+    }
+
+    #[test]
+    fn round_agg_dispatches_both_modes() {
+        assert_eq!(AggMode::from_name("exact"), Some(AggMode::Exact));
+        assert_eq!(AggMode::from_name("binsum"), Some(AggMode::Binsum));
+        assert_eq!(AggMode::from_name("bogus"), None);
+        for mode in AggMode::ALL {
+            assert_eq!(AggMode::from_name(mode.name()), Some(mode));
+        }
+        let mut agg = RoundAgg::for_mode(AggMode::Exact);
+        if let RoundAgg::Exact(fa) = &mut agg {
+            fa.add(&grad(&[2.0]), 2.0).unwrap();
+        }
+        assert_eq!(agg.weight(), 2.0);
+        let (mean, report) = agg.finish();
+        assert_eq!(mean[0], vec![2.0]);
+        assert_eq!(report.exact_layers, 1);
+        assert_eq!(report.binsum_layers, 0);
+        let (mean, report) = RoundAgg::for_mode(AggMode::Binsum).finish();
+        assert!(mean.is_empty());
+        assert_eq!(report.dequant_passes, 0);
     }
 }

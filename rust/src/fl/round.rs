@@ -49,6 +49,21 @@ pub struct RoundStats {
     /// the "state-memory trajectory".
     pub store_clients: usize,
     pub store_bytes: usize,
+    /// Server-side payload decode CPU this round (the portion of
+    /// `decomp_time` spent turning wire bytes into aggregator input —
+    /// the cost `agg=binsum` attacks by stopping before dequantization).
+    pub server_decode_time: Duration,
+    /// Aggregation CPU this round: accumulator adds plus the
+    /// `finish_round` dequantize-and-divide.
+    pub agg_time: Duration,
+    /// Layers aggregated on the integer-bin route this round.
+    pub binsum_layers: usize,
+    /// Layers aggregated on the dense f32 route (includes mixed-route
+    /// layers that were demoted mid-round).
+    pub exact_layers: usize,
+    /// Dequantize passes performed by the aggregator (binsum target:
+    /// exactly one per bin-routed layer per round).
+    pub dequant_passes: usize,
 }
 
 impl RoundStats {
@@ -113,6 +128,14 @@ impl RunSummary {
     }
     pub fn total_comm_time(&self) -> Duration {
         self.rounds.iter().map(|r| r.comm_time()).sum()
+    }
+    /// Run-wide server decode CPU (the `agg=binsum` headline number).
+    pub fn total_server_decode_time(&self) -> Duration {
+        self.rounds.iter().map(|r| r.server_decode_time).sum()
+    }
+    /// Run-wide aggregation CPU.
+    pub fn total_agg_time(&self) -> Duration {
+        self.rounds.iter().map(|r| r.agg_time).sum()
     }
     pub fn total_downlink(&self) -> usize {
         self.rounds.iter().map(|r| r.downlink_bytes).sum()
@@ -191,5 +214,22 @@ mod tests {
         assert_eq!(s.total_downlink(), 75);
         assert_eq!(s.total_downlink_raw(), 300);
         assert!((s.mean_down_ratio() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_totals_agg_times() {
+        let mut s = RunSummary::default();
+        for _ in 0..4 {
+            s.rounds.push(RoundStats {
+                server_decode_time: Duration::from_millis(6),
+                agg_time: Duration::from_millis(2),
+                binsum_layers: 3,
+                exact_layers: 1,
+                dequant_passes: 3,
+                ..Default::default()
+            });
+        }
+        assert_eq!(s.total_server_decode_time(), Duration::from_millis(24));
+        assert_eq!(s.total_agg_time(), Duration::from_millis(8));
     }
 }

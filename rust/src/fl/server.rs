@@ -20,17 +20,32 @@ use std::collections::HashSet;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::compress::agg::{AggReport, BinFrame};
 use crate::compress::downlink::DownlinkCodec;
 use crate::compress::engine::CodecEngine;
 use crate::compress::frame::Frame;
 use crate::compress::session::EngineDecodeSession;
 use crate::compress::state::{ClientState, StateEpoch};
 use crate::compress::store::{ClientId, ShardedMemStore, StateStore, StoreStats};
-use crate::fl::aggregate::{apply_update, FedAvg};
+use crate::fl::aggregate::{apply_update, AggMode, RoundAgg};
 use crate::fl::protocol::Msg;
 use crate::fl::round::RoundStats;
 use crate::fl::transport::Channel;
 use crate::tensor::{LayerGrad, LayerMeta, ModelGrad};
+
+/// Where one payload's server-side CPU went: wire-to-aggregator-input
+/// decode vs the aggregator's accumulate.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AbsorbTimes {
+    pub decode: Duration,
+    pub agg: Duration,
+}
+
+/// A frame-streamed update in the form the round's aggregator consumes.
+enum Streamed {
+    Dense(ModelGrad),
+    Bins(Vec<BinFrame>),
+}
 
 /// Parameter-server state.
 pub struct Server {
@@ -53,6 +68,10 @@ pub struct Server {
     /// Client id behind each channel index (recorded by `wait_hellos`;
     /// the downlink codec keys its synced-set on these).
     channel_ids: Vec<ClientId>,
+    /// How rounds aggregate (`agg=exact|binsum`, see
+    /// [`crate::compress::agg`]). Binsum-ineligible layers fall back
+    /// per layer inside the aggregator, so this is always safe to set.
+    agg_mode: AggMode,
     round: u32,
 }
 
@@ -74,6 +93,7 @@ impl Server {
             admitted: HashSet::new(),
             downlink: None,
             channel_ids: Vec::new(),
+            agg_mode: AggMode::Exact,
             round: 0,
         }
     }
@@ -84,6 +104,22 @@ impl Server {
     pub fn with_downlink(mut self, downlink: DownlinkCodec) -> Self {
         self.downlink = Some(downlink);
         self
+    }
+
+    /// Select the aggregation route for subsequent rounds.
+    pub fn with_agg_mode(mut self, mode: AggMode) -> Self {
+        self.agg_mode = mode;
+        self
+    }
+
+    pub fn agg_mode(&self) -> AggMode {
+        self.agg_mode
+    }
+
+    /// Fresh per-round aggregator matching the configured route (drive
+    /// it through [`Self::absorb_payload`] then [`Self::finish_round`]).
+    pub fn new_round_agg(&self) -> RoundAgg {
+        RoundAgg::for_mode(self.agg_mode)
     }
 
     /// The downlink reference model — bit-identical to every synced
@@ -184,27 +220,43 @@ impl Server {
         self.store.put(client, cs)
     }
 
-    /// Process one already-received client payload: decompress + absorb
-    /// into the aggregator. Returns decompression time. (Exposed for the
-    /// single-threaded simulation path.) Unknown `client` ids are a
-    /// proper `Err`.
+    /// Process one already-received client payload: decompress to the
+    /// round aggregator's input form (dense f32 for `agg=exact`, integer
+    /// bins where eligible for `agg=binsum`) and absorb it. Returns the
+    /// decode/aggregate time split. (Exposed for the single-threaded
+    /// simulation path.) Unknown `client` ids are a proper `Err`; a
+    /// failed decode or a malformed contribution is dropped whole.
     pub fn absorb_payload(
         &mut self,
         client: ClientId,
         payload: &[u8],
         weight: f64,
-        agg: &mut FedAvg,
-    ) -> crate::Result<Duration> {
+        agg: &mut RoundAgg,
+    ) -> crate::Result<AbsorbTimes> {
         self.ensure_admitted(client)?;
         let mut cs = self.checkout(client)?;
         let t0 = Instant::now();
-        let decoded = self.engine.decode_payload(payload, &self.metas, &mut cs.codec);
-        let dt = t0.elapsed();
+        let decoded = match agg {
+            RoundAgg::Exact(_) => self
+                .engine
+                .decode_payload(payload, &self.metas, &mut cs.codec)
+                .map(|(grads, _report)| Streamed::Dense(grads)),
+            RoundAgg::Bin(_) => self
+                .engine
+                .decode_payload_to_bins(payload, &self.metas, &mut cs.codec)
+                .map(|(frames, _report)| Streamed::Bins(frames)),
+        };
+        let decode = t0.elapsed();
         match decoded {
-            Ok((grads, _report)) => {
+            Ok(streamed) => {
                 self.checkin(client, cs)?;
-                agg.add(&grads, weight);
-                Ok(dt)
+                let t1 = Instant::now();
+                match (streamed, agg) {
+                    (Streamed::Dense(grads), RoundAgg::Exact(fa)) => fa.add(&grads, weight)?,
+                    (Streamed::Bins(frames), RoundAgg::Bin(ba)) => ba.add(&frames, weight)?,
+                    _ => unreachable!("decode form matches the aggregator route"),
+                }
+                Ok(AbsorbTimes { decode, agg: t1.elapsed() })
             }
             Err(e) => {
                 // A failed decode may have half-updated the state: drop
@@ -217,26 +269,31 @@ impl Server {
 
     /// Receive one frame-streamed update that was opened by an
     /// `UpdateBegin` declaring `n_layers` frames, decoding each frame as
-    /// it lands. Returns the decoded gradients, total frame wire bytes,
-    /// and decode time.
+    /// it lands (to integer bins where the round aggregates in the
+    /// compressed domain) and absorbing the result. Returns the total
+    /// frame wire bytes and the decode/aggregate time split.
     fn recv_streamed_update(
         &mut self,
         client: ClientId,
         channel: &mut dyn Channel,
         round: u32,
         n_layers: usize,
-    ) -> crate::Result<(ModelGrad, usize, Duration)> {
+        weight: f64,
+        agg: &mut RoundAgg,
+    ) -> crate::Result<(usize, AbsorbTimes)> {
         anyhow::ensure!(
             n_layers == self.metas.len(),
             "client streamed {} layers, model has {}",
             n_layers,
             self.metas.len()
         );
+        let use_bins = matches!(agg, RoundAgg::Bin(_));
         let mut cs = self.checkout(client)?;
-        let mut decode = || -> crate::Result<(ModelGrad, usize, Duration)> {
+        let mut decode = || -> crate::Result<(Streamed, usize, Duration)> {
             let mut session =
                 EngineDecodeSession::new(self.engine.as_mut(), &mut cs.codec, n_layers);
             let mut grads = ModelGrad::default();
+            let mut bins = Vec::new();
             let mut wire_bytes = 0usize;
             let mut decode_time = Duration::ZERO;
             for li in 0..n_layers {
@@ -247,20 +304,31 @@ impl Server {
                         let frame = Frame::from_wire(&frame)?;
                         let t0 = Instant::now();
                         // The session enforces frame ordering/indexing.
-                        let layer = session.decode_frame(&frame, &self.metas[li])?;
+                        if use_bins {
+                            bins.push(session.decode_frame_to_bins(&frame, &self.metas[li])?);
+                        } else {
+                            grads.layers.push(session.decode_frame(&frame, &self.metas[li])?);
+                        }
                         decode_time += t0.elapsed();
-                        grads.layers.push(layer);
                     }
                     other => anyhow::bail!("expected UpdateFrame, got {other:?}"),
                 }
             }
             session.finish()?;
-            Ok((grads, wire_bytes, decode_time))
+            let streamed =
+                if use_bins { Streamed::Bins(bins) } else { Streamed::Dense(grads) };
+            Ok((streamed, wire_bytes, decode_time))
         };
         match decode() {
-            Ok(out) => {
+            Ok((streamed, wire_bytes, decode_time)) => {
                 self.checkin(client, cs)?;
-                Ok(out)
+                let t0 = Instant::now();
+                match (streamed, agg) {
+                    (Streamed::Dense(grads), RoundAgg::Exact(fa)) => fa.add(&grads, weight)?,
+                    (Streamed::Bins(frames), RoundAgg::Bin(ba)) => ba.add(&frames, weight)?,
+                    _ => unreachable!("decode form matches the aggregator route"),
+                }
+                Ok((wire_bytes, AbsorbTimes { decode: decode_time, agg: t0.elapsed() }))
             }
             Err(e) => {
                 self.store.remove(client)?;
@@ -269,13 +337,18 @@ impl Server {
         }
     }
 
-    /// Apply the aggregated mean gradient to the global parameters.
-    pub fn finish_round(&mut self, agg: FedAvg) {
-        let mean = agg.mean();
+    /// Finish the round: fold the aggregator (for `agg=binsum` this is
+    /// the single dequantize-and-divide), apply the mean gradient to
+    /// the global parameters, and report the per-layer routes taken.
+    pub fn finish_round(&mut self, agg: RoundAgg) -> AggReport {
+        let t0 = Instant::now();
+        let (mean, mut report) = agg.finish();
         if !mean.is_empty() {
             apply_update(&mut self.params, &mean, self.lr);
         }
+        report.finish_time = t0.elapsed();
         self.round += 1;
+        report
     }
 
     /// Broadcast this round's model to every channel. The message bytes
@@ -386,7 +459,7 @@ impl Server {
         }
         // ── Pass 2: updates. ──
         let raw_model_bytes: usize = self.metas.iter().map(|m| m.numel * 4).sum();
-        let mut agg = FedAvg::new();
+        let mut agg = self.new_round_agg();
         for idx in 0..channels.len() {
             match channels[idx].recv()? {
                 Msg::Update { client_id, round: r, payload, train_loss, n_samples } => {
@@ -394,31 +467,40 @@ impl Server {
                     stats.payload_bytes += payload.len();
                     stats.raw_bytes += raw_model_bytes;
                     stats.mean_loss += train_loss as f64;
-                    let dt =
+                    let times =
                         self.absorb_payload(client_id, &payload, n_samples as f64, &mut agg)?;
-                    stats.decomp_time += dt;
+                    stats.decomp_time += times.decode;
+                    stats.server_decode_time += times.decode;
+                    stats.agg_time += times.agg;
                 }
                 Msg::UpdateBegin { client_id, round: r, n_layers, train_loss, n_samples } => {
                     anyhow::ensure!(r == round, "client {client_id} answered round {r}");
                     self.ensure_admitted(client_id)?;
                     stats.raw_bytes += raw_model_bytes;
                     stats.mean_loss += train_loss as f64;
-                    let (grads, wire_bytes, dt) = self.recv_streamed_update(
+                    let (wire_bytes, times) = self.recv_streamed_update(
                         client_id,
                         channels[idx].as_mut(),
                         round,
                         n_layers as usize,
+                        n_samples as f64,
+                        &mut agg,
                     )?;
                     stats.payload_bytes += wire_bytes;
-                    stats.decomp_time += dt;
-                    agg.add(&grads, n_samples as f64);
+                    stats.decomp_time += times.decode;
+                    stats.server_decode_time += times.decode;
+                    stats.agg_time += times.agg;
                 }
                 other => anyhow::bail!("server: unexpected {other:?}"),
             }
         }
         stats.mean_loss /= channels.len().max(1) as f64;
         self.record_store_occupancy(&mut stats);
-        self.finish_round(agg);
+        let rep = self.finish_round(agg);
+        stats.agg_time += rep.finish_time;
+        stats.binsum_layers = rep.binsum_layers;
+        stats.exact_layers = rep.exact_layers + rep.mixed_layers;
+        stats.dequant_passes = rep.dequant_passes;
         Ok(stats)
     }
 
@@ -466,6 +548,7 @@ mod tests {
     use super::*;
     use crate::compress::pipeline::{FedgecCodec, FedgecConfig, FedgecEngine};
     use crate::compress::GradientCodec;
+    use crate::fl::aggregate::FedAvg;
     use crate::tensor::LayerMeta;
     use crate::util::rng::Rng;
 
@@ -501,7 +584,7 @@ mod tests {
     #[test]
     fn unknown_client_is_err_not_panic() {
         let mut srv = server();
-        let mut agg = FedAvg::new();
+        let mut agg = RoundAgg::Exact(FedAvg::new());
         // Out-of-range / never-admitted ids used to panic on
         // `self.codecs[client_idx]`; now they are a proper Err.
         let err = srv.absorb_payload(99, &[1, 2, 3], 1.0, &mut agg).unwrap_err();
@@ -521,7 +604,7 @@ mod tests {
         let mut epoch = StateEpoch::cold();
         // Round 1: both cold — no reset.
         assert!(!srv.check_state(0, epoch).unwrap());
-        let mut agg = FedAvg::new();
+        let mut agg = srv.new_round_agg();
         let p = client.compress(&grads(&metas, &mut rng)).unwrap();
         srv.absorb_payload(0, &p, 1.0, &mut agg).unwrap();
         epoch.advance(client.state_fingerprint());
@@ -542,13 +625,74 @@ mod tests {
     }
 
     #[test]
+    fn binsum_round_matches_exact_round() {
+        // Two servers over the SAME client payloads: agg=binsum must
+        // track agg=exact within 1e-5 relative while dequantizing each
+        // bin-routed layer exactly once.
+        use crate::compress::predictor::magnitude::MagnitudeSel;
+        use crate::compress::predictor::sign::SignSel;
+        use crate::compress::predictor::PredictorSpec;
+        use crate::compress::quant::ErrorBound;
+        let cfg = FedgecConfig {
+            error_bound: ErrorBound::Abs(2e-3),
+            predictor: PredictorSpec { mag: MagnitudeSel::Zero, sign: SignSel::None },
+            ..Default::default()
+        };
+        let (params, metas) = small_model();
+        let mut exact = Server::with_engine(
+            params.clone(),
+            metas.clone(),
+            0.1,
+            Box::new(FedgecEngine::new(cfg.clone())),
+        );
+        let mut bin = Server::with_engine(
+            params,
+            metas.clone(),
+            0.1,
+            Box::new(FedgecEngine::new(cfg.clone())),
+        )
+        .with_agg_mode(AggMode::Binsum);
+        assert_eq!(bin.agg_mode(), AggMode::Binsum);
+        let mut rng = Rng::new(77);
+        for round in 0..3 {
+            let mut agg_e = exact.new_round_agg();
+            let mut agg_b = bin.new_round_agg();
+            for client in 0..3u64 {
+                exact.admit(client);
+                bin.admit(client);
+                // State-free mode: a fresh codec per round is the same
+                // codec (no cross-round state to warm).
+                let mut codec = FedgecCodec::new(cfg.clone());
+                let p = codec.compress(&grads(&metas, &mut rng)).unwrap();
+                let w = (client + 1) as f64;
+                exact.absorb_payload(client, &p, w, &mut agg_e).unwrap();
+                bin.absorb_payload(client, &p, w, &mut agg_b).unwrap();
+            }
+            let re = exact.finish_round(agg_e);
+            let rb = bin.finish_round(agg_b);
+            assert_eq!(re.binsum_layers, 0);
+            // fc (1500 > t_lossy) rides the bin route; the small bias
+            // layer is stored lossless and falls back dense.
+            assert_eq!(rb.binsum_layers, 1, "round {round}");
+            assert_eq!(rb.exact_layers, 1, "round {round}");
+            assert_eq!(rb.dequant_passes, 1, "round {round}");
+            for (a, b) in exact.params.iter().flatten().zip(bin.params.iter().flatten()) {
+                assert!(
+                    (a - b).abs() <= 1e-5 * a.abs().max(1e-3),
+                    "round {round}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn failed_decode_drops_server_state() {
         let mut srv = server();
         srv.admit(1);
         let metas = srv.metas.clone();
         let mut rng = Rng::new(9);
         let mut client = FedgecCodec::new(FedgecConfig::default());
-        let mut agg = FedAvg::new();
+        let mut agg = srv.new_round_agg();
         let p = client.compress(&grads(&metas, &mut rng)).unwrap();
         srv.absorb_payload(1, &p, 1.0, &mut agg).unwrap();
         assert_eq!(srv.store_stats().resident_clients, 1);

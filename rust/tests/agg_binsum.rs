@@ -1,0 +1,345 @@
+//! Compressed-domain aggregation (`agg=binsum`): the integer-bin route
+//! must be indistinguishable from decode-then-FedAvg — registry-wide on
+//! random fleets, and end-to-end on a model-zoo CNN over a 20-round
+//! half-participation run with exactly one dequantize pass per bin
+//! layer per round. Ineligible layers (rel-eb, stateful predictors,
+//! mixed per-client Δ) must fall back deterministically.
+
+use fedgec::compress::agg::{BinAggregator, BinFrame};
+use fedgec::compress::engine::CodecEngine;
+use fedgec::compress::spec::{CodecSpec, SpecDefaults};
+use fedgec::compress::state::CodecState;
+use fedgec::compress::GradientCodec;
+use fedgec::config::RunConfig;
+use fedgec::coordinator::run_local;
+use fedgec::fl::aggregate::{AggMode, FedAvg};
+use fedgec::fl::hetero::sample_participants;
+use fedgec::fl::server::Server;
+use fedgec::fl::transport::bandwidth::LinkSpec;
+use fedgec::tensor::model_zoo::ModelArch;
+use fedgec::tensor::{LayerGrad, LayerMeta, ModelGrad};
+use fedgec::train::data::DatasetSpec;
+use fedgec::train::gradgen::{GradGen, GradGenConfig};
+use fedgec::util::prop;
+use fedgec::util::rng::Rng;
+
+/// The eligible configuration: state-free predictors + abs-eb.
+const BINS_SPEC: &str = "fedgec:eb=abs1e-3,pred=zero,sign=none";
+
+/// Random fleet model: one lossy-sized layer (optionally salted with
+/// escapes — outliers and non-finite values) plus an optional small
+/// lossless layer.
+fn arb_fleet_model(rng: &mut Rng) -> ModelGrad {
+    let n_big = 1200 + rng.next_below(1200);
+    let mut big = prop::arb_gradient(rng, n_big);
+    if rng.chance(0.5) {
+        for _ in 0..1 + rng.next_below(8) {
+            let i = rng.next_below(n_big);
+            big[i] = if rng.chance(0.3) { f32::NAN } else { 1e30 };
+        }
+    }
+    let mut layers = vec![LayerGrad::new(LayerMeta::dense("fc", n_big, 1), big)];
+    if rng.chance(0.7) {
+        let n = 4 + rng.next_below(64);
+        layers.push(LayerGrad::new(LayerMeta::other("bias", n), prop::arb_gradient(rng, n)));
+    }
+    ModelGrad { layers }
+}
+
+fn assert_close(a: f32, b: f32, ctx: &str) -> Result<(), String> {
+    if !a.is_finite() || !b.is_finite() {
+        if a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan()) {
+            return Ok(());
+        }
+        return Err(format!("{ctx}: non-finite mismatch {a} vs {b}"));
+    }
+    let tol = 1e-5 * a.abs().max(b.abs()).max(1e-3);
+    if (a - b).abs() > tol {
+        return Err(format!("{ctx}: {a} vs {b} (tol {tol})"));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_binsum_matches_dense_fedavg_registry_wide() {
+    // Twin decode paths over identical payload streams: for every
+    // registered codec family (plus the eligible state-free fedgec
+    // spec), a fleet with mixed weights, dropouts, and corrupt
+    // contributions must aggregate to the same mean on the bins route
+    // as on the dense route, within 1e-5 relative.
+    prop::check("binsum == dense FedAvg", 8, |rng| {
+        let d = SpecDefaults::with_rel_eb(prop::arb_error_bound(rng));
+        let mut specs = CodecSpec::registry_specs(&d);
+        specs.push(CodecSpec::parse(BINS_SPEC).map_err(|e| e.to_string())?);
+        let eligible = specs.len() - 1;
+        let base = arb_fleet_model(rng);
+        let metas: Vec<LayerMeta> = base.layers.iter().map(|l| l.meta.clone()).collect();
+        for (si, spec) in specs.iter().enumerate() {
+            let n_clients = 2 + rng.next_below(3);
+            let mut codecs: Vec<Box<dyn GradientCodec>> =
+                (0..n_clients).map(|_| spec.build()).collect();
+            // One engine + one state per client per path, so stateful
+            // families evolve their mirrors identically on both routes.
+            let mut eng_dense = spec.build_engine();
+            let mut eng_bins = spec.build_engine();
+            let mut st_dense: Vec<CodecState> =
+                (0..n_clients).map(|_| CodecState::default()).collect();
+            let mut st_bins: Vec<CodecState> =
+                (0..n_clients).map(|_| CodecState::default()).collect();
+            let mut saw_bins = false;
+            for round in 0..2 {
+                let mut reference = FedAvg::new();
+                let mut bins = BinAggregator::new();
+                for ci in 0..n_clients {
+                    if rng.chance(0.2) {
+                        continue; // dropout: client skips the round
+                    }
+                    let mut g = base.clone();
+                    for l in &mut g.layers {
+                        for v in &mut l.data {
+                            *v *= 1.0 + 0.05 * (round as f32 + ci as f32 * 0.3);
+                        }
+                    }
+                    let mut payload =
+                        codecs[ci].compress(&g).map_err(|e| format!("{spec}: {e}"))?;
+                    if rng.chance(0.15) {
+                        let i = rng.next_below(payload.len());
+                        payload[i] ^= 1 << rng.next_below(8);
+                    }
+                    let w = if rng.chance(0.5) {
+                        (1 + rng.next_below(64)) as f64
+                    } else {
+                        rng.uniform(0.1, 4.0)
+                    };
+                    let dense = eng_dense.decode_payload(&payload, &metas, &mut st_dense[ci]);
+                    let binned = eng_bins.decode_payload_to_bins(
+                        &payload,
+                        &metas,
+                        &mut st_bins[ci],
+                    );
+                    match (dense, binned) {
+                        (Ok((grads, _)), Ok((frames, _))) => {
+                            saw_bins |=
+                                frames.iter().any(|f| matches!(f, BinFrame::Bins { .. }));
+                            reference
+                                .add(&grads, w)
+                                .map_err(|e| format!("{spec}: {e}"))?;
+                            bins.add(&frames, w).map_err(|e| format!("{spec}: {e}"))?;
+                        }
+                        _ => {
+                            // A (likely corrupted) contribution failed on
+                            // either route: drop it from both and reset
+                            // both mirrors so the paths stay twinned.
+                            st_dense[ci] = CodecState::default();
+                            st_bins[ci] = CodecState::default();
+                        }
+                    }
+                }
+                let want = reference.mean();
+                let (got, _report) = bins.finish();
+                if want.len() != got.len() {
+                    return Err(format!("{spec}: layer count {} vs {}", want.len(), got.len()));
+                }
+                for (li, (wl, gl)) in want.iter().zip(&got).enumerate() {
+                    if wl.len() != gl.len() {
+                        return Err(format!("{spec}: layer {li} numel"));
+                    }
+                    for (a, b) in wl.iter().zip(gl) {
+                        assert_close(*a, *b, &format!("{spec} round {round} layer {li}"))?;
+                    }
+                }
+            }
+            if si == eligible && !saw_bins {
+                return Err(format!("{spec}: eligible spec never took the bins route"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fallback_routes_for_rel_eb_and_stateful_specs() {
+    // The validity analysis, as routes: rel-eb (per-client
+    // data-dependent Δ) and stateful predictors must arrive as dense
+    // frames tagged `exact`; only the state-free abs-eb config bins.
+    let metas = vec![LayerMeta::dense("fc", 1500, 1), LayerMeta::other("bias", 8)];
+    let mut rng = Rng::new(0xFA11);
+    let grads = ModelGrad {
+        layers: metas
+            .iter()
+            .map(|m| {
+                let data: Vec<f32> =
+                    (0..m.numel).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+                LayerGrad::new(m.clone(), data)
+            })
+            .collect(),
+    };
+    let cases = [
+        ("fedgec:eb=rel1e-2,pred=zero,sign=none", false), // rel-eb
+        ("fedgec:eb=abs1e-3", false),                     // stateful EMA
+        (BINS_SPEC, true),
+    ];
+    for (text, expect_bins) in cases {
+        let spec = CodecSpec::parse(text).unwrap();
+        let mut codec = spec.build();
+        let payload = codec.compress(&grads).unwrap();
+        let mut engine = spec.build_engine();
+        let mut state = CodecState::default();
+        let (frames, report) =
+            engine.decode_payload_to_bins(&payload, &metas, &mut state).unwrap();
+        let fc_bins = matches!(frames[0], BinFrame::Bins { .. });
+        assert_eq!(fc_bins, expect_bins, "{text}: fc route");
+        assert_eq!(
+            report.layers[0].agg_route,
+            if expect_bins { "binsum" } else { "exact" },
+            "{text}"
+        );
+        // The small lossless layer always falls back to dense.
+        assert!(matches!(frames[1], BinFrame::Dense(_)), "{text}: bias route");
+        assert_eq!(report.layers[1].agg_route, "exact", "{text}");
+    }
+}
+
+#[test]
+fn mixed_delta_fleet_demotes_to_mixed_route_and_still_matches() {
+    // Two state-free clients with different abs bounds: both frames
+    // arrive as bins, but their Δs differ, so the aggregator demotes
+    // the layer mid-round and the result must still equal dense FedAvg.
+    let metas = vec![LayerMeta::dense("fc", 1500, 1)];
+    let mut rng = Rng::new(0xD317A);
+    let grads = ModelGrad {
+        layers: vec![LayerGrad::new(
+            metas[0].clone(),
+            (0..1500).map(|_| rng.normal_f32(0.0, 0.3)).collect(),
+        )],
+    };
+    let mut reference = FedAvg::new();
+    let mut bins = BinAggregator::new();
+    for (ci, text) in
+        ["fedgec:eb=abs1e-3,pred=zero,sign=none", "fedgec:eb=abs2e-3,pred=zero,sign=none"]
+            .iter()
+            .enumerate()
+    {
+        let spec = CodecSpec::parse(text).unwrap();
+        let mut codec = spec.build();
+        let payload = codec.compress(&grads).unwrap();
+        let mut engine = spec.build_engine();
+        let mut st_a = CodecState::default();
+        let mut st_b = CodecState::default();
+        let (dense, _) = engine.decode_payload(&payload, &metas, &mut st_a).unwrap();
+        let (frames, _) =
+            engine.decode_payload_to_bins(&payload, &metas, &mut st_b).unwrap();
+        assert!(matches!(frames[0], BinFrame::Bins { .. }), "client {ci} should bin");
+        let w = 1.0 + ci as f64;
+        reference.add(&dense, w).unwrap();
+        bins.add(&frames, w).unwrap();
+    }
+    let want = reference.mean();
+    let (got, report) = bins.finish();
+    assert_eq!(report.mixed_layers, 1, "Δ mismatch must demote the layer");
+    assert_eq!(report.binsum_layers, 0);
+    for (a, b) in want[0].iter().zip(&got[0]) {
+        assert_close(*a, *b, "mixed-Δ layer").unwrap();
+    }
+}
+
+#[test]
+fn binsum_matches_exact_on_model_zoo_cnn_over_20_rounds() {
+    // The acceptance run: paired servers on identical payload streams
+    // from a model-zoo CNN, 20 rounds at half participation. The binsum
+    // server must track the exact server within 1e-5 relative, perform
+    // exactly one dequantize pass per bin layer per round, and leave
+    // every client mirror cold (bit-identical, never touched).
+    let metas = ModelArch::MicroInception.layers(10);
+    let spec = CodecSpec::parse("fedgec:eb=abs2e-3,pred=zero,sign=none").unwrap();
+    let params: Vec<Vec<f32>> = metas.iter().map(|m| vec![0.01; m.numel]).collect();
+    let mut srv_exact =
+        Server::with_engine(params.clone(), metas.clone(), 0.1, spec.build_engine());
+    let mut srv_bins = Server::with_engine(params, metas.clone(), 0.1, spec.build_engine())
+        .with_agg_mode(AggMode::Binsum);
+    let n = 8usize;
+    let mut codecs: Vec<Box<dyn GradientCodec>> = (0..n).map(|_| spec.build()).collect();
+    let cold_fp = codecs[0].state_fingerprint();
+    let mut gens: Vec<GradGen> = (0..n)
+        .map(|i| GradGen::new(metas.clone(), GradGenConfig::default(), 70 + i as u64))
+        .collect();
+    for id in 0..n {
+        srv_exact.admit(id as u32);
+        srv_bins.admit(id as u32);
+    }
+    let mut rng = Rng::new(0xACC);
+    let mut total_binsum = 0usize;
+    for round in 0..20 {
+        let parts = sample_participants(n, 0.5, &mut rng);
+        let mut agg_exact = srv_exact.new_round_agg();
+        let mut agg_bins = srv_bins.new_round_agg();
+        for &ci in &parts {
+            let g = gens[ci].next_round();
+            let payload = codecs[ci].compress(&g).unwrap();
+            let w = (ci + 1) as f64;
+            srv_exact.absorb_payload(ci as u32, &payload, w, &mut agg_exact).unwrap();
+            srv_bins.absorb_payload(ci as u32, &payload, w, &mut agg_bins).unwrap();
+        }
+        let re = srv_exact.finish_round(agg_exact);
+        let rb = srv_bins.finish_round(agg_bins);
+        assert_eq!(re.binsum_layers, 0, "exact server must never bin");
+        if !parts.is_empty() {
+            assert!(rb.binsum_layers > 0, "round {round}: no layer binned");
+            assert_eq!(
+                rb.dequant_passes, rb.binsum_layers,
+                "round {round}: exactly one dequantize pass per bin layer"
+            );
+        }
+        total_binsum += rb.binsum_layers;
+        for (li, (le, lb)) in srv_exact.params.iter().zip(&srv_bins.params).enumerate() {
+            for (a, b) in le.iter().zip(lb) {
+                // Rounding-order differences accumulate additively over
+                // 20 rounds (the payload stream is identical, so there
+                // is no feedback), staying well inside 1e-5 relative
+                // with a 1e-2 absolute floor.
+                let tol = 1e-5 * a.abs().max(b.abs()).max(1e-2);
+                assert!(
+                    (a - b).abs() <= tol,
+                    "round {round} layer {li}: {a} vs {b} (tol {tol})"
+                );
+            }
+        }
+    }
+    assert!(total_binsum >= 20, "bins route under-used: {total_binsum}");
+    // Bit-identical client mirrors: the state-free mode never warmed
+    // any client codec.
+    for (ci, c) in codecs.iter().enumerate() {
+        assert_eq!(c.state_fingerprint(), cold_fp, "client {ci} mirror touched");
+    }
+}
+
+#[test]
+fn run_local_binsum_smoke() {
+    // Closed loop: the config key drives the coordinator end-to-end and
+    // the per-round stats record the route.
+    let cfg = RunConfig {
+        model: "native".into(),
+        dataset: DatasetSpec::Cifar10,
+        n_clients: 3,
+        rounds: 4,
+        samples_per_client: 64,
+        local_lr: 0.2,
+        server_lr: 0.2,
+        codec: "fedgec:eb=abs5e-3,pred=zero,sign=none".into(),
+        link: LinkSpec::infinite(),
+        eval_every: 0,
+        seed: 11,
+        class_skew: 0.3,
+        agg: "binsum".into(),
+        ..Default::default()
+    };
+    let summary = run_local(&cfg).expect("binsum run");
+    assert_eq!(summary.rounds.len(), 4);
+    for r in &summary.rounds {
+        assert!(r.payload_bytes > 0);
+        assert!(r.binsum_layers >= 1, "round {}: nothing binned", r.round);
+        assert_eq!(r.dequant_passes, r.binsum_layers, "round {}", r.round);
+    }
+    let losses = summary.loss_curve();
+    assert!(losses.iter().all(|l| l.is_finite()), "{losses:?}");
+}

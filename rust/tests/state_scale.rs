@@ -11,7 +11,7 @@ use fedgec::compress::pipeline::{FedgecCodec, FedgecConfig, FedgecEngine};
 use fedgec::compress::state::StateEpoch;
 use fedgec::compress::store::ShardedMemStore;
 use fedgec::compress::GradientCodec;
-use fedgec::fl::aggregate::FedAvg;
+use fedgec::fl::aggregate::RoundAgg;
 use fedgec::fl::server::Server;
 use fedgec::tensor::{LayerGrad, LayerMeta, ModelGrad};
 use fedgec::util::rng::Rng;
@@ -45,7 +45,7 @@ fn participate(
     codec: &mut FedgecCodec,
     epoch: &mut StateEpoch,
     server: &mut Server,
-    agg: &mut FedAvg,
+    agg: &mut RoundAgg,
     rng: &mut Rng,
     metas: &[LayerMeta],
 ) -> bool {
@@ -95,7 +95,7 @@ fn ten_thousand_clients_under_small_store_budget() {
     let per_wave = (N_CLIENTS - STICKY) as usize / WAVES;
     let mut sticky_resets = 0usize;
     for wave in 0..WAVES {
-        let mut agg = FedAvg::new();
+        let mut agg = server.new_round_agg();
         let lo = STICKY + (wave * per_wave) as u32;
         for id in lo..lo + per_wave as u32 {
             // Transient client: fresh (cold) codec, participates once.
@@ -134,7 +134,7 @@ fn ten_thousand_clients_under_small_store_budget() {
     // round re-seats any evicted state; from then on the fleet-of-64
     // fits the budget, so the second quiet round must be reset-free.
     for quiet in 0..2 {
-        let mut agg = FedAvg::new();
+        let mut agg = server.new_round_agg();
         let mut resets = 0usize;
         for (i, (codec, epoch)) in sticky.iter_mut().enumerate() {
             if participate(i as u32, codec, epoch, &mut server, &mut agg, &mut rng, &metas) {

@@ -8,7 +8,7 @@ use fedgec::compress::quant::ErrorBound;
 use fedgec::compress::state::StateEpoch;
 use fedgec::compress::store::ShardedMemStore;
 use fedgec::compress::GradientCodec;
-use fedgec::fl::aggregate::FedAvg;
+use fedgec::fl::aggregate::RoundAgg;
 use fedgec::fl::server::Server;
 use fedgec::tensor::model_zoo::ModelArch;
 use fedgec::tensor::LayerMeta;
@@ -104,7 +104,7 @@ impl SimClient {
 
     /// One participated round: handshake, compress, upload. Returns
     /// whether the server ordered a cold-start reset.
-    fn round(&mut self, id: u32, server: &mut Server, agg: &mut FedAvg) -> bool {
+    fn round(&mut self, id: u32, server: &mut Server, agg: &mut RoundAgg) -> bool {
         let reset = server.check_state(id, self.epoch).unwrap();
         if reset {
             self.codec.reset();
@@ -149,7 +149,7 @@ fn dropout_rejoin_resyncs_via_state_check() {
     let mut clients: Vec<SimClient> =
         (0..3).map(|i| SimClient::new(metas.clone(), 50 + i)).collect();
     for round in 0..8usize {
-        let mut agg = FedAvg::new();
+        let mut agg = server.new_round_agg();
         let reset0 = clients[0].round(0, &mut server, &mut agg);
         assert!(!reset0, "persistent client reset at round {round}");
         if !(2..=4).contains(&round) {
@@ -181,8 +181,8 @@ fn eviction_detected_and_recovered_by_resync() {
     let metas = metas();
     let params: Vec<Vec<f32>> = metas.iter().map(|m| vec![0.0; m.numel]).collect();
     let mut probe = SimClient::new(metas.clone(), 7);
-    let mut probe_agg = FedAvg::new();
     let mut sizing_server = engine_server(&metas);
+    let mut probe_agg = sizing_server.new_round_agg();
     sizing_server.admit(0);
     probe.round(0, &mut sizing_server, &mut probe_agg);
     let one_state = sizing_server.store_stats().resident_bytes;
@@ -203,7 +203,7 @@ fn eviction_detected_and_recovered_by_resync() {
     }
     let mut resets = 0;
     for _round in 0..3 {
-        let mut agg = FedAvg::new();
+        let mut agg = server.new_round_agg();
         for id in 0..n {
             if clients[id as usize].round(id, &mut server, &mut agg) {
                 resets += 1;
