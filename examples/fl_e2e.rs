@@ -36,6 +36,15 @@ fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
+/// `FEDGEC_PANEL_SUFFIX` appended to every emitted panel name, so CI
+/// runs with different configs (e.g. `agg=binsum`) land in their own
+/// `BENCH_fl_e2e_*<suffix>.json` files instead of overwriting each
+/// other's.
+fn panel(name: &str) -> String {
+    let suffix: String = env_or("FEDGEC_PANEL_SUFFIX", String::new());
+    format!("{name}{suffix}")
+}
+
 fn main() -> fedgec::Result<()> {
     let rounds: usize = env_or("FEDGEC_ROUNDS", 20);
     let codec: String = env_or("FEDGEC_CODEC", "fedgec".to_string());
@@ -118,7 +127,7 @@ fn main() -> fedgec::Result<()> {
         ]);
     }
     mem.print();
-    mem.save_json("fl_e2e_state_memory")?;
+    mem.save_json(&panel("fl_e2e_state_memory"))?;
     let peak = summary.rounds.iter().map(|r| r.store_bytes).max().unwrap_or(0);
     println!(
         "peak store occupancy {:.1} KB across {} clients (budget: {})",
@@ -162,7 +171,7 @@ fn main() -> fedgec::Result<()> {
         ]);
     }
     dl.print();
-    dl.save_json("fl_e2e_downlink")?;
+    dl.save_json(&panel("fl_e2e_downlink"))?;
 
     // Aggregation panel: server decode CPU per round plus the
     // binsum/exact route split — the `agg=binsum` headline numbers,
@@ -182,7 +191,7 @@ fn main() -> fedgec::Result<()> {
         ]);
     }
     ag.print();
-    ag.save_json("fl_e2e_agg")?;
+    ag.save_json(&panel("fl_e2e_agg"))?;
     println!(
         "server decode CPU {} | aggregation CPU {} (agg={})",
         fedgec::metrics::fmt_duration(summary.total_server_decode_time()),

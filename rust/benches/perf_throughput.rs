@@ -1,8 +1,14 @@
 //! §Perf: compressor throughput microbenchmarks — the L3 hot-path profile
-//! driving the optimization pass (EXPERIMENTS.md §Perf). Reports MB/s per
-//! pipeline stage and end-to-end for each codec, on a ResNet-18-scale
-//! gradient (MicroResNet under `BENCH_QUICK=1`), including the
-//! huff-vs-rANS entropy-stage panel.
+//! driving the optimization pass (EXPERIMENTS.md §Perf). Reports per-stage
+//! GB/s panels (predict/quantize/entropy × encode/decode) for **both**
+//! kernel twins — the bounds-checked scalar loops and the chunked
+//! unchecked fast loops (`compress::kernels`) — plus the fast/scalar
+//! speedup, on a ResNet-18-scale gradient (MicroResNet under
+//! `BENCH_QUICK=1`).
+//!
+//! The emitted `results/BENCH_perf_throughput.json` feeds the CI
+//! perf-regression gate: `cargo run --bin bench_check` diffs it against
+//! the committed floors in `results/baselines/perf_throughput.json`.
 
 mod bench_util;
 
@@ -10,14 +16,49 @@ use std::time::Duration;
 
 use bench_util::*;
 use fedgec::compress::entropy::EntropyCoder;
-use fedgec::compress::huffman;
+use fedgec::compress::fused::{fused_decode, fused_encode, FusedEncodeOut, FusedParams};
+use fedgec::compress::kernels;
 use fedgec::compress::lossless::Backend;
+use fedgec::compress::quant::{self, Quantized};
 use fedgec::compress::spec::{CodecSpec, SpecDefaults};
-use fedgec::compress::GradientCodec;
+use fedgec::compress::{huffman, GradientCodec};
 use fedgec::metrics::Table;
 use fedgec::tensor::model_zoo::ModelArch;
 use fedgec::train::gradgen::{GradGen, GradGenConfig};
-use fedgec::util::timer::bench_loop;
+use fedgec::util::timer::{bench_loop, BenchStats};
+
+/// One measurement under each kernel twin. The same closure is timed
+/// twice: first with the scalar loops forced (`kernels::force_scalar`),
+/// then on the default fast path.
+struct Twin {
+    scalar: BenchStats,
+    fast: BenchStats,
+}
+
+fn twin(iters: usize, min_time: Duration, mut f: impl FnMut()) -> Twin {
+    kernels::force_scalar(true);
+    let scalar = bench_loop(iters, min_time, &mut f);
+    kernels::force_scalar(false);
+    let fast = bench_loop(iters, min_time, &mut f);
+    Twin { scalar, fast }
+}
+
+fn gbs(stats: &BenchStats, bytes: usize) -> f64 {
+    stats.mb_per_s(bytes) / 1e3
+}
+
+/// Append one `stage | scalar GB/s | fast GB/s | speedup | CR` row.
+fn twin_row(table: &mut Table, stage: &str, bytes: usize, t: &Twin, cr: Option<f64>) {
+    let s = gbs(&t.scalar, bytes);
+    let f = gbs(&t.fast, bytes);
+    table.row(vec![
+        stage.to_string(),
+        format!("{s:.3}"),
+        format!("{f:.3}"),
+        format!("{:.2}", f / s),
+        cr.map(|c| format!("{c:.2}")).unwrap_or_else(|| "-".into()),
+    ]);
+}
 
 fn main() {
     banner("perf_throughput", "EXPERIMENTS.md §Perf");
@@ -43,48 +84,52 @@ fn main() {
         800
     });
 
-    let mut table = Table::new("compressor throughput", &["stage", "MB/s", "CR"]);
+    let mut table = Table::new(
+        "compressor throughput",
+        &["stage", "scalar GB/s", "fast GB/s", "speedup", "CR"],
+    );
 
-    // End-to-end codecs, including the rANS entropy-stage variant.
-    for name in ["fedgec", "fedgec:ec=rans", "sz3", "qsgd", "topk"] {
+    // End-to-end codecs, every registered entropy-stage lane width.
+    let specs = [
+        "fedgec",
+        "fedgec:ec=rans",
+        "fedgec:ec=rans4",
+        "fedgec:ec=rans8",
+        "sz3",
+        "qsgd",
+        "topk",
+    ];
+    for name in specs {
         let mut client =
             CodecSpec::parse_with(name, &SpecDefaults::with_rel_eb(3e-2)).unwrap().build();
         client.compress(&g0).unwrap(); // warm state
         let mut payload_len = 0usize;
-        let stats = bench_loop(iters, min_time, || {
+        let t = twin(iters, min_time, || {
             payload_len = client.compress(&g).unwrap().len();
         });
-        table.row(vec![
-            format!("{name} compress (e2e)"),
-            format!("{:.0}", stats.mb_per_s(bytes)),
-            format!("{:.2}", bytes as f64 / payload_len as f64),
-        ]);
+        let cr = bytes as f64 / payload_len as f64;
+        twin_row(&mut table, &format!("{name} compress (e2e)"), bytes, &t, Some(cr));
     }
-    // Decompression, both entropy coders.
-    for spec_str in ["fedgec", "fedgec:ec=rans"] {
+    // Decompression, every lane width (fresh server decoding rounds 1+2
+    // each iteration keeps the predictor state consistent with the pair).
+    for spec_str in ["fedgec", "fedgec:ec=rans", "fedgec:ec=rans4", "fedgec:ec=rans8"] {
         let d = SpecDefaults::with_rel_eb(3e-2);
         let mut client = CodecSpec::parse_with(spec_str, &d).unwrap().build();
         let p0 = client.compress(&g0).unwrap();
         let payload = client.compress(&g).unwrap();
-        // Fresh server decompressing rounds 1+2 each iteration (keeps the
-        // predictor state consistent with the payload pair).
-        let stats = bench_loop(iters, min_time, || {
+        let t = twin(iters, min_time, || {
             let mut s = CodecSpec::parse_with(spec_str, &d).unwrap().build();
             s.decompress(&p0, &metas).unwrap();
             s.decompress(&payload, &metas).unwrap();
         });
-        table.row(vec![
-            format!("{spec_str} decompress (2 rounds)"),
-            format!("{:.0}", stats.mb_per_s(bytes * 2)),
-            "-".into(),
-        ]);
+        twin_row(&mut table, &format!("{spec_str} decompress (2 rounds)"), bytes * 2, &t, None);
     }
 
     // Stage microbenches on the largest layer.
     let largest = g.layers.iter().max_by_key(|l| l.data.len()).unwrap();
-    let lbytes = largest.data.len() * 4;
+    let n = largest.data.len();
+    let lbytes = n * 4;
     {
-        use fedgec::compress::fused::{fused_encode, FusedEncodeOut, FusedParams};
         use fedgec::util::stats as st;
         let prev_abs: Vec<f32> = g0
             .layers
@@ -95,7 +140,7 @@ fn main() {
             .iter()
             .map(|x| x.abs())
             .collect();
-        let signs = vec![1.0f32; largest.data.len()];
+        let signs = vec![1.0f32; n];
         let abs: Vec<f32> = largest.data.iter().map(|x| x.abs()).collect();
         let (mu_curr, sigma_curr) = st::mean_std(&abs);
         let (mu_prev, sigma_prev) = st::mean_std(&prev_abs);
@@ -108,38 +153,57 @@ fn main() {
             two_delta: 0.001,
             delta: 0.0005,
         };
-        let mut mem = vec![0.0f32; largest.data.len()];
+
+        // Fused predict+quantize: encode then decode on the same frame.
+        let mut mem = Vec::new();
         let mut out = FusedEncodeOut::default();
-        let stats = bench_loop(iters * 3, min_time, || {
+        let t = twin(iters * 3, min_time, || {
+            mem.clear();
             fused_encode(&largest.data, &prev_abs, &mut mem, &signs, &p, &mut out);
         });
-        table.row(vec![
-            "stage: fused predict+quantize".into(),
-            format!("{:.0}", stats.mb_per_s(lbytes)),
-            "-".into(),
-        ]);
-        // Entropy-stage panel: Huffman vs 2-way interleaved rANS, encode
+        twin_row(&mut table, "stage: fused predict+quantize encode", lbytes, &t, None);
+        let mut dmem = Vec::new();
+        let mut drecon = Vec::new();
+        let t = twin(iters * 3, min_time, || {
+            dmem.clear();
+            fused_decode(&out.codes, &out.escapes, &prev_abs, &mut dmem, &signs, &p, &mut drecon)
+                .unwrap();
+        });
+        twin_row(&mut table, "stage: fused decode", lbytes, &t, None);
+
+        // Plain quantizer (the pred=last/zero and engine paths).
+        let pred = vec![0.0f32; n];
+        let mut q = Quantized::default();
+        let mut recon = Vec::new();
+        let t = twin(iters * 3, min_time, || {
+            quant::quantize(&largest.data, &pred, 0.0005, &mut q, &mut recon);
+        });
+        twin_row(&mut table, "stage: quantize encode", lbytes, &t, None);
+        let t = twin(iters * 3, min_time, || {
+            quant::dequantize_checked(&q, &pred, 0.0005, &mut recon).unwrap();
+        });
+        twin_row(&mut table, "stage: dequantize decode", lbytes, &t, None);
+
+        // Entropy-stage panel: Huffman vs every rANS lane width, encode
         // and decode, on the same code stream.
         let codes = out.codes.clone();
-        for coder in [EntropyCoder::Huffman, EntropyCoder::Rans] {
+        let coders =
+            [EntropyCoder::Huffman, EntropyCoder::Rans, EntropyCoder::Rans4, EntropyCoder::Rans8];
+        for coder in coders {
             let mut stream = Vec::new();
-            let stats = bench_loop(iters * 3, min_time, || {
+            let t = twin(iters * 3, min_time, || {
                 stream = coder.encode_to_bytes(&codes);
             });
-            table.row(vec![
-                format!("stage: {} encode", coder.name()),
-                format!("{:.0}", stats.mb_per_s(lbytes)),
-                format!("{:.2}", lbytes as f64 / stream.len() as f64),
-            ]);
-            let stats = bench_loop(iters * 3, min_time, || {
+            let cr = lbytes as f64 / stream.len() as f64;
+            let label = format!("stage: {} encode", coder.name());
+            twin_row(&mut table, &label, lbytes, &t, Some(cr));
+            let t = twin(iters * 3, min_time, || {
                 let _ = coder.decode_from_bytes(&stream).unwrap();
             });
-            table.row(vec![
-                format!("stage: {} decode", coder.name()),
-                format!("{:.0}", stats.mb_per_s(lbytes)),
-                "-".into(),
-            ]);
+            twin_row(&mut table, &format!("stage: {} decode", coder.name()), lbytes, &t, None);
         }
+
+        // Lossless backends ride on the entropy bytes (no kernel twins).
         let entropy = huffman::encode_to_bytes(&codes);
         for backend in [Backend::Zstd(3), Backend::Deflate, Backend::OwnLz] {
             let stats = bench_loop(iters, min_time, || {
@@ -147,7 +211,9 @@ fn main() {
             });
             table.row(vec![
                 format!("stage: lossless {}", backend.name()),
-                format!("{:.0}", stats.mb_per_s(entropy.len())),
+                "-".into(),
+                format!("{:.3}", gbs(&stats, entropy.len())),
+                "-".into(),
                 "-".into(),
             ]);
         }
@@ -156,4 +222,5 @@ fn main() {
     table.save_csv("perf_throughput").unwrap();
     let json = table.save_json("perf_throughput").unwrap();
     println!("saved {json:?}");
+    println!("gate: cargo run --bin bench_check  (floors in results/baselines/)");
 }

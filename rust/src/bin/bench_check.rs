@@ -1,0 +1,88 @@
+//! CI perf-regression gate CLI — the thin driver over [`fedgec::metrics::gate`].
+//!
+//! For every committed baseline under `results/baselines/*.json`, loads
+//! the matching fresh `BENCH_<bench>.json` artifact (from
+//! `$FEDGEC_RESULTS` or `./results`) and fails the build if any floor
+//! or pin is violated.
+//!
+//! Baseline-update workflow (also documented in .github/workflows/ci.yml):
+//!
+//! 1. run the benches locally: `cargo bench --bench perf_throughput` etc.
+//! 2. re-record the pins: `cargo run --bin bench_check -- --update`
+//! 3. review + commit the rewritten `results/baselines/*.json`
+//!
+//! `--update` only re-records pins; floors are hand-edited on purpose —
+//! raising or lowering a floor is a reviewed decision, not a side effect
+//! of a bench run.
+
+use anyhow::{bail, Context, Result};
+use fedgec::metrics::{self, gate};
+use std::path::PathBuf;
+
+const USAGE: &str = "usage: bench_check [--update] [--baselines <dir>]
+  --update           re-record every pin from the fresh BENCH_*.json artifacts
+  --baselines <dir>  baseline directory (default: results/baselines)
+reads bench artifacts from $FEDGEC_RESULTS or ./results";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("bench_check: {e:#}");
+        std::process::exit(2);
+    }
+}
+
+fn run() -> Result<()> {
+    let mut update = false;
+    let mut baselines = PathBuf::from("results/baselines");
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--update" => update = true,
+            "--baselines" => baselines = args.next().context("--baselines needs a dir")?.into(),
+            "--help" | "-h" => {
+                println!("{USAGE}");
+                return Ok(());
+            }
+            other => bail!("unknown argument {other:?}\n{USAGE}"),
+        }
+    }
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(&baselines)
+        .with_context(|| format!("reading baselines dir {}", baselines.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .collect();
+    entries.sort();
+    if entries.is_empty() {
+        bail!("no baseline files in {}", baselines.display());
+    }
+    let mut failed = false;
+    for path in entries {
+        let b = gate::Baseline::parse(&std::fs::read_to_string(&path)?)
+            .with_context(|| path.display().to_string())?;
+        let bench_path = metrics::results_dir().join(format!("BENCH_{}.json", b.bench));
+        let doc = gate::BenchDoc::parse(
+            &std::fs::read_to_string(&bench_path)
+                .with_context(|| format!("missing bench artifact {}", bench_path.display()))?,
+        )
+        .with_context(|| bench_path.display().to_string())?;
+        if update {
+            let up = b.updated_from(&doc).with_context(|| path.display().to_string())?;
+            std::fs::write(&path, up.to_json().to_string())?;
+            println!("updated {} ({} pins re-recorded)", path.display(), up.pins.len());
+            continue;
+        }
+        let out = gate::check(&b, &doc);
+        for n in &out.notes {
+            println!("note: {n}");
+        }
+        for v in &out.violations {
+            eprintln!("FAIL: {v}");
+        }
+        println!("{}: {} checks, {} violations", b.bench, out.checked, out.violations.len());
+        failed |= !out.pass();
+    }
+    if failed {
+        std::process::exit(1);
+    }
+    Ok(())
+}

@@ -55,6 +55,13 @@ pub fn pick_entropy_coder_from_hist(
     if hist.len() > rans::MAX_SYMS {
         return EntropyCoder::Huffman;
     }
+    // A wider-lane default keeps its lane width: the chooser arbitrates
+    // Huffman vs rANS, not 2-way vs 4/8-way (that is the caller's
+    // throughput/ratio trade to make).
+    let (rans_pick, lanes) = match default.rans_lanes() {
+        Some(n) => (default, n),
+        None => (EntropyCoder::Rans, 2),
+    };
     let n = n_codes as f64;
     let mut shannon_bits = 0.0f64;
     for &(_, c) in hist {
@@ -63,11 +70,11 @@ pub fn pick_entropy_coder_from_hist(
     }
     let huff_bytes = match huffman::serialized_size_from_hist(hist) {
         Some(s) => s as f64,
-        None => return EntropyCoder::Rans,
+        None => return rans_pick,
     };
-    let rans_bytes = shannon_bits / 8.0 + (6 * hist.len() + 8 + 13) as f64;
+    let rans_bytes = shannon_bits / 8.0 + (6 * hist.len() + 4 * lanes + 13) as f64;
     if rans_bytes < huff_bytes {
-        EntropyCoder::Rans
+        rans_pick
     } else {
         EntropyCoder::Huffman
     }
@@ -229,6 +236,18 @@ mod tests {
             pick_entropy_coder_from_hist(&hist, skewed.len(), EntropyCoder::Huffman),
             pick_entropy_coder(&skewed, EntropyCoder::Huffman)
         );
+    }
+
+    #[test]
+    fn coder_choice_preserves_lane_width() {
+        use crate::util::rng::Rng;
+        // A wide-lane default that wins the size race keeps its width —
+        // the chooser never silently downgrades rans4/rans8 to 2-way.
+        let mut rng = Rng::new(9);
+        let skewed: Vec<i32> =
+            (0..20_000).map(|_| if rng.chance(0.97) { 0 } else { 1 }).collect();
+        assert_eq!(pick_entropy_coder(&skewed, EntropyCoder::Rans4), EntropyCoder::Rans4);
+        assert_eq!(pick_entropy_coder(&skewed, EntropyCoder::Rans8), EntropyCoder::Rans8);
     }
 
     #[test]

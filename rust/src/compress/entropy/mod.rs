@@ -1,17 +1,22 @@
 //! Stage 3 front door: the **entropy-coder registry** closing the
 //! pipeline after quantization. One enum selects between the canonical
-//! Huffman coder ([`super::huffman`]), the 2-way interleaved rANS coder
-//! ([`rans`]) and a raw i32 store, per codec via the `CodecSpec` grammar
-//! (`ec=huff|rans|raw`, Huffman the byte-compatible default).
+//! Huffman coder ([`super::huffman`]), the N-way interleaved rANS coders
+//! ([`rans`] — 2-way legacy plus 4/8-way ILP twins) and a raw i32 store,
+//! per codec via the `CodecSpec` grammar
+//! (`ec=huff|rans|rans4|rans8|raw`, Huffman the byte-compatible default).
 //!
 //! Every serialized entropy stream is self-describing through its
-//! leading mode byte (0 = raw, 1 = huffman, 2 = rans), and the layer
-//! blob additionally records the *selected* coder tag (see
-//! [`super::blob`]) so the decoder dispatches without sniffing. The rANS
-//! path is chosen **by measured size**: it computes the exact Huffman
-//! and raw alternatives from the shared histogram and only emits the
-//! rANS stream when it is no larger — so `ec=rans` never loses a byte
-//! to `ec=huff` on any layer (the Table 4b panel asserts this).
+//! leading mode byte (0 = raw, 1 = huffman, 2 = rans 2-way, 3 = rans
+//! 4-way, 4 = rans 8-way), and the layer blob additionally records the
+//! *selected* coder tag (see [`super::blob`]) so the decoder dispatches
+//! without sniffing. Each rANS path is chosen **by measured size**: it
+//! computes the exact Huffman and raw alternatives from the shared
+//! histogram and only emits the rANS stream when it is no larger — so
+//! `ec=rans*` never loses a byte to `ec=huff` on any layer (the Table 4b
+//! panel asserts this). The lane widths are distinct wire formats; any
+//! `Rans*` coder decodes any of them (the mode byte picks the
+//! interleave), so old 2-way frames decode unchanged under the new
+//! coders.
 
 pub mod rans;
 
@@ -26,20 +31,31 @@ pub enum EntropyCoder {
     Huffman,
     /// 2-way interleaved rANS with size-based Huffman/raw fallback.
     Rans,
+    /// 4-way interleaved rANS — same table, wider ILP interleave.
+    Rans4,
+    /// 8-way interleaved rANS — widest interleave.
+    Rans8,
     /// Raw little-endian i32 store (ablation / debugging).
     Raw,
 }
 
 impl EntropyCoder {
     /// All coders, for registry-style sweeps.
-    pub const ALL: [EntropyCoder; 3] =
-        [EntropyCoder::Huffman, EntropyCoder::Rans, EntropyCoder::Raw];
+    pub const ALL: [EntropyCoder; 5] = [
+        EntropyCoder::Huffman,
+        EntropyCoder::Rans,
+        EntropyCoder::Rans4,
+        EntropyCoder::Rans8,
+        EntropyCoder::Raw,
+    ];
 
     /// Spec-grammar name (`ec=<name>`).
     pub fn name(&self) -> &'static str {
         match self {
             EntropyCoder::Huffman => "huff",
             EntropyCoder::Rans => "rans",
+            EntropyCoder::Rans4 => "rans4",
+            EntropyCoder::Rans8 => "rans8",
             EntropyCoder::Raw => "raw",
         }
     }
@@ -49,6 +65,8 @@ impl EntropyCoder {
         match s {
             "huff" | "huffman" => Some(EntropyCoder::Huffman),
             "rans" => Some(EntropyCoder::Rans),
+            "rans4" => Some(EntropyCoder::Rans4),
+            "rans8" => Some(EntropyCoder::Rans8),
             "raw" => Some(EntropyCoder::Raw),
             _ => None,
         }
@@ -60,6 +78,8 @@ impl EntropyCoder {
             EntropyCoder::Huffman => 0,
             EntropyCoder::Rans => 1,
             EntropyCoder::Raw => 2,
+            EntropyCoder::Rans4 => 3,
+            EntropyCoder::Rans8 => 4,
         }
     }
 
@@ -69,7 +89,19 @@ impl EntropyCoder {
             0 => Ok(EntropyCoder::Huffman),
             1 => Ok(EntropyCoder::Rans),
             2 => Ok(EntropyCoder::Raw),
+            3 => Ok(EntropyCoder::Rans4),
+            4 => Ok(EntropyCoder::Rans8),
             _ => anyhow::bail!("unknown entropy-coder tag {t}"),
+        }
+    }
+
+    /// rANS interleave width this coder emits, `None` for non-rANS.
+    pub fn rans_lanes(&self) -> Option<usize> {
+        match self {
+            EntropyCoder::Rans => Some(2),
+            EntropyCoder::Rans4 => Some(4),
+            EntropyCoder::Rans8 => Some(8),
+            _ => None,
         }
     }
 
@@ -108,10 +140,11 @@ impl EntropyCoder {
         match self {
             EntropyCoder::Huffman => huffman_bytes(codes, hist),
             EntropyCoder::Raw => raw(codes),
-            EntropyCoder::Rans => {
+            EntropyCoder::Rans | EntropyCoder::Rans4 | EntropyCoder::Rans8 => {
+                let lanes = self.rans_lanes().expect("rans coder");
                 let raw_size = 1 + 4 + codes.len() * 4;
                 let huff_size = huffman::serialized_size_from_hist(hist).unwrap_or(usize::MAX);
-                match rans::encode_with_hist(codes, hist) {
+                match rans::encode_with_hist_lanes(codes, hist, lanes) {
                     Some(r) if r.len() <= huff_size && r.len() < raw_size => r,
                     // Huffman (or its own raw fallback) measured smaller.
                     _ => huffman_bytes(codes, hist),
@@ -134,7 +167,10 @@ impl EntropyCoder {
     /// cost < 1 bit / 0 bits), so the declared count is validated before
     /// any decode work — the decompressors' untrusted-payload guard.
     /// The dispatch is driven by the coder recorded in the layer blob;
-    /// each coder accepts only the modes it can emit.
+    /// each coder accepts only the modes it can emit. Any `Rans*` coder
+    /// accepts any rANS lane width — the mode byte selects the
+    /// interleave, which is how pre-widening 2-way frames stay decodable
+    /// under the wider coders.
     pub fn decode_bounded(
         &self,
         buf: &[u8],
@@ -151,13 +187,16 @@ impl EntropyCoder {
             );
             huffman::decode_from_bytes(buf)
         };
-        match (self, mode) {
-            (EntropyCoder::Rans, rans::MODE_RANS) => rans::decode_bounded(buf, max_count),
+        let is_rans = self.rans_lanes().is_some();
+        match mode {
+            rans::MODE_RANS | rans::MODE_RANS4 | rans::MODE_RANS8 if is_rans => {
+                rans::decode_bounded(buf, max_count)
+            }
             // The rANS selector may have fallen back to huffman/raw.
-            (EntropyCoder::Rans, 0 | 1) | (EntropyCoder::Huffman, 0 | 1) => bounded_huffman(buf),
-            (EntropyCoder::Raw, 0) => bounded_huffman(buf),
-            (c, m) => {
-                anyhow::bail!("entropy stream mode {m} inconsistent with coder '{}'", c.name())
+            0 | 1 if is_rans || *self == EntropyCoder::Huffman => bounded_huffman(buf),
+            0 if *self == EntropyCoder::Raw => bounded_huffman(buf),
+            m => {
+                anyhow::bail!("entropy stream mode {m} inconsistent with coder '{}'", self.name())
             }
         }
     }
@@ -215,21 +254,45 @@ mod tests {
 
     #[test]
     fn rans_and_huffman_decode_identical_codes() {
-        // The tentpole invariant: the two entropy stages are drop-in
-        // interchangeable — identical decoded codes on every shape.
+        // The drop-in invariant: every rANS width and Huffman decode to
+        // identical codes on every shape, and no rANS width ever emits
+        // more bytes than Huffman (the size race guarantees it).
         for (name, codes) in adversarial_streams() {
             let h = EntropyCoder::Huffman.encode_to_bytes(&codes);
-            let r = EntropyCoder::Rans.encode_to_bytes(&codes);
             let (hd, _) = EntropyCoder::Huffman.decode_from_bytes(&h).unwrap();
-            let (rd, _) = EntropyCoder::Rans.decode_from_bytes(&r).unwrap();
-            assert_eq!(hd, rd, "{name}");
-            assert!(
-                r.len() <= h.len(),
-                "{name}: rans {} bytes > huffman {} bytes",
-                r.len(),
-                h.len()
-            );
+            for coder in [EntropyCoder::Rans, EntropyCoder::Rans4, EntropyCoder::Rans8] {
+                let r = coder.encode_to_bytes(&codes);
+                let (rd, _) = coder.decode_from_bytes(&r).unwrap();
+                assert_eq!(hd, rd, "{name}/{}", coder.name());
+                assert!(
+                    r.len() <= h.len(),
+                    "{name}/{}: rans {} bytes > huffman {} bytes",
+                    coder.name(),
+                    r.len(),
+                    h.len()
+                );
+            }
         }
+    }
+
+    #[test]
+    fn wider_lanes_decode_legacy_two_way_frames() {
+        // The back-compat contract: a stream encoded by the legacy 2-way
+        // coder decodes unchanged under the rans4/rans8 registry twins
+        // (the mode byte picks the interleave, not the coder).
+        let codes: Vec<i32> = (0..5000).map(|i| (i % 9) as i32 - 4).collect();
+        let legacy = EntropyCoder::Rans.encode_to_bytes(&codes);
+        assert_eq!(legacy[0], rans::MODE_RANS);
+        for coder in [EntropyCoder::Rans4, EntropyCoder::Rans8] {
+            let (got, used) = coder.decode_from_bytes(&legacy).unwrap();
+            assert_eq!(got, codes, "{}", coder.name());
+            assert_eq!(used, legacy.len());
+        }
+        // And the reverse: the legacy coder decodes wide-lane streams.
+        let wide = EntropyCoder::Rans8.encode_to_bytes(&codes);
+        assert_eq!(wide[0], rans::MODE_RANS8);
+        let (got, _) = EntropyCoder::Rans.decode_from_bytes(&wide).unwrap();
+        assert_eq!(got, codes);
     }
 
     #[test]
@@ -259,6 +322,12 @@ mod tests {
         assert!(EntropyCoder::from_tag(9).is_err());
         assert_eq!(EntropyCoder::from_name("bogus"), None);
         assert_eq!(EntropyCoder::default(), EntropyCoder::Huffman);
+        // The wire tags of the frozen coders must never move.
+        assert_eq!(EntropyCoder::Huffman.tag(), 0);
+        assert_eq!(EntropyCoder::Rans.tag(), 1);
+        assert_eq!(EntropyCoder::Raw.tag(), 2);
+        assert_eq!(EntropyCoder::Rans4.tag(), 3);
+        assert_eq!(EntropyCoder::Rans8.tag(), 4);
     }
 
     #[test]

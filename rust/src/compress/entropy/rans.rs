@@ -1,9 +1,9 @@
-//! From-scratch **2-way interleaved rANS** coder over quantization codes
+//! From-scratch **N-way interleaved rANS** coder over quantization codes
 //! — the asymmetric-numeral-system sibling of the canonical Huffman stage
 //! (in the spirit of orz's entropy backend), built for the skewed,
 //! near-geometric code distributions the gradient-aware predictor emits.
 //!
-//! Invariants (see DESIGN.md §7):
+//! Invariants (see DESIGN.md §7 and §12):
 //!
 //! * **Static table**: per-stream symbol frequencies normalized to sum
 //!   exactly [`SCALE`] (= 1 << 12), every present symbol keeping
@@ -13,24 +13,31 @@
 //!   in `[RANS_L, 256 · RANS_L)`; the encoder emits low bytes while
 //!   `x ≥ ((RANS_L >> SCALE_BITS) << 8) · freq`, the decoder refills
 //!   while `x < RANS_L`. All arithmetic fits u32 (checked in tests).
-//! * **2-way interleave**: symbol `i` goes to lane `i & 1`. The encoder
-//!   walks the stream backwards pushing bytes into a scratch buffer that
-//!   is reversed once at the end; the decoder walks forwards, so its
-//!   byte reads replay the encoder's pushes in exact reverse order and
-//!   the two lanes can share one byte stream. Lane 1 is flushed before
-//!   lane 0 (LSB-first), so after the reversal the stream opens with
-//!   lane 0's state big-endian, then lane 1's.
-//! * Decoding must return both lanes to exactly [`RANS_L`] — a free
+//! * **N-way interleave** (N ∈ {2, 4, 8}): symbol `i` goes to lane
+//!   `i mod N`, giving the CPU N independent dependency chains. The
+//!   encoder walks the stream backwards pushing bytes into a scratch
+//!   buffer that is reversed once at the end; the decoder walks forwards,
+//!   so its byte reads replay the encoder's pushes in exact reverse order
+//!   and all lanes share one byte stream. Lanes are flushed in order
+//!   N−1 .. 0 (LSB-first), so after the reversal the stream opens with
+//!   lane 0's state big-endian, then lane 1's, and so on.
+//! * Decoding must return every lane to exactly [`RANS_L`] — a free
 //!   integrity check on the whole stream.
 //!
-//! Serialized form (mode byte [`MODE_RANS`] keeps it distinguishable
-//! from the Huffman stream's 0 = raw / 1 = huffman modes):
+//! Each lane width is its **own wire format** with its own mode byte
+//! ([`MODE_RANS`] = 2-way, the frozen legacy format; [`MODE_RANS4`];
+//! [`MODE_RANS8`]) — the widths are not bit-compatible with each other,
+//! so a stream always decodes with the interleave it was encoded with.
+//!
+//! Serialized form (same layout for every width; only the mode byte and
+//! the number of flushed states differ):
 //!
 //! ```text
-//! u8 mode=2 | u32 count | u32 n_syms | n_syms × (i32 sym, u16 freq)
-//!           | u32 stream_len | stream
+//! u8 mode | u32 count | u32 n_syms | n_syms × (i32 sym, u16 freq)
+//!         | u32 stream_len | stream (opens with N big-endian states)
 //! ```
 
+use crate::compress::kernels;
 use crate::compress::quant::{code_histogram, FAST_RADIUS};
 use std::collections::HashMap;
 
@@ -43,8 +50,24 @@ pub const RANS_L: u32 = 1 << 23;
 /// Alphabets larger than this cannot be normalized (each symbol needs
 /// frequency ≥ 1); the caller falls back to Huffman/raw.
 pub const MAX_SYMS: usize = SCALE as usize;
-/// Leading mode byte of a serialized rANS stream.
+/// Leading mode byte of a serialized 2-way rANS stream (the frozen
+/// legacy format — `ec=rans` golden bytes).
 pub const MODE_RANS: u8 = 2;
+/// Leading mode byte of a 4-way interleaved stream (`ec=rans4`).
+pub const MODE_RANS4: u8 = 3;
+/// Leading mode byte of an 8-way interleaved stream (`ec=rans8`).
+pub const MODE_RANS8: u8 = 4;
+
+/// Mode byte for an `N`-way stream. Compile-time error surface: any
+/// monomorphization outside {2, 4, 8} panics in const evaluation.
+const fn mode_for_lanes(n: usize) -> u8 {
+    match n {
+        2 => MODE_RANS,
+        4 => MODE_RANS4,
+        8 => MODE_RANS8,
+        _ => panic!("unsupported rANS lane width"),
+    }
+}
 
 /// Normalize histogram counts to sum exactly [`SCALE`], each ≥ 1.
 /// Requires `hist.len() <= MAX_SYMS` and a nonzero total.
@@ -83,10 +106,32 @@ fn normalize_freqs(hist: &[(i32, u64)], total: u64) -> Vec<u32> {
 
 /// Encode a code stream against its own histogram (as produced by
 /// [`code_histogram`] **from these same codes** — a mismatched histogram
-/// panics, which is why this stays crate-internal). Returns `None` when
-/// rANS cannot apply (empty stream or alphabet too large for the
-/// normalization).
+/// panics, which is why this stays crate-internal) in the frozen 2-way
+/// format. Returns `None` when rANS cannot apply (empty stream or
+/// alphabet too large for the normalization).
 pub(crate) fn encode_with_hist(codes: &[i32], hist: &[(i32, u64)]) -> Option<Vec<u8>> {
+    encode_lanes::<2>(codes, hist)
+}
+
+/// [`encode_with_hist`] at a runtime-chosen lane width (2, 4 or 8) —
+/// the per-width registry coders funnel through here.
+pub(crate) fn encode_with_hist_lanes(
+    codes: &[i32],
+    hist: &[(i32, u64)],
+    lanes: usize,
+) -> Option<Vec<u8>> {
+    match lanes {
+        2 => encode_lanes::<2>(codes, hist),
+        4 => encode_lanes::<4>(codes, hist),
+        8 => encode_lanes::<8>(codes, hist),
+        _ => None,
+    }
+}
+
+/// The `N`-way encoder core. One generic body serves every width — the
+/// `N = 2` monomorphization is byte-identical to the legacy 2-way coder
+/// (the frozen golden-bytes test pins it).
+fn encode_lanes<const N: usize>(codes: &[i32], hist: &[(i32, u64)]) -> Option<Vec<u8>> {
     let n_syms = hist.len();
     if codes.is_empty() || n_syms == 0 || n_syms > MAX_SYMS {
         return None;
@@ -110,28 +155,62 @@ pub(crate) fn encode_with_hist(codes: &[i32], hist: &[(i32, u64)]) -> Option<Vec
             overflow.insert(sym, i as u32);
         }
     }
-    // Backward pass: lane i&1, bytes pushed LSB-first then globally
+    // Backward pass: lane i mod N, bytes pushed LSB-first then globally
     // reversed (see module docs).
-    let mut x0: u32 = RANS_L;
-    let mut x1: u32 = RANS_L;
-    let mut rev: Vec<u8> = Vec::with_capacity(codes.len() / 2 + 16);
-    for i in (0..codes.len()).rev() {
-        let c = codes[i];
-        let si = if (-FAST_RADIUS..=FAST_RADIUS).contains(&c) {
-            flat_idx[(c + FAST_RADIUS) as usize] as usize
-        } else {
-            overflow[&c] as usize
-        };
-        let f = freqs[si];
-        let x = if i & 1 == 0 { &mut x0 } else { &mut x1 };
-        let x_max = ((RANS_L >> SCALE_BITS) << 8) * f;
-        while *x >= x_max {
-            rev.push(*x as u8);
-            *x >>= 8;
+    let mut lanes = [RANS_L; N];
+    let mut rev: Vec<u8> = Vec::with_capacity(codes.len() / 2 + 4 * N + 8);
+    if kernels::scalar_kernels() {
+        for i in (0..codes.len()).rev() {
+            let c = codes[i];
+            let si = if (-FAST_RADIUS..=FAST_RADIUS).contains(&c) {
+                flat_idx[(c + FAST_RADIUS) as usize] as usize
+            } else {
+                overflow[&c] as usize
+            };
+            let f = freqs[si];
+            let x = &mut lanes[i % N];
+            let x_max = ((RANS_L >> SCALE_BITS) << 8) * f;
+            while *x >= x_max {
+                rev.push(*x as u8);
+                *x >>= 8;
+            }
+            *x = ((*x / f) << SCALE_BITS) + (*x % f) + starts[si];
         }
-        *x = ((*x / f) << SCALE_BITS) + (*x % f) + starts[si];
+    } else {
+        for i in (0..codes.len()).rev() {
+            // SAFETY: `i < codes.len()` by the loop range.
+            let c = unsafe { *codes.get_unchecked(i) };
+            let si = if (-FAST_RADIUS..=FAST_RADIUS).contains(&c) {
+                // SAFETY: the range check puts `c + FAST_RADIUS` in
+                // `[0, 2 * FAST_RADIUS]` and `flat_idx.len()` is exactly
+                // `2 * FAST_RADIUS + 1`.
+                unsafe { *flat_idx.get_unchecked((c + FAST_RADIUS) as usize) as usize }
+            } else {
+                overflow[&c] as usize
+            };
+            if si == u32::MAX as usize {
+                // Cold: a symbol missing from the histogram violates the
+                // crate-internal contract — keep the loud panic of the
+                // checked path rather than indexing out of bounds.
+                panic!("rANS: symbol {c} not in histogram");
+            }
+            // SAFETY: `si` was written into `flat_idx`/`overflow` by the
+            // enumerate loop above, so `si < n_syms == freqs.len() ==
+            // starts.len()` (the sentinel case panicked just before).
+            let (f, start) = unsafe { (*freqs.get_unchecked(si), *starts.get_unchecked(si)) };
+            // `i % N` with N a power of two compiles to a mask; lanes is a
+            // fixed-size array so this index is `< N` by construction.
+            let x = &mut lanes[i % N];
+            let x_max = ((RANS_L >> SCALE_BITS) << 8) * f;
+            while *x >= x_max {
+                rev.push(*x as u8);
+                *x >>= 8;
+            }
+            *x = ((*x / f) << SCALE_BITS) + (*x % f) + start;
+        }
     }
-    for x in [x1, x0] {
+    for l in (0..N).rev() {
+        let x = lanes[l];
         rev.push(x as u8);
         rev.push((x >> 8) as u8);
         rev.push((x >> 16) as u8);
@@ -139,7 +218,7 @@ pub(crate) fn encode_with_hist(codes: &[i32], hist: &[(i32, u64)]) -> Option<Vec
     }
     rev.reverse();
     let mut out = Vec::with_capacity(1 + 12 + n_syms * 6 + rev.len());
-    out.push(MODE_RANS);
+    out.push(mode_for_lanes(N));
     out.extend_from_slice(&(codes.len() as u32).to_le_bytes());
     out.extend_from_slice(&(n_syms as u32).to_le_bytes());
     for (i, &(sym, _)) in hist.iter().enumerate() {
@@ -151,12 +230,13 @@ pub(crate) fn encode_with_hist(codes: &[i32], hist: &[(i32, u64)]) -> Option<Vec
     Some(out)
 }
 
-/// Encode straight from codes (histogram computed internally).
+/// Encode straight from codes (histogram computed internally), 2-way.
 pub fn encode_to_bytes(codes: &[i32]) -> Option<Vec<u8>> {
     encode_with_hist(codes, &code_histogram(codes))
 }
 
-/// Decode a serialized rANS stream, returning (codes, bytes consumed).
+/// Decode a serialized rANS stream of any lane width, returning
+/// (codes, bytes consumed).
 ///
 /// Unbounded form for callers decoding their own encodings; untrusted
 /// streams should go through [`decode_bounded`] — a full-`SCALE`
@@ -168,11 +248,23 @@ pub fn decode_from_bytes(buf: &[u8]) -> anyhow::Result<(Vec<i32>, usize)> {
 
 /// [`decode_from_bytes`] with a caller-known cap on the symbol count
 /// (e.g. the layer's `numel` from the already-parsed blob header).
-/// Streams declaring more symbols are rejected before any work.
+/// Streams declaring more symbols are rejected before any work. The
+/// leading mode byte selects the interleave width the stream was
+/// encoded with.
 pub fn decode_bounded(buf: &[u8], max_count: usize) -> anyhow::Result<(Vec<i32>, usize)> {
+    match buf.first() {
+        Some(&MODE_RANS) => decode_lanes::<2>(buf, max_count),
+        Some(&MODE_RANS4) => decode_lanes::<4>(buf, max_count),
+        Some(&MODE_RANS8) => decode_lanes::<8>(buf, max_count),
+        _ => anyhow::bail!("not a rANS stream"),
+    }
+}
+
+/// The `N`-way decoder core.
+fn decode_lanes<const N: usize>(buf: &[u8], max_count: usize) -> anyhow::Result<(Vec<i32>, usize)> {
     use anyhow::bail;
-    if buf.first() != Some(&MODE_RANS) {
-        bail!("not a rANS stream");
+    if buf.first() != Some(&mode_for_lanes(N)) {
+        bail!("rANS stream mode does not match the {N}-way decoder");
     }
     let mut pos = 1usize;
     let rd_u32 = |buf: &[u8], pos: &mut usize| -> anyhow::Result<u32> {
@@ -220,7 +312,7 @@ pub fn decode_bounded(buf: &[u8], max_count: usize) -> anyhow::Result<(Vec<i32>,
     if count == 0 {
         return Ok((Vec::new(), pos));
     }
-    if stream_len < 8 {
+    if stream_len < 4 * N {
         bail!("rANS payload shorter than the state flush");
     }
     // slot -> table index, plus per-symbol interval starts.
@@ -234,28 +326,64 @@ pub fn decode_bounded(buf: &[u8], max_count: usize) -> anyhow::Result<(Vec<i32>,
         }
         acc += f;
     }
-    let mut x0 = u32::from_be_bytes(stream[0..4].try_into().unwrap());
-    let mut x1 = u32::from_be_bytes(stream[4..8].try_into().unwrap());
-    let mut sp = 8usize;
+    let mut lanes = [0u32; N];
+    for (l, x) in lanes.iter_mut().enumerate() {
+        *x = u32::from_be_bytes(stream[l * 4..l * 4 + 4].try_into().unwrap());
+    }
+    let mut sp = 4 * N;
     let mut out = Vec::with_capacity(count.min(1 << 22));
-    for i in 0..count {
-        let x = if i & 1 == 0 { &mut x0 } else { &mut x1 };
-        let slot = *x & (SCALE - 1);
-        let si = slot_sym[slot as usize] as usize;
-        out.push(syms[si]);
-        // u64 intermediate: corrupt initial states could otherwise
-        // overflow the u32 multiply; valid states never do.
-        let nx = freqs[si] as u64 * (*x >> SCALE_BITS) as u64 + (slot - starts[si]) as u64;
-        *x = nx as u32;
-        while *x < RANS_L {
-            if sp >= stream.len() {
-                bail!("rANS stream underrun at symbol {i}");
+    if kernels::scalar_kernels() {
+        for i in 0..count {
+            let x = &mut lanes[i % N];
+            let slot = *x & (SCALE - 1);
+            let si = slot_sym[slot as usize] as usize;
+            out.push(syms[si]);
+            // u64 intermediate: corrupt initial states could otherwise
+            // overflow the u32 multiply; valid states never do.
+            let nx = freqs[si] as u64 * (*x >> SCALE_BITS) as u64 + (slot - starts[si]) as u64;
+            *x = nx as u32;
+            while *x < RANS_L {
+                if sp >= stream.len() {
+                    bail!("rANS stream underrun at symbol {i}");
+                }
+                *x = (*x << 8) | stream[sp] as u32;
+                sp += 1;
             }
-            *x = (*x << 8) | stream[sp] as u32;
-            sp += 1;
+        }
+    } else {
+        for i in 0..count {
+            let x = &mut lanes[i % N];
+            let slot = *x & (SCALE - 1);
+            // SAFETY: `slot = x & (SCALE - 1) < SCALE` and `slot_sym` has
+            // exactly `SCALE` entries.
+            let si = unsafe { *slot_sym.get_unchecked(slot as usize) } as usize;
+            // SAFETY: every `slot_sym` entry was written as `i < n_syms`
+            // in the table-build loop (`sum == SCALE` covers all slots),
+            // and `syms`, `freqs`, `starts` all have length `n_syms`.
+            let (sym, f, start) = unsafe {
+                (
+                    *syms.get_unchecked(si),
+                    *freqs.get_unchecked(si),
+                    *starts.get_unchecked(si),
+                )
+            };
+            out.push(sym);
+            // u64 intermediate: corrupt initial states could otherwise
+            // overflow the u32 multiply; valid states never do.
+            let nx = f as u64 * (*x >> SCALE_BITS) as u64 + (slot - start) as u64;
+            *x = nx as u32;
+            while *x < RANS_L {
+                if sp >= stream.len() {
+                    bail!("rANS stream underrun at symbol {i}");
+                }
+                // SAFETY: the bound check just above guarantees
+                // `sp < stream.len()`.
+                *x = (*x << 8) | unsafe { *stream.get_unchecked(sp) } as u32;
+                sp += 1;
+            }
         }
     }
-    if x0 != RANS_L || x1 != RANS_L {
+    if lanes.iter().any(|&x| x != RANS_L) {
         bail!("rANS final-state mismatch (corrupt stream)");
     }
     Ok((out, pos))
@@ -273,6 +401,15 @@ mod tests {
         let (got, used) = decode_from_bytes(&bytes).expect("decodable");
         assert_eq!(got, codes);
         assert_eq!(used, bytes.len());
+        bytes
+    }
+
+    fn roundtrip_lanes(codes: &[i32], lanes: usize) -> Vec<u8> {
+        let bytes = encode_with_hist_lanes(codes, &code_histogram(codes), lanes)
+            .expect("encodable");
+        let (got, used) = decode_from_bytes(&bytes).expect("decodable");
+        assert_eq!(got, codes, "lanes={lanes}");
+        assert_eq!(used, bytes.len(), "lanes={lanes}");
         bytes
     }
 
@@ -296,6 +433,33 @@ mod tests {
         let (got, used) = decode_from_bytes(&bytes).unwrap();
         assert_eq!(got, vec![7, 7, 7, 7]);
         assert_eq!(used, bytes.len());
+    }
+
+    #[test]
+    fn golden_wide_lane_streams_are_frozen() {
+        // The rans4/rans8 twins of the frozen 2-way golden stream: same
+        // header layout, their own mode byte, N parked states.
+        for (lanes, mode) in [(4usize, MODE_RANS4), (8usize, MODE_RANS8)] {
+            let bytes =
+                encode_with_hist_lanes(&[7, 7, 7, 7], &code_histogram(&[7, 7, 7, 7]), lanes)
+                    .unwrap();
+            #[rustfmt::skip]
+            let mut expect: Vec<u8> = vec![
+                mode,           // MODE_RANS4 / MODE_RANS8
+                4, 0, 0, 0,     // count
+                1, 0, 0, 0,     // n_syms
+                7, 0, 0, 0,     // symbol 7
+                0, 16,          // freq 4096
+                (4 * lanes) as u8, 0, 0, 0, // stream length
+            ];
+            for _ in 0..lanes {
+                expect.extend_from_slice(&[0, 128, 0, 0]); // parked state
+            }
+            assert_eq!(bytes, expect, "lanes={lanes}");
+            let (got, used) = decode_from_bytes(&bytes).unwrap();
+            assert_eq!(got, vec![7, 7, 7, 7]);
+            assert_eq!(used, bytes.len());
+        }
     }
 
     #[test]
@@ -331,6 +495,54 @@ mod tests {
         // Odd lengths exercise the interleave parity.
         roundtrip(&[5]);
         roundtrip(&[5, -5, 5]);
+    }
+
+    #[test]
+    fn wide_lanes_roundtrip_adversarial_distributions() {
+        let mut rng = Rng::new(17);
+        let geo: Vec<i32> = (0..20_000)
+            .map(|_| {
+                let mut v = 0i32;
+                while rng.chance(0.6) {
+                    v += 1;
+                }
+                v
+            })
+            .collect();
+        let single = vec![-3; 4097];
+        let uniform: Vec<i32> = (0..8192).map(|i| i % 16).collect();
+        for lanes in [4usize, 8] {
+            roundtrip_lanes(&single, lanes);
+            roundtrip_lanes(&uniform, lanes);
+            roundtrip_lanes(&geo, lanes);
+            // Lengths around the lane count exercise every tail parity.
+            for n in 1..=39 {
+                let codes: Vec<i32> = (0..n).map(|i| (i % 5) as i32 - 2).collect();
+                roundtrip_lanes(&codes, lanes);
+            }
+        }
+    }
+
+    #[test]
+    fn lane_widths_are_distinct_wire_formats() {
+        let codes: Vec<i32> = (0..999).map(|i| (i % 11) as i32 - 5).collect();
+        let hist = code_histogram(&codes);
+        let b2 = encode_with_hist_lanes(&codes, &hist, 2).unwrap();
+        let b4 = encode_with_hist_lanes(&codes, &hist, 4).unwrap();
+        let b8 = encode_with_hist_lanes(&codes, &hist, 8).unwrap();
+        assert_eq!(b2[0], MODE_RANS);
+        assert_eq!(b4[0], MODE_RANS4);
+        assert_eq!(b8[0], MODE_RANS8);
+        // Same header (count + table), different stream bytes: the widths
+        // must never be confused for each other.
+        assert_ne!(b2, b4);
+        assert_ne!(b4, b8);
+        // Unsupported widths decline instead of inventing a format.
+        assert!(encode_with_hist_lanes(&codes, &hist, 3).is_none());
+        // All decode through the same mode-dispatched entry point.
+        for b in [&b2, &b4, &b8] {
+            assert_eq!(decode_from_bytes(b).unwrap().0, codes);
+        }
     }
 
     #[test]
@@ -370,17 +582,22 @@ mod tests {
 
     #[test]
     fn corrupt_streams_error_not_panic() {
-        let bytes = encode_to_bytes(&[1, 2, 3, 1, 2, 1, 1, 1, 0, 0, 0]).unwrap();
-        assert!(decode_from_bytes(&bytes[..bytes.len() - 3]).is_err());
+        for lanes in [2usize, 4, 8] {
+            let codes = [1, 2, 3, 1, 2, 1, 1, 1, 0, 0, 0];
+            let bytes = encode_with_hist_lanes(&codes, &code_histogram(&codes), lanes).unwrap();
+            assert!(decode_from_bytes(&bytes[..bytes.len() - 3]).is_err());
+            for i in 1..bytes.len() {
+                let mut bad = bytes.clone();
+                bad[i] ^= 0xFF;
+                // Any outcome but a panic is acceptable; most flips are
+                // caught by the table checks or the final-state invariant.
+                let _ = decode_from_bytes(&bad);
+            }
+        }
         assert!(decode_from_bytes(&[]).is_err());
         assert!(decode_from_bytes(&[MODE_RANS]).is_err());
-        for i in 1..bytes.len() {
-            let mut bad = bytes.clone();
-            bad[i] ^= 0xFF;
-            // Any outcome but a panic is acceptable; most flips are caught
-            // by the table checks or the final-state invariant.
-            let _ = decode_from_bytes(&bad);
-        }
+        assert!(decode_from_bytes(&[MODE_RANS4]).is_err());
+        assert!(decode_from_bytes(&[MODE_RANS8]).is_err());
     }
 
     #[test]
@@ -390,13 +607,45 @@ mod tests {
             let spread = 1 + rng.next_below(1000) as i32;
             let codes: Vec<i32> =
                 (0..n).map(|_| rng.next_below(spread as usize * 2) as i32 - spread).collect();
-            let bytes = encode_to_bytes(&codes).ok_or("declined")?;
+            let lanes = [2usize, 4, 8][rng.next_below(3)];
+            let bytes = encode_with_hist_lanes(&codes, &code_histogram(&codes), lanes)
+                .ok_or("declined")?;
             let (got, used) = decode_from_bytes(&bytes).map_err(|e| e.to_string())?;
             if got != codes {
                 return Err("mismatch".into());
             }
             if used != bytes.len() {
                 return Err(format!("used {used} != len {}", bytes.len()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scalar_and_fast_twins_agree_bytewise() {
+        prop::check("rans scalar==fast", 60, |rng| {
+            let n = prop::arb_len(rng, 4000);
+            let spread = 1 + rng.next_below(500) as i32;
+            let codes: Vec<i32> =
+                (0..n).map(|_| rng.next_below(spread as usize * 2) as i32 - spread).collect();
+            let hist = code_histogram(&codes);
+            for lanes in [2usize, 4, 8] {
+                let fast = encode_with_hist_lanes(&codes, &hist, lanes).ok_or("declined")?;
+                let slow = kernels::with_scalar_kernels(|| {
+                    encode_with_hist_lanes(&codes, &hist, lanes)
+                })
+                .ok_or("declined")?;
+                if fast != slow {
+                    return Err(format!("lanes={lanes}: encoded bytes diverge"));
+                }
+                let (df, _) = decode_from_bytes(&fast).map_err(|e| e.to_string())?;
+                let ds = kernels::with_scalar_kernels(|| {
+                    decode_from_bytes(&fast).map(|x| x.0)
+                })
+                .map_err(|e| e.to_string())?;
+                if df != codes || ds != codes {
+                    return Err(format!("lanes={lanes}: decode mismatch"));
+                }
             }
             Ok(())
         });

@@ -9,7 +9,19 @@
 //! this pass and are passed in as scalars, so the pass is purely
 //! elementwise — that is what makes the native and PJRT engines agree
 //! bit-for-bit (DESIGN.md §1).
+//!
+//! The pass ships as a **twin pair** (DESIGN.md §12): a bounds-checked
+//! scalar kernel and a [`kernels::CHUNK`]-wide chunked kernel with
+//! unchecked indexing that the autovectorizer can turn into SIMD. Both
+//! twins run the identical per-element f32 steps (`encode_step_pred`,
+//! the shared `predict_mag`) in the identical order, so their output streams are
+//! bit-identical by construction; the registry-wide property tests
+//! assert it. The warm-state (`have_prev`) path is the hot one — round-1
+//! (no prediction) and degenerate `2Δ ≤ 0` inputs always take the scalar
+//! twin.
 
+use super::kernels;
+use super::kernels::CHUNK;
 use super::predictor::magnitude::ema_norm_step;
 use super::quant::{CODE_RADIUS, ESCAPE_CODE};
 
@@ -49,6 +61,39 @@ fn predict_mag(prev_abs: f32, m: &mut f32, p: &FusedParams, inv_sigma_prev: f32)
     ema_norm_step(p.beta, m, prev_abs, p.mu_prev, inv_sigma_prev, p.mu_curr, p.sigma_curr)
 }
 
+/// The escape path is cold (outlined) to keep the common path branch-light.
+#[cold]
+fn escape(out: &mut FusedEncodeOut, x: f32) {
+    out.codes.push(ESCAPE_CODE);
+    out.escapes.push(x);
+    out.recon.push(x);
+}
+
+/// One predicted-path quantizer step: code, reconstruction and the
+/// in-bound test. Shared verbatim by the scalar twin, the chunk body and
+/// the chunk tail — the single definition is what makes the paths
+/// bit-identical.
+#[inline]
+fn encode_step_pred(
+    x: f32,
+    g_hat: f32,
+    p: &FusedParams,
+    inv_two_delta: f32,
+) -> (i32, f32, bool) {
+    // floor(x + 0.5) (round-half-up) — matches the Pallas kernel
+    // exactly; jnp.round would be half-to-even and f32::round
+    // half-away-from-zero, which disagree at bin boundaries.
+    let code_f = ((x - g_hat) * inv_two_delta + 0.5).floor();
+    let code = code_f as i32;
+    let r = g_hat + code as f32 * p.two_delta;
+    let ok = x.is_finite()
+        && p.two_delta > 0.0
+        && code_f.abs() <= CODE_RADIUS as f32
+        && (r - x).abs() <= p.delta
+        && r.is_finite();
+    (code, r, ok)
+}
+
 /// Encoder-side fused pass.
 ///
 /// `prev_abs` is `|g̃^(t-1)|` (empty slice on round 1 ⇒ no prediction,
@@ -80,32 +125,34 @@ pub fn fused_encode(
     out.recon.reserve(n);
     let inv_sigma_prev = 1.0 / p.sigma_prev.max(SIGMA_EPS);
     let inv_two_delta = if p.two_delta > 0.0 { 1.0 / p.two_delta } else { 0.0 };
-    // Tight inner loop: one slice-zipped pass with no bounds checks; the
-    // escape path is cold (outlined) to keep the common path branch-light.
-    #[cold]
-    fn escape(out: &mut FusedEncodeOut, x: f32) {
-        out.codes.push(ESCAPE_CODE);
-        out.escapes.push(x);
-        out.recon.push(x);
+    // The chunked kernel covers the warm-state hot path only; round 1
+    // and degenerate bins (2Δ ≤ 0 ⇒ everything escapes) stay scalar.
+    if have_prev && p.two_delta > 0.0 && !kernels::scalar_kernels() {
+        encode_fast_prev(grad, prev_abs, memory, signs, p, inv_sigma_prev, inv_two_delta, out);
+    } else {
+        encode_scalar(grad, prev_abs, memory, signs, p, inv_sigma_prev, inv_two_delta, out);
     }
-    if have_prev {
+}
+
+/// Scalar twin: one slice-zipped bounds-check-free pass.
+#[allow(clippy::too_many_arguments)]
+fn encode_scalar(
+    grad: &[f32],
+    prev_abs: &[f32],
+    memory: &mut [f32],
+    signs: &[f32],
+    p: &FusedParams,
+    inv_sigma_prev: f32,
+    inv_two_delta: f32,
+    out: &mut FusedEncodeOut,
+) {
+    if !prev_abs.is_empty() {
         for (((&x, &pa), m), &s) in
             grad.iter().zip(prev_abs.iter()).zip(memory.iter_mut()).zip(signs.iter())
         {
             let a_hat = predict_mag(pa, m, p, inv_sigma_prev);
-            let g_hat = s * a_hat;
-            // floor(x + 0.5) (round-half-up) — matches the Pallas kernel
-            // exactly; jnp.round would be half-to-even and f32::round
-            // half-away-from-zero, which disagree at bin boundaries.
-            let code_f = ((x - g_hat) * inv_two_delta + 0.5).floor();
-            let code = code_f as i32;
-            let r = g_hat + code as f32 * p.two_delta;
-            if x.is_finite()
-                && p.two_delta > 0.0
-                && code_f.abs() <= CODE_RADIUS as f32
-                && (r - x).abs() <= p.delta
-                && r.is_finite()
-            {
+            let (code, r, ok) = encode_step_pred(x, s * a_hat, p, inv_two_delta);
+            if ok {
                 out.codes.push(code);
                 out.recon.push(r);
             } else {
@@ -114,6 +161,8 @@ pub fn fused_encode(
         }
     } else {
         for &x in grad {
+            // Round 1: no prediction term at all (not even `- 0.0`), so
+            // the wire stream matches the seed bit-for-bit.
             let code_f = (x * inv_two_delta + 0.5).floor();
             let code = code_f as i32;
             let r = code as f32 * p.two_delta;
@@ -128,6 +177,83 @@ pub fn fused_encode(
             } else {
                 escape(out, x);
             }
+        }
+    }
+}
+
+/// Fast twin of the warm-state encode: `CHUNK`-wide array-ref chunks so
+/// the per-lane loops have compile-time trip counts (autovectorizable),
+/// with a per-chunk ok-mask — all-in-bound chunks bulk-extend the output,
+/// chunks containing an escape fall back to a per-lane loop.
+#[allow(clippy::too_many_arguments)]
+fn encode_fast_prev(
+    grad: &[f32],
+    prev_abs: &[f32],
+    memory: &mut [f32],
+    signs: &[f32],
+    p: &FusedParams,
+    inv_sigma_prev: f32,
+    inv_two_delta: f32,
+    out: &mut FusedEncodeOut,
+) {
+    let n = grad.len();
+    debug_assert_eq!(prev_abs.len(), n);
+    debug_assert_eq!(memory.len(), n);
+    debug_assert_eq!(signs.len(), n);
+    let chunks = n / CHUNK;
+    for c in 0..chunks {
+        let base = c * CHUNK;
+        // SAFETY: `base + CHUNK = (c + 1) * CHUNK ≤ chunks * CHUNK ≤ n`,
+        // and `grad`, `prev_abs`, `signs` all have length exactly `n`
+        // (asserted by the dispatcher, debug-asserted above), so each
+        // `CHUNK`-wide array ref is fully in bounds.
+        let (g, pa, s) = unsafe {
+            (
+                &*(grad.as_ptr().add(base) as *const [f32; CHUNK]),
+                &*(prev_abs.as_ptr().add(base) as *const [f32; CHUNK]),
+                &*(signs.as_ptr().add(base) as *const [f32; CHUNK]),
+            )
+        };
+        // SAFETY: same bound as above with `memory.len() == n`; this is
+        // the only live view into `memory` (the shared refs above point
+        // into distinct slices), so the mutable array ref cannot alias.
+        let m = unsafe { &mut *(memory.as_mut_ptr().add(base) as *mut [f32; CHUNK]) };
+        let mut code = [0i32; CHUNK];
+        let mut rec = [0f32; CHUNK];
+        let mut all_ok = true;
+        let mut ok = [false; CHUNK];
+        for l in 0..CHUNK {
+            let a_hat = predict_mag(pa[l], &mut m[l], p, inv_sigma_prev);
+            let (ci, r, o) = encode_step_pred(g[l], s[l] * a_hat, p, inv_two_delta);
+            code[l] = ci;
+            rec[l] = r;
+            ok[l] = o;
+            all_ok &= o;
+        }
+        if all_ok {
+            out.codes.extend_from_slice(&code);
+            out.recon.extend_from_slice(&rec);
+        } else {
+            for l in 0..CHUNK {
+                if ok[l] {
+                    out.codes.push(code[l]);
+                    out.recon.push(rec[l]);
+                } else {
+                    escape(out, g[l]);
+                }
+            }
+        }
+    }
+    // Scalar tail for the final `n % CHUNK` elements — same shared
+    // per-element step, so the seam is invisible in the output.
+    for i in chunks * CHUNK..n {
+        let a_hat = predict_mag(prev_abs[i], &mut memory[i], p, inv_sigma_prev);
+        let (code, r, ok) = encode_step_pred(grad[i], signs[i] * a_hat, p, inv_two_delta);
+        if ok {
+            out.codes.push(code);
+            out.recon.push(r);
+        } else {
+            escape(out, grad[i]);
         }
     }
 }
@@ -160,6 +286,26 @@ pub fn fused_decode(
     recon.clear();
     recon.reserve(n);
     let inv_sigma_prev = 1.0 / p.sigma_prev.max(SIGMA_EPS);
+    if have_prev && !kernels::scalar_kernels() {
+        decode_fast_prev(codes, escapes, prev_abs, memory, signs, p, inv_sigma_prev, recon)
+    } else {
+        decode_scalar(codes, escapes, prev_abs, memory, signs, p, inv_sigma_prev, recon)
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn decode_scalar(
+    codes: &[i32],
+    escapes: &[f32],
+    prev_abs: &[f32],
+    memory: &mut [f32],
+    signs: &[f32],
+    p: &FusedParams,
+    inv_sigma_prev: f32,
+    recon: &mut Vec<f32>,
+) -> anyhow::Result<()> {
+    let n = codes.len();
+    let have_prev = !prev_abs.is_empty();
     let mut esc = escapes.iter();
     for i in 0..n {
         let g_hat = if have_prev {
@@ -169,12 +315,95 @@ pub fn fused_decode(
             0.0
         };
         if codes[i] == ESCAPE_CODE {
-            recon.push(*esc.next().ok_or_else(|| anyhow::anyhow!("escape stream exhausted"))?);
+            let v = *esc
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("escape stream exhausted"))?;
+            recon.push(v);
         } else {
             recon.push(g_hat + codes[i] as f32 * p.two_delta);
         }
     }
     if esc.next().is_some() {
+        anyhow::bail!("unconsumed escapes");
+    }
+    Ok(())
+}
+
+/// Fast twin of the warm-state decode — same chunking as the encoder;
+/// escape-free chunks (the common case: escapes are rare by design) run
+/// a branchless reconstruct loop.
+#[allow(clippy::too_many_arguments)]
+fn decode_fast_prev(
+    codes: &[i32],
+    escapes: &[f32],
+    prev_abs: &[f32],
+    memory: &mut [f32],
+    signs: &[f32],
+    p: &FusedParams,
+    inv_sigma_prev: f32,
+    recon: &mut Vec<f32>,
+) -> anyhow::Result<()> {
+    let n = codes.len();
+    debug_assert_eq!(prev_abs.len(), n);
+    debug_assert_eq!(memory.len(), n);
+    debug_assert_eq!(signs.len(), n);
+    let chunks = n / CHUNK;
+    let mut esc = 0usize;
+    for c in 0..chunks {
+        let base = c * CHUNK;
+        // SAFETY: `base + CHUNK ≤ chunks * CHUNK ≤ n` and `codes`,
+        // `prev_abs`, `signs` all have length `n` (bailed on mismatch by
+        // the dispatcher, debug-asserted above) — the array refs are in
+        // bounds.
+        let (co, pa, s) = unsafe {
+            (
+                &*(codes.as_ptr().add(base) as *const [i32; CHUNK]),
+                &*(prev_abs.as_ptr().add(base) as *const [f32; CHUNK]),
+                &*(signs.as_ptr().add(base) as *const [f32; CHUNK]),
+            )
+        };
+        // SAFETY: same bound with `memory.len() == n`; the only mutable
+        // view, no aliasing with the shared refs above.
+        let m = unsafe { &mut *(memory.as_mut_ptr().add(base) as *mut [f32; CHUNK]) };
+        let mut ghat = [0f32; CHUNK];
+        let mut any_escape = false;
+        for l in 0..CHUNK {
+            let a_hat = predict_mag(pa[l], &mut m[l], p, inv_sigma_prev);
+            ghat[l] = s[l] * a_hat;
+            any_escape |= co[l] == ESCAPE_CODE;
+        }
+        if !any_escape {
+            for l in 0..CHUNK {
+                recon.push(ghat[l] + co[l] as f32 * p.two_delta);
+            }
+        } else {
+            for l in 0..CHUNK {
+                if co[l] == ESCAPE_CODE {
+                    let v = *escapes
+                        .get(esc)
+                        .ok_or_else(|| anyhow::anyhow!("escape stream exhausted"))?;
+                    esc += 1;
+                    recon.push(v);
+                } else {
+                    recon.push(ghat[l] + co[l] as f32 * p.two_delta);
+                }
+            }
+        }
+    }
+    for i in chunks * CHUNK..n {
+        let a_hat = predict_mag(prev_abs[i], &mut memory[i], p, inv_sigma_prev);
+        let g_hat = signs[i] * a_hat;
+        if codes[i] == ESCAPE_CODE {
+            let v = *escapes
+                .get(esc)
+                .ok_or_else(|| anyhow::anyhow!("escape stream exhausted"))?;
+            esc += 1;
+            recon.push(v);
+        } else {
+            recon.push(g_hat + codes[i] as f32 * p.two_delta);
+        }
+    }
+    if esc != escapes.len() {
         anyhow::bail!("unconsumed escapes");
     }
     Ok(())
@@ -288,5 +517,87 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn scalar_and_fast_twins_agree_bitwise() {
+        prop::check("fused scalar==fast", 80, |rng| {
+            let n = prop::arb_len(rng, 3000);
+            let grad = prop::arb_gradient(rng, n);
+            let prev: Vec<f32> = prop::arb_gradient(rng, n).iter().map(|x| x.abs()).collect();
+            let signs: Vec<f32> = (0..n)
+                .map(|_| match rng.next_below(3) {
+                    0 => -1.0,
+                    1 => 0.0,
+                    _ => 1.0,
+                })
+                .collect();
+            let delta = prop::arb_error_bound(rng) as f32;
+            let p = params(&grad, &prev, delta, 0.9);
+
+            let mut mem_f = Vec::new();
+            let mut fast = FusedEncodeOut::default();
+            fused_encode(&grad, &prev, &mut mem_f, &signs, &p, &mut fast);
+            let (mut mem_s, mut slow) = (Vec::new(), FusedEncodeOut::default());
+            kernels::with_scalar_kernels(|| {
+                fused_encode(&grad, &prev, &mut mem_s, &signs, &p, &mut slow);
+            });
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            if fast.codes != slow.codes {
+                return Err("codes diverge".into());
+            }
+            if bits(&fast.escapes) != bits(&slow.escapes) {
+                return Err("escapes diverge".into());
+            }
+            if bits(&fast.recon) != bits(&slow.recon) {
+                return Err("encode recon diverges".into());
+            }
+            if bits(&mem_f) != bits(&mem_s) {
+                return Err("encode memory diverges".into());
+            }
+
+            let (mut dm_f, mut dr_f) = (Vec::new(), Vec::new());
+            fused_decode(&fast.codes, &fast.escapes, &prev, &mut dm_f, &signs, &p, &mut dr_f)
+                .map_err(|e| e.to_string())?;
+            let (mut dm_s, mut dr_s) = (Vec::new(), Vec::new());
+            kernels::with_scalar_kernels(|| {
+                fused_decode(&fast.codes, &fast.escapes, &prev, &mut dm_s, &signs, &p, &mut dr_s)
+                    .map_err(|e| e.to_string())
+            })?;
+            if bits(&dr_f) != bits(&dr_s) {
+                return Err("decode recon diverges".into());
+            }
+            if bits(&dm_f) != bits(&dm_s) {
+                return Err("decode memory diverges".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fast_decode_rejects_bad_escape_streams() {
+        // The fast twin must keep the scalar twin's stream-integrity
+        // errors: a missing escape value and a surplus one both fail.
+        let n = 40;
+        let grad: Vec<f32> = (0..n).map(|i| (i as f32) * 0.01 - 0.2).collect();
+        let prev: Vec<f32> = (0..n).map(|i| 0.1 + (i as f32) * 0.005).collect();
+        let signs = vec![1.0f32; n];
+        let p = params(&grad, &prev, 0.01, 0.9);
+        let mut mem = Vec::new();
+        let mut out = FusedEncodeOut::default();
+        fused_encode(&grad, &prev, &mut mem, &signs, &p, &mut out);
+        // Force an escape code without its escape value.
+        let mut codes = out.codes.clone();
+        codes[3] = ESCAPE_CODE;
+        let (mut dm, mut dr) = (Vec::new(), Vec::new());
+        assert!(
+            fused_decode(&codes, &out.escapes, &prev, &mut dm, &signs, &p, &mut dr).is_err()
+        );
+        // Surplus escape value.
+        let mut escapes = out.escapes.clone();
+        escapes.push(1.0);
+        assert!(
+            fused_decode(&out.codes, &escapes, &prev, &mut dm, &signs, &p, &mut dr).is_err()
+        );
     }
 }

@@ -9,8 +9,9 @@
 //! Falls back to a raw 32-bit store when Huffman would not help (tiny
 //! inputs, pathological depth) — the blob records which mode was used.
 
+use crate::compress::kernels;
 use crate::compress::quant::{code_histogram, FAST_RADIUS};
-use crate::util::bitio::{BitReader, BitWriter};
+use crate::util::bitio::BitWriter;
 use std::collections::HashMap;
 
 /// Maximum canonical code length we allow. Depths beyond this trigger the
@@ -244,13 +245,44 @@ pub(crate) fn encode_with_hist(codes: &[i32], freqs: &[(i32, u64)]) -> Encoded {
         }
     }
     let mut w = BitWriter::new();
-    for &c in codes {
-        let (code, len) = if (-FAST_RADIUS..=FAST_RADIUS).contains(&c) {
-            flat_codes[(c + FAST_RADIUS) as usize]
-        } else {
-            *codes_map.get(&c).expect("symbol in table")
-        };
-        w.put_bits(code, len);
+    if kernels::scalar_kernels() {
+        // Scalar twin: one bit-queue write per symbol.
+        for &c in codes {
+            let (code, len) = if (-FAST_RADIUS..=FAST_RADIUS).contains(&c) {
+                flat_codes[(c + FAST_RADIUS) as usize]
+            } else {
+                *codes_map.get(&c).expect("symbol in table")
+            };
+            w.put_bits(code, len);
+        }
+    } else {
+        // Fast twin: batch codes into a local 64-bit accumulator and hand
+        // the bit queue whole groups. `MAX_LEN ≤ 56 < 64` guarantees any
+        // single code fits an empty accumulator, and concatenating the
+        // same codes in the same order is byte-identical to the
+        // per-symbol writes (MSB-first either way).
+        let mut acc = 0u64;
+        let mut nb = 0u8;
+        for &c in codes {
+            let (code, len) = if (-FAST_RADIUS..=FAST_RADIUS).contains(&c) {
+                // SAFETY: the range check puts `c + FAST_RADIUS` in
+                // `[0, 2 * FAST_RADIUS]`, and `flat_codes.len()` is
+                // exactly `2 * FAST_RADIUS + 1`.
+                unsafe { *flat_codes.get_unchecked((c + FAST_RADIUS) as usize) }
+            } else {
+                *codes_map.get(&c).expect("symbol in table")
+            };
+            if nb + len > 64 {
+                w.put_bits(acc, nb);
+                acc = 0;
+                nb = 0;
+            }
+            acc = (acc << len) | code;
+            nb += len;
+        }
+        if nb > 0 {
+            w.put_bits(acc, nb);
+        }
     }
     let enc = Encoded::Huffman { table, count: codes.len() as u32, bits: w.into_bytes() };
     let raw_size = 1 + 4 + codes.len() * 4;
@@ -290,6 +322,26 @@ impl<'a> FastBits<'a> {
             if self.pos >= self.buf.len() && self.n > 56 {
                 break;
             }
+        }
+    }
+    /// Fast-path refill: top the window up to ≥ 56 bits with one 8-byte
+    /// word read (Giesen-style — `pos` only advances over *fully counted*
+    /// bytes, so re-ORing the partially counted byte is idempotent: the
+    /// same stream bits land on the same accumulator positions). Falls
+    /// back to the bytewise loop within 8 bytes of the end.
+    #[inline]
+    fn refill_words(&mut self) {
+        if self.pos + 8 <= self.buf.len() {
+            // SAFETY: `pos + 8 ≤ buf.len()` was just checked, so the
+            // 8-byte read starting at `pos` is fully in bounds.
+            let w = u64::from_be_bytes(unsafe {
+                *(self.buf.as_ptr().add(self.pos) as *const [u8; 8])
+            });
+            self.acc |= w >> self.n;
+            self.pos += ((63 - self.n) >> 3) as usize;
+            self.n |= 56;
+        } else {
+            self.refill();
         }
     }
     #[inline]
@@ -375,17 +427,9 @@ pub fn decode(enc: &Encoded) -> anyhow::Result<Vec<i32>> {
                     }
                 }
             }
-            let mut fb = FastBits::new(bits);
-            let mut out = Vec::with_capacity(*count as usize);
-            for _ in 0..*count {
-                fb.refill();
-                let (sym_idx, len) = lut[fb.peek(lut_bits as u8) as usize];
-                if len != 0 {
-                    fb.consume(len);
-                    out.push(table[sym_idx as usize].0);
-                    continue;
-                }
-                // Long-code fallback (> lut_bits bits): per-bit canonical.
+            // Long-code fallback (> lut_bits bits): per-bit canonical.
+            // Cold in both twins — LUT misses are rare by construction.
+            let long_code = |fb: &mut FastBits, out: &mut Vec<i32>| -> anyhow::Result<()> {
                 let mut code = 0u64;
                 let mut l = 0usize;
                 loop {
@@ -400,8 +444,45 @@ pub fn decode(enc: &Encoded) -> anyhow::Result<Vec<i32>> {
                     {
                         let sym_idx = first_idx[l] + (code - first_code[l]) as usize;
                         out.push(table[sym_idx].0);
-                        break;
+                        return Ok(());
                     }
+                }
+            };
+            let mut fb = FastBits::new(bits);
+            let mut out = Vec::with_capacity(*count as usize);
+            if kernels::scalar_kernels() {
+                // Scalar twin: bytewise window refill, checked indexing.
+                for _ in 0..*count {
+                    fb.refill();
+                    let (sym_idx, len) = lut[fb.peek(lut_bits as u8) as usize];
+                    if len != 0 {
+                        fb.consume(len);
+                        out.push(table[sym_idx as usize].0);
+                        continue;
+                    }
+                    long_code(&mut fb, &mut out)?;
+                }
+            } else {
+                // Fast twin: word-at-a-time refill, unchecked LUT/table
+                // indexing in the hot loop.
+                for _ in 0..*count {
+                    fb.refill_words();
+                    // SAFETY: `peek(k)` returns `acc >> (64 - k)`, which is
+                    // `< 2^lut_bits = lut.len()` for `k = lut_bits ≥ 1`.
+                    let (sym_idx, len) = unsafe {
+                        *lut.get_unchecked(fb.peek(lut_bits as u8) as usize)
+                    };
+                    if len != 0 {
+                        fb.consume(len);
+                        // SAFETY: LUT entries with `len != 0` were written
+                        // exactly once in the build loop above with
+                        // `sym_idx = i < table.len()`; the `u32::MAX`
+                        // sentinel entries carry `len == 0` and never
+                        // reach this branch.
+                        out.push(unsafe { table.get_unchecked(sym_idx as usize) }.0);
+                        continue;
+                    }
+                    long_code(&mut fb, &mut out)?;
                 }
             }
             Ok(out)
@@ -529,5 +610,52 @@ mod tests {
         let codes = vec![i32::MIN, 0, 0, i32::MIN, 7];
         let enc = encode(&codes);
         assert_eq!(decode(&enc).unwrap(), codes);
+    }
+
+    #[test]
+    fn scalar_and_fast_twins_agree_bytewise() {
+        prop::check("huffman scalar==fast", 60, |rng| {
+            let n = prop::arb_len(rng, 6000);
+            let spread = 1 + rng.next_below(2000) as i32;
+            let codes: Vec<i32> =
+                (0..n).map(|_| rng.next_below(spread as usize * 2) as i32 - spread).collect();
+            let fast = encode_to_bytes(&codes);
+            let slow = kernels::with_scalar_kernels(|| encode_to_bytes(&codes));
+            if fast != slow {
+                return Err("encoded bytes diverge".into());
+            }
+            let (df, _) = decode_from_bytes(&fast).map_err(|e| e.to_string())?;
+            let ds = kernels::with_scalar_kernels(|| decode_from_bytes(&fast).map(|x| x.0))
+                .map_err(|e| e.to_string())?;
+            if df != codes || ds != codes {
+                return Err("decode mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "large stream; kernel coverage comes from the prop tests")]
+    fn deep_codes_hit_long_fallback_in_both_twins() {
+        // Fibonacci-weighted frequencies force canonical depths well past
+        // LUT_BITS, exercising the per-bit fallback of both decode twins.
+        let mut counts = vec![1u64, 1];
+        for i in 2..25 {
+            counts.push(counts[i - 1] + counts[i - 2]);
+        }
+        let mut codes = Vec::new();
+        for (sym, &cnt) in counts.iter().enumerate() {
+            for _ in 0..cnt {
+                codes.push(sym as i32 - 12);
+            }
+        }
+        let enc = encode(&codes);
+        if let Encoded::Huffman { table, .. } = &enc {
+            assert!(table.last().unwrap().1 as usize > LUT_BITS, "distribution not deep enough");
+        } else {
+            panic!("expected huffman mode");
+        }
+        assert_eq!(decode(&enc).unwrap(), codes);
+        kernels::with_scalar_kernels(|| assert_eq!(decode(&enc).unwrap(), codes));
     }
 }

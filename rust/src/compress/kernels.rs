@@ -1,0 +1,101 @@
+//! Kernel-path selection for the compressor's hot loops (§Perf,
+//! DESIGN.md §12).
+//!
+//! Every hot loop in the predict→quantize→entropy path ships as a
+//! **twin pair**: a `*_scalar` reference kernel (bounds-checked, the
+//! seed's shape) and a `*_fast` kernel (fixed-width chunks, `unsafe`
+//! unchecked indexing justified by loop-bound invariants, batched bit
+//! I/O). The two are bit-identical by construction — same per-element
+//! f32 operation order, only the iteration bookkeeping differs — and
+//! the registry-wide property tests assert byte-identical output
+//! streams between the paths.
+//!
+//! Selection is two-level:
+//!
+//! * the `scalar-kernels` cargo feature hard-forces the scalar twins
+//!   (the A/B build CI benchmarks against, and the baseline for the
+//!   Miri job's unsafe-free control);
+//! * [`force_scalar`] flips the path at runtime inside one build, so
+//!   equivalence tests and the `perf_throughput` scalar-vs-fast panels
+//!   run both twins from a single binary.
+//!
+//! The flag is read **once per kernel call**, outside the inner loops
+//! (one relaxed atomic load per layer-stage invocation — never per
+//! element), so the dispatch itself costs nothing measurable.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+/// Runtime override: when set, public kernel entry points dispatch to
+/// the scalar twins even in a default (fast) build.
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+/// Serializes [`with_scalar_kernels`] scopes so concurrently running
+/// tests cannot observe each other's path flips.
+static SCOPE: Mutex<()> = Mutex::new(());
+
+/// Whether kernel entry points should take the scalar path right now.
+#[inline]
+pub fn scalar_kernels() -> bool {
+    cfg!(feature = "scalar-kernels") || FORCE_SCALAR.load(Ordering::Relaxed)
+}
+
+/// Flip the runtime scalar override. Prefer [`with_scalar_kernels`],
+/// which scopes and serializes the flip; this raw setter exists for
+/// benches that interleave timed sections on one thread.
+pub fn force_scalar(on: bool) {
+    FORCE_SCALAR.store(on, Ordering::Relaxed);
+}
+
+/// Run `f` with the scalar twins selected, restoring the fast path
+/// after (also on panic). Scopes are mutex-serialized: concurrent
+/// callers queue rather than racing the global flag.
+pub fn with_scalar_kernels<R>(f: impl FnOnce() -> R) -> R {
+    let _guard = SCOPE.lock().unwrap_or_else(|e| e.into_inner());
+    struct Restore;
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            force_scalar(false);
+        }
+    }
+    let _restore = Restore;
+    force_scalar(true);
+    f()
+}
+
+/// Fixed chunk width of the elementwise fast kernels (fused predict +
+/// quantize, dequantize). 16 f32 lanes = one AVX-512 vector or four
+/// 128-bit vectors — wide enough for the autovectorizer, small enough
+/// that per-chunk escape fallbacks stay cheap.
+pub const CHUNK: usize = 16;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scoped_override_restores() {
+        with_scalar_kernels(|| assert!(scalar_kernels()));
+        // Scopes restore the flag before releasing the mutex, so while
+        // holding it no other test's scope can be mid-flight (asserting
+        // without the lock would race parallel test threads).
+        let _guard = SCOPE.lock().unwrap_or_else(|e| e.into_inner());
+        #[cfg(not(feature = "scalar-kernels"))]
+        assert!(!scalar_kernels());
+    }
+
+    #[test]
+    fn feature_build_always_scalar() {
+        #[cfg(feature = "scalar-kernels")]
+        assert!(scalar_kernels());
+    }
+
+    #[test]
+    fn restore_runs_on_panic() {
+        let r = std::panic::catch_unwind(|| with_scalar_kernels(|| panic!("boom")));
+        assert!(r.is_err());
+        let _guard = SCOPE.lock().unwrap_or_else(|e| e.into_inner());
+        #[cfg(not(feature = "scalar-kernels"))]
+        assert!(!scalar_kernels());
+    }
+}

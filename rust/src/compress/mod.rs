@@ -23,6 +23,7 @@ pub mod entropy;
 pub mod frame;
 pub mod fused;
 pub mod huffman;
+pub mod kernels;
 pub mod lossless;
 pub mod lz;
 pub mod pipeline;

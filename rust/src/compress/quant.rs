@@ -8,6 +8,9 @@
 //! which the property tests assert for arbitrary inputs including
 //! NaN/Inf (non-finite values are always escaped verbatim).
 
+use super::kernels;
+use super::kernels::CHUNK;
+
 /// Error-bound mode, mirroring SZ's ABS / REL conventions (paper Alg. 3
 /// `ErrMode`, Δ).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -95,6 +98,37 @@ pub fn code_histogram(codes: &[i32]) -> Vec<(i32, u64)> {
     freqs
 }
 
+/// One quantizer step — residual, round-half-up code, reconstruction and
+/// the in-bound test. `ok = false` means "escape verbatim". Shared by the
+/// scalar twin, the chunked fast kernel and its tail loop, so the twins
+/// are bit-identical by construction (DESIGN.md §12).
+#[inline]
+fn quant_step(
+    x: f32,
+    p: f32,
+    two_delta: f32,
+    inv_two_delta: f32,
+    delta_f: f32,
+) -> (i32, f32, bool) {
+    if !x.is_finite() || two_delta <= 0.0 {
+        return (ESCAPE_CODE, x, false);
+    }
+    let e = x - p;
+    // round-half-up to match the Pallas kernel (see compress::fused).
+    let code_f = (e * inv_two_delta + 0.5).floor();
+    if code_f.abs() > CODE_RADIUS as f32 {
+        return (ESCAPE_CODE, x, false);
+    }
+    let code = code_f as i32;
+    let r = p + code as f32 * two_delta;
+    // Guard against f32 rounding breaking the bound.
+    if (r - x).abs() > delta_f || !r.is_finite() {
+        (ESCAPE_CODE, x, false)
+    } else {
+        (code, r, true)
+    }
+}
+
 /// Quantize residuals `e = data − pred` under absolute bound `delta`,
 /// producing codes + escapes and writing reconstructions to `recon`
 /// (`recon[i] = pred[i] + 2Δ·code` or the exact value when escaped).
@@ -114,34 +148,103 @@ pub fn quantize(
     recon.clear();
     recon.reserve(data.len());
     let delta_f = delta as f32;
-    for i in 0..data.len() {
-        let x = data[i];
-        let p = pred[i];
-        if !x.is_finite() || two_delta <= 0.0 {
-            out.codes.push(ESCAPE_CODE);
-            out.escapes.push(x);
-            recon.push(x);
-            continue;
-        }
-        let e = x - p;
-        // round-half-up to match the Pallas kernel (see compress::fused).
-        let code_f = (e * inv_two_delta + 0.5).floor();
-        if code_f.abs() > CODE_RADIUS as f32 {
-            out.codes.push(ESCAPE_CODE);
-            out.escapes.push(x);
-            recon.push(x);
-            continue;
-        }
-        let code = code_f as i32;
-        let r = p + code as f32 * two_delta;
-        // Guard against f32 rounding breaking the bound.
-        if (r - x).abs() > delta_f || !r.is_finite() {
-            out.codes.push(ESCAPE_CODE);
-            out.escapes.push(x);
-            recon.push(x);
-        } else {
+    // Degenerate bins (2Δ ≤ 0 ⇒ everything escapes) stay on the scalar
+    // twin; the chunked kernel covers the real quantization path.
+    if two_delta > 0.0 && !kernels::scalar_kernels() {
+        quantize_fast(data, pred, two_delta, inv_two_delta, delta_f, out, recon);
+    } else {
+        quantize_scalar(data, pred, two_delta, inv_two_delta, delta_f, out, recon);
+    }
+}
+
+fn quantize_scalar(
+    data: &[f32],
+    pred: &[f32],
+    two_delta: f32,
+    inv_two_delta: f32,
+    delta_f: f32,
+    out: &mut Quantized,
+    recon: &mut Vec<f32>,
+) {
+    for (&x, &p) in data.iter().zip(pred.iter()) {
+        let (code, r, ok) = quant_step(x, p, two_delta, inv_two_delta, delta_f);
+        if ok {
             out.codes.push(code);
             recon.push(r);
+        } else {
+            out.codes.push(ESCAPE_CODE);
+            out.escapes.push(x);
+            recon.push(x);
+        }
+    }
+}
+
+/// Fast twin: [`CHUNK`]-wide array-ref chunks (compile-time trip counts
+/// for the autovectorizer) with a per-chunk escape mask — all-in-bound
+/// chunks bulk-extend the outputs, chunks containing an escape fall back
+/// to a per-lane loop.
+fn quantize_fast(
+    data: &[f32],
+    pred: &[f32],
+    two_delta: f32,
+    inv_two_delta: f32,
+    delta_f: f32,
+    out: &mut Quantized,
+    recon: &mut Vec<f32>,
+) {
+    let n = data.len();
+    debug_assert_eq!(pred.len(), n);
+    let chunks = n / CHUNK;
+    for c in 0..chunks {
+        let base = c * CHUNK;
+        // SAFETY: `base + CHUNK = (c + 1) * CHUNK ≤ chunks * CHUNK ≤ n`,
+        // and `data.len() == pred.len() == n` (asserted by `quantize`,
+        // debug-asserted above), so both `CHUNK`-wide array refs are
+        // fully in bounds.
+        let (d, p) = unsafe {
+            (
+                &*(data.as_ptr().add(base) as *const [f32; CHUNK]),
+                &*(pred.as_ptr().add(base) as *const [f32; CHUNK]),
+            )
+        };
+        let mut code = [0i32; CHUNK];
+        let mut rec = [0f32; CHUNK];
+        let mut ok = [false; CHUNK];
+        let mut all_ok = true;
+        for l in 0..CHUNK {
+            let (ci, r, o) = quant_step(d[l], p[l], two_delta, inv_two_delta, delta_f);
+            code[l] = ci;
+            rec[l] = r;
+            ok[l] = o;
+            all_ok &= o;
+        }
+        if all_ok {
+            out.codes.extend_from_slice(&code);
+            recon.extend_from_slice(&rec);
+        } else {
+            for l in 0..CHUNK {
+                if ok[l] {
+                    out.codes.push(code[l]);
+                    recon.push(rec[l]);
+                } else {
+                    out.codes.push(ESCAPE_CODE);
+                    out.escapes.push(d[l]);
+                    recon.push(d[l]);
+                }
+            }
+        }
+    }
+    // Scalar tail over the final `n % CHUNK` elements — the shared
+    // `quant_step` makes the seam invisible in the output.
+    for i in chunks * CHUNK..n {
+        let (code, r, ok) = quant_step(data[i], pred[i], two_delta, inv_two_delta, delta_f);
+        if ok {
+            out.codes.push(code);
+            recon.push(r);
+        } else {
+            out.codes.push(ESCAPE_CODE);
+            out.escapes.push(data[i]);
+            recon.push(data[i]);
         }
     }
 }
@@ -179,15 +282,83 @@ pub fn dequantize_checked(
     let two_delta = (2.0 * delta) as f32;
     recon.clear();
     recon.reserve(pred.len());
-    let mut esc = q.escapes.iter();
-    for (i, &code) in q.codes.iter().enumerate() {
-        if code == ESCAPE_CODE {
-            recon.push(*esc.next().ok_or_else(|| anyhow::anyhow!("escape stream exhausted"))?);
+    if kernels::scalar_kernels() {
+        let mut esc = q.escapes.iter();
+        for (i, &code) in q.codes.iter().enumerate() {
+            if code == ESCAPE_CODE {
+                let v = *esc
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("escape stream exhausted"))?;
+                recon.push(v);
+            } else {
+                recon.push(pred[i] + code as f32 * two_delta);
+            }
+        }
+        anyhow::ensure!(esc.next().is_none(), "unconsumed escapes");
+    } else {
+        dequantize_fast(&q.codes, &q.escapes, pred, two_delta, recon)?;
+    }
+    Ok(())
+}
+
+/// Fast twin of the dequantizer body: escape-free chunks (the common
+/// case) run a branchless reconstruct loop; the rest fall back per lane.
+fn dequantize_fast(
+    codes: &[i32],
+    escapes: &[f32],
+    pred: &[f32],
+    two_delta: f32,
+    recon: &mut Vec<f32>,
+) -> anyhow::Result<()> {
+    let n = codes.len();
+    debug_assert_eq!(pred.len(), n);
+    let chunks = n / CHUNK;
+    let mut esc = 0usize;
+    for c in 0..chunks {
+        let base = c * CHUNK;
+        // SAFETY: `base + CHUNK ≤ chunks * CHUNK ≤ n` and
+        // `codes.len() == pred.len() == n` (ensured by the caller,
+        // debug-asserted above), so both array refs are in bounds.
+        let (co, p) = unsafe {
+            (
+                &*(codes.as_ptr().add(base) as *const [i32; CHUNK]),
+                &*(pred.as_ptr().add(base) as *const [f32; CHUNK]),
+            )
+        };
+        let mut any_escape = false;
+        for l in 0..CHUNK {
+            any_escape |= co[l] == ESCAPE_CODE;
+        }
+        if !any_escape {
+            for l in 0..CHUNK {
+                recon.push(p[l] + co[l] as f32 * two_delta);
+            }
         } else {
-            recon.push(pred[i] + code as f32 * two_delta);
+            for l in 0..CHUNK {
+                if co[l] == ESCAPE_CODE {
+                    let v = *escapes
+                        .get(esc)
+                        .ok_or_else(|| anyhow::anyhow!("escape stream exhausted"))?;
+                    esc += 1;
+                    recon.push(v);
+                } else {
+                    recon.push(p[l] + co[l] as f32 * two_delta);
+                }
+            }
         }
     }
-    anyhow::ensure!(esc.next().is_none(), "unconsumed escapes");
+    for i in chunks * CHUNK..n {
+        if codes[i] == ESCAPE_CODE {
+            let v = *escapes
+                .get(esc)
+                .ok_or_else(|| anyhow::anyhow!("escape stream exhausted"))?;
+            esc += 1;
+            recon.push(v);
+        } else {
+            recon.push(pred[i] + codes[i] as f32 * two_delta);
+        }
+    }
+    anyhow::ensure!(esc == escapes.len(), "unconsumed escapes");
     Ok(())
 }
 
@@ -283,12 +454,44 @@ mod tests {
     fn code_histogram_counts_and_sorts() {
         assert!(code_histogram(&[]).is_empty());
         let h = code_histogram(&[3, -1, 3, ESCAPE_CODE, 3, -1, 1 << 20]);
-        assert_eq!(
-            h,
-            vec![(ESCAPE_CODE, 1), (-1, 2), (3, 3), (1 << 20, 1)]
-        );
+        assert_eq!(h, vec![(ESCAPE_CODE, 1), (-1, 2), (3, 3), (1 << 20, 1)]);
         let total: u64 = h.iter().map(|&(_, c)| c).sum();
         assert_eq!(total, 7);
+    }
+
+    #[test]
+    fn scalar_and_fast_twins_agree_bitwise() {
+        prop::check("quant scalar==fast", 120, |rng| {
+            let n = prop::arb_len(rng, 2000);
+            let data = prop::arb_gradient(rng, n);
+            let pred = prop::arb_gradient(rng, n);
+            let delta = prop::arb_error_bound(rng);
+            let mut qf = Quantized::default();
+            let mut rf = Vec::new();
+            quantize(&data, &pred, delta, &mut qf, &mut rf);
+            let (mut qs, mut rs) = (Quantized::default(), Vec::new());
+            kernels::with_scalar_kernels(|| quantize(&data, &pred, delta, &mut qs, &mut rs));
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            if qf.codes != qs.codes {
+                return Err("codes diverge".into());
+            }
+            if bits(&qf.escapes) != bits(&qs.escapes) {
+                return Err("escapes diverge".into());
+            }
+            if bits(&rf) != bits(&rs) {
+                return Err("encode recon diverges".into());
+            }
+            let mut df = Vec::new();
+            dequantize_checked(&qf, &pred, delta, &mut df).map_err(|e| e.to_string())?;
+            let mut ds = Vec::new();
+            kernels::with_scalar_kernels(|| {
+                dequantize_checked(&qf, &pred, delta, &mut ds).map_err(|e| e.to_string())
+            })?;
+            if bits(&df) != bits(&ds) {
+                return Err("decode recon diverges".into());
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -169,7 +169,7 @@ pub const REGISTRY: &[CodecFamily] = &[
         aliases: &["ours"],
         example: "fedgec:eb=rel1e-2,beta=0.9,tau=0.5,pred=auto,sign=kernel,ec=rans",
         about: "gradient-aware EBLC (the paper's codec); pred=ema|last|zero|auto, \
-                sign=auto|osc|kernel|none, ec=huff|rans|raw",
+                sign=auto|osc|kernel|none, ec=huff|rans|rans4|rans8|raw",
     },
     CodecFamily {
         family: "sz3",
@@ -232,8 +232,9 @@ fn parse_eb(v: &str) -> crate::Result<ErrorBound> {
 }
 
 fn parse_ec(v: &str) -> crate::Result<EntropyCoder> {
-    EntropyCoder::from_name(v)
-        .ok_or_else(|| anyhow::anyhow!("codec spec: unknown entropy coder '{v}' (huff|rans|raw)"))
+    EntropyCoder::from_name(v).ok_or_else(|| {
+        anyhow::anyhow!("codec spec: unknown entropy coder '{v}' (huff|rans|rans4|rans8|raw)")
+    })
 }
 
 fn parse_backend(v: &str) -> crate::Result<Backend> {
@@ -569,6 +570,32 @@ impl CodecSpec {
                 sign: d.sign,
             },
             CodecSpec::Sz3 { eb: d.error_bound, ec: EntropyCoder::Rans, backend: d.backend },
+            // Wide-interleave rANS twins (`ec=rans4` / `ec=rans8`): the
+            // same size race as `ec=rans`, their own wire mode bytes —
+            // registry membership drives the scalar↔fast and
+            // frame-roundtrip property suites over the new lane widths.
+            CodecSpec::Fedgec {
+                eb: d.error_bound,
+                beta: d.beta,
+                tau: d.tau,
+                full_batch: d.full_batch,
+                autotune: d.autotune,
+                ec: EntropyCoder::Rans4,
+                backend: d.backend,
+                pred: d.pred,
+                sign: d.sign,
+            },
+            CodecSpec::Fedgec {
+                eb: d.error_bound,
+                beta: d.beta,
+                tau: d.tau,
+                full_batch: d.full_batch,
+                autotune: d.autotune,
+                ec: EntropyCoder::Rans8,
+                backend: d.backend,
+                pred: d.pred,
+                sign: d.sign,
+            },
             // Predictor-API twins: the per-layer race and a fixed
             // non-EMA predictor with the sign stage off — so the
             // registry-wide suites drive self-describing (v3) frames

@@ -1,0 +1,350 @@
+//! Perf-regression gate: compares a fresh `BENCH_*.json` artifact (the
+//! all-strings table emitted by [`super::Table::save_json`]) against a
+//! committed baseline of **floors** (hard minima, e.g. a GB/s or speedup
+//! threshold) and **pins** (values that must stay within a relative
+//! tolerance, e.g. compression ratios within 1%).
+//!
+//! Baselines live in `rust/results/baselines/<bench>.json`:
+//!
+//! ```json
+//! {
+//!   "bench": "perf_throughput",
+//!   "floors": [{"row": "fused encode", "col": "speedup", "min": 1.2}],
+//!   "pins":   [{"row": "TOTAL", "col": "CR", "value": 12.3, "rel_tol": 0.01}]
+//! }
+//! ```
+//!
+//! A pin with `"value": null` is *record-only*: the gate reports the
+//! current value without judging it — the seeding state before the first
+//! `bench_check --update` run on the reference machine. Floors are
+//! deliberately conservative (well under the speedups a quiet machine
+//! shows) so shared-runner noise does not flake the gate, while a real
+//! regression — a fast kernel silently falling back to scalar — still
+//! trips it.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+
+/// Hard minimum on one table cell: `cell(row, col) >= min` or the gate fails.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Floor {
+    pub row: String,
+    pub col: String,
+    pub min: f64,
+}
+
+/// Tolerance band on one table cell: `|cell - value| / |value| <= rel_tol`.
+/// `value: None` records the current cell without judging it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Pin {
+    pub row: String,
+    pub col: String,
+    pub value: Option<f64>,
+    pub rel_tol: f64,
+}
+
+/// One committed baseline file: the bench it gates plus its constraints.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Baseline {
+    pub bench: String,
+    pub floors: Vec<Floor>,
+    pub pins: Vec<Pin>,
+}
+
+impl Baseline {
+    /// Parse a `results/baselines/*.json` document.
+    pub fn parse(src: &str) -> Result<Baseline> {
+        let v = Json::parse(src).map_err(|e| anyhow!("baseline: {e}"))?;
+        let bench = v
+            .get("bench")
+            .and_then(Json::as_str)
+            .context("baseline: missing \"bench\"")?
+            .to_string();
+        let mut floors = Vec::new();
+        for f in v.get("floors").and_then(Json::as_arr).unwrap_or(&[]) {
+            floors.push(Floor {
+                row: f.get("row").and_then(Json::as_str).context("floor: missing row")?.into(),
+                col: f.get("col").and_then(Json::as_str).context("floor: missing col")?.into(),
+                min: f.get("min").and_then(Json::as_f64).context("floor: missing min")?,
+            });
+        }
+        let mut pins = Vec::new();
+        for p in v.get("pins").and_then(Json::as_arr).unwrap_or(&[]) {
+            pins.push(Pin {
+                row: p.get("row").and_then(Json::as_str).context("pin: missing row")?.into(),
+                col: p.get("col").and_then(Json::as_str).context("pin: missing col")?.into(),
+                value: match p.get("value") {
+                    None | Some(Json::Null) => None,
+                    Some(j) => Some(j.as_f64().context("pin: non-numeric value")?),
+                },
+                rel_tol: p.f64_or("rel_tol", 0.01),
+            });
+        }
+        Ok(Baseline { bench, floors, pins })
+    }
+
+    /// Serialize back to the committed-file format.
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("bench".to_string(), Json::Str(self.bench.clone()));
+        obj.insert(
+            "floors".to_string(),
+            Json::Arr(
+                self.floors
+                    .iter()
+                    .map(|f| {
+                        let mut o = BTreeMap::new();
+                        o.insert("row".to_string(), Json::Str(f.row.clone()));
+                        o.insert("col".to_string(), Json::Str(f.col.clone()));
+                        o.insert("min".to_string(), Json::Num(f.min));
+                        Json::Obj(o)
+                    })
+                    .collect(),
+            ),
+        );
+        obj.insert(
+            "pins".to_string(),
+            Json::Arr(
+                self.pins
+                    .iter()
+                    .map(|p| {
+                        let mut o = BTreeMap::new();
+                        o.insert("row".to_string(), Json::Str(p.row.clone()));
+                        o.insert("col".to_string(), Json::Str(p.col.clone()));
+                        o.insert(
+                            "value".to_string(),
+                            p.value.map(Json::Num).unwrap_or(Json::Null),
+                        );
+                        o.insert("rel_tol".to_string(), Json::Num(p.rel_tol));
+                        Json::Obj(o)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(obj)
+    }
+
+    /// A copy of this baseline with every pin re-recorded from `doc` —
+    /// the `bench_check --update` path. Floors are never auto-updated:
+    /// raising or lowering a floor is a reviewed decision.
+    pub fn updated_from(&self, doc: &BenchDoc) -> Result<Baseline> {
+        let mut out = self.clone();
+        for p in &mut out.pins {
+            p.value = Some(doc.cell(&p.row, &p.col)?);
+        }
+        Ok(out)
+    }
+}
+
+/// A parsed `BENCH_*.json` table (title/headers/rows, all strings).
+#[derive(Debug, Clone)]
+pub struct BenchDoc {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl BenchDoc {
+    pub fn parse(src: &str) -> Result<BenchDoc> {
+        let v = Json::parse(src).map_err(|e| anyhow!("bench json: {e}"))?;
+        let headers = v
+            .get("headers")
+            .and_then(Json::as_arr)
+            .context("bench json: missing headers")?
+            .iter()
+            .map(|h| h.as_str().unwrap_or_default().to_string())
+            .collect();
+        let rows = v
+            .get("rows")
+            .and_then(Json::as_arr)
+            .context("bench json: missing rows")?
+            .iter()
+            .map(|r| {
+                r.as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|c| c.as_str().unwrap_or_default().to_string())
+                    .collect()
+            })
+            .collect();
+        Ok(BenchDoc { headers, rows })
+    }
+
+    /// Numeric cell lookup: the row whose *first* column equals `row`,
+    /// in the column named `col`. A missing row/col or a non-numeric
+    /// cell is an error — a gated metric that vanished is a regression,
+    /// not a skip.
+    pub fn cell(&self, row: &str, col: &str) -> Result<f64> {
+        let ci = self
+            .headers
+            .iter()
+            .position(|h| h == col)
+            .with_context(|| format!("column {col:?} not in {:?}", self.headers))?;
+        let r = self
+            .rows
+            .iter()
+            .find(|r| r.first().map(String::as_str) == Some(row))
+            .with_context(|| format!("row {row:?} not found"))?;
+        let cell = r.get(ci).with_context(|| format!("row {row:?} has no column {ci}"))?;
+        parse_metric(cell).with_context(|| format!("cell [{row:?}][{col:?}] = {cell:?}"))
+    }
+}
+
+/// Parse a table cell as a number. Bench tables print human-readable
+/// cells, so a trailing unit suffix (`x`, `%`) is tolerated; anything
+/// else is a hard error.
+pub fn parse_metric(cell: &str) -> Result<f64> {
+    let t = cell.trim().trim_end_matches(['x', '%']);
+    t.parse::<f64>().map_err(|_| anyhow!("not a numeric metric"))
+}
+
+/// The gate verdict for one baseline: every violated constraint, plus
+/// informational notes (record-only pins).
+#[derive(Debug, Default)]
+pub struct GateOutcome {
+    pub checked: usize,
+    pub violations: Vec<String>,
+    pub notes: Vec<String>,
+}
+
+impl GateOutcome {
+    pub fn pass(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// Evaluate one baseline against a fresh bench table.
+pub fn check(b: &Baseline, doc: &BenchDoc) -> GateOutcome {
+    let mut out = GateOutcome::default();
+    for f in &b.floors {
+        out.checked += 1;
+        match doc.cell(&f.row, &f.col) {
+            Ok(v) if v >= f.min => {}
+            Ok(v) => out.violations.push(format!(
+                "{}: floor [{}][{}] = {v} < min {}",
+                b.bench, f.row, f.col, f.min
+            )),
+            Err(e) => {
+                out.violations.push(format!("{}: floor [{}][{}]: {e}", b.bench, f.row, f.col))
+            }
+        }
+    }
+    for p in &b.pins {
+        out.checked += 1;
+        let v = match doc.cell(&p.row, &p.col) {
+            Ok(v) => v,
+            Err(e) => {
+                out.violations.push(format!("{}: pin [{}][{}]: {e}", b.bench, p.row, p.col));
+                continue;
+            }
+        };
+        match p.value {
+            None => out.notes.push(format!(
+                "{}: pin [{}][{}] unpinned, current value {v} (run bench_check --update)",
+                b.bench, p.row, p.col
+            )),
+            Some(want) => {
+                let dev = (v - want).abs() / want.abs().max(1e-12);
+                if dev > p.rel_tol {
+                    out.violations.push(format!(
+                        "{}: pin [{}][{}] = {v} deviates {:.2}% from {want} (tol {:.2}%)",
+                        b.bench,
+                        p.row,
+                        p.col,
+                        dev * 100.0,
+                        p.rel_tol * 100.0
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc() -> BenchDoc {
+        BenchDoc {
+            headers: vec!["stage".into(), "GB/s".into(), "speedup".into(), "CR".into()],
+            rows: vec![
+                vec!["quantize enc".into(), "2.50".into(), "3.1x".into(), "-".into()],
+                vec!["TOTAL".into(), "-".into(), "-".into(), "12.30".into()],
+            ],
+        }
+    }
+
+    #[test]
+    fn floor_passes_and_fails() {
+        let b = Baseline {
+            bench: "t".into(),
+            floors: vec![Floor { row: "quantize enc".into(), col: "speedup".into(), min: 1.2 }],
+            pins: vec![],
+        };
+        assert!(check(&b, &doc()).pass());
+        let b2 = Baseline {
+            floors: vec![Floor { row: "quantize enc".into(), col: "speedup".into(), min: 5.0 }],
+            ..b
+        };
+        let out = check(&b2, &doc());
+        assert!(!out.pass());
+        assert!(out.violations[0].contains("floor"), "{:?}", out.violations);
+    }
+
+    #[test]
+    fn pin_tolerance_band() {
+        let mk = |value, rel_tol| Baseline {
+            bench: "t".into(),
+            floors: vec![],
+            pins: vec![Pin { row: "TOTAL".into(), col: "CR".into(), value, rel_tol }],
+        };
+        assert!(check(&mk(Some(12.25), 0.01), &doc()).pass()); // within 1%
+        assert!(!check(&mk(Some(11.0), 0.01), &doc()).pass()); // ~12% off
+        // Record-only pin: never a violation, always a note.
+        let out = check(&mk(None, 0.01), &doc());
+        assert!(out.pass());
+        assert_eq!(out.notes.len(), 1);
+        assert!(out.notes[0].contains("12.3"), "{:?}", out.notes);
+    }
+
+    #[test]
+    fn missing_metric_is_a_violation_not_a_skip() {
+        let b = Baseline {
+            bench: "t".into(),
+            floors: vec![Floor { row: "gone".into(), col: "GB/s".into(), min: 0.0 }],
+            pins: vec![Pin {
+                row: "TOTAL".into(),
+                col: "nope".into(),
+                value: Some(1.0),
+                rel_tol: 0.1,
+            }],
+        };
+        let out = check(&b, &doc());
+        assert_eq!(out.violations.len(), 2);
+    }
+
+    #[test]
+    fn baseline_json_roundtrip_and_update() {
+        let src = r#"{"bench":"t","floors":[{"row":"quantize enc","col":"speedup","min":1.2}],
+            "pins":[{"row":"TOTAL","col":"CR","value":null,"rel_tol":0.01}]}"#;
+        let b = Baseline::parse(src).unwrap();
+        assert_eq!(b.pins[0].value, None);
+        let re = Baseline::parse(&b.to_json().to_string()).unwrap();
+        assert_eq!(b, re);
+        // --update records the fresh cell into the null pin; floors stay.
+        let up = b.updated_from(&doc()).unwrap();
+        assert_eq!(up.pins[0].value, Some(12.3));
+        assert_eq!(up.floors, b.floors);
+        let out = check(&up, &doc());
+        assert!(out.pass() && out.notes.is_empty());
+    }
+
+    #[test]
+    fn metric_parsing_tolerates_unit_suffixes_only() {
+        assert_eq!(parse_metric(" 3.1x ").unwrap(), 3.1);
+        assert_eq!(parse_metric("85%").unwrap(), 85.0);
+        assert!(parse_metric("-").is_err());
+        assert!(parse_metric("fast").is_err());
+    }
+}

@@ -2,6 +2,8 @@
 //! `results/` (the bench harness substrate standing in for criterion's
 //! reports).
 
+pub mod gate;
+
 use std::fmt::Write as _;
 use std::path::PathBuf;
 

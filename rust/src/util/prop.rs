@@ -7,7 +7,13 @@ use crate::util::rng::Rng;
 
 /// Run `cases` randomized checks of `prop`. Each case gets a forked RNG.
 /// Panics with the failing case/seed on the first violation.
+///
+/// Under Miri (the CI unsafe-kernel audit) every suite shrinks to a
+/// handful of cases: the interpreter is ~100x slower than native, and
+/// the goal there is UB coverage of each code path, not distributional
+/// coverage.
 pub fn check(name: &str, cases: usize, mut prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    let cases = if cfg!(miri) { cases.min(4) } else { cases };
     let base_seed = std::env::var("FEDGEC_PROP_SEED")
         .ok()
         .and_then(|s| s.parse::<u64>().ok())
@@ -40,6 +46,9 @@ pub fn arb_gradient(rng: &mut Rng, n: usize) -> Vec<f32> {
 /// Random tensor length, biased toward interesting small sizes and block
 /// boundaries.
 pub fn arb_len(rng: &mut Rng, max: usize) -> usize {
+    // Same rationale as in [`check`]: Miri runs want every size class
+    // (sub-chunk, chunk boundary, tail) without megabyte tensors.
+    let max = if cfg!(miri) { max.min(512) } else { max };
     match rng.next_below(6) {
         0 => 1 + rng.next_below(4),
         1 => 63 + rng.next_below(4),

@@ -3,6 +3,7 @@
 //! layer mixes, and adversarial payload corruption.
 
 use fedgec::compress::frame::Frame;
+use fedgec::compress::kernels;
 use fedgec::compress::pipeline::{FedgecCodec, FedgecConfig};
 use fedgec::compress::predictor::magnitude::MagnitudeSel;
 use fedgec::compress::predictor::sign::SignSel;
@@ -206,6 +207,57 @@ fn prop_every_registry_spec_roundtrips_through_frames() {
                             sl.side_info_bytes,
                             sl.entropy_bytes
                         ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scalar_and_fast_kernels_produce_identical_frames_registry_wide() {
+    // The twin-pair contract end to end: for every registered codec
+    // family, the payload bytes produced under the bounds-checked
+    // scalar kernels are byte-identical to the default fast-kernel
+    // path, and both decodes reconstruct bit-identical tensors. (In a
+    // `--features scalar-kernels` build both sides run scalar, so the
+    // identity is tautological there; the default CI build is where
+    // this property bites.)
+    prop::check("scalar == fast frames", 12, |rng| {
+        let eb = prop::arb_error_bound(rng);
+        let d = SpecDefaults::with_rel_eb(eb);
+        let base = arb_model(rng);
+        let ms = metas(&base);
+        for spec in CodecSpec::registry_specs(&d) {
+            let mut c_fast = spec.build();
+            let mut c_scalar = spec.build();
+            let mut s_fast = spec.build();
+            let mut s_scalar = spec.build();
+            for round in 0..2 {
+                let mut g = base.clone();
+                for l in &mut g.layers {
+                    for v in &mut l.data {
+                        *v *= 1.0 + 0.05 * round as f32;
+                    }
+                }
+                let p_fast = c_fast.compress(&g).map_err(|e| format!("{spec}: {e}"))?;
+                let p_scalar = kernels::with_scalar_kernels(|| c_scalar.compress(&g))
+                    .map_err(|e| format!("{spec}: {e}"))?;
+                if p_fast != p_scalar {
+                    return Err(format!("{spec} round {round}: payload bytes differ"));
+                }
+                let r_fast =
+                    s_fast.decompress(&p_fast, &ms).map_err(|e| format!("{spec}: {e}"))?;
+                let r_scalar = kernels::with_scalar_kernels(|| s_scalar.decompress(&p_fast, &ms))
+                    .map_err(|e| format!("{spec}: {e}"))?;
+                for (a, b) in r_fast.layers.iter().zip(&r_scalar.layers) {
+                    for (x, y) in a.data.iter().zip(&b.data) {
+                        if x.to_bits() != y.to_bits() {
+                            return Err(format!(
+                                "{spec} round {round}: decode drift {x} vs {y}"
+                            ));
+                        }
                     }
                 }
             }
