@@ -1,0 +1,98 @@
+//! §Topology: sharded-aggregation scaling panel — round throughput,
+//! merge cost, and the partial-aggregate memory footprint (the peak-RSS
+//! proxy) as the shard count grows over a fixed synthetic fleet.
+//!
+//! The emitted `results/BENCH_topology_scale.json` feeds the CI
+//! perf-regression gate against the floors in
+//! `results/baselines/topology_scale.json`.
+
+mod bench_util;
+
+use std::time::Instant;
+
+use bench_util::*;
+use fedgec::compress::engine::CodecEngine;
+use fedgec::compress::pipeline::{FedgecConfig, FedgecEngine};
+use fedgec::compress::predictor::magnitude::MagnitudeSel;
+use fedgec::compress::predictor::sign::SignSel;
+use fedgec::compress::predictor::PredictorSpec;
+use fedgec::compress::quant::ErrorBound;
+use fedgec::fl::aggregate::AggMode;
+use fedgec::fl::server::Server;
+use fedgec::fl::topology::sharded::ShardedRunner;
+use fedgec::fl::topology::synth::SynthFleet;
+use fedgec::metrics::Table;
+use fedgec::tensor::LayerMeta;
+
+const ROUNDS: usize = 2;
+
+fn cfg() -> FedgecConfig {
+    // State-free spec: replayable payload bank, no store traffic — the
+    // panel isolates decode + merge scaling.
+    FedgecConfig {
+        error_bound: ErrorBound::Abs(5e-3),
+        predictor: PredictorSpec { mag: MagnitudeSel::Zero, sign: SignSel::None },
+        ..Default::default()
+    }
+}
+
+fn main() {
+    banner("topology_scale", "DESIGN.md §13 (sharded aggregation)");
+    let n_clients = if full_mode() {
+        200_000
+    } else if quick_mode() {
+        8_000
+    } else {
+        40_000
+    };
+    let metas = vec![LayerMeta::dense("fc", 2048, 1), LayerMeta::other("bias", 32)];
+    let fleet = SynthFleet::new(&cfg(), &metas, n_clients, 64, 17).unwrap();
+    println!(
+        "fleet: {n_clients} clients over a {} KB payload bank\n",
+        fleet.resident_bytes() / 1000
+    );
+
+    let mut table = Table::new(
+        "sharded aggregation scaling",
+        &["shards", "clients/s", "round ms", "merge ms", "agg KB", "dropped"],
+    );
+    for shards in [1usize, 2, 4, 8] {
+        let params: Vec<Vec<f32>> = metas.iter().map(|m| vec![0.01; m.numel]).collect();
+        let mut server = Server::with_engine(
+            params,
+            metas.clone(),
+            0.1,
+            Box::new(FedgecEngine::new(cfg())),
+        )
+        .with_agg_mode(AggMode::Binsum);
+        server.admit_all();
+        let engines: Vec<Box<dyn CodecEngine>> = (0..shards)
+            .map(|_| Box::new(FedgecEngine::new(cfg())) as Box<dyn CodecEngine>)
+            .collect();
+        let mut runner = ShardedRunner::new(&server, engines).unwrap();
+        let mut merge_s = 0.0f64;
+        let mut dropped = 0usize;
+        let t0 = Instant::now();
+        for _ in 0..ROUNDS {
+            let stats = runner
+                .run_round_direct(&mut server, |idx| fleet.shard_iter(shards, idx))
+                .unwrap();
+            merge_s += stats.merge_time.as_secs_f64();
+            dropped += stats.dropped;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        table.row(vec![
+            format!("shards={shards}"),
+            format!("{:.0}", (ROUNDS * n_clients) as f64 / wall),
+            format!("{:.1}", wall * 1e3 / ROUNDS as f64),
+            format!("{:.3}", merge_s * 1e3 / ROUNDS as f64),
+            format!("{:.1}", runner.last_agg_resident_bytes as f64 / 1e3),
+            format!("{dropped}"),
+        ]);
+    }
+    table.print();
+    table.save_csv("topology_scale").unwrap();
+    let json = table.save_json("topology_scale").unwrap();
+    println!("saved {json:?}");
+    println!("gate: cargo run --bin bench_check  (floors in results/baselines/)");
+}

@@ -31,6 +31,7 @@
 //! commutatively, which is the exchange unit for the ROADMAP's sharded
 //! server.
 
+use crate::compress::blob::{BlobReader, BlobWriter};
 use crate::compress::quant::{count_escapes, ESCAPE_CODE};
 use crate::tensor::LayerGrad;
 
@@ -365,6 +366,79 @@ impl LayerBinSum {
         }
         (out, passes)
     }
+
+    /// Heap bytes held by the accumulators — the peak-memory proxy the
+    /// topology benches report (empty vectors cost nothing; that is the
+    /// point of the lazy allocation).
+    pub fn approx_bytes(&self) -> usize {
+        self.bins.len() * 8 + self.bins_f.len() * 8 + self.pred.len() * 8 + self.dense.len() * 8
+    }
+
+    /// Serialize the partial sums — the edge→root exchange format.
+    /// Pairs with [`LayerBinSum::read_wire`].
+    pub fn write_wire(&self, w: &mut BlobWriter) {
+        w.put_u32(self.numel as u32);
+        w.put_f64(self.delta);
+        w.put_u8(self.demoted as u8);
+        w.put_u64(self.bin_bound as u64);
+        w.put_u32(self.bin_frames as u32);
+        w.put_u32(self.dense_frames as u32);
+        w.put_u32(self.dequant_passes as u32);
+        w.put_i64_slice(&self.bins);
+        w.put_f64_slice(&self.bins_f);
+        w.put_f64_slice(&self.pred);
+        w.put_f64_slice(&self.dense);
+    }
+
+    /// Deserialize one layer's partial sums, validating every shape
+    /// invariant before the value can reach [`LayerBinSum::merge`].
+    pub fn read_wire(r: &mut BlobReader) -> crate::Result<LayerBinSum> {
+        let numel = r.get_u32()? as usize;
+        let delta = r.get_f64()?;
+        anyhow::ensure!(
+            delta.is_finite() && delta >= 0.0,
+            "bin-sum wire: Δ {delta} not finite-nonnegative"
+        );
+        let demoted = match r.get_u8()? {
+            0 => false,
+            1 => true,
+            t => anyhow::bail!("bin-sum wire: bad demoted flag {t}"),
+        };
+        let bin_bound = r.get_u64()? as i64;
+        anyhow::ensure!(bin_bound >= 0, "bin-sum wire: negative bin bound");
+        let bin_frames = r.get_u32()? as usize;
+        let dense_frames = r.get_u32()? as usize;
+        let dequant_passes = r.get_u32()? as usize;
+        let bins = r.get_i64_vec()?;
+        let bins_f = r.get_f64_vec()?;
+        let pred = r.get_f64_vec()?;
+        let dense = r.get_f64_vec()?;
+        let lens = [
+            ("bins", bins.len()),
+            ("bins_f", bins_f.len()),
+            ("pred", pred.len()),
+            ("dense", dense.len()),
+        ];
+        for (name, len) in lens {
+            anyhow::ensure!(
+                len == 0 || len == numel,
+                "bin-sum wire: {name} has {len} elements, layer has {numel}"
+            );
+        }
+        Ok(LayerBinSum {
+            numel,
+            delta,
+            bins,
+            bins_f,
+            pred,
+            dense,
+            bin_frames,
+            dense_frames,
+            demoted,
+            bin_bound,
+            dequant_passes,
+        })
+    }
 }
 
 /// What one aggregation round did, per layer route (feeds
@@ -522,6 +596,38 @@ impl BinAggregator {
             mean.push(out);
         }
         (mean, report)
+    }
+
+    /// Heap bytes held across all layer accumulators (peak-memory
+    /// proxy).
+    pub fn approx_bytes(&self) -> usize {
+        self.layers.iter().map(LayerBinSum::approx_bytes).sum()
+    }
+
+    /// Serialize the whole partial aggregate for the edge→root push.
+    pub fn write_wire(&self, w: &mut BlobWriter) {
+        w.put_f64(self.total_weight);
+        w.put_u32(self.layers.len() as u32);
+        for layer in &self.layers {
+            layer.write_wire(w);
+        }
+    }
+
+    /// Deserialize an aggregate pushed by an edge, rejecting malformed
+    /// input before it can reach [`BinAggregator::merge`].
+    pub fn read_wire(r: &mut BlobReader) -> crate::Result<BinAggregator> {
+        let total_weight = r.get_f64()?;
+        anyhow::ensure!(
+            total_weight.is_finite() && total_weight >= 0.0,
+            "bin-sum wire: bad total weight {total_weight}"
+        );
+        let n = r.get_u32()? as usize;
+        anyhow::ensure!(n <= 65_536, "bin-sum wire: implausible layer count {n}");
+        let mut layers = Vec::with_capacity(n);
+        for _ in 0..n {
+            layers.push(LayerBinSum::read_wire(r)?);
+        }
+        Ok(BinAggregator { layers, total_weight })
     }
 }
 
@@ -738,6 +844,67 @@ mod tests {
         let (got, grep) = shard_a.finish();
         assert_eq!(want, got, "shard merge must be exact (integer bins)");
         assert_eq!(wrep.binsum_layers, grep.binsum_layers);
+    }
+
+    #[test]
+    fn wire_roundtrip_preserves_partial_sums() {
+        let delta = 1e-3;
+        // A deliberately messy aggregate: bins + escapes + pred on one
+        // layer, dense on the other, non-integral weight in the mix.
+        let c0 = vec![
+            BinFrame::Bins {
+                codes: vec![4, ESCAPE_CODE, -2],
+                escapes: vec![0.5],
+                pred: vec![0.1, 0.2, 0.3],
+                delta,
+            },
+            BinFrame::Dense(LayerGrad::new(LayerMeta::other("b", 2), vec![1.0, -2.0])),
+        ];
+        let mut agg = BinAggregator::new();
+        agg.add(&c0, 2.0).unwrap();
+        agg.add(&c0, 1.5).unwrap();
+        let mut w = BlobWriter::new();
+        agg.write_wire(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = BlobReader::new(&bytes);
+        let back = BinAggregator::read_wire(&mut r).unwrap();
+        assert_eq!(r.remaining(), 0);
+        assert_eq!(back.weight(), agg.weight());
+        assert_eq!(back.approx_bytes(), agg.approx_bytes());
+        let (want, wrep) = agg.finish();
+        let (got, grep) = back.finish();
+        assert_eq!(want, got, "wire roundtrip must be bit-exact");
+        assert_eq!(wrep.dequant_passes, grep.dequant_passes);
+        assert_eq!(wrep.binsum_layers, grep.binsum_layers);
+    }
+
+    #[test]
+    fn wire_rejects_malformed_input() {
+        // Truncation at every prefix length must error, never panic.
+        let f = BinFrame::Bins { codes: vec![1, 2], escapes: vec![], pred: vec![], delta: 1e-3 };
+        let mut agg = BinAggregator::new();
+        agg.add(std::slice::from_ref(&f), 1.0).unwrap();
+        let mut w = BlobWriter::new();
+        agg.write_wire(&mut w);
+        let bytes = w.into_bytes();
+        for cut in 0..bytes.len() {
+            assert!(BinAggregator::read_wire(&mut BlobReader::new(&bytes[..cut])).is_err());
+        }
+        // A vector length that disagrees with numel is rejected.
+        let mut w = BlobWriter::new();
+        w.put_u32(3); // numel
+        w.put_f64(1e-3);
+        w.put_u8(0);
+        w.put_u64(0);
+        w.put_u32(1);
+        w.put_u32(0);
+        w.put_u32(0);
+        w.put_i64_slice(&[1, 2]); // 2 != 3
+        w.put_f64_slice(&[]);
+        w.put_f64_slice(&[]);
+        w.put_f64_slice(&[]);
+        let bytes = w.into_bytes();
+        assert!(LayerBinSum::read_wire(&mut BlobReader::new(&bytes)).is_err());
     }
 
     #[test]

@@ -134,6 +134,20 @@ impl BlobWriter {
             self.buf.extend_from_slice(&x.to_le_bytes());
         }
     }
+    /// Raw f64 slice (length-prefixed, little-endian).
+    pub fn put_f64_slice(&mut self, v: &[f64]) {
+        self.put_u32(v.len() as u32);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    /// Raw i64 slice (length-prefixed, little-endian).
+    pub fn put_i64_slice(&mut self, v: &[i64]) {
+        self.put_u32(v.len() as u32);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
     pub fn len(&self) -> usize {
         self.buf.len()
     }
@@ -187,6 +201,16 @@ impl<'a> BlobReader<'a> {
         let raw = self.take(n * 4)?;
         Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
     }
+    pub fn get_f64_vec(&mut self) -> anyhow::Result<Vec<f64>> {
+        let n = self.get_u32()? as usize;
+        let raw = self.take(n * 8)?;
+        Ok(raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+    pub fn get_i64_vec(&mut self) -> anyhow::Result<Vec<i64>> {
+        let n = self.get_u32()? as usize;
+        let raw = self.take(n * 8)?;
+        Ok(raw.chunks_exact(8).map(|c| i64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
     pub fn remaining(&self) -> usize {
         self.buf.len() - self.pos
     }
@@ -226,6 +250,8 @@ mod tests {
         w.put_f64(-2.25);
         w.put_bytes(b"hello");
         w.put_f32_slice(&[1.0, -2.0]);
+        w.put_f64_slice(&[0.5, -1.0e300]);
+        w.put_i64_slice(&[i64::MIN, -1, i64::MAX]);
         let bytes = w.into_bytes();
         let mut r = BlobReader::new(&bytes);
         assert_eq!(r.get_u8().unwrap(), 7);
@@ -235,7 +261,21 @@ mod tests {
         assert_eq!(r.get_f64().unwrap(), -2.25);
         assert_eq!(r.get_bytes().unwrap(), b"hello");
         assert_eq!(r.get_f32_vec().unwrap(), vec![1.0, -2.0]);
+        assert_eq!(r.get_f64_vec().unwrap(), vec![0.5, -1.0e300]);
+        assert_eq!(r.get_i64_vec().unwrap(), vec![i64::MIN, -1, i64::MAX]);
         assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn slice_vec_underruns_error_before_allocating() {
+        // A length prefix far past the remaining bytes must fail the
+        // bounds check (and not trust the prefix for allocation).
+        let mut w = BlobWriter::new();
+        w.put_u32(u32::MAX);
+        let bytes = w.into_bytes();
+        assert!(BlobReader::new(&bytes).get_i64_vec().is_err());
+        assert!(BlobReader::new(&bytes).get_f64_vec().is_err());
+        assert!(BlobReader::new(&bytes).get_f32_vec().is_err());
     }
 
     #[test]

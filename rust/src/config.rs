@@ -90,6 +90,17 @@ pub struct RunConfig {
     /// and dequantize once per round; ineligible layers fall back to the
     /// exact path per layer). See [`crate::compress::agg`].
     pub agg: String,
+    /// Server decode shards in threaded mode: 1 = flat sequential loop,
+    /// N > 1 partitions the round's channels across N worker threads
+    /// with per-shard partial aggregates merged tree-wise (see
+    /// [`crate::fl::topology::sharded`]). Requires `down = raw`.
+    pub shards: usize,
+    /// Aggregation topology: `flat` (every client at the root) or
+    /// `edge:<fanout>` (clients grouped into subtrees of `fanout`, each
+    /// served by an edge aggregator that uplinks one merged
+    /// contribution — see [`crate::fl::topology::edge`]). Requires
+    /// `down = raw` when not flat.
+    pub tier: String,
 }
 
 impl Default for RunConfig {
@@ -124,6 +135,8 @@ impl Default for RunConfig {
             down: "raw".into(),
             down_eb: 1e-3,
             agg: "exact".into(),
+            shards: 1,
+            tier: "flat".into(),
         }
     }
 }
@@ -224,6 +237,15 @@ impl RunConfig {
             "unknown agg mode '{}' (exact|binsum)",
             self.agg
         );
+        self.shards = v.usize_or("shards", self.shards);
+        anyhow::ensure!(
+            (1..=4096).contains(&self.shards),
+            "shards {} outside 1..=4096",
+            self.shards
+        );
+        self.tier = v.str_or("tier", &self.tier).to_string();
+        crate::fl::topology::TierSpec::from_name(&self.tier)
+            .map_err(|e| anyhow::anyhow!("tier '{}': {e}", self.tier))?;
         // Fail fast on unparseable codec specs (both directions).
         self.codec_spec().map_err(|e| anyhow::anyhow!("codec '{}': {e}", self.codec))?;
         self.down_spec().map_err(|e| anyhow::anyhow!("down '{}': {e}", self.down))?;
@@ -234,7 +256,16 @@ impl RunConfig {
     pub fn apply_override(&mut self, key: &str, value: &str) -> crate::Result<()> {
         let quoted = matches!(
             key,
-            "model" | "dataset" | "codec" | "engine" | "store" | "down" | "pred" | "sign" | "agg"
+            "model"
+                | "dataset"
+                | "codec"
+                | "engine"
+                | "store"
+                | "down"
+                | "pred"
+                | "sign"
+                | "agg"
+                | "tier"
         );
         let json_val = if quoted { format!("\"{value}\"") } else { value.to_string() };
         let doc = format!("{{\"{key}\": {json_val}}}");
@@ -284,6 +315,13 @@ impl RunConfig {
     pub fn agg_mode(&self) -> crate::fl::aggregate::AggMode {
         crate::fl::aggregate::AggMode::from_name(&self.agg)
             .unwrap_or(crate::fl::aggregate::AggMode::Exact)
+    }
+
+    /// The aggregation topology as the typed enum (validated at load,
+    /// so this never fails after `from_json` / `apply_override`).
+    pub fn tier_spec(&self) -> crate::fl::topology::TierSpec {
+        crate::fl::topology::TierSpec::from_name(&self.tier)
+            .unwrap_or(crate::fl::topology::TierSpec::Flat)
     }
 
     /// Build the server-side state store this config describes.
@@ -491,6 +529,29 @@ mod tests {
         // Garbage is rejected at config load.
         assert!(RunConfig::from_json(r#"{"agg": "bogus"}"#).is_err());
         assert!(c.apply_override("agg", "nope").is_err());
+    }
+
+    #[test]
+    fn shards_and_tier_keys_parse_and_validate() {
+        use crate::fl::topology::TierSpec;
+        // Defaults: flat topology, one shard.
+        let d = RunConfig::default();
+        assert_eq!(d.shards, 1);
+        assert_eq!(d.tier_spec(), TierSpec::Flat);
+        // JSON and CLI forms.
+        let c = RunConfig::from_json(r#"{"shards": 8, "tier": "edge:32"}"#).unwrap();
+        assert_eq!(c.shards, 8);
+        assert_eq!(c.tier_spec(), TierSpec::Edge { fanout: 32 });
+        let mut c = RunConfig::default();
+        c.apply_override("shards", "4").unwrap();
+        c.apply_override("tier", "edge:16").unwrap();
+        assert_eq!(c.shards, 4);
+        assert_eq!(c.tier_spec(), TierSpec::Edge { fanout: 16 });
+        // Out-of-range / garbage rejected at load.
+        assert!(RunConfig::from_json(r#"{"shards": 0}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"shards": 5000}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"tier": "edge:1"}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"tier": "ring"}"#).is_err());
     }
 
     #[test]

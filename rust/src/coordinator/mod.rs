@@ -31,13 +31,16 @@ use crate::compress::engine::CodecEngine;
 use crate::compress::pipeline::{FedgecCodec, FedgecConfig, FedgecEngine};
 use crate::compress::spec::CodecSpec;
 use crate::compress::state::StateEpoch;
-use crate::compress::store::ClientId;
+use crate::compress::store::{ClientId, ShardedMemStore};
 use crate::compress::GradientCodec;
 use crate::config::{EngineKind, RunConfig};
 use crate::fl::client::{Client, LocalTrainer};
 use crate::fl::hetero::sample_participants;
 use crate::fl::round::{RoundStats, RunSummary};
 use crate::fl::server::Server;
+use crate::fl::topology::edge::EdgeAggregator;
+use crate::fl::topology::sharded::ShardedRunner;
+use crate::fl::topology::TierSpec;
 use crate::fl::transport::bandwidth::{LinkSpec, VirtualLink};
 use crate::fl::transport::{inproc, Channel};
 use crate::runtime::engine::HloPredictEngine;
@@ -479,15 +482,80 @@ pub fn run_threaded(cfg: &RunConfig) -> crate::Result<RunSummary> {
     )
     .with_agg_mode(cfg.agg_mode());
     if let Some(spec) = &down_spec {
-        server = server.with_downlink(DownlinkCodec::new(spec, metas));
+        server = server.with_downlink(DownlinkCodec::new(spec, metas.clone()));
     }
-    server.wait_hellos(&mut server_channels)?;
     let mut summary = RunSummary::default();
-    for _ in 0..cfg.rounds {
-        let stats = server.run_round(&mut server_channels)?;
-        summary.rounds.push(stats);
+    match cfg.tier_spec() {
+        TierSpec::Edge { fanout } => {
+            anyhow::ensure!(
+                down_spec.is_none(),
+                "tier=edge requires down=raw (edges re-fan the raw broadcast bytes)"
+            );
+            // Group the client channels into subtrees of `fanout`, one
+            // edge-aggregator thread per subtree. Subtree predictor
+            // state lives at its edge in a per-edge in-memory store
+            // (each edge gets the full configured budget).
+            let edge_budget = if cfg.store_budget_mb > 0.0 {
+                Some((cfg.store_budget_mb * 1e6) as usize)
+            } else {
+                None
+            };
+            let mut edge_channels: Vec<Box<dyn Channel>> = Vec::new();
+            let mut edge_handles = Vec::new();
+            let mut idx = 0u32;
+            while !server_channels.is_empty() {
+                let take = fanout.min(server_channels.len());
+                let mut subtree: Vec<Box<dyn Channel>> =
+                    server_channels.drain(..take).collect();
+                let (root_end, edge_end) = inproc::pair(None);
+                edge_channels.push(Box::new(root_end));
+                let mut edge = EdgeAggregator::new(
+                    idx,
+                    build_engine(cfg)?,
+                    Box::new(ShardedMemStore::new(8, edge_budget)),
+                    metas.clone(),
+                    cfg.agg_mode(),
+                );
+                edge_handles.push(std::thread::spawn(move || {
+                    let mut up: Box<dyn Channel> = Box::new(edge_end);
+                    edge.run(up.as_mut(), &mut subtree)
+                }));
+                idx += 1;
+            }
+            server.wait_hellos(&mut edge_channels)?;
+            for _ in 0..cfg.rounds {
+                let stats =
+                    crate::fl::topology::edge::run_round_root(&mut server, &mut edge_channels)?;
+                summary.rounds.push(stats);
+            }
+            server.shutdown(&mut edge_channels)?;
+            for h in edge_handles {
+                h.join().map_err(|_| anyhow::anyhow!("edge thread panicked"))??;
+            }
+        }
+        TierSpec::Flat if cfg.shards > 1 => {
+            anyhow::ensure!(
+                down_spec.is_none(),
+                "shards>1 requires down=raw (workers fan the same broadcast bytes)"
+            );
+            server.wait_hellos(&mut server_channels)?;
+            let engines = (0..cfg.shards)
+                .map(|_| build_engine(cfg))
+                .collect::<crate::Result<Vec<_>>>()?;
+            let mut runner = ShardedRunner::new(&server, engines)?;
+            for _ in 0..cfg.rounds {
+                summary.rounds.push(runner.run_round(&mut server, &mut server_channels)?);
+            }
+            server.shutdown(&mut server_channels)?;
+        }
+        TierSpec::Flat => {
+            server.wait_hellos(&mut server_channels)?;
+            for _ in 0..cfg.rounds {
+                summary.rounds.push(server.run_round(&mut server_channels)?);
+            }
+            server.shutdown(&mut server_channels)?;
+        }
     }
-    server.shutdown(&mut server_channels)?;
     for h in handles {
         h.join().map_err(|_| anyhow::anyhow!("client thread panicked"))??;
     }
@@ -519,7 +587,7 @@ pub fn print_summary(cfg: &RunConfig, summary: &RunSummary) {
         ),
         &[
             "round", "loss", "CR", "payload(KB)", "down(KB)", "downCR", "syncs", "comm time",
-            "part", "store(KB)", "eval acc",
+            "part", "drop", "store(KB)", "eval acc",
         ],
     );
     for r in &summary.rounds {
@@ -533,6 +601,7 @@ pub fn print_summary(cfg: &RunConfig, summary: &RunSummary) {
             r.full_syncs.to_string(),
             crate::metrics::fmt_duration(r.comm_time()),
             r.participants.to_string(),
+            r.dropped.to_string(),
             format!("{:.1}", r.store_bytes as f64 / 1e3),
             r.eval.map(|(_, a)| format!("{:.3}", a)).unwrap_or_else(|| "-".into()),
         ]);
@@ -555,4 +624,15 @@ pub fn print_summary(cfg: &RunConfig, summary: &RunSummary) {
         binsum,
         exact,
     );
+    let shards = summary.rounds.iter().map(|r| r.shards).max().unwrap_or(0);
+    if shards > 1 || cfg.tier != "flat" || summary.total_dropped() > 0 {
+        let merge: std::time::Duration = summary.rounds.iter().map(|r| r.merge_time).sum();
+        println!(
+            "tier={} | shards {} | merge {} | dropped {}",
+            cfg.tier,
+            shards,
+            crate::metrics::fmt_duration(merge),
+            summary.total_dropped(),
+        );
+    }
 }

@@ -10,6 +10,7 @@
 //! panicking, so a corrupt or misbehaving client cannot kill the server.
 
 use crate::compress::agg::{AggReport, BinAggregator};
+use crate::compress::blob::{BlobReader, BlobWriter};
 use crate::tensor::ModelGrad;
 
 /// Weighted-average accumulator over reconstructed client gradients.
@@ -69,6 +70,72 @@ impl FedAvg {
             .into_iter()
             .map(|t| t.into_iter().map(|v| (v * inv) as f32).collect())
             .collect()
+    }
+
+    /// Merge another accumulator's sums (the dense shard exchange).
+    /// Either side may be empty; populated sides must agree on shape.
+    pub fn merge(&mut self, other: FedAvg) -> crate::Result<()> {
+        if other.sum.is_empty() {
+            self.total_weight += other.total_weight;
+            return Ok(());
+        }
+        if self.sum.is_empty() {
+            self.sum = other.sum;
+            self.total_weight += other.total_weight;
+            return Ok(());
+        }
+        anyhow::ensure!(
+            self.sum.len() == other.sum.len(),
+            "fedavg merge: {} layers vs {}",
+            other.sum.len(),
+            self.sum.len()
+        );
+        for (i, (acc, o)) in self.sum.iter().zip(&other.sum).enumerate() {
+            anyhow::ensure!(
+                acc.len() == o.len(),
+                "fedavg merge: layer {i} has {} elements vs {}",
+                o.len(),
+                acc.len()
+            );
+        }
+        for (acc, o) in self.sum.iter_mut().zip(&other.sum) {
+            for (a, &b) in acc.iter_mut().zip(o) {
+                *a += b;
+            }
+        }
+        self.total_weight += other.total_weight;
+        Ok(())
+    }
+
+    /// Heap bytes held by the f64 sums (peak-memory proxy).
+    pub fn approx_bytes(&self) -> usize {
+        self.sum.iter().map(|l| l.len() * 8).sum()
+    }
+
+    /// Serialize the partial sums for the edge→root exchange.
+    pub fn write_wire(&self, w: &mut BlobWriter) {
+        w.put_f64(self.total_weight);
+        w.put_u32(self.sum.len() as u32);
+        for layer in &self.sum {
+            w.put_f64_slice(layer);
+        }
+    }
+
+    /// Deserialize a pushed partial aggregate (bounds-checked; shape
+    /// errors surface at [`FedAvg::merge`] time).
+    pub fn read_wire(r: &mut BlobReader) -> crate::Result<FedAvg> {
+        let total_weight = r.get_f64()?;
+        anyhow::ensure!(
+            total_weight.is_finite() && total_weight >= 0.0,
+            "fedavg wire: bad total weight {total_weight}"
+        );
+        let n = r.get_u32()? as usize;
+        anyhow::ensure!(n <= 65_536, "fedavg wire: implausible layer count {n}");
+        let mut sum = Vec::with_capacity(n);
+        for _ in 0..n {
+            sum.push(r.get_f64_vec()?);
+        }
+        Ok(FedAvg { sum, total_weight })
     }
 }
 
@@ -136,6 +203,52 @@ impl RoundAgg {
                 (mean, report)
             }
             RoundAgg::Bin(ba) => ba.finish(),
+        }
+    }
+
+    /// Merge another shard's partial aggregate into this one — the
+    /// tree-merge step of the sharded runner and edge tier. Both sides
+    /// must ride the same route: the route is a fleet-wide config
+    /// (`RunConfig.agg`), so a mismatch is a wiring bug, not data.
+    pub fn merge(&mut self, other: RoundAgg) -> crate::Result<()> {
+        match (self, other) {
+            (RoundAgg::Exact(a), RoundAgg::Exact(b)) => a.merge(b),
+            (RoundAgg::Bin(a), RoundAgg::Bin(b)) => a.merge(b),
+            _ => anyhow::bail!("round-agg merge: exact and binsum shards cannot mix"),
+        }
+    }
+
+    /// Heap bytes held by the accumulators (peak-memory proxy for the
+    /// topology benches: aggregate memory is O(shards·model), never
+    /// O(clients)).
+    pub fn approx_bytes(&self) -> usize {
+        match self {
+            RoundAgg::Exact(fa) => fa.approx_bytes(),
+            RoundAgg::Bin(ba) => ba.approx_bytes(),
+        }
+    }
+
+    /// Serialize for `Msg::AggPush` (route tag + route-specific body).
+    pub fn write_wire(&self, w: &mut BlobWriter) {
+        match self {
+            RoundAgg::Exact(fa) => {
+                w.put_u8(0);
+                fa.write_wire(w);
+            }
+            RoundAgg::Bin(ba) => {
+                w.put_u8(1);
+                ba.write_wire(w);
+            }
+        }
+    }
+
+    /// Deserialize an `AggPush` body (the root validates the route
+    /// against its own `AggMode` at merge time).
+    pub fn read_wire(r: &mut BlobReader) -> crate::Result<RoundAgg> {
+        match r.get_u8()? {
+            0 => Ok(RoundAgg::Exact(FedAvg::read_wire(r)?)),
+            1 => Ok(RoundAgg::Bin(BinAggregator::read_wire(r)?)),
+            t => anyhow::bail!("round-agg wire: unknown route tag {t}"),
         }
     }
 }
@@ -230,6 +343,91 @@ mod tests {
             let want = (r / ref_w) as f32;
             assert_eq!(*got, want, "f64 accumulation must match the reference bit-for-bit");
         }
+    }
+
+    #[test]
+    fn fedavg_merge_matches_single_accumulator() {
+        // Shard-split FedAvg must equal the flat accumulation exactly
+        // when the merge preserves the shard-local sum order.
+        let contribs: Vec<(Vec<f32>, f64)> = (0..10)
+            .map(|k| {
+                let vals: Vec<f32> = (0..5).map(|i| (k * 5 + i) as f32 * 0.37 - 3.0).collect();
+                (vals, 1.0 + (k % 3) as f64 * 0.5)
+            })
+            .collect();
+        let mut flat = FedAvg::new();
+        for (vals, w) in &contribs {
+            flat.add(&grad(vals), *w).unwrap();
+        }
+        let mut shard_a = FedAvg::new();
+        let mut shard_b = FedAvg::new();
+        for (k, (vals, w)) in contribs.iter().enumerate() {
+            let shard = if k < 5 { &mut shard_a } else { &mut shard_b };
+            shard.add(&grad(vals), *w).unwrap();
+        }
+        shard_a.merge(shard_b).unwrap();
+        assert_eq!(shard_a.weight(), flat.weight());
+        // f64 sums of ≤10 values in a different association: identical
+        // here because each element sum is exact in f64 at this scale.
+        let want = flat.mean();
+        let got = shard_a.mean();
+        for (a, b) in got[0].iter().zip(&want[0]) {
+            assert!((a - b).abs() <= 1e-6 * b.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn fedavg_merge_handles_empty_sides_and_rejects_mismatch() {
+        let mut a = FedAvg::new();
+        a.merge(FedAvg::new()).unwrap();
+        assert!(a.mean().is_empty());
+        let mut b = FedAvg::new();
+        b.add(&grad(&[1.0, 2.0]), 2.0).unwrap();
+        let mut empty = FedAvg::new();
+        empty.merge(b).unwrap();
+        assert_eq!(empty.weight(), 2.0);
+        // Shape mismatch is an error with the sums untouched.
+        let mut c = FedAvg::new();
+        c.add(&grad(&[1.0, 2.0, 3.0]), 1.0).unwrap();
+        assert!(empty.merge(c).is_err());
+        assert_eq!(empty.weight(), 2.0);
+        assert_eq!(empty.mean()[0], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn round_agg_merge_rejects_route_mix() {
+        let mut exact = RoundAgg::for_mode(AggMode::Exact);
+        assert!(exact.merge(RoundAgg::for_mode(AggMode::Binsum)).is_err());
+        assert!(exact.merge(RoundAgg::for_mode(AggMode::Exact)).is_ok());
+    }
+
+    #[test]
+    fn round_agg_wire_roundtrips_both_routes() {
+        let mut exact = RoundAgg::for_mode(AggMode::Exact);
+        if let RoundAgg::Exact(fa) = &mut exact {
+            fa.add(&grad(&[1.5, -2.5]), 3.0).unwrap();
+        }
+        let mut w = BlobWriter::new();
+        exact.write_wire(&mut w);
+        let bytes = w.into_bytes();
+        let back = RoundAgg::read_wire(&mut BlobReader::new(&bytes)).unwrap();
+        assert_eq!(back.weight(), 3.0);
+        assert_eq!(back.approx_bytes(), exact.approx_bytes());
+        let (want, _) = exact.finish();
+        let (got, _) = back.finish();
+        assert_eq!(want, got);
+
+        let bin = RoundAgg::for_mode(AggMode::Binsum);
+        let mut w = BlobWriter::new();
+        bin.write_wire(&mut w);
+        let bytes = w.into_bytes();
+        assert!(matches!(
+            RoundAgg::read_wire(&mut BlobReader::new(&bytes)).unwrap(),
+            RoundAgg::Bin(_)
+        ));
+        // Unknown route tag and truncation are rejected.
+        assert!(RoundAgg::read_wire(&mut BlobReader::new(&[7])).is_err());
+        assert!(RoundAgg::read_wire(&mut BlobReader::new(&[])).is_err());
     }
 
     #[test]

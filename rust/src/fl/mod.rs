@@ -15,6 +15,13 @@
 //! and fanned out to every participant as shared bytes, with cold
 //! clients bootstrapped by `FullSync` (see
 //! [`crate::compress::downlink`] and `DESIGN.md` §9).
+//!
+//! Beyond the flat single-thread server loop, [`topology`] scales the
+//! round itself: a sharded round runner that partitions channels across
+//! worker threads (each with its own decode core and partial
+//! aggregate, merged tree-wise at round end) and an edge-aggregator
+//! tier that collapses whole subtrees into one uplink contribution —
+//! the million-client configuration (see `DESIGN.md` §13).
 
 pub mod aggregate;
 pub mod client;
@@ -22,6 +29,7 @@ pub mod hetero;
 pub mod protocol;
 pub mod round;
 pub mod server;
+pub mod topology;
 pub mod transport;
 
 pub use crate::compress::store::ClientId;

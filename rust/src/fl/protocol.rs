@@ -48,6 +48,11 @@ pub enum Msg {
     /// missed broadcast, poisoned view): the full reference model,
     /// bit-exact as the server tracks it.
     FullSync { round: u32, tensors: Vec<Vec<f32>> },
+    /// Edge aggregator → root: one merged partial aggregate for the
+    /// round, covering the edge's whole subtree. The payload is a
+    /// [`crate::fl::aggregate::RoundAgg`] wire body prefixed by the
+    /// subtree's `ShardStats` (see [`crate::fl::topology::edge`]).
+    AggPush { round: u32, payload: Vec<u8> },
     /// Server ends the session.
     Shutdown,
 }
@@ -139,6 +144,11 @@ impl Msg {
             Msg::FullSync { round, tensors } => {
                 write_tensors_msg(&mut w, 10, *round, tensors);
             }
+            Msg::AggPush { round, payload } => {
+                w.put_u8(11);
+                w.put_u32(*round);
+                w.put_bytes(payload);
+            }
         }
         w.into_bytes()
     }
@@ -218,6 +228,11 @@ impl Msg {
                 }
                 Msg::FullSync { round, tensors }
             }
+            11 => {
+                let round = r.get_u32()?;
+                let payload = r.get_bytes()?.to_vec();
+                Msg::AggPush { round, payload }
+            }
             t => anyhow::bail!("unknown message tag {t}"),
         })
     }
@@ -243,9 +258,10 @@ mod tests {
             Msg::DeltaBegin { .. } => 8,
             Msg::DeltaFrame { .. } => 9,
             Msg::FullSync { .. } => 10,
+            Msg::AggPush { .. } => 11,
         }
     }
-    const N_VARIANTS: usize = 11;
+    const N_VARIANTS: usize = 12;
 
     fn sample_of_every_variant() -> Vec<Msg> {
         vec![
@@ -273,6 +289,7 @@ mod tests {
             Msg::DeltaBegin { round: 4, n_layers: 1, reset: false },
             Msg::DeltaFrame { round: 3, frame: vec![2, 0, 0, 0, 1, 0, 0, 0, 7] },
             Msg::FullSync { round: 5, tensors: vec![vec![0.5, -0.25], vec![], vec![3.0]] },
+            Msg::AggPush { round: 6, payload: vec![1, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0] },
             Msg::Shutdown,
         ]
     }

@@ -64,6 +64,16 @@ pub struct RoundStats {
     /// Dequantize passes performed by the aggregator (binsum target:
     /// exactly one per bin-routed layer per round).
     pub dequant_passes: usize,
+    /// Clients whose contribution was dropped whole this round — a
+    /// channel error, protocol violation, or failed decode no longer
+    /// aborts the round; the faulty client is excluded and counted here.
+    pub dropped: usize,
+    /// Worker shards (or edge aggregators) that served the round;
+    /// 1 for the flat sequential loop, 0 for hand-built stats.
+    pub shards: usize,
+    /// Wall-clock of the partial-aggregate merge tree at round end
+    /// (zero when a single aggregator served the whole round).
+    pub merge_time: Duration,
 }
 
 impl RoundStats {
@@ -102,6 +112,90 @@ impl RoundStats {
     /// directions: `S/B_up + S_down/B_down`.
     pub fn uncompressed_time(&self, link: &LinkSpec) -> Duration {
         link.transmit_time(self.raw_bytes) + link.downlink_time(self.downlink_raw_bytes)
+    }
+}
+
+/// The uplink-side tallies one shard worker (or edge aggregator)
+/// accumulates while serving its slice of the fleet. Shards fold into
+/// the round's [`RoundStats`] at merge time; edges ship theirs to the
+/// root inside `Msg::AggPush`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ShardStats {
+    /// Contributions absorbed into the shard's partial aggregate.
+    pub served: usize,
+    /// Contributions dropped whole (channel error, protocol violation,
+    /// failed decode).
+    pub dropped: usize,
+    /// State resets ordered by the epoch handshake.
+    pub resyncs: usize,
+    /// Compressed payload bytes received.
+    pub payload_bytes: usize,
+    /// Uncompressed gradient bytes those payloads stand for.
+    pub raw_bytes: usize,
+    /// Sum of reported client training losses (divide by the round's
+    /// total `served` after merging, not per shard).
+    pub loss_sum: f64,
+    /// Payload decode CPU.
+    pub decode_time: Duration,
+    /// Aggregator-add CPU.
+    pub agg_time: Duration,
+}
+
+impl ShardStats {
+    /// Accumulate another shard's tallies (order-independent).
+    pub fn absorb(&mut self, other: &ShardStats) {
+        self.served += other.served;
+        self.dropped += other.dropped;
+        self.resyncs += other.resyncs;
+        self.payload_bytes += other.payload_bytes;
+        self.raw_bytes += other.raw_bytes;
+        self.loss_sum += other.loss_sum;
+        self.decode_time += other.decode_time;
+        self.agg_time += other.agg_time;
+    }
+
+    /// Fold the merged tallies into the round's stats. `mean_loss`
+    /// receives the raw loss sum — the caller divides by `served` once
+    /// all shards are in.
+    pub fn fold_into(&self, stats: &mut RoundStats) {
+        stats.dropped += self.dropped;
+        stats.resyncs += self.resyncs;
+        stats.payload_bytes += self.payload_bytes;
+        stats.raw_bytes += self.raw_bytes;
+        stats.mean_loss += self.loss_sum;
+        stats.decomp_time += self.decode_time;
+        stats.server_decode_time += self.decode_time;
+        stats.agg_time += self.agg_time;
+    }
+
+    /// Serialize for the edge→root `AggPush` header.
+    pub fn write_wire(&self, w: &mut crate::compress::blob::BlobWriter) {
+        w.put_u64(self.served as u64);
+        w.put_u64(self.dropped as u64);
+        w.put_u64(self.resyncs as u64);
+        w.put_u64(self.payload_bytes as u64);
+        w.put_u64(self.raw_bytes as u64);
+        w.put_f64(self.loss_sum);
+        w.put_u64(self.decode_time.as_nanos() as u64);
+        w.put_u64(self.agg_time.as_nanos() as u64);
+    }
+
+    /// Deserialize an `AggPush` header.
+    pub fn read_wire(r: &mut crate::compress::blob::BlobReader) -> crate::Result<ShardStats> {
+        let loss_guard = |v: f64| -> crate::Result<f64> {
+            anyhow::ensure!(v.is_finite(), "shard stats: non-finite loss sum {v}");
+            Ok(v)
+        };
+        Ok(ShardStats {
+            served: r.get_u64()? as usize,
+            dropped: r.get_u64()? as usize,
+            resyncs: r.get_u64()? as usize,
+            payload_bytes: r.get_u64()? as usize,
+            raw_bytes: r.get_u64()? as usize,
+            loss_sum: loss_guard(r.get_f64()?)?,
+            decode_time: Duration::from_nanos(r.get_u64()?),
+            agg_time: Duration::from_nanos(r.get_u64()?),
+        })
     }
 }
 
@@ -153,6 +247,10 @@ impl RunSummary {
     }
     pub fn loss_curve(&self) -> Vec<f64> {
         self.rounds.iter().map(|r| r.mean_loss).collect()
+    }
+    /// Run-wide count of contributions dropped whole.
+    pub fn total_dropped(&self) -> usize {
+        self.rounds.iter().map(|r| r.dropped).sum()
     }
 }
 
@@ -214,6 +312,48 @@ mod tests {
         assert_eq!(s.total_downlink(), 75);
         assert_eq!(s.total_downlink_raw(), 300);
         assert!((s.mean_down_ratio() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shard_stats_absorb_fold_and_wire() {
+        let a = ShardStats {
+            served: 5,
+            dropped: 1,
+            resyncs: 2,
+            payload_bytes: 100,
+            raw_bytes: 1000,
+            loss_sum: 2.5,
+            decode_time: Duration::from_millis(3),
+            agg_time: Duration::from_millis(1),
+        };
+        let b = ShardStats { served: 3, dropped: 0, loss_sum: 1.5, ..Default::default() };
+        let mut total = a;
+        total.absorb(&b);
+        assert_eq!(total.served, 8);
+        assert_eq!(total.dropped, 1);
+        assert_eq!(total.loss_sum, 4.0);
+        let mut stats = RoundStats::default();
+        total.fold_into(&mut stats);
+        assert_eq!(stats.dropped, 1);
+        assert_eq!(stats.resyncs, 2);
+        assert_eq!(stats.payload_bytes, 100);
+        assert_eq!(stats.mean_loss, 4.0);
+        assert_eq!(stats.server_decode_time, Duration::from_millis(3));
+        // Wire roundtrip is exact.
+        let mut w = crate::compress::blob::BlobWriter::new();
+        a.write_wire(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = crate::compress::blob::BlobReader::new(&bytes);
+        assert_eq!(ShardStats::read_wire(&mut r).unwrap(), a);
+        assert_eq!(r.remaining(), 0);
+        // Truncation and poisoned loss sums are rejected.
+        assert!(ShardStats::read_wire(&mut crate::compress::blob::BlobReader::new(&bytes[..10]))
+            .is_err());
+        let mut w = crate::compress::blob::BlobWriter::new();
+        ShardStats { loss_sum: f64::NAN, ..Default::default() }.write_wire(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = crate::compress::blob::BlobReader::new(&bytes);
+        assert!(ShardStats::read_wire(&mut r).is_err());
     }
 
     #[test]

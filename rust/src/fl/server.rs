@@ -11,13 +11,26 @@
 //! a deterministic cold-start reset on both sides (never by silent
 //! divergence).
 //!
+//! The decode half lives in [`DecodeCore`]: engine + shared store +
+//! shared admission registry. The flat [`Server`] owns one core and
+//! serves channels sequentially; [`Server::fork_core`] hands each
+//! worker of the sharded runner (see [`crate::fl::topology`]) its own
+//! core over the *same* store and membership, and an edge aggregator
+//! owns a standalone core for its subtree.
+//!
+//! Fault model: a client's channel error, protocol violation, or failed
+//! decode drops **that client's contribution whole** (validate-before-
+//! mutate, like the aggregators) and is tallied in `RoundStats.dropped`
+//! — one bad client cannot abort a round.
+//!
 //! Accepts both monolithic `Update` blobs and frame-streamed updates
 //! (`UpdateBegin` + per-layer `UpdateFrame`s), decoding each frame as it
 //! arrives. Tracks the per-round communication statistics that drive the
 //! Fig. 11 experiments.
 
 use std::collections::HashSet;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant};
 
 use crate::compress::agg::{AggReport, BinFrame};
@@ -29,7 +42,7 @@ use crate::compress::state::{ClientState, StateEpoch};
 use crate::compress::store::{ClientId, ShardedMemStore, StateStore, StoreStats};
 use crate::fl::aggregate::{apply_update, AggMode, RoundAgg};
 use crate::fl::protocol::Msg;
-use crate::fl::round::RoundStats;
+use crate::fl::round::{RoundStats, ShardStats};
 use crate::fl::transport::Channel;
 use crate::tensor::{LayerGrad, LayerMeta, ModelGrad};
 
@@ -47,109 +60,76 @@ enum Streamed {
     Bins(Vec<BinFrame>),
 }
 
-/// Parameter-server state.
-pub struct Server {
-    /// Global model parameters (flat per layer, matching `metas`).
-    pub params: Vec<Vec<f32>>,
-    pub metas: Vec<LayerMeta>,
-    /// Server-side learning rate applied to the aggregated gradient.
-    pub lr: f32,
-    /// The single stateless decompressor shared by all clients.
-    engine: Box<dyn CodecEngine>,
-    /// Per-client predictor-state ownership (bounded, evictable).
-    store: Box<dyn StateStore>,
-    /// Clients admitted to the federation (via `Hello` or `admit`).
-    /// Payloads and state checks from unknown ids are rejected with a
-    /// proper `Err`, never an index panic.
-    admitted: HashSet<ClientId>,
-    /// Downlink broadcast compressor (`None` = raw f32 broadcast; even
-    /// then the broadcast message is encoded once and fanned out).
-    downlink: Option<DownlinkCodec>,
-    /// Client id behind each channel index (recorded by `wait_hellos`;
-    /// the downlink codec keys its synced-set on these).
-    channel_ids: Vec<ClientId>,
-    /// How rounds aggregate (`agg=exact|binsum`, see
-    /// [`crate::compress::agg`]). Binsum-ineligible layers fall back
-    /// per layer inside the aggregator, so this is always safe to set.
-    agg_mode: AggMode,
-    round: u32,
+/// What one successfully served update contributed. Committed into
+/// [`ShardStats`] only on success, so a dropped client leaves no trace
+/// in the tallies.
+struct Served {
+    wire_bytes: usize,
+    loss: f32,
+    times: AbsorbTimes,
 }
 
-impl Server {
-    /// Full constructor: engine + explicit store backend.
-    pub fn new(
-        params: Vec<Vec<f32>>,
-        metas: Vec<LayerMeta>,
-        lr: f32,
+/// The federation's admission registry, shared by every decode core:
+/// the flat server and all its shard forks see one membership, updated
+/// concurrently.
+#[derive(Default)]
+pub struct Admissions {
+    /// Open admission: every id is implicitly admitted. For synthetic
+    /// million-client fleets, where materializing the id set would make
+    /// server memory O(clients) with no protocol benefit.
+    open: AtomicBool,
+    ids: RwLock<HashSet<ClientId>>,
+}
+
+impl Admissions {
+    pub fn admit(&self, client: ClientId) {
+        self.ids.write().expect("admissions lock").insert(client);
+    }
+
+    pub fn admit_all(&self) {
+        self.open.store(true, Ordering::Relaxed);
+    }
+
+    pub fn contains(&self, client: ClientId) -> bool {
+        self.open.load(Ordering::Relaxed)
+            || self.ids.read().expect("admissions lock").contains(&client)
+    }
+}
+
+/// The server's decode half: one codec engine (engines hold scratch
+/// buffers and are not shared across threads) plus shared handles to
+/// the state store and admission registry. Everything needed to turn
+/// uplinks into aggregator input, with no reference to the global
+/// model, so shard workers and edge aggregators can run it anywhere.
+pub struct DecodeCore {
+    metas: Arc<Vec<LayerMeta>>,
+    engine: Box<dyn CodecEngine>,
+    store: Arc<dyn StateStore>,
+    admissions: Arc<Admissions>,
+}
+
+impl DecodeCore {
+    /// A core with its own store and membership — the edge-aggregator
+    /// construction (an edge owns its subtree's state outright).
+    pub fn standalone(
         engine: Box<dyn CodecEngine>,
         store: Box<dyn StateStore>,
+        metas: Vec<LayerMeta>,
     ) -> Self {
-        Server {
-            params,
-            metas,
-            lr,
+        DecodeCore {
+            metas: Arc::new(metas),
             engine,
-            store,
-            admitted: HashSet::new(),
-            downlink: None,
-            channel_ids: Vec::new(),
-            agg_mode: AggMode::Exact,
-            round: 0,
+            store: Arc::from(store),
+            admissions: Arc::new(Admissions::default()),
         }
     }
 
-    /// Attach a downlink broadcast compressor: the per-round global
-    /// delta is encoded once and fanned out to every participant (see
-    /// [`crate::compress::downlink`]).
-    pub fn with_downlink(mut self, downlink: DownlinkCodec) -> Self {
-        self.downlink = Some(downlink);
-        self
-    }
-
-    /// Select the aggregation route for subsequent rounds.
-    pub fn with_agg_mode(mut self, mode: AggMode) -> Self {
-        self.agg_mode = mode;
-        self
-    }
-
-    pub fn agg_mode(&self) -> AggMode {
-        self.agg_mode
-    }
-
-    /// Fresh per-round aggregator matching the configured route (drive
-    /// it through [`Self::absorb_payload`] then [`Self::finish_round`]).
-    pub fn new_round_agg(&self) -> RoundAgg {
-        RoundAgg::for_mode(self.agg_mode)
-    }
-
-    /// The downlink reference model — bit-identical to every synced
-    /// client's view (`None` without a downlink codec or before the
-    /// first broadcast).
-    pub fn downlink_reference(&self) -> Option<&[Vec<f32>]> {
-        self.downlink.as_ref().and_then(|d| d.reference())
-    }
-
-    /// Convenience: engine over an unbounded sharded in-memory store.
-    pub fn with_engine(
-        params: Vec<Vec<f32>>,
-        metas: Vec<LayerMeta>,
-        lr: f32,
-        engine: Box<dyn CodecEngine>,
-    ) -> Self {
-        Self::new(params, metas, lr, engine, Box::new(ShardedMemStore::new(8, None)))
-    }
-
-    pub fn round(&self) -> u32 {
-        self.round
-    }
-
-    /// Admit a client id (the transportless simulation path's `Hello`).
-    pub fn admit(&mut self, client: ClientId) {
-        self.admitted.insert(client);
+    pub fn admit(&self, client: ClientId) {
+        self.admissions.admit(client);
     }
 
     pub fn is_admitted(&self, client: ClientId) -> bool {
-        self.admitted.contains(&client)
+        self.admissions.contains(client)
     }
 
     /// Current state-store occupancy.
@@ -157,24 +137,14 @@ impl Server {
         self.store.stats()
     }
 
-    /// Peek a client's stored state epoch (observability; `None` when no
-    /// state is held — never seen, reset, or evicted).
-    pub fn state_epoch(&self, client: ClientId) -> crate::Result<Option<StateEpoch>> {
-        self.store.epoch(client)
-    }
-
-    /// Fill a round's store-occupancy fields: held mirror states and
-    /// their bytes across *both* tiers (resident + spilled), so the
-    /// state-memory trajectory is honest for disk-backed stores too.
-    pub fn record_store_occupancy(&self, stats: &mut RoundStats) {
-        let occ = self.store.stats();
-        stats.store_clients = occ.resident_clients + occ.spilled_clients;
-        stats.store_bytes = occ.resident_bytes + occ.spilled_bytes;
+    /// Uncompressed f32 bytes of one full model under these metas.
+    pub fn raw_model_bytes(&self) -> usize {
+        self.metas.iter().map(|m| m.numel * 4).sum()
     }
 
     fn ensure_admitted(&self, client: ClientId) -> crate::Result<()> {
         anyhow::ensure!(
-            self.admitted.contains(&client),
+            self.admissions.contains(client),
             "unknown client {client}: not admitted to this federation"
         );
         Ok(())
@@ -207,7 +177,12 @@ impl Server {
     }
 
     /// Check a client's state out of the store (cold default if absent).
+    /// Stateless engines skip the store round-trip entirely — at
+    /// million-client scale those lock acquisitions are pure overhead.
     fn checkout(&mut self, client: ClientId) -> crate::Result<ClientState> {
+        if !self.engine.stateful() {
+            return Ok(ClientState::cold());
+        }
         Ok(self.store.take(client)?.unwrap_or_else(ClientState::cold))
     }
 
@@ -223,9 +198,9 @@ impl Server {
     /// Process one already-received client payload: decompress to the
     /// round aggregator's input form (dense f32 for `agg=exact`, integer
     /// bins where eligible for `agg=binsum`) and absorb it. Returns the
-    /// decode/aggregate time split. (Exposed for the single-threaded
-    /// simulation path.) Unknown `client` ids are a proper `Err`; a
-    /// failed decode or a malformed contribution is dropped whole.
+    /// decode/aggregate time split. Unknown `client` ids are a proper
+    /// `Err`; a failed decode or a malformed contribution is dropped
+    /// whole.
     pub fn absorb_payload(
         &mut self,
         client: ClientId,
@@ -289,6 +264,7 @@ impl Server {
         );
         let use_bins = matches!(agg, RoundAgg::Bin(_));
         let mut cs = self.checkout(client)?;
+        let metas = Arc::clone(&self.metas);
         let mut decode = || -> crate::Result<(Streamed, usize, Duration)> {
             let mut session =
                 EngineDecodeSession::new(self.engine.as_mut(), &mut cs.codec, n_layers);
@@ -305,9 +281,9 @@ impl Server {
                         let t0 = Instant::now();
                         // The session enforces frame ordering/indexing.
                         if use_bins {
-                            bins.push(session.decode_frame_to_bins(&frame, &self.metas[li])?);
+                            bins.push(session.decode_frame_to_bins(&frame, &metas[li])?);
                         } else {
-                            grads.layers.push(session.decode_frame(&frame, &self.metas[li])?);
+                            grads.layers.push(session.decode_frame(&frame, &metas[li])?);
                         }
                         decode_time += t0.elapsed();
                     }
@@ -337,6 +313,285 @@ impl Server {
         }
     }
 
+    /// Serve one channel's pass-1 state handshake: receive its
+    /// `StateCheck`, answer with the reset verdict. Returns whether a
+    /// reset was ordered.
+    pub fn serve_state_check(&mut self, ch: &mut dyn Channel) -> crate::Result<bool> {
+        match ch.recv()? {
+            Msg::StateCheck { client_id, rounds, fingerprint } => {
+                let reset = self.check_state(client_id, StateEpoch { rounds, fingerprint })?;
+                ch.send(&Msg::StateResync { client_id, reset })?;
+                Ok(reset)
+            }
+            other => anyhow::bail!("expected StateCheck, got {other:?}"),
+        }
+    }
+
+    /// Serve one channel's pass-2 update (monolithic or frame-streamed),
+    /// absorbing it into `agg`.
+    fn serve_update(
+        &mut self,
+        ch: &mut dyn Channel,
+        round: u32,
+        agg: &mut RoundAgg,
+    ) -> crate::Result<Served> {
+        match ch.recv()? {
+            Msg::Update { client_id, round: r, payload, train_loss, n_samples } => {
+                anyhow::ensure!(r == round, "client {client_id} answered round {r}");
+                let times = self.absorb_payload(client_id, &payload, n_samples as f64, agg)?;
+                Ok(Served { wire_bytes: payload.len(), loss: train_loss, times })
+            }
+            Msg::UpdateBegin { client_id, round: r, n_layers, train_loss, n_samples } => {
+                anyhow::ensure!(r == round, "client {client_id} answered round {r}");
+                self.ensure_admitted(client_id)?;
+                let (wire_bytes, times) = self.recv_streamed_update(
+                    client_id,
+                    ch,
+                    round,
+                    n_layers as usize,
+                    n_samples as f64,
+                    agg,
+                )?;
+                Ok(Served { wire_bytes, loss: train_loss, times })
+            }
+            other => anyhow::bail!("server: unexpected {other:?}"),
+        }
+    }
+
+    /// Serve a slice of channels for one round: the pass-1 state
+    /// handshake, then pass-2 update collection, absorbing every good
+    /// contribution into `agg`.
+    ///
+    /// This is the fault boundary: a per-channel failure (hung-up
+    /// channel, protocol violation, failed decode) drops that client's
+    /// contribution whole and is tallied in `dropped` — it never aborts
+    /// the round. A client dropped in pass 1 is skipped in pass 2; a
+    /// client whose streamed update failed mid-frame leaves its
+    /// remaining frames queued, which poisons *its own* channel for
+    /// subsequent rounds (it keeps being dropped), never its neighbors.
+    ///
+    /// The same loop serves a flat server over all channels, one shard
+    /// worker over its slice, and an edge aggregator over its subtree.
+    pub fn serve_round(
+        &mut self,
+        channels: &mut [Box<dyn Channel>],
+        round: u32,
+        raw_model_bytes: usize,
+        agg: &mut RoundAgg,
+    ) -> ShardStats {
+        let mut st = ShardStats::default();
+        let mut dead = vec![false; channels.len()];
+        for (idx, ch) in channels.iter_mut().enumerate() {
+            match self.serve_state_check(ch.as_mut()) {
+                Ok(true) => st.resyncs += 1,
+                Ok(false) => {}
+                Err(_) => {
+                    dead[idx] = true;
+                    st.dropped += 1;
+                }
+            }
+        }
+        for (idx, ch) in channels.iter_mut().enumerate() {
+            if dead[idx] {
+                continue;
+            }
+            match self.serve_update(ch.as_mut(), round, agg) {
+                Ok(served) => {
+                    st.served += 1;
+                    st.payload_bytes += served.wire_bytes;
+                    st.raw_bytes += raw_model_bytes;
+                    st.loss_sum += served.loss as f64;
+                    st.decode_time += served.times.decode;
+                    st.agg_time += served.times.agg;
+                }
+                Err(_) => {
+                    dead[idx] = true;
+                    st.dropped += 1;
+                }
+            }
+        }
+        st
+    }
+}
+
+/// Parameter-server state.
+pub struct Server {
+    /// Global model parameters (flat per layer, matching `metas`).
+    pub params: Vec<Vec<f32>>,
+    /// Layer shapes. Treated as immutable after construction — the
+    /// decode cores hold a shared snapshot taken by the constructor.
+    pub metas: Vec<LayerMeta>,
+    /// Server-side learning rate applied to the aggregated gradient.
+    pub lr: f32,
+    /// The decode half: engine + shared store + shared admissions.
+    core: DecodeCore,
+    /// Downlink broadcast compressor (`None` = raw f32 broadcast; even
+    /// then the broadcast message is encoded once and fanned out).
+    downlink: Option<DownlinkCodec>,
+    /// Client id behind each channel index (recorded by `wait_hellos`;
+    /// the downlink codec keys its synced-set on these).
+    channel_ids: Vec<ClientId>,
+    /// How rounds aggregate (`agg=exact|binsum`, see
+    /// [`crate::compress::agg`]). Binsum-ineligible layers fall back
+    /// per layer inside the aggregator, so this is always safe to set.
+    agg_mode: AggMode,
+    round: u32,
+}
+
+impl Server {
+    /// Full constructor: engine + explicit store backend.
+    pub fn new(
+        params: Vec<Vec<f32>>,
+        metas: Vec<LayerMeta>,
+        lr: f32,
+        engine: Box<dyn CodecEngine>,
+        store: Box<dyn StateStore>,
+    ) -> Self {
+        let core = DecodeCore {
+            metas: Arc::new(metas.clone()),
+            engine,
+            store: Arc::from(store),
+            admissions: Arc::new(Admissions::default()),
+        };
+        Server {
+            params,
+            metas,
+            lr,
+            core,
+            downlink: None,
+            channel_ids: Vec::new(),
+            agg_mode: AggMode::Exact,
+            round: 0,
+        }
+    }
+
+    /// Attach a downlink broadcast compressor: the per-round global
+    /// delta is encoded once and fanned out to every participant (see
+    /// [`crate::compress::downlink`]).
+    pub fn with_downlink(mut self, downlink: DownlinkCodec) -> Self {
+        self.downlink = Some(downlink);
+        self
+    }
+
+    /// Whether a downlink codec is attached (the sharded/edge topologies
+    /// require the raw encode-once broadcast).
+    pub fn has_downlink(&self) -> bool {
+        self.downlink.is_some()
+    }
+
+    /// Select the aggregation route for subsequent rounds.
+    pub fn with_agg_mode(mut self, mode: AggMode) -> Self {
+        self.agg_mode = mode;
+        self
+    }
+
+    pub fn agg_mode(&self) -> AggMode {
+        self.agg_mode
+    }
+
+    /// Fresh per-round aggregator matching the configured route (drive
+    /// it through [`Self::absorb_payload`] then [`Self::finish_round`]).
+    pub fn new_round_agg(&self) -> RoundAgg {
+        RoundAgg::for_mode(self.agg_mode)
+    }
+
+    /// The downlink reference model — bit-identical to every synced
+    /// client's view (`None` without a downlink codec or before the
+    /// first broadcast).
+    pub fn downlink_reference(&self) -> Option<&[Vec<f32>]> {
+        self.downlink.as_ref().and_then(|d| d.reference())
+    }
+
+    /// Convenience: engine over an unbounded sharded in-memory store.
+    pub fn with_engine(
+        params: Vec<Vec<f32>>,
+        metas: Vec<LayerMeta>,
+        lr: f32,
+        engine: Box<dyn CodecEngine>,
+    ) -> Self {
+        Self::new(params, metas, lr, engine, Box::new(ShardedMemStore::new(8, None)))
+    }
+
+    pub fn round(&self) -> u32 {
+        self.round
+    }
+
+    /// Fork the decode half for a shard worker: a fresh engine wrapped
+    /// around shared handles to *this* server's store, metas, and
+    /// admission registry — one membership and one state-store across
+    /// all workers, engines per worker.
+    pub fn fork_core(&self, engine: Box<dyn CodecEngine>) -> DecodeCore {
+        DecodeCore {
+            metas: Arc::clone(&self.core.metas),
+            engine,
+            store: Arc::clone(&self.core.store),
+            admissions: Arc::clone(&self.core.admissions),
+        }
+    }
+
+    /// Admit a client id (the transportless simulation path's `Hello`).
+    pub fn admit(&mut self, client: ClientId) {
+        self.core.admit(client);
+    }
+
+    /// Open admission: treat every client id as admitted. For synthetic
+    /// large-fleet drivers where materializing the id set would make
+    /// server memory O(clients).
+    pub fn admit_all(&mut self) {
+        self.core.admissions.admit_all();
+    }
+
+    pub fn is_admitted(&self, client: ClientId) -> bool {
+        self.core.is_admitted(client)
+    }
+
+    /// Current state-store occupancy.
+    pub fn store_stats(&self) -> StoreStats {
+        self.core.store.stats()
+    }
+
+    /// Peek a client's stored state epoch (observability; `None` when no
+    /// state is held — never seen, reset, or evicted).
+    pub fn state_epoch(&self, client: ClientId) -> crate::Result<Option<StateEpoch>> {
+        self.core.store.epoch(client)
+    }
+
+    /// Uncompressed f32 bytes of one full model broadcast/update.
+    pub fn raw_model_bytes(&self) -> usize {
+        self.core.raw_model_bytes()
+    }
+
+    /// Fill a round's store-occupancy fields: held mirror states and
+    /// their bytes across *both* tiers (resident + spilled), so the
+    /// state-memory trajectory is honest for disk-backed stores too.
+    pub fn record_store_occupancy(&self, stats: &mut RoundStats) {
+        let occ = self.core.store.stats();
+        stats.store_clients = occ.resident_clients + occ.spilled_clients;
+        stats.store_bytes = occ.resident_bytes + occ.spilled_bytes;
+    }
+
+    /// See [`DecodeCore::check_state`].
+    pub fn check_state(
+        &mut self,
+        client: ClientId,
+        client_epoch: StateEpoch,
+    ) -> crate::Result<bool> {
+        self.core.check_state(client, client_epoch)
+    }
+
+    /// See [`DecodeCore::absorb_payload`]. (Exposed for the
+    /// single-threaded simulation path and the direct-drive topology
+    /// tests.)
+    pub fn absorb_payload(
+        &mut self,
+        client: ClientId,
+        payload: &[u8],
+        weight: f64,
+        agg: &mut RoundAgg,
+    ) -> crate::Result<AbsorbTimes> {
+        self.core.absorb_payload(client, payload, weight, agg)
+    }
+
     /// Finish the round: fold the aggregator (for `agg=binsum` this is
     /// the single dequantize-and-divide), apply the mean gradient to
     /// the global parameters, and report the per-layer routes taken.
@@ -354,14 +609,16 @@ impl Server {
     /// Broadcast this round's model to every channel. The message bytes
     /// are encoded **once** and fanned out as the same shared buffer —
     /// for both the raw `GlobalParams` path and the compressed
-    /// delta/full-sync path.
+    /// delta/full-sync path. Per-channel sends are best-effort: a dead
+    /// channel surfaces as a dropped client in the receive passes
+    /// instead of aborting the broadcast.
     fn broadcast(
         &mut self,
         channels: &mut [Box<dyn Channel>],
         round: u32,
         stats: &mut RoundStats,
     ) -> crate::Result<()> {
-        let raw_model_bytes: usize = self.metas.iter().map(|m| m.numel * 4).sum();
+        let raw_model_bytes = self.core.raw_model_bytes();
         stats.downlink_raw_bytes = raw_model_bytes * channels.len();
         // Byte accounting convention (matches the uplink and the
         // run_local simulation): frame/tensor payload bytes only, no
@@ -372,7 +629,7 @@ impl Server {
                 let bytes: Arc<[u8]> = Msg::encode_global_params(round, &self.params).into();
                 stats.downlink_bytes = raw_model_bytes * channels.len();
                 for ch in channels.iter_mut() {
-                    ch.send_encoded(&bytes)?;
+                    let _ = ch.send_encoded(&bytes);
                 }
             }
             Some(down) => {
@@ -418,15 +675,15 @@ impl Server {
                             .ok_or_else(|| anyhow::anyhow!("cold client without full sync"))?;
                         stats.full_syncs += 1;
                         stats.downlink_bytes += raw_model_bytes;
-                        ch.send_encoded(bytes)?;
+                        let _ = ch.send_encoded(bytes);
                     } else {
                         let (begin, frames) = delta_msgs
                             .as_ref()
                             .ok_or_else(|| anyhow::anyhow!("warm client without a delta"))?;
                         stats.downlink_bytes += delta_payload;
-                        ch.send_encoded(begin)?;
+                        let _ = ch.send_encoded(begin);
                         for f in frames {
-                            ch.send_encoded(f)?;
+                            let _ = ch.send_encoded(f);
                         }
                     }
                 }
@@ -438,63 +695,24 @@ impl Server {
     /// Full synchronous round over live channels (threaded/TCP mode):
     /// broadcast params (encode-once fan-out; compressed delta when a
     /// downlink codec is attached), run the state handshake, collect
-    /// updates (monolithic or frame-streamed), aggregate, step.
+    /// updates (monolithic or frame-streamed), aggregate, step. A
+    /// faulty client is dropped whole and counted in
+    /// `RoundStats.dropped`; the round itself always completes.
     pub fn run_round(&mut self, channels: &mut [Box<dyn Channel>]) -> crate::Result<RoundStats> {
         let round = self.round;
-        let mut stats = RoundStats { round, participants: channels.len(), ..Default::default() };
+        let mut stats = RoundStats {
+            round,
+            participants: channels.len(),
+            shards: 1,
+            ..Default::default()
+        };
         self.broadcast(channels, round, &mut stats)?;
-        // ── Pass 1: state epoch handshake (before any client trains). ──
-        for ch in channels.iter_mut() {
-            match ch.recv()? {
-                Msg::StateCheck { client_id, rounds, fingerprint } => {
-                    let reset =
-                        self.check_state(client_id, StateEpoch { rounds, fingerprint })?;
-                    if reset {
-                        stats.resyncs += 1;
-                    }
-                    ch.send(&Msg::StateResync { client_id, reset })?;
-                }
-                other => anyhow::bail!("expected StateCheck, got {other:?}"),
-            }
-        }
-        // ── Pass 2: updates. ──
-        let raw_model_bytes: usize = self.metas.iter().map(|m| m.numel * 4).sum();
+        let raw_model_bytes = self.core.raw_model_bytes();
         let mut agg = self.new_round_agg();
-        for idx in 0..channels.len() {
-            match channels[idx].recv()? {
-                Msg::Update { client_id, round: r, payload, train_loss, n_samples } => {
-                    anyhow::ensure!(r == round, "client {client_id} answered round {r}");
-                    stats.payload_bytes += payload.len();
-                    stats.raw_bytes += raw_model_bytes;
-                    stats.mean_loss += train_loss as f64;
-                    let times =
-                        self.absorb_payload(client_id, &payload, n_samples as f64, &mut agg)?;
-                    stats.decomp_time += times.decode;
-                    stats.server_decode_time += times.decode;
-                    stats.agg_time += times.agg;
-                }
-                Msg::UpdateBegin { client_id, round: r, n_layers, train_loss, n_samples } => {
-                    anyhow::ensure!(r == round, "client {client_id} answered round {r}");
-                    self.ensure_admitted(client_id)?;
-                    stats.raw_bytes += raw_model_bytes;
-                    stats.mean_loss += train_loss as f64;
-                    let (wire_bytes, times) = self.recv_streamed_update(
-                        client_id,
-                        channels[idx].as_mut(),
-                        round,
-                        n_layers as usize,
-                        n_samples as f64,
-                        &mut agg,
-                    )?;
-                    stats.payload_bytes += wire_bytes;
-                    stats.decomp_time += times.decode;
-                    stats.server_decode_time += times.decode;
-                    stats.agg_time += times.agg;
-                }
-                other => anyhow::bail!("server: unexpected {other:?}"),
-            }
-        }
-        stats.mean_loss /= channels.len().max(1) as f64;
+        let shard = self.core.serve_round(channels, round, raw_model_bytes, &mut agg);
+        let served = shard.served;
+        shard.fold_into(&mut stats);
+        stats.mean_loss /= served.max(1) as f64;
         self.record_store_occupancy(&mut stats);
         let rep = self.finish_round(agg);
         stats.agg_time += rep.finish_time;
@@ -504,23 +722,32 @@ impl Server {
         Ok(stats)
     }
 
-    /// Send shutdown to all clients.
+    /// Send shutdown to all clients (best-effort: already-dead channels
+    /// are skipped, matching the round-level fault model).
     pub fn shutdown(&self, channels: &mut [Box<dyn Channel>]) -> crate::Result<()> {
         for ch in channels.iter_mut() {
-            ch.send(&Msg::Shutdown)?;
+            let _ = ch.send(&Msg::Shutdown);
         }
         Ok(())
     }
 
     /// Wait for the Hello of every client (threaded/TCP mode), admitting
     /// each announced id and recording which id sits behind each channel
-    /// (the downlink broadcast plans its fan-out against these).
+    /// (the downlink broadcast plans its fan-out against these). A
+    /// duplicate id is rejected with an `Err`: two channels claiming one
+    /// id would corrupt the `channel_ids`-keyed downlink fan-out and
+    /// silently share predictor state.
     pub fn wait_hellos(&mut self, channels: &mut [Box<dyn Channel>]) -> crate::Result<()> {
         self.channel_ids.clear();
+        let mut seen = HashSet::new();
         for ch in channels.iter_mut() {
             match ch.recv()? {
                 Msg::Hello { client_id } => {
-                    self.admitted.insert(client_id);
+                    anyhow::ensure!(
+                        seen.insert(client_id),
+                        "duplicate Hello for client {client_id}: one id, one channel"
+                    );
+                    self.core.admit(client_id);
                     self.channel_ids.push(client_id);
                 }
                 other => anyhow::bail!("expected Hello, got {other:?}"),
@@ -547,6 +774,10 @@ impl Server {
 mod tests {
     use super::*;
     use crate::compress::pipeline::{FedgecCodec, FedgecConfig, FedgecEngine};
+    use crate::compress::predictor::magnitude::MagnitudeSel;
+    use crate::compress::predictor::sign::SignSel;
+    use crate::compress::predictor::PredictorSpec;
+    use crate::compress::quant::ErrorBound;
     use crate::compress::GradientCodec;
     use crate::fl::aggregate::FedAvg;
     use crate::tensor::LayerMeta;
@@ -566,6 +797,16 @@ mod tests {
             0.1,
             Box::new(FedgecEngine::new(FedgecConfig::default())),
         )
+    }
+
+    /// State-free abs-eb spec: the fleet-wide single-Δ regime where a
+    /// fresh codec per round is the same codec.
+    fn state_free_cfg() -> FedgecConfig {
+        FedgecConfig {
+            error_bound: ErrorBound::Abs(2e-3),
+            predictor: PredictorSpec { mag: MagnitudeSel::Zero, sign: SignSel::None },
+            ..Default::default()
+        }
     }
 
     fn grads(metas: &[LayerMeta], rng: &mut Rng) -> ModelGrad {
@@ -592,6 +833,9 @@ mod tests {
         assert!(srv.check_state(99, StateEpoch::cold()).is_err());
         srv.admit(7);
         assert!(srv.is_admitted(7) && !srv.is_admitted(99));
+        // Open admission flips every id to admitted (synthetic fleets).
+        srv.admit_all();
+        assert!(srv.is_admitted(99));
     }
 
     #[test]
@@ -629,15 +873,7 @@ mod tests {
         // Two servers over the SAME client payloads: agg=binsum must
         // track agg=exact within 1e-5 relative while dequantizing each
         // bin-routed layer exactly once.
-        use crate::compress::predictor::magnitude::MagnitudeSel;
-        use crate::compress::predictor::sign::SignSel;
-        use crate::compress::predictor::PredictorSpec;
-        use crate::compress::quant::ErrorBound;
-        let cfg = FedgecConfig {
-            error_bound: ErrorBound::Abs(2e-3),
-            predictor: PredictorSpec { mag: MagnitudeSel::Zero, sign: SignSel::None },
-            ..Default::default()
-        };
+        let cfg = state_free_cfg();
         let (params, metas) = small_model();
         let mut exact = Server::with_engine(
             params.clone(),
@@ -699,5 +935,104 @@ mod tests {
         assert!(srv.absorb_payload(1, &[0xFF; 16], 1.0, &mut agg).is_err());
         // Corrupt payload must not leave a half-updated mirror behind.
         assert_eq!(srv.store_stats().resident_clients, 0);
+    }
+
+    #[test]
+    fn duplicate_hello_is_rejected() {
+        use crate::fl::transport::inproc::pair;
+        let mut srv = server();
+        let (s1, mut c1) = pair(None);
+        let (s2, mut c2) = pair(None);
+        c1.send(&Msg::Hello { client_id: 5 }).unwrap();
+        c2.send(&Msg::Hello { client_id: 5 }).unwrap();
+        let mut chans: Vec<Box<dyn Channel>> = vec![Box::new(s1), Box::new(s2)];
+        let err = srv.wait_hellos(&mut chans).unwrap_err();
+        assert!(err.to_string().contains("duplicate Hello"), "{err}");
+        // Distinct ids are admitted as before.
+        let (s1, mut c1) = pair(None);
+        let (s2, mut c2) = pair(None);
+        c1.send(&Msg::Hello { client_id: 5 }).unwrap();
+        c2.send(&Msg::Hello { client_id: 6 }).unwrap();
+        let mut chans: Vec<Box<dyn Channel>> = vec![Box::new(s1), Box::new(s2)];
+        srv.wait_hellos(&mut chans).unwrap();
+        assert!(srv.is_admitted(5) && srv.is_admitted(6));
+    }
+
+    #[test]
+    fn faulty_channels_drop_clients_not_the_round() {
+        use crate::fl::transport::inproc::pair;
+        let cfg = state_free_cfg();
+        let (params, metas) = small_model();
+        let mut srv = Server::with_engine(
+            params,
+            metas.clone(),
+            0.1,
+            Box::new(FedgecEngine::new(cfg.clone())),
+        );
+        // Four clients: 0 and 1 behave; 2 hangs up right after the
+        // first broadcast; 3 uploads a corrupt payload every round.
+        let mut server_ends: Vec<Box<dyn Channel>> = Vec::new();
+        let mut handles = Vec::new();
+        for id in 0..4u32 {
+            let (s, mut c) = pair(None);
+            server_ends.push(Box::new(s));
+            let cfg = cfg.clone();
+            let metas = metas.clone();
+            handles.push(std::thread::spawn(move || {
+                c.send(&Msg::Hello { client_id: id }).unwrap();
+                for round in 0..2u32 {
+                    match c.recv().unwrap() {
+                        Msg::GlobalParams { .. } => {}
+                        other => panic!("client {id}: unexpected {other:?}"),
+                    }
+                    if id == 2 {
+                        return; // channel goes dead mid-round
+                    }
+                    c.send(&Msg::StateCheck { client_id: id, rounds: 0, fingerprint: 0 })
+                        .unwrap();
+                    match c.recv().unwrap() {
+                        Msg::StateResync { .. } => {}
+                        other => panic!("client {id}: unexpected {other:?}"),
+                    }
+                    let payload = if id == 3 {
+                        vec![0xFF; 64] // decode must fail server-side
+                    } else {
+                        let mut rng = Rng::new(100 + (id + round * 10) as u64);
+                        FedgecCodec::new(cfg.clone())
+                            .compress(&grads(&metas, &mut rng))
+                            .unwrap()
+                    };
+                    c.send(&Msg::Update {
+                        client_id: id,
+                        round,
+                        payload,
+                        train_loss: 0.5,
+                        n_samples: 8,
+                    })
+                    .unwrap();
+                }
+                // Drain until shutdown so server sends never race the
+                // channel teardown.
+                loop {
+                    match c.recv() {
+                        Ok(Msg::Shutdown) | Err(_) => return,
+                        Ok(_) => {}
+                    }
+                }
+            }));
+        }
+        srv.wait_hellos(&mut server_ends).unwrap();
+        for round in 0..2 {
+            let stats = srv.run_round(&mut server_ends).unwrap();
+            assert_eq!(stats.participants, 4);
+            assert_eq!(stats.dropped, 2, "round {round}: hung-up + corrupt client");
+            assert_eq!(stats.shards, 1);
+            // The healthy clients' losses still average cleanly.
+            assert!((stats.mean_loss - 0.5).abs() < 1e-9, "round {round}");
+        }
+        srv.shutdown(&mut server_ends).unwrap();
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 }

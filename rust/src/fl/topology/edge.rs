@@ -1,0 +1,243 @@
+//! The edge-aggregator tier: clients → edge → root. An edge aggregator
+//! serves its subtree exactly like a (downlink-less) server — same
+//! Hello admission, state handshake, update decode, fault boundary —
+//! but instead of stepping a model it forwards **one merged
+//! contribution** upward per round as an `AggPush` (serialized
+//! [`ShardStats`] header + partial [`RoundAgg`] body).
+//!
+//! Wire flow per round (`DESIGN.md` §13):
+//!
+//! ```text
+//! root  --GlobalParams-->  edge  --same Arc<[u8]>-->  each client
+//! client --StateCheck/Update--> edge        (ordinary uplink protocol)
+//! edge  --AggPush{stats, partial agg}-->  root
+//! ```
+//!
+//! The broadcast buffer crosses the edge **without re-encoding**: the
+//! edge receives the raw bytes ([`Channel::recv_raw`]) and re-fans the
+//! same shared allocation to its subtree, so the encode-once invariant
+//! holds across the whole tree.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::compress::blob::{BlobReader, BlobWriter};
+use crate::compress::engine::CodecEngine;
+use crate::compress::store::{ClientId, StateStore};
+use crate::fl::aggregate::{AggMode, RoundAgg};
+use crate::fl::protocol::Msg;
+use crate::fl::round::{RoundStats, ShardStats};
+use crate::fl::server::{DecodeCore, Server};
+use crate::fl::topology::tree_merge;
+use crate::fl::transport::Channel;
+use crate::tensor::LayerMeta;
+
+/// Client-id namespace for edge aggregators themselves (their Hello to
+/// the root must not collide with real client ids).
+pub const EDGE_ID_BASE: ClientId = 0x4000_0000;
+
+/// Serialize one round's edge contribution: stats header, then the
+/// partial aggregate.
+pub fn encode_agg_push(stats: &ShardStats, agg: &RoundAgg) -> Vec<u8> {
+    let mut w = BlobWriter::new();
+    stats.write_wire(&mut w);
+    agg.write_wire(&mut w);
+    w.into_bytes()
+}
+
+/// Parse an `AggPush` payload back into its stats + partial aggregate,
+/// rejecting trailing garbage.
+pub fn decode_agg_push(bytes: &[u8]) -> crate::Result<(ShardStats, RoundAgg)> {
+    let mut r = BlobReader::new(bytes);
+    let stats = ShardStats::read_wire(&mut r)?;
+    let agg = RoundAgg::read_wire(&mut r)?;
+    anyhow::ensure!(r.remaining() == 0, "agg-push: {} trailing bytes", r.remaining());
+    Ok((stats, agg))
+}
+
+/// One mid-tier aggregator owning a client subtree: its own decode
+/// core (engine + store + admissions — subtree state lives at the
+/// edge, never at the root) and the subtree's channels' fault boundary.
+pub struct EdgeAggregator {
+    id: ClientId,
+    core: DecodeCore,
+    agg_mode: AggMode,
+}
+
+impl EdgeAggregator {
+    /// `idx` numbers the edge within its tier (id = `EDGE_ID_BASE +
+    /// idx`). The store bounds the subtree's predictor-state memory;
+    /// `agg_mode` must match the root's so partials merge.
+    pub fn new(
+        idx: u32,
+        engine: Box<dyn CodecEngine>,
+        store: Box<dyn StateStore>,
+        metas: Vec<LayerMeta>,
+        agg_mode: AggMode,
+    ) -> Self {
+        EdgeAggregator {
+            id: EDGE_ID_BASE + idx,
+            core: DecodeCore::standalone(engine, store, metas),
+            agg_mode,
+        }
+    }
+
+    pub fn id(&self) -> ClientId {
+        self.id
+    }
+
+    /// Serve the subtree until the root says shutdown: collect the
+    /// subtree's Hellos (duplicate ids rejected, like the root), then
+    /// per round re-fan the broadcast bytes, serve the slice, and push
+    /// the merged contribution upward. `Shutdown` is forwarded down.
+    pub fn run(
+        &mut self,
+        up: &mut dyn Channel,
+        down: &mut [Box<dyn Channel>],
+    ) -> crate::Result<()> {
+        let mut seen = std::collections::HashSet::new();
+        for ch in down.iter_mut() {
+            match ch.recv()? {
+                Msg::Hello { client_id } => {
+                    anyhow::ensure!(
+                        seen.insert(client_id),
+                        "edge {}: duplicate Hello for client {client_id}",
+                        self.id
+                    );
+                    self.core.admit(client_id);
+                }
+                other => anyhow::bail!("edge {}: expected Hello, got {other:?}", self.id),
+            }
+        }
+        up.send(&Msg::Hello { client_id: self.id })?;
+        let raw_model_bytes = self.core.raw_model_bytes();
+        loop {
+            let raw: Arc<[u8]> = up.recv_raw()?;
+            match Msg::decode(&raw)? {
+                Msg::GlobalParams { round, .. } => {
+                    for ch in down.iter_mut() {
+                        // Same allocation onward; dead subtree channels
+                        // become dropped clients in serve_round.
+                        let _ = ch.send_encoded(&raw);
+                    }
+                    let mut agg = RoundAgg::for_mode(self.agg_mode);
+                    let st = self.core.serve_round(down, round, raw_model_bytes, &mut agg);
+                    up.send(&Msg::AggPush { round, payload: encode_agg_push(&st, &agg) })?;
+                }
+                Msg::Shutdown => {
+                    for ch in down.iter_mut() {
+                        let _ = ch.send(&Msg::Shutdown);
+                    }
+                    return Ok(());
+                }
+                other => anyhow::bail!("edge {}: unexpected {other:?}", self.id),
+            }
+        }
+    }
+}
+
+/// Receive one edge's round contribution (strict: wrong round or a
+/// malformed payload fails this edge).
+fn recv_agg_push(ch: &mut dyn Channel, round: u32) -> crate::Result<(ShardStats, RoundAgg)> {
+    match ch.recv()? {
+        Msg::AggPush { round: r, payload } => {
+            anyhow::ensure!(r == round, "edge answered round {r} during round {round}");
+            decode_agg_push(&payload)
+        }
+        other => anyhow::bail!("root: expected AggPush, got {other:?}"),
+    }
+}
+
+/// Run one round at the **root** of an edge tier: broadcast the model
+/// once to every edge (each re-fans the same bytes), then collect one
+/// `AggPush` per edge and merge the partials tree-wise into the round
+/// step.
+///
+/// Fault boundary: a failed edge (dead channel, wrong round, malformed
+/// push) drops its **whole subtree's** contribution and counts as one
+/// entry in `RoundStats.dropped` — the root cannot know how many
+/// clients sat behind a subtree that never reported. `participants`
+/// counts clients the surviving edges saw (served + dropped), plus
+/// those dropped edges. Downlink byte accounting covers the root→edge
+/// hop; the subtree re-fan of the same buffer is the edges' traffic,
+/// visible in their uplinked `raw_bytes`.
+pub fn run_round_root(
+    server: &mut Server,
+    edges: &mut [Box<dyn Channel>],
+) -> crate::Result<RoundStats> {
+    anyhow::ensure!(
+        !server.has_downlink(),
+        "edge tier drives the raw encode-once broadcast only \
+         (compressed downlink is a flat-topology feature for now)"
+    );
+    let round = server.round();
+    let agg_mode = server.agg_mode();
+    let raw_model_bytes = server.raw_model_bytes();
+    let mut stats = RoundStats {
+        round,
+        shards: edges.len(),
+        downlink_raw_bytes: raw_model_bytes * edges.len(),
+        downlink_bytes: raw_model_bytes * edges.len(),
+        ..Default::default()
+    };
+    let bytes: Arc<[u8]> = Msg::encode_global_params(round, &server.params).into();
+    for ch in edges.iter_mut() {
+        let _ = ch.send_encoded(&bytes);
+    }
+    let mut shard_total = ShardStats::default();
+    let mut parts = Vec::with_capacity(edges.len());
+    let mut dropped_edges = 0usize;
+    for ch in edges.iter_mut() {
+        match recv_agg_push(ch.as_mut(), round) {
+            Ok((st, agg)) => {
+                shard_total.absorb(&st);
+                parts.push(agg);
+            }
+            Err(_) => dropped_edges += 1,
+        }
+    }
+    let t0 = Instant::now();
+    let merged = tree_merge(parts)?;
+    stats.merge_time = t0.elapsed();
+    let served = shard_total.served;
+    shard_total.fold_into(&mut stats);
+    stats.dropped += dropped_edges;
+    stats.participants = served + shard_total.dropped + dropped_edges;
+    stats.mean_loss /= served.max(1) as f64;
+    server.record_store_occupancy(&mut stats);
+    let rep = server.finish_round(merged.unwrap_or_else(|| RoundAgg::for_mode(agg_mode)));
+    stats.agg_time += rep.finish_time;
+    stats.binsum_layers = rep.binsum_layers;
+    stats.exact_layers = rep.exact_layers + rep.mixed_layers;
+    stats.dequant_passes = rep.dequant_passes;
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::aggregate::FedAvg;
+    use crate::tensor::{LayerGrad, ModelGrad};
+
+    #[test]
+    fn agg_push_roundtrips_and_rejects_trailers() {
+        let mut fa = FedAvg::new();
+        let grads = ModelGrad {
+            layers: vec![LayerGrad::new(LayerMeta::other("l", 3), vec![1.0, -2.0, 0.5])],
+        };
+        fa.add(&grads, 2.0).unwrap();
+        let st = ShardStats { served: 2, dropped: 1, loss_sum: 0.75, ..Default::default() };
+        let wire = encode_agg_push(&st, &RoundAgg::Exact(fa));
+        let (st2, agg2) = decode_agg_push(&wire).unwrap();
+        assert_eq!(st, st2);
+        assert!(agg2.approx_bytes() > 0);
+        // Weighted mean of one contribution is the contribution.
+        let (mean, _) = agg2.finish();
+        assert_eq!(mean, vec![vec![1.0, -2.0, 0.5]]);
+        // Trailing garbage and truncation both fail.
+        let mut long = encode_agg_push(&st, &RoundAgg::Exact(FedAvg::new()));
+        long.push(0);
+        assert!(decode_agg_push(&long).is_err());
+        assert!(decode_agg_push(&wire[..wire.len() - 1]).is_err());
+    }
+}

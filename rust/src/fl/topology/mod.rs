@@ -1,0 +1,164 @@
+//! Aggregation topologies beyond the flat server loop: the sharded
+//! round runner ([`sharded`]) that partitions one round's channels
+//! across worker threads, and the edge-aggregator tier ([`edge`]) that
+//! collapses whole client subtrees into single uplink contributions —
+//! together, the million-client configuration (`DESIGN.md` §13).
+//!
+//! Both topologies lean on the same two primitives:
+//!
+//! * **Partial aggregates that merge.** Every worker owns a private
+//!   [`RoundAgg`]; at round end the partials fold together with
+//!   [`RoundAgg::merge`] in the fixed pairwise order of
+//!   [`tree_merge`]. For binsum layers the partials are exact i64 bin
+//!   sums, so the merged result is **bit-identical** to the flat loop
+//!   regardless of sharding; dense f64 partials are merged in a
+//!   deterministic tree order, so a given shard count always produces
+//!   the same bits (and any shard count matches flat to ~1e-5
+//!   relative, the usual f64-reassociation envelope).
+//! * **A decode core per worker.** [`crate::fl::server::DecodeCore`]
+//!   carries the engine plus shared store/admission handles, so shard
+//!   workers serve their channel slices with the exact same handshake
+//!   and fault boundary as the flat server.
+
+pub mod edge;
+pub mod sharded;
+pub mod synth;
+
+use crate::fl::aggregate::RoundAgg;
+
+/// Which aggregation topology a coordinator run uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TierSpec {
+    /// Every client talks straight to the root server.
+    Flat,
+    /// Clients are grouped into subtrees of `fanout`; each subtree is
+    /// served by an edge aggregator that forwards one merged
+    /// contribution to the root.
+    Edge { fanout: usize },
+}
+
+impl TierSpec {
+    /// Parse `"flat"` or `"edge:<fanout>"` (fanout ≥ 2).
+    pub fn from_name(name: &str) -> crate::Result<TierSpec> {
+        if name == "flat" {
+            return Ok(TierSpec::Flat);
+        }
+        if let Some(rest) = name.strip_prefix("edge:") {
+            let fanout: usize = rest
+                .parse()
+                .map_err(|_| anyhow::anyhow!("tier=edge:<fanout>: bad fanout {rest:?}"))?;
+            anyhow::ensure!(fanout >= 2, "tier=edge:<fanout> needs fanout >= 2, got {fanout}");
+            return Ok(TierSpec::Edge { fanout });
+        }
+        anyhow::bail!("unknown tier {name:?} (expected flat or edge:<fanout>)")
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            TierSpec::Flat => "flat".into(),
+            TierSpec::Edge { fanout } => format!("edge:{fanout}"),
+        }
+    }
+}
+
+/// Contiguous balanced partition: split `n_items` across `shards`
+/// slices whose sizes differ by at most one (larger slices first).
+/// Returns fewer than `shards` entries only when there are fewer items
+/// than shards; never returns an empty slice.
+pub fn shard_sizes(n_items: usize, shards: usize) -> Vec<usize> {
+    if n_items == 0 {
+        return Vec::new();
+    }
+    let shards = shards.clamp(1, n_items);
+    let base = n_items / shards;
+    let extra = n_items % shards;
+    (0..shards).map(|i| base + usize::from(i < extra)).collect()
+}
+
+/// Fold per-shard partial aggregates in a **fixed pairwise tree
+/// order**: rounds of left-to-right pair merges, so merging is O(log
+/// shards) depth and — crucially — the f64 summation order for dense
+/// layers depends only on the shard count, never on thread timing.
+/// Returns `None` for an empty input.
+pub fn tree_merge(mut parts: Vec<RoundAgg>) -> crate::Result<Option<RoundAgg>> {
+    while parts.len() > 1 {
+        let mut next = Vec::with_capacity(parts.len().div_ceil(2));
+        let mut it = parts.into_iter();
+        while let Some(mut left) = it.next() {
+            if let Some(right) = it.next() {
+                left.merge(right)?;
+            }
+            next.push(left);
+        }
+        parts = next;
+    }
+    Ok(parts.pop())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::aggregate::{AggMode, FedAvg, RoundAgg};
+    use crate::tensor::{LayerGrad, LayerMeta, ModelGrad};
+
+    #[test]
+    fn tier_spec_parses_and_rejects() {
+        assert_eq!(TierSpec::from_name("flat").unwrap(), TierSpec::Flat);
+        assert_eq!(
+            TierSpec::from_name("edge:4").unwrap(),
+            TierSpec::Edge { fanout: 4 }
+        );
+        assert_eq!(TierSpec::Edge { fanout: 4 }.name(), "edge:4");
+        assert!(TierSpec::from_name("edge:1").is_err());
+        assert!(TierSpec::from_name("edge:x").is_err());
+        assert!(TierSpec::from_name("ring").is_err());
+    }
+
+    #[test]
+    fn shard_sizes_balance_and_cover() {
+        assert_eq!(shard_sizes(10, 3), vec![4, 3, 3]);
+        assert_eq!(shard_sizes(3, 8), vec![1, 1, 1]); // never empty slices
+        assert_eq!(shard_sizes(0, 4), Vec::<usize>::new());
+        assert_eq!(shard_sizes(7, 1), vec![7]);
+        for (n, s) in [(1_000_000, 8), (17, 5), (64, 64)] {
+            let sizes = shard_sizes(n, s);
+            assert_eq!(sizes.iter().sum::<usize>(), n);
+            let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1, "{n}/{s}: {sizes:?}");
+        }
+    }
+
+    fn part(vals: &[f32], weight: f64) -> RoundAgg {
+        let mut fa = FedAvg::new();
+        let grads = ModelGrad {
+            layers: vec![LayerGrad::new(LayerMeta::other("l", vals.len()), vals.to_vec())],
+        };
+        fa.add(&grads, weight).unwrap();
+        RoundAgg::Exact(fa)
+    }
+
+    #[test]
+    fn tree_merge_is_deterministic_and_complete() {
+        assert!(tree_merge(Vec::new()).unwrap().is_none());
+        // 5 parts: tree order ((0+1)+(2+3))+4 — every part lands once.
+        let parts: Vec<RoundAgg> =
+            (0..5).map(|i| part(&[i as f32, 1.0], (i + 1) as f64)).collect();
+        let (mean, _) = tree_merge(parts).unwrap().unwrap().finish();
+        // Weighted mean of i over weights i+1: sum(i*(i+1))/15 = 40/15.
+        let expect = 40.0f32 / 15.0;
+        assert!((mean[0][0] - expect).abs() < 1e-6);
+        assert!((mean[0][1] - 1.0).abs() < 1e-6);
+        // Same parts, same order ⇒ same bits.
+        let parts2: Vec<RoundAgg> =
+            (0..5).map(|i| part(&[i as f32, 1.0], (i + 1) as f64)).collect();
+        let (mean2, _) = tree_merge(parts2).unwrap().unwrap().finish();
+        assert_eq!(mean, mean2);
+    }
+
+    #[test]
+    fn tree_merge_rejects_route_mix() {
+        let exact = part(&[1.0], 1.0);
+        let bin = RoundAgg::for_mode(AggMode::Binsum);
+        assert!(tree_merge(vec![exact, bin]).is_err());
+    }
+}

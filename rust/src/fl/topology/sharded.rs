@@ -1,0 +1,198 @@
+//! The sharded round runner: one round's channels partitioned across
+//! worker threads, each owning a forked [`DecodeCore`] and a private
+//! partial [`RoundAgg`], merged tree-wise at round end.
+//!
+//! Memory stays O(shards × model), never O(clients): a worker holds one
+//! in-flight decode plus its partial aggregate, and the shared
+//! [`crate::compress::store::StateStore`] is the only per-client state
+//! (bounded by its own budget). `last_agg_resident_bytes` reports the
+//! peak partial-aggregate footprint so the scale tests can assert the
+//! bound.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::compress::engine::CodecEngine;
+use crate::compress::store::ClientId;
+use crate::fl::aggregate::RoundAgg;
+use crate::fl::protocol::Msg;
+use crate::fl::round::{RoundStats, ShardStats};
+use crate::fl::server::{DecodeCore, Server};
+use crate::fl::topology::{shard_sizes, tree_merge};
+use crate::fl::transport::Channel;
+
+/// One client's uplink in pre-received form, for driving shard workers
+/// without live channels (synthetic fleets, churn soaks). Payloads are
+/// `Arc<[u8]>` so a bank of distinct payloads fans out to millions of
+/// clients without copying.
+#[derive(Clone)]
+pub struct Contribution {
+    pub client: ClientId,
+    pub payload: Arc<[u8]>,
+    pub weight: f64,
+    pub loss: f32,
+}
+
+/// Worker pool for sharded rounds: `shards` decode cores forked from
+/// one server (shared store + admissions, private engines).
+pub struct ShardedRunner {
+    cores: Vec<DecodeCore>,
+    /// Bytes held by all per-shard partial aggregates at the end of the
+    /// last round, just before the merge — the figure that must stay
+    /// O(shards × model) for the million-client configuration.
+    pub last_agg_resident_bytes: usize,
+}
+
+impl ShardedRunner {
+    /// One worker per engine. Engines are not shared across threads, so
+    /// the caller builds `shards` of them (same config) and the runner
+    /// forks a decode core around each.
+    pub fn new(server: &Server, engines: Vec<Box<dyn CodecEngine>>) -> crate::Result<Self> {
+        anyhow::ensure!(!engines.is_empty(), "sharded runner needs at least one engine");
+        let cores = engines.into_iter().map(|e| server.fork_core(e)).collect();
+        Ok(ShardedRunner { cores, last_agg_resident_bytes: 0 })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.cores.len()
+    }
+
+    /// Run one full round over live channels, sharded: the broadcast
+    /// bytes are encoded once and every worker fans the same buffer to
+    /// its slice, serves the handshake + updates into its private
+    /// partial, and the partials merge tree-wise into the server's
+    /// round step. Matches the flat [`Server::run_round`] bit-for-bit
+    /// on binsum layers and to f64-reassociation accuracy on dense
+    /// layers (see `DESIGN.md` §13).
+    pub fn run_round(
+        &mut self,
+        server: &mut Server,
+        channels: &mut [Box<dyn Channel>],
+    ) -> crate::Result<RoundStats> {
+        anyhow::ensure!(
+            !server.has_downlink(),
+            "sharded runner drives the raw encode-once broadcast only \
+             (compressed downlink is a flat-topology feature for now)"
+        );
+        let round = server.round();
+        let agg_mode = server.agg_mode();
+        let raw_model_bytes = server.raw_model_bytes();
+        let mut stats = RoundStats {
+            round,
+            participants: channels.len(),
+            shards: self.cores.len(),
+            downlink_raw_bytes: raw_model_bytes * channels.len(),
+            downlink_bytes: raw_model_bytes * channels.len(),
+            ..Default::default()
+        };
+        let bytes: Arc<[u8]> = Msg::encode_global_params(round, &server.params).into();
+        let sizes = shard_sizes(channels.len(), self.cores.len());
+        let mut slices: Vec<&mut [Box<dyn Channel>]> = Vec::with_capacity(sizes.len());
+        let mut rest = channels;
+        for sz in &sizes {
+            let (head, tail) = rest.split_at_mut(*sz);
+            slices.push(head);
+            rest = tail;
+        }
+        let parts: Vec<(RoundAgg, ShardStats)> = std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(slices.len());
+            for (core, slice) in self.cores.iter_mut().zip(slices) {
+                let bytes = Arc::clone(&bytes);
+                handles.push(s.spawn(move || {
+                    for ch in slice.iter_mut() {
+                        // Best-effort, like the flat broadcast: a dead
+                        // channel becomes a dropped client below.
+                        let _ = ch.send_encoded(&bytes);
+                    }
+                    let mut agg = RoundAgg::for_mode(agg_mode);
+                    let st = core.serve_round(slice, round, raw_model_bytes, &mut agg);
+                    (agg, st)
+                }));
+            }
+            handles.into_iter().map(|h| h.join().expect("shard worker panicked")).collect()
+        });
+        self.merge_and_finish(server, parts, &mut stats)?;
+        Ok(stats)
+    }
+
+    /// Run one round from a channel-less contribution source: worker
+    /// `i` drains `source(i)` and absorbs each contribution directly.
+    /// This is the synthetic-fleet path — a million clients need
+    /// neither threads nor sockets, just payloads — and the churn
+    /// soak's resync driver. `participants` is reported as
+    /// served + dropped (the source decides who shows up).
+    pub fn run_round_direct<I, F>(
+        &mut self,
+        server: &mut Server,
+        source: F,
+    ) -> crate::Result<RoundStats>
+    where
+        I: Iterator<Item = Contribution>,
+        F: Fn(usize) -> I + Sync,
+    {
+        let round = server.round();
+        let agg_mode = server.agg_mode();
+        let raw_model_bytes = server.raw_model_bytes();
+        let mut stats =
+            RoundStats { round, shards: self.cores.len(), ..Default::default() };
+        let parts: Vec<(RoundAgg, ShardStats)> = std::thread::scope(|s| {
+            let source = &source;
+            let mut handles = Vec::with_capacity(self.cores.len());
+            for (shard_idx, core) in self.cores.iter_mut().enumerate() {
+                handles.push(s.spawn(move || {
+                    let mut agg = RoundAgg::for_mode(agg_mode);
+                    let mut st = ShardStats::default();
+                    for c in source(shard_idx) {
+                        match core.absorb_payload(c.client, &c.payload, c.weight, &mut agg) {
+                            Ok(times) => {
+                                st.served += 1;
+                                st.payload_bytes += c.payload.len();
+                                st.raw_bytes += raw_model_bytes;
+                                st.loss_sum += c.loss as f64;
+                                st.decode_time += times.decode;
+                                st.agg_time += times.agg;
+                            }
+                            Err(_) => st.dropped += 1,
+                        }
+                    }
+                    (agg, st)
+                }));
+            }
+            handles.into_iter().map(|h| h.join().expect("shard worker panicked")).collect()
+        });
+        let served = self.merge_and_finish(server, parts, &mut stats)?;
+        stats.participants = served + stats.dropped;
+        Ok(stats)
+    }
+
+    /// Merge worker partials tree-wise into one aggregate and drive the
+    /// server's round step. Returns the total served count.
+    fn merge_and_finish(
+        &mut self,
+        server: &mut Server,
+        parts: Vec<(RoundAgg, ShardStats)>,
+        stats: &mut RoundStats,
+    ) -> crate::Result<usize> {
+        let agg_mode = server.agg_mode();
+        let mut shard_total = ShardStats::default();
+        let mut aggs = Vec::with_capacity(parts.len());
+        for (agg, st) in parts {
+            shard_total.absorb(&st);
+            aggs.push(agg);
+        }
+        self.last_agg_resident_bytes = aggs.iter().map(RoundAgg::approx_bytes).sum();
+        let t0 = Instant::now();
+        let merged = tree_merge(aggs)?;
+        stats.merge_time = t0.elapsed();
+        let served = shard_total.served;
+        shard_total.fold_into(stats);
+        stats.mean_loss /= served.max(1) as f64;
+        server.record_store_occupancy(stats);
+        let rep = server.finish_round(merged.unwrap_or_else(|| RoundAgg::for_mode(agg_mode)));
+        stats.agg_time += rep.finish_time;
+        stats.binsum_layers = rep.binsum_layers;
+        stats.exact_layers = rep.exact_layers + rep.mixed_layers;
+        stats.dequant_passes = rep.dequant_passes;
+        Ok(served)
+    }
+}

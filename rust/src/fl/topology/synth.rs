@@ -1,0 +1,130 @@
+//! Synthetic client fleets for topology-scale tests and benches: a
+//! small bank of pre-compressed payloads fanned out to an arbitrarily
+//! large client population as shared `Arc<[u8]>` buffers, so a
+//! million-client round costs O(bank + shards) memory, not O(clients).
+
+use std::sync::Arc;
+
+use crate::compress::pipeline::{FedgecCodec, FedgecConfig};
+use crate::compress::store::ClientId;
+use crate::compress::GradientCodec;
+use crate::fl::topology::shard_sizes;
+use crate::fl::topology::sharded::Contribution;
+use crate::tensor::{LayerGrad, LayerMeta, ModelGrad};
+use crate::util::rng::Rng;
+
+/// A simulated fleet: `n_clients` clients whose uplinks are drawn from
+/// a bank of `distinct` pre-compressed payloads (client `c` always
+/// uploads payload `c % distinct`, so reruns are deterministic).
+pub struct SynthFleet {
+    n_clients: usize,
+    payloads: Vec<Arc<[u8]>>,
+}
+
+impl SynthFleet {
+    /// Compress `distinct` random gradient models under `cfg` to build
+    /// the payload bank. Use a state-free config (`pred=zero`,
+    /// `sign=none`, absolute error bound) so replaying one payload for
+    /// many clients is protocol-legal: a fresh codec per round is the
+    /// same codec.
+    pub fn new(
+        cfg: &FedgecConfig,
+        metas: &[LayerMeta],
+        n_clients: usize,
+        distinct: usize,
+        seed: u64,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(distinct >= 1, "synth fleet needs at least one distinct payload");
+        anyhow::ensure!(n_clients >= 1, "synth fleet needs at least one client");
+        let mut rng = Rng::new(seed);
+        let mut payloads = Vec::with_capacity(distinct);
+        for _ in 0..distinct {
+            let grads = ModelGrad {
+                layers: metas
+                    .iter()
+                    .map(|m| {
+                        let data: Vec<f32> =
+                            (0..m.numel).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+                        LayerGrad::new(m.clone(), data)
+                    })
+                    .collect(),
+            };
+            let mut codec = FedgecCodec::new(cfg.clone());
+            payloads.push(codec.compress(&grads)?.into());
+        }
+        Ok(SynthFleet { n_clients, payloads })
+    }
+
+    pub fn n_clients(&self) -> usize {
+        self.n_clients
+    }
+
+    /// Bytes held by the payload bank — the whole fleet's uplink
+    /// footprint (everything else is shared).
+    pub fn resident_bytes(&self) -> usize {
+        self.payloads.iter().map(|p| p.len()).sum()
+    }
+
+    /// Client `c`'s uplink: a shared handle into the bank, unit weight.
+    pub fn contribution(&self, client: ClientId) -> Contribution {
+        Contribution {
+            client,
+            payload: Arc::clone(&self.payloads[client as usize % self.payloads.len()]),
+            weight: 1.0,
+            loss: 0.25,
+        }
+    }
+
+    /// Shard `idx`'s contiguous slice of the fleet under a `shards`-way
+    /// partition — the `source` argument for
+    /// [`crate::fl::topology::sharded::ShardedRunner::run_round_direct`].
+    pub fn shard_iter(
+        &self,
+        shards: usize,
+        idx: usize,
+    ) -> impl Iterator<Item = Contribution> + '_ {
+        let sizes = shard_sizes(self.n_clients, shards);
+        let start: usize = sizes[..idx.min(sizes.len())].iter().sum();
+        let len = sizes.get(idx).copied().unwrap_or(0);
+        (start..start + len).map(move |c| self.contribution(c as ClientId))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::predictor::magnitude::MagnitudeSel;
+    use crate::compress::predictor::sign::SignSel;
+    use crate::compress::predictor::PredictorSpec;
+    use crate::compress::quant::ErrorBound;
+
+    fn cfg() -> FedgecConfig {
+        FedgecConfig {
+            error_bound: ErrorBound::Abs(5e-3),
+            predictor: PredictorSpec { mag: MagnitudeSel::Zero, sign: SignSel::None },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn bank_is_shared_and_shards_cover_the_fleet() {
+        let metas = vec![LayerMeta::other("l", 64)];
+        let fleet = SynthFleet::new(&cfg(), &metas, 100, 4, 7).unwrap();
+        // Clients 4 apart share the same allocation; neighbors differ.
+        let a = fleet.contribution(3);
+        let b = fleet.contribution(7);
+        let c = fleet.contribution(4);
+        assert!(Arc::ptr_eq(&a.payload, &b.payload));
+        assert!(!Arc::ptr_eq(&a.payload, &c.payload));
+        assert!(fleet.resident_bytes() > 0);
+        // An 8-way shard sweep visits every client exactly once, in id
+        // order within each contiguous slice.
+        let mut seen = Vec::new();
+        for idx in 0..8 {
+            seen.extend(fleet.shard_iter(8, idx).map(|c| c.client));
+        }
+        assert_eq!(seen, (0..100u32).collect::<Vec<_>>());
+        // Out-of-range shard index is an empty slice, not a panic.
+        assert_eq!(fleet.shard_iter(8, 9).count(), 0);
+    }
+}

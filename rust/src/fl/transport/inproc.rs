@@ -61,6 +61,10 @@ impl Channel for InProcChannel {
         let bytes = self.rx.recv().map_err(|_| anyhow::anyhow!("peer hung up"))?;
         Msg::decode(&bytes)
     }
+
+    fn recv_raw(&mut self) -> crate::Result<Arc<[u8]>> {
+        self.rx.recv().map_err(|_| anyhow::anyhow!("peer hung up"))
+    }
 }
 
 #[cfg(test)]
@@ -104,5 +108,18 @@ mod tests {
         a.send_encoded(&bytes).unwrap(); // same allocation, fanned out twice
         assert_eq!(b.recv().unwrap(), msg);
         assert_eq!(b.recv().unwrap(), msg);
+    }
+
+    #[test]
+    fn recv_raw_returns_the_shared_allocation() {
+        // The edge-aggregator hop: send_encoded → recv_raw must hand
+        // back the very same allocation (zero-copy), not a re-encode.
+        let (mut a, mut b) = pair(None);
+        let msg = Msg::GlobalParams { round: 5, tensors: vec![vec![0.5; 8]] };
+        let bytes: Arc<[u8]> = msg.encode().into();
+        a.send_encoded(&bytes).unwrap();
+        let got = b.recv_raw().unwrap();
+        assert!(Arc::ptr_eq(&bytes, &got), "recv_raw must forward the shared buffer");
+        assert_eq!(Msg::decode(&got).unwrap(), msg);
     }
 }

@@ -24,4 +24,14 @@ pub trait Channel: Send {
     }
 
     fn recv(&mut self) -> crate::Result<Msg>;
+
+    /// Receive one message as its raw encoded bytes — the dual of
+    /// [`Channel::send_encoded`]: an edge aggregator that re-fans a
+    /// broadcast to its subtree wants the wire bytes, not the decoded
+    /// message, so the encode-once buffer survives the hop. Transports
+    /// that carry raw bytes return the shared buffer directly; this
+    /// default re-encodes for transports that only know `Msg`.
+    fn recv_raw(&mut self) -> crate::Result<Arc<[u8]>> {
+        Ok(self.recv()?.encode().into())
+    }
 }

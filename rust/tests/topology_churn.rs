@@ -1,0 +1,216 @@
+//! Fleet-churn soak for the **sharded** round runner: thousands of
+//! distinct stateful clients churn through a budgeted state store with
+//! joins, dropouts, and forced evictions every round, all decoded by
+//! concurrent shard workers over the one shared store. Every resync
+//! ordered by the handshake must converge (the client's next uplink
+//! decodes, and the mirror fingerprints agree wherever the server still
+//! holds the state), and no client may be dropped.
+//!
+//! `FEDGEC_CHURN_CLIENTS` overrides the fleet size (CI's release
+//! topology job runs the 10k default).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use fedgec::compress::pipeline::{FedgecCodec, FedgecConfig, FedgecEngine};
+use fedgec::compress::state::StateEpoch;
+use fedgec::compress::store::ShardedMemStore;
+use fedgec::compress::GradientCodec;
+use fedgec::fl::server::Server;
+use fedgec::fl::topology::sharded::{Contribution, ShardedRunner};
+use fedgec::tensor::{LayerGrad, LayerMeta, ModelGrad};
+use fedgec::util::rng::Rng;
+
+const WAVES: usize = 4;
+const STICKY: u32 = 64;
+const SHARDS: usize = 8;
+
+fn churn_clients() -> u32 {
+    if let Ok(v) = std::env::var("FEDGEC_CHURN_CLIENTS") {
+        return v.parse().expect("FEDGEC_CHURN_CLIENTS must be an integer");
+    }
+    if cfg!(debug_assertions) {
+        2_500
+    } else {
+        10_000
+    }
+}
+
+fn metas() -> Vec<LayerMeta> {
+    // One lossy layer (numel > t_lossy=1024 ⇒ carries predictor state)
+    // plus a small lossless one.
+    vec![LayerMeta::dense("fc", 1280, 1), LayerMeta::other("bias", 64)]
+}
+
+fn grads(metas: &[LayerMeta], rng: &mut Rng) -> ModelGrad {
+    ModelGrad {
+        layers: metas
+            .iter()
+            .map(|m| {
+                let data: Vec<f32> = (0..m.numel).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+                LayerGrad::new(m.clone(), data)
+            })
+            .collect(),
+    }
+}
+
+/// Run one client's uplink prep on the driver thread: state handshake
+/// (resetting the local codec if ordered), compress, advance the local
+/// epoch mirror. Returns the contribution for the shard queues plus
+/// whether a reset happened.
+fn prep(
+    id: u32,
+    codec: &mut FedgecCodec,
+    epoch: &mut StateEpoch,
+    server: &mut Server,
+    rng: &mut Rng,
+    metas: &[LayerMeta],
+) -> (Contribution, bool) {
+    let reset = server.check_state(id, *epoch).unwrap();
+    if reset {
+        codec.reset();
+        *epoch = StateEpoch::cold();
+    }
+    let payload: Arc<[u8]> = codec.compress(&grads(metas, rng)).unwrap().into();
+    epoch.advance(codec.state_fingerprint());
+    (Contribution { client: id, payload, weight: 1.0, loss: 0.5 }, reset)
+}
+
+/// Post-round mirror check: wherever the server still holds a client's
+/// state, its fingerprint must equal the client's. (`None` means the
+/// budgeted store evicted it after the decode — legal; the next
+/// handshake resolves it with a reset.)
+fn assert_mirrors(server: &Server, expected: &[(u32, StateEpoch)]) -> usize {
+    let mut evicted = 0usize;
+    for &(id, epoch) in expected {
+        match server.state_epoch(id).unwrap() {
+            Some(held) => {
+                assert_eq!(held, epoch, "client {id}: mirror fingerprints diverged")
+            }
+            None => evicted += 1,
+        }
+    }
+    evicted
+}
+
+#[test]
+fn churning_fleet_converges_through_sharded_runner() {
+    let t0 = Instant::now();
+    let n = churn_clients();
+    assert!(n > STICKY * 2, "fleet too small for the churn pattern");
+    let metas = metas();
+    // One warm state ≈ 1280 × 4 B × 5 buffers ≈ 26 KB; budget ~256
+    // states, far below the fleet, so churn waves force evictions.
+    let budget = 256 * (1280 * 4 * 5);
+    let params: Vec<Vec<f32>> = metas.iter().map(|m| vec![0.0; m.numel]).collect();
+    let mut server = Server::new(
+        params,
+        metas.clone(),
+        0.1,
+        Box::new(FedgecEngine::new(FedgecConfig::default())),
+        Box::new(ShardedMemStore::new(8, Some(budget))),
+    );
+    server.admit_all();
+    let engines = (0..SHARDS)
+        .map(|_| {
+            Box::new(FedgecEngine::new(FedgecConfig::default()))
+                as Box<dyn fedgec::compress::engine::CodecEngine>
+        })
+        .collect();
+    let mut runner = ShardedRunner::new(&server, engines).unwrap();
+
+    // Sticky clients persist across waves (their codecs live on); the
+    // rest of the fleet churns through once each.
+    let mut sticky: Vec<(FedgecCodec, StateEpoch)> = (0..STICKY)
+        .map(|_| (FedgecCodec::new(FedgecConfig::default()), StateEpoch::cold()))
+        .collect();
+    let mut rng = Rng::new(0x50AB_C0DE);
+    let per_wave = (n - STICKY) as usize / WAVES;
+    let mut sticky_resets = 0usize;
+    for wave in 0..WAVES {
+        let mut queues: Vec<Vec<Contribution>> = (0..SHARDS).map(|_| Vec::new()).collect();
+        let mut expected: Vec<(u32, StateEpoch)> = Vec::new();
+        let lo = STICKY + (wave * per_wave) as u32;
+        for id in lo..lo + per_wave as u32 {
+            // Transient join: fresh cold codec, participates once, then
+            // the device drops out forever.
+            let mut codec = FedgecCodec::new(FedgecConfig::default());
+            let mut epoch = StateEpoch::cold();
+            let (c, reset) = prep(id, &mut codec, &mut epoch, &mut server, &mut rng, &metas);
+            assert!(!reset, "first-contact client {id} must not need a reset");
+            queues[id as usize % SHARDS].push(c);
+            expected.push((id, epoch));
+        }
+        for (i, (codec, epoch)) in sticky.iter_mut().enumerate() {
+            let (c, reset) = prep(i as u32, codec, epoch, &mut server, &mut rng, &metas);
+            if reset {
+                sticky_resets += 1;
+            }
+            queues[i % SHARDS].push(c);
+            expected.push((i as u32, *epoch));
+        }
+        let stats = runner
+            .run_round_direct(&mut server, |shard| queues[shard].iter().cloned())
+            .unwrap();
+        assert_eq!(stats.dropped, 0, "wave {wave}: churn must never drop an uplink");
+        assert_eq!(stats.participants, per_wave + STICKY as usize, "wave {wave}");
+        assert_eq!(stats.shards, SHARDS);
+        assert!((stats.mean_loss - 0.5).abs() < 1e-9, "wave {wave}");
+        assert!(stats.resyncs == 0, "resyncs are the driver's, not the workers'");
+        assert_mirrors(&server, &expected);
+        let occ = server.store_stats();
+        assert!(
+            occ.resident_bytes <= budget,
+            "wave {wave}: resident {} over budget {budget}",
+            occ.resident_bytes
+        );
+    }
+    let occ = server.store_stats();
+    assert!(
+        occ.resident_clients < n as usize / 10,
+        "store must hold a small fraction of the fleet, got {}",
+        occ.resident_clients
+    );
+    assert!(occ.evictions > 100, "churn at this scale must evict, got {}", occ.evictions);
+    assert!(
+        sticky_resets > 0,
+        "sticky clients drowned by churn must have been evicted + resynced"
+    );
+
+    // Quiet phase: only the sticky fleet participates. The first quiet
+    // round re-seats evicted states; 64 states fit the budget, so the
+    // second must be reset-free with every mirror intact.
+    for quiet in 0..2 {
+        let mut queues: Vec<Vec<Contribution>> = (0..SHARDS).map(|_| Vec::new()).collect();
+        let mut expected: Vec<(u32, StateEpoch)> = Vec::new();
+        let mut resets = 0usize;
+        for (i, (codec, epoch)) in sticky.iter_mut().enumerate() {
+            let (c, reset) = prep(i as u32, codec, epoch, &mut server, &mut rng, &metas);
+            if reset {
+                resets += 1;
+            }
+            queues[i % SHARDS].push(c);
+            expected.push((i as u32, *epoch));
+        }
+        let stats = runner
+            .run_round_direct(&mut server, |shard| queues[shard].iter().cloned())
+            .unwrap();
+        assert_eq!(stats.dropped, 0, "quiet {quiet}");
+        if quiet == 1 {
+            assert_eq!(resets, 0, "warm sticky fleet must stay warm");
+            assert_eq!(assert_mirrors(&server, &expected), 0, "no evictions at rest");
+        }
+    }
+
+    // Wall-clock guard: churn + eviction through 8 workers must stay far
+    // from quadratic; a store lock convoy blows straight past this.
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed.as_secs_f64() < 120.0,
+        "{n}-client churn took {elapsed:?} — sharded eviction path too slow"
+    );
+    println!(
+        "{n} clients, {WAVES} waves via {SHARDS} shards: {:?} wall, {} evictions, {} resident",
+        elapsed, occ.evictions, occ.resident_clients
+    );
+}

@@ -1,0 +1,416 @@
+//! Topology-tier acceptance tests: the sharded round runner and the
+//! edge-aggregator tier must (a) survive a simulated million-client
+//! round in bounded memory and bounded wall-clock, and (b) produce the
+//! same aggregate as the flat single-thread loop — bit-identical for
+//! binsum-routed layers (i64 bin sums are exact and order-independent),
+//! within 1e-5 relative for dense f64 merges.
+//!
+//! Scale knob: `FEDGEC_SCALE_CLIENTS` overrides the fleet size (CI's
+//! release `topology_scale` job sets 1_000_000); the in-tree defaults
+//! keep debug `cargo test` quick.
+
+use std::time::Instant;
+
+use fedgec::compress::pipeline::{FedgecCodec, FedgecConfig, FedgecEngine};
+use fedgec::compress::predictor::magnitude::MagnitudeSel;
+use fedgec::compress::predictor::sign::SignSel;
+use fedgec::compress::predictor::PredictorSpec;
+use fedgec::compress::quant::ErrorBound;
+use fedgec::compress::store::ShardedMemStore;
+use fedgec::compress::GradientCodec;
+use fedgec::fl::aggregate::AggMode;
+use fedgec::fl::client::{Client, LocalTrainer};
+use fedgec::fl::protocol::Msg;
+use fedgec::fl::server::Server;
+use fedgec::fl::topology::edge::{run_round_root, EdgeAggregator};
+use fedgec::fl::topology::sharded::ShardedRunner;
+use fedgec::fl::topology::synth::SynthFleet;
+use fedgec::fl::transport::{inproc, Channel};
+use fedgec::tensor::{LayerGrad, LayerMeta, ModelGrad};
+use fedgec::util::rng::Rng;
+
+const SHARDS: usize = 8;
+
+fn scale_clients() -> usize {
+    if let Ok(v) = std::env::var("FEDGEC_SCALE_CLIENTS") {
+        return v.parse().expect("FEDGEC_SCALE_CLIENTS must be an integer");
+    }
+    if cfg!(debug_assertions) {
+        5_000
+    } else {
+        50_000
+    }
+}
+
+fn metas() -> Vec<LayerMeta> {
+    // One bin-routed layer (numel > t_lossy = 1024) plus a small dense
+    // one, so every test exercises both merge paths.
+    vec![LayerMeta::dense("fc", 2048, 1), LayerMeta::other("bias", 32)]
+}
+
+/// State-free spec: fresh codec per round is the same codec, payloads
+/// are replayable across clients, and bounded values under an absolute
+/// bound stay escape-free (the precondition for binsum bit-identity).
+fn state_free_cfg() -> FedgecConfig {
+    FedgecConfig {
+        error_bound: ErrorBound::Abs(5e-3),
+        predictor: PredictorSpec { mag: MagnitudeSel::Zero, sign: SignSel::None },
+        ..Default::default()
+    }
+}
+
+fn server(metas: &[LayerMeta], mode: AggMode) -> Server {
+    let params: Vec<Vec<f32>> = metas.iter().map(|m| vec![0.01; m.numel]).collect();
+    Server::with_engine(
+        params,
+        metas.to_vec(),
+        0.1,
+        Box::new(FedgecEngine::new(state_free_cfg())),
+    )
+    .with_agg_mode(mode)
+}
+
+fn engines(n: usize) -> Vec<Box<dyn fedgec::compress::engine::CodecEngine>> {
+    (0..n)
+        .map(|_| {
+            Box::new(FedgecEngine::new(state_free_cfg()))
+                as Box<dyn fedgec::compress::engine::CodecEngine>
+        })
+        .collect()
+}
+
+/// Per-layer twin-path comparison: the bin-routed `fc` layer must match
+/// **bitwise** (exact integer sums), the dense `bias` layer within 1e-5
+/// relative (f64 reassociation).
+fn assert_twin(flat: &[Vec<f32>], sharded: &[Vec<f32>], ctx: &str) {
+    assert_eq!(flat.len(), sharded.len());
+    assert_eq!(flat[0], sharded[0], "{ctx}: binsum fc layer must be bit-identical");
+    for (i, (a, b)) in flat[1].iter().zip(&sharded[1]).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-5 * a.abs().max(1e-3),
+            "{ctx}: bias[{i}] {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn bounded_memory_scale_round() {
+    let t0 = Instant::now();
+    let n = scale_clients();
+    let metas = metas();
+    let fleet = SynthFleet::new(&state_free_cfg(), &metas, n, 64, 11).unwrap();
+    let mut srv = server(&metas, AggMode::Binsum);
+    srv.admit_all();
+    let init = srv.params.clone();
+    let raw_model_bytes = srv.raw_model_bytes();
+    let mut runner = ShardedRunner::new(&srv, engines(SHARDS)).unwrap();
+    for round in 0..2 {
+        let stats = runner
+            .run_round_direct(&mut srv, |shard| fleet.shard_iter(SHARDS, shard))
+            .unwrap();
+        assert_eq!(stats.participants, n, "round {round}");
+        assert_eq!(stats.dropped, 0, "round {round}");
+        assert_eq!(stats.shards, SHARDS);
+        assert!((stats.mean_loss - 0.25).abs() < 1e-9, "round {round}");
+        // Aggregate memory is O(shards × model), never O(clients).
+        assert!(
+            runner.last_agg_resident_bytes <= SHARDS * 10 * raw_model_bytes,
+            "round {round}: {} B of partial aggregates",
+            runner.last_agg_resident_bytes
+        );
+    }
+    // The stateless engine never touches the store: per-client server
+    // memory is exactly zero.
+    assert_eq!(srv.store_stats().resident_clients, 0);
+    assert!(srv.params.iter().flatten().zip(init.iter().flatten()).any(|(a, b)| a != b));
+    // Wall-clock guard: decode cost must stay linear in clients. The
+    // budget is deliberately loose (CI machines vary) but rules out
+    // anything superlinear at the million-client point.
+    let per_client = if cfg!(debug_assertions) { 4e-3 } else { 0.4e-3 };
+    let budget = 30.0 + n as f64 * per_client;
+    let took = t0.elapsed().as_secs_f64();
+    assert!(took < budget, "2 rounds × {n} clients took {took:.1}s (budget {budget:.0}s)");
+}
+
+#[test]
+fn sharded_direct_matches_flat_binsum_bitwise() {
+    let n: usize = 2000;
+    let metas = metas();
+    let fleet = SynthFleet::new(&state_free_cfg(), &metas, n, 16, 23).unwrap();
+    // Mixed integral weights and a deterministic dropout pattern,
+    // applied identically on both paths.
+    let weight = |id: u32| (1 + id % 5) as f64;
+    let dropout = |id: u32| id % 17 == 3;
+
+    let mut flat = server(&metas, AggMode::Binsum);
+    flat.admit_all();
+    let mut agg = flat.new_round_agg();
+    for id in 0..n as u32 {
+        if dropout(id) {
+            continue;
+        }
+        let c = fleet.contribution(id);
+        flat.absorb_payload(id, &c.payload, weight(id), &mut agg).unwrap();
+    }
+    flat.finish_round(agg);
+
+    let mut sharded = server(&metas, AggMode::Binsum);
+    sharded.admit_all();
+    let mut runner = ShardedRunner::new(&sharded, engines(SHARDS)).unwrap();
+    let stats = runner
+        .run_round_direct(&mut sharded, |shard| {
+            fleet.shard_iter(SHARDS, shard).filter(|c| !dropout(c.client)).map(|mut c| {
+                c.weight = weight(c.client);
+                c
+            })
+        })
+        .unwrap();
+    assert_eq!(stats.dropped, 0);
+    assert_eq!(stats.participants, (0..n as u32).filter(|&id| !dropout(id)).count());
+    assert_twin(&flat.params, &sharded.params, "binsum twin");
+}
+
+#[test]
+fn sharded_direct_matches_flat_exact_mode() {
+    let n: usize = 600;
+    let metas = metas();
+    let fleet = SynthFleet::new(&state_free_cfg(), &metas, n, 8, 31).unwrap();
+    // Non-integral weights: the exact route sums f64, so both layers
+    // compare within the reassociation envelope.
+    let weight = |id: u32| 0.5 + (id % 7) as f64 * 0.25;
+
+    let mut flat = server(&metas, AggMode::Exact);
+    flat.admit_all();
+    let mut agg = flat.new_round_agg();
+    for id in 0..n as u32 {
+        let c = fleet.contribution(id);
+        flat.absorb_payload(id, &c.payload, weight(id), &mut agg).unwrap();
+    }
+    flat.finish_round(agg);
+
+    let mut sharded = server(&metas, AggMode::Exact);
+    sharded.admit_all();
+    let mut runner = ShardedRunner::new(&sharded, engines(5)).unwrap();
+    let stats = runner
+        .run_round_direct(&mut sharded, |shard| {
+            fleet.shard_iter(5, shard).map(|mut c| {
+                c.weight = weight(c.client);
+                c
+            })
+        })
+        .unwrap();
+    assert_eq!(stats.dropped, 0);
+    for (li, (fa, sh)) in flat.params.iter().zip(&sharded.params).enumerate() {
+        for (i, (a, b)) in fa.iter().zip(sh).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-5 * a.abs().max(1e-3),
+                "exact twin: layer {li}[{i}] {a} vs {b}"
+            );
+        }
+    }
+}
+
+/// Deterministic params-independent trainer: the gradient stream
+/// depends only on (seed, round), so flat and edge-tier runs see
+/// byte-identical uplinks regardless of tiny param drift.
+struct ReplayTrainer {
+    metas: Vec<LayerMeta>,
+    seed: u64,
+    round: u64,
+}
+
+impl LocalTrainer for ReplayTrainer {
+    fn train_round(&mut self, _params: &[Vec<f32>]) -> fedgec::Result<(ModelGrad, f32)> {
+        let mut rng = Rng::new(self.seed ^ self.round.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        self.round += 1;
+        let grads = ModelGrad {
+            layers: self
+                .metas
+                .iter()
+                .map(|m| {
+                    let data: Vec<f32> =
+                        (0..m.numel).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+                    LayerGrad::new(m.clone(), data)
+                })
+                .collect(),
+        };
+        Ok((grads, 0.5))
+    }
+
+    fn layer_metas(&self) -> Vec<LayerMeta> {
+        self.metas.clone()
+    }
+
+    fn n_samples(&self) -> usize {
+        8
+    }
+}
+
+/// Spawn `n` protocol-complete client threads (mixed monolithic and
+/// frame-streamed uploads); returns their server-side channel ends and
+/// join handles.
+fn spawn_replay_clients(
+    n: u32,
+    metas: &[LayerMeta],
+) -> (Vec<Box<dyn Channel>>, Vec<std::thread::JoinHandle<fedgec::Result<()>>>) {
+    let mut chans: Vec<Box<dyn Channel>> = Vec::new();
+    let mut handles = Vec::new();
+    for id in 0..n {
+        let (srv_end, cli_end) = inproc::pair(None);
+        chans.push(Box::new(srv_end));
+        let trainer = ReplayTrainer { metas: metas.to_vec(), seed: 1000 + id as u64, round: 0 };
+        let mut client = Client::new(
+            id,
+            Box::new(trainer),
+            Box::new(FedgecCodec::new(state_free_cfg())),
+        )
+        .with_streaming(id % 2 == 0);
+        handles.push(std::thread::spawn(move || {
+            let mut ch = cli_end;
+            client.run(&mut ch)
+        }));
+    }
+    (chans, handles)
+}
+
+#[test]
+fn edge_tier_matches_flat_run() {
+    const N: u32 = 12;
+    const FANOUT: usize = 4;
+    const ROUNDS: usize = 3;
+    let metas = metas();
+
+    // Flat reference run.
+    let (mut flat_chans, flat_handles) = spawn_replay_clients(N, &metas);
+    let mut flat = server(&metas, AggMode::Binsum);
+    flat.wait_hellos(&mut flat_chans).unwrap();
+    for _ in 0..ROUNDS {
+        let stats = flat.run_round(&mut flat_chans).unwrap();
+        assert_eq!(stats.dropped, 0);
+    }
+    flat.shutdown(&mut flat_chans).unwrap();
+    for h in flat_handles {
+        h.join().unwrap().unwrap();
+    }
+
+    // Edge-tier run over identical clients: 12 clients / fanout 4 ⇒ 3
+    // edge aggregators, each forwarding one merged AggPush per round.
+    let (mut client_chans, edge_client_handles) = spawn_replay_clients(N, &metas);
+    let mut edge_chans: Vec<Box<dyn Channel>> = Vec::new();
+    let mut edge_handles = Vec::new();
+    let mut idx = 0u32;
+    while !client_chans.is_empty() {
+        let take = FANOUT.min(client_chans.len());
+        let mut subtree: Vec<Box<dyn Channel>> = client_chans.drain(..take).collect();
+        let (root_end, edge_end) = inproc::pair(None);
+        edge_chans.push(Box::new(root_end));
+        let mut edge = EdgeAggregator::new(
+            idx,
+            Box::new(FedgecEngine::new(state_free_cfg())),
+            Box::new(ShardedMemStore::new(4, None)),
+            metas.clone(),
+            AggMode::Binsum,
+        );
+        edge_handles.push(std::thread::spawn(move || {
+            let mut up: Box<dyn Channel> = Box::new(edge_end);
+            edge.run(up.as_mut(), &mut subtree)
+        }));
+        idx += 1;
+    }
+    let mut root = server(&metas, AggMode::Binsum);
+    root.wait_hellos(&mut edge_chans).unwrap();
+    for round in 0..ROUNDS {
+        let stats = run_round_root(&mut root, &mut edge_chans).unwrap();
+        assert_eq!(stats.participants, N as usize, "round {round}");
+        assert_eq!(stats.dropped, 0, "round {round}");
+        assert_eq!(stats.shards, 3, "round {round}");
+        assert!((stats.mean_loss - 0.5).abs() < 1e-9, "round {round}");
+        assert_eq!(stats.resyncs, 0, "state-free fleet never resyncs");
+    }
+    root.shutdown(&mut edge_chans).unwrap();
+    for h in edge_handles {
+        h.join().unwrap().unwrap();
+    }
+    for h in edge_client_handles {
+        h.join().unwrap().unwrap();
+    }
+
+    assert_twin(&flat.params, &root.params, "edge twin");
+}
+
+#[test]
+fn sharded_channels_drop_dead_clients_per_round() {
+    let metas = metas();
+    let cfg = state_free_cfg();
+    // Six manual-protocol clients over live channels; client 4 hangs up
+    // after the first broadcast.
+    let mut chans: Vec<Box<dyn Channel>> = Vec::new();
+    let mut handles = Vec::new();
+    for id in 0..6u32 {
+        let (srv_end, mut c) = inproc::pair(None);
+        chans.push(Box::new(srv_end));
+        let cfg = cfg.clone();
+        let metas = metas.clone();
+        handles.push(std::thread::spawn(move || {
+            c.send(&Msg::Hello { client_id: id }).unwrap();
+            for round in 0..2u32 {
+                match c.recv().unwrap() {
+                    Msg::GlobalParams { .. } => {}
+                    other => panic!("client {id}: unexpected {other:?}"),
+                }
+                if id == 4 {
+                    return;
+                }
+                c.send(&Msg::StateCheck { client_id: id, rounds: 0, fingerprint: 0 })
+                    .unwrap();
+                match c.recv().unwrap() {
+                    Msg::StateResync { .. } => {}
+                    other => panic!("client {id}: unexpected {other:?}"),
+                }
+                let mut rng = Rng::new(77 + (id + 10 * round) as u64);
+                let grads = ModelGrad {
+                    layers: metas
+                        .iter()
+                        .map(|m| {
+                            let data: Vec<f32> =
+                                (0..m.numel).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+                            LayerGrad::new(m.clone(), data)
+                        })
+                        .collect(),
+                };
+                let payload = FedgecCodec::new(cfg.clone()).compress(&grads).unwrap();
+                c.send(&Msg::Update {
+                    client_id: id,
+                    round,
+                    payload,
+                    train_loss: 0.5,
+                    n_samples: 8,
+                })
+                .unwrap();
+            }
+            loop {
+                match c.recv() {
+                    Ok(Msg::Shutdown) | Err(_) => return,
+                    Ok(_) => {}
+                }
+            }
+        }));
+    }
+    let mut srv = server(&metas, AggMode::Binsum);
+    srv.wait_hellos(&mut chans).unwrap();
+    let mut runner = ShardedRunner::new(&srv, engines(3)).unwrap();
+    for round in 0..2 {
+        let stats = runner.run_round(&mut srv, &mut chans).unwrap();
+        assert_eq!(stats.participants, 6, "round {round}");
+        assert_eq!(stats.dropped, 1, "round {round}: the hung-up client");
+        assert_eq!(stats.shards, 3, "round {round}");
+        assert!((stats.mean_loss - 0.5).abs() < 1e-9, "round {round}");
+    }
+    srv.shutdown(&mut chans).unwrap();
+    for h in handles {
+        h.join().unwrap();
+    }
+    // Broadcast fan-out sharing survives the shard split: every
+    // contribution was decodable (5 served per round ⇒ params moved).
+    assert!(srv.params.iter().flatten().any(|&p| p != 0.01));
+}
