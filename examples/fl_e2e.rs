@@ -12,7 +12,8 @@
 //! # knobs: FEDGEC_ROUNDS, FEDGEC_CODEC, FEDGEC_EB, FEDGEC_ENGINE=hlo,
 //! #        FEDGEC_MODEL, FEDGEC_CLIENTS, FEDGEC_PARTICIPATION,
 //! #        FEDGEC_STORE_BUDGET_MB, FEDGEC_DOWN, FEDGEC_DOWN_EB,
-//! #        FEDGEC_AGG=binsum
+//! #        FEDGEC_AGG=binsum, FEDGEC_THREADED=1, FEDGEC_SHARDS=4,
+//! #        FEDGEC_TIER=edge:8, FEDGEC_JOURNAL=path.jsonl
 //! ```
 //!
 //! Emits `results/BENCH_fl_e2e_state_memory.json` — the per-round
@@ -25,11 +26,22 @@
 //! `FEDGEC_AGG=binsum` (with a state-free abs-eb codec spec) for
 //! compressed-domain aggregation that dequantizes once per round.
 //!
+//! Every run also streams the telemetry **round journal** (JSONL,
+//! DESIGN.md §14) next to the panels — `results/fl_e2e_journal
+//! <suffix>.jsonl`, path overridable via `FEDGEC_JOURNAL` — and then
+//! folds it back with [`fedgec::telemetry::journal::fold_journal`],
+//! asserting the folded per-round totals equal the runner's own
+//! `RoundStats` **exactly**. `FEDGEC_THREADED=1`, `FEDGEC_SHARDS=N`, or
+//! `FEDGEC_TIER=edge:K` switch the run to the threaded in-proc fleet
+//! (full participation, native trainer) so the sharded and hierarchical
+//! merge paths get the same exactness check in CI.
+//!
 //! The run is recorded in EXPERIMENTS.md §E2E.
 
 use fedgec::config::{EngineKind, RunConfig};
-use fedgec::coordinator::{print_summary, run_local};
+use fedgec::coordinator::{print_summary, run_local, run_threaded};
 use fedgec::fl::transport::bandwidth::LinkSpec;
+use fedgec::telemetry::journal;
 use fedgec::train::data::DatasetSpec;
 
 fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
@@ -53,11 +65,18 @@ fn main() -> fedgec::Result<()> {
         Ok("hlo") => EngineKind::Hlo,
         _ => EngineKind::Native,
     };
+    // Threaded topology knobs: any of them selects the in-proc fleet
+    // (run_threaded), which requires the native trainer and the full
+    // fleet participating every round.
+    let shards: usize = env_or("FEDGEC_SHARDS", 1);
+    let tier: String = env_or("FEDGEC_TIER", "flat".to_string());
+    let threaded = env_or("FEDGEC_THREADED", 0usize) == 1 || shards > 1 || tier != "flat";
     // HLO artifacts are a build step; fall back to the native trainer
     // when they are absent (e.g. the CI bench-smoke job).
     let have_artifacts =
         fedgec::runtime::Runtime::default_dir().join("manifest.json").exists();
-    let default_model = if have_artifacts { "micro_resnet" } else { "native" };
+    let default_model =
+        if have_artifacts && !threaded { "micro_resnet" } else { "native" };
     let model: String = env_or("FEDGEC_MODEL", default_model.to_string());
     let cfg = RunConfig {
         model: model.clone(),
@@ -74,7 +93,10 @@ fn main() -> fedgec::Result<()> {
         class_skew: 0.5,
         // Partial participation: half the clients train per round; the
         // rest keep their mirror state parked in the server's store.
-        participation: env_or("FEDGEC_PARTICIPATION", 0.5),
+        // (Threaded mode drives every connected channel — full fleet.)
+        participation: env_or("FEDGEC_PARTICIPATION", if threaded { 1.0 } else { 0.5 }),
+        shards,
+        tier: tier.clone(),
         store_budget_mb: env_or("FEDGEC_STORE_BUDGET_MB", 0.0),
         // Downlink broadcast codec: `raw` keeps the f32 fan-out,
         // `fedgec` streams the global delta (tight bound — the delta
@@ -105,9 +127,54 @@ fn main() -> fedgec::Result<()> {
             "(gradients are REAL: JAX train_epoch lowered to HLO, executed via PJRT from Rust)"
         );
     }
+    if threaded {
+        println!("(threaded in-proc fleet: shards={shards}, tier={tier})");
+    }
     println!();
-    let summary = run_local(&cfg)?;
+
+    // Round journal: attach for the run, then fold it back and check it
+    // against the runner's own RoundStats — the telemetry subsystem's
+    // end-to-end exactness contract.
+    let journal_path = match std::env::var("FEDGEC_JOURNAL") {
+        Ok(p) => std::path::PathBuf::from(p),
+        Err(_) => {
+            fedgec::metrics::results_dir().join(format!("{}.jsonl", panel("fl_e2e_journal")))
+        }
+    };
+    if let Some(dir) = journal_path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    journal::attach(&journal_path)?;
+    let summary = if threaded { run_threaded(&cfg) } else { run_local(&cfg) };
+    journal::detach(); // flush even when the run failed
+    let summary = summary?;
     print_summary(&cfg, &summary);
+
+    let folded = journal::fold_journal(&std::fs::read_to_string(&journal_path)?)?;
+    anyhow::ensure!(
+        folded.len() == summary.rounds.len(),
+        "journal folded {} rounds, runner reported {}",
+        folded.len(),
+        summary.rounds.len()
+    );
+    for (f, r) in folded.iter().zip(&summary.rounds) {
+        anyhow::ensure!(
+            &f.folded == r,
+            "journal fold diverges from RoundStats at round {}:\nfolded   {:?}\nreported {:?}",
+            f.round,
+            f.folded,
+            r
+        );
+        let rep = f.reported.as_ref().ok_or_else(|| {
+            anyhow::anyhow!("journal round {} has no round_end record", f.round)
+        })?;
+        anyhow::ensure!(rep == r, "round_end record diverges at round {}", f.round);
+    }
+    println!(
+        "journal: {} rounds folded from {} match RoundStats exactly\n",
+        folded.len(),
+        journal_path.display()
+    );
 
     // State-memory trajectory: how many mirror states the server store
     // holds (and their bytes) as partial participation churns through

@@ -47,16 +47,26 @@ fn gbs(stats: &BenchStats, bytes: usize) -> f64 {
     stats.mb_per_s(bytes) / 1e3
 }
 
-/// Append one `stage | scalar GB/s | fast GB/s | speedup | CR` row.
+/// Append one `stage | scalar GB/s | fast GB/s | speedup | CR | trunc`
+/// row. The trunc flag marks which twin hit the `bench_loop` iteration
+/// cap before its min_time ("s", "f", or "sf") — those means come from
+/// fewer samples than requested.
 fn twin_row(table: &mut Table, stage: &str, bytes: usize, t: &Twin, cr: Option<f64>) {
     let s = gbs(&t.scalar, bytes);
     let f = gbs(&t.fast, bytes);
+    let trunc = match (t.scalar.truncated, t.fast.truncated) {
+        (false, false) => "-",
+        (true, false) => "s",
+        (false, true) => "f",
+        (true, true) => "sf",
+    };
     table.row(vec![
         stage.to_string(),
         format!("{s:.3}"),
         format!("{f:.3}"),
         format!("{:.2}", f / s),
         cr.map(|c| format!("{c:.2}")).unwrap_or_else(|| "-".into()),
+        trunc.to_string(),
     ]);
 }
 
@@ -86,7 +96,7 @@ fn main() {
 
     let mut table = Table::new(
         "compressor throughput",
-        &["stage", "scalar GB/s", "fast GB/s", "speedup", "CR"],
+        &["stage", "scalar GB/s", "fast GB/s", "speedup", "CR", "trunc"],
     );
 
     // End-to-end codecs, every registered entropy-stage lane width.
@@ -215,6 +225,7 @@ fn main() {
                 format!("{:.3}", gbs(&stats, entropy.len())),
                 "-".into(),
                 "-".into(),
+                if stats.truncated { "y".into() } else { "-".into() },
             ]);
         }
     }

@@ -254,6 +254,7 @@ impl DownlinkCodec {
             let reset = self.pending_reset;
             if reset {
                 self.enc.reset();
+                crate::telemetry::DOWNLINK_RESETS.inc();
             }
             // Δ = θ_global − θ_ref, shaped as a gradient so the kernel
             // sign predictor sees the model's layer structure.
@@ -299,11 +300,13 @@ impl DownlinkCodec {
             // The reference becomes the *exact* current model and both
             // codec states go cold.
             self.enc.reset();
+            crate::telemetry::DOWNLINK_RESETS.inc();
             self.mirror.full_sync(params.to_vec())?;
             stats.reset = true;
             None
         };
         stats.encode_time = t0.elapsed();
+        crate::telemetry::DOWNLINK_CODEC_NS.add_duration(stats.encode_time);
         // A cold join into a warm stream forces next round's reset; an
         // all-cold restart already happened.
         self.pending_reset = warm_any && !cold.is_empty();

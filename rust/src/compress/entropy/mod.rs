@@ -137,7 +137,7 @@ impl EntropyCoder {
             enc.write_to(&mut out);
             out
         };
-        match self {
+        let out = match self {
             EntropyCoder::Huffman => huffman_bytes(codes, hist),
             EntropyCoder::Raw => raw(codes),
             EntropyCoder::Rans | EntropyCoder::Rans4 | EntropyCoder::Rans8 => {
@@ -150,7 +150,18 @@ impl EntropyCoder {
                     _ => huffman_bytes(codes, hist),
                 }
             }
-        }
+        };
+        // Tally by the mode byte actually written, not the requested
+        // coder — fallbacks land in the bucket the wire will show.
+        let tally = match out.first() {
+            Some(&rans::MODE_RANS) => &crate::telemetry::ENTROPY_RANS_BYTES,
+            Some(&rans::MODE_RANS4) => &crate::telemetry::ENTROPY_RANS4_BYTES,
+            Some(&rans::MODE_RANS8) => &crate::telemetry::ENTROPY_RANS8_BYTES,
+            Some(1) => &crate::telemetry::ENTROPY_HUFF_BYTES,
+            _ => &crate::telemetry::ENTROPY_RAW_BYTES,
+        };
+        tally.add(out.len() as u64);
+        out
     }
 
     /// Decode a stream this coder produced, returning (codes, bytes

@@ -798,6 +798,9 @@ impl GradientCodec for FedgecCodec {
         self.ensure_ctrl(idx + 1);
         self.ensure_scratch(idx + 1);
         let ctrl = if use_tau_ctrl(&self.cfg) { Some(&mut self.tau_ctrl[idx]) } else { None };
+        // Encode timing is new instrumentation (nothing measured it
+        // before), so the clock reads are gated on an attached sink.
+        let t0 = crate::telemetry::active().then(std::time::Instant::now);
         let (payload, report) = compress_layer_impl(
             &self.cfg,
             layer,
@@ -806,6 +809,9 @@ impl GradientCodec for FedgecCodec {
             &mut self.scratch[idx],
             self.engine.as_deref_mut(),
         )?;
+        if let Some(t0) = t0 {
+            crate::telemetry::ENCODE_NS.add_duration(t0.elapsed());
+        }
         Ok(Frame::new(idx, payload, report))
     }
 
@@ -860,7 +866,12 @@ impl GradientCodec for FedgecCodec {
             .collect();
         let results =
             crate::util::threadpool::parallel_map(items, threads, |(layer, st, ctrl, scratch)| {
-                compress_layer_impl(cfg, layer, st, ctrl, scratch, None)
+                let t0 = crate::telemetry::active().then(std::time::Instant::now);
+                let res = compress_layer_impl(cfg, layer, st, ctrl, scratch, None);
+                if let Some(t0) = t0 {
+                    crate::telemetry::ENCODE_NS.add_duration(t0.elapsed());
+                }
+                res
             });
         let mut frames = Vec::with_capacity(n);
         for (idx, res) in results.into_iter().enumerate() {

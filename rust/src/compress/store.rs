@@ -304,6 +304,7 @@ impl ShardedMemStore {
                 hook(victim, &entry.state)?;
             }
             self.evictions.fetch_add(1, Ordering::Relaxed);
+            crate::telemetry::STORE_EVICTIONS.inc();
         }
         Ok(())
     }
@@ -312,10 +313,15 @@ impl ShardedMemStore {
 impl StateStore for ShardedMemStore {
     fn take(&self, client: ClientId) -> crate::Result<Option<ClientState>> {
         let mut shard = self.shard(client).lock().unwrap();
-        Ok(shard.entries.remove(&client).map(|e| {
+        let hit = shard.entries.remove(&client).map(|e| {
             shard.bytes -= e.bytes;
             e.state
-        }))
+        });
+        match hit {
+            Some(_) => crate::telemetry::STORE_HITS.inc(),
+            None => crate::telemetry::STORE_MISSES.inc(),
+        }
+        Ok(hit)
     }
 
     fn put(&self, client: ClientId, state: ClientState) -> crate::Result<()> {
@@ -381,6 +387,7 @@ impl SpillTier {
         let meta = SpillMeta { epoch: state.epoch, bytes: record.len() };
         std::fs::write(self.path(client), &record)
             .map_err(|e| anyhow::anyhow!("spill write {}: {e}", self.path(client).display()))?;
+        crate::telemetry::STORE_SPILL_BYTES.add(meta.bytes as u64);
         self.index.lock().unwrap().insert(client, meta);
         Ok(())
     }
@@ -394,6 +401,7 @@ impl SpillTier {
             .map_err(|e| anyhow::anyhow!("spill read {}: {e}", path.display()))?;
         let _ = std::fs::remove_file(&path);
         self.spill_loads.fetch_add(1, Ordering::Relaxed);
+        crate::telemetry::STORE_SPILL_LOADS.inc();
         Ok(Some(decode_client_state(&buf)?))
     }
 

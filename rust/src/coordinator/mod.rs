@@ -36,7 +36,7 @@ use crate::compress::GradientCodec;
 use crate::config::{EngineKind, RunConfig};
 use crate::fl::client::{Client, LocalTrainer};
 use crate::fl::hetero::sample_participants;
-use crate::fl::round::{RoundStats, RunSummary};
+use crate::fl::round::{RoundStats, RunSummary, ShardStats};
 use crate::fl::server::Server;
 use crate::fl::topology::edge::EdgeAggregator;
 use crate::fl::topology::sharded::ShardedRunner;
@@ -46,6 +46,7 @@ use crate::fl::transport::{inproc, Channel};
 use crate::runtime::engine::HloPredictEngine;
 use crate::runtime::manifest::Manifest;
 use crate::runtime::trainer::{HloTrainer, Params};
+use crate::telemetry::{self, journal};
 use crate::tensor::{LayerGrad, LayerMeta, ModelGrad};
 use crate::train::data::SynthDataset;
 use native_trainer::NativeTrainer;
@@ -82,13 +83,18 @@ fn sim_downlink_round(
     link: &LinkSpec,
     stats: &mut RoundStats,
 ) -> crate::Result<Vec<Vec<f32>>> {
-    match down {
+    // `stats` is fresh per round in both callers, so the deltas below
+    // are this round's whole downlink contribution.
+    let bytes0 = stats.downlink_bytes;
+    let raw0 = stats.downlink_raw_bytes;
+    let syncs0 = stats.full_syncs;
+    let params = match down {
         None => {
             let raw: usize = server_params.iter().map(|t| t.len() * 4).sum();
             stats.downlink_bytes += raw * participants.len();
             stats.downlink_raw_bytes += raw * participants.len();
             stats.down_transmit_time += link.downlink_time(raw) * participants.len() as u32;
-            Ok(server_params.to_vec())
+            server_params.to_vec()
         }
         Some(down) => {
             let ids: Vec<ClientId> = participants.iter().map(|&i| i as u32).collect();
@@ -108,12 +114,15 @@ fn sim_downlink_round(
                 stats.downlink_bytes += bytes;
                 stats.down_transmit_time += link.downlink_time(bytes);
             }
-            Ok(down
-                .reference()
+            down.reference()
                 .ok_or_else(|| anyhow::anyhow!("downlink reference missing after encode"))?
-                .to_vec())
+                .to_vec()
         }
-    }
+    };
+    telemetry::DOWNLINK_BYTES.add((stats.downlink_bytes - bytes0) as u64);
+    telemetry::DOWNLINK_RAW_BYTES.add((stats.downlink_raw_bytes - raw0) as u64);
+    telemetry::DOWNLINK_FULL_SYNCS.add((stats.full_syncs - syncs0) as u64);
+    Ok(params)
 }
 
 /// Resolve a spec into the FedGEC config (HLO paths require fedgec).
@@ -263,6 +272,7 @@ fn run_local_hlo(cfg: &RunConfig) -> crate::Result<RunSummary> {
             participants: participants.len(),
             ..Default::default()
         };
+        let span = journal::RoundSpan::begin(round as u32, 0);
         let mut agg = server.new_round_agg();
         let global = sim_downlink_round(
             &mut downlink,
@@ -271,6 +281,17 @@ fn run_local_hlo(cfg: &RunConfig) -> crate::Result<RunSummary> {
             &cfg.link,
             &mut stats,
         )?;
+        span.downlink(
+            stats.downlink_bytes,
+            stats.downlink_raw_bytes,
+            stats.full_syncs,
+            stats.down_codec_time,
+            stats.down_transmit_time,
+        );
+        // Per-client tallies go through the same ShardStats the served
+        // topologies use, so the journal fold replays identical
+        // arithmetic (client-side comp/transmit stay round-level).
+        let mut shard = ShardStats::default();
         for &ci in &participants {
             let client = &mut clients[ci];
             if sim_state_handshake(
@@ -279,13 +300,14 @@ fn run_local_hlo(cfg: &RunConfig) -> crate::Result<RunSummary> {
                 client.codec.as_mut(),
                 &mut client.epoch,
             )? {
-                stats.resyncs += 1;
+                shard.resyncs += 1;
+                span.client_event(0, ci, "resync");
             }
             // Local epoch via PJRT.
             let params = Params { tensors: global.clone() };
             let (new_params, loss) =
                 trainer.train_epoch(&params, &client.data_xs, &client.data_ys, cfg.local_lr)?;
-            stats.mean_loss += loss as f64;
+            shard.loss_sum += loss as f64;
             // Gradient = (θ_global − θ_local)/lr, per layer.
             let grads = ModelGrad {
                 layers: metas
@@ -299,27 +321,49 @@ fn run_local_hlo(cfg: &RunConfig) -> crate::Result<RunSummary> {
                     })
                     .collect(),
             };
-            stats.raw_bytes += grads.byte_size();
+            let raw_bytes = grads.byte_size();
+            shard.raw_bytes += raw_bytes;
             let t0 = Instant::now();
             let payload = client.codec.compress(&grads)?;
             stats.comp_time += t0.elapsed();
-            stats.payload_bytes += payload.len();
+            shard.payload_bytes += payload.len();
             let mut link = VirtualLink::new(cfg.link);
             stats.transmit_time += link.send(payload.len());
             let times =
                 server.absorb_payload(ci as u32, &payload, client.n_samples as f64, &mut agg)?;
-            stats.decomp_time += times.decode;
-            stats.server_decode_time += times.decode;
-            stats.agg_time += times.agg;
+            shard.served += 1;
+            shard.decode_time += times.decode;
+            shard.agg_time += times.agg;
+            span.client_served(
+                0,
+                ci as u64,
+                payload.len(),
+                raw_bytes,
+                times.decode,
+                times.agg,
+                loss as f64,
+            );
             client.epoch.advance(client.codec.state_fingerprint());
         }
-        stats.mean_loss /= participants.len().max(1) as f64;
+        span.shard(0, &shard);
+        telemetry::record_shard(&shard);
+        span.sim(stats.comp_time, stats.transmit_time);
+        let served = shard.served;
+        shard.fold_into(&mut stats);
+        stats.mean_loss /= served.max(1) as f64;
         server.record_store_occupancy(&mut stats);
+        span.store(stats.store_clients, stats.store_bytes);
         let rep = server.finish_round(agg);
         stats.agg_time += rep.finish_time;
         stats.binsum_layers = rep.binsum_layers;
         stats.exact_layers = rep.exact_layers + rep.mixed_layers;
         stats.dequant_passes = rep.dequant_passes;
+        span.finish(
+            rep.finish_time,
+            stats.binsum_layers,
+            stats.exact_layers,
+            stats.dequant_passes,
+        );
         let do_eval = (cfg.eval_every > 0 && (round + 1) % cfg.eval_every == 0)
             || round + 1 == cfg.rounds;
         if do_eval {
@@ -327,7 +371,10 @@ fn run_local_hlo(cfg: &RunConfig) -> crate::Result<RunSummary> {
             let (eloss, eacc) = trainer.eval(&params, &eval_slice.xs, &eval_slice.ys)?;
             stats.eval = Some((eloss, eacc));
             summary.final_accuracy = Some(eacc);
+            span.eval(eloss, eacc);
         }
+        span.participants(stats.participants);
+        span.end(&stats);
         summary.rounds.push(stats);
     }
     Ok(summary)
@@ -376,6 +423,7 @@ fn run_local_native(cfg: &RunConfig) -> crate::Result<RunSummary> {
             participants: participants.len(),
             ..Default::default()
         };
+        let span = journal::RoundSpan::begin(round as u32, 0);
         let mut agg = server.new_round_agg();
         let global = sim_downlink_round(
             &mut downlink,
@@ -384,6 +432,16 @@ fn run_local_native(cfg: &RunConfig) -> crate::Result<RunSummary> {
             &cfg.link,
             &mut stats,
         )?;
+        span.downlink(
+            stats.downlink_bytes,
+            stats.downlink_raw_bytes,
+            stats.full_syncs,
+            stats.down_codec_time,
+            stats.down_transmit_time,
+        );
+        // Same ShardStats bookkeeping as the served topologies — the
+        // journal fold replays this exact accumulation.
+        let mut shard = ShardStats::default();
         for &ci in &participants {
             if sim_state_handshake(
                 &mut server,
@@ -391,15 +449,17 @@ fn run_local_native(cfg: &RunConfig) -> crate::Result<RunSummary> {
                 client_codecs[ci].as_mut(),
                 &mut epochs[ci],
             )? {
-                stats.resyncs += 1;
+                shard.resyncs += 1;
+                span.client_event(0, ci, "resync");
             }
             let (grads, loss) = trainers[ci].train_round(&global)?;
-            stats.mean_loss += loss as f64;
-            stats.raw_bytes += grads.byte_size();
+            shard.loss_sum += loss as f64;
+            let raw_bytes = grads.byte_size();
+            shard.raw_bytes += raw_bytes;
             let t0 = Instant::now();
             let payload = client_codecs[ci].compress(&grads)?;
             stats.comp_time += t0.elapsed();
-            stats.payload_bytes += payload.len();
+            shard.payload_bytes += payload.len();
             let mut link = VirtualLink::new(cfg.link);
             stats.transmit_time += link.send(payload.len());
             let times = server.absorb_payload(
@@ -408,18 +468,39 @@ fn run_local_native(cfg: &RunConfig) -> crate::Result<RunSummary> {
                 trainers[ci].n_samples() as f64,
                 &mut agg,
             )?;
-            stats.decomp_time += times.decode;
-            stats.server_decode_time += times.decode;
-            stats.agg_time += times.agg;
+            shard.served += 1;
+            shard.decode_time += times.decode;
+            shard.agg_time += times.agg;
+            span.client_served(
+                0,
+                ci as u64,
+                payload.len(),
+                raw_bytes,
+                times.decode,
+                times.agg,
+                loss as f64,
+            );
             epochs[ci].advance(client_codecs[ci].state_fingerprint());
         }
-        stats.mean_loss /= participants.len().max(1) as f64;
+        span.shard(0, &shard);
+        telemetry::record_shard(&shard);
+        span.sim(stats.comp_time, stats.transmit_time);
+        let served = shard.served;
+        shard.fold_into(&mut stats);
+        stats.mean_loss /= served.max(1) as f64;
         server.record_store_occupancy(&mut stats);
+        span.store(stats.store_clients, stats.store_bytes);
         let rep = server.finish_round(agg);
         stats.agg_time += rep.finish_time;
         stats.binsum_layers = rep.binsum_layers;
         stats.exact_layers = rep.exact_layers + rep.mixed_layers;
         stats.dequant_passes = rep.dequant_passes;
+        span.finish(
+            rep.finish_time,
+            stats.binsum_layers,
+            stats.exact_layers,
+            stats.dequant_passes,
+        );
         let do_eval = (cfg.eval_every > 0 && (round + 1) % cfg.eval_every == 0)
             || round + 1 == cfg.rounds;
         if do_eval {
@@ -430,7 +511,10 @@ fn run_local_native(cfg: &RunConfig) -> crate::Result<RunSummary> {
             );
             stats.eval = Some((eloss, eacc));
             summary.final_accuracy = Some(eacc);
+            span.eval(eloss, eacc);
         }
+        span.participants(stats.participants);
+        span.end(&stats);
         summary.rounds.push(stats);
     }
     Ok(summary)

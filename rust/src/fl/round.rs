@@ -6,7 +6,11 @@ use std::time::Duration;
 use crate::fl::transport::bandwidth::LinkSpec;
 
 /// Statistics of one synchronous FedAvg round.
-#[derive(Debug, Clone, Default)]
+///
+/// `PartialEq` backs the journal-fold exactness checks: a fold over
+/// `telemetry::journal` records must reproduce these fields *exactly*
+/// (integer-nanosecond durations; identical f64 association order).
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct RoundStats {
     pub round: u32,
     /// Mean client training loss.

@@ -44,6 +44,7 @@ use crate::fl::aggregate::{apply_update, AggMode, RoundAgg};
 use crate::fl::protocol::Msg;
 use crate::fl::round::{RoundStats, ShardStats};
 use crate::fl::transport::Channel;
+use crate::telemetry::{self, journal};
 use crate::tensor::{LayerGrad, LayerMeta, ModelGrad};
 
 /// Where one payload's server-side CPU went: wire-to-aggregator-input
@@ -64,6 +65,7 @@ enum Streamed {
 /// [`ShardStats`] only on success, so a dropped client leaves no trace
 /// in the tallies.
 struct Served {
+    client: ClientId,
     wire_bytes: usize,
     loss: f32,
     times: AbsorbTimes,
@@ -215,11 +217,17 @@ impl DecodeCore {
             RoundAgg::Exact(_) => self
                 .engine
                 .decode_payload(payload, &self.metas, &mut cs.codec)
-                .map(|(grads, _report)| Streamed::Dense(grads)),
+                .map(|(grads, report)| {
+                    journal::report_detail(client as u64, &report);
+                    Streamed::Dense(grads)
+                }),
             RoundAgg::Bin(_) => self
                 .engine
                 .decode_payload_to_bins(payload, &self.metas, &mut cs.codec)
-                .map(|(frames, _report)| Streamed::Bins(frames)),
+                .map(|(frames, report)| {
+                    journal::report_detail(client as u64, &report);
+                    Streamed::Bins(frames)
+                }),
         };
         let decode = t0.elapsed();
         match decoded {
@@ -339,7 +347,12 @@ impl DecodeCore {
             Msg::Update { client_id, round: r, payload, train_loss, n_samples } => {
                 anyhow::ensure!(r == round, "client {client_id} answered round {r}");
                 let times = self.absorb_payload(client_id, &payload, n_samples as f64, agg)?;
-                Ok(Served { wire_bytes: payload.len(), loss: train_loss, times })
+                Ok(Served {
+                    client: client_id,
+                    wire_bytes: payload.len(),
+                    loss: train_loss,
+                    times,
+                })
             }
             Msg::UpdateBegin { client_id, round: r, n_layers, train_loss, n_samples } => {
                 anyhow::ensure!(r == round, "client {client_id} answered round {r}");
@@ -352,7 +365,7 @@ impl DecodeCore {
                     n_samples as f64,
                     agg,
                 )?;
-                Ok(Served { wire_bytes, loss: train_loss, times })
+                Ok(Served { client: client_id, wire_bytes, loss: train_loss, times })
             }
             other => anyhow::bail!("server: unexpected {other:?}"),
         }
@@ -372,22 +385,34 @@ impl DecodeCore {
     ///
     /// The same loop serves a flat server over all channels, one shard
     /// worker over its slice, and an edge aggregator over its subtree.
+    /// `shard` only labels this slice's journal records (0 for a flat
+    /// server, the worker/edge index otherwise).
+    ///
+    /// This is where per-client work actually happens, so it is also
+    /// where the global telemetry counters absorb the slice's tallies —
+    /// merge paths must *not* re-count received `ShardStats`.
     pub fn serve_round(
         &mut self,
         channels: &mut [Box<dyn Channel>],
         round: u32,
         raw_model_bytes: usize,
+        shard: usize,
         agg: &mut RoundAgg,
     ) -> ShardStats {
+        let span = journal::RoundSpan::at(round);
         let mut st = ShardStats::default();
         let mut dead = vec![false; channels.len()];
         for (idx, ch) in channels.iter_mut().enumerate() {
             match self.serve_state_check(ch.as_mut()) {
-                Ok(true) => st.resyncs += 1,
+                Ok(true) => {
+                    st.resyncs += 1;
+                    span.client_event(shard, idx, "resync");
+                }
                 Ok(false) => {}
                 Err(_) => {
                     dead[idx] = true;
                     st.dropped += 1;
+                    span.client_event(shard, idx, "drop");
                 }
             }
         }
@@ -403,13 +428,24 @@ impl DecodeCore {
                     st.loss_sum += served.loss as f64;
                     st.decode_time += served.times.decode;
                     st.agg_time += served.times.agg;
+                    span.client_served(
+                        shard,
+                        served.client as u64,
+                        served.wire_bytes,
+                        raw_model_bytes,
+                        served.times.decode,
+                        served.times.agg,
+                        served.loss as f64,
+                    );
                 }
                 Err(_) => {
                     dead[idx] = true;
                     st.dropped += 1;
+                    span.client_event(shard, idx, "drop");
                 }
             }
         }
+        telemetry::record_shard(&st);
         st
     }
 }
@@ -568,6 +604,8 @@ impl Server {
         let occ = self.core.store.stats();
         stats.store_clients = occ.resident_clients + occ.spilled_clients;
         stats.store_bytes = occ.resident_bytes + occ.spilled_bytes;
+        telemetry::STORE_RESIDENT_CLIENTS.set(stats.store_clients as u64);
+        telemetry::STORE_RESIDENT_BYTES.set(stats.store_bytes as u64);
     }
 
     /// See [`DecodeCore::check_state`].
@@ -602,6 +640,8 @@ impl Server {
             apply_update(&mut self.params, &mean, self.lr);
         }
         report.finish_time = t0.elapsed();
+        telemetry::ROUNDS.inc();
+        telemetry::FINISH_NS.add_duration(report.finish_time);
         self.round += 1;
         report
     }
@@ -689,6 +729,11 @@ impl Server {
                 }
             }
         }
+        // `stats` is fresh per round, so the fields are this broadcast's
+        // whole contribution.
+        telemetry::DOWNLINK_BYTES.add(stats.downlink_bytes as u64);
+        telemetry::DOWNLINK_RAW_BYTES.add(stats.downlink_raw_bytes as u64);
+        telemetry::DOWNLINK_FULL_SYNCS.add(stats.full_syncs as u64);
         Ok(())
     }
 
@@ -706,19 +751,37 @@ impl Server {
             shards: 1,
             ..Default::default()
         };
+        let span = journal::RoundSpan::begin(round, 1);
         self.broadcast(channels, round, &mut stats)?;
+        span.downlink(
+            stats.downlink_bytes,
+            stats.downlink_raw_bytes,
+            stats.full_syncs,
+            stats.down_codec_time,
+            Duration::ZERO,
+        );
         let raw_model_bytes = self.core.raw_model_bytes();
         let mut agg = self.new_round_agg();
-        let shard = self.core.serve_round(channels, round, raw_model_bytes, &mut agg);
+        let shard = self.core.serve_round(channels, round, raw_model_bytes, 0, &mut agg);
+        span.shard(0, &shard);
         let served = shard.served;
         shard.fold_into(&mut stats);
         stats.mean_loss /= served.max(1) as f64;
         self.record_store_occupancy(&mut stats);
+        span.store(stats.store_clients, stats.store_bytes);
         let rep = self.finish_round(agg);
         stats.agg_time += rep.finish_time;
         stats.binsum_layers = rep.binsum_layers;
         stats.exact_layers = rep.exact_layers + rep.mixed_layers;
         stats.dequant_passes = rep.dequant_passes;
+        span.finish(
+            rep.finish_time,
+            stats.binsum_layers,
+            stats.exact_layers,
+            stats.dequant_passes,
+        );
+        span.participants(stats.participants);
+        span.end(&stats);
         Ok(stats)
     }
 

@@ -19,7 +19,7 @@
 //! holds across the whole tree.
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::compress::blob::{BlobReader, BlobWriter};
 use crate::compress::engine::CodecEngine;
@@ -30,6 +30,7 @@ use crate::fl::round::{RoundStats, ShardStats};
 use crate::fl::server::{DecodeCore, Server};
 use crate::fl::topology::tree_merge;
 use crate::fl::transport::Channel;
+use crate::telemetry::{self, journal};
 use crate::tensor::LayerMeta;
 
 /// Client-id namespace for edge aggregators themselves (their Hello to
@@ -121,7 +122,8 @@ impl EdgeAggregator {
                         let _ = ch.send_encoded(&raw);
                     }
                     let mut agg = RoundAgg::for_mode(self.agg_mode);
-                    let st = self.core.serve_round(down, round, raw_model_bytes, &mut agg);
+                    let shard = (self.id - EDGE_ID_BASE) as usize;
+                    let st = self.core.serve_round(down, round, raw_model_bytes, shard, &mut agg);
                     up.send(&Msg::AggPush { round, payload: encode_agg_push(&st, &agg) })?;
                 }
                 Msg::Shutdown => {
@@ -180,6 +182,16 @@ pub fn run_round_root(
         downlink_bytes: raw_model_bytes * edges.len(),
         ..Default::default()
     };
+    let span = journal::RoundSpan::begin(round, edges.len());
+    span.downlink(
+        stats.downlink_bytes,
+        stats.downlink_raw_bytes,
+        0,
+        Duration::ZERO,
+        Duration::ZERO,
+    );
+    telemetry::DOWNLINK_BYTES.add(stats.downlink_bytes as u64);
+    telemetry::DOWNLINK_RAW_BYTES.add(stats.downlink_raw_bytes as u64);
     let bytes: Arc<[u8]> = Msg::encode_global_params(round, &server.params).into();
     for ch in edges.iter_mut() {
         let _ = ch.send_encoded(&bytes);
@@ -187,29 +199,47 @@ pub fn run_round_root(
     let mut shard_total = ShardStats::default();
     let mut parts = Vec::with_capacity(edges.len());
     let mut dropped_edges = 0usize;
-    for ch in edges.iter_mut() {
+    // The edges' own serve loops already fed the global counters; the
+    // root only journals the received tallies (single-threaded, in
+    // receive order — the order the fold must replay).
+    for (i, ch) in edges.iter_mut().enumerate() {
+        let t_push = telemetry::active().then(Instant::now);
         match recv_agg_push(ch.as_mut(), round) {
             Ok((st, agg)) => {
+                if let Some(t) = t_push {
+                    telemetry::EDGE_PUSH_LATENCY.observe(t.elapsed());
+                }
+                span.shard(i, &st);
                 shard_total.absorb(&st);
                 parts.push(agg);
             }
-            Err(_) => dropped_edges += 1,
+            Err(_) => {
+                dropped_edges += 1;
+                telemetry::EDGE_SUBTREE_DROPS.inc();
+                span.edge_drop(i);
+            }
         }
     }
     let t0 = Instant::now();
     let merged = tree_merge(parts)?;
     stats.merge_time = t0.elapsed();
+    telemetry::MERGE_NS.add_duration(stats.merge_time);
+    span.merge(stats.merge_time);
     let served = shard_total.served;
     shard_total.fold_into(&mut stats);
     stats.dropped += dropped_edges;
     stats.participants = served + shard_total.dropped + dropped_edges;
     stats.mean_loss /= served.max(1) as f64;
     server.record_store_occupancy(&mut stats);
+    span.store(stats.store_clients, stats.store_bytes);
     let rep = server.finish_round(merged.unwrap_or_else(|| RoundAgg::for_mode(agg_mode)));
     stats.agg_time += rep.finish_time;
     stats.binsum_layers = rep.binsum_layers;
     stats.exact_layers = rep.exact_layers + rep.mixed_layers;
     stats.dequant_passes = rep.dequant_passes;
+    span.finish(rep.finish_time, stats.binsum_layers, stats.exact_layers, stats.dequant_passes);
+    span.participants(stats.participants);
+    span.end(&stats);
     Ok(stats)
 }
 

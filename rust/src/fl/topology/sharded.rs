@@ -10,7 +10,7 @@
 //! bound.
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::compress::engine::CodecEngine;
 use crate::compress::store::ClientId;
@@ -20,6 +20,7 @@ use crate::fl::round::{RoundStats, ShardStats};
 use crate::fl::server::{DecodeCore, Server};
 use crate::fl::topology::{shard_sizes, tree_merge};
 use crate::fl::transport::Channel;
+use crate::telemetry::{self, journal};
 
 /// One client's uplink in pre-received form, for driving shard workers
 /// without live channels (synthetic fleets, churn soaks). Payloads are
@@ -85,6 +86,16 @@ impl ShardedRunner {
             downlink_bytes: raw_model_bytes * channels.len(),
             ..Default::default()
         };
+        let span = journal::RoundSpan::begin(round, self.cores.len());
+        span.downlink(
+            stats.downlink_bytes,
+            stats.downlink_raw_bytes,
+            0,
+            Duration::ZERO,
+            Duration::ZERO,
+        );
+        telemetry::DOWNLINK_BYTES.add(stats.downlink_bytes as u64);
+        telemetry::DOWNLINK_RAW_BYTES.add(stats.downlink_raw_bytes as u64);
         let bytes: Arc<[u8]> = Msg::encode_global_params(round, &server.params).into();
         let sizes = shard_sizes(channels.len(), self.cores.len());
         let mut slices: Vec<&mut [Box<dyn Channel>]> = Vec::with_capacity(sizes.len());
@@ -96,7 +107,7 @@ impl ShardedRunner {
         }
         let parts: Vec<(RoundAgg, ShardStats)> = std::thread::scope(|s| {
             let mut handles = Vec::with_capacity(slices.len());
-            for (core, slice) in self.cores.iter_mut().zip(slices) {
+            for (shard_idx, (core, slice)) in self.cores.iter_mut().zip(slices).enumerate() {
                 let bytes = Arc::clone(&bytes);
                 handles.push(s.spawn(move || {
                     for ch in slice.iter_mut() {
@@ -105,13 +116,15 @@ impl ShardedRunner {
                         let _ = ch.send_encoded(&bytes);
                     }
                     let mut agg = RoundAgg::for_mode(agg_mode);
-                    let st = core.serve_round(slice, round, raw_model_bytes, &mut agg);
+                    let st = core.serve_round(slice, round, raw_model_bytes, shard_idx, &mut agg);
                     (agg, st)
                 }));
             }
             handles.into_iter().map(|h| h.join().expect("shard worker panicked")).collect()
         });
         self.merge_and_finish(server, parts, &mut stats)?;
+        span.participants(stats.participants);
+        span.end(&stats);
         Ok(stats)
     }
 
@@ -135,11 +148,13 @@ impl ShardedRunner {
         let raw_model_bytes = server.raw_model_bytes();
         let mut stats =
             RoundStats { round, shards: self.cores.len(), ..Default::default() };
+        let span = journal::RoundSpan::begin(round, self.cores.len());
         let parts: Vec<(RoundAgg, ShardStats)> = std::thread::scope(|s| {
             let source = &source;
             let mut handles = Vec::with_capacity(self.cores.len());
             for (shard_idx, core) in self.cores.iter_mut().enumerate() {
                 handles.push(s.spawn(move || {
+                    let span = journal::RoundSpan::at(round);
                     let mut agg = RoundAgg::for_mode(agg_mode);
                     let mut st = ShardStats::default();
                     for c in source(shard_idx) {
@@ -151,10 +166,23 @@ impl ShardedRunner {
                                 st.loss_sum += c.loss as f64;
                                 st.decode_time += times.decode;
                                 st.agg_time += times.agg;
+                                span.client_served(
+                                    shard_idx,
+                                    c.client as u64,
+                                    c.payload.len(),
+                                    raw_model_bytes,
+                                    times.decode,
+                                    times.agg,
+                                    c.loss as f64,
+                                );
                             }
-                            Err(_) => st.dropped += 1,
+                            Err(_) => {
+                                st.dropped += 1;
+                                span.client_event(shard_idx, c.client as usize, "drop");
+                            }
                         }
                     }
+                    telemetry::record_shard(&st);
                     (agg, st)
                 }));
             }
@@ -162,6 +190,8 @@ impl ShardedRunner {
         });
         let served = self.merge_and_finish(server, parts, &mut stats)?;
         stats.participants = served + stats.dropped;
+        span.participants(stats.participants);
+        span.end(&stats);
         Ok(stats)
     }
 
@@ -174,9 +204,14 @@ impl ShardedRunner {
         stats: &mut RoundStats,
     ) -> crate::Result<usize> {
         let agg_mode = server.agg_mode();
+        // Single-threaded absorb in worker order: the journal's `shard`
+        // records are emitted here (not in the workers) so the fold
+        // replays this exact accumulation order.
+        let span = journal::RoundSpan::at(stats.round);
         let mut shard_total = ShardStats::default();
         let mut aggs = Vec::with_capacity(parts.len());
-        for (agg, st) in parts {
+        for (i, (agg, st)) in parts.into_iter().enumerate() {
+            span.shard(i, &st);
             shard_total.absorb(&st);
             aggs.push(agg);
         }
@@ -184,15 +219,24 @@ impl ShardedRunner {
         let t0 = Instant::now();
         let merged = tree_merge(aggs)?;
         stats.merge_time = t0.elapsed();
+        telemetry::MERGE_NS.add_duration(stats.merge_time);
+        span.merge(stats.merge_time);
         let served = shard_total.served;
         shard_total.fold_into(stats);
         stats.mean_loss /= served.max(1) as f64;
         server.record_store_occupancy(stats);
+        span.store(stats.store_clients, stats.store_bytes);
         let rep = server.finish_round(merged.unwrap_or_else(|| RoundAgg::for_mode(agg_mode)));
         stats.agg_time += rep.finish_time;
         stats.binsum_layers = rep.binsum_layers;
         stats.exact_layers = rep.exact_layers + rep.mixed_layers;
         stats.dequant_passes = rep.dequant_passes;
+        span.finish(
+            rep.finish_time,
+            stats.binsum_layers,
+            stats.exact_layers,
+            stats.dequant_passes,
+        );
         Ok(served)
     }
 }

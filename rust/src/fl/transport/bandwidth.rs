@@ -111,6 +111,7 @@ impl Throttler {
         self.busy_until = start + dur;
         let wait = self.busy_until.saturating_duration_since(now);
         if !wait.is_zero() {
+            crate::telemetry::THROTTLE_WAIT_NS.add_duration(wait);
             std::thread::sleep(wait);
         }
     }

@@ -44,7 +44,14 @@ impl InProcChannel {
         if let Some(t) = &mut self.throttle {
             t.consume(bytes.len());
         }
+        crate::telemetry::TX_BYTES_INPROC.add(bytes.len() as u64);
         self.tx.send(bytes).map_err(|_| anyhow::anyhow!("peer hung up"))
+    }
+
+    fn pull(&mut self) -> crate::Result<Arc<[u8]>> {
+        let bytes = self.rx.recv().map_err(|_| anyhow::anyhow!("peer hung up"))?;
+        crate::telemetry::RX_BYTES_INPROC.add(bytes.len() as u64);
+        Ok(bytes)
     }
 }
 
@@ -58,12 +65,12 @@ impl Channel for InProcChannel {
     }
 
     fn recv(&mut self) -> crate::Result<Msg> {
-        let bytes = self.rx.recv().map_err(|_| anyhow::anyhow!("peer hung up"))?;
+        let bytes = self.pull()?;
         Msg::decode(&bytes)
     }
 
     fn recv_raw(&mut self) -> crate::Result<Arc<[u8]>> {
-        self.rx.recv().map_err(|_| anyhow::anyhow!("peer hung up"))
+        self.pull()
     }
 }
 

@@ -58,6 +58,7 @@ impl TcpChannel {
         if let Some(t) = &mut self.throttle {
             t.consume(bytes.len() + 4);
         }
+        crate::telemetry::TX_BYTES_TCP.add(bytes.len() as u64 + 4);
         self.stream.write_all(&(bytes.len() as u32).to_le_bytes())?;
         self.stream.write_all(bytes)?;
         Ok(())
@@ -84,6 +85,7 @@ impl Channel for TcpChannel {
         }
         let mut buf = vec![0u8; len];
         self.stream.read_exact(&mut buf)?;
+        crate::telemetry::RX_BYTES_TCP.add(len as u64 + 4);
         Msg::decode(&buf)
     }
 }

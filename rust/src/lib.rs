@@ -24,6 +24,7 @@ pub mod fl;
 pub mod train;
 pub mod runtime;
 pub mod metrics;
+pub mod telemetry;
 pub mod coordinator;
 pub mod config;
 pub mod cli;

@@ -6,6 +6,7 @@
 //!   client         TCP client joining a `serve` federation
 //!   compress-file  run any codec over a raw f32 file, report CR + bound
 //!   codecs         list the codec registry and spec grammar
+//!   tail           render a round journal (JSONL) as a per-round table
 //!   info           environment / artifact status
 
 use fedgec::cli::Args;
@@ -28,6 +29,7 @@ fn main() {
         Some("client") => cmd_client(&args),
         Some("compress-file") => cmd_compress_file(&args),
         Some("codecs") => cmd_codecs(),
+        Some("tail") => cmd_tail(&args),
         Some("info") => cmd_info(),
         _ => {
             print_usage();
@@ -48,10 +50,12 @@ fn print_usage() {
          fedgec run [--config FILE] [--model M] [--dataset D] [--codec C]\n\
          \u{20}          [--rounds N] [--rel_error_bound EB] [--bandwidth_mbps B]\n\
          \u{20}          [--engine native|hlo] ... (any RunConfig key)\n\
-         fedgec serve --addr 127.0.0.1:7070 [--config FILE] [...]\n\
+         fedgec serve --addr 127.0.0.1:7070 [--config FILE]\n\
+         \u{20}            [--metrics-addr 127.0.0.1:9100] [--journal FILE] [...]\n\
          fedgec client --addr 127.0.0.1:7070 --id K [--config FILE] [...]\n\
          fedgec compress-file --in FILE [--codec fedgec] [--eb 1e-2]\n\
          fedgec codecs\n\
+         fedgec tail JOURNAL.jsonl [--follow]\n\
          fedgec info\n\
          \n\
          --codec accepts any CodecSpec string, e.g. 'fedgec:eb=rel1e-2,beta=0.9',\n\
@@ -62,7 +66,10 @@ fn print_usage() {
          --down compresses the server broadcast the same way (global-delta\n\
          codec, encode-once fan-out): --down fedgec --down_eb 1e-3; 'raw'\n\
          keeps the uncompressed broadcast. --down_bandwidth_mbps sets an\n\
-         asymmetric downlink rate."
+         asymmetric downlink rate.\n\
+         --metrics-addr exposes Prometheus text on GET /metrics while the\n\
+         server runs; --journal FILE (run/serve) streams one JSONL record\n\
+         per round event, rendered later with `fedgec tail`."
     );
 }
 
@@ -104,6 +111,10 @@ fn load_config(args: &Args) -> fedgec::Result<RunConfig> {
         if k == "config" || k == "addr" || k == "id" || k == "threaded" || k == "in" || k == "out" {
             continue;
         }
+        // Telemetry flags are consumed by the launcher, not RunConfig.
+        if k == "metrics-addr" || k == "journal" || k == "follow" {
+            continue;
+        }
         cfg.apply_override(k, v)?;
     }
     Ok(cfg)
@@ -111,18 +122,36 @@ fn load_config(args: &Args) -> fedgec::Result<RunConfig> {
 
 fn cmd_run(args: &Args) -> fedgec::Result<()> {
     let cfg = load_config(args)?;
+    if let Some(path) = args.get("journal") {
+        fedgec::telemetry::journal::attach(path)?;
+    }
     let summary = if args.has("threaded") {
-        fedgec::coordinator::run_threaded(&cfg)?
+        fedgec::coordinator::run_threaded(&cfg)
     } else {
-        fedgec::coordinator::run_local(&cfg)?
+        fedgec::coordinator::run_local(&cfg)
     };
-    fedgec::coordinator::print_summary(&cfg, &summary);
+    // Flush the journal even when the run fails partway.
+    fedgec::telemetry::journal::detach();
+    fedgec::coordinator::print_summary(&cfg, &summary?);
     Ok(())
 }
 
 fn cmd_serve(args: &Args) -> fedgec::Result<()> {
     let cfg = load_config(args)?;
     anyhow::ensure!(cfg.model == "native", "TCP mode uses the native trainer (model=native)");
+    if let Some(path) = args.get("journal") {
+        fedgec::telemetry::journal::attach(path)?;
+    }
+    // Keep the exposition listener alive for the whole serve loop; Drop
+    // shuts it down if the loop errors out early.
+    let metrics = match args.get("metrics-addr") {
+        Some(maddr) => {
+            let srv = fedgec::telemetry::MetricsServer::bind(maddr)?;
+            println!("metrics exposed on http://{}/metrics", srv.addr());
+            Some(srv)
+        }
+        None => None,
+    };
     let addr = args.get_or("addr", "127.0.0.1:7070");
     let listener = std::net::TcpListener::bind(addr)?;
     println!("server listening on {addr}, waiting for {} clients…", cfg.n_clients);
@@ -160,8 +189,36 @@ fn cmd_serve(args: &Args) -> fedgec::Result<()> {
         );
     }
     server.shutdown(&mut channels)?;
+    drop(metrics);
+    fedgec::telemetry::journal::detach();
     println!("done.");
     Ok(())
+}
+
+fn cmd_tail(args: &Args) -> fedgec::Result<()> {
+    let path = args
+        .positionals
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: fedgec tail JOURNAL.jsonl [--follow]"))?;
+    let render = |text: &str| -> fedgec::Result<()> {
+        fedgec::telemetry::tail::table_from(text)?.print();
+        Ok(())
+    };
+    if !args.has("follow") {
+        return render(&std::fs::read_to_string(path)?);
+    }
+    // Follow mode: re-render whenever the file grows (coarse 500 ms poll
+    // — the journal gains at most a handful of records per round).
+    let mut last_len = usize::MAX;
+    loop {
+        if let Ok(text) = std::fs::read_to_string(path) {
+            if text.len() != last_len {
+                last_len = text.len();
+                render(&text)?;
+            }
+        }
+        std::thread::sleep(std::time::Duration::from_millis(500));
+    }
 }
 
 fn cmd_client(args: &Args) -> fedgec::Result<()> {

@@ -72,8 +72,10 @@ impl Table {
         std::fs::create_dir_all(&dir)?;
         let path = dir.join(format!("{name}.csv"));
         let mut out = String::new();
+        // RFC 4180 quoting: commas, quotes, AND newlines force a quoted
+        // field (a bare newline in a cell would otherwise split the row).
         let esc = |s: &str| {
-            if s.contains(',') || s.contains('"') {
+            if s.contains([',', '"', '\n', '\r']) {
                 format!("\"{}\"", s.replace('"', "\"\""))
             } else {
                 s.to_string()
@@ -207,6 +209,72 @@ mod tests {
         std::env::remove_var("FEDGEC_RESULTS");
         let content = std::fs::read_to_string(p).unwrap();
         assert!(content.contains("\"x,y\""));
+    }
+
+    /// Minimal RFC 4180 reader for the round-trip test: quoted fields,
+    /// doubled-quote escapes, embedded commas/newlines.
+    fn parse_csv(text: &str) -> Vec<Vec<String>> {
+        let mut rows = Vec::new();
+        let mut row = Vec::new();
+        let mut field = String::new();
+        let mut quoted = false;
+        let mut chars = text.chars().peekable();
+        while let Some(c) = chars.next() {
+            if quoted {
+                match c {
+                    '"' if chars.peek() == Some(&'"') => {
+                        chars.next();
+                        field.push('"');
+                    }
+                    '"' => quoted = false,
+                    _ => field.push(c),
+                }
+            } else {
+                match c {
+                    '"' => quoted = true,
+                    ',' => row.push(std::mem::take(&mut field)),
+                    '\n' => {
+                        row.push(std::mem::take(&mut field));
+                        rows.push(std::mem::take(&mut row));
+                    }
+                    '\r' => {}
+                    _ => field.push(c),
+                }
+            }
+        }
+        if !field.is_empty() || !row.is_empty() {
+            row.push(field);
+            rows.push(row);
+        }
+        rows
+    }
+
+    #[test]
+    fn csv_round_trips_commas_quotes_and_newlines() {
+        let _guard = ENV_LOCK.lock().unwrap();
+        let mut t = Table::new("rt", &["plain", "tricky"]);
+        let cells = [
+            ["x", "a,b"],
+            ["y", "say \"hi\""],
+            ["z", "two\nlines"],
+            ["w", "all, \"of\"\r\nit"],
+        ];
+        for r in &cells {
+            t.row(vec![r[0].into(), r[1].into()]);
+        }
+        std::env::set_var("FEDGEC_RESULTS", std::env::temp_dir().join("fedgec_test_results"));
+        let p = t.save_csv("roundtrip_test").unwrap();
+        std::env::remove_var("FEDGEC_RESULTS");
+        let parsed = parse_csv(&std::fs::read_to_string(p).unwrap());
+        assert_eq!(parsed[0], vec!["plain", "tricky"]);
+        for (i, r) in cells.iter().enumerate() {
+            // \r\n inside a quoted field survives as written; the bare
+            // \n case and the comma/quote cases must come back verbatim.
+            let got = &parsed[i + 1];
+            assert_eq!(got[0], r[0], "row {i}");
+            assert_eq!(got[1].replace("\r\n", "\n"), r[1].replace("\r\n", "\n"), "row {i}");
+        }
+        assert_eq!(parsed.len(), cells.len() + 1, "newline cells must not add rows");
     }
 
     #[test]

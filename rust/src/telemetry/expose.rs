@@ -1,0 +1,223 @@
+//! Prometheus text-format (0.0.4) rendering of the metric registry and
+//! the tiny blocking `GET /metrics` listener behind `--metrics-addr`.
+
+use super::registry::{MetricDef, MetricKind, Unit};
+use std::fmt::Write as _;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Render every [`super::REGISTRY`] metric as Prometheus text
+/// exposition. Adjacent same-name entries (label variants) share one
+/// `# HELP`/`# TYPE` block, as the format requires.
+pub fn render() -> String {
+    let defs = super::REGISTRY;
+    let mut out = String::new();
+    let mut i = 0;
+    while i < defs.len() {
+        let d = &defs[i];
+        let kind = match d.kind {
+            MetricKind::Counter(_) => "counter",
+            MetricKind::Gauge(_) => "gauge",
+            MetricKind::Histogram(_) => "histogram",
+        };
+        let _ = writeln!(out, "# HELP {} {}", d.name, d.help);
+        let _ = writeln!(out, "# TYPE {} {}", d.name, kind);
+        let mut j = i;
+        while j < defs.len() && defs[j].name == d.name {
+            render_one(&mut out, &defs[j]);
+            j += 1;
+        }
+        i = j;
+    }
+    out
+}
+
+fn value(unit: Unit, raw: u64) -> String {
+    match unit {
+        Unit::Plain => format!("{raw}"),
+        Unit::NanosToSeconds => format!("{}", raw as f64 / 1e9),
+    }
+}
+
+fn render_one(out: &mut String, d: &MetricDef) {
+    let sel = if d.labels.is_empty() {
+        d.name.to_string()
+    } else {
+        format!("{}{{{}}}", d.name, d.labels)
+    };
+    match d.kind {
+        MetricKind::Counter(c) => {
+            let _ = writeln!(out, "{} {}", sel, value(d.unit, c.get()));
+        }
+        MetricKind::Gauge(g) => {
+            let _ = writeln!(out, "{} {}", sel, value(d.unit, g.get()));
+        }
+        MetricKind::Histogram(h) => {
+            let counts = h.bucket_counts();
+            let mut cum = 0u64;
+            for (bi, b) in h.bounds().iter().enumerate() {
+                cum += counts[bi];
+                let _ = writeln!(out, "{}_bucket{{le=\"{}\"}} {}", d.name, b, cum);
+            }
+            cum += counts[h.bounds().len()];
+            let _ = writeln!(out, "{}_bucket{{le=\"+Inf\"}} {}", d.name, cum);
+            let _ = writeln!(out, "{}_sum {}", d.name, h.sum_seconds());
+            let _ = writeln!(out, "{}_count {}", d.name, cum);
+        }
+    }
+}
+
+/// A blocking `/metrics` HTTP listener on a background thread.
+/// One request per connection, `Connection: close` — scrape traffic,
+/// not a web server. Registered as a telemetry sink while alive.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9184`; port 0 picks a free port)
+    /// and start serving `GET /metrics`.
+    pub fn bind(addr: &str) -> crate::Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                if let Ok(stream) = conn {
+                    let _ = handle_conn(stream);
+                }
+            }
+        });
+        super::sink_attached();
+        Ok(MetricsServer { addr, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves port 0 for tests).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the listener and join its thread. Idempotent; also runs on
+    /// drop.
+    pub fn shutdown(&mut self) {
+        if let Some(handle) = self.handle.take() {
+            self.stop.store(true, Ordering::SeqCst);
+            // Unblock the accept loop with a throwaway connection.
+            let _ = TcpStream::connect(self.addr);
+            let _ = handle.join();
+            super::sink_detached();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn handle_conn(mut stream: TcpStream) -> std::io::Result<()> {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+    // Read the request head only; a scrape has no body.
+    let mut buf = [0u8; 4096];
+    let mut n = 0;
+    loop {
+        if n == buf.len() {
+            break;
+        }
+        let r = stream.read(&mut buf[n..])?;
+        if r == 0 {
+            break;
+        }
+        n += r;
+        if buf[..n].windows(4).any(|w| w == b"\r\n\r\n") {
+            break;
+        }
+    }
+    let head = String::from_utf8_lossy(&buf[..n]);
+    let line = head.lines().next().unwrap_or("");
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    let is_metrics = path == "/metrics" || path.starts_with("/metrics?");
+    let (status, body) = if method == "GET" && is_metrics {
+        ("200 OK", render())
+    } else {
+        ("404 Not Found", "not found\n".to_string())
+    };
+    let header = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(header.as_bytes())?;
+    stream.write_all(body.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_groups_are_adjacent_and_selectors_unique() {
+        let defs = super::super::REGISTRY;
+        // (name, labels) pairs are unique.
+        let mut seen = std::collections::BTreeSet::new();
+        for d in defs {
+            let fresh = seen.insert((d.name, d.labels));
+            assert!(fresh, "duplicate metric {} {{{}}}", d.name, d.labels);
+        }
+        // Same-name entries are adjacent (one HELP/TYPE block each).
+        let mut names = std::collections::BTreeSet::new();
+        let mut i = 0;
+        while i < defs.len() {
+            let name = defs[i].name;
+            assert!(names.insert(name), "metric family {name} split across the registry");
+            while i < defs.len() && defs[i].name == name {
+                i += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn render_is_wellformed_prometheus_text() {
+        let text = render();
+        for required in [
+            "fedgec_rounds_total",
+            "fedgec_uplink_bytes_total",
+            "fedgec_downlink_bytes_total",
+            "fedgec_decode_seconds_total",
+            "fedgec_agg_seconds_total",
+            "fedgec_merge_seconds_total",
+            "fedgec_store_hits_total",
+            "fedgec_store_misses_total",
+            "fedgec_store_evictions_total",
+            "fedgec_resyncs_total",
+            "fedgec_clients_dropped_total",
+        ] {
+            assert!(text.contains(&format!("# TYPE {required} ")), "missing {required}");
+        }
+        // Every sample line is `name[{labels}] <number>`.
+        for line in text.lines() {
+            if line.starts_with('#') || line.is_empty() {
+                continue;
+            }
+            let (sel, val) = line.rsplit_once(' ').expect("sample line has a value");
+            assert!(sel.starts_with("fedgec_"), "bad selector {sel:?}");
+            assert!(val.parse::<f64>().is_ok(), "non-numeric sample {val:?} in {line:?}");
+        }
+        // The histogram renders cumulative buckets ending at +Inf.
+        assert!(text.contains("fedgec_edge_push_seconds_bucket{le=\"+Inf\"}"));
+        assert!(text.contains("fedgec_edge_push_seconds_count"));
+    }
+}

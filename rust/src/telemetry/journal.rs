@@ -1,0 +1,708 @@
+//! Round tracing journal: a bounded in-memory ring of pre-rendered
+//! JSONL records, flushed to a file by a background writer thread.
+//!
+//! # Schema (versioned)
+//!
+//! Every record is one JSON object per line carrying `"v":1` and a
+//! `"t"` type tag. Durations are integer nanoseconds (`*_ns` keys) —
+//! exact in a JSON f64 below 2^53 ns ≈ 104 days. Record types:
+//!
+//! | `t`           | emitted by                  | payload |
+//! |---------------|-----------------------------|---------|
+//! | `round_begin` | every runner, once          | `round`, `shards` |
+//! | `client`      | serve/simulation loops      | `ev` ∈ served/drop/resync + detail |
+//! | `shard`       | the single-threaded merge   | exact [`ShardStats`] fields, in merge order |
+//! | `edge_drop`   | root on a dead edge         | `edge` |
+//! | `merge`       | tree-merge                  | `merge_ns` |
+//! | `finish`      | finish_round                | `finish_ns`, route counts |
+//! | `store`       | occupancy snapshot          | `clients`, `bytes` |
+//! | `downlink`    | broadcast/sim accounting    | bytes, full_syncs, codec/transmit ns |
+//! | `sim`         | local simulation loop       | client-side comp/transmit ns |
+//! | `participants`| every runner, once final    | `n` |
+//! | `eval`        | eval rounds                 | `loss`, `acc` |
+//! | `layer`       | decode detail (env-gated)   | per-layer coder route + predictor tag |
+//! | `round_end`   | every runner, last          | the full [`RoundStats`] |
+//! | `lost`        | the writer                  | `n` records dropped on ring overflow |
+//!
+//! [`fold_journal`] reconstructs each round's [`RoundStats`] purely
+//! from the non-`round_end` records; because `shard` records are
+//! emitted from the single-threaded merge path in merge order, the fold
+//! reproduces the runner's own arithmetic *exactly* (same f64
+//! association order, integer-nanosecond durations) — asserted by
+//! `tests/telemetry.rs` and the `fl_e2e` example.
+
+use crate::fl::round::{RoundStats, ShardStats};
+use crate::util::json::Json;
+use crate::Result;
+use std::collections::{BTreeMap, VecDeque};
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Ring capacity in records. Overflow drops the *incoming* record: the
+/// buffered history stays coherent, the loss is counted, and the writer
+/// emits a `lost` record (plus `fedgec_journal_dropped_total`).
+pub const RING_CAP: usize = 1 << 16;
+
+/// Background writer poll/flush cadence.
+const FLUSH_INTERVAL: Duration = Duration::from_millis(50);
+
+struct Ring {
+    lines: VecDeque<String>,
+    dropped: u64,
+}
+
+impl Ring {
+    const fn new() -> Ring {
+        Ring { lines: VecDeque::new(), dropped: 0 }
+    }
+
+    /// Push one rendered line; false (and a counted loss) when full.
+    fn push(&mut self, line: String) -> bool {
+        if self.lines.len() >= RING_CAP {
+            self.dropped += 1;
+            false
+        } else {
+            self.lines.push_back(line);
+            true
+        }
+    }
+}
+
+static RING: Mutex<Ring> = Mutex::new(Ring::new());
+static JOURNAL_ON: AtomicBool = AtomicBool::new(false);
+
+struct Writer {
+    stop: Arc<AtomicBool>,
+    handle: JoinHandle<()>,
+}
+
+static WRITER: Mutex<Option<Writer>> = Mutex::new(None);
+
+/// Fast-path check: true while a journal file is attached. Callers
+/// skip all record formatting when false.
+#[inline]
+pub fn on() -> bool {
+    JOURNAL_ON.load(Ordering::Relaxed)
+}
+
+/// Attach the journal to `path` (truncating any existing file) and
+/// start the background writer. An already-attached journal is
+/// detached (fully flushed) first.
+pub fn attach<P: AsRef<Path>>(path: P) -> Result<()> {
+    detach();
+    let mut out = BufWriter::new(File::create(path.as_ref())?);
+    // A fresh journal never inherits records buffered before attach.
+    {
+        let mut ring = RING.lock().unwrap();
+        ring.lines.clear();
+        ring.dropped = 0;
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let handle = std::thread::spawn(move || loop {
+        let stopping = stop2.load(Ordering::SeqCst);
+        let _ = drain_into(&mut out);
+        let _ = out.flush();
+        if stopping {
+            break;
+        }
+        std::thread::sleep(FLUSH_INTERVAL);
+    });
+    *WRITER.lock().unwrap() = Some(Writer { stop, handle });
+    JOURNAL_ON.store(true, Ordering::SeqCst);
+    super::sink_attached();
+    Ok(())
+}
+
+/// Detach the journal: stop accepting records, drain the ring, flush,
+/// and join the writer. Idempotent; a no-op when nothing is attached.
+pub fn detach() {
+    let w = WRITER.lock().unwrap().take();
+    if let Some(w) = w {
+        JOURNAL_ON.store(false, Ordering::SeqCst);
+        w.stop.store(true, Ordering::SeqCst);
+        let _ = w.handle.join();
+        super::sink_detached();
+    }
+}
+
+fn drain_into(out: &mut impl Write) -> std::io::Result<()> {
+    let (lines, dropped) = {
+        let mut ring = RING.lock().unwrap();
+        let lines: Vec<String> = ring.lines.drain(..).collect();
+        (lines, std::mem::take(&mut ring.dropped))
+    };
+    for line in &lines {
+        out.write_all(line.as_bytes())?;
+        out.write_all(b"\n")?;
+    }
+    if dropped > 0 {
+        writeln!(out, "{{\"v\":1,\"t\":\"lost\",\"n\":{dropped}}}")?;
+    }
+    Ok(())
+}
+
+fn push_line(line: String) {
+    if !RING.lock().unwrap().push(line) {
+        super::JOURNAL_DROPPED.inc();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Record emission
+// ---------------------------------------------------------------------
+
+fn base(t: &str) -> BTreeMap<String, Json> {
+    let mut m = BTreeMap::new();
+    m.insert("v".to_string(), Json::Num(1.0));
+    m.insert("t".to_string(), Json::Str(t.to_string()));
+    m
+}
+
+fn put(m: &mut BTreeMap<String, Json>, k: &str, v: f64) {
+    m.insert(k.to_string(), Json::Num(v));
+}
+
+fn put_ns(m: &mut BTreeMap<String, Json>, k: &str, d: Duration) {
+    put(m, k, d.as_nanos() as f64);
+}
+
+fn emit(m: BTreeMap<String, Json>) {
+    push_line(Json::Obj(m).to_string());
+}
+
+/// Span handle emitting one round's journal records. Every method is a
+/// no-op while no journal is attached, so callers hold spans
+/// unconditionally.
+pub struct RoundSpan {
+    round: u32,
+}
+
+impl RoundSpan {
+    /// Open a round: emits `round_begin` with the topology width
+    /// (worker shards, edge count, or 0 for a hand-built loop).
+    pub fn begin(round: u32, shards: usize) -> RoundSpan {
+        let span = RoundSpan { round };
+        if on() {
+            let mut m = span.rec("round_begin");
+            put(&mut m, "shards", shards as f64);
+            emit(m);
+        }
+        span
+    }
+
+    /// A handle for an already-open round (emits nothing).
+    pub fn at(round: u32) -> RoundSpan {
+        RoundSpan { round }
+    }
+
+    fn rec(&self, t: &str) -> BTreeMap<String, Json> {
+        let mut m = base(t);
+        put(&mut m, "round", self.round as f64);
+        m
+    }
+
+    /// One successfully served client update.
+    pub fn client_served(
+        &self,
+        shard: usize,
+        client: u64,
+        bytes: usize,
+        raw: usize,
+        decode: Duration,
+        agg: Duration,
+        loss: f64,
+    ) {
+        if !on() {
+            return;
+        }
+        let mut m = self.rec("client");
+        m.insert("ev".to_string(), Json::Str("served".to_string()));
+        put(&mut m, "shard", shard as f64);
+        put(&mut m, "client", client as f64);
+        put(&mut m, "bytes", bytes as f64);
+        put(&mut m, "raw", raw as f64);
+        put_ns(&mut m, "decode_ns", decode);
+        put_ns(&mut m, "agg_ns", agg);
+        put(&mut m, "loss", loss);
+        emit(m);
+    }
+
+    /// A drop or resync on channel index `ch` (`ev` ∈ "drop"/"resync";
+    /// these paths have no trusted client id on the wire).
+    pub fn client_event(&self, shard: usize, ch: usize, ev: &str) {
+        if !on() {
+            return;
+        }
+        let mut m = self.rec("client");
+        m.insert("ev".to_string(), Json::Str(ev.to_string()));
+        put(&mut m, "shard", shard as f64);
+        put(&mut m, "ch", ch as f64);
+        emit(m);
+    }
+
+    /// Per-shard tallies — **must** be emitted from the single-threaded
+    /// merge path in merge order; [`fold_journal`]'s exactness argument
+    /// depends on reproducing the runner's accumulation order.
+    pub fn shard(&self, shard: usize, st: &ShardStats) {
+        if !on() {
+            return;
+        }
+        let mut m = self.rec("shard");
+        put(&mut m, "shard", shard as f64);
+        put(&mut m, "served", st.served as f64);
+        put(&mut m, "dropped", st.dropped as f64);
+        put(&mut m, "resyncs", st.resyncs as f64);
+        put(&mut m, "payload_bytes", st.payload_bytes as f64);
+        put(&mut m, "raw_bytes", st.raw_bytes as f64);
+        put(&mut m, "loss_sum", st.loss_sum);
+        put_ns(&mut m, "decode_ns", st.decode_time);
+        put_ns(&mut m, "agg_ns", st.agg_time);
+        emit(m);
+    }
+
+    /// An edge aggregator whose whole subtree dropped this round.
+    pub fn edge_drop(&self, edge: usize) {
+        if !on() {
+            return;
+        }
+        let mut m = self.rec("edge_drop");
+        put(&mut m, "edge", edge as f64);
+        emit(m);
+    }
+
+    pub fn merge(&self, merge: Duration) {
+        if !on() {
+            return;
+        }
+        let mut m = self.rec("merge");
+        put_ns(&mut m, "merge_ns", merge);
+        emit(m);
+    }
+
+    pub fn finish(&self, finish: Duration, binsum: usize, exact: usize, dequant: usize) {
+        if !on() {
+            return;
+        }
+        let mut m = self.rec("finish");
+        put_ns(&mut m, "finish_ns", finish);
+        put(&mut m, "binsum", binsum as f64);
+        put(&mut m, "exact", exact as f64);
+        put(&mut m, "dequant", dequant as f64);
+        emit(m);
+    }
+
+    pub fn store(&self, clients: usize, bytes: usize) {
+        if !on() {
+            return;
+        }
+        let mut m = self.rec("store");
+        put(&mut m, "clients", clients as f64);
+        put(&mut m, "bytes", bytes as f64);
+        emit(m);
+    }
+
+    pub fn downlink(
+        &self,
+        bytes: usize,
+        raw: usize,
+        full_syncs: usize,
+        codec: Duration,
+        transmit: Duration,
+    ) {
+        if !on() {
+            return;
+        }
+        let mut m = self.rec("downlink");
+        put(&mut m, "bytes", bytes as f64);
+        put(&mut m, "raw", raw as f64);
+        put(&mut m, "full_syncs", full_syncs as f64);
+        put_ns(&mut m, "codec_ns", codec);
+        put_ns(&mut m, "transmit_ns", transmit);
+        emit(m);
+    }
+
+    /// Client-side simulation costs (local runner only).
+    pub fn sim(&self, comp: Duration, transmit: Duration) {
+        if !on() {
+            return;
+        }
+        let mut m = self.rec("sim");
+        put_ns(&mut m, "comp_ns", comp);
+        put_ns(&mut m, "transmit_ns", transmit);
+        emit(m);
+    }
+
+    pub fn participants(&self, n: usize) {
+        if !on() {
+            return;
+        }
+        let mut m = self.rec("participants");
+        put(&mut m, "n", n as f64);
+        emit(m);
+    }
+
+    pub fn eval(&self, loss: f32, acc: f32) {
+        if !on() {
+            return;
+        }
+        let mut m = self.rec("eval");
+        put(&mut m, "loss", loss as f64);
+        put(&mut m, "acc", acc as f64);
+        emit(m);
+    }
+
+    /// Close the round with the runner's own `RoundStats` — the record
+    /// the fold checks itself against.
+    pub fn end(&self, stats: &RoundStats) {
+        if !on() {
+            return;
+        }
+        emit(stats_json(stats));
+    }
+}
+
+/// Per-layer decode-route detail (`t:"layer"`), emitted only when both
+/// a journal is attached and `FEDGEC_JOURNAL_DETAIL=1` — at fleet scale
+/// this is the highest-volume record type. Ignored by the fold.
+pub fn layer_detail(client: u64, layer: &str, coder: &str, pred: &str) {
+    if !on() || !detail_enabled() {
+        return;
+    }
+    let mut m = base("layer");
+    put(&mut m, "client", client as f64);
+    m.insert("layer".to_string(), Json::Str(layer.to_string()));
+    m.insert("coder".to_string(), Json::Str(coder.to_string()));
+    m.insert("pred".to_string(), Json::Str(pred.to_string()));
+    emit(m);
+}
+
+/// Emit one `layer` record per layer of a decoded payload's
+/// [`CodecReport`](crate::compress::frame::CodecReport). Same gating as
+/// [`layer_detail`]; the early return skips the iteration entirely.
+pub fn report_detail(client: u64, report: &crate::compress::frame::CodecReport) {
+    if !on() || !detail_enabled() {
+        return;
+    }
+    for l in &report.layers {
+        layer_detail(client, &l.name, &l.entropy_coder, &l.pred_tag);
+    }
+}
+
+fn detail_enabled() -> bool {
+    static DETAIL: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *DETAIL.get_or_init(|| std::env::var("FEDGEC_JOURNAL_DETAIL").as_deref() == Ok("1"))
+}
+
+// ---------------------------------------------------------------------
+// round_end serialization + the fold
+// ---------------------------------------------------------------------
+
+fn stats_json(s: &RoundStats) -> BTreeMap<String, Json> {
+    let mut m = base("round_end");
+    put(&mut m, "round", s.round as f64);
+    put(&mut m, "mean_loss", s.mean_loss);
+    put(&mut m, "payload_bytes", s.payload_bytes as f64);
+    put(&mut m, "raw_bytes", s.raw_bytes as f64);
+    put_ns(&mut m, "comp_ns", s.comp_time);
+    put_ns(&mut m, "decomp_ns", s.decomp_time);
+    put_ns(&mut m, "transmit_ns", s.transmit_time);
+    put(&mut m, "downlink_bytes", s.downlink_bytes as f64);
+    put(&mut m, "downlink_raw_bytes", s.downlink_raw_bytes as f64);
+    put_ns(&mut m, "down_transmit_ns", s.down_transmit_time);
+    put_ns(&mut m, "down_codec_ns", s.down_codec_time);
+    put(&mut m, "full_syncs", s.full_syncs as f64);
+    if let Some((loss, acc)) = s.eval {
+        put(&mut m, "eval_loss", loss as f64);
+        put(&mut m, "eval_acc", acc as f64);
+    }
+    put(&mut m, "participants", s.participants as f64);
+    put(&mut m, "resyncs", s.resyncs as f64);
+    put(&mut m, "store_clients", s.store_clients as f64);
+    put(&mut m, "store_bytes", s.store_bytes as f64);
+    put_ns(&mut m, "server_decode_ns", s.server_decode_time);
+    put_ns(&mut m, "agg_ns", s.agg_time);
+    put(&mut m, "binsum_layers", s.binsum_layers as f64);
+    put(&mut m, "exact_layers", s.exact_layers as f64);
+    put(&mut m, "dequant_passes", s.dequant_passes as f64);
+    put(&mut m, "dropped", s.dropped as f64);
+    put(&mut m, "shards", s.shards as f64);
+    put_ns(&mut m, "merge_ns", s.merge_time);
+    m
+}
+
+fn num(v: &Json, k: &str) -> Result<f64> {
+    v.get(k).and_then(Json::as_f64).ok_or_else(|| anyhow::anyhow!("journal: missing key {k:?}"))
+}
+
+fn us(v: &Json, k: &str) -> Result<usize> {
+    Ok(num(v, k)? as usize)
+}
+
+fn dur(v: &Json, k: &str) -> Result<Duration> {
+    Ok(Duration::from_nanos(num(v, k)? as u64))
+}
+
+/// Parse a `round_end` record back into the exact `RoundStats` it was
+/// rendered from (numbers round-trip through [`Json`] losslessly below
+/// 2^53). The exhaustive literal means a new `RoundStats` field fails
+/// compilation here until the journal schema learns it.
+fn stats_from_json(v: &Json) -> Result<RoundStats> {
+    let eval = match (v.get("eval_loss"), v.get("eval_acc")) {
+        (Some(l), Some(a)) => Some((
+            l.as_f64().ok_or_else(|| anyhow::anyhow!("journal: bad eval_loss"))? as f32,
+            a.as_f64().ok_or_else(|| anyhow::anyhow!("journal: bad eval_acc"))? as f32,
+        )),
+        _ => None,
+    };
+    Ok(RoundStats {
+        round: us(v, "round")? as u32,
+        mean_loss: num(v, "mean_loss")?,
+        payload_bytes: us(v, "payload_bytes")?,
+        raw_bytes: us(v, "raw_bytes")?,
+        comp_time: dur(v, "comp_ns")?,
+        decomp_time: dur(v, "decomp_ns")?,
+        transmit_time: dur(v, "transmit_ns")?,
+        downlink_bytes: us(v, "downlink_bytes")?,
+        downlink_raw_bytes: us(v, "downlink_raw_bytes")?,
+        down_transmit_time: dur(v, "down_transmit_ns")?,
+        down_codec_time: dur(v, "down_codec_ns")?,
+        full_syncs: us(v, "full_syncs")?,
+        eval,
+        participants: us(v, "participants")?,
+        resyncs: us(v, "resyncs")?,
+        store_clients: us(v, "store_clients")?,
+        store_bytes: us(v, "store_bytes")?,
+        server_decode_time: dur(v, "server_decode_ns")?,
+        agg_time: dur(v, "agg_ns")?,
+        binsum_layers: us(v, "binsum_layers")?,
+        exact_layers: us(v, "exact_layers")?,
+        dequant_passes: us(v, "dequant_passes")?,
+        dropped: us(v, "dropped")?,
+        shards: us(v, "shards")?,
+        merge_time: dur(v, "merge_ns")?,
+    })
+}
+
+/// One folded round: the totals reconstructed from the event records,
+/// plus the runner's own `round_end` record when present.
+#[derive(Debug)]
+pub struct FoldedRound {
+    pub round: u32,
+    pub folded: RoundStats,
+    pub reported: Option<RoundStats>,
+}
+
+/// Reconstruct per-round [`RoundStats`] from a journal's event records
+/// (everything except `round_end`, which is kept aside as the runner's
+/// self-report for comparison). `client`, `layer`, and `lost` records
+/// are detail and do not participate in the fold.
+pub fn fold_journal(text: &str) -> Result<Vec<FoldedRound>> {
+    struct Fold {
+        stats: RoundStats,
+        served: usize,
+        reported: Option<RoundStats>,
+    }
+    let mut rounds: Vec<Fold> = Vec::new();
+    let mut index: BTreeMap<u32, usize> = BTreeMap::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let v = Json::parse(line)
+            .map_err(|e| anyhow::anyhow!("journal line {}: {e}", lineno + 1))?;
+        let t = v.get("t").and_then(Json::as_str).unwrap_or("").to_string();
+        if matches!(t.as_str(), "lost" | "client" | "layer") {
+            continue;
+        }
+        let round = us(&v, "round")? as u32;
+        let slot = match index.get(&round) {
+            Some(&i) => i,
+            None => {
+                rounds.push(Fold {
+                    stats: RoundStats { round, ..RoundStats::default() },
+                    served: 0,
+                    reported: None,
+                });
+                index.insert(round, rounds.len() - 1);
+                rounds.len() - 1
+            }
+        };
+        let fold = &mut rounds[slot];
+        match t.as_str() {
+            "round_begin" => fold.stats.shards = us(&v, "shards")?,
+            "shard" => {
+                let sh = ShardStats {
+                    served: us(&v, "served")?,
+                    dropped: us(&v, "dropped")?,
+                    resyncs: us(&v, "resyncs")?,
+                    payload_bytes: us(&v, "payload_bytes")?,
+                    raw_bytes: us(&v, "raw_bytes")?,
+                    loss_sum: num(&v, "loss_sum")?,
+                    decode_time: dur(&v, "decode_ns")?,
+                    agg_time: dur(&v, "agg_ns")?,
+                };
+                fold.served += sh.served;
+                sh.fold_into(&mut fold.stats);
+            }
+            "edge_drop" => fold.stats.dropped += 1,
+            "merge" => fold.stats.merge_time = dur(&v, "merge_ns")?,
+            "finish" => {
+                fold.stats.agg_time += dur(&v, "finish_ns")?;
+                fold.stats.binsum_layers = us(&v, "binsum")?;
+                fold.stats.exact_layers = us(&v, "exact")?;
+                fold.stats.dequant_passes = us(&v, "dequant")?;
+            }
+            "store" => {
+                fold.stats.store_clients = us(&v, "clients")?;
+                fold.stats.store_bytes = us(&v, "bytes")?;
+            }
+            "downlink" => {
+                fold.stats.downlink_bytes += us(&v, "bytes")?;
+                fold.stats.downlink_raw_bytes += us(&v, "raw")?;
+                fold.stats.full_syncs += us(&v, "full_syncs")?;
+                fold.stats.down_codec_time += dur(&v, "codec_ns")?;
+                fold.stats.down_transmit_time += dur(&v, "transmit_ns")?;
+            }
+            "sim" => {
+                fold.stats.comp_time += dur(&v, "comp_ns")?;
+                fold.stats.transmit_time += dur(&v, "transmit_ns")?;
+            }
+            "participants" => fold.stats.participants = us(&v, "n")?,
+            "eval" => {
+                fold.stats.eval = Some((num(&v, "loss")? as f32, num(&v, "acc")? as f32));
+            }
+            "round_end" => fold.reported = Some(stats_from_json(&v)?),
+            other => {
+                anyhow::bail!("journal line {}: unknown record type {other:?}", lineno + 1)
+            }
+        }
+    }
+    Ok(rounds
+        .into_iter()
+        .map(|mut f| {
+            // Same final division the runners perform: the loss sum
+            // accumulated in merge order over the round's total served.
+            f.stats.mean_loss /= f.served.max(1) as f64;
+            FoldedRound { round: f.stats.round, folded: f.stats, reported: f.reported }
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_drops_incoming_on_overflow_and_counts() {
+        let mut ring = Ring::new();
+        for i in 0..RING_CAP {
+            assert!(ring.push(format!("line {i}")));
+        }
+        assert!(!ring.push("overflow".to_string()));
+        assert!(!ring.push("overflow".to_string()));
+        assert_eq!(ring.dropped, 2);
+        assert_eq!(ring.lines.len(), RING_CAP);
+        // The buffered prefix is intact: the newest records were shed.
+        let want = format!("line {}", RING_CAP - 1);
+        assert_eq!(ring.lines.back(), Some(&want));
+    }
+
+    #[test]
+    fn round_end_roundtrips_exactly() {
+        let stats = RoundStats {
+            round: 7,
+            mean_loss: 0.123456789012345,
+            payload_bytes: 123_456,
+            raw_bytes: 2_000_000,
+            comp_time: Duration::from_nanos(123_456_789),
+            decomp_time: Duration::from_nanos(987_654_321),
+            transmit_time: Duration::from_nanos(1),
+            downlink_bytes: 77,
+            downlink_raw_bytes: 770,
+            down_transmit_time: Duration::from_nanos(55),
+            down_codec_time: Duration::from_nanos(66),
+            full_syncs: 3,
+            eval: Some((0.25f32, 0.875f32)),
+            participants: 9,
+            resyncs: 2,
+            store_clients: 4,
+            store_bytes: 4096,
+            server_decode_time: Duration::from_nanos(424_242),
+            agg_time: Duration::from_nanos(313_131),
+            binsum_layers: 5,
+            exact_layers: 1,
+            dequant_passes: 5,
+            dropped: 1,
+            shards: 4,
+            merge_time: Duration::from_nanos(999),
+        };
+        let line = Json::Obj(stats_json(&stats)).to_string();
+        let parsed = Json::parse(&line).unwrap();
+        let back = stats_from_json(&parsed).unwrap();
+        assert_eq!(back, stats);
+        // eval absence round-trips too.
+        let no_eval = RoundStats { eval: None, ..stats };
+        let line = Json::Obj(stats_json(&no_eval)).to_string();
+        let back = stats_from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back, no_eval);
+    }
+
+    #[test]
+    fn fold_reconstructs_a_handwritten_round() {
+        // Two shards in merge order + downlink + finish + participants:
+        // the fold must reproduce the runner's arithmetic.
+        let text = r#"
+            {"v":1,"t":"round_begin","round":3,"shards":2}
+            {"v":1,"t":"downlink","round":3,"bytes":100,"raw":400,"full_syncs":1,"codec_ns":50,"transmit_ns":60}
+            {"v":1,"t":"client","round":3,"ev":"served","shard":0,"client":1,"bytes":10,"raw":40,"decode_ns":5,"agg_ns":6,"loss":0.5}
+            {"v":1,"t":"shard","round":3,"shard":0,"served":2,"dropped":1,"resyncs":1,"payload_bytes":20,"raw_bytes":80,"loss_sum":1.25,"decode_ns":10,"agg_ns":12}
+            {"v":1,"t":"shard","round":3,"shard":1,"served":2,"dropped":0,"resyncs":0,"payload_bytes":22,"raw_bytes":80,"loss_sum":0.75,"decode_ns":11,"agg_ns":13}
+            {"v":1,"t":"merge","round":3,"merge_ns":777}
+            {"v":1,"t":"store","round":3,"clients":4,"bytes":2048}
+            {"v":1,"t":"finish","round":3,"finish_ns":1000,"binsum":2,"exact":1,"dequant":2}
+            {"v":1,"t":"participants","round":3,"n":5}
+            {"v":1,"t":"eval","round":3,"loss":0.5,"acc":0.75}
+            {"v":1,"t":"lost","n":3}
+        "#;
+        let folded = fold_journal(text).unwrap();
+        assert_eq!(folded.len(), 1);
+        let s = &folded[0].folded;
+        assert_eq!(s.round, 3);
+        assert_eq!(s.shards, 2);
+        assert_eq!(s.dropped, 1);
+        assert_eq!(s.resyncs, 1);
+        assert_eq!(s.payload_bytes, 42);
+        assert_eq!(s.raw_bytes, 160);
+        assert_eq!(s.mean_loss, 2.0 / 4.0);
+        assert_eq!(s.decomp_time, Duration::from_nanos(21));
+        assert_eq!(s.server_decode_time, Duration::from_nanos(21));
+        assert_eq!(s.agg_time, Duration::from_nanos(25 + 1000));
+        assert_eq!(s.merge_time, Duration::from_nanos(777));
+        assert_eq!(s.downlink_bytes, 100);
+        assert_eq!(s.downlink_raw_bytes, 400);
+        assert_eq!(s.full_syncs, 1);
+        assert_eq!(s.down_codec_time, Duration::from_nanos(50));
+        assert_eq!(s.down_transmit_time, Duration::from_nanos(60));
+        assert_eq!(s.store_clients, 4);
+        assert_eq!(s.store_bytes, 2048);
+        assert_eq!((s.binsum_layers, s.exact_layers, s.dequant_passes), (2, 1, 2));
+        assert_eq!(s.participants, 5);
+        assert_eq!(s.eval, Some((0.5, 0.75)));
+        assert!(folded[0].reported.is_none());
+    }
+
+    #[test]
+    fn fold_rejects_garbage() {
+        assert!(fold_journal("not json").is_err());
+        assert!(fold_journal(r#"{"v":1,"t":"mystery","round":0}"#).is_err());
+        // Missing keys in a typed record are an error, not a default.
+        assert!(fold_journal(r#"{"v":1,"t":"shard","round":0}"#).is_err());
+    }
+}

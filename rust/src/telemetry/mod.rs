@@ -1,0 +1,383 @@
+//! Telemetry: low-overhead metrics registry, round/span tracing
+//! journal, and the Prometheus exposition endpoint (DESIGN.md §14).
+//!
+//! Three layers, strictly ordered by cost:
+//!
+//! 1. **Counters** ([`registry`]) — always-on relaxed atomics at
+//!    frame/layer/round granularity (never per element). The
+//!    `telemetry-off` cargo feature swaps in zero-sized no-op twins.
+//! 2. **Journal** ([`journal`]) — per-round JSONL records pushed into a
+//!    bounded ring and flushed by a background writer; callers format
+//!    nothing unless a journal file is attached.
+//! 3. **Exposition** ([`expose`]) — `GET /metrics` on a tiny blocking
+//!    HTTP listener reads the counters on demand.
+//!
+//! Overhead policy: byte/count tallies are unconditional (their cost is
+//! one relaxed `fetch_add` per layer or frame); any *new* `Instant`
+//! timing introduced for telemetry is gated on [`active`], which is
+//! true only while a sink (journal or metrics listener) is attached or
+//! `FEDGEC_TELEMETRY=1` forces it.
+
+pub mod expose;
+pub mod journal;
+pub mod registry;
+pub mod tail;
+
+pub use expose::MetricsServer;
+pub use registry::{Counter, Gauge, Histogram, MetricDef, MetricKind, Unit};
+
+use crate::fl::round::ShardStats;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Attached-sink count: the journal writer and each metrics listener
+/// register here so [`active`] can gate optional instrumentation.
+static ACTIVE_SINKS: AtomicUsize = AtomicUsize::new(0);
+
+#[cfg(not(feature = "telemetry-off"))]
+static ENV_FORCE: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+
+pub(crate) fn sink_attached() {
+    ACTIVE_SINKS.fetch_add(1, Ordering::SeqCst);
+}
+
+pub(crate) fn sink_detached() {
+    ACTIVE_SINKS.fetch_sub(1, Ordering::SeqCst);
+}
+
+/// True while any telemetry sink is attached (or `FEDGEC_TELEMETRY=1`).
+/// Gates instrumentation whose *measurement* has a cost — extra
+/// `Instant::now` pairs — as opposed to the always-on counters.
+#[cfg(not(feature = "telemetry-off"))]
+#[inline]
+pub fn active() -> bool {
+    ACTIVE_SINKS.load(Ordering::Relaxed) > 0
+        || *ENV_FORCE.get_or_init(|| std::env::var("FEDGEC_TELEMETRY").as_deref() == Ok("1"))
+}
+
+/// Compiled out: never active under `telemetry-off`.
+#[cfg(feature = "telemetry-off")]
+#[inline]
+pub fn active() -> bool {
+    false
+}
+
+// ---------------------------------------------------------------------
+// Metric statics. Grouped by subsystem; all are in REGISTRY below.
+// ---------------------------------------------------------------------
+
+pub static ROUNDS: Counter = Counter::new();
+pub static CLIENTS_SERVED: Counter = Counter::new();
+pub static CLIENTS_DROPPED: Counter = Counter::new();
+pub static RESYNCS: Counter = Counter::new();
+pub static UPLINK_BYTES: Counter = Counter::new();
+pub static UPLINK_RAW_BYTES: Counter = Counter::new();
+pub static DOWNLINK_BYTES: Counter = Counter::new();
+pub static DOWNLINK_RAW_BYTES: Counter = Counter::new();
+
+pub static DECODE_NS: Counter = Counter::new();
+pub static AGG_NS: Counter = Counter::new();
+pub static MERGE_NS: Counter = Counter::new();
+pub static FINISH_NS: Counter = Counter::new();
+pub static ENCODE_NS: Counter = Counter::new();
+
+pub static STORE_HITS: Counter = Counter::new();
+pub static STORE_MISSES: Counter = Counter::new();
+pub static STORE_EVICTIONS: Counter = Counter::new();
+pub static STORE_SPILL_LOADS: Counter = Counter::new();
+pub static STORE_SPILL_BYTES: Counter = Counter::new();
+pub static STORE_RESIDENT_BYTES: Gauge = Gauge::new();
+pub static STORE_RESIDENT_CLIENTS: Gauge = Gauge::new();
+
+pub static DOWNLINK_FULL_SYNCS: Counter = Counter::new();
+pub static DOWNLINK_RESETS: Counter = Counter::new();
+pub static DOWNLINK_CODEC_NS: Counter = Counter::new();
+
+pub static ENTROPY_RAW_BYTES: Counter = Counter::new();
+pub static ENTROPY_HUFF_BYTES: Counter = Counter::new();
+pub static ENTROPY_RANS_BYTES: Counter = Counter::new();
+pub static ENTROPY_RANS4_BYTES: Counter = Counter::new();
+pub static ENTROPY_RANS8_BYTES: Counter = Counter::new();
+
+pub static TX_BYTES_INPROC: Counter = Counter::new();
+pub static RX_BYTES_INPROC: Counter = Counter::new();
+pub static TX_BYTES_TCP: Counter = Counter::new();
+pub static RX_BYTES_TCP: Counter = Counter::new();
+pub static THROTTLE_WAIT_NS: Counter = Counter::new();
+
+static EDGE_PUSH_BOUNDS: [f64; 8] = [0.001, 0.005, 0.01, 0.05, 0.1, 0.5, 1.0, 5.0];
+pub static EDGE_PUSH_LATENCY: Histogram = Histogram::new(&EDGE_PUSH_BOUNDS);
+pub static EDGE_SUBTREE_DROPS: Counter = Counter::new();
+
+pub static JOURNAL_DROPPED: Counter = Counter::new();
+
+/// Exposition registry: every metric the `/metrics` endpoint renders.
+/// Same-name entries (label variants) are adjacent — the renderer
+/// relies on it; `tests/telemetry.rs` enforces it.
+pub static REGISTRY: &[MetricDef] = &[
+    MetricDef {
+        name: "fedgec_rounds_total",
+        labels: "",
+        help: "Aggregation rounds finished",
+        unit: Unit::Plain,
+        kind: MetricKind::Counter(&ROUNDS),
+    },
+    MetricDef {
+        name: "fedgec_clients_served_total",
+        labels: "",
+        help: "Client updates absorbed into an aggregate",
+        unit: Unit::Plain,
+        kind: MetricKind::Counter(&CLIENTS_SERVED),
+    },
+    MetricDef {
+        name: "fedgec_clients_dropped_total",
+        labels: "",
+        help: "Client contributions dropped whole",
+        unit: Unit::Plain,
+        kind: MetricKind::Counter(&CLIENTS_DROPPED),
+    },
+    MetricDef {
+        name: "fedgec_resyncs_total",
+        labels: "",
+        help: "State resets ordered by the epoch handshake",
+        unit: Unit::Plain,
+        kind: MetricKind::Counter(&RESYNCS),
+    },
+    MetricDef {
+        name: "fedgec_uplink_bytes_total",
+        labels: "",
+        help: "Compressed client payload bytes received",
+        unit: Unit::Plain,
+        kind: MetricKind::Counter(&UPLINK_BYTES),
+    },
+    MetricDef {
+        name: "fedgec_uplink_raw_bytes_total",
+        labels: "",
+        help: "Uncompressed gradient bytes the payloads stand for",
+        unit: Unit::Plain,
+        kind: MetricKind::Counter(&UPLINK_RAW_BYTES),
+    },
+    MetricDef {
+        name: "fedgec_downlink_bytes_total",
+        labels: "",
+        help: "Broadcast bytes sent, summed over recipients",
+        unit: Unit::Plain,
+        kind: MetricKind::Counter(&DOWNLINK_BYTES),
+    },
+    MetricDef {
+        name: "fedgec_downlink_raw_bytes_total",
+        labels: "",
+        help: "Raw f32 broadcast equivalent, summed over recipients",
+        unit: Unit::Plain,
+        kind: MetricKind::Counter(&DOWNLINK_RAW_BYTES),
+    },
+    MetricDef {
+        name: "fedgec_decode_seconds_total",
+        labels: "",
+        help: "Server payload decode CPU",
+        unit: Unit::NanosToSeconds,
+        kind: MetricKind::Counter(&DECODE_NS),
+    },
+    MetricDef {
+        name: "fedgec_agg_seconds_total",
+        labels: "",
+        help: "Aggregator accumulate CPU",
+        unit: Unit::NanosToSeconds,
+        kind: MetricKind::Counter(&AGG_NS),
+    },
+    MetricDef {
+        name: "fedgec_merge_seconds_total",
+        labels: "",
+        help: "Partial-aggregate tree-merge wall clock",
+        unit: Unit::NanosToSeconds,
+        kind: MetricKind::Counter(&MERGE_NS),
+    },
+    MetricDef {
+        name: "fedgec_finish_seconds_total",
+        labels: "",
+        help: "finish_round dequantize-and-divide plus model apply",
+        unit: Unit::NanosToSeconds,
+        kind: MetricKind::Counter(&FINISH_NS),
+    },
+    MetricDef {
+        name: "fedgec_encode_seconds_total",
+        labels: "",
+        help: "Uplink layer-encode CPU (gated: counted while a sink is attached)",
+        unit: Unit::NanosToSeconds,
+        kind: MetricKind::Counter(&ENCODE_NS),
+    },
+    MetricDef {
+        name: "fedgec_store_hits_total",
+        labels: "",
+        help: "Hot-tier state-store checkouts that found the client",
+        unit: Unit::Plain,
+        kind: MetricKind::Counter(&STORE_HITS),
+    },
+    MetricDef {
+        name: "fedgec_store_misses_total",
+        labels: "",
+        help: "Hot-tier state-store checkouts that missed",
+        unit: Unit::Plain,
+        kind: MetricKind::Counter(&STORE_MISSES),
+    },
+    MetricDef {
+        name: "fedgec_store_evictions_total",
+        labels: "",
+        help: "States evicted from the hot tier by the budget",
+        unit: Unit::Plain,
+        kind: MetricKind::Counter(&STORE_EVICTIONS),
+    },
+    MetricDef {
+        name: "fedgec_store_spill_loads_total",
+        labels: "",
+        help: "States reloaded from the disk-spill tier",
+        unit: Unit::Plain,
+        kind: MetricKind::Counter(&STORE_SPILL_LOADS),
+    },
+    MetricDef {
+        name: "fedgec_store_spill_bytes_total",
+        labels: "",
+        help: "Bytes written to the disk-spill tier",
+        unit: Unit::Plain,
+        kind: MetricKind::Counter(&STORE_SPILL_BYTES),
+    },
+    MetricDef {
+        name: "fedgec_store_resident_bytes",
+        labels: "",
+        help: "State bytes held across both store tiers after the last round",
+        unit: Unit::Plain,
+        kind: MetricKind::Gauge(&STORE_RESIDENT_BYTES),
+    },
+    MetricDef {
+        name: "fedgec_store_resident_clients",
+        labels: "",
+        help: "Client states held across both store tiers after the last round",
+        unit: Unit::Plain,
+        kind: MetricKind::Gauge(&STORE_RESIDENT_CLIENTS),
+    },
+    MetricDef {
+        name: "fedgec_downlink_full_syncs_total",
+        labels: "",
+        help: "Cold clients bootstrapped via FullSync",
+        unit: Unit::Plain,
+        kind: MetricKind::Counter(&DOWNLINK_FULL_SYNCS),
+    },
+    MetricDef {
+        name: "fedgec_downlink_resets_total",
+        labels: "",
+        help: "Downlink delta-stream resets forced by cold joins",
+        unit: Unit::Plain,
+        kind: MetricKind::Counter(&DOWNLINK_RESETS),
+    },
+    MetricDef {
+        name: "fedgec_downlink_codec_seconds_total",
+        labels: "",
+        help: "Downlink encode-once plus mirror-decode CPU",
+        unit: Unit::NanosToSeconds,
+        kind: MetricKind::Counter(&DOWNLINK_CODEC_NS),
+    },
+    MetricDef {
+        name: "fedgec_entropy_encoded_bytes_total",
+        labels: "coder=\"raw\"",
+        help: "Entropy-stage output bytes by winning coder",
+        unit: Unit::Plain,
+        kind: MetricKind::Counter(&ENTROPY_RAW_BYTES),
+    },
+    MetricDef {
+        name: "fedgec_entropy_encoded_bytes_total",
+        labels: "coder=\"huff\"",
+        help: "Entropy-stage output bytes by winning coder",
+        unit: Unit::Plain,
+        kind: MetricKind::Counter(&ENTROPY_HUFF_BYTES),
+    },
+    MetricDef {
+        name: "fedgec_entropy_encoded_bytes_total",
+        labels: "coder=\"rans\"",
+        help: "Entropy-stage output bytes by winning coder",
+        unit: Unit::Plain,
+        kind: MetricKind::Counter(&ENTROPY_RANS_BYTES),
+    },
+    MetricDef {
+        name: "fedgec_entropy_encoded_bytes_total",
+        labels: "coder=\"rans4\"",
+        help: "Entropy-stage output bytes by winning coder",
+        unit: Unit::Plain,
+        kind: MetricKind::Counter(&ENTROPY_RANS4_BYTES),
+    },
+    MetricDef {
+        name: "fedgec_entropy_encoded_bytes_total",
+        labels: "coder=\"rans8\"",
+        help: "Entropy-stage output bytes by winning coder",
+        unit: Unit::Plain,
+        kind: MetricKind::Counter(&ENTROPY_RANS8_BYTES),
+    },
+    MetricDef {
+        name: "fedgec_transport_tx_bytes_total",
+        labels: "transport=\"inproc\"",
+        help: "Frame bytes pushed into a channel",
+        unit: Unit::Plain,
+        kind: MetricKind::Counter(&TX_BYTES_INPROC),
+    },
+    MetricDef {
+        name: "fedgec_transport_tx_bytes_total",
+        labels: "transport=\"tcp\"",
+        help: "Frame bytes pushed into a channel",
+        unit: Unit::Plain,
+        kind: MetricKind::Counter(&TX_BYTES_TCP),
+    },
+    MetricDef {
+        name: "fedgec_transport_rx_bytes_total",
+        labels: "transport=\"inproc\"",
+        help: "Frame bytes received from a channel",
+        unit: Unit::Plain,
+        kind: MetricKind::Counter(&RX_BYTES_INPROC),
+    },
+    MetricDef {
+        name: "fedgec_transport_rx_bytes_total",
+        labels: "transport=\"tcp\"",
+        help: "Frame bytes received from a channel",
+        unit: Unit::Plain,
+        kind: MetricKind::Counter(&RX_BYTES_TCP),
+    },
+    MetricDef {
+        name: "fedgec_throttle_wait_seconds_total",
+        labels: "",
+        help: "Time senders slept in the bandwidth throttler",
+        unit: Unit::NanosToSeconds,
+        kind: MetricKind::Counter(&THROTTLE_WAIT_NS),
+    },
+    MetricDef {
+        name: "fedgec_edge_push_seconds",
+        labels: "",
+        help: "Root-side wait for one edge AggPush",
+        unit: Unit::Plain,
+        kind: MetricKind::Histogram(&EDGE_PUSH_LATENCY),
+    },
+    MetricDef {
+        name: "fedgec_edge_subtree_drops_total",
+        labels: "",
+        help: "Edge aggregators whose whole subtree dropped for a round",
+        unit: Unit::Plain,
+        kind: MetricKind::Counter(&EDGE_SUBTREE_DROPS),
+    },
+    MetricDef {
+        name: "fedgec_journal_dropped_total",
+        labels: "",
+        help: "Journal records lost to ring-buffer overflow",
+        unit: Unit::Plain,
+        kind: MetricKind::Counter(&JOURNAL_DROPPED),
+    },
+];
+
+/// Mirror one shard's round tallies into the global counters — called
+/// wherever client updates are actually served (`DecodeCore::
+/// serve_round`, the direct-ingest sharded path, the local simulation
+/// loop), never where already-counted tallies are merged again.
+pub fn record_shard(st: &ShardStats) {
+    CLIENTS_SERVED.add(st.served as u64);
+    CLIENTS_DROPPED.add(st.dropped as u64);
+    RESYNCS.add(st.resyncs as u64);
+    UPLINK_BYTES.add(st.payload_bytes as u64);
+    UPLINK_RAW_BYTES.add(st.raw_bytes as u64);
+    DECODE_NS.add_duration(st.decode_time);
+    AGG_NS.add_duration(st.agg_time);
+}

@@ -1,0 +1,346 @@
+//! Sharded atomics-based metric primitives: counters, gauges, and
+//! fixed-bucket histograms with `&'static str` identity.
+//!
+//! All metrics are `static` items constructed in a `const` context, so
+//! there is no registration step and no lock on the hot path — an
+//! update is one relaxed `fetch_add` on a cache-line-padded lane picked
+//! per thread. With the `telemetry-off` cargo feature the whole module
+//! is swapped for zero-sized no-op twins with the identical API, so
+//! instrumented call sites compile to nothing and the perf gate's
+//! floors hold by construction, not by promise.
+
+/// Counter lanes: updates land on `thread-id mod LANES`, reads sum all
+/// lanes. Eight 64-byte lanes bound the memory cost at 512 B/counter
+/// while keeping the sharded runner's workers off each other's lines.
+pub const LANES: usize = 8;
+
+/// Upper bound on histogram bucket count (excluding the implicit
+/// `+Inf` bucket); `Histogram::new` panics at first use beyond it.
+pub const HIST_MAX_BOUNDS: usize = 16;
+
+#[cfg(not(feature = "telemetry-off"))]
+mod imp {
+    use super::{HIST_MAX_BOUNDS, LANES};
+    use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    /// One cache-line-padded counter lane (64-byte aligned so two lanes
+    /// never share a line).
+    #[repr(align(64))]
+    struct Lane(AtomicU64);
+
+    /// Monotonic counter sharded over [`LANES`] padded atomics.
+    pub struct Counter {
+        lanes: [Lane; LANES],
+    }
+
+    impl Counter {
+        pub const fn new() -> Counter {
+            Counter {
+                lanes: [
+                    Lane(AtomicU64::new(0)),
+                    Lane(AtomicU64::new(0)),
+                    Lane(AtomicU64::new(0)),
+                    Lane(AtomicU64::new(0)),
+                    Lane(AtomicU64::new(0)),
+                    Lane(AtomicU64::new(0)),
+                    Lane(AtomicU64::new(0)),
+                    Lane(AtomicU64::new(0)),
+                ],
+            }
+        }
+
+        #[inline]
+        pub fn add(&self, v: u64) {
+            self.lanes[lane_index()].0.fetch_add(v, Ordering::Relaxed);
+        }
+
+        #[inline]
+        pub fn inc(&self) {
+            self.add(1);
+        }
+
+        /// Accumulate a duration as integer nanoseconds (exposition
+        /// divides by 1e9; exact for any realistic process lifetime).
+        #[inline]
+        pub fn add_duration(&self, d: Duration) {
+            self.add(d.as_nanos() as u64);
+        }
+
+        /// Sum over all lanes. Relaxed: concurrent updates may or may
+        /// not be visible, but the value is always a valid past total.
+        pub fn get(&self) -> u64 {
+            self.lanes.iter().map(|l| l.0.load(Ordering::Relaxed)).sum()
+        }
+
+        /// Test support; production counters are process-monotonic.
+        pub fn reset(&self) {
+            for l in &self.lanes {
+                l.0.store(0, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Last-write-wins instantaneous value (occupancy snapshots).
+    pub struct Gauge(AtomicU64);
+
+    impl Gauge {
+        pub const fn new() -> Gauge {
+            Gauge(AtomicU64::new(0))
+        }
+
+        #[inline]
+        pub fn set(&self, v: u64) {
+            self.0.store(v, Ordering::Relaxed);
+        }
+
+        pub fn get(&self) -> u64 {
+            self.0.load(Ordering::Relaxed)
+        }
+
+        pub fn reset(&self) {
+            self.set(0);
+        }
+    }
+
+    /// Fixed-bucket duration histogram. Bounds are seconds, ascending;
+    /// observations scan linearly (≤ [`HIST_MAX_BOUNDS`] compares), so
+    /// an observe is a handful of loads plus three relaxed adds.
+    pub struct Histogram {
+        bounds: &'static [f64],
+        counts: [AtomicU64; HIST_MAX_BOUNDS + 1],
+        sum_ns: AtomicU64,
+        count: AtomicU64,
+    }
+
+    impl Histogram {
+        pub const fn new(bounds: &'static [f64]) -> Histogram {
+            Histogram {
+                bounds,
+                counts: [
+                    AtomicU64::new(0),
+                    AtomicU64::new(0),
+                    AtomicU64::new(0),
+                    AtomicU64::new(0),
+                    AtomicU64::new(0),
+                    AtomicU64::new(0),
+                    AtomicU64::new(0),
+                    AtomicU64::new(0),
+                    AtomicU64::new(0),
+                    AtomicU64::new(0),
+                    AtomicU64::new(0),
+                    AtomicU64::new(0),
+                    AtomicU64::new(0),
+                    AtomicU64::new(0),
+                    AtomicU64::new(0),
+                    AtomicU64::new(0),
+                    AtomicU64::new(0),
+                ],
+            }
+        }
+
+        pub fn observe(&self, d: Duration) {
+            assert!(self.bounds.len() <= HIST_MAX_BOUNDS, "too many histogram buckets");
+            let s = d.as_secs_f64();
+            let mut i = 0;
+            // Prometheus buckets are upper-inclusive: the observation
+            // lands in the first bucket whose bound is >= the value.
+            while i < self.bounds.len() && s > self.bounds[i] {
+                i += 1;
+            }
+            self.counts[i].fetch_add(1, Ordering::Relaxed);
+            self.sum_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+            self.count.fetch_add(1, Ordering::Relaxed);
+        }
+
+        pub fn bounds(&self) -> &'static [f64] {
+            self.bounds
+        }
+
+        /// Per-bucket (non-cumulative) counts; index `bounds.len()` is
+        /// the overflow (`+Inf`) bucket.
+        pub fn bucket_counts(&self) -> Vec<u64> {
+            self.counts[..=self.bounds.len()]
+                .iter()
+                .map(|c| c.load(Ordering::Relaxed))
+                .collect()
+        }
+
+        pub fn sum_seconds(&self) -> f64 {
+            self.sum_ns.load(Ordering::Relaxed) as f64 / 1e9
+        }
+
+        pub fn count(&self) -> u64 {
+            self.count.load(Ordering::Relaxed)
+        }
+
+        pub fn reset(&self) {
+            for c in &self.counts {
+                c.store(0, Ordering::Relaxed);
+            }
+            self.sum_ns.store(0, Ordering::Relaxed);
+            self.count.store(0, Ordering::Relaxed);
+        }
+    }
+
+    static NEXT_LANE: AtomicUsize = AtomicUsize::new(0);
+
+    thread_local! {
+        /// Each thread's home lane, assigned round-robin on first use.
+        static LANE: usize = NEXT_LANE.fetch_add(1, Ordering::Relaxed) & (LANES - 1);
+    }
+
+    #[inline]
+    fn lane_index() -> usize {
+        // `try_with`: counter updates during thread teardown (Drop impls
+        // running after TLS destruction) fall back to lane 0.
+        LANE.try_with(|l| *l).unwrap_or(0)
+    }
+}
+
+#[cfg(feature = "telemetry-off")]
+mod imp {
+    use std::time::Duration;
+
+    /// Zero-sized no-op twin of the live counter: every method compiles
+    /// away, every read is zero.
+    pub struct Counter;
+
+    impl Counter {
+        pub const fn new() -> Counter {
+            Counter
+        }
+        #[inline]
+        pub fn add(&self, _v: u64) {}
+        #[inline]
+        pub fn inc(&self) {}
+        #[inline]
+        pub fn add_duration(&self, _d: Duration) {}
+        pub fn get(&self) -> u64 {
+            0
+        }
+        pub fn reset(&self) {}
+    }
+
+    pub struct Gauge;
+
+    impl Gauge {
+        pub const fn new() -> Gauge {
+            Gauge
+        }
+        #[inline]
+        pub fn set(&self, _v: u64) {}
+        pub fn get(&self) -> u64 {
+            0
+        }
+        pub fn reset(&self) {}
+    }
+
+    /// Keeps its bounds so the exposition endpoint renders the same
+    /// (all-zero) bucket layout under `telemetry-off`.
+    pub struct Histogram {
+        bounds: &'static [f64],
+    }
+
+    impl Histogram {
+        pub const fn new(bounds: &'static [f64]) -> Histogram {
+            Histogram { bounds }
+        }
+        #[inline]
+        pub fn observe(&self, _d: Duration) {}
+        pub fn bounds(&self) -> &'static [f64] {
+            self.bounds
+        }
+        pub fn bucket_counts(&self) -> Vec<u64> {
+            vec![0; self.bounds.len() + 1]
+        }
+        pub fn sum_seconds(&self) -> f64 {
+            0.0
+        }
+        pub fn count(&self) -> u64 {
+            0
+        }
+        pub fn reset(&self) {}
+    }
+}
+
+pub use imp::{Counter, Gauge, Histogram};
+
+/// How a raw `u64` metric value renders at exposition time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Unit {
+    /// Render the integer as-is.
+    Plain,
+    /// The counter accumulates nanoseconds; render as seconds.
+    NanosToSeconds,
+}
+
+/// Which primitive backs a registry entry.
+pub enum MetricKind {
+    Counter(&'static Counter),
+    Gauge(&'static Gauge),
+    Histogram(&'static Histogram),
+}
+
+/// One exposition-registry entry. Entries sharing a `name` (label
+/// variants of the same metric) must be adjacent in the registry so the
+/// renderer emits a single `# HELP`/`# TYPE` block per family.
+pub struct MetricDef {
+    /// Prometheus metric name (`fedgec_*`, `_total` for counters).
+    pub name: &'static str,
+    /// Label pairs rendered inside `{}`, or `""` for none.
+    pub labels: &'static str,
+    pub help: &'static str,
+    pub unit: Unit,
+    pub kind: MetricKind,
+}
+
+#[cfg(all(test, not(feature = "telemetry-off")))]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn counter_sums_lanes_and_resets() {
+        static C: Counter = Counter::new();
+        C.reset();
+        C.add(5);
+        C.inc();
+        C.add_duration(Duration::from_nanos(4));
+        assert_eq!(C.get(), 10);
+        // Updates from other threads land on other lanes but sum in.
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| C.add(100));
+            }
+        });
+        assert_eq!(C.get(), 410);
+        C.reset();
+        assert_eq!(C.get(), 0);
+    }
+
+    #[test]
+    fn gauge_is_last_write_wins() {
+        static G: Gauge = Gauge::new();
+        G.set(7);
+        G.set(3);
+        assert_eq!(G.get(), 3);
+        G.reset();
+    }
+
+    #[test]
+    fn histogram_buckets_are_upper_inclusive() {
+        static BOUNDS: [f64; 3] = [0.001, 0.01, 0.1];
+        static H: Histogram = Histogram::new(&BOUNDS);
+        H.reset();
+        H.observe(Duration::from_micros(500)); // 0.0005 -> bucket 0
+        H.observe(Duration::from_millis(1)); // == bound -> bucket 0
+        H.observe(Duration::from_millis(5)); // bucket 1
+        H.observe(Duration::from_secs(2)); // +Inf bucket
+        assert_eq!(H.bucket_counts(), vec![2, 1, 0, 1]);
+        assert_eq!(H.count(), 4);
+        assert!((H.sum_seconds() - 2.0065).abs() < 1e-9);
+        H.reset();
+        assert_eq!(H.count(), 0);
+    }
+}

@@ -1,0 +1,81 @@
+//! `fedgec tail <journal.jsonl>`: fold a round journal into the same
+//! per-round table a live run prints, for post-hoc (or `--follow`
+//! polling) inspection of a traced run.
+
+use super::journal::fold_journal;
+use crate::metrics::{fmt_duration, Table};
+use crate::Result;
+
+/// Fold `text` (JSONL journal contents) into a per-round table.
+/// Prefers each round's own `round_end` record; rounds that never
+/// closed (a live tail mid-round) fall back to the folded totals.
+pub fn table_from(text: &str) -> Result<Table> {
+    let folded = fold_journal(text)?;
+    let mut t = Table::new(
+        "round journal",
+        &[
+            "round",
+            "part",
+            "drop",
+            "resync",
+            "loss",
+            "CR",
+            "up KB",
+            "down KB",
+            "full syncs",
+            "decode CPU",
+            "agg CPU",
+            "merge",
+            "store KB",
+            "eval acc",
+        ],
+    );
+    for fr in &folded {
+        let s = fr.reported.as_ref().unwrap_or(&fr.folded);
+        t.row(vec![
+            s.round.to_string(),
+            s.participants.to_string(),
+            s.dropped.to_string(),
+            s.resyncs.to_string(),
+            format!("{:.4}", s.mean_loss),
+            format!("{:.2}", s.ratio()),
+            format!("{:.1}", s.payload_bytes as f64 / 1e3),
+            format!("{:.1}", s.downlink_bytes as f64 / 1e3),
+            s.full_syncs.to_string(),
+            fmt_duration(s.server_decode_time),
+            fmt_duration(s.agg_time),
+            fmt_duration(s.merge_time),
+            format!("{:.1}", s.store_bytes as f64 / 1e3),
+            s.eval.map(|(_, acc)| format!("{acc:.3}")).unwrap_or_else(|| "-".to_string()),
+        ]);
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_one_row_per_round() {
+        let text = concat!(
+            r#"{"v":1,"t":"round_begin","round":0,"shards":1}"#,
+            "\n",
+            r#"{"v":1,"t":"shard","round":0,"shard":0,"served":2,"dropped":0,"resyncs":1,"#,
+            r#""payload_bytes":2000,"raw_bytes":8000,"loss_sum":1.0,"decode_ns":5000,"agg_ns":700}"#,
+            "\n",
+            r#"{"v":1,"t":"participants","round":0,"n":2}"#,
+            "\n",
+            r#"{"v":1,"t":"round_begin","round":1,"shards":1}"#,
+            "\n",
+        );
+        let t = table_from(text).unwrap();
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.rows[0][0], "0");
+        assert_eq!(t.rows[0][1], "2");
+        assert_eq!(t.rows[0][4], "0.5000"); // loss_sum / served
+        assert_eq!(t.rows[0][5], "4.00"); // 8000 / 2000
+        let md = t.markdown();
+        assert!(md.contains("round journal"));
+    }
+}

@@ -3,6 +3,13 @@
 
 use std::time::{Duration, Instant};
 
+/// Iteration cap: `bench_loop` stops sampling here even if `min_time`
+/// has not elapsed (sub-microsecond bodies would otherwise spin for
+/// millions of iterations). Hitting the cap early is recorded in
+/// [`BenchStats::truncated`] so tables can flag the row instead of
+/// silently reporting an under-sampled mean.
+pub const MAX_ITERS: usize = 10_000;
+
 /// Time a closure, returning (result, elapsed).
 pub fn timed<T>(f: impl FnOnce() -> T) -> (T, Duration) {
     let t0 = Instant::now();
@@ -10,27 +17,32 @@ pub fn timed<T>(f: impl FnOnce() -> T) -> (T, Duration) {
     (out, t0.elapsed())
 }
 
-/// Run `f` repeatedly for at least `min_iters` iterations and `min_time`,
-/// returning per-iteration stats in seconds: (mean, min, max, iters).
+/// Run `f` repeatedly for at least `min_iters` iterations and `min_time`
+/// (capped at [`MAX_ITERS`]), returning per-iteration stats in seconds.
 pub fn bench_loop(min_iters: usize, min_time: Duration, mut f: impl FnMut()) -> BenchStats {
     // Warmup.
     f();
     let mut samples = Vec::new();
     let start = Instant::now();
     let mut iters = 0usize;
+    let mut truncated = false;
     while iters < min_iters || start.elapsed() < min_time {
+        if iters >= MAX_ITERS {
+            // The old guard broke *after* pushing sample 10_001 and
+            // before the while condition was rechecked, so the cap cut
+            // the run short without any trace in the stats.
+            truncated = start.elapsed() < min_time;
+            break;
+        }
         let t0 = Instant::now();
         f();
         samples.push(t0.elapsed().as_secs_f64());
         iters += 1;
-        if iters > 10_000 {
-            break;
-        }
     }
     let mean = samples.iter().sum::<f64>() / samples.len() as f64;
     let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
     let max = samples.iter().cloned().fold(0.0f64, f64::max);
-    BenchStats { mean_s: mean, min_s: min, max_s: max, iters }
+    BenchStats { mean_s: mean, min_s: min, max_s: max, iters, truncated }
 }
 
 /// Result of [`bench_loop`].
@@ -40,6 +52,9 @@ pub struct BenchStats {
     pub min_s: f64,
     pub max_s: f64,
     pub iters: usize,
+    /// True when the [`MAX_ITERS`] cap fired before `min_time` elapsed —
+    /// the mean is from fewer samples than the caller asked for.
+    pub truncated: bool,
 }
 
 impl BenchStats {
@@ -66,5 +81,23 @@ mod tests {
         let stats = bench_loop(5, Duration::from_millis(0), || n += 1);
         assert!(stats.iters >= 5);
         assert!(stats.min_s <= stats.mean_s && stats.mean_s <= stats.max_s + 1e-12);
+        assert!(!stats.truncated, "min_time=0 can always be met");
+    }
+
+    #[test]
+    fn bench_loop_flags_truncation() {
+        // An empty body hits the MAX_ITERS cap long before an hour
+        // elapses; the stats must say so.
+        let stats = bench_loop(1, Duration::from_secs(3600), || {});
+        assert_eq!(stats.iters, MAX_ITERS);
+        assert!(stats.truncated);
+    }
+
+    #[test]
+    fn bench_loop_cap_reached_in_time_is_not_truncated() {
+        // min_time already satisfied when the cap fires -> a full run.
+        let stats = bench_loop(MAX_ITERS + 5, Duration::ZERO, || {});
+        assert_eq!(stats.iters, MAX_ITERS);
+        assert!(!stats.truncated);
     }
 }

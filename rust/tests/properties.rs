@@ -595,3 +595,76 @@ fn prop_state_store_evict_reload_roundtrips_exactly() {
     });
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+#[test]
+fn prop_shard_fold_matches_flat_run() {
+    use fedgec::fl::round::{RoundStats, ShardStats};
+    use std::time::Duration;
+    // The telemetry journal replays per-shard records through
+    // `fold_into`; the fold is only trustworthy if partitioning a round
+    // across any number of shards reproduces the flat single-shard
+    // tallies. Integers and Durations must match exactly; only the f64
+    // loss sum may differ by summation order.
+    prop::check("shard fold == flat fold", 300, |rng| {
+        let n_clients = 1 + rng.next_below(64);
+        let n_shards = 1 + rng.next_below(8);
+        let mut flat = ShardStats::default();
+        let mut shards = vec![ShardStats::default(); n_shards];
+        for _ in 0..n_clients {
+            let mut one = ShardStats::default();
+            if rng.chance(0.1) {
+                one.dropped = 1;
+            } else {
+                one.served = 1;
+                one.payload_bytes = rng.next_below(1 << 20);
+                one.raw_bytes = one.payload_bytes * (1 + rng.next_below(30));
+                one.loss_sum = rng.uniform(0.0, 10.0);
+                one.decode_time = Duration::from_nanos(rng.next_u64() % 1_000_000_000);
+                one.agg_time = Duration::from_nanos(rng.next_u64() % 1_000_000_000);
+                if rng.chance(0.2) {
+                    one.resyncs = 1;
+                }
+            }
+            flat.absorb(&one);
+            shards[rng.next_below(n_shards)].absorb(&one);
+        }
+        let mut total = ShardStats::default();
+        for s in &shards {
+            total.absorb(s);
+        }
+        for (name, a, b) in [
+            ("served", total.served, flat.served),
+            ("dropped", total.dropped, flat.dropped),
+            ("resyncs", total.resyncs, flat.resyncs),
+            ("payload_bytes", total.payload_bytes, flat.payload_bytes),
+            ("raw_bytes", total.raw_bytes, flat.raw_bytes),
+        ] {
+            if a != b {
+                return Err(format!("{name}: sharded {a} != flat {b}"));
+            }
+        }
+        if total.decode_time != flat.decode_time || total.agg_time != flat.agg_time {
+            return Err("Duration tallies diverged across the partition".into());
+        }
+        let mut from_shards = RoundStats::default();
+        total.fold_into(&mut from_shards);
+        let mut from_flat = RoundStats::default();
+        flat.fold_into(&mut from_flat);
+        // mean_loss holds the raw f64 loss sum at this point: tolerate
+        // reassociation, nothing more.
+        let rel = (from_shards.mean_loss - from_flat.mean_loss).abs()
+            / from_flat.mean_loss.abs().max(1e-12);
+        if rel > 1e-9 {
+            return Err(format!(
+                "loss sum: sharded {} vs flat {} (rel {rel:e})",
+                from_shards.mean_loss, from_flat.mean_loss
+            ));
+        }
+        from_shards.mean_loss = 0.0;
+        from_flat.mean_loss = 0.0;
+        if from_shards != from_flat {
+            return Err(format!("folded stats diverge:\n{from_shards:?}\nvs\n{from_flat:?}"));
+        }
+        Ok(())
+    });
+}

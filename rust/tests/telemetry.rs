@@ -1,0 +1,159 @@
+//! Telemetry acceptance tests: the round journal's fold must reproduce
+//! every runner's own `RoundStats` **exactly** (flat local simulation,
+//! sharded threaded fleet, hierarchical edge tier), and the `/metrics`
+//! listener must serve well-formed Prometheus text over real HTTP.
+//!
+//! The journal is process-global, so the tests that attach one are
+//! serialized behind a lock.
+
+#![cfg(not(feature = "telemetry-off"))]
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Mutex;
+
+use fedgec::config::RunConfig;
+use fedgec::coordinator::{run_local, run_threaded};
+use fedgec::fl::round::RunSummary;
+use fedgec::fl::transport::bandwidth::LinkSpec;
+use fedgec::telemetry::journal;
+use fedgec::telemetry::MetricsServer;
+use fedgec::train::data::DatasetSpec;
+
+static JOURNAL_LOCK: Mutex<()> = Mutex::new(());
+
+fn base_cfg() -> RunConfig {
+    RunConfig {
+        model: "native".into(),
+        dataset: DatasetSpec::Cifar10,
+        n_clients: 8,
+        rounds: 3,
+        samples_per_client: 32,
+        local_lr: 0.2,
+        server_lr: 0.2,
+        codec: "fedgec".into(),
+        rel_error_bound: 1e-2,
+        link: LinkSpec::infinite(),
+        eval_every: 0,
+        seed: 17,
+        class_skew: 0.3,
+        participation: 1.0,
+        ..Default::default()
+    }
+}
+
+/// Run `f` with the journal attached to a scratch file, then fold the
+/// file and assert each round's fold AND its `round_end` self-report
+/// equal the runner's `RoundStats` exactly.
+fn assert_fold_exact(tag: &str, f: impl FnOnce() -> fedgec::Result<RunSummary>) {
+    let _guard = JOURNAL_LOCK.lock().unwrap();
+    let name = format!("fedgec_journal_{tag}_{}.jsonl", std::process::id());
+    let path = std::env::temp_dir().join(name);
+    journal::attach(&path).unwrap();
+    let summary = f();
+    journal::detach();
+    let summary = summary.unwrap_or_else(|e| panic!("{tag}: run failed: {e:#}"));
+    let text = std::fs::read_to_string(&path).unwrap();
+    let folded = journal::fold_journal(&text).unwrap_or_else(|e| panic!("{tag}: fold: {e:#}"));
+    assert_eq!(folded.len(), summary.rounds.len(), "{tag}: round count");
+    for (fr, want) in folded.iter().zip(&summary.rounds) {
+        assert_eq!(
+            &fr.folded, want,
+            "{tag}: fold diverges from RoundStats at round {}",
+            fr.round
+        );
+        let rep = fr.reported.as_ref().unwrap_or_else(|| {
+            panic!("{tag}: round {} has no round_end record", fr.round)
+        });
+        assert_eq!(rep, want, "{tag}: round_end record diverges at round {}", fr.round);
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn journal_fold_is_exact_for_local_simulation() {
+    // Partial participation + compressed downlink + eval rounds: the
+    // richest record mix the local runner emits.
+    let mut cfg = base_cfg();
+    cfg.participation = 0.5;
+    cfg.down = "fedgec".into();
+    cfg.down_eb = 1e-3;
+    cfg.eval_every = 2;
+    cfg.rounds = 4;
+    assert_fold_exact("local", || run_local(&cfg));
+}
+
+#[test]
+fn journal_fold_is_exact_for_sharded_threaded_fleet() {
+    let mut cfg = base_cfg();
+    cfg.shards = 4;
+    assert_fold_exact("sharded", || run_threaded(&cfg));
+}
+
+#[test]
+fn journal_fold_is_exact_for_edge_tier() {
+    let mut cfg = base_cfg();
+    cfg.tier = "edge:4".into(); // 8 clients -> 2 edge aggregators
+    assert_fold_exact("edge", || run_threaded(&cfg));
+}
+
+#[test]
+fn metrics_endpoint_serves_prometheus_text_over_http() {
+    let mut srv = MetricsServer::bind("127.0.0.1:0").unwrap();
+    let get = |path: &str| -> String {
+        let mut s = TcpStream::connect(srv.addr()).unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    };
+
+    let resp = get("/metrics");
+    assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+    assert!(resp.contains("text/plain; version=0.0.4"), "{resp}");
+    let body = resp.split("\r\n\r\n").nth(1).expect("response body");
+    // The acceptance surface: rounds, bytes both directions, CPU time
+    // splits, store traffic, resyncs, drops — all present with HELP and
+    // TYPE lines and numeric samples.
+    for name in [
+        "fedgec_rounds_total",
+        "fedgec_uplink_bytes_total",
+        "fedgec_downlink_bytes_total",
+        "fedgec_decode_seconds_total",
+        "fedgec_agg_seconds_total",
+        "fedgec_merge_seconds_total",
+        "fedgec_store_hits_total",
+        "fedgec_store_misses_total",
+        "fedgec_store_evictions_total",
+        "fedgec_resyncs_total",
+        "fedgec_clients_dropped_total",
+    ] {
+        assert!(body.contains(&format!("# HELP {name} ")), "missing HELP for {name}");
+        assert!(body.contains(&format!("# TYPE {name} ")), "missing TYPE for {name}");
+        let sample = body
+            .lines()
+            .find(|l| !l.starts_with('#') && l.starts_with(name))
+            .unwrap_or_else(|| panic!("no sample line for {name}"));
+        let val = sample.rsplit(' ').next().unwrap();
+        assert!(val.parse::<f64>().is_ok(), "non-numeric sample {sample:?}");
+    }
+
+    // Anything else 404s.
+    let resp = get("/");
+    assert!(resp.starts_with("HTTP/1.1 404"), "{resp}");
+
+    srv.shutdown();
+    // Shutdown is idempotent and the port is released.
+    srv.shutdown();
+    assert!(TcpStream::connect(srv.addr()).is_err() || get_is_dead(srv.addr()));
+}
+
+/// After shutdown the OS may briefly accept on the dead socket's
+/// backlog; "dead" means no HTTP response comes back.
+fn get_is_dead(addr: std::net::SocketAddr) -> bool {
+    let Ok(mut s) = TcpStream::connect(addr) else { return true };
+    let _ = write!(s, "GET /metrics HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n");
+    let _ = s.set_read_timeout(Some(std::time::Duration::from_millis(500)));
+    let mut out = String::new();
+    s.read_to_string(&mut out).is_err() || out.is_empty()
+}
