@@ -13,7 +13,8 @@
 //! #        FEDGEC_MODEL, FEDGEC_CLIENTS, FEDGEC_PARTICIPATION,
 //! #        FEDGEC_STORE_BUDGET_MB, FEDGEC_DOWN, FEDGEC_DOWN_EB,
 //! #        FEDGEC_AGG=binsum, FEDGEC_THREADED=1, FEDGEC_SHARDS=4,
-//! #        FEDGEC_TIER=edge:8, FEDGEC_JOURNAL=path.jsonl
+//! #        FEDGEC_TIER=edge:8, FEDGEC_JOURNAL=path.jsonl,
+//! #        FEDGEC_EBC=plateau
 //! ```
 //!
 //! Emits `results/BENCH_fl_e2e_state_memory.json` — the per-round
@@ -107,6 +108,10 @@ fn main() -> fedgec::Result<()> {
         // `binsum` aggregates eligible layers in the integer-code
         // domain and dequantizes once per round.
         agg: env_or("FEDGEC_AGG", "exact".to_string()),
+        // Error-bound controller (DESIGN.md §15): `fixed` keeps eb
+        // static; `plateau`/`schedule:*`/`layerwise` let the server
+        // retune the bound each round and broadcast it as an EbPlan.
+        ebc: env_or("FEDGEC_EBC", "fixed".to_string()),
         // Asymmetric access link: broadcasts ride a faster downlink.
         link: LinkSpec::asym_mbps(10.0, 40.0),
         ..Default::default()
@@ -259,6 +264,29 @@ fn main() -> fedgec::Result<()> {
     }
     ag.print();
     ag.save_json(&panel("fl_e2e_agg"))?;
+
+    // Error-bound controller panel: the per-round bound the controller
+    // broadcast (journal `eb_plan` records, DESIGN.md §15). Saved
+    // without the suffix helper — the CI step already isolates this
+    // run via FEDGEC_PANEL_SUFFIX, and the gate keys on the fixed name.
+    if cfg.ebc != "fixed" {
+        let mut ebt = fedgec::metrics::Table::new(
+            &format!("error-bound controller (ebc={})", cfg.ebc),
+            &["round", "eb", "up KB", "loss"],
+        );
+        for r in &summary.rounds {
+            ebt.row(vec![
+                r.round.to_string(),
+                r.round_eb.map(|e| format!("{e:.3e}")).unwrap_or_else(|| "-".into()),
+                format!("{:.1}", r.payload_bytes as f64 / 1e3),
+                format!("{:.4}", r.mean_loss),
+            ]);
+        }
+        ebt.print();
+        ebt.save_json("fl_e2e_ebc")?;
+        let planned = summary.rounds.iter().filter(|r| r.round_eb.is_some()).count();
+        anyhow::ensure!(planned > 0, "ebc={} emitted no eb plans", cfg.ebc);
+    }
     println!(
         "server decode CPU {} | aggregation CPU {} (agg={})",
         fedgec::metrics::fmt_duration(summary.total_server_decode_time()),

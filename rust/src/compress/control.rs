@@ -1,0 +1,573 @@
+//! Adaptive error-bound control: a server-side controller that picks the
+//! round's error bound (optionally per layer) from observed signals, plus
+//! the versioned wire record that ships the decision to every client.
+//!
+//! The contract (DESIGN.md §15) is deliberately narrow:
+//!
+//! - The **server** consults its [`EbController`] exactly once per round,
+//!   *before* the params broadcast, and obtains an [`EbPlan`].
+//! - The plan is serialized as an `EBP` record ([`EbPlan::to_wire`]) and
+//!   broadcast ahead of `GlobalParams` / `DeltaBegin`. Clients apply it to
+//!   their codec before encoding; the server applies the same plan to its
+//!   decode engines. Nothing else about the round changes.
+//! - Decode needs **zero out-of-band eb config**: every lossy section
+//!   already self-describes its Δ on the wire, so the plan only steers
+//!   encode-side quantizer choice and the mirror fingerprint fold.
+//! - Controllers are **deterministic pure functions** of the signals they
+//!   observed ([`EbSignals`]) — replaying the same run re-derives the same
+//!   plans, which the churn tests rely on.
+//!
+//! `ebc=fixed` (the default) produces no plan at all: no wire record is
+//! broadcast and the message sequence is byte-identical to a build without
+//! this module.
+
+use crate::compress::quant::ErrorBound;
+use anyhow::{bail, Result};
+
+/// Wire-format version of the `EBP` record. Decoders reject anything newer.
+pub const EBP_VERSION: u8 = 1;
+
+/// One round's error-bound decision.
+///
+/// `round_eb` is the uniform bound for every layer; `per_layer`, when set,
+/// overrides it layer-by-layer (indexed by layer position in the model).
+/// Values are *magnitudes* — the abs/rel mode of the run's base
+/// [`ErrorBound`] is preserved by [`EbPlan::bound_for`], so a plan can
+/// never flip a binsum-eligible `abs` spec into a rel one mid-run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EbPlan {
+    pub round_eb: f32,
+    pub per_layer: Option<Vec<f32>>,
+}
+
+impl EbPlan {
+    /// A uniform plan: every layer at `eb`.
+    pub fn uniform(eb: f32) -> Self {
+        EbPlan { round_eb: eb, per_layer: None }
+    }
+
+    /// The effective bound for layer `layer`, preserving `base`'s mode.
+    pub fn bound_for(&self, base: ErrorBound, layer: usize) -> ErrorBound {
+        let eb = self
+            .per_layer
+            .as_ref()
+            .and_then(|v| v.get(layer).copied())
+            .unwrap_or(self.round_eb) as f64;
+        match base {
+            ErrorBound::Abs(_) => ErrorBound::Abs(eb),
+            ErrorBound::Rel(_) => ErrorBound::Rel(eb),
+        }
+    }
+
+    /// Serialize as a versioned `EBP` record:
+    /// `[version u8][round_eb f32 LE][has_layers u8][n u32 LE][eb f32 LE]*n`.
+    pub fn to_wire(&self) -> Vec<u8> {
+        let n = self.per_layer.as_ref().map_or(0, Vec::len);
+        let mut out = Vec::with_capacity(1 + 4 + 1 + 4 + 4 * n);
+        out.push(EBP_VERSION);
+        out.extend_from_slice(&self.round_eb.to_le_bytes());
+        match &self.per_layer {
+            None => out.push(0),
+            Some(v) => {
+                out.push(1);
+                out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+                for eb in v {
+                    out.extend_from_slice(&eb.to_le_bytes());
+                }
+            }
+        }
+        out
+    }
+
+    /// Parse an `EBP` record, rejecting unknown versions and any
+    /// non-finite or non-positive bound.
+    pub fn from_wire(buf: &[u8]) -> Result<EbPlan> {
+        fn take<'a>(buf: &mut &'a [u8], n: usize) -> Result<&'a [u8]> {
+            if buf.len() < n {
+                bail!("eb plan: truncated record");
+            }
+            let (head, tail) = buf.split_at(n);
+            *buf = tail;
+            Ok(head)
+        }
+        fn check(eb: f32) -> Result<f32> {
+            if !eb.is_finite() || eb <= 0.0 {
+                bail!("eb plan: invalid error bound {eb}");
+            }
+            Ok(eb)
+        }
+        let mut r = buf;
+        let version = take(&mut r, 1)?[0];
+        if version != EBP_VERSION {
+            bail!("eb plan: unknown version {version} (max {EBP_VERSION})");
+        }
+        let round_eb = check(f32::from_le_bytes(take(&mut r, 4)?.try_into().unwrap()))?;
+        let per_layer = match take(&mut r, 1)?[0] {
+            0 => None,
+            1 => {
+                let n = u32::from_le_bytes(take(&mut r, 4)?.try_into().unwrap()) as usize;
+                if n > 1 << 20 {
+                    bail!("eb plan: implausible layer count {n}");
+                }
+                let mut v = Vec::with_capacity(n);
+                for _ in 0..n {
+                    v.push(check(f32::from_le_bytes(take(&mut r, 4)?.try_into().unwrap()))?);
+                }
+                Some(v)
+            }
+            f => bail!("eb plan: bad per-layer flag {f}"),
+        };
+        if !r.is_empty() {
+            bail!("eb plan: {} trailing bytes", r.len());
+        }
+        Ok(EbPlan { round_eb, per_layer })
+    }
+}
+
+/// What the server feeds back to the controller after each round.
+#[derive(Debug, Clone)]
+pub struct EbSignals {
+    pub round: u32,
+    /// Mean training loss across this round's participants.
+    pub train_loss: f64,
+    /// `(loss, accuracy)` from the eval pass, when one ran this round.
+    pub eval: Option<(f32, f32)>,
+    /// Measured compressed bytes per layer (from `LayerReport`), summed
+    /// over participants. Empty when the run doesn't collect reports.
+    pub layer_bytes: Vec<usize>,
+}
+
+/// Server-side per-round error-bound policy.
+///
+/// `plan` is called once per round before the broadcast; `None` means
+/// "no change from the configured bound — broadcast nothing" (the fixed
+/// controller always answers this). `observe` is called after the round
+/// with the measured signals.
+pub trait EbController: Send {
+    fn name(&self) -> &'static str;
+    fn plan(&mut self, round: u32) -> Option<EbPlan>;
+    fn observe(&mut self, sig: &EbSignals);
+}
+
+/// Parsed `ebc=` spec. `Display` round-trips through `parse`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EbcSpec {
+    Fixed,
+    /// `(round, eb)` milestones, strictly increasing rounds. The plan for
+    /// round r is the last milestone with `round <= r` (or the base eb
+    /// before the first milestone).
+    Schedule(Vec<(u32, f32)>),
+    Plateau {
+        patience: u32,
+        factor: f32,
+    },
+    Layerwise,
+}
+
+/// Registry rows for `fedgec codecs`: `(spec, summary)`.
+pub const EBC_REGISTRY: &[(&str, &str)] = &[
+    ("fixed", "configured eb for every round (default; no wire record)"),
+    ("schedule:<r:eb,...>", "piecewise-constant eb milestones by round"),
+    ("plateau[:patience,factor]", "tighten eb when the loss stops improving"),
+    ("layerwise", "scale eb per layer by its measured byte share"),
+];
+
+impl EbcSpec {
+    pub fn parse(spec: &str) -> Result<EbcSpec> {
+        let (head, rest) = match spec.split_once(':') {
+            Some((h, r)) => (h, Some(r)),
+            None => (spec, None),
+        };
+        match (head, rest) {
+            ("fixed", None) => Ok(EbcSpec::Fixed),
+            ("layerwise", None) => Ok(EbcSpec::Layerwise),
+            ("plateau", rest) => {
+                let (patience, factor) = match rest {
+                    None => (2, 0.5),
+                    Some(r) => {
+                        let (p, f) = r
+                            .split_once(',')
+                            .ok_or_else(|| anyhow::anyhow!("ebc: plateau wants patience,factor, got {r:?}"))?;
+                        let patience: u32 = p
+                            .trim()
+                            .parse()
+                            .map_err(|_| anyhow::anyhow!("ebc: bad plateau patience {p:?}"))?;
+                        let factor: f32 = f
+                            .trim()
+                            .parse()
+                            .map_err(|_| anyhow::anyhow!("ebc: bad plateau factor {f:?}"))?;
+                        (patience, factor)
+                    }
+                };
+                if patience == 0 {
+                    bail!("ebc: plateau patience must be >= 1");
+                }
+                if !factor.is_finite() || factor <= 0.0 || factor >= 1.0 {
+                    bail!("ebc: plateau factor must be in (0, 1), got {factor}");
+                }
+                Ok(EbcSpec::Plateau { patience, factor })
+            }
+            ("schedule", Some(r)) => {
+                let mut points = Vec::new();
+                for part in r.split(',') {
+                    let (rnd, eb) = part
+                        .split_once(':')
+                        .ok_or_else(|| anyhow::anyhow!("ebc: schedule wants round:eb pairs, got {part:?}"))?;
+                    let rnd: u32 = rnd
+                        .trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("ebc: bad schedule round {rnd:?}"))?;
+                    let eb: f32 = eb
+                        .trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("ebc: bad schedule eb {eb:?}"))?;
+                    if !eb.is_finite() || eb <= 0.0 {
+                        bail!("ebc: schedule eb must be a finite positive number, got {eb}");
+                    }
+                    if let Some(&(prev, _)) = points.last() {
+                        if rnd <= prev {
+                            bail!("ebc: schedule rounds must be strictly increasing ({prev} then {rnd})");
+                        }
+                    }
+                    points.push((rnd, eb));
+                }
+                if points.is_empty() {
+                    bail!("ebc: schedule needs at least one round:eb pair");
+                }
+                Ok(EbcSpec::Schedule(points))
+            }
+            ("schedule", None) => bail!("ebc: schedule needs round:eb pairs"),
+            _ => bail!(
+                "ebc: unknown controller {spec:?} (expected fixed|schedule:<r:eb,...>|plateau[:patience,factor]|layerwise)"
+            ),
+        }
+    }
+
+    pub fn is_fixed(&self) -> bool {
+        matches!(self, EbcSpec::Fixed)
+    }
+
+    /// Instantiate the controller. `base_eb` is the run's configured bound
+    /// magnitude (`rel_error_bound` or the codec spec's eb).
+    pub fn build(&self, base_eb: f64) -> Box<dyn EbController> {
+        match self {
+            EbcSpec::Fixed => Box::new(FixedCtl),
+            EbcSpec::Schedule(points) => Box::new(ScheduleCtl { points: points.clone() }),
+            EbcSpec::Plateau { patience, factor } => Box::new(PlateauCtl {
+                patience: *patience,
+                factor: *factor,
+                base: base_eb as f32,
+                cur: base_eb as f32,
+                best: f64::INFINITY,
+                streak: 0,
+            }),
+            EbcSpec::Layerwise => Box::new(LayerwiseCtl {
+                base: base_eb as f32,
+                layer_bytes: Vec::new(),
+            }),
+        }
+    }
+}
+
+impl std::fmt::Display for EbcSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EbcSpec::Fixed => write!(f, "fixed"),
+            EbcSpec::Layerwise => write!(f, "layerwise"),
+            EbcSpec::Plateau { patience, factor } => write!(f, "plateau:{patience},{factor}"),
+            EbcSpec::Schedule(points) => {
+                write!(f, "schedule:")?;
+                for (i, (r, eb)) in points.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
+                    write!(f, "{r}:{eb}")?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// `ebc=fixed`: never plans, never broadcasts.
+struct FixedCtl;
+
+impl EbController for FixedCtl {
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+    fn plan(&mut self, _round: u32) -> Option<EbPlan> {
+        None
+    }
+    fn observe(&mut self, _sig: &EbSignals) {}
+}
+
+/// `ebc=schedule:<r:eb,...>`: piecewise-constant milestones.
+struct ScheduleCtl {
+    points: Vec<(u32, f32)>,
+}
+
+impl EbController for ScheduleCtl {
+    fn name(&self) -> &'static str {
+        "schedule"
+    }
+    fn plan(&mut self, round: u32) -> Option<EbPlan> {
+        self.points
+            .iter()
+            .rev()
+            .find(|(r, _)| *r <= round)
+            .map(|&(_, eb)| EbPlan::uniform(eb))
+    }
+    fn observe(&mut self, _sig: &EbSignals) {}
+}
+
+/// `ebc=plateau`: multiply the current eb by `factor` after `patience`
+/// consecutive rounds without loss improvement. A loose bound buys cheap
+/// early rounds; the controller tightens as training converges, so the
+/// final metric matches a tight fixed bound at lower total bytes.
+struct PlateauCtl {
+    patience: u32,
+    factor: f32,
+    base: f32,
+    cur: f32,
+    best: f64,
+    streak: u32,
+}
+
+impl PlateauCtl {
+    /// Never drift more than four factor steps from the base in either
+    /// direction — a runaway plateau signal cannot zero out the bound.
+    fn clamp(&self, eb: f32) -> f32 {
+        let span = self.factor.powi(4);
+        let lo = self.base * span.min(1.0 / span);
+        let hi = self.base * span.max(1.0 / span);
+        eb.clamp(lo, hi)
+    }
+}
+
+impl EbController for PlateauCtl {
+    fn name(&self) -> &'static str {
+        "plateau"
+    }
+    fn plan(&mut self, _round: u32) -> Option<EbPlan> {
+        Some(EbPlan::uniform(self.cur))
+    }
+    fn observe(&mut self, sig: &EbSignals) {
+        let loss = sig.eval.map_or(sig.train_loss, |(l, _)| l as f64);
+        if !loss.is_finite() {
+            return;
+        }
+        // The infinite-best guard matters: `INF - 1e-6 * INF` is NaN and
+        // every comparison against it is false, so without it the first
+        // observation could never register as an improvement.
+        if !self.best.is_finite() || loss < self.best - 1e-6 * self.best.abs() {
+            self.best = loss;
+            self.streak = 0;
+        } else {
+            self.streak += 1;
+            if self.streak >= self.patience {
+                self.cur = self.clamp(self.cur * self.factor);
+                self.streak = 0;
+            }
+        }
+    }
+}
+
+/// `ebc=layerwise`: scale each layer's eb by the square root of its share
+/// of the measured compressed bytes — heavy layers get a looser bound,
+/// light layers a tighter one, clamped to [0.5, 2.0]× the base.
+struct LayerwiseCtl {
+    base: f32,
+    layer_bytes: Vec<usize>,
+}
+
+impl EbController for LayerwiseCtl {
+    fn name(&self) -> &'static str {
+        "layerwise"
+    }
+    fn plan(&mut self, _round: u32) -> Option<EbPlan> {
+        if self.layer_bytes.is_empty() {
+            return Some(EbPlan::uniform(self.base));
+        }
+        let total: usize = self.layer_bytes.iter().sum();
+        if total == 0 {
+            return Some(EbPlan::uniform(self.base));
+        }
+        let mean_share = 1.0 / self.layer_bytes.len() as f64;
+        let per_layer = self
+            .layer_bytes
+            .iter()
+            .map(|&b| {
+                let share = b as f64 / total as f64;
+                let scale = (share / mean_share).sqrt().clamp(0.5, 2.0);
+                self.base * scale as f32
+            })
+            .collect();
+        Some(EbPlan { round_eb: self.base, per_layer: Some(per_layer) })
+    }
+    fn observe(&mut self, sig: &EbSignals) {
+        if !sig.layer_bytes.is_empty() {
+            self.layer_bytes = sig.layer_bytes.clone();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_roundtrips_uniform_and_layered() {
+        for plan in [
+            EbPlan::uniform(3e-2),
+            EbPlan { round_eb: 1e-2, per_layer: Some(vec![5e-3, 2e-2, 1e-2]) },
+        ] {
+            let back = EbPlan::from_wire(&plan.to_wire()).unwrap();
+            assert_eq!(back, plan);
+        }
+    }
+
+    #[test]
+    fn wire_rejects_bad_records() {
+        let good = EbPlan::uniform(1e-2).to_wire();
+        // Unknown version.
+        let mut v = good.clone();
+        v[0] = EBP_VERSION + 1;
+        assert!(EbPlan::from_wire(&v).is_err());
+        // Truncated.
+        assert!(EbPlan::from_wire(&good[..good.len() - 1]).is_err());
+        // Trailing garbage.
+        let mut t = good.clone();
+        t.push(0);
+        assert!(EbPlan::from_wire(&t).is_err());
+        // Non-positive / non-finite bounds.
+        for bad in [0.0f32, -1e-2, f32::NAN, f32::INFINITY] {
+            let w = EbPlan::uniform(bad).to_wire();
+            assert!(EbPlan::from_wire(&w).is_err(), "accepted eb {bad}");
+        }
+        // Bad per-layer flag.
+        let mut f = good;
+        let last = f.len() - 1;
+        f[last] = 7;
+        assert!(EbPlan::from_wire(&f).is_err());
+    }
+
+    #[test]
+    fn bound_for_preserves_mode_and_indexes_layers() {
+        let plan = EbPlan { round_eb: 1e-2, per_layer: Some(vec![5e-3, 2e-2]) };
+        assert_eq!(plan.bound_for(ErrorBound::Rel(9.0), 0), ErrorBound::Rel(5e-3f32 as f64));
+        assert_eq!(plan.bound_for(ErrorBound::Abs(9.0), 1), ErrorBound::Abs(2e-2f32 as f64));
+        // Out-of-range layer falls back to the round eb.
+        assert_eq!(plan.bound_for(ErrorBound::Rel(9.0), 5), ErrorBound::Rel(1e-2f32 as f64));
+    }
+
+    #[test]
+    fn spec_parse_display_roundtrip() {
+        for s in ["fixed", "layerwise", "plateau:3,0.25", "schedule:0:0.03,10:0.01"] {
+            let spec = EbcSpec::parse(s).unwrap();
+            assert_eq!(EbcSpec::parse(&spec.to_string()).unwrap(), spec);
+        }
+        assert_eq!(
+            EbcSpec::parse("plateau").unwrap(),
+            EbcSpec::Plateau { patience: 2, factor: 0.5 }
+        );
+    }
+
+    #[test]
+    fn spec_parse_rejects_malformed() {
+        for s in [
+            "nope",
+            "schedule",
+            "schedule:abc",
+            "schedule:5:0.01,3:0.02", // rounds not increasing
+            "schedule:0:nan",
+            "schedule:0:-1.0",
+            "plateau:0,0.5",  // zero patience
+            "plateau:2,1.5",  // factor >= 1
+            "plateau:2,-0.5", // factor <= 0
+            "plateau:2",      // missing factor
+        ] {
+            assert!(EbcSpec::parse(s).is_err(), "accepted {s:?}");
+        }
+    }
+
+    #[test]
+    fn fixed_never_plans() {
+        let mut c = EbcSpec::Fixed.build(1e-2);
+        for r in 0..5 {
+            assert!(c.plan(r).is_none());
+        }
+    }
+
+    #[test]
+    fn schedule_picks_last_milestone_at_or_before_round() {
+        let mut c = EbcSpec::parse("schedule:2:0.03,5:0.01").unwrap().build(1e-2);
+        assert!(c.plan(0).is_none(), "before the first milestone: no plan");
+        assert_eq!(c.plan(2).unwrap().round_eb, 0.03);
+        assert_eq!(c.plan(4).unwrap().round_eb, 0.03);
+        assert_eq!(c.plan(5).unwrap().round_eb, 0.01);
+        assert_eq!(c.plan(99).unwrap().round_eb, 0.01);
+    }
+
+    #[test]
+    fn plateau_tightens_after_patience_and_clamps() {
+        let mut c = EbcSpec::Plateau { patience: 2, factor: 0.5 }.build(0.1);
+        let sig = |round, loss: f64| EbSignals {
+            round,
+            train_loss: loss,
+            eval: None,
+            layer_bytes: vec![],
+        };
+        assert_eq!(c.plan(0).unwrap().round_eb, 0.1);
+        c.observe(&sig(0, 1.0)); // improvement (vs +inf)
+        c.observe(&sig(1, 1.0)); // flat x1
+        assert_eq!(c.plan(2).unwrap().round_eb, 0.1);
+        c.observe(&sig(2, 1.0)); // flat x2 -> tighten
+        assert_eq!(c.plan(3).unwrap().round_eb, 0.05);
+        // Keep flat-lining: eb floors at base * factor^4.
+        for r in 3..40 {
+            c.observe(&sig(r, 1.0));
+        }
+        let eb = c.plan(99).unwrap().round_eb;
+        assert!((eb - 0.1 * 0.5f32.powi(4)).abs() < 1e-9, "clamped at {eb}");
+    }
+
+    #[test]
+    fn plateau_prefers_eval_loss_and_resets_on_improvement() {
+        let mut c = EbcSpec::Plateau { patience: 1, factor: 0.5 }.build(0.1);
+        c.observe(&EbSignals {
+            round: 0,
+            train_loss: 99.0, // would look flat...
+            eval: Some((1.0, 0.5)),
+            layer_bytes: vec![],
+        });
+        c.observe(&EbSignals {
+            round: 1,
+            train_loss: 99.0,
+            eval: Some((0.5, 0.6)), // ...but eval keeps improving
+            layer_bytes: vec![],
+        });
+        assert_eq!(c.plan(2).unwrap().round_eb, 0.1, "improving run never tightens");
+    }
+
+    #[test]
+    fn layerwise_scales_by_byte_share() {
+        let mut c = EbcSpec::Layerwise.build(0.01);
+        // No signal yet: uniform base.
+        assert_eq!(c.plan(0).unwrap(), EbPlan::uniform(0.01));
+        c.observe(&EbSignals {
+            round: 0,
+            train_loss: 1.0,
+            eval: None,
+            layer_bytes: vec![100, 100, 3800],
+        });
+        let plan = c.plan(1).unwrap();
+        let per = plan.per_layer.expect("layered plan after observing bytes");
+        assert_eq!(per.len(), 3);
+        assert!(per[0] < 0.01, "light layer tightens: {}", per[0]);
+        assert!(per[2] > 0.01, "heavy layer loosens: {}", per[2]);
+        assert!(per[2] <= 0.01 * 2.0 + 1e-9, "clamped at 2x");
+        // Deterministic: same signals, same plan.
+        assert_eq!(c.plan(1).unwrap().per_layer.unwrap(), per);
+    }
+}

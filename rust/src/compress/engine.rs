@@ -32,6 +32,16 @@ pub trait CodecEngine: Send {
         false
     }
 
+    /// Adopt a round's error-bound plan (`ebc=` controllers, DESIGN.md
+    /// §15). Dense decode never needs the bound — lossy sections
+    /// self-describe their Δ — but stateful engines must tag the mirror
+    /// with the round's eb exactly as the encoding client does, so the
+    /// server applies the broadcast plan here before decoding. Stateless
+    /// engines ignore it.
+    fn apply_eb_plan(&mut self, plan: &super::control::EbPlan) {
+        let _ = plan;
+    }
+
     /// Decode one frame against the given client's state (the frame's
     /// `index` selects the per-layer slot).
     fn decode_frame(
@@ -126,6 +136,10 @@ impl StatelessEngine {
 impl CodecEngine for StatelessEngine {
     fn name(&self) -> &'static str {
         self.inner.name()
+    }
+
+    fn apply_eb_plan(&mut self, plan: &super::control::EbPlan) {
+        self.inner.apply_eb_plan(plan);
     }
 
     fn decode_frame(

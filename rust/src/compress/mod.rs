@@ -17,6 +17,7 @@
 pub mod agg;
 pub mod autotune;
 pub mod blob;
+pub mod control;
 pub mod downlink;
 pub mod engine;
 pub mod entropy;
@@ -35,6 +36,7 @@ pub mod state;
 pub mod store;
 
 pub use agg::{AggReport, AggRoute, BinAggregator, BinFrame, LayerBinSum};
+pub use control::{EbController, EbPlan, EbSignals, EbcSpec};
 pub use downlink::{DownlinkCodec, DownlinkMirror};
 pub use engine::CodecEngine;
 pub use entropy::EntropyCoder;
@@ -90,6 +92,14 @@ pub trait GradientCodec: Send {
     /// Reset all cross-round state (new training run, or a
     /// `StateResync` cold-start ordered by the server).
     fn reset(&mut self);
+
+    /// Adopt a server-broadcast error-bound plan for the coming round
+    /// (`ebc=` controllers, DESIGN.md §15). Codecs without a lossy
+    /// quantizer ignore it — the plan only steers encode-side Δ choice,
+    /// so a no-op here is always safe.
+    fn apply_eb_plan(&mut self, plan: &control::EbPlan) {
+        let _ = plan;
+    }
 
     /// Fingerprint of the *mirrored* cross-round state — what the
     /// `StateCheck` handshake compares against the server's stored copy.

@@ -42,6 +42,7 @@ use super::predictor::magnitude::{
 use super::predictor::sign::{
     reconstruct_signs, KernelSign, NoSign, OscSign, SignMeta, SignPredictor, SignSel,
 };
+use super::control::EbPlan;
 use super::predictor::PredictorSpec;
 use super::quant::{self, ErrorBound, Quantized};
 use super::state::{CodecState, LayerState};
@@ -119,6 +120,27 @@ pub fn state_free_mode(cfg: &FedgecConfig) -> bool {
         && !cfg.autotune
 }
 
+/// The config a layer actually encodes/decodes under: the base config
+/// with the active round's [`EbPlan`] (if any) substituted into
+/// `error_bound`. Borrows when no plan is active, so the `ebc=fixed`
+/// path pays nothing. The plan carries magnitudes only —
+/// [`EbPlan::bound_for`] preserves the base bound's ABS/REL mode, so a
+/// plan can never flip a binsum-eligible spec out of eligibility.
+fn effective_cfg<'a>(
+    cfg: &'a FedgecConfig,
+    plan: Option<&EbPlan>,
+    idx: usize,
+) -> std::borrow::Cow<'a, FedgecConfig> {
+    match plan {
+        None => std::borrow::Cow::Borrowed(cfg),
+        Some(p) => {
+            let mut c = cfg.clone();
+            c.error_bound = p.bound_for(cfg.error_bound, idx);
+            std::borrow::Cow::Owned(c)
+        }
+    }
+}
+
 /// Reusable per-layer-slot scratch: sign/prediction buffers, quantizer
 /// outputs and the `pred=auto` race double-buffers all survive across
 /// rounds, so the per-round hot path stops allocating after warm-up
@@ -155,6 +177,11 @@ pub struct FedgecCodec {
     pub engine: Option<Box<dyn PredictBackend>>,
     /// Per-layer τ controllers (client side, active when cfg.autotune).
     pub tau_ctrl: Vec<TauController>,
+    /// The server-broadcast error-bound plan for the current round
+    /// (`ebc=` controllers, DESIGN.md §15). Round-scoped *config*, not
+    /// state: it survives `reset()` — a resynced client keeps the
+    /// current round's broadcast plan, not its pre-dropout bound.
+    pub plan: Option<EbPlan>,
     /// Per-layer-slot reusable scratch (not state: never fingerprinted,
     /// never mirrored, never stored).
     scratch: Vec<LayerScratch>,
@@ -167,6 +194,7 @@ impl FedgecCodec {
             state: CodecState::default(),
             engine: None,
             tau_ctrl: Vec::new(),
+            plan: None,
             scratch: Vec::new(),
         }
     }
@@ -177,6 +205,7 @@ impl FedgecCodec {
             state: CodecState::default(),
             engine: Some(engine),
             tau_ctrl: Vec::new(),
+            plan: None,
             scratch: Vec::new(),
         }
     }
@@ -478,6 +507,7 @@ fn compress_layer_impl(
     // sides skip the absorb and stay cold (fingerprint-identical).
     if !state_free_mode(cfg) {
         st.pred = cfg.predictor.mag.state_tag();
+        st.eb = cfg.error_bound.state_bits();
         match wire_pred {
             None => st.absorb(&out.recon),
             Some(tag) => absorb_with_tag(tag, beta, st, &out.recon),
@@ -616,6 +646,7 @@ fn decompress_layer_impl(
     // `compress_layer_impl`: neither side will ever read it back).
     if !state_free_mode(cfg) {
         st.pred = cfg.predictor.mag.state_tag();
+        st.eb = cfg.error_bound.state_bits();
         match wire_pred {
             None => st.absorb(&recon),
             Some((ptag, wire_beta)) => absorb_with_tag(ptag, wire_beta, st, &recon),
@@ -704,6 +735,11 @@ pub struct FedgecEngine {
     pub cfg: FedgecConfig,
     /// Optional PJRT/HLO predict engine; `None` ⇒ native fused path.
     pub engine: Option<Box<dyn PredictBackend>>,
+    /// The active round's error-bound plan — the *same* plan the clients
+    /// received, applied by the server/edge before decoding, so the
+    /// mirror's eb tag matches the client's bit for bit. (Dense decode
+    /// itself never needs it: every lossy section self-describes its Δ.)
+    pub plan: Option<EbPlan>,
     /// Reusable decode scratch (frames decode sequentially per call, so
     /// one slot serves every layer and every client).
     scratch: LayerScratch,
@@ -711,11 +747,11 @@ pub struct FedgecEngine {
 
 impl FedgecEngine {
     pub fn new(cfg: FedgecConfig) -> Self {
-        FedgecEngine { cfg, engine: None, scratch: LayerScratch::default() }
+        FedgecEngine { cfg, engine: None, plan: None, scratch: LayerScratch::default() }
     }
 
     pub fn with_engine(cfg: FedgecConfig, engine: Box<dyn PredictBackend>) -> Self {
-        FedgecEngine { cfg, engine: Some(engine), scratch: LayerScratch::default() }
+        FedgecEngine { cfg, engine: Some(engine), plan: None, scratch: LayerScratch::default() }
     }
 }
 
@@ -739,9 +775,10 @@ impl crate::compress::engine::CodecEngine for FedgecEngine {
     ) -> crate::Result<(LayerGrad, LayerReport)> {
         let idx = frame.index as usize;
         state.ensure(idx + 1);
+        let cfg = effective_cfg(&self.cfg, self.plan.as_ref(), idx);
         let section = lossless::decompress(&frame.payload)?;
         let (data, mut report) = decompress_layer_impl(
-            &self.cfg,
+            &cfg,
             meta,
             &section,
             &mut state.layers[idx],
@@ -750,6 +787,10 @@ impl crate::compress::engine::CodecEngine for FedgecEngine {
         )?;
         report.compressed_bytes = frame.wire_size();
         Ok((LayerGrad::new(meta.clone(), data), report))
+    }
+
+    fn apply_eb_plan(&mut self, plan: &EbPlan) {
+        self.plan = Some(plan.clone());
     }
 
     /// Bins fast path: eligible only in state-free mode under an
@@ -798,11 +839,12 @@ impl GradientCodec for FedgecCodec {
         self.ensure_ctrl(idx + 1);
         self.ensure_scratch(idx + 1);
         let ctrl = if use_tau_ctrl(&self.cfg) { Some(&mut self.tau_ctrl[idx]) } else { None };
+        let cfg = effective_cfg(&self.cfg, self.plan.as_ref(), idx);
         // Encode timing is new instrumentation (nothing measured it
         // before), so the clock reads are gated on an attached sink.
         let t0 = crate::telemetry::active().then(std::time::Instant::now);
         let (payload, report) = compress_layer_impl(
-            &self.cfg,
+            &cfg,
             layer,
             &mut self.state.layers[idx],
             ctrl,
@@ -823,9 +865,10 @@ impl GradientCodec for FedgecCodec {
         let idx = frame.index as usize;
         self.state.ensure(idx + 1);
         self.ensure_scratch(idx + 1);
+        let cfg = effective_cfg(&self.cfg, self.plan.as_ref(), idx);
         let section = lossless::decompress(&frame.payload)?;
         let (data, mut report) = decompress_layer_impl(
-            &self.cfg,
+            &cfg,
             meta,
             &section,
             &mut self.state.layers[idx],
@@ -850,29 +893,41 @@ impl GradientCodec for FedgecCodec {
             return Ok(frames);
         }
         let use_ctrl = use_tau_ctrl(&self.cfg);
-        let cfg = &self.cfg;
+        // Per-layer effective configs: under an eb plan each layer may
+        // carry its own bound, so the workers get `&cfgs[idx]` instead of
+        // one shared `&self.cfg` (a Cow borrow when no plan is active).
+        let cfgs: Vec<std::borrow::Cow<FedgecConfig>> =
+            (0..n).map(|idx| effective_cfg(&self.cfg, self.plan.as_ref(), idx)).collect();
         let mut ctrl_iter = if use_ctrl { Some(self.tau_ctrl.iter_mut()) } else { None };
-        type Item<'a> =
-            (&'a LayerGrad, &'a mut LayerState, Option<&'a mut TauController>, &'a mut LayerScratch);
-        let items: Vec<Item> = grads
-            .layers
+        type Item<'a> = (
+            &'a FedgecConfig,
+            &'a LayerGrad,
+            &'a mut LayerState,
+            Option<&'a mut TauController>,
+            &'a mut LayerScratch,
+        );
+        let items: Vec<Item> = cfgs
             .iter()
+            .zip(grads.layers.iter())
             .zip(self.state.layers.iter_mut())
             .zip(self.scratch.iter_mut())
-            .map(|((layer, st), scratch)| {
+            .map(|(((cfg, layer), st), scratch)| {
                 let ctrl = ctrl_iter.as_mut().and_then(|it| it.next());
-                (layer, st, ctrl, scratch)
+                (cfg.as_ref(), layer, st, ctrl, scratch)
             })
             .collect();
-        let results =
-            crate::util::threadpool::parallel_map(items, threads, |(layer, st, ctrl, scratch)| {
+        let results = crate::util::threadpool::parallel_map(
+            items,
+            threads,
+            |(cfg, layer, st, ctrl, scratch)| {
                 let t0 = crate::telemetry::active().then(std::time::Instant::now);
                 let res = compress_layer_impl(cfg, layer, st, ctrl, scratch, None);
                 if let Some(t0) = t0 {
                     crate::telemetry::ENCODE_NS.add_duration(t0.elapsed());
                 }
                 res
-            });
+            },
+        );
         let mut frames = Vec::with_capacity(n);
         for (idx, res) in results.into_iter().enumerate() {
             let (payload, report) = res?;
@@ -886,8 +941,15 @@ impl GradientCodec for FedgecCodec {
     }
 
     fn reset(&mut self) {
+        // The eb plan deliberately survives: it is round-scoped server
+        // config, not mirrored state — a client resyncing mid-round must
+        // keep the current round's broadcast bound.
         self.state.reset();
         self.tau_ctrl.clear();
+    }
+
+    fn apply_eb_plan(&mut self, plan: &EbPlan) {
+        self.plan = Some(plan.clone());
     }
 
     fn state_fingerprint(&self) -> u64 {

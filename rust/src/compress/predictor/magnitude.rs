@@ -106,7 +106,7 @@ impl MagnitudeSel {
         }
     }
 
-    /// Tag folded into [`LayerState`] fingerprints and `FGS2` spill
+    /// Tag folded into [`LayerState`] fingerprints and `FGS3` spill
     /// records, so state written under one predictor config can never be
     /// mistaken for another's across evict→reload or the `StateCheck`
     /// handshake.

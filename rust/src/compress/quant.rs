@@ -44,6 +44,18 @@ impl ErrorBound {
             ErrorBound::Rel(_) => "REL",
         }
     }
+
+    /// Canonical 32-bit encoding of the bound for the mirror fingerprint
+    /// and the FGS3 spill record. Valid bounds are positive, so the f32
+    /// sign bit is free to carry the mode: clear = Rel, set = Abs. The
+    /// all-zero word never occurs (a zero bound is rejected at parse
+    /// time) and serves as the "unset" sentinel in `LayerState`.
+    pub fn state_bits(&self) -> u32 {
+        match *self {
+            ErrorBound::Rel(v) => (v as f32).to_bits(),
+            ErrorBound::Abs(v) => (v as f32).to_bits() | 0x8000_0000,
+        }
+    }
 }
 
 /// Codes with |code| above this are escaped. Keeps the Huffman alphabet
@@ -492,6 +504,19 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn state_bits_separates_modes_and_magnitudes() {
+        // Same magnitude, different mode: distinct words.
+        assert_ne!(ErrorBound::Rel(1e-2).state_bits(), ErrorBound::Abs(1e-2).state_bits());
+        // Same mode, different magnitude: distinct words.
+        assert_ne!(ErrorBound::Rel(1e-2).state_bits(), ErrorBound::Rel(2e-2).state_bits());
+        // Valid (positive) bounds never collide with the 0 "unset" sentinel.
+        for eb in [1e-30, 1e-3, 0.5, 100.0] {
+            assert_ne!(ErrorBound::Rel(eb).state_bits(), 0);
+            assert_ne!(ErrorBound::Abs(eb).state_bits(), 0);
+        }
     }
 
     #[test]

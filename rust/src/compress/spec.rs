@@ -222,13 +222,21 @@ fn parse_bool(key: &str, v: &str) -> crate::Result<bool> {
 }
 
 fn parse_eb(v: &str) -> crate::Result<ErrorBound> {
-    if let Some(rest) = v.strip_prefix("rel") {
-        Ok(ErrorBound::Rel(parse_f64("eb", rest)?))
+    let eb = if let Some(rest) = v.strip_prefix("rel") {
+        ErrorBound::Rel(parse_f64("eb", rest)?)
     } else if let Some(rest) = v.strip_prefix("abs") {
-        Ok(ErrorBound::Abs(parse_f64("eb", rest)?))
+        ErrorBound::Abs(parse_f64("eb", rest)?)
     } else {
-        Ok(ErrorBound::Rel(parse_f64("eb", v)?))
-    }
+        ErrorBound::Rel(parse_f64("eb", v)?)
+    };
+    // A zero/negative/non-finite bound would propagate into the
+    // quantizer as a nonsense Δ; reject it at the parse boundary.
+    let (ErrorBound::Rel(m) | ErrorBound::Abs(m)) = eb;
+    anyhow::ensure!(
+        m.is_finite() && m > 0.0,
+        "codec spec: eb must be a finite positive number, got '{v}'"
+    );
+    Ok(eb)
 }
 
 fn parse_ec(v: &str) -> crate::Result<EntropyCoder> {
@@ -942,6 +950,13 @@ mod tests {
         assert!(CodecSpec::parse("ef(topk").is_err());
         assert!(CodecSpec::parse("raw:k=1").is_err());
         assert!(CodecSpec::parse("sz3:eb=xyz").is_err());
+        // Degenerate bounds are rejected at parse time, naming the key,
+        // instead of propagating a nonsense Δ into the quantizer.
+        for bad in ["0", "-1e-2", "nan", "inf", "rel0", "abs-3", "relnan", "absinf"] {
+            let spec = format!("fedgec:eb={bad}");
+            let err = CodecSpec::parse(&spec).expect_err(&spec).to_string();
+            assert!(err.contains("eb"), "error for {spec} names the key: {err}");
+        }
         // Bare 'ef' needs the wrapper form.
         assert!(CodecSpec::parse("ef").is_err());
         assert!(CodecSpec::parse("ef:bits=5").is_err());

@@ -19,13 +19,21 @@
 pub struct LayerState {
     /// Magnitude-predictor selector tag that produced this state
     /// ([`crate::compress::predictor::magnitude::MagnitudeSel::state_tag`]).
-    /// Folded into the fingerprint and the `FGS2` spill record, so state
+    /// Folded into the fingerprint and the `FGS3` spill record, so state
     /// written under one predictor configuration can never be mistaken
     /// for another's across evict→reload or the `StateCheck` handshake.
     /// Stays 0 (the `ema` default) on layers that never ran the lossy
     /// pipeline; deliberately **not** part of [`Self::is_empty`] — it is
     /// config-derived, and an empty layer is cold regardless of config.
     pub pred: u8,
+    /// Canonical bits of the [`crate::compress::quant::ErrorBound`] the
+    /// last lossy round ran under ([`ErrorBound::state_bits`]). Folded
+    /// into the fingerprint and the `FGS3` spill record exactly like
+    /// `pred`: state shaped by one error bound must never be mistaken
+    /// for another's after an `ebc=` controller changes the bound
+    /// mid-run. 0 = unset (never lossy-coded); like `pred`, excluded
+    /// from [`Self::is_empty`].
+    pub eb: u32,
     /// EMA memory `m` of Alg. 1 (empty until round 2).
     pub memory: Vec<f32>,
     /// Previous reconstructed gradient `g̃^(t-1)`.
@@ -66,6 +74,7 @@ impl LayerState {
 
     pub fn reset(&mut self) {
         self.pred = 0;
+        self.eb = 0;
         self.memory.clear();
         self.prev_recon = None;
         self.prev_sign = None;
@@ -128,7 +137,8 @@ impl LayerState {
     /// Digest of the state for sync checks (cheap structural
     /// fingerprint). Covers every mirrored buffer that influences future
     /// decodes: the predictor selector tag (state shaped by one
-    /// predictor must never check as another's), `memory`, `prev_recon`,
+    /// predictor must never check as another's), the error-bound bits
+    /// (same rule under `ebc=` controllers), `memory`, `prev_recon`,
     /// and `prev_prev_abs` (the β auto-tuner input — mirrored, and *not*
     /// derivable from the current `prev_recon`). `prev_sign`/`prev_abs`
     /// are pure functions of `prev_recon`, so hashing them would add
@@ -140,6 +150,8 @@ impl LayerState {
         }
         let mut h = 0xcbf29ce484222325u64;
         h = mix(h, 0x5EED_0100 | self.pred as u32);
+        h = mix(h, 0x5EED_0200);
+        h = mix(h, self.eb);
         for v in &self.memory {
             h = mix(h, v.to_bits());
         }
@@ -303,11 +315,13 @@ mod tests {
         let mut st = LayerState::default();
         st.memory = vec![1.0];
         st.pred = 3;
+        st.eb = 0x3c23d70a;
         st.absorb(&[1.0]);
         assert!(!st.is_empty());
         st.reset();
         assert!(st.memory.is_empty() && st.prev_recon.is_none());
         assert_eq!(st.pred, 0);
+        assert_eq!(st.eb, 0);
         assert!(st.is_empty());
     }
 
@@ -328,6 +342,30 @@ mod tests {
         let mut cs = CodecState::default();
         cs.ensure(2);
         cs.layers[1].pred = 3;
+        assert_eq!(cs.fingerprint(), CodecState::default().fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_covers_eb_bits() {
+        // Identical buffers written under different error bounds must
+        // not check as the same state — the evict→reload / StateCheck
+        // discriminator the `ebc=` controllers rely on.
+        let mut a = LayerState::default();
+        let mut b = LayerState::default();
+        a.absorb(&[1.0, -2.0]);
+        b.absorb(&[1.0, -2.0]);
+        a.eb = crate::compress::quant::ErrorBound::Rel(1e-2).state_bits();
+        b.eb = a.eb;
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        b.eb = crate::compress::quant::ErrorBound::Rel(5e-3).state_bits();
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        // Mode matters too, not just magnitude.
+        b.eb = crate::compress::quant::ErrorBound::Abs(1e-2).state_bits();
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        // Like pred, the eb tag alone does not make a state warm.
+        let mut cs = CodecState::default();
+        cs.ensure(2);
+        cs.layers[1].eb = a.eb;
         assert_eq!(cs.fingerprint(), CodecState::default().fingerprint());
     }
 

@@ -20,14 +20,16 @@
 //! mismatches and both sides deterministically reset to the codec's
 //! round-1 path (see `fl::server`).
 //!
-//! # Spill record format (`FGS2`)
+//! # Spill record format (`FGS3`)
 //!
-//! v2 of the record: the per-layer predictor tag was added alongside
-//! the flags byte, and the magic bumped with it so a v1 (`FGS1`)
-//! record fails the magic check outright instead of misparsing.
+//! v3 of the record: the per-layer error-bound bits were added after the
+//! predictor tag (the `ebc=` controllers make the bound a per-round,
+//! per-layer quantity, and it is a fingerprint input), and the magic
+//! bumped with it so a v2 (`FGS2`) record — like v1 (`FGS1`) before it —
+//! fails the magic check outright instead of misparsing.
 //!
 //! ```text
-//! magic  u32  "FGS2" (0x32534746 LE)
+//! magic  u32  "FGS3" (0x33534746 LE)
 //! rounds u32  ┐ StateEpoch — uncompressed, so `epoch()` peeks the
 //! fprint u64  ┘ header without decoding the body
 //! body   bytes (lossless-backend container, zstd by default):
@@ -36,6 +38,9 @@
 //!     pred   u8   magnitude-predictor selector tag (a fingerprint input,
 //!                 so evict→reload under a different predictor config can
 //!                 never alias; see `LayerState::pred`)
+//!     eb     u32  canonical error-bound bits of the last lossy round
+//!                 (`ErrorBound::state_bits`; 0 = never lossy-coded) —
+//!                 same aliasing rule as `pred`, see `LayerState::eb`
 //!     memory byte-planed f32s (length-prefixed)
 //!     [prev_recon  byte-planed f32s]
 //!     [prev_prev_abs byte-planed f32s]
@@ -114,7 +119,7 @@ pub trait StateStore: Send + Sync {
 
 // ───────────────────────── spill record codec ─────────────────────────
 
-const SPILL_MAGIC: u32 = u32::from_le_bytes(*b"FGS2");
+const SPILL_MAGIC: u32 = u32::from_le_bytes(*b"FGS3");
 const FLAG_RECON: u8 = 1;
 const FLAG_PPREV: u8 = 2;
 
@@ -157,6 +162,7 @@ pub fn encode_client_state(cs: &ClientState, backend: Backend) -> crate::Result<
         }
         body.put_u8(flags);
         body.put_u8(l.pred);
+        body.put_u32(l.eb);
         body.put_bytes(&split_planes(&l.memory));
         if let Some(r) = &l.prev_recon {
             body.put_bytes(&split_planes(r));
@@ -187,8 +193,9 @@ pub fn decode_client_state(buf: &[u8]) -> crate::Result<ClientState> {
     for _ in 0..n_layers {
         let flags = b.get_u8()?;
         let pred = b.get_u8()?;
+        let eb = b.get_u32()?;
         let mut l =
-            LayerState { pred, memory: join_planes(b.get_bytes()?)?, ..Default::default() };
+            LayerState { pred, eb, memory: join_planes(b.get_bytes()?)?, ..Default::default() };
         if flags & FLAG_RECON != 0 {
             l.prev_recon = Some(join_planes(b.get_bytes()?)?);
         }
@@ -413,7 +420,7 @@ impl SpillTier {
 }
 
 /// Two-tier [`StateStore`]: a budgeted [`ShardedMemStore`] hot tier whose
-/// evictions serialize cold states to disk (`FGS2` records) instead of
+/// evictions serialize cold states to disk (`FGS3` records) instead of
 /// dropping them. A spilled client's next round transparently reloads —
 /// no resync reset, just disk latency.
 pub struct DiskSpillStore {
@@ -495,6 +502,8 @@ mod tests {
             cs.codec.layers[0].absorb(&recon);
             cs.codec.layers[0].memory = recon.iter().map(|x| x.abs() * 0.5).collect();
             cs.codec.layers[0].pred = 3; // pred=auto shaped this layer
+            // eb=rel1e-2 shaped this layer (ErrorBound::state_bits).
+            cs.codec.layers[0].eb = 0x3c23d70a;
             cs.codec.layers[1].absorb(&recon[..n / 2]);
             cs.epoch.advance(cs.codec.fingerprint());
         }
@@ -520,14 +529,16 @@ mod tests {
         assert_eq!(back.epoch, cs.epoch);
         assert_eq!(back.codec.fingerprint(), cs.codec.fingerprint());
         // Derived views were elided yet recomputed bit-exactly; the
-        // predictor tag travels in the record.
+        // predictor tag and error-bound bits travel in the record.
         for (a, b) in cs.codec.layers.iter().zip(&back.codec.layers) {
             assert_eq!(a.prev_sign, b.prev_sign);
             assert_eq!(a.prev_abs, b.prev_abs);
             assert_eq!(a.prev_prev_abs, b.prev_prev_abs);
             assert_eq!(a.pred, b.pred);
+            assert_eq!(a.eb, b.eb);
         }
         assert_eq!(back.codec.layers[0].pred, 3);
+        assert_eq!(back.codec.layers[0].eb, 0x3c23d70a);
     }
 
     #[test]
@@ -549,12 +560,15 @@ mod tests {
         assert!(decode_client_state(&rec).is_err());
         assert!(decode_client_state(&[1, 2, 3]).is_err());
         assert!(peek_spill_epoch(&[9; 16]).is_err());
-        // A v1 record (old "FGS1" magic, pre-predictor-tag layout) fails
-        // the magic check outright instead of misparsing field offsets.
-        let mut v1 = encode_client_state(&cs, Backend::default()).unwrap();
-        v1[..4].copy_from_slice(b"FGS1");
-        assert!(decode_client_state(&v1).is_err());
-        assert!(peek_spill_epoch(&v1).is_err());
+        // Records from older layouts fail the magic check outright
+        // instead of misparsing field offsets: v1 ("FGS1", no predictor
+        // tag) and v2 ("FGS2", no per-layer error-bound bits).
+        for old_magic in [b"FGS1", b"FGS2"] {
+            let mut old = encode_client_state(&cs, Backend::default()).unwrap();
+            old[..4].copy_from_slice(old_magic);
+            assert!(decode_client_state(&old).is_err());
+            assert!(peek_spill_epoch(&old).is_err());
+        }
     }
 
     #[test]

@@ -101,6 +101,13 @@ pub struct RunConfig {
     /// contribution — see [`crate::fl::topology::edge`]). Requires
     /// `down = raw` when not flat.
     pub tier: String,
+    /// Adaptive error-bound controller spec
+    /// ([`crate::compress::control::EbcSpec`]):
+    /// `fixed` | `schedule:<r:eb,...>` | `plateau[:patience,factor]` |
+    /// `layerwise`. Anything but `fixed` makes the server broadcast a
+    /// per-round `EbPlan` wire record that every client's codec adopts
+    /// before encoding. See DESIGN.md §15.
+    pub ebc: String,
 }
 
 impl Default for RunConfig {
@@ -137,6 +144,7 @@ impl Default for RunConfig {
             agg: "exact".into(),
             shards: 1,
             tier: "flat".into(),
+            ebc: "fixed".into(),
         }
     }
 }
@@ -170,6 +178,11 @@ impl RunConfig {
         self.server_lr = v.f64_or("server_lr", self.server_lr as f64) as f32;
         self.codec = v.str_or("codec", &self.codec).to_string();
         self.rel_error_bound = v.f64_or("rel_error_bound", self.rel_error_bound);
+        anyhow::ensure!(
+            self.rel_error_bound.is_finite() && self.rel_error_bound > 0.0,
+            "rel_error_bound must be a finite positive number, got {}",
+            self.rel_error_bound
+        );
         let mbps = v.f64_or("bandwidth_mbps", self.link.bits_per_sec / 1e6);
         // Downlink bandwidth: explicit key wins; setting only the uplink
         // on a *symmetric* link keeps it symmetric, but never erases an
@@ -230,7 +243,11 @@ impl RunConfig {
         );
         self.down = v.str_or("down", &self.down).to_string();
         self.down_eb = v.f64_or("down_eb", self.down_eb);
-        anyhow::ensure!(self.down_eb > 0.0, "down_eb must be > 0");
+        anyhow::ensure!(
+            self.down_eb.is_finite() && self.down_eb > 0.0,
+            "down_eb must be a finite positive number, got {}",
+            self.down_eb
+        );
         self.agg = v.str_or("agg", &self.agg).to_string();
         anyhow::ensure!(
             crate::fl::aggregate::AggMode::from_name(&self.agg).is_some(),
@@ -246,6 +263,9 @@ impl RunConfig {
         self.tier = v.str_or("tier", &self.tier).to_string();
         crate::fl::topology::TierSpec::from_name(&self.tier)
             .map_err(|e| anyhow::anyhow!("tier '{}': {e}", self.tier))?;
+        self.ebc = v.str_or("ebc", &self.ebc).to_string();
+        crate::compress::control::EbcSpec::parse(&self.ebc)
+            .map_err(|e| anyhow::anyhow!("ebc '{}': {e}", self.ebc))?;
         // Fail fast on unparseable codec specs (both directions).
         self.codec_spec().map_err(|e| anyhow::anyhow!("codec '{}': {e}", self.codec))?;
         self.down_spec().map_err(|e| anyhow::anyhow!("down '{}': {e}", self.down))?;
@@ -266,6 +286,7 @@ impl RunConfig {
                 | "sign"
                 | "agg"
                 | "tier"
+                | "ebc"
         );
         let json_val = if quoted { format!("\"{value}\"") } else { value.to_string() };
         let doc = format!("{{\"{key}\": {json_val}}}");
@@ -308,6 +329,13 @@ impl RunConfig {
             CodecSpec::Raw => None,
             other => Some(other),
         })
+    }
+
+    /// The adaptive error-bound controller spec (validated at load, so
+    /// this never fails after `from_json` / `apply_override`).
+    pub fn ebc_spec(&self) -> crate::compress::control::EbcSpec {
+        crate::compress::control::EbcSpec::parse(&self.ebc)
+            .unwrap_or(crate::compress::control::EbcSpec::Fixed)
     }
 
     /// The aggregation mode as the typed enum (validated at load, so
@@ -552,6 +580,50 @@ mod tests {
         assert!(RunConfig::from_json(r#"{"shards": 5000}"#).is_err());
         assert!(RunConfig::from_json(r#"{"tier": "edge:1"}"#).is_err());
         assert!(RunConfig::from_json(r#"{"tier": "ring"}"#).is_err());
+    }
+
+    #[test]
+    fn error_bounds_validated_at_parse_time() {
+        // Zero, negative and non-finite bounds must fail at config load
+        // with the offending key named — never reach the quantizer.
+        // (1e999 overflows f64 parsing to +inf; the JSON grammar itself
+        // has no NaN literal — that arrives via spec strings below.)
+        for bad in ["0.0", "-1e-2", "1e999", "-1e999"] {
+            let doc = format!("{{\"rel_error_bound\": {bad}}}");
+            let err = RunConfig::from_json(&doc).expect_err(&doc).to_string();
+            assert!(err.contains("rel_error_bound"), "{doc}: {err}");
+            let doc = format!("{{\"down_eb\": {bad}}}");
+            let err = RunConfig::from_json(&doc).expect_err(&doc).to_string();
+            assert!(err.contains("down_eb"), "{doc}: {err}");
+        }
+        // The spec-string route is validated too (naming its eb key).
+        let err = RunConfig::from_json(r#"{"codec": "fedgec:eb=nan"}"#)
+            .expect_err("nan eb spec")
+            .to_string();
+        assert!(err.contains("eb"), "{err}");
+        assert!(RunConfig::from_json(r#"{"down": "fedgec:eb=rel0"}"#).is_err());
+    }
+
+    #[test]
+    fn ebc_key_parses_and_validates() {
+        use crate::compress::control::EbcSpec;
+        // Default: fixed controller, nothing broadcast.
+        let d = RunConfig::default();
+        assert_eq!(d.ebc, "fixed");
+        assert!(d.ebc_spec().is_fixed());
+        // JSON and CLI forms.
+        let c = RunConfig::from_json(r#"{"ebc": "plateau:3,0.25"}"#).unwrap();
+        assert_eq!(c.ebc_spec(), EbcSpec::Plateau { patience: 3, factor: 0.25 });
+        let mut c = RunConfig::default();
+        c.apply_override("ebc", "schedule:0:0.03,10:0.01").unwrap();
+        assert!(matches!(c.ebc_spec(), EbcSpec::Schedule(_)));
+        c.apply_override("ebc", "layerwise").unwrap();
+        assert_eq!(c.ebc_spec(), EbcSpec::Layerwise);
+        // Garbage rejected at load, naming the key.
+        let err =
+            RunConfig::from_json(r#"{"ebc": "bogus"}"#).expect_err("bogus ebc").to_string();
+        assert!(err.contains("ebc"), "{err}");
+        assert!(RunConfig::from_json(r#"{"ebc": "plateau:0,0.5"}"#).is_err());
     }
 
     #[test]

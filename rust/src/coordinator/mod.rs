@@ -26,6 +26,7 @@ use std::cell::RefCell;
 use std::rc::Rc;
 use std::time::Instant;
 
+use crate::compress::control::{EbController, EbSignals};
 use crate::compress::downlink::{DownlinkCodec, DownlinkMirror};
 use crate::compress::engine::CodecEngine;
 use crate::compress::pipeline::{FedgecCodec, FedgecConfig, FedgecEngine};
@@ -192,6 +193,20 @@ pub fn run_local(cfg: &RunConfig) -> crate::Result<RunSummary> {
     }
 }
 
+/// Build the run's optional error-bound controller (`ebc=` key;
+/// `None` for `ebc=fixed` — the legacy single-eb path pays nothing).
+/// The controller's base bound is the config's `rel_error_bound`
+/// magnitude; [`crate::compress::control::EbPlan::bound_for`] preserves
+/// the codec's Abs/Rel mode when the plan is applied.
+fn build_controller(cfg: &RunConfig) -> Option<Box<dyn EbController>> {
+    let spec = cfg.ebc_spec();
+    if spec.is_fixed() {
+        None
+    } else {
+        Some(spec.build(cfg.rel_error_bound))
+    }
+}
+
 /// The in-process equivalent of the wire `StateCheck`/`StateResync`
 /// handshake: ask the server to compare epochs; on mismatch reset the
 /// client codec to cold start. Returns whether a reset happened.
@@ -263,6 +278,7 @@ fn run_local_hlo(cfg: &RunConfig) -> crate::Result<RunSummary> {
     }
 
     let mut downlink = build_downlink(cfg, &metas)?;
+    let mut controller = build_controller(cfg);
     let mut part_rng = crate::util::rng::Rng::new(cfg.seed ^ 0x9A57);
     let mut summary = RunSummary::default();
     for round in 0..cfg.rounds {
@@ -273,6 +289,20 @@ fn run_local_hlo(cfg: &RunConfig) -> crate::Result<RunSummary> {
             ..Default::default()
         };
         let span = journal::RoundSpan::begin(round as u32, 0);
+        // Error-bound plan first: the server engine and every
+        // participant adopt the identical plan before any compression,
+        // so mirror eb tags (and hence fingerprints) agree bit for bit.
+        let plan = controller.as_mut().and_then(|c| c.plan(round as u32));
+        if let Some(p) = &plan {
+            server.apply_eb_plan(p);
+            for &ci in &participants {
+                clients[ci].codec.apply_eb_plan(p);
+            }
+            span.eb_plan(p);
+            telemetry::ROUND_EB.set((p.round_eb as f64 * 1e9) as u64);
+            stats.round_eb = Some(p.round_eb);
+        }
+        let mut layer_bytes: Vec<usize> = Vec::new();
         let mut agg = server.new_round_agg();
         let global = sim_downlink_round(
             &mut downlink,
@@ -324,8 +354,11 @@ fn run_local_hlo(cfg: &RunConfig) -> crate::Result<RunSummary> {
             let raw_bytes = grads.byte_size();
             shard.raw_bytes += raw_bytes;
             let t0 = Instant::now();
-            let payload = client.codec.compress(&grads)?;
+            let (payload, rep) = client.codec.compress_with_report(&grads)?;
             stats.comp_time += t0.elapsed();
+            if controller.is_some() {
+                accumulate_layer_bytes(&mut layer_bytes, &rep);
+            }
             shard.payload_bytes += payload.len();
             let mut link = VirtualLink::new(cfg.link);
             stats.transmit_time += link.send(payload.len());
@@ -373,11 +406,30 @@ fn run_local_hlo(cfg: &RunConfig) -> crate::Result<RunSummary> {
             summary.final_accuracy = Some(eacc);
             span.eval(eloss, eacc);
         }
+        if let Some(c) = controller.as_mut() {
+            c.observe(&EbSignals {
+                round: round as u32,
+                train_loss: stats.mean_loss,
+                eval: stats.eval,
+                layer_bytes: std::mem::take(&mut layer_bytes),
+            });
+        }
         span.participants(stats.participants);
         span.end(&stats);
         summary.rounds.push(stats);
     }
     Ok(summary)
+}
+
+/// Fold one payload's per-layer on-wire bytes into the round's tallies
+/// (the layerwise controller's byte-share signal).
+fn accumulate_layer_bytes(acc: &mut Vec<usize>, rep: &crate::compress::frame::CodecReport) {
+    if acc.len() < rep.layers.len() {
+        acc.resize(rep.layers.len(), 0);
+    }
+    for (slot, l) in acc.iter_mut().zip(&rep.layers) {
+        *slot += l.compressed_bytes;
+    }
 }
 
 fn run_local_native(cfg: &RunConfig) -> crate::Result<RunSummary> {
@@ -414,6 +466,7 @@ fn run_local_native(cfg: &RunConfig) -> crate::Result<RunSummary> {
     let mut epochs = vec![StateEpoch::cold(); cfg.n_clients];
 
     let mut downlink = build_downlink(cfg, &metas)?;
+    let mut controller = build_controller(cfg);
     let mut part_rng = crate::util::rng::Rng::new(cfg.seed ^ 0x9A57);
     let mut summary = RunSummary::default();
     for round in 0..cfg.rounds {
@@ -424,6 +477,18 @@ fn run_local_native(cfg: &RunConfig) -> crate::Result<RunSummary> {
             ..Default::default()
         };
         let span = journal::RoundSpan::begin(round as u32, 0);
+        // Same plan-before-compression discipline as the HLO path.
+        let plan = controller.as_mut().and_then(|c| c.plan(round as u32));
+        if let Some(p) = &plan {
+            server.apply_eb_plan(p);
+            for &ci in &participants {
+                client_codecs[ci].apply_eb_plan(p);
+            }
+            span.eb_plan(p);
+            telemetry::ROUND_EB.set((p.round_eb as f64 * 1e9) as u64);
+            stats.round_eb = Some(p.round_eb);
+        }
+        let mut layer_bytes: Vec<usize> = Vec::new();
         let mut agg = server.new_round_agg();
         let global = sim_downlink_round(
             &mut downlink,
@@ -457,8 +522,11 @@ fn run_local_native(cfg: &RunConfig) -> crate::Result<RunSummary> {
             let raw_bytes = grads.byte_size();
             shard.raw_bytes += raw_bytes;
             let t0 = Instant::now();
-            let payload = client_codecs[ci].compress(&grads)?;
+            let (payload, rep) = client_codecs[ci].compress_with_report(&grads)?;
             stats.comp_time += t0.elapsed();
+            if controller.is_some() {
+                accumulate_layer_bytes(&mut layer_bytes, &rep);
+            }
             shard.payload_bytes += payload.len();
             let mut link = VirtualLink::new(cfg.link);
             stats.transmit_time += link.send(payload.len());
@@ -512,6 +580,14 @@ fn run_local_native(cfg: &RunConfig) -> crate::Result<RunSummary> {
             stats.eval = Some((eloss, eacc));
             summary.final_accuracy = Some(eacc);
             span.eval(eloss, eacc);
+        }
+        if let Some(c) = controller.as_mut() {
+            c.observe(&EbSignals {
+                round: round as u32,
+                train_loss: stats.mean_loss,
+                eval: stats.eval,
+                layer_bytes: std::mem::take(&mut layer_bytes),
+            });
         }
         span.participants(stats.participants);
         span.end(&stats);
@@ -567,6 +643,9 @@ pub fn run_threaded(cfg: &RunConfig) -> crate::Result<RunSummary> {
     .with_agg_mode(cfg.agg_mode());
     if let Some(spec) = &down_spec {
         server = server.with_downlink(DownlinkCodec::new(spec, metas.clone()));
+    }
+    if let Some(c) = build_controller(cfg) {
+        server = server.with_controller(c);
     }
     let mut summary = RunSummary::default();
     match cfg.tier_spec() {

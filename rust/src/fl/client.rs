@@ -221,6 +221,14 @@ impl Client {
                     let params = mirror.apply_delta(reset, &frames)?.to_vec();
                     self.round_body(round, &params, channel)?;
                 }
+                Msg::EbPlan { plan, .. } => {
+                    // The round's error-bound plan precedes the params
+                    // broadcast; adopt it before any compression so the
+                    // quantizer (and the mirror eb tag) matches the
+                    // server bit for bit.
+                    let plan = crate::compress::control::EbPlan::from_wire(&plan)?;
+                    self.codec.apply_eb_plan(&plan);
+                }
                 Msg::Shutdown => return Ok(()),
                 other => anyhow::bail!("client {}: unexpected {other:?}", self.id),
             }

@@ -53,6 +53,14 @@ pub enum Msg {
     /// [`crate::fl::aggregate::RoundAgg`] wire body prefixed by the
     /// subtree's `ShardStats` (see [`crate::fl::topology::edge`]).
     AggPush { round: u32, payload: Vec<u8> },
+    /// Server → clients, before the round's params broadcast: this
+    /// round's error-bound plan as a versioned `EBP` record
+    /// ([`crate::compress::control::EbPlan::to_wire`]). Encoded once and
+    /// fanned out as shared bytes; edge aggregators apply it to their
+    /// own engines and relay it verbatim. Only sent when an `ebc=`
+    /// controller other than `fixed` is active, so legacy round message
+    /// sequences are unchanged.
+    EbPlan { round: u32, plan: Vec<u8> },
     /// Server ends the session.
     Shutdown,
 }
@@ -149,6 +157,11 @@ impl Msg {
                 w.put_u32(*round);
                 w.put_bytes(payload);
             }
+            Msg::EbPlan { round, plan } => {
+                w.put_u8(12);
+                w.put_u32(*round);
+                w.put_bytes(plan);
+            }
         }
         w.into_bytes()
     }
@@ -233,6 +246,11 @@ impl Msg {
                 let payload = r.get_bytes()?.to_vec();
                 Msg::AggPush { round, payload }
             }
+            12 => {
+                let round = r.get_u32()?;
+                let plan = r.get_bytes()?.to_vec();
+                Msg::EbPlan { round, plan }
+            }
             t => anyhow::bail!("unknown message tag {t}"),
         })
     }
@@ -259,9 +277,10 @@ mod tests {
             Msg::DeltaFrame { .. } => 9,
             Msg::FullSync { .. } => 10,
             Msg::AggPush { .. } => 11,
+            Msg::EbPlan { .. } => 12,
         }
     }
-    const N_VARIANTS: usize = 12;
+    const N_VARIANTS: usize = 13;
 
     fn sample_of_every_variant() -> Vec<Msg> {
         vec![
@@ -290,6 +309,7 @@ mod tests {
             Msg::DeltaFrame { round: 3, frame: vec![2, 0, 0, 0, 1, 0, 0, 0, 7] },
             Msg::FullSync { round: 5, tensors: vec![vec![0.5, -0.25], vec![], vec![3.0]] },
             Msg::AggPush { round: 6, payload: vec![1, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0] },
+            Msg::EbPlan { round: 8, plan: vec![1, 10, 215, 35, 60, 0] },
             Msg::Shutdown,
         ]
     }

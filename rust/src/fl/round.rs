@@ -78,6 +78,10 @@ pub struct RoundStats {
     /// Wall-clock of the partial-aggregate merge tree at round end
     /// (zero when a single aggregator served the whole round).
     pub merge_time: Duration,
+    /// The error-bound controller's broadcast bound for this round
+    /// (`None` when no plan was emitted — fixed eb or a pre-milestone
+    /// schedule round; see [`crate::compress::control`]).
+    pub round_eb: Option<f32>,
 }
 
 impl RoundStats {

@@ -34,6 +34,7 @@ use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant};
 
 use crate::compress::agg::{AggReport, BinFrame};
+use crate::compress::control::{EbController, EbPlan, EbSignals};
 use crate::compress::downlink::DownlinkCodec;
 use crate::compress::engine::CodecEngine;
 use crate::compress::frame::Frame;
@@ -142,6 +143,13 @@ impl DecodeCore {
     /// Uncompressed f32 bytes of one full model under these metas.
     pub fn raw_model_bytes(&self) -> usize {
         self.metas.iter().map(|m| m.numel * 4).sum()
+    }
+
+    /// Adopt the round's error-bound plan: the engine tags decoded
+    /// mirrors with the same eb the encoding clients use, keeping
+    /// `StateStore` fingerprints bit-identical (DESIGN.md §15).
+    pub fn apply_eb_plan(&mut self, plan: &EbPlan) {
+        self.engine.apply_eb_plan(plan);
     }
 
     fn ensure_admitted(&self, client: ClientId) -> crate::Result<()> {
@@ -471,6 +479,9 @@ pub struct Server {
     /// [`crate::compress::agg`]). Binsum-ineligible layers fall back
     /// per layer inside the aggregator, so this is always safe to set.
     agg_mode: AggMode,
+    /// Per-round error-bound controller (`ebc=` key; `None` = fixed eb,
+    /// no plan broadcast, legacy message sequences unchanged).
+    controller: Option<Box<dyn EbController>>,
     round: u32,
 }
 
@@ -497,6 +508,7 @@ impl Server {
             downlink: None,
             channel_ids: Vec::new(),
             agg_mode: AggMode::Exact,
+            controller: None,
             round: 0,
         }
     }
@@ -523,6 +535,40 @@ impl Server {
 
     pub fn agg_mode(&self) -> AggMode {
         self.agg_mode
+    }
+
+    /// Attach a per-round error-bound controller (`ebc=` key; see
+    /// [`crate::compress::control`]). When the controller emits a plan
+    /// for a round, it is applied to this server's engine and broadcast
+    /// as a `Msg::EbPlan` record ahead of the params broadcast.
+    pub fn with_controller(mut self, controller: Box<dyn EbController>) -> Self {
+        self.controller = Some(controller);
+        self
+    }
+
+    /// Consult the controller for this round's plan. On `Some`, the
+    /// server's own decode engine adopts it immediately; the caller is
+    /// responsible for delivering the identical plan to every client
+    /// (and every forked core) before any payload of the round.
+    pub fn plan_round_eb(&mut self) -> Option<EbPlan> {
+        let plan = self.controller.as_mut()?.plan(self.round)?;
+        self.core.apply_eb_plan(&plan);
+        Some(plan)
+    }
+
+    /// Feed the round's observed signals back to the controller (no-op
+    /// without one).
+    pub fn observe_round(&mut self, sig: &EbSignals) {
+        if let Some(c) = self.controller.as_mut() {
+            c.observe(sig);
+        }
+    }
+
+    /// Apply a plan to this server's decode engine directly (the
+    /// simulation paths plan outside the server; see
+    /// [`Self::plan_round_eb`] for the in-server path).
+    pub fn apply_eb_plan(&mut self, plan: &EbPlan) {
+        self.core.apply_eb_plan(plan);
     }
 
     /// Fresh per-round aggregator matching the configured route (drive
@@ -752,6 +798,20 @@ impl Server {
             ..Default::default()
         };
         let span = journal::RoundSpan::begin(round, 1);
+        // Error-bound plan first: every client must derive the round's
+        // quantizer before any params/update traffic. Encode once, fan
+        // out the shared buffer; a dead channel is dropped later by the
+        // receive passes, same as the params broadcast.
+        if let Some(plan) = self.plan_round_eb() {
+            let bytes: Arc<[u8]> =
+                Msg::EbPlan { round, plan: plan.to_wire() }.encode().into();
+            for ch in channels.iter_mut() {
+                let _ = ch.send_encoded(&bytes);
+            }
+            span.eb_plan(&plan);
+            telemetry::ROUND_EB.set((plan.round_eb as f64 * 1e9) as u64);
+            stats.round_eb = Some(plan.round_eb);
+        }
         self.broadcast(channels, round, &mut stats)?;
         span.downlink(
             stats.downlink_bytes,
@@ -767,6 +827,14 @@ impl Server {
         let served = shard.served;
         shard.fold_into(&mut stats);
         stats.mean_loss /= served.max(1) as f64;
+        // The threaded path has no held-out eval; the controller sees
+        // the mean training loss and the per-shard byte totals.
+        self.observe_round(&EbSignals {
+            round,
+            train_loss: stats.mean_loss,
+            eval: None,
+            layer_bytes: Vec::new(),
+        });
         self.record_store_occupancy(&mut stats);
         span.store(stats.store_clients, stats.store_bytes);
         let rep = self.finish_round(agg);

@@ -22,6 +22,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::compress::blob::{BlobReader, BlobWriter};
+use crate::compress::control::{EbPlan, EbSignals};
 use crate::compress::engine::CodecEngine;
 use crate::compress::store::{ClientId, StateStore};
 use crate::fl::aggregate::{AggMode, RoundAgg};
@@ -115,6 +116,17 @@ impl EdgeAggregator {
         loop {
             let raw: Arc<[u8]> = up.recv_raw()?;
             match Msg::decode(&raw)? {
+                Msg::EbPlan { plan, .. } => {
+                    // Root's per-round error-bound plan: adopt it for
+                    // this edge's own decodes, then relay the identical
+                    // bytes down so the subtree derives the same
+                    // quantizer (encode-once, like the broadcast).
+                    let plan = EbPlan::from_wire(&plan)?;
+                    self.core.apply_eb_plan(&plan);
+                    for ch in down.iter_mut() {
+                        let _ = ch.send_encoded(&raw);
+                    }
+                }
                 Msg::GlobalParams { round, .. } => {
                     for ch in down.iter_mut() {
                         // Same allocation onward; dead subtree channels
@@ -183,6 +195,17 @@ pub fn run_round_root(
         ..Default::default()
     };
     let span = journal::RoundSpan::begin(round, edges.len());
+    // The round's error-bound plan travels root → edge → client ahead
+    // of the params broadcast; each hop relays the same bytes.
+    if let Some(plan) = server.plan_round_eb() {
+        let eb: Arc<[u8]> = Msg::EbPlan { round, plan: plan.to_wire() }.encode().into();
+        for ch in edges.iter_mut() {
+            let _ = ch.send_encoded(&eb);
+        }
+        span.eb_plan(&plan);
+        telemetry::ROUND_EB.set((plan.round_eb as f64 * 1e9) as u64);
+        stats.round_eb = Some(plan.round_eb);
+    }
     span.downlink(
         stats.downlink_bytes,
         stats.downlink_raw_bytes,
@@ -230,6 +253,12 @@ pub fn run_round_root(
     stats.dropped += dropped_edges;
     stats.participants = served + shard_total.dropped + dropped_edges;
     stats.mean_loss /= served.max(1) as f64;
+    server.observe_round(&EbSignals {
+        round,
+        train_loss: stats.mean_loss,
+        eval: None,
+        layer_bytes: Vec::new(),
+    });
     server.record_store_occupancy(&mut stats);
     span.store(stats.store_clients, stats.store_bytes);
     let rep = server.finish_round(merged.unwrap_or_else(|| RoundAgg::for_mode(agg_mode)));

@@ -12,6 +12,7 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::compress::control::{EbPlan, EbSignals};
 use crate::compress::engine::CodecEngine;
 use crate::compress::store::ClientId;
 use crate::fl::aggregate::RoundAgg;
@@ -58,6 +59,18 @@ impl ShardedRunner {
         self.cores.len()
     }
 
+    /// Consult the server's controller for this round's error-bound
+    /// plan and apply it to **every** worker core (the server's own
+    /// engine adopts it inside [`Server::plan_round_eb`]) — a worker
+    /// decoding under a stale eb would fork its mirror fingerprints.
+    fn plan_round(&mut self, server: &mut Server) -> Option<EbPlan> {
+        let plan = server.plan_round_eb()?;
+        for core in &mut self.cores {
+            core.apply_eb_plan(&plan);
+        }
+        Some(plan)
+    }
+
     /// Run one full round over live channels, sharded: the broadcast
     /// bytes are encoded once and every worker fans the same buffer to
     /// its slice, serves the handshake + updates into its private
@@ -87,6 +100,14 @@ impl ShardedRunner {
             ..Default::default()
         };
         let span = journal::RoundSpan::begin(round, self.cores.len());
+        // Error-bound plan first: encoded once, each worker fans the
+        // same buffer to its slice ahead of the params broadcast.
+        let eb_msg: Option<Arc<[u8]>> = self.plan_round(server).map(|plan| {
+            span.eb_plan(&plan);
+            telemetry::ROUND_EB.set((plan.round_eb as f64 * 1e9) as u64);
+            stats.round_eb = Some(plan.round_eb);
+            Msg::EbPlan { round, plan: plan.to_wire() }.encode().into()
+        });
         span.downlink(
             stats.downlink_bytes,
             stats.downlink_raw_bytes,
@@ -109,10 +130,15 @@ impl ShardedRunner {
             let mut handles = Vec::with_capacity(slices.len());
             for (shard_idx, (core, slice)) in self.cores.iter_mut().zip(slices).enumerate() {
                 let bytes = Arc::clone(&bytes);
+                let eb_msg = eb_msg.clone();
                 handles.push(s.spawn(move || {
                     for ch in slice.iter_mut() {
                         // Best-effort, like the flat broadcast: a dead
-                        // channel becomes a dropped client below.
+                        // channel becomes a dropped client below. The
+                        // plan precedes the params on every channel.
+                        if let Some(eb) = &eb_msg {
+                            let _ = ch.send_encoded(eb);
+                        }
                         let _ = ch.send_encoded(&bytes);
                     }
                     let mut agg = RoundAgg::for_mode(agg_mode);
@@ -149,6 +175,13 @@ impl ShardedRunner {
         let mut stats =
             RoundStats { round, shards: self.cores.len(), ..Default::default() };
         let span = journal::RoundSpan::begin(round, self.cores.len());
+        // Channel-less path: the source encodes its own payloads, but
+        // the worker cores must still decode under the round's plan.
+        if let Some(plan) = self.plan_round(server) {
+            span.eb_plan(&plan);
+            telemetry::ROUND_EB.set((plan.round_eb as f64 * 1e9) as u64);
+            stats.round_eb = Some(plan.round_eb);
+        }
         let parts: Vec<(RoundAgg, ShardStats)> = std::thread::scope(|s| {
             let source = &source;
             let mut handles = Vec::with_capacity(self.cores.len());
@@ -224,6 +257,12 @@ impl ShardedRunner {
         let served = shard_total.served;
         shard_total.fold_into(stats);
         stats.mean_loss /= served.max(1) as f64;
+        server.observe_round(&EbSignals {
+            round: stats.round,
+            train_loss: stats.mean_loss,
+            eval: None,
+            layer_bytes: Vec::new(),
+        });
         server.record_store_occupancy(stats);
         span.store(stats.store_clients, stats.store_bytes);
         let rep = server.finish_round(merged.unwrap_or_else(|| RoundAgg::for_mode(agg_mode)));

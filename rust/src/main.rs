@@ -67,6 +67,10 @@ fn print_usage() {
          codec, encode-once fan-out): --down fedgec --down_eb 1e-3; 'raw'\n\
          keeps the uncompressed broadcast. --down_bandwidth_mbps sets an\n\
          asymmetric downlink rate.\n\
+         --ebc schedules the error bound per round (adaptive controller,\n\
+         DESIGN.md \u{a7}15): --ebc plateau | plateau:3,0.5 | layerwise |\n\
+         schedule:0:1e-2,20:5e-3. Default 'fixed' keeps --rel_error_bound\n\
+         for the whole run. See `fedgec codecs` for the registry.\n\
          --metrics-addr exposes Prometheus text on GET /metrics while the\n\
          server runs; --journal FILE (run/serve) streams one JSONL record\n\
          per round event, rendered later with `fedgec tail`."
@@ -99,6 +103,14 @@ fn cmd_codecs() -> fedgec::Result<()> {
         p.row(vec!["sign".into(), fam.name.to_string(), fam.about.to_string()]);
     }
     p.print();
+    let mut c = fedgec::metrics::Table::new(
+        "error-bound controller registry (key ebc=)",
+        &["spec", "about"],
+    );
+    for (spec, about) in fedgec::compress::control::EBC_REGISTRY {
+        c.row(vec![spec.to_string(), about.to_string()]);
+    }
+    c.print();
     Ok(())
 }
 

@@ -3,7 +3,8 @@
 //!
 //! # Schema (versioned)
 //!
-//! Every record is one JSON object per line carrying `"v":1` and a
+//! Every record is one JSON object per line carrying a version (`"v":1`
+//! for the original records, `"v":2` for `eb_plan`) and a
 //! `"t"` type tag. Durations are integer nanoseconds (`*_ns` keys) —
 //! exact in a JSON f64 below 2^53 ns ≈ 104 days. Record types:
 //!
@@ -20,6 +21,7 @@
 //! | `sim`         | local simulation loop       | client-side comp/transmit ns |
 //! | `participants`| every runner, once final    | `n` |
 //! | `eval`        | eval rounds                 | `loss`, `acc` |
+//! | `eb_plan`     | ebc controller rounds (`"v":2`) | `eb`, `layers` |
 //! | `layer`       | decode detail (env-gated)   | per-layer coder route + predictor tag |
 //! | `round_end`   | every runner, last          | the full [`RoundStats`] |
 //! | `lost`        | the writer                  | `n` records dropped on ring overflow |
@@ -31,6 +33,7 @@
 //! association order, integer-nanosecond durations) — asserted by
 //! `tests/telemetry.rs` and the `fl_e2e` example.
 
+use crate::compress::control::EbPlan;
 use crate::fl::round::{RoundStats, ShardStats};
 use crate::util::json::Json;
 use crate::Result;
@@ -347,6 +350,24 @@ impl RoundSpan {
         emit(m);
     }
 
+    /// The round's broadcast error-bound plan (a `"v":2` record — older
+    /// readers that bail on unknown types must be tolerant; `fedgec
+    /// tail` renders unknowns as pass-through rows).
+    pub fn eb_plan(&self, plan: &EbPlan) {
+        if !on() {
+            return;
+        }
+        let mut m = self.rec("eb_plan");
+        m.insert("v".to_string(), Json::Num(2.0));
+        put(&mut m, "eb", plan.round_eb as f64);
+        put(
+            &mut m,
+            "layers",
+            plan.per_layer.as_ref().map_or(0, Vec::len) as f64,
+        );
+        emit(m);
+    }
+
     pub fn eval(&self, loss: f32, acc: f32) {
         if !on() {
             return;
@@ -421,6 +442,9 @@ fn stats_json(s: &RoundStats) -> BTreeMap<String, Json> {
         put(&mut m, "eval_loss", loss as f64);
         put(&mut m, "eval_acc", acc as f64);
     }
+    if let Some(eb) = s.round_eb {
+        put(&mut m, "round_eb", eb as f64);
+    }
     put(&mut m, "participants", s.participants as f64);
     put(&mut m, "resyncs", s.resyncs as f64);
     put(&mut m, "store_clients", s.store_clients as f64);
@@ -460,6 +484,12 @@ fn stats_from_json(v: &Json) -> Result<RoundStats> {
         )),
         _ => None,
     };
+    let round_eb = match v.get("round_eb") {
+        Some(e) => {
+            Some(e.as_f64().ok_or_else(|| anyhow::anyhow!("journal: bad round_eb"))? as f32)
+        }
+        None => None,
+    };
     Ok(RoundStats {
         round: us(v, "round")? as u32,
         mean_loss: num(v, "mean_loss")?,
@@ -486,6 +516,7 @@ fn stats_from_json(v: &Json) -> Result<RoundStats> {
         dropped: us(v, "dropped")?,
         shards: us(v, "shards")?,
         merge_time: dur(v, "merge_ns")?,
+        round_eb,
     })
 }
 
@@ -578,6 +609,9 @@ pub fn fold_journal(text: &str) -> Result<Vec<FoldedRound>> {
             "eval" => {
                 fold.stats.eval = Some((num(&v, "loss")? as f32, num(&v, "acc")? as f32));
             }
+            "eb_plan" => {
+                fold.stats.round_eb = Some(num(&v, "eb")? as f32);
+            }
             "round_end" => fold.reported = Some(stats_from_json(&v)?),
             other => {
                 anyhow::bail!("journal line {}: unknown record type {other:?}", lineno + 1)
@@ -642,13 +676,14 @@ mod tests {
             dropped: 1,
             shards: 4,
             merge_time: Duration::from_nanos(999),
+            round_eb: Some(5e-3f32),
         };
         let line = Json::Obj(stats_json(&stats)).to_string();
         let parsed = Json::parse(&line).unwrap();
         let back = stats_from_json(&parsed).unwrap();
         assert_eq!(back, stats);
-        // eval absence round-trips too.
-        let no_eval = RoundStats { eval: None, ..stats };
+        // eval / round_eb absence round-trips too.
+        let no_eval = RoundStats { eval: None, round_eb: None, ..stats };
         let line = Json::Obj(stats_json(&no_eval)).to_string();
         let back = stats_from_json(&Json::parse(&line).unwrap()).unwrap();
         assert_eq!(back, no_eval);
@@ -669,6 +704,7 @@ mod tests {
             {"v":1,"t":"finish","round":3,"finish_ns":1000,"binsum":2,"exact":1,"dequant":2}
             {"v":1,"t":"participants","round":3,"n":5}
             {"v":1,"t":"eval","round":3,"loss":0.5,"acc":0.75}
+            {"v":2,"t":"eb_plan","round":3,"eb":0.01,"layers":0}
             {"v":1,"t":"lost","n":3}
         "#;
         let folded = fold_journal(text).unwrap();
@@ -695,6 +731,7 @@ mod tests {
         assert_eq!((s.binsum_layers, s.exact_layers, s.dequant_passes), (2, 1, 2));
         assert_eq!(s.participants, 5);
         assert_eq!(s.eval, Some((0.5, 0.75)));
+        assert_eq!(s.round_eb, Some(0.01f32));
         assert!(folded[0].reported.is_none());
     }
 

@@ -88,6 +88,10 @@ pub static STORE_SPILL_BYTES: Counter = Counter::new();
 pub static STORE_RESIDENT_BYTES: Gauge = Gauge::new();
 pub static STORE_RESIDENT_CLIENTS: Gauge = Gauge::new();
 
+/// The error-bound controller's current round bound, scaled by 1e9
+/// (gauges are integer-valued; eb ~1e-3 would truncate to zero).
+pub static ROUND_EB: Gauge = Gauge::new();
+
 pub static DOWNLINK_FULL_SYNCS: Counter = Counter::new();
 pub static DOWNLINK_RESETS: Counter = Counter::new();
 pub static DOWNLINK_CODEC_NS: Counter = Counter::new();
@@ -253,6 +257,13 @@ pub static REGISTRY: &[MetricDef] = &[
         help: "Client states held across both store tiers after the last round",
         unit: Unit::Plain,
         kind: MetricKind::Gauge(&STORE_RESIDENT_CLIENTS),
+    },
+    MetricDef {
+        name: "fedgec_round_eb_nanos",
+        labels: "",
+        help: "Error-bound controller's current round bound, scaled by 1e9",
+        unit: Unit::Plain,
+        kind: MetricKind::Gauge(&ROUND_EB),
     },
     MetricDef {
         name: "fedgec_downlink_full_syncs_total",

@@ -4,13 +4,62 @@
 
 use super::journal::fold_journal;
 use crate::metrics::{fmt_duration, Table};
+use crate::util::json::Json;
 use crate::Result;
+
+/// Record types this binary's fold understands. Anything else — a newer
+/// writer's schema — degrades to a pass-through row instead of failing
+/// the whole tail (the fold itself stays strict).
+const KNOWN_TYPES: &[&str] = &[
+    "round_begin",
+    "client",
+    "shard",
+    "edge_drop",
+    "merge",
+    "finish",
+    "store",
+    "downlink",
+    "sim",
+    "participants",
+    "eval",
+    "eb_plan",
+    "layer",
+    "round_end",
+    "lost",
+];
+
+const N_COLS: usize = 15;
 
 /// Fold `text` (JSONL journal contents) into a per-round table.
 /// Prefers each round's own `round_end` record; rounds that never
 /// closed (a live tail mid-round) fall back to the folded totals.
+/// Records of unknown type render as pass-through rows at the bottom
+/// (type + raw line), closed by a `lost`-style count row — a journal
+/// from a newer writer stays readable instead of erroring out.
 pub fn table_from(text: &str) -> Result<Table> {
-    let folded = fold_journal(text)?;
+    let mut known = String::with_capacity(text.len());
+    let mut unknown: Vec<(usize, String, String)> = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let t = Json::parse(line)
+            .ok()
+            .and_then(|v| v.get("t").and_then(Json::as_str).map(str::to_string));
+        match t {
+            Some(t) if !KNOWN_TYPES.contains(&t.as_str()) => {
+                unknown.push((lineno + 1, t, line.to_string()));
+            }
+            // Known records — and unparseable lines, which the fold
+            // rejects with a line-numbered error — go to the fold.
+            _ => {
+                known.push_str(line);
+                known.push('\n');
+            }
+        }
+    }
+    let folded = fold_journal(&known)?;
     let mut t = Table::new(
         "round journal",
         &[
@@ -19,6 +68,7 @@ pub fn table_from(text: &str) -> Result<Table> {
             "drop",
             "resync",
             "loss",
+            "eb",
             "CR",
             "up KB",
             "down KB",
@@ -38,6 +88,7 @@ pub fn table_from(text: &str) -> Result<Table> {
             s.dropped.to_string(),
             s.resyncs.to_string(),
             format!("{:.4}", s.mean_loss),
+            s.round_eb.map(|eb| format!("{eb:.1e}")).unwrap_or_else(|| "-".to_string()),
             format!("{:.2}", s.ratio()),
             format!("{:.1}", s.payload_bytes as f64 / 1e3),
             format!("{:.1}", s.downlink_bytes as f64 / 1e3),
@@ -49,7 +100,34 @@ pub fn table_from(text: &str) -> Result<Table> {
             s.eval.map(|(_, acc)| format!("{acc:.3}")).unwrap_or_else(|| "-".to_string()),
         ]);
     }
+    for (lineno, ty, raw) in &unknown {
+        t.row(passthrough_row(&format!("?{lineno}"), &format!("t:{ty}"), raw));
+    }
+    if !unknown.is_empty() {
+        // Mirrors the writer's own `lost` record: records present but
+        // not understood, counted rather than silently skipped.
+        t.row(passthrough_row("lost", &unknown.len().to_string(), "unknown record types"));
+    }
     Ok(t)
+}
+
+/// A table row carrying a non-round record: first cell, second cell,
+/// dashes, and the raw text (truncated) in the last cell.
+fn passthrough_row(first: &str, second: &str, raw: &str) -> Vec<String> {
+    let mut row = vec!["-".to_string(); N_COLS];
+    row[0] = first.to_string();
+    row[1] = second.to_string();
+    let mut text = raw.to_string();
+    if text.len() > 48 {
+        let mut cut = 48;
+        while !text.is_char_boundary(cut) {
+            cut -= 1;
+        }
+        text.truncate(cut);
+        text.push('…');
+    }
+    row[N_COLS - 1] = text;
+    row
 }
 
 #[cfg(test)]
@@ -64,6 +142,8 @@ mod tests {
             r#"{"v":1,"t":"shard","round":0,"shard":0,"served":2,"dropped":0,"resyncs":1,"#,
             r#""payload_bytes":2000,"raw_bytes":8000,"loss_sum":1.0,"decode_ns":5000,"agg_ns":700}"#,
             "\n",
+            r#"{"v":2,"t":"eb_plan","round":0,"eb":0.01,"layers":0}"#,
+            "\n",
             r#"{"v":1,"t":"participants","round":0,"n":2}"#,
             "\n",
             r#"{"v":1,"t":"round_begin","round":1,"shards":1}"#,
@@ -74,8 +154,40 @@ mod tests {
         assert_eq!(t.rows[0][0], "0");
         assert_eq!(t.rows[0][1], "2");
         assert_eq!(t.rows[0][4], "0.5000"); // loss_sum / served
-        assert_eq!(t.rows[0][5], "4.00"); // 8000 / 2000
+        assert_eq!(t.rows[0][5], "1.0e-2"); // eb_plan record
+        assert_eq!(t.rows[0][6], "4.00"); // 8000 / 2000
+        assert_eq!(t.rows[1][5], "-"); // no plan that round
         let md = t.markdown();
         assert!(md.contains("round journal"));
+    }
+
+    #[test]
+    fn unknown_record_types_pass_through_with_a_count() {
+        let text = concat!(
+            r#"{"v":1,"t":"round_begin","round":0,"shards":1}"#,
+            "\n",
+            r#"{"v":3,"t":"mystery","round":0,"x":1}"#,
+            "\n",
+            r#"{"v":1,"t":"participants","round":0,"n":2}"#,
+            "\n",
+            r#"{"v":9,"t":"from_the_future","payload":"whatever"}"#,
+            "\n",
+        );
+        let t = table_from(text).unwrap();
+        // 1 round row + 2 pass-through rows + 1 count row.
+        assert_eq!(t.rows.len(), 4);
+        assert_eq!(t.rows[1][0], "?2");
+        assert_eq!(t.rows[1][1], "t:mystery");
+        assert!(t.rows[1].last().unwrap().contains("mystery"));
+        assert_eq!(t.rows[2][1], "t:from_the_future");
+        let count = t.rows.last().unwrap();
+        assert_eq!(count[0], "lost");
+        assert_eq!(count[1], "2");
+        // A journal with only known records emits no lost row.
+        let clean = r#"{"v":1,"t":"round_begin","round":0,"shards":1}"#;
+        assert_eq!(table_from(clean).unwrap().rows.len(), 1);
+        // Invalid JSON still fails loudly — tolerance covers unknown
+        // types, not corrupt files.
+        assert!(table_from("not json").is_err());
     }
 }

@@ -1,0 +1,139 @@
+//! Controller-determinism churn test (DESIGN.md §15): under
+//! `ebc=plateau` the round's error bound changes mid-run, and the
+//! encode/decode pipe must stay **bit-identical** through dropout,
+//! rejoin, a forced server-side eviction, and disk evict→reload of the
+//! FGS3 spill records (which fold the eb bits into the fingerprint).
+//! A resynced client adopts the *current* round's eb — never its
+//! pre-dropout one.
+
+use fedgec::compress::control::{EbSignals, EbcSpec};
+use fedgec::compress::engine::CodecEngine;
+use fedgec::compress::pipeline::{FedgecCodec, FedgecConfig, FedgecEngine};
+use fedgec::compress::predictor::{MagnitudeSel, PredictorSpec, SignSel};
+use fedgec::compress::store::{DiskSpillStore, StateStore};
+use fedgec::compress::{ClientState, GradientCodec};
+use fedgec::tensor::model_zoo::ModelArch;
+use fedgec::tensor::{LayerGrad, LayerMeta, ModelGrad};
+use fedgec::util::rng::Rng;
+
+fn cfg() -> FedgecConfig {
+    FedgecConfig {
+        predictor: PredictorSpec { mag: MagnitudeSel::Ema, sign: SignSel::None },
+        ..Default::default()
+    }
+}
+
+struct SimClient {
+    codec: FedgecCodec,
+    rng: Rng,
+}
+
+impl SimClient {
+    fn next_round(&mut self, metas: &[LayerMeta], round: usize) -> ModelGrad {
+        let scale = 1.0 / (1.0 + round as f32 * 0.1);
+        let layers = metas
+            .iter()
+            .map(|m| {
+                let data = (0..m.numel).map(|_| self.rng.normal_f32(0.0, scale)).collect();
+                LayerGrad::new(m.clone(), data)
+            })
+            .collect();
+        ModelGrad { layers }
+    }
+}
+
+#[test]
+fn plateau_controller_bit_identical_through_dropout_rejoin_and_eviction() {
+    let metas = ModelArch::MicroInception.layers(10);
+    let n_clients = 3u32;
+    let mut clients: Vec<SimClient> = (0..n_clients)
+        .map(|i| SimClient { codec: FedgecCodec::new(cfg()), rng: Rng::new(40 + i as u64) })
+        .collect();
+
+    // 1-byte hot tier: every checked-in mirror spills, so each decode
+    // runs a full FGS3 evict→reload cycle under a changing eb.
+    let dir = std::env::temp_dir().join(format!("fedgec_ebc_churn_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = DiskSpillStore::new(&dir, 1, 1).unwrap();
+    let mut engine = FedgecEngine::new(cfg());
+
+    // patience=1 + flat losses: the bound halves every round until the
+    // factor^4 clamp — the run genuinely spans multiple eb values.
+    let mut ctl = EbcSpec::parse("plateau:1,0.5").unwrap().build(1e-2);
+
+    let rounds = 10usize;
+    let mut ebs_seen = std::collections::BTreeSet::new();
+    let mut pre_dropout_eb = 0f32;
+    for round in 0..rounds {
+        let plan = ctl.plan(round as u32).expect("plateau always plans");
+        ebs_seen.insert(plan.round_eb.to_bits());
+        engine.apply_eb_plan(&plan);
+
+        // Client 1 drops out for rounds 3..=5 (keeps its stale plan);
+        // client 2 loses its device state at round 4 and cold-resyncs.
+        let participants: Vec<u32> = (0..n_clients)
+            .filter(|&id| !(id == 1 && (3..=5).contains(&round)))
+            .collect();
+        if round == 2 {
+            pre_dropout_eb = plan.round_eb;
+        }
+        if round == 4 {
+            let c2 = &mut clients[2];
+            c2.codec.reset();
+            // The round-scoped plan is config, not state: it survives
+            // the cold reset (the client keeps the current broadcast).
+            assert!(c2.codec.plan.is_some(), "reset must not clear the eb plan");
+            store.remove(2).unwrap();
+        }
+        if round == 6 {
+            // Rejoin: before this round's broadcast the client still
+            // holds the eb it heard before dropping out...
+            let stale = clients[1].codec.plan.as_ref().unwrap().round_eb;
+            assert_eq!(stale.to_bits(), pre_dropout_eb.to_bits());
+            assert_ne!(stale.to_bits(), plan.round_eb.to_bits(), "eb must have moved");
+        }
+
+        for &id in &participants {
+            let client = &mut clients[id as usize];
+            // The broadcast plan reaches every participant of the round.
+            client.codec.apply_eb_plan(&plan);
+            let grads = client.next_round(&metas, round);
+            let payload = client.codec.compress(&grads).unwrap();
+            let mut state = store.take(id).unwrap().unwrap_or_else(ClientState::cold);
+            let (recon, _) = engine.decode_payload(&payload, &metas, &mut state.codec).unwrap();
+            for (li, layer) in recon.layers.iter().enumerate() {
+                if let Some(mirror) = client.codec.state.layers[li].prev_recon.as_deref() {
+                    for (a, b) in layer.data.iter().zip(mirror) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "round {round} client {id} layer {li}");
+                    }
+                } else {
+                    // Small layers bypass the predictor: exact store.
+                    assert_eq!(layer.data, grads.layers[li].data);
+                }
+            }
+            assert_eq!(
+                state.codec.fingerprint(),
+                client.codec.state_fingerprint(),
+                "round {round} client {id}: mirror fingerprints diverged (eb {})",
+                plan.round_eb
+            );
+            state.epoch.advance(state.codec.fingerprint());
+            store.put(id, state).unwrap();
+        }
+        if round == 6 {
+            // ...and after the round it has adopted the current eb.
+            let now = clients[1].codec.plan.as_ref().unwrap().round_eb;
+            assert_eq!(now.to_bits(), plan.round_eb.to_bits());
+        }
+        // Flat losses: the plateau controller keeps tightening.
+        ctl.observe(&EbSignals {
+            round: round as u32,
+            train_loss: 1.0,
+            eval: None,
+            layer_bytes: vec![],
+        });
+    }
+    assert!(ebs_seen.len() >= 3, "expected the bound to move, saw {} values", ebs_seen.len());
+    assert!(store.stats().spill_loads > 0, "expected FGS3 evict→reload traffic");
+    let _ = std::fs::remove_dir_all(&dir);
+}

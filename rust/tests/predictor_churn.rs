@@ -2,7 +2,7 @@
 //! per-layer predictors (the race picks different winners for different
 //! layers/rounds), and the encode/decode pipe must stay **bit-identical**
 //! through the externalized-state machinery — disk evict→reload of the
-//! `FGS2` records (which carry the predictor tag) and a mid-run
+//! `FGS3` records (which carry the predictor tag and eb bits) and a mid-run
 //! cold-start resync.
 
 use fedgec::compress::engine::CodecEngine;
@@ -97,7 +97,7 @@ fn auto_predictors_bit_identical_through_evict_reload_and_resync() {
 
     // One stateless engine + a disk store whose 1-byte hot tier spills
     // every checked-in state, so each round decodes through a full
-    // FGS2 evict→reload cycle.
+    // FGS3 evict→reload cycle.
     let dir = std::env::temp_dir().join(format!("fedgec_pred_churn_{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
     let store = DiskSpillStore::new(&dir, 1, 1).unwrap();
@@ -164,6 +164,6 @@ fn auto_predictors_bit_identical_through_evict_reload_and_resync() {
     // promotes a real predictor somewhere), and the 1-byte hot tier
     // really forced spill reloads.
     assert!(seen_tags.len() >= 2, "expected mixed predictor tags, saw {seen_tags:?}");
-    assert!(store.stats().spill_loads > 0, "expected FGS2 evict→reload traffic");
+    assert!(store.stats().spill_loads > 0, "expected FGS3 evict→reload traffic");
     let _ = std::fs::remove_dir_all(&dir);
 }

@@ -668,3 +668,113 @@ fn prop_shard_fold_matches_flat_run() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_decode_is_eb_agnostic_registry_wide() {
+    // Δ is self-described on the wire (DESIGN.md §15): every lossy
+    // section carries the delta it was quantized with, so a decoder
+    // configured with a *different* error bound — or with a controller
+    // plan it never received — reconstructs bit-identically. This is
+    // what lets the eb controller retune the bound every round with
+    // zero out-of-band config on the decode path.
+    prop::check("decode eb-agnostic", 15, |rng| {
+        let eb_a = prop::arb_error_bound(rng);
+        let eb_b = eb_a * rng.uniform(2.5, 12.0); // deliberately wrong
+        let da = SpecDefaults::with_rel_eb(eb_a);
+        let db = SpecDefaults::with_rel_eb(eb_b);
+        let base = arb_model(rng);
+        let ms = metas(&base);
+        for (spec_a, spec_b) in
+            CodecSpec::registry_specs(&da).into_iter().zip(CodecSpec::registry_specs(&db))
+        {
+            let mut enc = spec_a.build();
+            let mut matched = spec_a.build();
+            let mut mismatched = spec_b.build();
+            for round in 0..3 {
+                let mut g = base.clone();
+                for l in &mut g.layers {
+                    for v in &mut l.data {
+                        *v *= 1.0 + 0.07 * round as f32;
+                    }
+                }
+                let payload = enc.compress(&g).map_err(|e| format!("{spec_a}: {e}"))?;
+                let want =
+                    matched.decompress(&payload, &ms).map_err(|e| format!("{spec_a}: {e}"))?;
+                let got = mismatched
+                    .decompress(&payload, &ms)
+                    .map_err(|e| format!("{spec_a} at eb {eb_b}: {e}"))?;
+                for (li, (a, b)) in want.layers.iter().zip(&got.layers).enumerate() {
+                    for (x, y) in a.data.iter().zip(&b.data) {
+                        if x.to_bits() != y.to_bits() {
+                            return Err(format!(
+                                "{spec_a} round {round} layer {li}: decoder configured \
+                                 at eb {eb_b} diverged ({x} vs {y}) — eb leaked out of \
+                                 band into decode"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_eb_plan_steers_encode_only() {
+    // A controller plan applied on the encode side (uniform or
+    // per-layer) changes the quantizer — but a decoder that never saw
+    // the plan still reconstructs bit-identically to one that did: the
+    // plan is encode-side steering plus a mirror fingerprint tag, never
+    // part of the decode contract.
+    use fedgec::compress::control::EbPlan;
+    prop::check("eb plan encode-only", 15, |rng| {
+        let eb = prop::arb_error_bound(rng);
+        let cfg = FedgecConfig { error_bound: ErrorBound::Rel(eb), ..Default::default() };
+        let base = arb_model(rng);
+        let ms = metas(&base);
+        let mut enc = FedgecCodec::new(cfg.clone());
+        let mut planned = FedgecCodec::new(cfg.clone());
+        let mut unplanned = FedgecCodec::new(cfg);
+        for round in 0..3 {
+            let factor = [1.0f32, 0.5, 0.25][round];
+            let plan = if rng.chance(0.5) {
+                EbPlan::uniform(eb as f32 * factor)
+            } else {
+                EbPlan {
+                    round_eb: eb as f32 * factor,
+                    per_layer: Some(
+                        (0..ms.len()).map(|i| eb as f32 * factor * (1.0 + i as f32)).collect(),
+                    ),
+                }
+            };
+            enc.apply_eb_plan(&plan);
+            planned.apply_eb_plan(&plan);
+            let mut g = base.clone();
+            for l in &mut g.layers {
+                for v in &mut l.data {
+                    *v *= 1.0 + 0.07 * round as f32;
+                }
+            }
+            let payload = enc.compress(&g).map_err(|e| e.to_string())?;
+            let want = planned.decompress(&payload, &ms).map_err(|e| e.to_string())?;
+            let got = unplanned.decompress(&payload, &ms).map_err(|e| e.to_string())?;
+            for (li, (a, b)) in want.layers.iter().zip(&got.layers).enumerate() {
+                for (x, y) in a.data.iter().zip(&b.data) {
+                    if x.to_bits() != y.to_bits() {
+                        return Err(format!(
+                            "round {round} layer {li}: plan-blind decoder diverged \
+                             ({x} vs {y})"
+                        ));
+                    }
+                }
+            }
+            // The fingerprint tag, by contrast, *does* see the plan:
+            // that is how eb drift shows up in the state handshake.
+            if planned.state.fingerprint() != enc.state.fingerprint() {
+                return Err(format!("round {round}: planned mirror fingerprint diverged"));
+            }
+        }
+        Ok(())
+    });
+}
